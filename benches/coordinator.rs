@@ -1,0 +1,73 @@
+//! L3 coordinator benchmarks — the §Perf L3 evidence: batcher admission/
+//! cut throughput (pure queueing, no model), and end-to-end serving
+//! throughput on the native nano engine at several batch policies.
+
+use lamp::benchkit::{Bencher, Table};
+use lamp::coordinator::{
+    Batcher, InferenceRequest, NativeEngine, PrecisionPolicy, Server,
+};
+use lamp::data::{Dataset, Domain};
+use lamp::model::{ModelConfig, Weights};
+use lamp::runtime::ArtifactStore;
+use lamp::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let b = Bencher::default();
+    let mut results = Vec::new();
+
+    // --- Pure queueing: admission + cutting 10k requests, 3 policies. ---
+    results.push(b.run("batcher admit+cut 10k reqs / 3 policies", || {
+        let mut batcher = Batcher::new(8, Duration::from_secs(3600));
+        let policies = [
+            PrecisionPolicy::uniform(4),
+            PrecisionPolicy::uniform(7),
+            PrecisionPolicy::reference(),
+        ];
+        for i in 0..10_000u64 {
+            batcher.push(InferenceRequest::new(
+                i,
+                vec![1, 2, 3],
+                policies[(i % 3) as usize],
+            ));
+        }
+        let mut total = 0;
+        while let Some(cut) = batcher.cut(true) {
+            total += cut.requests.len();
+        }
+        assert_eq!(total, 10_000);
+    }));
+
+    // --- End-to-end serving on the native nano engine. ---
+    let cfg = ModelConfig::nano();
+    let mut rng = Rng::new(5);
+    let weights = ArtifactStore::open(ArtifactStore::default_dir())
+        .and_then(|s| s.weights("nano"))
+        .unwrap_or_else(|_| Weights::random(&cfg, &mut rng));
+    let data = Dataset::generate(Domain::Web, cfg.vocab, 16, cfg.seq, 7, 3);
+
+    for (label, tier) in [("economy", "economy"), ("balanced", "balanced"), ("exact", "exact")] {
+        let w = weights.clone();
+        let seqs = data.sequences.clone();
+        results.push(b.run(&format!("serve 16 reqs nano native [{label}]"), move || {
+            let engine = NativeEngine::new(w.clone());
+            let mut server = Server::new(Box::new(engine), Duration::from_millis(1));
+            let policy = PrecisionPolicy::tier(tier).unwrap();
+            let mut served = 0;
+            for (i, seq) in seqs.iter().enumerate() {
+                server
+                    .submit(InferenceRequest::new(i as u64, seq.clone(), policy))
+                    .unwrap();
+                served += server.step(false).unwrap().len();
+            }
+            served += server.drain().unwrap().len();
+            assert_eq!(served, 16);
+        }));
+    }
+
+    let mut t = Table::new("coordinator benchmarks", &["benchmark"]);
+    for r in &results {
+        t.row(vec![r.summary()]);
+    }
+    t.print();
+}

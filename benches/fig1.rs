@@ -1,0 +1,5 @@
+//! Regenerates paper Figure 1 — see rust/src/experiments/fig1.rs for the
+//! experiment definition and DESIGN.md for the expected shape.
+fn main() {
+    lamp::benchkit::run_experiment_bench("fig1");
+}

@@ -1,0 +1,5 @@
+//! Regenerates paper Figure 6 — see rust/src/experiments/fig6.rs for the
+//! experiment definition and DESIGN.md for the expected shape.
+fn main() {
+    lamp::benchkit::run_experiment_bench("fig6");
+}

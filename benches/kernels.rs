@@ -1,0 +1,77 @@
+//! Micro-benchmarks of the numeric hot paths — the §Perf L1/L2 evidence:
+//! PS(μ) rounding, PS-accumulated dots/matmuls vs FP32, the LAMP selection
+//! rules, one native forward pass, and one PJRT artifact execution.
+//! Includes the accumulation-mode ablation (RNE vs stochastic vs Kahan).
+
+use lamp::benchkit::{Bencher, Table};
+use lamp::coordinator::{Engine, NativeEngine, PjrtEngine, PrecisionPolicy, Rule};
+use lamp::data::{Dataset, Domain};
+use lamp::lamp::softmax::{select_relaxed, select_strict};
+use lamp::linalg::{matmul_f32, matmul_ps, Matrix};
+use lamp::model::{ModelConfig, Weights};
+use lamp::runtime::ArtifactStore;
+use lamp::softfloat::dot::{dot_f32, dot_kahan, dot_ps, dot_ps_stochastic};
+use lamp::softfloat::round::round_to_mantissa;
+use lamp::util::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(1);
+    let mut results = Vec::new();
+
+    // --- L1 analogue: rounding + accumulation primitives. ---
+    let xs: Vec<f32> = (0..4096).map(|_| rng.normal_f32() * 100.0).collect();
+    results.push(b.run("round_to_mantissa x4096 (mu=7)", || {
+        xs.iter().map(|&x| round_to_mantissa(x, 7)).sum::<f32>()
+    }));
+
+    let a: Vec<f32> = (0..1024).map(|_| rng.normal_f32()).collect();
+    let v: Vec<f32> = (0..1024).map(|_| rng.normal_f32()).collect();
+    results.push(b.run("dot_f32 k=1024", || dot_f32(&a, &v)));
+    results.push(b.run("dot_ps k=1024 (mu=4)", || dot_ps(&a, &v, 4)));
+    results.push(b.run("dot_kahan k=1024", || dot_kahan(&a, &v)));
+    let mut srng = Rng::new(2);
+    results.push(b.run("dot_ps_stochastic k=1024 (mu=4)", || {
+        dot_ps_stochastic(&a, &v, 4, &mut srng)
+    }));
+
+    let ma = Matrix::randn(64, 64, 1.0, &mut rng);
+    let mb = Matrix::randn(64, 64, 1.0, &mut rng);
+    results.push(b.run("matmul_f32 64x64x64", || matmul_f32(&ma, &mb).unwrap()));
+    results.push(b.run("matmul_ps 64x64x64 (mu=4)", || matmul_ps(&ma, &mb, 4).unwrap()));
+
+    // --- Selection rules over a softmax row. ---
+    let row: Vec<f32> = (0..512).map(|_| rng.normal_f32() * 4.0).collect();
+    results.push(b.run("select_strict n=512", || select_strict(&row, 0.1)));
+    results.push(b.run("select_relaxed n=512", || select_relaxed(&row, 0.1)));
+
+    // --- Whole-model paths. ---
+    let cfg = ModelConfig::small();
+    let weights = ArtifactStore::open(ArtifactStore::default_dir())
+        .and_then(|s| s.weights("small"))
+        .unwrap_or_else(|_| Weights::random(&cfg, &mut rng));
+    let native = NativeEngine::new(weights);
+    let data = Dataset::generate(Domain::Web, cfg.vocab, cfg.batch, cfg.seq, 7, 9);
+    let policy = PrecisionPolicy::lamp(4, 0.1, Rule::Strict);
+    results.push(b.run("native forward small (batch=4, mu=4, lamp)", || {
+        native.infer(&data.sequences, &policy, 0).unwrap()
+    }));
+    results.push(b.run("native forward small (batch=4, fp32 ref)", || {
+        native.infer(&data.sequences, &PrecisionPolicy::reference(), 0).unwrap()
+    }));
+
+    if let Ok(store) = ArtifactStore::open(ArtifactStore::default_dir()) {
+        if store.available_models().contains(&"small".to_string()) {
+            let pjrt = PjrtEngine::load(&store, "small").unwrap();
+            results.push(b.run("pjrt execute small (batch=4, mu=4, lamp)", || {
+                pjrt.infer(&data.sequences, &policy, 0).unwrap()
+            }));
+        }
+    }
+
+    let mut t = Table::new("kernel micro-benchmarks", &["benchmark"]);
+    for r in &results {
+        t.row(vec![r.summary()]);
+    }
+    t.print();
+}

@@ -1,0 +1,5 @@
+//! Regenerates paper Table 1 (App. C.5 perplexity comparison) — see
+//! rust/src/experiments/table1.rs.
+fn main() {
+    lamp::benchkit::run_experiment_bench("table1");
+}

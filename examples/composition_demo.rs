@@ -1,0 +1,78 @@
+//! Algorithm 1 on a generic composition: LAMP-evaluate f(g(x)) where
+//! g(x) = A·x is accumulated in PS(3) and f is softmax — the paper's §2
+//! machinery outside the transformer, including the RMS-norm and
+//! activation closed forms of §3.
+//!
+//! ```bash
+//! cargo run --release --offline --example composition_demo
+//! ```
+
+use lamp::lamp::activation::{select_activation, Activation};
+use lamp::lamp::composition::{lamp_evaluate, Objective};
+use lamp::lamp::condition::VectorFn;
+use lamp::lamp::rmsnorm::{kappa_c_rmsnorm, select_rmsnorm};
+use lamp::lamp::softmax::softmax;
+use lamp::linalg::Matrix;
+use lamp::softfloat::dot::{dot_f32, dot_ps};
+use lamp::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(7);
+    let (n, k) = (24usize, 96usize);
+    let a = Matrix::randn(n, k, 0.5, &mut rng);
+    let x: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+
+    // --- §2.3 Algorithm 1: matvec -> softmax composition. ---
+    let f = VectorFn::new(|y| softmax(y));
+    let a1 = a.clone();
+    let a2 = a.clone();
+    let result = lamp_evaluate(
+        &x,
+        move |xv| (0..n).map(|i| dot_ps(a1.row(i), xv, 3)).collect(),
+        move |xv, j| dot_f32(a2.row(j), xv),
+        &f,
+        0.05,
+        Objective::NormwiseL1,
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let y_exact: Vec<f32> = (0..n).map(|i| dot_f32(a.row(i), &x)).collect();
+    let z_exact = softmax(&y_exact);
+    let y_low: Vec<f32> = (0..n).map(|i| dot_ps(a.row(i), &x, 3)).collect();
+    let z_low = softmax(&y_low);
+    let l1 = |p: &[f32], q: &[f32]| -> f64 {
+        p.iter().zip(q).map(|(&a, &b)| (a - b).abs() as f64).sum()
+    };
+
+    println!("Algorithm 1 on softmax(A.x), A in R^{n}x{k}, PS(3) accumulation:");
+    println!("  kappa_1 after selection : {:.4} (tau = 0.05)", result.kappa);
+    println!("  recomputed components   : {}/{n}", result.recomputed);
+    println!("  L1 error, uniform PS(3) : {:.3e}", l1(&z_low, &z_exact));
+    println!("  L1 error, LAMP          : {:.3e}", l1(&result.z, &z_exact));
+
+    // --- §3.2 RMS-norm closed form (Prop 3.1/3.2). ---
+    let y: Vec<f32> = (0..32).map(|_| rng.normal_f32() * 2.0).collect();
+    let mask = select_rmsnorm(&y, 0.5);
+    println!("\nRMS-norm greedy solution (Prop 3.2), tau=0.5:");
+    println!(
+        "  selected {}/{} components, kappa_c = {:.4}",
+        mask.iter().filter(|&&b| b).count(),
+        y.len(),
+        kappa_c_rmsnorm(&y, &mask)
+    );
+
+    // --- §3.1 activation closed form. ---
+    let acts: Vec<f32> = (0..16).map(|i| -4.0 + 0.5 * i as f32).collect();
+    let sel = select_activation(&acts, Activation::Gelu, 1.5);
+    println!("\nGELU componentwise LAMP (tau=1.5) over y in [-4, 3.5]:");
+    for (yi, s) in acts.iter().zip(&sel) {
+        if *s {
+            println!(
+                "  y = {yi:+.1} flagged (sensitivity {:.2})",
+                Activation::Gelu.sensitivity(*yi)
+            );
+        }
+    }
+    println!("(the deep negative GELU tail is relative-error-sensitive — §3.1)");
+    Ok(())
+}

@@ -1,0 +1,147 @@
+"""AOT compile path: train the *-sim models, lower the LAMP forward pass to
+HLO **text**, and write all artifacts consumed by the rust runtime.
+
+HLO text — NOT `lowered.compile()` / proto `.serialize()` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the `xla`
+crate) rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts (per model config):
+  model_<name>.hlo.txt     full forward; inputs (tokens, mu, tau, seed,
+                           mode, *weights); outputs (logits, recompute
+                           count, causal total)
+  weights_<name>.lamp      trained weights (.lamp container)
+  meta_<name>.kv           model hyperparameters
+plus standalone L1 kernel artifacts:
+  kernel_ps_matmul.hlo.txt
+  kernel_lamp_attention.hlo.txt
+and train_log_<name>.txt with the loss curve.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import tensorio
+from .kernels.lamp_attention import lamp_attention_head
+from .kernels.ps_round import ps_matmul
+from .model import CONFIGS, Config, forward_flat, weight_order
+from .train import params_to_numpy, train
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: Config) -> str:
+    """Lower the LAMP forward pass for one config to HLO text."""
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    scal_i = jax.ShapeDtypeStruct((), jnp.int32)
+    scal_f = jax.ShapeDtypeStruct((), jnp.float32)
+    weight_specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in weight_order(cfg)
+    ]
+    fn = functools.partial(forward_flat, cfg)
+    lowered = jax.jit(fn).lower(
+        tok_spec, scal_i, scal_f, scal_i, scal_i, *weight_specs
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_kernels() -> dict:
+    """Standalone L1 kernel artifacts for runtime micro-benches/tests."""
+    out = {}
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    mu = jax.ShapeDtypeStruct((), jnp.int32)
+    out["kernel_ps_matmul"] = to_hlo_text(
+        jax.jit(lambda x, y, m: (ps_matmul(x, y, m),)).lower(a, a, mu)
+    )
+    s, hd = 32, 16
+    q = jax.ShapeDtypeStruct((s, hd), jnp.float32)
+    scal_f = jax.ShapeDtypeStruct((), jnp.float32)
+    out["kernel_lamp_attention"] = to_hlo_text(
+        jax.jit(
+            lambda qq, kk, vv, m, t, sd, md: lamp_attention_head(
+                qq, kk, vv, m, t, sd, md, 1024
+            )
+        ).lower(q, q, q, mu, scal_f, mu, mu)
+    )
+    return out
+
+
+def write_meta(path: str, cfg: Config) -> None:
+    with open(path, "w") as f:
+        f.write(f"model.name = {cfg.name}\n")
+        f.write(f"model.vocab = {cfg.vocab}\n")
+        f.write(f"model.seq = {cfg.seq}\n")
+        f.write(f"model.layers = {cfg.layers}\n")
+        f.write(f"model.heads = {cfg.heads}\n")
+        f.write(f"model.d_model = {cfg.d_model}\n")
+        f.write(f"model.batch = {cfg.batch}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="nano,small,xl")
+    ap.add_argument("--skip-train", action="store_true", help="random init (tests only)")
+    ap.add_argument(
+        "--reuse-weights",
+        action="store_true",
+        help="keep existing weights_<cfg>.lamp (re-lower HLO only)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    t0 = time.time()
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        wpath = os.path.join(args.out_dir, f"weights_{name}.lamp")
+        if args.reuse_weights and os.path.exists(wpath):
+            print(f"=== {name}: reusing existing weights ===", flush=True)
+        else:
+            print(f"=== {name}: train ===", flush=True)
+            if args.skip_train:
+                from .model import init_params
+
+                params, history = init_params(cfg, jax.random.PRNGKey(0)), [float("nan")]
+            else:
+                params, history = train(cfg)
+            np_params = params_to_numpy(params)
+            order = weight_order(cfg)
+            tensors = [(n, np_params[n]) for n, _ in order]
+            tensorio.write_tensors(wpath, tensors)
+            with open(os.path.join(args.out_dir, f"train_log_{name}.txt"), "w") as f:
+                for i, l in enumerate(history):
+                    f.write(f"{i} {l:.6f}\n")
+        write_meta(os.path.join(args.out_dir, f"meta_{name}.kv"), cfg)
+
+        print(f"=== {name}: lower ===", flush=True)
+        hlo = lower_model(cfg)
+        with open(os.path.join(args.out_dir, f"model_{name}.hlo.txt"), "w") as f:
+            f.write(hlo)
+        print(f"    {len(hlo)} chars ({time.time() - t0:.1f}s)", flush=True)
+
+    print("=== kernels: lower ===", flush=True)
+    for kname, text in lower_kernels().items():
+        with open(os.path.join(args.out_dir, f"{kname}.hlo.txt"), "w") as f:
+            f.write(text)
+    print(f"done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

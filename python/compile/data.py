@@ -1,0 +1,92 @@
+"""Build-time synthetic training corpora.
+
+Python port of `rust/src/data/corpus.rs` — same domain parameterization
+(Zipf unigram + seeded Markov bigram + motif repetition) so the models are
+trained on the same *structure* the rust harness evaluates on. The streams
+use independent seeds (train vs eval splits); only the Markov *table* seed
+is shared (7, the project-wide convention).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+DOMAIN_PARAMS = {
+    # (zipf_s, markov_lambda, repeat_prob, motif_len)
+    "web": (1.05, 0.55, 0.02, 4),
+    "code": (1.35, 0.70, 0.20, 6),
+    "arxiv": (0.95, 0.60, 0.05, 8),
+    "math": (1.25, 0.65, 0.10, 3),
+    "wiki": (1.00, 0.55, 0.03, 4),
+}
+
+DOMAIN_IDS = {"web": 0, "code": 1, "arxiv": 2, "math": 3, "wiki": 4}
+TABLE_SEED = 7
+BRANCH = 4
+
+
+class SyntheticCorpus:
+    """Deterministic synthetic token stream for one domain."""
+
+    def __init__(self, domain: str, vocab: int, table_seed: int, stream_seed: int):
+        assert vocab >= 8
+        s, lam, rep, motif = DOMAIN_PARAMS[domain]
+        self.vocab = vocab
+        self.lam = lam
+        self.rep = rep
+        self.motif = motif
+        # Zipf CDF.
+        w = 1.0 / np.arange(1, vocab + 1, dtype=np.float64) ** s
+        self.cdf = np.cumsum(w / w.sum())
+        # Markov successor table seeded per (table_seed, domain).
+        trng = np.random.default_rng(table_seed ^ (DOMAIN_IDS[domain] * 0x9E3779B9))
+        self.successors = np.stack(
+            [self._zipf_sample_rng(trng, BRANCH) for _ in range(vocab)]
+        )
+        self.rng = np.random.default_rng(stream_seed)
+        self.history: list[int] = []
+
+    def _zipf_sample_rng(self, rng, n):
+        u = rng.random(n)
+        return np.searchsorted(self.cdf, u).clip(0, self.vocab - 1)
+
+    def _zipf_sample(self):
+        return int(np.searchsorted(self.cdf, self.rng.random()).clip(0, self.vocab - 1))
+
+    def next_token(self) -> int:
+        h = self.history
+        if len(h) > 2 * self.motif and self.rng.random() < self.rep:
+            start = len(h) - self.motif
+            tok = h[start + len(h) % self.motif]
+            h.append(tok)
+            return tok
+        if h and self.rng.random() < self.lam:
+            succ = self.successors[h[-1]]
+            idx = 0
+            while idx + 1 < len(succ) and self.rng.random() < 0.4:
+                idx += 1
+            tok = int(succ[idx])
+        else:
+            tok = self._zipf_sample()
+        h.append(tok)
+        if len(h) > 64:
+            del h[:32]
+        return tok
+
+    def sequence(self, n: int) -> np.ndarray:
+        return np.array([self.next_token() for _ in range(n)], np.int32)
+
+    def batch(self, count: int, n: int) -> np.ndarray:
+        return np.stack([self.sequence(n) for _ in range(count)])
+
+
+def mixed_training_batch(vocab: int, count: int, seq: int, step: int) -> np.ndarray:
+    """Round-robin over domains so every evaluation domain is
+    in-distribution for the trained models."""
+    domains = list(DOMAIN_PARAMS)
+    out = []
+    for i in range(count):
+        d = domains[(step * count + i) % len(domains)]
+        c = SyntheticCorpus(d, vocab, TABLE_SEED, stream_seed=1_000_003 * step + 17 * i + 1)
+        out.append(c.sequence(seq))
+    return np.stack(out)

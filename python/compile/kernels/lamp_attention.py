@@ -1,0 +1,201 @@
+"""L1 Pallas kernel: LAMP causal attention for one (batch, head) block.
+
+Implements the paper's §4.2 pipeline per attention head:
+
+  1. KQ scores accumulated in PS(mu) with per-step rounding (§4.1),
+     scaled by 1/sqrt(d_h) in FP32;
+  2. LAMP selection on each causal row — strict (eq. 8), relaxed (eq. 9),
+     relaxed length-normalized (App. C.5) or random (App. C.4), chosen by
+     a runtime `mode` scalar;
+  3. FP32 recomputation of the flagged inner products;
+  4. FP32 softmax + value aggregation.
+
+Outputs the attention result and the number of recomputed products.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): selection is an elementwise
+VPU predicate over the score tile; recomputation is a masked MXU matmul of
+the whole tile (recompute-tile-then-select), the systolic-array-friendly
+replacement for scattered per-element dots.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .ps_round import ps_round
+
+# Selection mode codes (keep in sync with rust/src/coordinator/policy.rs).
+MODE_STRICT = 0
+MODE_RELAXED = 1
+MODE_RELAXED_LN = 2
+MODE_RANDOM = 3
+
+# Python float (not a jnp constant: pallas kernels may not capture traced
+# constants from module scope).
+_NEG = -1e30
+
+
+def _hash_u32(x: jax.Array) -> jax.Array:
+    """splitmix32-style integer hash (uint32 -> uint32)."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def _strict_mask(y, causal, tau):
+    """Strict rule (eq. 8): 2 z (1 - z) |y| > tau (row softmax over the
+    causal prefix)."""
+    ym = jnp.where(causal, y, _NEG)
+    m = jnp.max(ym, axis=1, keepdims=True)
+    e = jnp.where(causal, jnp.exp(ym - m), 0.0)
+    z = e / jnp.sum(e, axis=1, keepdims=True)
+    sens = 2.0 * z * (1.0 - z) * jnp.abs(y)
+    return jnp.logical_and(sens > tau, causal)
+
+
+def _relaxed_w(y, causal):
+    """|y| e^{y - rowmax} over causal entries (eq. 9 sensitivities)."""
+    ym = jnp.where(causal, y, _NEG)
+    m = jnp.max(ym, axis=1, keepdims=True)
+    return jnp.where(causal, jnp.abs(y) * jnp.exp(ym - m), 0.0)
+
+
+def lamp_select(
+    y: jax.Array,
+    causal: jax.Array,
+    tau: jax.Array,
+    mode: jax.Array,
+    seed: jax.Array,
+    ref_len: int,
+) -> jax.Array:
+    """Selection mask [S, S] for scaled causal scores `y`.
+
+    Rows are softmax rows (query positions); only causal entries (j <= i)
+    are candidates. Dispatched with `lax.switch` so only the requested
+    rule's mask is computed at run time — the random baseline's O(S³)
+    rank computation would otherwise dominate every forward pass
+    (EXPERIMENTS.md §Perf L2).
+    """
+    s = y.shape[0]
+
+    def strict_branch(_):
+        return _strict_mask(y, causal, tau)
+
+    def relaxed_branch(_):
+        w = _relaxed_w(y, causal)
+        wmax = jnp.max(w, axis=1, keepdims=True)
+        return jnp.logical_and(w > tau * wmax, causal)
+
+    def relaxed_ln_branch(_):
+        # Length-normalized relaxed (App. C.5): tau * sqrt(ref_len / n_i),
+        # saturated at 1 (relative thresholds live in [0, 1)).
+        w = _relaxed_w(y, causal)
+        wmax = jnp.max(w, axis=1, keepdims=True)
+        row_len = jnp.arange(1, s + 1, dtype=jnp.float32).reshape(s, 1)
+        tau_ln = jnp.minimum(tau * jnp.sqrt(ref_len / row_len), 1.0)
+        return jnp.logical_and(w > tau_ln * wmax, causal)
+
+    def random_branch(_):
+        # Random baseline (App. C.4): per-row count from the strict rule,
+        # uniformly random causal positions. Rank u-values per row; select
+        # the `count` smallest.
+        count = jnp.sum(_strict_mask(y, causal, tau), axis=1, keepdims=True)
+        idx = jnp.arange(s, dtype=jnp.uint32)
+        flat = idx[:, None] * jnp.uint32(s) + idx[None, :]
+        u = _hash_u32(flat + jnp.asarray(seed, jnp.uint32) * jnp.uint32(0x9E3779B9))
+        u = jnp.where(causal, u, jnp.uint32(0xFFFFFFFF))
+        # rank[i, j] = #{k : u[i, k] < u[i, j]} (hash collisions are
+        # ~impossible at these sizes).
+        rank = jnp.sum((u[:, None, :] < u[:, :, None]).astype(jnp.int32), axis=2)
+        return jnp.logical_and(rank < count, causal)
+
+    mode = jnp.clip(jnp.asarray(mode, jnp.int32), 0, 3)
+    return lax.switch(
+        mode,
+        [strict_branch, relaxed_branch, relaxed_ln_branch, random_branch],
+        operand=None,
+    )
+
+
+def _lamp_attention_kernel(ref_len: int, scalars_ref, q_ref, k_ref, v_ref, o_ref, cnt_ref):
+    """Kernel body for one (batch*head) block.
+
+    scalars = [mu (bitcast i32), tau, seed (bitcast i32)] packed as f32[3]
+    to keep a single scalar operand; bit-exact unpack via bitcast.
+    """
+    q = q_ref[...]  # [S, hd]
+    k = k_ref[...]
+    v = v_ref[...]
+    mu = lax.bitcast_convert_type(scalars_ref[0], jnp.int32)
+    tau = scalars_ref[1]
+    seed = lax.bitcast_convert_type(scalars_ref[2], jnp.int32)
+
+    s, hd = q.shape
+    scale = jnp.float32(1.0) / jnp.sqrt(jnp.float32(hd))
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+    # Step 1: PS(mu) sequential accumulation of raw KQ products.
+    def step(d, c):
+        qd = lax.dynamic_slice_in_dim(q, d, 1, axis=1)  # [S, 1]
+        kd = lax.dynamic_slice_in_dim(k, d, 1, axis=1)  # [S, 1]
+        return ps_round(c + qd * kd.T, mu)
+
+    raw = lax.fori_loop(0, hd, step, jnp.zeros((s, s), jnp.float32))
+    y = raw * scale
+
+    # Steps 2-3: selection + FP32 recomputation of flagged products.
+    sel = lamp_select(y, causal, tau, _mode_of(scalars_ref), seed, ref_len)
+    exact = (q @ k.T) * scale
+    y = jnp.where(sel, exact, y)
+
+    # Step 4: FP32 softmax + value aggregation.
+    ym = jnp.where(causal, y, _NEG)
+    m = jnp.max(ym, axis=1, keepdims=True)
+    e = jnp.where(causal, jnp.exp(ym - m), 0.0)
+    probs = e / jnp.sum(e, axis=1, keepdims=True)
+    o_ref[...] = probs @ v
+    cnt_ref[...] = jnp.sum(sel).astype(jnp.float32).reshape(1)
+
+
+def _mode_of(scalars_ref):
+    return lax.bitcast_convert_type(scalars_ref[3], jnp.int32)
+
+
+def lamp_attention_head(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mu: jax.Array,
+    tau: jax.Array,
+    seed: jax.Array,
+    mode: jax.Array,
+    ref_len: int,
+) -> tuple[jax.Array, jax.Array]:
+    """LAMP causal attention for a single head.
+
+    q, k, v: [S, hd] FP32. Returns (out [S, hd], recompute_count scalar).
+    """
+    s, hd = q.shape
+    scalars = jnp.stack(
+        [
+            lax.bitcast_convert_type(jnp.asarray(mu, jnp.int32), jnp.float32),
+            jnp.asarray(tau, jnp.float32),
+            lax.bitcast_convert_type(jnp.asarray(seed, jnp.int32), jnp.float32),
+            lax.bitcast_convert_type(jnp.asarray(mode, jnp.int32), jnp.float32),
+        ]
+    )
+    import functools
+
+    out, cnt = pl.pallas_call(
+        functools.partial(_lamp_attention_kernel, ref_len),
+        out_shape=(
+            jax.ShapeDtypeStruct((s, hd), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ),
+        interpret=True,
+    )(scalars, q, k, v)
+    return out, cnt[0]

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: PS(mu) round-to-nearest-even and PS-accumulated matmul.
+
+The PS(mu) format (paper §4.1) is FP32 rounded to mu mantissa bits, RNE.
+The bit-twiddling below matches `rust/src/softfloat/round.rs` bit-for-bit
+and takes mu as a *runtime* scalar so one lowered artifact serves every
+precision.
+
+Pallas kernels are lowered with interpret=True: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO ops
+(see /opt/xla-example/README.md). On a real TPU the same kernel structure
+maps to VPU integer ops fused into the MXU accumulation loop — see
+DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def ps_round(x: jax.Array, mu: jax.Array) -> jax.Array:
+    """Round f32 values to `mu` mantissa bits, RNE (ties to even).
+
+    * mu == 23 is the identity; non-finite values pass through.
+    * Matches rust round_to_mantissa: integer add of (half-ulp - 1 + lsb)
+      then truncate; mantissa overflow carries into the exponent (correct
+      RNE), overflow past the max exponent yields inf.
+    """
+    mu = jnp.asarray(mu, jnp.int32)
+    x = jnp.asarray(x, jnp.float32)
+    u = lax.bitcast_convert_type(x, jnp.uint32)
+    shift = (23 - mu).astype(jnp.uint32)
+    sh = jnp.maximum(shift, jnp.uint32(1))  # avoid UB shifts when mu == 23
+    lsb = (u >> sh) & jnp.uint32(1)
+    bias = lsb + ((jnp.uint32(1) << (sh - jnp.uint32(1))) - jnp.uint32(1))
+    r = ((u + bias) >> sh) << sh
+    out = lax.bitcast_convert_type(r, jnp.float32)
+    out = jnp.where(shift == 0, x, out)
+    return jnp.where(jnp.isfinite(x), out, x)
+
+
+def ps_matmul_ref_accum(a: jax.Array, b: jax.Array, mu: jax.Array) -> jax.Array:
+    """C = A @ B with per-step PS(mu) rounding: c <- round(c + a_k * b_k).
+
+    Sequential over the contraction axis, matching the rust engine's
+    accumulation order bit-for-bit. a: [m, k], b: [k, n].
+    """
+    m, kdim = a.shape
+    _, n = b.shape
+
+    def step(i, c):
+        col = lax.dynamic_slice_in_dim(a, i, 1, axis=1)  # [m, 1]
+        row = lax.dynamic_slice_in_dim(b, i, 1, axis=0)  # [1, n]
+        return ps_round(c + col * row, mu)
+
+    return lax.fori_loop(0, kdim, step, jnp.zeros((m, n), jnp.float32))
+
+
+def _ps_matmul_kernel(mu_ref, a_ref, b_ref, o_ref):
+    """Pallas kernel body: one (m, n) tile accumulated over k with rounding."""
+    a = a_ref[...]
+    b = b_ref[...]
+    mu = mu_ref[0]
+    o_ref[...] = ps_matmul_ref_accum(a, b, mu)
+
+
+def ps_matmul(a: jax.Array, b: jax.Array, mu: jax.Array) -> jax.Array:
+    """Pallas-wrapped PS(mu) matmul (interpret mode; single tile).
+
+    Tiles are deliberately whole-array here: at the model sizes used in
+    this reproduction one (S, S) score tile fits VMEM comfortably
+    (see DESIGN.md §Hardware-Adaptation for the blocked variant analysis).
+    """
+    m, _ = a.shape
+    _, n = b.shape
+    mu_arr = jnp.asarray(mu, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        _ps_matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(mu_arr, a, b)

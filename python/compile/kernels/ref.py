@@ -1,0 +1,119 @@
+"""Pure-jnp/numpy correctness oracles for the L1 kernels.
+
+These implement the same mathematics with no Pallas and no bit tricks
+(numpy float64 / explicit Python rounding where needed), and are the
+ground truth for `python/tests/`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def ps_round_ref(x: np.ndarray, mu: int) -> np.ndarray:
+    """Reference PS(mu) RNE rounding via integer arithmetic on the bits.
+
+    Independent implementation (numpy uint64 arithmetic, explicit tie
+    handling) used to validate the bit-twiddling kernel.
+    """
+    assert 1 <= mu <= 23
+    x = np.asarray(x, np.float32)
+    if mu == 23:
+        return x.copy()
+    u = x.view(np.uint32).astype(np.uint64)
+    shift = np.uint64(23 - mu)
+    one = np.uint64(1)
+    kept = u >> shift
+    frac = u & ((one << shift) - one)
+    half = one << (shift - one)
+    round_up = (frac > half) | ((frac == half) & ((kept & one) == one))
+    r = (kept + round_up.astype(np.uint64)) << shift
+    out = (r & np.uint64(0xFFFFFFFF)).astype(np.uint32).view(np.float32)
+    finite = np.isfinite(x)
+    return np.where(finite, out, x)
+
+
+def fma_f32(a, b, c):
+    """Emulated single-rounding f32 FMA: a*b is exact in f64 (48-bit
+    product of 24-bit mantissas), the add rounds once in f64, then the cast
+    rounds to f32. Agrees with hardware f32 FMA except for astronomically
+    rare double-rounding cases (~2^-29 per op). This is the canonical
+    accumulation step -- XLA CPU contracts `c + a*b` to an FMA, and the
+    rust engine uses `f32::mul_add`."""
+    return (
+        np.asarray(c, np.float64) + np.asarray(a, np.float64) * np.asarray(b, np.float64)
+    ).astype(np.float32)
+
+
+def ps_matmul_ref(a: np.ndarray, b: np.ndarray, mu: int) -> np.ndarray:
+    """C = A @ B with per-step PS(mu) rounding of FMA accumulation,
+    sequential over k."""
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    m, kdim = a.shape
+    _, n = b.shape
+    c = np.zeros((m, n), np.float32)
+    for i in range(kdim):
+        c = ps_round_ref(fma_f32(a[:, i : i + 1], b[i : i + 1, :], c), mu)
+    return c
+
+
+def softmax_ref(y: np.ndarray, axis: int = -1) -> np.ndarray:
+    m = np.max(y, axis=axis, keepdims=True)
+    e = np.exp(y - m)
+    return e / np.sum(e, axis=axis, keepdims=True)
+
+
+def select_strict_ref(y_row: np.ndarray, tau: float) -> np.ndarray:
+    """Strict LAMP rule (eq. 8) on one causal row of scaled scores."""
+    z = softmax_ref(y_row.astype(np.float64))
+    sens = 2.0 * z * (1.0 - z) * np.abs(y_row.astype(np.float64))
+    return sens > tau
+
+
+def select_relaxed_ref(y_row: np.ndarray, tau: float) -> np.ndarray:
+    """Relaxed relative-threshold rule (eq. 9) on one causal row."""
+    y = y_row.astype(np.float64)
+    m = np.max(y)
+    w = np.abs(y) * np.exp(y - m)
+    return w > tau * np.max(w)
+
+
+def lamp_attention_ref(
+    q: np.ndarray,
+    k: np.ndarray,
+    v: np.ndarray,
+    mu: int,
+    tau: float,
+    mode: str = "strict",
+    ref_len: int = 1024,
+):
+    """Reference LAMP causal attention for one head (row-by-row, float64
+    softmax). Returns (out [S, hd], recompute_count)."""
+    s, hd = q.shape
+    scale = np.float32(1.0) / np.float32(np.sqrt(np.float32(hd)))
+    out = np.zeros((s, hd), np.float32)
+    count = 0
+    for i in range(s):
+        row = np.zeros(i + 1, np.float32)
+        for j in range(i + 1):
+            c = np.float32(0.0)
+            for d in range(hd):
+                c = np.float32(ps_round_ref(fma_f32(q[i, d], k[j, d], c), mu))
+            row[j] = c * scale
+        if np.isfinite(tau):
+            if mode == "strict":
+                sel = select_strict_ref(row, tau)
+            elif mode == "relaxed":
+                sel = select_relaxed_ref(row, tau)
+            elif mode == "relaxed_ln":
+                t = min(tau * np.sqrt(ref_len / (i + 1.0)), 1.0)
+                sel = select_relaxed_ref(row, t)
+            else:
+                raise ValueError(mode)
+            for j in np.nonzero(sel)[0]:
+                row[j] = np.float32(np.dot(q[i].astype(np.float32), k[j].astype(np.float32))) * scale
+                count += 1
+        p = softmax_ref(row.astype(np.float64))
+        out[i] = (p[:, None] * v[: i + 1].astype(np.float64)).sum(axis=0).astype(np.float32)
+    return out, count

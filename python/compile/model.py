@@ -1,0 +1,229 @@
+"""L2: GPT-2-architecture forward pass with LAMP attention, in JAX.
+
+This is the computation the artifacts are lowered from. It mirrors the
+rust native engine (`rust/src/model/`) operation-for-operation:
+
+  * embeddings  wte[token] + wpe[pos]
+  * pre-LN blocks: LN -> fused QKV -> LAMP causal attention (L1 kernel,
+    PS(mu) KQ accumulation + selective FP32 recomputation) -> proj ->
+    residual; LN -> GELU MLP -> residual
+  * final LN -> tied unembedding
+
+Runtime scalar inputs (mu, tau, seed, mode) make one lowered artifact per
+model config serve every precision/threshold/rule combination:
+mode in {0: strict, 1: relaxed, 2: relaxed_ln, 3: random}; the FP32
+reference is mu=23, uniform low precision is tau=+inf.
+
+Outputs: (logits [B, S, V], recompute_count, causal_total).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.lamp_attention import lamp_attention_head
+
+LN_EPS = 1e-5
+SQRT_2_OVER_PI = np.float32(0.79788456)
+GELU_C = np.float32(0.044715)
+
+
+class Config:
+    """Model hyperparameters; mirror of rust ModelConfig (see config.rs)."""
+
+    def __init__(self, name, vocab, seq, layers, heads, d_model, batch):
+        self.name = name
+        self.vocab = vocab
+        self.seq = seq
+        self.layers = layers
+        self.heads = heads
+        self.d_model = d_model
+        self.batch = batch
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.heads
+
+    @property
+    def d_ff(self):
+        return 4 * self.d_model
+
+    def causal_products(self, s):
+        return self.layers * self.heads * s * (s + 1) // 2
+
+
+CONFIGS = {
+    "nano": Config("nano", 128, 32, 2, 2, 32, 2),
+    "small": Config("small", 512, 128, 4, 4, 128, 4),
+    "xl": Config("xl", 512, 128, 8, 8, 256, 4),
+}
+
+
+def weight_order(cfg: Config) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical flat artifact input order, matching
+    rust Weights::artifact_order()."""
+    d, dff = cfg.d_model, cfg.d_ff
+    order = [("wte", (cfg.vocab, d)), ("wpe", (cfg.seq, d))]
+    for l in range(cfg.layers):
+        order += [
+            (f"h{l}.ln1.g", (d,)),
+            (f"h{l}.ln1.b", (d,)),
+            (f"h{l}.attn.w_qkv", (d, 3 * d)),
+            (f"h{l}.attn.b_qkv", (3 * d,)),
+            (f"h{l}.attn.w_proj", (d, d)),
+            (f"h{l}.attn.b_proj", (d,)),
+            (f"h{l}.ln2.g", (d,)),
+            (f"h{l}.ln2.b", (d,)),
+            (f"h{l}.mlp.w_fc", (d, dff)),
+            (f"h{l}.mlp.b_fc", (dff,)),
+            (f"h{l}.mlp.w_out", (dff, d)),
+            (f"h{l}.mlp.b_out", (d,)),
+        ]
+    order += [("lnf.g", (d,)), ("lnf.b", (d,))]
+    return order
+
+
+def unflatten_params(cfg: Config, flat: List[jax.Array]) -> Dict[str, jax.Array]:
+    names = [n for n, _ in weight_order(cfg)]
+    assert len(flat) == len(names), (len(flat), len(names))
+    return dict(zip(names, flat))
+
+
+def layernorm(x, g, b):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + LN_EPS) * g + b
+
+
+def gelu(x):
+    """GPT-2 tanh-approximated GELU (same constants as the rust engine)."""
+    return 0.5 * x * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (x + GELU_C * x * x * x)))
+
+
+def forward(
+    cfg: Config,
+    params: Dict[str, jax.Array],
+    tokens: jax.Array,  # [B, S] int32
+    mu: jax.Array,  # scalar int32
+    tau: jax.Array,  # scalar f32
+    seed: jax.Array,  # scalar int32
+    mode: jax.Array,  # scalar int32 (0..3)
+):
+    """LAMP forward pass. Returns (logits, recompute_count, causal_total)."""
+    b, s = tokens.shape
+    hd = cfg.head_dim
+
+    x = params["wte"][tokens] + params["wpe"][:s][None, :, :]
+    total_count = jnp.float32(0.0)
+
+    for l in range(cfg.layers):
+        p = lambda k: params[f"h{l}.{k}"]  # noqa: E731
+        xn = layernorm(x, p("ln1.g"), p("ln1.b"))
+        qkv = xn @ p("attn.w_qkv") + p("attn.b_qkv")
+        q, k, v = jnp.split(qkv, 3, axis=-1)  # each [B, S, D]
+
+        heads_out = []
+        for h in range(cfg.heads):
+            sl = slice(h * hd, (h + 1) * hd)
+            qh, kh, vh = q[..., sl], k[..., sl], v[..., sl]
+            # Per-(layer, head, batch) seeds so the Random rule streams are
+            # independent, mirroring the rust per-layer forked RNGs.
+            seeds = seed + jnp.arange(b, dtype=jnp.int32) * 7919 + l * 104729 + h * 1299709
+            out, cnt = jax.vmap(
+                lambda qq, kk, vv, sd: lamp_attention_head(
+                    qq, kk, vv, mu, tau, sd, mode, cfg.seq
+                )
+            )(qh, kh, vh, seeds)
+            heads_out.append(out)
+            total_count = total_count + jnp.sum(cnt)
+        attn = jnp.concatenate(heads_out, axis=-1)
+        x = x + attn @ p("attn.w_proj") + p("attn.b_proj")
+
+        xn = layernorm(x, p("ln2.g"), p("ln2.b"))
+        hmid = gelu(xn @ p("mlp.w_fc") + p("mlp.b_fc"))
+        x = x + hmid @ p("mlp.w_out") + p("mlp.b_out")
+
+    x = layernorm(x, params["lnf.g"], params["lnf.b"])
+    logits = x @ params["wte"].T
+    causal_total = jnp.float32(b * cfg.causal_products(s))
+    return logits, total_count, causal_total
+
+
+def forward_flat(cfg: Config, tokens, mu, tau, seed, mode, *flat_weights):
+    """Entry point lowered by aot.py: weights as positional args in
+    `weight_order`, so the rust runtime can feed them as a flat list."""
+    params = unflatten_params(cfg, list(flat_weights))
+    return forward(cfg, params, tokens, mu, tau, seed, mode)
+
+
+# ----------------------------------------------------------------------
+# Training-path forward (differentiable: plain FP32 attention, no LAMP).
+# Used only by train.py at build time.
+# ----------------------------------------------------------------------
+
+
+def forward_train(cfg: Config, params: Dict[str, jax.Array], tokens: jax.Array):
+    """Standard FP32 forward (no rounding simulation), for training."""
+    b, s = tokens.shape
+    hd = cfg.head_dim
+
+    x = params["wte"][tokens] + params["wpe"][:s][None, :, :]
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    for l in range(cfg.layers):
+        p = lambda k: params[f"h{l}.{k}"]  # noqa: E731
+        xn = layernorm(x, p("ln1.g"), p("ln1.b"))
+        qkv = xn @ p("attn.w_qkv") + p("attn.b_qkv")
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, s, cfg.heads, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(b, s, cfg.heads, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s, cfg.heads, hd).transpose(0, 2, 1, 3)
+        scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = (probs @ v).transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        x = x + attn @ p("attn.w_proj") + p("attn.b_proj")
+        xn = layernorm(x, p("ln2.g"), p("ln2.b"))
+        hmid = gelu(xn @ p("mlp.w_fc") + p("mlp.b_fc"))
+        x = x + hmid @ p("mlp.w_out") + p("mlp.b_out")
+    x = layernorm(x, params["lnf.g"], params["lnf.b"])
+    return x @ params["wte"].T
+
+
+def loss_fn(cfg: Config, params, tokens):
+    """Mean next-token cross-entropy."""
+    logits = forward_train(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def init_params(cfg: Config, key) -> Dict[str, jax.Array]:
+    """GPT-2-style initialization (N(0, 0.02), residual scaling)."""
+    d, dff = cfg.d_model, cfg.d_ff
+    resid = 1.0 / np.sqrt(2.0 * cfg.layers)
+    params = {}
+    key, k1, k2 = jax.random.split(key, 3)
+    params["wte"] = 0.02 * jax.random.normal(k1, (cfg.vocab, d), jnp.float32)
+    params["wpe"] = 0.01 * jax.random.normal(k2, (cfg.seq, d), jnp.float32)
+    for l in range(cfg.layers):
+        key, k1, k2, k3, k4 = jax.random.split(key, 5)
+        params[f"h{l}.ln1.g"] = jnp.ones(d, jnp.float32)
+        params[f"h{l}.ln1.b"] = jnp.zeros(d, jnp.float32)
+        params[f"h{l}.attn.w_qkv"] = 0.02 * jax.random.normal(k1, (d, 3 * d), jnp.float32)
+        params[f"h{l}.attn.b_qkv"] = jnp.zeros(3 * d, jnp.float32)
+        params[f"h{l}.attn.w_proj"] = 0.02 * resid * jax.random.normal(k2, (d, d), jnp.float32)
+        params[f"h{l}.attn.b_proj"] = jnp.zeros(d, jnp.float32)
+        params[f"h{l}.ln2.g"] = jnp.ones(d, jnp.float32)
+        params[f"h{l}.ln2.b"] = jnp.zeros(d, jnp.float32)
+        params[f"h{l}.mlp.w_fc"] = 0.02 * jax.random.normal(k3, (d, dff), jnp.float32)
+        params[f"h{l}.mlp.b_fc"] = jnp.zeros(dff, jnp.float32)
+        params[f"h{l}.mlp.w_out"] = 0.02 * resid * jax.random.normal(k4, (dff, d), jnp.float32)
+        params[f"h{l}.mlp.b_out"] = jnp.zeros(d, jnp.float32)
+    params["lnf.g"] = jnp.ones(d, jnp.float32)
+    params["lnf.b"] = jnp.zeros(d, jnp.float32)
+    return params

@@ -1,0 +1,79 @@
+"""Writer/reader for the `.lamp` tensor container format.
+
+Mirrors `rust/src/tensorio/mod.rs` byte-for-byte (little-endian):
+
+    magic   : 8 bytes  b"LAMPTNSR"
+    version : u32      (1)
+    count   : u32
+    repeat count times:
+      name_len u32 | name bytes | dtype u32 (0=f32, 1=i32) | ndim u32
+      | dims ndim*u64 | payload 4*prod(dims) bytes
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = b"LAMPTNSR"
+VERSION = 1
+
+
+def write_tensors(path: str, tensors: List[Tuple[str, np.ndarray]]) -> None:
+    """Write an ordered list of (name, array) pairs. float -> f32, int -> i32."""
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<II", VERSION, len(tensors))
+    seen = set()
+    for name, arr in tensors:
+        if name in seen:
+            raise ValueError(f"duplicate tensor name {name!r}")
+        seen.add(name)
+        a = np.asarray(arr)
+        if a.dtype.kind == "f":
+            a = a.astype("<f4")
+            dtype_code = 0
+        elif a.dtype.kind in "iu":
+            a = a.astype("<i4")
+            dtype_code = 1
+        else:
+            raise TypeError(f"unsupported dtype {a.dtype} for {name!r}")
+        nb = name.encode("utf-8")
+        out += struct.pack("<I", len(nb))
+        out += nb
+        out += struct.pack("<II", dtype_code, a.ndim)
+        for d in a.shape:
+            out += struct.pack("<Q", d)
+        out += a.tobytes(order="C")
+    with open(path, "wb") as f:
+        f.write(bytes(out))
+
+
+def read_tensors(path: str) -> Dict[str, np.ndarray]:
+    """Read back into a dict (order preserved in py3.7+ dicts)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[:8] != MAGIC:
+        raise ValueError("bad magic: not a .lamp file")
+    version, count = struct.unpack_from("<II", data, 8)
+    if version != VERSION:
+        raise ValueError(f"unsupported version {version}")
+    off = 16
+    out: Dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (name_len,) = struct.unpack_from("<I", data, off)
+        off += 4
+        name = data[off : off + name_len].decode("utf-8")
+        off += name_len
+        dtype_code, ndim = struct.unpack_from("<II", data, off)
+        off += 8
+        dims = struct.unpack_from(f"<{ndim}Q", data, off)
+        off += 8 * ndim
+        n = int(np.prod(dims)) if ndim else 1
+        dt = "<f4" if dtype_code == 0 else "<i4"
+        arr = np.frombuffer(data, dtype=dt, count=n, offset=off).reshape(dims)
+        off += 4 * n
+        out[name] = arr.copy()
+    return out

@@ -1,0 +1,96 @@
+"""Build-time training of the *-sim models (DESIGN.md §Substitutions).
+
+Pretrained GPT-2 weights are unavailable offline, so each registry config
+is trained for a few hundred AdamW steps on the mixed synthetic corpus.
+This is enough for the models to develop concentrated attention and a
+realistic KQ-logit spread — the numerical regime LAMP targets — while
+keeping `make artifacts` fast on CPU.
+
+Run via aot.py; standalone: python -m compile.train --config small
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .model import CONFIGS, Config, init_params, loss_fn
+
+TRAIN_STEPS = {"nano": 200, "small": 300, "xl": 300}
+TRAIN_BATCH = {"nano": 16, "small": 8, "xl": 8}
+LR = 3e-3
+WD = 0.01
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adamw_update(params, grads, state, lr=LR, b1=0.9, b2=0.99, eps=1e-8, wd=WD):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+
+    def upd(p, m, v):
+        step = lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + eps)
+        return p - step - lr * wd * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train(cfg: Config, steps: int | None = None, seed: int = 0, log_every: int = 50):
+    """Train one config; returns (params, loss_history)."""
+    steps = steps if steps is not None else TRAIN_STEPS[cfg.name]
+    batch = TRAIN_BATCH[cfg.name]
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    state = adamw_init(params)
+
+    @jax.jit
+    def step_fn(params, state, tokens):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(params)
+        params, state = adamw_update(params, grads, state)
+        return params, state, loss
+
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        tokens = jnp.asarray(
+            data_mod.mixed_training_batch(cfg.vocab, batch, cfg.seq, step)
+        )
+        params, state, loss = step_fn(params, state, tokens)
+        history.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(
+                f"[train/{cfg.name}] step {step:4d}  loss {float(loss):.4f}  "
+                f"({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    return params, history
+
+
+def params_to_numpy(params: Dict[str, jax.Array]) -> Dict[str, np.ndarray]:
+    return {k: np.asarray(v) for k, v in params.items()}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="nano", choices=list(CONFIGS))
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+    cfg = CONFIGS[args.config]
+    _, hist = train(cfg, steps=args.steps)
+    print(f"final loss: {hist[-1]:.4f} (start {hist[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

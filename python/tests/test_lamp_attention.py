@@ -1,0 +1,101 @@
+"""L1 LAMP attention kernel vs the row-by-row numpy oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.lamp_attention import (
+    MODE_RANDOM,
+    MODE_RELAXED,
+    MODE_RELAXED_LN,
+    MODE_STRICT,
+    lamp_attention_head,
+)
+from compile.kernels.ref import lamp_attention_ref
+
+
+def qkv(s, hd, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (
+        (scale * rng.standard_normal((s, hd))).astype(np.float32),
+        (scale * rng.standard_normal((s, hd))).astype(np.float32),
+        rng.standard_normal((s, hd)).astype(np.float32),
+    )
+
+
+@pytest.mark.parametrize(
+    "mu,tau,mode_i,mode_s",
+    [
+        (4, np.inf, MODE_STRICT, "strict"),
+        (23, np.inf, MODE_STRICT, "strict"),
+        (4, 0.05, MODE_STRICT, "strict"),
+        (2, 0.2, MODE_STRICT, "strict"),
+        (3, 0.1, MODE_RELAXED, "relaxed"),
+        (5, 0.3, MODE_RELAXED_LN, "relaxed_ln"),
+    ],
+)
+def test_kernel_matches_reference(mu, tau, mode_i, mode_s):
+    q, k, v = qkv(10, 8, 42)
+    out, cnt = lamp_attention_head(q, k, v, mu, np.float32(tau), 0, mode_i, 1024)
+    want, want_cnt = lamp_attention_ref(q, k, v, mu, tau, mode_s, 1024)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=3e-5, atol=3e-6)
+    assert int(cnt) == want_cnt
+
+
+def test_mu23_uniform_equals_exact_attention():
+    q, k, v = qkv(12, 4, 7)
+    out, cnt = lamp_attention_head(q, k, v, 23, np.float32(np.inf), 0, MODE_STRICT, 1024)
+    want, _ = lamp_attention_ref(q, k, v, 23, np.inf, "strict", 1024)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=3e-5, atol=3e-6)
+    assert int(cnt) == 0
+
+
+def test_random_mode_count_matches_strict():
+    q, k, v = qkv(16, 8, 3, scale=2.0)
+    _, cnt_s = lamp_attention_head(q, k, v, 4, np.float32(0.05), 0, MODE_STRICT, 1024)
+    _, cnt_r = lamp_attention_head(q, k, v, 4, np.float32(0.05), 9, MODE_RANDOM, 1024)
+    assert int(cnt_s) == int(cnt_r)
+    assert int(cnt_s) > 0
+
+
+def test_random_mode_seed_changes_selection_not_count():
+    q, k, v = qkv(16, 8, 5, scale=2.0)
+    out1, c1 = lamp_attention_head(q, k, v, 3, np.float32(0.05), 1, MODE_RANDOM, 1024)
+    out2, c2 = lamp_attention_head(q, k, v, 3, np.float32(0.05), 2, MODE_RANDOM, 1024)
+    assert int(c1) == int(c2)
+    assert not np.allclose(np.asarray(out1), np.asarray(out2))
+
+
+def test_lamp_reduces_error_vs_uniform():
+    q, k, v = qkv(20, 8, 11, scale=2.0)
+    exact, _ = lamp_attention_ref(q, k, v, 23, np.inf, "strict", 1024)
+    uni, _ = lamp_attention_head(q, k, v, 2, np.float32(np.inf), 0, MODE_STRICT, 1024)
+    lamp, cnt = lamp_attention_head(q, k, v, 2, np.float32(0.01), 0, MODE_STRICT, 1024)
+    e_uni = np.abs(np.asarray(uni) - exact).max()
+    e_lamp = np.abs(np.asarray(lamp) - exact).max()
+    assert int(cnt) > 0
+    assert e_lamp < e_uni
+
+
+def test_causality_row0():
+    # Row 0 attends only to itself: output row 0 == v row 0.
+    q, k, v = qkv(6, 4, 13)
+    out, _ = lamp_attention_head(q, k, v, 4, np.float32(0.1), 0, MODE_STRICT, 1024)
+    np.testing.assert_allclose(np.asarray(out)[0], v[0], rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=10),
+    st.sampled_from([2, 4, 8]),
+    st.integers(min_value=1, max_value=23),
+    st.sampled_from([0.02, 0.1, 0.5]),
+    st.integers(min_value=0, max_value=10_000),
+)
+def test_hypothesis_strict_parity(s, hd, mu, tau, seed):
+    q, k, v = qkv(s, hd, seed)
+    out, cnt = lamp_attention_head(q, k, v, mu, np.float32(tau), 0, MODE_STRICT, 1024)
+    want, want_cnt = lamp_attention_ref(q, k, v, mu, tau, "strict", 1024)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=5e-5, atol=5e-6)
+    assert int(cnt) == want_cnt

@@ -1,0 +1,112 @@
+"""L1 kernel vs oracle: PS(mu) rounding — the core correctness signal."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ps_round import ps_matmul, ps_round
+from compile.kernels.ref import ps_matmul_ref, ps_round_ref
+
+jitted_round = jax.jit(ps_round)
+
+
+def bits(x):
+    return np.asarray(x, np.float32).view(np.uint32)
+
+
+@pytest.mark.parametrize("mu", [1, 2, 4, 7, 10, 16, 23])
+def test_round_matches_reference_random(mu):
+    rng = np.random.default_rng(mu)
+    x = (rng.standard_normal(4096) * 10.0 ** rng.integers(-3, 4, 4096)).astype(np.float32)
+    got = np.asarray(jitted_round(x, mu))
+    want = ps_round_ref(x, mu)
+    np.testing.assert_array_equal(bits(got), bits(want))
+
+
+def test_mu23_is_identity():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(512).astype(np.float32)
+    np.testing.assert_array_equal(bits(jitted_round(x, 23)), bits(x))
+
+
+def test_ties_to_even_bf16():
+    # 1 + 2^-8 is exactly halfway between BF16 neighbours -> rounds to 1.0.
+    x = np.float32(1.0 + 2.0**-8)
+    assert float(jitted_round(x, 7)) == 1.0
+    # 1 + 3*2^-8 rounds up to even mantissa 1 + 2^-6.
+    x = np.float32(1.0 + 3 * 2.0**-8)
+    assert float(jitted_round(x, 7)) == 1.0 + 2.0**-6
+
+
+def test_specials_pass_through():
+    x = np.array([np.nan, np.inf, -np.inf, 0.0, -0.0], np.float32)
+    got = np.asarray(jitted_round(x, 7))
+    assert np.isnan(got[0])
+    assert got[1] == np.inf and got[2] == -np.inf
+    assert bits(got[3]) == bits(np.float32(0.0))
+    assert bits(got[4]) == bits(np.float32(-0.0))
+
+
+def test_overflow_to_infinity():
+    x = np.float32(np.finfo(np.float32).max)
+    assert float(jitted_round(x, 4)) == np.inf
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**32 - 1),
+    st.integers(min_value=1, max_value=23),
+)
+def test_round_hypothesis_parity(pattern, mu):
+    # Sweep raw bit patterns: covers subnormals, both signs, all binades.
+    x = np.uint32(pattern).view(np.float32)
+    if not np.isfinite(x):
+        return
+    got = np.asarray(jitted_round(x, mu))
+    want = ps_round_ref(x, mu)
+    assert bits(got) == bits(want), (x, mu)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.floats(min_value=-1e6, max_value=1e6, allow_nan=False, width=32),
+    st.integers(min_value=1, max_value=22),
+)
+def test_round_idempotent_and_bounded(x, mu):
+    x = np.float32(x)
+    r = float(jitted_round(x, mu))
+    assert float(jitted_round(np.float32(r), mu)) == r
+    # The relative |δ| <= u bound holds for *normal* inputs only.
+    if abs(x) >= 2.0**-126 and np.isfinite(r):
+        assert abs(r - x) <= abs(x) * 2.0 ** (-mu - 1) * (1 + 1e-6)
+
+
+@pytest.mark.parametrize("mu", [1, 4, 7, 23])
+@pytest.mark.parametrize("shape", [(3, 5, 4), (8, 8, 8), (1, 1, 1)])
+def test_matmul_matches_reference(mu, shape):
+    m, k, n = shape
+    rng = np.random.default_rng(mu * 100 + m)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(ps_matmul(a, b, mu))
+    want = ps_matmul_ref(a, b, mu)
+    np.testing.assert_array_equal(bits(got), bits(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=12),
+    st.integers(min_value=1, max_value=12),
+    st.integers(min_value=1, max_value=12),
+    st.integers(min_value=1, max_value=23),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(m, k, n, mu, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(ps_matmul(a, b, mu))
+    want = ps_matmul_ref(a, b, mu)
+    np.testing.assert_array_equal(bits(got), bits(want))

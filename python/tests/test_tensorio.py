@@ -1,0 +1,53 @@
+"""tensorio container format round-trips (python side; the rust side pins
+the same bytes in rust/src/tensorio/)."""
+
+import numpy as np
+import pytest
+
+from compile import tensorio
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "t.lamp")
+    w = np.arange(6, dtype=np.float32).reshape(2, 3)
+    toks = np.array([1, 2, 3], np.int32)
+    tensorio.write_tensors(path, [("w", w), ("toks", toks)])
+    back = tensorio.read_tensors(path)
+    assert list(back) == ["w", "toks"]
+    np.testing.assert_array_equal(back["w"], w)
+    np.testing.assert_array_equal(back["toks"], toks)
+    assert back["w"].dtype == np.float32
+    assert back["toks"].dtype == np.int32
+
+
+def test_header_bytes(tmp_path):
+    path = str(tmp_path / "t.lamp")
+    tensorio.write_tensors(path, [("x", np.zeros(1, np.float32))])
+    data = open(path, "rb").read()
+    assert data[:8] == b"LAMPTNSR"
+    assert int.from_bytes(data[8:12], "little") == 1  # version
+    assert int.from_bytes(data[12:16], "little") == 1  # count
+
+
+def test_duplicate_names_rejected(tmp_path):
+    path = str(tmp_path / "t.lamp")
+    with pytest.raises(ValueError):
+        tensorio.write_tensors(
+            path, [("x", np.zeros(1, np.float32)), ("x", np.ones(1, np.float32))]
+        )
+
+
+def test_bad_magic_rejected(tmp_path):
+    path = str(tmp_path / "bad.lamp")
+    open(path, "wb").write(b"NOTLAMP!" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        tensorio.read_tensors(path)
+
+
+def test_float64_downcast(tmp_path):
+    path = str(tmp_path / "t.lamp")
+    w = np.array([1.5, 2.5], np.float64)
+    tensorio.write_tensors(path, [("w", w)])
+    back = tensorio.read_tensors(path)
+    assert back["w"].dtype == np.float32
+    np.testing.assert_array_equal(back["w"], w.astype(np.float32))

@@ -1,0 +1,282 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations, robust statistics (median, MAD,
+//! mean, p95), throughput reporting, and aligned table output used by the
+//! per-figure benches under `benches/`.
+
+use crate::util::timer::fmt_duration;
+use std::time::{Duration, Instant};
+
+/// Statistics over per-iteration wall-clock samples.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl BenchStats {
+    fn sorted_ns(&self) -> Vec<u128> {
+        let mut v: Vec<u128> = self.samples.iter().map(|d| d.as_nanos()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn median(&self) -> Duration {
+        let v = self.sorted_ns();
+        if v.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(v[v.len() / 2] as u64)
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        let total: u128 = self.samples.iter().map(|d| d.as_nanos()).sum();
+        Duration::from_nanos((total / self.samples.len() as u128) as u64)
+    }
+
+    pub fn min(&self) -> Duration {
+        self.samples.iter().min().copied().unwrap_or(Duration::ZERO)
+    }
+
+    pub fn p95(&self) -> Duration {
+        let v = self.sorted_ns();
+        if v.is_empty() {
+            return Duration::ZERO;
+        }
+        let idx = ((v.len() as f64) * 0.95) as usize;
+        Duration::from_nanos(v[idx.min(v.len() - 1)] as u64)
+    }
+
+    /// Median absolute deviation (robust spread).
+    pub fn mad(&self) -> Duration {
+        let med = self.median().as_nanos() as i128;
+        let mut devs: Vec<u128> = self
+            .samples
+            .iter()
+            .map(|d| (d.as_nanos() as i128 - med).unsigned_abs())
+            .collect();
+        devs.sort_unstable();
+        if devs.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(devs[devs.len() / 2] as u64)
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} median {:>10}  mean {:>10}  p95 {:>10}  mad {:>9}  n={}",
+            self.name,
+            fmt_duration(self.median()),
+            fmt_duration(self.mean()),
+            fmt_duration(self.p95()),
+            fmt_duration(self.mad()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Benchmark runner: warms up, then collects timed samples.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    /// Cap on total measured time; sampling stops early past this budget.
+    pub max_total: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            sample_iters: 15,
+            max_total: Duration::from_secs(30),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, sample_iters: 5, max_total: Duration::from_secs(10) }
+    }
+
+    /// Time `f` repeatedly and collect statistics.
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        let budget_start = Instant::now();
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+            if budget_start.elapsed() > self.max_total {
+                break;
+            }
+        }
+        BenchStats { name: name.to_string(), samples }
+    }
+}
+
+/// Accumulates rows of a result table (one per paper figure series point)
+/// and prints it aligned. Benches use this to emit the same rows/series the
+/// paper reports.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Shared driver for the per-figure benches (`benches/figN.rs`): runs the
+/// named experiment at bench scale, prints the regenerated tables, and
+/// reports wall time. Scale is controlled by env vars LAMP_BENCH_SEQS /
+/// LAMP_BENCH_SEQLEN / LAMP_BENCH_QUICK so `cargo bench` stays bounded.
+pub fn run_experiment_bench(name: &str) {
+    let opts = crate::experiments::EvalOptions {
+        num_seqs: env_usize("LAMP_BENCH_SEQS", 4),
+        seq_len: env_usize("LAMP_BENCH_SEQLEN", 48),
+        stream_seed: 42,
+        workers: env_usize("LAMP_BENCH_WORKERS", 8),
+        artifacts: Some(
+            crate::runtime::ArtifactStore::default_dir()
+                .to_string_lossy()
+                .to_string(),
+        ),
+        quick: std::env::var("LAMP_BENCH_QUICK").is_ok(),
+    };
+    let t0 = Instant::now();
+    match crate::experiments::run(name, &opts) {
+        Ok(tables) => {
+            for t in &tables {
+                t.print();
+            }
+            println!("[bench {name}] regenerated in {:.1}s\n", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("[bench {name}] FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Format a float for table cells with adaptive precision.
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1000.0 || x.abs() < 0.001 {
+        format!("{x:.3e}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let stats = BenchStats {
+            name: "t".into(),
+            samples: vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(30),
+            ],
+        };
+        assert_eq!(stats.median(), Duration::from_millis(20));
+        assert_eq!(stats.mean(), Duration::from_millis(20));
+        assert_eq!(stats.min(), Duration::from_millis(10));
+        assert!(stats.summary().contains("median"));
+    }
+
+    #[test]
+    fn bencher_runs() {
+        let b = Bencher { warmup_iters: 1, sample_iters: 4, max_total: Duration::from_secs(5) };
+        let stats = b.run("noop", || 1 + 1);
+        assert_eq!(stats.samples.len(), 4);
+    }
+
+    #[test]
+    fn table_render_aligned() {
+        let mut t = Table::new("demo", &["mu", "kl"]);
+        t.row(vec!["4".into(), "0.123".into()]);
+        t.row(vec!["10".into(), "0.00001".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("mu"));
+        assert_eq!(r.lines().count(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fnum_ranges() {
+        assert_eq!(fnum(0.0), "0");
+        assert!(fnum(1234.5).contains('e'));
+        assert!(fnum(0.0001).contains('e'));
+        assert_eq!(fnum(1.5), "1.5000");
+    }
+}

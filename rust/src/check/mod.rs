@@ -1,0 +1,307 @@
+//! Minimal property-based testing framework (proptest is unavailable
+//! offline).
+//!
+//! Provides seeded generators over common domains and a runner that, on
+//! failure, performs greedy shrinking of the failing case before reporting.
+//!
+//! ```no_run
+//! use lamp::check::{Config, Gen, forall};
+//! forall(Config::default().cases(200), Gen::f32_range(-10.0, 10.0), |x| {
+//!     x.abs() >= 0.0
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Runner configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xC0FFEE, max_shrink_steps: 512 }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// A generator: produces values and knows how to shrink them.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        gen: impl Fn(&mut Rng) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Gen { gen: Box::new(gen), shrink: Box::new(shrink) }
+    }
+
+    /// Generator without shrinking.
+    pub fn no_shrink(gen: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Gen { gen: Box::new(gen), shrink: Box::new(|_| Vec::new()) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+
+    /// Map the generated value (loses shrinking beyond the source).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + Clone + 'static) -> Gen<U> {
+        let g = self.gen;
+        let s = self.shrink;
+        let f2 = f.clone();
+        Gen {
+            gen: Box::new(move |rng| f(g(rng))),
+            shrink: Box::new(move |_u| {
+                // We cannot invert f; shrink by regenerating small candidates
+                // is unsound, so no shrinking through map.
+                let _ = &s;
+                let _ = &f2;
+                Vec::new()
+            }),
+        }
+    }
+}
+
+impl Gen<f32> {
+    /// Uniform f32 in [lo, hi) with shrinking toward 0 and midpoints.
+    pub fn f32_range(lo: f32, hi: f32) -> Gen<f32> {
+        assert!(hi > lo);
+        Gen::new(
+            move |rng| lo + rng.f32() * (hi - lo),
+            |&x| {
+                let mut out = Vec::new();
+                if x != 0.0 {
+                    out.push(0.0);
+                    out.push(x / 2.0);
+                    out.push(x.trunc());
+                }
+                out.retain(|&c| c != x);
+                out
+            },
+        )
+    }
+}
+
+impl Gen<u32> {
+    /// Uniform u32 in [lo, hi] with shrinking toward lo.
+    pub fn u32_range(lo: u32, hi: u32) -> Gen<u32> {
+        assert!(hi >= lo);
+        Gen::new(
+            move |rng| lo + rng.below((hi - lo + 1) as u64) as u32,
+            move |&x| {
+                let mut out = Vec::new();
+                if x > lo {
+                    out.push(lo);
+                    out.push(lo + (x - lo) / 2);
+                    out.push(x - 1);
+                }
+                out.retain(|&c| c != x && c >= lo);
+                out.dedup();
+                out
+            },
+        )
+    }
+}
+
+impl Gen<usize> {
+    /// Uniform usize in [lo, hi] with shrinking toward lo.
+    pub fn usize_range(lo: usize, hi: usize) -> Gen<usize> {
+        assert!(hi >= lo);
+        Gen::new(
+            move |rng| lo + rng.below((hi - lo + 1) as u64) as usize,
+            move |&x| {
+                let mut out = Vec::new();
+                if x > lo {
+                    out.push(lo);
+                    out.push(lo + (x - lo) / 2);
+                    out.push(x - 1);
+                }
+                out.retain(|&c| c != x && c >= lo);
+                out.dedup();
+                out
+            },
+        )
+    }
+}
+
+impl Gen<Vec<f32>> {
+    /// Vector of uniform f32 with length in [min_len, max_len]; shrinks by
+    /// halving length and zeroing elements.
+    pub fn f32_vec(min_len: usize, max_len: usize, lo: f32, hi: f32) -> Gen<Vec<f32>> {
+        assert!(max_len >= min_len && hi > lo);
+        Gen::new(
+            move |rng| {
+                let n = rng.range(min_len, max_len + 1);
+                (0..n).map(|_| lo + rng.f32() * (hi - lo)).collect()
+            },
+            move |v: &Vec<f32>| {
+                let mut out = Vec::new();
+                if v.len() > min_len {
+                    out.push(v[..v.len() / 2.max(min_len)].to_vec());
+                    let mut shorter = v.clone();
+                    shorter.pop();
+                    out.push(shorter);
+                }
+                if v.iter().any(|&x| x != 0.0) {
+                    out.push(v.iter().map(|_| 0.0).collect());
+                    let mut halved = v.clone();
+                    for x in &mut halved {
+                        *x /= 2.0;
+                    }
+                    out.push(halved);
+                }
+                out.retain(|c| c.len() >= min_len && c != v);
+                out
+            },
+        )
+    }
+}
+
+/// Combine two independent generators.
+pub fn pair<A: Clone + 'static, B: Clone + 'static>(ga: Gen<A>, gb: Gen<B>) -> Gen<(A, B)> {
+    let (gena, shra) = (ga.gen, ga.shrink);
+    let (genb, shrb) = (gb.gen, gb.shrink);
+    Gen {
+        gen: Box::new(move |rng| (gena(rng), genb(rng))),
+        shrink: Box::new(move |(a, b)| {
+            let mut out: Vec<(A, B)> = Vec::new();
+            for sa in shra(a) {
+                out.push((sa, b.clone()));
+            }
+            for sb in shrb(b) {
+                out.push((a.clone(), sb));
+            }
+            out
+        }),
+    }
+}
+
+/// The result of a failed property run.
+#[derive(Debug)]
+pub struct Failure<T> {
+    pub original: T,
+    pub shrunk: T,
+    pub case_index: usize,
+}
+
+/// Run the property over generated cases; returns the shrunk failure if any.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    config: &Config,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) -> Option<Failure<T>> {
+    let mut rng = Rng::new(config.seed);
+    for case in 0..config.cases {
+        let value = gen.sample(&mut rng);
+        if !prop(&value) {
+            // Greedy shrink.
+            let mut current = value.clone();
+            let mut steps = 0;
+            'outer: while steps < config.max_shrink_steps {
+                for cand in gen.shrinks(&current) {
+                    steps += 1;
+                    if !prop(&cand) {
+                        current = cand;
+                        continue 'outer;
+                    }
+                    if steps >= config.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            return Some(Failure { original: value, shrunk: current, case_index: case });
+        }
+    }
+    None
+}
+
+/// Assert a property holds; panics with the shrunk counterexample otherwise.
+pub fn forall<T: Clone + std::fmt::Debug + 'static>(
+    config: Config,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    if let Some(fail) = check(&config, &gen, |v| prop(v)) {
+        panic!(
+            "property falsified at case {}:\n  original: {:?}\n  shrunk:   {:?}",
+            fail.case_index, fail.original, fail.shrunk
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall(Config::default().cases(100), Gen::f32_range(-5.0, 5.0), |x| {
+            x.abs() <= 5.0
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let fail = check(
+            &Config::default().cases(500),
+            &Gen::u32_range(0, 1000),
+            |&x| x < 100,
+        )
+        .expect("must fail");
+        // Shrinking should find a value close to the boundary.
+        assert!(fail.shrunk >= 100 && fail.shrunk <= fail.original);
+        assert!(fail.shrunk <= 200, "shrunk={}", fail.shrunk);
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = Gen::f32_vec(2, 10, -1.0, 1.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = g.sample(&mut rng);
+            assert!((2..=10).contains(&v.len()));
+            assert!(v.iter().all(|&x| (-1.0..1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn pair_shrinks_both_sides() {
+        let g = pair(Gen::u32_range(0, 100), Gen::u32_range(0, 100));
+        let shrinks = g.shrinks(&(50, 50));
+        assert!(shrinks.iter().any(|&(a, b)| a < 50 && b == 50));
+        assert!(shrinks.iter().any(|&(a, b)| a == 50 && b < 50));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = Config::default().seed(9).cases(50);
+        let g = Gen::f32_range(0.0, 1.0);
+        let mut rng1 = Rng::new(c.seed);
+        let mut rng2 = Rng::new(c.seed);
+        for _ in 0..50 {
+            assert_eq!(g.sample(&mut rng1).to_bits(), g.sample(&mut rng2).to_bits());
+        }
+    }
+}

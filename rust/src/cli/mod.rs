@@ -1,0 +1,9 @@
+//! Hand-rolled command-line argument parser (no clap offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with typed accessors and defaults, positional arguments, and generated
+//! usage text.
+
+pub mod parser;
+
+pub use parser::{ArgSpec, Args, Command};

@@ -1,0 +1,395 @@
+//! Declarative CLI parsing.
+//!
+//! ```no_run
+//! use lamp::cli::{Command, ArgSpec};
+//! let cmd = Command::new("demo", "demo tool")
+//!     .arg(ArgSpec::opt("mu", "mantissa bits", "4"))
+//!     .arg(ArgSpec::flag("verbose", "chatty output"));
+//! let args = cmd.parse_from(vec!["--mu".into(), "7".into()]).unwrap();
+//! assert_eq!(args.get_u32("mu").unwrap(), 7);
+//! assert!(!args.get_flag("verbose"));
+//! ```
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Specification of a single option/flag/positional.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub help: String,
+    pub default: Option<String>,
+    pub is_flag: bool,
+    pub positional: bool,
+    pub required: bool,
+}
+
+impl ArgSpec {
+    /// `--name <value>` option with a default.
+    pub fn opt(name: &str, help: &str, default: &str) -> Self {
+        ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+            positional: false,
+            required: false,
+        }
+    }
+
+    /// `--name <value>` required option.
+    pub fn req(name: &str, help: &str) -> Self {
+        ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+            positional: false,
+            required: true,
+        }
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(name: &str, help: &str) -> Self {
+        ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+            positional: false,
+            required: false,
+        }
+    }
+
+    /// Positional argument.
+    pub fn pos(name: &str, help: &str, required: bool) -> Self {
+        ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+            positional: true,
+            required,
+        }
+    }
+}
+
+/// A command (or subcommand) definition.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: String,
+    pub about: String,
+    pub specs: Vec<ArgSpec>,
+    pub subcommands: Vec<Command>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: HashMap<String, String>,
+    flags: HashMap<String, bool>,
+    positionals: Vec<String>,
+    /// Name of the matched subcommand (if any) and its parsed args.
+    pub subcommand: Option<(String, Box<Args>)>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command { name: name.into(), about: about.into(), specs: Vec::new(), subcommands: Vec::new() }
+    }
+
+    pub fn arg(mut self, spec: ArgSpec) -> Self {
+        self.specs.push(spec);
+        self
+    }
+
+    pub fn subcommand(mut self, cmd: Command) -> Self {
+        self.subcommands.push(cmd);
+        self
+    }
+
+    /// Generated usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.subcommands.is_empty() {
+            s.push_str(" <SUBCOMMAND>");
+        }
+        for spec in &self.specs {
+            if spec.positional {
+                s.push_str(&format!(" <{}>", spec.name));
+            }
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for sc in &self.subcommands {
+                s.push_str(&format!("  {:<16} {}\n", sc.name, sc.about));
+            }
+        }
+        if !self.specs.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for spec in &self.specs {
+                let lhs = if spec.is_flag {
+                    format!("--{}", spec.name)
+                } else if spec.positional {
+                    format!("<{}>", spec.name)
+                } else {
+                    format!("--{} <v>", spec.name)
+                };
+                let def = spec
+                    .default
+                    .as_ref()
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                s.push_str(&format!("  {lhs:<20} {}{def}\n", spec.help));
+            }
+        }
+        s
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse(&self) -> Result<Args> {
+        self.parse_from(std::env::args().skip(1).collect())
+    }
+
+    /// Parse from an explicit token list.
+    pub fn parse_from(&self, tokens: Vec<String>) -> Result<Args> {
+        let mut args = Args {
+            values: HashMap::new(),
+            flags: HashMap::new(),
+            positionals: Vec::new(),
+            subcommand: None,
+        };
+        // Seed defaults.
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                args.values.insert(spec.name.clone(), d.clone());
+            }
+            if spec.is_flag {
+                args.flags.insert(spec.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped == "help" {
+                    return Err(Error::config(self.usage()));
+                }
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key && !s.positional)
+                    .ok_or_else(|| Error::config(format!("unknown option --{key}\n\n{}", self.usage())))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(Error::config(format!("flag --{key} takes no value")));
+                    }
+                    args.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::config(format!("--{key} needs a value")))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else if args.positionals.is_empty()
+                && args.subcommand.is_none()
+                && self.subcommands.iter().any(|c| c.name == *tok)
+            {
+                let sub = self.subcommands.iter().find(|c| c.name == *tok).unwrap();
+                let rest = tokens[i + 1..].to_vec();
+                let sub_args = sub.parse_from(rest)?;
+                args.subcommand = Some((tok.clone(), Box::new(sub_args)));
+                break;
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Validate required.
+        for spec in &self.specs {
+            if spec.required && !spec.positional && !args.values.contains_key(&spec.name) {
+                return Err(Error::config(format!("missing required --{}", spec.name)));
+            }
+        }
+        let required_pos = self.specs.iter().filter(|s| s.positional && s.required).count();
+        if args.positionals.len() < required_pos && args.subcommand.is_none() {
+            return Err(Error::config(format!(
+                "expected {required_pos} positional argument(s)\n\n{}",
+                self.usage()
+            )));
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str) -> Result<String> {
+        self.get(name)
+            .map(|s| s.to_string())
+            .ok_or_else(|| Error::config(format!("missing --{name}")))
+    }
+
+    pub fn get_u32(&self, name: &str) -> Result<u32> {
+        self.get_str(name)?
+            .parse()
+            .map_err(|e| Error::config(format!("--{name}: {e}")))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get_str(name)?
+            .parse()
+            .map_err(|e| Error::config(format!("--{name}: {e}")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get_str(name)?
+            .parse()
+            .map_err(|e| Error::config(format!("--{name}: {e}")))
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<f32> {
+        let s = self.get_str(name)?;
+        if s == "inf" {
+            return Ok(f32::INFINITY);
+        }
+        s.parse().map_err(|e| Error::config(format!("--{name}: {e}")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let s = self.get_str(name)?;
+        if s == "inf" {
+            return Ok(f64::INFINITY);
+        }
+        s.parse().map_err(|e| Error::config(format!("--{name}: {e}")))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Parse a comma-separated list of values, e.g. `--mus 2,4,7,10`.
+    pub fn get_list_u32(&self, name: &str) -> Result<Vec<u32>> {
+        self.get_str(name)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| Error::config(format!("--{name}: {e}"))))
+            .collect()
+    }
+
+    /// Parse a comma-separated list of f32 values.
+    pub fn get_list_f32(&self, name: &str) -> Result<Vec<f32>> {
+        self.get_str(name)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| Error::config(format!("--{name}: {e}"))))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Command {
+        Command::new("demo", "test tool")
+            .arg(ArgSpec::opt("mu", "mantissa bits", "4"))
+            .arg(ArgSpec::opt("tau", "threshold", "0.1"))
+            .arg(ArgSpec::flag("verbose", "chatty"))
+            .arg(ArgSpec::req("model", "model name"))
+    }
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let args = demo().parse_from(v(&["--model", "xl", "--mu=7"])).unwrap();
+        assert_eq!(args.get_u32("mu").unwrap(), 7);
+        assert_eq!(args.get_f32("tau").unwrap(), 0.1);
+        assert_eq!(args.get_str("model").unwrap(), "xl");
+        assert!(!args.get_flag("verbose"));
+    }
+
+    #[test]
+    fn flags() {
+        let args = demo().parse_from(v(&["--model", "s", "--verbose"])).unwrap();
+        assert!(args.get_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required() {
+        assert!(demo().parse_from(v(&["--mu", "3"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option() {
+        assert!(demo().parse_from(v(&["--model", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value() {
+        assert!(demo().parse_from(v(&["--model"])).is_err());
+    }
+
+    #[test]
+    fn subcommands() {
+        let cmd = Command::new("lamp", "root")
+            .subcommand(Command::new("exp", "experiments").arg(ArgSpec::opt("n", "count", "1")));
+        let args = cmd.parse_from(v(&["exp", "--n", "5"])).unwrap();
+        let (name, sub) = args.subcommand.unwrap();
+        assert_eq!(name, "exp");
+        assert_eq!(sub.get_u32("n").unwrap(), 5);
+    }
+
+    #[test]
+    fn lists() {
+        let cmd = Command::new("t", "").arg(ArgSpec::opt("mus", "", "2,4,7"));
+        let args = cmd.parse_from(vec![]).unwrap();
+        assert_eq!(args.get_list_u32("mus").unwrap(), vec![2, 4, 7]);
+        let args = cmd.parse_from(v(&["--mus", "1, 2 ,3"])).unwrap();
+        assert_eq!(args.get_list_u32("mus").unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn inf_parse() {
+        let cmd = Command::new("t", "").arg(ArgSpec::opt("tau", "", "inf"));
+        let args = cmd.parse_from(vec![]).unwrap();
+        assert!(args.get_f32("tau").unwrap().is_infinite());
+    }
+
+    #[test]
+    fn positionals() {
+        let cmd = Command::new("t", "").arg(ArgSpec::pos("file", "input", true));
+        let args = cmd.parse_from(v(&["a.txt"])).unwrap();
+        assert_eq!(args.positionals(), &["a.txt".to_string()]);
+        assert!(cmd.parse_from(vec![]).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = demo().usage();
+        assert!(u.contains("--mu"));
+        assert!(u.contains("default: 4"));
+    }
+}

@@ -1,0 +1,183 @@
+//! Key-value configuration system.
+//!
+//! Artifacts carry a `meta_<config>.kv` file describing the model that was
+//! lowered (layers, heads, dims, vocab, seq len, batch). The same format
+//! backs user-supplied experiment configs. Syntax: `key = value` lines,
+//! `#` comments, sections via `[section]` prefixes flattened to
+//! `section.key`.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A flat, ordered key → string-value map with typed accessors.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KvConfig {
+    map: BTreeMap<String, String>,
+}
+
+impl KvConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(sec) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = sec.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::format(format!("kv line {}: missing '=': {raw:?}", lineno + 1))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            map.insert(key, v.trim().to_string());
+        }
+        Ok(KvConfig { map })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    /// Serialize back to text (sorted keys, no sections).
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.map {
+            s.push_str(&format!("{k} = {v}\n"));
+        }
+        s
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_text())?;
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| Error::config(format!("missing config key {key:?}")))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.require(key)?
+            .parse()
+            .map_err(|e| Error::config(format!("{key}: {e}")))
+    }
+
+    pub fn get_u32(&self, key: &str) -> Result<u32> {
+        self.require(key)?
+            .parse()
+            .map_err(|e| Error::config(format!("{key}: {e}")))
+    }
+
+    pub fn get_f32(&self, key: &str) -> Result<f32> {
+        self.require(key)?
+            .parse()
+            .map_err(|e| Error::config(format!("{key}: {e}")))
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<bool> {
+        match self.require(key)? {
+            "true" | "1" | "yes" => Ok(true),
+            "false" | "0" | "no" => Ok(false),
+            other => Err(Error::config(format!("{key}: not a bool: {other:?}"))),
+        }
+    }
+
+    /// usize with a default when the key is absent.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(_) => self.get_usize(key),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let c = KvConfig::parse("a = 1\nb=hello # comment\n# full comment\n").unwrap();
+        assert_eq!(c.get_usize("a").unwrap(), 1);
+        assert_eq!(c.get("b").unwrap(), "hello");
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let c = KvConfig::parse("[model]\nlayers = 4\n[data]\nseed = 7\n").unwrap();
+        assert_eq!(c.get_usize("model.layers").unwrap(), 4);
+        assert_eq!(c.get_usize("data.seed").unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_line_rejected() {
+        assert!(KvConfig::parse("novalue\n").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut c = KvConfig::new();
+        c.set("x", 3.5);
+        c.set("name", "xl-sim");
+        let c2 = KvConfig::parse(&c.to_text()).unwrap();
+        assert_eq!(c, c2);
+        assert_eq!(c2.get_f32("x").unwrap(), 3.5);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let c = KvConfig::parse("x = notanumber\n").unwrap();
+        assert!(c.get_usize("x").is_err());
+        assert!(c.get_usize("missing").is_err());
+        assert_eq!(c.usize_or("missing", 9).unwrap(), 9);
+        assert!(c.usize_or("x", 9).is_err());
+    }
+
+    #[test]
+    fn bools() {
+        let c = KvConfig::parse("a = true\nb = 0\nc = maybe\n").unwrap();
+        assert!(c.get_bool("a").unwrap());
+        assert!(!c.get_bool("b").unwrap());
+        assert!(c.get_bool("c").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut c = KvConfig::new();
+        c.set("k", "v");
+        let path = std::env::temp_dir().join("lamp_kv_test.kv");
+        c.save(&path).unwrap();
+        let c2 = KvConfig::load(&path).unwrap();
+        assert_eq!(c, c2);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,188 @@
+//! Dynamic batcher: groups policy-compatible requests into fixed-shape
+//! artifact batches.
+//!
+//! The compiled HLO has a baked batch dimension, so the batcher's job is:
+//! (1) admit requests into per-policy queues, (2) cut a batch when either
+//! the batch is full or the oldest request exceeds `max_wait`, (3) pad
+//! partial batches by repeating the last real sequence (padding rows are
+//! dropped from responses — causality makes them free of side effects on
+//! real rows; they do inflate the recompute counters, which the server
+//! subtracts out pro rata).
+
+use super::policy::PrecisionPolicy;
+use super::request::InferenceRequest;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// A batch cut from the queue, ready for an engine call.
+#[derive(Debug)]
+pub struct CutBatch {
+    pub policy: PrecisionPolicy,
+    /// The real requests riding in this batch (<= batch size).
+    pub requests: Vec<(InferenceRequest, Instant)>,
+    /// Number of padding rows appended.
+    pub padding_rows: usize,
+}
+
+/// Per-policy FIFO queues with deadline-based cutting.
+pub struct Batcher {
+    batch_size: usize,
+    max_wait: Duration,
+    queues: Vec<(PrecisionPolicy, VecDeque<(InferenceRequest, Instant)>)>,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize, max_wait: Duration) -> Self {
+        assert!(batch_size >= 1);
+        Batcher { batch_size, max_wait, queues: Vec::new() }
+    }
+
+    /// Admit a request.
+    pub fn push(&mut self, req: InferenceRequest) {
+        let now = Instant::now();
+        for (policy, q) in &mut self.queues {
+            if policy.batch_compatible(&req.policy) {
+                q.push_back((req, now));
+                return;
+            }
+        }
+        let mut q = VecDeque::new();
+        let policy = req.policy;
+        q.push_back((req, now));
+        self.queues.push((policy, q));
+    }
+
+    /// Number of queued requests across all policies.
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    /// Cut the next batch, if any queue is full or has an expired head.
+    /// `force` cuts any non-empty queue regardless of deadlines (used at
+    /// shutdown / drain).
+    pub fn cut(&mut self, force: bool) -> Option<CutBatch> {
+        let now = Instant::now();
+        // Prefer full queues, then expired heads.
+        let mut pick: Option<usize> = None;
+        for (i, (_, q)) in self.queues.iter().enumerate() {
+            if q.len() >= self.batch_size {
+                pick = Some(i);
+                break;
+            }
+        }
+        if pick.is_none() {
+            for (i, (_, q)) in self.queues.iter().enumerate() {
+                if let Some((_, t0)) = q.front() {
+                    if force || now.duration_since(*t0) >= self.max_wait {
+                        pick = Some(i);
+                        break;
+                    }
+                }
+            }
+        }
+        let i = pick?;
+        let (policy, q) = &mut self.queues[i];
+        let take = q.len().min(self.batch_size);
+        let requests: Vec<_> = q.drain(..take).collect();
+        let padding_rows = self.batch_size - requests.len();
+        let batch = CutBatch { policy: *policy, requests, padding_rows };
+        if q.is_empty() {
+            self.queues.remove(i);
+        }
+        Some(batch)
+    }
+
+    /// Assemble the padded token matrix for an engine call: real padded
+    /// sequences first, then repeats of the last real sequence.
+    pub fn assemble_tokens(batch: &CutBatch, seq: usize) -> Vec<Vec<u32>> {
+        let mut rows: Vec<Vec<u32>> =
+            batch.requests.iter().map(|(r, _)| r.padded(seq)).collect();
+        let filler = rows.last().expect("non-empty batch").clone();
+        for _ in 0..batch.padding_rows {
+            rows.push(filler.clone());
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::Rule;
+
+    fn req(id: u64, policy: PrecisionPolicy) -> InferenceRequest {
+        InferenceRequest::new(id, vec![1, 2, 3], policy)
+    }
+
+    #[test]
+    fn full_batch_cuts_immediately() {
+        let mut b = Batcher::new(2, Duration::from_secs(3600));
+        let p = PrecisionPolicy::uniform(4);
+        b.push(req(1, p));
+        assert!(b.cut(false).is_none(), "half batch must wait");
+        b.push(req(2, p));
+        let cut = b.cut(false).expect("full batch");
+        assert_eq!(cut.requests.len(), 2);
+        assert_eq!(cut.padding_rows, 0);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn incompatible_policies_do_not_mix() {
+        let mut b = Batcher::new(2, Duration::from_secs(3600));
+        b.push(req(1, PrecisionPolicy::uniform(4)));
+        b.push(req(2, PrecisionPolicy::uniform(7)));
+        assert!(b.cut(false).is_none(), "different mus must not share a batch");
+        assert_eq!(b.pending(), 2);
+        let cut = b.cut(true).unwrap();
+        assert_eq!(cut.requests.len(), 1);
+        assert_eq!(cut.padding_rows, 1);
+    }
+
+    #[test]
+    fn deadline_cuts_partial_batch() {
+        let mut b = Batcher::new(4, Duration::from_millis(1));
+        b.push(req(1, PrecisionPolicy::uniform(4)));
+        std::thread::sleep(Duration::from_millis(5));
+        let cut = b.cut(false).expect("expired head");
+        assert_eq!(cut.requests.len(), 1);
+        assert_eq!(cut.padding_rows, 3);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(3, Duration::from_secs(3600));
+        let p = PrecisionPolicy::uniform(4);
+        for id in [10, 20, 30] {
+            b.push(req(id, p));
+        }
+        let cut = b.cut(false).unwrap();
+        let ids: Vec<u64> = cut.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn assemble_pads_with_last_sequence() {
+        let mut b = Batcher::new(3, Duration::from_secs(3600));
+        let p = PrecisionPolicy::uniform(4);
+        b.push(InferenceRequest::new(1, vec![7, 8], p));
+        let cut = b.cut(true).unwrap();
+        let rows = Batcher::assemble_tokens(&cut, 4);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0], vec![7, 8, 8, 8]);
+        assert_eq!(rows[1], rows[0]);
+        assert_eq!(rows[2], rows[0]);
+    }
+
+    #[test]
+    fn oversize_queue_cuts_batch_size() {
+        let mut b = Batcher::new(2, Duration::from_secs(3600));
+        let p = PrecisionPolicy::uniform(4);
+        for id in 0..5 {
+            b.push(req(id, p));
+        }
+        let cut = b.cut(false).unwrap();
+        assert_eq!(cut.requests.len(), 2);
+        assert_eq!(b.pending(), 3);
+    }
+}

@@ -1,0 +1,30 @@
+//! The L3 serving coordinator.
+//!
+//! LAMP is a numeric-format contribution, so the coordinator is shaped as a
+//! *precision-aware inference service*: clients submit sequences together
+//! with an accuracy target, and the coordinator routes them through the
+//! right (μ, τ, rule) point of the compiled artifact.
+//!
+//! * [`policy`] — precision policies: named accuracy tiers mapped to
+//!   (μ, τ, rule) triples; the rule ↔ mode-code table shared with the L1
+//!   kernel.
+//! * [`engine`] — the [`engine::Engine`] trait with the two backends:
+//!   [`engine::NativeEngine`] (bit-exact Rust model) and
+//!   [`engine::PjrtEngine`] (compiled HLO artifacts).
+//! * [`request`] — request/response types and sequence padding.
+//! * [`batcher`] — dynamic batcher: groups compatible requests (same
+//!   policy) into fixed-shape artifact batches, padding the remainder.
+//! * [`server`] — the serving loop: worker threads draining the batcher,
+//!   latency/throughput accounting.
+
+pub mod batcher;
+pub mod engine;
+pub mod policy;
+pub mod request;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use engine::{Engine, EngineOutput, NativeEngine, PjrtEngine};
+pub use policy::{PrecisionPolicy, Rule};
+pub use request::{InferenceRequest, InferenceResponse};
+pub use server::{Server, ServerStats};

@@ -1,0 +1,191 @@
+//! Precision policies: the coordinator-level vocabulary for LAMP.
+//!
+//! A policy is a (μ, τ, rule) triple. The rule ↔ integer mode codes are
+//! shared with the L1 kernel (`python/compile/kernels/lamp_attention.py`)
+//! and baked into the artifacts; keep the two tables in sync.
+
+use crate::error::{Error, Result};
+use crate::lamp::softmax::SoftmaxRule;
+use crate::model::AttentionPrecision;
+
+/// Selection rule, coordinator-facing (mirrors kernel mode codes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    Strict,
+    Relaxed,
+    RelaxedLengthNorm,
+    Random,
+}
+
+impl Rule {
+    /// The artifact mode code (MODE_* in lamp_attention.py).
+    pub fn mode_code(self) -> i32 {
+        match self {
+            Rule::Strict => 0,
+            Rule::Relaxed => 1,
+            Rule::RelaxedLengthNorm => 2,
+            Rule::Random => 3,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Result<Self> {
+        match name {
+            "strict" => Ok(Rule::Strict),
+            "relaxed" => Ok(Rule::Relaxed),
+            "relaxed_ln" => Ok(Rule::RelaxedLengthNorm),
+            "random" => Ok(Rule::Random),
+            other => Err(Error::config(format!(
+                "unknown rule {other:?} (strict|relaxed|relaxed_ln|random)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::Strict => "strict",
+            Rule::Relaxed => "relaxed",
+            Rule::RelaxedLengthNorm => "relaxed_ln",
+            Rule::Random => "random",
+        }
+    }
+
+    /// Convert to the native engine's [`SoftmaxRule`] (`ref_len` is the
+    /// model's training context, used by the length-normalized rule).
+    pub fn to_softmax_rule(self, ref_len: usize) -> SoftmaxRule {
+        match self {
+            Rule::Strict => SoftmaxRule::Strict,
+            Rule::Relaxed => SoftmaxRule::Relaxed,
+            Rule::RelaxedLengthNorm => SoftmaxRule::RelaxedLengthNorm { ref_len },
+            Rule::Random => SoftmaxRule::Random,
+        }
+    }
+}
+
+/// A complete precision policy for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrecisionPolicy {
+    pub mu: u32,
+    pub tau: f32,
+    pub rule: Rule,
+}
+
+impl PrecisionPolicy {
+    /// Full-precision reference (μ=23).
+    pub fn reference() -> Self {
+        PrecisionPolicy { mu: 23, tau: f32::INFINITY, rule: Rule::Strict }
+    }
+
+    /// Uniform PS(μ), no recomputation.
+    pub fn uniform(mu: u32) -> Self {
+        PrecisionPolicy { mu, tau: f32::INFINITY, rule: Rule::Strict }
+    }
+
+    /// LAMP at (μ, τ) with a rule.
+    pub fn lamp(mu: u32, tau: f32, rule: Rule) -> Self {
+        PrecisionPolicy { mu, tau, rule }
+    }
+
+    /// Named accuracy tiers for the serving API — the coordinator-level
+    /// knob a deployment would actually expose. Derived from the paper's
+    /// headline points (§4.3: 0.3%/1.6%/7.6% recomputation bands).
+    pub fn tier(name: &str) -> Result<Self> {
+        match name {
+            // Exact reference, full cost.
+            "exact" => Ok(Self::reference()),
+            // ~TF32-quality at BF16-accumulate cost.
+            "high" => Ok(Self::lamp(7, 0.03, Rule::Relaxed)),
+            // Balanced default.
+            "balanced" => Ok(Self::lamp(4, 0.1, Rule::Relaxed)),
+            // Cheapest: uniform low precision.
+            "economy" => Ok(Self::uniform(4)),
+            other => Err(Error::config(format!(
+                "unknown tier {other:?} (exact|high|balanced|economy)"
+            ))),
+        }
+    }
+
+    /// Two requests can share an artifact batch iff their policies match
+    /// exactly (μ, τ, rule are baked into the batched call's scalars).
+    pub fn batch_compatible(&self, other: &PrecisionPolicy) -> bool {
+        self == other
+    }
+
+    /// Convert to the native engine's precision type.
+    pub fn to_attention_precision(&self, ref_len: usize) -> AttentionPrecision {
+        AttentionPrecision {
+            mu: self.mu,
+            tau: self.tau,
+            rule: self.rule.to_softmax_rule(ref_len),
+        }
+    }
+
+    /// Validate ranges.
+    pub fn validate(&self) -> Result<()> {
+        if !(1..=23).contains(&self.mu) {
+            return Err(Error::config(format!("mu {} out of 1..=23", self.mu)));
+        }
+        if self.tau < 0.0 || self.tau.is_nan() {
+            return Err(Error::config(format!("tau {} must be >= 0", self.tau)));
+        }
+        if matches!(self.rule, Rule::Relaxed | Rule::RelaxedLengthNorm)
+            && self.tau.is_finite()
+            && self.tau >= 1.0
+        {
+            return Err(Error::config(format!(
+                "relative threshold tau {} must be < 1 for relaxed rules",
+                self.tau
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_codes_stable() {
+        // These are baked into the artifacts — changing them breaks every
+        // compiled HLO. Pin them.
+        assert_eq!(Rule::Strict.mode_code(), 0);
+        assert_eq!(Rule::Relaxed.mode_code(), 1);
+        assert_eq!(Rule::RelaxedLengthNorm.mode_code(), 2);
+        assert_eq!(Rule::Random.mode_code(), 3);
+    }
+
+    #[test]
+    fn rule_names_roundtrip() {
+        for r in [Rule::Strict, Rule::Relaxed, Rule::RelaxedLengthNorm, Rule::Random] {
+            assert_eq!(Rule::by_name(r.name()).unwrap(), r);
+        }
+        assert!(Rule::by_name("bogus").is_err());
+    }
+
+    #[test]
+    fn tiers_resolve_and_validate() {
+        for t in ["exact", "high", "balanced", "economy"] {
+            PrecisionPolicy::tier(t).unwrap().validate().unwrap();
+        }
+        assert!(PrecisionPolicy::tier("ultra").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_ranges() {
+        assert!(PrecisionPolicy::lamp(0, 0.1, Rule::Strict).validate().is_err());
+        assert!(PrecisionPolicy::lamp(24, 0.1, Rule::Strict).validate().is_err());
+        assert!(PrecisionPolicy::lamp(4, -0.1, Rule::Strict).validate().is_err());
+        assert!(PrecisionPolicy::lamp(4, 1.5, Rule::Relaxed).validate().is_err());
+        // Strict thresholds are absolute: tau > 1 is fine there.
+        assert!(PrecisionPolicy::lamp(4, 1.5, Rule::Strict).validate().is_ok());
+    }
+
+    #[test]
+    fn batch_compatibility_is_exact_match() {
+        let a = PrecisionPolicy::lamp(4, 0.1, Rule::Relaxed);
+        let b = PrecisionPolicy::lamp(4, 0.1, Rule::Relaxed);
+        let c = PrecisionPolicy::lamp(4, 0.2, Rule::Relaxed);
+        assert!(a.batch_compatible(&b));
+        assert!(!a.batch_compatible(&c));
+    }
+}

@@ -1,0 +1,92 @@
+//! Request/response types for the serving API, plus padding helpers.
+
+use super::policy::PrecisionPolicy;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::model::LampStats;
+
+/// A single-sequence inference request.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    /// Client-assigned id, echoed in the response.
+    pub id: u64,
+    /// Token ids; 1..=seq tokens (shorter sequences are padded into the
+    /// fixed-shape artifact batch and the padding positions discarded).
+    pub tokens: Vec<u32>,
+    /// Requested precision policy.
+    pub policy: PrecisionPolicy,
+    /// Seed for the Random rule (ignored otherwise).
+    pub seed: i32,
+}
+
+impl InferenceRequest {
+    pub fn new(id: u64, tokens: Vec<u32>, policy: PrecisionPolicy) -> Self {
+        InferenceRequest { id, tokens, policy, seed: id as i32 }
+    }
+
+    pub fn validate(&self, vocab: usize, max_seq: usize) -> Result<()> {
+        self.policy.validate()?;
+        if self.tokens.is_empty() || self.tokens.len() > max_seq {
+            return Err(Error::shape(format!(
+                "request {}: {} tokens out of 1..={max_seq}",
+                self.id,
+                self.tokens.len()
+            )));
+        }
+        if let Some(&t) = self.tokens.iter().find(|&&t| t as usize >= vocab) {
+            return Err(Error::shape(format!(
+                "request {}: token {t} >= vocab {vocab}",
+                self.id
+            )));
+        }
+        Ok(())
+    }
+
+    /// Pad to `seq` tokens by repeating the last token (attention is
+    /// causal, so padding after the real prefix cannot change the prefix's
+    /// logits; the response slices them away).
+    pub fn padded(&self, seq: usize) -> Vec<u32> {
+        let mut out = self.tokens.clone();
+        let last = *out.last().expect("validated non-empty");
+        out.resize(seq, last);
+        out
+    }
+}
+
+/// The response for one request.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    /// Logits for the *real* (unpadded) positions: [len, vocab].
+    pub logits: Matrix,
+    /// Recomputation statistics for the batch this request rode in
+    /// (batch-level: the artifact reports one counter per execution).
+    pub batch_stats: LampStats,
+    /// End-to-end latency of this request (queue + execute), seconds.
+    pub latency_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::Rule;
+
+    #[test]
+    fn validation() {
+        let p = PrecisionPolicy::lamp(4, 0.1, Rule::Strict);
+        let r = InferenceRequest::new(1, vec![1, 2, 3], p);
+        assert!(r.validate(128, 32).is_ok());
+        assert!(r.validate(2, 32).is_err()); // token out of vocab
+        assert!(r.validate(128, 2).is_err()); // too long
+        let empty = InferenceRequest::new(2, vec![], p);
+        assert!(empty.validate(128, 32).is_err());
+    }
+
+    #[test]
+    fn padding_repeats_last() {
+        let p = PrecisionPolicy::reference();
+        let r = InferenceRequest::new(1, vec![5, 9], p);
+        assert_eq!(r.padded(5), vec![5, 9, 9, 9, 9]);
+        assert_eq!(r.padded(2), vec![5, 9]);
+    }
+}

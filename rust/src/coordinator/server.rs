@@ -1,0 +1,245 @@
+//! The serving loop: requests in, batched engine calls, responses out.
+//!
+//! Single-threaded engine draining (the PJRT executable is already
+//! internally parallel on CPU; the native engine parallelizes across the
+//! batch via the thread pool upstream). The server tracks the
+//! latency/throughput statistics reported by the serving benchmarks.
+
+use super::batcher::{Batcher, CutBatch};
+use super::engine::Engine;
+use super::request::{InferenceRequest, InferenceResponse};
+use crate::error::{Error, Result};
+use crate::metrics::Accumulator;
+use crate::model::LampStats;
+use std::time::{Duration, Instant};
+
+/// Aggregate serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct ServerStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub padding_rows: usize,
+    pub total_tokens: usize,
+    pub recomputed: usize,
+    pub causal_total: usize,
+    pub latency_mean_s: f64,
+    pub latency_p95_s: f64,
+    pub wall_s: f64,
+    pub throughput_tok_s: f64,
+}
+
+/// Synchronous batching server over one engine.
+pub struct Server {
+    engine: Box<dyn Engine>,
+    batcher: Batcher,
+    latencies: Vec<f64>,
+    stats: ServerStats,
+    started: Instant,
+}
+
+impl Server {
+    pub fn new(engine: Box<dyn Engine>, max_wait: Duration) -> Self {
+        let batch = engine.config().batch;
+        Server {
+            engine,
+            batcher: Batcher::new(batch, max_wait),
+            latencies: Vec::new(),
+            stats: ServerStats::default(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Validate and enqueue a request.
+    pub fn submit(&mut self, req: InferenceRequest) -> Result<()> {
+        let cfg = self.engine.config();
+        req.validate(cfg.vocab, cfg.seq)?;
+        self.batcher.push(req);
+        Ok(())
+    }
+
+    /// Queued requests.
+    pub fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    /// Drain one batch if ready; returns its responses.
+    pub fn step(&mut self, force: bool) -> Result<Vec<InferenceResponse>> {
+        match self.batcher.cut(force) {
+            None => Ok(Vec::new()),
+            Some(batch) => self.run_batch(batch),
+        }
+    }
+
+    /// Drain everything (forcing partial batches).
+    pub fn drain(&mut self) -> Result<Vec<InferenceResponse>> {
+        let mut out = Vec::new();
+        while self.batcher.pending() > 0 {
+            out.extend(self.step(true)?);
+        }
+        Ok(out)
+    }
+
+    fn run_batch(&mut self, batch: CutBatch) -> Result<Vec<InferenceResponse>> {
+        let cfg = self.engine.config();
+        let seq = cfg.seq;
+        let batch_size = cfg.batch;
+        let tokens = Batcher::assemble_tokens(&batch, seq);
+        let seed = batch.requests.first().map(|(r, _)| r.seed).unwrap_or(0);
+        let out = self.engine.infer(&tokens, &batch.policy, seed)?;
+        if out.logits.len() != batch_size {
+            return Err(Error::coordinator(format!(
+                "engine returned {} rows for batch {batch_size}",
+                out.logits.len()
+            )));
+        }
+        // Padding rows inflate the recompute counters; attribute pro rata
+        // to real rows only.
+        let real = batch.requests.len();
+        let scale = real as f64 / batch_size as f64;
+        let stats = LampStats {
+            recomputed: (out.stats.recomputed as f64 * scale).round() as usize,
+            causal_total: (out.stats.causal_total as f64 * scale).round() as usize,
+            per_layer: out.stats.per_layer.clone(),
+        };
+        self.stats.batches += 1;
+        self.stats.padding_rows += batch.padding_rows;
+        self.stats.recomputed += stats.recomputed;
+        self.stats.causal_total += stats.causal_total;
+
+        let now = Instant::now();
+        let mut responses = Vec::with_capacity(real);
+        for (i, (req, t0)) in batch.requests.into_iter().enumerate() {
+            let n = req.tokens.len();
+            let logits = out.logits[i].slice_rows(0, n)?;
+            let latency = now.duration_since(t0).as_secs_f64();
+            self.latencies.push(latency);
+            self.stats.requests += 1;
+            self.stats.total_tokens += n;
+            responses.push(InferenceResponse {
+                id: req.id,
+                logits,
+                batch_stats: stats.clone(),
+                latency_s: latency,
+            });
+        }
+        Ok(responses)
+    }
+
+    /// Final statistics snapshot.
+    pub fn stats(&mut self) -> ServerStats {
+        let mut acc = Accumulator::new();
+        for &l in &self.latencies {
+            acc.push(l);
+        }
+        let mut sorted = self.latencies.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        self.stats.latency_mean_s = if sorted.is_empty() { 0.0 } else { acc.mean() };
+        self.stats.latency_p95_s = sorted
+            .get(((sorted.len() as f64) * 0.95) as usize)
+            .copied()
+            .or_else(|| sorted.last().copied())
+            .unwrap_or(0.0);
+        self.stats.wall_s = self.started.elapsed().as_secs_f64();
+        self.stats.throughput_tok_s = if self.stats.wall_s > 0.0 {
+            self.stats.total_tokens as f64 / self.stats.wall_s
+        } else {
+            0.0
+        };
+        self.stats.clone()
+    }
+
+    /// Engine backend name.
+    pub fn backend(&self) -> &'static str {
+        self.engine.backend()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::coordinator::policy::{PrecisionPolicy, Rule};
+    use crate::model::{ModelConfig, Weights};
+    use crate::util::Rng;
+
+    fn server() -> Server {
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(1);
+        Server::new(
+            Box::new(NativeEngine::new(Weights::random(&cfg, &mut rng))),
+            Duration::from_millis(1),
+        )
+    }
+
+    #[test]
+    fn serves_full_batch() {
+        let mut s = server();
+        let p = PrecisionPolicy::lamp(4, 0.05, Rule::Strict);
+        s.submit(InferenceRequest::new(1, vec![1, 2, 3, 4], p)).unwrap();
+        s.submit(InferenceRequest::new(2, vec![5, 6], p)).unwrap();
+        let rs = s.step(false).unwrap();
+        assert_eq!(rs.len(), 2);
+        let r1 = rs.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(r1.logits.shape(), (4, 128));
+        let r2 = rs.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(r2.logits.shape(), (2, 128));
+    }
+
+    #[test]
+    fn padding_does_not_change_real_logits() {
+        // Serve the same request alone (padded) and in a full batch: the
+        // causal property guarantees identical logits for the real prefix.
+        let p = PrecisionPolicy::reference();
+        let mut s1 = server();
+        s1.submit(InferenceRequest::new(1, vec![1, 2, 3], p)).unwrap();
+        let alone = s1.drain().unwrap().remove(0);
+
+        let mut s2 = server();
+        s2.submit(InferenceRequest::new(1, vec![1, 2, 3], p)).unwrap();
+        s2.submit(InferenceRequest::new(2, vec![9, 8, 7, 6], p)).unwrap();
+        let mut both = s2.drain().unwrap();
+        both.sort_by_key(|r| r.id);
+        assert_eq!(alone.logits, both[0].logits);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        let mut s = server();
+        let p = PrecisionPolicy::reference();
+        assert!(s.submit(InferenceRequest::new(1, vec![], p)).is_err());
+        assert!(s.submit(InferenceRequest::new(1, vec![9999], p)).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = server();
+        // τ=0 selects every nonzero-sensitivity product, so recomputation
+        // is guaranteed even with near-uniform random-init attention.
+        let p = PrecisionPolicy::lamp(3, 0.0, Rule::Strict);
+        for id in 0..5 {
+            s.submit(InferenceRequest::new(id, vec![1, 2, 3, 4, 5, 6], p)).unwrap();
+        }
+        let rs = s.drain().unwrap();
+        assert_eq!(rs.len(), 5);
+        let stats = s.stats();
+        assert_eq!(stats.requests, 5);
+        assert!(stats.batches >= 3); // batch=2 → 3 batches for 5 requests
+        assert!(stats.recomputed > 0);
+        assert!(stats.latency_mean_s >= 0.0);
+        assert!(stats.throughput_tok_s > 0.0);
+        assert_eq!(stats.total_tokens, 30);
+    }
+
+    #[test]
+    fn mixed_policies_still_all_served() {
+        let mut s = server();
+        s.submit(InferenceRequest::new(1, vec![1], PrecisionPolicy::uniform(4))).unwrap();
+        s.submit(InferenceRequest::new(2, vec![2], PrecisionPolicy::uniform(7))).unwrap();
+        s.submit(InferenceRequest::new(3, vec![3], PrecisionPolicy::reference())).unwrap();
+        let rs = s.drain().unwrap();
+        assert_eq!(rs.len(), 3);
+        let stats = s.stats();
+        assert_eq!(stats.batches, 3, "one batch per policy");
+        assert_eq!(stats.padding_rows, 3);
+    }
+}

@@ -1,0 +1,239 @@
+//! Per-domain synthetic corpus generators.
+//!
+//! A corpus is a Zipf-unigram + Markov-bigram mixture:
+//!
+//! ```text
+//!   t_{i+1} ~ (1 − λ)·Zipf(s)  +  λ·Markov(t_i)
+//! ```
+//!
+//! where the Markov table is itself seeded per domain (deterministic,
+//! reproducible in both the Rust harness and the Python training script).
+//! Per-domain parameters approximate the statistics relevant to LAMP:
+//! unigram concentration (softmax sharpness through training), bigram
+//! coherence (word order; destroyed by the App. C.3 permutation), and
+//! repetition (code's long-range copy structure).
+
+use super::zipf::Zipf;
+use crate::util::Rng;
+
+/// The evaluation domains standing in for the paper's datasets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Domain {
+    /// OpenWebText analogue: natural-language-like Zipf(1.05), moderate
+    /// bigram coherence.
+    Web,
+    /// CodeParrot analogue: highly repetitive, peaked unigram, strong local
+    /// structure, explicit repetition loops.
+    Code,
+    /// ArXiv analogue: flatter unigram (rich technical vocabulary), long
+    /// coherent motifs.
+    Arxiv,
+    /// GSM8k analogue: short arithmetic-flavoured patterns over a narrow
+    /// token subset.
+    Math,
+    /// WikiText-2 analogue: web-like with slightly flatter unigram.
+    Wiki,
+}
+
+impl Domain {
+    pub fn name(self) -> &'static str {
+        match self {
+            Domain::Web => "web",
+            Domain::Code => "code",
+            Domain::Arxiv => "arxiv",
+            Domain::Math => "math",
+            Domain::Wiki => "wiki",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "web" => Some(Domain::Web),
+            "code" => Some(Domain::Code),
+            "arxiv" => Some(Domain::Arxiv),
+            "math" => Some(Domain::Math),
+            "wiki" => Some(Domain::Wiki),
+            _ => None,
+        }
+    }
+
+    /// (zipf_s, markov_weight λ, repeat_prob, motif_len)
+    fn params(self) -> (f64, f64, f64, usize) {
+        match self {
+            Domain::Web => (1.05, 0.55, 0.02, 4),
+            Domain::Code => (1.35, 0.70, 0.20, 6),
+            Domain::Arxiv => (0.95, 0.60, 0.05, 8),
+            Domain::Math => (1.25, 0.65, 0.10, 3),
+            Domain::Wiki => (1.00, 0.55, 0.03, 4),
+        }
+    }
+
+    /// All domains.
+    pub fn all() -> [Domain; 5] {
+        [Domain::Web, Domain::Code, Domain::Arxiv, Domain::Math, Domain::Wiki]
+    }
+}
+
+/// A deterministic synthetic token-stream generator for one domain.
+pub struct SyntheticCorpus {
+    vocab: usize,
+    zipf: Zipf,
+    /// Markov successor table: for each token, `branch` candidate
+    /// successors with geometric weights.
+    successors: Vec<Vec<usize>>,
+    lambda: f64,
+    repeat_prob: f64,
+    motif_len: usize,
+    rng: Rng,
+    /// Recent history for repetition.
+    history: Vec<usize>,
+}
+
+impl SyntheticCorpus {
+    /// Construct a generator for `domain` over `vocab` tokens.
+    ///
+    /// The Markov table depends only on (domain, vocab, table_seed), so the
+    /// Python training corpus and the Rust evaluation corpus share structure
+    /// when given the same seed (they intentionally use different *stream*
+    /// seeds to get disjoint train/eval data).
+    pub fn new(domain: Domain, vocab: usize, table_seed: u64, stream_seed: u64) -> Self {
+        assert!(vocab >= 8, "vocab too small");
+        let (s, lambda, repeat_prob, motif_len) = domain.params();
+        let zipf = Zipf::new(vocab, s);
+        let branch = 4;
+        let mut table_rng = Rng::new(table_seed ^ (domain as u64).wrapping_mul(0x9E3779B9));
+        let successors = (0..vocab)
+            .map(|_| {
+                (0..branch)
+                    .map(|_| zipf.sample(&mut table_rng))
+                    .collect::<Vec<usize>>()
+            })
+            .collect();
+        SyntheticCorpus {
+            vocab,
+            zipf,
+            successors,
+            lambda,
+            repeat_prob,
+            motif_len,
+            rng: Rng::new(stream_seed),
+            history: Vec::new(),
+        }
+    }
+
+    /// Vocabulary size.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Next token in the stream.
+    pub fn next_token(&mut self) -> u32 {
+        // Repetition: replay a recent motif (code-like copy structure).
+        if self.history.len() > 2 * self.motif_len && self.rng.f64() < self.repeat_prob {
+            let start = self.history.len() - self.motif_len;
+            let tok = self.history[start + self.history.len() % self.motif_len];
+            self.history.push(tok);
+            return tok as u32;
+        }
+        let tok = if let Some(&prev) = self.history.last() {
+            if self.rng.f64() < self.lambda {
+                // Markov step: geometric choice among the successor list.
+                let succ = &self.successors[prev];
+                let mut idx = 0;
+                while idx + 1 < succ.len() && self.rng.f64() < 0.4 {
+                    idx += 1;
+                }
+                succ[idx]
+            } else {
+                self.zipf.sample(&mut self.rng)
+            }
+        } else {
+            self.zipf.sample(&mut self.rng)
+        };
+        self.history.push(tok);
+        if self.history.len() > 64 {
+            self.history.drain(0..32);
+        }
+        tok as u32
+    }
+
+    /// Generate a sequence of `len` tokens.
+    pub fn sequence(&mut self, len: usize) -> Vec<u32> {
+        (0..len).map(|_| self.next_token()).collect()
+    }
+
+    /// Generate `count` sequences of `len` tokens each.
+    pub fn sequences(&mut self, count: usize, len: usize) -> Vec<Vec<u32>> {
+        (0..count).map(|_| self.sequence(len)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab() {
+        for d in Domain::all() {
+            let mut c = SyntheticCorpus::new(d, 128, 7, 42);
+            for _ in 0..2000 {
+                assert!((c.next_token() as usize) < 128);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let mut a = SyntheticCorpus::new(Domain::Web, 256, 7, 42);
+        let mut b = SyntheticCorpus::new(Domain::Web, 256, 7, 42);
+        assert_eq!(a.sequence(512), b.sequence(512));
+    }
+
+    #[test]
+    fn different_stream_seeds_differ() {
+        let mut a = SyntheticCorpus::new(Domain::Web, 256, 7, 1);
+        let mut b = SyntheticCorpus::new(Domain::Web, 256, 7, 2);
+        assert_ne!(a.sequence(256), b.sequence(256));
+    }
+
+    #[test]
+    fn code_more_repetitive_than_arxiv() {
+        // Measure bigram repetition rate (same bigram seen before).
+        let rate = |d: Domain| {
+            let mut c = SyntheticCorpus::new(d, 256, 7, 9);
+            let seq = c.sequence(4000);
+            let mut seen = std::collections::HashSet::new();
+            let mut repeats = 0usize;
+            for w in seq.windows(2) {
+                if !seen.insert((w[0], w[1])) {
+                    repeats += 1;
+                }
+            }
+            repeats as f64 / (seq.len() - 1) as f64
+        };
+        let code = rate(Domain::Code);
+        let arxiv = rate(Domain::Arxiv);
+        assert!(code > arxiv, "code={code} arxiv={arxiv}");
+    }
+
+    #[test]
+    fn unigram_zipf_like() {
+        let mut c = SyntheticCorpus::new(Domain::Web, 128, 7, 11);
+        let seq = c.sequence(50_000);
+        let mut counts = vec![0usize; 128];
+        for &t in &seq {
+            counts[t as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // Head token much more frequent than median token.
+        assert!(counts[0] > 5 * counts[64].max(1));
+    }
+
+    #[test]
+    fn domain_names_roundtrip() {
+        for d in Domain::all() {
+            assert_eq!(Domain::by_name(d.name()), Some(d));
+        }
+        assert_eq!(Domain::by_name("bogus"), None);
+    }
+}

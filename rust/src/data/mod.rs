@@ -1,0 +1,17 @@
+//! Synthetic corpora — the substitution for the paper's HF datasets
+//! (OpenWebText, CodeParrot, ArXiv, GSM8k, WikiText-2; see DESIGN.md
+//! §Substitutions).
+//!
+//! Each domain is a parameterized token-stream generator over the model's
+//! vocabulary: a Zipfian unigram backbone blended with a seeded Markov
+//! bigram chain (word-order structure), with per-domain repetition and
+//! motif parameters. The permutation transform of App. C.3 is provided to
+//! reproduce Fig. 6.
+
+pub mod corpus;
+pub mod dataset;
+pub mod zipf;
+
+pub use corpus::{Domain, SyntheticCorpus};
+pub use dataset::{permute_tokens, Dataset};
+pub use zipf::Zipf;

@@ -1,0 +1,103 @@
+//! Zipfian sampler over a finite vocabulary: P(rank k) ∝ 1/k^s.
+//!
+//! Natural-language unigram distributions are approximately Zipf(s≈1);
+//! code is more repetitive (larger s); shuffled scientific text flatter
+//! (smaller s). Uses an alias-free inverse-CDF table (vocab is small).
+
+use crate::util::Rng;
+
+/// Precomputed Zipf distribution over `n` ranks.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build with exponent `s > 0` over `n ≥ 1` outcomes.
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1 && s > 0.0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Number of outcomes.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Sample a rank in [0, n).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        // Binary search for the first cdf entry >= u.
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    /// Probability of rank k.
+    pub fn pmf(&self, k: usize) -> f64 {
+        if k == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[k] - self.cdf[k - 1]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_normalized() {
+        let z = Zipf::new(100, 1.0);
+        assert!((z.cdf.last().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_frequencies_decay() {
+        let z = Zipf::new(50, 1.2);
+        let mut rng = Rng::new(1);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..200_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[4]);
+        assert!(counts[4] > counts[20]);
+        // Empirical rank-1 frequency ≈ pmf(0).
+        let p0 = counts[0] as f64 / 200_000.0;
+        assert!((p0 - z.pmf(0)).abs() < 0.01, "p0={p0} pmf={}", z.pmf(0));
+    }
+
+    #[test]
+    fn larger_s_more_peaked() {
+        let flat = Zipf::new(100, 0.5);
+        let peaked = Zipf::new(100, 2.0);
+        assert!(peaked.pmf(0) > flat.pmf(0));
+    }
+
+    #[test]
+    fn single_outcome() {
+        let z = Zipf::new(1, 1.0);
+        let mut rng = Rng::new(2);
+        assert_eq!(z.sample(&mut rng), 0);
+        assert!((z.pmf(0) - 1.0).abs() < 1e-12);
+    }
+}

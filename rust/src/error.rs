@@ -1,0 +1,100 @@
+//! Crate-wide error type.
+//!
+//! No external error crates are available offline, so we hand-roll a small
+//! enum that covers the failure surface of the library: I/O, artifact
+//! parsing, runtime (PJRT) failures, configuration and shape errors.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All error conditions surfaced by the LAMP library.
+#[derive(Debug)]
+pub enum Error {
+    /// Underlying I/O failure (file missing, short read, ...).
+    Io(std::io::Error),
+    /// A `.lamp` tensor file or `.kv` metadata file failed to parse.
+    Format(String),
+    /// Configuration error: unknown key, invalid value, missing artifact.
+    Config(String),
+    /// Tensor shape mismatch in linear algebra or model plumbing.
+    Shape(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+    /// Coordinator-level failure (queue closed, worker died, ...).
+    Coordinator(String),
+    /// An invariant that should be unreachable was violated.
+    Invariant(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Format(m) => write!(f, "format error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Invariant(m) => write!(f, "invariant violation: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e:?}"))
+    }
+}
+
+/// Shorthand constructors used across the crate.
+impl Error {
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    pub fn format(msg: impl Into<String>) -> Self {
+        Error::Format(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+    pub fn coordinator(msg: impl Into<String>) -> Self {
+        Error::Coordinator(msg.into())
+    }
+    pub fn invariant(msg: impl Into<String>) -> Self {
+        Error::Invariant(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_roundtrip() {
+        let e = Error::config("bad key");
+        assert!(e.to_string().contains("bad key"));
+        let e = Error::shape("2x3 vs 4x5");
+        assert!(e.to_string().contains("2x3"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("nope"));
+    }
+}

@@ -1,0 +1,133 @@
+//! Ablations beyond the paper's figures — the design-choice experiments
+//! DESIGN.md calls out:
+//!
+//! * `rounding`: deterministic RNE vs stochastic rounding for the PS(μ)
+//!   accumulator (§2.2.1: c_g = k vs ≈ √k) at the dot-product level.
+//! * `recompute_algo`: FP32 recomputation vs Kahan-compensated
+//!   recomputation (the "more accurate algorithm" refinement of §2.2.1),
+//!   measured on the composition error of softmax(A·x).
+
+use crate::benchkit::{fnum, Table};
+use crate::error::Result;
+use crate::lamp::softmax::{select_strict, softmax};
+use crate::linalg::Matrix;
+use crate::metrics::Accumulator;
+use crate::softfloat::dot::{dot_f32, dot_f64, dot_kahan, dot_ps, dot_ps_stochastic};
+use crate::util::Rng;
+
+/// RNE vs stochastic accumulation error as k grows (§2.2.1: c_g = k
+/// worst-case vs ≈ √k with high probability).
+///
+/// Two regimes:
+/// * random-sign products — RNE errors are already ~zero-mean, the two
+///   modes are comparable;
+/// * small positive increments into a growing accumulator — the classic
+///   *stagnation* regime: once increments drop below half an ulp RNE
+///   absorbs them entirely (linear-in-k bias), while stochastic rounding
+///   stays unbiased. This is where the √k advantage is dramatic.
+pub fn rounding_modes() -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    let mut rng = Rng::new(11);
+    for (title, positive) in [
+        ("ablation — rounding mode, random-sign products (PS(4))", false),
+        ("ablation — rounding mode, positive increments / stagnation (PS(4))", true),
+    ] {
+        let mut t = Table::new(title, &["k", "RNE |err|", "stochastic |err|", "RNE/stochastic"]);
+        for k in [16usize, 64, 256, 1024, 4096] {
+            let mut acc_rne = Accumulator::new();
+            let mut acc_sto = Accumulator::new();
+            for _ in 0..64 {
+                let (a, b): (Vec<f32>, Vec<f32>) = if positive {
+                    (
+                        vec![1.0; k],
+                        (0..k).map(|_| 0.005 + 0.01 * rng.f32()).collect(),
+                    )
+                } else {
+                    (
+                        (0..k).map(|_| rng.f32() * 2.0 - 1.0).collect(),
+                        (0..k).map(|_| rng.f32() * 2.0 - 1.0).collect(),
+                    )
+                };
+                let exact = dot_f64(&a, &b);
+                acc_rne.push((dot_ps(&a, &b, 4) as f64 - exact).abs());
+                acc_sto.push((dot_ps_stochastic(&a, &b, 4, &mut rng) as f64 - exact).abs());
+            }
+            t.row(vec![
+                k.to_string(),
+                fnum(acc_rne.mean()),
+                fnum(acc_sto.mean()),
+                format!("{:.2}", acc_rne.mean() / acc_sto.mean().max(1e-300)),
+            ]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+/// FP32 vs Kahan recomputation inside the LAMP loop on softmax(A·x).
+pub fn recompute_algorithms() -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "ablation — recomputation algorithm for selected products (PS(3), tau=0.05)",
+        &["k", "L1 err uniform", "L1 err LAMP/fp32", "L1 err LAMP/kahan"],
+    );
+    let mut rng = Rng::new(13);
+    let n = 32;
+    for k in [64usize, 512, 4096] {
+        let a = Matrix::randn(n, k, 0.3, &mut rng);
+        let x: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+        let y_exact: Vec<f32> = (0..n).map(|i| dot_f32(a.row(i), &x)).collect();
+        let z_exact = softmax(&y_exact);
+
+        let y_low: Vec<f32> = (0..n).map(|i| dot_ps(a.row(i), &x, 3)).collect();
+        let mask = select_strict(&y_low, 0.05);
+        let l1 = |z: &[f32]| -> f64 {
+            z.iter().zip(&z_exact).map(|(&p, &q)| (p - q).abs() as f64).sum()
+        };
+
+        let mut y_f32 = y_low.clone();
+        let mut y_kahan = y_low.clone();
+        for (j, &m) in mask.iter().enumerate() {
+            if m {
+                y_f32[j] = dot_f32(a.row(j), &x);
+                y_kahan[j] = dot_kahan(a.row(j), &x);
+            }
+        }
+        t.row(vec![
+            k.to_string(),
+            fnum(l1(&softmax(&y_low))),
+            fnum(l1(&softmax(&y_f32))),
+            fnum(l1(&softmax(&y_kahan))),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounding_ablation_runs_and_shows_sqrt_k_gap() {
+        let tables = rounding_modes().unwrap();
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[1].rows.len(), 5);
+        // In the stagnation regime at k=4096 stochastic must be far better
+        // than RNE — the k vs √k scaling of §2.2.1.
+        let last = tables[1].rows.last().unwrap();
+        let ratio: f64 = last[3].parse().unwrap();
+        assert!(ratio > 3.0, "expected stochastic advantage at large k, got {ratio}");
+        // Random-sign regime: comparable within an order of magnitude.
+        let rnd: f64 = tables[0].rows.last().unwrap()[3].parse().unwrap();
+        assert!(rnd > 0.1 && rnd < 10.0, "random-sign ratio out of band: {rnd}");
+    }
+
+    #[test]
+    fn recompute_ablation_runs_and_lamp_helps() {
+        let tables = recompute_algorithms().unwrap();
+        for row in &tables[0].rows {
+            let uni: f64 = row[1].parse().unwrap();
+            let lamp: f64 = row[2].parse().unwrap();
+            assert!(lamp <= uni, "LAMP worse than uniform? {row:?}");
+        }
+    }
+}

@@ -1,0 +1,295 @@
+//! Shared experiment machinery: evaluation panels, reference caching,
+//! (μ, τ) sweeps, Pareto extraction.
+
+use crate::coordinator::{Engine, NativeEngine, PrecisionPolicy, Rule};
+use crate::data::{Dataset, Domain};
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::metrics::{flip_rate, mean_kl_from_logits, ParetoPoint};
+use crate::model::{ModelConfig, Weights};
+use crate::runtime::ArtifactStore;
+use crate::util::{Rng, ThreadPool};
+use std::sync::Arc;
+
+/// The project-wide Markov-table seed shared with `python/compile/data.py`.
+pub const TABLE_SEED: u64 = 7;
+
+/// Options controlling experiment scale (CLI-overridable).
+#[derive(Debug, Clone)]
+pub struct EvalOptions {
+    /// Evaluation sequences per panel.
+    pub num_seqs: usize,
+    /// Tokens per sequence (≤ model seq).
+    pub seq_len: usize,
+    /// Held-out stream seed.
+    pub stream_seed: u64,
+    /// Parallel workers.
+    pub workers: usize,
+    /// Artifact directory (used when trained weights are available).
+    pub artifacts: Option<String>,
+    /// Quick mode: shrink sweeps for smoke testing.
+    pub quick: bool,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions {
+            num_seqs: 6,
+            seq_len: 64,
+            stream_seed: 42,
+            workers: 8,
+            artifacts: Some("artifacts".to_string()),
+            quick: false,
+        }
+    }
+}
+
+/// Result of evaluating one policy on one panel.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub kl: f64,
+    pub flip: f64,
+    /// Recomputation rate over the causal mask.
+    pub rate: f64,
+    pub recomputed: usize,
+    pub causal_total: usize,
+}
+
+impl EvalResult {
+    pub fn pareto_kl(&self, tau: f64) -> ParetoPoint {
+        ParetoPoint { rate: self.rate, metric: self.kl, tau }
+    }
+    pub fn pareto_flip(&self, tau: f64) -> ParetoPoint {
+        ParetoPoint { rate: self.rate, metric: self.flip, tau }
+    }
+}
+
+/// An evaluation panel: a model + dataset + cached FP32 reference logits.
+pub struct EvalPanel {
+    pub weights: Arc<Weights>,
+    pub dataset: Dataset,
+    pub reference: Vec<Matrix>,
+    pool: Arc<ThreadPool>,
+}
+
+/// Load trained weights from artifacts when present, else deterministic
+/// random weights (clearly logged — random weights still exhibit the LAMP
+/// numerics, with flatter attention).
+pub fn load_weights(config_name: &str, opts: &EvalOptions) -> Result<Arc<Weights>> {
+    if let Some(dir) = &opts.artifacts {
+        if let Ok(store) = ArtifactStore::open(dir) {
+            if let Ok(w) = store.weights(config_name) {
+                return Ok(Arc::new(w));
+            }
+        }
+    }
+    crate::log_warn!(
+        "experiments",
+        "trained weights for {config_name:?} not found — using random init (run `make artifacts`)"
+    );
+    let cfg = ModelConfig::by_name(config_name)?;
+    let mut rng = Rng::new(0xA11CE ^ config_name.len() as u64);
+    Ok(Arc::new(Weights::random(&cfg, &mut rng)))
+}
+
+impl EvalPanel {
+    /// Build a panel: generate the dataset and compute reference logits.
+    pub fn build(
+        weights: Arc<Weights>,
+        domain: Domain,
+        opts: &EvalOptions,
+    ) -> Result<Self> {
+        let cfg = &weights.config;
+        let seq_len = opts.seq_len.min(cfg.seq);
+        let dataset = Dataset::generate(
+            domain,
+            cfg.vocab,
+            opts.num_seqs,
+            seq_len,
+            TABLE_SEED,
+            opts.stream_seed,
+        );
+        let pool = Arc::new(ThreadPool::with_cpus(opts.workers));
+        let panel = EvalPanel {
+            reference: Vec::new(),
+            weights,
+            dataset,
+            pool,
+        };
+        let reference = panel.logits(&PrecisionPolicy::reference(), 0)?;
+        Ok(EvalPanel { reference, ..panel })
+    }
+
+    /// Build a panel from an explicit dataset (permutation experiments).
+    pub fn with_dataset(
+        weights: Arc<Weights>,
+        dataset: Dataset,
+        workers: usize,
+    ) -> Result<Self> {
+        let pool = Arc::new(ThreadPool::with_cpus(workers));
+        let panel = EvalPanel { reference: Vec::new(), weights, dataset, pool };
+        let reference = panel.logits(&PrecisionPolicy::reference(), 0)?;
+        Ok(EvalPanel { reference, ..panel })
+    }
+
+    /// Logits for every sequence under `policy` (parallel across sequences).
+    pub fn logits(&self, policy: &PrecisionPolicy, seed: i32) -> Result<Vec<Matrix>> {
+        let engine = NativeEngine::new((*self.weights).clone());
+        let engine = Arc::new(engine);
+        let jobs: Vec<(usize, Vec<u32>)> = self
+            .dataset
+            .sequences
+            .iter()
+            .cloned()
+            .enumerate()
+            .collect();
+        let policy = *policy;
+        let results = self.pool.map(jobs, move |(i, seq)| {
+            let out = engine.infer(&[seq], &policy, seed.wrapping_add(i as i32));
+            out.map(|o| (o.logits.into_iter().next().unwrap(), o.stats))
+        });
+        results
+            .into_iter()
+            .map(|r| r.map(|(l, _)| l))
+            .collect::<Result<Vec<_>>>()
+    }
+
+    /// Evaluate one policy: KL + flip rate vs the cached reference, plus
+    /// the recomputation rate.
+    pub fn evaluate(&self, policy: &PrecisionPolicy, seed: i32) -> Result<EvalResult> {
+        let engine = Arc::new(NativeEngine::new((*self.weights).clone()));
+        let jobs: Vec<(usize, Vec<u32>)> = self
+            .dataset
+            .sequences
+            .iter()
+            .cloned()
+            .enumerate()
+            .collect();
+        let policy_c = *policy;
+        let results = self.pool.map(jobs, move |(i, seq)| {
+            engine
+                .infer(&[seq], &policy_c, seed.wrapping_add(i as i32))
+                .map(|o| (i, o))
+        });
+        let mut kl = 0.0;
+        let mut flip = 0.0;
+        let mut recomputed = 0usize;
+        let mut causal = 0usize;
+        let n = self.dataset.len();
+        for r in results {
+            let (i, out) = r?;
+            kl += mean_kl_from_logits(&self.reference[i], &out.logits[0]);
+            flip += flip_rate(&self.reference[i], &out.logits[0]);
+            recomputed += out.stats.recomputed;
+            causal += out.stats.causal_total;
+        }
+        Ok(EvalResult {
+            kl: kl / n as f64,
+            flip: flip / n as f64,
+            rate: if causal == 0 { 0.0 } else { recomputed as f64 / causal as f64 },
+            recomputed,
+            causal_total: causal,
+        })
+    }
+
+    /// Perplexity of the model's own predictions on this panel under
+    /// `policy` (App. C.5 metric; no reference needed).
+    pub fn perplexity(&self, policy: &PrecisionPolicy, seed: i32) -> Result<(f64, f64)> {
+        use crate::model::loss::next_token_nll;
+        let logits = self.logits(policy, seed)?;
+        let mut nlls = Vec::new();
+        for (i, l) in logits.iter().enumerate() {
+            nlls.extend(next_token_nll(l, &self.dataset.sequences[i]));
+        }
+        let engine = NativeEngine::new((*self.weights).clone());
+        // One representative pass for the recomputation rate.
+        let out = engine.infer(
+            &[self.dataset.sequences[0].clone()],
+            policy,
+            seed,
+        )?;
+        Ok((crate::model::loss::perplexity(&nlls), out.stats.rate()))
+    }
+}
+
+/// The τ sweep grids used across figures (quick mode trims them).
+pub fn tau_grid(rule: Rule, quick: bool) -> Vec<f32> {
+    let full: Vec<f32> = match rule {
+        // Strict thresholds are absolute sensitivities.
+        Rule::Strict | Rule::Random => vec![1.0, 0.5, 0.2, 0.1, 0.05, 0.02, 0.01],
+        // Relaxed thresholds are relative, in [0, 1).
+        Rule::Relaxed | Rule::RelaxedLengthNorm => {
+            vec![0.9, 0.6, 0.3, 0.1, 0.03, 0.01]
+        }
+    };
+    if quick {
+        full.into_iter().step_by(3).collect()
+    } else {
+        full
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> EvalOptions {
+        EvalOptions {
+            num_seqs: 2,
+            seq_len: 12,
+            stream_seed: 1,
+            workers: 2,
+            artifacts: None,
+            quick: true,
+        }
+    }
+
+    fn nano_weights() -> Arc<Weights> {
+        let mut rng = Rng::new(3);
+        Arc::new(Weights::random(&ModelConfig::nano(), &mut rng))
+    }
+
+    #[test]
+    fn panel_reference_is_zero_error() {
+        let panel = EvalPanel::build(nano_weights(), Domain::Web, &opts()).unwrap();
+        let r = panel.evaluate(&PrecisionPolicy::reference(), 0).unwrap();
+        assert!(r.kl < 1e-12);
+        assert_eq!(r.flip, 0.0);
+        assert_eq!(r.rate, 0.0);
+    }
+
+    #[test]
+    fn lamp_beats_uniform_on_panel() {
+        let panel = EvalPanel::build(nano_weights(), Domain::Web, &opts()).unwrap();
+        let uni = panel.evaluate(&PrecisionPolicy::uniform(2), 0).unwrap();
+        let lamp = panel
+            .evaluate(&PrecisionPolicy::lamp(2, 0.01, Rule::Strict), 0)
+            .unwrap();
+        assert!(uni.kl > 0.0);
+        assert!(lamp.rate > 0.0);
+        assert!(lamp.kl < uni.kl, "lamp={} uniform={}", lamp.kl, uni.kl);
+    }
+
+    #[test]
+    fn perplexity_finite() {
+        let panel = EvalPanel::build(nano_weights(), Domain::Math, &opts()).unwrap();
+        let (ppl, rate) = panel
+            .perplexity(&PrecisionPolicy::uniform(4), 0)
+            .unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0);
+        assert_eq!(rate, 0.0);
+    }
+
+    #[test]
+    fn tau_grids_nonempty_and_sorted_desc() {
+        for rule in [Rule::Strict, Rule::Relaxed] {
+            for quick in [false, true] {
+                let g = tau_grid(rule, quick);
+                assert!(!g.is_empty());
+                for w in g.windows(2) {
+                    assert!(w[0] > w[1]);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Figure 1: KL divergence vs mantissa bits μ for uniform PS(μ)
+//! accumulation, LAMP (τ=0.1, ~1% recomputation), and the random baseline
+//! at the same recomputation count. GPT-2 XL → xl-sim, OpenWebText → web.
+
+use super::common::{load_weights, EvalOptions, EvalPanel};
+use crate::benchkit::{fnum, Table};
+use crate::coordinator::{PrecisionPolicy, Rule};
+use crate::data::Domain;
+use crate::error::Result;
+
+/// The paper's Fig. 1 setting: τ = 0.1 ("corresponding to a threshold
+/// τ = 0.1 in Sections 2–3"), strict rule.
+pub const FIG1_TAU: f32 = 0.1;
+
+pub fn mu_grid(quick: bool) -> Vec<u32> {
+    if quick {
+        vec![4, 7, 10]
+    } else {
+        vec![2, 3, 4, 5, 6, 7, 8, 10, 12, 16, 20, 23]
+    }
+}
+
+pub fn run(opts: &EvalOptions) -> Result<Vec<Table>> {
+    let weights = load_weights("xl", opts)?;
+    let panel = EvalPanel::build(weights, Domain::Web, opts)?;
+    let mut t = Table::new(
+        "Fig 1 — GPT-2 xl-sim on web panel: KL vs mu (tau=0.1, strict)",
+        &["mu", "KL(uniform)", "KL(LAMP)", "KL(random)", "recompute%"],
+    );
+    for mu in mu_grid(opts.quick) {
+        let uni = panel.evaluate(&PrecisionPolicy::uniform(mu), 0)?;
+        let lamp = panel.evaluate(&PrecisionPolicy::lamp(mu, FIG1_TAU, Rule::Strict), 0)?;
+        let rand = panel.evaluate(&PrecisionPolicy::lamp(mu, FIG1_TAU, Rule::Random), 0)?;
+        t.row(vec![
+            mu.to_string(),
+            fnum(uni.kl),
+            fnum(lamp.kl),
+            fnum(rand.kl),
+            format!("{:.3}", 100.0 * lamp.rate),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_grid_small() {
+        assert_eq!(mu_grid(true).len(), 3);
+        assert!(mu_grid(false).contains(&7));
+        assert!(mu_grid(false).contains(&23));
+    }
+}

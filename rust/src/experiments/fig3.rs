@@ -1,0 +1,56 @@
+//! Figure 3: Pareto boundaries of "strict" LAMP (eq. 8) vs relaxed
+//! relative-threshold LAMP (eq. 9), μ=4, xl-sim, web panel. The strict
+//! rule is the theoretical optimum; the relaxed boundary should sit only
+//! marginally above it (§4.4).
+
+use super::common::{load_weights, tau_grid, EvalOptions, EvalPanel};
+use crate::benchkit::{fnum, Table};
+use crate::coordinator::{PrecisionPolicy, Rule};
+use crate::data::Domain;
+use crate::error::Result;
+use crate::metrics::{pareto_front, ParetoPoint};
+
+pub const MU: u32 = 4;
+
+/// Sweep one rule into its (rate, KL) and (rate, flip) Pareto points.
+pub fn sweep_rule(
+    panel: &EvalPanel,
+    mu: u32,
+    rule: Rule,
+    quick: bool,
+) -> Result<(Vec<ParetoPoint>, Vec<ParetoPoint>)> {
+    let mut kl_pts = Vec::new();
+    let mut flip_pts = Vec::new();
+    for tau in tau_grid(rule, quick) {
+        let r = panel.evaluate(&PrecisionPolicy::lamp(mu, tau, rule), 0)?;
+        kl_pts.push(r.pareto_kl(tau as f64));
+        flip_pts.push(r.pareto_flip(tau as f64));
+    }
+    Ok((kl_pts, flip_pts))
+}
+
+pub fn run(opts: &EvalOptions) -> Result<Vec<Table>> {
+    let weights = load_weights("xl", opts)?;
+    let panel = EvalPanel::build(weights, Domain::Web, opts)?;
+    let mut tables = Vec::new();
+    for (metric, pick) in [("KL", 0usize), ("flip", 1usize)] {
+        let mut t = Table::new(
+            &format!("Fig 3 — Pareto ({metric} vs recompute%), mu=4: strict vs relaxed"),
+            &["rule", "tau", "recompute%", metric],
+        );
+        for rule in [Rule::Strict, Rule::Relaxed] {
+            let (kl_pts, flip_pts) = sweep_rule(&panel, MU, rule, opts.quick)?;
+            let pts = if pick == 0 { kl_pts } else { flip_pts };
+            for p in pareto_front(&pts) {
+                t.row(vec![
+                    rule.name().into(),
+                    format!("{:.3}", p.tau),
+                    format!("{:.3}", 100.0 * p.rate),
+                    fnum(p.metric),
+                ]);
+            }
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}

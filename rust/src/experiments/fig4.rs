@@ -1,0 +1,39 @@
+//! Figure 4 (App. C.1): Pareto boundaries of strict LAMP across datasets
+//! (OpenWebText/CodeParrot/ArXiv → web/code/arxiv panels), μ=4, xl-sim.
+//! Expected shape: near-identical boundaries — LAMP is input-agnostic.
+
+use super::common::{load_weights, EvalOptions, EvalPanel};
+use super::fig3::sweep_rule;
+use crate::benchkit::{fnum, Table};
+use crate::coordinator::Rule;
+use crate::data::Domain;
+use crate::error::Result;
+use crate::metrics::pareto_front;
+
+pub fn run(opts: &EvalOptions) -> Result<Vec<Table>> {
+    let weights = load_weights("xl", opts)?;
+    let mut t = Table::new(
+        "Fig 4 — strict LAMP Pareto (mu=4) across datasets",
+        &["dataset", "tau", "recompute%", "KL", "flip%"],
+    );
+    for domain in [Domain::Web, Domain::Code, Domain::Arxiv] {
+        let panel = EvalPanel::build(weights.clone(), domain, opts)?;
+        let (kl_pts, flip_pts) = sweep_rule(&panel, 4, Rule::Strict, opts.quick)?;
+        for p in pareto_front(&kl_pts) {
+            let f = flip_pts
+                .iter()
+                .find(|q| q.tau == p.tau)
+                .map(|q| q.metric)
+                .unwrap_or(f64::NAN);
+            t.row(vec![
+                domain.name().into(),
+                format!("{:.3}", p.tau),
+                format!("{:.3}", 100.0 * p.rate),
+                fnum(p.metric),
+                format!("{:.3}", 100.0 * f),
+            ]);
+        }
+        drop(panel);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,38 @@
+//! Figure 5 (App. C.2): Pareto boundaries for the xl-sim vs small-sim
+//! models, μ=4, web panel. Expected shape: the larger model has the lower
+//! boundary (more concentrated softmax ⇒ fewer sensitive products).
+
+use super::common::{load_weights, EvalOptions, EvalPanel};
+use super::fig3::sweep_rule;
+use crate::benchkit::{fnum, Table};
+use crate::coordinator::Rule;
+use crate::data::Domain;
+use crate::error::Result;
+use crate::metrics::pareto_front;
+
+pub fn run(opts: &EvalOptions) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Fig 5 — strict LAMP Pareto (mu=4): xl-sim vs small-sim on web",
+        &["model", "tau", "recompute%", "KL", "flip%"],
+    );
+    for name in ["xl", "small"] {
+        let weights = load_weights(name, opts)?;
+        let panel = EvalPanel::build(weights, Domain::Web, opts)?;
+        let (kl_pts, flip_pts) = sweep_rule(&panel, 4, Rule::Strict, opts.quick)?;
+        for p in pareto_front(&kl_pts) {
+            let f = flip_pts
+                .iter()
+                .find(|q| q.tau == p.tau)
+                .map(|q| q.metric)
+                .unwrap_or(f64::NAN);
+            t.row(vec![
+                name.into(),
+                format!("{:.3}", p.tau),
+                format!("{:.3}", 100.0 * p.rate),
+                fnum(p.metric),
+                format!("{:.3}", 100.0 * f),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,39 @@
+//! Figure 7 (App. C.4): Pareto boundaries of strict LAMP vs the
+//! random-recomputation baseline (same budget, random positions), μ=4,
+//! xl-sim, web. Expected shape: random recomputation yields essentially no
+//! improvement — "the adaptive choice of the recomputations is the crux".
+
+use super::common::{load_weights, EvalOptions, EvalPanel};
+use super::fig3::sweep_rule;
+use crate::benchkit::{fnum, Table};
+use crate::coordinator::Rule;
+use crate::data::Domain;
+use crate::error::Result;
+use crate::metrics::pareto_front;
+
+pub fn run(opts: &EvalOptions) -> Result<Vec<Table>> {
+    let weights = load_weights("xl", opts)?;
+    let panel = EvalPanel::build(weights, Domain::Web, opts)?;
+    let mut t = Table::new(
+        "Fig 7 — Pareto (mu=4): LAMP vs random recomputation",
+        &["rule", "tau", "recompute%", "KL", "flip%"],
+    );
+    for rule in [Rule::Strict, Rule::Random] {
+        let (kl_pts, flip_pts) = sweep_rule(&panel, 4, rule, opts.quick)?;
+        for p in pareto_front(&kl_pts) {
+            let f = flip_pts
+                .iter()
+                .find(|q| q.tau == p.tau)
+                .map(|q| q.metric)
+                .unwrap_or(f64::NAN);
+            t.row(vec![
+                rule.name().into(),
+                format!("{:.3}", p.tau),
+                format!("{:.3}", 100.0 * p.rate),
+                fnum(p.metric),
+                format!("{:.3}", 100.0 * f),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}

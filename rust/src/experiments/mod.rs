@@ -1,0 +1,96 @@
+//! Experiment drivers: one module per paper figure/table.
+//!
+//! Every driver regenerates the corresponding plot's series as an aligned
+//! text table (the same rows/series the paper reports), using the native
+//! engine for (μ, τ) sweeps — see DESIGN.md §Engines — over the synthetic
+//! evaluation panels of `crate::data`. `cargo bench --bench figN` and
+//! `lamp exp figN` both route here.
+
+pub mod ablations;
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table1;
+
+pub use common::{EvalOptions, EvalPanel, EvalResult};
+
+use crate::benchkit::Table;
+use crate::error::{Error, Result};
+
+/// Run a named experiment; returns its result tables.
+pub fn run(name: &str, opts: &EvalOptions) -> Result<Vec<Table>> {
+    match name {
+        "fig1" => fig1::run(opts),
+        "fig2" => fig2::run(opts),
+        "fig3" => fig3::run(opts),
+        "fig4" => fig4::run(opts),
+        "fig5" => fig5::run(opts),
+        "fig6" => fig6::run(opts),
+        "fig7" => fig7::run(opts),
+        "table1" => table1::run(opts),
+        "appendix_b" => appendix_b(),
+        "ablation_rounding" => ablations::rounding_modes(),
+        "ablation_recompute" => ablations::recompute_algorithms(),
+        other => Err(Error::config(format!(
+            "unknown experiment {other:?} (fig1..fig7|table1|appendix_b|ablation_rounding|ablation_recompute)"
+        ))),
+    }
+}
+
+/// All experiment names in paper order (+ ablations).
+pub fn all_names() -> &'static [&'static str] {
+    &[
+        "fig1",
+        "fig2",
+        "fig3",
+        "fig4",
+        "fig5",
+        "fig6",
+        "fig7",
+        "table1",
+        "appendix_b",
+        "ablation_rounding",
+        "ablation_recompute",
+    ]
+}
+
+/// Appendix B verification: the counterexample families, as a table.
+fn appendix_b() -> Result<Vec<Table>> {
+    use crate::lamp::counterexamples::{kappa_c_softmax, PropB1, PropB2};
+    let mut t = Table::new(
+        "Appendix B — greedy heuristics fail componentwise softmax LAMP",
+        &["family", "n0", "s", "tau", "kappa(optimal)", "kappa(greedy)", "greedy ok?"],
+    );
+    for (n0, s) in [(3usize, 2usize), (5, 3), (8, 4)] {
+        let b1 = PropB1::new(n0, s, 4.0);
+        let ko = kappa_c_softmax(&b1.y, &b1.optimal_mask());
+        let kg = kappa_c_softmax(&b1.y, &b1.greedy_mask());
+        t.row(vec![
+            "B.1".into(),
+            n0.to_string(),
+            s.to_string(),
+            format!("{:.4}", b1.tau),
+            format!("{ko:.4}"),
+            format!("{kg:.4}"),
+            (kg <= b1.tau).to_string(),
+        ]);
+        let b2 = PropB2::new(n0.max(2), s);
+        let ko = kappa_c_softmax(&b2.y, &b2.optimal_mask());
+        let kg = kappa_c_softmax(&b2.y, &b2.greedy_mask());
+        t.row(vec![
+            "B.2".into(),
+            n0.to_string(),
+            s.to_string(),
+            format!("{:.4}", b2.tau),
+            format!("{ko:.4}"),
+            format!("{kg:.4}"),
+            (kg <= b2.tau).to_string(),
+        ]);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,61 @@
+//! Table 1 (App. C.5): perplexity of full-precision / low-precision /
+//! relaxed LAMP (eq. 9) / length-normalized relaxed LAMP at μ=4 on the
+//! math/wiki/code panels, with the recomputation "sparsity".
+//!
+//! Expected shape: low precision degrades perplexity; both LAMP variants
+//! recover nearly full-precision perplexity at a few percent
+//! recomputation; LN trades threshold for fewer recomputations.
+
+use super::common::{load_weights, EvalOptions, EvalPanel};
+use crate::benchkit::Table;
+use crate::coordinator::{PrecisionPolicy, Rule};
+use crate::data::Domain;
+use crate::error::Result;
+
+pub const MU: u32 = 4;
+pub const TAUS: [f32; 2] = [0.03, 0.09];
+
+pub fn run(opts: &EvalOptions) -> Result<Vec<Table>> {
+    let weights = load_weights("xl", opts)?;
+    let mut t = Table::new(
+        "Table 1 — perplexity (mu=4 KQ accumulation)",
+        &["dataset", "method", "spec", "perplexity", "sparsity%"],
+    );
+    for domain in [Domain::Math, Domain::Wiki, Domain::Code] {
+        let panel = EvalPanel::build(weights.clone(), domain, opts)?;
+        let (ppl, _) = panel.perplexity(&PrecisionPolicy::reference(), 0)?;
+        t.row(vec![
+            domain.name().into(),
+            "Full precision".into(),
+            "N/A".into(),
+            format!("{ppl:.3}"),
+            "100".into(),
+        ]);
+        let (ppl, _) = panel.perplexity(&PrecisionPolicy::uniform(MU), 0)?;
+        t.row(vec![
+            domain.name().into(),
+            "Low precision".into(),
+            "N/A".into(),
+            format!("{ppl:.3}"),
+            "0".into(),
+        ]);
+        for tau in TAUS {
+            for (rule, label) in [
+                (Rule::Relaxed, format!("Relaxed (tau={tau})")),
+                (Rule::RelaxedLengthNorm, format!("Relaxed LN (tau={tau})")),
+            ] {
+                let policy = PrecisionPolicy::lamp(MU, tau, rule);
+                let (ppl, _) = panel.perplexity(&policy, 0)?;
+                let r = panel.evaluate(&policy, 0)?;
+                t.row(vec![
+                    domain.name().into(),
+                    "LAMP".into(),
+                    label,
+                    format!("{ppl:.3}"),
+                    format!("{:.2}", 100.0 * r.rate),
+                ]);
+            }
+        }
+    }
+    Ok(vec![t])
+}

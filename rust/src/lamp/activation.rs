@@ -1,0 +1,208 @@
+//! Componentwise LAMP for entrywise activation functions (paper §3.1).
+//!
+//! For f(y) = [φ(y₁) … φ(yₙ)] the matrix M(f, y) is diagonal with entries
+//! `φ′(y_i)·y_i / φ(y_i)`, so the componentwise LAMP problem (eq. 5) has the
+//! immediate closed-form solution: select i iff `|M_ii| > τ`.
+
+/// A differentiable scalar activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    ReLU,
+    /// GPT-2's tanh-approximated GELU.
+    Gelu,
+    Tanh,
+    Sigmoid,
+    /// SiLU / swish: x·σ(x).
+    Silu,
+}
+
+impl Activation {
+    /// φ(x).
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            Activation::ReLU => x.max(0.0),
+            Activation::Gelu => gelu(x),
+            Activation::Tanh => x.tanh(),
+            Activation::Sigmoid => sigmoid(x),
+            Activation::Silu => x * sigmoid(x),
+        }
+    }
+
+    /// φ′(x).
+    pub fn derivative(self, x: f32) -> f32 {
+        match self {
+            Activation::ReLU => {
+                if x > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Gelu => gelu_prime(x),
+            Activation::Tanh => {
+                let t = x.tanh();
+                1.0 - t * t
+            }
+            Activation::Sigmoid => {
+                let s = sigmoid(x);
+                s * (1.0 - s)
+            }
+            Activation::Silu => {
+                let s = sigmoid(x);
+                s + x * s * (1.0 - s)
+            }
+        }
+    }
+
+    /// The diagonal entry of M(f, y): `φ′(y)·y / φ(y)`.
+    ///
+    /// Returns 0 where φ(y) = 0 and φ′(y)·y = 0 (e.g. ReLU for y < 0: the
+    /// output is exactly 0 regardless of rounding in y, hence perfectly
+    /// stable), and +∞ where φ(y) = 0 but the numerator is not (a genuine
+    /// relative-error singularity, e.g. tanh at an exact zero crossing with
+    /// y ≠ 0 — cannot happen for these φ).
+    pub fn sensitivity(self, y: f32) -> f32 {
+        let num = self.derivative(y) * y;
+        let den = self.apply(y);
+        if den == 0.0 {
+            if num == 0.0 {
+                0.0
+            } else {
+                f32::INFINITY
+            }
+        } else {
+            (num / den).abs()
+        }
+    }
+}
+
+const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn gelu_prime(x: f32) -> f32 {
+    let inner = SQRT_2_OVER_PI * (x + 0.044715 * x * x * x);
+    let t = inner.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Closed-form componentwise LAMP solution for an entrywise activation
+/// (§3.1): select i iff the diagonal sensitivity exceeds τ.
+pub fn select_activation(y: &[f32], act: Activation, tau: f32) -> Vec<bool> {
+    y.iter().map(|&yi| act.sensitivity(yi) > tau).collect()
+}
+
+/// κ_c for the entrywise activation under the selection `mask` — the max of
+/// unselected diagonal sensitivities (the ∞-norm of M(I − diag q) for
+/// diagonal M).
+pub fn kappa_c_activation(y: &[f32], act: Activation, mask: &[bool]) -> f32 {
+    assert_eq!(y.len(), mask.len());
+    y.iter()
+        .zip(mask)
+        .filter(|(_, &m)| !m)
+        .map(|(&yi, _)| act.sensitivity(yi))
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derivatives_match_finite_differences() {
+        let acts = [
+            Activation::Gelu,
+            Activation::Tanh,
+            Activation::Sigmoid,
+            Activation::Silu,
+        ];
+        for act in acts {
+            for i in -20..=20 {
+                let x = i as f32 * 0.3;
+                let h = 1e-3f32;
+                let fd = (act.apply(x + h) - act.apply(x - h)) / (2.0 * h);
+                let an = act.derivative(x);
+                assert!(
+                    (fd - an).abs() < 5e-3,
+                    "{act:?} at {x}: fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn relu_negative_is_perfectly_stable() {
+        // φ(y)=0 and φ'(y)y=0: rounding y cannot change the output.
+        assert_eq!(Activation::ReLU.sensitivity(-3.0), 0.0);
+        // Positive side: φ(y)=y ⇒ sensitivity exactly 1.
+        assert_eq!(Activation::ReLU.sensitivity(2.0), 1.0);
+    }
+
+    #[test]
+    fn tanh_sensitivity_shape() {
+        // x·(1−tanh²x)/tanh x → 1 as x→0, → 0 as |x|→∞.
+        let near0 = Activation::Tanh.sensitivity(1e-3);
+        assert!((near0 - 1.0).abs() < 1e-3, "{near0}");
+        let far = Activation::Tanh.sensitivity(10.0);
+        assert!(far < 1e-3, "{far}");
+    }
+
+    #[test]
+    fn gelu_negative_tail_is_sensitive() {
+        // For x → −∞, gelu(x) → 0 exponentially while x·φ′ does not vanish
+        // as fast relative to φ: relative sensitivity blows up. (At x ≲ −5
+        // f32 tanh saturates to exactly −1 and φ underflows to an exact 0,
+        // which our convention treats as perfectly stable — so probe at −4.)
+        let deep = Activation::Gelu.sensitivity(-4.0);
+        let shallow = Activation::Gelu.sensitivity(-0.5);
+        assert!(deep > shallow, "deep={deep} shallow={shallow}");
+        assert!(deep > 10.0, "deep tail should be very sensitive: {deep}");
+    }
+
+    #[test]
+    fn selection_is_thresholding() {
+        let y = [-6.0f32, -0.5, 0.1, 2.0, 8.0];
+        let tau = 1.5;
+        let mask = select_activation(&y, Activation::Gelu, tau);
+        for (i, &yi) in y.iter().enumerate() {
+            assert_eq!(mask[i], Activation::Gelu.sensitivity(yi) > tau);
+        }
+    }
+
+    #[test]
+    fn kappa_bound_holds_after_selection() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(1);
+        for act in [Activation::Gelu, Activation::Tanh, Activation::Silu] {
+            for _ in 0..200 {
+                let n = rng.range(1, 64);
+                let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 12.0).collect();
+                let tau = rng.f32() * 2.0;
+                let mask = select_activation(&y, act, tau);
+                assert!(kappa_c_activation(&y, act, &mask) <= tau);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_input_zero_output_stable() {
+        for act in [
+            Activation::ReLU,
+            Activation::Tanh,
+            Activation::Gelu,
+            Activation::Silu,
+        ] {
+            // num = φ'(0)·0 = 0 and φ(0) = 0 ⇒ defined as stable.
+            assert_eq!(act.sensitivity(0.0), 0.0, "{act:?}");
+        }
+        // Sigmoid(0) = 0.5 ≠ 0: sensitivity is 0·φ'(0)/0.5 = 0 too.
+        assert_eq!(Activation::Sigmoid.sensitivity(0.0), 0.0);
+    }
+}

@@ -1,0 +1,239 @@
+//! Algorithm 1 — LAMP evaluation of a composition f(g(x)) (paper §2.3).
+//!
+//! 1. Compute ŷ ≈ g(x) in low-precision FP arithmetic.
+//! 2. Set up κ from the computed ŷ (Jacobian assumed stable to small input
+//!    variations — paper footnote 4).
+//! 3. Solve the LAMP problem ‖q‖₀ → min s.t. κ(q) ≤ τ.
+//! 4. Recompute the components flagged by q more accurately.
+//!
+//! The generic solver here performs greedy column elimination on the
+//! sensitivity aggregates — exact for diagonal/rank-one structures (the
+//! transformer nonlinearities have closed forms in the sibling modules; this
+//! generic path is for *arbitrary* f, the "extension to other architectures"
+//! of §1.2).
+
+use super::condition::{kappa_1, kappa_c, VectorFn};
+use crate::error::{Error, Result};
+
+/// Which objective the LAMP problem minimizes against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Componentwise, eq. (3).
+    Componentwise,
+    /// ℓ₁-normwise, eq. (4).
+    NormwiseL1,
+}
+
+/// The result of LAMP-evaluating a composition.
+#[derive(Debug, Clone)]
+pub struct LampEvaluation {
+    /// Final (mixed-precision) inner value ŷ after recomputation.
+    pub y: Vec<f32>,
+    /// Final outer value f(ŷ).
+    pub z: Vec<f32>,
+    /// Selection mask q.
+    pub mask: Vec<bool>,
+    /// κ(q) achieved after selection.
+    pub kappa: f64,
+    /// Number of recomputed components.
+    pub recomputed: usize,
+}
+
+/// Generic greedy solver for the LAMP problem (5): repeatedly select the
+/// unselected component with the largest sensitivity aggregate until
+/// κ(q) ≤ τ.
+///
+/// The sensitivity aggregate of column j is its contribution to the active
+/// norm (abs column sum for ℓ₁; max |entry| weight for ∞). For the paper's
+/// transformer nonlinearities this greedy scheme recovers the closed-form
+/// optimum; Appendix B shows it is *not* optimal for componentwise softmax
+/// — which is exactly why the paper pivots to the ℓ₁ objective there.
+pub fn solve_lamp_greedy(
+    func: &VectorFn,
+    y: &[f32],
+    tau: f64,
+    objective: Objective,
+) -> Result<Vec<bool>> {
+    let n = y.len();
+    let mut mask = vec![false; n];
+    let eval = |mask: &[bool]| match objective {
+        Objective::Componentwise => kappa_c(func, y, mask),
+        Objective::NormwiseL1 => kappa_1(func, y, mask),
+    };
+    let mut kappa = eval(&mask);
+    let mut guard = 0;
+    while kappa > tau {
+        // Greedy: pick the unselected column whose removal reduces κ most.
+        let mut best: Option<(usize, f64)> = None;
+        for j in 0..n {
+            if mask[j] {
+                continue;
+            }
+            mask[j] = true;
+            let k = eval(&mask);
+            mask[j] = false;
+            if best.map(|(_, bk)| k < bk).unwrap_or(true) {
+                best = Some((j, k));
+            }
+        }
+        match best {
+            Some((j, k)) => {
+                mask[j] = true;
+                kappa = k;
+            }
+            None => break, // everything selected
+        }
+        guard += 1;
+        if guard > n {
+            return Err(Error::invariant(
+                "LAMP greedy solver failed to converge".to_string(),
+            ));
+        }
+    }
+    Ok(mask)
+}
+
+/// Algorithm 1: LAMP evaluation of f(g(x)).
+///
+/// * `g_lowprec(x)` — the baseline low-precision evaluation of g.
+/// * `g_accurate(x, j)` — accurate recomputation of component j of g(x).
+/// * `f` — the ensuing operator with (optional) analytic Jacobian.
+pub fn lamp_evaluate(
+    x: &[f32],
+    g_lowprec: impl Fn(&[f32]) -> Vec<f32>,
+    g_accurate: impl Fn(&[f32], usize) -> f32,
+    f: &VectorFn,
+    tau: f64,
+    objective: Objective,
+) -> Result<LampEvaluation> {
+    // Step 1: baseline inner evaluation.
+    let mut y = g_lowprec(x);
+    // Steps 2–3: fix κ at the baseline ŷ and solve for q.
+    let mask = solve_lamp_greedy(f, &y, tau, objective)?;
+    // Step 4: recompute flagged components more accurately.
+    let mut recomputed = 0;
+    for (j, &m) in mask.iter().enumerate() {
+        if m {
+            y[j] = g_accurate(x, j);
+            recomputed += 1;
+        }
+    }
+    let kappa = match objective {
+        Objective::Componentwise => kappa_c(f, &y, &mask),
+        Objective::NormwiseL1 => kappa_1(f, &y, &mask),
+    };
+    let z = f.eval(&y);
+    Ok(LampEvaluation { y, z, mask, kappa, recomputed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lamp::softmax::{select_strict, softmax};
+    use crate::linalg::Matrix;
+    use crate::softfloat::dot::{dot_f32, dot_ps};
+    use crate::util::Rng;
+
+    fn softmax_fn<'a>() -> VectorFn<'a> {
+        VectorFn::with_jacobian(
+            |y| softmax(y),
+            |y| {
+                let z = softmax(y);
+                let n = z.len();
+                let mut j = Matrix::zeros(n, n);
+                for i in 0..n {
+                    for c in 0..n {
+                        let d = if i == c { z[i] } else { 0.0 };
+                        j.set(i, c, d - z[i] * z[c]);
+                    }
+                }
+                j
+            },
+        )
+    }
+
+    #[test]
+    fn greedy_l1_matches_strict_rule_for_softmax() {
+        // For the ℓ₁ objective on softmax, greedy = exact thresholding
+        // (Prop 3.3 makes κ₁ a max over unselected sensitivities).
+        let mut rng = Rng::new(1);
+        let f = softmax_fn();
+        for _ in 0..50 {
+            let n = rng.range(2, 10);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 8.0).collect();
+            let tau = 0.02 + rng.f64() * 0.3;
+            let greedy = solve_lamp_greedy(&f, &y, tau, Objective::NormwiseL1).unwrap();
+            let strict = select_strict(&y, tau as f32);
+            // Counts must match (exact minimizer); positions may differ only
+            // on ties, which have measure ~0 for random y.
+            assert_eq!(
+                greedy.iter().filter(|&&b| b).count(),
+                strict.iter().filter(|&&b| b).count(),
+                "y={y:?} tau={tau}"
+            );
+        }
+    }
+
+    #[test]
+    fn end_to_end_matvec_softmax() {
+        // g(x) = A·x accumulated in PS(3); LAMP recomputes flagged rows in
+        // FP32. The recomputed composition must be closer to the exact one.
+        let mut rng = Rng::new(2);
+        let n = 24;
+        let k = 64;
+        let a = Matrix::randn(n, k, 0.4, &mut rng);
+        let x: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+        let f = softmax_fn();
+
+        let a1 = a.clone();
+        let a2 = a.clone();
+        let result = lamp_evaluate(
+            &x,
+            move |xv| (0..n).map(|i| dot_ps(a1.row(i), xv, 3)).collect(),
+            move |xv, j| dot_f32(a2.row(j), xv),
+            &f,
+            0.05,
+            Objective::NormwiseL1,
+        )
+        .unwrap();
+
+        // Exact reference.
+        let y_exact: Vec<f32> = (0..n).map(|i| dot_f32(a.row(i), &x)).collect();
+        let z_exact = softmax(&y_exact);
+        let y_low: Vec<f32> = (0..n).map(|i| dot_ps(a.row(i), &x, 3)).collect();
+        let z_low = softmax(&y_low);
+
+        let l1 = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(&p, &q)| (p - q).abs() as f64).sum()
+        };
+        let err_lamp = l1(&result.z, &z_exact);
+        let err_low = l1(&z_low, &z_exact);
+        assert!(result.kappa <= 0.05 + 1e-9);
+        if result.recomputed > 0 {
+            assert!(
+                err_lamp <= err_low + 1e-9,
+                "LAMP should not be worse: lamp={err_lamp} low={err_low}"
+            );
+        }
+    }
+
+    #[test]
+    fn tau_zero_recomputes_all_sensitive() {
+        let f = softmax_fn();
+        let y = vec![2.0f32, 2.0, 2.0];
+        let mask = solve_lamp_greedy(&f, &y, 0.0, Objective::NormwiseL1).unwrap();
+        assert!(mask.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn componentwise_objective_also_converges() {
+        let f = softmax_fn();
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let n = rng.range(2, 8);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 6.0).collect();
+            let mask = solve_lamp_greedy(&f, &y, 0.1, Objective::Componentwise).unwrap();
+            assert!(kappa_c(&f, &y, &mask) <= 0.1 + 1e-9);
+        }
+    }
+}

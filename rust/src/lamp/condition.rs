@@ -1,0 +1,270 @@
+//! Generic LAMP condition functionals (paper §2.3).
+//!
+//! For f: ℝⁿ → ℝᵐ with Jacobian J_f(ŷ):
+//!
+//! ```text
+//!   K(f, ŷ) = J_f(ŷ) · diag(ŷ)
+//!   M(f, ŷ) = diag(f(ŷ))⁻¹ · K(f, ŷ)
+//!   κ_c(q)  = ‖M (I − diag q)‖_{∞,∞}            (componentwise, eq. 3)
+//!   κ_p(q)  = ‖K (I − diag q)‖_{p,p} / ‖f(ŷ)‖_p  (normwise, eq. 4)
+//! ```
+//!
+//! These generic forms back [`super::composition`] (Algorithm 1 for
+//! arbitrary f) and cross-check the closed-form specializations for
+//! softmax / RMS norm / activations in tests.
+
+use crate::linalg::Matrix;
+
+/// A vector-valued function together with an (optionally analytic) Jacobian.
+pub struct VectorFn<'a> {
+    /// f itself.
+    pub f: Box<dyn Fn(&[f32]) -> Vec<f32> + 'a>,
+    /// Analytic Jacobian if available; otherwise a central finite difference
+    /// is used.
+    pub jacobian: Option<Box<dyn Fn(&[f32]) -> Matrix + 'a>>,
+}
+
+impl<'a> VectorFn<'a> {
+    pub fn new(f: impl Fn(&[f32]) -> Vec<f32> + 'a) -> Self {
+        VectorFn { f: Box::new(f), jacobian: None }
+    }
+
+    pub fn with_jacobian(
+        f: impl Fn(&[f32]) -> Vec<f32> + 'a,
+        j: impl Fn(&[f32]) -> Matrix + 'a,
+    ) -> Self {
+        VectorFn { f: Box::new(f), jacobian: Some(Box::new(j)) }
+    }
+
+    pub fn eval(&self, y: &[f32]) -> Vec<f32> {
+        (self.f)(y)
+    }
+
+    /// Jacobian at `y` (analytic if provided, else central differences with
+    /// per-coordinate step h·max(1, |y_i|)).
+    pub fn jac(&self, y: &[f32]) -> Matrix {
+        if let Some(j) = &self.jacobian {
+            return j(y);
+        }
+        numeric_jacobian(&self.f, y, 1e-3)
+    }
+}
+
+/// Central-difference Jacobian.
+pub fn numeric_jacobian(f: &dyn Fn(&[f32]) -> Vec<f32>, y: &[f32], h_rel: f32) -> Matrix {
+    let n = y.len();
+    let fy = f(y);
+    let m = fy.len();
+    let mut jac = Matrix::zeros(m, n);
+    let mut yp = y.to_vec();
+    for j in 0..n {
+        let h = h_rel * y[j].abs().max(1.0);
+        yp[j] = y[j] + h;
+        let fp = f(&yp);
+        yp[j] = y[j] - h;
+        let fm = f(&yp);
+        yp[j] = y[j];
+        for i in 0..m {
+            jac.set(i, j, (fp[i] - fm[i]) / (2.0 * h));
+        }
+    }
+    jac
+}
+
+/// K(f, ŷ) = J_f(ŷ)·diag(ŷ).
+pub fn k_matrix(func: &VectorFn, y: &[f32]) -> Matrix {
+    let mut j = func.jac(y);
+    for r in 0..j.rows() {
+        for c in 0..j.cols() {
+            j.set(r, c, j.get(r, c) * y[c]);
+        }
+    }
+    j
+}
+
+/// M(f, ŷ) = diag(f(ŷ))⁻¹·K(f, ŷ). Rows with f(ŷ)_i = 0 are treated as
+/// +∞-sensitive unless the whole row of K is zero.
+pub fn m_matrix(func: &VectorFn, y: &[f32]) -> Matrix {
+    let fy = func.eval(y);
+    let mut k = k_matrix(func, y);
+    for r in 0..k.rows() {
+        let d = fy[r];
+        for c in 0..k.cols() {
+            let v = k.get(r, c);
+            let scaled = if d != 0.0 {
+                v / d
+            } else if v == 0.0 {
+                0.0
+            } else {
+                f32::INFINITY
+            };
+            k.set(r, c, scaled);
+        }
+    }
+    k
+}
+
+/// ‖A (I − diag q)‖_{∞,∞}: max absolute row sum over unselected columns.
+pub fn inf_norm_unselected(a: &Matrix, mask: &[bool]) -> f64 {
+    assert_eq!(a.cols(), mask.len());
+    let mut best = 0.0f64;
+    for r in 0..a.rows() {
+        let mut s = 0.0f64;
+        for c in 0..a.cols() {
+            if !mask[c] {
+                s += a.get(r, c).abs() as f64;
+            }
+        }
+        best = best.max(s);
+    }
+    best
+}
+
+/// ‖A (I − diag q)‖_{1,1}: max absolute column sum over unselected columns.
+pub fn one_norm_unselected(a: &Matrix, mask: &[bool]) -> f64 {
+    assert_eq!(a.cols(), mask.len());
+    let mut best = 0.0f64;
+    for c in 0..a.cols() {
+        if !mask[c] {
+            let mut s = 0.0f64;
+            for r in 0..a.rows() {
+                s += a.get(r, c).abs() as f64;
+            }
+            best = best.max(s);
+        }
+    }
+    best
+}
+
+/// κ_c(f, ŷ; q) — componentwise LAMP objective (eq. 3).
+pub fn kappa_c(func: &VectorFn, y: &[f32], mask: &[bool]) -> f64 {
+    inf_norm_unselected(&m_matrix(func, y), mask)
+}
+
+/// κ₁(f, ŷ; q) — ℓ₁-normwise LAMP objective (eq. 4 with p = 1).
+pub fn kappa_1(func: &VectorFn, y: &[f32], mask: &[bool]) -> f64 {
+    let fy = func.eval(y);
+    let denom: f64 = fy.iter().map(|&v| v.abs() as f64).sum();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    one_norm_unselected(&k_matrix(func, y), mask) / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lamp::softmax::{kappa1_softmax, softmax};
+    use crate::util::Rng;
+
+    fn softmax_fn<'a>() -> VectorFn<'a> {
+        VectorFn::with_jacobian(
+            |y| softmax(y),
+            |y| {
+                let z = softmax(y);
+                let n = z.len();
+                let mut j = Matrix::zeros(n, n);
+                for i in 0..n {
+                    for c in 0..n {
+                        let d = if i == c { z[i] } else { 0.0 };
+                        j.set(i, c, d - z[i] * z[c]);
+                    }
+                }
+                j
+            },
+        )
+    }
+
+    #[test]
+    fn generic_kappa1_matches_closed_form_softmax() {
+        // Prop 3.3 closed form vs the generic K-matrix evaluation.
+        let mut rng = Rng::new(1);
+        let f = softmax_fn();
+        for _ in 0..100 {
+            let n = rng.range(2, 12);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 6.0).collect();
+            let mask: Vec<bool> = (0..n).map(|_| rng.f32() < 0.3).collect();
+            if mask.iter().all(|&b| b) {
+                continue;
+            }
+            let generic = kappa_1(&f, &y, &mask);
+            let closed = kappa1_softmax(&y, &mask) as f64;
+            assert!(
+                (generic - closed).abs() < 1e-4 * (1.0 + closed),
+                "generic={generic} closed={closed} y={y:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn generic_kappa_c_matches_rmsnorm_closed_form() {
+        use crate::lamp::rmsnorm::{kappa_c_rmsnorm, rmsnorm};
+        let mut rng = Rng::new(2);
+        // Analytic Jacobian of √n·y/‖y‖: √n(I − yyᵀ/‖y‖²)/‖y‖.
+        let f = VectorFn::with_jacobian(
+            |y| rmsnorm(y),
+            |y| {
+                let n = y.len();
+                let norm2: f32 = y.iter().map(|&x| x * x).sum();
+                let norm = norm2.sqrt();
+                let sn = (n as f32).sqrt();
+                let mut j = Matrix::zeros(n, n);
+                for i in 0..n {
+                    for c in 0..n {
+                        let eye = if i == c { 1.0 } else { 0.0 };
+                        j.set(i, c, sn * (eye - y[i] * y[c] / norm2) / norm);
+                    }
+                }
+                j
+            },
+        );
+        for _ in 0..100 {
+            let n = rng.range(2, 10);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.3) * 4.0 + 0.2).collect();
+            let mask: Vec<bool> = (0..n).map(|_| rng.f32() < 0.3).collect();
+            if mask.iter().all(|&b| b) {
+                continue;
+            }
+            let generic = kappa_c(&f, &y, &mask);
+            let closed = kappa_c_rmsnorm(&y, &mask);
+            assert!(
+                (generic - closed).abs() < 1e-3 * (1.0 + closed),
+                "generic={generic} closed={closed} y={y:?} mask={mask:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn numeric_jacobian_matches_analytic_softmax() {
+        let mut rng = Rng::new(3);
+        let with_j = softmax_fn();
+        let without_j = VectorFn::new(|y| softmax(y));
+        for _ in 0..20 {
+            let n = rng.range(2, 8);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+            let ja = with_j.jac(&y);
+            let jn = without_j.jac(&y);
+            assert!(ja.max_abs_diff(&jn).unwrap() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn full_selection_gives_zero() {
+        let f = softmax_fn();
+        let y = [1.0f32, -2.0, 0.5];
+        let mask = [true, true, true];
+        assert_eq!(kappa_c(&f, &y, &mask), 0.0);
+        assert_eq!(kappa_1(&f, &y, &mask), 0.0);
+    }
+
+    #[test]
+    fn norms_on_simple_matrix() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, -2.0, 3.0, 4.0]).unwrap();
+        // no selection: inf norm = max(3, 7) = 7; one norm = max(4, 6) = 6
+        assert_eq!(inf_norm_unselected(&a, &[false, false]), 7.0);
+        assert_eq!(one_norm_unselected(&a, &[false, false]), 6.0);
+        // select column 1:
+        assert_eq!(inf_norm_unselected(&a, &[false, true]), 3.0);
+        assert_eq!(one_norm_unselected(&a, &[false, true]), 4.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! Appendix-B counterexample families: greedy heuristics fail for the
+//! *componentwise* softmax LAMP problem.
+//!
+//! The explicit expression (App. B):
+//!
+//! ```text
+//!   κ_c(f, y; q) = Σ_{j∉Ω} z_j|y_j| + max_{i∉Ω} (1 − 2 z_i)|y_i|
+//! ```
+//!
+//! Proposition B.1 builds vectors where the optimal support is the most
+//! *negative* entries (to kill the max-term), which a greedy pick of the
+//! largest u_j = z_j|y_j| (or largest z_j) misses even with `s` extra picks.
+//! Proposition B.2 builds vectors where the optimal support is the largest
+//! entries (to kill the sum-term), which a greedy pick of the largest
+//! v_i = (1−2z_i)|y_i| misses. These constructions motivate the paper's
+//! pivot to the ℓ₁-normwise objective for softmax (§3.3).
+
+use crate::lamp::softmax::softmax;
+
+/// κ_c(f, y; q) for softmax, componentwise objective (App. B formula).
+pub fn kappa_c_softmax(y: &[f32], mask: &[bool]) -> f64 {
+    assert_eq!(y.len(), mask.len());
+    let z = softmax(y);
+    let sum: f64 = y
+        .iter()
+        .zip(&z)
+        .zip(mask)
+        .filter(|(_, &m)| !m)
+        .map(|((&yj, &zj), _)| (zj * yj.abs()) as f64)
+        .sum();
+    let maxv: f64 = y
+        .iter()
+        .zip(&z)
+        .zip(mask)
+        .filter(|(_, &m)| !m)
+        .map(|((&yi, &zi), _)| ((1.0 - 2.0 * zi) * yi.abs()) as f64)
+        .fold(0.0, f64::max);
+    sum + maxv
+}
+
+/// The auxiliary vectors u (u_j = z_j|y_j|) and v (v_i = (1−2z_i)|y_i|).
+pub fn aux_vectors(y: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let z = softmax(y);
+    let u = y.iter().zip(&z).map(|(&yj, &zj)| zj * yj.abs()).collect();
+    let v = y
+        .iter()
+        .zip(&z)
+        .map(|(&yi, &zi)| (1.0 - 2.0 * zi) * yi.abs())
+        .collect();
+    (u, v)
+}
+
+/// Greedy heuristic: select the k indices with the largest values of `score`.
+pub fn greedy_topk(score: &[f32], k: usize) -> Vec<bool> {
+    let mut order: Vec<usize> = (0..score.len()).collect();
+    order.sort_by(|&a, &b| score[b].partial_cmp(&score[a]).unwrap());
+    let mut mask = vec![false; score.len()];
+    for &i in order.iter().take(k) {
+        mask[i] = true;
+    }
+    mask
+}
+
+/// The instance of Proposition B.1: n = 2n₀ + s entries, n₀ at −α and
+/// n₀ + s at −1. Returns (y, τ) such that:
+/// * the optimal support is the n₀ indices at −α with κ_c = τ,
+/// * any q with ‖q‖₀ < n₀ violates τ,
+/// * the greedy top-(n₀+s) picks by u or z violate τ.
+pub struct PropB1 {
+    pub y: Vec<f32>,
+    pub tau: f64,
+    pub n0: usize,
+    pub s: usize,
+    pub alpha: f64,
+}
+
+impl PropB1 {
+    pub fn new(n0: usize, s: usize, alpha: f64) -> Self {
+        assert!(n0 >= 1 && s >= 1 && alpha >= 3.0);
+        let n = 2 * n0 + s;
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            y.push(if i < n0 { -(alpha as f32) } else { -1.0f32 });
+        }
+        // τ = κ_c at the optimal support Ω = {1..n₀}.
+        let opt: Vec<bool> = (0..n).map(|i| i < n0).collect();
+        let tau = kappa_c_softmax(&y, &opt);
+        PropB1 { y, tau, n0, s, alpha }
+    }
+
+    /// The optimal mask (first n₀ entries).
+    pub fn optimal_mask(&self) -> Vec<bool> {
+        (0..self.y.len()).map(|i| i < self.n0).collect()
+    }
+
+    /// The greedy mask by largest u (equivalently largest z here):
+    /// the n₀ + s entries at −1.
+    pub fn greedy_mask(&self) -> Vec<bool> {
+        let (u, _) = aux_vectors(&self.y);
+        greedy_topk(&u, self.n0 + self.s)
+    }
+}
+
+/// The instance of Proposition B.2: n₀ entries at α + log((n₀+s)/n₀) and
+/// n₀ + s entries at α, with α chosen so the greedy-by-v mask (the α group)
+/// exceeds the τ achieved by the optimal mask (the larger group).
+pub struct PropB2 {
+    pub y: Vec<f32>,
+    pub tau: f64,
+    pub n0: usize,
+    pub s: usize,
+}
+
+impl PropB2 {
+    pub fn new(n0: usize, s: usize) -> Self {
+        assert!(n0 >= 2 && s >= 1);
+        let n = 2 * n0 + s;
+        let ratio = ((n0 + s) as f64 / n0 as f64).ln();
+        let alpha = ((n0 + s) as f64 * (5.0 * n0 as f64 - 4.0)) / (4.0 * s as f64) * ratio;
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            y.push(if i < n0 {
+                (alpha + ratio) as f32
+            } else {
+                alpha as f32
+            });
+        }
+        let opt: Vec<bool> = (0..n).map(|i| i < n0).collect();
+        let tau = kappa_c_softmax(&y, &opt);
+        PropB2 { y, tau, n0, s }
+    }
+
+    pub fn optimal_mask(&self) -> Vec<bool> {
+        (0..self.y.len()).map(|i| i < self.n0).collect()
+    }
+
+    /// Greedy mask by largest v: the n₀ + s entries in the α group.
+    pub fn greedy_mask(&self) -> Vec<bool> {
+        let (_, v) = aux_vectors(&self.y);
+        greedy_topk(&v, self.n0 + self.s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn b1_optimal_satisfies_and_greedy_fails() {
+        for (n0, s) in [(3usize, 2usize), (5, 3), (8, 1), (4, 8)] {
+            let inst = PropB1::new(n0, s, 4.0);
+            let opt = inst.optimal_mask();
+            assert!(
+                kappa_c_softmax(&inst.y, &opt) <= inst.tau + 1e-12,
+                "optimal violates its own tau"
+            );
+            // Greedy picks n0+s indices — MORE than the optimum — yet fails.
+            let greedy = inst.greedy_mask();
+            assert_eq!(greedy.iter().filter(|&&b| b).count(), n0 + s);
+            assert!(
+                kappa_c_softmax(&inst.y, &greedy) > inst.tau,
+                "greedy unexpectedly satisfied tau (n0={n0} s={s})"
+            );
+        }
+    }
+
+    #[test]
+    fn b1_no_smaller_support_works() {
+        // Any mask with fewer than n₀ selections leaves an −α entry
+        // unselected and κ_c > 2 > τ.
+        let inst = PropB1::new(4, 2, 4.0);
+        assert!(inst.tau < 2.0);
+        let n = inst.y.len();
+        // Leave one of the first n₀ out, select everything else possible at
+        // size n₀ − 1: still must fail. (Spot-check a few configurations.)
+        for skip in 0..inst.n0 {
+            let mut mask = vec![false; n];
+            let mut cnt = 0;
+            for i in 0..inst.n0 {
+                if i != skip && cnt < inst.n0 - 1 {
+                    mask[i] = true;
+                    cnt += 1;
+                }
+            }
+            assert!(kappa_c_softmax(&inst.y, &mask) > 2.0);
+        }
+    }
+
+    #[test]
+    fn b2_optimal_satisfies_and_greedy_fails() {
+        for (n0, s) in [(3usize, 2usize), (4, 4), (6, 1)] {
+            let inst = PropB2::new(n0, s);
+            let opt = inst.optimal_mask();
+            assert!(kappa_c_softmax(&inst.y, &opt) <= inst.tau + 1e-6);
+            let greedy = inst.greedy_mask();
+            assert_eq!(greedy.iter().filter(|&&b| b).count(), n0 + s);
+            assert!(
+                kappa_c_softmax(&inst.y, &greedy) > inst.tau,
+                "greedy-by-v unexpectedly satisfied tau (n0={n0} s={s})"
+            );
+        }
+    }
+
+    #[test]
+    fn b2_z_values_match_construction() {
+        // z should be 1/(2n₀) for the first group, 1/(2(n₀+s)) for the rest.
+        let inst = PropB2::new(4, 3);
+        let z = softmax(&inst.y);
+        for i in 0..4 {
+            assert!((z[i] - 1.0 / 8.0).abs() < 1e-5, "z[{i}]={}", z[i]);
+        }
+        for i in 4..11 {
+            assert!((z[i] - 1.0 / 14.0).abs() < 1e-5, "z[{i}]={}", z[i]);
+        }
+    }
+
+    #[test]
+    fn kappa_c_formula_consistency() {
+        // The App. B formula must agree with the generic condition module.
+        use crate::lamp::condition::{kappa_c, VectorFn};
+        use crate::linalg::Matrix;
+        use crate::util::Rng;
+        let mut rng = Rng::new(1);
+        let f = VectorFn::with_jacobian(
+            |y| softmax(y),
+            |y| {
+                let z = softmax(y);
+                let n = z.len();
+                let mut j = Matrix::zeros(n, n);
+                for i in 0..n {
+                    for c in 0..n {
+                        let d = if i == c { z[i] } else { 0.0 };
+                        j.set(i, c, d - z[i] * z[c]);
+                    }
+                }
+                j
+            },
+        );
+        for _ in 0..50 {
+            let n = rng.range(2, 10);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 6.0).collect();
+            let mask: Vec<bool> = (0..n).map(|_| rng.f32() < 0.3).collect();
+            let a = kappa_c_softmax(&y, &mask);
+            let b = kappa_c(&f, &y, &mask);
+            assert!((a - b).abs() < 1e-4 * (1.0 + a), "a={a} b={b}");
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! The LAMP (Look-Ahead Mixed-Precision) selection machinery — the paper's
+//! primary contribution.
+//!
+//! Given the low-precision output ŷ of an inner function g and the ensuing
+//! nonlinearity f, LAMP solves
+//!
+//! ```text
+//!   ‖q‖₀ → min   s.t.   κ(f, ŷ; q) ≤ τ          (paper eq. 5)
+//! ```
+//!
+//! for a sparse binary selection vector q, and recomputes the flagged
+//! components of ŷ more accurately. The paper proves closed-form solutions
+//! for the elementary transformer nonlinearities:
+//!
+//! * [`softmax`] — ℓ₁-normwise LAMP for softmax: strict rule (eq. 8),
+//!   relaxed relative-threshold rule (eq. 9), length-normalized variant
+//!   (App. C.5), and the random baseline (App. C.4).
+//! * [`activation`] — componentwise LAMP for entrywise activations (§3.1):
+//!   diagonal M, immediate thresholding.
+//! * [`rmsnorm`] — componentwise LAMP for RMS layer normalization (§3.2):
+//!   exact κ_c (Prop 3.1) and the greedy sorted-prefix solver (Prop 3.2).
+//! * [`condition`] — the generic condition functionals κ_c (eq. 3) and
+//!   κ_p (eq. 4) for arbitrary Jacobians, plus numeric Jacobians.
+//! * [`composition`] — Algorithm 1: generic LAMP evaluation of f(g(x)).
+//! * [`counterexamples`] — the Appendix-B families proving greedy
+//!   heuristics fail for the componentwise softmax problem.
+
+pub mod activation;
+pub mod composition;
+pub mod condition;
+pub mod counterexamples;
+pub mod rmsnorm;
+pub mod softmax;
+
+pub use softmax::{select_softmax, SoftmaxRule};

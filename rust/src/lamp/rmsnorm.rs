@@ -1,0 +1,244 @@
+//! Componentwise LAMP for RMS layer normalization (paper §3.2).
+//!
+//! f(y) = √n · y / ‖y‖₂. Proposition 3.1 gives the exact condition value
+//! for any selection support Ω:
+//!
+//! ```text
+//!   κ_c = 2(1 − min_{j∉Ω} y_j²/‖y‖²) − Σ_{i∈Ω} y_i²/‖y‖²     (|Ω| ≤ n−2)
+//!   κ_c = max{ y_j²/‖y‖², 1 − y_j²/‖y‖² }                     (Ω^c = {j})
+//! ```
+//!
+//! Proposition 3.2 shows a greedy sorted-prefix solution is within one index
+//! of optimal: sort by y_i² descending and take the smallest prefix s with
+//! `Σ_{i≤s} y_i² + 2 y_min² ≥ (2 − τ)‖y‖²`.
+
+/// RMS layer normalization: √n · y / ‖y‖₂ (returns y when ‖y‖ = 0).
+pub fn rmsnorm(y: &[f32]) -> Vec<f32> {
+    let n = y.len();
+    let norm = (y.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt();
+    if norm == 0.0 {
+        return y.to_vec();
+    }
+    let scale = (n as f64).sqrt() / norm;
+    y.iter().map(|&x| (x as f64 * scale) as f32).collect()
+}
+
+/// Exact κ_c(f, y; q) for RMS norm per Proposition 3.1.
+///
+/// `mask[i] == true` means i ∈ Ω (selected for accurate recomputation).
+/// Precondition: mask ≠ all-true (Prop 3.1 requires q ≠ 1); returns 0.0 in
+/// that degenerate case (everything recomputed accurately).
+pub fn kappa_c_rmsnorm(y: &[f32], mask: &[bool]) -> f64 {
+    assert_eq!(y.len(), mask.len());
+    let n = y.len();
+    let norm2: f64 = y.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    if norm2 == 0.0 {
+        return 0.0;
+    }
+    let unselected: Vec<usize> = (0..n).filter(|&i| !mask[i]).collect();
+    if unselected.is_empty() {
+        return 0.0;
+    }
+    let sum_omega: f64 = (0..n)
+        .filter(|&i| mask[i])
+        .map(|i| (y[i] as f64) * (y[i] as f64))
+        .sum();
+    if unselected.len() == 1 {
+        let j = unselected[0];
+        let r = (y[j] as f64) * (y[j] as f64) / norm2;
+        r.max(1.0 - r)
+    } else {
+        let min_unsel: f64 = unselected
+            .iter()
+            .map(|&j| (y[j] as f64) * (y[j] as f64))
+            .fold(f64::INFINITY, f64::min);
+        2.0 * (1.0 - min_unsel / norm2) - sum_omega / norm2
+    }
+}
+
+/// Greedy closed-form LAMP solution for RMS norm (Prop 3.2).
+///
+/// Sorts indices by y_i² descending and returns the mask of the smallest
+/// prefix s satisfying `Σ_{i≤s} y_i² + 2·y_min² ≥ (2 − τ)·‖y‖²`; the
+/// all-but-one selection is used if no such prefix with |Ω| ≤ n−2 exists and
+/// the single-left-out formula admits it, otherwise all-true.
+pub fn select_rmsnorm(y: &[f32], tau: f64) -> Vec<bool> {
+    let n = y.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let norm2: f64 = y.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let mut mask = vec![false; n];
+    if norm2 == 0.0 {
+        return mask; // exactly zero vector: output is y, perfectly stable
+    }
+    // Empty selection may already satisfy the constraint.
+    if kappa_c_rmsnorm(y, &mask) <= tau {
+        return mask;
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let qa = (y[a] as f64) * (y[a] as f64);
+        let qb = (y[b] as f64) * (y[b] as f64);
+        qb.partial_cmp(&qa).unwrap()
+    });
+    let ymin2 = order
+        .last()
+        .map(|&i| (y[i] as f64) * (y[i] as f64))
+        .unwrap();
+    let target = (2.0 - tau) * norm2;
+    let mut prefix = 0.0f64;
+    for (s, &idx) in order.iter().enumerate() {
+        // Prefixes up to n−2 are covered by the greedy criterion.
+        if s + 1 <= n.saturating_sub(2) {
+            prefix += (y[idx] as f64) * (y[idx] as f64);
+            mask[idx] = true;
+            if prefix + 2.0 * ymin2 >= target {
+                return mask;
+            }
+        } else {
+            break;
+        }
+    }
+    // |Ω| = n−1: leave out only the smallest-square index.
+    let mut mask = vec![true; n];
+    let last = *order.last().unwrap();
+    mask[last] = false;
+    if kappa_c_rmsnorm(y, &mask) <= tau {
+        return mask;
+    }
+    vec![true; n]
+}
+
+/// Brute-force optimal solution by exhaustive search (for tests; O(2ⁿ)).
+pub fn select_rmsnorm_bruteforce(y: &[f32], tau: f64) -> Vec<bool> {
+    let n = y.len();
+    assert!(n <= 16, "brute force limited to n<=16");
+    let mut best: Option<Vec<bool>> = None;
+    for bits in 0..(1u32 << n) {
+        let mask: Vec<bool> = (0..n).map(|i| bits >> i & 1 == 1).collect();
+        if kappa_c_rmsnorm(y, &mask) <= tau {
+            let count = mask.iter().filter(|&&b| b).count();
+            if best
+                .as_ref()
+                .map(|b| count < b.iter().filter(|&&x| x).count())
+                .unwrap_or(true)
+            {
+                best = Some(mask);
+            }
+        }
+    }
+    best.unwrap_or_else(|| vec![true; n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn rmsnorm_unit_norm() {
+        let y = [3.0f32, 4.0];
+        let z = rmsnorm(&y);
+        let norm: f64 = z.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((norm - (2.0f64).sqrt()).abs() < 1e-6); // ‖f(y)‖ = √n
+    }
+
+    #[test]
+    fn rmsnorm_zero_vector() {
+        assert_eq!(rmsnorm(&[0.0, 0.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn kappa_empty_selection_is_condition_number() {
+        // q = 0 gives the componentwise condition number of f; for a
+        // spread-out vector it approaches 2·(1 − 1/n) − 0 ≈ 2.
+        let y = vec![1.0f32; 8];
+        let mask = vec![false; 8];
+        let k = kappa_c_rmsnorm(&y, &mask);
+        assert!((k - 2.0 * (1.0 - 1.0 / 8.0)).abs() < 1e-9, "k={k}");
+    }
+
+    #[test]
+    fn kappa_full_selection_is_zero() {
+        let y = [1.0f32, 2.0, 3.0];
+        assert_eq!(kappa_c_rmsnorm(&y, &[true, true, true]), 0.0);
+    }
+
+    #[test]
+    fn greedy_satisfies_constraint() {
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let n = rng.range(1, 40);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 10.0).collect();
+            let tau = rng.f64() * 2.0;
+            let mask = select_rmsnorm(&y, tau);
+            assert!(
+                kappa_c_rmsnorm(&y, &mask) <= tau + 1e-12,
+                "constraint violated: n={n} tau={tau}"
+            );
+        }
+    }
+
+    #[test]
+    fn greedy_within_one_of_bruteforce() {
+        // Prop 3.2: ‖q'‖₀ ≤ ‖q*‖₀ + 1 (when the optimum has ≤ n−3 indices;
+        // we assert the general ±1 bound on small random instances).
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let n = rng.range(2, 11);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 6.0).collect();
+            let tau = 0.05 + rng.f64() * 1.5;
+            let greedy = select_rmsnorm(&y, tau).iter().filter(|&&b| b).count();
+            let optimal = select_rmsnorm_bruteforce(&y, tau)
+                .iter()
+                .filter(|&&b| b)
+                .count();
+            assert!(
+                greedy <= optimal + 1,
+                "greedy={greedy} optimal={optimal} y={y:?} tau={tau}"
+            );
+        }
+    }
+
+    #[test]
+    fn massive_outlier_needs_one_recompute() {
+        // Paper: "s = 1 when y₁² = 1 and y₂ = ... = yₙ = 0". The greedy
+        // criterion Σ_{i≤s} y_i² + 2y_n² ≥ (2−τ)‖y‖² with prefix 1.0 needs
+        // τ ≥ 1 — massive outliers admit tiny supports for moderate τ.
+        // Use near-zeros to avoid the degenerate all-zero tail.
+        let mut y = vec![1e-6f32; 16];
+        y[7] = 1.0;
+        let mask = select_rmsnorm(&y, 1.2);
+        let count = mask.iter().filter(|&&b| b).count();
+        assert!(count <= 2, "outlier vector should need ≤2: {count}");
+        assert!(mask[7], "the outlier itself must be selected");
+    }
+
+    #[test]
+    fn spread_vector_needs_many_recomputes() {
+        // Paper: y₁²=...=y_{n−1}²=1, yₙ=0 ⇒ s = ⌈(2−τ)(n−1)⌉ — nearly all.
+        let n = 20;
+        let mut y = vec![1.0f32; n];
+        y[n - 1] = 0.0;
+        let mask = select_rmsnorm(&y, 0.5);
+        let count = mask.iter().filter(|&&b| b).count();
+        assert!(count >= n - 3, "spread vector should need nearly all: {count}");
+    }
+
+    #[test]
+    fn tau_ge_condition_number_selects_nothing() {
+        let y = [1.0f32, 2.0, -1.5, 0.25];
+        let mask = select_rmsnorm(&y, 2.0);
+        assert!(mask.iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(select_rmsnorm(&[], 0.1).is_empty());
+        let m = select_rmsnorm(&[2.0], 0.1);
+        // n=1: f(y) = √1·y/|y| = ±1, stable; κ_c with Ω=∅ is the n−1 = 0
+        // unselected-singleton formula: max{1, 0} = 1 > 0.1 → selected.
+        assert_eq!(m.len(), 1);
+    }
+}

@@ -1,0 +1,327 @@
+//! LAMP selection rules for softmax (paper §3.3, §4.4, App. C.5, C.4).
+//!
+//! Softmax probabilities z = softmax(y) have the ℓ₁-normwise LAMP condition
+//! (Prop 3.3):
+//!
+//! ```text
+//!   κ₁(f, y; q) = 2 · max_{j ∉ Ω} z_j (1 − z_j) |y_j|
+//! ```
+//!
+//! so the optimal ("strict") solution of eq. (5) flags exactly the indices
+//! with `2 z_j (1 − z_j) |y_j| > τ` (eq. 8). The relaxed relative-threshold
+//! rule (eq. 9) drops the (1 − z_j) factor and the normalization constant:
+//! `|y_j| e^{y_j} > τ max_i |y_i| e^{y_i}` — computable in one pass without
+//! materializing z, the stepping stone towards FlashAttention integration.
+
+use crate::util::Rng;
+
+/// Which LAMP selection rule to apply to a softmax row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SoftmaxRule {
+    /// Strict optimal rule, eq. (8): `2 z_j (1 − z_j) |y_j| > τ`.
+    Strict,
+    /// Relaxed relative-threshold rule, eq. (9):
+    /// `|y_j| e^{y_j} > τ · max_i |y_i| e^{y_i}`, with 0 ≤ τ < 1.
+    Relaxed,
+    /// Relaxed rule with length-normalized threshold τ√(ref_len/n)
+    /// (App. C.5). `ref_len` is the model's training context (paper: 1024).
+    RelaxedLengthNorm { ref_len: usize },
+    /// Baseline: same *count* as Strict at this τ, positions chosen
+    /// uniformly at random (App. C.4).
+    Random,
+}
+
+/// Numerically stable softmax (subtract-max), FP32.
+pub fn softmax(y: &[f32]) -> Vec<f32> {
+    if y.is_empty() {
+        return Vec::new();
+    }
+    let m = y.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = y.iter().map(|&v| (v - m).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+/// The strict LAMP sensitivity of entry j: `2 z_j (1 − z_j) |y_j|`.
+#[inline]
+pub fn strict_sensitivity(zj: f32, yj: f32) -> f32 {
+    2.0 * zj * (1.0 - zj) * yj.abs()
+}
+
+/// κ₁(f, y; q) for softmax (Prop 3.3): `2 max_{j∉Ω} z_j(1−z_j)|y_j|`.
+///
+/// `selected[j] == true` means j ∈ Ω (recomputed, hence excluded from the
+/// max). Returns 0 when every index is selected.
+pub fn kappa1_softmax(y: &[f32], selected: &[bool]) -> f32 {
+    assert_eq!(y.len(), selected.len());
+    let z = softmax(y);
+    let mut k = 0.0f32;
+    for j in 0..y.len() {
+        if !selected[j] {
+            k = k.max(strict_sensitivity(z[j], y[j]));
+        }
+    }
+    k
+}
+
+/// Apply the strict rule (eq. 8) to one softmax row.
+///
+/// Returns the selection mask. `y` is the softmax *input* (the scaled KQ
+/// scores). The computed ŷ values are used for both z and |y|, as the paper
+/// prescribes (exact values are unknown at run time).
+pub fn select_strict(y: &[f32], tau: f32) -> Vec<bool> {
+    let z = softmax(y);
+    y.iter()
+        .zip(&z)
+        .map(|(&yj, &zj)| strict_sensitivity(zj, yj) > tau)
+        .collect()
+}
+
+/// Apply the relaxed relative-threshold rule (eq. 9) to one softmax row.
+///
+/// Computed with the shift `y_j − max_i y_i` inside the exponential so the
+/// comparison is overflow-free and — crucially — independent of the softmax
+/// normalization constant:
+/// `|y_j| e^{y_j − m} > τ · max_i |y_i| e^{y_i − m}`.
+pub fn select_relaxed(y: &[f32], tau: f32) -> Vec<bool> {
+    if y.is_empty() {
+        return Vec::new();
+    }
+    let m = y.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let w: Vec<f32> = y.iter().map(|&v| v.abs() * (v - m).exp()).collect();
+    let wmax = w.iter().copied().fold(0.0f32, f32::max);
+    let cut = tau * wmax;
+    w.iter().map(|&wj| wj > cut).collect()
+}
+
+/// Length-normalized relaxed rule (App. C.5): τ ← τ·√(ref_len/n) where n is
+/// the row length (position in the causal mask).
+pub fn select_relaxed_ln(y: &[f32], tau: f32, ref_len: usize) -> Vec<bool> {
+    let n = y.len().max(1);
+    let scaled = tau * ((ref_len as f32 / n as f32).sqrt());
+    // Relative thresholds only make sense in [0, 1); saturate.
+    select_relaxed(y, scaled.min(1.0))
+}
+
+/// Random baseline (App. C.4): flags exactly as many entries as
+/// [`select_strict`] would at this τ, at uniformly random positions.
+pub fn select_random(y: &[f32], tau: f32, rng: &mut Rng) -> Vec<bool> {
+    let count = select_strict(y, tau).iter().filter(|&&b| b).count();
+    let mut mask = vec![false; y.len()];
+    for i in rng.sample_indices(y.len(), count) {
+        mask[i] = true;
+    }
+    mask
+}
+
+/// Dispatch on [`SoftmaxRule`].
+pub fn select_softmax(y: &[f32], tau: f32, rule: SoftmaxRule, rng: &mut Rng) -> Vec<bool> {
+    match rule {
+        SoftmaxRule::Strict => select_strict(y, tau),
+        SoftmaxRule::Relaxed => select_relaxed(y, tau),
+        SoftmaxRule::RelaxedLengthNorm { ref_len } => select_relaxed_ln(y, tau, ref_len),
+        SoftmaxRule::Random => select_random(y, tau, rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_normalizes() {
+        let z = softmax(&[1.0, 2.0, 3.0]);
+        let s: f32 = z.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(z[2] > z[1] && z[1] > z[0]);
+    }
+
+    #[test]
+    fn softmax_shift_invariant() {
+        let a = softmax(&[1.0, 2.0, 3.0]);
+        let b = softmax(&[101.0, 102.0, 103.0]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_extreme_inputs_stable() {
+        let z = softmax(&[1000.0, -1000.0]);
+        assert!((z[0] - 1.0).abs() < 1e-6);
+        assert!(z[1] >= 0.0 && z.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn strict_satisfies_kappa_bound() {
+        // The defining property: after selection, κ₁ ≤ τ.
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let n = rng.range(1, 64);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 20.0).collect();
+            let tau = rng.f32() * 0.5;
+            let mask = select_strict(&y, tau);
+            assert!(
+                kappa1_softmax(&y, &mask) <= tau,
+                "kappa exceeded tau={tau} y={y:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn strict_is_minimal() {
+        // Unselecting any flagged index must violate the constraint:
+        // the strict rule is the exact minimizer (thresholding the max).
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let n = rng.range(2, 32);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 10.0).collect();
+            let tau = 0.05 + rng.f32() * 0.2;
+            let mask = select_strict(&y, tau);
+            for j in 0..n {
+                if mask[j] {
+                    let mut weaker = mask.clone();
+                    weaker[j] = false;
+                    assert!(
+                        kappa1_softmax(&y, &weaker) > tau,
+                        "index {j} was unnecessary"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn concentrated_distribution_needs_no_recompute() {
+        // Paper: "For an extremely concentrated distribution where z is
+        // close to a standard basis vector, no recomputations are needed."
+        let mut y = vec![-30.0f32; 16];
+        y[3] = 30.0;
+        let mask = select_strict(&y, 0.1);
+        assert!(mask.iter().all(|&b| !b), "mask={mask:?}");
+    }
+
+    #[test]
+    fn confused_head_needs_recompute() {
+        // Multiple equally probable outcomes with large |y| are sensitive.
+        let y = vec![8.0f32, 8.0, 8.0, 8.0];
+        let mask = select_strict(&y, 0.1);
+        assert!(mask.iter().all(|&b| b), "mask={mask:?}");
+    }
+
+    #[test]
+    fn tau_zero_selects_everything_nonzero() {
+        let y = vec![1.0f32, -2.0, 3.0];
+        let mask = select_strict(&y, 0.0);
+        assert_eq!(mask, vec![true, true, true]);
+    }
+
+    #[test]
+    fn tau_infinite_selects_nothing() {
+        let y = vec![5.0f32, -5.0, 2.0];
+        assert!(select_strict(&y, f32::INFINITY).iter().all(|&b| !b));
+        assert!(select_relaxed(&y, 1.0).iter().all(|&b| !b)); // τ=1: nothing strictly above max
+    }
+
+    #[test]
+    fn relaxed_normalization_free() {
+        // Shifting y shifts both sides identically: the mask is invariant
+        // (this is the FlashAttention-compat property §4.4).
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let n = rng.range(1, 32);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 12.0).collect();
+            let tau = rng.f32() * 0.9;
+            let m1 = select_relaxed(&y, tau);
+            // NB: |y_j| changes under shift, so eq. (9) is *not* exactly
+            // shift invariant — but it needs no sum. Here we verify it
+            // agrees with the unshifted direct evaluation instead.
+            let m = y.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let direct: Vec<bool> = {
+                let w: Vec<f32> = y.iter().map(|&v| v.abs() * (v - m).exp()).collect();
+                let wmax = w.iter().copied().fold(0.0f32, f32::max);
+                w.iter().map(|&x| x > tau * wmax).collect()
+            };
+            assert_eq!(m1, direct);
+        }
+    }
+
+    #[test]
+    fn relaxed_close_to_strict_on_moderate_rows() {
+        // §4.4: relaxed LAMP is almost-optimal — on rows without dominant
+        // z≈1 tokens it should select a superset-ish mask of comparable size.
+        let mut rng = Rng::new(4);
+        let mut total_strict = 0usize;
+        let mut total_relaxed = 0usize;
+        for _ in 0..300 {
+            let n = 32;
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+            total_strict += select_strict(&y, 0.1).iter().filter(|&&b| b).count();
+            total_relaxed += select_relaxed(&y, 0.1).iter().filter(|&&b| b).count();
+        }
+        let ratio = total_relaxed as f64 / total_strict.max(1) as f64;
+        assert!(ratio > 0.3 && ratio < 10.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn length_norm_raises_threshold_for_short_rows() {
+        let mut rng = Rng::new(5);
+        let y: Vec<f32> = (0..16).map(|_| (rng.f32() - 0.5) * 6.0).collect();
+        let base = select_relaxed(&y, 0.1);
+        let ln = select_relaxed_ln(&y, 0.1, 1024); // τ·√(1024/16) = 0.8
+        let nb = base.iter().filter(|&&b| b).count();
+        let nl = ln.iter().filter(|&&b| b).count();
+        assert!(nl <= nb, "ln should not select more on short rows: {nl} vs {nb}");
+    }
+
+    #[test]
+    fn random_matches_strict_count() {
+        let mut rng = Rng::new(6);
+        for _ in 0..100 {
+            let n = rng.range(1, 64);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 10.0).collect();
+            let tau = rng.f32() * 0.3;
+            let ns = select_strict(&y, tau).iter().filter(|&&b| b).count();
+            let nr = select_random(&y, tau, &mut rng).iter().filter(|&&b| b).count();
+            assert_eq!(ns, nr);
+        }
+    }
+
+    #[test]
+    fn empty_row() {
+        let mut rng = Rng::new(7);
+        assert!(select_strict(&[], 0.1).is_empty());
+        assert!(select_relaxed(&[], 0.1).is_empty());
+        assert!(select_random(&[], 0.1, &mut rng).is_empty());
+        assert_eq!(kappa1_softmax(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn single_element_row_is_stable() {
+        // z = [1]: sensitivity 2·1·0·|y| = 0 → never selected by strict.
+        let mask = select_strict(&[42.0], 1e-9);
+        assert_eq!(mask, vec![false]);
+    }
+
+    #[test]
+    fn monotone_in_tau() {
+        // Larger τ ⇒ subset selection.
+        let mut rng = Rng::new(8);
+        for _ in 0..200 {
+            let n = rng.range(1, 48);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 8.0).collect();
+            let t1 = rng.f32() * 0.2;
+            let t2 = t1 + rng.f32() * 0.3;
+            for (rule1, rule2) in [
+                (select_strict(&y, t1), select_strict(&y, t2)),
+                (select_relaxed(&y, t1), select_relaxed(&y, t2)),
+            ] {
+                for j in 0..n {
+                    if rule2[j] {
+                        assert!(rule1[j], "selection not monotone in tau");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! # LAMP — Look-Ahead Mixed-Precision Inference of Large Language Models
+//!
+//! Full-system reproduction of Budzinskiy et al., *LAMP: Look-Ahead
+//! Mixed-Precision Inference of Large Language Models* (2026), as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (build-time Python, `python/compile/kernels/`):
+//!   PS(μ) rounding, PS(μ)-accumulated matmul, LAMP attention.
+//! * **L2** — JAX GPT-2 forward pass lowered to HLO text artifacts.
+//! * **L3** — this crate: the serving coordinator, the PJRT runtime that
+//!   loads and executes the artifacts, a bit-exact native reference engine,
+//!   synthetic-corpus generators, metrics, and the experiment harness that
+//!   regenerates every figure and table of the paper.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index and
+//! `EXPERIMENTS.md` for measured results.
+//!
+//! ## Quick tour
+//!
+//! * [`softfloat`] — the PS(μ) custom floating-point format of paper §4.1
+//!   (μ mantissa bits, 8 exponent bits, RNE) and mixed-precision dot
+//!   products with per-step rounding.
+//! * [`lamp`] — the look-ahead mixed-precision selection rules: strict
+//!   softmax LAMP (eq. 8), relaxed relative-threshold LAMP (eq. 9),
+//!   length-normalized LAMP (App. C.5), componentwise LAMP for activations
+//!   (§3.1) and RMS-norm (§3.2), the generic Algorithm 1, and the
+//!   Appendix-B counterexamples.
+//! * [`model`] — a GPT-2-architecture transformer with PS(μ)-accumulated KQ
+//!   inner products and LAMP recomputation, fully instrumented.
+//! * [`runtime`] — PJRT wrapper: load `artifacts/*.hlo.txt`, compile once,
+//!   execute from the request path.
+//! * [`coordinator`] — request router, dynamic batcher, precision-policy
+//!   router, engine pool, serving loop.
+//! * [`experiments`] — drivers for Figures 1–7 and Table 1.
+
+pub mod benchkit;
+pub mod check;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod lamp;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod softfloat;
+pub mod tensorio;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,272 @@
+//! Matrix multiplication under FP32 and PS(μ) accumulation, plus masked
+//! FP32 recomputation — the LAMP primitive: recompute only the inner
+//! products flagged by the selection rule.
+
+use super::tensor::Matrix;
+use crate::error::{Error, Result};
+use crate::softfloat::dot::{dot_f32, dot_ps};
+
+fn check(a: &Matrix, b: &Matrix) -> Result<()> {
+    if a.cols() != b.rows() {
+        return Err(Error::shape(format!(
+            "matmul: {:?} x {:?}",
+            a.shape(),
+            b.shape()
+        )));
+    }
+    Ok(())
+}
+
+/// C = A·B with FP32 accumulation (sequential order, matching `matmul_ps`
+/// at μ=23 bit-for-bit).
+pub fn matmul_f32(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    check(a, b)?;
+    let bt = b.transpose();
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        let arow = a.row(i);
+        for j in 0..b.cols() {
+            c.set(i, j, dot_f32(arow, bt.row(j)));
+        }
+    }
+    Ok(c)
+}
+
+/// C = A·B with per-step PS(μ) rounding of the accumulator (paper §4.1).
+pub fn matmul_ps(a: &Matrix, b: &Matrix, mu: u32) -> Result<Matrix> {
+    check(a, b)?;
+    let bt = b.transpose();
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        let arow = a.row(i);
+        for j in 0..b.cols() {
+            c.set(i, j, dot_ps(arow, bt.row(j), mu));
+        }
+    }
+    Ok(c)
+}
+
+/// Recompute in FP32 the entries of `c` flagged by `mask` (true = recompute)
+/// and return the number of recomputed entries.
+///
+/// This is the mixed-precision accumulation step of LAMP: the matrix is
+/// split into the low-precision block and the flagged block, each computed
+/// with its own accumulation algorithm (paper §3, matrix-product property).
+pub fn recompute_masked(
+    c: &mut Matrix,
+    a: &Matrix,
+    b: &Matrix,
+    mask: &[bool],
+) -> Result<usize> {
+    check(a, b)?;
+    if c.shape() != (a.rows(), b.cols()) || mask.len() != a.rows() * b.cols() {
+        return Err(Error::shape("recompute_masked: output/mask shape".to_string()));
+    }
+    let bt = b.transpose();
+    let mut n = 0;
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            if mask[i * b.cols() + j] {
+                c.set(i, j, dot_f32(a.row(i), bt.row(j)));
+                n += 1;
+            }
+        }
+    }
+    Ok(n)
+}
+
+/// Throughput-oriented FP32 matmul: `C = X·W + b` with X: [m, k] and W
+/// *already row-major [k, n]* (no transpose needed), i–k–j loop order so
+/// the inner loop vectorizes across output columns.
+///
+/// Used on the FP32 parts of the model (QKV/proj/MLP/logits) where exact
+/// accumulation order is not part of the simulated-arithmetic contract —
+/// the PS(μ) score path stays on the sequential-FMA [`crate::softfloat::dot::dot_ps`].
+/// ~an order of magnitude faster than per-dot sequential FMA chains
+/// (latency-bound) at these sizes; see EXPERIMENTS.md §Perf.
+pub fn matmul_bias_fast(x: &Matrix, w: &Matrix, bias: &[f32]) -> Result<Matrix> {
+    if x.cols() != w.rows() {
+        return Err(Error::shape(format!(
+            "matmul_bias_fast: {:?} x {:?}",
+            x.shape(),
+            w.shape()
+        )));
+    }
+    let (m, k) = x.shape();
+    let n = w.cols();
+    if !bias.is_empty() && bias.len() != n {
+        return Err(Error::shape(format!(
+            "matmul_bias_fast: bias {} != n {n}",
+            bias.len()
+        )));
+    }
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let xi = x.row(i);
+        let ci = c.row_mut(i);
+        if !bias.is_empty() {
+            ci.copy_from_slice(bias);
+        }
+        for (p, &xv) in xi.iter().enumerate().take(k) {
+            let wrow = w.row(p);
+            for j in 0..n {
+                ci[j] += xv * wrow[j];
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// `C = X·Wᵀ` for W stored [n, k] (each output is a row dot): the fast
+/// path for the tied unembedding where `wte` is [vocab, d].
+pub fn matmul_transposed_fast(x: &Matrix, w: &Matrix) -> Result<Matrix> {
+    if x.cols() != w.cols() {
+        return Err(Error::shape(format!(
+            "matmul_transposed_fast: {:?} x {:?}T",
+            x.shape(),
+            w.shape()
+        )));
+    }
+    let (m, k) = x.shape();
+    let n = w.rows();
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let xi = x.row(i);
+        let ci = c.row_mut(i);
+        for j in 0..n {
+            let wj = w.row(j);
+            // Four independent partial sums: breaks the FP add latency
+            // chain and lets the compiler vectorize.
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut p = 0;
+            while p + 4 <= k {
+                s0 += xi[p] * wj[p];
+                s1 += xi[p + 1] * wj[p + 1];
+                s2 += xi[p + 2] * wj[p + 2];
+                s3 += xi[p + 3] * wj[p + 3];
+                p += 4;
+            }
+            let mut s = (s0 + s1) + (s2 + s3);
+            while p < k {
+                s += xi[p] * wj[p];
+                p += 1;
+            }
+            ci[j] = s;
+        }
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(4, 4, 1.0, &mut rng);
+        let mut eye = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            eye.set(i, i, 1.0);
+        }
+        let c = matmul_f32(&a, &eye).unwrap();
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        assert!(matmul_f32(&a, &b).is_err());
+        assert!(matmul_ps(&a, &b, 7).is_err());
+    }
+
+    #[test]
+    fn ps23_equals_f32() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(5, 9, 1.0, &mut rng);
+        let b = Matrix::randn(9, 3, 1.0, &mut rng);
+        let c23 = matmul_ps(&a, &b, 23).unwrap();
+        let cf = matmul_f32(&a, &b).unwrap();
+        assert_eq!(c23, cf);
+    }
+
+    #[test]
+    fn lower_mu_more_error() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(8, 64, 1.0, &mut rng);
+        let b = Matrix::randn(64, 8, 1.0, &mut rng);
+        let cf = matmul_f32(&a, &b).unwrap();
+        let e4 = matmul_ps(&a, &b, 4).unwrap().max_abs_diff(&cf).unwrap();
+        let e10 = matmul_ps(&a, &b, 10).unwrap().max_abs_diff(&cf).unwrap();
+        assert!(e4 > e10, "e4={e4} e10={e10}");
+    }
+
+    #[test]
+    fn recompute_masked_restores_flagged() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(6, 32, 1.0, &mut rng);
+        let b = Matrix::randn(32, 6, 1.0, &mut rng);
+        let cf = matmul_f32(&a, &b).unwrap();
+        let mut c = matmul_ps(&a, &b, 3).unwrap();
+        // Flag every other entry.
+        let mask: Vec<bool> = (0..36).map(|k| k % 2 == 0).collect();
+        let n = recompute_masked(&mut c, &a, &b, &mask).unwrap();
+        assert_eq!(n, 18);
+        for i in 0..6 {
+            for j in 0..6 {
+                if mask[i * 6 + j] {
+                    assert_eq!(c.get(i, j), cf.get(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_matmul_matches_reference_within_tolerance() {
+        let mut rng = Rng::new(7);
+        let x = Matrix::randn(9, 33, 1.0, &mut rng);
+        let w = Matrix::randn(33, 17, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..17).map(|_| rng.normal_f32()).collect();
+        let fast = matmul_bias_fast(&x, &w, &bias).unwrap();
+        let mut slow = matmul_f32(&x, &w).unwrap();
+        for i in 0..9 {
+            for j in 0..17 {
+                slow.set(i, j, slow.get(i, j) + bias[j]);
+            }
+        }
+        assert!(fast.max_abs_diff(&slow).unwrap() < 1e-4);
+        // No bias variant.
+        let fast0 = matmul_bias_fast(&x, &w, &[]).unwrap();
+        let slow0 = matmul_f32(&x, &w).unwrap();
+        assert!(fast0.max_abs_diff(&slow0).unwrap() < 1e-4);
+    }
+
+    #[test]
+    fn transposed_fast_matches_reference() {
+        let mut rng = Rng::new(8);
+        let x = Matrix::randn(5, 29, 1.0, &mut rng);
+        let w = Matrix::randn(13, 29, 1.0, &mut rng); // [n, k]
+        let fast = matmul_transposed_fast(&x, &w).unwrap();
+        let slow = matmul_f32(&x, &w.transpose()).unwrap();
+        assert!(fast.max_abs_diff(&slow).unwrap() < 1e-4);
+    }
+
+    #[test]
+    fn fast_matmul_shape_checks() {
+        let x = Matrix::zeros(2, 3);
+        let w = Matrix::zeros(4, 2);
+        assert!(matmul_bias_fast(&x, &w, &[]).is_err());
+        assert!(matmul_bias_fast(&x, &Matrix::zeros(3, 4), &[0.0; 3]).is_err());
+        assert!(matmul_transposed_fast(&x, &Matrix::zeros(4, 5)).is_err());
+    }
+
+    #[test]
+    fn recompute_mask_len_checked() {
+        let a = Matrix::zeros(2, 2);
+        let b = Matrix::zeros(2, 2);
+        let mut c = Matrix::zeros(2, 2);
+        assert!(recompute_masked(&mut c, &a, &b, &[true; 3]).is_err());
+    }
+}

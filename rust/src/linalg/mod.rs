@@ -1,0 +1,12 @@
+//! Dense linear algebra over row-major f32 matrices, with mixed-precision
+//! accumulation hooks.
+//!
+//! * [`tensor`] — the [`tensor::Matrix`] type (row-major, shape-checked).
+//! * [`matmul`] — FP32 matmul, PS(μ)-accumulated matmul, and masked
+//!   recomputation (the building block of LAMP attention).
+
+pub mod matmul;
+pub mod tensor;
+
+pub use matmul::{matmul_f32, matmul_ps, recompute_masked};
+pub use tensor::Matrix;

@@ -1,0 +1,292 @@
+//! `lamp` — the leader binary: experiment harness, serving driver,
+//! artifact inspection.
+//!
+//! ```text
+//! lamp exp <fig1..fig7|table1|appendix_b|all> [--quick] [--seqs N] ...
+//! lamp serve --model xl --requests 64 --engine pjrt|native [--tier balanced]
+//! lamp inspect --artifacts artifacts
+//! lamp forward --model nano --mu 4 --tau 0.1 --rule strict --engine native
+//! ```
+
+use lamp::benchkit::Table;
+use lamp::cli::{ArgSpec, Args, Command};
+use lamp::coordinator::{
+    Engine, InferenceRequest, NativeEngine, PjrtEngine, PrecisionPolicy, Rule, Server,
+};
+use lamp::data::{Dataset, Domain};
+use lamp::experiments::{self, EvalOptions};
+use lamp::runtime::ArtifactStore;
+use lamp::util::Stopwatch;
+
+fn cli() -> Command {
+    Command::new("lamp", "LAMP: look-ahead mixed-precision inference — reproduction harness")
+        .subcommand(
+            Command::new("exp", "run a paper experiment (fig1..fig7, table1, appendix_b, all)")
+                .arg(ArgSpec::pos("name", "experiment name", true))
+                .arg(ArgSpec::opt("seqs", "evaluation sequences per panel", "6"))
+                .arg(ArgSpec::opt("seq-len", "tokens per sequence", "64"))
+                .arg(ArgSpec::opt("seed", "held-out stream seed", "42"))
+                .arg(ArgSpec::opt("workers", "parallel workers", "8"))
+                .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts"))
+                .arg(ArgSpec::flag("quick", "smoke-test scale")),
+        )
+        .subcommand(
+            Command::new("serve", "run the batching server over a synthetic workload")
+                .arg(ArgSpec::opt("model", "model config (nano|small|xl)", "small"))
+                .arg(ArgSpec::opt("engine", "native|pjrt", "pjrt"))
+                .arg(ArgSpec::opt("requests", "number of requests", "32"))
+                .arg(ArgSpec::opt("tier", "precision tier (exact|high|balanced|economy)", "balanced"))
+                .arg(ArgSpec::opt("domain", "workload domain", "web"))
+                .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts"))
+                .arg(ArgSpec::opt("seed", "workload seed", "1")),
+        )
+        .subcommand(
+            Command::new("inspect", "list available artifacts and model configs")
+                .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts")),
+        )
+        .subcommand(
+            Command::new("generate", "autoregressive generation under a precision policy")
+                .arg(ArgSpec::opt("model", "model config", "nano"))
+                .arg(ArgSpec::opt("mu", "mantissa bits", "4"))
+                .arg(ArgSpec::opt("tau", "LAMP threshold (inf = uniform)", "0.1"))
+                .arg(ArgSpec::opt("rule", "strict|relaxed|relaxed_ln|random", "strict"))
+                .arg(ArgSpec::opt("new-tokens", "tokens to generate", "16"))
+                .arg(ArgSpec::opt("topk", "0 = greedy, else top-k sampling", "0"))
+                .arg(ArgSpec::opt("temperature", "sampling temperature", "1.0"))
+                .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts"))
+                .arg(ArgSpec::opt("seed", "seed", "0")),
+        )
+        .subcommand(
+            Command::new("forward", "single forward pass; prints recompute stats")
+                .arg(ArgSpec::opt("model", "model config", "nano"))
+                .arg(ArgSpec::opt("engine", "native|pjrt", "native"))
+                .arg(ArgSpec::opt("mu", "mantissa bits", "4"))
+                .arg(ArgSpec::opt("tau", "LAMP threshold (inf = uniform)", "0.1"))
+                .arg(ArgSpec::opt("rule", "strict|relaxed|relaxed_ln|random", "strict"))
+                .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts"))
+                .arg(ArgSpec::opt("seed", "seed", "0")),
+        )
+}
+
+fn main() {
+    let cmd = cli();
+    let args = match cmd.parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match &args.subcommand {
+        Some((name, sub)) => match name.as_str() {
+            "exp" => cmd_exp(sub),
+            "serve" => cmd_serve(sub),
+            "inspect" => cmd_inspect(sub),
+            "forward" => cmd_forward(sub),
+            "generate" => cmd_generate(sub),
+            _ => unreachable!(),
+        },
+        None => {
+            println!("{}", cmd.usage());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn eval_options(args: &Args) -> lamp::Result<EvalOptions> {
+    Ok(EvalOptions {
+        num_seqs: args.get_usize("seqs")?,
+        seq_len: args.get_usize("seq-len")?,
+        stream_seed: args.get_u64("seed")?,
+        workers: args.get_usize("workers")?,
+        artifacts: Some(args.get_str("artifacts")?),
+        quick: args.get_flag("quick"),
+    })
+}
+
+fn cmd_exp(args: &Args) -> lamp::Result<()> {
+    let name = args.positionals()[0].clone();
+    let opts = eval_options(args)?;
+    let names: Vec<&str> = if name == "all" {
+        experiments::all_names().to_vec()
+    } else {
+        vec![name.as_str()]
+    };
+    for n in names {
+        let mut sw = Stopwatch::new();
+        let tables: Vec<Table> = experiments::run(n, &opts)?;
+        for t in &tables {
+            t.print();
+        }
+        sw.lap(n);
+        println!("[{n}] completed in {:.1}s\n", sw.secs());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> lamp::Result<()> {
+    let model = args.get_str("model")?;
+    let store = ArtifactStore::open(args.get_str("artifacts")?)?;
+    let engine: Box<dyn Engine> = match args.get_str("engine")?.as_str() {
+        "native" => Box::new(NativeEngine::load(&store, &model)?),
+        "pjrt" => Box::new(PjrtEngine::load(&store, &model)?),
+        other => {
+            return Err(lamp::Error::config(format!("unknown engine {other:?}")))
+        }
+    };
+    let cfg = engine.config().clone();
+    let policy = PrecisionPolicy::tier(&args.get_str("tier")?)?;
+    let n = args.get_usize("requests")?;
+    let domain = Domain::by_name(&args.get_str("domain")?)
+        .ok_or_else(|| lamp::Error::config("unknown domain".to_string()))?;
+    let seed = args.get_u64("seed")?;
+    let backend = engine.backend();
+
+    println!(
+        "serving {n} requests on {} ({} backend), policy mu={} tau={} rule={}",
+        cfg.name, backend, policy.mu, policy.tau, policy.rule.name()
+    );
+    let dataset = Dataset::generate(domain, cfg.vocab, n, cfg.seq, 7, seed);
+    let mut server = Server::new(engine, std::time::Duration::from_millis(5));
+    let mut served = 0usize;
+    for (i, seq) in dataset.sequences.into_iter().enumerate() {
+        server.submit(InferenceRequest::new(i as u64, seq, policy))?;
+        served += server.step(false)?.len();
+    }
+    served += server.drain()?.len();
+    assert_eq!(served, n);
+    let stats = server.stats();
+    let mut t = Table::new("serving summary", &["metric", "value"]);
+    t.row(vec!["backend".into(), backend.into()]);
+    t.row(vec!["requests".into(), stats.requests.to_string()]);
+    t.row(vec!["batches".into(), stats.batches.to_string()]);
+    t.row(vec!["padding rows".into(), stats.padding_rows.to_string()]);
+    t.row(vec!["tokens".into(), stats.total_tokens.to_string()]);
+    t.row(vec![
+        "recompute rate".into(),
+        format!(
+            "{:.4}%",
+            100.0 * stats.recomputed as f64 / stats.causal_total.max(1) as f64
+        ),
+    ]);
+    t.row(vec!["mean latency".into(), format!("{:.1}ms", 1e3 * stats.latency_mean_s)]);
+    t.row(vec!["p95 latency".into(), format!("{:.1}ms", 1e3 * stats.latency_p95_s)]);
+    t.row(vec![
+        "throughput".into(),
+        format!("{:.1} tok/s", stats.throughput_tok_s),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> lamp::Result<()> {
+    let store = ArtifactStore::open(args.get_str("artifacts")?)?;
+    let mut t = Table::new(
+        "artifacts",
+        &["model", "layers", "heads", "d_model", "vocab", "seq", "batch", "params"],
+    );
+    for name in store.available_models() {
+        let cfg = store.model_config(&name)?;
+        t.row(vec![
+            cfg.name.clone(),
+            cfg.layers.to_string(),
+            cfg.heads.to_string(),
+            cfg.d_model.to_string(),
+            cfg.vocab.to_string(),
+            cfg.seq.to_string(),
+            cfg.batch.to_string(),
+            cfg.param_count().to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> lamp::Result<()> {
+    use lamp::model::{generate, Decode};
+    let model = args.get_str("model")?;
+    let store = ArtifactStore::open(args.get_str("artifacts")?)?;
+    let weights = store.weights(&model)?;
+    let cfg = weights.config.clone();
+    let policy = PrecisionPolicy::lamp(
+        args.get_u32("mu")?,
+        args.get_f32("tau")?,
+        Rule::by_name(&args.get_str("rule")?)?,
+    );
+    policy.validate()?;
+    let seed = args.get_u64("seed")?;
+    let k = args.get_usize("topk")?;
+    let decode = if k == 0 {
+        Decode::Greedy
+    } else {
+        Decode::TopK { k, temperature: args.get_f32("temperature")? }
+    };
+    let prompt = Dataset::generate(Domain::Web, cfg.vocab, 1, cfg.seq / 4, 7, seed)
+        .sequences
+        .remove(0);
+    let prec = policy.to_attention_precision(cfg.seq);
+    let mut sw = Stopwatch::new();
+    let (tokens, rate) =
+        generate(&weights, &prompt, args.get_usize("new-tokens")?, prec, decode, seed)?;
+    println!(
+        "generate({model}): prompt {} tokens -> {} tokens, mu={} tau={} rule={}",
+        prompt.len(),
+        tokens.len(),
+        policy.mu,
+        policy.tau,
+        policy.rule.name()
+    );
+    println!("  continuation: {:?}", &tokens[prompt.len()..]);
+    println!("  recompute rate: {:.4}%", 100.0 * rate);
+    println!("  wall: {:.3}s", sw.secs());
+    sw.lap("generate");
+    Ok(())
+}
+
+fn cmd_forward(args: &Args) -> lamp::Result<()> {
+    let model = args.get_str("model")?;
+    let store = ArtifactStore::open(args.get_str("artifacts")?)?;
+    let engine: Box<dyn Engine> = match args.get_str("engine")?.as_str() {
+        "native" => Box::new(NativeEngine::load(&store, &model)?),
+        "pjrt" => Box::new(PjrtEngine::load(&store, &model)?),
+        other => {
+            return Err(lamp::Error::config(format!("unknown engine {other:?}")))
+        }
+    };
+    let cfg = engine.config().clone();
+    let policy = PrecisionPolicy::lamp(
+        args.get_u32("mu")?,
+        args.get_f32("tau")?,
+        Rule::by_name(&args.get_str("rule")?)?,
+    );
+    policy.validate()?;
+    let seed = args.get_u64("seed")? as i32;
+    let dataset = Dataset::generate(Domain::Web, cfg.vocab, cfg.batch, cfg.seq, 7, seed as u64);
+    let mut sw = Stopwatch::new();
+    let out = engine.infer(&dataset.sequences, &policy, seed)?;
+    let dt = sw.secs();
+    sw.lap("forward");
+    println!(
+        "forward({}, {} backend): batch={} seq={} mu={} tau={} rule={}",
+        cfg.name,
+        engine.backend(),
+        cfg.batch,
+        cfg.seq,
+        policy.mu,
+        policy.tau,
+        policy.rule.name()
+    );
+    println!(
+        "  recomputed {} / {} causal products ({:.4}%)",
+        out.stats.recomputed,
+        out.stats.causal_total,
+        100.0 * out.stats.rate()
+    );
+    println!("  logits[0][0][..4] = {:?}", &out.logits[0].row(0)[..4]);
+    println!("  wall: {dt:.3}s");
+    Ok(())
+}

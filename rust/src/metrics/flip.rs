@@ -1,0 +1,59 @@
+//! Flip rate (paper §4.2): how often the most probable prediction of the
+//! test model differs from the reference model's.
+
+use crate::linalg::Matrix;
+
+/// Index of the max entry (first on ties — deterministic).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Fraction of positions where argmax(reference) != argmax(test).
+pub fn flip_rate(reference: &Matrix, test: &Matrix) -> f64 {
+    assert_eq!(reference.shape(), test.shape());
+    let s = reference.rows();
+    if s == 0 {
+        return 0.0;
+    }
+    let flips = (0..s)
+        .filter(|&i| argmax(reference.row(i)) != argmax(test.row(i)))
+        .count();
+    flips as f64 / s as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_no_flips() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 5.0, 2.0, 0.0, -1.0, 3.0]).unwrap();
+        assert_eq!(flip_rate(&m, &m), 0.0);
+    }
+
+    #[test]
+    fn full_flip() {
+        let a = Matrix::from_vec(1, 2, vec![1.0, 0.0]).unwrap();
+        let b = Matrix::from_vec(1, 2, vec![0.0, 1.0]).unwrap();
+        assert_eq!(flip_rate(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn partial_flip() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 0.0, 1.0, 0.0]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        assert_eq!(flip_rate(&a, &b), 0.5);
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 1.0, 1.0]), 0);
+        assert_eq!(argmax(&[0.0, 2.0, 2.0]), 1);
+    }
+}

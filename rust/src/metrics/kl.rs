@@ -1,0 +1,120 @@
+//! Kullback–Leibler divergence between output distributions (paper §4.2).
+//!
+//! "We compute the mean KL divergence between the probability distributions
+//! output by a reference model and a test model over [...] sequences."
+
+use crate::linalg::Matrix;
+
+/// KL(p ‖ q) for two probability vectors, in nats, computed in f64.
+///
+/// Zero entries of p contribute 0 by the usual convention; zero entries of
+/// q with nonzero p yield +∞ (clamped to a large finite value so means stay
+/// usable — with softmax outputs this never triggers).
+pub fn kl_divergence(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let mut kl = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi > 0.0 {
+            if qi > 0.0 {
+                kl += pi * (pi / qi).ln();
+            } else {
+                return 1e300;
+            }
+        }
+    }
+    kl.max(0.0) // guard tiny negative from rounding
+}
+
+/// Softmax (f64) of one logits row.
+pub fn softmax_f64(row: &[f32]) -> Vec<f64> {
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = row.iter().map(|&v| ((v as f64) - m).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+/// Mean per-position KL divergence between reference and test logits
+/// ([S, V] each): mean_i KL(softmax(ref_i) ‖ softmax(test_i)).
+pub fn mean_kl_from_logits(reference: &Matrix, test: &Matrix) -> f64 {
+    assert_eq!(reference.shape(), test.shape());
+    let s = reference.rows();
+    if s == 0 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for i in 0..s {
+        let p = softmax_f64(reference.row(i));
+        let q = softmax_f64(test.row(i));
+        total += kl_divergence(&p, &q);
+    }
+    total / s as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kl_self_is_zero() {
+        let p = vec![0.2, 0.3, 0.5];
+        assert!(kl_divergence(&p, &p).abs() < 1e-15);
+    }
+
+    #[test]
+    fn kl_nonnegative_and_asymmetric() {
+        let p = vec![0.9, 0.1];
+        let q = vec![0.5, 0.5];
+        let a = kl_divergence(&p, &q);
+        let b = kl_divergence(&q, &p);
+        assert!(a > 0.0 && b > 0.0);
+        assert!((a - b).abs() > 1e-3);
+    }
+
+    #[test]
+    fn kl_known_value() {
+        // KL(Bern(0.5) || Bern(0.25)) = 0.5 ln2 + 0.5 ln(2/3)
+        let p = vec![0.5, 0.5];
+        let q = vec![0.25, 0.75];
+        let expect = 0.5 * (2.0f64).ln() + 0.5 * (0.5f64 / 0.75).ln();
+        assert!((kl_divergence(&p, &q) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_q_support_clamped() {
+        let p = vec![1.0, 0.0];
+        let q = vec![0.0, 1.0];
+        assert!(kl_divergence(&p, &q) >= 1e299);
+    }
+
+    #[test]
+    fn mean_kl_identical_logits_zero() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]).unwrap();
+        assert!(mean_kl_from_logits(&m, &m) < 1e-14);
+    }
+
+    #[test]
+    fn mean_kl_grows_with_perturbation() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(8, 16, 1.0, &mut rng);
+        let small = m.map(|x| x + 0.01);
+        // Constant shifts cancel in softmax: still ~0.
+        assert!(mean_kl_from_logits(&m, &small) < 1e-10);
+        let mut rng2 = Rng::new(2);
+        let bumpy = Matrix::from_vec(
+            8,
+            16,
+            m.data().iter().map(|&x| x + 0.1 * rng2.normal_f32()).collect(),
+        )
+        .unwrap();
+        let big = Matrix::from_vec(
+            8,
+            16,
+            m.data().iter().map(|&x| x + 1.0 * rng2.normal_f32()).collect(),
+        )
+        .unwrap();
+        let kl_small = mean_kl_from_logits(&m, &bumpy);
+        let kl_big = mean_kl_from_logits(&m, &big);
+        assert!(kl_big > kl_small, "big={kl_big} small={kl_small}");
+    }
+}

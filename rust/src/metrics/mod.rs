@@ -1,0 +1,18 @@
+//! Accuracy and efficiency metrics of paper §4.2:
+//!
+//! * [`kl`] — mean Kullback–Leibler divergence between reference and test
+//!   output distributions over evaluation panels.
+//! * [`flip`] — flip rate: how often the argmax prediction differs.
+//! * [`pareto`] — Pareto boundaries (accuracy vs recomputation rate) used
+//!   in Figures 3–7.
+//! * [`stats`] — aggregation helpers (mean/stderr accumulators).
+
+pub mod flip;
+pub mod kl;
+pub mod pareto;
+pub mod stats;
+
+pub use flip::flip_rate;
+pub use kl::{kl_divergence, mean_kl_from_logits};
+pub use pareto::{pareto_front, ParetoPoint};
+pub use stats::Accumulator;

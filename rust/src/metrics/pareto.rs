@@ -1,0 +1,94 @@
+//! Pareto boundaries: accuracy metric vs recomputation rate (Figures 3–7).
+
+/// One sweep point: an (efficiency, accuracy) pair with its provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoPoint {
+    /// Recomputation rate in [0, 1] (efficiency axis; lower is cheaper).
+    pub rate: f64,
+    /// Accuracy metric (KL divergence or flip rate; lower is better).
+    pub metric: f64,
+    /// The threshold τ that produced this point.
+    pub tau: f64,
+}
+
+/// Extract the Pareto-optimal front: points not dominated by any other
+/// (lower-or-equal rate AND lower-or-equal metric, strictly better in one).
+/// Returned sorted by rate ascending.
+pub fn pareto_front(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut front: Vec<ParetoPoint> = Vec::new();
+    for p in points {
+        let dominated = points.iter().any(|q| {
+            (q.rate <= p.rate && q.metric < p.metric)
+                || (q.rate < p.rate && q.metric <= p.metric)
+        });
+        if !dominated {
+            front.push(p.clone());
+        }
+    }
+    front.sort_by(|a, b| a.rate.partial_cmp(&b.rate).unwrap());
+    front.dedup_by(|a, b| a.rate == b.rate && a.metric == b.metric);
+    front
+}
+
+/// Area-under-the-front summary (lower = uniformly better trade-off),
+/// integrated by trapezoid over the shared rate range. Used by tests and
+/// the figure benches to compare methods the way the paper's plots do.
+pub fn front_area(front: &[ParetoPoint]) -> f64 {
+    if front.len() < 2 {
+        return front.first().map(|p| p.metric).unwrap_or(0.0);
+    }
+    let mut area = 0.0;
+    for w in front.windows(2) {
+        let dr = w[1].rate - w[0].rate;
+        area += 0.5 * (w[0].metric + w[1].metric) * dr;
+    }
+    area / (front.last().unwrap().rate - front[0].rate).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(rate: f64, metric: f64) -> ParetoPoint {
+        ParetoPoint { rate, metric, tau: 0.0 }
+    }
+
+    #[test]
+    fn dominated_points_removed() {
+        let pts = vec![p(0.1, 1.0), p(0.2, 0.5), p(0.15, 2.0), p(0.3, 0.4)];
+        let front = pareto_front(&pts);
+        assert_eq!(front.len(), 3);
+        assert!(front.iter().all(|q| q.metric != 2.0));
+    }
+
+    #[test]
+    fn front_sorted_by_rate() {
+        let pts = vec![p(0.5, 0.1), p(0.1, 1.0), p(0.3, 0.3)];
+        let front = pareto_front(&pts);
+        for w in front.windows(2) {
+            assert!(w[0].rate <= w[1].rate);
+        }
+    }
+
+    #[test]
+    fn all_on_front_when_tradeoff_strict() {
+        let pts = vec![p(0.1, 1.0), p(0.2, 0.5), p(0.3, 0.25)];
+        assert_eq!(pareto_front(&pts).len(), 3);
+    }
+
+    #[test]
+    fn area_orders_fronts() {
+        // A uniformly lower front has smaller area.
+        let hi = pareto_front(&[p(0.1, 1.0), p(0.3, 0.6), p(0.5, 0.4)]);
+        let lo = pareto_front(&[p(0.1, 0.5), p(0.3, 0.3), p(0.5, 0.2)]);
+        assert!(front_area(&lo) < front_area(&hi));
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(pareto_front(&[]).is_empty());
+        let single = pareto_front(&[p(0.2, 0.7)]);
+        assert_eq!(single.len(), 1);
+        assert_eq!(front_area(&single), 0.7);
+    }
+}

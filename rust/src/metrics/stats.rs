@@ -1,0 +1,107 @@
+//! Streaming mean/variance accumulator (Welford) for metric aggregation.
+
+/// Welford accumulator for mean, variance and standard error.
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Accumulator { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample variance (n−1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn stderr(&self) -> f64 {
+        self.stddev() / (self.n as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        let mut a = Accumulator::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            a.push(x);
+        }
+        assert!((a.mean() - 5.0).abs() < 1e-12);
+        assert!((a.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(a.min(), 2.0);
+        assert_eq!(a.max(), 9.0);
+        assert_eq!(a.count(), 8);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let a = Accumulator::new();
+        assert!(a.mean().is_nan());
+        let mut b = Accumulator::new();
+        b.push(3.0);
+        assert_eq!(b.mean(), 3.0);
+        assert!(b.variance().is_nan());
+    }
+
+    #[test]
+    fn stderr_shrinks_with_n() {
+        let mut small = Accumulator::new();
+        let mut large = Accumulator::new();
+        let mut rng = crate::util::Rng::new(1);
+        for i in 0..10_000 {
+            let x = rng.normal();
+            if i < 100 {
+                small.push(x);
+            }
+            large.push(x);
+        }
+        assert!(large.stderr() < small.stderr());
+    }
+}

@@ -1,0 +1,244 @@
+//! Causal multi-head attention with LAMP mixed-precision KQ accumulation —
+//! the paper's §4.2 experimental setting, instrumented.
+//!
+//! Per head and per query row i:
+//! 1. Accumulate the causal KQ inner products y_j = ⟨q_i, k_j⟩ (j ≤ i) in
+//!    PS(μ) with per-step rounding, then scale by 1/√d_h in FP32.
+//! 2. Apply the LAMP selection rule to the scaled row.
+//! 3. Recompute the flagged inner products in FP32 (and rescale).
+//! 4. FP32 softmax over the row; FP32 value aggregation.
+//!
+//! `AttentionPrecision::reference()` (μ=23) reproduces uniform FP32
+//! accumulation bit-for-bit; `tau = ∞` reproduces uniform PS(μ).
+
+use crate::lamp::softmax::{select_softmax, softmax, SoftmaxRule};
+use crate::linalg::Matrix;
+use crate::softfloat::dot::{dot_f32, dot_ps};
+use crate::util::Rng;
+
+/// Precision policy for attention score computation.
+#[derive(Debug, Clone, Copy)]
+pub struct AttentionPrecision {
+    /// Mantissa bits for KQ accumulation (23 = FP32).
+    pub mu: u32,
+    /// LAMP threshold; `f32::INFINITY` disables recomputation.
+    pub tau: f32,
+    /// Selection rule.
+    pub rule: SoftmaxRule,
+}
+
+impl AttentionPrecision {
+    /// Uniform FP32 accumulation (the paper's reference model).
+    pub fn reference() -> Self {
+        AttentionPrecision { mu: 23, tau: f32::INFINITY, rule: SoftmaxRule::Strict }
+    }
+
+    /// Uniform PS(μ) accumulation, no recomputation.
+    pub fn uniform(mu: u32) -> Self {
+        AttentionPrecision { mu, tau: f32::INFINITY, rule: SoftmaxRule::Strict }
+    }
+
+    /// LAMP with the given rule.
+    pub fn lamp(mu: u32, tau: f32, rule: SoftmaxRule) -> Self {
+        AttentionPrecision { mu, tau, rule }
+    }
+}
+
+/// Recomputation statistics accumulated over a forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct LampStats {
+    /// KQ inner products recomputed in FP32.
+    pub recomputed: usize,
+    /// Total KQ inner products in the causal mask.
+    pub causal_total: usize,
+    /// Per-layer recomputation counts.
+    pub per_layer: Vec<usize>,
+}
+
+impl LampStats {
+    /// Recomputation rate = recomputed / causal_total.
+    pub fn rate(&self) -> f64 {
+        if self.causal_total == 0 {
+            0.0
+        } else {
+            self.recomputed as f64 / self.causal_total as f64
+        }
+    }
+
+    /// Merge another pass's statistics (layer-wise aligned).
+    pub fn merge(&mut self, other: &LampStats) {
+        self.recomputed += other.recomputed;
+        self.causal_total += other.causal_total;
+        if self.per_layer.len() < other.per_layer.len() {
+            self.per_layer.resize(other.per_layer.len(), 0);
+        }
+        for (i, &c) in other.per_layer.iter().enumerate() {
+            self.per_layer[i] += c;
+        }
+    }
+}
+
+/// Causal multi-head attention for one sequence.
+///
+/// * `q`, `k`, `v` — [S, d_model] post-projection activations.
+/// * Returns the attention output [S, d_model] and the number of
+///   recomputed KQ products.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    heads: usize,
+    prec: AttentionPrecision,
+    rng: &mut Rng,
+    recompute_count: &mut usize,
+) -> Matrix {
+    let s = q.rows();
+    let d = q.cols();
+    debug_assert_eq!(k.shape(), (s, d));
+    debug_assert_eq!(v.shape(), (s, d));
+    debug_assert_eq!(d % heads, 0);
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Matrix::zeros(s, d);
+
+    let mut scores: Vec<f32> = Vec::with_capacity(s);
+    for h in 0..heads {
+        let off = h * hd;
+        for i in 0..s {
+            let qi = &q.row(i)[off..off + hd];
+            // Step 1: PS(μ) accumulation of the causal row, FP32 scaling.
+            scores.clear();
+            for j in 0..=i {
+                let kj = &k.row(j)[off..off + hd];
+                scores.push(dot_ps(qi, kj, prec.mu) * scale);
+            }
+            // Steps 2–3: LAMP selection + FP32 recomputation.
+            if prec.tau.is_finite() {
+                let mask = select_softmax(&scores, prec.tau, prec.rule, rng);
+                for (j, &m) in mask.iter().enumerate() {
+                    if m {
+                        let kj = &k.row(j)[off..off + hd];
+                        scores[j] = dot_f32(qi, kj) * scale;
+                        *recompute_count += 1;
+                    }
+                }
+            }
+            // Step 4: FP32 softmax + value aggregation.
+            let probs = softmax(&scores);
+            let orow = &mut out.row_mut(i)[off..off + hd];
+            for (j, &p) in probs.iter().enumerate() {
+                let vj = &v.row(j)[off..off + hd];
+                for (o, &vv) in orow.iter_mut().zip(vj) {
+                    *o += p * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(s: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        (
+            Matrix::randn(s, d, 1.0, &mut rng),
+            Matrix::randn(s, d, 1.0, &mut rng),
+            Matrix::randn(s, d, 1.0, &mut rng),
+        )
+    }
+
+    #[test]
+    fn reference_equals_uniform_mu23() {
+        let (q, k, v) = setup(8, 16, 1);
+        let mut rng = Rng::new(0);
+        let mut n1 = 0;
+        let a = causal_attention(&q, &k, &v, 2, AttentionPrecision::reference(), &mut rng, &mut n1);
+        let mut n2 = 0;
+        let b = causal_attention(&q, &k, &v, 2, AttentionPrecision::uniform(23), &mut rng, &mut n2);
+        assert_eq!(a, b);
+        assert_eq!(n1, 0);
+        assert_eq!(n2, 0);
+    }
+
+    #[test]
+    fn row_zero_attends_to_itself_only() {
+        // Causal: position 0 can only see position 0 → output row 0 = v row 0.
+        let (q, k, v) = setup(4, 8, 2);
+        let mut rng = Rng::new(0);
+        let mut n = 0;
+        let out = causal_attention(&q, &k, &v, 2, AttentionPrecision::reference(), &mut rng, &mut n);
+        for c in 0..8 {
+            assert!((out.get(0, c) - v.get(0, c)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn low_precision_deviates_lamp_recovers() {
+        let (q, k, v) = setup(16, 32, 3);
+        let mut rng = Rng::new(0);
+        let mut n = 0;
+        let reference =
+            causal_attention(&q, &k, &v, 4, AttentionPrecision::reference(), &mut rng, &mut n);
+        let mut n_uni = 0;
+        let uniform =
+            causal_attention(&q, &k, &v, 4, AttentionPrecision::uniform(3), &mut rng, &mut n_uni);
+        let mut n_lamp = 0;
+        let lamp = causal_attention(
+            &q,
+            &k,
+            &v,
+            4,
+            AttentionPrecision::lamp(3, 0.01, SoftmaxRule::Strict),
+            &mut rng,
+            &mut n_lamp,
+        );
+        assert_eq!(n_uni, 0);
+        assert!(n_lamp > 0, "LAMP should recompute something at tau=0.01");
+        let e_uni = uniform.max_abs_diff(&reference).unwrap();
+        let e_lamp = lamp.max_abs_diff(&reference).unwrap();
+        assert!(
+            e_lamp < e_uni,
+            "LAMP should beat uniform: lamp={e_lamp} uniform={e_uni}"
+        );
+    }
+
+    #[test]
+    fn recompute_all_recovers_reference_scores() {
+        // tau = 0 with strict rule recomputes every nonzero-sensitivity
+        // product; the result should be very close to the FP32 reference
+        // (identical where all products are recomputed).
+        let (q, k, v) = setup(12, 16, 4);
+        let mut rng = Rng::new(0);
+        let mut n = 0;
+        let reference =
+            causal_attention(&q, &k, &v, 2, AttentionPrecision::reference(), &mut rng, &mut n);
+        let mut n_all = 0;
+        let lamp = causal_attention(
+            &q,
+            &k,
+            &v,
+            2,
+            AttentionPrecision::lamp(2, 0.0, SoftmaxRule::Strict),
+            &mut rng,
+            &mut n_all,
+        );
+        let e = lamp.max_abs_diff(&reference).unwrap();
+        assert!(e < 1e-5, "tau=0 should recover reference: {e}");
+    }
+
+    #[test]
+    fn stats_rate() {
+        let mut s = LampStats { recomputed: 5, causal_total: 100, per_layer: vec![2, 3] };
+        assert!((s.rate() - 0.05).abs() < 1e-12);
+        let other = LampStats { recomputed: 1, causal_total: 100, per_layer: vec![0, 1, 0] };
+        s.merge(&other);
+        assert_eq!(s.recomputed, 6);
+        assert_eq!(s.causal_total, 200);
+        assert_eq!(s.per_layer, vec![2, 4, 0]);
+        assert_eq!(LampStats::default().rate(), 0.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Model hyperparameters and the named config registry.
+//!
+//! The paper evaluates GPT-2 XL and GPT-2 small. Pretrained weights are not
+//! available in this environment (see DESIGN.md §Substitutions); the
+//! registry defines the scaled-down *-sim configs trained at build time by
+//! `python/compile/train.py`, preserving the small-vs-large comparison of
+//! Fig. 5.
+
+use crate::config::KvConfig;
+use crate::error::{Error, Result};
+
+/// Transformer hyperparameters (GPT-2 architecture).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    /// Registry name ("nano", "small", "xl").
+    pub name: String,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Maximum sequence length (learned positional embeddings).
+    pub seq: usize,
+    /// Number of transformer blocks.
+    pub layers: usize,
+    /// Number of attention heads.
+    pub heads: usize,
+    /// Model width.
+    pub d_model: usize,
+    /// Batch size baked into the HLO artifact.
+    pub batch: usize,
+}
+
+impl ModelConfig {
+    /// Per-head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// MLP hidden width (GPT-2 uses 4×).
+    pub fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    /// Total number of KQ inner products in the causal mask for a sequence
+    /// of length `s`: heads × layers × s(s+1)/2.
+    pub fn causal_products(&self, s: usize) -> usize {
+        self.layers * self.heads * s * (s + 1) / 2
+    }
+
+    /// Parameter count (with tied embeddings).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = 2 * d // ln1
+            + d * 3 * d + 3 * d // qkv
+            + d * d + d // proj
+            + 2 * d // ln2
+            + d * self.d_ff() + self.d_ff() // fc
+            + self.d_ff() * d + d; // out
+        self.vocab * d + self.seq * d + self.layers * per_layer + 2 * d
+    }
+
+    /// Test-scale config: 2 layers, d=32.
+    pub fn nano() -> Self {
+        ModelConfig {
+            name: "nano".into(),
+            vocab: 128,
+            seq: 32,
+            layers: 2,
+            heads: 2,
+            d_model: 32,
+            batch: 2,
+        }
+    }
+
+    /// GPT-2-small analogue (paper App. C.2).
+    pub fn small() -> Self {
+        ModelConfig {
+            name: "small".into(),
+            vocab: 512,
+            seq: 128,
+            layers: 4,
+            heads: 4,
+            d_model: 128,
+            batch: 4,
+        }
+    }
+
+    /// GPT-2-XL analogue (deeper/wider; the paper's headline model).
+    pub fn xl() -> Self {
+        ModelConfig {
+            name: "xl".into(),
+            vocab: 512,
+            seq: 128,
+            layers: 8,
+            heads: 8,
+            d_model: 256,
+            batch: 4,
+        }
+    }
+
+    /// Look up a named config.
+    pub fn by_name(name: &str) -> Result<Self> {
+        match name {
+            "nano" => Ok(Self::nano()),
+            "small" => Ok(Self::small()),
+            "xl" => Ok(Self::xl()),
+            other => Err(Error::config(format!(
+                "unknown model config {other:?} (expected nano|small|xl)"
+            ))),
+        }
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.d_model % self.heads != 0 {
+            return Err(Error::config(format!(
+                "d_model {} not divisible by heads {}",
+                self.d_model, self.heads
+            )));
+        }
+        if self.vocab == 0 || self.seq == 0 || self.layers == 0 || self.batch == 0 {
+            return Err(Error::config("zero-sized model dimension".to_string()));
+        }
+        Ok(())
+    }
+
+    /// Serialize to the `.kv` metadata format shipped next to artifacts.
+    pub fn to_kv(&self) -> KvConfig {
+        let mut kv = KvConfig::new();
+        kv.set("model.name", &self.name);
+        kv.set("model.vocab", self.vocab);
+        kv.set("model.seq", self.seq);
+        kv.set("model.layers", self.layers);
+        kv.set("model.heads", self.heads);
+        kv.set("model.d_model", self.d_model);
+        kv.set("model.batch", self.batch);
+        kv
+    }
+
+    /// Parse from the `.kv` metadata format.
+    pub fn from_kv(kv: &KvConfig) -> Result<Self> {
+        let cfg = ModelConfig {
+            name: kv.require("model.name")?.to_string(),
+            vocab: kv.get_usize("model.vocab")?,
+            seq: kv.get_usize("model.seq")?,
+            layers: kv.get_usize("model.layers")?,
+            heads: kv.get_usize("model.heads")?,
+            d_model: kv.get_usize("model.d_model")?,
+            batch: kv.get_usize("model.batch")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lookup() {
+        assert_eq!(ModelConfig::by_name("xl").unwrap().layers, 8);
+        assert_eq!(ModelConfig::by_name("small").unwrap().layers, 4);
+        assert!(ModelConfig::by_name("gpt4").is_err());
+    }
+
+    #[test]
+    fn derived_dims() {
+        let c = ModelConfig::xl();
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.d_ff(), 1024);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn causal_product_count() {
+        let c = ModelConfig::nano();
+        // layers(2) * heads(2) * s(s+1)/2 with s=4 → 2*2*10 = 40
+        assert_eq!(c.causal_products(4), 40);
+    }
+
+    #[test]
+    fn xl_larger_than_small() {
+        assert!(ModelConfig::xl().param_count() > 2 * ModelConfig::small().param_count());
+    }
+
+    #[test]
+    fn kv_roundtrip() {
+        let c = ModelConfig::small();
+        let kv = c.to_kv();
+        let c2 = ModelConfig::from_kv(&kv).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ModelConfig::nano();
+        c.heads = 3; // 32 % 3 != 0
+        assert!(c.validate().is_err());
+        let mut c = ModelConfig::nano();
+        c.layers = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,74 @@
+//! Layer normalization (FP32, as in the paper's experimental setting where
+//! only KQ accumulation runs in PS(μ)).
+
+/// y = g ⊙ (x − mean)/√(var + ε) + b, applied in place over one vector.
+pub fn layernorm(x: &mut [f32], g: &[f32], b: &[f32], eps: f32) {
+    let n = x.len();
+    debug_assert_eq!(g.len(), n);
+    debug_assert_eq!(b.len(), n);
+    if n == 0 {
+        return;
+    }
+    let mean = x.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+    let var = x
+        .iter()
+        .map(|&v| {
+            let d = v as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n as f64;
+    let inv = 1.0 / (var + eps as f64).sqrt();
+    for i in 0..n {
+        x[i] = (((x[i] as f64 - mean) * inv) as f32) * g[i] + b[i];
+    }
+}
+
+/// Standard ε used by GPT-2.
+pub const LN_EPS: f32 = 1e-5;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn normalizes_mean_and_var() {
+        let mut rng = Rng::new(1);
+        let mut x: Vec<f32> = (0..64).map(|_| rng.normal_f32() * 3.0 + 5.0).collect();
+        let g = vec![1.0; 64];
+        let b = vec![0.0; 64];
+        layernorm(&mut x, &g, &b, LN_EPS);
+        let mean: f64 = x.iter().map(|&v| v as f64).sum::<f64>() / 64.0;
+        let var: f64 = x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / 64.0;
+        assert!(mean.abs() < 1e-5, "mean={mean}");
+        assert!((var - 1.0).abs() < 1e-3, "var={var}");
+    }
+
+    #[test]
+    fn scale_and_shift_applied() {
+        let mut x = vec![1.0f32, -1.0];
+        let g = vec![2.0; 2];
+        let b = vec![10.0; 2];
+        layernorm(&mut x, &g, &b, 0.0);
+        assert!((x[0] - 12.0).abs() < 1e-5);
+        assert!((x[1] - 8.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn constant_input_maps_to_bias() {
+        let mut x = vec![3.0f32; 8];
+        let g = vec![1.5; 8];
+        let b = vec![0.25; 8];
+        layernorm(&mut x, &g, &b, LN_EPS);
+        for &v in &x {
+            assert!((v - 0.25).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn empty_ok() {
+        let mut x: Vec<f32> = vec![];
+        layernorm(&mut x, &[], &[], LN_EPS);
+    }
+}

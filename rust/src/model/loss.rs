@@ -1,0 +1,72 @@
+//! Next-token cross-entropy / perplexity over logits (App. C.5 metric).
+
+use crate::linalg::Matrix;
+
+/// Per-token next-token negative log-likelihoods (natural log).
+///
+/// `logits` is [S, V]; position i predicts `tokens[i+1]`, so S−1 values are
+/// returned. Uses the log-sum-exp trick in f64.
+pub fn next_token_nll(logits: &Matrix, tokens: &[u32]) -> Vec<f64> {
+    let s = logits.rows();
+    assert_eq!(s, tokens.len());
+    let mut out = Vec::with_capacity(s.saturating_sub(1));
+    for i in 0..s.saturating_sub(1) {
+        let row = logits.row(i);
+        let target = tokens[i + 1] as usize;
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let lse: f64 = row.iter().map(|&v| ((v as f64) - m).exp()).sum::<f64>().ln() + m;
+        out.push(lse - row[target] as f64);
+    }
+    out
+}
+
+/// Perplexity = exp(mean NLL) over a stream of per-token NLLs.
+pub fn perplexity(nlls: &[f64]) -> f64 {
+    if nlls.is_empty() {
+        return f64::NAN;
+    }
+    (nlls.iter().sum::<f64>() / nlls.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_give_vocab_perplexity() {
+        // All-equal logits → uniform distribution → PPL = V.
+        let v = 16;
+        let s = 8;
+        let logits = Matrix::zeros(s, v);
+        let tokens: Vec<u32> = (0..s as u32).map(|i| i % v as u32).collect();
+        let nll = next_token_nll(&logits, &tokens);
+        assert_eq!(nll.len(), s - 1);
+        let ppl = perplexity(&nll);
+        assert!((ppl - v as f64).abs() < 1e-9, "ppl={ppl}");
+    }
+
+    #[test]
+    fn confident_correct_prediction_low_nll() {
+        let mut logits = Matrix::zeros(2, 4);
+        logits.set(0, 2, 20.0); // predicts token 2 strongly
+        let tokens = vec![0u32, 2u32];
+        let nll = next_token_nll(&logits, &tokens);
+        assert!(nll[0] < 1e-6, "nll={}", nll[0]);
+    }
+
+    #[test]
+    fn confident_wrong_prediction_high_nll() {
+        let mut logits = Matrix::zeros(2, 4);
+        logits.set(0, 1, 20.0); // predicts token 1
+        let tokens = vec![0u32, 2u32]; // actual next is 2
+        let nll = next_token_nll(&logits, &tokens);
+        assert!(nll[0] > 10.0, "nll={}", nll[0]);
+    }
+
+    #[test]
+    fn empty_stream() {
+        assert!(perplexity(&[]).is_nan());
+        let logits = Matrix::zeros(1, 4);
+        assert!(next_token_nll(&logits, &[0]).is_empty());
+    }
+}

@@ -1,0 +1,65 @@
+//! GPT-2 MLP block: fc → GELU → out, FP32.
+
+use crate::lamp::activation::Activation;
+use crate::linalg::matmul::matmul_bias_fast;
+use crate::linalg::Matrix;
+
+/// y = GELU(x·W_fc + b_fc)·W_out + b_out for a [S, d] activation matrix.
+///
+/// FP32 path (not part of the simulated PS(μ) arithmetic) — uses the
+/// vectorized matmul; see EXPERIMENTS.md §Perf.
+pub fn mlp(
+    x: &Matrix,
+    w_fc: &Matrix,
+    b_fc: &[f32],
+    w_out: &Matrix,
+    b_out: &[f32],
+) -> Matrix {
+    debug_assert_eq!(w_fc.rows(), x.cols());
+    debug_assert_eq!(w_out.shape(), (w_fc.cols(), x.cols()));
+    let mut hidden = matmul_bias_fast(x, w_fc, b_fc).expect("mlp fc shapes");
+    for h in hidden.data_mut() {
+        *h = Activation::Gelu.apply(*h);
+    }
+    matmul_bias_fast(&hidden, w_out, b_out).expect("mlp out shapes")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn shapes() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(3, 8, 1.0, &mut rng);
+        let w_fc = Matrix::randn(8, 32, 0.1, &mut rng);
+        let w_out = Matrix::randn(32, 8, 0.1, &mut rng);
+        let y = mlp(&x, &w_fc, &vec![0.0; 32], &w_out, &vec![0.0; 8]);
+        assert_eq!(y.shape(), (3, 8));
+    }
+
+    #[test]
+    fn zero_weights_yield_bias() {
+        let x = Matrix::zeros(2, 4);
+        let w_fc = Matrix::zeros(4, 16);
+        let w_out = Matrix::zeros(16, 4);
+        let b_out = vec![1.5f32; 4];
+        let y = mlp(&x, &w_fc, &vec![0.0; 16], &w_out, &b_out);
+        for i in 0..2 {
+            for j in 0..4 {
+                assert_eq!(y.get(i, j), 1.5);
+            }
+        }
+    }
+
+    #[test]
+    fn gelu_nonlinearity_applied() {
+        // One unit: x=1, w_fc=1, b=0 → GELU(1) ≈ 0.8412; w_out=1.
+        let x = Matrix::from_vec(1, 1, vec![1.0]).unwrap();
+        let w_fc = Matrix::from_vec(1, 1, vec![1.0]).unwrap();
+        let w_out = Matrix::from_vec(1, 1, vec![1.0]).unwrap();
+        let y = mlp(&x, &w_fc, &[0.0], &w_out, &[0.0]);
+        assert!((y.get(0, 0) - 0.8412).abs() < 1e-3, "{}", y.get(0, 0));
+    }
+}

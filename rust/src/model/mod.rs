@@ -1,0 +1,30 @@
+//! GPT-2-architecture transformer with LAMP mixed-precision attention —
+//! the **native engine**.
+//!
+//! This is a bit-exact Rust implementation of the same computation the L2
+//! JAX model (`python/compile/model.py`) lowers to HLO: pre-LN GPT-2 blocks
+//! whose key-query inner products are accumulated in PS(μ) with per-step
+//! rounding (paper §4.1) and selectively recomputed in FP32 according to a
+//! LAMP rule (§3.3/§4.4). Everything else runs in FP32, exactly as the
+//! paper's experimental setting prescribes.
+//!
+//! The native engine exists for three reasons:
+//! 1. *parity testing* — the PJRT engine is validated against it;
+//! 2. *instrumentation* — per-layer/per-head recomputation statistics;
+//! 3. *fast sweeps* — the experiment harness evaluates hundreds of (μ, τ)
+//!    points without FFI round trips.
+
+pub mod attention;
+pub mod config;
+pub mod forward;
+pub mod layernorm;
+pub mod loss;
+pub mod mlp;
+pub mod sampler;
+pub mod weights;
+
+pub use attention::{AttentionPrecision, LampStats};
+pub use config::ModelConfig;
+pub use forward::{forward, ForwardOutput};
+pub use sampler::{generate, Decode};
+pub use weights::Weights;

@@ -1,0 +1,259 @@
+//! Model parameters: loading from `.lamp` tensor files (produced by the
+//! Python compile path) and random initialization (for tests and the
+//! untrained baseline).
+
+use super::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::tensorio::TensorFile;
+use crate::util::Rng;
+use std::path::Path;
+
+/// One transformer block's parameters.
+#[derive(Debug, Clone)]
+pub struct BlockWeights {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    /// [d_model, 3·d_model] — fused QKV projection.
+    pub w_qkv: Matrix,
+    pub b_qkv: Vec<f32>,
+    /// [d_model, d_model] — attention output projection.
+    pub w_proj: Matrix,
+    pub b_proj: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    /// [d_model, d_ff].
+    pub w_fc: Matrix,
+    pub b_fc: Vec<f32>,
+    /// [d_ff, d_model].
+    pub w_out: Matrix,
+    pub b_out: Vec<f32>,
+}
+
+/// Full model parameters (embeddings tied to the output head).
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub config: ModelConfig,
+    /// Token embeddings [vocab, d_model].
+    pub wte: Matrix,
+    /// Positional embeddings [seq, d_model].
+    pub wpe: Matrix,
+    pub blocks: Vec<BlockWeights>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+}
+
+impl Weights {
+    /// GPT-2-style random initialization (N(0, 0.02), residual projections
+    /// scaled by 1/√(2L)).
+    pub fn random(config: &ModelConfig, rng: &mut Rng) -> Self {
+        config.validate().expect("valid config");
+        let d = config.d_model;
+        let resid_scale = 1.0 / ((2 * config.layers) as f32).sqrt();
+        let blocks = (0..config.layers)
+            .map(|l| {
+                let mut r = rng.fork(l as u64 + 1);
+                BlockWeights {
+                    ln1_g: vec![1.0; d],
+                    ln1_b: vec![0.0; d],
+                    w_qkv: Matrix::randn(d, 3 * d, 0.02, &mut r),
+                    b_qkv: vec![0.0; 3 * d],
+                    w_proj: Matrix::randn(d, d, 0.02 * resid_scale, &mut r),
+                    b_proj: vec![0.0; d],
+                    ln2_g: vec![1.0; d],
+                    ln2_b: vec![0.0; d],
+                    w_fc: Matrix::randn(d, config.d_ff(), 0.02, &mut r),
+                    b_fc: vec![0.0; config.d_ff()],
+                    w_out: Matrix::randn(config.d_ff(), d, 0.02 * resid_scale, &mut r),
+                    b_out: vec![0.0; d],
+                }
+            })
+            .collect();
+        Weights {
+            config: config.clone(),
+            wte: Matrix::randn(config.vocab, d, 0.02, rng),
+            wpe: Matrix::randn(config.seq, d, 0.01, rng),
+            blocks,
+            lnf_g: vec![1.0; d],
+            lnf_b: vec![0.0; d],
+        }
+    }
+
+    /// Load from a `.lamp` tensor file using the canonical naming scheme
+    /// (`wte`, `wpe`, `h{i}.ln1.g`, ..., `lnf.b`) written by
+    /// `python/compile/tensorio.py`.
+    pub fn load(path: impl AsRef<Path>, config: &ModelConfig) -> Result<Self> {
+        let file = TensorFile::load(path)?;
+        Self::from_tensor_file(&file, config)
+    }
+
+    /// Build from an in-memory [`TensorFile`].
+    pub fn from_tensor_file(file: &TensorFile, config: &ModelConfig) -> Result<Self> {
+        config.validate()?;
+        let d = config.d_model;
+        let mat = |name: &str, rows: usize, cols: usize| -> Result<Matrix> {
+            let t = file.require(name)?;
+            if t.dims != vec![rows, cols] {
+                return Err(Error::shape(format!(
+                    "{name}: expected [{rows}, {cols}], got {:?}",
+                    t.dims
+                )));
+            }
+            Matrix::from_vec(rows, cols, t.as_f32()?)
+        };
+        let vec1 = |name: &str, len: usize| -> Result<Vec<f32>> {
+            let t = file.require(name)?;
+            if t.dims != vec![len] {
+                return Err(Error::shape(format!(
+                    "{name}: expected [{len}], got {:?}",
+                    t.dims
+                )));
+            }
+            t.as_f32()
+        };
+        let mut blocks = Vec::with_capacity(config.layers);
+        for l in 0..config.layers {
+            let p = |s: &str| format!("h{l}.{s}");
+            blocks.push(BlockWeights {
+                ln1_g: vec1(&p("ln1.g"), d)?,
+                ln1_b: vec1(&p("ln1.b"), d)?,
+                w_qkv: mat(&p("attn.w_qkv"), d, 3 * d)?,
+                b_qkv: vec1(&p("attn.b_qkv"), 3 * d)?,
+                w_proj: mat(&p("attn.w_proj"), d, d)?,
+                b_proj: vec1(&p("attn.b_proj"), d)?,
+                ln2_g: vec1(&p("ln2.g"), d)?,
+                ln2_b: vec1(&p("ln2.b"), d)?,
+                w_fc: mat(&p("mlp.w_fc"), d, config.d_ff())?,
+                b_fc: vec1(&p("mlp.b_fc"), config.d_ff())?,
+                w_out: mat(&p("mlp.w_out"), config.d_ff(), d)?,
+                b_out: vec1(&p("mlp.b_out"), d)?,
+            });
+        }
+        Ok(Weights {
+            config: config.clone(),
+            wte: mat("wte", config.vocab, d)?,
+            wpe: mat("wpe", config.seq, d)?,
+            blocks,
+            lnf_g: vec1("lnf.g", d)?,
+            lnf_b: vec1("lnf.b", d)?,
+        })
+    }
+
+    /// Serialize into a [`TensorFile`] (inverse of [`Self::from_tensor_file`]).
+    pub fn to_tensor_file(&self) -> Result<TensorFile> {
+        use crate::tensorio::Tensor;
+        let mut f = TensorFile::new();
+        let c = &self.config;
+        f.push(Tensor::f32("wte", vec![c.vocab, c.d_model], self.wte.data())?)?;
+        f.push(Tensor::f32("wpe", vec![c.seq, c.d_model], self.wpe.data())?)?;
+        for (l, b) in self.blocks.iter().enumerate() {
+            let p = |s: &str| format!("h{l}.{s}");
+            f.push(Tensor::f32(p("ln1.g"), vec![c.d_model], &b.ln1_g)?)?;
+            f.push(Tensor::f32(p("ln1.b"), vec![c.d_model], &b.ln1_b)?)?;
+            f.push(Tensor::f32(p("attn.w_qkv"), vec![c.d_model, 3 * c.d_model], b.w_qkv.data())?)?;
+            f.push(Tensor::f32(p("attn.b_qkv"), vec![3 * c.d_model], &b.b_qkv)?)?;
+            f.push(Tensor::f32(p("attn.w_proj"), vec![c.d_model, c.d_model], b.w_proj.data())?)?;
+            f.push(Tensor::f32(p("attn.b_proj"), vec![c.d_model], &b.b_proj)?)?;
+            f.push(Tensor::f32(p("ln2.g"), vec![c.d_model], &b.ln2_g)?)?;
+            f.push(Tensor::f32(p("ln2.b"), vec![c.d_model], &b.ln2_b)?)?;
+            f.push(Tensor::f32(p("mlp.w_fc"), vec![c.d_model, c.d_ff()], b.w_fc.data())?)?;
+            f.push(Tensor::f32(p("mlp.b_fc"), vec![c.d_ff()], &b.b_fc)?)?;
+            f.push(Tensor::f32(p("mlp.w_out"), vec![c.d_ff(), c.d_model], b.w_out.data())?)?;
+            f.push(Tensor::f32(p("mlp.b_out"), vec![c.d_model], &b.b_out)?)?;
+        }
+        f.push(Tensor::f32("lnf.g", vec![c.d_model], &self.lnf_g)?)?;
+        f.push(Tensor::f32("lnf.b", vec![c.d_model], &self.lnf_b)?)?;
+        Ok(f)
+    }
+
+    /// The canonical artifact input order: the flat list of weight tensors
+    /// fed to the compiled HLO executable *after* (tokens, mu, tau, seed).
+    /// Must match `python/compile/model.py::weight_order`.
+    pub fn artifact_order(&self) -> Vec<(&'static str, Vec<f32>)> {
+        let mut out: Vec<(&'static str, Vec<f32>)> = Vec::new();
+        out.push(("wte", self.wte.data().to_vec()));
+        out.push(("wpe", self.wpe.data().to_vec()));
+        for b in &self.blocks {
+            out.push(("ln1.g", b.ln1_g.clone()));
+            out.push(("ln1.b", b.ln1_b.clone()));
+            out.push(("w_qkv", b.w_qkv.data().to_vec()));
+            out.push(("b_qkv", b.b_qkv.clone()));
+            out.push(("w_proj", b.w_proj.data().to_vec()));
+            out.push(("b_proj", b.b_proj.clone()));
+            out.push(("ln2.g", b.ln2_g.clone()));
+            out.push(("ln2.b", b.ln2_b.clone()));
+            out.push(("w_fc", b.w_fc.data().to_vec()));
+            out.push(("b_fc", b.b_fc.clone()));
+            out.push(("w_out", b.w_out.data().to_vec()));
+            out.push(("b_out", b.b_out.clone()));
+        }
+        out.push(("lnf.g", self.lnf_g.clone()));
+        out.push(("lnf.b", self.lnf_b.clone()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_init_shapes() {
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(1);
+        let w = Weights::random(&cfg, &mut rng);
+        assert_eq!(w.blocks.len(), 2);
+        assert_eq!(w.wte.shape(), (128, 32));
+        assert_eq!(w.blocks[0].w_qkv.shape(), (32, 96));
+        assert_eq!(w.blocks[0].w_fc.shape(), (32, 128));
+    }
+
+    #[test]
+    fn tensor_file_roundtrip() {
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(2);
+        let w = Weights::random(&cfg, &mut rng);
+        let f = w.to_tensor_file().unwrap();
+        let w2 = Weights::from_tensor_file(&f, &cfg).unwrap();
+        assert_eq!(w.wte, w2.wte);
+        assert_eq!(w.blocks[1].w_out, w2.blocks[1].w_out);
+        assert_eq!(w.lnf_g, w2.lnf_g);
+    }
+
+    #[test]
+    fn missing_tensor_rejected() {
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(3);
+        let w = Weights::random(&cfg, &mut rng);
+        let f = w.to_tensor_file().unwrap();
+        // Ask for a config with more layers than the file provides.
+        let mut bigger = cfg.clone();
+        bigger.layers = 3;
+        assert!(Weights::from_tensor_file(&f, &bigger).is_err());
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(4);
+        let w = Weights::random(&cfg, &mut rng);
+        let f = w.to_tensor_file().unwrap();
+        let mut wider = cfg.clone();
+        wider.d_model = 64;
+        wider.heads = 2;
+        assert!(Weights::from_tensor_file(&f, &wider).is_err());
+    }
+
+    #[test]
+    fn artifact_order_layout() {
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(5);
+        let w = Weights::random(&cfg, &mut rng);
+        let order = w.artifact_order();
+        // 2 (emb) + 12 per layer × 2 + 2 (final ln) = 28
+        assert_eq!(order.len(), 28);
+        assert_eq!(order[0].0, "wte");
+        assert_eq!(order[2].0, "ln1.g");
+        assert_eq!(order.last().unwrap().0, "lnf.b");
+    }
+}

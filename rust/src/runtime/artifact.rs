@@ -1,0 +1,100 @@
+//! Artifact discovery and loading: HLO text modules, `.lamp` weights,
+//! `.kv` metadata produced by `make artifacts`.
+
+use crate::config::KvConfig;
+use crate::error::{Error, Result};
+use crate::model::{ModelConfig, Weights};
+use std::path::{Path, PathBuf};
+
+/// Locates and validates the artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Open an artifact directory (does not scan eagerly).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            return Err(Error::config(format!(
+                "artifact directory {dir:?} does not exist — run `make artifacts`"
+            )));
+        }
+        Ok(ArtifactStore { dir })
+    }
+
+    /// Default location relative to the repo root, overridable with
+    /// `LAMP_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("LAMP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path to the lowered model HLO for `config`.
+    pub fn model_hlo(&self, config: &str) -> PathBuf {
+        self.dir.join(format!("model_{config}.hlo.txt"))
+    }
+
+    /// Path to a standalone kernel HLO.
+    pub fn kernel_hlo(&self, kernel: &str) -> PathBuf {
+        self.dir.join(format!("kernel_{kernel}.hlo.txt"))
+    }
+
+    /// Load the model hyperparameters recorded at artifact build time.
+    pub fn model_config(&self, config: &str) -> Result<ModelConfig> {
+        let kv = KvConfig::load(self.dir.join(format!("meta_{config}.kv")))?;
+        ModelConfig::from_kv(&kv)
+    }
+
+    /// Load the trained weights for `config`.
+    pub fn weights(&self, config: &str) -> Result<Weights> {
+        let cfg = self.model_config(config)?;
+        Weights::load(self.dir.join(format!("weights_{config}.lamp")), &cfg)
+    }
+
+    /// Names of model configs with complete artifact sets present.
+    pub fn available_models(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for name in ["nano", "small", "xl"] {
+            if self.model_hlo(name).is_file()
+                && self.dir.join(format!("weights_{name}.lamp")).is_file()
+                && self.dir.join(format!("meta_{name}.kv")).is_file()
+            {
+                out.push(name.to_string());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_rejected() {
+        assert!(ArtifactStore::open("/nonexistent/lamp-artifacts").is_err());
+    }
+
+    #[test]
+    fn paths_formed_correctly() {
+        let tmp = std::env::temp_dir();
+        let store = ArtifactStore::open(&tmp).unwrap();
+        assert!(store.model_hlo("xl").ends_with("model_xl.hlo.txt"));
+        assert!(store.kernel_hlo("ps_matmul").ends_with("kernel_ps_matmul.hlo.txt"));
+    }
+
+    #[test]
+    fn empty_dir_has_no_models() {
+        let tmp = std::env::temp_dir().join("lamp_empty_artifacts");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let store = ArtifactStore::open(&tmp).unwrap();
+        assert!(store.available_models().is_empty());
+    }
+}

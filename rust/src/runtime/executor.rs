@@ -1,0 +1,229 @@
+//! Compiled-model executor: owns a PJRT CPU client, a compiled executable
+//! and the device-resident weights, and runs batched LAMP forward passes.
+
+use super::artifact::ArtifactStore;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::model::{ModelConfig, Weights};
+
+/// A batched inference request against a compiled model artifact.
+#[derive(Debug, Clone)]
+pub struct ModelRequest {
+    /// Token ids, `batch` rows of `seq` tokens (must match the artifact's
+    /// baked shape exactly; the coordinator pads).
+    pub tokens: Vec<Vec<u32>>,
+    /// Mantissa bits for KQ accumulation (1..=23).
+    pub mu: u32,
+    /// LAMP threshold (f32::INFINITY = uniform low precision).
+    pub tau: f32,
+    /// Seed for the Random rule.
+    pub seed: i32,
+    /// Selection rule code (0 strict, 1 relaxed, 2 relaxed-LN, 3 random) —
+    /// see `coordinator::policy`.
+    pub mode: i32,
+}
+
+/// Result of one batched forward.
+#[derive(Debug, Clone)]
+pub struct ModelResponse {
+    /// Per-sequence logits [S, V].
+    pub logits: Vec<Matrix>,
+    /// KQ inner products recomputed in FP32 (whole batch).
+    pub recomputed: u64,
+    /// Causal KQ products in the batch.
+    pub causal_total: u64,
+}
+
+/// A compiled model bound to its weights.
+pub struct ModelExecutor {
+    config: ModelConfig,
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Weight buffers in artifact order, transferred to the device once at
+    /// load time (§Perf: avoids re-uploading the full parameter set on
+    /// every batched call).
+    weight_buffers: Vec<xla::PjRtBuffer>,
+}
+
+impl ModelExecutor {
+    /// Compile `model_<config>.hlo.txt` and stage the trained weights.
+    pub fn load(store: &ArtifactStore, config_name: &str) -> Result<Self> {
+        let config = store.model_config(config_name)?;
+        let weights = store.weights(config_name)?;
+        let client = xla::PjRtClient::cpu()?;
+        let path = store.model_hlo(config_name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::config("non-UTF8 artifact path".to_string()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        let weight_buffers = Self::stage_weights(&client, &weights)?;
+        Ok(ModelExecutor { config, client, exe, weight_buffers })
+    }
+
+    /// Build an executor from explicit parts (tests use random weights).
+    pub fn from_parts(
+        config: ModelConfig,
+        hlo_path: &std::path::Path,
+        weights: &Weights,
+    ) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| Error::config("non-UTF8 artifact path".to_string()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        let weight_buffers = Self::stage_weights(&client, &weights)?;
+        Ok(ModelExecutor { config, client, exe, weight_buffers })
+    }
+
+    fn stage_weights(
+        client: &xla::PjRtClient,
+        weights: &Weights,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let cfg = &weights.config;
+        let mut bufs = Vec::new();
+        let shapes = weight_shapes(cfg);
+        let flat = weights.artifact_order();
+        if flat.len() != shapes.len() {
+            return Err(Error::invariant("artifact order length mismatch".to_string()));
+        }
+        for ((_, data), dims) in flat.iter().zip(shapes) {
+            bufs.push(client.buffer_from_host_buffer(data, &dims, None)?);
+        }
+        Ok(bufs)
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    /// Execute one batched forward pass.
+    pub fn execute(&self, req: &ModelRequest) -> Result<ModelResponse> {
+        let cfg = &self.config;
+        if req.tokens.len() != cfg.batch {
+            return Err(Error::shape(format!(
+                "batch {} != artifact batch {}",
+                req.tokens.len(),
+                cfg.batch
+            )));
+        }
+        if !(1..=23).contains(&req.mu) {
+            return Err(Error::config(format!("mu {} out of 1..=23", req.mu)));
+        }
+        let mut flat_tokens = Vec::with_capacity(cfg.batch * cfg.seq);
+        for row in &req.tokens {
+            if row.len() != cfg.seq {
+                return Err(Error::shape(format!(
+                    "sequence length {} != artifact seq {}",
+                    row.len(),
+                    cfg.seq
+                )));
+            }
+            for &t in row {
+                if t as usize >= cfg.vocab {
+                    return Err(Error::shape(format!("token {t} >= vocab {}", cfg.vocab)));
+                }
+                flat_tokens.push(t as i32);
+            }
+        }
+        let tokens_buf = self.client.buffer_from_host_buffer(
+            &flat_tokens,
+            &[cfg.batch, cfg.seq],
+            None,
+        )?;
+        let mu_buf = self
+            .client
+            .buffer_from_host_buffer(&[req.mu as i32], &[], None)?;
+        let tau_buf = self.client.buffer_from_host_buffer(&[req.tau], &[], None)?;
+        let seed_buf = self.client.buffer_from_host_buffer(&[req.seed], &[], None)?;
+        let mode_buf = self.client.buffer_from_host_buffer(&[req.mode], &[], None)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(5 + self.weight_buffers.len());
+        args.push(&tokens_buf);
+        args.push(&mu_buf);
+        args.push(&tau_buf);
+        args.push(&seed_buf);
+        args.push(&mode_buf);
+        for w in &self.weight_buffers {
+            args.push(w);
+        }
+
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let elems = result.to_tuple()?;
+        if elems.len() != 3 {
+            return Err(Error::runtime(format!(
+                "expected 3 outputs, got {}",
+                elems.len()
+            )));
+        }
+        let logits_flat = elems[0].to_vec::<f32>()?;
+        let recomputed = elems[1].to_vec::<f32>()?[0] as u64;
+        let causal_total = elems[2].to_vec::<f32>()?[0] as u64;
+        let per_seq = cfg.seq * cfg.vocab;
+        if logits_flat.len() != cfg.batch * per_seq {
+            return Err(Error::runtime(format!(
+                "logits size {} != expected {}",
+                logits_flat.len(),
+                cfg.batch * per_seq
+            )));
+        }
+        let mut logits = Vec::with_capacity(cfg.batch);
+        for b in 0..cfg.batch {
+            logits.push(Matrix::from_vec(
+                cfg.seq,
+                cfg.vocab,
+                logits_flat[b * per_seq..(b + 1) * per_seq].to_vec(),
+            )?);
+        }
+        Ok(ModelResponse { logits, recomputed, causal_total })
+    }
+}
+
+/// The artifact-order tensor shapes for `cfg` (mirrors
+/// `python/compile/model.py::weight_order`).
+pub fn weight_shapes(cfg: &ModelConfig) -> Vec<Vec<usize>> {
+    let d = cfg.d_model;
+    let dff = cfg.d_ff();
+    let mut out = vec![vec![cfg.vocab, d], vec![cfg.seq, d]];
+    for _ in 0..cfg.layers {
+        out.push(vec![d]);
+        out.push(vec![d]);
+        out.push(vec![d, 3 * d]);
+        out.push(vec![3 * d]);
+        out.push(vec![d, d]);
+        out.push(vec![d]);
+        out.push(vec![d]);
+        out.push(vec![d]);
+        out.push(vec![d, dff]);
+        out.push(vec![dff]);
+        out.push(vec![dff, d]);
+        out.push(vec![d]);
+    }
+    out.push(vec![d]);
+    out.push(vec![d]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_shapes_match_artifact_order() {
+        let cfg = ModelConfig::nano();
+        let mut rng = crate::util::Rng::new(1);
+        let w = Weights::random(&cfg, &mut rng);
+        let order = w.artifact_order();
+        let shapes = weight_shapes(&cfg);
+        assert_eq!(order.len(), shapes.len());
+        for ((name, data), dims) in order.iter().zip(&shapes) {
+            let n: usize = dims.iter().product();
+            assert_eq!(data.len(), n, "{name}");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT-lowered HLO text artifacts, compile once on the
+//! CPU PJRT client, and execute them from the request path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md: xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids).
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::ArtifactStore;
+pub use executor::{ModelExecutor, ModelRequest, ModelResponse};

@@ -1,0 +1,217 @@
+//! Inner products under different accumulation regimes.
+//!
+//! The paper's mixed-precision model (§4.1): operands are FP32, the
+//! multiply-add happens in FP32, and the running accumulator is rounded to
+//! PS(μ) after every step — `c ← round(fma(a, b, c))`. The fused
+//! multiply-add (one rounding) is the canonical step: it matches both the
+//! hardware FMA the XLA CPU backend contracts to (so the native and PJRT
+//! engines agree bit-for-bit on PS scores) and the FMA-based
+//! mixed-precision algorithms of §2.2.1. LAMP then *recomputes* a selected
+//! sparse subset of inner products with a more accurate method (here: FP32
+//! accumulation, the paper's choice; Kahan-compensated summation is
+//! provided as the "more accurate algorithm" variant of §2.2.1).
+
+use super::round::{round_to_mantissa, round_to_mantissa_stochastic};
+use crate::util::Rng;
+
+/// How an inner product is accumulated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccumMode {
+    /// Per-step rounding to PS(μ) with RNE — the paper's low-precision path.
+    PsNearest { mu: u32 },
+    /// Per-step stochastic rounding to PS(μ) — §2.2.1 extension (c_g ~ √k).
+    PsStochastic { mu: u32 },
+    /// Plain FP32 accumulation — the paper's recomputation path.
+    Fp32,
+    /// Kahan-compensated FP32 — "more accurate algorithm" with c_g = O(1).
+    Kahan,
+}
+
+/// Inner product with per-step PS(μ) rounding (RNE):
+/// `c_0 = 0; c_i = round(fma(a_i, b_i, c_{i-1}))`.
+#[inline]
+pub fn dot_ps(a: &[f32], b: &[f32], mu: u32) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut c = 0.0f32;
+    for i in 0..a.len() {
+        c = round_to_mantissa(a[i].mul_add(b[i], c), mu);
+    }
+    c
+}
+
+/// Inner product with per-step stochastic PS(μ) rounding.
+#[inline]
+pub fn dot_ps_stochastic(a: &[f32], b: &[f32], mu: u32, rng: &mut Rng) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut c = 0.0f32;
+    for i in 0..a.len() {
+        c = round_to_mantissa_stochastic(a[i].mul_add(b[i], c), mu, rng);
+    }
+    c
+}
+
+/// Plain FP32 inner product (sequential FMA order, matching `dot_ps` at
+/// μ=23 bit-for-bit).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut c = 0.0f32;
+    for i in 0..a.len() {
+        c = a[i].mul_add(b[i], c);
+    }
+    c
+}
+
+/// Kahan-compensated inner product: error constant O(1) instead of O(k).
+#[inline]
+pub fn dot_kahan(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    let mut comp = 0.0f32;
+    for i in 0..a.len() {
+        let y = a[i] * b[i] - comp;
+        let t = s + y;
+        comp = (t - s) - y;
+        s = t;
+    }
+    s
+}
+
+/// Double-precision reference (used only in tests/metrics, never on the
+/// simulated low-precision path).
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Accumulate with the given [`AccumMode`].
+pub fn dot_with_mode(a: &[f32], b: &[f32], mode: AccumMode, rng: &mut Rng) -> f32 {
+    match mode {
+        AccumMode::PsNearest { mu } => dot_ps(a, b, mu),
+        AccumMode::PsStochastic { mu } => dot_ps_stochastic(a, b, mu, rng),
+        AccumMode::Fp32 => dot_f32(a, b),
+        AccumMode::Kahan => dot_kahan(a, b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randvec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| (rng.f32() - 0.5) * scale).collect()
+    }
+
+    #[test]
+    fn ps23_matches_fp32_sequential() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let n = rng.range(1, 128);
+            let a = randvec(&mut rng, n, 2.0);
+            let b = randvec(&mut rng, n, 2.0);
+            assert_eq!(dot_ps(&a, &b, 23).to_bits(), dot_f32(&a, &b).to_bits());
+        }
+    }
+
+    #[test]
+    fn low_mu_is_less_accurate() {
+        let mut rng = Rng::new(2);
+        let n = 256;
+        let (mut err4, mut err10) = (0.0f64, 0.0f64);
+        for _ in 0..50 {
+            let a = randvec(&mut rng, n, 2.0);
+            let b = randvec(&mut rng, n, 2.0);
+            let exact = dot_f64(&a, &b);
+            err4 += (dot_ps(&a, &b, 4) as f64 - exact).abs();
+            err10 += (dot_ps(&a, &b, 10) as f64 - exact).abs();
+        }
+        assert!(err4 > err10 * 4.0, "err4={err4} err10={err10}");
+    }
+
+    #[test]
+    fn kahan_beats_naive_on_hard_sums() {
+        // Alternating large/small values expose naive accumulation error.
+        let n = 4000;
+        let mut a = Vec::with_capacity(n);
+        for i in 0..n {
+            a.push(if i % 2 == 0 { 1e6f32 } else { 0.123f32 });
+        }
+        let b = vec![1.0f32; n];
+        let exact = dot_f64(&a, &b);
+        let e_naive = (dot_f32(&a, &b) as f64 - exact).abs();
+        let e_kahan = (dot_kahan(&a, &b) as f64 - exact).abs();
+        assert!(e_kahan <= e_naive, "kahan={e_kahan} naive={e_naive}");
+    }
+
+    #[test]
+    fn empty_dot_is_zero() {
+        assert_eq!(dot_ps(&[], &[], 7), 0.0);
+        assert_eq!(dot_f32(&[], &[]), 0.0);
+        assert_eq!(dot_kahan(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn stochastic_mean_close_to_exact() {
+        let mut rng = Rng::new(3);
+        let n = 64;
+        let a = randvec(&mut rng, n, 1.0);
+        let b = randvec(&mut rng, n, 1.0);
+        let exact = dot_f64(&a, &b);
+        let trials = 2000;
+        let mut mean = 0.0f64;
+        for _ in 0..trials {
+            mean += dot_ps_stochastic(&a, &b, 4, &mut rng) as f64;
+        }
+        mean /= trials as f64;
+        // Deterministic RNE can have bias of order u*k*|dot| — stochastic
+        // mean should sit close to exact relative to one PS(4) ulp of the
+        // running magnitude.
+        let tol = 2.0f64.powi(-5) * a.iter().map(|x| x.abs() as f64).sum::<f64>() * 0.5;
+        assert!((mean - exact).abs() < tol, "mean={mean} exact={exact} tol={tol}");
+    }
+
+    #[test]
+    fn mode_dispatch() {
+        let mut rng = Rng::new(4);
+        let a = randvec(&mut rng, 32, 1.0);
+        let b = randvec(&mut rng, 32, 1.0);
+        assert_eq!(
+            dot_with_mode(&a, &b, AccumMode::Fp32, &mut rng),
+            dot_f32(&a, &b)
+        );
+        assert_eq!(
+            dot_with_mode(&a, &b, AccumMode::PsNearest { mu: 7 }, &mut rng),
+            dot_ps(&a, &b, 7)
+        );
+        assert_eq!(
+            dot_with_mode(&a, &b, AccumMode::Kahan, &mut rng),
+            dot_kahan(&a, &b)
+        );
+    }
+
+    #[test]
+    fn error_bound_cg_k() {
+        // |dot_ps - exact| <= k * u * sum|a_i b_i| to first order (c_g = k
+        // for deterministic rounding, §2.2.1). Check with slack factor 2.
+        let mut rng = Rng::new(5);
+        for mu in [4u32, 7, 10] {
+            let u = 2.0f64.powi(-(mu as i32) - 1);
+            for _ in 0..100 {
+                let n = rng.range(2, 200);
+                let a = randvec(&mut rng, n, 2.0);
+                let b = randvec(&mut rng, n, 2.0);
+                let exact = dot_f64(&a, &b);
+                let got = dot_ps(&a, &b, mu) as f64;
+                let bound: f64 = 2.0
+                    * n as f64
+                    * u
+                    * a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum::<f64>();
+                assert!(
+                    (got - exact).abs() <= bound + 1e-12,
+                    "n={n} mu={mu} err={} bound={bound}",
+                    (got - exact).abs()
+                );
+            }
+        }
+    }
+}

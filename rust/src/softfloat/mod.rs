@@ -1,0 +1,22 @@
+//! The PS(μ) custom floating-point format of paper §4.1 and the
+//! mixed-precision accumulation primitives built on it.
+//!
+//! `PS(μ)` has μ ∈ {1..23} mantissa bits, 8 exponent bits and one sign bit:
+//! it coincides with FP32 at μ=23, TF32 at μ=10, and BF16 at μ=7. Values are
+//! represented as FP32 numbers rounded to μ mantissa bits with
+//! round-to-nearest-ties-to-even (RNE), exactly as the paper simulates.
+//!
+//! * [`round`] — bit-exact RNE rounding (and a stochastic-rounding
+//!   extension, cf. §2.2.1 of the paper / Connolly–Higham–Mary).
+//! * [`ps`] — the [`ps::Ps`] wrapper type and format metadata.
+//! * [`dot`] — inner products with per-step `round(c + a·b)` accumulation
+//!   (the paper's simulated low-precision accumulator) and higher-accuracy
+//!   alternatives (FP32, compensated/Kahan) used for LAMP recomputation.
+
+pub mod dot;
+pub mod ps;
+pub mod round;
+
+pub use dot::{dot_f32, dot_kahan, dot_ps, AccumMode};
+pub use ps::{Ps, PsFormat};
+pub use round::{round_to_mantissa, round_to_mantissa_stochastic, ulp_at, RoundMode};

@@ -1,0 +1,143 @@
+//! The [`Ps`] value type: an FP32 payload constrained to a PS(μ) grid, plus
+//! [`PsFormat`] metadata describing the format family of paper §4.1.
+
+use super::round::{round_to_mantissa, unit_roundoff};
+use std::fmt;
+
+/// Metadata for the PS(μ) format family: μ mantissa bits, 8 exponent bits,
+/// one sign bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PsFormat {
+    /// Number of explicit mantissa bits, 1..=23.
+    pub mu: u32,
+}
+
+impl PsFormat {
+    pub const FP32: PsFormat = PsFormat { mu: 23 };
+    pub const TF32: PsFormat = PsFormat { mu: 10 };
+    pub const BF16: PsFormat = PsFormat { mu: 7 };
+
+    /// Construct; panics unless 1 <= mu <= 23.
+    pub fn new(mu: u32) -> Self {
+        assert!((1..=23).contains(&mu), "mu={mu} out of range");
+        PsFormat { mu }
+    }
+
+    /// Unit round-off u = 2^(-μ-1).
+    pub fn unit_roundoff(self) -> f64 {
+        unit_roundoff(self.mu)
+    }
+
+    /// Well-known name if this format matches a standard one.
+    pub fn name(self) -> String {
+        match self.mu {
+            23 => "FP32".to_string(),
+            10 => "TF32".to_string(),
+            7 => "BF16".to_string(),
+            mu => format!("PS({mu})"),
+        }
+    }
+
+    /// Quantize an f32 onto this format's grid (RNE).
+    #[inline]
+    pub fn quantize(self, x: f32) -> f32 {
+        round_to_mantissa(x, self.mu)
+    }
+}
+
+impl fmt::Display for PsFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// An FP32 payload guaranteed to lie on the PS(μ) grid.
+///
+/// Arithmetic is FP32 multiply/add followed by a rounding step — exactly the
+/// paper's simulated accumulator `round(c + a·b)`.
+#[derive(Debug, Clone, Copy)]
+pub struct Ps {
+    value: f32,
+    fmt: PsFormat,
+}
+
+impl Ps {
+    /// Quantize `x` into format `fmt`.
+    pub fn new(x: f32, fmt: PsFormat) -> Self {
+        Ps { value: fmt.quantize(x), fmt }
+    }
+
+    /// The FP32 payload (always on the grid).
+    #[inline]
+    pub fn get(self) -> f32 {
+        self.value
+    }
+
+    /// The format.
+    pub fn format(self) -> PsFormat {
+        self.fmt
+    }
+
+    /// Fused accumulate: `round(self + a*b)` with FP32 multiply and add.
+    #[inline]
+    pub fn fma(self, a: f32, b: f32) -> Ps {
+        Ps::new(self.value + a * b, self.fmt)
+    }
+
+    /// `round(self + rhs)`.
+    #[inline]
+    pub fn add(self, rhs: f32) -> Ps {
+        Ps::new(self.value + rhs, self.fmt)
+    }
+
+    /// `round(self * rhs)`.
+    #[inline]
+    pub fn mul(self, rhs: f32) -> Ps {
+        Ps::new(self.value * rhs, self.fmt)
+    }
+}
+
+impl PartialEq for Ps {
+    fn eq(&self, other: &Self) -> bool {
+        self.value.to_bits() == other.value.to_bits() && self.fmt == other.fmt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_formats() {
+        assert_eq!(PsFormat::FP32.name(), "FP32");
+        assert_eq!(PsFormat::TF32.name(), "TF32");
+        assert_eq!(PsFormat::BF16.name(), "BF16");
+        assert_eq!(PsFormat::new(4).name(), "PS(4)");
+    }
+
+    #[test]
+    fn quantize_on_grid() {
+        let f = PsFormat::new(5);
+        let q = f.quantize(std::f32::consts::PI);
+        assert_eq!(f.quantize(q), q); // idempotent
+        let low = q.to_bits() & ((1u32 << 18) - 1);
+        assert_eq!(low, 0);
+    }
+
+    #[test]
+    fn fma_rounds_each_step() {
+        // BF16 accumulator: 256 + 0.5 rounds back to 256 (0.5 < half ulp at
+        // 256 which is 2^8 * 2^-8 = 1 → tie, rounds to even = 256).
+        let acc = Ps::new(256.0, PsFormat::BF16);
+        let r = acc.fma(0.5, 1.0);
+        assert_eq!(r.get(), 256.0);
+        // FP32 accumulator keeps it.
+        let acc = Ps::new(256.0, PsFormat::FP32);
+        assert_eq!(acc.fma(0.5, 1.0).get(), 256.5);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(format!("{}", PsFormat::new(7)), "BF16");
+    }
+}

@@ -1,0 +1,286 @@
+//! Bit-exact rounding of FP32 values to μ mantissa bits.
+//!
+//! This is the software simulation of the paper's PS(μ) format (§4.1):
+//! "we implement PS(μ) numbers via FP32 numbers rounded to μ mantissa bits
+//! according to the round-to-nearest-ties-to-even mode".
+//!
+//! The same bit-twiddling algorithm is implemented in the L1 Pallas kernel
+//! (`python/compile/kernels/ps_round.py`); `python/tests/test_ps_round.py`
+//! and the cross-layer integration test pin the two implementations to each
+//! other through golden vectors.
+
+use crate::util::Rng;
+
+/// Rounding mode for PS(μ) conversion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Round to nearest, ties to even (IEEE default; the paper's mode).
+    NearestEven,
+    /// Stochastic rounding: round up with probability proportional to the
+    /// discarded fraction. Extension discussed in §2.2.1 (c_g ~ √k bound).
+    Stochastic,
+}
+
+/// Round an FP32 value to `mu` mantissa bits with round-to-nearest-ties-to-even.
+///
+/// * `mu` must be in `1..=23`; `mu == 23` is the identity.
+/// * NaNs and infinities are returned unchanged.
+/// * Subnormals are rounded on their raw bit patterns, which matches rounding
+///   the subnormal mantissa field (the exponent field is zero).
+/// * Mantissa overflow carries into the exponent, which is correct RNE
+///   behaviour (e.g. 1.9999 → 2.0); overflow past the max exponent yields ±inf.
+#[inline]
+pub fn round_to_mantissa(x: f32, mu: u32) -> f32 {
+    assert!((1..=23).contains(&mu), "mu={mu} out of range 1..=23");
+    if mu == 23 || !x.is_finite() {
+        return x;
+    }
+    let shift = 23 - mu;
+    let u = x.to_bits();
+    // RNE on the integer representation: add (half-ulp - 1) + lsb-of-kept,
+    // then truncate. Sign bit participates only via the kept-field carry,
+    // which cannot propagate into it for finite inputs that round to finite
+    // values; rounding past f32::MAX correctly lands on the infinity pattern.
+    let lsb = (u >> shift) & 1;
+    let bias = (1u32 << (shift - 1)) - 1 + lsb;
+    let r = (u.wrapping_add(bias) >> shift) << shift;
+    f32::from_bits(r)
+}
+
+/// Stochastically round an FP32 value to `mu` mantissa bits.
+///
+/// The discarded low bits `frac` of the mantissa are compared against a
+/// uniform random draw; the value rounds away from zero iff
+/// `draw < frac / 2^shift`. Unbiased: E[round(x)] = x for finite x.
+#[inline]
+pub fn round_to_mantissa_stochastic(x: f32, mu: u32, rng: &mut Rng) -> f32 {
+    assert!((1..=23).contains(&mu), "mu={mu} out of range 1..=23");
+    if mu == 23 || !x.is_finite() {
+        return x;
+    }
+    let shift = 23 - mu;
+    let u = x.to_bits();
+    let frac = u & ((1u32 << shift) - 1);
+    let draw = (rng.next_u32() & ((1u32 << shift) - 1)) as u32;
+    let r = if draw < frac {
+        ((u >> shift) + 1) << shift
+    } else {
+        (u >> shift) << shift
+    };
+    f32::from_bits(r)
+}
+
+/// Round with the given [`RoundMode`].
+#[inline]
+pub fn round_with_mode(x: f32, mu: u32, mode: RoundMode, rng: &mut Rng) -> f32 {
+    match mode {
+        RoundMode::NearestEven => round_to_mantissa(x, mu),
+        RoundMode::Stochastic => round_to_mantissa_stochastic(x, mu, rng),
+    }
+}
+
+/// The unit in the last place of `x` in the PS(μ) format: the spacing of
+/// representable PS(μ) numbers at the magnitude of `x`.
+pub fn ulp_at(x: f32, mu: u32) -> f32 {
+    assert!((1..=23).contains(&mu));
+    if !x.is_finite() {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        // Spacing of subnormal PS(μ) numbers.
+        return f32::from_bits(1u32 << (23 - mu));
+    }
+    let e = (x.abs().to_bits() >> 23) as i32 - 127;
+    // ulp = 2^(e - mu); may be subnormal.
+    let exp = e - mu as i32;
+    if exp >= -126 {
+        f32::from_bits(((exp + 127) as u32) << 23)
+    } else {
+        // Subnormal spacing: 2^exp as a subnormal has its single mantissa
+        // bit at position exp + 149 (value of bit p is 2^(p-149)).
+        let p = exp + 149;
+        if p < 0 {
+            0.0
+        } else {
+            f32::from_bits(1u32 << p as u32)
+        }
+    }
+}
+
+/// The unit round-off u(μ) = 2^(−μ−1) of the PS(μ) format.
+pub fn unit_roundoff(mu: u32) -> f64 {
+    assert!((1..=23).contains(&mu));
+    (2.0f64).powi(-(mu as i32) - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_at_mu23() {
+        let xs = [0.0f32, -1.5, 3.14159, 1e-38, 1e38, f32::MIN_POSITIVE];
+        for &x in &xs {
+            assert_eq!(round_to_mantissa(x, 23).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_examples() {
+        // BF16 = PS(7). 1 + 2^-8 is exactly halfway between 1 and 1+2^-7:
+        // ties-to-even rounds down to 1.0.
+        let x = 1.0f32 + 2.0f32.powi(-8);
+        assert_eq!(round_to_mantissa(x, 7), 1.0);
+        // 1 + 3*2^-8 is halfway between 1+2^-7 and 1+2^-6: ties-to-even
+        // rounds to even mantissa = 1 + 2^-6.
+        let x = 1.0f32 + 3.0 * 2.0f32.powi(-8);
+        assert_eq!(round_to_mantissa(x, 7), 1.0 + 2.0f32.powi(-6));
+        // Slightly above the tie rounds up.
+        let x = 1.0f32 + 2.0f32.powi(-8) + 2.0f32.powi(-20);
+        assert_eq!(round_to_mantissa(x, 7), 1.0 + 2.0f32.powi(-7));
+    }
+
+    #[test]
+    fn sign_symmetry() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = (rng.f32() - 0.5) * 100.0;
+            for mu in [1, 4, 7, 10, 16, 23] {
+                assert_eq!(
+                    round_to_mantissa(-x, mu).to_bits(),
+                    (-round_to_mantissa(x, mu)).to_bits(),
+                    "x={x} mu={mu}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            let x = (rng.f32() - 0.5) * 1e6;
+            for mu in [1, 3, 7, 10, 15] {
+                let r = round_to_mantissa(x, mu);
+                assert_eq!(round_to_mantissa(r, mu).to_bits(), r.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn error_within_half_ulp() {
+        let mut rng = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = (rng.f32() - 0.5) * 1e3;
+            for mu in [2, 5, 7, 10, 12] {
+                let r = round_to_mantissa(x, mu);
+                let rel = ((r - x) / x).abs() as f64;
+                // |δ| <= u = 2^(-mu-1) for normal x.
+                assert!(
+                    rel <= unit_roundoff(mu) * (1.0 + 1e-6),
+                    "x={x} mu={mu} rel={rel:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mantissa_bits_cleared() {
+        let mut rng = Rng::new(4);
+        for _ in 0..10_000 {
+            let x = (rng.f32() - 0.5) * 1e4;
+            for mu in [1, 4, 7, 10] {
+                let r = round_to_mantissa(x, mu);
+                if r.is_finite() {
+                    let low = r.to_bits() & ((1u32 << (23 - mu)) - 1);
+                    assert_eq!(low, 0, "x={x} mu={mu}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn carry_into_exponent() {
+        // Largest PS-representable mantissa rounds up to the next binade.
+        let x = 1.9999999f32;
+        assert_eq!(round_to_mantissa(x, 4), 2.0);
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        let x = f32::MAX; // mantissa all ones
+        let r = round_to_mantissa(x, 4);
+        assert!(r.is_infinite() && r > 0.0);
+    }
+
+    #[test]
+    fn specials_passthrough() {
+        assert!(round_to_mantissa(f32::NAN, 7).is_nan());
+        assert_eq!(round_to_mantissa(f32::INFINITY, 7), f32::INFINITY);
+        assert_eq!(round_to_mantissa(f32::NEG_INFINITY, 7), f32::NEG_INFINITY);
+        assert_eq!(round_to_mantissa(0.0, 1).to_bits(), 0.0f32.to_bits());
+        assert_eq!(round_to_mantissa(-0.0, 1).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn stochastic_unbiased() {
+        let mut rng = Rng::new(5);
+        // x exactly 1/4 of the way between two PS(4) neighbours.
+        let mu = 4;
+        let base = 1.0f32;
+        let step = 2.0f32.powi(-(mu as i32));
+        let x = base + 0.25 * step;
+        let n = 100_000;
+        let mut ups = 0usize;
+        for _ in 0..n {
+            let r = round_to_mantissa_stochastic(x, mu, &mut rng);
+            assert!(r == base || r == base + step);
+            if r == base + step {
+                ups += 1;
+            }
+        }
+        let p = ups as f64 / n as f64;
+        assert!((p - 0.25).abs() < 0.01, "p={p}");
+    }
+
+    #[test]
+    fn stochastic_exact_values_fixed() {
+        let mut rng = Rng::new(6);
+        // Exactly representable values never move.
+        for mu in [2, 7, 12] {
+            let x = round_to_mantissa(3.7, mu);
+            for _ in 0..100 {
+                assert_eq!(round_to_mantissa_stochastic(x, mu, &mut rng), x);
+            }
+        }
+    }
+
+    #[test]
+    fn unit_roundoff_values() {
+        assert_eq!(unit_roundoff(23), 2.0f64.powi(-24)); // fp32
+        assert_eq!(unit_roundoff(10), 2.0f64.powi(-11)); // tf32
+        assert_eq!(unit_roundoff(7), 2.0f64.powi(-8)); // bf16
+    }
+
+    #[test]
+    fn ulp_normal() {
+        // At 1.0 <= x < 2, PS(7) ulp is 2^-7.
+        assert_eq!(ulp_at(1.0, 7), 2.0f32.powi(-7));
+        assert_eq!(ulp_at(1.5, 7), 2.0f32.powi(-7));
+        assert_eq!(ulp_at(2.0, 7), 2.0f32.powi(-6));
+        assert_eq!(ulp_at(-2.0, 7), 2.0f32.powi(-6));
+    }
+
+    #[test]
+    fn rounding_moves_at_most_one_ulp() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = (rng.f32() - 0.5) * 256.0;
+            for mu in [3, 7, 11] {
+                let r = round_to_mantissa(x, mu);
+                assert!((r - x).abs() <= 0.5 * ulp_at(x, mu) * 1.0000001,
+                    "x={x} mu={mu} r={r}");
+            }
+        }
+    }
+}

@@ -1,0 +1,345 @@
+//! `.lamp` tensor container format — the interchange between the Python
+//! compile path (which trains the models and serializes weights) and the
+//! Rust runtime (which feeds them to compiled HLO executables).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   : 8 bytes  b"LAMPTNSR"
+//! version : u32      (currently 1)
+//! count   : u32      number of tensors
+//! repeat count times:
+//!   name_len : u32
+//!   name     : name_len bytes UTF-8
+//!   dtype    : u32    (0 = f32, 1 = i32)
+//!   ndim     : u32
+//!   dims     : ndim × u64
+//!   payload  : product(dims) × 4 bytes
+//! ```
+//!
+//! The mirrored Python writer lives in `python/compile/tensorio.py`.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"LAMPTNSR";
+const VERSION: u32 = 1;
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn code(self) -> u32 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        }
+    }
+    fn from_code(c: u32) -> Result<Self> {
+        match c {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::I32),
+            other => Err(Error::format(format!("unknown dtype code {other}"))),
+        }
+    }
+}
+
+/// A named n-dimensional tensor (f32 or i32 payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    /// Raw little-endian payload, 4 bytes per element.
+    pub raw: Vec<u8>,
+}
+
+impl Tensor {
+    /// Build an f32 tensor.
+    pub fn f32(name: impl Into<String>, dims: Vec<usize>, data: &[f32]) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(Error::shape(format!(
+                "tensor {:?}: dims {:?} need {n} elements, got {}",
+                name.into(),
+                dims,
+                data.len()
+            )));
+        }
+        let mut raw = Vec::with_capacity(4 * n);
+        for &x in data {
+            raw.extend_from_slice(&x.to_le_bytes());
+        }
+        Ok(Tensor { name: name.into(), dtype: DType::F32, dims, raw })
+    }
+
+    /// Build an i32 tensor.
+    pub fn i32(name: impl Into<String>, dims: Vec<usize>, data: &[i32]) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(Error::shape("tensor dims/data mismatch".to_string()));
+        }
+        let mut raw = Vec::with_capacity(4 * n);
+        for &x in data {
+            raw.extend_from_slice(&x.to_le_bytes());
+        }
+        Ok(Tensor { name: name.into(), dtype: DType::I32, dims, raw })
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decode as f32 values.
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            return Err(Error::format(format!("tensor {:?} is not f32", self.name)));
+        }
+        Ok(self
+            .raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Decode as i32 values.
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            return Err(Error::format(format!("tensor {:?} is not i32", self.name)));
+        }
+        Ok(self
+            .raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// An ordered collection of named tensors.
+#[derive(Debug, Clone, Default)]
+pub struct TensorFile {
+    tensors: Vec<Tensor>,
+    index: BTreeMap<String, usize>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a tensor; names must be unique.
+    pub fn push(&mut self, t: Tensor) -> Result<()> {
+        if self.index.contains_key(&t.name) {
+            return Err(Error::format(format!("duplicate tensor name {:?}", t.name)));
+        }
+        self.index.insert(t.name.clone(), self.tensors.len());
+        self.tensors.push(t);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn require(&self, name: &str) -> Result<&Tensor> {
+        self.get(name)
+            .ok_or_else(|| Error::format(format!("missing tensor {name:?}")))
+    }
+
+    /// Tensors in insertion order.
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for t in &self.tensors {
+            let name = t.name.as_bytes();
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name);
+            out.extend_from_slice(&t.dtype.code().to_le_bytes());
+            out.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+            for &d in &t.dims {
+                out.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            out.extend_from_slice(&t.raw);
+        }
+        out
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        let mut cur = std::io::Cursor::new(data);
+        let mut magic = [0u8; 8];
+        cur.read_exact(&mut magic)
+            .map_err(|_| Error::format("truncated .lamp file (magic)".to_string()))?;
+        if &magic != MAGIC {
+            return Err(Error::format("bad magic: not a .lamp file".to_string()));
+        }
+        let version = read_u32(&mut cur)?;
+        if version != VERSION {
+            return Err(Error::format(format!("unsupported .lamp version {version}")));
+        }
+        let count = read_u32(&mut cur)? as usize;
+        let mut file = TensorFile::new();
+        for _ in 0..count {
+            let name_len = read_u32(&mut cur)? as usize;
+            if name_len > 4096 {
+                return Err(Error::format(format!("tensor name too long: {name_len}")));
+            }
+            let mut name_buf = vec![0u8; name_len];
+            cur.read_exact(&mut name_buf)
+                .map_err(|_| Error::format("truncated name".to_string()))?;
+            let name = String::from_utf8(name_buf)
+                .map_err(|_| Error::format("non-UTF8 tensor name".to_string()))?;
+            let dtype = DType::from_code(read_u32(&mut cur)?)?;
+            let ndim = read_u32(&mut cur)? as usize;
+            if ndim > 16 {
+                return Err(Error::format(format!("ndim too large: {ndim}")));
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u64(&mut cur)? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let remaining = data.len() - cur.position() as usize;
+            if 4 * n > remaining {
+                return Err(Error::format(format!(
+                    "truncated payload for {name:?}: need {} bytes, {remaining} left",
+                    4 * n
+                )));
+            }
+            let mut raw = vec![0u8; 4 * n];
+            cur.read_exact(&mut raw)
+                .map_err(|_| Error::format("truncated payload".to_string()))?;
+            file.push(Tensor { name, dtype, dims, raw })?;
+        }
+        Ok(file)
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Read from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let data = std::fs::read(path.as_ref())?;
+        Self::from_bytes(&data)
+    }
+}
+
+fn read_u32(cur: &mut std::io::Cursor<&[u8]>) -> Result<u32> {
+    let mut b = [0u8; 4];
+    cur.read_exact(&mut b)
+        .map_err(|_| Error::format("truncated u32".to_string()))?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(cur: &mut std::io::Cursor<&[u8]>) -> Result<u64> {
+    let mut b = [0u8; 8];
+    cur.read_exact(&mut b)
+        .map_err(|_| Error::format("truncated u64".to_string()))?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let mut file = TensorFile::new();
+        file.push(Tensor::f32("w", vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap())
+            .unwrap();
+        file.push(Tensor::i32("tokens", vec![4], &[1, 2, 3, 4]).unwrap()).unwrap();
+        let bytes = file.to_bytes();
+        let back = TensorFile::from_bytes(&bytes).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.require("w").unwrap().as_f32().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(back.require("tokens").unwrap().as_i32().unwrap(), vec![1, 2, 3, 4]);
+        assert_eq!(back.require("w").unwrap().dims, vec![2, 3]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(TensorFile::from_bytes(b"NOTLAMP!....").is_err());
+        assert!(TensorFile::from_bytes(b"").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let mut file = TensorFile::new();
+        file.push(Tensor::f32("w", vec![8], &[0.0; 8]).unwrap()).unwrap();
+        let mut bytes = file.to_bytes();
+        bytes.truncate(bytes.len() - 4);
+        assert!(TensorFile::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut file = TensorFile::new();
+        file.push(Tensor::f32("w", vec![1], &[0.0]).unwrap()).unwrap();
+        assert!(file.push(Tensor::f32("w", vec![1], &[1.0]).unwrap()).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let t = Tensor::f32("x", vec![1], &[1.0]).unwrap();
+        assert!(t.as_i32().is_err());
+        assert!(t.as_f32().is_ok());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::f32("x", vec![2, 2], &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut file = TensorFile::new();
+        file.push(Tensor::f32("a", vec![3], &[1.5, -2.5, 0.0]).unwrap()).unwrap();
+        let path = std::env::temp_dir().join("lamp_tensorio_test.lamp");
+        file.save(&path).unwrap();
+        let back = TensorFile::load(&path).unwrap();
+        assert_eq!(back.require("a").unwrap().as_f32().unwrap(), vec![1.5, -2.5, 0.0]);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn preserves_insertion_order() {
+        let mut file = TensorFile::new();
+        for name in ["z", "a", "m"] {
+            file.push(Tensor::f32(name, vec![1], &[0.0]).unwrap()).unwrap();
+        }
+        let names: Vec<_> = file.tensors().iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, vec!["z", "a", "m"]);
+        let back = TensorFile::from_bytes(&file.to_bytes()).unwrap();
+        let names: Vec<_> = back.tensors().iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, vec!["z", "a", "m"]);
+    }
+}

@@ -1,0 +1,116 @@
+//! Minimal leveled logger writing to stderr.
+//!
+//! The level is controlled by `LAMP_LOG` (error|warn|info|debug|trace) or
+//! programmatically via [`set_level`]. Thread-safe; no external crates.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+
+fn level_from_env() -> u8 {
+    match std::env::var("LAMP_LOG").unwrap_or_default().to_lowercase().as_str() {
+        "error" => 0,
+        "warn" => 1,
+        "debug" => 3,
+        "trace" => 4,
+        _ => 2, // info default
+    }
+}
+
+/// Current effective level.
+pub fn level() -> Level {
+    let mut l = LEVEL.load(Ordering::Relaxed);
+    if l == 255 {
+        l = level_from_env();
+        LEVEL.store(l, Ordering::Relaxed);
+    }
+    match l {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the log level programmatically.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Returns true if `l` is enabled at the current level.
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Core log entry point; prefer the macros.
+pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {target}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn set_and_check() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,13 @@
+//! Small infrastructure substrates: PRNG, timing, logging, thread pool.
+//!
+//! No external crates beyond `xla`/`anyhow` are available in the offline
+//! build environment, so these are hand-rolled but fully tested.
+
+pub mod logging;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+
+pub use rng::Rng;
+pub use threadpool::ThreadPool;
+pub use timer::Stopwatch;

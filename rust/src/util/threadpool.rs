@@ -1,0 +1,153 @@
+//! A fixed-size work-stealing-free thread pool over `std::sync::mpsc`.
+//!
+//! Tokio is not available in the offline build, so the coordinator and the
+//! experiment harness parallelize over this pool. It supports fire-and-forget
+//! jobs, scoped parallel-map (`map`), and clean shutdown on drop.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    workers: Vec<JoinHandle<()>>,
+    tx: Sender<Message>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` worker threads (n >= 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "ThreadPool::new(0)");
+        let (tx, rx) = channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("lamp-worker-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { workers, tx }
+    }
+
+    /// A pool sized to the number of available CPUs (capped at `cap`).
+    pub fn with_cpus(cap: usize) -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4)
+            .min(cap.max(1));
+        Self::new(n)
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Message::Run(Box::new(f))).expect("pool closed");
+    }
+
+    /// Parallel map: apply `f` to each item, preserving order.
+    ///
+    /// Items and results cross thread boundaries, so everything must be
+    /// `Send`; `f` is shared behind an `Arc`.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let r = f(item);
+                // Receiver may be gone if caller panicked; ignore.
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("worker result");
+            slots[i] = Some(r);
+        }
+        slots.into_iter().map(|s| s.expect("all slots filled")).collect()
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Message>>>) {
+    loop {
+        let msg = { rx.lock().expect("rx lock").recv() };
+        match msg {
+            Ok(Message::Run(job)) => job(),
+            Ok(Message::Shutdown) | Err(_) => break,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<_>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn with_cpus_capped() {
+        let pool = ThreadPool::with_cpus(2);
+        assert!(pool.size() <= 2 && pool.size() >= 1);
+    }
+}

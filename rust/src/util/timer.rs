@@ -1,0 +1,92 @@
+//! Wall-clock timing helpers used by the benchmark harness and the serving
+//! metrics.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch with lap support.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now(), laps: Vec::new() }
+    }
+
+    /// Elapsed time since construction or last `reset`.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Record a named lap at the current elapsed time.
+    pub fn lap(&mut self, name: impl Into<String>) {
+        self.laps.push((name.into(), self.elapsed()));
+    }
+
+    /// Recorded laps, in order.
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+        self.laps.clear();
+    }
+}
+
+/// Format a duration compactly for human-readable reports (`1.23ms`, `4.5s`).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        sw.lap("a");
+        sw.lap("b");
+        assert_eq!(sw.laps().len(), 2);
+        assert!(sw.laps()[1].1 >= sw.laps()[0].1);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_duration(Duration::from_nanos(12)), "12ns");
+        assert!(fmt_duration(Duration::from_micros(12)).ends_with("us"));
+        assert!(fmt_duration(Duration::from_millis(12)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut sw = Stopwatch::new();
+        sw.lap("x");
+        sw.reset();
+        assert!(sw.laps().is_empty());
+    }
+}

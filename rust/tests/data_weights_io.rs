@@ -1,0 +1,79 @@
+//! Cross-language I/O integration: the rust loader against the actual
+//! artifacts written by the Python compile path.
+
+use lamp::model::{ModelConfig, Weights};
+use lamp::runtime::ArtifactStore;
+
+fn store() -> Option<ArtifactStore> {
+    let store = ArtifactStore::open(ArtifactStore::default_dir()).ok()?;
+    if store.available_models().is_empty() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(store)
+}
+
+#[test]
+fn trained_weights_load_for_all_models() {
+    let Some(store) = store() else { return };
+    for name in store.available_models() {
+        let cfg = store.model_config(&name).unwrap();
+        let w = store.weights(&name).unwrap();
+        assert_eq!(w.config, cfg);
+        assert_eq!(w.blocks.len(), cfg.layers);
+        // Trained weights must not be all-zero or NaN.
+        let wte = w.wte.data();
+        assert!(wte.iter().all(|x| x.is_finite()));
+        let norm: f64 = wte.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(norm > 0.1, "{name}: wte looks untrained/zero (norm={norm})");
+    }
+}
+
+#[test]
+fn meta_matches_registry() {
+    // The artifact metadata must agree with the rust-side registry configs
+    // (they are maintained in parallel — this test pins them together).
+    let Some(store) = store() else { return };
+    for name in store.available_models() {
+        let from_meta = store.model_config(&name).unwrap();
+        let from_registry = ModelConfig::by_name(&name).unwrap();
+        assert_eq!(from_meta, from_registry, "{name}: registry drift");
+    }
+}
+
+#[test]
+fn training_reduced_loss() {
+    // The build-time training logs must show a decreasing loss curve —
+    // guards against silently-broken training producing noise weights.
+    let Some(store) = store() else { return };
+    for name in store.available_models() {
+        let path = store.dir().join(format!("train_log_{name}.txt"));
+        let Ok(text) = std::fs::read_to_string(&path) else { continue };
+        let losses: Vec<f64> = text
+            .lines()
+            .filter_map(|l| l.split_whitespace().nth(1)?.parse().ok())
+            .collect();
+        assert!(losses.len() >= 50, "{name}: too few steps logged");
+        let head: f64 = losses[..10].iter().sum::<f64>() / 10.0;
+        let tail: f64 = losses[losses.len() - 10..].iter().sum::<f64>() / 10.0;
+        assert!(
+            tail < head * 0.9,
+            "{name}: loss did not decrease ({head:.3} -> {tail:.3})"
+        );
+    }
+}
+
+#[test]
+fn roundtrip_weights_through_rust_writer() {
+    // rust writer -> rust reader must reproduce the python-written weights.
+    let Some(store) = store() else { return };
+    let cfg = store.model_config("nano").unwrap();
+    let w = store.weights("nano").unwrap();
+    let tmp = std::env::temp_dir().join("lamp_roundtrip_weights.lamp");
+    w.to_tensor_file().unwrap().save(&tmp).unwrap();
+    let w2 = Weights::load(&tmp, &cfg).unwrap();
+    assert_eq!(w.wte, w2.wte);
+    assert_eq!(w.blocks[0].w_qkv, w2.blocks[0].w_qkv);
+    assert_eq!(w.lnf_b, w2.lnf_b);
+    let _ = std::fs::remove_file(tmp);
+}

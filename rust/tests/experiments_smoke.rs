@@ -1,0 +1,65 @@
+//! Smoke-level runs of every experiment driver at tiny scale: each figure
+//! and table must execute end-to-end and produce sane series.
+
+use lamp::experiments::{self, EvalOptions};
+
+fn tiny_opts() -> EvalOptions {
+    EvalOptions {
+        num_seqs: 2,
+        seq_len: 10,
+        stream_seed: 3,
+        workers: 2,
+        // Use trained artifacts when available, random weights otherwise —
+        // both paths must work.
+        artifacts: Some(lamp::runtime::ArtifactStore::default_dir()
+            .to_string_lossy()
+            .to_string()),
+        quick: true,
+    }
+}
+
+#[test]
+fn all_experiments_run_at_tiny_scale() {
+    for name in experiments::all_names() {
+        // table1/figs over xl are heavier; tiny opts keep this bounded.
+        let tables = experiments::run(name, &tiny_opts())
+            .unwrap_or_else(|e| panic!("{name} failed: {e}"));
+        assert!(!tables.is_empty(), "{name} produced no tables");
+        for t in &tables {
+            assert!(!t.rows.is_empty(), "{name} produced an empty table");
+            let rendered = t.render();
+            assert!(rendered.contains("##"), "{name} render broken");
+        }
+    }
+}
+
+#[test]
+fn unknown_experiment_rejected() {
+    assert!(experiments::run("fig99", &tiny_opts()).is_err());
+}
+
+#[test]
+fn fig7_lamp_dominates_random() {
+    // The crux claim (App. C.4): at equal budget, LAMP ≪ random. Verify on
+    // the tiny panel by comparing KL at the sharpest τ in the fig7 table.
+    use lamp::coordinator::{PrecisionPolicy, Rule};
+    use lamp::data::Domain;
+    use lamp::experiments::common::{load_weights, EvalPanel};
+    let opts = EvalOptions { num_seqs: 3, seq_len: 16, ..tiny_opts() };
+    let weights = load_weights("xl", &opts).unwrap();
+    let panel = EvalPanel::build(weights, Domain::Web, &opts).unwrap();
+    let lamp = panel
+        .evaluate(&PrecisionPolicy::lamp(4, 0.02, Rule::Strict), 0)
+        .unwrap();
+    let rand = panel
+        .evaluate(&PrecisionPolicy::lamp(4, 0.02, Rule::Random), 0)
+        .unwrap();
+    if lamp.recomputed > 10 {
+        assert!(
+            lamp.kl < rand.kl,
+            "adaptive selection must beat random: lamp={} random={}",
+            lamp.kl,
+            rand.kl
+        );
+    }
+}

@@ -1,0 +1,110 @@
+//! Failure injection: corrupted artifacts, malformed configs and
+//! out-of-contract requests must fail loudly with typed errors — never
+//! panic, never return garbage.
+
+use lamp::config::KvConfig;
+use lamp::coordinator::{Engine, NativeEngine, PrecisionPolicy};
+use lamp::model::{ModelConfig, Weights};
+use lamp::runtime::{ArtifactStore, ModelExecutor};
+use lamp::tensorio::{Tensor, TensorFile};
+use lamp::util::Rng;
+use std::path::PathBuf;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lamp_failinj_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn truncated_weight_file_rejected() {
+    let dir = tmpdir("trunc");
+    let cfg = ModelConfig::nano();
+    let mut rng = Rng::new(1);
+    let w = Weights::random(&cfg, &mut rng);
+    let path = dir.join("weights_nano.lamp");
+    w.to_tensor_file().unwrap().save(&path).unwrap();
+    // Truncate the payload.
+    let data = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &data[..data.len() - 100]).unwrap();
+    assert!(Weights::load(&path, &cfg).is_err());
+}
+
+#[test]
+fn bitflipped_magic_rejected() {
+    let dir = tmpdir("magic");
+    let path = dir.join("weights.lamp");
+    let mut f = TensorFile::new();
+    f.push(Tensor::f32("x", vec![2], &[1.0, 2.0]).unwrap()).unwrap();
+    let mut data = f.to_bytes();
+    data[0] ^= 0xFF;
+    std::fs::write(&path, &data).unwrap();
+    assert!(TensorFile::load(&path).is_err());
+}
+
+#[test]
+fn meta_with_inconsistent_dims_rejected() {
+    let kv = KvConfig::parse(
+        "model.name = broken\nmodel.vocab = 64\nmodel.seq = 16\nmodel.layers = 2\n\
+         model.heads = 3\nmodel.d_model = 32\nmodel.batch = 1\n",
+    )
+    .unwrap();
+    // 32 % 3 != 0 → validation must fail.
+    assert!(ModelConfig::from_kv(&kv).is_err());
+}
+
+#[test]
+fn executor_rejects_garbage_hlo() {
+    let dir = tmpdir("hlo");
+    let hlo = dir.join("model_bad.hlo.txt");
+    std::fs::write(&hlo, "this is not an HLO module").unwrap();
+    let cfg = ModelConfig::nano();
+    let mut rng = Rng::new(2);
+    let w = Weights::random(&cfg, &mut rng);
+    assert!(ModelExecutor::from_parts(cfg, &hlo, &w).is_err());
+}
+
+#[test]
+fn store_reports_missing_artifacts() {
+    let dir = tmpdir("empty");
+    let store = ArtifactStore::open(&dir).unwrap();
+    assert!(store.available_models().is_empty());
+    assert!(store.model_config("xl").is_err());
+    assert!(store.weights("xl").is_err());
+}
+
+#[test]
+fn engine_rejects_out_of_contract_requests() {
+    let cfg = ModelConfig::nano();
+    let mut rng = Rng::new(3);
+    let engine = NativeEngine::new(Weights::random(&cfg, &mut rng));
+    // Token out of vocab.
+    let r = engine.infer(&[vec![9999u32]], &PrecisionPolicy::reference(), 0);
+    assert!(r.is_err());
+    // Over-long sequence.
+    let r = engine.infer(&[vec![0u32; 64]], &PrecisionPolicy::reference(), 0);
+    assert!(r.is_err());
+    // Invalid mu caught by policy validation.
+    assert!(PrecisionPolicy::uniform(0).validate().is_err());
+}
+
+#[test]
+fn weights_with_swapped_tensor_shape_rejected() {
+    // Write a tensor file where one weight has transposed dims.
+    let cfg = ModelConfig::nano();
+    let mut rng = Rng::new(4);
+    let w = Weights::random(&cfg, &mut rng);
+    let good = w.to_tensor_file().unwrap();
+    let mut bad = TensorFile::new();
+    for t in good.tensors() {
+        if t.name == "h0.attn.w_qkv" {
+            let mut dims = t.dims.clone();
+            dims.swap(0, 1);
+            bad.push(Tensor { dims, ..t.clone() }).unwrap();
+        } else {
+            bad.push(t.clone()).unwrap();
+        }
+    }
+    assert!(Weights::from_tensor_file(&bad, &cfg).is_err());
+}

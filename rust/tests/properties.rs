@@ -1,0 +1,205 @@
+//! Property-based tests over the crate's core invariants, via the
+//! hand-rolled `lamp::check` framework (offline stand-in for proptest).
+
+use lamp::check::{forall, pair, Config, Gen};
+use lamp::coordinator::{Batcher, InferenceRequest, PrecisionPolicy, Rule};
+use lamp::lamp::rmsnorm::{kappa_c_rmsnorm, select_rmsnorm};
+use lamp::lamp::softmax::{kappa1_softmax, select_strict, softmax};
+use lamp::softfloat::round::{round_to_mantissa, unit_roundoff};
+use lamp::softfloat::dot::{dot_f32, dot_ps};
+use lamp::util::Rng;
+use std::time::Duration;
+
+#[test]
+fn prop_rounding_idempotent() {
+    forall(
+        Config::default().cases(2000),
+        pair(Gen::f32_range(-1e6, 1e6), Gen::u32_range(1, 23)),
+        |&(x, mu)| {
+            let r = round_to_mantissa(x, mu);
+            round_to_mantissa(r, mu).to_bits() == r.to_bits()
+        },
+    );
+}
+
+#[test]
+fn prop_rounding_monotone() {
+    // x <= y  =>  round(x) <= round(y)
+    forall(
+        Config::default().cases(2000),
+        pair(
+            pair(Gen::f32_range(-1e4, 1e4), Gen::f32_range(-1e4, 1e4)),
+            Gen::u32_range(1, 23),
+        ),
+        |&((x, y), mu)| {
+            let (lo, hi) = if x <= y { (x, y) } else { (y, x) };
+            round_to_mantissa(lo, mu) <= round_to_mantissa(hi, mu)
+        },
+    );
+}
+
+#[test]
+fn prop_rounding_error_within_unit_roundoff() {
+    forall(
+        Config::default().cases(2000),
+        pair(Gen::f32_range(-1e4, 1e4), Gen::u32_range(1, 23)),
+        |&(x, mu)| {
+            if x == 0.0 {
+                return true;
+            }
+            let r = round_to_mantissa(x, mu) as f64;
+            ((r - x as f64) / x as f64).abs() <= unit_roundoff(mu) * (1.0 + 1e-9)
+        },
+    );
+}
+
+#[test]
+fn prop_dot_ps_error_bound() {
+    // First-order bound: |dot_ps − dot_exact| ≤ 2·k·u·Σ|aᵢbᵢ|.
+    forall(
+        Config::default().cases(300),
+        pair(
+            pair(
+                Gen::f32_vec(1, 64, -2.0, 2.0),
+                Gen::u32_range(2, 23),
+            ),
+            Gen::u32_range(0, u32::MAX / 2),
+        ),
+        |&((ref a, mu), seed)| {
+            let mut rng = Rng::new(seed as u64);
+            let b: Vec<f32> = a.iter().map(|_| rng.f32() * 4.0 - 2.0).collect();
+            let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let got = dot_ps(a, &b, mu) as f64;
+            let mag: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| (x as f64 * y as f64).abs())
+                .sum();
+            (got - exact).abs() <= 2.0 * a.len() as f64 * unit_roundoff(mu) * mag + 1e-10
+        },
+    );
+}
+
+#[test]
+fn prop_dot_ps23_equals_fp32() {
+    forall(
+        Config::default().cases(500),
+        pair(Gen::f32_vec(0, 48, -3.0, 3.0), Gen::u32_range(0, u32::MAX / 2)),
+        |&(ref a, seed)| {
+            let mut rng = Rng::new(seed as u64);
+            let b: Vec<f32> = a.iter().map(|_| rng.f32() * 6.0 - 3.0).collect();
+            dot_ps(a, &b, 23).to_bits() == dot_f32(a, &b).to_bits()
+        },
+    );
+}
+
+#[test]
+fn prop_strict_selection_achieves_tau() {
+    // The defining guarantee of eq. (8): κ₁ ≤ τ after selection.
+    forall(
+        Config::default().cases(1000),
+        pair(Gen::f32_vec(1, 64, -12.0, 12.0), Gen::f32_range(0.0, 1.0)),
+        |&(ref y, tau)| {
+            let mask = select_strict(y, tau);
+            kappa1_softmax(y, &mask) <= tau
+        },
+    );
+}
+
+#[test]
+fn prop_strict_selection_minimal() {
+    // No selected index is redundant.
+    forall(
+        Config::default().cases(300),
+        pair(Gen::f32_vec(2, 24, -8.0, 8.0), Gen::f32_range(0.01, 0.5)),
+        |&(ref y, tau)| {
+            let mask = select_strict(y, tau);
+            (0..y.len()).all(|j| {
+                if !mask[j] {
+                    return true;
+                }
+                let mut weaker = mask.clone();
+                weaker[j] = false;
+                kappa1_softmax(y, &weaker) > tau
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_softmax_is_distribution() {
+    forall(
+        Config::default().cases(1000),
+        Gen::f32_vec(1, 64, -40.0, 40.0),
+        |y| {
+            let z = softmax(y);
+            let sum: f32 = z.iter().sum();
+            z.iter().all(|&p| (0.0..=1.0 + 1e-6).contains(&p)) && (sum - 1.0).abs() < 1e-4
+        },
+    );
+}
+
+#[test]
+fn prop_rmsnorm_greedy_feasible() {
+    forall(
+        Config::default().cases(500),
+        pair(Gen::f32_vec(1, 32, -5.0, 5.0), Gen::f32_range(0.0, 2.0)),
+        |&(ref y, tau)| {
+            let mask = select_rmsnorm(y, tau as f64);
+            kappa_c_rmsnorm(y, &mask) <= tau as f64 + 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    // Everything pushed is eventually cut exactly once, FIFO per policy.
+    forall(
+        Config::default().cases(200),
+        pair(Gen::usize_range(1, 40), Gen::u32_range(0, u32::MAX / 2)),
+        |&(n, seed)| {
+            let mut rng = Rng::new(seed as u64);
+            let mut batcher = Batcher::new(4, Duration::from_secs(3600));
+            let mut pushed = Vec::new();
+            for id in 0..n as u64 {
+                let mu = [2u32, 4, 7][rng.range(0, 3)];
+                let policy = PrecisionPolicy::uniform(mu);
+                batcher.push(InferenceRequest::new(id, vec![1, 2], policy));
+                pushed.push(id);
+            }
+            let mut seen = Vec::new();
+            while let Some(cut) = batcher.cut(true) {
+                for (r, _) in cut.requests {
+                    seen.push(r.id);
+                }
+            }
+            seen.sort_unstable();
+            seen == pushed && batcher.pending() == 0
+        },
+    );
+}
+
+#[test]
+fn prop_policy_tier_roundtrip_rules() {
+    for rule in [Rule::Strict, Rule::Relaxed, Rule::RelaxedLengthNorm, Rule::Random] {
+        assert_eq!(Rule::by_name(rule.name()).unwrap(), rule);
+    }
+}
+
+#[test]
+fn prop_selection_monotone_in_tau() {
+    forall(
+        Config::default().cases(400),
+        pair(
+            Gen::f32_vec(1, 32, -8.0, 8.0),
+            pair(Gen::f32_range(0.0, 0.5), Gen::f32_range(0.0, 0.5)),
+        ),
+        |&(ref y, (t1, t2))| {
+            let (lo, hi) = if t1 <= t2 { (t1, t2) } else { (t2, t1) };
+            let m_lo = select_strict(y, lo);
+            let m_hi = select_strict(y, hi);
+            // Higher τ selects a subset.
+            m_hi.iter().zip(&m_lo).all(|(&h, &l)| !h || l)
+        },
+    );
+}

@@ -1,0 +1,188 @@
+//! End-to-end serving integration: batching server over both engines with
+//! the real trained artifacts.
+
+use lamp::coordinator::{
+    Engine, InferenceRequest, NativeEngine, PjrtEngine, PrecisionPolicy, Server,
+};
+use lamp::data::{Dataset, Domain};
+use lamp::runtime::ArtifactStore;
+use std::time::Duration;
+
+fn store() -> Option<ArtifactStore> {
+    let store = ArtifactStore::open(ArtifactStore::default_dir()).ok()?;
+    if store.available_models().contains(&"nano".to_string()) {
+        Some(store)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn run_workload(engine: Box<dyn Engine>, n: usize) -> lamp::coordinator::ServerStats {
+    let cfg = engine.config().clone();
+    let policy = PrecisionPolicy::tier("balanced").unwrap();
+    let dataset = Dataset::generate(Domain::Web, cfg.vocab, n, cfg.seq, 7, 5);
+    let mut server = Server::new(engine, Duration::from_millis(2));
+    let mut served = 0;
+    for (i, seq) in dataset.sequences.into_iter().enumerate() {
+        // Vary lengths to exercise padding.
+        let len = 4 + (i * 7) % (cfg.seq - 4);
+        let seq = seq[..len].to_vec();
+        server.submit(InferenceRequest::new(i as u64, seq, policy)).unwrap();
+        served += server.step(false).unwrap().len();
+    }
+    served += server.drain().unwrap().len();
+    assert_eq!(served, n);
+    server.stats()
+}
+
+#[test]
+fn serve_pjrt_nano_workload() {
+    let Some(store) = store() else { return };
+    let engine = PjrtEngine::load(&store, "nano").unwrap();
+    let stats = run_workload(Box::new(engine), 10);
+    assert_eq!(stats.requests, 10);
+    assert!(stats.batches >= 5);
+    assert!(stats.throughput_tok_s > 0.0);
+    assert!(stats.recomputed > 0, "balanced tier must recompute on trained nano");
+}
+
+#[test]
+fn serve_native_nano_workload() {
+    let Some(store) = store() else { return };
+    let engine = NativeEngine::load(&store, "nano").unwrap();
+    let stats = run_workload(Box::new(engine), 10);
+    assert_eq!(stats.requests, 10);
+    assert!(stats.latency_p95_s >= stats.latency_mean_s * 0.5);
+}
+
+#[test]
+fn per_request_logits_independent_of_batchmates() {
+    // Serve the same request next to different batch-mates on the PJRT
+    // engine; causal padding isolation must hold through the artifact.
+    let Some(store) = store() else { return };
+    let engine1 = PjrtEngine::load(&store, "nano").unwrap();
+    let policy = PrecisionPolicy::reference();
+    let probe = vec![5u32, 17, 40, 11];
+
+    let mut s1 = Server::new(Box::new(engine1), Duration::from_millis(1));
+    s1.submit(InferenceRequest::new(1, probe.clone(), policy)).unwrap();
+    s1.submit(InferenceRequest::new(2, vec![100, 101, 102], policy)).unwrap();
+    let mut r1 = s1.drain().unwrap();
+    r1.sort_by_key(|r| r.id);
+
+    let engine2 = PjrtEngine::load(&store, "nano").unwrap();
+    let mut s2 = Server::new(Box::new(engine2), Duration::from_millis(1));
+    s2.submit(InferenceRequest::new(1, probe, policy)).unwrap();
+    s2.submit(InferenceRequest::new(2, vec![7, 8, 9, 10, 11], policy)).unwrap();
+    let mut r2 = s2.drain().unwrap();
+    r2.sort_by_key(|r| r.id);
+
+    assert_eq!(r1[0].logits, r2[0].logits, "batch-mates leaked into logits");
+}
+
+#[test]
+fn kernel_artifacts_execute() {
+    // The standalone L1 kernel artifacts load and run through PJRT.
+    let Some(store) = store() else { return };
+    let client = xla::PjRtClient::cpu().unwrap();
+    for kernel in ["ps_matmul", "lamp_attention"] {
+        let path = store.kernel_hlo(kernel);
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let _exe = client.compile(&comp).expect(kernel);
+    }
+}
+
+#[test]
+fn ps_matmul_kernel_matches_native_softfloat() {
+    // Execute kernel_ps_matmul.hlo.txt and compare against the rust
+    // softfloat matmul bit-for-bit.
+    let Some(store) = store() else { return };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file(
+        store.kernel_hlo("ps_matmul").to_str().unwrap(),
+    )
+    .unwrap();
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+
+    let mut rng = lamp::util::Rng::new(9);
+    let a = lamp::linalg::Matrix::randn(64, 64, 1.0, &mut rng);
+    let b = lamp::linalg::Matrix::randn(64, 64, 1.0, &mut rng);
+    for mu in [2i32, 4, 7, 23] {
+        let la = xla::Literal::vec1(a.data()).reshape(&[64, 64]).unwrap();
+        let lb = xla::Literal::vec1(b.data()).reshape(&[64, 64]).unwrap();
+        let lmu = xla::Literal::scalar(mu);
+        let out = exe.execute::<xla::Literal>(&[la, lb, lmu]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let got = out.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+        let want = lamp::linalg::matmul_ps(&a, &b, mu as u32).unwrap();
+        let n_diff = got
+            .iter()
+            .zip(want.data())
+            .filter(|(x, y)| x.to_bits() != y.to_bits())
+            .count();
+        assert_eq!(n_diff, 0, "mu={mu}: {n_diff}/4096 entries differ");
+    }
+}
+
+#[test]
+fn greedy_generation_on_trained_model_flips_under_low_precision() {
+    // On the *trained* nano model, PS(1) KQ accumulation should change at
+    // least one greedy continuation across a handful of prompts — and the
+    // LAMP-repaired path should restore the reference continuation more
+    // often than the uniform low-precision path breaks it.
+    use lamp::model::{generate, Decode};
+    let Some(store) = store() else { return };
+    let weights = store.weights("nano").unwrap();
+    let cfg = weights.config.clone();
+    let mut flips_uniform = 0usize;
+    let mut flips_lamp = 0usize;
+    let n_prompts = 6;
+    for p in 0..n_prompts {
+        let prompt =
+            Dataset::generate(Domain::Web, cfg.vocab, 1, 8, 7, 100 + p as u64).sequences.remove(0);
+        let reference = generate(
+            &weights,
+            &prompt,
+            8,
+            lamp::model::AttentionPrecision::reference(),
+            Decode::Greedy,
+            0,
+        )
+        .unwrap()
+        .0;
+        let uniform = generate(
+            &weights,
+            &prompt,
+            8,
+            lamp::model::AttentionPrecision::uniform(1),
+            Decode::Greedy,
+            0,
+        )
+        .unwrap()
+        .0;
+        let lamp_prec = lamp::model::AttentionPrecision::lamp(
+            1,
+            0.02,
+            lamp::lamp::softmax::SoftmaxRule::Strict,
+        );
+        let repaired = generate(&weights, &prompt, 8, lamp_prec, Decode::Greedy, 0).unwrap().0;
+        if uniform != reference {
+            flips_uniform += 1;
+        }
+        if repaired != reference {
+            flips_lamp += 1;
+        }
+    }
+    assert!(
+        flips_uniform > 0,
+        "PS(1) never changed a greedy continuation on the trained model"
+    );
+    assert!(
+        flips_lamp <= flips_uniform,
+        "LAMP repaired fewer continuations than uniform: lamp={flips_lamp} uniform={flips_uniform}"
+    );
+}
