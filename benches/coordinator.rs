@@ -2,7 +2,7 @@
 //! cut throughput (pure queueing, no model), and end-to-end serving
 //! throughput on the native nano engine at several batch policies.
 
-use lamp::benchkit::{Bencher, Table};
+use lamp::benchkit::{bench_record_path, record_bench_section, Bencher, JsonObj, Table};
 use lamp::coordinator::{
     Batcher, InferenceRequest, NativeEngine, PrecisionPolicy, Server,
 };
@@ -65,9 +65,40 @@ fn main() {
         }));
     }
 
+    // --- Serving tokens/sec on the parallel native engine (balanced). ---
+    let serve_stats = {
+        let engine = NativeEngine::new(weights.clone()).with_threads(0);
+        let mut server = Server::new(Box::new(engine), Duration::from_millis(1));
+        let policy = PrecisionPolicy::tier("balanced").unwrap();
+        for (i, seq) in data.sequences.iter().enumerate() {
+            server
+                .submit(InferenceRequest::new(i as u64, seq.clone(), policy))
+                .unwrap();
+            server.step(false).unwrap();
+        }
+        server.drain().unwrap();
+        server.stats()
+    };
+    println!(
+        "serving throughput (nano, balanced, parallel native): {:.1} tok/s",
+        serve_stats.throughput_tok_s
+    );
+
     let mut t = Table::new("coordinator benchmarks", &["benchmark"]);
     for r in &results {
         t.row(vec![r.summary()]);
     }
     t.print();
+
+    record_bench_section(
+        &bench_record_path(),
+        "serving",
+        &JsonObj::new()
+            .str("engine", "native nano, balanced tier, attention tiled on all CPUs")
+            .int("requests", serve_stats.requests as u64)
+            .int("tokens", serve_stats.total_tokens as u64)
+            .num("tokens_per_sec", serve_stats.throughput_tok_s)
+            .num("latency_p95_ms", 1e3 * serve_stats.latency_p95_s),
+    )
+    .expect("write bench record");
 }

@@ -1,0 +1,128 @@
+//! Decode-throughput benchmark — the PR-1 headline measurement.
+//!
+//! Compares autoregressive generation through the KV-cache
+//! [`DecodeSession`] path against the seed engine's full-re-forward loop
+//! (`generate_reforward`) on a 4-layer model at S=256, and measures the
+//! fused attention score kernel's arithmetic throughput. Results are
+//! printed and recorded into `BENCH_PR1.json` (override with
+//! `LAMP_BENCH_OUT`) under the `decode` and `attention_kernel` sections.
+//!
+//! Single-thread kernel parity is preserved: both decode paths run the
+//! identical sequential per-row kernels — the speedup is purely the
+//! O(S²) → O(S) work reduction, not a parallelism artifact.
+//!
+//! ```bash
+//! cargo bench --bench decode
+//! ```
+
+use lamp::benchkit::{bench_record_path, record_bench_section, Bencher, JsonObj};
+use lamp::model::{generate, generate_reforward, AttentionPrecision, Decode, ModelConfig, Weights};
+use lamp::softfloat::dot::{dot_ps, score_row_ps};
+use lamp::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    // The ISSUE-1 measurement setting: 4 layers, S=256, single sequence.
+    let cfg = ModelConfig {
+        name: "bench-4l".into(),
+        vocab: 256,
+        seq: 256,
+        layers: 4,
+        heads: 4,
+        d_model: 128,
+        batch: 1,
+    };
+    cfg.validate().expect("bench config");
+    let mut rng = Rng::new(17);
+    let weights = Weights::random(&cfg, &mut rng);
+    let prompt: Vec<u32> = (0..16u32).map(|i| (i * 37 + 5) % cfg.vocab as u32).collect();
+    let new_tokens = cfg.seq - prompt.len();
+    let prec = AttentionPrecision::lamp(4, 0.05, lamp::lamp::softmax::SoftmaxRule::Strict);
+
+    // --- KV-cache decode path. ---
+    let b_kv = Bencher { warmup_iters: 1, sample_iters: 5, max_total: Duration::from_secs(60) };
+    let kv = b_kv.run("generate kv-cache (4l, S=256)", || {
+        generate(&weights, &prompt, new_tokens, prec, Decode::Greedy, 3).unwrap()
+    });
+    println!("{}", kv.summary());
+    let kv_tok_s = new_tokens as f64 / kv.median().as_secs_f64().max(1e-12);
+
+    // --- Seed baseline: full re-forward per token. ---
+    let b_rf = Bencher { warmup_iters: 0, sample_iters: 2, max_total: Duration::from_secs(240) };
+    let rf = b_rf.run("generate re-forward (4l, S=256)", || {
+        generate_reforward(&weights, &prompt, new_tokens, prec, Decode::Greedy, 3).unwrap()
+    });
+    println!("{}", rf.summary());
+    let rf_tok_s = new_tokens as f64 / rf.median().as_secs_f64().max(1e-12);
+
+    // Sanity: identical token streams (the bit-exactness contract).
+    let (kv_tokens, _) =
+        generate(&weights, &prompt, new_tokens, prec, Decode::Greedy, 3).unwrap();
+    let (rf_tokens, _) =
+        generate_reforward(&weights, &prompt, new_tokens, prec, Decode::Greedy, 3).unwrap();
+    assert_eq!(kv_tokens, rf_tokens, "KV decode diverged from re-forward");
+
+    let speedup = kv_tok_s / rf_tok_s.max(1e-12);
+    println!("decode throughput: kv-cache {kv_tok_s:.1} tok/s, re-forward {rf_tok_s:.1} tok/s");
+    println!("speedup: {speedup:.1}x (target: >= 4x)");
+
+    // --- Attention score kernel GFLOP/s: fused row vs per-dot loop. ---
+    let hd = cfg.head_dim();
+    let d = cfg.d_model;
+    let s = cfg.seq;
+    let q: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+    let keys: Vec<f32> = (0..s * d).map(|_| rng.normal_f32()).collect();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let flops = (2 * hd * s) as f64; // one full causal row at max length
+    let bk = Bencher::default();
+    let fused = bk.run("score_row_ps fused (n=256, hd=32, mu=4)", || {
+        let mut out = vec![0.0f32; s];
+        score_row_ps(&q, &keys, d, s, 4, scale, &mut out);
+        out
+    });
+    println!("{}", fused.summary());
+    let per_dot = bk.run("per-dot dot_ps row (n=256, hd=32, mu=4)", || {
+        let mut out = vec![0.0f32; s];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = dot_ps(&q, &keys[j * d..j * d + hd], 4) * scale;
+        }
+        out
+    });
+    println!("{}", per_dot.summary());
+    let fused_gflops = flops / fused.median().as_secs_f64().max(1e-12) / 1e9;
+    let per_dot_gflops = flops / per_dot.median().as_secs_f64().max(1e-12) / 1e9;
+    println!(
+        "attention score kernel: fused {fused_gflops:.3} GFLOP/s, per-dot {per_dot_gflops:.3} GFLOP/s"
+    );
+
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let path = bench_record_path();
+    record_bench_section(
+        &path,
+        "decode",
+        &JsonObj::new()
+            .str("model", "4 layers, 4 heads, d=128, vocab=256")
+            .int("seq", s as u64)
+            .int("new_tokens", new_tokens as u64)
+            .str("policy", "lamp(mu=4, tau=0.05, strict)")
+            .num("kv_cache_tok_s", kv_tok_s)
+            .num("reforward_tok_s", rf_tok_s)
+            .num("speedup", speedup)
+            .int("host_cores", cores as u64),
+    )
+    .expect("write bench record");
+    record_bench_section(
+        &path,
+        "attention_kernel",
+        &JsonObj::new()
+            .str("kernel", "score_row_ps (PS(4) accumulate, n=256, hd=32)")
+            .num("fused_gflops", fused_gflops)
+            .num("per_dot_gflops", per_dot_gflops),
+    )
+    .expect("write bench record");
+    println!("recorded -> {}", path.display());
+
+    if speedup < 4.0 {
+        eprintln!("WARNING: decode speedup {speedup:.1}x below the 4x acceptance target");
+    }
+}

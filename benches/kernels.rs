@@ -3,14 +3,14 @@
 //! rules, one native forward pass, and one PJRT artifact execution.
 //! Includes the accumulation-mode ablation (RNE vs stochastic vs Kahan).
 
-use lamp::benchkit::{Bencher, Table};
+use lamp::benchkit::{bench_record_path, record_bench_section, Bencher, JsonObj, Table};
 use lamp::coordinator::{Engine, NativeEngine, PjrtEngine, PrecisionPolicy, Rule};
 use lamp::data::{Dataset, Domain};
 use lamp::lamp::softmax::{select_relaxed, select_strict};
 use lamp::linalg::{matmul_f32, matmul_ps, Matrix};
 use lamp::model::{ModelConfig, Weights};
 use lamp::runtime::ArtifactStore;
-use lamp::softfloat::dot::{dot_f32, dot_kahan, dot_ps, dot_ps_stochastic};
+use lamp::softfloat::dot::{dot_f32, dot_kahan, dot_ps, dot_ps_stochastic, score_row_ps};
 use lamp::softfloat::round::round_to_mantissa;
 use lamp::util::Rng;
 
@@ -39,6 +39,19 @@ fn main() {
     let mb = Matrix::randn(64, 64, 1.0, &mut rng);
     results.push(b.run("matmul_f32 64x64x64", || matmul_f32(&ma, &mb).unwrap()));
     results.push(b.run("matmul_ps 64x64x64 (mu=4)", || matmul_ps(&ma, &mb, 4).unwrap()));
+
+    // --- Fused attention score row (the causal_attention hot kernel). ---
+    let (hd, d, srow) = (32usize, 128usize, 256usize);
+    let qh: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+    let keys: Vec<f32> = (0..srow * d).map(|_| rng.normal_f32()).collect();
+    let fused = b.run("score_row_ps n=256 hd=32 (mu=4)", || {
+        let mut out = vec![0.0f32; srow];
+        score_row_ps(&qh, &keys, d, srow, 4, 0.176_776_7, &mut out);
+        out
+    });
+    let score_flops = (2 * hd * srow) as f64;
+    let score_gflops = score_flops / fused.median().as_secs_f64().max(1e-12) / 1e9;
+    results.push(fused);
 
     // --- Selection rules over a softmax row. ---
     let row: Vec<f32> = (0..512).map(|_| rng.normal_f32() * 4.0).collect();
@@ -74,4 +87,15 @@ fn main() {
         t.row(vec![r.summary()]);
     }
     t.print();
+
+    let path = bench_record_path();
+    record_bench_section(
+        &path,
+        "kernels",
+        &JsonObj::new()
+            .str("kernel", "score_row_ps (PS(4), n=256, hd=32)")
+            .num("attention_kernel_gflops", score_gflops),
+    )
+    .expect("write bench record");
+    println!("recorded attention-kernel GFLOP/s -> {}", path.display());
 }

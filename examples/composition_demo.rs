@@ -16,7 +16,7 @@ use lamp::linalg::Matrix;
 use lamp::softfloat::dot::{dot_f32, dot_ps};
 use lamp::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> lamp::Result<()> {
     let mut rng = Rng::new(7);
     let (n, k) = (24usize, 96usize);
     let a = Matrix::randn(n, k, 0.5, &mut rng);
@@ -33,8 +33,7 @@ fn main() -> anyhow::Result<()> {
         &f,
         0.05,
         Objective::NormwiseL1,
-    )
-    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    )?;
 
     let y_exact: Vec<f32> = (0..n).map(|i| dot_f32(a.row(i), &x)).collect();
     let z_exact = softmax(&y_exact);

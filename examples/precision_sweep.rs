@@ -11,20 +11,17 @@ use lamp::coordinator::{PrecisionPolicy, Rule};
 use lamp::data::Domain;
 use lamp::experiments::common::{load_weights, EvalOptions, EvalPanel};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> lamp::Result<()> {
     let opts = EvalOptions { num_seqs: 4, seq_len: 48, ..Default::default() };
-    let weights = load_weights("small", &opts).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let panel =
-        EvalPanel::build(weights, Domain::Web, &opts).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let weights = load_weights("small", &opts)?;
+    let panel = EvalPanel::build(weights, Domain::Web, &opts)?;
 
     let mut table = Table::new(
         "precision sweep (small model, web panel, strict LAMP)",
         &["mu", "tau", "KL vs FP32", "flip%", "recompute%"],
     );
     for mu in [4u32, 7] {
-        let uni = panel
-            .evaluate(&PrecisionPolicy::uniform(mu), 0)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let uni = panel.evaluate(&PrecisionPolicy::uniform(mu), 0)?;
         table.row(vec![
             mu.to_string(),
             "inf".into(),
@@ -33,9 +30,7 @@ fn main() -> anyhow::Result<()> {
             "0".into(),
         ]);
         for tau in [0.5f32, 0.2, 0.1, 0.05, 0.02] {
-            let r = panel
-                .evaluate(&PrecisionPolicy::lamp(mu, tau, Rule::Strict), 0)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let r = panel.evaluate(&PrecisionPolicy::lamp(mu, tau, Rule::Strict), 0)?;
             table.row(vec![
                 mu.to_string(),
                 tau.to_string(),

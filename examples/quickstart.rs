@@ -9,7 +9,7 @@ use lamp::coordinator::{Engine, PjrtEngine, PrecisionPolicy, Rule};
 use lamp::data::{Dataset, Domain};
 use lamp::runtime::ArtifactStore;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> lamp::Result<()> {
     // 1. Open the artifact store produced by `make artifacts`.
     let store = ArtifactStore::open(ArtifactStore::default_dir())?;
     println!("available models: {:?}", store.available_models());

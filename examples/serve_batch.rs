@@ -13,7 +13,7 @@ use lamp::data::{Dataset, Domain};
 use lamp::runtime::ArtifactStore;
 use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> lamp::Result<()> {
     let model = std::env::var("LAMP_SERVE_MODEL").unwrap_or_else(|_| "small".into());
     let n: usize = std::env::var("LAMP_SERVE_N")
         .ok()

@@ -216,6 +216,100 @@ fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
 }
 
+/// A flat JSON object rendered on one line — the unit the perf benches
+/// record into `BENCH_PR1.json` (no serde offline, so rendering is
+/// hand-rolled; keys appear in insertion order).
+#[derive(Debug, Default, Clone)]
+pub struct JsonObj {
+    fields: Vec<(String, String)>,
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(&mut self, key: &str, rendered: String) {
+        self.fields.retain(|(k, _)| k != key);
+        self.fields.push((key.to_string(), rendered));
+    }
+
+    /// Add a numeric field (non-finite values render as `null`).
+    pub fn num(mut self, key: &str, v: f64) -> Self {
+        let r = if v.is_finite() { format!("{v}") } else { "null".to_string() };
+        self.push(key, r);
+        self
+    }
+
+    /// Add an integer field.
+    pub fn int(mut self, key: &str, v: u64) -> Self {
+        self.push(key, v.to_string());
+        self
+    }
+
+    /// Add a string field (minimal escaping: backslash and quote).
+    pub fn str(mut self, key: &str, v: &str) -> Self {
+        let escaped = v.replace('\\', "\\\\").replace('"', "\\\"");
+        self.push(key, format!("\"{escaped}\""));
+        self
+    }
+
+    /// Render as a single-line JSON object.
+    pub fn render(&self) -> String {
+        let body = self
+            .fields
+            .iter()
+            .map(|(k, v)| format!("\"{k}\": {v}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!("{{{body}}}")
+    }
+}
+
+/// Insert or replace one named section of the shared benchmark record
+/// (`BENCH_PR1.json`). The file is a JSON object whose top-level values
+/// are single-line objects, one per line — a format this writer both
+/// produces and parses, so independent benches can each contribute their
+/// own section without clobbering the others.
+pub fn record_bench_section(
+    path: &std::path::Path,
+    section: &str,
+    body: &JsonObj,
+) -> std::io::Result<()> {
+    let mut sections: Vec<(String, String)> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        for line in text.lines() {
+            let line = line.trim().trim_end_matches(',');
+            if line.is_empty() || line == "{" || line == "}" {
+                continue;
+            }
+            if let Some((key, val)) = line.split_once(':') {
+                let key = key.trim().trim_matches('"').to_string();
+                sections.push((key, val.trim().to_string()));
+            }
+        }
+    }
+    sections.retain(|(k, _)| k != section);
+    sections.push((section.to_string(), body.render()));
+    let mut out = String::from("{\n");
+    let body_lines = sections
+        .iter()
+        .map(|(k, v)| format!("  \"{k}\": {v}"))
+        .collect::<Vec<_>>()
+        .join(",\n");
+    out.push_str(&body_lines);
+    out.push_str("\n}\n");
+    std::fs::write(path, out)
+}
+
+/// Default location of the PR-1 benchmark record (repo root), overridable
+/// with `LAMP_BENCH_OUT`.
+pub fn bench_record_path() -> std::path::PathBuf {
+    std::env::var("LAMP_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_PR1.json"))
+}
+
 /// Format a float for table cells with adaptive precision.
 pub fn fnum(x: f64) -> String {
     if x == 0.0 {
@@ -270,6 +364,38 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new("demo", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn json_obj_renders_and_replaces() {
+        let o = JsonObj::new()
+            .num("tok_s", 1234.5)
+            .int("tokens", 240)
+            .str("host", "4-core \"test\"")
+            .num("bad", f64::NAN)
+            .num("tok_s", 99.0); // replaces
+        let r = o.render();
+        assert!(r.starts_with('{') && r.ends_with('}'));
+        assert!(r.contains("\"tokens\": 240"));
+        assert!(r.contains("\\\"test\\\""));
+        assert!(r.contains("\"bad\": null"));
+        assert!(r.contains("\"tok_s\": 99"));
+        assert!(!r.contains("1234.5"));
+    }
+
+    #[test]
+    fn bench_sections_merge_without_clobbering() {
+        let path = std::env::temp_dir().join("lamp_bench_record_test.json");
+        let _ = std::fs::remove_file(&path);
+        record_bench_section(&path, "decode", &JsonObj::new().num("speedup", 6.5)).unwrap();
+        record_bench_section(&path, "kernels", &JsonObj::new().num("gflops", 1.25)).unwrap();
+        record_bench_section(&path, "decode", &JsonObj::new().num("speedup", 7.0)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"kernels\""), "{text}");
+        assert!(text.contains("7"), "{text}");
+        assert!(!text.contains("6.5"), "replaced section leaked: {text}");
+        assert_eq!(text.matches("\"decode\"").count(), 1);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

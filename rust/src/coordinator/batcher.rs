@@ -108,7 +108,6 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::policy::Rule;
 
     fn req(id: u64, policy: PrecisionPolicy) -> InferenceRequest {
         InferenceRequest::new(id, vec![1, 2, 3], policy)

@@ -13,8 +13,12 @@
 use super::policy::PrecisionPolicy;
 use crate::error::Result;
 use crate::linalg::Matrix;
-use crate::model::{forward, LampStats, ModelConfig, Weights};
+use crate::model::{
+    forward_with, Decode, DecodeSession, ForwardScratch, LampStats, ModelConfig, Weights,
+};
 use crate::runtime::{ArtifactStore, ModelExecutor, ModelRequest};
+use crate::util::ThreadPool;
+use std::sync::{Arc, Mutex};
 
 /// Output of one batched engine call.
 #[derive(Debug, Clone)]
@@ -49,22 +53,79 @@ pub trait Engine {
 }
 
 /// Pure-Rust engine.
+///
+/// Holds a free-list of [`ForwardScratch`] buffers (so repeated `infer`
+/// calls allocate nothing once warm, even when several threads share one
+/// engine through an `Arc`) and, optionally, a [`ThreadPool`] over which
+/// attention is tiled. Without a pool the engine computes sequentially —
+/// the right configuration when an outer harness already parallelizes
+/// across sequences (e.g. the experiment panels).
 pub struct NativeEngine {
     weights: Weights,
+    pool: Option<Arc<ThreadPool>>,
+    scratch: Mutex<Vec<ForwardScratch>>,
 }
 
 impl NativeEngine {
     pub fn new(weights: Weights) -> Self {
-        NativeEngine { weights }
+        NativeEngine { weights, pool: None, scratch: Mutex::new(Vec::new()) }
     }
 
     /// Load trained weights from the artifact store.
     pub fn load(store: &ArtifactStore, config_name: &str) -> Result<Self> {
-        Ok(NativeEngine { weights: store.weights(config_name)? })
+        Ok(Self::new(store.weights(config_name)?))
+    }
+
+    /// Tile attention across `threads` workers (capped at the host CPU
+    /// count). `threads == 0` means "all available CPUs".
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        let cap = if threads == 0 { usize::MAX } else { threads };
+        self.pool = Some(Arc::new(ThreadPool::with_cpus(cap)));
+        self
+    }
+
+    /// Share an existing pool for attention tiling.
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
+        self
     }
 
     pub fn weights(&self) -> &Weights {
         &self.weights
+    }
+
+    /// Run `f` with a pooled scratch, returning the scratch afterwards —
+    /// zero allocation in steady state, safe under concurrent callers.
+    fn with_scratch<R>(&self, f: impl FnOnce(&mut ForwardScratch) -> R) -> R {
+        let mut scratch = self
+            .scratch
+            .lock()
+            .expect("scratch lock")
+            .pop()
+            .unwrap_or_else(|| ForwardScratch::for_config(&self.weights.config));
+        let r = f(&mut scratch);
+        self.scratch.lock().expect("scratch lock").push(scratch);
+        r
+    }
+
+    /// Open a KV-cache decode session against this engine's weights.
+    pub fn decode_session(&self, policy: &PrecisionPolicy, seed: u64) -> DecodeSession<'_> {
+        let prec = policy.to_attention_precision(self.weights.config.seq);
+        DecodeSession::new(&self.weights, prec, seed)
+    }
+
+    /// Autoregressive generation through the KV-cache decode path.
+    /// Returns (tokens, recompute_rate).
+    pub fn generate(
+        &self,
+        prompt: &[u32],
+        new_tokens: usize,
+        policy: &PrecisionPolicy,
+        decode: Decode,
+        seed: u64,
+    ) -> Result<(Vec<u32>, f64)> {
+        let prec = policy.to_attention_precision(self.weights.config.seq);
+        crate::model::generate(&self.weights, prompt, new_tokens, prec, decode, seed)
     }
 }
 
@@ -81,19 +142,23 @@ impl Engine for NativeEngine {
     ) -> Result<EngineOutput> {
         let cfg = &self.weights.config;
         let prec = policy.to_attention_precision(cfg.seq);
-        let mut logits = Vec::with_capacity(tokens.len());
-        let mut stats = LampStats::default();
-        for (b, seq) in tokens.iter().enumerate() {
-            let out = forward(
-                &self.weights,
-                seq,
-                prec,
-                seed as u64 ^ ((b as u64) << 32),
-            )?;
-            logits.push(out.logits);
-            stats.merge(&out.stats);
-        }
-        Ok(EngineOutput { logits, stats })
+        self.with_scratch(|scratch| {
+            let mut logits = Vec::with_capacity(tokens.len());
+            let mut stats = LampStats::default();
+            for (b, seq) in tokens.iter().enumerate() {
+                let out = forward_with(
+                    &self.weights,
+                    seq,
+                    prec,
+                    seed as u64 ^ ((b as u64) << 32),
+                    scratch,
+                    self.pool.as_deref(),
+                )?;
+                logits.push(out.logits);
+                stats.merge(&out.stats);
+            }
+            Ok(EngineOutput { logits, stats })
+        })
     }
 
     fn backend(&self) -> &'static str {
@@ -171,6 +236,32 @@ mod tests {
         assert_eq!(out.stats.causal_total, 2 * 2 * 2 * 36);
         assert!(out.stats.recomputed > 0);
         assert_eq!(engine.backend(), "native");
+    }
+
+    #[test]
+    fn parallel_engine_bit_identical_and_generates() {
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(3);
+        let w = Weights::random(&cfg, &mut rng);
+        let seq_engine = NativeEngine::new(w.clone());
+        let par_engine = NativeEngine::new(w).with_threads(3);
+        let tokens = vec![vec![1u32; 12], vec![9u32; 12]];
+        let policy = PrecisionPolicy::lamp(3, 0.01, Rule::Strict);
+        let a = seq_engine.infer(&tokens, &policy, 1).unwrap();
+        let b = par_engine.infer(&tokens, &policy, 1).unwrap();
+        assert_eq!(a.logits, b.logits, "pool must not change engine output");
+        assert_eq!(a.stats.recomputed, b.stats.recomputed);
+        // Scratch is pooled and reused across calls.
+        let c = par_engine.infer(&tokens, &policy, 1).unwrap();
+        assert_eq!(a.logits, c.logits);
+        // KV-cache decode rides on the same engine.
+        let (toks, rate) =
+            par_engine.generate(&[1, 2, 3], 5, &policy, Decode::Greedy, 0).unwrap();
+        assert_eq!(toks.len(), 8);
+        assert!(rate > 0.0, "strict tau=0.01 must recompute");
+        let mut session = par_engine.decode_session(&policy, 0);
+        session.prefill(&[1, 2, 3]).unwrap();
+        assert_eq!(session.len(), 3);
     }
 
     #[test]

@@ -42,6 +42,24 @@ pub fn softmax(y: &[f32]) -> Vec<f32> {
     exps.iter().map(|&e| e / sum).collect()
 }
 
+/// Numerically stable softmax computed in place over `y` — allocation-free
+/// variant of [`softmax`] for the engine hot path. Bit-identical to
+/// [`softmax`]: the same subtract-max / exp / normalize sequence, each
+/// element touched in the same order.
+pub fn softmax_inplace(y: &mut [f32]) {
+    if y.is_empty() {
+        return;
+    }
+    let m = y.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    for v in y.iter_mut() {
+        *v = (*v - m).exp();
+    }
+    let sum: f32 = y.iter().sum();
+    for v in y.iter_mut() {
+        *v /= sum;
+    }
+}
+
 /// The strict LAMP sensitivity of entry j: `2 z_j (1 − z_j) |y_j|`.
 #[inline]
 pub fn strict_sensitivity(zj: f32, yj: f32) -> f32 {
@@ -150,6 +168,22 @@ mod tests {
         let z = softmax(&[1000.0, -1000.0]);
         assert!((z[0] - 1.0).abs() < 1e-6);
         assert!(z[1] >= 0.0 && z.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn softmax_inplace_bitwise_matches_allocating() {
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let n = rng.range(0, 64);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 30.0).collect();
+            let want = softmax(&y);
+            let mut got = y.clone();
+            softmax_inplace(&mut got);
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

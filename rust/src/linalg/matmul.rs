@@ -75,16 +75,58 @@ pub fn recompute_masked(
     Ok(n)
 }
 
-/// Throughput-oriented FP32 matmul: `C = X·W + b` with X: [m, k] and W
-/// *already row-major [k, n]* (no transpose needed), i–k–j loop order so
-/// the inner loop vectorizes across output columns.
-///
-/// Used on the FP32 parts of the model (QKV/proj/MLP/logits) where exact
-/// accumulation order is not part of the simulated-arithmetic contract —
-/// the PS(μ) score path stays on the sequential-FMA [`crate::softfloat::dot::dot_ps`].
-/// ~an order of magnitude faster than per-dot sequential FMA chains
-/// (latency-bound) at these sizes; see EXPERIMENTS.md §Perf.
-pub fn matmul_bias_fast(x: &Matrix, w: &Matrix, bias: &[f32]) -> Result<Matrix> {
+/// One row of the fast-path matmul: `out = x_row·W + bias` with W
+/// row-major [k, n], p–j loop order so the inner loop vectorizes across
+/// output columns. Shared by the batched [`matmul_bias_into`] and the
+/// KV-cache decode step, which runs the *same* FP32 op sequence on a
+/// single row — that shared kernel is what makes incremental decode
+/// bit-identical to the full forward pass (DESIGN.md §Bit-exactness).
+#[inline]
+pub fn matvec_bias_into(x_row: &[f32], w: &Matrix, bias: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x_row.len(), w.rows());
+    debug_assert_eq!(out.len(), w.cols());
+    debug_assert!(bias.is_empty() || bias.len() == w.cols());
+    if bias.is_empty() {
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+    } else {
+        out.copy_from_slice(bias);
+    }
+    for (p, &xv) in x_row.iter().enumerate() {
+        let wrow = w.row(p);
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o += xv * wv;
+        }
+    }
+}
+
+/// Four-way-unrolled FP32 dot product (independent partial sums break the
+/// FP add latency chain and let the compiler vectorize). Shared by
+/// [`matmul_transposed_into`] and the KV-cache unembedding row so both
+/// produce bit-identical logits.
+#[inline]
+pub fn dot_unrolled4(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let k = a.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut p = 0;
+    while p + 4 <= k {
+        s0 += a[p] * b[p];
+        s1 += a[p + 1] * b[p + 1];
+        s2 += a[p + 2] * b[p + 2];
+        s3 += a[p + 3] * b[p + 3];
+        p += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while p < k {
+        s += a[p] * b[p];
+        p += 1;
+    }
+    s
+}
+
+fn check_bias_shapes(x: &Matrix, w: &Matrix, bias: &[f32]) -> Result<()> {
     if x.cols() != w.rows() {
         return Err(Error::shape(format!(
             "matmul_bias_fast: {:?} x {:?}",
@@ -92,34 +134,52 @@ pub fn matmul_bias_fast(x: &Matrix, w: &Matrix, bias: &[f32]) -> Result<Matrix> 
             w.shape()
         )));
     }
-    let (m, k) = x.shape();
-    let n = w.cols();
-    if !bias.is_empty() && bias.len() != n {
+    if !bias.is_empty() && bias.len() != w.cols() {
         return Err(Error::shape(format!(
-            "matmul_bias_fast: bias {} != n {n}",
-            bias.len()
+            "matmul_bias_fast: bias {} != n {}",
+            bias.len(),
+            w.cols()
         )));
     }
-    let mut c = Matrix::zeros(m, n);
+    Ok(())
+}
+
+/// Throughput-oriented FP32 matmul into a reusable output: `C = X·W + b`
+/// with X: [m, k] and W *already row-major [k, n]* (no transpose needed).
+/// `out` is resized (allocation-free once warm) and fully overwritten.
+///
+/// Used on the FP32 parts of the model (QKV/proj/MLP/logits) where exact
+/// accumulation order is not part of the simulated-arithmetic contract —
+/// the PS(μ) score path stays on the sequential-FMA [`crate::softfloat::dot::dot_ps`].
+/// ~an order of magnitude faster than per-dot sequential FMA chains
+/// (latency-bound) at these sizes; see DESIGN.md §Perf.
+pub fn matmul_bias_into(
+    x: &Matrix,
+    w: &Matrix,
+    bias: &[f32],
+    out: &mut Matrix,
+) -> Result<()> {
+    check_bias_shapes(x, w, bias)?;
+    let m = x.rows();
+    let n = w.cols();
+    out.resize(m, n);
     for i in 0..m {
-        let xi = x.row(i);
-        let ci = c.row_mut(i);
-        if !bias.is_empty() {
-            ci.copy_from_slice(bias);
-        }
-        for (p, &xv) in xi.iter().enumerate().take(k) {
-            let wrow = w.row(p);
-            for j in 0..n {
-                ci[j] += xv * wrow[j];
-            }
-        }
+        matvec_bias_into(x.row(i), w, bias, out.row_mut(i));
     }
+    Ok(())
+}
+
+/// Allocating wrapper around [`matmul_bias_into`].
+pub fn matmul_bias_fast(x: &Matrix, w: &Matrix, bias: &[f32]) -> Result<Matrix> {
+    let mut c = Matrix::zeros(0, 0);
+    matmul_bias_into(x, w, bias, &mut c)?;
     Ok(c)
 }
 
-/// `C = X·Wᵀ` for W stored [n, k] (each output is a row dot): the fast
-/// path for the tied unembedding where `wte` is [vocab, d].
-pub fn matmul_transposed_fast(x: &Matrix, w: &Matrix) -> Result<Matrix> {
+/// `C = X·Wᵀ` for W stored [n, k] (each output is a row dot) into a
+/// reusable output: the fast path for the tied unembedding where `wte` is
+/// [vocab, d].
+pub fn matmul_transposed_into(x: &Matrix, w: &Matrix, out: &mut Matrix) -> Result<()> {
     if x.cols() != w.cols() {
         return Err(Error::shape(format!(
             "matmul_transposed_fast: {:?} x {:?}T",
@@ -127,33 +187,23 @@ pub fn matmul_transposed_fast(x: &Matrix, w: &Matrix) -> Result<Matrix> {
             w.shape()
         )));
     }
-    let (m, k) = x.shape();
+    let m = x.rows();
     let n = w.rows();
-    let mut c = Matrix::zeros(m, n);
+    out.resize(m, n);
     for i in 0..m {
         let xi = x.row(i);
-        let ci = c.row_mut(i);
+        let ci = out.row_mut(i);
         for j in 0..n {
-            let wj = w.row(j);
-            // Four independent partial sums: breaks the FP add latency
-            // chain and lets the compiler vectorize.
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            let mut p = 0;
-            while p + 4 <= k {
-                s0 += xi[p] * wj[p];
-                s1 += xi[p + 1] * wj[p + 1];
-                s2 += xi[p + 2] * wj[p + 2];
-                s3 += xi[p + 3] * wj[p + 3];
-                p += 4;
-            }
-            let mut s = (s0 + s1) + (s2 + s3);
-            while p < k {
-                s += xi[p] * wj[p];
-                p += 1;
-            }
-            ci[j] = s;
+            ci[j] = dot_unrolled4(xi, w.row(j));
         }
     }
+    Ok(())
+}
+
+/// Allocating wrapper around [`matmul_transposed_into`].
+pub fn matmul_transposed_fast(x: &Matrix, w: &Matrix) -> Result<Matrix> {
+    let mut c = Matrix::zeros(0, 0);
+    matmul_transposed_into(x, w, &mut c)?;
     Ok(c)
 }
 

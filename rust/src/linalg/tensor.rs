@@ -12,6 +12,13 @@ pub struct Matrix {
     data: Vec<f32>,
 }
 
+impl Default for Matrix {
+    /// An empty 0×0 matrix — the scratch-buffer starting point.
+    fn default() -> Self {
+        Matrix::zeros(0, 0)
+    }
+}
+
 impl Matrix {
     /// Zero-filled matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
@@ -92,6 +99,36 @@ impl Matrix {
     /// Consume into the flat buffer.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
+    }
+
+    /// Reshape in place to `rows × cols`, reusing the existing buffer.
+    ///
+    /// Grows the backing `Vec` only when the new element count exceeds its
+    /// capacity — the scratch-reuse primitive of the zero-realloc engine
+    /// (`ForwardScratch`, `DecodeSession`): once a scratch matrix has seen
+    /// its largest shape, later resizes are free. Newly exposed elements
+    /// are zero; retained elements keep their (stale) values, so callers
+    /// must fully overwrite the matrix before reading it.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Set every element to `v`.
+    pub fn fill(&mut self, v: f32) {
+        for x in &mut self.data {
+            *x = v;
+        }
+    }
+
+    /// Copy `other` into `self`, resizing to match. No allocation once
+    /// capacity suffices.
+    pub fn copy_from(&mut self, other: &Matrix) {
+        self.rows = other.rows;
+        self.cols = other.cols;
+        self.data.resize(other.data.len(), 0.0);
+        self.data.copy_from_slice(&other.data);
     }
 
     /// Transposed copy.
@@ -190,6 +227,23 @@ mod tests {
         assert!(m.slice_rows(1, 3).is_ok());
         assert!(m.slice_rows(3, 5).is_err());
         assert_eq!(m.slice_rows(1, 3).unwrap().shape(), (2, 2));
+    }
+
+    #[test]
+    fn resize_reuses_capacity_and_copy_from_matches() {
+        let mut m = Matrix::zeros(4, 8);
+        let cap = m.data.capacity();
+        m.resize(2, 3);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.data.capacity(), cap, "shrinking must not reallocate");
+        m.resize(4, 8);
+        assert_eq!(m.data.capacity(), cap, "regrowing within capacity must not reallocate");
+        let mut rng = Rng::new(5);
+        let src = Matrix::randn(3, 5, 1.0, &mut rng);
+        m.copy_from(&src);
+        assert_eq!(m, src);
+        m.fill(2.5);
+        assert!(m.data().iter().all(|&x| x == 2.5));
     }
 
     #[test]

@@ -132,7 +132,8 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
     let model = args.get_str("model")?;
     let store = ArtifactStore::open(args.get_str("artifacts")?)?;
     let engine: Box<dyn Engine> = match args.get_str("engine")?.as_str() {
-        "native" => Box::new(NativeEngine::load(&store, &model)?),
+        // Native serving tiles attention across all host CPUs.
+        "native" => Box::new(NativeEngine::load(&store, &model)?.with_threads(0)),
         "pjrt" => Box::new(PjrtEngine::load(&store, &model)?),
         other => {
             return Err(lamp::Error::config(format!("unknown engine {other:?}")))
@@ -207,11 +208,11 @@ fn cmd_inspect(args: &Args) -> lamp::Result<()> {
 }
 
 fn cmd_generate(args: &Args) -> lamp::Result<()> {
-    use lamp::model::{generate, Decode};
+    use lamp::model::Decode;
     let model = args.get_str("model")?;
     let store = ArtifactStore::open(args.get_str("artifacts")?)?;
-    let weights = store.weights(&model)?;
-    let cfg = weights.config.clone();
+    let engine = NativeEngine::load(&store, &model)?;
+    let cfg = engine.config().clone();
     let policy = PrecisionPolicy::lamp(
         args.get_u32("mu")?,
         args.get_f32("tau")?,
@@ -228,10 +229,10 @@ fn cmd_generate(args: &Args) -> lamp::Result<()> {
     let prompt = Dataset::generate(Domain::Web, cfg.vocab, 1, cfg.seq / 4, 7, seed)
         .sequences
         .remove(0);
-    let prec = policy.to_attention_precision(cfg.seq);
     let mut sw = Stopwatch::new();
+    // KV-cache decode: O(S) new inner products per token (DESIGN.md §Perf).
     let (tokens, rate) =
-        generate(&weights, &prompt, args.get_usize("new-tokens")?, prec, decode, seed)?;
+        engine.generate(&prompt, args.get_usize("new-tokens")?, &policy, decode, seed)?;
     println!(
         "generate({model}): prompt {} tokens -> {} tokens, mu={} tau={} rule={}",
         prompt.len(),

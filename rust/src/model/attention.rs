@@ -1,20 +1,34 @@
 //! Causal multi-head attention with LAMP mixed-precision KQ accumulation —
-//! the paper's §4.2 experimental setting, instrumented.
+//! the paper's §4.2 experimental setting, instrumented and parallel.
 //!
 //! Per head and per query row i:
 //! 1. Accumulate the causal KQ inner products y_j = ⟨q_i, k_j⟩ (j ≤ i) in
-//!    PS(μ) with per-step rounding, then scale by 1/√d_h in FP32.
+//!    PS(μ) with per-step rounding (fused row kernel
+//!    [`crate::softfloat::dot::score_row_ps`]), then scale by 1/√d_h in FP32.
 //! 2. Apply the LAMP selection rule to the scaled row.
 //! 3. Recompute the flagged inner products in FP32 (and rescale).
 //! 4. FP32 softmax over the row; FP32 value aggregation.
 //!
 //! `AttentionPrecision::reference()` (μ=23) reproduces uniform FP32
 //! accumulation bit-for-bit; `tau = ∞` reproduces uniform PS(μ).
+//!
+//! ## Execution model
+//!
+//! Every (head, query-row) pair is an independent unit of work: its scores
+//! depend only on q/k/v and its `SoftmaxRule::Random` draws come from a
+//! private RNG stream derived from `(seed, head, row)` — see
+//! [`row_stream_seed`]. Nothing is shared between rows, so the sequential
+//! loop ([`causal_attention`]) and the pool-parallel tiling
+//! ([`causal_attention_into`] with a pool) are **bit-identical** by
+//! construction, for every rule including `Random`. (The seed engine
+//! instead threaded one mutable RNG through all heads of a layer, which
+//! made head iteration order load-bearing and unparallelizable.)
 
-use crate::lamp::softmax::{select_softmax, softmax, SoftmaxRule};
+use crate::lamp::softmax::{select_softmax, softmax_inplace, SoftmaxRule};
 use crate::linalg::Matrix;
-use crate::softfloat::dot::{dot_f32, dot_ps};
-use crate::util::Rng;
+use crate::softfloat::dot::{dot_f32, score_row_ps};
+use crate::util::{Rng, ThreadPool};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Precision policy for attention score computation.
 #[derive(Debug, Clone, Copy)]
@@ -76,23 +90,114 @@ impl LampStats {
             self.per_layer[i] += c;
         }
     }
+
+    /// Account one incremental attention row (KV-cache decode): `n_keys`
+    /// causal products on `layer`, of which `recomputed` were repaired.
+    pub fn add_row(&mut self, layer: usize, n_keys: usize, recomputed: usize) {
+        self.causal_total += n_keys;
+        self.recomputed += recomputed;
+        if self.per_layer.len() <= layer {
+            self.per_layer.resize(layer + 1, 0);
+        }
+        self.per_layer[layer] += recomputed;
+    }
 }
 
-/// Causal multi-head attention for one sequence.
+/// Derive the private RNG stream id for one (attention-call seed, head,
+/// query-row) triple. Deterministic and order-independent: the stream
+/// depends only on the triple, never on which thread or in which order the
+/// row is processed. The caller folds the layer index into `seed` (see
+/// `forward::layer_seed`), making the full derivation
+/// (seed, layer, head, row) as the engine contract requires.
+#[inline]
+pub fn row_stream_seed(seed: u64, head: usize, row: usize) -> u64 {
+    // Distinct odd multipliers keep (head, row) and (row, head) apart;
+    // Rng::new splitmixes the result, so simple xor-folding suffices.
+    seed ^ (head as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+        ^ (row as u64 + 1).wrapping_mul(0xD1B54A32D192ED03)
+}
+
+/// Compute one (head, query-row) attention unit into `out` (the head's
+/// `hd`-wide slice of the output row). `scores` is caller-owned scratch —
+/// reused across calls, so the steady state allocates nothing (except the
+/// selection mask when a finite-τ LAMP rule is active).
 ///
-/// * `q`, `k`, `v` — [S, d_model] post-projection activations.
-/// * Returns the attention output [S, d_model] and the number of
-///   recomputed KQ products.
+/// Returns the number of recomputed KQ products.
 #[allow(clippy::too_many_arguments)]
-pub fn causal_attention(
+pub(crate) fn lamp_attention_row(
+    qi: &[f32],
+    k: &Matrix,
+    v: &Matrix,
+    off: usize,
+    n_keys: usize,
+    scale: f32,
+    prec: AttentionPrecision,
+    row_seed: u64,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) -> usize {
+    let hd = qi.len();
+    debug_assert_eq!(out.len(), hd);
+    debug_assert!(n_keys <= k.rows());
+    // Step 1: fused PS(μ) accumulation of the causal row, FP32 scaling.
+    scores.clear();
+    scores.resize(n_keys, 0.0);
+    score_row_ps(qi, &k.data()[off..], k.cols(), n_keys, prec.mu, scale, scores);
+    // Steps 2–3: LAMP selection + FP32 recomputation.
+    let mut recomputed = 0;
+    if prec.tau.is_finite() {
+        let mut rng = Rng::new(row_seed);
+        let mask = select_softmax(scores, prec.tau, prec.rule, &mut rng);
+        for (j, &m) in mask.iter().enumerate() {
+            if m {
+                let kj = &k.row(j)[off..off + hd];
+                scores[j] = dot_f32(qi, kj) * scale;
+                recomputed += 1;
+            }
+        }
+    }
+    // Step 4: FP32 softmax + value aggregation.
+    softmax_inplace(scores);
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for (j, &p) in scores.iter().enumerate() {
+        let vj = &v.row(j)[off..off + hd];
+        for (o, &vv) in out.iter_mut().zip(vj) {
+            *o += p * vv;
+        }
+    }
+    recomputed
+}
+
+/// Raw output pointer handed to the worker tiles. Each tile writes a
+/// disjoint set of (row, head-column-range) slices, so the aliasing is
+/// benign; `Send + Sync` are asserted on that basis.
+#[derive(Clone, Copy)]
+struct TileOut(*mut f32);
+unsafe impl Send for TileOut {}
+unsafe impl Sync for TileOut {}
+
+/// Causal multi-head attention for one sequence, written into a reusable
+/// output matrix (resized to [S, d]; allocation-free once warm).
+///
+/// With `pool: Some(..)` the (head × query-row) units are tiled across the
+/// pool via [`ThreadPool::scope_run`]; with `None` they run inline. Both
+/// paths execute the identical per-row kernel with identical per-row RNG
+/// streams, so outputs and recomputation counts are bit-identical.
+///
+/// Returns the number of recomputed KQ products.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention_into(
     q: &Matrix,
     k: &Matrix,
     v: &Matrix,
     heads: usize,
     prec: AttentionPrecision,
-    rng: &mut Rng,
-    recompute_count: &mut usize,
-) -> Matrix {
+    seed: u64,
+    pool: Option<&ThreadPool>,
+    out: &mut Matrix,
+) -> usize {
     let s = q.rows();
     let d = q.cols();
     debug_assert_eq!(k.shape(), (s, d));
@@ -100,41 +205,99 @@ pub fn causal_attention(
     debug_assert_eq!(d % heads, 0);
     let hd = d / heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = Matrix::zeros(s, d);
+    out.resize(s, d);
 
-    let mut scores: Vec<f32> = Vec::with_capacity(s);
-    for h in 0..heads {
-        let off = h * hd;
-        for i in 0..s {
-            let qi = &q.row(i)[off..off + hd];
-            // Step 1: PS(μ) accumulation of the causal row, FP32 scaling.
-            scores.clear();
-            for j in 0..=i {
-                let kj = &k.row(j)[off..off + hd];
-                scores.push(dot_ps(qi, kj, prec.mu) * scale);
-            }
-            // Steps 2–3: LAMP selection + FP32 recomputation.
-            if prec.tau.is_finite() {
-                let mask = select_softmax(&scores, prec.tau, prec.rule, rng);
-                for (j, &m) in mask.iter().enumerate() {
-                    if m {
-                        let kj = &k.row(j)[off..off + hd];
-                        scores[j] = dot_f32(qi, kj) * scale;
-                        *recompute_count += 1;
-                    }
+    match pool {
+        Some(pool) if pool.size() > 1 && s * heads > 1 => {
+            // Tile rows so each job amortizes its scratch; cap tiles at
+            // ~2 per worker per head dimension for load balance on the
+            // triangular (row-length-proportional) work distribution.
+            let chunk = (s / (pool.size() * 2)).max(4).min(s);
+            let chunks = s.div_ceil(chunk);
+            let jobs = heads * chunks;
+            let recomputed = AtomicUsize::new(0);
+            let tile_out = TileOut(out.data_mut().as_mut_ptr());
+            pool.scope_run(jobs, |job| {
+                let h = job / chunks;
+                let c = job % chunks;
+                let off = h * hd;
+                let r0 = c * chunk;
+                let r1 = (r0 + chunk).min(s);
+                let mut scores: Vec<f32> = Vec::with_capacity(r1);
+                let mut rec = 0usize;
+                for i in r0..r1 {
+                    let qi = &q.row(i)[off..off + hd];
+                    // SAFETY: (i, off) slices are disjoint across jobs —
+                    // each job owns its head's columns of its rows — and
+                    // scope_run joins every job before returning, so the
+                    // pointer outlives all writes.
+                    let orow = unsafe {
+                        std::slice::from_raw_parts_mut(tile_out.0.add(i * d + off), hd)
+                    };
+                    rec += lamp_attention_row(
+                        qi,
+                        k,
+                        v,
+                        off,
+                        i + 1,
+                        scale,
+                        prec,
+                        row_stream_seed(seed, h, i),
+                        &mut scores,
+                        orow,
+                    );
+                }
+                recomputed.fetch_add(rec, Ordering::Relaxed);
+            });
+            recomputed.load(Ordering::Relaxed)
+        }
+        _ => {
+            let mut scores: Vec<f32> = Vec::with_capacity(s);
+            let mut recomputed = 0usize;
+            for h in 0..heads {
+                let off = h * hd;
+                for i in 0..s {
+                    let qi = &q.row(i)[off..off + hd];
+                    // Split the mutable output row slice out via index
+                    // arithmetic identical to the parallel path.
+                    let orow = &mut out.row_mut(i)[off..off + hd];
+                    recomputed += lamp_attention_row(
+                        qi,
+                        k,
+                        v,
+                        off,
+                        i + 1,
+                        scale,
+                        prec,
+                        row_stream_seed(seed, h, i),
+                        &mut scores,
+                        orow,
+                    );
                 }
             }
-            // Step 4: FP32 softmax + value aggregation.
-            let probs = softmax(&scores);
-            let orow = &mut out.row_mut(i)[off..off + hd];
-            for (j, &p) in probs.iter().enumerate() {
-                let vj = &v.row(j)[off..off + hd];
-                for (o, &vv) in orow.iter_mut().zip(vj) {
-                    *o += p * vv;
-                }
-            }
+            recomputed
         }
     }
+}
+
+/// Causal multi-head attention for one sequence (sequential, allocating).
+///
+/// * `q`, `k`, `v` — [S, d_model] post-projection activations.
+/// * `seed` — stream id for the `Random` rule; forked per (head, row).
+/// * Returns the attention output [S, d_model]; adds the number of
+///   recomputed KQ products to `recompute_count`.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    heads: usize,
+    prec: AttentionPrecision,
+    seed: u64,
+    recompute_count: &mut usize,
+) -> Matrix {
+    let mut out = Matrix::zeros(q.rows(), q.cols());
+    *recompute_count += causal_attention_into(q, k, v, heads, prec, seed, None, &mut out);
     out
 }
 
@@ -154,11 +317,10 @@ mod tests {
     #[test]
     fn reference_equals_uniform_mu23() {
         let (q, k, v) = setup(8, 16, 1);
-        let mut rng = Rng::new(0);
         let mut n1 = 0;
-        let a = causal_attention(&q, &k, &v, 2, AttentionPrecision::reference(), &mut rng, &mut n1);
+        let a = causal_attention(&q, &k, &v, 2, AttentionPrecision::reference(), 0, &mut n1);
         let mut n2 = 0;
-        let b = causal_attention(&q, &k, &v, 2, AttentionPrecision::uniform(23), &mut rng, &mut n2);
+        let b = causal_attention(&q, &k, &v, 2, AttentionPrecision::uniform(23), 0, &mut n2);
         assert_eq!(a, b);
         assert_eq!(n1, 0);
         assert_eq!(n2, 0);
@@ -168,9 +330,8 @@ mod tests {
     fn row_zero_attends_to_itself_only() {
         // Causal: position 0 can only see position 0 → output row 0 = v row 0.
         let (q, k, v) = setup(4, 8, 2);
-        let mut rng = Rng::new(0);
         let mut n = 0;
-        let out = causal_attention(&q, &k, &v, 2, AttentionPrecision::reference(), &mut rng, &mut n);
+        let out = causal_attention(&q, &k, &v, 2, AttentionPrecision::reference(), 0, &mut n);
         for c in 0..8 {
             assert!((out.get(0, c) - v.get(0, c)).abs() < 1e-6);
         }
@@ -179,13 +340,12 @@ mod tests {
     #[test]
     fn low_precision_deviates_lamp_recovers() {
         let (q, k, v) = setup(16, 32, 3);
-        let mut rng = Rng::new(0);
         let mut n = 0;
         let reference =
-            causal_attention(&q, &k, &v, 4, AttentionPrecision::reference(), &mut rng, &mut n);
+            causal_attention(&q, &k, &v, 4, AttentionPrecision::reference(), 0, &mut n);
         let mut n_uni = 0;
         let uniform =
-            causal_attention(&q, &k, &v, 4, AttentionPrecision::uniform(3), &mut rng, &mut n_uni);
+            causal_attention(&q, &k, &v, 4, AttentionPrecision::uniform(3), 0, &mut n_uni);
         let mut n_lamp = 0;
         let lamp = causal_attention(
             &q,
@@ -193,7 +353,7 @@ mod tests {
             &v,
             4,
             AttentionPrecision::lamp(3, 0.01, SoftmaxRule::Strict),
-            &mut rng,
+            0,
             &mut n_lamp,
         );
         assert_eq!(n_uni, 0);
@@ -212,10 +372,9 @@ mod tests {
         // product; the result should be very close to the FP32 reference
         // (identical where all products are recomputed).
         let (q, k, v) = setup(12, 16, 4);
-        let mut rng = Rng::new(0);
         let mut n = 0;
         let reference =
-            causal_attention(&q, &k, &v, 2, AttentionPrecision::reference(), &mut rng, &mut n);
+            causal_attention(&q, &k, &v, 2, AttentionPrecision::reference(), 0, &mut n);
         let mut n_all = 0;
         let lamp = causal_attention(
             &q,
@@ -223,11 +382,72 @@ mod tests {
             &v,
             2,
             AttentionPrecision::lamp(2, 0.0, SoftmaxRule::Strict),
-            &mut rng,
+            0,
             &mut n_all,
         );
         let e = lamp.max_abs_diff(&reference).unwrap();
         assert!(e < 1e-5, "tau=0 should recover reference: {e}");
+    }
+
+    #[test]
+    fn parallel_tiles_bit_identical_to_sequential_all_rules() {
+        // The engine contract: pool-tiled attention reproduces the
+        // sequential loop bit-for-bit, including the Random rule — every
+        // (head, row) has its own RNG stream, so thread order is free.
+        let pool = ThreadPool::new(4);
+        let (q, k, v) = setup(33, 32, 7); // odd S exercises ragged tiles
+        let rules = [
+            SoftmaxRule::Strict,
+            SoftmaxRule::Relaxed,
+            SoftmaxRule::RelaxedLengthNorm { ref_len: 64 },
+            SoftmaxRule::Random,
+        ];
+        for rule in rules {
+            for prec in [
+                AttentionPrecision::reference(),
+                AttentionPrecision::uniform(4),
+                AttentionPrecision::lamp(4, 0.05, rule),
+            ] {
+                let mut n_seq = 0;
+                let seq = causal_attention(&q, &k, &v, 4, prec, 99, &mut n_seq);
+                let mut par = Matrix::zeros(0, 0);
+                let n_par =
+                    causal_attention_into(&q, &k, &v, 4, prec, 99, Some(&pool), &mut par);
+                assert_eq!(n_seq, n_par, "{rule:?}: recompute counts diverge");
+                assert_eq!(seq.shape(), par.shape());
+                for r in 0..seq.rows() {
+                    for c in 0..seq.cols() {
+                        assert_eq!(
+                            seq.get(r, c).to_bits(),
+                            par.get(r, c).to_bits(),
+                            "{rule:?}: ({r},{c})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_rule_is_head_order_independent() {
+        // Two heads, same (q, k) content per head: with per-(head, row)
+        // streams the masks differ across heads (independent draws), and
+        // recomputing with the heads' data swapped swaps the outputs
+        // exactly — no cross-head RNG coupling.
+        let (q, k, v) = setup(10, 16, 11);
+        let prec = AttentionPrecision::lamp(3, 0.05, SoftmaxRule::Random);
+        let mut n1 = 0;
+        let a = causal_attention(&q, &k, &v, 2, prec, 5, &mut n1);
+        let mut n2 = 0;
+        let b = causal_attention(&q, &k, &v, 2, prec, 5, &mut n2);
+        assert_eq!(a, b, "same seed must reproduce exactly");
+        assert_eq!(n1, n2);
+        let mut n3 = 0;
+        let c = causal_attention(&q, &k, &v, 2, prec, 6, &mut n3);
+        assert!(
+            a != c || n1 == 0,
+            "different seeds should draw different random masks"
+        );
     }
 
     #[test]
@@ -240,5 +460,16 @@ mod tests {
         assert_eq!(s.causal_total, 200);
         assert_eq!(s.per_layer, vec![2, 4, 0]);
         assert_eq!(LampStats::default().rate(), 0.0);
+    }
+
+    #[test]
+    fn stats_add_row() {
+        let mut s = LampStats::default();
+        s.add_row(1, 10, 2);
+        s.add_row(0, 4, 0);
+        s.add_row(1, 11, 3);
+        assert_eq!(s.causal_total, 25);
+        assert_eq!(s.recomputed, 5);
+        assert_eq!(s.per_layer, vec![0, 5]);
     }
 }

@@ -1,14 +1,22 @@
 //! Full GPT-2 forward pass with LAMP attention (native engine).
+//!
+//! Two entry points:
+//! * [`forward`] — convenience wrapper: allocates its own scratch, runs
+//!   sequentially. Semantics of the original engine.
+//! * [`forward_with`] — the production path: reuses a caller-owned
+//!   [`ForwardScratch`] (zero heap traffic once warm) and optionally tiles
+//!   attention across a [`ThreadPool`]. Bit-identical to [`forward`] for
+//!   every precision policy — see DESIGN.md §Bit-exactness.
 
-use super::attention::{causal_attention, AttentionPrecision, LampStats};
+use super::attention::{causal_attention_into, AttentionPrecision, LampStats};
 use super::config::ModelConfig;
 use super::layernorm::{layernorm, LN_EPS};
-use super::mlp::mlp;
+use super::mlp::mlp_into;
 use super::weights::Weights;
 use crate::error::{Error, Result};
-use crate::linalg::matmul::{matmul_bias_fast, matmul_transposed_fast};
+use crate::linalg::matmul::{matmul_bias_into, matmul_transposed_fast};
 use crate::linalg::Matrix;
-use crate::util::Rng;
+use crate::util::ThreadPool;
 
 /// Output of a forward pass over one sequence.
 #[derive(Debug, Clone)]
@@ -19,17 +27,100 @@ pub struct ForwardOutput {
     pub stats: LampStats,
 }
 
+/// Reusable buffers for [`forward_with`]. One scratch serves any sequence
+/// length up to the longest it has seen (buffers only ever grow); the
+/// per-layer `x.clone()` pre-LN copies, the QKV split into three fresh
+/// matrices, and the per-row score vectors of the original engine all
+/// land here instead of the allocator.
+#[derive(Debug, Default)]
+pub struct ForwardScratch {
+    /// Residual stream [S, d].
+    x: Matrix,
+    /// Pre-LN copy of the residual [S, d].
+    xn: Matrix,
+    /// Fused QKV projection [S, 3d].
+    qkv: Matrix,
+    q: Matrix,
+    k: Matrix,
+    v: Matrix,
+    /// Attention output [S, d].
+    attn: Matrix,
+    /// Attention/MLP projection back into the residual [S, d].
+    proj: Matrix,
+    /// MLP hidden activations [S, d_ff].
+    hidden: Matrix,
+    /// MLP output [S, d].
+    mlp_out: Matrix,
+}
+
+impl ForwardScratch {
+    /// Fresh scratch; buffers are sized lazily on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Scratch pre-sized for `cfg` at full context length, so the serving
+    /// path never allocates mid-request.
+    pub fn for_config(cfg: &ModelConfig) -> Self {
+        let mut s = Self::new();
+        s.reserve(cfg.seq, cfg);
+        s
+    }
+
+    fn reserve(&mut self, s: usize, cfg: &ModelConfig) {
+        let d = cfg.d_model;
+        self.x.resize(s, d);
+        self.xn.resize(s, d);
+        self.qkv.resize(s, 3 * d);
+        self.q.resize(s, d);
+        self.k.resize(s, d);
+        self.v.resize(s, d);
+        self.attn.resize(s, d);
+        self.proj.resize(s, d);
+        self.hidden.resize(s, cfg.d_ff());
+        self.mlp_out.resize(s, d);
+    }
+}
+
+/// The per-layer attention seed: folds the layer index into the pass seed
+/// so every (layer, head, row) triple draws from its own stream (the
+/// `Random` rule's order-independence contract).
+///
+/// The multiplier must differ from the head fold's constant in
+/// [`super::attention::row_stream_seed`] — with a shared constant the two
+/// XOR terms cancel whenever `layer == head + 1`, silently collapsing
+/// distinct (layer, head) pairs onto one stream.
+#[inline]
+pub(crate) fn layer_seed(seed: u64, layer: usize) -> u64 {
+    seed ^ (layer as u64 + 1).wrapping_mul(0xA24BAED4963EE407)
+}
+
 /// Run the model over one token sequence.
 ///
 /// * `tokens` — token ids; length must be ≤ `config.seq`.
 /// * `prec` — attention precision policy (μ, τ, rule).
 /// * `seed` — RNG seed for the `Random` selection rule (deterministic
-///   given (seed, layer, head) so runs are reproducible).
+///   given (seed, layer, head, row) so runs are reproducible and
+///   execution order is immaterial).
 pub fn forward(
     weights: &Weights,
     tokens: &[u32],
     prec: AttentionPrecision,
     seed: u64,
+) -> Result<ForwardOutput> {
+    let mut scratch = ForwardScratch::new();
+    forward_with(weights, tokens, prec, seed, &mut scratch, None)
+}
+
+/// [`forward`] with caller-owned scratch and optional attention-tile
+/// parallelism. Bit-identical to [`forward`] regardless of `pool`.
+pub fn forward_with(
+    weights: &Weights,
+    tokens: &[u32],
+    prec: AttentionPrecision,
+    seed: u64,
+    scratch: &mut ForwardScratch,
+    pool: Option<&ThreadPool>,
 ) -> Result<ForwardOutput> {
     let cfg: &ModelConfig = &weights.config;
     let s = tokens.len();
@@ -45,9 +136,10 @@ pub fn forward(
         }
     }
     let d = cfg.d_model;
+    scratch.reserve(s, cfg);
 
     // Embedding: wte[token] + wpe[pos].
-    let mut x = Matrix::zeros(s, d);
+    let x = &mut scratch.x;
     for (i, &t) in tokens.iter().enumerate() {
         let te = weights.wte.row(t as usize);
         let pe = weights.wpe.row(i);
@@ -65,57 +157,69 @@ pub fn forward(
 
     for (l, blk) in weights.blocks.iter().enumerate() {
         // --- Attention sublayer (pre-LN). ---
-        let mut xn = x.clone();
+        scratch.xn.copy_from(&scratch.x);
         for i in 0..s {
-            layernorm(xn.row_mut(i), &blk.ln1_g, &blk.ln1_b, LN_EPS);
+            layernorm(scratch.xn.row_mut(i), &blk.ln1_g, &blk.ln1_b, LN_EPS);
         }
         // QKV projection (FP32, vectorized — not part of the PS(μ) path).
-        let qkv = matmul_bias_fast(&xn, &blk.w_qkv, &blk.b_qkv)?;
-        let mut q = Matrix::zeros(s, d);
-        let mut k = Matrix::zeros(s, d);
-        let mut v = Matrix::zeros(s, d);
+        matmul_bias_into(&scratch.xn, &blk.w_qkv, &blk.b_qkv, &mut scratch.qkv)?;
         for i in 0..s {
-            let row = qkv.row(i);
-            q.row_mut(i).copy_from_slice(&row[..d]);
-            k.row_mut(i).copy_from_slice(&row[d..2 * d]);
-            v.row_mut(i).copy_from_slice(&row[2 * d..]);
+            let row = scratch.qkv.row(i);
+            scratch.q.row_mut(i).copy_from_slice(&row[..d]);
+            scratch.k.row_mut(i).copy_from_slice(&row[d..2 * d]);
+            scratch.v.row_mut(i).copy_from_slice(&row[2 * d..]);
         }
-        // LAMP attention; per-layer RNG stream for the Random rule.
-        let mut layer_rng = Rng::new(seed ^ (l as u64).wrapping_mul(0x9E3779B97F4A7C15));
-        let mut layer_recomputed = 0usize;
-        let attn = causal_attention(&q, &k, &v, cfg.heads, prec, &mut layer_rng, &mut layer_recomputed);
+        let layer_recomputed = causal_attention_into(
+            &scratch.q,
+            &scratch.k,
+            &scratch.v,
+            cfg.heads,
+            prec,
+            layer_seed(seed, l),
+            pool,
+            &mut scratch.attn,
+        );
         stats.per_layer[l] = layer_recomputed;
         stats.recomputed += layer_recomputed;
         // Output projection + residual.
-        let proj = matmul_bias_fast(&attn, &blk.w_proj, &blk.b_proj)?;
+        matmul_bias_into(&scratch.attn, &blk.w_proj, &blk.b_proj, &mut scratch.proj)?;
         for i in 0..s {
-            let pr = proj.row(i);
-            let xr = x.row_mut(i);
+            let pr = scratch.proj.row(i);
+            let xr = scratch.x.row_mut(i);
             for c in 0..d {
                 xr[c] += pr[c];
             }
         }
 
         // --- MLP sublayer (pre-LN). ---
-        let mut xn = x.clone();
+        scratch.xn.copy_from(&scratch.x);
         for i in 0..s {
-            layernorm(xn.row_mut(i), &blk.ln2_g, &blk.ln2_b, LN_EPS);
+            layernorm(scratch.xn.row_mut(i), &blk.ln2_g, &blk.ln2_b, LN_EPS);
         }
-        let m = mlp(&xn, &blk.w_fc, &blk.b_fc, &blk.w_out, &blk.b_out);
+        mlp_into(
+            &scratch.xn,
+            &blk.w_fc,
+            &blk.b_fc,
+            &blk.w_out,
+            &blk.b_out,
+            &mut scratch.hidden,
+            &mut scratch.mlp_out,
+        )?;
         for i in 0..s {
-            let mr = m.row(i);
-            let xr = x.row_mut(i);
+            let mr = scratch.mlp_out.row(i);
+            let xr = scratch.x.row_mut(i);
             for c in 0..d {
                 xr[c] += mr[c];
             }
         }
     }
 
-    // Final LN + tied unembedding.
+    // Final LN + tied unembedding. The logits matrix is the caller's
+    // deliverable, so it is the one allocation of the pass.
     for i in 0..s {
-        layernorm(x.row_mut(i), &weights.lnf_g, &weights.lnf_b, LN_EPS);
+        layernorm(scratch.x.row_mut(i), &weights.lnf_g, &weights.lnf_b, LN_EPS);
     }
-    let logits = matmul_transposed_fast(&x, &weights.wte)?;
+    let logits = matmul_transposed_fast(&scratch.x, &weights.wte)?;
     Ok(ForwardOutput { logits, stats })
 }
 
@@ -123,6 +227,7 @@ pub fn forward(
 mod tests {
     use super::*;
     use crate::lamp::softmax::SoftmaxRule;
+    use crate::util::Rng;
 
     fn nano_weights(seed: u64) -> Weights {
         let mut rng = Rng::new(seed);
@@ -148,6 +253,41 @@ mod tests {
         let too_long: Vec<u32> = vec![0; 33];
         assert!(forward(&w, &too_long, AttentionPrecision::reference(), 0).is_err());
         assert!(forward(&w, &[999], AttentionPrecision::reference(), 0).is_err());
+    }
+
+    #[test]
+    fn scratch_reuse_and_pool_are_bit_identical() {
+        // One scratch across many calls of varying lengths and policies,
+        // with and without a pool, must reproduce the fresh-scratch
+        // sequential pass bit-for-bit.
+        let w = nano_weights(7);
+        let pool = ThreadPool::new(3);
+        let mut scratch = ForwardScratch::for_config(&w.config);
+        let seqs: Vec<Vec<u32>> = vec![
+            (0..20).map(|i| (i * 5 + 1) % 128).collect(),
+            vec![3, 14, 15],
+            (0..32).map(|i| (i * 11 + 2) % 128).collect(),
+            vec![42],
+        ];
+        for prec in [
+            AttentionPrecision::reference(),
+            AttentionPrecision::uniform(3),
+            AttentionPrecision::lamp(3, 0.02, SoftmaxRule::Strict),
+            AttentionPrecision::lamp(3, 0.05, SoftmaxRule::Random),
+        ] {
+            for tokens in &seqs {
+                let fresh = forward(&w, tokens, prec, 9).unwrap();
+                let reused =
+                    forward_with(&w, tokens, prec, 9, &mut scratch, None).unwrap();
+                let pooled =
+                    forward_with(&w, tokens, prec, 9, &mut scratch, Some(&pool)).unwrap();
+                assert_eq!(fresh.logits, reused.logits, "scratch reuse changed logits");
+                assert_eq!(fresh.logits, pooled.logits, "pool changed logits");
+                assert_eq!(fresh.stats.recomputed, reused.stats.recomputed);
+                assert_eq!(fresh.stats.recomputed, pooled.stats.recomputed);
+                assert_eq!(fresh.stats.per_layer, pooled.stats.per_layer);
+            }
+        }
     }
 
     #[test]
@@ -185,6 +325,26 @@ mod tests {
         for i in 0..4 {
             for c in 0..128 {
                 assert_eq!(a.logits.get(i, c), b.logits.get(i, c), "pos {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn rng_streams_distinct_across_layer_head_row() {
+        // Regression: layer_seed and row_stream_seed once shared a fold
+        // multiplier, cancelling whenever layer == head + 1 and collapsing
+        // distinct (layer, head) pairs onto one Random-rule stream.
+        use super::super::attention::row_stream_seed;
+        let mut seen = std::collections::HashSet::new();
+        for l in 0..8 {
+            for h in 0..8 {
+                for row in 0..8 {
+                    let s = row_stream_seed(layer_seed(7, l), h, row);
+                    assert!(
+                        seen.insert(s),
+                        "stream collision at layer={l} head={h} row={row}"
+                    );
+                }
             }
         }
     }

@@ -1,0 +1,333 @@
+//! KV-cache incremental decoding for the native engine.
+//!
+//! The original serving loop re-ran the full O(S²) forward pass for every
+//! generated token. A [`DecodeSession`] instead carries the per-layer
+//! K/V projections of every position it has already processed, so feeding
+//! one token costs one embedding row, one row through each layer
+//! (QKV/proj/MLP row matvecs + **O(S) new KQ inner products** against the
+//! cached keys) and one unembedding row — the per-token cost drops from
+//! O(S²·d) attention work to O(S·d).
+//!
+//! ## Bit-exactness contract (DESIGN.md §Bit-exactness)
+//!
+//! The decode step runs the *same row kernels in the same order* as
+//! [`forward`](super::forward::forward) runs them for the last row of a
+//! full pass: `matvec_bias_into` for the projections (the row body of
+//! `matmul_bias_into`), [`lamp_attention_row`] for the scores (shared with
+//! `causal_attention_into`), `dot_unrolled4` for the tied unembedding (the
+//! row body of `matmul_transposed_into`), and the same `layernorm`/GELU
+//! scalars. Attention for row `i` draws its `Random`-rule stream from
+//! `(seed, layer, head, i)` — a function of the position only — so cached
+//! rows never need re-selection. Consequently the logits produced
+//! incrementally are **bit-identical** to re-running the full forward pass
+//! over the whole prefix, for every precision policy including `Random`
+//! (verified by `rust/tests/decode_parity.rs`).
+//!
+//! [`LampStats`] accounting is incremental: each decoded row adds its
+//! `layers × heads × (pos + 1)` causal products once, so a session's
+//! `rate()` is the recomputation rate over every product the session ever
+//! evaluated — no double counting, unlike the re-forward loop which
+//! re-evaluates (and re-counted) the whole triangle per token.
+
+use super::attention::{lamp_attention_row, row_stream_seed, AttentionPrecision, LampStats};
+use super::config::ModelConfig;
+use super::forward::layer_seed;
+use super::layernorm::{layernorm, LN_EPS};
+use super::weights::Weights;
+use crate::error::{Error, Result};
+use crate::lamp::activation::Activation;
+use crate::linalg::matmul::{dot_unrolled4, matvec_bias_into};
+use crate::linalg::Matrix;
+
+/// Incremental decoding state bound to a model's weights.
+///
+/// All buffers — caches and row scratch — are allocated once at
+/// construction; `decode_step` performs no heap allocation except the
+/// LAMP selection mask when a finite-τ policy is active.
+pub struct DecodeSession<'w> {
+    weights: &'w Weights,
+    prec: AttentionPrecision,
+    seed: u64,
+    /// Number of positions already decoded (== next position index).
+    pos: usize,
+    /// Per-layer cached key projections [seq, d]; rows 0..pos are valid.
+    k_cache: Vec<Matrix>,
+    /// Per-layer cached value projections [seq, d]; rows 0..pos are valid.
+    v_cache: Vec<Matrix>,
+    stats: LampStats,
+    // Row scratch.
+    x: Vec<f32>,
+    xn: Vec<f32>,
+    qkv: Vec<f32>,
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    hidden: Vec<f32>,
+    mlp: Vec<f32>,
+    scores: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl<'w> DecodeSession<'w> {
+    /// Create a session with empty caches sized for the model's full
+    /// context window.
+    pub fn new(weights: &'w Weights, prec: AttentionPrecision, seed: u64) -> Self {
+        let cfg = &weights.config;
+        let d = cfg.d_model;
+        DecodeSession {
+            weights,
+            prec,
+            seed,
+            pos: 0,
+            k_cache: (0..cfg.layers).map(|_| Matrix::zeros(cfg.seq, d)).collect(),
+            v_cache: (0..cfg.layers).map(|_| Matrix::zeros(cfg.seq, d)).collect(),
+            stats: LampStats {
+                recomputed: 0,
+                causal_total: 0,
+                per_layer: vec![0; cfg.layers],
+            },
+            x: vec![0.0; d],
+            xn: vec![0.0; d],
+            qkv: vec![0.0; 3 * d],
+            attn: vec![0.0; d],
+            proj: vec![0.0; d],
+            hidden: vec![0.0; cfg.d_ff()],
+            mlp: vec![0.0; d],
+            scores: Vec::with_capacity(cfg.seq),
+            logits: vec![0.0; cfg.vocab],
+        }
+    }
+
+    /// Model configuration.
+    pub fn config(&self) -> &ModelConfig {
+        &self.weights.config
+    }
+
+    /// Positions decoded so far.
+    pub fn len(&self) -> usize {
+        self.pos
+    }
+
+    /// True before the first token is fed.
+    pub fn is_empty(&self) -> bool {
+        self.pos == 0
+    }
+
+    /// Remaining context capacity.
+    pub fn remaining(&self) -> usize {
+        self.weights.config.seq - self.pos
+    }
+
+    /// Accumulated LAMP statistics over every product this session has
+    /// evaluated (each causal product counted exactly once).
+    pub fn stats(&self) -> &LampStats {
+        &self.stats
+    }
+
+    /// Logits of the most recently decoded position ([vocab]).
+    ///
+    /// Meaningless (all zeros) before the first `decode_step`.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    /// Clear the caches and statistics, keeping the buffers.
+    pub fn reset(&mut self) {
+        self.pos = 0;
+        self.stats = LampStats {
+            recomputed: 0,
+            causal_total: 0,
+            per_layer: vec![0; self.weights.config.layers],
+        };
+    }
+
+    /// Feed a whole prompt; afterwards [`Self::logits`] holds the last
+    /// prompt position's logits.
+    pub fn prefill(&mut self, tokens: &[u32]) -> Result<()> {
+        for &t in tokens {
+            self.decode_step(t)?;
+        }
+        Ok(())
+    }
+
+    /// Feed `token` at the next position: updates the caches and computes
+    /// that position's logits (available via [`Self::logits`]).
+    pub fn decode_step(&mut self, token: u32) -> Result<()> {
+        let cfg = &self.weights.config;
+        let d = cfg.d_model;
+        let heads = cfg.heads;
+        let hd = d / heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let i = self.pos;
+        if i >= cfg.seq {
+            return Err(Error::shape(format!(
+                "decode_step: context full ({} positions)",
+                cfg.seq
+            )));
+        }
+        if token as usize >= cfg.vocab {
+            return Err(Error::shape(format!(
+                "token {token} >= vocab {}",
+                cfg.vocab
+            )));
+        }
+
+        // Embedding row: wte[token] + wpe[i].
+        let te = self.weights.wte.row(token as usize);
+        let pe = self.weights.wpe.row(i);
+        for c in 0..d {
+            self.x[c] = te[c] + pe[c];
+        }
+
+        for (l, blk) in self.weights.blocks.iter().enumerate() {
+            // --- Attention sublayer (pre-LN), one row. ---
+            self.xn.copy_from_slice(&self.x);
+            layernorm(&mut self.xn, &blk.ln1_g, &blk.ln1_b, LN_EPS);
+            matvec_bias_into(&self.xn, &blk.w_qkv, &blk.b_qkv, &mut self.qkv);
+            let (q_row, kv_row) = self.qkv.split_at(d);
+            let (k_row, v_row) = kv_row.split_at(d);
+            self.k_cache[l].row_mut(i).copy_from_slice(k_row);
+            self.v_cache[l].row_mut(i).copy_from_slice(v_row);
+            let lseed = layer_seed(self.seed, l);
+            let mut recomputed = 0usize;
+            for h in 0..heads {
+                let off = h * hd;
+                recomputed += lamp_attention_row(
+                    &q_row[off..off + hd],
+                    &self.k_cache[l],
+                    &self.v_cache[l],
+                    off,
+                    i + 1,
+                    scale,
+                    self.prec,
+                    row_stream_seed(lseed, h, i),
+                    &mut self.scores,
+                    &mut self.attn[off..off + hd],
+                );
+            }
+            self.stats.add_row(l, heads * (i + 1), recomputed);
+            // Output projection + residual.
+            matvec_bias_into(&self.attn, &blk.w_proj, &blk.b_proj, &mut self.proj);
+            for c in 0..d {
+                self.x[c] += self.proj[c];
+            }
+
+            // --- MLP sublayer (pre-LN), one row. ---
+            self.xn.copy_from_slice(&self.x);
+            layernorm(&mut self.xn, &blk.ln2_g, &blk.ln2_b, LN_EPS);
+            matvec_bias_into(&self.xn, &blk.w_fc, &blk.b_fc, &mut self.hidden);
+            for hval in &mut self.hidden {
+                *hval = Activation::Gelu.apply(*hval);
+            }
+            matvec_bias_into(&self.hidden, &blk.w_out, &blk.b_out, &mut self.mlp);
+            for c in 0..d {
+                self.x[c] += self.mlp[c];
+            }
+        }
+
+        // Final LN + tied unembedding row.
+        layernorm(&mut self.x, &self.weights.lnf_g, &self.weights.lnf_b, LN_EPS);
+        for (j, lo) in self.logits.iter_mut().enumerate() {
+            *lo = dot_unrolled4(&self.x, self.weights.wte.row(j));
+        }
+        self.pos = i + 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lamp::softmax::SoftmaxRule;
+    use crate::model::forward::forward;
+    use crate::util::Rng;
+
+    fn nano_weights(seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        Weights::random(&ModelConfig::nano(), &mut rng)
+    }
+
+    fn precs() -> Vec<AttentionPrecision> {
+        vec![
+            AttentionPrecision::reference(),
+            AttentionPrecision::uniform(3),
+            AttentionPrecision::lamp(3, 0.02, SoftmaxRule::Strict),
+            AttentionPrecision::lamp(3, 0.1, SoftmaxRule::Relaxed),
+            AttentionPrecision::lamp(3, 0.05, SoftmaxRule::Random),
+        ]
+    }
+
+    #[test]
+    fn incremental_logits_match_full_forward_bitwise() {
+        // Every step's logits must equal the corresponding row of a full
+        // forward pass over the same prefix — the KV cache's defining
+        // property. Holds bitwise for all rules (Random streams are a
+        // function of position, not of evaluation order).
+        let w = nano_weights(1);
+        let tokens: Vec<u32> = (0..14).map(|i| (i * 17 + 5) % 128).collect();
+        for prec in precs() {
+            let mut session = DecodeSession::new(&w, prec, 42);
+            for (i, &t) in tokens.iter().enumerate() {
+                session.decode_step(t).unwrap();
+                let full = forward(&w, &tokens[..=i], prec, 42).unwrap();
+                let want = full.logits.row(i);
+                let got = session.logits();
+                assert_eq!(got.len(), want.len());
+                for (c, (a, b)) in got.iter().zip(want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "step {i} col {c} diverges (mu={} tau={})",
+                        prec.mu,
+                        prec.tau
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stats_count_each_product_once() {
+        let w = nano_weights(2);
+        let prec = AttentionPrecision::lamp(3, 0.01, SoftmaxRule::Strict);
+        let mut session = DecodeSession::new(&w, prec, 0);
+        session.prefill(&[1, 2, 3, 4, 5]).unwrap();
+        let cfg = &w.config;
+        assert_eq!(session.len(), 5);
+        assert_eq!(
+            session.stats().causal_total,
+            cfg.layers * cfg.heads * 5 * 6 / 2
+        );
+        assert!(session.stats().recomputed > 0);
+        assert_eq!(session.stats().per_layer.len(), cfg.layers);
+        let full = forward(&w, &[1, 2, 3, 4, 5], prec, 0).unwrap();
+        // Same products evaluated once ⇒ identical counts to one full pass.
+        assert_eq!(session.stats().recomputed, full.stats.recomputed);
+        assert_eq!(session.stats().per_layer, full.stats.per_layer);
+    }
+
+    #[test]
+    fn context_and_vocab_limits_enforced() {
+        let w = nano_weights(3);
+        let mut session = DecodeSession::new(&w, AttentionPrecision::reference(), 0);
+        assert!(session.decode_step(9999).is_err());
+        for t in 0..w.config.seq as u32 {
+            session.decode_step(t % 128).unwrap();
+        }
+        assert_eq!(session.remaining(), 0);
+        assert!(session.decode_step(1).is_err(), "context overflow must error");
+    }
+
+    #[test]
+    fn reset_reuses_buffers() {
+        let w = nano_weights(4);
+        let prec = AttentionPrecision::reference();
+        let mut session = DecodeSession::new(&w, prec, 7);
+        session.prefill(&[1, 2, 3]).unwrap();
+        let first: Vec<f32> = session.logits().to_vec();
+        session.reset();
+        assert!(session.is_empty());
+        assert_eq!(session.stats().causal_total, 0);
+        session.prefill(&[1, 2, 3]).unwrap();
+        assert_eq!(session.logits(), &first[..], "reset must be a clean slate");
+    }
+}

@@ -1,13 +1,34 @@
 //! GPT-2 MLP block: fc → GELU → out, FP32.
 
+use crate::error::Result;
 use crate::lamp::activation::Activation;
-use crate::linalg::matmul::matmul_bias_fast;
+use crate::linalg::matmul::matmul_bias_into;
 use crate::linalg::Matrix;
 
-/// y = GELU(x·W_fc + b_fc)·W_out + b_out for a [S, d] activation matrix.
+/// y = GELU(x·W_fc + b_fc)·W_out + b_out into reusable `hidden`/`out`
+/// buffers (resized as needed; allocation-free once warm).
 ///
 /// FP32 path (not part of the simulated PS(μ) arithmetic) — uses the
-/// vectorized matmul; see EXPERIMENTS.md §Perf.
+/// vectorized matmul; see DESIGN.md §Perf.
+pub fn mlp_into(
+    x: &Matrix,
+    w_fc: &Matrix,
+    b_fc: &[f32],
+    w_out: &Matrix,
+    b_out: &[f32],
+    hidden: &mut Matrix,
+    out: &mut Matrix,
+) -> Result<()> {
+    debug_assert_eq!(w_fc.rows(), x.cols());
+    debug_assert_eq!(w_out.shape(), (w_fc.cols(), x.cols()));
+    matmul_bias_into(x, w_fc, b_fc, hidden)?;
+    for h in hidden.data_mut() {
+        *h = Activation::Gelu.apply(*h);
+    }
+    matmul_bias_into(hidden, w_out, b_out, out)
+}
+
+/// Allocating wrapper around [`mlp_into`].
 pub fn mlp(
     x: &Matrix,
     w_fc: &Matrix,
@@ -15,13 +36,10 @@ pub fn mlp(
     w_out: &Matrix,
     b_out: &[f32],
 ) -> Matrix {
-    debug_assert_eq!(w_fc.rows(), x.cols());
-    debug_assert_eq!(w_out.shape(), (w_fc.cols(), x.cols()));
-    let mut hidden = matmul_bias_fast(x, w_fc, b_fc).expect("mlp fc shapes");
-    for h in hidden.data_mut() {
-        *h = Activation::Gelu.apply(*h);
-    }
-    matmul_bias_fast(&hidden, w_out, b_out).expect("mlp out shapes")
+    let mut hidden = Matrix::zeros(0, 0);
+    let mut out = Matrix::zeros(0, 0);
+    mlp_into(x, w_fc, b_fc, w_out, b_out, &mut hidden, &mut out).expect("mlp shapes");
+    out
 }
 
 #[cfg(test)]

@@ -17,6 +17,7 @@
 pub mod attention;
 pub mod config;
 pub mod forward;
+pub mod kvcache;
 pub mod layernorm;
 pub mod loss;
 pub mod mlp;
@@ -25,6 +26,7 @@ pub mod weights;
 
 pub use attention::{AttentionPrecision, LampStats};
 pub use config::ModelConfig;
-pub use forward::{forward, ForwardOutput};
-pub use sampler::{generate, Decode};
+pub use forward::{forward, forward_with, ForwardOutput, ForwardScratch};
+pub use kvcache::DecodeSession;
+pub use sampler::{generate, generate_reforward, Decode};
 pub use weights::Weights;

@@ -1,9 +1,18 @@
 //! Autoregressive sampling on top of the native engine — the serving-side
 //! feature that turns the forward pass into text generation, used by the
 //! `lamp serve`/examples to demonstrate LAMP under decode workloads.
+//!
+//! [`generate`] decodes through a [`DecodeSession`] KV cache: O(S) new KQ
+//! inner products per token instead of a full O(S²) re-forward (see
+//! DESIGN.md §Perf). [`generate_reforward`] keeps the original
+//! re-run-everything loop as the benchmark baseline and parity oracle —
+//! under every precision policy the two produce identical token streams,
+//! because per-row attention state depends only on the row's position
+//! (DESIGN.md §Bit-exactness).
 
 use super::attention::AttentionPrecision;
 use super::forward::forward;
+use super::kvcache::DecodeSession;
 use super::weights::Weights;
 use crate::error::{Error, Result};
 use crate::util::Rng;
@@ -17,12 +26,56 @@ pub enum Decode {
     TopK { k: usize, temperature: f32 },
 }
 
-/// Generate `new_tokens` continuation tokens for `prompt`.
-///
-/// Re-runs the full forward per step (the native engine has no KV cache —
-/// LAMP's recomputation statistics are per-full-pass; a KV cache is listed
-/// as future work in DESIGN.md §Perf). Returns (tokens, recompute_rate).
+impl Decode {
+    fn pick(self, logits: &[f32], rng: &mut Rng) -> Result<u32> {
+        match self {
+            Decode::Greedy => Ok(crate::metrics::flip::argmax(logits) as u32),
+            Decode::TopK { k, temperature } => sample_topk(logits, k, temperature, rng),
+        }
+    }
+}
+
+/// Generate `new_tokens` continuation tokens for `prompt` through a
+/// KV-cache [`DecodeSession`]. Returns (tokens, recompute_rate), where the
+/// rate is over every causal product the session evaluated (each product
+/// exactly once).
 pub fn generate(
+    weights: &Weights,
+    prompt: &[u32],
+    new_tokens: usize,
+    prec: AttentionPrecision,
+    decode: Decode,
+    seed: u64,
+) -> Result<(Vec<u32>, f64)> {
+    if prompt.is_empty() {
+        return Err(Error::shape("empty prompt".to_string()));
+    }
+    let cfg = &weights.config;
+    let mut tokens = prompt.to_vec();
+    if tokens.len() >= cfg.seq || new_tokens == 0 {
+        return Ok((tokens, 0.0));
+    }
+    let mut rng = Rng::new(seed);
+    let mut session = DecodeSession::new(weights, prec, seed);
+    session.prefill(prompt)?;
+    for _ in 0..new_tokens {
+        let next = decode.pick(session.logits(), &mut rng)?;
+        tokens.push(next);
+        if tokens.len() >= cfg.seq {
+            break;
+        }
+        session.decode_step(next)?;
+    }
+    let rate = session.stats().rate();
+    Ok((tokens, rate))
+}
+
+/// The original decode loop: re-runs the full forward pass per generated
+/// token. Kept as the throughput baseline (`cargo bench --bench decode`)
+/// and as the parity oracle for the KV-cache path. Returns
+/// (tokens, recompute_rate) with the rate aggregated over every
+/// (re-)evaluated pass, as the seed engine reported it.
+pub fn generate_reforward(
     weights: &Weights,
     prompt: &[u32],
     new_tokens: usize,
@@ -38,18 +91,15 @@ pub fn generate(
     let mut rng = Rng::new(seed);
     let mut recomputed = 0usize;
     let mut causal = 0usize;
-    for step in 0..new_tokens {
+    for _ in 0..new_tokens {
         if tokens.len() >= cfg.seq {
             break;
         }
-        let out = forward(weights, &tokens, prec, seed.wrapping_add(step as u64))?;
+        let out = forward(weights, &tokens, prec, seed)?;
         recomputed += out.stats.recomputed;
         causal += out.stats.causal_total;
         let last = out.logits.row(tokens.len() - 1);
-        let next = match decode {
-            Decode::Greedy => crate::metrics::flip::argmax(last) as u32,
-            Decode::TopK { k, temperature } => sample_topk(last, k, temperature, &mut rng)?,
-        };
+        let next = decode.pick(last, &mut rng)?;
         tokens.push(next);
     }
     let rate = if causal == 0 { 0.0 } else { recomputed as f64 / causal as f64 };
@@ -75,6 +125,7 @@ fn sample_topk(logits: &[f32], k: usize, temperature: f32, rng: &mut Rng) -> Res
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lamp::softmax::SoftmaxRule;
     use crate::model::ModelConfig;
 
     fn weights() -> Weights {
@@ -102,6 +153,41 @@ mod tests {
         let (out, _) =
             generate(&w, &prompt, 10, AttentionPrecision::reference(), Decode::Greedy, 0).unwrap();
         assert!(out.len() <= 32);
+        // Prompt already at the limit: nothing to do, nothing to error.
+        let full: Vec<u32> = (0..32).collect();
+        let (out, rate) =
+            generate(&w, &full, 4, AttentionPrecision::reference(), Decode::Greedy, 0).unwrap();
+        assert_eq!(out, full);
+        assert_eq!(rate, 0.0);
+    }
+
+    #[test]
+    fn kv_cache_matches_reforward_all_rules() {
+        // The engine-rewire contract: the KV-cache decode produces exactly
+        // the token stream of the original full-re-forward loop, for
+        // deterministic and Random selection alike (per-row streams depend
+        // only on the position).
+        let w = weights();
+        let prompt = vec![7u32, 21, 3, 99];
+        for prec in [
+            AttentionPrecision::reference(),
+            AttentionPrecision::uniform(3),
+            AttentionPrecision::lamp(3, 0.02, SoftmaxRule::Strict),
+            AttentionPrecision::lamp(3, 0.1, SoftmaxRule::Relaxed),
+            AttentionPrecision::lamp(3, 0.05, SoftmaxRule::Random),
+        ] {
+            let (kv, kv_rate) =
+                generate(&w, &prompt, 10, prec, Decode::Greedy, 5).unwrap();
+            let (rf, _) =
+                generate_reforward(&w, &prompt, 10, prec, Decode::Greedy, 5).unwrap();
+            assert_eq!(kv, rf, "token streams diverge at mu={}", prec.mu);
+            assert!((0.0..=1.0).contains(&kv_rate));
+            // Top-k paths consume the same RNG stream in the same order.
+            let d = Decode::TopK { k: 8, temperature: 1.2 };
+            let (kv_t, _) = generate(&w, &prompt, 10, prec, d, 5).unwrap();
+            let (rf_t, _) = generate_reforward(&w, &prompt, 10, prec, d, 5).unwrap();
+            assert_eq!(kv_t, rf_t, "top-k streams diverge at mu={}", prec.mu);
+        }
     }
 
     #[test]
@@ -129,6 +215,8 @@ mod tests {
         assert!(generate(&w, &[], 4, AttentionPrecision::reference(), Decode::Greedy, 0).is_err());
         let bad = Decode::TopK { k: 0, temperature: 1.0 };
         assert!(generate(&w, &[1], 4, AttentionPrecision::reference(), bad, 0).is_err());
+        assert!(generate(&w, &[9999], 4, AttentionPrecision::reference(), Decode::Greedy, 0)
+            .is_err());
     }
 
     #[test]

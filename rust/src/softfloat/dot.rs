@@ -84,6 +84,64 @@ pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
     a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
 }
 
+/// Fused causal score-row kernel: computes a whole attention score row in
+/// one call,
+///
+/// ```text
+///   out[j] = dot_ps(q, keys[j·stride .. j·stride + q.len()], mu) · scale
+///   for j in 0..n
+/// ```
+///
+/// **Bit-identical to the per-dot [`dot_ps`] loop**: each output keeps its
+/// own accumulator with exactly the per-step `round(fma(..))` chain of the
+/// paper's PS(μ) model; fusion only interleaves *independent* chains four
+/// at a time so the FMA+round latency of one chain hides behind the other
+/// three (the chains are serially dependent internally, so a single dot is
+/// latency-bound). `keys` is the flat row-major K buffer offset to the
+/// head's first column; `stride` is the matrix row stride (d_model).
+pub fn score_row_ps(
+    q: &[f32],
+    keys: &[f32],
+    stride: usize,
+    n: usize,
+    mu: u32,
+    scale: f32,
+    out: &mut [f32],
+) {
+    let hd = q.len();
+    if n == 0 {
+        return;
+    }
+    assert!(out.len() >= n, "score_row_ps: out too short");
+    assert!(
+        (n - 1) * stride + hd <= keys.len(),
+        "score_row_ps: keys buffer too short"
+    );
+    let mut j = 0;
+    while j + 4 <= n {
+        let k0 = &keys[j * stride..j * stride + hd];
+        let k1 = &keys[(j + 1) * stride..(j + 1) * stride + hd];
+        let k2 = &keys[(j + 2) * stride..(j + 2) * stride + hd];
+        let k3 = &keys[(j + 3) * stride..(j + 3) * stride + hd];
+        let (mut c0, mut c1, mut c2, mut c3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for (p, &qp) in q.iter().enumerate() {
+            c0 = round_to_mantissa(qp.mul_add(k0[p], c0), mu);
+            c1 = round_to_mantissa(qp.mul_add(k1[p], c1), mu);
+            c2 = round_to_mantissa(qp.mul_add(k2[p], c2), mu);
+            c3 = round_to_mantissa(qp.mul_add(k3[p], c3), mu);
+        }
+        out[j] = c0 * scale;
+        out[j + 1] = c1 * scale;
+        out[j + 2] = c2 * scale;
+        out[j + 3] = c3 * scale;
+        j += 4;
+    }
+    while j < n {
+        out[j] = dot_ps(q, &keys[j * stride..j * stride + hd], mu) * scale;
+        j += 1;
+    }
+}
+
 /// Accumulate with the given [`AccumMode`].
 pub fn dot_with_mode(a: &[f32], b: &[f32], mode: AccumMode, rng: &mut Rng) -> f32 {
     match mode {
@@ -187,6 +245,42 @@ mod tests {
             dot_with_mode(&a, &b, AccumMode::Kahan, &mut rng),
             dot_kahan(&a, &b)
         );
+    }
+
+    #[test]
+    fn score_row_matches_per_dot_bitwise() {
+        // The fused kernel's contract: bit-identical to the scalar loop for
+        // every (mu, row length, head width, stride, offset) combination.
+        let mut rng = Rng::new(6);
+        for _ in 0..50 {
+            let hd = rng.range(1, 24);
+            let n = rng.range(1, 19); // crosses the 4-wide block boundary
+            let stride = hd + rng.range(0, 9);
+            let off = rng.range(0, 5).min(stride - hd);
+            let q = randvec(&mut rng, hd, 2.0);
+            let keys = randvec(&mut rng, n * stride + off, 2.0);
+            for mu in [1u32, 4, 11, 23] {
+                let scale = 1.0 / (hd as f32).sqrt();
+                let mut out = vec![0.0f32; n];
+                score_row_ps(&q, &keys[off..], stride, n, mu, scale, &mut out);
+                for j in 0..n {
+                    let kj = &keys[off + j * stride..off + j * stride + hd];
+                    let want = dot_ps(&q, kj, mu) * scale;
+                    assert_eq!(
+                        out[j].to_bits(),
+                        want.to_bits(),
+                        "j={j} mu={mu} hd={hd} n={n}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn score_row_empty() {
+        let mut out: Vec<f32> = Vec::new();
+        score_row_ps(&[1.0, 2.0], &[], 2, 0, 4, 1.0, &mut out);
+        assert!(out.is_empty());
     }
 
     #[test]

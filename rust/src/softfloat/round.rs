@@ -61,7 +61,7 @@ pub fn round_to_mantissa_stochastic(x: f32, mu: u32, rng: &mut Rng) -> f32 {
     let shift = 23 - mu;
     let u = x.to_bits();
     let frac = u & ((1u32 << shift) - 1);
-    let draw = (rng.next_u32() & ((1u32 << shift) - 1)) as u32;
+    let draw = rng.next_u32() & ((1u32 << shift) - 1);
     let r = if draw < frac {
         ((u >> shift) + 1) << shift
     } else {
@@ -241,6 +241,35 @@ mod tests {
         }
         let p = ups as f64 / n as f64;
         assert!((p - 0.25).abs() < 0.01, "p={p}");
+    }
+
+    #[test]
+    fn stochastic_carry_into_exponent() {
+        // All 23 mantissa bits set: the kept PS(4) field is maximal and the
+        // discarded fraction is 2^19 − 1, so the up-round (probability
+        // 1 − 2⁻¹⁹ per draw) must carry cleanly into the exponent — the
+        // only representable outcomes are the truncation and the next
+        // binade, never a garbled mantissa.
+        let mut rng = Rng::new(8);
+        let x = f32::from_bits(0x3FFF_FFFF); // just below 2.0
+        let down = f32::from_bits((0x3FFF_FFFFu32 >> 19) << 19); // 1.9375
+        let mut saw_carry = false;
+        for _ in 0..64 {
+            let r = round_to_mantissa_stochastic(x, 4, &mut rng);
+            assert!(r == 2.0 || r == down, "r={r}");
+            saw_carry |= r == 2.0;
+        }
+        assert!(saw_carry, "carry into the exponent never happened");
+        // Same mechanism at the top binade: f32::MAX's up-round is the
+        // infinity bit pattern.
+        let max_down = f32::from_bits((f32::MAX.to_bits() >> 19) << 19);
+        let mut saw_inf = false;
+        for _ in 0..64 {
+            let r = round_to_mantissa_stochastic(f32::MAX, 4, &mut rng);
+            assert!(r == f32::INFINITY || r == max_down, "r={r}");
+            saw_inf |= r == f32::INFINITY;
+        }
+        assert!(saw_inf, "max-mantissa overflow never reached infinity");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Small infrastructure substrates: PRNG, timing, logging, thread pool.
 //!
-//! No external crates beyond `xla`/`anyhow` are available in the offline
-//! build environment, so these are hand-rolled but fully tested.
+//! No external crates beyond the bundled `xla` stub are available in the
+//! offline build environment, so these are hand-rolled but fully tested.
 
 pub mod logging;
 pub mod rng;

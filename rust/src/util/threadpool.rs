@@ -1,9 +1,16 @@
 //! A fixed-size work-stealing-free thread pool over `std::sync::mpsc`.
 //!
-//! Tokio is not available in the offline build, so the coordinator and the
-//! experiment harness parallelize over this pool. It supports fire-and-forget
-//! jobs, scoped parallel-map (`map`), and clean shutdown on drop.
+//! Tokio is not available in the offline build, so the coordinator, the
+//! experiment harness, and the native engine's attention tiles parallelize
+//! over this pool. It supports fire-and-forget jobs, scoped parallel-map
+//! (`map`), borrowing scoped index jobs (`scope_run` — the attention-tile
+//! primitive), and clean shutdown on drop.
+//!
+//! Worker panics never poison the pool: both `map` and `scope_run` catch
+//! them, drain every outstanding job, and then resurface the failure on
+//! the caller's thread together with the failing job indices.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -15,10 +22,12 @@ enum Message {
     Shutdown,
 }
 
-/// Fixed-size thread pool.
+/// Fixed-size thread pool. `Send + Sync`: submission is serialized behind a
+/// mutex so one pool can be shared (e.g. inside an engine used from
+/// several serving threads).
 pub struct ThreadPool {
     workers: Vec<JoinHandle<()>>,
-    tx: Sender<Message>,
+    tx: Mutex<Sender<Message>>,
 }
 
 impl ThreadPool {
@@ -37,7 +46,7 @@ impl ThreadPool {
                     .expect("spawn worker"),
             );
         }
-        ThreadPool { workers, tx }
+        ThreadPool { workers, tx: Mutex::new(tx) }
     }
 
     /// A pool sized to the number of available CPUs (capped at `cap`).
@@ -56,13 +65,20 @@ impl ThreadPool {
 
     /// Submit a fire-and-forget job.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.send(Message::Run(Box::new(f))).expect("pool closed");
+        self.tx
+            .lock()
+            .expect("pool sender lock")
+            .send(Message::Run(Box::new(f)))
+            .expect("pool closed");
     }
 
     /// Parallel map: apply `f` to each item, preserving order.
     ///
     /// Items and results cross thread boundaries, so everything must be
-    /// `Send`; `f` is shared behind an `Arc`.
+    /// `Send`; `f` is shared behind an `Arc`. A panicking `f` no longer
+    /// kills the caller with a bare `RecvError`: panics are caught in the
+    /// worker, every remaining job still runs, and the panic is re-raised
+    /// here with the indices of the failing jobs.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -71,23 +87,113 @@ impl ThreadPool {
     {
         let n = items.len();
         let f = Arc::new(f);
-        let (rtx, rrx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
+        let (rtx, rrx) = channel::<(usize, std::thread::Result<R>)>();
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
             let rtx = rtx.clone();
             self.execute(move || {
-                let r = f(item);
-                // Receiver may be gone if caller panicked; ignore.
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
+                // Receiver may be gone if the caller is already unwinding.
                 let _ = rtx.send((i, r));
             });
         }
         drop(rtx);
         let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut panicked: Vec<usize> = Vec::new();
+        let mut first_msg = String::new();
         for _ in 0..n {
-            let (i, r) = rrx.recv().expect("worker result");
-            slots[i] = Some(r);
+            match rrx.recv() {
+                Ok((i, Ok(r))) => slots[i] = Some(r),
+                Ok((i, Err(payload))) => {
+                    if panicked.is_empty() {
+                        first_msg = panic_message(payload.as_ref()).to_string();
+                    }
+                    panicked.push(i);
+                }
+                // All senders gone: every job has reported already.
+                Err(_) => break,
+            }
+        }
+        if !panicked.is_empty() {
+            panicked.sort_unstable();
+            panic!("ThreadPool::map: job(s) {panicked:?} panicked: {first_msg}");
         }
         slots.into_iter().map(|s| s.expect("all slots filled")).collect()
+    }
+
+    /// Run `f(0)`, `f(1)`, ..., `f(jobs - 1)` on the pool and block until
+    /// every job has finished. Unlike [`Self::map`], `f` may borrow from
+    /// the caller's stack (no `'static` bound), which is what the
+    /// attention kernel needs to share `&Matrix` inputs across tiles
+    /// without cloning them.
+    ///
+    /// Worker panics are caught per job and re-raised here with the
+    /// failing indices after all jobs have drained.
+    pub fn scope_run<F>(&self, jobs: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if jobs == 0 {
+            return;
+        }
+        // Erase the borrow lifetime so the closure reference can ride in a
+        // 'static job. SAFETY: the receive loop below blocks until each of
+        // the `jobs` submissions has sent exactly one completion message
+        // (panics included, via catch_unwind), so `f` — and everything it
+        // borrows — strictly outlives every dereference of this pointer.
+        #[derive(Clone, Copy)]
+        struct JobFn(*const (dyn Fn(usize) + Send + Sync + 'static));
+        unsafe impl Send for JobFn {}
+        let fref: &(dyn Fn(usize) + Send + Sync) = &f;
+        let fptr: *const (dyn Fn(usize) + Send + Sync + 'static) =
+            unsafe { std::mem::transmute(fref) };
+        let jf = JobFn(fptr);
+
+        let (rtx, rrx) = channel::<(usize, bool, String)>();
+        for i in 0..jobs {
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    let run = unsafe { &*jf.0 };
+                    run(i);
+                }));
+                let (ok, msg) = match outcome {
+                    Ok(()) => (true, String::new()),
+                    Err(p) => (false, panic_message(p.as_ref()).to_string()),
+                };
+                let _ = rtx.send((i, ok, msg));
+            });
+        }
+        drop(rtx);
+        let mut panicked: Vec<usize> = Vec::new();
+        let mut first_msg = String::new();
+        for _ in 0..jobs {
+            match rrx.recv() {
+                Ok((_, true, _)) => {}
+                Ok((i, false, msg)) => {
+                    if panicked.is_empty() {
+                        first_msg = msg;
+                    }
+                    panicked.push(i);
+                }
+                Err(_) => break,
+            }
+        }
+        if !panicked.is_empty() {
+            panicked.sort_unstable();
+            panic!("ThreadPool::scope_run: job(s) {panicked:?} panicked: {first_msg}");
+        }
+    }
+}
+
+/// Best-effort extraction of a human-readable message from a panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "<non-string panic payload>"
     }
 }
 
@@ -103,8 +209,13 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Message>>>) {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Message::Shutdown);
+        {
+            // Recover the sender even if a panicking submitter poisoned the
+            // lock — otherwise the workers would never see the shutdown.
+            let tx = self.tx.lock().unwrap_or_else(|p| p.into_inner());
+            for _ in &self.workers {
+                let _ = tx.send(Message::Shutdown);
+            }
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -149,5 +260,63 @@ mod tests {
     fn with_cpus_capped() {
         let pool = ThreadPool::with_cpus(2);
         assert!(pool.size() <= 2 && pool.size() >= 1);
+    }
+
+    #[test]
+    fn map_resurfaces_worker_panic_with_index() {
+        let pool = ThreadPool::new(2);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.map((0..8).collect::<Vec<i32>>(), |x| {
+                if x == 5 {
+                    panic!("boom on five");
+                }
+                x
+            })
+        }))
+        .expect_err("map must propagate the worker panic");
+        let msg = panic_message(err.as_ref());
+        assert!(msg.contains("[5]"), "missing job index: {msg}");
+        assert!(msg.contains("boom on five"), "missing payload: {msg}");
+        // The pool survives a panicked batch.
+        let out = pool.map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn scope_run_borrows_and_covers_all_indices() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<usize> = (0..97).collect();
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        pool.scope_run(data.len(), |i| {
+            hits[i].fetch_add(data[i] + 1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), i + 1, "job {i} ran wrong");
+        }
+    }
+
+    #[test]
+    fn scope_run_empty_is_noop() {
+        let pool = ThreadPool::new(1);
+        pool.scope_run(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn scope_run_resurfaces_panics_after_draining() {
+        let pool = ThreadPool::new(2);
+        let done = AtomicUsize::new(0);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_run(16, |i| {
+                if i % 8 == 3 {
+                    panic!("tile {i} failed");
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }))
+        .expect_err("scope_run must propagate");
+        let msg = panic_message(err.as_ref());
+        assert!(msg.contains("[3, 11]"), "bad indices: {msg}");
+        // Every non-panicking job still ran before the re-raise.
+        assert_eq!(done.load(Ordering::SeqCst), 14);
     }
 }

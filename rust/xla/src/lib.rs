@@ -1,0 +1,162 @@
+//! Offline stub of the `xla-rs` PJRT binding surface used by the LAMP
+//! runtime (`rust/src/runtime/executor.rs`) and the serving integration
+//! tests.
+//!
+//! The build environment has no network access and no prebuilt
+//! `xla_extension`, so this crate keeps the whole workspace compiling
+//! without it: every entry point that would touch PJRT returns
+//! [`Error::Unavailable`] from `PjRtClient::cpu()` onwards, and callers
+//! surface that as a `lamp::Error::Runtime`. All artifact-gated tests and
+//! examples already skip gracefully when the compiled artifacts are
+//! absent, so the stub never panics a green path.
+//!
+//! To enable the real compiled-artifact engine, replace the `xla` path
+//! dependency in the workspace `Cargo.toml` with a real `xla-rs`
+//! checkout; the API below deliberately mirrors its names and shapes
+//! (`PjRtClient`, `PjRtLoadedExecutable`, `PjRtBuffer`, `Literal`,
+//! `HloModuleProto`, `XlaComputation`).
+
+use std::fmt;
+
+/// Stub error: every PJRT operation reports the backend as unavailable.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The stub backend cannot execute anything.
+    Unavailable(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => {
+                write!(f, "xla backend unavailable (offline stub): {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias, mirroring `xla::Result`.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error::Unavailable(what.to_string())
+}
+
+/// A parsed HLO module. The stub never parses anything.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        Err(unavailable(&format!("HloModuleProto::from_text_file({path:?})")))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// A host literal (dense array + shape).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T: Copy>(_v: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+/// A device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// The PJRT client. `cpu()` is the single construction point, so failing
+/// here gates every downstream runtime path.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable(
+            "PjRtClient::cpu — built against the bundled stub; \
+             swap in a real xla-rs checkout to enable PJRT",
+        ))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable bound to a client.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
