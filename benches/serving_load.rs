@@ -1,0 +1,199 @@
+//! Serving-under-load benchmark — the PR-2 headline measurement.
+//!
+//! A Zipf-length generation workload (natural-language request lengths are
+//! approximately Zipfian; `data::zipf`) is served two ways on the same
+//! 4-layer native engine:
+//!
+//! * **serial** — each request alone through `NativeEngine::generate`,
+//!   one after another (the pre-scheduler serving model: a long generation
+//!   monopolizes the engine);
+//! * **continuous batching** — all requests through the
+//!   `coordinator::scheduler`, sessions stepped in parallel across the
+//!   thread pool, requests admitted and retired mid-flight.
+//!
+//! Both paths produce bit-identical per-request token streams (asserted
+//! here; the differential suite is `rust/tests/scheduler_parity.rs`).
+//! Results — throughput, TTFT/ITL percentiles, occupancy — are recorded
+//! into `BENCH_PR2.json` (override with `LAMP_BENCH_OUT`).
+//!
+//! ```bash
+//! cargo bench --bench serving_load
+//! ```
+
+use lamp::benchkit::{record_bench_section, Bencher, JsonObj};
+use lamp::coordinator::{
+    GenerateRequest, NativeEngine, PrecisionPolicy, Rule, Scheduler, SchedulerOptions,
+};
+use lamp::data::Zipf;
+use lamp::model::{Decode, ModelConfig, Weights};
+use lamp::util::{Rng, ThreadPool};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn bench_out() -> std::path::PathBuf {
+    std::env::var("LAMP_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_PR2.json"))
+}
+
+/// Build the mixed-length Zipf workload: many short requests, a heavy tail
+/// of long generations — exactly the traffic shape where one-at-a-time
+/// decode starves the short requests.
+fn workload(cfg: &ModelConfig, n: usize, seed: u64) -> Vec<GenerateRequest> {
+    let zipf = Zipf::new(24, 1.1);
+    let mut rng = Rng::new(seed);
+    let policies = [
+        PrecisionPolicy::lamp(4, 0.1, Rule::Relaxed),
+        PrecisionPolicy::lamp(4, 0.05, Rule::Strict),
+        PrecisionPolicy::uniform(4),
+    ];
+    (0..n as u64)
+        .map(|id| {
+            let prompt_len = 2 + zipf.sample(&mut rng);
+            let prompt: Vec<u32> =
+                (0..prompt_len).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+            // Rank 0 (most likely) → short; deep ranks → near-context-length.
+            let new_tokens = (4 + zipf.sample(&mut rng) * 4).min(cfg.seq - prompt_len - 1);
+            let decode = if id % 3 == 0 {
+                Decode::TopK { k: 8, temperature: 1.1 }
+            } else {
+                Decode::Greedy
+            };
+            GenerateRequest::new(id, prompt, new_tokens, policies[(id % 3) as usize])
+                .with_decode(decode)
+                .with_seed(id * 7 + 1)
+        })
+        .collect()
+}
+
+fn main() {
+    let cfg = ModelConfig {
+        name: "bench-serve".into(),
+        vocab: 256,
+        seq: 128,
+        layers: 4,
+        heads: 4,
+        d_model: 128,
+        batch: 1,
+    };
+    cfg.validate().expect("bench config");
+    let mut rng = Rng::new(23);
+    let weights = Weights::random(&cfg, &mut rng);
+    let engine = NativeEngine::new(weights);
+    let n_req = env_usize("LAMP_BENCH_REQS", 24);
+    let reqs = workload(&cfg, n_req, 99);
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let pool = Arc::new(ThreadPool::with_cpus(usize::MAX));
+    let opts = SchedulerOptions {
+        max_sessions: (2 * cores).max(4),
+        prefill_chunk: 8,
+        pool: Some(Arc::clone(&pool)),
+    };
+
+    // --- Parity guard: the scheduler must reproduce solo decode exactly. ---
+    let solo: Vec<Vec<u32>> = reqs
+        .iter()
+        .map(|r| {
+            engine
+                .generate(&r.prompt, r.max_new_tokens, &r.policy, r.decode, r.seed)
+                .expect("solo generate")
+                .0
+        })
+        .collect();
+    let total_generated: usize = reqs
+        .iter()
+        .zip(&solo)
+        .map(|(r, toks)| toks.len() - r.prompt.len())
+        .sum();
+    {
+        let mut sched = Scheduler::new(&engine, opts.clone());
+        for r in &reqs {
+            sched.admit(r.clone());
+        }
+        let mut out = sched.run_to_completion();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), reqs.len(), "lost responses");
+        for (resp, want) in out.iter().zip(&solo) {
+            assert_eq!(&resp.tokens, want, "scheduler diverged from solo decode");
+        }
+    }
+
+    // --- Serial per-request decode (the baseline serving model). ---
+    let b = Bencher { warmup_iters: 1, sample_iters: 3, max_total: Duration::from_secs(120) };
+    let serial = b.run(&format!("serial decode ({n_req} reqs, Zipf lengths)"), || {
+        for r in &reqs {
+            let (tokens, _) = engine
+                .generate(&r.prompt, r.max_new_tokens, &r.policy, r.decode, r.seed)
+                .expect("solo generate");
+            std::hint::black_box(tokens);
+        }
+    });
+    println!("{}", serial.summary());
+    let serial_tok_s = total_generated as f64 / serial.median().as_secs_f64().max(1e-12);
+
+    // --- Continuous batching through the scheduler. ---
+    let mut last_metrics = None;
+    let sched_stats =
+        b.run(&format!("continuous batching ({n_req} reqs, Zipf lengths)"), || {
+            let mut sched = Scheduler::new(&engine, opts.clone());
+            for r in &reqs {
+                sched.admit(r.clone());
+            }
+            let out = sched.run_to_completion();
+            assert_eq!(out.len(), reqs.len());
+            last_metrics = Some(sched.metrics());
+        });
+    println!("{}", sched_stats.summary());
+    let sched_tok_s = total_generated as f64 / sched_stats.median().as_secs_f64().max(1e-12);
+    let m = last_metrics.expect("at least one sample ran");
+
+    let speedup = sched_tok_s / serial_tok_s.max(1e-12);
+    println!(
+        "serving throughput: continuous batching {sched_tok_s:.1} tok/s, \
+         serial {serial_tok_s:.1} tok/s — speedup {speedup:.2}x (target: >= 2x)"
+    );
+    println!(
+        "TTFT p50/p95: {:.1}/{:.1} ms — ITL p50/p95: {:.2}/{:.2} ms — occupancy {:.1}",
+        1e3 * m.ttft_p50_s,
+        1e3 * m.ttft_p95_s,
+        1e3 * m.itl_p50_s,
+        1e3 * m.itl_p95_s,
+        m.mean_active_sessions
+    );
+
+    let path = bench_out();
+    record_bench_section(
+        &path,
+        "serving_load",
+        &JsonObj::new()
+            .str("model", "4 layers, 4 heads, d=128, vocab=256, S=128")
+            .str("workload", "Zipf(s=1.1) prompt/generation lengths, 3 policies, mixed sampling")
+            .int("requests", n_req as u64)
+            .int("generated_tokens", total_generated as u64)
+            .num("continuous_tok_s", sched_tok_s)
+            .num("serial_tok_s", serial_tok_s)
+            .num("speedup", speedup)
+            .num("ttft_p50_ms", 1e3 * m.ttft_p50_s)
+            .num("ttft_p95_ms", 1e3 * m.ttft_p95_s)
+            .num("itl_p50_ms", 1e3 * m.itl_p50_s)
+            .num("itl_p95_ms", 1e3 * m.itl_p95_s)
+            .num("mean_active_sessions", m.mean_active_sessions)
+            .int("max_sessions", opts.max_sessions as u64)
+            .int("pool_threads", pool.size() as u64)
+            .int("host_cores", cores as u64),
+    )
+    .expect("write bench record");
+    println!("recorded -> {}", path.display());
+
+    if speedup < 2.0 {
+        eprintln!(
+            "WARNING: continuous-batching speedup {speedup:.2}x below the 2x acceptance \
+             target (pool has {} workers on {cores} cores)",
+            pool.size()
+        );
+    }
+}

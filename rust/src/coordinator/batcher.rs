@@ -60,27 +60,42 @@ impl Batcher {
     /// Cut the next batch, if any queue is full or has an expired head.
     /// `force` cuts any non-empty queue regardless of deadlines (used at
     /// shutdown / drain).
+    ///
+    /// Preference order: full queues first (throughput), then queues with
+    /// an expired head — and *within* each class, the queue whose head is
+    /// **oldest**. Registration order is deliberately ignored: a queue's
+    /// position in `self.queues` tracks first-push-since-empty, so a hot
+    /// first-registered policy whose head is perpetually expired would
+    /// otherwise starve an older expired request parked behind a partial
+    /// cut in a later-registered queue.
     pub fn cut(&mut self, force: bool) -> Option<CutBatch> {
         let now = Instant::now();
-        // Prefer full queues, then expired heads.
-        let mut pick: Option<usize> = None;
+        let mut pick: Option<(usize, Instant)> = None;
+        let consider = |i: usize, t0: Instant, pick: &mut Option<(usize, Instant)>| {
+            let older = match *pick {
+                None => true,
+                Some((_, t)) => t0 < t,
+            };
+            if older {
+                *pick = Some((i, t0));
+            }
+        };
         for (i, (_, q)) in self.queues.iter().enumerate() {
             if q.len() >= self.batch_size {
-                pick = Some(i);
-                break;
+                let (_, t0) = q.front().expect("full queue is non-empty");
+                consider(i, *t0, &mut pick);
             }
         }
         if pick.is_none() {
             for (i, (_, q)) in self.queues.iter().enumerate() {
                 if let Some((_, t0)) = q.front() {
                     if force || now.duration_since(*t0) >= self.max_wait {
-                        pick = Some(i);
-                        break;
+                        consider(i, *t0, &mut pick);
                     }
                 }
             }
         }
-        let i = pick?;
+        let (i, _) = pick?;
         let (policy, q) = &mut self.queues[i];
         let take = q.len().min(self.batch_size);
         let requests: Vec<_> = q.drain(..take).collect();
@@ -171,6 +186,58 @@ mod tests {
         assert_eq!(rows[0], vec![7, 8, 8, 8]);
         assert_eq!(rows[1], rows[0]);
         assert_eq!(rows[2], rows[0]);
+    }
+
+    #[test]
+    fn deadline_cut_serves_oldest_head_across_policies() {
+        // Regression: the deadline scan used to pick the first-registered
+        // queue with an expired head. Arrange an *older* expired request in
+        // a later-registered queue (possible after a partial cut leaves
+        // newer items at the front of the earlier queue) and check it wins.
+        let mut b = Batcher::new(2, Duration::from_millis(30));
+        let p0 = PrecisionPolicy::uniform(4);
+        let p1 = PrecisionPolicy::uniform(7);
+        b.push(req(1, p0)); // registers p0 first
+        b.push(req(2, p1)); // p1 second; req 2 will become the oldest head
+        std::thread::sleep(Duration::from_millis(2)); // req 2 strictly older than req 4
+        b.push(req(3, p0));
+        b.push(req(4, p0)); // p0 now full with {1, 3, 4}
+        let cut = b.cut(false).expect("full p0 queue");
+        let ids: Vec<u64> = cut.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, vec![1, 3], "full cut takes the FIFO prefix");
+        // queues: p0 = {4} (newer head), p1 = {2} (older head).
+        std::thread::sleep(Duration::from_millis(40));
+        let cut = b.cut(false).expect("expired heads");
+        let ids: Vec<u64> = cut.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(
+            ids,
+            vec![2],
+            "expired cut must serve the oldest head, not the first-registered queue"
+        );
+        let cut = b.cut(false).expect("remaining expired head");
+        let ids: Vec<u64> = cut.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, vec![4]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn force_drain_follows_global_fifo() {
+        let mut b = Batcher::new(4, Duration::from_secs(3600));
+        b.push(req(1, PrecisionPolicy::uniform(4)));
+        std::thread::sleep(Duration::from_millis(2));
+        b.push(req(2, PrecisionPolicy::uniform(7)));
+        // Empty the first-registered queue, then refill it later.
+        let cut = b.cut(true).unwrap();
+        assert_eq!(cut.requests[0].0.id, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        b.push(req(3, PrecisionPolicy::uniform(4)));
+        // Force drain: id 2 is older than id 3 even though its queue now
+        // registered first anyway; the pick is by head age, not position.
+        let cut = b.cut(true).unwrap();
+        assert_eq!(cut.requests[0].0.id, 2);
+        let cut = b.cut(true).unwrap();
+        assert_eq!(cut.requests[0].0.id, 3);
+        assert!(b.cut(true).is_none());
     }
 
     #[test]

@@ -11,10 +11,11 @@
 //! accumulation itself is sequential and bit-identical in both engines).
 
 use super::policy::PrecisionPolicy;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::model::{
-    forward_with, Decode, DecodeSession, ForwardScratch, LampStats, ModelConfig, Weights,
+    forward_with, AttentionPrecision, Decode, DecodeSession, ForwardScratch, LampStats,
+    ModelConfig, Weights,
 };
 use crate::runtime::{ArtifactStore, ModelExecutor, ModelRequest};
 use crate::util::ThreadPool;
@@ -47,6 +48,29 @@ pub trait Engine {
         policy: &PrecisionPolicy,
         seed: i32,
     ) -> Result<EngineOutput>;
+
+    /// Translate a serving policy into the attention precision a decode
+    /// session of this engine uses — the single source of truth shared by
+    /// fresh sessions ([`Self::decode_session`]) and the scheduler's slot
+    /// recycling (`DecodeSession::reseat`), so recycled and fresh slots
+    /// can never diverge on an engine that customizes the translation.
+    fn decode_precision(&self, policy: &PrecisionPolicy) -> AttentionPrecision {
+        policy.to_attention_precision(self.config().seq)
+    }
+
+    /// Open an incremental KV-cache decode session against this engine —
+    /// the session-pool entry point used by the continuous-batching
+    /// scheduler (`coordinator::scheduler`). Backends without a native
+    /// decode path (the compiled artifact executes fixed-shape full
+    /// forwards only) return an error, and the scheduler fails the
+    /// affected requests without touching the others.
+    fn decode_session(&self, policy: &PrecisionPolicy, seed: u64) -> Result<DecodeSession<'_>> {
+        let _ = (policy, seed);
+        Err(Error::runtime(format!(
+            "backend {:?} has no incremental decode path",
+            self.backend()
+        )))
+    }
 
     /// Human-readable backend name.
     fn backend(&self) -> &'static str;
@@ -108,12 +132,6 @@ impl NativeEngine {
         r
     }
 
-    /// Open a KV-cache decode session against this engine's weights.
-    pub fn decode_session(&self, policy: &PrecisionPolicy, seed: u64) -> DecodeSession<'_> {
-        let prec = policy.to_attention_precision(self.weights.config.seq);
-        DecodeSession::new(&self.weights, prec, seed)
-    }
-
     /// Autoregressive generation through the KV-cache decode path.
     /// Returns (tokens, recompute_rate).
     pub fn generate(
@@ -124,7 +142,7 @@ impl NativeEngine {
         decode: Decode,
         seed: u64,
     ) -> Result<(Vec<u32>, f64)> {
-        let prec = policy.to_attention_precision(self.weights.config.seq);
+        let prec = self.decode_precision(policy);
         crate::model::generate(&self.weights, prompt, new_tokens, prec, decode, seed)
     }
 }
@@ -159,6 +177,13 @@ impl Engine for NativeEngine {
             }
             Ok(EngineOutput { logits, stats })
         })
+    }
+
+    /// KV-cache decode sessions are native-engine territory: the session
+    /// shares this engine's weights, so its logits are bit-identical to the
+    /// full forward pass (DESIGN.md §Bit-exactness).
+    fn decode_session(&self, policy: &PrecisionPolicy, seed: u64) -> Result<DecodeSession<'_>> {
+        Ok(DecodeSession::new(&self.weights, self.decode_precision(policy), seed))
     }
 
     fn backend(&self) -> &'static str {
@@ -259,9 +284,39 @@ mod tests {
             par_engine.generate(&[1, 2, 3], 5, &policy, Decode::Greedy, 0).unwrap();
         assert_eq!(toks.len(), 8);
         assert!(rate > 0.0, "strict tau=0.01 must recompute");
-        let mut session = par_engine.decode_session(&policy, 0);
+        let mut session = par_engine.decode_session(&policy, 0).unwrap();
         session.prefill(&[1, 2, 3]).unwrap();
         assert_eq!(session.len(), 3);
+    }
+
+    #[test]
+    fn decode_session_default_is_unsupported() {
+        // A backend that does not override `decode_session` reports a typed
+        // runtime error instead of panicking — the scheduler relies on this
+        // to fail requests cleanly on session-less engines.
+        struct NoDecode(ModelConfig);
+        impl Engine for NoDecode {
+            fn config(&self) -> &ModelConfig {
+                &self.0
+            }
+            fn infer(
+                &self,
+                _tokens: &[Vec<u32>],
+                _policy: &PrecisionPolicy,
+                _seed: i32,
+            ) -> Result<EngineOutput> {
+                Err(Error::runtime("stub".to_string()))
+            }
+            fn backend(&self) -> &'static str {
+                "stub"
+            }
+        }
+        let e = NoDecode(ModelConfig::nano());
+        let err = e
+            .decode_session(&PrecisionPolicy::reference(), 0)
+            .err()
+            .expect("must be unsupported");
+        assert!(err.to_string().contains("no incremental decode path"));
     }
 
     #[test]

@@ -14,17 +14,24 @@
 //! * [`request`] — request/response types and sequence padding.
 //! * [`batcher`] — dynamic batcher: groups compatible requests (same
 //!   policy) into fixed-shape artifact batches, padding the remainder.
+//! * [`scheduler`] — continuous-batching decode scheduler: a pool of live
+//!   KV-cache sessions stepped in lockstep, admitting requests mid-flight
+//!   and streaming per-token events, bit-identical per request to solo
+//!   decoding.
 //! * [`server`] — the serving loop: worker threads draining the batcher,
-//!   latency/throughput accounting.
+//!   generation traffic routed through the scheduler, latency/throughput
+//!   accounting.
 
 pub mod batcher;
 pub mod engine;
 pub mod policy;
 pub mod request;
+pub mod scheduler;
 pub mod server;
 
 pub use batcher::Batcher;
 pub use engine::{Engine, EngineOutput, NativeEngine, PjrtEngine};
 pub use policy::{PrecisionPolicy, Rule};
-pub use request::{InferenceRequest, InferenceResponse};
+pub use request::{GenerateRequest, GenerateResponse, InferenceRequest, InferenceResponse};
+pub use scheduler::{DecodeMetrics, GenerateEvent, Scheduler, SchedulerOptions};
 pub use server::{Server, ServerStats};

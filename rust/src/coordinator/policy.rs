@@ -104,6 +104,19 @@ impl PrecisionPolicy {
         }
     }
 
+    /// Human-readable label, used as the key of per-policy serving metrics
+    /// (e.g. the recompute-rate breakdown in `ServerStats`). Policies that
+    /// compare equal render identically.
+    pub fn label(&self) -> String {
+        if self.mu == 23 && !self.tau.is_finite() {
+            "reference".to_string()
+        } else if !self.tau.is_finite() {
+            format!("uniform(mu={})", self.mu)
+        } else {
+            format!("lamp(mu={},tau={},{})", self.mu, self.tau, self.rule.name())
+        }
+    }
+
     /// Two requests can share an artifact batch iff their policies match
     /// exactly (μ, τ, rule are baked into the batched call's scalars).
     pub fn batch_compatible(&self, other: &PrecisionPolicy) -> bool {
@@ -178,6 +191,19 @@ mod tests {
         assert!(PrecisionPolicy::lamp(4, 1.5, Rule::Relaxed).validate().is_err());
         // Strict thresholds are absolute: tau > 1 is fine there.
         assert!(PrecisionPolicy::lamp(4, 1.5, Rule::Strict).validate().is_ok());
+    }
+
+    #[test]
+    fn labels_distinguish_policy_classes() {
+        assert_eq!(PrecisionPolicy::reference().label(), "reference");
+        assert_eq!(PrecisionPolicy::uniform(4).label(), "uniform(mu=4)");
+        let l = PrecisionPolicy::lamp(3, 0.05, Rule::Relaxed).label();
+        assert!(l.contains("mu=3") && l.contains("relaxed"), "{l}");
+        // Equal policies render identically (metric-key stability).
+        assert_eq!(
+            PrecisionPolicy::lamp(4, 0.1, Rule::Strict).label(),
+            PrecisionPolicy::lamp(4, 0.1, Rule::Strict).label()
+        );
     }
 
     #[test]

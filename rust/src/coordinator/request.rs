@@ -3,7 +3,7 @@
 use super::policy::PrecisionPolicy;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
-use crate::model::LampStats;
+use crate::model::{Decode, LampStats};
 
 /// A single-sequence inference request.
 #[derive(Debug, Clone)]
@@ -53,6 +53,123 @@ impl InferenceRequest {
     }
 }
 
+/// An autoregressive generation request, served by the continuous-batching
+/// decode scheduler (`coordinator::scheduler`).
+///
+/// Each request carries its own sampling parameters and seed; the scheduler
+/// guarantees the resulting token stream is bit-identical to running the
+/// request alone through `NativeEngine::generate` with the same seed,
+/// regardless of what else is in flight.
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    /// Client-assigned id, echoed in every event for this request.
+    pub id: u64,
+    /// Prompt token ids (non-empty, within the context window).
+    pub prompt: Vec<u32>,
+    /// Upper bound on generated tokens (the context window also caps it).
+    pub max_new_tokens: usize,
+    /// Requested precision policy.
+    pub policy: PrecisionPolicy,
+    /// Per-request sampling strategy (greedy or top-k + temperature).
+    pub decode: Decode,
+    /// Seed for both the sampling stream and the Random selection rule.
+    pub seed: u64,
+    /// Optional stop token: generation retires after emitting it.
+    pub eos: Option<u32>,
+}
+
+impl GenerateRequest {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize, policy: PrecisionPolicy) -> Self {
+        GenerateRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            policy,
+            decode: Decode::Greedy,
+            seed: id,
+            eos: None,
+        }
+    }
+
+    /// Set the sampling strategy.
+    pub fn with_decode(mut self, decode: Decode) -> Self {
+        self.decode = decode;
+        self
+    }
+
+    /// Set the sampling / Random-rule seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Set a stop token.
+    pub fn with_eos(mut self, eos: u32) -> Self {
+        self.eos = eos.into();
+        self
+    }
+
+    pub fn validate(&self, vocab: usize, max_seq: usize) -> Result<()> {
+        self.policy.validate()?;
+        if self.prompt.is_empty() || self.prompt.len() > max_seq {
+            return Err(Error::shape(format!(
+                "generate request {}: {} prompt tokens out of 1..={max_seq}",
+                self.id,
+                self.prompt.len()
+            )));
+        }
+        if let Some(&t) = self.prompt.iter().find(|&&t| t as usize >= vocab) {
+            return Err(Error::shape(format!(
+                "generate request {}: token {t} >= vocab {vocab}",
+                self.id
+            )));
+        }
+        if let Some(eos) = self.eos {
+            if eos as usize >= vocab {
+                return Err(Error::shape(format!(
+                    "generate request {}: eos {eos} >= vocab {vocab}",
+                    self.id
+                )));
+            }
+        }
+        if let Decode::TopK { k, temperature } = self.decode {
+            // NaN must not slip through a `<= 0.0` comparison: a NaN
+            // temperature would poison every sampling weight downstream.
+            if k == 0 || temperature.is_nan() || temperature <= 0.0 {
+                return Err(Error::config(format!(
+                    "generate request {}: top-k needs k >= 1 and temperature > 0",
+                    self.id
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The completed output of one generation request.
+#[derive(Debug, Clone)]
+pub struct GenerateResponse {
+    pub id: u64,
+    /// Prompt followed by the generated continuation.
+    pub tokens: Vec<u32>,
+    /// Length of the prompt prefix inside [`Self::tokens`].
+    pub prompt_len: usize,
+    /// This request's own LAMP recomputation statistics (each causal
+    /// product of its session counted exactly once).
+    pub stats: LampStats,
+    /// Time to first generated token, seconds (0 when nothing was generated).
+    pub ttft_s: f64,
+    /// End-to-end latency (admission → retirement), seconds.
+    pub latency_s: f64,
+}
+
+impl GenerateResponse {
+    /// The generated continuation (without the prompt).
+    pub fn generated(&self) -> &[u32] {
+        &self.tokens[self.prompt_len..]
+    }
+}
+
 /// The response for one request.
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
@@ -80,6 +197,43 @@ mod tests {
         assert!(r.validate(128, 2).is_err()); // too long
         let empty = InferenceRequest::new(2, vec![], p);
         assert!(empty.validate(128, 32).is_err());
+    }
+
+    #[test]
+    fn generate_request_validation() {
+        let p = PrecisionPolicy::lamp(4, 0.1, Rule::Strict);
+        let ok = GenerateRequest::new(1, vec![1, 2, 3], 8, p);
+        assert!(ok.validate(128, 32).is_ok());
+        assert_eq!(ok.seed, 1, "seed defaults to the id");
+        assert!(GenerateRequest::new(2, vec![], 8, p).validate(128, 32).is_err());
+        assert!(GenerateRequest::new(3, vec![200], 8, p).validate(128, 32).is_err());
+        assert!(GenerateRequest::new(4, vec![1; 40], 8, p).validate(128, 32).is_err());
+        assert!(GenerateRequest::new(5, vec![1], 8, p)
+            .with_eos(999)
+            .validate(128, 32)
+            .is_err());
+        let bad_decode = GenerateRequest::new(6, vec![1], 8, p)
+            .with_decode(Decode::TopK { k: 0, temperature: 1.0 });
+        assert!(bad_decode.validate(128, 32).is_err());
+        let bad_temp = GenerateRequest::new(7, vec![1], 8, p)
+            .with_decode(Decode::TopK { k: 4, temperature: 0.0 });
+        assert!(bad_temp.validate(128, 32).is_err());
+        let nan_temp = GenerateRequest::new(8, vec![1], 8, p)
+            .with_decode(Decode::TopK { k: 4, temperature: f32::NAN });
+        assert!(nan_temp.validate(128, 32).is_err(), "NaN temperature must be rejected");
+    }
+
+    #[test]
+    fn generate_response_suffix() {
+        let r = GenerateResponse {
+            id: 1,
+            tokens: vec![5, 6, 7, 8],
+            prompt_len: 2,
+            stats: LampStats::default(),
+            ttft_s: 0.0,
+            latency_s: 0.0,
+        };
+        assert_eq!(r.generated(), &[7, 8]);
     }
 
     #[test]

@@ -1,0 +1,711 @@
+//! Continuous-batching decode scheduler — in-flight batching over a pool
+//! of KV-cache [`DecodeSession`]s.
+//!
+//! The batch `Server` path runs one-shot forward calls: a long generation
+//! would monopolize the engine while short requests queue behind it. The
+//! scheduler instead performs *iteration-level* scheduling: every
+//! [`Scheduler::step`] advances all live sessions by one unit of work — a
+//! chunk of prompt prefill, or one sampled token plus its decode step —
+//! admits waiting requests into free slots between iterations, and retires
+//! sequences the moment they hit EOS / their token budget / the context
+//! window. Short requests therefore overtake long ones instead of waiting
+//! for them, and the engine's per-token work is fanned across the
+//! [`ThreadPool`] (one job per active session; sessions are mutually
+//! independent, so the fan-out is embarrassingly parallel).
+//!
+//! ## Bit-exactness contract (DESIGN.md §Continuous batching)
+//!
+//! Per request, the scheduler's token stream is **bit-identical** to
+//! running that request alone through `NativeEngine::generate` with the
+//! same seed — for every precision policy including the seed-dependent
+//! `Random` rule — regardless of arrival order, interleaving, or what else
+//! is in flight. This holds by construction:
+//!
+//! 1. each request owns a private session whose attention streams are
+//!    keyed by `(seed, layer, head, position)` — functions of the request,
+//!    never of the schedule;
+//! 2. each request owns a private sampling `Rng::new(seed)` consumed only
+//!    by its own `Decode::pick` calls, in the same order as the solo loop;
+//! 3. slot recycling goes through [`DecodeSession::reseat`], which is
+//!    bit-identical to constructing a fresh session.
+//!
+//! `rust/tests/scheduler_parity.rs` enforces the contract over randomized
+//! arrival schedules; `rust/tests/failure_injection.rs` checks that a
+//! failing session retires only its own request.
+
+use super::engine::Engine;
+use super::policy::PrecisionPolicy;
+use super::request::{GenerateRequest, GenerateResponse};
+use crate::error::Error;
+use crate::model::{DecodeSession, LampStats};
+use crate::util::{Rng, ThreadPool};
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Scheduler tuning knobs.
+#[derive(Clone)]
+pub struct SchedulerOptions {
+    /// Maximum concurrently live sessions (slot count, >= 1).
+    pub max_sessions: usize,
+    /// Prompt tokens fed per prefilling request per iteration. Small chunks
+    /// interleave prefill with decode more fairly; large chunks reach the
+    /// first token faster.
+    pub prefill_chunk: usize,
+    /// Pool over which active sessions are stepped in parallel; `None`
+    /// steps them sequentially on the caller's thread.
+    pub pool: Option<Arc<ThreadPool>>,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        SchedulerOptions { max_sessions: 8, prefill_chunk: 8, pool: None }
+    }
+}
+
+/// One entry of the event stream produced by [`Scheduler::step`].
+#[derive(Debug)]
+pub enum GenerateEvent {
+    /// A freshly sampled token (streamed as soon as it exists).
+    Token {
+        id: u64,
+        token: u32,
+        /// Index within the generated continuation (0 = first new token).
+        index: usize,
+    },
+    /// The request retired normally.
+    Finished(GenerateResponse),
+    /// The request's session failed; only this request is affected.
+    Failed { id: u64, error: Error },
+}
+
+/// Decode-path metrics aggregated over a scheduler's lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct DecodeMetrics {
+    pub completed: usize,
+    pub failed: usize,
+    pub generated_tokens: usize,
+    /// Scheduler iterations executed.
+    pub steps: usize,
+    /// Time-to-first-token percentiles over completed-or-not requests, s.
+    pub ttft_p50_s: f64,
+    pub ttft_p95_s: f64,
+    /// Inter-token latency percentiles, s.
+    pub itl_p50_s: f64,
+    pub itl_p95_s: f64,
+    /// Mean number of live sessions per iteration (occupancy).
+    pub mean_active_sessions: f64,
+    /// Aggregate LAMP counters over every retired session.
+    pub recomputed: usize,
+    pub causal_total: usize,
+    /// Recompute rate per policy label (`PrecisionPolicy::label`).
+    pub recompute_by_policy: Vec<(String, f64)>,
+}
+
+/// A request bound to a live session.
+struct ActiveSlot<'e> {
+    /// The admitted request, its prompt moved out into [`Self::tokens`]
+    /// (single copy; `prompt_len` marks the boundary).
+    req: GenerateRequest,
+    session: DecodeSession<'e>,
+    /// Private sampling stream (`Rng::new(req.seed)`, as in solo decode).
+    rng: Rng,
+    /// Prompt (prefix of `prompt_len` tokens) + generated tokens.
+    tokens: Vec<u32>,
+    prompt_len: usize,
+    generated: usize,
+    /// Prompt tokens fed so far.
+    prefilled: usize,
+    /// Enqueue time ([`Scheduler::admit`]) — the TTFT/latency origin, so
+    /// queue wait counts against the request, not just slot residence.
+    admitted: Instant,
+    first_token: Option<Instant>,
+    last_event: Instant,
+    outcome: StepOutcome,
+}
+
+/// Scratch for one slot-iteration, harvested after the parallel fan-out.
+#[derive(Default)]
+struct StepOutcome {
+    emitted: Option<u32>,
+    done: bool,
+    error: Option<Error>,
+}
+
+impl ActiveSlot<'_> {
+    /// Advance this request by one scheduler iteration. Mirrors the solo
+    /// `generate` loop exactly: prefill the prompt, then alternate
+    /// `Decode::pick` / `decode_step` in the solo order — including
+    /// feeding the final sampled token (unless the context is full),
+    /// which the solo loop also does, so session statistics agree.
+    fn run_iteration(&mut self, prefill_chunk: usize) {
+        self.outcome = StepOutcome::default();
+        if let Err(e) = self.iterate(prefill_chunk) {
+            self.outcome.error = Some(e);
+        }
+    }
+
+    fn iterate(&mut self, prefill_chunk: usize) -> crate::error::Result<()> {
+        let seq = self.session.config().seq;
+        if self.prefilled < self.prompt_len {
+            let end = (self.prefilled + prefill_chunk.max(1)).min(self.prompt_len);
+            while self.prefilled < end {
+                let tok = self.tokens[self.prefilled];
+                self.session.decode_step(tok)?;
+                self.prefilled += 1;
+            }
+            return Ok(());
+        }
+        // Decode phase: the session's logits are fresh for the last fed
+        // token.
+        let decode = self.req.decode;
+        let next = decode.pick(self.session.logits(), &mut self.rng)?;
+        self.tokens.push(next);
+        self.generated += 1;
+        self.outcome.emitted = Some(next);
+        if self.tokens.len() >= seq {
+            // Context exhausted: retire without feeding, exactly like the
+            // solo loop's early break.
+            self.outcome.done = true;
+            return Ok(());
+        }
+        if self.req.eos == Some(next) {
+            // Stop token (a scheduler extension — solo decode has none):
+            // retire immediately; the emitted stream stays a prefix of
+            // the solo stream.
+            self.outcome.done = true;
+            return Ok(());
+        }
+        // Feed the sampled token — also on the final iteration, exactly
+        // as the solo loop does, so `LampStats` match solo accounting.
+        self.session.decode_step(next)?;
+        if self.generated >= self.req.max_new_tokens {
+            self.outcome.done = true;
+        }
+        Ok(())
+    }
+}
+
+/// Raw slot pointer handed to the worker jobs: each job mutates exactly one
+/// distinct slot index, so the aliasing is benign (same argument as the
+/// attention tiles in `model/attention.rs`).
+struct SlotsPtr<'e>(*mut Option<ActiveSlot<'e>>);
+unsafe impl Send for SlotsPtr<'_> {}
+unsafe impl Sync for SlotsPtr<'_> {}
+
+/// Continuous-batching scheduler over one engine's decode sessions.
+pub struct Scheduler<'e> {
+    engine: &'e dyn Engine,
+    opts: SchedulerOptions,
+    /// Waiting requests with their enqueue timestamps (the TTFT/latency
+    /// origin — queue wait counts against the scheduler).
+    waiting: VecDeque<(GenerateRequest, Instant)>,
+    slots: Vec<Option<ActiveSlot<'e>>>,
+    /// Retired sessions kept warm for slot recycling (reseat on admit).
+    parked: Vec<DecodeSession<'e>>,
+    steps: usize,
+    active_steps: usize,
+    completed: usize,
+    failed: usize,
+    generated_tokens: usize,
+    ttfts: Vec<f64>,
+    itls: Vec<f64>,
+    by_policy: Vec<(String, LampStats)>,
+    totals: LampStats,
+}
+
+impl<'e> Scheduler<'e> {
+    pub fn new(engine: &'e dyn Engine, opts: SchedulerOptions) -> Self {
+        assert!(opts.max_sessions >= 1, "scheduler needs at least one slot");
+        let slots = (0..opts.max_sessions).map(|_| None).collect();
+        Scheduler {
+            engine,
+            opts,
+            waiting: VecDeque::new(),
+            slots,
+            parked: Vec::new(),
+            steps: 0,
+            active_steps: 0,
+            completed: 0,
+            failed: 0,
+            generated_tokens: 0,
+            ttfts: Vec::new(),
+            itls: Vec::new(),
+            by_policy: Vec::new(),
+            totals: LampStats::default(),
+        }
+    }
+
+    /// Enqueue a request. No validation happens here (the `Server` front
+    /// door validates); a request whose tokens violate the engine contract
+    /// fails at its own session without affecting the others. The enqueue
+    /// instant is recorded: time spent waiting for a slot counts toward
+    /// the request's TTFT and latency.
+    pub fn admit(&mut self, req: GenerateRequest) {
+        self.waiting.push_back((req, Instant::now()));
+    }
+
+    /// Requests waiting for a slot.
+    pub fn pending(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Live sessions.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// True when nothing is queued or in flight.
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.slots.iter().all(|s| s.is_none())
+    }
+
+    fn open_session(
+        &mut self,
+        policy: &PrecisionPolicy,
+        seed: u64,
+    ) -> crate::error::Result<DecodeSession<'e>> {
+        if let Some(mut s) = self.parked.pop() {
+            // The engine owns the policy → precision translation for both
+            // fresh and recycled sessions; recycled slots can never diverge.
+            s.reseat(self.engine.decode_precision(policy), seed);
+            return Ok(s);
+        }
+        let engine = self.engine;
+        engine.decode_session(policy, seed)
+    }
+
+    /// Park a retired session for reuse. No reset here: `reseat` inside
+    /// [`Self::open_session`] is the single reset site, and a parked
+    /// session is never read before being reseated.
+    fn recycle(&mut self, session: DecodeSession<'e>) {
+        if self.parked.len() < self.slots.len() {
+            self.parked.push(session);
+        }
+    }
+
+    fn merge_policy_stats(&mut self, policy: &PrecisionPolicy, stats: &LampStats) {
+        self.totals.merge(stats);
+        let label = policy.label();
+        if let Some((_, s)) = self.by_policy.iter_mut().find(|(l, _)| *l == label) {
+            s.merge(stats);
+        } else {
+            self.by_policy.push((label, stats.clone()));
+        }
+    }
+
+    /// Move waiting requests into free slots. Requests that can produce
+    /// nothing (prompt fills the context, zero token budget) complete
+    /// immediately, mirroring `generate`'s early return; requests whose
+    /// session cannot be opened fail without consuming a slot.
+    fn admit_waiting(&mut self, events: &mut Vec<GenerateEvent>) {
+        for slot_idx in 0..self.opts.max_sessions {
+            if self.slots[slot_idx].is_some() {
+                continue;
+            }
+            loop {
+                let Some((req, enqueued)) = self.waiting.pop_front() else { return };
+                let seq = self.engine.config().seq;
+                if req.prompt.is_empty() {
+                    self.failed += 1;
+                    events.push(GenerateEvent::Failed {
+                        id: req.id,
+                        error: Error::shape("empty prompt".to_string()),
+                    });
+                    continue;
+                }
+                if req.prompt.len() >= seq || req.max_new_tokens == 0 {
+                    self.completed += 1;
+                    events.push(GenerateEvent::Finished(GenerateResponse {
+                        id: req.id,
+                        prompt_len: req.prompt.len(),
+                        tokens: req.prompt,
+                        stats: LampStats::default(),
+                        ttft_s: 0.0,
+                        latency_s: enqueued.elapsed().as_secs_f64(),
+                    }));
+                    continue;
+                }
+                match self.open_session(&req.policy, req.seed) {
+                    Ok(session) => {
+                        let mut req = req;
+                        // Single copy: the prompt becomes the prefix of the
+                        // slot's token buffer.
+                        let prompt = std::mem::take(&mut req.prompt);
+                        self.slots[slot_idx] = Some(ActiveSlot {
+                            rng: Rng::new(req.seed),
+                            prompt_len: prompt.len(),
+                            tokens: prompt,
+                            generated: 0,
+                            prefilled: 0,
+                            admitted: enqueued,
+                            first_token: None,
+                            last_event: enqueued,
+                            outcome: StepOutcome::default(),
+                            session,
+                            req,
+                        });
+                        break;
+                    }
+                    Err(e) => {
+                        self.failed += 1;
+                        events.push(GenerateEvent::Failed { id: req.id, error: e });
+                        continue;
+                    }
+                }
+            }
+        }
+    }
+
+    /// One scheduler iteration: admit, advance every live session (across
+    /// the pool when configured), harvest tokens / retirements / failures.
+    pub fn step(&mut self) -> Vec<GenerateEvent> {
+        let mut events = Vec::new();
+        self.admit_waiting(&mut events);
+        let active: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect();
+        if active.is_empty() {
+            return events;
+        }
+        self.steps += 1;
+        self.active_steps += active.len();
+        let chunk = self.opts.prefill_chunk.max(1);
+        let pool = self.opts.pool.clone();
+        match pool {
+            Some(pool) if pool.size() > 1 && active.len() > 1 => {
+                let base = SlotsPtr(self.slots.as_mut_ptr());
+                let idxs = &active;
+                pool.scope_run(idxs.len(), |j| {
+                    // SAFETY: the indices in `idxs` are distinct, so each
+                    // job has exclusive access to its slot, and `scope_run`
+                    // joins every job before returning, so the pointer
+                    // outlives all accesses.
+                    let slot = unsafe { &mut *base.0.add(idxs[j]) };
+                    slot.as_mut().expect("active slot").run_iteration(chunk);
+                });
+            }
+            _ => {
+                for &i in &active {
+                    self.slots[i].as_mut().expect("active slot").run_iteration(chunk);
+                }
+            }
+        }
+        let now = Instant::now();
+        for &i in &active {
+            let (emitted, done, error) = {
+                let slot = self.slots[i].as_mut().expect("active slot");
+                let o = std::mem::take(&mut slot.outcome);
+                (o.emitted, o.done, o.error)
+            };
+            if let Some(token) = emitted {
+                let (id, index, is_first, dt) = {
+                    let slot = self.slots[i].as_mut().expect("active slot");
+                    let is_first = slot.first_token.is_none();
+                    let since = if is_first { slot.admitted } else { slot.last_event };
+                    if is_first {
+                        slot.first_token = Some(now);
+                    }
+                    slot.last_event = now;
+                    (
+                        slot.req.id,
+                        slot.generated - 1,
+                        is_first,
+                        now.duration_since(since).as_secs_f64(),
+                    )
+                };
+                if is_first {
+                    self.ttfts.push(dt);
+                } else {
+                    self.itls.push(dt);
+                }
+                self.generated_tokens += 1;
+                events.push(GenerateEvent::Token { id, token, index });
+            }
+            if let Some(err) = error {
+                let slot = self.slots[i].take().expect("active slot");
+                self.failed += 1;
+                self.recycle(slot.session);
+                events.push(GenerateEvent::Failed { id: slot.req.id, error: err });
+            } else if done {
+                let slot = self.slots[i].take().expect("active slot");
+                self.completed += 1;
+                let stats = slot.session.stats().clone();
+                self.merge_policy_stats(&slot.req.policy, &stats);
+                self.recycle(slot.session);
+                let ttft = slot
+                    .first_token
+                    .map(|t| t.duration_since(slot.admitted).as_secs_f64())
+                    .unwrap_or(0.0);
+                events.push(GenerateEvent::Finished(GenerateResponse {
+                    id: slot.req.id,
+                    prompt_len: slot.prompt_len,
+                    tokens: slot.tokens,
+                    stats,
+                    ttft_s: ttft,
+                    latency_s: now.duration_since(slot.admitted).as_secs_f64(),
+                }));
+            }
+        }
+        events
+    }
+
+    /// Step until everything queued has retired; returns the full event
+    /// stream in emission order.
+    pub fn run(&mut self) -> Vec<GenerateEvent> {
+        let mut all = Vec::new();
+        while !self.is_idle() {
+            all.extend(self.step());
+        }
+        all
+    }
+
+    /// Like [`Self::run`], keeping only the completed responses.
+    pub fn run_to_completion(&mut self) -> Vec<GenerateResponse> {
+        self.run()
+            .into_iter()
+            .filter_map(|e| match e {
+                GenerateEvent::Finished(r) => Some(r),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> DecodeMetrics {
+        DecodeMetrics {
+            completed: self.completed,
+            failed: self.failed,
+            generated_tokens: self.generated_tokens,
+            steps: self.steps,
+            ttft_p50_s: percentile(&self.ttfts, 0.50),
+            ttft_p95_s: percentile(&self.ttfts, 0.95),
+            itl_p50_s: percentile(&self.itls, 0.50),
+            itl_p95_s: percentile(&self.itls, 0.95),
+            mean_active_sessions: if self.steps == 0 {
+                0.0
+            } else {
+                self.active_steps as f64 / self.steps as f64
+            },
+            recomputed: self.totals.recomputed,
+            causal_total: self.totals.causal_total,
+            recompute_by_policy: self
+                .by_policy
+                .iter()
+                .map(|(l, s)| (l.clone(), s.rate()))
+                .collect(),
+        }
+    }
+}
+
+/// Empirical percentile of unsorted samples (0 when empty).
+pub(crate) fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite latency samples"));
+    let idx = ((v.len() as f64) * q) as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{EngineOutput, NativeEngine};
+    use crate::coordinator::policy::Rule;
+    use crate::model::{Decode, ModelConfig, Weights};
+
+    fn engine() -> NativeEngine {
+        let mut rng = Rng::new(11);
+        NativeEngine::new(Weights::random(&ModelConfig::nano(), &mut rng))
+    }
+
+    fn greedy(id: u64, prompt: Vec<u32>, n: usize, policy: PrecisionPolicy) -> GenerateRequest {
+        GenerateRequest::new(id, prompt, n, policy)
+    }
+
+    #[test]
+    fn single_request_matches_solo_generate() {
+        let e = engine();
+        let policy = PrecisionPolicy::lamp(3, 0.05, Rule::Strict);
+        let (solo, rate) = e.generate(&[1, 2, 3], 6, &policy, Decode::Greedy, 1).unwrap();
+        let mut sched = Scheduler::new(&e, SchedulerOptions::default());
+        sched.admit(greedy(1, vec![1, 2, 3], 6, policy));
+        let responses = sched.run_to_completion();
+        assert_eq!(responses.len(), 1);
+        assert_eq!(responses[0].tokens, solo);
+        assert_eq!(responses[0].prompt_len, 3);
+        assert_eq!(responses[0].stats.rate(), rate, "stats must match solo accounting");
+        assert!(sched.is_idle());
+    }
+
+    #[test]
+    fn token_events_stream_the_continuation() {
+        let e = engine();
+        let policy = PrecisionPolicy::reference();
+        let mut sched = Scheduler::new(&e, SchedulerOptions::default());
+        sched.admit(greedy(7, vec![4, 5], 5, policy));
+        let events = sched.run();
+        let mut streamed = Vec::new();
+        let mut finished = None;
+        for ev in events {
+            match ev {
+                GenerateEvent::Token { id, token, index } => {
+                    assert_eq!(id, 7);
+                    assert_eq!(index, streamed.len(), "tokens must stream in order");
+                    streamed.push(token);
+                }
+                GenerateEvent::Finished(r) => finished = Some(r),
+                GenerateEvent::Failed { error, .. } => panic!("unexpected failure: {error}"),
+            }
+        }
+        let r = finished.expect("finished event");
+        assert_eq!(r.generated(), &streamed[..], "stream equals final suffix");
+        assert_eq!(streamed.len(), 5);
+    }
+
+    #[test]
+    fn degenerate_requests_complete_immediately() {
+        let e = engine();
+        let policy = PrecisionPolicy::reference();
+        let seq = e.config().seq;
+        let mut sched = Scheduler::new(&e, SchedulerOptions::default());
+        sched.admit(greedy(1, vec![1; seq], 4, policy)); // prompt fills context
+        sched.admit(greedy(2, vec![1, 2], 0, policy)); // zero budget
+        let responses = sched.run_to_completion();
+        assert_eq!(responses.len(), 2);
+        for r in &responses {
+            assert_eq!(r.generated(), &[] as &[u32]);
+            assert_eq!(r.stats.causal_total, 0);
+        }
+    }
+
+    #[test]
+    fn eos_stops_a_prefix_of_the_solo_stream() {
+        let e = engine();
+        let policy = PrecisionPolicy::reference();
+        let (solo, _) = e.generate(&[3, 14], 10, &policy, Decode::Greedy, 2).unwrap();
+        let continuation = &solo[2..];
+        assert!(!continuation.is_empty());
+        // Stop at the first generated token: exactly one token comes out.
+        let eos = continuation[0];
+        let mut sched = Scheduler::new(&e, SchedulerOptions::default());
+        sched.admit(greedy(1, vec![3, 14], 10, policy).with_seed(2).with_eos(eos));
+        let responses = sched.run_to_completion();
+        assert_eq!(responses[0].generated(), &continuation[..1]);
+    }
+
+    #[test]
+    fn more_requests_than_slots_all_complete() {
+        let e = engine();
+        let policy = PrecisionPolicy::lamp(3, 0.05, Rule::Random);
+        let opts = SchedulerOptions { max_sessions: 2, prefill_chunk: 2, pool: None };
+        let mut sched = Scheduler::new(&e, opts);
+        let mut solos = Vec::new();
+        for id in 0..5u64 {
+            let prompt = vec![(id as u32 * 13 + 1) % 128, 2, 3];
+            let n = 3 + (id as usize % 4);
+            solos.push(e.generate(&prompt, n, &policy, Decode::Greedy, id).unwrap().0);
+            sched.admit(greedy(id, prompt, n, policy));
+        }
+        let mut responses = sched.run_to_completion();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 5);
+        for (r, solo) in responses.iter().zip(&solos) {
+            assert_eq!(&r.tokens, solo, "id {} diverged from solo decode", r.id);
+        }
+        let m = sched.metrics();
+        assert_eq!(m.completed, 5);
+        assert_eq!(m.failed, 0);
+        assert!(m.mean_active_sessions > 1.0, "slots should overlap");
+        assert!(m.mean_active_sessions <= 2.0 + 1e-9);
+        assert_eq!(m.recompute_by_policy.len(), 1);
+        assert!(m.causal_total > 0);
+    }
+
+    #[test]
+    fn pool_stepping_is_bit_identical_to_sequential() {
+        let e = engine();
+        let pool = Arc::new(ThreadPool::new(3));
+        let policies = [
+            PrecisionPolicy::reference(),
+            PrecisionPolicy::uniform(3),
+            PrecisionPolicy::lamp(3, 0.05, Rule::Random),
+        ];
+        let build = |sched: &mut Scheduler| {
+            for id in 0..4u64 {
+                let prompt = vec![(id as u32 + 5) % 128; 2 + id as usize];
+                sched.admit(
+                    greedy(id, prompt, 6, policies[id as usize % 3])
+                        .with_decode(Decode::TopK { k: 4, temperature: 1.3 }),
+                );
+            }
+        };
+        let mut seq_sched = Scheduler::new(
+            &e,
+            SchedulerOptions { max_sessions: 4, prefill_chunk: 3, pool: None },
+        );
+        build(&mut seq_sched);
+        let mut seq_out = seq_sched.run_to_completion();
+        seq_out.sort_by_key(|r| r.id);
+
+        let mut par_sched = Scheduler::new(
+            &e,
+            SchedulerOptions { max_sessions: 4, prefill_chunk: 3, pool: Some(pool) },
+        );
+        build(&mut par_sched);
+        let mut par_out = par_sched.run_to_completion();
+        par_out.sort_by_key(|r| r.id);
+
+        assert_eq!(seq_out.len(), par_out.len());
+        for (a, b) in seq_out.iter().zip(&par_out) {
+            assert_eq!(a.tokens, b.tokens, "pool changed request {}", a.id);
+            assert_eq!(a.stats.recomputed, b.stats.recomputed);
+        }
+    }
+
+    #[test]
+    fn sessionless_backend_fails_requests_cleanly() {
+        struct NoDecode(ModelConfig);
+        impl Engine for NoDecode {
+            fn config(&self) -> &ModelConfig {
+                &self.0
+            }
+            fn infer(
+                &self,
+                _tokens: &[Vec<u32>],
+                _policy: &PrecisionPolicy,
+                _seed: i32,
+            ) -> crate::error::Result<EngineOutput> {
+                Err(Error::runtime("stub".to_string()))
+            }
+            fn backend(&self) -> &'static str {
+                "stub"
+            }
+        }
+        let e = NoDecode(ModelConfig::nano());
+        let mut sched = Scheduler::new(&e, SchedulerOptions::default());
+        sched.admit(greedy(1, vec![1, 2], 4, PrecisionPolicy::reference()));
+        sched.admit(greedy(2, vec![3], 4, PrecisionPolicy::reference()));
+        let events = sched.run();
+        let failed: Vec<u64> = events
+            .iter()
+            .filter_map(|e| match e {
+                GenerateEvent::Failed { id, .. } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(failed, vec![1, 2]);
+        assert!(sched.is_idle());
+        assert_eq!(sched.metrics().failed, 2);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        let v = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 0.5), 3.0);
+        assert_eq!(percentile(&v, 0.95), 5.0);
+    }
+}

@@ -4,13 +4,22 @@
 //! internally parallel on CPU; the native engine parallelizes across the
 //! batch via the thread pool upstream). The server tracks the
 //! latency/throughput statistics reported by the serving benchmarks.
+//!
+//! Two traffic classes share one server:
+//! * **one-shot inference** ([`Server::submit`]) — logits for a whole
+//!   sequence, batched by the [`Batcher`] into fixed-shape engine calls;
+//! * **generation** ([`Server::submit_generate`]) — autoregressive decode,
+//!   driven through the continuous-batching [`Scheduler`] so short
+//!   requests never queue behind long generations.
 
 use super::batcher::{Batcher, CutBatch};
 use super::engine::Engine;
-use super::request::{InferenceRequest, InferenceResponse};
+use super::request::{GenerateRequest, InferenceRequest, InferenceResponse};
+use super::scheduler::{GenerateEvent, Scheduler, SchedulerOptions};
 use crate::error::{Error, Result};
 use crate::metrics::Accumulator;
 use crate::model::LampStats;
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// Aggregate serving statistics.
@@ -26,6 +35,24 @@ pub struct ServerStats {
     pub latency_p95_s: f64,
     pub wall_s: f64,
     pub throughput_tok_s: f64,
+    // --- Decode-path metrics (continuous-batching scheduler). ---
+    /// Generation requests accepted (completed + failed).
+    pub generate_requests: usize,
+    /// Generation requests that failed (their sessions errored).
+    pub generate_failed: usize,
+    /// Tokens generated across all generation requests.
+    pub generated_tokens: usize,
+    /// Time-to-first-token percentiles of the latest generation drive, s.
+    pub ttft_p50_s: f64,
+    pub ttft_p95_s: f64,
+    /// Inter-token latency percentiles of the latest generation drive, s.
+    pub itl_p50_s: f64,
+    pub itl_p95_s: f64,
+    /// Mean live sessions per scheduler iteration (occupancy) of the
+    /// latest generation drive.
+    pub mean_active_sessions: f64,
+    /// Recompute rate per policy label over the latest generation drive.
+    pub recompute_rate_by_policy: Vec<(String, f64)>,
 }
 
 /// Synchronous batching server over one engine.
@@ -35,6 +62,8 @@ pub struct Server {
     latencies: Vec<f64>,
     stats: ServerStats,
     started: Instant,
+    pending_generate: VecDeque<GenerateRequest>,
+    decode_opts: SchedulerOptions,
 }
 
 impl Server {
@@ -46,7 +75,16 @@ impl Server {
             latencies: Vec::new(),
             stats: ServerStats::default(),
             started: Instant::now(),
+            pending_generate: VecDeque::new(),
+            decode_opts: SchedulerOptions::default(),
         }
+    }
+
+    /// Configure the continuous-batching scheduler used for generation
+    /// traffic (slot count, prefill chunking, step-fan-out pool).
+    pub fn with_scheduler_options(mut self, opts: SchedulerOptions) -> Self {
+        self.decode_opts = opts;
+        self
     }
 
     /// Validate and enqueue a request.
@@ -57,9 +95,55 @@ impl Server {
         Ok(())
     }
 
+    /// Validate and enqueue a generation request.
+    pub fn submit_generate(&mut self, req: GenerateRequest) -> Result<()> {
+        let cfg = self.engine.config();
+        req.validate(cfg.vocab, cfg.seq)?;
+        self.pending_generate.push_back(req);
+        Ok(())
+    }
+
     /// Queued requests.
     pub fn pending(&self) -> usize {
         self.batcher.pending()
+    }
+
+    /// Queued generation requests.
+    pub fn pending_generation(&self) -> usize {
+        self.pending_generate.len()
+    }
+
+    /// Drive every queued generation request through the continuous-batching
+    /// scheduler until retirement; returns the full event stream (per-token
+    /// events, completions, failures). Decode metrics fold into
+    /// [`ServerStats`].
+    pub fn serve_generation(&mut self) -> Vec<GenerateEvent> {
+        if self.pending_generate.is_empty() {
+            return Vec::new();
+        }
+        let reqs: Vec<GenerateRequest> = self.pending_generate.drain(..).collect();
+        let n = reqs.len();
+        let (events, metrics) = {
+            let mut sched = Scheduler::new(self.engine.as_ref(), self.decode_opts.clone());
+            for r in reqs {
+                sched.admit(r);
+            }
+            let events = sched.run();
+            (events, sched.metrics())
+        };
+        self.stats.generate_requests += n;
+        self.stats.generate_failed += metrics.failed;
+        self.stats.generated_tokens += metrics.generated_tokens;
+        self.stats.recomputed += metrics.recomputed;
+        self.stats.causal_total += metrics.causal_total;
+        self.stats.total_tokens += metrics.generated_tokens;
+        self.stats.ttft_p50_s = metrics.ttft_p50_s;
+        self.stats.ttft_p95_s = metrics.ttft_p95_s;
+        self.stats.itl_p50_s = metrics.itl_p50_s;
+        self.stats.itl_p95_s = metrics.itl_p95_s;
+        self.stats.mean_active_sessions = metrics.mean_active_sessions;
+        self.stats.recompute_rate_by_policy = metrics.recompute_by_policy;
+        events
     }
 
     /// Drain one batch if ready; returns its responses.
@@ -131,14 +215,8 @@ impl Server {
         for &l in &self.latencies {
             acc.push(l);
         }
-        let mut sorted = self.latencies.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        self.stats.latency_mean_s = if sorted.is_empty() { 0.0 } else { acc.mean() };
-        self.stats.latency_p95_s = sorted
-            .get(((sorted.len() as f64) * 0.95) as usize)
-            .copied()
-            .or_else(|| sorted.last().copied())
-            .unwrap_or(0.0);
+        self.stats.latency_mean_s = if self.latencies.is_empty() { 0.0 } else { acc.mean() };
+        self.stats.latency_p95_s = super::scheduler::percentile(&self.latencies, 0.95);
         self.stats.wall_s = self.started.elapsed().as_secs_f64();
         self.stats.throughput_tok_s = if self.stats.wall_s > 0.0 {
             self.stats.total_tokens as f64 / self.stats.wall_s
@@ -228,6 +306,69 @@ mod tests {
         assert!(stats.latency_mean_s >= 0.0);
         assert!(stats.throughput_tok_s > 0.0);
         assert_eq!(stats.total_tokens, 30);
+    }
+
+    #[test]
+    fn generation_path_matches_solo_decode_and_tracks_stats() {
+        use crate::coordinator::request::GenerateRequest;
+        use crate::coordinator::scheduler::GenerateEvent;
+        use crate::model::Decode;
+
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(1);
+        let weights = Weights::random(&cfg, &mut rng);
+        let oracle = NativeEngine::new(weights.clone());
+        let mut s = Server::new(Box::new(NativeEngine::new(weights)), Duration::from_millis(1));
+
+        let p = PrecisionPolicy::lamp(3, 0.05, Rule::Strict);
+        s.submit_generate(GenerateRequest::new(1, vec![1, 2, 3], 6, p)).unwrap();
+        s.submit_generate(
+            GenerateRequest::new(2, vec![9, 8], 4, p)
+                .with_decode(Decode::TopK { k: 4, temperature: 1.1 }),
+        )
+        .unwrap();
+        assert_eq!(s.pending_generation(), 2);
+        let events = s.serve_generation();
+        assert_eq!(s.pending_generation(), 0);
+        let mut responses: Vec<_> = events
+            .into_iter()
+            .filter_map(|e| match e {
+                GenerateEvent::Finished(r) => Some(r),
+                GenerateEvent::Failed { id, error } => {
+                    panic!("request {id} failed: {error}")
+                }
+                GenerateEvent::Token { .. } => None,
+            })
+            .collect();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 2);
+        let (solo1, _) = oracle.generate(&[1, 2, 3], 6, &p, Decode::Greedy, 1).unwrap();
+        let (solo2, _) = oracle
+            .generate(&[9, 8], 4, &p, Decode::TopK { k: 4, temperature: 1.1 }, 2)
+            .unwrap();
+        assert_eq!(responses[0].tokens, solo1);
+        assert_eq!(responses[1].tokens, solo2);
+
+        let stats = s.stats();
+        assert_eq!(stats.generate_requests, 2);
+        assert_eq!(stats.generate_failed, 0);
+        assert_eq!(stats.generated_tokens, 10);
+        assert!(stats.recomputed > 0, "strict tau=0.05 must recompute");
+        assert_eq!(stats.recompute_rate_by_policy.len(), 1);
+        assert!(stats.mean_active_sessions > 0.0);
+    }
+
+    #[test]
+    fn generation_submit_validates() {
+        use crate::coordinator::request::GenerateRequest;
+        let mut s = server();
+        let p = PrecisionPolicy::reference();
+        assert!(s.submit_generate(GenerateRequest::new(1, vec![], 4, p)).is_err());
+        assert!(s.submit_generate(GenerateRequest::new(2, vec![9999], 4, p)).is_err());
+        assert!(s
+            .submit_generate(GenerateRequest::new(3, vec![1], 4, p).with_eos(4000))
+            .is_err());
+        assert!(s.serve_generation().is_empty(), "nothing valid was queued");
     }
 
     #[test]

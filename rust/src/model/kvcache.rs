@@ -130,7 +130,11 @@ impl<'w> DecodeSession<'w> {
         &self.logits
     }
 
-    /// Clear the caches and statistics, keeping the buffers.
+    /// Clear the caches and statistics, keeping the buffers. The logits
+    /// buffer is zeroed so [`Self::logits`] honours its "all zeros before
+    /// the first `decode_step`" contract — a recycled session must never
+    /// leak the previous request's token distribution to a caller that
+    /// samples before feeding anything.
     pub fn reset(&mut self) {
         self.pos = 0;
         self.stats = LampStats {
@@ -138,6 +142,20 @@ impl<'w> DecodeSession<'w> {
             causal_total: 0,
             per_layer: vec![0; self.weights.config.layers],
         };
+        self.logits.iter_mut().for_each(|l| *l = 0.0);
+    }
+
+    /// Re-bind the session to a new precision policy and seed, clearing all
+    /// cached state while keeping every buffer allocation — the slot-recycling
+    /// primitive of the continuous-batching scheduler. A reseated session is
+    /// bit-identical to a freshly constructed one: `pos` and the statistics
+    /// are zeroed, and cache rows are always written before they are read
+    /// (row `i` is stored by `decode_step` before attention over `0..=i`),
+    /// so stale cache contents from the previous request can never leak.
+    pub fn reseat(&mut self, prec: AttentionPrecision, seed: u64) {
+        self.prec = prec;
+        self.seed = seed;
+        self.reset();
     }
 
     /// Feed a whole prompt; afterwards [`Self::logits`] holds the last
@@ -315,6 +333,37 @@ mod tests {
         }
         assert_eq!(session.remaining(), 0);
         assert!(session.decode_step(1).is_err(), "context overflow must error");
+    }
+
+    #[test]
+    fn reseat_bit_identical_to_fresh_session() {
+        // The scheduler's slot-recycling contract: a reseated session must
+        // reproduce a freshly constructed session bit-for-bit, for every
+        // rule — including Random, whose streams depend on the new seed.
+        let w = nano_weights(5);
+        let tokens = [3u32, 7, 11, 2, 9];
+        for prec_a in precs() {
+            for prec_b in precs() {
+                let mut recycled = DecodeSession::new(&w, prec_a, 1);
+                recycled.prefill(&[8, 6, 4]).unwrap();
+                recycled.reseat(prec_b, 77);
+                assert!(recycled.is_empty());
+                assert_eq!(recycled.stats().causal_total, 0);
+                assert!(
+                    recycled.logits().iter().all(|&l| l == 0.0),
+                    "reseat must not leak the previous request's logits"
+                );
+                recycled.prefill(&tokens).unwrap();
+
+                let mut fresh = DecodeSession::new(&w, prec_b, 77);
+                fresh.prefill(&tokens).unwrap();
+                for (a, b) in recycled.logits().iter().zip(fresh.logits()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "reseat leaked state");
+                }
+                assert_eq!(recycled.stats().recomputed, fresh.stats().recomputed);
+                assert_eq!(recycled.stats().per_layer, fresh.stats().per_layer);
+            }
+        }
     }
 
     #[test]

@@ -27,7 +27,11 @@ pub enum Decode {
 }
 
 impl Decode {
-    fn pick(self, logits: &[f32], rng: &mut Rng) -> Result<u32> {
+    /// Sample the next token from a logits row, consuming draws from `rng`
+    /// only for stochastic strategies. Public because the continuous-batching
+    /// scheduler must reproduce [`generate`]'s sampling stream exactly: same
+    /// strategy, same per-request RNG, same call order.
+    pub fn pick(self, logits: &[f32], rng: &mut Rng) -> Result<u32> {
         match self {
             Decode::Greedy => Ok(crate::metrics::flip::argmax(logits) as u32),
             Decode::TopK { k, temperature } => sample_topk(logits, k, temperature, rng),
@@ -108,7 +112,10 @@ pub fn generate_reforward(
 
 /// Top-k temperature sampling from a logits row.
 fn sample_topk(logits: &[f32], k: usize, temperature: f32, rng: &mut Rng) -> Result<u32> {
-    if k == 0 || temperature <= 0.0 {
+    // NaN temperature must fail here with a typed error, not reach the
+    // categorical sampler's assert (the scheduler turns this Err into a
+    // single-request failure; a panic would abort the whole serving step).
+    if k == 0 || temperature.is_nan() || temperature <= 0.0 {
         return Err(Error::config("top-k needs k >= 1 and temperature > 0".to_string()));
     }
     let mut idx: Vec<usize> = (0..logits.len()).collect();
@@ -215,6 +222,8 @@ mod tests {
         assert!(generate(&w, &[], 4, AttentionPrecision::reference(), Decode::Greedy, 0).is_err());
         let bad = Decode::TopK { k: 0, temperature: 1.0 };
         assert!(generate(&w, &[1], 4, AttentionPrecision::reference(), bad, 0).is_err());
+        let nan = Decode::TopK { k: 4, temperature: f32::NAN };
+        assert!(generate(&w, &[1], 4, AttentionPrecision::reference(), nan, 0).is_err());
         assert!(generate(&w, &[9999], 4, AttentionPrecision::reference(), Decode::Greedy, 0)
             .is_err());
     }

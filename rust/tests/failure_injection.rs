@@ -3,12 +3,16 @@
 //! panic, never return garbage.
 
 use lamp::config::KvConfig;
-use lamp::coordinator::{Engine, NativeEngine, PrecisionPolicy};
-use lamp::model::{ModelConfig, Weights};
+use lamp::coordinator::{
+    Engine, GenerateEvent, GenerateRequest, NativeEngine, PrecisionPolicy, Scheduler,
+    SchedulerOptions,
+};
+use lamp::model::{Decode, ModelConfig, Weights};
 use lamp::runtime::{ArtifactStore, ModelExecutor};
 use lamp::tensorio::{Tensor, TensorFile};
-use lamp::util::Rng;
+use lamp::util::{Rng, ThreadPool};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 fn tmpdir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("lamp_failinj_{name}"));
@@ -87,6 +91,96 @@ fn engine_rejects_out_of_contract_requests() {
     assert!(r.is_err());
     // Invalid mu caught by policy validation.
     assert!(PrecisionPolicy::uniform(0).validate().is_err());
+}
+
+#[test]
+fn scheduler_failing_session_fails_only_its_request() {
+    // A request whose decode_step errors mid-prefill (out-of-vocab token
+    // injected past the Server's validation front door) must fail alone:
+    // every other in-flight request completes with its solo-decode stream,
+    // the slot is recycled, and nothing panics or deadlocks.
+    let cfg = ModelConfig::nano();
+    let mut rng = Rng::new(5);
+    let engine = NativeEngine::new(Weights::random(&cfg, &mut rng));
+    let policy = PrecisionPolicy::lamp(3, 0.05, lamp::coordinator::Rule::Strict);
+
+    // Solo oracle for the healthy requests.
+    let healthy: Vec<(u64, Vec<u32>, usize)> = vec![
+        (1, vec![1, 2, 3], 5),
+        (2, vec![9, 8, 7, 6], 4),
+        (3, vec![40, 41], 6),
+    ];
+    let mut solo = std::collections::HashMap::new();
+    for (id, prompt, n) in &healthy {
+        let (toks, _) = engine.generate(prompt, *n, &policy, Decode::Greedy, *id).unwrap();
+        solo.insert(*id, toks);
+    }
+
+    // Two slots force the poisoned request to share the pool with healthy
+    // traffic and force slot reuse after it dies.
+    let opts = SchedulerOptions {
+        max_sessions: 2,
+        prefill_chunk: 2,
+        pool: Some(Arc::new(ThreadPool::new(2))),
+    };
+    let mut sched = Scheduler::new(&engine, opts);
+    sched.admit(GenerateRequest::new(1, vec![1, 2, 3], 5, policy));
+    sched.admit(GenerateRequest::new(9, vec![1, 9999, 2], 5, policy)); // poisoned
+    sched.admit(GenerateRequest::new(2, vec![9, 8, 7, 6], 4, policy));
+    sched.admit(GenerateRequest::new(3, vec![40, 41], 6, policy));
+
+    let mut failed = Vec::new();
+    let mut finished = Vec::new();
+    for ev in sched.run() {
+        match ev {
+            GenerateEvent::Failed { id, error } => failed.push((id, error.to_string())),
+            GenerateEvent::Finished(r) => finished.push(r),
+            GenerateEvent::Token { .. } => {}
+        }
+    }
+    assert_eq!(failed.len(), 1, "exactly the poisoned request fails: {failed:?}");
+    assert_eq!(failed[0].0, 9);
+    assert!(failed[0].1.contains("vocab"), "typed error surfaced: {}", failed[0].1);
+    finished.sort_by_key(|r| r.id);
+    assert_eq!(finished.len(), 3, "no lost responses");
+    for r in &finished {
+        assert_eq!(&r.tokens, &solo[&r.id], "healthy request {} perturbed", r.id);
+    }
+    let m = sched.metrics();
+    assert_eq!((m.completed, m.failed), (3, 1));
+
+    // The pool is not poisoned: the recycled slot serves new traffic and
+    // still reproduces solo decode bit-for-bit.
+    sched.admit(GenerateRequest::new(10, vec![5, 6], 4, policy));
+    let responses = sched.run_to_completion();
+    assert_eq!(responses.len(), 1);
+    let (want, _) = engine.generate(&[5, 6], 4, &policy, Decode::Greedy, 10).unwrap();
+    assert_eq!(responses[0].tokens, want, "recycled slot leaked state");
+}
+
+#[test]
+fn scheduler_all_sessions_failing_still_drains() {
+    // Every request poisoned: the scheduler must retire them all as Failed
+    // and end idle — no spinning, no slot leak.
+    let cfg = ModelConfig::nano();
+    let mut rng = Rng::new(6);
+    let engine = NativeEngine::new(Weights::random(&cfg, &mut rng));
+    let policy = PrecisionPolicy::reference();
+    let mut sched = Scheduler::new(
+        &engine,
+        SchedulerOptions { max_sessions: 2, prefill_chunk: 1, pool: None },
+    );
+    for id in 0..4u64 {
+        sched.admit(GenerateRequest::new(id, vec![1, 9999], 3, policy));
+    }
+    let events = sched.run();
+    let failures = events
+        .iter()
+        .filter(|e| matches!(e, GenerateEvent::Failed { .. }))
+        .count();
+    assert_eq!(failures, 4);
+    assert!(sched.is_idle());
+    assert_eq!(sched.metrics().failed, 4);
 }
 
 #[test]

@@ -5,7 +5,9 @@ use lamp::check::{forall, pair, Config, Gen};
 use lamp::coordinator::{Batcher, InferenceRequest, PrecisionPolicy, Rule};
 use lamp::lamp::rmsnorm::{kappa_c_rmsnorm, select_rmsnorm};
 use lamp::lamp::softmax::{kappa1_softmax, select_strict, softmax};
-use lamp::softfloat::round::{round_to_mantissa, unit_roundoff};
+use lamp::softfloat::round::{
+    round_to_mantissa, round_to_mantissa_stochastic, ulp_at, unit_roundoff,
+};
 use lamp::softfloat::dot::{dot_f32, dot_ps};
 use lamp::util::Rng;
 use std::time::Duration;
@@ -147,6 +149,120 @@ fn prop_rmsnorm_greedy_feasible() {
         |&(ref y, tau)| {
             let mask = select_rmsnorm(y, tau as f64);
             kappa_c_rmsnorm(y, &mask) <= tau as f64 + 1e-9
+        },
+    );
+}
+
+/// The strict-LAMP κ₁ bound of Prop 3.3, evaluated against an f64 softmax
+/// reference (the test-side forward-error oracle: κ bounds the ℓ₁-normwise
+/// relative error the unselected low-precision products can induce).
+fn kappa1_softmax_f64(y: &[f32], selected: &[bool]) -> f64 {
+    assert_eq!(y.len(), selected.len());
+    let m = y.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b as f64));
+    let exps: Vec<f64> = y.iter().map(|&v| (v as f64 - m).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    let mut k = 0.0f64;
+    for j in 0..y.len() {
+        if !selected[j] {
+            let z = exps[j] / sum;
+            k = k.max(2.0 * z * (1.0 - z) * (y[j] as f64).abs());
+        }
+    }
+    k
+}
+
+#[test]
+fn prop_softmax_recompute_monotone_tightening_tau_never_hurts() {
+    // Recompute monotonicity for the strict softmax rule: tightening the
+    // condition threshold selects a superset of products, so the forward-
+    // error bound κ₁ vs the f64 reference never increases. Both the mask
+    // nesting and the bound monotonicity are asserted.
+    forall(
+        Config::default().cases(600),
+        pair(
+            Gen::f32_vec(1, 48, -10.0, 10.0),
+            pair(Gen::f32_range(0.0, 0.5), Gen::f32_range(0.0, 0.5)),
+        ),
+        |&(ref y, (t1, t2))| {
+            let (lo, hi) = if t1 <= t2 { (t1, t2) } else { (t2, t1) };
+            let m_lo = select_strict(y, lo);
+            let m_hi = select_strict(y, hi);
+            let nested = m_hi.iter().zip(&m_lo).all(|(&h, &l)| !h || l);
+            nested && kappa1_softmax_f64(y, &m_lo) <= kappa1_softmax_f64(y, &m_hi)
+        },
+    );
+}
+
+#[test]
+fn prop_rmsnorm_recompute_monotone_tightening_tau_never_hurts() {
+    // Same monotonicity for the greedy RMS-norm selection (Prop 3.2): a
+    // tighter τ keeps a longer prefix of the same sorted order, and κ_c
+    // over the shrunken unselected set cannot grow.
+    forall(
+        Config::default().cases(400),
+        pair(
+            Gen::f32_vec(1, 24, -5.0, 5.0),
+            pair(Gen::f32_range(0.0, 1.5), Gen::f32_range(0.0, 1.5)),
+        ),
+        |&(ref y, (t1, t2))| {
+            let (lo, hi) = if t1 <= t2 { (t1, t2) } else { (t2, t1) };
+            let m_lo = select_rmsnorm(y, lo as f64);
+            let m_hi = select_rmsnorm(y, hi as f64);
+            kappa_c_rmsnorm(y, &m_lo) <= kappa_c_rmsnorm(y, &m_hi) + 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_stochastic_rounding_bounds() {
+    // round_to_mantissa_stochastic over generated mantissa widths: the
+    // result is always one of the two PS(μ)-representable neighbours —
+    // within one ulp of the input, low bits cleared, magnitude bracketing
+    // the input — and exactly representable values never move.
+    forall(
+        Config::default().cases(1500),
+        pair(
+            pair(Gen::f32_range(-1e4, 1e4), Gen::u32_range(1, 23)),
+            Gen::u32_range(0, u32::MAX / 2),
+        ),
+        |&((x, mu), seed)| {
+            let mut rng = Rng::new(seed as u64);
+            let r = round_to_mantissa_stochastic(x, mu, &mut rng);
+            if mu == 23 {
+                return r.to_bits() == x.to_bits();
+            }
+            let shift = 23 - mu;
+            let down = f32::from_bits((x.to_bits() >> shift) << shift);
+            let up = f32::from_bits(((x.to_bits() >> shift) + 1) << shift);
+            // One of the two neighbours, never anything else.
+            if r.to_bits() != down.to_bits() && r.to_bits() != up.to_bits() {
+                return false;
+            }
+            // Low mantissa bits cleared; within one PS(μ) ulp; magnitude
+            // brackets the input (bit-truncation rounds toward zero).
+            let low = r.to_bits() & ((1u32 << shift) - 1);
+            // The one-ulp bound is checked for normal inputs (ulp_at models
+            // PS(μ) spacing; shrinking can probe subnormals, where the two-
+            // neighbour check above is already the complete bound).
+            let within_ulp =
+                x.abs() < f32::MIN_POSITIVE || (r - x).abs() < ulp_at(x, mu) * 1.000001;
+            low == 0 && within_ulp && down.abs() <= x.abs() && x.abs() <= up.abs()
+        },
+    );
+}
+
+#[test]
+fn prop_stochastic_rounding_fixes_representables() {
+    forall(
+        Config::default().cases(800),
+        pair(
+            pair(Gen::f32_range(-1e4, 1e4), Gen::u32_range(1, 22)),
+            Gen::u32_range(0, u32::MAX / 2),
+        ),
+        |&((x, mu), seed)| {
+            let mut rng = Rng::new(seed as u64);
+            let fixed = round_to_mantissa(x, mu);
+            round_to_mantissa_stochastic(fixed, mu, &mut rng).to_bits() == fixed.to_bits()
         },
     );
 }
