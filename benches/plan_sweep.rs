@@ -1,0 +1,145 @@
+//! Whole-model plan sweep — the PR-3 measurement.
+//!
+//! Three genuinely distinct decode workloads on the same 4-layer native
+//! engine:
+//!
+//! * **reference** — every composition site at FP32 reference (the plan
+//!   short-circuits to the pre-plan fast kernels: this is the refactored
+//!   hot path whose tokens/sec is the cross-PR regression signal —
+//!   compare against `BENCH_PR1.json`'s decode section);
+//! * **attention-only** — the pre-plan serving point (`lamp(4, 0.02)` at
+//!   the attention site, every other site reference);
+//! * **whole-model** — every composition site active; per-site recompute
+//!   rates are asserted non-zero and recorded, plus a τ sweep of the MLP
+//!   site showing the rate knob.
+//!
+//! Results land in `BENCH_PR3.json` (override with `LAMP_BENCH_OUT`).
+//!
+//! ```bash
+//! cargo bench --bench plan_sweep
+//! ```
+
+use lamp::benchkit::{record_bench_section, Bencher, JsonObj};
+use lamp::coordinator::{Engine, NativeEngine, PrecisionPolicy, Rule, SitePolicy};
+use lamp::model::{generate_with_stats, Decode, ModelConfig, Weights};
+use lamp::util::Rng;
+use std::time::Duration;
+
+fn bench_out() -> std::path::PathBuf {
+    std::env::var("LAMP_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_PR3.json"))
+}
+
+/// Decode `new_tokens` greedily through the shared decode loop and return
+/// (tokens, per-site rates).
+fn drive(
+    engine: &NativeEngine,
+    policy: &PrecisionPolicy,
+    prompt: &[u32],
+    new_tokens: usize,
+    seed: u64,
+) -> (Vec<u32>, Vec<(String, f64)>) {
+    let (tokens, stats) = generate_with_stats(
+        engine.weights(),
+        prompt,
+        new_tokens,
+        engine.decode_precision(policy),
+        Decode::Greedy,
+        seed,
+    )
+    .expect("generate");
+    (tokens, stats.site_rates())
+}
+
+fn main() {
+    let cfg = ModelConfig {
+        name: "bench-plan".into(),
+        vocab: 256,
+        seq: 160,
+        layers: 4,
+        heads: 4,
+        d_model: 128,
+        batch: 1,
+    };
+    cfg.validate().expect("bench config");
+    let mut rng = Rng::new(31);
+    let weights = Weights::random(&cfg, &mut rng);
+    let engine = NativeEngine::new(weights);
+    let prompt: Vec<u32> = (0..16u32).map(|i| (i * 37 + 5) % cfg.vocab as u32).collect();
+    let new_tokens = cfg.seq - prompt.len() - 1;
+
+    let reference = PrecisionPolicy::reference();
+    let attention_only = PrecisionPolicy::lamp(4, 0.02, Rule::Strict);
+    let whole = PrecisionPolicy::lamp(4, 0.02, Rule::Strict)
+        .with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict))
+        .with_norm(SitePolicy::lamp(10, 1.0, Rule::Strict))
+        .with_sampler(SitePolicy::lamp(7, 0.05, Rule::Relaxed));
+
+    // Sanity before timing: the reference plan recomputes nothing anywhere;
+    // the whole-model plan is active at every composition site.
+    let (_, ref_rates) = drive(&engine, &reference, &prompt, new_tokens, 3);
+    assert!(
+        ref_rates.iter().all(|(_, r)| *r == 0.0),
+        "reference plan must not recompute: {ref_rates:?}"
+    );
+    let (_, whole_rates) = drive(&engine, &whole, &prompt, new_tokens, 3);
+    assert!(
+        whole_rates.iter().all(|(_, r)| *r > 0.0),
+        "whole-model plan left a site inactive: {whole_rates:?}"
+    );
+
+    let b = Bencher { warmup_iters: 1, sample_iters: 5, max_total: Duration::from_secs(90) };
+    let mut tok_s = Vec::new();
+    for (name, policy) in [
+        ("reference plan", &reference),
+        ("attention-only plan", &attention_only),
+        ("whole-model plan", &whole),
+    ] {
+        let stats = b.run(&format!("decode {name} (4l, S={})", cfg.seq), || {
+            drive(&engine, policy, &prompt, new_tokens, 3)
+        });
+        println!("{}", stats.summary());
+        tok_s.push(new_tokens as f64 / stats.median().as_secs_f64().max(1e-12));
+    }
+    let (ref_tok_s, attn_tok_s, whole_tok_s) = (tok_s[0], tok_s[1], tok_s[2]);
+    println!(
+        "decode throughput: reference {ref_tok_s:.1} tok/s, \
+         attention-only {attn_tok_s:.1} tok/s, whole-model {whole_tok_s:.1} tok/s"
+    );
+    println!(
+        "(cross-PR regression guard: compare the reference/attention-only \
+         numbers against BENCH_PR1.json's decode section — the plan refactor \
+         must keep the short-circuited hot path within 10%)"
+    );
+
+    let mut obj = JsonObj::new()
+        .str("model", "4 layers, 4 heads, d=128, vocab=256, S=160")
+        .str("attention_policy", &attention_only.label())
+        .str("whole_policy", &whole.label())
+        .int("generated_tokens", new_tokens as u64)
+        .num("reference_tok_s", ref_tok_s)
+        .num("attention_only_tok_s", attn_tok_s)
+        .num("whole_model_tok_s", whole_tok_s);
+    for (site, rate) in &whole_rates {
+        obj = obj.num(&format!("whole_rate_{site}"), *rate);
+        println!("whole-model recompute rate [{site}]: {:.4}%", 100.0 * rate);
+    }
+    // MLP-site τ sweep: the site's recompute-rate knob.
+    for tau in [1.5f32, 0.8, 0.5, 0.2] {
+        let policy = PrecisionPolicy::reference()
+            .with_mlp(SitePolicy::lamp(7, tau, Rule::Strict));
+        let (_, rates) = drive(&engine, &policy, &prompt, new_tokens, 3);
+        let mlp_rate = rates
+            .iter()
+            .find(|(s, _)| s == "mlp")
+            .map(|(_, r)| *r)
+            .unwrap_or(0.0);
+        obj = obj.num(&format!("mlp_rate_tau_{tau}"), mlp_rate);
+        println!("mlp site rate at tau={tau}: {:.4}%", 100.0 * mlp_rate);
+    }
+
+    let path = bench_out();
+    record_bench_section(&path, "plan_sweep", &obj).expect("write bench record");
+    println!("recorded -> {}", path.display());
+}

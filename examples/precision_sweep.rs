@@ -7,7 +7,7 @@
 //! ```
 
 use lamp::benchkit::{fnum, Table};
-use lamp::coordinator::{PrecisionPolicy, Rule};
+use lamp::coordinator::{PrecisionPolicy, Rule, SitePolicy};
 use lamp::data::Domain;
 use lamp::experiments::common::{load_weights, EvalOptions, EvalPanel};
 
@@ -43,5 +43,31 @@ fn main() -> lamp::Result<()> {
     table.print();
     println!("expected shape: KL falls by orders of magnitude as tau tightens,");
     println!("with recomputation rates of only a few percent (paper Fig. 2).");
+
+    // Whole-model plan: the same attention point with the MLP, norm, and
+    // sampler sites active (per-site LAMP), vs every site uniform-low.
+    let mut whole = Table::new(
+        "whole-model plan (mu=4 attention, per-site LAMP elsewhere)",
+        &["plan", "KL vs FP32", "flip%", "attn recompute%"],
+    );
+    let uniform_all = PrecisionPolicy::uniform(4)
+        .with_mlp(SitePolicy::uniform(7))
+        .with_norm(SitePolicy::uniform(10))
+        .with_sampler(SitePolicy::uniform(7));
+    let lamp_all = PrecisionPolicy::lamp(4, 0.1, Rule::Strict)
+        .with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict))
+        .with_norm(SitePolicy::lamp(10, 1.0, Rule::Strict))
+        .with_sampler(SitePolicy::lamp(7, 0.05, Rule::Relaxed));
+    for (name, policy) in [("uniform everywhere", uniform_all), ("LAMP everywhere", lamp_all)] {
+        let r = panel.evaluate(&policy, 0)?;
+        whole.row(vec![
+            name.into(),
+            fnum(r.kl),
+            format!("{:.2}", 100.0 * r.flip),
+            format!("{:.3}", 100.0 * r.rate),
+        ]);
+    }
+    whole.print();
+    println!("whole-model LAMP repairs every composition site, not just attention.");
     Ok(())
 }

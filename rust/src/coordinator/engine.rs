@@ -14,8 +14,8 @@ use super::policy::PrecisionPolicy;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::model::{
-    forward_with, AttentionPrecision, Decode, DecodeSession, ForwardScratch, LampStats,
-    ModelConfig, Weights,
+    forward_with, Decode, DecodeSession, ForwardScratch, LampStats, ModelConfig,
+    PrecisionPlan, Weights,
 };
 use crate::runtime::{ArtifactStore, ModelExecutor, ModelRequest};
 use crate::util::ThreadPool;
@@ -49,13 +49,25 @@ pub trait Engine {
         seed: i32,
     ) -> Result<EngineOutput>;
 
-    /// Translate a serving policy into the attention precision a decode
-    /// session of this engine uses — the single source of truth shared by
-    /// fresh sessions ([`Self::decode_session`]) and the scheduler's slot
-    /// recycling (`DecodeSession::reseat`), so recycled and fresh slots
-    /// can never diverge on an engine that customizes the translation.
-    fn decode_precision(&self, policy: &PrecisionPolicy) -> AttentionPrecision {
-        policy.to_attention_precision(self.config().seq)
+    /// Validate that this backend can execute `policy` — the capability
+    /// gate the `Server` applies at `submit()` so an unsupported request
+    /// is rejected alone instead of erroring mid-batch and taking its
+    /// co-queued requests down with it. The default accepts anything that
+    /// passes range validation; backends with a narrower precision
+    /// surface (the compiled artifact executes attention-site LAMP only)
+    /// tighten it.
+    fn validate_policy(&self, policy: &PrecisionPolicy) -> Result<()> {
+        policy.validate()
+    }
+
+    /// Translate a serving policy into the per-site precision plan a
+    /// decode session of this engine uses — the single source of truth
+    /// shared by fresh sessions ([`Self::decode_session`]) and the
+    /// scheduler's slot recycling (`DecodeSession::reseat`), so recycled
+    /// and fresh slots can never diverge on an engine that customizes the
+    /// translation.
+    fn decode_precision(&self, policy: &PrecisionPolicy) -> PrecisionPlan {
+        policy.to_plan(self.config().seq)
     }
 
     /// Open an incremental KV-cache decode session against this engine —
@@ -142,8 +154,8 @@ impl NativeEngine {
         decode: Decode,
         seed: u64,
     ) -> Result<(Vec<u32>, f64)> {
-        let prec = self.decode_precision(policy);
-        crate::model::generate(&self.weights, prompt, new_tokens, prec, decode, seed)
+        let plan = self.decode_precision(policy);
+        crate::model::generate(&self.weights, prompt, new_tokens, plan, decode, seed)
     }
 }
 
@@ -159,7 +171,7 @@ impl Engine for NativeEngine {
         seed: i32,
     ) -> Result<EngineOutput> {
         let cfg = &self.weights.config;
-        let prec = policy.to_attention_precision(cfg.seq);
+        let plan = policy.to_plan(cfg.seq);
         self.with_scratch(|scratch| {
             let mut logits = Vec::with_capacity(tokens.len());
             let mut stats = LampStats::default();
@@ -167,7 +179,7 @@ impl Engine for NativeEngine {
                 let out = forward_with(
                     &self.weights,
                     seq,
-                    prec,
+                    plan,
                     seed as u64 ^ ((b as u64) << 32),
                     scratch,
                     self.pool.as_deref(),
@@ -189,6 +201,20 @@ impl Engine for NativeEngine {
     fn backend(&self) -> &'static str {
         "native"
     }
+}
+
+/// The compiled HLO bakes attention-site LAMP only; reject plans with
+/// active non-attention sites instead of silently dropping them (the
+/// native engine serves those).
+fn require_attention_only(policy: &PrecisionPolicy) -> Result<()> {
+    if !policy.is_attention_only() {
+        return Err(Error::runtime(format!(
+            "pjrt backend executes the attention site only; policy {} \
+             activates non-attention LAMP sites (use the native engine)",
+            policy.label()
+        )));
+    }
+    Ok(())
 }
 
 /// PJRT-artifact engine.
@@ -217,12 +243,17 @@ impl Engine for PjrtEngine {
         policy: &PrecisionPolicy,
         seed: i32,
     ) -> Result<EngineOutput> {
+        // Defense in depth for direct callers — the Server applies the
+        // same gate at submit() via `validate_policy`, so a whole-model
+        // request never reaches a cut batch here.
+        require_attention_only(policy)?;
+        let att = policy.attention;
         let resp = self.executor.execute(&ModelRequest {
             tokens: tokens.to_vec(),
-            mu: policy.mu,
-            tau: policy.tau,
+            mu: att.mu,
+            tau: att.tau,
             seed,
-            mode: policy.rule.mode_code(),
+            mode: att.rule.mode_code(),
         })?;
         let layers = self.executor.config().layers;
         Ok(EngineOutput {
@@ -232,8 +263,14 @@ impl Engine for PjrtEngine {
                 causal_total: resp.causal_total as usize,
                 // The artifact reports an aggregate counter only.
                 per_layer: vec![0; layers],
+                ..LampStats::default()
             },
         })
+    }
+
+    fn validate_policy(&self, policy: &PrecisionPolicy) -> Result<()> {
+        policy.validate()?;
+        require_attention_only(policy)
     }
 
     fn backend(&self) -> &'static str {
@@ -317,6 +354,27 @@ mod tests {
             .err()
             .expect("must be unsupported");
         assert!(err.to_string().contains("no incremental decode path"));
+    }
+
+    #[test]
+    fn decode_precision_translates_every_site() {
+        use crate::coordinator::policy::SitePolicy;
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(5);
+        let engine = NativeEngine::new(Weights::random(&cfg, &mut rng));
+        let policy = PrecisionPolicy::lamp(4, 0.1, Rule::Strict)
+            .with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict))
+            .with_sampler(SitePolicy::uniform(7));
+        let plan = engine.decode_precision(&policy);
+        assert_eq!(plan.attention.mu, 4);
+        assert_eq!(plan.mlp.mu, 7);
+        assert!(plan.norm.is_reference());
+        assert_eq!(plan.sampler.mu, 7);
+        // And a session opened under it accounts non-attention sites.
+        let mut session = engine.decode_session(&policy, 3).unwrap();
+        session.prefill(&[1, 2, 3, 4]).unwrap();
+        assert!(session.stats().mlp.recomputed > 0, "mlp site inactive");
+        assert_eq!(session.stats().mlp.total, cfg.layers * 4 * cfg.d_ff());
     }
 
     #[test]

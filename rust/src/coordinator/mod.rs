@@ -6,8 +6,9 @@
 //! right (μ, τ, rule) point of the compiled artifact.
 //!
 //! * [`policy`] — precision policies: named accuracy tiers mapped to
-//!   (μ, τ, rule) triples; the rule ↔ mode-code table shared with the L1
-//!   kernel.
+//!   per-composition-site (μ, τ, rule) triples (attention, MLP, norm,
+//!   sampler — the serving mirror of `model::PrecisionPlan`); the rule ↔
+//!   mode-code table shared with the L1 kernel.
 //! * [`engine`] — the [`engine::Engine`] trait with the two backends:
 //!   [`engine::NativeEngine`] (bit-exact Rust model) and
 //!   [`engine::PjrtEngine`] (compiled HLO artifacts).
@@ -31,7 +32,7 @@ pub mod server;
 
 pub use batcher::Batcher;
 pub use engine::{Engine, EngineOutput, NativeEngine, PjrtEngine};
-pub use policy::{PrecisionPolicy, Rule};
+pub use policy::{PrecisionPolicy, Rule, SitePolicy};
 pub use request::{GenerateRequest, GenerateResponse, InferenceRequest, InferenceResponse};
 pub use scheduler::{DecodeMetrics, GenerateEvent, Scheduler, SchedulerOptions};
 pub use server::{Server, ServerStats};

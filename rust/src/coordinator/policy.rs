@@ -1,12 +1,21 @@
-//! Precision policies: the coordinator-level vocabulary for LAMP.
+//! Precision policies: the coordinator-level vocabulary for whole-model
+//! LAMP.
 //!
-//! A policy is a (μ, τ, rule) triple. The rule ↔ integer mode codes are
-//! shared with the L1 kernel (`python/compile/kernels/lamp_attention.py`)
-//! and baked into the artifacts; keep the two tables in sync.
+//! A policy is one [`SitePolicy`] (μ, τ, rule) per composition site —
+//! attention scores, MLP fc→GELU, final norm, sampler softmax — mirroring
+//! the engine-level [`PrecisionPlan`]. The attention-only constructors
+//! ([`PrecisionPolicy::reference`]/[`uniform`](PrecisionPolicy::uniform)/
+//! [`lamp`](PrecisionPolicy::lamp)) leave every other site at reference,
+//! preserving the pre-plan behavior of existing callers; per-site builders
+//! ([`with_mlp`](PrecisionPolicy::with_mlp) …) activate the rest.
+//!
+//! The rule ↔ integer mode codes are shared with the L1 kernel
+//! (`python/compile/kernels/lamp_attention.py`) and baked into the
+//! artifacts; keep the two tables in sync.
 
 use crate::error::{Error, Result};
 use crate::lamp::softmax::SoftmaxRule;
-use crate::model::AttentionPrecision;
+use crate::model::{AttentionPrecision, PrecisionPlan, SitePrecision};
 
 /// Selection rule, coordinator-facing (mirrors kernel mode codes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,33 +70,128 @@ impl Rule {
     }
 }
 
-/// A complete precision policy for one request.
+/// One composition site's (μ, τ, rule) in coordinator vocabulary.
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub struct PrecisionPolicy {
+pub struct SitePolicy {
     pub mu: u32,
     pub tau: f32,
     pub rule: Rule,
 }
 
-impl PrecisionPolicy {
-    /// Full-precision reference (μ=23).
+impl SitePolicy {
+    /// Full-precision reference (μ=23, no recomputation).
     pub fn reference() -> Self {
-        PrecisionPolicy { mu: 23, tau: f32::INFINITY, rule: Rule::Strict }
+        SitePolicy { mu: 23, tau: f32::INFINITY, rule: Rule::Strict }
     }
 
     /// Uniform PS(μ), no recomputation.
     pub fn uniform(mu: u32) -> Self {
-        PrecisionPolicy { mu, tau: f32::INFINITY, rule: Rule::Strict }
+        SitePolicy { mu, tau: f32::INFINITY, rule: Rule::Strict }
     }
 
     /// LAMP at (μ, τ) with a rule.
     pub fn lamp(mu: u32, tau: f32, rule: Rule) -> Self {
-        PrecisionPolicy { mu, tau, rule }
+        SitePolicy { mu, tau, rule }
+    }
+
+    /// True when this site runs the exact FP32 reference computation.
+    /// Delegates to the engine-level predicate so the coordinator's
+    /// attention-only gate and the kernel reference short-circuit can
+    /// never disagree (the `ref_len` is irrelevant to the predicate).
+    pub fn is_reference(&self) -> bool {
+        self.to_site_precision(1).is_reference()
+    }
+
+    /// Convert to the native engine's per-site precision.
+    pub fn to_site_precision(&self, ref_len: usize) -> SitePrecision {
+        SitePrecision {
+            mu: self.mu,
+            tau: self.tau,
+            rule: self.rule.to_softmax_rule(ref_len),
+        }
+    }
+
+    /// Human-readable fragment used inside [`PrecisionPolicy::label`].
+    fn fragment(&self) -> String {
+        if self.is_reference() {
+            "reference".to_string()
+        } else if !self.tau.is_finite() {
+            format!("uniform(mu={})", self.mu)
+        } else {
+            format!("lamp(mu={},tau={},{})", self.mu, self.tau, self.rule.name())
+        }
+    }
+}
+
+/// A complete per-site precision policy for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrecisionPolicy {
+    /// Attention-score site (softmax ∘ KQ matmul).
+    pub attention: SitePolicy,
+    /// MLP site (GELU ∘ fc matmul; proj matmul uniform PS).
+    pub mlp: SitePolicy,
+    /// Final-norm site (layernorm ∘ residual storage).
+    pub norm: SitePolicy,
+    /// Sampler site (softmax ∘ logits matmul).
+    pub sampler: SitePolicy,
+}
+
+impl PrecisionPolicy {
+    /// Full-precision reference at every site.
+    pub fn reference() -> Self {
+        PrecisionPolicy {
+            attention: SitePolicy::reference(),
+            mlp: SitePolicy::reference(),
+            norm: SitePolicy::reference(),
+            sampler: SitePolicy::reference(),
+        }
+    }
+
+    /// Uniform PS(μ) attention, no recomputation; other sites reference.
+    pub fn uniform(mu: u32) -> Self {
+        PrecisionPolicy { attention: SitePolicy::uniform(mu), ..Self::reference() }
+    }
+
+    /// Attention-site LAMP at (μ, τ); other sites reference.
+    pub fn lamp(mu: u32, tau: f32, rule: Rule) -> Self {
+        PrecisionPolicy { attention: SitePolicy::lamp(mu, tau, rule), ..Self::reference() }
+    }
+
+    /// The same (μ, τ, rule) at every composition site.
+    pub fn whole_model(mu: u32, tau: f32, rule: Rule) -> Self {
+        let site = SitePolicy::lamp(mu, tau, rule);
+        PrecisionPolicy { attention: site, mlp: site, norm: site, sampler: site }
+    }
+
+    /// Replace the MLP site.
+    pub fn with_mlp(mut self, site: SitePolicy) -> Self {
+        self.mlp = site;
+        self
+    }
+
+    /// Replace the final-norm site.
+    pub fn with_norm(mut self, site: SitePolicy) -> Self {
+        self.norm = site;
+        self
+    }
+
+    /// Replace the sampler site.
+    pub fn with_sampler(mut self, site: SitePolicy) -> Self {
+        self.sampler = site;
+        self
+    }
+
+    /// True when every non-attention site is at reference (the policy is
+    /// expressible on backends that only implement attention LAMP, e.g.
+    /// the compiled PJRT artifact).
+    pub fn is_attention_only(&self) -> bool {
+        self.mlp.is_reference() && self.norm.is_reference() && self.sampler.is_reference()
     }
 
     /// Named accuracy tiers for the serving API — the coordinator-level
     /// knob a deployment would actually expose. Derived from the paper's
-    /// headline points (§4.3: 0.3%/1.6%/7.6% recomputation bands).
+    /// headline points (§4.3: 0.3%/1.6%/7.6% recomputation bands); the
+    /// `*-whole` tiers extend the band to every composition site.
     pub fn tier(name: &str) -> Result<Self> {
         match name {
             // Exact reference, full cost.
@@ -98,58 +202,65 @@ impl PrecisionPolicy {
             "balanced" => Ok(Self::lamp(4, 0.1, Rule::Relaxed)),
             // Cheapest: uniform low precision.
             "economy" => Ok(Self::uniform(4)),
+            // Balanced attention + low-precision MLP/norm/logits with
+            // per-site LAMP repair — the whole-model serving point.
+            "balanced-whole" => Ok(Self::lamp(4, 0.1, Rule::Relaxed)
+                .with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict))
+                .with_norm(SitePolicy::lamp(10, 1.0, Rule::Strict))
+                .with_sampler(SitePolicy::lamp(7, 0.05, Rule::Relaxed))),
             other => Err(Error::config(format!(
-                "unknown tier {other:?} (exact|high|balanced|economy)"
+                "unknown tier {other:?} (exact|high|balanced|economy|balanced-whole)"
             ))),
         }
     }
 
     /// Human-readable label, used as the key of per-policy serving metrics
     /// (e.g. the recompute-rate breakdown in `ServerStats`). Policies that
-    /// compare equal render identically.
+    /// compare equal render identically; non-reference extra sites append
+    /// their own fragments, so distinct plans get distinct labels.
     pub fn label(&self) -> String {
-        if self.mu == 23 && !self.tau.is_finite() {
-            "reference".to_string()
-        } else if !self.tau.is_finite() {
-            format!("uniform(mu={})", self.mu)
-        } else {
-            format!("lamp(mu={},tau={},{})", self.mu, self.tau, self.rule.name())
+        let mut s = self.attention.fragment();
+        for (name, site) in
+            [("mlp", &self.mlp), ("norm", &self.norm), ("sampler", &self.sampler)]
+        {
+            if !site.is_reference() {
+                s.push_str(&format!("+{name}[{}]", site.fragment()));
+            }
         }
+        s
     }
 
     /// Two requests can share an artifact batch iff their policies match
-    /// exactly (μ, τ, rule are baked into the batched call's scalars).
+    /// exactly at every site (μ, τ, rule are baked into the batched call's
+    /// scalars).
     pub fn batch_compatible(&self, other: &PrecisionPolicy) -> bool {
         self == other
     }
 
-    /// Convert to the native engine's precision type.
+    /// The attention site in native-engine vocabulary (kept for the
+    /// artifact path, which executes attention LAMP only).
     pub fn to_attention_precision(&self, ref_len: usize) -> AttentionPrecision {
-        AttentionPrecision {
-            mu: self.mu,
-            tau: self.tau,
-            rule: self.rule.to_softmax_rule(ref_len),
+        self.attention.to_site_precision(ref_len)
+    }
+
+    /// The full per-site plan in native-engine vocabulary — the single
+    /// policy → plan translation the engines and the scheduler share.
+    pub fn to_plan(&self, ref_len: usize) -> PrecisionPlan {
+        PrecisionPlan {
+            attention: self.attention.to_site_precision(ref_len),
+            mlp: self.mlp.to_site_precision(ref_len),
+            norm: self.norm.to_site_precision(ref_len),
+            sampler: self.sampler.to_site_precision(ref_len),
         }
     }
 
-    /// Validate ranges.
+    /// Validate every site's ranges with typed, site-naming errors — the
+    /// front-door rejection that keeps invalid plans from panicking deep
+    /// in the engines. Delegates to [`PrecisionPlan::validate`], the
+    /// single source of truth for the per-site ranges (the `ref_len`
+    /// passed to the translation does not affect validation).
     pub fn validate(&self) -> Result<()> {
-        if !(1..=23).contains(&self.mu) {
-            return Err(Error::config(format!("mu {} out of 1..=23", self.mu)));
-        }
-        if self.tau < 0.0 || self.tau.is_nan() {
-            return Err(Error::config(format!("tau {} must be >= 0", self.tau)));
-        }
-        if matches!(self.rule, Rule::Relaxed | Rule::RelaxedLengthNorm)
-            && self.tau.is_finite()
-            && self.tau >= 1.0
-        {
-            return Err(Error::config(format!(
-                "relative threshold tau {} must be < 1 for relaxed rules",
-                self.tau
-            )));
-        }
-        Ok(())
+        self.to_plan(1).validate()
     }
 }
 
@@ -177,10 +288,12 @@ mod tests {
 
     #[test]
     fn tiers_resolve_and_validate() {
-        for t in ["exact", "high", "balanced", "economy"] {
+        for t in ["exact", "high", "balanced", "economy", "balanced-whole"] {
             PrecisionPolicy::tier(t).unwrap().validate().unwrap();
         }
         assert!(PrecisionPolicy::tier("ultra").is_err());
+        assert!(PrecisionPolicy::tier("balanced").unwrap().is_attention_only());
+        assert!(!PrecisionPolicy::tier("balanced-whole").unwrap().is_attention_only());
     }
 
     #[test]
@@ -191,6 +304,46 @@ mod tests {
         assert!(PrecisionPolicy::lamp(4, 1.5, Rule::Relaxed).validate().is_err());
         // Strict thresholds are absolute: tau > 1 is fine there.
         assert!(PrecisionPolicy::lamp(4, 1.5, Rule::Strict).validate().is_ok());
+    }
+
+    #[test]
+    fn validation_names_the_offending_site() {
+        let bad_mlp = PrecisionPolicy::reference().with_mlp(SitePolicy::lamp(0, 0.1, Rule::Strict));
+        let e = bad_mlp.validate().unwrap_err().to_string();
+        assert!(e.contains("mlp"), "{e}");
+        let nan_norm = PrecisionPolicy::reference()
+            .with_norm(SitePolicy::lamp(4, f32::NAN, Rule::Strict));
+        let e = nan_norm.validate().unwrap_err().to_string();
+        assert!(e.contains("norm") && e.contains("NaN"), "{e}");
+        let bad_sampler = PrecisionPolicy::reference()
+            .with_sampler(SitePolicy::lamp(4, 1.5, Rule::Relaxed));
+        let e = bad_sampler.validate().unwrap_err().to_string();
+        assert!(e.contains("sampler"), "{e}");
+        // Absolute thresholds: tau >= 1 is fine for MLP/norm sites.
+        assert!(PrecisionPolicy::reference()
+            .with_mlp(SitePolicy::lamp(4, 1.5, Rule::Relaxed))
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn length_norm_rule_is_attention_only() {
+        // App. C.5 normalizes over causal row lengths; other sites see
+        // fixed-width rows, so the rule is rejected there.
+        assert!(PrecisionPolicy::lamp(4, 0.1, Rule::RelaxedLengthNorm)
+            .validate()
+            .is_ok());
+        for policy in [
+            PrecisionPolicy::reference()
+                .with_mlp(SitePolicy::lamp(4, 0.1, Rule::RelaxedLengthNorm)),
+            PrecisionPolicy::reference()
+                .with_norm(SitePolicy::lamp(4, 0.1, Rule::RelaxedLengthNorm)),
+            PrecisionPolicy::reference()
+                .with_sampler(SitePolicy::lamp(4, 0.1, Rule::RelaxedLengthNorm)),
+        ] {
+            let e = policy.validate().unwrap_err().to_string();
+            assert!(e.contains("attention site only"), "{e}");
+        }
     }
 
     #[test]
@@ -207,11 +360,55 @@ mod tests {
     }
 
     #[test]
+    fn labels_roundtrip_per_site_plans() {
+        // Attention-only labels stay in the historical format; per-site
+        // additions produce distinct labels per distinct plan and equal
+        // labels for equal plans (the batch-compatibility key contract).
+        let base = PrecisionPolicy::lamp(4, 0.1, Rule::Strict);
+        let a = base.with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict));
+        let b = base.with_mlp(SitePolicy::lamp(7, 0.25, Rule::Strict));
+        let c = base.with_norm(SitePolicy::uniform(7));
+        assert_eq!(base.label(), "lamp(mu=4,tau=0.1,strict)");
+        assert_ne!(a.label(), base.label());
+        assert_ne!(a.label(), b.label());
+        assert_ne!(a.label(), c.label());
+        assert!(a.label().contains("mlp["), "{}", a.label());
+        assert!(c.label().contains("norm[uniform(mu=7)"), "{}", c.label());
+        assert_eq!(
+            a.label(),
+            base.with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict)).label()
+        );
+        // Label equality tracks batch compatibility on these plans.
+        assert!(a.batch_compatible(&base.with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict))));
+        assert!(!a.batch_compatible(&b));
+        assert!(!a.batch_compatible(&c));
+    }
+
+    #[test]
     fn batch_compatibility_is_exact_match() {
         let a = PrecisionPolicy::lamp(4, 0.1, Rule::Relaxed);
         let b = PrecisionPolicy::lamp(4, 0.1, Rule::Relaxed);
         let c = PrecisionPolicy::lamp(4, 0.2, Rule::Relaxed);
         assert!(a.batch_compatible(&b));
         assert!(!a.batch_compatible(&c));
+        // Differing only in a non-attention site ⇒ not batch compatible.
+        let d = a.with_sampler(SitePolicy::uniform(7));
+        assert!(!a.batch_compatible(&d));
+    }
+
+    #[test]
+    fn to_plan_round_trips_every_site() {
+        let p = PrecisionPolicy::whole_model(4, 0.1, Rule::Strict)
+            .with_sampler(SitePolicy::lamp(7, 0.05, Rule::Relaxed));
+        let plan = p.to_plan(128);
+        assert_eq!(plan.attention.mu, 4);
+        assert_eq!(plan.mlp.mu, 4);
+        assert_eq!(plan.norm.mu, 4);
+        assert_eq!(plan.sampler.mu, 7);
+        assert_eq!(plan.sampler.rule, SoftmaxRule::Relaxed);
+        assert!(!plan.is_attention_only());
+        let reference = PrecisionPolicy::reference().to_plan(128);
+        assert!(reference.is_attention_only());
+        assert!(reference.attention.is_reference());
     }
 }

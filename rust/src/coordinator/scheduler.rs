@@ -98,8 +98,13 @@ pub struct DecodeMetrics {
     /// Aggregate LAMP counters over every retired session.
     pub recomputed: usize,
     pub causal_total: usize,
-    /// Recompute rate per policy label (`PrecisionPolicy::label`).
+    /// **Attention-site** recompute rate per policy label
+    /// (`PrecisionPolicy::label`); non-attention sites are broken out in
+    /// [`Self::recompute_by_site`], aggregated across policies.
     pub recompute_by_policy: Vec<(String, f64)>,
+    /// Recompute rate per composition site (`LampStats::site_rates`),
+    /// aggregated over every retired session.
+    pub recompute_by_site: Vec<(String, f64)>,
 }
 
 /// A request bound to a live session.
@@ -493,6 +498,7 @@ impl<'e> Scheduler<'e> {
                 .iter()
                 .map(|(l, s)| (l.clone(), s.rate()))
                 .collect(),
+            recompute_by_site: self.totals.site_rates(),
         }
     }
 }

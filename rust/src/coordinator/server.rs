@@ -51,8 +51,12 @@ pub struct ServerStats {
     /// Mean live sessions per scheduler iteration (occupancy) of the
     /// latest generation drive.
     pub mean_active_sessions: f64,
-    /// Recompute rate per policy label over the latest generation drive.
+    /// **Attention-site** recompute rate per policy label over the latest
+    /// generation drive (per-site breakdown: `recompute_rate_by_site`).
     pub recompute_rate_by_policy: Vec<(String, f64)>,
+    /// Recompute rate per composition site (attention, mlp, norm, sampler)
+    /// over the latest generation drive.
+    pub recompute_rate_by_site: Vec<(String, f64)>,
 }
 
 /// Synchronous batching server over one engine.
@@ -87,18 +91,24 @@ impl Server {
         self
     }
 
-    /// Validate and enqueue a request.
+    /// Validate and enqueue a request. Backend capability is checked here
+    /// (`Engine::validate_policy`), so a policy this engine cannot execute
+    /// is rejected alone instead of erroring mid-batch and failing its
+    /// co-queued requests.
     pub fn submit(&mut self, req: InferenceRequest) -> Result<()> {
         let cfg = self.engine.config();
         req.validate(cfg.vocab, cfg.seq)?;
+        self.engine.validate_policy(&req.policy)?;
         self.batcher.push(req);
         Ok(())
     }
 
-    /// Validate and enqueue a generation request.
+    /// Validate and enqueue a generation request (same front-door backend
+    /// capability check as [`Self::submit`]).
     pub fn submit_generate(&mut self, req: GenerateRequest) -> Result<()> {
         let cfg = self.engine.config();
         req.validate(cfg.vocab, cfg.seq)?;
+        self.engine.validate_policy(&req.policy)?;
         self.pending_generate.push_back(req);
         Ok(())
     }
@@ -143,6 +153,7 @@ impl Server {
         self.stats.itl_p95_s = metrics.itl_p95_s;
         self.stats.mean_active_sessions = metrics.mean_active_sessions;
         self.stats.recompute_rate_by_policy = metrics.recompute_by_policy;
+        self.stats.recompute_rate_by_site = metrics.recompute_by_site;
         events
     }
 
@@ -184,6 +195,9 @@ impl Server {
             recomputed: (out.stats.recomputed as f64 * scale).round() as usize,
             causal_total: (out.stats.causal_total as f64 * scale).round() as usize,
             per_layer: out.stats.per_layer.clone(),
+            mlp: out.stats.mlp.scaled(scale),
+            norm: out.stats.norm.scaled(scale),
+            sampler: out.stats.sampler.scaled(scale),
         };
         self.stats.batches += 1;
         self.stats.padding_rows += batch.padding_rows;
@@ -356,6 +370,92 @@ mod tests {
         assert!(stats.recomputed > 0, "strict tau=0.05 must recompute");
         assert_eq!(stats.recompute_rate_by_policy.len(), 1);
         assert!(stats.mean_active_sessions > 0.0);
+    }
+
+    #[test]
+    fn attention_only_backend_rejects_whole_model_policy_at_submit() {
+        use crate::coordinator::engine::EngineOutput;
+        use crate::coordinator::policy::SitePolicy;
+
+        // An engine with the PJRT-style attention-only surface: the
+        // capability gate must fire at submit(), so the incompatible
+        // request is rejected alone and queued requests still drain.
+        struct AttnOnly(ModelConfig, NativeEngine);
+        impl crate::coordinator::Engine for AttnOnly {
+            fn config(&self) -> &ModelConfig {
+                &self.0
+            }
+            fn infer(
+                &self,
+                tokens: &[Vec<u32>],
+                policy: &PrecisionPolicy,
+                seed: i32,
+            ) -> crate::error::Result<EngineOutput> {
+                assert!(policy.is_attention_only(), "gate must fire before infer");
+                self.1.infer(tokens, policy, seed)
+            }
+            fn validate_policy(&self, policy: &PrecisionPolicy) -> crate::error::Result<()> {
+                policy.validate()?;
+                if !policy.is_attention_only() {
+                    return Err(crate::error::Error::runtime(
+                        "attention site only".to_string(),
+                    ));
+                }
+                Ok(())
+            }
+            fn backend(&self) -> &'static str {
+                "attn-only"
+            }
+        }
+
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(9);
+        let native = NativeEngine::new(Weights::random(&cfg, &mut rng));
+        let mut s = Server::new(Box::new(AttnOnly(cfg, native)), Duration::from_millis(1));
+        let ok = PrecisionPolicy::lamp(4, 0.1, Rule::Strict);
+        let whole = ok.with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict));
+        s.submit(InferenceRequest::new(1, vec![1, 2], ok)).unwrap();
+        let err = s.submit(InferenceRequest::new(2, vec![3, 4], whole)).unwrap_err();
+        assert!(err.to_string().contains("attention site only"), "{err}");
+        s.submit(InferenceRequest::new(3, vec![5, 6], ok)).unwrap();
+        // The valid requests are unaffected by the rejected one.
+        let rs = s.drain().unwrap();
+        assert_eq!(rs.len(), 2);
+        // The native engine accepts whole-model policies at submit.
+        let mut native_server = server();
+        native_server
+            .submit(InferenceRequest::new(4, vec![1, 2], whole))
+            .unwrap();
+        assert_eq!(native_server.drain().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn generation_reports_per_site_recompute_rates() {
+        use crate::coordinator::policy::SitePolicy;
+        use crate::coordinator::request::GenerateRequest;
+
+        let mut s = server();
+        let p = PrecisionPolicy::lamp(3, 0.05, Rule::Strict)
+            .with_mlp(SitePolicy::lamp(3, 0.5, Rule::Strict))
+            .with_norm(SitePolicy::lamp(3, 0.5, Rule::Strict))
+            .with_sampler(SitePolicy::lamp(3, 0.0, Rule::Strict));
+        s.submit_generate(GenerateRequest::new(1, vec![1, 2, 3], 5, p)).unwrap();
+        let events = s.serve_generation();
+        assert!(!events.is_empty());
+        let stats = s.stats();
+        let rates = &stats.recompute_rate_by_site;
+        assert_eq!(rates.len(), 4);
+        let rate_of = |name: &str| {
+            rates
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, r)| *r)
+                .expect("site present")
+        };
+        assert!(rate_of("attention") > 0.0);
+        assert!(rate_of("mlp") > 0.0);
+        assert!(rate_of("norm") > 0.0);
+        assert!(rate_of("sampler") > 0.0);
     }
 
     #[test]

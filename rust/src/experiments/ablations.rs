@@ -6,12 +6,17 @@
 //! * `recompute_algo`: FP32 recomputation vs Kahan-compensated
 //!   recomputation (the "more accurate algorithm" refinement of §2.2.1),
 //!   measured on the composition error of softmax(A·x).
+//! * `plan_sites`: whole-model LAMP per composition site — for each
+//!   non-attention site of the [`PrecisionPlan`](crate::model::plan),
+//!   uniform low precision vs per-site look-ahead repair, measured as the
+//!   max logit deviation from the FP32 reference.
 
 use crate::benchkit::{fnum, Table};
 use crate::error::Result;
-use crate::lamp::softmax::{select_strict, softmax};
+use crate::lamp::softmax::{select_strict, softmax, SoftmaxRule};
 use crate::linalg::Matrix;
 use crate::metrics::Accumulator;
+use crate::model::{forward, ModelConfig, PrecisionPlan, SitePrecision, Weights};
 use crate::softfloat::dot::{dot_f32, dot_f64, dot_kahan, dot_ps, dot_ps_stochastic};
 use crate::util::Rng;
 
@@ -102,9 +107,76 @@ pub fn recompute_algorithms() -> Result<Vec<Table>> {
     Ok(vec![t])
 }
 
+/// Whole-model LAMP per composition site: for the MLP, final-norm, and
+/// sampler sites, compare uniform PS(μ) against per-site LAMP repair on
+/// the nano model (max logit deviation from the FP32 reference, plus the
+/// site's recompute rate).
+pub fn plan_sites() -> Result<Vec<Table>> {
+    let mut rng = Rng::new(17);
+    let weights = Weights::random(&ModelConfig::nano(), &mut rng);
+    let tokens: Vec<u32> = (0..24).map(|i| (i * 11 + 3) % 128).collect();
+    let reference = forward(&weights, &tokens, PrecisionPlan::reference(), 0)?;
+    let mut t = Table::new(
+        "ablation — whole-model LAMP per composition site (nano, mu=3)",
+        &["site", "max |Δlogit| uniform", "max |Δlogit| LAMP", "site recompute%"],
+    );
+    let base = PrecisionPlan::reference();
+    let mu = 3;
+    let cases: Vec<(&str, PrecisionPlan, PrecisionPlan)> = vec![
+        (
+            "mlp (fc->GELU)",
+            base.with_mlp(SitePrecision::uniform(mu)),
+            base.with_mlp(SitePrecision::lamp(mu, 0.1, SoftmaxRule::Strict)),
+        ),
+        (
+            "norm (residual->LN)",
+            base.with_norm(SitePrecision::uniform(mu)),
+            base.with_norm(SitePrecision::lamp(mu, 0.1, SoftmaxRule::Strict)),
+        ),
+        (
+            "sampler (logits->softmax)",
+            base.with_sampler(SitePrecision::uniform(mu)),
+            base.with_sampler(SitePrecision::lamp(mu, 0.0, SoftmaxRule::Strict)),
+        ),
+    ];
+    for (name, uniform_plan, lamp_plan) in cases {
+        let uni = forward(&weights, &tokens, uniform_plan, 0)?;
+        let rep = forward(&weights, &tokens, lamp_plan, 0)?;
+        let e_uni = uni.logits.max_abs_diff(&reference.logits)?;
+        let e_rep = rep.logits.max_abs_diff(&reference.logits)?;
+        let rate = match name {
+            n if n.starts_with("mlp") => rep.stats.mlp.rate(),
+            n if n.starts_with("norm") => rep.stats.norm.rate(),
+            _ => rep.stats.sampler.rate(),
+        };
+        t.row(vec![
+            name.to_string(),
+            fnum(e_uni as f64),
+            fnum(e_rep as f64),
+            format!("{:.3}", 100.0 * rate),
+        ]);
+    }
+    Ok(vec![t])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn plan_sites_ablation_runs_and_repair_helps() {
+        let tables = plan_sites().unwrap();
+        assert_eq!(tables[0].rows.len(), 3);
+        for row in &tables[0].rows {
+            let uni: f64 = row[1].parse().unwrap();
+            let rep: f64 = row[2].parse().unwrap();
+            assert!(
+                rep <= uni,
+                "per-site LAMP worse than uniform at {}: {rep} vs {uni}",
+                row[0]
+            );
+        }
+    }
 
     #[test]
     fn rounding_ablation_runs_and_shows_sqrt_k_gap() {

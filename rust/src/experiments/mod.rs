@@ -36,8 +36,9 @@ pub fn run(name: &str, opts: &EvalOptions) -> Result<Vec<Table>> {
         "appendix_b" => appendix_b(),
         "ablation_rounding" => ablations::rounding_modes(),
         "ablation_recompute" => ablations::recompute_algorithms(),
+        "ablation_plan_sites" => ablations::plan_sites(),
         other => Err(Error::config(format!(
-            "unknown experiment {other:?} (fig1..fig7|table1|appendix_b|ablation_rounding|ablation_recompute)"
+            "unknown experiment {other:?} (fig1..fig7|table1|appendix_b|ablation_rounding|ablation_recompute|ablation_plan_sites)"
         ))),
     }
 }
@@ -56,6 +57,7 @@ pub fn all_names() -> &'static [&'static str] {
         "appendix_b",
         "ablation_rounding",
         "ablation_recompute",
+        "ablation_plan_sites",
     ]
 }
 

@@ -3,6 +3,14 @@
 //! For f(y) = [φ(y₁) … φ(yₙ)] the matrix M(f, y) is diagonal with entries
 //! `φ′(y_i)·y_i / φ(y_i)`, so the componentwise LAMP problem (eq. 5) has the
 //! immediate closed-form solution: select i iff `|M_ii| > τ`.
+//!
+//! Wired into serving through the [`PrecisionPlan`](crate::model::plan)'s
+//! MLP site: `model::mlp` accumulates the fc matmul in PS(μ) and uses
+//! [`select_activation_rule`] on the low-precision GELU pre-activations to
+//! decide which fc inner products to recompute in FP32.
+
+use super::softmax::{random_mask, SoftmaxRule};
+use crate::util::Rng;
 
 /// A differentiable scalar activation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -99,6 +107,31 @@ pub fn select_activation(y: &[f32], act: Activation, tau: f32) -> Vec<bool> {
     y.iter().map(|&yi| act.sensitivity(yi) > tau).collect()
 }
 
+/// Dispatch the activation site's selection rule (the plan's per-site
+/// `rule`). The threshold rules coincide here — the componentwise problem
+/// has the exact closed-form solution (thresholding the diagonal
+/// sensitivity), so Strict/Relaxed/RelaxedLengthNorm all map to
+/// [`select_activation`] — while `Random` is the count-matched random
+/// baseline of App. C.4, drawing positions from the caller's
+/// position-keyed stream.
+pub fn select_activation_rule(
+    y: &[f32],
+    act: Activation,
+    tau: f32,
+    rule: SoftmaxRule,
+    rng: &mut Rng,
+) -> Vec<bool> {
+    match rule {
+        SoftmaxRule::Random => {
+            // Count-match without materializing the threshold mask (this
+            // runs per (layer, token) on the decode hot path).
+            let count = y.iter().filter(|&&yi| act.sensitivity(yi) > tau).count();
+            random_mask(y.len(), count, rng)
+        }
+        _ => select_activation(y, act, tau),
+    }
+}
+
 /// κ_c for the entrywise activation under the selection `mask` — the max of
 /// unselected diagonal sensitivities (the ∞-norm of M(I − diag q) for
 /// diagonal M).
@@ -189,6 +222,33 @@ mod tests {
                 assert!(kappa_c_activation(&y, act, &mask) <= tau);
             }
         }
+    }
+
+    #[test]
+    fn rule_dispatch_thresholds_and_random_count_matches() {
+        let mut rng = Rng::new(2);
+        let y: Vec<f32> = (0..48).map(|_| (rng.f32() - 0.5) * 12.0).collect();
+        let tau = 0.8;
+        let strict = select_activation(&y, Activation::Gelu, tau);
+        for rule in [
+            SoftmaxRule::Strict,
+            SoftmaxRule::Relaxed,
+            SoftmaxRule::RelaxedLengthNorm { ref_len: 64 },
+        ] {
+            let mut r = Rng::new(7);
+            assert_eq!(
+                select_activation_rule(&y, Activation::Gelu, tau, rule, &mut r),
+                strict,
+                "threshold rules share the closed-form solution"
+            );
+        }
+        let want = strict.iter().filter(|&&b| b).count();
+        let mut r1 = Rng::new(7);
+        let m1 = select_activation_rule(&y, Activation::Gelu, tau, SoftmaxRule::Random, &mut r1);
+        assert_eq!(m1.iter().filter(|&&b| b).count(), want);
+        let mut r2 = Rng::new(7);
+        let m2 = select_activation_rule(&y, Activation::Gelu, tau, SoftmaxRule::Random, &mut r2);
+        assert_eq!(m1, m2, "same stream must reproduce exactly");
     }
 
     #[test]

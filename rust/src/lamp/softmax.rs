@@ -121,15 +121,23 @@ pub fn select_relaxed_ln(y: &[f32], tau: f32, ref_len: usize) -> Vec<bool> {
     select_relaxed(y, scaled.min(1.0))
 }
 
+/// A `len`-long mask with exactly `count` uniformly random positions set —
+/// the count-matched random baseline of App. C.4, shared by every site's
+/// `Random` rule (softmax here, `lamp::activation::select_activation_rule`,
+/// and the norm site's `model::plan::norm_site_row`).
+pub fn random_mask(len: usize, count: usize, rng: &mut Rng) -> Vec<bool> {
+    let mut mask = vec![false; len];
+    for i in rng.sample_indices(len, count) {
+        mask[i] = true;
+    }
+    mask
+}
+
 /// Random baseline (App. C.4): flags exactly as many entries as
 /// [`select_strict`] would at this τ, at uniformly random positions.
 pub fn select_random(y: &[f32], tau: f32, rng: &mut Rng) -> Vec<bool> {
     let count = select_strict(y, tau).iter().filter(|&&b| b).count();
-    let mut mask = vec![false; y.len()];
-    for i in rng.sample_indices(y.len(), count) {
-        mask[i] = true;
-    }
-    mask
+    random_mask(y.len(), count, rng)
 }
 
 /// Dispatch on [`SoftmaxRule`].

@@ -5,6 +5,7 @@
 use super::tensor::Matrix;
 use crate::error::{Error, Result};
 use crate::softfloat::dot::{dot_f32, dot_ps};
+use crate::softfloat::round::round_to_mantissa;
 
 fn check(a: &Matrix, b: &Matrix) -> Result<()> {
     if a.cols() != b.rows() {
@@ -98,6 +99,61 @@ pub fn matvec_bias_into(x_row: &[f32], w: &Matrix, bias: &[f32], out: &mut [f32]
         for (o, &wv) in out.iter_mut().zip(wrow) {
             *o += xv * wv;
         }
+    }
+}
+
+/// One row of the PS(μ) matmul: `out[j] = dot_ps(x_row, W[:, j], μ)` with
+/// the bias added once in FP32 afterwards. Each output column keeps its own
+/// accumulator advanced with the paper's per-step `round(fma(..))` chain in
+/// input order (p ascending) — **bit-identical to [`dot_ps`] on the
+/// explicit column** — while the p-major loop walks the row-major weight
+/// matrix cache-friendly, interleaving the independent chains exactly like
+/// the fused attention score kernel. This is the whole-model-LAMP
+/// counterpart of [`matvec_bias_into`]: shared by the batched PS matmul of
+/// `model::mlp` and the KV-cache decode row, so incremental decode stays
+/// bit-identical to the full pass under every plan.
+pub fn matvec_ps_bias_into(
+    x_row: &[f32],
+    w: &Matrix,
+    bias: &[f32],
+    mu: u32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x_row.len(), w.rows());
+    debug_assert_eq!(out.len(), w.cols());
+    debug_assert!(bias.is_empty() || bias.len() == w.cols());
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for (p, &xv) in x_row.iter().enumerate() {
+        let wrow = w.row(p);
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o = round_to_mantissa(xv.mul_add(wv, *o), mu);
+        }
+    }
+    if !bias.is_empty() {
+        for (o, &b) in out.iter_mut().zip(bias) {
+            *o += b;
+        }
+    }
+}
+
+/// FP32 recomputation of one output column of `x_row·W + bias`: the
+/// sequential-FMA chain of [`dot_f32`] run down column `j` of the
+/// row-major weight matrix, plus the FP32 bias add. The LAMP repair
+/// kernel paired with [`matvec_ps_bias_into`].
+#[inline]
+pub fn matvec_col_f32(x_row: &[f32], w: &Matrix, bias: &[f32], j: usize) -> f32 {
+    debug_assert_eq!(x_row.len(), w.rows());
+    debug_assert!(j < w.cols());
+    let mut c = 0.0f32;
+    for (p, &xv) in x_row.iter().enumerate() {
+        c = xv.mul_add(w.row(p)[j], c);
+    }
+    if bias.is_empty() {
+        c
+    } else {
+        c + bias[j]
     }
 }
 
@@ -310,6 +366,72 @@ mod tests {
         assert!(matmul_bias_fast(&x, &w, &[]).is_err());
         assert!(matmul_bias_fast(&x, &Matrix::zeros(3, 4), &[0.0; 3]).is_err());
         assert!(matmul_transposed_fast(&x, &Matrix::zeros(4, 5)).is_err());
+    }
+
+    #[test]
+    fn matvec_ps_matches_per_column_dot_ps_bitwise() {
+        // The PS row-matvec's contract: each output column equals dot_ps
+        // over the explicit (strided) column, bit for bit, for every μ.
+        let mut rng = Rng::new(9);
+        for _ in 0..30 {
+            let k = rng.range(1, 24);
+            let n = rng.range(1, 17);
+            let x: Vec<f32> = (0..k).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+            let w = Matrix::randn(k, n, 1.0, &mut rng);
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            for mu in [1u32, 4, 11, 23] {
+                let mut out = vec![0.0f32; n];
+                matvec_ps_bias_into(&x, &w, &bias, mu, &mut out);
+                for j in 0..n {
+                    let col: Vec<f32> = (0..k).map(|p| w.get(p, j)).collect();
+                    let want = dot_ps(&x, &col, mu) + bias[j];
+                    assert_eq!(out[j].to_bits(), want.to_bits(), "j={j} mu={mu}");
+                }
+                // No-bias variant.
+                let mut out0 = vec![0.0f32; n];
+                matvec_ps_bias_into(&x, &w, &[], mu, &mut out0);
+                for j in 0..n {
+                    let col: Vec<f32> = (0..k).map(|p| w.get(p, j)).collect();
+                    assert_eq!(out0[j].to_bits(), dot_ps(&x, &col, mu).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_col_f32_matches_sequential_fma() {
+        let mut rng = Rng::new(10);
+        let k = 19;
+        let n = 7;
+        let x: Vec<f32> = (0..k).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+        let w = Matrix::randn(k, n, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        for j in 0..n {
+            let col: Vec<f32> = (0..k).map(|p| w.get(p, j)).collect();
+            let want = dot_f32(&x, &col) + bias[j];
+            assert_eq!(matvec_col_f32(&x, &w, &bias, j).to_bits(), want.to_bits());
+            assert_eq!(
+                matvec_col_f32(&x, &w, &[], j).to_bits(),
+                dot_f32(&x, &col).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn matvec_ps_mu23_is_fma_chain_not_vectorized_path() {
+        // μ=23 PS accumulation equals the sequential FMA chain (dot_f32),
+        // which is deliberately NOT the vectorized matvec_bias_into order —
+        // the reference short-circuit, not μ=23, reproduces the fast path.
+        let mut rng = Rng::new(11);
+        let k = 33;
+        let x: Vec<f32> = (0..k).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+        let w = Matrix::randn(k, 5, 1.0, &mut rng);
+        let mut ps = vec![0.0f32; 5];
+        matvec_ps_bias_into(&x, &w, &[], 23, &mut ps);
+        for j in 0..5 {
+            let col: Vec<f32> = (0..k).map(|p| w.get(p, j)).collect();
+            assert_eq!(ps[j].to_bits(), dot_f32(&x, &col).to_bits());
+        }
     }
 
     #[test]

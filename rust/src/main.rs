@@ -3,15 +3,22 @@
 //!
 //! ```text
 //! lamp exp <fig1..fig7|table1|appendix_b|all> [--quick] [--seqs N] ...
-//! lamp serve --model xl --requests 64 --engine pjrt|native [--tier balanced]
+//! lamp serve --model xl --requests 64 --engine pjrt|native [--tier balanced-whole]
 //! lamp inspect --artifacts artifacts
-//! lamp forward --model nano --mu 4 --tau 0.1 --rule strict --engine native
+//! lamp forward --model nano --mu 4 --tau 0.1 --rule strict --engine native \
+//!     [--mlp-mu 7 --mlp-tau 0.5] [--norm-mu 10 --norm-tau 1.0] \
+//!     [--logits-mu 7 --logits-tau 0.05 --logits-rule relaxed]
 //! ```
+//!
+//! The `--mlp-*`/`--norm-*`/`--logits-*` options activate the non-attention
+//! LAMP sites of the whole-model `PrecisionPlan`; their defaults keep those
+//! sites at the FP32 reference.
 
 use lamp::benchkit::Table;
 use lamp::cli::{ArgSpec, Args, Command};
 use lamp::coordinator::{
     Engine, InferenceRequest, NativeEngine, PjrtEngine, PrecisionPolicy, Rule, Server,
+    SitePolicy,
 };
 use lamp::data::{Dataset, Domain};
 use lamp::experiments::{self, EvalOptions};
@@ -35,7 +42,11 @@ fn cli() -> Command {
                 .arg(ArgSpec::opt("model", "model config (nano|small|xl)", "small"))
                 .arg(ArgSpec::opt("engine", "native|pjrt", "pjrt"))
                 .arg(ArgSpec::opt("requests", "number of requests", "32"))
-                .arg(ArgSpec::opt("tier", "precision tier (exact|high|balanced|economy)", "balanced"))
+                .arg(ArgSpec::opt(
+                    "tier",
+                    "precision tier (exact|high|balanced|economy|balanced-whole)",
+                    "balanced",
+                ))
                 .arg(ArgSpec::opt("domain", "workload domain", "web"))
                 .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts"))
                 .arg(ArgSpec::opt("seed", "workload seed", "1")),
@@ -44,28 +55,77 @@ fn cli() -> Command {
             Command::new("inspect", "list available artifacts and model configs")
                 .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts")),
         )
-        .subcommand(
-            Command::new("generate", "autoregressive generation under a precision policy")
+        .subcommand(site_args(
+            Command::new("generate", "autoregressive generation under a precision plan")
                 .arg(ArgSpec::opt("model", "model config", "nano"))
-                .arg(ArgSpec::opt("mu", "mantissa bits", "4"))
-                .arg(ArgSpec::opt("tau", "LAMP threshold (inf = uniform)", "0.1"))
+                .arg(ArgSpec::opt("mu", "attention mantissa bits", "4"))
+                .arg(ArgSpec::opt("tau", "attention LAMP threshold (inf = uniform)", "0.1"))
                 .arg(ArgSpec::opt("rule", "strict|relaxed|relaxed_ln|random", "strict"))
                 .arg(ArgSpec::opt("new-tokens", "tokens to generate", "16"))
                 .arg(ArgSpec::opt("topk", "0 = greedy, else top-k sampling", "0"))
                 .arg(ArgSpec::opt("temperature", "sampling temperature", "1.0"))
                 .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts"))
                 .arg(ArgSpec::opt("seed", "seed", "0")),
-        )
-        .subcommand(
-            Command::new("forward", "single forward pass; prints recompute stats")
+        ))
+        .subcommand(site_args(
+            Command::new("forward", "single forward pass; prints per-site recompute stats")
                 .arg(ArgSpec::opt("model", "model config", "nano"))
                 .arg(ArgSpec::opt("engine", "native|pjrt", "native"))
-                .arg(ArgSpec::opt("mu", "mantissa bits", "4"))
-                .arg(ArgSpec::opt("tau", "LAMP threshold (inf = uniform)", "0.1"))
+                .arg(ArgSpec::opt("mu", "attention mantissa bits", "4"))
+                .arg(ArgSpec::opt("tau", "attention LAMP threshold (inf = uniform)", "0.1"))
                 .arg(ArgSpec::opt("rule", "strict|relaxed|relaxed_ln|random", "strict"))
                 .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts"))
                 .arg(ArgSpec::opt("seed", "seed", "0")),
-        )
+        ))
+}
+
+/// Attach the per-site plan options (whole-model LAMP) to a subcommand:
+/// `--<site>-mu/--<site>-tau/--<site>-rule` for the mlp, norm, and logits
+/// (sampler) sites. Defaults leave every non-attention site at the FP32
+/// reference, reproducing the attention-only engine bit for bit.
+fn site_args(mut cmd: Command) -> Command {
+    for site in ["mlp", "norm", "logits"] {
+        cmd = cmd
+            .arg(ArgSpec::opt(
+                &format!("{site}-mu"),
+                &format!("{site} site mantissa bits (23 + tau=inf -> FP32 reference)"),
+                "23",
+            ))
+            .arg(ArgSpec::opt(
+                &format!("{site}-tau"),
+                &format!("{site} site LAMP threshold (inf = uniform PS)"),
+                "inf",
+            ))
+            .arg(ArgSpec::opt(
+                &format!("{site}-rule"),
+                &format!("{site} site rule (strict|relaxed|relaxed_ln|random)"),
+                "strict",
+            ));
+    }
+    cmd
+}
+
+/// Parse one site's policy from its `--<prefix>-*` options.
+fn site_policy(args: &Args, prefix: &str) -> lamp::Result<SitePolicy> {
+    Ok(SitePolicy {
+        mu: args.get_u32(&format!("{prefix}-mu"))?,
+        tau: args.get_f32(&format!("{prefix}-tau"))?,
+        rule: Rule::by_name(&args.get_str(&format!("{prefix}-rule"))?)?,
+    })
+}
+
+/// Assemble the full per-site policy from a subcommand's options.
+fn plan_policy(args: &Args) -> lamp::Result<PrecisionPolicy> {
+    let policy = PrecisionPolicy::lamp(
+        args.get_u32("mu")?,
+        args.get_f32("tau")?,
+        Rule::by_name(&args.get_str("rule")?)?,
+    )
+    .with_mlp(site_policy(args, "mlp")?)
+    .with_norm(site_policy(args, "norm")?)
+    .with_sampler(site_policy(args, "logits")?);
+    policy.validate()?;
+    Ok(policy)
 }
 
 fn main() {
@@ -148,8 +208,10 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
     let backend = engine.backend();
 
     println!(
-        "serving {n} requests on {} ({} backend), policy mu={} tau={} rule={}",
-        cfg.name, backend, policy.mu, policy.tau, policy.rule.name()
+        "serving {n} requests on {} ({} backend), policy {}",
+        cfg.name,
+        backend,
+        policy.label()
     );
     let dataset = Dataset::generate(domain, cfg.vocab, n, cfg.seq, 7, seed);
     let mut server = Server::new(engine, std::time::Duration::from_millis(5));
@@ -213,12 +275,7 @@ fn cmd_generate(args: &Args) -> lamp::Result<()> {
     let store = ArtifactStore::open(args.get_str("artifacts")?)?;
     let engine = NativeEngine::load(&store, &model)?;
     let cfg = engine.config().clone();
-    let policy = PrecisionPolicy::lamp(
-        args.get_u32("mu")?,
-        args.get_f32("tau")?,
-        Rule::by_name(&args.get_str("rule")?)?,
-    );
-    policy.validate()?;
+    let policy = plan_policy(args)?;
     let seed = args.get_u64("seed")?;
     let k = args.get_usize("topk")?;
     let decode = if k == 0 {
@@ -229,20 +286,28 @@ fn cmd_generate(args: &Args) -> lamp::Result<()> {
     let prompt = Dataset::generate(Domain::Web, cfg.vocab, 1, cfg.seq / 4, 7, seed)
         .sequences
         .remove(0);
+    let new_tokens = args.get_usize("new-tokens")?;
     let mut sw = Stopwatch::new();
-    // KV-cache decode: O(S) new inner products per token (DESIGN.md §Perf).
-    let (tokens, rate) =
-        engine.generate(&prompt, args.get_usize("new-tokens")?, &policy, decode, seed)?;
+    // KV-cache decode: O(S) new inner products per token (DESIGN.md §Perf),
+    // through the single shared decode loop (bit-identical to serving).
+    let (tokens, stats) = lamp::model::generate_with_stats(
+        engine.weights(),
+        &prompt,
+        new_tokens,
+        engine.decode_precision(&policy),
+        decode,
+        seed,
+    )?;
     println!(
-        "generate({model}): prompt {} tokens -> {} tokens, mu={} tau={} rule={}",
+        "generate({model}): prompt {} tokens -> {} tokens, policy {}",
         prompt.len(),
         tokens.len(),
-        policy.mu,
-        policy.tau,
-        policy.rule.name()
+        policy.label()
     );
     println!("  continuation: {:?}", &tokens[prompt.len()..]);
-    println!("  recompute rate: {:.4}%", 100.0 * rate);
+    for (site, rate) in stats.site_rates() {
+        println!("  recompute rate [{site}]: {:.4}%", 100.0 * rate);
+    }
     println!("  wall: {:.3}s", sw.secs());
     sw.lap("generate");
     Ok(())
@@ -259,12 +324,7 @@ fn cmd_forward(args: &Args) -> lamp::Result<()> {
         }
     };
     let cfg = engine.config().clone();
-    let policy = PrecisionPolicy::lamp(
-        args.get_u32("mu")?,
-        args.get_f32("tau")?,
-        Rule::by_name(&args.get_str("rule")?)?,
-    );
-    policy.validate()?;
+    let policy = plan_policy(args)?;
     let seed = args.get_u64("seed")? as i32;
     let dataset = Dataset::generate(Domain::Web, cfg.vocab, cfg.batch, cfg.seq, 7, seed as u64);
     let mut sw = Stopwatch::new();
@@ -272,14 +332,12 @@ fn cmd_forward(args: &Args) -> lamp::Result<()> {
     let dt = sw.secs();
     sw.lap("forward");
     println!(
-        "forward({}, {} backend): batch={} seq={} mu={} tau={} rule={}",
+        "forward({}, {} backend): batch={} seq={} policy {}",
         cfg.name,
         engine.backend(),
         cfg.batch,
         cfg.seq,
-        policy.mu,
-        policy.tau,
-        policy.rule.name()
+        policy.label()
     );
     println!(
         "  recomputed {} / {} causal products ({:.4}%)",
@@ -287,6 +345,9 @@ fn cmd_forward(args: &Args) -> lamp::Result<()> {
         out.stats.causal_total,
         100.0 * out.stats.rate()
     );
+    for (site, rate) in out.stats.site_rates() {
+        println!("  recompute rate [{site}]: {:.4}%", 100.0 * rate);
+    }
     println!("  logits[0][0][..4] = {:?}", &out.logits[0].row(0)[..4]);
     println!("  wall: {dt:.3}s");
     Ok(())

@@ -30,10 +30,16 @@ use crate::softfloat::dot::{dot_f32, score_row_ps};
 use crate::util::{Rng, ThreadPool};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Precision policy for attention score computation.
-#[derive(Debug, Clone, Copy)]
+/// Precision configuration of one composition site: (μ, τ, rule).
+///
+/// Historically this configured attention only; with the whole-model
+/// [`PrecisionPlan`](super::plan::PrecisionPlan) the same triple now
+/// describes every LAMP site (attention scores, MLP fc→GELU, final
+/// norm, sampler softmax) — `model::plan` re-exports it as
+/// `SitePrecision`. The name is kept for the attention-first API.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AttentionPrecision {
-    /// Mantissa bits for KQ accumulation (23 = FP32).
+    /// Mantissa bits for the site's PS(μ) accumulation (23 = FP32).
     pub mu: u32,
     /// LAMP threshold; `f32::INFINITY` disables recomputation.
     pub tau: f32,
@@ -56,27 +62,93 @@ impl AttentionPrecision {
     pub fn lamp(mu: u32, tau: f32, rule: SoftmaxRule) -> Self {
         AttentionPrecision { mu, tau, rule }
     }
+
+    /// True when this site runs the exact FP32 reference computation
+    /// (μ = 23, no recomputation): the engine then dispatches to the
+    /// pre-plan fast kernels, which is what makes an all-reference
+    /// [`PrecisionPlan`](super::plan::PrecisionPlan) bit-identical to the
+    /// attention-only engine.
+    pub fn is_reference(self) -> bool {
+        self.mu == 23 && self.tau.is_infinite() && self.tau > 0.0
+    }
 }
 
-/// Recomputation statistics accumulated over a forward pass.
+/// Recompute accounting for one non-attention composition site
+/// (MLP activation, final norm, sampler softmax).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SiteStats {
+    /// Outputs recomputed in FP32 at this site.
+    pub recomputed: usize,
+    /// Total outputs the site evaluated (counted whether or not the site
+    /// was active, so rates are comparable across plans).
+    pub total: usize,
+}
+
+impl SiteStats {
+    /// Recomputation rate = recomputed / total (0 when nothing evaluated).
+    pub fn rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.recomputed as f64 / self.total as f64
+        }
+    }
+
+    /// Merge another pass's counters.
+    pub fn merge(&mut self, other: &SiteStats) {
+        self.recomputed += other.recomputed;
+        self.total += other.total;
+    }
+
+    /// Counters scaled by `s` (pro-rata padding attribution in the server).
+    pub fn scaled(&self, s: f64) -> SiteStats {
+        SiteStats {
+            recomputed: (self.recomputed as f64 * s).round() as usize,
+            total: (self.total as f64 * s).round() as usize,
+        }
+    }
+}
+
+/// Recomputation statistics accumulated over a forward pass, per
+/// composition site. The attention counters keep their historical flat
+/// names (`recomputed`/`causal_total`/`per_layer`); the sites added by the
+/// whole-model [`PrecisionPlan`](super::plan::PrecisionPlan) each get a
+/// [`SiteStats`].
 #[derive(Debug, Clone, Default)]
 pub struct LampStats {
-    /// KQ inner products recomputed in FP32.
+    /// KQ inner products recomputed in FP32 (attention site).
     pub recomputed: usize,
-    /// Total KQ inner products in the causal mask.
+    /// Total KQ inner products in the causal mask (attention site).
     pub causal_total: usize,
-    /// Per-layer recomputation counts.
+    /// Per-layer attention recomputation counts.
     pub per_layer: Vec<usize>,
+    /// MLP fc→GELU site: fc inner products repaired / evaluated.
+    pub mlp: SiteStats,
+    /// Final-norm site: residual components restored / evaluated.
+    pub norm: SiteStats,
+    /// Sampler-softmax site: logit inner products repaired / evaluated.
+    pub sampler: SiteStats,
 }
 
 impl LampStats {
-    /// Recomputation rate = recomputed / causal_total.
+    /// Attention recomputation rate = recomputed / causal_total.
     pub fn rate(&self) -> f64 {
         if self.causal_total == 0 {
             0.0
         } else {
             self.recomputed as f64 / self.causal_total as f64
         }
+    }
+
+    /// (site label, recompute rate) for every composition site, in the
+    /// fixed order attention, mlp, norm, sampler — the serving metrics key.
+    pub fn site_rates(&self) -> Vec<(String, f64)> {
+        vec![
+            ("attention".to_string(), self.rate()),
+            ("mlp".to_string(), self.mlp.rate()),
+            ("norm".to_string(), self.norm.rate()),
+            ("sampler".to_string(), self.sampler.rate()),
+        ]
     }
 
     /// Merge another pass's statistics (layer-wise aligned).
@@ -89,6 +161,9 @@ impl LampStats {
         for (i, &c) in other.per_layer.iter().enumerate() {
             self.per_layer[i] += c;
         }
+        self.mlp.merge(&other.mlp);
+        self.norm.merge(&other.norm);
+        self.sampler.merge(&other.sampler);
     }
 
     /// Account one incremental attention row (KV-cache decode): `n_keys`
@@ -452,14 +527,48 @@ mod tests {
 
     #[test]
     fn stats_rate() {
-        let mut s = LampStats { recomputed: 5, causal_total: 100, per_layer: vec![2, 3] };
+        let mut s = LampStats {
+            recomputed: 5,
+            causal_total: 100,
+            per_layer: vec![2, 3],
+            ..LampStats::default()
+        };
         assert!((s.rate() - 0.05).abs() < 1e-12);
-        let other = LampStats { recomputed: 1, causal_total: 100, per_layer: vec![0, 1, 0] };
+        let other = LampStats {
+            recomputed: 1,
+            causal_total: 100,
+            per_layer: vec![0, 1, 0],
+            mlp: SiteStats { recomputed: 3, total: 10 },
+            ..LampStats::default()
+        };
         s.merge(&other);
         assert_eq!(s.recomputed, 6);
         assert_eq!(s.causal_total, 200);
         assert_eq!(s.per_layer, vec![2, 4, 0]);
+        assert_eq!(s.mlp, SiteStats { recomputed: 3, total: 10 });
+        assert!((s.mlp.rate() - 0.3).abs() < 1e-12);
         assert_eq!(LampStats::default().rate(), 0.0);
+        assert_eq!(SiteStats::default().rate(), 0.0);
+        let rates = s.site_rates();
+        assert_eq!(rates.len(), 4);
+        assert_eq!(rates[0].0, "attention");
+        assert_eq!(rates[1], ("mlp".to_string(), 0.3));
+    }
+
+    #[test]
+    fn reference_detection() {
+        assert!(AttentionPrecision::reference().is_reference());
+        assert!(AttentionPrecision::uniform(23).is_reference());
+        assert!(!AttentionPrecision::uniform(4).is_reference());
+        assert!(!AttentionPrecision::lamp(23, 0.1, SoftmaxRule::Strict).is_reference());
+        assert!(!AttentionPrecision::lamp(4, 0.1, SoftmaxRule::Strict).is_reference());
+    }
+
+    #[test]
+    fn site_stats_scaled() {
+        let s = SiteStats { recomputed: 10, total: 100 };
+        assert_eq!(s.scaled(0.5), SiteStats { recomputed: 5, total: 50 });
+        assert_eq!(s.scaled(1.0), s);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Full GPT-2 forward pass with LAMP attention (native engine).
+//! Full GPT-2 forward pass under a whole-model [`PrecisionPlan`]
+//! (native engine).
 //!
 //! Two entry points:
 //! * [`forward`] — convenience wrapper: allocates its own scratch, runs
@@ -6,12 +7,19 @@
 //! * [`forward_with`] — the production path: reuses a caller-owned
 //!   [`ForwardScratch`] (zero heap traffic once warm) and optionally tiles
 //!   attention across a [`ThreadPool`]. Bit-identical to [`forward`] for
-//!   every precision policy — see DESIGN.md §Bit-exactness.
+//!   every precision plan — see DESIGN.md §Bit-exactness.
+//!
+//! Both take anything convertible into a [`PrecisionPlan`]; passing a bare
+//! [`AttentionPrecision`](super::attention::AttentionPrecision) yields the
+//! attention-only plan (every other site at reference), which reproduces
+//! the pre-plan engine bit for bit.
 
-use super::attention::{causal_attention_into, AttentionPrecision, LampStats};
+use super::attention::{causal_attention_into, LampStats};
 use super::config::ModelConfig;
 use super::layernorm::{layernorm, LN_EPS};
 use super::mlp::mlp_into;
+use super::plan::{logits_row_site, norm_site_row, site_row_seed, PrecisionPlan};
+use super::plan::{SITE_NORM, SITE_SAMPLER};
 use super::weights::Weights;
 use crate::error::{Error, Result};
 use crate::linalg::matmul::{matmul_bias_into, matmul_transposed_fast};
@@ -51,6 +59,8 @@ pub struct ForwardScratch {
     hidden: Matrix,
     /// MLP output [S, d].
     mlp_out: Matrix,
+    /// Quantized-row scratch for the final-norm site [d].
+    normq: Vec<f32>,
 }
 
 impl ForwardScratch {
@@ -79,6 +89,9 @@ impl ForwardScratch {
         self.proj.resize(s, d);
         self.hidden.resize(s, cfg.d_ff());
         self.mlp_out.resize(s, d);
+        if self.normq.capacity() < d {
+            self.normq.reserve(d - self.normq.len());
+        }
     }
 }
 
@@ -98,14 +111,16 @@ pub(crate) fn layer_seed(seed: u64, layer: usize) -> u64 {
 /// Run the model over one token sequence.
 ///
 /// * `tokens` — token ids; length must be ≤ `config.seq`.
-/// * `prec` — attention precision policy (μ, τ, rule).
-/// * `seed` — RNG seed for the `Random` selection rule (deterministic
-///   given (seed, layer, head, row) so runs are reproducible and
+/// * `prec` — a [`PrecisionPlan`], or anything convertible into one (a
+///   bare [`AttentionPrecision`](super::attention::AttentionPrecision)
+///   yields the attention-only plan).
+/// * `seed` — RNG seed for the `Random` selection rules (deterministic
+///   given (seed, site, layer, head, row) so runs are reproducible and
 ///   execution order is immaterial).
 pub fn forward(
     weights: &Weights,
     tokens: &[u32],
-    prec: AttentionPrecision,
+    prec: impl Into<PrecisionPlan>,
     seed: u64,
 ) -> Result<ForwardOutput> {
     let mut scratch = ForwardScratch::new();
@@ -117,11 +132,12 @@ pub fn forward(
 pub fn forward_with(
     weights: &Weights,
     tokens: &[u32],
-    prec: AttentionPrecision,
+    prec: impl Into<PrecisionPlan>,
     seed: u64,
     scratch: &mut ForwardScratch,
     pool: Option<&ThreadPool>,
 ) -> Result<ForwardOutput> {
+    let plan: PrecisionPlan = prec.into();
     let cfg: &ModelConfig = &weights.config;
     let s = tokens.len();
     if s == 0 || s > cfg.seq {
@@ -153,6 +169,7 @@ pub fn forward_with(
         recomputed: 0,
         causal_total: cfg.layers * cfg.heads * s * (s + 1) / 2,
         per_layer: vec![0; cfg.layers],
+        ..LampStats::default()
     };
 
     for (l, blk) in weights.blocks.iter().enumerate() {
@@ -174,7 +191,7 @@ pub fn forward_with(
             &scratch.k,
             &scratch.v,
             cfg.heads,
-            prec,
+            plan.attention,
             layer_seed(seed, l),
             pool,
             &mut scratch.attn,
@@ -196,15 +213,19 @@ pub fn forward_with(
         for i in 0..s {
             layernorm(scratch.xn.row_mut(i), &blk.ln2_g, &blk.ln2_b, LN_EPS);
         }
-        mlp_into(
+        let mlp_recomputed = mlp_into(
             &scratch.xn,
             &blk.w_fc,
             &blk.b_fc,
             &blk.w_out,
             &blk.b_out,
+            plan.mlp,
+            layer_seed(seed, l),
             &mut scratch.hidden,
             &mut scratch.mlp_out,
         )?;
+        stats.mlp.recomputed += mlp_recomputed;
+        stats.mlp.total += s * cfg.d_ff();
         for i in 0..s {
             let mr = scratch.mlp_out.row(i);
             let xr = scratch.x.row_mut(i);
@@ -214,12 +235,41 @@ pub fn forward_with(
         }
     }
 
-    // Final LN + tied unembedding. The logits matrix is the caller's
-    // deliverable, so it is the one allocation of the pass.
+    // Final-norm site: PS(μ) residual storage with RMS-guided restoration
+    // (no-op at reference), then the final LN.
+    if !plan.norm.is_reference() {
+        for i in 0..s {
+            stats.norm.recomputed += norm_site_row(
+                scratch.x.row_mut(i),
+                plan.norm,
+                site_row_seed(seed, SITE_NORM, i),
+                &mut scratch.normq,
+            );
+        }
+    }
+    stats.norm.total += s * d;
     for i in 0..s {
         layernorm(scratch.x.row_mut(i), &weights.lnf_g, &weights.lnf_b, LN_EPS);
     }
-    let logits = matmul_transposed_fast(&scratch.x, &weights.wte)?;
+
+    // Sampler site + tied unembedding. The logits matrix is the caller's
+    // deliverable, so it is the one allocation of the pass.
+    stats.sampler.total += s * cfg.vocab;
+    let logits = if plan.sampler.is_reference() {
+        matmul_transposed_fast(&scratch.x, &weights.wte)?
+    } else {
+        let mut m = Matrix::zeros(s, cfg.vocab);
+        for i in 0..s {
+            stats.sampler.recomputed += logits_row_site(
+                scratch.x.row(i),
+                &weights.wte,
+                plan.sampler,
+                site_row_seed(seed, SITE_SAMPLER, i),
+                m.row_mut(i),
+            );
+        }
+        m
+    };
     Ok(ForwardOutput { logits, stats })
 }
 
@@ -227,6 +277,7 @@ pub fn forward_with(
 mod tests {
     use super::*;
     use crate::lamp::softmax::SoftmaxRule;
+    use crate::model::attention::AttentionPrecision;
     use crate::util::Rng;
 
     fn nano_weights(seed: u64) -> Weights {
@@ -269,25 +320,69 @@ mod tests {
             (0..32).map(|i| (i * 11 + 2) % 128).collect(),
             vec![42],
         ];
-        for prec in [
-            AttentionPrecision::reference(),
-            AttentionPrecision::uniform(3),
-            AttentionPrecision::lamp(3, 0.02, SoftmaxRule::Strict),
-            AttentionPrecision::lamp(3, 0.05, SoftmaxRule::Random),
-        ] {
+        let plans: Vec<PrecisionPlan> = vec![
+            AttentionPrecision::reference().into(),
+            AttentionPrecision::uniform(3).into(),
+            AttentionPrecision::lamp(3, 0.02, SoftmaxRule::Strict).into(),
+            AttentionPrecision::lamp(3, 0.05, SoftmaxRule::Random).into(),
+            PrecisionPlan::whole_model(AttentionPrecision::lamp(
+                3,
+                0.1,
+                SoftmaxRule::Strict,
+            )),
+            PrecisionPlan::attention_only(AttentionPrecision::lamp(
+                3,
+                0.05,
+                SoftmaxRule::Random,
+            ))
+            .with_mlp(AttentionPrecision::lamp(4, 0.5, SoftmaxRule::Random))
+            .with_norm(AttentionPrecision::lamp(4, 0.3, SoftmaxRule::Random))
+            .with_sampler(AttentionPrecision::lamp(4, 0.1, SoftmaxRule::Random)),
+        ];
+        for plan in plans {
             for tokens in &seqs {
-                let fresh = forward(&w, tokens, prec, 9).unwrap();
+                let fresh = forward(&w, tokens, plan, 9).unwrap();
                 let reused =
-                    forward_with(&w, tokens, prec, 9, &mut scratch, None).unwrap();
+                    forward_with(&w, tokens, plan, 9, &mut scratch, None).unwrap();
                 let pooled =
-                    forward_with(&w, tokens, prec, 9, &mut scratch, Some(&pool)).unwrap();
+                    forward_with(&w, tokens, plan, 9, &mut scratch, Some(&pool)).unwrap();
                 assert_eq!(fresh.logits, reused.logits, "scratch reuse changed logits");
                 assert_eq!(fresh.logits, pooled.logits, "pool changed logits");
                 assert_eq!(fresh.stats.recomputed, reused.stats.recomputed);
                 assert_eq!(fresh.stats.recomputed, pooled.stats.recomputed);
                 assert_eq!(fresh.stats.per_layer, pooled.stats.per_layer);
+                assert_eq!(fresh.stats.mlp, pooled.stats.mlp);
+                assert_eq!(fresh.stats.norm, pooled.stats.norm);
+                assert_eq!(fresh.stats.sampler, pooled.stats.sampler);
             }
         }
+    }
+
+    #[test]
+    fn whole_model_plan_activates_every_site() {
+        let w = nano_weights(9);
+        let tokens: Vec<u32> = (0..16).map(|i| (i * 13 + 2) % 128).collect();
+        let plan = PrecisionPlan::attention_only(AttentionPrecision::lamp(
+            3,
+            0.02,
+            SoftmaxRule::Strict,
+        ))
+        .with_mlp(AttentionPrecision::lamp(3, 0.5, SoftmaxRule::Strict))
+        .with_norm(AttentionPrecision::lamp(3, 0.5, SoftmaxRule::Strict))
+        .with_sampler(AttentionPrecision::lamp(3, 0.0, SoftmaxRule::Strict));
+        let out = forward(&w, &tokens, plan, 4).unwrap();
+        let cfg = &w.config;
+        assert!(out.stats.recomputed > 0, "attention site inactive");
+        assert!(out.stats.mlp.recomputed > 0, "mlp site inactive");
+        assert!(out.stats.norm.recomputed > 0, "norm site inactive");
+        assert!(out.stats.sampler.recomputed > 0, "sampler site inactive");
+        assert_eq!(out.stats.mlp.total, cfg.layers * tokens.len() * cfg.d_ff());
+        assert_eq!(out.stats.norm.total, tokens.len() * cfg.d_model);
+        assert_eq!(out.stats.sampler.total, tokens.len() * cfg.vocab);
+        // Reference plans evaluate the same totals with zero recomputation.
+        let reference = forward(&w, &tokens, PrecisionPlan::reference(), 4).unwrap();
+        assert_eq!(reference.stats.mlp.recomputed, 0);
+        assert_eq!(reference.stats.mlp.total, out.stats.mlp.total);
     }
 
     #[test]

@@ -12,16 +12,18 @@
 //!
 //! The decode step runs the *same row kernels in the same order* as
 //! [`forward`](super::forward::forward) runs them for the last row of a
-//! full pass: `matvec_bias_into` for the projections (the row body of
+//! full pass: `matvec_bias_into` for the FP32 projections (the row body of
 //! `matmul_bias_into`), [`lamp_attention_row`] for the scores (shared with
-//! `causal_attention_into`), `dot_unrolled4` for the tied unembedding (the
-//! row body of `matmul_transposed_into`), and the same `layernorm`/GELU
-//! scalars. Attention for row `i` draws its `Random`-rule stream from
-//! `(seed, layer, head, i)` — a function of the position only — so cached
-//! rows never need re-selection. Consequently the logits produced
-//! incrementally are **bit-identical** to re-running the full forward pass
-//! over the whole prefix, for every precision policy including `Random`
-//! (verified by `rust/tests/decode_parity.rs`).
+//! `causal_attention_into`), [`mlp_row_into`] for the MLP site (shared
+//! with `mlp_into`), `norm_site_row`/`logits_row_site` for the final-norm
+//! and sampler sites (shared with the full pass), and the same
+//! `layernorm`/GELU scalars. Every site's `Random`-rule stream for row `i`
+//! is keyed by `(seed, site/layer/head, i)` — functions of the position
+//! only — so cached rows never need re-selection. Consequently the logits
+//! produced incrementally are **bit-identical** to re-running the full
+//! forward pass over the whole prefix, for every [`PrecisionPlan`]
+//! including `Random` rules (verified by `rust/tests/decode_parity.rs`
+//! and `rust/tests/plan_parity.rs`).
 //!
 //! [`LampStats`] accounting is incremental: each decoded row adds its
 //! `layers × heads × (pos + 1)` causal products once, so a session's
@@ -29,24 +31,28 @@
 //! evaluated — no double counting, unlike the re-forward loop which
 //! re-evaluates (and re-counted) the whole triangle per token.
 
-use super::attention::{lamp_attention_row, row_stream_seed, AttentionPrecision, LampStats};
+use super::attention::{lamp_attention_row, row_stream_seed, LampStats};
 use super::config::ModelConfig;
 use super::forward::layer_seed;
 use super::layernorm::{layernorm, LN_EPS};
+use super::mlp::mlp_row_into;
+use super::plan::{
+    logits_row_site, norm_site_row, site_row_seed, PrecisionPlan, SITE_MLP, SITE_NORM,
+    SITE_SAMPLER,
+};
 use super::weights::Weights;
 use crate::error::{Error, Result};
-use crate::lamp::activation::Activation;
-use crate::linalg::matmul::{dot_unrolled4, matvec_bias_into};
+use crate::linalg::matmul::matvec_bias_into;
 use crate::linalg::Matrix;
 
 /// Incremental decoding state bound to a model's weights.
 ///
 /// All buffers — caches and row scratch — are allocated once at
 /// construction; `decode_step` performs no heap allocation except the
-/// LAMP selection mask when a finite-τ policy is active.
+/// LAMP selection masks when a finite-τ site is active.
 pub struct DecodeSession<'w> {
     weights: &'w Weights,
-    prec: AttentionPrecision,
+    plan: PrecisionPlan,
     seed: u64,
     /// Number of positions already decoded (== next position index).
     pos: usize,
@@ -64,18 +70,21 @@ pub struct DecodeSession<'w> {
     hidden: Vec<f32>,
     mlp: Vec<f32>,
     scores: Vec<f32>,
+    normq: Vec<f32>,
     logits: Vec<f32>,
 }
 
 impl<'w> DecodeSession<'w> {
     /// Create a session with empty caches sized for the model's full
-    /// context window.
-    pub fn new(weights: &'w Weights, prec: AttentionPrecision, seed: u64) -> Self {
+    /// context window. `prec` is a [`PrecisionPlan`] or anything
+    /// convertible into one (a bare `AttentionPrecision` yields the
+    /// attention-only plan).
+    pub fn new(weights: &'w Weights, prec: impl Into<PrecisionPlan>, seed: u64) -> Self {
         let cfg = &weights.config;
         let d = cfg.d_model;
         DecodeSession {
             weights,
-            prec,
+            plan: prec.into(),
             seed,
             pos: 0,
             k_cache: (0..cfg.layers).map(|_| Matrix::zeros(cfg.seq, d)).collect(),
@@ -84,6 +93,7 @@ impl<'w> DecodeSession<'w> {
                 recomputed: 0,
                 causal_total: 0,
                 per_layer: vec![0; cfg.layers],
+                ..LampStats::default()
             },
             x: vec![0.0; d],
             xn: vec![0.0; d],
@@ -93,6 +103,7 @@ impl<'w> DecodeSession<'w> {
             hidden: vec![0.0; cfg.d_ff()],
             mlp: vec![0.0; d],
             scores: Vec::with_capacity(cfg.seq),
+            normq: Vec::with_capacity(d),
             logits: vec![0.0; cfg.vocab],
         }
     }
@@ -141,19 +152,20 @@ impl<'w> DecodeSession<'w> {
             recomputed: 0,
             causal_total: 0,
             per_layer: vec![0; self.weights.config.layers],
+            ..LampStats::default()
         };
         self.logits.iter_mut().for_each(|l| *l = 0.0);
     }
 
-    /// Re-bind the session to a new precision policy and seed, clearing all
+    /// Re-bind the session to a new precision plan and seed, clearing all
     /// cached state while keeping every buffer allocation — the slot-recycling
     /// primitive of the continuous-batching scheduler. A reseated session is
     /// bit-identical to a freshly constructed one: `pos` and the statistics
     /// are zeroed, and cache rows are always written before they are read
     /// (row `i` is stored by `decode_step` before attention over `0..=i`),
     /// so stale cache contents from the previous request can never leak.
-    pub fn reseat(&mut self, prec: AttentionPrecision, seed: u64) {
-        self.prec = prec;
+    pub fn reseat(&mut self, prec: impl Into<PrecisionPlan>, seed: u64) {
+        self.plan = prec.into();
         self.seed = seed;
         self.reset();
     }
@@ -216,7 +228,7 @@ impl<'w> DecodeSession<'w> {
                     off,
                     i + 1,
                     scale,
-                    self.prec,
+                    self.plan.attention,
                     row_stream_seed(lseed, h, i),
                     &mut self.scores,
                     &mut self.attn[off..off + hd],
@@ -229,24 +241,49 @@ impl<'w> DecodeSession<'w> {
                 self.x[c] += self.proj[c];
             }
 
-            // --- MLP sublayer (pre-LN), one row. ---
+            // --- MLP sublayer (pre-LN), one row — the shared site kernel,
+            // bit-identical to the full pass's row (DESIGN.md). ---
             self.xn.copy_from_slice(&self.x);
             layernorm(&mut self.xn, &blk.ln2_g, &blk.ln2_b, LN_EPS);
-            matvec_bias_into(&self.xn, &blk.w_fc, &blk.b_fc, &mut self.hidden);
-            for hval in &mut self.hidden {
-                *hval = Activation::Gelu.apply(*hval);
-            }
-            matvec_bias_into(&self.hidden, &blk.w_out, &blk.b_out, &mut self.mlp);
+            let mlp_recomputed = mlp_row_into(
+                &self.xn,
+                &blk.w_fc,
+                &blk.b_fc,
+                &blk.w_out,
+                &blk.b_out,
+                self.plan.mlp,
+                site_row_seed(lseed, SITE_MLP, i),
+                &mut self.hidden,
+                &mut self.mlp,
+            );
+            self.stats.mlp.recomputed += mlp_recomputed;
+            self.stats.mlp.total += cfg.d_ff();
             for c in 0..d {
                 self.x[c] += self.mlp[c];
             }
         }
 
-        // Final LN + tied unembedding row.
-        layernorm(&mut self.x, &self.weights.lnf_g, &self.weights.lnf_b, LN_EPS);
-        for (j, lo) in self.logits.iter_mut().enumerate() {
-            *lo = dot_unrolled4(&self.x, self.weights.wte.row(j));
+        // Final-norm site (no-op at reference), then the final LN.
+        if !self.plan.norm.is_reference() {
+            self.stats.norm.recomputed += norm_site_row(
+                &mut self.x,
+                self.plan.norm,
+                site_row_seed(self.seed, SITE_NORM, i),
+                &mut self.normq,
+            );
         }
+        self.stats.norm.total += d;
+        layernorm(&mut self.x, &self.weights.lnf_g, &self.weights.lnf_b, LN_EPS);
+
+        // Sampler site + tied unembedding row.
+        self.stats.sampler.recomputed += logits_row_site(
+            &self.x,
+            &self.weights.wte,
+            self.plan.sampler,
+            site_row_seed(self.seed, SITE_SAMPLER, i),
+            &mut self.logits,
+        );
+        self.stats.sampler.total += cfg.vocab;
         self.pos = i + 1;
         Ok(())
     }
@@ -256,6 +293,7 @@ impl<'w> DecodeSession<'w> {
 mod tests {
     use super::*;
     use crate::lamp::softmax::SoftmaxRule;
+    use crate::model::attention::AttentionPrecision;
     use crate::model::forward::forward;
     use crate::util::Rng;
 
@@ -264,13 +302,25 @@ mod tests {
         Weights::random(&ModelConfig::nano(), &mut rng)
     }
 
-    fn precs() -> Vec<AttentionPrecision> {
+    fn plans() -> Vec<PrecisionPlan> {
         vec![
-            AttentionPrecision::reference(),
-            AttentionPrecision::uniform(3),
-            AttentionPrecision::lamp(3, 0.02, SoftmaxRule::Strict),
-            AttentionPrecision::lamp(3, 0.1, SoftmaxRule::Relaxed),
-            AttentionPrecision::lamp(3, 0.05, SoftmaxRule::Random),
+            AttentionPrecision::reference().into(),
+            AttentionPrecision::uniform(3).into(),
+            AttentionPrecision::lamp(3, 0.02, SoftmaxRule::Strict).into(),
+            AttentionPrecision::lamp(3, 0.1, SoftmaxRule::Relaxed).into(),
+            AttentionPrecision::lamp(3, 0.05, SoftmaxRule::Random).into(),
+            // Whole-model plans: every non-attention site active, both
+            // deterministic and Random rules.
+            PrecisionPlan::whole_model(AttentionPrecision::lamp(3, 0.1, SoftmaxRule::Strict)),
+            PrecisionPlan::attention_only(AttentionPrecision::lamp(
+                3,
+                0.05,
+                SoftmaxRule::Random,
+            ))
+            .with_mlp(AttentionPrecision::lamp(4, 0.5, SoftmaxRule::Random))
+            .with_norm(AttentionPrecision::lamp(4, 0.3, SoftmaxRule::Random))
+            .with_sampler(AttentionPrecision::lamp(4, 0.05, SoftmaxRule::Random)),
+            PrecisionPlan::reference().with_norm(AttentionPrecision::uniform(4)),
         ]
     }
 
@@ -278,15 +328,15 @@ mod tests {
     fn incremental_logits_match_full_forward_bitwise() {
         // Every step's logits must equal the corresponding row of a full
         // forward pass over the same prefix — the KV cache's defining
-        // property. Holds bitwise for all rules (Random streams are a
-        // function of position, not of evaluation order).
+        // property. Holds bitwise for every plan and rule (all site
+        // streams are functions of position, not of evaluation order).
         let w = nano_weights(1);
         let tokens: Vec<u32> = (0..14).map(|i| (i * 17 + 5) % 128).collect();
-        for prec in precs() {
-            let mut session = DecodeSession::new(&w, prec, 42);
+        for plan in plans() {
+            let mut session = DecodeSession::new(&w, plan, 42);
             for (i, &t) in tokens.iter().enumerate() {
                 session.decode_step(t).unwrap();
-                let full = forward(&w, &tokens[..=i], prec, 42).unwrap();
+                let full = forward(&w, &tokens[..=i], plan, 42).unwrap();
                 let want = full.logits.row(i);
                 let got = session.logits();
                 assert_eq!(got.len(), want.len());
@@ -294,9 +344,7 @@ mod tests {
                     assert_eq!(
                         a.to_bits(),
                         b.to_bits(),
-                        "step {i} col {c} diverges (mu={} tau={})",
-                        prec.mu,
-                        prec.tau
+                        "step {i} col {c} diverges under {plan:?}"
                     );
                 }
             }
@@ -306,8 +354,12 @@ mod tests {
     #[test]
     fn stats_count_each_product_once() {
         let w = nano_weights(2);
-        let prec = AttentionPrecision::lamp(3, 0.01, SoftmaxRule::Strict);
-        let mut session = DecodeSession::new(&w, prec, 0);
+        let plan = PrecisionPlan::whole_model(AttentionPrecision::lamp(
+            3,
+            0.01,
+            SoftmaxRule::Strict,
+        ));
+        let mut session = DecodeSession::new(&w, plan, 0);
         session.prefill(&[1, 2, 3, 4, 5]).unwrap();
         let cfg = &w.config;
         assert_eq!(session.len(), 5);
@@ -317,10 +369,16 @@ mod tests {
         );
         assert!(session.stats().recomputed > 0);
         assert_eq!(session.stats().per_layer.len(), cfg.layers);
-        let full = forward(&w, &[1, 2, 3, 4, 5], prec, 0).unwrap();
-        // Same products evaluated once ⇒ identical counts to one full pass.
+        let full = forward(&w, &[1, 2, 3, 4, 5], plan, 0).unwrap();
+        // Same products evaluated once ⇒ identical counts to one full
+        // pass, at every site.
         assert_eq!(session.stats().recomputed, full.stats.recomputed);
         assert_eq!(session.stats().per_layer, full.stats.per_layer);
+        assert_eq!(session.stats().mlp, full.stats.mlp);
+        assert_eq!(session.stats().norm, full.stats.norm);
+        assert_eq!(session.stats().sampler, full.stats.sampler);
+        assert_eq!(session.stats().mlp.total, cfg.layers * 5 * cfg.d_ff());
+        assert_eq!(session.stats().sampler.total, 5 * cfg.vocab);
     }
 
     #[test]
@@ -342,8 +400,8 @@ mod tests {
         // rule — including Random, whose streams depend on the new seed.
         let w = nano_weights(5);
         let tokens = [3u32, 7, 11, 2, 9];
-        for prec_a in precs() {
-            for prec_b in precs() {
+        for prec_a in plans() {
+            for prec_b in plans() {
                 let mut recycled = DecodeSession::new(&w, prec_a, 1);
                 recycled.prefill(&[8, 6, 4]).unwrap();
                 recycled.reseat(prec_b, 77);
@@ -362,6 +420,9 @@ mod tests {
                 }
                 assert_eq!(recycled.stats().recomputed, fresh.stats().recomputed);
                 assert_eq!(recycled.stats().per_layer, fresh.stats().per_layer);
+                assert_eq!(recycled.stats().mlp, fresh.stats().mlp);
+                assert_eq!(recycled.stats().norm, fresh.stats().norm);
+                assert_eq!(recycled.stats().sampler, fresh.stats().sampler);
             }
         }
     }

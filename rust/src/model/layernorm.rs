@@ -1,5 +1,9 @@
-//! Layer normalization (FP32, as in the paper's experimental setting where
-//! only KQ accumulation runs in PS(μ)).
+//! Layer normalization. The normalization arithmetic itself always runs in
+//! FP32 (f64 moments); what whole-model LAMP varies is the *input* to the
+//! final norm — under an active [`PrecisionPlan`](super::plan::PrecisionPlan)
+//! `norm` site, `model::plan::norm_site_row` stores the residual row in
+//! PS(μ) and restores the components the RMS-norm greedy solver (§3.2)
+//! selects before this function sees them.
 
 /// y = g ⊙ (x − mean)/√(var + ε) + b, applied in place over one vector.
 pub fn layernorm(x: &mut [f32], g: &[f32], b: &[f32], eps: f32) {

@@ -1,50 +1,179 @@
-//! GPT-2 MLP block: fc → GELU → out, FP32.
+//! GPT-2 MLP block: fc → GELU → out — a whole-model LAMP composition site.
+//!
+//! Under the [`PrecisionPlan`](super::plan::PrecisionPlan)'s MLP site, the
+//! fc and proj matmuls accumulate in PS(μ) with per-step rounding
+//! ([`matvec_ps_bias_into`]) and the GELU ∘ fc composition is repaired by
+//! look-ahead recomputation (paper §3.1): the diagonal sensitivity
+//! `|φ′(ŷ)·ŷ/φ(ŷ)|` of the *low-precision* pre-activations flags the
+//! hidden units whose fc inner products are recomputed in FP32
+//! ([`matvec_col_f32`]) before the nonlinearity. The proj matmul has no
+//! downstream nonlinearity to guide a selection, so it runs uniform PS(μ).
+//! A reference site (μ=23, τ=∞) short-circuits to the vectorized FP32
+//! path, bit-identical to the pre-plan engine.
 
-use crate::error::Result;
-use crate::lamp::activation::Activation;
-use crate::linalg::matmul::matmul_bias_into;
+use crate::error::{Error, Result};
+use crate::lamp::activation::{select_activation_rule, Activation};
+use crate::linalg::matmul::{
+    matmul_bias_into, matvec_bias_into, matvec_col_f32, matvec_ps_bias_into,
+};
 use crate::linalg::Matrix;
+use crate::model::plan::{site_row_seed, SitePrecision, SITE_MLP};
+use crate::util::Rng;
+
+/// One row of the MLP sublayer under the plan's MLP site, writing the
+/// hidden pre-activations and the output row into caller-owned scratch.
+/// Shared by the batched [`mlp_into`] and the KV-cache decode step, which
+/// runs the identical op sequence on its single row — that shared kernel
+/// is what keeps incremental decode bit-identical to the full pass under
+/// every plan (DESIGN.md §Bit-exactness). `row_seed` feeds the `Random`
+/// rule's stream and must be a function of the row's position only.
+///
+/// Returns the number of fc inner products recomputed in FP32.
+#[allow(clippy::too_many_arguments)]
+pub fn mlp_row_into(
+    xn: &[f32],
+    w_fc: &Matrix,
+    b_fc: &[f32],
+    w_out: &Matrix,
+    b_out: &[f32],
+    site: SitePrecision,
+    row_seed: u64,
+    hidden: &mut [f32],
+    out: &mut [f32],
+) -> usize {
+    debug_assert_eq!(xn.len(), w_fc.rows());
+    debug_assert_eq!(hidden.len(), w_fc.cols());
+    debug_assert_eq!(out.len(), w_out.cols());
+    if site.is_reference() {
+        matvec_bias_into(xn, w_fc, b_fc, hidden);
+        for h in hidden.iter_mut() {
+            *h = Activation::Gelu.apply(*h);
+        }
+        matvec_bias_into(hidden, w_out, b_out, out);
+        return 0;
+    }
+    // Step 1: PS(μ) accumulation of the fc pre-activations.
+    matvec_ps_bias_into(xn, w_fc, b_fc, site.mu, hidden);
+    // Steps 2–3: closed-form activation selection + FP32 recomputation.
+    let mut recomputed = 0;
+    if site.tau.is_finite() {
+        let mut rng = Rng::new(row_seed);
+        let mask =
+            select_activation_rule(hidden, Activation::Gelu, site.tau, site.rule, &mut rng);
+        for (j, &m) in mask.iter().enumerate() {
+            if m {
+                hidden[j] = matvec_col_f32(xn, w_fc, b_fc, j);
+                recomputed += 1;
+            }
+        }
+    }
+    // Step 4: the nonlinearity, then the (uniform PS) output projection.
+    for h in hidden.iter_mut() {
+        *h = Activation::Gelu.apply(*h);
+    }
+    matvec_ps_bias_into(hidden, w_out, b_out, site.mu, out);
+    recomputed
+}
 
 /// y = GELU(x·W_fc + b_fc)·W_out + b_out into reusable `hidden`/`out`
-/// buffers (resized as needed; allocation-free once warm).
+/// buffers (resized as needed; allocation-free once warm except the
+/// selection mask when a finite-τ site is active).
 ///
-/// FP32 path (not part of the simulated PS(μ) arithmetic) — uses the
-/// vectorized matmul; see DESIGN.md §Perf.
+/// `site` selects the arithmetic: the reference site runs the vectorized
+/// FP32 matmuls; otherwise every row goes through [`mlp_row_into`]'s PS(μ)
+/// + LAMP-repair kernel with per-row `Random` streams derived from `seed`
+/// (the caller folds the layer index in first — see `forward::layer_seed`).
+///
+/// Returns the number of fc inner products recomputed in FP32.
+#[allow(clippy::too_many_arguments)]
 pub fn mlp_into(
     x: &Matrix,
     w_fc: &Matrix,
     b_fc: &[f32],
     w_out: &Matrix,
     b_out: &[f32],
+    site: SitePrecision,
+    seed: u64,
     hidden: &mut Matrix,
     out: &mut Matrix,
-) -> Result<()> {
-    debug_assert_eq!(w_fc.rows(), x.cols());
-    debug_assert_eq!(w_out.shape(), (w_fc.cols(), x.cols()));
-    matmul_bias_into(x, w_fc, b_fc, hidden)?;
-    for h in hidden.data_mut() {
-        *h = Activation::Gelu.apply(*h);
+) -> Result<usize> {
+    if x.cols() != w_fc.rows() || w_out.rows() != w_fc.cols() {
+        return Err(Error::shape(format!(
+            "mlp: x {:?} x w_fc {:?} x w_out {:?}",
+            x.shape(),
+            w_fc.shape(),
+            w_out.shape()
+        )));
     }
-    matmul_bias_into(hidden, w_out, b_out, out)
+    if (!b_fc.is_empty() && b_fc.len() != w_fc.cols())
+        || (!b_out.is_empty() && b_out.len() != w_out.cols())
+    {
+        return Err(Error::shape(format!(
+            "mlp: bias lengths {}/{} vs widths {}/{}",
+            b_fc.len(),
+            b_out.len(),
+            w_fc.cols(),
+            w_out.cols()
+        )));
+    }
+    if site.is_reference() {
+        matmul_bias_into(x, w_fc, b_fc, hidden)?;
+        for h in hidden.data_mut() {
+            *h = Activation::Gelu.apply(*h);
+        }
+        matmul_bias_into(hidden, w_out, b_out, out)?;
+        return Ok(0);
+    }
+    let s = x.rows();
+    hidden.resize(s, w_fc.cols());
+    out.resize(s, w_out.cols());
+    let mut recomputed = 0;
+    for i in 0..s {
+        recomputed += mlp_row_into(
+            x.row(i),
+            w_fc,
+            b_fc,
+            w_out,
+            b_out,
+            site,
+            site_row_seed(seed, SITE_MLP, i),
+            hidden.row_mut(i),
+            out.row_mut(i),
+        );
+    }
+    Ok(recomputed)
 }
 
-/// Allocating wrapper around [`mlp_into`].
+/// Allocating wrapper around [`mlp_into`] at the reference FP32 site:
+/// seeds real-shape buffers up front and surfaces shape errors as a
+/// `Result` instead of panicking.
 pub fn mlp(
     x: &Matrix,
     w_fc: &Matrix,
     b_fc: &[f32],
     w_out: &Matrix,
     b_out: &[f32],
-) -> Matrix {
-    let mut hidden = Matrix::zeros(0, 0);
-    let mut out = Matrix::zeros(0, 0);
-    mlp_into(x, w_fc, b_fc, w_out, b_out, &mut hidden, &mut out).expect("mlp shapes");
-    out
+) -> Result<Matrix> {
+    let mut hidden = Matrix::zeros(x.rows(), w_fc.cols());
+    let mut out = Matrix::zeros(x.rows(), w_out.cols());
+    mlp_into(
+        x,
+        w_fc,
+        b_fc,
+        w_out,
+        b_out,
+        SitePrecision::reference(),
+        0,
+        &mut hidden,
+        &mut out,
+    )?;
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lamp::softmax::SoftmaxRule;
     use crate::util::Rng;
 
     #[test]
@@ -53,8 +182,20 @@ mod tests {
         let x = Matrix::randn(3, 8, 1.0, &mut rng);
         let w_fc = Matrix::randn(8, 32, 0.1, &mut rng);
         let w_out = Matrix::randn(32, 8, 0.1, &mut rng);
-        let y = mlp(&x, &w_fc, &vec![0.0; 32], &w_out, &vec![0.0; 8]);
+        let y = mlp(&x, &w_fc, &vec![0.0; 32], &w_out, &vec![0.0; 8]).unwrap();
         assert_eq!(y.shape(), (3, 8));
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error_not_a_panic() {
+        let x = Matrix::zeros(2, 4);
+        let w_fc = Matrix::zeros(5, 16); // 4 != 5
+        let w_out = Matrix::zeros(16, 4);
+        assert!(mlp(&x, &w_fc, &[], &w_out, &[]).is_err());
+        let w_fc = Matrix::zeros(4, 16);
+        let w_out_bad = Matrix::zeros(8, 4); // 16 != 8
+        assert!(mlp(&x, &w_fc, &[], &w_out_bad, &[]).is_err());
+        assert!(mlp(&x, &w_fc, &[0.0; 3], &w_out, &[]).is_err(), "bad bias length");
     }
 
     #[test]
@@ -63,7 +204,7 @@ mod tests {
         let w_fc = Matrix::zeros(4, 16);
         let w_out = Matrix::zeros(16, 4);
         let b_out = vec![1.5f32; 4];
-        let y = mlp(&x, &w_fc, &vec![0.0; 16], &w_out, &b_out);
+        let y = mlp(&x, &w_fc, &vec![0.0; 16], &w_out, &b_out).unwrap();
         for i in 0..2 {
             for j in 0..4 {
                 assert_eq!(y.get(i, j), 1.5);
@@ -77,7 +218,83 @@ mod tests {
         let x = Matrix::from_vec(1, 1, vec![1.0]).unwrap();
         let w_fc = Matrix::from_vec(1, 1, vec![1.0]).unwrap();
         let w_out = Matrix::from_vec(1, 1, vec![1.0]).unwrap();
-        let y = mlp(&x, &w_fc, &[0.0], &w_out, &[0.0]);
+        let y = mlp(&x, &w_fc, &[0.0], &w_out, &[0.0]).unwrap();
         assert!((y.get(0, 0) - 0.8412).abs() < 1e-3, "{}", y.get(0, 0));
+    }
+
+    fn setup(s: usize) -> (Matrix, Matrix, Vec<f32>, Matrix, Vec<f32>) {
+        let mut rng = Rng::new(5);
+        let d = 8;
+        let ff = 32;
+        (
+            Matrix::randn(s, d, 1.0, &mut rng),
+            Matrix::randn(d, ff, 0.4, &mut rng),
+            (0..ff).map(|_| rng.normal_f32() * 0.1).collect(),
+            Matrix::randn(ff, d, 0.4, &mut rng),
+            (0..d).map(|_| rng.normal_f32() * 0.1).collect(),
+        )
+    }
+
+    #[test]
+    fn batched_site_path_matches_row_kernel_bitwise() {
+        let (x, w_fc, b_fc, w_out, b_out) = setup(5);
+        for site in [
+            SitePrecision::reference(),
+            SitePrecision::uniform(3),
+            SitePrecision::lamp(3, 0.5, SoftmaxRule::Strict),
+            SitePrecision::lamp(3, 0.5, SoftmaxRule::Random),
+        ] {
+            let mut hidden = Matrix::zeros(0, 0);
+            let mut out = Matrix::zeros(0, 0);
+            let rec =
+                mlp_into(&x, &w_fc, &b_fc, &w_out, &b_out, site, 9, &mut hidden, &mut out)
+                    .unwrap();
+            let mut rec_rows = 0;
+            for i in 0..5 {
+                let mut h = vec![0.0f32; 32];
+                let mut o = vec![0.0f32; 8];
+                rec_rows += mlp_row_into(
+                    x.row(i),
+                    &w_fc,
+                    &b_fc,
+                    &w_out,
+                    &b_out,
+                    site,
+                    site_row_seed(9, SITE_MLP, i),
+                    &mut h,
+                    &mut o,
+                );
+                for (c, (&a, &b)) in out.row(i).iter().zip(&o).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "row {i} col {c}");
+                }
+            }
+            assert_eq!(rec, rec_rows);
+        }
+    }
+
+    #[test]
+    fn lamp_repair_reduces_deviation_from_reference() {
+        let (x, w_fc, b_fc, w_out, b_out) = setup(6);
+        let run = |site: SitePrecision| -> (Matrix, usize) {
+            let mut hidden = Matrix::zeros(0, 0);
+            let mut out = Matrix::zeros(0, 0);
+            let rec =
+                mlp_into(&x, &w_fc, &b_fc, &w_out, &b_out, site, 3, &mut hidden, &mut out)
+                    .unwrap();
+            (out, rec)
+        };
+        let (reference, r0) = run(SitePrecision::reference());
+        assert_eq!(r0, 0);
+        let (uniform, ru) = run(SitePrecision::uniform(2));
+        assert_eq!(ru, 0);
+        let (lamp, rl) = run(SitePrecision::lamp(2, 0.0, SoftmaxRule::Strict));
+        assert!(rl > 0, "tau=0 must recompute the sensitive units");
+        let e_uni = uniform.max_abs_diff(&reference).unwrap();
+        let e_lamp = lamp.max_abs_diff(&reference).unwrap();
+        assert!(e_uni > 0.0, "PS(2) must perturb the MLP output");
+        assert!(
+            e_lamp < e_uni,
+            "activation LAMP must reduce the deviation: lamp={e_lamp} uniform={e_uni}"
+        );
     }
 }

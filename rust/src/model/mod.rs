@@ -1,16 +1,27 @@
-//! GPT-2-architecture transformer with LAMP mixed-precision attention —
+//! GPT-2-architecture transformer with whole-model LAMP mixed precision —
 //! the **native engine**.
 //!
 //! This is a bit-exact Rust implementation of the same computation the L2
-//! JAX model (`python/compile/model.py`) lowers to HLO: pre-LN GPT-2 blocks
-//! whose key-query inner products are accumulated in PS(μ) with per-step
-//! rounding (paper §4.1) and selectively recomputed in FP32 according to a
-//! LAMP rule (§3.3/§4.4). Everything else runs in FP32, exactly as the
-//! paper's experimental setting prescribes.
+//! JAX model (`python/compile/model.py`) lowers to HLO: pre-LN GPT-2
+//! blocks whose compositions f(g(x)) run low precision with look-ahead
+//! repair according to a per-site [`PrecisionPlan`]:
+//!
+//! * key-query inner products accumulated in PS(μ) with per-step rounding
+//!   (paper §4.1) and selectively recomputed in FP32 by a softmax LAMP
+//!   rule (§3.3/§4.4) — the attention site;
+//! * MLP fc/proj matmuls in PS(μ) with GELU-sensitivity-guided fc repair
+//!   (§3.1) — the mlp site;
+//! * the final residual stored in PS(μ) with RMS-norm-guided restoration
+//!   (§3.2) — the norm site;
+//! * logit inner products in PS(μ) with softmax-rule repair over the
+//!   sampling distribution — the sampler site.
+//!
+//! A plan whose non-attention sites are all at reference reproduces the
+//! paper's attention-only experimental setting bit for bit.
 //!
 //! The native engine exists for three reasons:
 //! 1. *parity testing* — the PJRT engine is validated against it;
-//! 2. *instrumentation* — per-layer/per-head recomputation statistics;
+//! 2. *instrumentation* — per-layer/per-site recomputation statistics;
 //! 3. *fast sweeps* — the experiment harness evaluates hundreds of (μ, τ)
 //!    points without FFI round trips.
 
@@ -21,12 +32,14 @@ pub mod kvcache;
 pub mod layernorm;
 pub mod loss;
 pub mod mlp;
+pub mod plan;
 pub mod sampler;
 pub mod weights;
 
-pub use attention::{AttentionPrecision, LampStats};
+pub use attention::{AttentionPrecision, LampStats, SiteStats};
 pub use config::ModelConfig;
 pub use forward::{forward, forward_with, ForwardOutput, ForwardScratch};
 pub use kvcache::DecodeSession;
-pub use sampler::{generate, generate_reforward, Decode};
+pub use plan::{PrecisionPlan, SitePrecision};
+pub use sampler::{generate, generate_reforward, generate_with_stats, Decode};
 pub use weights::Weights;

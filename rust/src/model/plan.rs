@@ -1,0 +1,467 @@
+//! The whole-model precision plan: one (μ, τ, rule) per composition site.
+//!
+//! The paper's claim is that look-ahead recomputation applies to *every*
+//! composition f(g(x)) in a transformer — softmax ∘ matmul (§3.3),
+//! entrywise activations ∘ matmul (§3.1), and normalization ∘ residual
+//! (§3.2). A [`PrecisionPlan`] threads all of them through one value:
+//!
+//! * **attention** — per-(head, row) KQ scores accumulated in PS(μ), the
+//!   softmax selection rule flags products for FP32 recomputation
+//!   (`model::attention`, unchanged semantics).
+//! * **mlp** — the fc and proj matmuls accumulate in PS(μ)
+//!   ([`crate::linalg::matmul::matvec_ps_bias_into`]); the GELU
+//!   sensitivity closed form (§3.1, [`crate::lamp::activation`]) flags
+//!   hidden pre-activations whose fc inner products are recomputed in
+//!   FP32 before the nonlinearity. The proj matmul has no downstream
+//!   nonlinearity to guide a selection, so it runs uniform PS(μ).
+//! * **norm** — the final residual row is stored in PS(μ) (simulated
+//!   low-precision activation storage); the RMS-norm greedy solver
+//!   (§3.2, [`crate::lamp::rmsnorm::select_rmsnorm`]) picks the
+//!   components restored to full FP32 before the final layernorm. The
+//!   RMS sensitivity is used as the selection surrogate for GPT-2's
+//!   mean-subtracted layernorm — the κ_c it bounds is the RMS one.
+//! * **sampler** — the tied-unembedding logit dots accumulate in PS(μ)
+//!   ([`crate::softfloat::dot::dot_ps`] over the contiguous `wte` rows);
+//!   the softmax selection rule applied to the logits row (the sampling
+//!   distribution is a softmax) flags logits recomputed in FP32.
+//!
+//! A site whose precision [`is_reference`](SitePrecision::is_reference)
+//! short-circuits to the exact pre-plan FP32 kernels, which is what makes
+//! an all-reference plan reproduce the attention-only engine **bit for
+//! bit** (enforced by `rust/tests/plan_parity.rs`).
+//!
+//! ## Decode parity
+//!
+//! Every site kernel is row-local and keys its `Random`-rule stream by
+//! `(seed, site, position)` ([`site_row_seed`]) — functions of the request
+//! and the position, never of the schedule — so KV-cache decode stays
+//! bit-identical to the full forward pass under every plan (DESIGN.md
+//! §Bit-exactness).
+
+use super::attention::AttentionPrecision;
+use crate::error::{Error, Result};
+use crate::lamp::rmsnorm::select_rmsnorm;
+use crate::lamp::softmax::{random_mask, select_softmax, SoftmaxRule};
+use crate::linalg::matmul::dot_unrolled4;
+use crate::linalg::Matrix;
+use crate::softfloat::dot::{dot_f32, dot_ps};
+use crate::softfloat::round::round_to_mantissa;
+use crate::util::Rng;
+
+/// Per-site precision configuration — the same (μ, τ, rule) triple the
+/// attention-only engine used, now one per composition site.
+pub type SitePrecision = AttentionPrecision;
+
+/// Per-composition-site precision configuration for one forward pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrecisionPlan {
+    /// Attention-score site (softmax ∘ KQ matmul), per layer and head.
+    pub attention: SitePrecision,
+    /// MLP site (GELU ∘ fc matmul; proj matmul uniform PS), per layer.
+    pub mlp: SitePrecision,
+    /// Final-norm site (layernorm ∘ residual storage), once per row.
+    pub norm: SitePrecision,
+    /// Sampler site (softmax ∘ logits matmul), once per row.
+    pub sampler: SitePrecision,
+}
+
+impl PrecisionPlan {
+    /// Full FP32 reference at every site — bit-identical to the
+    /// pre-plan engine.
+    pub fn reference() -> Self {
+        PrecisionPlan {
+            attention: SitePrecision::reference(),
+            mlp: SitePrecision::reference(),
+            norm: SitePrecision::reference(),
+            sampler: SitePrecision::reference(),
+        }
+    }
+
+    /// LAMP at the attention site only; every other site at reference —
+    /// the exact semantics of the pre-plan `AttentionPrecision` knob.
+    pub fn attention_only(attention: SitePrecision) -> Self {
+        PrecisionPlan { attention, ..Self::reference() }
+    }
+
+    /// The same (μ, τ, rule) at every composition site.
+    pub fn whole_model(site: SitePrecision) -> Self {
+        PrecisionPlan { attention: site, mlp: site, norm: site, sampler: site }
+    }
+
+    /// Replace the MLP site.
+    pub fn with_mlp(mut self, site: SitePrecision) -> Self {
+        self.mlp = site;
+        self
+    }
+
+    /// Replace the final-norm site.
+    pub fn with_norm(mut self, site: SitePrecision) -> Self {
+        self.norm = site;
+        self
+    }
+
+    /// Replace the sampler site.
+    pub fn with_sampler(mut self, site: SitePrecision) -> Self {
+        self.sampler = site;
+        self
+    }
+
+    /// True when every non-attention site is at reference (the plan is
+    /// expressible by the pre-plan attention knob).
+    pub fn is_attention_only(&self) -> bool {
+        self.mlp.is_reference() && self.norm.is_reference() && self.sampler.is_reference()
+    }
+
+    /// Validate every site's ranges — the single source of truth
+    /// (`coordinator::PrecisionPolicy::validate` delegates here): μ ∈
+    /// 1..=23, τ ≥ 0 and not NaN everywhere; for the softmax-composition
+    /// sites (attention, sampler) the relaxed rules' relative threshold
+    /// must additionally satisfy τ < 1 (mlp/norm thresholds are absolute
+    /// sensitivities). Typed errors name the offending site so invalid
+    /// plans are rejected at the front door instead of panicking
+    /// downstream.
+    pub fn validate(&self) -> Result<()> {
+        for (name, site, relative_rules) in [
+            ("attention", &self.attention, true),
+            ("mlp", &self.mlp, false),
+            ("norm", &self.norm, false),
+            ("sampler", &self.sampler, true),
+        ] {
+            validate_site(site, name, relative_rules)?;
+            // Length normalization (App. C.5) is defined over the causal
+            // row lengths of attention; every other site sees fixed-width
+            // rows (d_ff / d / vocab), where τ·√(ref_len/n) degenerates to
+            // a constant rescale by an unrelated dimension. Reject early
+            // rather than silently mis-scaling the user's τ.
+            if name != "attention"
+                && matches!(site.rule, SoftmaxRule::RelaxedLengthNorm { .. })
+            {
+                return Err(Error::config(format!(
+                    "plan site {name}: the length-normalized rule applies to the \
+                     attention site only"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Range checks for one site; `relative_rules` enables the τ < 1 check for
+/// the softmax-style relaxed rules.
+fn validate_site(site: &SitePrecision, name: &str, relative_rules: bool) -> Result<()> {
+    if !(1..=23).contains(&site.mu) {
+        return Err(Error::config(format!(
+            "plan site {name}: mu {} out of 1..=23",
+            site.mu
+        )));
+    }
+    if site.tau.is_nan() {
+        return Err(Error::config(format!(
+            "plan site {name}: tau must not be NaN"
+        )));
+    }
+    if site.tau < 0.0 {
+        return Err(Error::config(format!(
+            "plan site {name}: tau {} must be >= 0",
+            site.tau
+        )));
+    }
+    if relative_rules
+        && matches!(
+            site.rule,
+            SoftmaxRule::Relaxed | SoftmaxRule::RelaxedLengthNorm { .. }
+        )
+        && site.tau.is_finite()
+        && site.tau >= 1.0
+    {
+        return Err(Error::config(format!(
+            "plan site {name}: relative threshold tau {} must be < 1 for relaxed rules",
+            site.tau
+        )));
+    }
+    Ok(())
+}
+
+impl Default for PrecisionPlan {
+    fn default() -> Self {
+        Self::reference()
+    }
+}
+
+impl From<AttentionPrecision> for PrecisionPlan {
+    /// The migration shim: anywhere the engine used to take the single
+    /// attention knob, passing it now yields the attention-only plan.
+    fn from(attention: AttentionPrecision) -> Self {
+        PrecisionPlan::attention_only(attention)
+    }
+}
+
+/// Site ids folded into the per-row RNG stream derivation. Attention keeps
+/// its own `(seed, layer, head, row)` scheme (`attention::row_stream_seed`).
+pub(crate) const SITE_MLP: u64 = 1;
+pub(crate) const SITE_NORM: u64 = 2;
+pub(crate) const SITE_SAMPLER: u64 = 3;
+
+/// Derive the private RNG stream id for one (seed, site, row) triple —
+/// the non-attention analogue of `attention::row_stream_seed`. The stream
+/// depends only on the triple (for the MLP site the caller folds the layer
+/// index into `seed` first via `forward::layer_seed`), so decode order and
+/// thread scheduling cannot change a `Random`-rule selection. The
+/// multipliers differ from every fold constant used by the attention
+/// streams, keeping the site streams disjoint from the attention ones.
+#[inline]
+pub(crate) fn site_row_seed(seed: u64, site: u64, row: usize) -> u64 {
+    seed ^ (site + 1).wrapping_mul(0xBF58476D1CE4E5B9)
+        ^ (row as u64 + 1).wrapping_mul(0x94D049BB133111EB)
+}
+
+/// Apply the final-norm site to one residual row, in place.
+///
+/// Simulates PS(μ) storage of the norm input: every component is rounded
+/// to μ mantissa bits, then the RMS-norm greedy solver (Prop 3.2) —
+/// evaluated on the *rounded* values, the only ones available at run time
+/// — selects the components restored to their exact FP32 values. `quant`
+/// is caller-owned scratch (no allocation once warm). Returns the number
+/// of restored components.
+pub(crate) fn norm_site_row(
+    x: &mut [f32],
+    site: SitePrecision,
+    row_seed: u64,
+    quant: &mut Vec<f32>,
+) -> usize {
+    if site.is_reference() {
+        return 0;
+    }
+    quant.clear();
+    quant.extend(x.iter().map(|&v| round_to_mantissa(v, site.mu)));
+    if !site.tau.is_finite() {
+        // Uniform low-precision storage, no look-ahead repair.
+        x.copy_from_slice(quant);
+        return 0;
+    }
+    let mask = if matches!(site.rule, SoftmaxRule::Random) {
+        let count = select_rmsnorm(quant, site.tau as f64)
+            .iter()
+            .filter(|&&b| b)
+            .count();
+        random_mask(x.len(), count, &mut Rng::new(row_seed))
+    } else {
+        select_rmsnorm(quant, site.tau as f64)
+    };
+    let mut restored = 0;
+    for (i, &keep_exact) in mask.iter().enumerate() {
+        if keep_exact {
+            restored += 1; // x[i] keeps its exact FP32 value
+        } else {
+            x[i] = quant[i];
+        }
+    }
+    restored
+}
+
+/// Compute one logits row under the sampler site.
+///
+/// Reference: the 4-way-unrolled FP32 row dot of the tied unembedding —
+/// exactly the row body of `matmul_transposed_into`, so the reference
+/// short-circuit is bit-identical to the pre-plan path. Otherwise: PS(μ)
+/// accumulation per logit ([`dot_ps`] over the contiguous `wte` rows),
+/// then the softmax selection rule over the logits row flags the inner
+/// products recomputed with the sequential-FMA FP32 chain. Returns the
+/// number of recomputed logits.
+pub(crate) fn logits_row_site(
+    x: &[f32],
+    wte: &Matrix,
+    site: SitePrecision,
+    row_seed: u64,
+    out: &mut [f32],
+) -> usize {
+    debug_assert_eq!(out.len(), wte.rows());
+    debug_assert_eq!(x.len(), wte.cols());
+    if site.is_reference() {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = dot_unrolled4(x, wte.row(j));
+        }
+        return 0;
+    }
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = dot_ps(x, wte.row(j), site.mu);
+    }
+    let mut recomputed = 0;
+    if site.tau.is_finite() {
+        let mut rng = Rng::new(row_seed);
+        let mask = select_softmax(out, site.tau, site.rule, &mut rng);
+        for (j, &m) in mask.iter().enumerate() {
+            if m {
+                out[j] = dot_f32(x, wte.row(j));
+                recomputed += 1;
+            }
+        }
+    }
+    recomputed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lamp::softmax::SoftmaxRule;
+
+    #[test]
+    fn reference_plan_is_attention_only_and_valid() {
+        let p = PrecisionPlan::reference();
+        assert!(p.is_attention_only());
+        p.validate().unwrap();
+        let q = PrecisionPlan::attention_only(SitePrecision::lamp(
+            4,
+            0.1,
+            SoftmaxRule::Strict,
+        ));
+        assert!(q.is_attention_only());
+        assert!(!q.attention.is_reference());
+    }
+
+    #[test]
+    fn from_attention_precision_is_attention_only() {
+        let att = SitePrecision::lamp(3, 0.05, SoftmaxRule::Relaxed);
+        let p: PrecisionPlan = att.into();
+        assert_eq!(p.attention, att);
+        assert!(p.mlp.is_reference());
+        assert!(p.norm.is_reference());
+        assert!(p.sampler.is_reference());
+    }
+
+    #[test]
+    fn builders_and_whole_model() {
+        let site = SitePrecision::lamp(7, 0.5, SoftmaxRule::Strict);
+        let p = PrecisionPlan::whole_model(site);
+        assert!(!p.is_attention_only());
+        assert_eq!(p.mlp, site);
+        let q = PrecisionPlan::reference().with_mlp(site);
+        assert!(!q.is_attention_only());
+        assert!(q.norm.is_reference() && q.sampler.is_reference());
+        assert_eq!(q.with_norm(site).norm, site);
+        assert_eq!(q.with_sampler(site).sampler, site);
+    }
+
+    #[test]
+    fn validate_names_the_offending_site() {
+        let bad_mu = PrecisionPlan::reference()
+            .with_mlp(SitePrecision { mu: 0, tau: 0.1, rule: SoftmaxRule::Strict });
+        let e = bad_mu.validate().unwrap_err().to_string();
+        assert!(e.contains("mlp"), "{e}");
+        let bad_nan = PrecisionPlan::reference()
+            .with_norm(SitePrecision { mu: 4, tau: f32::NAN, rule: SoftmaxRule::Strict });
+        let e = bad_nan.validate().unwrap_err().to_string();
+        assert!(e.contains("norm") && e.contains("NaN"), "{e}");
+        let bad_neg = PrecisionPlan::reference().with_sampler(SitePrecision {
+            mu: 4,
+            tau: -0.5,
+            rule: SoftmaxRule::Strict,
+        });
+        let e = bad_neg.validate().unwrap_err().to_string();
+        assert!(e.contains("sampler"), "{e}");
+    }
+
+    #[test]
+    fn site_streams_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for site in [SITE_MLP, SITE_NORM, SITE_SAMPLER] {
+            for row in 0..64 {
+                assert!(seen.insert(site_row_seed(9, site, row)));
+            }
+        }
+    }
+
+    #[test]
+    fn norm_site_reference_and_uniform() {
+        let mut x = vec![1.5f32, -2.25, 0.75, 3.125];
+        let orig = x.clone();
+        let mut q = Vec::new();
+        let n = norm_site_row(&mut x, SitePrecision::reference(), 1, &mut q);
+        assert_eq!(n, 0);
+        assert_eq!(x, orig, "reference must not touch the row");
+        // Uniform PS(2): every component rounded, nothing restored.
+        let n = norm_site_row(&mut x, SitePrecision::uniform(2), 1, &mut q);
+        assert_eq!(n, 0);
+        for (a, &b) in x.iter().zip(&orig) {
+            assert_eq!(a.to_bits(), round_to_mantissa(b, 2).to_bits());
+        }
+    }
+
+    #[test]
+    fn norm_site_small_tau_restores_components() {
+        let mut rng = Rng::new(4);
+        let mut x: Vec<f32> = (0..32).map(|_| rng.normal_f32() * 2.0).collect();
+        let orig = x.clone();
+        let mut q = Vec::new();
+        let site = SitePrecision::lamp(2, 0.05, SoftmaxRule::Strict);
+        let n = norm_site_row(&mut x, site, 7, &mut q);
+        assert!(n > 0, "tight tau on a spread vector must restore components");
+        // Restored components are exact; the rest are the PS(2) roundings.
+        let restored = x
+            .iter()
+            .zip(&orig)
+            .filter(|(a, b)| a.to_bits() == b.to_bits())
+            .count();
+        assert!(restored >= n, "restored={restored} selected={n}");
+    }
+
+    #[test]
+    fn norm_site_random_rule_matches_greedy_count_and_is_deterministic() {
+        let mut rng = Rng::new(5);
+        let x0: Vec<f32> = (0..24).map(|_| rng.normal_f32()).collect();
+        let site = SitePrecision::lamp(3, 0.3, SoftmaxRule::Random);
+        let strict = SitePrecision::lamp(3, 0.3, SoftmaxRule::Strict);
+        let mut q = Vec::new();
+        let mut a = x0.clone();
+        let na = norm_site_row(&mut a, site, 11, &mut q);
+        let mut b = x0.clone();
+        let nb = norm_site_row(&mut b, site, 11, &mut q);
+        assert_eq!(na, nb);
+        assert_eq!(a, b, "same stream must reproduce exactly");
+        let mut c = x0.clone();
+        let nc = norm_site_row(&mut c, strict, 11, &mut q);
+        assert_eq!(na, nc, "random is count-matched to the greedy solution");
+    }
+
+    #[test]
+    fn logits_site_reference_matches_unrolled_dot() {
+        let mut rng = Rng::new(6);
+        let wte = Matrix::randn(16, 8, 1.0, &mut rng);
+        let x: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+        let mut out = vec![0.0f32; 16];
+        let n = logits_row_site(&x, &wte, SitePrecision::reference(), 3, &mut out);
+        assert_eq!(n, 0);
+        for (j, &o) in out.iter().enumerate() {
+            assert_eq!(o.to_bits(), dot_unrolled4(&x, wte.row(j)).to_bits());
+        }
+    }
+
+    #[test]
+    fn logits_site_tau_zero_recovers_fp32_chain() {
+        // τ=0 with the strict rule recomputes every nonzero-sensitivity
+        // logit with the sequential FP32 chain.
+        let mut rng = Rng::new(7);
+        let wte = Matrix::randn(32, 8, 1.0, &mut rng);
+        let x: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+        let site = SitePrecision::lamp(2, 0.0, SoftmaxRule::Strict);
+        let mut out = vec![0.0f32; 32];
+        let n = logits_row_site(&x, &wte, site, 3, &mut out);
+        assert!(n > 0);
+        let mut uniform = vec![0.0f32; 32];
+        let nu = logits_row_site(&x, &wte, SitePrecision::uniform(2), 3, &mut uniform);
+        assert_eq!(nu, 0);
+        let exact: Vec<f32> = (0..32).map(|j| dot_f32(&x, wte.row(j))).collect();
+        let err = |a: &[f32]| -> f32 {
+            a.iter()
+                .zip(&exact)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f32::max)
+        };
+        assert!(
+            err(&out) < err(&uniform),
+            "repair must beat uniform: {} vs {}",
+            err(&out),
+            err(&uniform)
+        );
+    }
+}

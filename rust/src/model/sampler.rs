@@ -10,9 +10,10 @@
 //! because per-row attention state depends only on the row's position
 //! (DESIGN.md §Bit-exactness).
 
-use super::attention::AttentionPrecision;
+use super::attention::LampStats;
 use super::forward::forward;
 use super::kvcache::DecodeSession;
+use super::plan::PrecisionPlan;
 use super::weights::Weights;
 use crate::error::{Error, Result};
 use crate::util::Rng;
@@ -40,27 +41,29 @@ impl Decode {
 }
 
 /// Generate `new_tokens` continuation tokens for `prompt` through a
-/// KV-cache [`DecodeSession`]. Returns (tokens, recompute_rate), where the
-/// rate is over every causal product the session evaluated (each product
-/// exactly once).
-pub fn generate(
+/// KV-cache [`DecodeSession`], returning the session's full per-site
+/// [`LampStats`] (each causal product counted exactly once). This is the
+/// one decode loop — [`generate`], the CLI, and the benches all ride on
+/// it, so the "bit-identical to solo generate" contract has a single
+/// definition site.
+pub fn generate_with_stats(
     weights: &Weights,
     prompt: &[u32],
     new_tokens: usize,
-    prec: AttentionPrecision,
+    prec: impl Into<PrecisionPlan>,
     decode: Decode,
     seed: u64,
-) -> Result<(Vec<u32>, f64)> {
+) -> Result<(Vec<u32>, LampStats)> {
     if prompt.is_empty() {
         return Err(Error::shape("empty prompt".to_string()));
     }
     let cfg = &weights.config;
     let mut tokens = prompt.to_vec();
     if tokens.len() >= cfg.seq || new_tokens == 0 {
-        return Ok((tokens, 0.0));
+        return Ok((tokens, LampStats::default()));
     }
     let mut rng = Rng::new(seed);
-    let mut session = DecodeSession::new(weights, prec, seed);
+    let mut session = DecodeSession::new(weights, prec.into(), seed);
     session.prefill(prompt)?;
     for _ in 0..new_tokens {
         let next = decode.pick(session.logits(), &mut rng)?;
@@ -70,7 +73,24 @@ pub fn generate(
         }
         session.decode_step(next)?;
     }
-    let rate = session.stats().rate();
+    let stats = session.stats().clone();
+    Ok((tokens, stats))
+}
+
+/// Generate `new_tokens` continuation tokens for `prompt` through a
+/// KV-cache [`DecodeSession`]. Returns (tokens, recompute_rate), where the
+/// rate is the attention-site rate over every causal product the session
+/// evaluated (each product exactly once).
+pub fn generate(
+    weights: &Weights,
+    prompt: &[u32],
+    new_tokens: usize,
+    prec: impl Into<PrecisionPlan>,
+    decode: Decode,
+    seed: u64,
+) -> Result<(Vec<u32>, f64)> {
+    let (tokens, stats) = generate_with_stats(weights, prompt, new_tokens, prec, decode, seed)?;
+    let rate = stats.rate();
     Ok((tokens, rate))
 }
 
@@ -83,13 +103,14 @@ pub fn generate_reforward(
     weights: &Weights,
     prompt: &[u32],
     new_tokens: usize,
-    prec: AttentionPrecision,
+    prec: impl Into<PrecisionPlan>,
     decode: Decode,
     seed: u64,
 ) -> Result<(Vec<u32>, f64)> {
     if prompt.is_empty() {
         return Err(Error::shape("empty prompt".to_string()));
     }
+    let plan: PrecisionPlan = prec.into();
     let cfg = &weights.config;
     let mut tokens = prompt.to_vec();
     let mut rng = Rng::new(seed);
@@ -99,7 +120,7 @@ pub fn generate_reforward(
         if tokens.len() >= cfg.seq {
             break;
         }
-        let out = forward(weights, &tokens, prec, seed)?;
+        let out = forward(weights, &tokens, plan, seed)?;
         recomputed += out.stats.recomputed;
         causal += out.stats.causal_total;
         let last = out.logits.row(tokens.len() - 1);
@@ -133,6 +154,7 @@ fn sample_topk(logits: &[f32], k: usize, temperature: f32, rng: &mut Rng) -> Res
 mod tests {
     use super::*;
     use crate::lamp::softmax::SoftmaxRule;
+    use crate::model::attention::AttentionPrecision;
     use crate::model::ModelConfig;
 
     fn weights() -> Weights {
@@ -194,6 +216,30 @@ mod tests {
             let (kv_t, _) = generate(&w, &prompt, 10, prec, d, 5).unwrap();
             let (rf_t, _) = generate_reforward(&w, &prompt, 10, prec, d, 5).unwrap();
             assert_eq!(kv_t, rf_t, "top-k streams diverge at mu={}", prec.mu);
+        }
+    }
+
+    #[test]
+    fn kv_cache_matches_reforward_under_whole_model_plans() {
+        // Same contract with every composition site active: the KV-cache
+        // token stream equals the full-re-forward stream bit for bit.
+        use crate::model::plan::PrecisionPlan;
+        let w = weights();
+        let prompt = vec![4u32, 19, 88];
+        for plan in [
+            PrecisionPlan::whole_model(AttentionPrecision::lamp(3, 0.1, SoftmaxRule::Strict)),
+            PrecisionPlan::attention_only(AttentionPrecision::lamp(
+                3,
+                0.05,
+                SoftmaxRule::Random,
+            ))
+            .with_mlp(AttentionPrecision::lamp(4, 0.5, SoftmaxRule::Random))
+            .with_norm(AttentionPrecision::uniform(4))
+            .with_sampler(AttentionPrecision::lamp(4, 0.05, SoftmaxRule::Random)),
+        ] {
+            let (kv, _) = generate(&w, &prompt, 8, plan, Decode::Greedy, 6).unwrap();
+            let (rf, _) = generate_reforward(&w, &prompt, 8, plan, Decode::Greedy, 6).unwrap();
+            assert_eq!(kv, rf, "streams diverge under {plan:?}");
         }
     }
 

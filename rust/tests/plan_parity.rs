@@ -1,0 +1,302 @@
+//! Whole-model PrecisionPlan parity — the PR-3 acceptance criteria.
+//!
+//! * An all-reference plan (and any attention-only plan) reproduces the
+//!   pre-refactor FP32 path bit for bit, through both `forward_with` and
+//!   `DecodeSession` decode. The pre-refactor path is replicated here from
+//!   the public primitives it was built from (`matmul_bias_fast`,
+//!   `causal_attention`, `layernorm`, GELU, `matmul_transposed_fast`).
+//! * LAMP selection is demonstrably active at every composition site:
+//!   per-site `LampStats` are non-zero under an active plan, and per-site
+//!   repair beats uniform low precision at the same μ.
+//! * Plans round-trip through `PrecisionPolicy::label`/`batch_compatible`
+//!   and invalid plans are rejected with typed, site-naming errors.
+
+use lamp::coordinator::{Engine, NativeEngine, PrecisionPolicy, Rule, SitePolicy};
+use lamp::lamp::activation::Activation;
+use lamp::lamp::softmax::SoftmaxRule;
+use lamp::linalg::matmul::{matmul_bias_fast, matmul_transposed_fast};
+use lamp::linalg::Matrix;
+use lamp::model::attention::causal_attention;
+use lamp::model::layernorm::{layernorm, LN_EPS};
+use lamp::model::{
+    forward, forward_with, AttentionPrecision, DecodeSession, ForwardScratch, ModelConfig,
+    PrecisionPlan, Weights,
+};
+use lamp::util::Rng;
+
+fn nano_weights(seed: u64) -> Weights {
+    let mut rng = Rng::new(seed);
+    Weights::random(&ModelConfig::nano(), &mut rng)
+}
+
+fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
+    a.shape() == b.shape()
+        && a.data()
+            .iter()
+            .zip(b.data())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// The pre-refactor FP32 forward path, replicated from the public
+/// primitives: vectorized FP32 matmuls everywhere, LAMP in attention only.
+/// Valid for deterministic selection rules (the Random rule consumes
+/// per-row streams whose derivation is engine-internal).
+fn legacy_forward(w: &Weights, tokens: &[u32], prec: AttentionPrecision) -> Matrix {
+    let cfg = &w.config;
+    let d = cfg.d_model;
+    let s = tokens.len();
+    let mut x = Matrix::zeros(s, d);
+    for (i, &t) in tokens.iter().enumerate() {
+        let te = w.wte.row(t as usize);
+        let pe = w.wpe.row(i);
+        let xr = x.row_mut(i);
+        for c in 0..d {
+            xr[c] = te[c] + pe[c];
+        }
+    }
+    for blk in &w.blocks {
+        // Attention sublayer (pre-LN).
+        let mut xn = x.clone();
+        for i in 0..s {
+            layernorm(xn.row_mut(i), &blk.ln1_g, &blk.ln1_b, LN_EPS);
+        }
+        let qkv = matmul_bias_fast(&xn, &blk.w_qkv, &blk.b_qkv).unwrap();
+        let mut q = Matrix::zeros(s, d);
+        let mut k = Matrix::zeros(s, d);
+        let mut v = Matrix::zeros(s, d);
+        for i in 0..s {
+            let row = qkv.row(i);
+            q.row_mut(i).copy_from_slice(&row[..d]);
+            k.row_mut(i).copy_from_slice(&row[d..2 * d]);
+            v.row_mut(i).copy_from_slice(&row[2 * d..]);
+        }
+        let mut n = 0;
+        let attn = causal_attention(&q, &k, &v, cfg.heads, prec, 0, &mut n);
+        let proj = matmul_bias_fast(&attn, &blk.w_proj, &blk.b_proj).unwrap();
+        for i in 0..s {
+            let pr = proj.row(i);
+            let xr = x.row_mut(i);
+            for c in 0..d {
+                xr[c] += pr[c];
+            }
+        }
+        // MLP sublayer (pre-LN), pure FP32.
+        let mut xn = x.clone();
+        for i in 0..s {
+            layernorm(xn.row_mut(i), &blk.ln2_g, &blk.ln2_b, LN_EPS);
+        }
+        let mut hidden = matmul_bias_fast(&xn, &blk.w_fc, &blk.b_fc).unwrap();
+        for h in hidden.data_mut() {
+            *h = Activation::Gelu.apply(*h);
+        }
+        let out = matmul_bias_fast(&hidden, &blk.w_out, &blk.b_out).unwrap();
+        for i in 0..s {
+            let mr = out.row(i);
+            let xr = x.row_mut(i);
+            for c in 0..d {
+                xr[c] += mr[c];
+            }
+        }
+    }
+    for i in 0..s {
+        layernorm(x.row_mut(i), &w.lnf_g, &w.lnf_b, LN_EPS);
+    }
+    matmul_transposed_fast(&x, &w.wte).unwrap()
+}
+
+#[test]
+fn attention_only_plans_reproduce_the_pre_refactor_path_bitwise() {
+    // The headline bit-exactness criterion: a plan with every
+    // non-attention site at reference is the pre-refactor engine.
+    let w = nano_weights(1);
+    let tokens: Vec<u32> = (0..20).map(|i| (i * 7 + 3) % 128).collect();
+    for prec in [
+        AttentionPrecision::reference(),
+        AttentionPrecision::uniform(3),
+        AttentionPrecision::lamp(3, 0.02, SoftmaxRule::Strict),
+        AttentionPrecision::lamp(3, 0.1, SoftmaxRule::Relaxed),
+    ] {
+        let legacy = legacy_forward(&w, &tokens, prec);
+        // Through forward (attention-only plan via the From shim) ...
+        let plan: PrecisionPlan = prec.into();
+        assert!(plan.is_attention_only());
+        let got = forward(&w, &tokens, plan, 9).unwrap();
+        assert!(
+            bits_equal(&legacy, &got.logits),
+            "plan forward diverged from the pre-refactor path under {prec:?}"
+        );
+        // ... through forward_with with scratch reuse ...
+        let mut scratch = ForwardScratch::for_config(&w.config);
+        let reused = forward_with(&w, &tokens, plan, 9, &mut scratch, None).unwrap();
+        assert!(bits_equal(&legacy, &reused.logits));
+        // ... and through KV-cache decode: the last decoded position's
+        // logits equal the last legacy row.
+        let mut session = DecodeSession::new(&w, plan, 9);
+        session.prefill(&tokens).unwrap();
+        let last = legacy.row(tokens.len() - 1);
+        for (c, (a, b)) in session.logits().iter().zip(last).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "decode col {c} under {prec:?}");
+        }
+        // Non-attention sites recompute nothing on attention-only plans.
+        assert_eq!(got.stats.mlp.recomputed, 0);
+        assert_eq!(got.stats.norm.recomputed, 0);
+        assert_eq!(got.stats.sampler.recomputed, 0);
+    }
+}
+
+#[test]
+fn plan_sweep_activates_every_site_with_nonzero_stats() {
+    let w = nano_weights(2);
+    let tokens: Vec<u32> = (0..16).map(|i| (i * 11 + 5) % 128).collect();
+    let plan = PrecisionPlan::attention_only(AttentionPrecision::lamp(
+        3,
+        0.02,
+        SoftmaxRule::Strict,
+    ))
+    .with_mlp(AttentionPrecision::lamp(3, 0.5, SoftmaxRule::Strict))
+    .with_norm(AttentionPrecision::lamp(3, 0.5, SoftmaxRule::Strict))
+    .with_sampler(AttentionPrecision::lamp(3, 0.0, SoftmaxRule::Strict));
+    let out = forward(&w, &tokens, plan, 3).unwrap();
+    assert!(out.stats.recomputed > 0, "attention site inactive");
+    assert!(out.stats.mlp.recomputed > 0, "mlp site inactive");
+    assert!(out.stats.norm.recomputed > 0, "norm site inactive");
+    assert!(out.stats.sampler.recomputed > 0, "sampler site inactive");
+    // Decode accounts the identical per-site counters.
+    let mut session = DecodeSession::new(&w, plan, 3);
+    session.prefill(&tokens).unwrap();
+    assert_eq!(session.stats().mlp, out.stats.mlp);
+    assert_eq!(session.stats().norm, out.stats.norm);
+    assert_eq!(session.stats().sampler, out.stats.sampler);
+    assert_eq!(session.stats().recomputed, out.stats.recomputed);
+}
+
+#[test]
+fn per_site_repair_beats_uniform_low_precision() {
+    // For each non-attention site: LAMP repair at μ strictly reduces the
+    // deviation from the FP32 reference vs uniform PS(μ) at that site.
+    let w = nano_weights(3);
+    let tokens: Vec<u32> = (0..16).map(|i| (i * 13 + 1) % 128).collect();
+    let reference = forward(&w, &tokens, PrecisionPlan::reference(), 0).unwrap();
+    let err = |plan: PrecisionPlan| -> f32 {
+        forward(&w, &tokens, plan, 0)
+            .unwrap()
+            .logits
+            .max_abs_diff(&reference.logits)
+            .unwrap()
+    };
+    let base = PrecisionPlan::reference();
+    // MLP site.
+    let e_uni = err(base.with_mlp(AttentionPrecision::uniform(2)));
+    let e_lamp = err(base.with_mlp(AttentionPrecision::lamp(2, 0.0, SoftmaxRule::Strict)));
+    assert!(e_uni > 0.0, "uniform PS(2) mlp must perturb logits");
+    assert!(e_lamp < e_uni, "mlp repair: lamp={e_lamp} uniform={e_uni}");
+    // Norm site.
+    let e_uni = err(base.with_norm(AttentionPrecision::uniform(2)));
+    let e_lamp = err(base.with_norm(AttentionPrecision::lamp(2, 0.1, SoftmaxRule::Strict)));
+    assert!(e_uni > 0.0, "uniform PS(2) norm must perturb logits");
+    assert!(e_lamp < e_uni, "norm repair: lamp={e_lamp} uniform={e_uni}");
+    // Sampler site.
+    let e_uni = err(base.with_sampler(AttentionPrecision::uniform(2)));
+    let e_lamp =
+        err(base.with_sampler(AttentionPrecision::lamp(2, 0.0, SoftmaxRule::Strict)));
+    assert!(e_uni > 0.0, "uniform PS(2) sampler must perturb logits");
+    assert!(e_lamp < e_uni, "sampler repair: lamp={e_lamp} uniform={e_uni}");
+}
+
+#[test]
+fn tightening_tau_never_increases_per_site_unrepaired_sensitivity() {
+    // Model-level companion of the selector-level monotonicity property
+    // tests: tightening one site's τ (all else fixed) never decreases the
+    // number of repaired outputs at that site on the same inputs' first
+    // forward, and the end-to-end deviation from reference shrinks or
+    // stays equal in the expected direction for the directly-repaired
+    // site outputs. We assert the recompute-count monotonicity, which is
+    // exact for the closed-form threshold selections at fixed inputs.
+    let w = nano_weights(4);
+    let tokens: Vec<u32> = (0..12).map(|i| (i * 5 + 2) % 128).collect();
+    // Single-layer-deep check: only the sampler site is active, so the
+    // logits-site inputs are identical across τ values and thresholding
+    // monotonicity applies exactly.
+    let taus = [0.5f32, 0.2, 0.1, 0.05, 0.0];
+    let mut last = 0usize;
+    for (i, &tau) in taus.iter().enumerate() {
+        let plan = PrecisionPlan::reference()
+            .with_sampler(AttentionPrecision::lamp(3, tau, SoftmaxRule::Strict));
+        let out = forward(&w, &tokens, plan, 0).unwrap();
+        if i > 0 {
+            assert!(
+                out.stats.sampler.recomputed >= last,
+                "tightening tau reduced sampler repairs: {} < {last} at tau={tau}",
+                out.stats.sampler.recomputed
+            );
+        }
+        last = out.stats.sampler.recomputed;
+    }
+    // Same for the norm site (inputs to the final norm are τ-independent
+    // when only the norm site is active).
+    let mut last = 0usize;
+    for (i, &tau) in [1.5f32, 1.0, 0.5, 0.1].iter().enumerate() {
+        let plan = PrecisionPlan::reference()
+            .with_norm(AttentionPrecision::lamp(3, tau, SoftmaxRule::Strict));
+        let out = forward(&w, &tokens, plan, 0).unwrap();
+        if i > 0 {
+            assert!(
+                out.stats.norm.recomputed >= last,
+                "tightening tau reduced norm repairs at tau={tau}"
+            );
+        }
+        last = out.stats.norm.recomputed;
+    }
+}
+
+#[test]
+fn policies_round_trip_through_label_and_batching() {
+    // Distinct per-site policies get distinct labels; equal ones batch.
+    let a = PrecisionPolicy::lamp(4, 0.1, Rule::Strict)
+        .with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict));
+    let b = PrecisionPolicy::lamp(4, 0.1, Rule::Strict)
+        .with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict));
+    let c = PrecisionPolicy::lamp(4, 0.1, Rule::Strict)
+        .with_norm(SitePolicy::lamp(7, 0.5, Rule::Strict));
+    assert_eq!(a.label(), b.label());
+    assert!(a.batch_compatible(&b));
+    assert_ne!(a.label(), c.label());
+    assert!(!a.batch_compatible(&c));
+    // The engine translation preserves every site.
+    let cfg = ModelConfig::nano();
+    let mut rng = Rng::new(5);
+    let engine = NativeEngine::new(Weights::random(&cfg, &mut rng));
+    let plan = engine.decode_precision(&a);
+    assert_eq!(plan.mlp.mu, 7);
+    assert!(plan.norm.is_reference());
+}
+
+#[test]
+fn invalid_plans_rejected_with_typed_site_errors() {
+    for (policy, site) in [
+        (
+            PrecisionPolicy::reference().with_mlp(SitePolicy::lamp(0, 0.1, Rule::Strict)),
+            "mlp",
+        ),
+        (
+            PrecisionPolicy::reference()
+                .with_norm(SitePolicy::lamp(4, f32::NAN, Rule::Strict)),
+            "norm",
+        ),
+        (
+            PrecisionPolicy::reference()
+                .with_sampler(SitePolicy::lamp(4, -1.0, Rule::Strict)),
+            "sampler",
+        ),
+    ] {
+        let err = policy.validate().unwrap_err().to_string();
+        assert!(err.contains(site), "error must name the site: {err}");
+    }
+    // And the engine-level plan validation agrees.
+    let bad = PrecisionPlan::reference().with_mlp(AttentionPrecision {
+        mu: 42,
+        tau: 0.1,
+        rule: SoftmaxRule::Strict,
+    });
+    assert!(bad.validate().is_err());
+}

@@ -3,6 +3,7 @@
 
 use lamp::check::{forall, pair, Config, Gen};
 use lamp::coordinator::{Batcher, InferenceRequest, PrecisionPolicy, Rule};
+use lamp::lamp::activation::{kappa_c_activation, select_activation, Activation};
 use lamp::lamp::rmsnorm::{kappa_c_rmsnorm, select_rmsnorm};
 use lamp::lamp::softmax::{kappa1_softmax, select_strict, softmax};
 use lamp::softfloat::round::{
@@ -189,6 +190,49 @@ fn prop_softmax_recompute_monotone_tightening_tau_never_hurts() {
             let m_hi = select_strict(y, hi);
             let nested = m_hi.iter().zip(&m_lo).all(|(&h, &l)| !h || l);
             nested && kappa1_softmax_f64(y, &m_lo) <= kappa1_softmax_f64(y, &m_hi)
+        },
+    );
+}
+
+#[test]
+fn prop_activation_selection_achieves_tau() {
+    // The closed-form activation selection (§3.1) satisfies its defining
+    // bound: the max unselected diagonal sensitivity never exceeds τ.
+    forall(
+        Config::default().cases(600),
+        pair(Gen::f32_vec(1, 48, -6.0, 6.0), Gen::f32_range(0.0, 2.0)),
+        |&(ref y, tau)| {
+            for act in [Activation::Gelu, Activation::Tanh, Activation::Silu] {
+                let mask = select_activation(y, act, tau);
+                if kappa_c_activation(y, act, &mask) > tau {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_activation_recompute_monotone_tightening_tau_never_hurts() {
+    // Whole-model extension of the PR-2 monotonicity properties to the
+    // activation site: tightening τ selects a superset of hidden units
+    // (thresholding is monotone), so the site's measured forward-error
+    // bound κ_c — the max sensitivity left unrepaired — never increases.
+    forall(
+        Config::default().cases(600),
+        pair(
+            Gen::f32_vec(1, 48, -6.0, 6.0),
+            pair(Gen::f32_range(0.0, 2.0), Gen::f32_range(0.0, 2.0)),
+        ),
+        |&(ref y, (t1, t2))| {
+            let (lo, hi) = if t1 <= t2 { (t1, t2) } else { (t2, t1) };
+            let m_lo = select_activation(y, Activation::Gelu, lo);
+            let m_hi = select_activation(y, Activation::Gelu, hi);
+            let nested = m_hi.iter().zip(&m_lo).all(|(&h, &l)| !h || l);
+            nested
+                && kappa_c_activation(y, Activation::Gelu, &m_lo)
+                    <= kappa_c_activation(y, Activation::Gelu, &m_hi)
         },
     );
 }
