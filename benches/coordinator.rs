@@ -43,7 +43,7 @@ fn main() {
     let mut rng = Rng::new(5);
     let weights = ArtifactStore::open(ArtifactStore::default_dir())
         .and_then(|s| s.weights("nano"))
-        .unwrap_or_else(|_| Weights::random(&cfg, &mut rng));
+        .unwrap_or_else(|_| Weights::random(&cfg, &mut rng).expect("random weights"));
     let data = Dataset::generate(Domain::Web, cfg.vocab, 16, cfg.seq, 7, 3);
 
     for (label, tier) in [("economy", "economy"), ("balanced", "balanced"), ("exact", "exact")] {

@@ -22,11 +22,15 @@ use lamp::util::Rng;
 use std::time::Duration;
 
 fn main() {
+    // `--smoke` (the CI bench-smoke job): one sample on a short context so
+    // the producer of BENCH_*.json is exercised on every push without
+    // burning CI minutes — numbers from a smoke run are not comparable.
+    let smoke = std::env::args().any(|a| a == "--smoke");
     // The ISSUE-1 measurement setting: 4 layers, S=256, single sequence.
     let cfg = ModelConfig {
         name: "bench-4l".into(),
         vocab: 256,
-        seq: 256,
+        seq: if smoke { 48 } else { 256 },
         layers: 4,
         heads: 4,
         d_model: 128,
@@ -34,13 +38,18 @@ fn main() {
     };
     cfg.validate().expect("bench config");
     let mut rng = Rng::new(17);
-    let weights = Weights::random(&cfg, &mut rng);
+    let weights = Weights::random(&cfg, &mut rng).unwrap();
     let prompt: Vec<u32> = (0..16u32).map(|i| (i * 37 + 5) % cfg.vocab as u32).collect();
     let new_tokens = cfg.seq - prompt.len();
     let prec = AttentionPrecision::lamp(4, 0.05, lamp::lamp::softmax::SoftmaxRule::Strict);
+    let samples = if smoke { 1 } else { 5 };
 
     // --- KV-cache decode path. ---
-    let b_kv = Bencher { warmup_iters: 1, sample_iters: 5, max_total: Duration::from_secs(60) };
+    let b_kv = Bencher {
+        warmup_iters: if smoke { 0 } else { 1 },
+        sample_iters: samples,
+        max_total: Duration::from_secs(60),
+    };
     let kv = b_kv.run("generate kv-cache (4l, S=256)", || {
         generate(&weights, &prompt, new_tokens, prec, Decode::Greedy, 3).unwrap()
     });
@@ -48,7 +57,11 @@ fn main() {
     let kv_tok_s = new_tokens as f64 / kv.median().as_secs_f64().max(1e-12);
 
     // --- Seed baseline: full re-forward per token. ---
-    let b_rf = Bencher { warmup_iters: 0, sample_iters: 2, max_total: Duration::from_secs(240) };
+    let b_rf = Bencher {
+        warmup_iters: 0,
+        sample_iters: if smoke { 1 } else { 2 },
+        max_total: Duration::from_secs(240),
+    };
     let rf = b_rf.run("generate re-forward (4l, S=256)", || {
         generate_reforward(&weights, &prompt, new_tokens, prec, Decode::Greedy, 3).unwrap()
     });
@@ -75,13 +88,13 @@ fn main() {
     let scale = 1.0 / (hd as f32).sqrt();
     let flops = (2 * hd * s) as f64; // one full causal row at max length
     let bk = Bencher::default();
-    let fused = bk.run("score_row_ps fused (n=256, hd=32, mu=4)", || {
+    let fused = bk.run(&format!("score_row_ps fused (n={s}, hd=32, mu=4)"), || {
         let mut out = vec![0.0f32; s];
         score_row_ps(&q, &keys, d, s, 4, scale, &mut out);
         out
     });
     println!("{}", fused.summary());
-    let per_dot = bk.run("per-dot dot_ps row (n=256, hd=32, mu=4)", || {
+    let per_dot = bk.run(&format!("per-dot dot_ps row (n={s}, hd=32, mu=4)"), || {
         let mut out = vec![0.0f32; s];
         for (j, o) in out.iter_mut().enumerate() {
             *o = dot_ps(&q, &keys[j * d..j * d + hd], 4) * scale;
@@ -97,6 +110,9 @@ fn main() {
 
     let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let path = bench_record_path();
+    if smoke {
+        println!("smoke mode: timings above are single-sample and not comparable");
+    }
     record_bench_section(
         &path,
         "decode",
@@ -108,21 +124,24 @@ fn main() {
             .num("kv_cache_tok_s", kv_tok_s)
             .num("reforward_tok_s", rf_tok_s)
             .num("speedup", speedup)
-            .int("host_cores", cores as u64),
+            .int("host_cores", cores as u64)
+            // Smoke records are single-sample and not comparable; mark
+            // them so the cross-PR guards can't mistake them for real.
+            .int("smoke", smoke as u64),
     )
     .expect("write bench record");
     record_bench_section(
         &path,
         "attention_kernel",
         &JsonObj::new()
-            .str("kernel", "score_row_ps (PS(4) accumulate, n=256, hd=32)")
+            .str("kernel", &format!("score_row_ps (PS(4) accumulate, n={s}, hd=32)"))
             .num("fused_gflops", fused_gflops)
             .num("per_dot_gflops", per_dot_gflops),
     )
     .expect("write bench record");
     println!("recorded -> {}", path.display());
 
-    if speedup < 4.0 {
+    if speedup < 4.0 && !smoke {
         eprintln!("WARNING: decode speedup {speedup:.1}x below the 4x acceptance target");
     }
 }

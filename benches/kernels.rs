@@ -62,7 +62,7 @@ fn main() {
     let cfg = ModelConfig::small();
     let weights = ArtifactStore::open(ArtifactStore::default_dir())
         .and_then(|s| s.weights("small"))
-        .unwrap_or_else(|_| Weights::random(&cfg, &mut rng));
+        .unwrap_or_else(|_| Weights::random(&cfg, &mut rng).expect("random weights"));
     let native = NativeEngine::new(weights);
     let data = Dataset::generate(Domain::Web, cfg.vocab, cfg.batch, cfg.seq, 7, 9);
     let policy = PrecisionPolicy::lamp(4, 0.1, Rule::Strict);

@@ -64,7 +64,7 @@ fn main() {
     };
     cfg.validate().expect("bench config");
     let mut rng = Rng::new(31);
-    let weights = Weights::random(&cfg, &mut rng);
+    let weights = Weights::random(&cfg, &mut rng).unwrap();
     let engine = NativeEngine::new(weights);
     let prompt: Vec<u32> = (0..16u32).map(|i| (i * 37 + 5) % cfg.vocab as u32).collect();
     let new_tokens = cfg.seq - prompt.len() - 1;

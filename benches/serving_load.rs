@@ -82,7 +82,7 @@ fn main() {
     };
     cfg.validate().expect("bench config");
     let mut rng = Rng::new(23);
-    let weights = Weights::random(&cfg, &mut rng);
+    let weights = Weights::random(&cfg, &mut rng).unwrap();
     let engine = NativeEngine::new(weights);
     let n_req = env_usize("LAMP_BENCH_REQS", 24);
     let reqs = workload(&cfg, n_req, 99);

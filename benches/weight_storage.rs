@@ -1,0 +1,151 @@
+//! Mixed-precision weight storage — the PR-4 measurement.
+//!
+//! For each storage format (f32 / bf16 / PS(8)) of the same 4-layer
+//! native engine:
+//!
+//! * **resident parameter bytes** (`Weights::resident_param_bytes`) — the
+//!   bytes the decode path actually streams per pass; bf16 must land near
+//!   the 2× matrix saving (bias/layernorm vectors stay f32);
+//! * **decode tokens/sec** through the shared `generate_with_stats` loop
+//!   under the reference plan (the fused-dequant hot path) and under the
+//!   whole-model LAMP plan (repair kernels reading stored bytes).
+//!
+//! Results land in `BENCH_PR4.json` (override with `LAMP_BENCH_OUT`).
+//! `--smoke` (the CI bench-smoke job) runs one short sample per point so
+//! the producer is exercised on every push; smoke numbers are not
+//! comparable.
+//!
+//! ```bash
+//! cargo bench --bench weight_storage [-- --smoke]
+//! ```
+
+use lamp::benchkit::{record_bench_section, Bencher, JsonObj};
+use lamp::coordinator::{Engine, NativeEngine, PrecisionPolicy, Rule, SitePolicy};
+use lamp::linalg::WeightFormat;
+use lamp::model::{generate_with_stats, Decode, ModelConfig, Weights};
+use lamp::util::Rng;
+use std::time::Duration;
+
+fn bench_out() -> std::path::PathBuf {
+    std::env::var("LAMP_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_PR4.json"))
+}
+
+fn drive(engine: &NativeEngine, policy: &PrecisionPolicy, prompt: &[u32], new_tokens: usize) {
+    generate_with_stats(
+        engine.weights(),
+        prompt,
+        new_tokens,
+        engine.decode_precision(policy),
+        Decode::Greedy,
+        3,
+    )
+    .expect("generate");
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = ModelConfig {
+        name: "bench-wfmt".into(),
+        vocab: 256,
+        seq: if smoke { 48 } else { 160 },
+        layers: 4,
+        heads: 4,
+        d_model: 128,
+        batch: 1,
+    };
+    cfg.validate().expect("bench config");
+    let mut rng = Rng::new(41);
+    let base = Weights::random(&cfg, &mut rng).unwrap();
+    let prompt: Vec<u32> = (0..16u32).map(|i| (i * 37 + 5) % cfg.vocab as u32).collect();
+    let new_tokens = cfg.seq - prompt.len() - 1;
+
+    let reference = PrecisionPolicy::reference();
+    let whole = PrecisionPolicy::lamp(4, 0.02, Rule::Strict)
+        .with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict))
+        .with_norm(SitePolicy::lamp(10, 1.0, Rule::Strict))
+        .with_sampler(SitePolicy::lamp(7, 0.05, Rule::Relaxed));
+
+    let b = Bencher {
+        warmup_iters: if smoke { 0 } else { 1 },
+        sample_iters: if smoke { 1 } else { 5 },
+        max_total: Duration::from_secs(120),
+    };
+
+    let f32_bytes = base.resident_param_bytes();
+    let mut obj = JsonObj::new()
+        .str("model", "4 layers, 4 heads, d=128, vocab=256")
+        .int("seq", cfg.seq as u64)
+        .int("generated_tokens", new_tokens as u64)
+        .str("whole_policy", &whole.label())
+        // Smoke records are single-sample and not comparable; mark them
+        // so downstream comparisons can't mistake them for real numbers.
+        .int("smoke", smoke as u64);
+
+    let mut ref_tok_s = Vec::new();
+    for fmt in [
+        WeightFormat::F32,
+        WeightFormat::Bf16,
+        WeightFormat::PsRounded { mu: 8 },
+    ] {
+        let engine = NativeEngine::new(base.clone()).with_weight_format(fmt).unwrap();
+        let bytes = engine.weights().resident_param_bytes();
+        println!(
+            "{}: resident parameter bytes {} ({:.2}x vs f32)",
+            fmt.label(),
+            bytes,
+            f32_bytes as f64 / bytes as f64
+        );
+        let stats = b.run(
+            &format!("decode reference plan, {} storage (4l, S={})", fmt.label(), cfg.seq),
+            || drive(&engine, &reference, &prompt, new_tokens),
+        );
+        println!("{}", stats.summary());
+        let tok_s = new_tokens as f64 / stats.median().as_secs_f64().max(1e-12);
+        ref_tok_s.push(tok_s);
+        let wstats = b.run(
+            &format!("decode whole-model plan, {} storage (4l, S={})", fmt.label(), cfg.seq),
+            || drive(&engine, &whole, &prompt, new_tokens),
+        );
+        println!("{}", wstats.summary());
+        let whole_tok_s = new_tokens as f64 / wstats.median().as_secs_f64().max(1e-12);
+        println!(
+            "{}: decode reference {tok_s:.1} tok/s, whole-model {whole_tok_s:.1} tok/s",
+            fmt.label()
+        );
+        obj = obj
+            .int(&format!("{}_resident_bytes", fmt.label()), bytes as u64)
+            .num(&format!("{}_reference_tok_s", fmt.label()), tok_s)
+            .num(&format!("{}_whole_model_tok_s", fmt.label()), whole_tok_s);
+    }
+
+    // Acceptance signals (informative in smoke mode): bf16 must halve the
+    // matrix-resident bytes and keep decode throughput in f32's band.
+    let bf16_bytes = base
+        .quantize_to(WeightFormat::Bf16)
+        .unwrap()
+        .resident_param_bytes();
+    let byte_ratio = f32_bytes as f64 / bf16_bytes as f64;
+    if byte_ratio < 1.8 {
+        eprintln!("WARNING: bf16 byte saving {byte_ratio:.2}x below the ~2x target");
+    }
+    let throughput_ratio = ref_tok_s[1] / ref_tok_s[0].max(1e-12);
+    println!(
+        "bf16 bytes {:.2}x smaller than f32; bf16/f32 decode throughput ratio {:.2}",
+        byte_ratio, throughput_ratio
+    );
+    if throughput_ratio < 0.9 && !smoke {
+        eprintln!(
+            "WARNING: bf16 decode throughput {throughput_ratio:.2}x of f32 (target: >= 1.0)"
+        );
+    }
+    obj = obj.num("bf16_byte_ratio", byte_ratio).num(
+        "bf16_over_f32_reference_throughput",
+        throughput_ratio,
+    );
+
+    let path = bench_out();
+    record_bench_section(&path, "weight_storage", &obj).expect("write bench record");
+    println!("recorded -> {}", path.display());
+}

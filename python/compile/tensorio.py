@@ -1,49 +1,150 @@
 """Writer/reader for the `.lamp` tensor container format.
 
-Mirrors `rust/src/tensorio/mod.rs` byte-for-byte (little-endian):
+Mirrors `rust/src/tensorio/mod.rs` byte-for-byte (little-endian). Two
+on-disk versions share one layout skeleton:
 
     magic   : 8 bytes  b"LAMPTNSR"
-    version : u32      (1)
+    version : u32      (1 or 2)
     count   : u32
     repeat count times:
-      name_len u32 | name bytes | dtype u32 (0=f32, 1=i32) | ndim u32
-      | dims ndim*u64 | payload 4*prod(dims) bytes
+      name_len u32 | name bytes | dtype u32 (0=f32, 1=i32, 2=bf16, 3=ps-f32)
+      | mu u32 (dtype 3 only) | ndim u32 | dims ndim*u64
+      | payload elem_bytes(dtype)*prod(dims) bytes
+
+* **v1** carries f32/i32 tensors only (4 bytes/element) — the historical
+  format, still written whenever no tensor needs more, so f32-only files
+  stay byte-identical to the legacy writer's output.
+* **v2** adds the mixed-precision weight-storage dtypes consumed by the
+  Rust native engine's ``linalg::WeightTensor``: ``bf16`` (2 bytes/element)
+  and ``ps-f32`` (f32 payload pre-rounded to mu mantissa bits). Every
+  stored value is an exact f32, so decoding is lossless; ``read_tensors``
+  returns float32 arrays for both.
 """
 
 from __future__ import annotations
 
 import struct
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 MAGIC = b"LAMPTNSR"
-VERSION = 1
+VERSION_V1 = 1
+VERSION_V2 = 2
+
+DTYPE_F32 = 0
+DTYPE_I32 = 1
+DTYPE_BF16 = 2
+DTYPE_PS_F32 = 3
 
 
-def write_tensors(path: str, tensors: List[Tuple[str, np.ndarray]]) -> None:
-    """Write an ordered list of (name, array) pairs. float -> f32, int -> i32."""
-    out = bytearray()
-    out += MAGIC
-    out += struct.pack("<II", VERSION, len(tensors))
+def f32_to_bf16(a: np.ndarray) -> np.ndarray:
+    """Round a float array to bf16 bit patterns (RNE), as uint16.
+    Shape-preserving, including 0-d inputs."""
+    x = np.asarray(a, dtype="<f4")
+    bits = np.atleast_1d(x).view("<u4")
+    nan = np.isnan(np.atleast_1d(x))
+    lsb = (bits >> 16) & 1
+    out = ((bits + np.uint32(0x7FFF) + lsb) >> 16).astype("<u2")
+    # Quiet NaNs explicitly (the rounding add may clear payload bits).
+    out[nan] = ((bits[nan] >> 16) | np.uint32(0x0040)).astype("<u2")
+    return out.reshape(x.shape)
+
+
+def bf16_to_f32(b: np.ndarray) -> np.ndarray:
+    """Widen bf16 bit patterns (uint16) to the exact float32 they encode."""
+    return (np.asarray(b, dtype="<u2").astype("<u4") << 16).view("<f4")
+
+
+def round_to_mantissa(a: np.ndarray, mu: int) -> np.ndarray:
+    """Round float32 values to ``mu`` mantissa bits (RNE) — the numpy twin
+    of ``rust/src/softfloat/round.rs::round_to_mantissa``. Shape-preserving,
+    including 0-d inputs."""
+    if not 1 <= mu <= 23:
+        raise ValueError(f"mu {mu} out of 1..=23")
+    x = np.asarray(a, dtype="<f4")
+    if mu == 23:
+        return x.copy()
+    shift = 23 - mu
+    flat = np.atleast_1d(x)
+    bits = flat.view("<u4")
+    lsb = (bits >> shift) & 1
+    bias = np.uint32((1 << (shift - 1)) - 1) + lsb
+    r = ((bits + bias) >> shift) << shift
+    out = r.astype("<u4").view("<f4").copy()
+    keep = ~np.isfinite(flat)
+    out[keep] = flat[keep]
+    return out.reshape(x.shape)
+
+
+def write_tensors(
+    path: str,
+    tensors: List[Tuple[str, np.ndarray]],
+    formats: Optional[Dict[str, str]] = None,
+) -> None:
+    """Write an ordered list of (name, array) pairs.
+
+    Default mapping: float -> f32, int -> i32 (v1, byte-identical to the
+    legacy writer). ``formats`` optionally assigns a storage format per
+    tensor name using the shared f32|bf16|ps<mu> vocabulary (``"f32"`` is
+    the explicit identity); the file is written as v2 exactly when a
+    quantized dtype actually appears. Keys that match no tensor name are
+    an error (a typo must not silently skip quantization).
+    """
+    formats = formats or {}
+    names = {name for name, _ in tensors}
+    unknown = set(formats) - names
+    if unknown:
+        raise ValueError(f"formats name(s) matching no tensor: {sorted(unknown)}")
+    # Resolve every tensor's payload + dtype first; the container version
+    # depends on the *resolved* dtypes (mirrors Rust's required_version),
+    # not on whether a formats dict was passed.
     seen = set()
+    resolved = []  # (name, payload array, dtype_code, mu)
     for name, arr in tensors:
         if name in seen:
             raise ValueError(f"duplicate tensor name {name!r}")
         seen.add(name)
         a = np.asarray(arr)
-        if a.dtype.kind == "f":
-            a = a.astype("<f4")
-            dtype_code = 0
-        elif a.dtype.kind in "iu":
-            a = a.astype("<i4")
-            dtype_code = 1
+        fmt = formats.get(name)
+        mu = None
+        if fmt is None or fmt == "f32":
+            if fmt == "f32" or a.dtype.kind == "f":
+                a = a.astype("<f4")
+                dtype_code = DTYPE_F32
+            elif a.dtype.kind in "iu":
+                a = a.astype("<i4")
+                dtype_code = DTYPE_I32
+            else:
+                raise TypeError(f"unsupported dtype {a.dtype} for {name!r}")
+        elif fmt == "bf16":
+            a = f32_to_bf16(a.astype("<f4"))
+            dtype_code = DTYPE_BF16
+        elif fmt.startswith("ps") and fmt[2:].isdigit():
+            mu = int(fmt[2:])
+            a = round_to_mantissa(a.astype("<f4"), mu)
+            dtype_code = DTYPE_PS_F32
         else:
-            raise TypeError(f"unsupported dtype {a.dtype} for {name!r}")
+            raise ValueError(
+                f"unknown storage format {fmt!r} for {name!r} (f32|bf16|ps<mu>)"
+            )
+        resolved.append((name, a, dtype_code, mu))
+    version = (
+        VERSION_V2
+        if any(code in (DTYPE_BF16, DTYPE_PS_F32) for _, _, code, _ in resolved)
+        else VERSION_V1
+    )
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<II", version, len(resolved))
+    for name, a, dtype_code, mu in resolved:
         nb = name.encode("utf-8")
         out += struct.pack("<I", len(nb))
         out += nb
-        out += struct.pack("<II", dtype_code, a.ndim)
+        out += struct.pack("<I", dtype_code)
+        if dtype_code == DTYPE_PS_F32:
+            out += struct.pack("<I", mu)
+        out += struct.pack("<I", a.ndim)
         for d in a.shape:
             out += struct.pack("<Q", d)
         out += a.tobytes(order="C")
@@ -52,13 +153,15 @@ def write_tensors(path: str, tensors: List[Tuple[str, np.ndarray]]) -> None:
 
 
 def read_tensors(path: str) -> Dict[str, np.ndarray]:
-    """Read back into a dict (order preserved in py3.7+ dicts)."""
+    """Read back into a dict (insertion order preserved). Accepts v1 and
+    v2; bf16 and ps-f32 payloads are returned as their exact float32
+    values (dequantization is lossless)."""
     with open(path, "rb") as f:
         data = f.read()
     if data[:8] != MAGIC:
         raise ValueError("bad magic: not a .lamp file")
     version, count = struct.unpack_from("<II", data, 8)
-    if version != VERSION:
+    if version not in (VERSION_V1, VERSION_V2):
         raise ValueError(f"unsupported version {version}")
     off = 16
     out: Dict[str, np.ndarray] = {}
@@ -67,13 +170,34 @@ def read_tensors(path: str) -> Dict[str, np.ndarray]:
         off += 4
         name = data[off : off + name_len].decode("utf-8")
         off += name_len
-        dtype_code, ndim = struct.unpack_from("<II", data, off)
-        off += 8
+        (dtype_code,) = struct.unpack_from("<I", data, off)
+        off += 4
+        if dtype_code in (DTYPE_BF16, DTYPE_PS_F32) and version < VERSION_V2:
+            raise ValueError(f"dtype code {dtype_code} requires v2, file is v{version}")
+        if dtype_code == DTYPE_PS_F32:
+            (mu,) = struct.unpack_from("<I", data, off)
+            off += 4
+            if not 1 <= mu <= 23:
+                raise ValueError(f"ps-f32 tensor {name!r}: mu {mu} out of 1..=23")
+        (ndim,) = struct.unpack_from("<I", data, off)
+        off += 4
         dims = struct.unpack_from(f"<{ndim}Q", data, off)
         off += 8 * ndim
         n = int(np.prod(dims)) if ndim else 1
-        dt = "<f4" if dtype_code == 0 else "<i4"
-        arr = np.frombuffer(data, dtype=dt, count=n, offset=off).reshape(dims)
-        off += 4 * n
-        out[name] = arr.copy()
+        if dtype_code == DTYPE_F32:
+            arr = np.frombuffer(data, dtype="<f4", count=n, offset=off)
+            off += 4 * n
+        elif dtype_code == DTYPE_I32:
+            arr = np.frombuffer(data, dtype="<i4", count=n, offset=off)
+            off += 4 * n
+        elif dtype_code == DTYPE_BF16:
+            raw = np.frombuffer(data, dtype="<u2", count=n, offset=off)
+            off += 2 * n
+            arr = bf16_to_f32(raw)
+        elif dtype_code == DTYPE_PS_F32:
+            arr = np.frombuffer(data, dtype="<f4", count=n, offset=off)
+            off += 4 * n
+        else:
+            raise ValueError(f"unknown dtype code {dtype_code}")
+        out[name] = arr.reshape(dims).copy()
     return out

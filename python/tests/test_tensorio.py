@@ -51,3 +51,53 @@ def test_float64_downcast(tmp_path):
     back = tensorio.read_tensors(path)
     assert back["w"].dtype == np.float32
     np.testing.assert_array_equal(back["w"], w.astype(np.float32))
+
+
+def test_v2_bf16_and_ps_roundtrip(tmp_path):
+    path = str(tmp_path / "t.lamp")
+    rng = np.random.default_rng(7)
+    w = rng.normal(size=(3, 4)).astype(np.float32)
+    tensorio.write_tensors(
+        path,
+        [("wb", w), ("wp", w), ("bias", w[0])],
+        formats={"wb": "bf16", "wp": "ps6"},
+    )
+    data = open(path, "rb").read()
+    assert int.from_bytes(data[8:12], "little") == 2  # v2 once quantized
+    back = tensorio.read_tensors(path)
+    # bf16: exact dequant of the RNE-narrowed values.
+    np.testing.assert_array_equal(
+        back["wb"], tensorio.bf16_to_f32(tensorio.f32_to_bf16(w)).reshape(3, 4)
+    )
+    # ps: payload is mu-rounded, dequant is the identity.
+    np.testing.assert_array_equal(back["wp"], tensorio.round_to_mantissa(w, 6))
+    np.testing.assert_array_equal(back["bias"], w[0])
+    # Quantization is idempotent (the dequant-is-exact contract).
+    np.testing.assert_array_equal(
+        tensorio.round_to_mantissa(back["wp"], 6), back["wp"]
+    )
+    np.testing.assert_array_equal(
+        tensorio.bf16_to_f32(tensorio.f32_to_bf16(back["wb"])).reshape(3, 4),
+        back["wb"],
+    )
+
+
+def test_f32_only_files_stay_v1(tmp_path):
+    # Files with no quantized tensor keep the legacy version so old
+    # readers still load them.
+    path = str(tmp_path / "t.lamp")
+    tensorio.write_tensors(path, [("x", np.zeros(4, np.float32))])
+    data = open(path, "rb").read()
+    assert int.from_bytes(data[8:12], "little") == 1
+
+
+def test_unknown_format_rejected(tmp_path):
+    path = str(tmp_path / "t.lamp")
+    with pytest.raises(ValueError):
+        tensorio.write_tensors(
+            path, [("x", np.zeros(1, np.float32))], formats={"x": "fp8"}
+        )
+    with pytest.raises(ValueError):
+        tensorio.write_tensors(
+            path, [("x", np.zeros(1, np.float32))], formats={"x": "ps24"}
+        )

@@ -12,7 +12,7 @@
 
 use super::policy::PrecisionPolicy;
 use crate::error::{Error, Result};
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, WeightFormat};
 use crate::model::{
     forward_with, Decode, DecodeSession, ForwardScratch, LampStats, ModelConfig,
     PrecisionPlan, Weights,
@@ -53,11 +53,14 @@ pub trait Engine {
     /// gate the `Server` applies at `submit()` so an unsupported request
     /// is rejected alone instead of erroring mid-batch and taking its
     /// co-queued requests down with it. The default accepts anything that
-    /// passes range validation; backends with a narrower precision
-    /// surface (the compiled artifact executes attention-site LAMP only)
-    /// tighten it.
+    /// passes range validation *and* whose [`crate::model::WeightPrecision`] requirement
+    /// matches [`Self::weight_format`] — the storage gate lives here so no
+    /// backend can forget it. Backends with a narrower precision surface
+    /// (the compiled artifact executes attention-site LAMP only) tighten
+    /// it further.
     fn validate_policy(&self, policy: &PrecisionPolicy) -> Result<()> {
-        policy.validate()
+        policy.validate()?;
+        require_weight_storage(policy, self.weight_format())
     }
 
     /// Translate a serving policy into the per-site precision plan a
@@ -84,8 +87,30 @@ pub trait Engine {
         )))
     }
 
+    /// The storage format of the weights this backend serves — surfaced
+    /// in `ServerStats` so mixed fleets are attributable per format, and
+    /// checked against each policy's [`crate::model::WeightPrecision`] requirement in
+    /// [`Self::validate_policy`]. The default is f32 (the artifact path
+    /// stages f32 buffers); engines with quantized storage override it.
+    fn weight_format(&self) -> WeightFormat {
+        WeightFormat::F32
+    }
+
     /// Human-readable backend name.
     fn backend(&self) -> &'static str;
+}
+
+/// Shared storage gate: a policy demanding an exact weight format is
+/// rejected unless the engine holds exactly that storage.
+fn require_weight_storage(policy: &PrecisionPolicy, held: WeightFormat) -> Result<()> {
+    if !policy.weights.accepts(held) {
+        return Err(Error::runtime(format!(
+            "policy requires {} weight storage, backend holds {}",
+            policy.weights.label(),
+            held.label()
+        )));
+    }
+    Ok(())
 }
 
 /// Pure-Rust engine.
@@ -105,6 +130,19 @@ pub struct NativeEngine {
 impl NativeEngine {
     pub fn new(weights: Weights) -> Self {
         NativeEngine { weights, pool: None, scratch: Mutex::new(Vec::new()) }
+    }
+
+    /// Re-store the engine's weight matrices under `fmt`
+    /// (`Weights::quantize_to`): the `--weights-fmt` entry point. bf16
+    /// halves resident parameter bytes and decode weight traffic; the
+    /// same-format case (every default `--weights-fmt f32` run) is a
+    /// zero-copy no-op.
+    pub fn with_weight_format(mut self, fmt: WeightFormat) -> Result<Self> {
+        fmt.validate()?;
+        if fmt != self.weights.weight_format() {
+            self.weights = self.weights.quantize_to(fmt)?;
+        }
+        Ok(self)
     }
 
     /// Load trained weights from the artifact store.
@@ -195,7 +233,16 @@ impl Engine for NativeEngine {
     /// shares this engine's weights, so its logits are bit-identical to the
     /// full forward pass (DESIGN.md §Bit-exactness).
     fn decode_session(&self, policy: &PrecisionPolicy, seed: u64) -> Result<DecodeSession<'_>> {
+        require_weight_storage(policy, self.weight_format())?;
         Ok(DecodeSession::new(&self.weights, self.decode_precision(policy), seed))
+    }
+
+    /// Storage requirements are checked against the actual weights (via
+    /// the trait-default `validate_policy` storage gate), so a request
+    /// pinned to e.g. bf16 storage is rejected at submit by an f32-holding
+    /// engine instead of silently serving the wrong format.
+    fn weight_format(&self) -> WeightFormat {
+        self.weights.weight_format()
     }
 
     fn backend(&self) -> &'static str {
@@ -247,6 +294,7 @@ impl Engine for PjrtEngine {
         // same gate at submit() via `validate_policy`, so a whole-model
         // request never reaches a cut batch here.
         require_attention_only(policy)?;
+        require_weight_storage(policy, self.weight_format())?;
         let att = policy.attention;
         let resp = self.executor.execute(&ModelRequest {
             tokens: tokens.to_vec(),
@@ -268,9 +316,14 @@ impl Engine for PjrtEngine {
         })
     }
 
+    /// The artifact stages f32 weight buffers only: a request pinned to a
+    /// non-f32 storage format is rejected at submit, not mid-batch (the
+    /// trait-default [`Engine::weight_format`] is f32, so the shared
+    /// storage gate enforces exactly that).
     fn validate_policy(&self, policy: &PrecisionPolicy) -> Result<()> {
         policy.validate()?;
-        require_attention_only(policy)
+        require_attention_only(policy)?;
+        require_weight_storage(policy, self.weight_format())
     }
 
     fn backend(&self) -> &'static str {
@@ -288,7 +341,7 @@ mod tests {
     fn native_engine_batch_and_stats() {
         let cfg = ModelConfig::nano();
         let mut rng = Rng::new(1);
-        let engine = NativeEngine::new(Weights::random(&cfg, &mut rng));
+        let engine = NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap());
         let tokens = vec![vec![1u32; 8], vec![2u32; 8]];
         let out = engine
             .infer(&tokens, &PrecisionPolicy::lamp(3, 0.01, Rule::Strict), 0)
@@ -304,7 +357,7 @@ mod tests {
     fn parallel_engine_bit_identical_and_generates() {
         let cfg = ModelConfig::nano();
         let mut rng = Rng::new(3);
-        let w = Weights::random(&cfg, &mut rng);
+        let w = Weights::random(&cfg, &mut rng).unwrap();
         let seq_engine = NativeEngine::new(w.clone());
         let par_engine = NativeEngine::new(w).with_threads(3);
         let tokens = vec![vec![1u32; 12], vec![9u32; 12]];
@@ -361,7 +414,7 @@ mod tests {
         use crate::coordinator::policy::SitePolicy;
         let cfg = ModelConfig::nano();
         let mut rng = Rng::new(5);
-        let engine = NativeEngine::new(Weights::random(&cfg, &mut rng));
+        let engine = NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap());
         let policy = PrecisionPolicy::lamp(4, 0.1, Rule::Strict)
             .with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict))
             .with_sampler(SitePolicy::uniform(7));
@@ -381,7 +434,7 @@ mod tests {
     fn native_reference_recomputes_nothing() {
         let cfg = ModelConfig::nano();
         let mut rng = Rng::new(2);
-        let engine = NativeEngine::new(Weights::random(&cfg, &mut rng));
+        let engine = NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap());
         let out = engine
             .infer(&[vec![3u32; 4]], &PrecisionPolicy::reference(), 0)
             .unwrap();

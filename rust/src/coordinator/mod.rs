@@ -30,6 +30,8 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 
+pub use crate::linalg::WeightFormat;
+pub use crate::model::WeightPrecision;
 pub use batcher::Batcher;
 pub use engine::{Engine, EngineOutput, NativeEngine, PjrtEngine};
 pub use policy::{PrecisionPolicy, Rule, SitePolicy};

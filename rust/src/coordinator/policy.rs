@@ -15,7 +15,7 @@
 
 use crate::error::{Error, Result};
 use crate::lamp::softmax::SoftmaxRule;
-use crate::model::{AttentionPrecision, PrecisionPlan, SitePrecision};
+use crate::model::{AttentionPrecision, PrecisionPlan, SitePrecision, WeightPrecision};
 
 /// Selection rule, coordinator-facing (mirrors kernel mode codes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -134,6 +134,11 @@ pub struct PrecisionPolicy {
     pub norm: SitePolicy,
     /// Sampler site (softmax ∘ logits matmul).
     pub sampler: SitePolicy,
+    /// Weight-storage requirement ([`WeightPrecision::Any`] by default:
+    /// serve on whatever storage the engine holds). Backends check it at
+    /// submit via `Engine::validate_policy` — the compiled PJRT artifact
+    /// executes f32 weight buffers only.
+    pub weights: WeightPrecision,
 }
 
 impl PrecisionPolicy {
@@ -144,6 +149,7 @@ impl PrecisionPolicy {
             mlp: SitePolicy::reference(),
             norm: SitePolicy::reference(),
             sampler: SitePolicy::reference(),
+            weights: WeightPrecision::Any,
         }
     }
 
@@ -160,7 +166,13 @@ impl PrecisionPolicy {
     /// The same (μ, τ, rule) at every composition site.
     pub fn whole_model(mu: u32, tau: f32, rule: Rule) -> Self {
         let site = SitePolicy::lamp(mu, tau, rule);
-        PrecisionPolicy { attention: site, mlp: site, norm: site, sampler: site }
+        PrecisionPolicy {
+            attention: site,
+            mlp: site,
+            norm: site,
+            sampler: site,
+            weights: WeightPrecision::Any,
+        }
     }
 
     /// Replace the MLP site.
@@ -178,6 +190,12 @@ impl PrecisionPolicy {
     /// Replace the sampler site.
     pub fn with_sampler(mut self, site: SitePolicy) -> Self {
         self.sampler = site;
+        self
+    }
+
+    /// Replace the weight-storage requirement.
+    pub fn with_weights(mut self, weights: WeightPrecision) -> Self {
+        self.weights = weights;
         self
     }
 
@@ -227,6 +245,9 @@ impl PrecisionPolicy {
                 s.push_str(&format!("+{name}[{}]", site.fragment()));
             }
         }
+        if self.weights != WeightPrecision::Any {
+            s.push_str(&format!("+weights[{}]", self.weights.label()));
+        }
         s
     }
 
@@ -251,6 +272,7 @@ impl PrecisionPolicy {
             mlp: self.mlp.to_site_precision(ref_len),
             norm: self.norm.to_site_precision(ref_len),
             sampler: self.sampler.to_site_precision(ref_len),
+            weights: self.weights,
         }
     }
 
@@ -382,6 +404,29 @@ mod tests {
         assert!(a.batch_compatible(&base.with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict))));
         assert!(!a.batch_compatible(&b));
         assert!(!a.batch_compatible(&c));
+    }
+
+    #[test]
+    fn weights_requirement_in_label_validation_and_batching() {
+        use crate::linalg::WeightFormat;
+        let base = PrecisionPolicy::lamp(4, 0.1, Rule::Strict);
+        assert_eq!(base.weights, WeightPrecision::Any);
+        let bf = base.with_weights(WeightPrecision::Exact(WeightFormat::Bf16));
+        bf.validate().unwrap();
+        assert!(bf.label().contains("weights[bf16]"), "{}", bf.label());
+        assert!(!base.label().contains("weights"), "{}", base.label());
+        // Storage requirements key batches like any other policy field.
+        assert!(!base.batch_compatible(&bf));
+        assert!(bf.batch_compatible(&base.with_weights(WeightPrecision::Exact(
+            WeightFormat::Bf16
+        ))));
+        // Invalid storage μ is rejected at the policy front door.
+        let bad = base.with_weights(WeightPrecision::Exact(WeightFormat::PsRounded {
+            mu: 42,
+        }));
+        assert!(bad.validate().is_err());
+        // The translation threads the requirement into the plan.
+        assert_eq!(bf.to_plan(64).weights, bf.weights);
     }
 
     #[test]

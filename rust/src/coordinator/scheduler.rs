@@ -523,7 +523,7 @@ mod tests {
 
     fn engine() -> NativeEngine {
         let mut rng = Rng::new(11);
-        NativeEngine::new(Weights::random(&ModelConfig::nano(), &mut rng))
+        NativeEngine::new(Weights::random(&ModelConfig::nano(), &mut rng).unwrap())
     }
 
     fn greedy(id: u64, prompt: Vec<u32>, n: usize, policy: PrecisionPolicy) -> GenerateRequest {

@@ -57,6 +57,10 @@ pub struct ServerStats {
     /// Recompute rate per composition site (attention, mlp, norm, sampler)
     /// over the latest generation drive.
     pub recompute_rate_by_site: Vec<(String, f64)>,
+    /// The engine's active weight-storage format (`WeightFormat::label`):
+    /// `f32`, `bf16`, or `ps<mu>` — alongside the per-site rates so mixed
+    /// fleets of requests are attributable per format.
+    pub weight_format: String,
 }
 
 /// Synchronous batching server over one engine.
@@ -225,6 +229,7 @@ impl Server {
 
     /// Final statistics snapshot.
     pub fn stats(&mut self) -> ServerStats {
+        self.stats.weight_format = self.engine.weight_format().label();
         let mut acc = Accumulator::new();
         for &l in &self.latencies {
             acc.push(l);
@@ -258,7 +263,7 @@ mod tests {
         let cfg = ModelConfig::nano();
         let mut rng = Rng::new(1);
         Server::new(
-            Box::new(NativeEngine::new(Weights::random(&cfg, &mut rng))),
+            Box::new(NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap())),
             Duration::from_millis(1),
         )
     }
@@ -330,7 +335,7 @@ mod tests {
 
         let cfg = ModelConfig::nano();
         let mut rng = Rng::new(1);
-        let weights = Weights::random(&cfg, &mut rng);
+        let weights = Weights::random(&cfg, &mut rng).unwrap();
         let oracle = NativeEngine::new(weights.clone());
         let mut s = Server::new(Box::new(NativeEngine::new(weights)), Duration::from_millis(1));
 
@@ -410,7 +415,7 @@ mod tests {
 
         let cfg = ModelConfig::nano();
         let mut rng = Rng::new(9);
-        let native = NativeEngine::new(Weights::random(&cfg, &mut rng));
+        let native = NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap());
         let mut s = Server::new(Box::new(AttnOnly(cfg, native)), Duration::from_millis(1));
         let ok = PrecisionPolicy::lamp(4, 0.1, Rule::Strict);
         let whole = ok.with_mlp(SitePolicy::lamp(7, 0.5, Rule::Strict));
@@ -469,6 +474,63 @@ mod tests {
             .submit_generate(GenerateRequest::new(3, vec![1], 4, p).with_eos(4000))
             .is_err());
         assert!(s.serve_generation().is_empty(), "nothing valid was queued");
+    }
+
+    #[test]
+    fn stats_surface_active_weight_format_and_bf16_engine_serves() {
+        use crate::coordinator::WeightFormat;
+        let mut s = server();
+        assert_eq!(s.stats().weight_format, "f32");
+        // A bf16-storage engine reports its format and serves requests.
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(31);
+        let engine = NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap())
+            .with_weight_format(WeightFormat::Bf16)
+            .unwrap();
+        let mut s = Server::new(Box::new(engine), Duration::from_millis(1));
+        s.submit(InferenceRequest::new(1, vec![1, 2, 3], PrecisionPolicy::reference()))
+            .unwrap();
+        assert_eq!(s.drain().unwrap().len(), 1);
+        assert_eq!(s.stats().weight_format, "bf16");
+    }
+
+    #[test]
+    fn storage_pinned_policy_gated_at_submit() {
+        use crate::coordinator::{WeightFormat, WeightPrecision};
+        // An f32 engine rejects a bf16-pinned request at submit; a bf16
+        // engine accepts it and rejects the f32-pinned one.
+        let mut f32_server = server();
+        let pinned_bf16 = PrecisionPolicy::reference()
+            .with_weights(WeightPrecision::Exact(WeightFormat::Bf16));
+        let err = f32_server
+            .submit(InferenceRequest::new(1, vec![1], pinned_bf16))
+            .unwrap_err();
+        assert!(err.to_string().contains("weight storage"), "{err}");
+
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(33);
+        let engine = NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap())
+            .with_weight_format(WeightFormat::Bf16)
+            .unwrap();
+        let mut bf16_server = Server::new(Box::new(engine), Duration::from_millis(1));
+        bf16_server
+            .submit(InferenceRequest::new(2, vec![1], pinned_bf16))
+            .unwrap();
+        let pinned_f32 = PrecisionPolicy::reference()
+            .with_weights(WeightPrecision::Exact(WeightFormat::F32));
+        assert!(bf16_server
+            .submit(InferenceRequest::new(3, vec![1], pinned_f32))
+            .is_err());
+        // Generation submits pass through the same gate.
+        use crate::coordinator::request::GenerateRequest;
+        assert!(f32_server
+            .submit_generate(GenerateRequest::new(4, vec![1], 2, pinned_bf16))
+            .is_err());
+        bf16_server
+            .submit_generate(GenerateRequest::new(5, vec![1], 2, pinned_bf16))
+            .unwrap();
+        assert_eq!(bf16_server.drain().unwrap().len(), 1);
+        assert!(!bf16_server.serve_generation().is_empty());
     }
 
     #[test]

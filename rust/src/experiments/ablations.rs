@@ -10,13 +10,17 @@
 //!   non-attention site of the [`PrecisionPlan`](crate::model::plan),
 //!   uniform low precision vs per-site look-ahead repair, measured as the
 //!   max logit deviation from the FP32 reference.
+//! * `weight_storage`: storage format × recomputation rate — quantized
+//!   parameter storage ([`crate::linalg::WeightTensor`]: bf16 / PS(μ))
+//!   crossed with uniform-PS vs whole-model-LAMP compute at ≤5% overall
+//!   recompute rate, against the f32-storage FP32 reference.
 
 use crate::benchkit::{fnum, Table};
 use crate::error::Result;
 use crate::lamp::softmax::{select_strict, softmax, SoftmaxRule};
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, WeightFormat};
 use crate::metrics::Accumulator;
-use crate::model::{forward, ModelConfig, PrecisionPlan, SitePrecision, Weights};
+use crate::model::{forward, LampStats, ModelConfig, PrecisionPlan, SitePrecision, Weights};
 use crate::softfloat::dot::{dot_f32, dot_f64, dot_kahan, dot_ps, dot_ps_stochastic};
 use crate::util::Rng;
 
@@ -113,7 +117,7 @@ pub fn recompute_algorithms() -> Result<Vec<Table>> {
 /// site's recompute rate).
 pub fn plan_sites() -> Result<Vec<Table>> {
     let mut rng = Rng::new(17);
-    let weights = Weights::random(&ModelConfig::nano(), &mut rng);
+    let weights = Weights::random(&ModelConfig::nano(), &mut rng).unwrap();
     let tokens: Vec<u32> = (0..24).map(|i| (i * 11 + 3) % 128).collect();
     let reference = forward(&weights, &tokens, PrecisionPlan::reference(), 0)?;
     let mut t = Table::new(
@@ -159,9 +163,152 @@ pub fn plan_sites() -> Result<Vec<Table>> {
     Ok(vec![t])
 }
 
+/// Overall recomputation rate across every composition site.
+fn overall_rate(stats: &LampStats) -> f64 {
+    let recomputed = stats.recomputed
+        + stats.mlp.recomputed
+        + stats.norm.recomputed
+        + stats.sampler.recomputed;
+    let total =
+        stats.causal_total + stats.mlp.total + stats.norm.total + stats.sampler.total;
+    if total == 0 {
+        0.0
+    } else {
+        recomputed as f64 / total as f64
+    }
+}
+
+/// Storage format × per-site recomputation — the new scenario opened by
+/// mixed-precision weight storage: how much does LAMP compute-repair buy
+/// back when the parameters themselves are stored quantized?
+///
+/// For each storage format (f32 control, bf16, PS(8), PS(4)) the nano
+/// model runs three compute regimes against the f32-storage FP32
+/// reference: reference compute (isolating the pure storage error — the
+/// irreducible floor), uniform PS(3) compute, and whole-model LAMP at
+/// PS(3) with the tightest per-site τ rung whose *overall* recompute rate
+/// stays ≤ 5% (the paper's low-overhead band). LAMP cannot repair the
+/// storage error — the weights are what they are — but it repairs the
+/// accumulation error stacked on top, pulling the total back toward the
+/// storage floor.
+pub fn weight_storage() -> Result<Vec<Table>> {
+    let mut rng = Rng::new(19);
+    let weights = Weights::random(&ModelConfig::nano(), &mut rng)?;
+    let tokens: Vec<u32> = (0..24).map(|i| (i * 13 + 5) % 128).collect();
+    let reference = forward(&weights, &tokens, PrecisionPlan::reference(), 0)?;
+    let mu = 3;
+    let uniform = PrecisionPlan::whole_model(SitePrecision::uniform(mu));
+    // τ rungs loosest → tightest: softmax-relative thresholds for the
+    // attention/sampler sites, absolute sensitivities for mlp/norm.
+    // Tightening τ only adds repairs (monotone), so we walk the ladder and
+    // keep the tightest plan whose overall rate fits the 5% budget.
+    let softmax_taus = [0.9f32, 0.5, 0.2, 0.1, 0.05, 0.02];
+    let abs_taus = [8.0f32, 4.0, 3.0, 2.0, 1.5, 1.0];
+    let lamp_rung = |i: usize| -> PrecisionPlan {
+        PrecisionPlan::whole_model(SitePrecision::lamp(
+            mu,
+            softmax_taus[i],
+            SoftmaxRule::Strict,
+        ))
+        .with_mlp(SitePrecision::lamp(mu, abs_taus[i], SoftmaxRule::Strict))
+        .with_norm(SitePrecision::lamp(mu, abs_taus[i], SoftmaxRule::Strict))
+        .with_sampler(SitePrecision::lamp(mu, softmax_taus[i], SoftmaxRule::Strict))
+    };
+    // Probe on the f32-storage weights with a small safety margin under
+    // the 5% budget: selection counts drift slightly across storage
+    // formats (the rules see the quantized values), and the margin keeps
+    // every format's realized rate inside the band. If even the loosest
+    // rung exceeds the budget, fail loudly instead of reporting a plan
+    // that breaks the ≤5% contract the table documents.
+    let mut chosen = None;
+    for i in 0..softmax_taus.len() {
+        let probe = forward(&weights, &tokens, lamp_rung(i), 0)?;
+        if overall_rate(&probe.stats) <= 0.04 {
+            chosen = Some(lamp_rung(i));
+        } else {
+            break;
+        }
+    }
+    let chosen = chosen.ok_or_else(|| {
+        crate::error::Error::config(
+            "weight_storage ablation: no τ rung fits the 5% recompute budget".to_string(),
+        )
+    })?;
+
+    let mean_err = |m: &Matrix| -> f64 {
+        let n = m.data().len().max(1);
+        m.data()
+            .iter()
+            .zip(reference.logits.data())
+            .map(|(&a, &b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / n as f64
+    };
+    let mut t = Table::new(
+        "ablation — weight storage format x LAMP recomputation (nano, PS(3) compute)",
+        &[
+            "storage",
+            "max |Δ| storage only",
+            "max |Δ| uniform PS(3)",
+            "max |Δ| LAMP",
+            "mean |Δ| uniform",
+            "mean |Δ| LAMP",
+            "overall recompute%",
+        ],
+    );
+    let formats = [
+        WeightFormat::F32,
+        WeightFormat::Bf16,
+        WeightFormat::PsRounded { mu: 8 },
+        WeightFormat::PsRounded { mu: 4 },
+    ];
+    for fmt in formats {
+        let q = weights.quantize_to(fmt)?;
+        let storage_only = forward(&q, &tokens, PrecisionPlan::reference(), 0)?;
+        let uni = forward(&q, &tokens, uniform, 0)?;
+        let rep = forward(&q, &tokens, chosen, 0)?;
+        t.row(vec![
+            fmt.label(),
+            fnum(storage_only.logits.max_abs_diff(&reference.logits)? as f64),
+            fnum(uni.logits.max_abs_diff(&reference.logits)? as f64),
+            fnum(rep.logits.max_abs_diff(&reference.logits)? as f64),
+            fnum(mean_err(&uni.logits)),
+            fnum(mean_err(&rep.logits)),
+            format!("{:.3}", 100.0 * overall_rate(&rep.stats)),
+        ]);
+    }
+    Ok(vec![t])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn weight_storage_ablation_lamp_repairs_within_budget() {
+        let tables = weight_storage().unwrap();
+        let rows = &tables[0].rows;
+        assert_eq!(rows.len(), 4);
+        // f32 control: no storage error.
+        assert_eq!(rows[0][0], "f32");
+        assert_eq!(rows[0][1].parse::<f64>().unwrap(), 0.0);
+        for row in rows {
+            let uni_mean: f64 = row[4].parse().unwrap();
+            let lamp_mean: f64 = row[5].parse().unwrap();
+            let rate: f64 = row[6].parse().unwrap();
+            // The acceptance criterion: LAMP recomputation reduces the
+            // quantized-storage forward error at ≤ 5% recompute rate
+            // (mean |Δlogit| — the aggregate the repair provably targets;
+            // the max column is reported but can sit on an unrepaired
+            // product).
+            assert!(
+                lamp_mean < uni_mean,
+                "{}: lamp={lamp_mean} uniform={uni_mean}",
+                row[0]
+            );
+            assert!(rate > 0.0 && rate <= 5.0, "{}: rate={rate}%", row[0]);
+        }
+    }
 
     #[test]
     fn plan_sites_ablation_runs_and_repair_helps() {

@@ -89,7 +89,7 @@ pub fn load_weights(config_name: &str, opts: &EvalOptions) -> Result<Arc<Weights
     );
     let cfg = ModelConfig::by_name(config_name)?;
     let mut rng = Rng::new(0xA11CE ^ config_name.len() as u64);
-    Ok(Arc::new(Weights::random(&cfg, &mut rng)))
+    Ok(Arc::new(Weights::random(&cfg, &mut rng)?))
 }
 
 impl EvalPanel {
@@ -246,7 +246,7 @@ mod tests {
 
     fn nano_weights() -> Arc<Weights> {
         let mut rng = Rng::new(3);
-        Arc::new(Weights::random(&ModelConfig::nano(), &mut rng))
+        Arc::new(Weights::random(&ModelConfig::nano(), &mut rng).unwrap())
     }
 
     #[test]

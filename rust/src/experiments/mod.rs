@@ -37,8 +37,9 @@ pub fn run(name: &str, opts: &EvalOptions) -> Result<Vec<Table>> {
         "ablation_rounding" => ablations::rounding_modes(),
         "ablation_recompute" => ablations::recompute_algorithms(),
         "ablation_plan_sites" => ablations::plan_sites(),
+        "ablation_weight_storage" => ablations::weight_storage(),
         other => Err(Error::config(format!(
-            "unknown experiment {other:?} (fig1..fig7|table1|appendix_b|ablation_rounding|ablation_recompute|ablation_plan_sites)"
+            "unknown experiment {other:?} (fig1..fig7|table1|appendix_b|ablation_rounding|ablation_recompute|ablation_plan_sites|ablation_weight_storage)"
         ))),
     }
 }
@@ -58,6 +59,7 @@ pub fn all_names() -> &'static [&'static str] {
         "ablation_rounding",
         "ablation_recompute",
         "ablation_plan_sites",
+        "ablation_weight_storage",
     ]
 }
 

@@ -1,8 +1,17 @@
 //! Matrix multiplication under FP32 and PS(μ) accumulation, plus masked
 //! FP32 recomputation — the LAMP primitive: recompute only the inner
 //! products flagged by the selection rule.
+//!
+//! The `*_wt` variants read [`WeightTensor`] storage directly with
+//! dequantization fused into the inner loop: f32-backed storage (F32 and
+//! PS-rounded formats) runs the *identical* slice kernels as the `Matrix`
+//! versions, and bf16 storage widens each weight in-register
+//! ([`super::tensor::bf16_to_f32`], a 16-bit shift) inside the same loop
+//! structure — so a fused call is **bitwise identical** to dequantizing
+//! the weights first and calling the f32 kernel, while streaming half the
+//! weight bytes.
 
-use super::tensor::Matrix;
+use super::tensor::{bf16_to_f32, Matrix, WeightStore, WeightTensor};
 use crate::error::{Error, Result};
 use crate::softfloat::dot::{dot_f32, dot_ps};
 use crate::softfloat::round::round_to_mantissa;
@@ -87,6 +96,14 @@ pub fn matvec_bias_into(x_row: &[f32], w: &Matrix, bias: &[f32], out: &mut [f32]
     debug_assert_eq!(x_row.len(), w.rows());
     debug_assert_eq!(out.len(), w.cols());
     debug_assert!(bias.is_empty() || bias.len() == w.cols());
+    matvec_bias_flat(x_row, w.data(), w.cols(), bias, out);
+}
+
+/// Slice-level body of [`matvec_bias_into`] over a flat row-major [k, n]
+/// f32 buffer — shared with the f32-backed arm of [`matvec_bias_into_wt`]
+/// so the two are bit-identical by construction.
+#[inline]
+fn matvec_bias_flat(x_row: &[f32], wdata: &[f32], n: usize, bias: &[f32], out: &mut [f32]) {
     if bias.is_empty() {
         for o in out.iter_mut() {
             *o = 0.0;
@@ -95,10 +112,45 @@ pub fn matvec_bias_into(x_row: &[f32], w: &Matrix, bias: &[f32], out: &mut [f32]
         out.copy_from_slice(bias);
     }
     for (p, &xv) in x_row.iter().enumerate() {
-        let wrow = w.row(p);
+        let wrow = &wdata[p * n..(p + 1) * n];
         for (o, &wv) in out.iter_mut().zip(wrow) {
             *o += xv * wv;
         }
+    }
+}
+
+/// bf16 twin of [`matvec_bias_flat`]: the same p–j loop with each weight
+/// widened in-register. Identical f32 arithmetic on identical values in
+/// identical order ⇒ bitwise equal to dequantize-then-`matvec_bias_into`.
+#[inline]
+fn matvec_bias_flat_bf16(x_row: &[f32], wdata: &[u16], n: usize, bias: &[f32], out: &mut [f32]) {
+    if bias.is_empty() {
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+    } else {
+        out.copy_from_slice(bias);
+    }
+    for (p, &xv) in x_row.iter().enumerate() {
+        let wrow = &wdata[p * n..(p + 1) * n];
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o += xv * bf16_to_f32(wv);
+        }
+    }
+}
+
+/// [`matvec_bias_into`] over mixed-precision weight storage with fused
+/// dequantization — the decode hot path reads the stored bytes directly.
+#[inline]
+pub fn matvec_bias_into_wt(x_row: &[f32], w: &WeightTensor, bias: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x_row.len(), w.rows());
+    debug_assert_eq!(out.len(), w.cols());
+    debug_assert!(bias.is_empty() || bias.len() == w.cols());
+    match w.store() {
+        WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => {
+            matvec_bias_flat(x_row, d, w.cols(), bias, out)
+        }
+        WeightStore::Bf16(d) => matvec_bias_flat_bf16(x_row, d, w.cols(), bias, out),
     }
 }
 
@@ -122,11 +174,25 @@ pub fn matvec_ps_bias_into(
     debug_assert_eq!(x_row.len(), w.rows());
     debug_assert_eq!(out.len(), w.cols());
     debug_assert!(bias.is_empty() || bias.len() == w.cols());
+    matvec_ps_bias_flat(x_row, w.data(), w.cols(), bias, mu, out);
+}
+
+/// Slice-level body of [`matvec_ps_bias_into`] (shared with the f32-backed
+/// arm of [`matvec_ps_bias_into_wt`]).
+#[inline]
+fn matvec_ps_bias_flat(
+    x_row: &[f32],
+    wdata: &[f32],
+    n: usize,
+    bias: &[f32],
+    mu: u32,
+    out: &mut [f32],
+) {
     for o in out.iter_mut() {
         *o = 0.0;
     }
     for (p, &xv) in x_row.iter().enumerate() {
-        let wrow = w.row(p);
+        let wrow = &wdata[p * n..(p + 1) * n];
         for (o, &wv) in out.iter_mut().zip(wrow) {
             *o = round_to_mantissa(xv.mul_add(wv, *o), mu);
         }
@@ -135,6 +201,53 @@ pub fn matvec_ps_bias_into(
         for (o, &b) in out.iter_mut().zip(bias) {
             *o += b;
         }
+    }
+}
+
+/// bf16 twin of [`matvec_ps_bias_flat`] — same `round(fma(..))` chain on
+/// the widened weights.
+#[inline]
+fn matvec_ps_bias_flat_bf16(
+    x_row: &[f32],
+    wdata: &[u16],
+    n: usize,
+    bias: &[f32],
+    mu: u32,
+    out: &mut [f32],
+) {
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for (p, &xv) in x_row.iter().enumerate() {
+        let wrow = &wdata[p * n..(p + 1) * n];
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o = round_to_mantissa(xv.mul_add(bf16_to_f32(wv), *o), mu);
+        }
+    }
+    if !bias.is_empty() {
+        for (o, &b) in out.iter_mut().zip(bias) {
+            *o += b;
+        }
+    }
+}
+
+/// [`matvec_ps_bias_into`] over mixed-precision weight storage with fused
+/// dequantization.
+pub fn matvec_ps_bias_into_wt(
+    x_row: &[f32],
+    w: &WeightTensor,
+    bias: &[f32],
+    mu: u32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x_row.len(), w.rows());
+    debug_assert_eq!(out.len(), w.cols());
+    debug_assert!(bias.is_empty() || bias.len() == w.cols());
+    match w.store() {
+        WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => {
+            matvec_ps_bias_flat(x_row, d, w.cols(), bias, mu, out)
+        }
+        WeightStore::Bf16(d) => matvec_ps_bias_flat_bf16(x_row, d, w.cols(), bias, mu, out),
     }
 }
 
@@ -149,6 +262,33 @@ pub fn matvec_col_f32(x_row: &[f32], w: &Matrix, bias: &[f32], j: usize) -> f32 
     let mut c = 0.0f32;
     for (p, &xv) in x_row.iter().enumerate() {
         c = xv.mul_add(w.row(p)[j], c);
+    }
+    if bias.is_empty() {
+        c
+    } else {
+        c + bias[j]
+    }
+}
+
+/// [`matvec_col_f32`] over mixed-precision weight storage: the same
+/// sequential-FMA chain down the stored column, dequantizing on the fly.
+#[inline]
+pub fn matvec_col_f32_wt(x_row: &[f32], w: &WeightTensor, bias: &[f32], j: usize) -> f32 {
+    debug_assert_eq!(x_row.len(), w.rows());
+    debug_assert!(j < w.cols());
+    let n = w.cols();
+    let mut c = 0.0f32;
+    match w.store() {
+        WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => {
+            for (p, &xv) in x_row.iter().enumerate() {
+                c = xv.mul_add(d[p * n + j], c);
+            }
+        }
+        WeightStore::Bf16(d) => {
+            for (p, &xv) in x_row.iter().enumerate() {
+                c = xv.mul_add(bf16_to_f32(d[p * n + j]), c);
+            }
+        }
     }
     if bias.is_empty() {
         c
@@ -180,6 +320,86 @@ pub fn dot_unrolled4(a: &[f32], b: &[f32]) -> f32 {
         p += 1;
     }
     s
+}
+
+/// bf16 twin of [`dot_unrolled4`] — identical unroll structure on the
+/// widened weights, so it is bitwise equal to dequantize-then-
+/// [`dot_unrolled4`].
+#[inline]
+fn dot_unrolled4_bf16(a: &[f32], b: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let k = a.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut p = 0;
+    while p + 4 <= k {
+        s0 += a[p] * bf16_to_f32(b[p]);
+        s1 += a[p + 1] * bf16_to_f32(b[p + 1]);
+        s2 += a[p + 2] * bf16_to_f32(b[p + 2]);
+        s3 += a[p + 3] * bf16_to_f32(b[p + 3]);
+        p += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while p < k {
+        s += a[p] * bf16_to_f32(b[p]);
+        p += 1;
+    }
+    s
+}
+
+/// Contiguous row `r` of a [n, k] weight tensor dotted with `x` via the
+/// 4-way-unrolled FP32 kernel, dequantizing on the fly — the reference
+/// unembedding row over mixed-precision `wte` storage.
+#[inline]
+pub fn wt_row_dot_unrolled4(x: &[f32], w: &WeightTensor, r: usize) -> f32 {
+    let k = w.cols();
+    match w.store() {
+        WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => {
+            dot_unrolled4(x, &d[r * k..(r + 1) * k])
+        }
+        WeightStore::Bf16(d) => dot_unrolled4_bf16(x, &d[r * k..(r + 1) * k]),
+    }
+}
+
+/// Contiguous row `r` of a [n, k] weight tensor dotted with `x` under the
+/// per-step PS(μ) chain of [`dot_ps`], dequantizing on the fly — the
+/// sampler-site low-precision logit dot over mixed-precision storage.
+#[inline]
+pub fn wt_row_dot_ps(x: &[f32], w: &WeightTensor, r: usize, mu: u32) -> f32 {
+    let k = w.cols();
+    match w.store() {
+        WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => {
+            dot_ps(x, &d[r * k..(r + 1) * k], mu)
+        }
+        WeightStore::Bf16(d) => {
+            let row = &d[r * k..(r + 1) * k];
+            let mut c = 0.0f32;
+            for i in 0..x.len() {
+                c = round_to_mantissa(x[i].mul_add(bf16_to_f32(row[i]), c), mu);
+            }
+            c
+        }
+    }
+}
+
+/// Contiguous row `r` of a [n, k] weight tensor dotted with `x` via the
+/// sequential-FMA FP32 chain of [`dot_f32`], dequantizing on the fly —
+/// the sampler-site repair kernel over mixed-precision storage.
+#[inline]
+pub fn wt_row_dot_f32(x: &[f32], w: &WeightTensor, r: usize) -> f32 {
+    let k = w.cols();
+    match w.store() {
+        WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => {
+            dot_f32(x, &d[r * k..(r + 1) * k])
+        }
+        WeightStore::Bf16(d) => {
+            let row = &d[r * k..(r + 1) * k];
+            let mut c = 0.0f32;
+            for i in 0..x.len() {
+                c = x[i].mul_add(bf16_to_f32(row[i]), c);
+            }
+            c
+        }
+    }
 }
 
 fn check_bias_shapes(x: &Matrix, w: &Matrix, bias: &[f32]) -> Result<()> {
@@ -232,6 +452,49 @@ pub fn matmul_bias_fast(x: &Matrix, w: &Matrix, bias: &[f32]) -> Result<Matrix> 
     Ok(c)
 }
 
+fn check_bias_shapes_wt(x: &Matrix, w: &WeightTensor, bias: &[f32]) -> Result<()> {
+    if x.cols() != w.rows() {
+        return Err(Error::shape(format!(
+            "matmul_bias_into_wt: {:?} x {:?}",
+            x.shape(),
+            w.shape()
+        )));
+    }
+    if !bias.is_empty() && bias.len() != w.cols() {
+        return Err(Error::shape(format!(
+            "matmul_bias_into_wt: bias {} != n {}",
+            bias.len(),
+            w.cols()
+        )));
+    }
+    Ok(())
+}
+
+/// [`matmul_bias_into`] over mixed-precision weight storage: each row runs
+/// the fused-dequant [`matvec_bias_into_wt`] row kernel (so the batched
+/// call and the KV-cache decode row stay bit-identical per storage format).
+pub fn matmul_bias_into_wt(
+    x: &Matrix,
+    w: &WeightTensor,
+    bias: &[f32],
+    out: &mut Matrix,
+) -> Result<()> {
+    check_bias_shapes_wt(x, w, bias)?;
+    let m = x.rows();
+    out.resize(m, w.cols());
+    for i in 0..m {
+        matvec_bias_into_wt(x.row(i), w, bias, out.row_mut(i));
+    }
+    Ok(())
+}
+
+/// Allocating wrapper around [`matmul_bias_into_wt`].
+pub fn matmul_bias_fast_wt(x: &Matrix, w: &WeightTensor, bias: &[f32]) -> Result<Matrix> {
+    let mut c = Matrix::zeros(0, 0);
+    matmul_bias_into_wt(x, w, bias, &mut c)?;
+    Ok(c)
+}
+
 /// `C = X·Wᵀ` for W stored [n, k] (each output is a row dot) into a
 /// reusable output: the fast path for the tied unembedding where `wte` is
 /// [vocab, d].
@@ -260,6 +523,41 @@ pub fn matmul_transposed_into(x: &Matrix, w: &Matrix, out: &mut Matrix) -> Resul
 pub fn matmul_transposed_fast(x: &Matrix, w: &Matrix) -> Result<Matrix> {
     let mut c = Matrix::zeros(0, 0);
     matmul_transposed_into(x, w, &mut c)?;
+    Ok(c)
+}
+
+/// [`matmul_transposed_into`] over mixed-precision weight storage — the
+/// tied-unembedding fast path reading `wte` in its stored format (each
+/// output is a fused-dequant [`wt_row_dot_unrolled4`] row dot).
+pub fn matmul_transposed_into_wt(
+    x: &Matrix,
+    w: &WeightTensor,
+    out: &mut Matrix,
+) -> Result<()> {
+    if x.cols() != w.cols() {
+        return Err(Error::shape(format!(
+            "matmul_transposed_into_wt: {:?} x {:?}T",
+            x.shape(),
+            w.shape()
+        )));
+    }
+    let m = x.rows();
+    let n = w.rows();
+    out.resize(m, n);
+    for i in 0..m {
+        let xi = x.row(i);
+        let ci = out.row_mut(i);
+        for (j, c) in ci.iter_mut().enumerate() {
+            *c = wt_row_dot_unrolled4(xi, w, j);
+        }
+    }
+    Ok(())
+}
+
+/// Allocating wrapper around [`matmul_transposed_into_wt`].
+pub fn matmul_transposed_fast_wt(x: &Matrix, w: &WeightTensor) -> Result<Matrix> {
+    let mut c = Matrix::zeros(0, 0);
+    matmul_transposed_into_wt(x, w, &mut c)?;
     Ok(c)
 }
 
@@ -440,5 +738,130 @@ mod tests {
         let b = Matrix::zeros(2, 2);
         let mut c = Matrix::zeros(2, 2);
         assert!(recompute_masked(&mut c, &a, &b, &[true; 3]).is_err());
+    }
+
+    use super::super::tensor::WeightFormat;
+
+    fn storage_formats() -> [WeightFormat; 3] {
+        [
+            WeightFormat::F32,
+            WeightFormat::Bf16,
+            WeightFormat::PsRounded { mu: 6 },
+        ]
+    }
+
+    #[test]
+    fn fused_dequant_kernels_match_dequantize_then_f32_bitwise() {
+        // The fused-dequant contract: for every storage format, every `_wt`
+        // kernel is bit-identical to dequantizing the weights into an f32
+        // Matrix first and calling the corresponding f32 kernel.
+        let mut rng = Rng::new(21);
+        for _ in 0..20 {
+            let k = rng.range(1, 24);
+            let n = rng.range(1, 17);
+            let x: Vec<f32> = (0..k).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+            let wm = Matrix::randn(k, n, 1.0, &mut rng);
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            for fmt in storage_formats() {
+                let wt = super::super::tensor::WeightTensor::from_matrix(&wm, fmt).unwrap();
+                let deq = wt.to_matrix();
+                // FP32 matvec.
+                let mut fused = vec![0.0f32; n];
+                let mut plain = vec![0.0f32; n];
+                matvec_bias_into_wt(&x, &wt, &bias, &mut fused);
+                matvec_bias_into(&x, &deq, &bias, &mut plain);
+                for j in 0..n {
+                    assert_eq!(fused[j].to_bits(), plain[j].to_bits(), "{fmt:?} matvec j={j}");
+                }
+                // PS(μ) matvec.
+                for mu in [2u32, 7, 23] {
+                    matvec_ps_bias_into_wt(&x, &wt, &bias, mu, &mut fused);
+                    matvec_ps_bias_into(&x, &deq, &bias, mu, &mut plain);
+                    for j in 0..n {
+                        assert_eq!(
+                            fused[j].to_bits(),
+                            plain[j].to_bits(),
+                            "{fmt:?} ps matvec mu={mu} j={j}"
+                        );
+                    }
+                }
+                // FP32 column repair.
+                for j in 0..n {
+                    assert_eq!(
+                        matvec_col_f32_wt(&x, &wt, &bias, j).to_bits(),
+                        matvec_col_f32(&x, &deq, &bias, j).to_bits(),
+                        "{fmt:?} col j={j}"
+                    );
+                    assert_eq!(
+                        matvec_col_f32_wt(&x, &wt, &[], j).to_bits(),
+                        matvec_col_f32(&x, &deq, &[], j).to_bits()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_row_dots_match_dequantized_bitwise() {
+        // The [vocab, d]-layout kernels of the sampler site / unembedding.
+        let mut rng = Rng::new(22);
+        for _ in 0..20 {
+            let d = rng.range(1, 40);
+            let v = rng.range(1, 12);
+            let x: Vec<f32> = (0..d).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+            let wm = Matrix::randn(v, d, 1.0, &mut rng);
+            for fmt in storage_formats() {
+                let wt = super::super::tensor::WeightTensor::from_matrix(&wm, fmt).unwrap();
+                let deq = wt.to_matrix();
+                for r in 0..v {
+                    assert_eq!(
+                        wt_row_dot_unrolled4(&x, &wt, r).to_bits(),
+                        dot_unrolled4(&x, deq.row(r)).to_bits(),
+                        "{fmt:?} unrolled r={r}"
+                    );
+                    assert_eq!(
+                        wt_row_dot_f32(&x, &wt, r).to_bits(),
+                        dot_f32(&x, deq.row(r)).to_bits(),
+                        "{fmt:?} f32 r={r}"
+                    );
+                    for mu in [2u32, 11, 23] {
+                        assert_eq!(
+                            wt_row_dot_ps(&x, &wt, r, mu).to_bits(),
+                            dot_ps(&x, deq.row(r), mu).to_bits(),
+                            "{fmt:?} ps r={r} mu={mu}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_wt_matmuls_match_dequantized_and_shape_check() {
+        let mut rng = Rng::new(23);
+        let x = Matrix::randn(5, 19, 1.0, &mut rng);
+        let wm = Matrix::randn(19, 9, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..9).map(|_| rng.normal_f32()).collect();
+        let un = Matrix::randn(13, 19, 1.0, &mut rng); // [n, k] unembedding
+        for fmt in storage_formats() {
+            let wt = super::super::tensor::WeightTensor::from_matrix(&wm, fmt).unwrap();
+            let fused = matmul_bias_fast_wt(&x, &wt, &bias).unwrap();
+            let plain = matmul_bias_fast(&x, &wt.to_matrix(), &bias).unwrap();
+            assert_eq!(fused, plain, "{fmt:?} batched matmul");
+            let ut = super::super::tensor::WeightTensor::from_matrix(&un, fmt).unwrap();
+            let fused_t = matmul_transposed_fast_wt(&x, &ut).unwrap();
+            let plain_t = matmul_transposed_fast(&x, &ut.to_matrix()).unwrap();
+            assert_eq!(fused_t, plain_t, "{fmt:?} transposed matmul");
+        }
+        let bad = super::super::tensor::WeightTensor::from_matrix(
+            &Matrix::zeros(4, 2),
+            WeightFormat::Bf16,
+        )
+        .unwrap();
+        assert!(matmul_bias_fast_wt(&x, &bad, &[]).is_err());
+        let good =
+            super::super::tensor::WeightTensor::from_matrix(&wm, WeightFormat::F32).unwrap();
+        assert!(matmul_bias_fast_wt(&x, &good, &[0.0; 3]).is_err());
+        assert!(matmul_transposed_fast_wt(&x, &bad).is_err());
     }
 }

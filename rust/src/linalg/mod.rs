@@ -1,12 +1,17 @@
 //! Dense linear algebra over row-major f32 matrices, with mixed-precision
-//! accumulation hooks.
+//! accumulation hooks and mixed-precision weight storage.
 //!
-//! * [`tensor`] — the [`tensor::Matrix`] type (row-major, shape-checked).
-//! * [`matmul`] — FP32 matmul, PS(μ)-accumulated matmul, and masked
-//!   recomputation (the building block of LAMP attention).
+//! * [`tensor`] — the [`tensor::Matrix`] activation type (row-major,
+//!   shape-checked, always f32) and the [`tensor::WeightTensor`] parameter
+//!   store (f32 / bf16 / PS(μ)-rounded storage; every stored value is an
+//!   exact f32, so dequantization is error-free).
+//! * [`matmul`] — FP32 matmul, PS(μ)-accumulated matmul, masked
+//!   recomputation (the building block of LAMP attention), and the fused
+//!   dequant-on-the-fly `*_wt` kernels that read [`WeightTensor`] storage
+//!   directly (bf16 decode reads half the bytes).
 
 pub mod matmul;
 pub mod tensor;
 
 pub use matmul::{matmul_f32, matmul_ps, recompute_masked};
-pub use tensor::Matrix;
+pub use tensor::{Matrix, WeightFormat, WeightStore, WeightTensor};

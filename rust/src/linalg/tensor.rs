@@ -1,6 +1,9 @@
-//! Row-major dense matrix with shape checking.
+//! Row-major dense matrix with shape checking, and the mixed-precision
+//! [`WeightTensor`] weight store (f32 / bf16 / PS(μ)-rounded storage with
+//! exact-f32 dequantization).
 
 use crate::error::{Error, Result};
+use crate::softfloat::round::round_to_mantissa;
 use crate::util::Rng;
 use std::fmt;
 
@@ -195,6 +198,380 @@ impl fmt::Debug for Matrix {
     }
 }
 
+/// Convert an f32 to bf16 bits with round-to-nearest-ties-to-even — the
+/// top 16 bits of the f32 pattern after RNE on the discarded low half.
+/// NaNs are quieted so the round trip stays a NaN.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7FFF + lsb)) >> 16) as u16
+}
+
+/// Widen bf16 bits to the f32 they exactly represent (every bf16 value is
+/// an exact f32 — dequantization introduces no error).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Storage format of a [`WeightTensor`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightFormat {
+    /// Full-precision f32 — 4 bytes/element, bit-identical to the
+    /// historical `Vec<f32>` storage.
+    F32,
+    /// bfloat16 (8 exponent bits, 7 mantissa bits) — 2 bytes/element,
+    /// halving resident parameter bytes and decode weight traffic.
+    Bf16,
+    /// f32 values pre-rounded to μ mantissa bits (the paper's PS(μ)
+    /// format as a *storage* simulation) — still 4 bytes/element
+    /// resident, used to study storage-induced error, not memory wins.
+    PsRounded { mu: u32 },
+}
+
+impl WeightFormat {
+    /// Parse a CLI-facing name: `f32`, `bf16`, or `ps<mu>` (e.g. `ps8`).
+    pub fn by_name(name: &str) -> Result<Self> {
+        let fmt = match name {
+            "f32" => WeightFormat::F32,
+            "bf16" => WeightFormat::Bf16,
+            _ => match name.strip_prefix("ps").and_then(|m| m.parse::<u32>().ok()) {
+                Some(mu) => WeightFormat::PsRounded { mu },
+                None => {
+                    return Err(Error::config(format!(
+                        "unknown weight format {name:?} (f32|bf16|ps<mu>)"
+                    )))
+                }
+            },
+        };
+        fmt.validate()?;
+        Ok(fmt)
+    }
+
+    /// Canonical name (the inverse of [`Self::by_name`]); used as the
+    /// serving-metrics key for per-format attribution.
+    pub fn label(&self) -> String {
+        match self {
+            WeightFormat::F32 => "f32".to_string(),
+            WeightFormat::Bf16 => "bf16".to_string(),
+            WeightFormat::PsRounded { mu } => format!("ps{mu}"),
+        }
+    }
+
+    /// Range-check the format (μ ∈ 1..=23 for PS storage).
+    pub fn validate(&self) -> Result<()> {
+        if let WeightFormat::PsRounded { mu } = self {
+            if !(1..=23).contains(mu) {
+                return Err(Error::config(format!(
+                    "weight format ps{mu}: mu out of 1..=23"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Resident bytes per stored element.
+    pub fn bytes_per_element(&self) -> usize {
+        match self {
+            WeightFormat::Bf16 => 2,
+            WeightFormat::F32 | WeightFormat::PsRounded { .. } => 4,
+        }
+    }
+}
+
+/// The enum backing a [`WeightTensor`]: one flat row-major payload per
+/// storage format.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WeightStore {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    PsRounded { mu: u32, data: Vec<f32> },
+}
+
+/// A shape-checked row-major 2-D weight store.
+///
+/// Unlike the activation [`Matrix`] (always f32, mutable, resizable), a
+/// `WeightTensor` is an immutable parameter payload in one of the
+/// [`WeightFormat`]s. Every stored value — bf16 or PS(μ)-rounded — is an
+/// *exact* f32, so dequantization is error-free and everything downstream
+/// (LAMP selection, FP32 column repair, KV-cache decode parity) operates
+/// on exact f32 values regardless of storage: quantization error enters
+/// once, at [`Self::quantize_to`], never per-read.
+#[derive(Clone, PartialEq)]
+pub struct WeightTensor {
+    rows: usize,
+    cols: usize,
+    store: WeightStore,
+}
+
+impl WeightTensor {
+    /// f32 storage from a flat row-major buffer.
+    pub fn from_f32(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "WeightTensor::from_f32: {rows}x{cols} needs {} elements, got {}",
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(WeightTensor { rows, cols, store: WeightStore::F32(data) })
+    }
+
+    /// bf16 storage from raw bf16 bit patterns (the tensor-file loader).
+    pub fn from_bf16(rows: usize, cols: usize, data: Vec<u16>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "WeightTensor::from_bf16: {rows}x{cols} needs {} elements, got {}",
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(WeightTensor { rows, cols, store: WeightStore::Bf16(data) })
+    }
+
+    /// PS(μ)-rounded storage. The payload is re-rounded on construction
+    /// (idempotent for data that is already μ-rounded), so a loaded tensor
+    /// can never carry more precision than its declared format.
+    pub fn from_ps(rows: usize, cols: usize, mu: u32, mut data: Vec<f32>) -> Result<Self> {
+        WeightFormat::PsRounded { mu }.validate()?;
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "WeightTensor::from_ps: {rows}x{cols} needs {} elements, got {}",
+                rows * cols,
+                data.len()
+            )));
+        }
+        for v in &mut data {
+            *v = round_to_mantissa(*v, mu);
+        }
+        Ok(WeightTensor { rows, cols, store: WeightStore::PsRounded { mu, data } })
+    }
+
+    /// Quantize an f32 matrix into the given storage format.
+    pub fn from_matrix(m: &Matrix, fmt: WeightFormat) -> Result<Self> {
+        fmt.validate()?;
+        let (rows, cols) = m.shape();
+        Ok(match fmt {
+            WeightFormat::F32 => {
+                WeightTensor { rows, cols, store: WeightStore::F32(m.data().to_vec()) }
+            }
+            WeightFormat::Bf16 => WeightTensor {
+                rows,
+                cols,
+                store: WeightStore::Bf16(m.data().iter().map(|&x| f32_to_bf16(x)).collect()),
+            },
+            WeightFormat::PsRounded { mu } => WeightTensor {
+                rows,
+                cols,
+                store: WeightStore::PsRounded {
+                    mu,
+                    data: m.data().iter().map(|&x| round_to_mantissa(x, mu)).collect(),
+                },
+            },
+        })
+    }
+
+    /// Re-store under another format: dequantize (exact), then quantize.
+    /// `quantize_to(fmt)` twice equals once — RNE rounding is idempotent
+    /// on already-representable values — and `quantize_to(F32)` is the
+    /// exact dequantization (every stored value is an exact f32).
+    /// Same-format conversion is a plain clone (no dequant/requant pass):
+    /// legal because quantization is idempotent, so the re-round could
+    /// never change anything — this keeps the default `--weights-fmt f32`
+    /// path from paying two extra full-parameter copies.
+    pub fn quantize_to(&self, fmt: WeightFormat) -> Result<Self> {
+        if fmt == self.format() {
+            return Ok(self.clone());
+        }
+        Self::from_matrix(&self.to_matrix(), fmt)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The backing store (the fused matmul kernels dispatch on it).
+    #[inline]
+    pub fn store(&self) -> &WeightStore {
+        &self.store
+    }
+
+    /// Storage format of this tensor.
+    pub fn format(&self) -> WeightFormat {
+        match &self.store {
+            WeightStore::F32(_) => WeightFormat::F32,
+            WeightStore::Bf16(_) => WeightFormat::Bf16,
+            WeightStore::PsRounded { mu, .. } => WeightFormat::PsRounded { mu: *mu },
+        }
+    }
+
+    /// Resident payload bytes (what the decode path actually streams).
+    pub fn resident_bytes(&self) -> usize {
+        self.len() * self.format().bytes_per_element()
+    }
+
+    /// Dequantized value at (r, c).
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        let i = r * self.cols + c;
+        match &self.store {
+            WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => d[i],
+            WeightStore::Bf16(d) => bf16_to_f32(d[i]),
+        }
+    }
+
+    /// The flat f32 payload when storage is already f32-backed (F32 and
+    /// PsRounded formats); `None` for bf16.
+    #[inline]
+    pub fn flat_f32(&self) -> Option<&[f32]> {
+        match &self.store {
+            WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => Some(d),
+            WeightStore::Bf16(_) => None,
+        }
+    }
+
+    /// Row `r` as a borrowed f32 slice when storage is f32-backed.
+    #[inline]
+    pub fn row_slice(&self, r: usize) -> Option<&[f32]> {
+        self.flat_f32().map(|d| &d[r * self.cols..(r + 1) * self.cols])
+    }
+
+    /// Row `r` dequantized: returns the storage slice directly when it is
+    /// f32-backed, otherwise dequantizes into `scratch` (resized, reused).
+    pub fn row_dequant<'a>(&'a self, r: usize, scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        match self.row_slice(r) {
+            Some(s) => s,
+            None => {
+                scratch.clear();
+                scratch.extend(self.iter_row(r));
+                &scratch[..]
+            }
+        }
+    }
+
+    /// Dequantizing iterator over row `r`.
+    pub fn iter_row(&self, r: usize) -> impl Iterator<Item = f32> + '_ {
+        debug_assert!(r < self.rows);
+        let lo = r * self.cols;
+        let hi = lo + self.cols;
+        (lo..hi).map(move |i| match &self.store {
+            WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => d[i],
+            WeightStore::Bf16(d) => bf16_to_f32(d[i]),
+        })
+    }
+
+    /// `out = row r` (dequantized). `out.len()` must equal `cols`.
+    #[inline]
+    pub fn copy_row_into(&self, r: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        match &self.store {
+            WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => {
+                out.copy_from_slice(&d[r * self.cols..(r + 1) * self.cols]);
+            }
+            WeightStore::Bf16(d) => {
+                for (o, &b) in out.iter_mut().zip(&d[r * self.cols..(r + 1) * self.cols]) {
+                    *o = bf16_to_f32(b);
+                }
+            }
+        }
+    }
+
+    /// `out += row r` (dequantized, one f32 add per element).
+    #[inline]
+    pub fn add_row_into(&self, r: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        match &self.store {
+            WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => {
+                for (o, &v) in out.iter_mut().zip(&d[r * self.cols..(r + 1) * self.cols]) {
+                    *o += v;
+                }
+            }
+            WeightStore::Bf16(d) => {
+                for (o, &b) in out.iter_mut().zip(&d[r * self.cols..(r + 1) * self.cols]) {
+                    *o += bf16_to_f32(b);
+                }
+            }
+        }
+    }
+
+    /// Full dequantization into an activation [`Matrix`] (exact).
+    pub fn to_matrix(&self) -> Matrix {
+        let data: Vec<f32> = match &self.store {
+            WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => d.clone(),
+            WeightStore::Bf16(d) => d.iter().map(|&b| bf16_to_f32(b)).collect(),
+        };
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Dequantized flat row-major payload (exact).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        self.to_matrix().into_vec()
+    }
+
+    /// Max |a − b| over the dequantized values; error on shape mismatch.
+    pub fn max_abs_diff(&self, other: &WeightTensor) -> Result<f32> {
+        if self.shape() != other.shape() {
+            return Err(Error::shape(format!(
+                "WeightTensor::max_abs_diff: {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        let mut m = 0.0f32;
+        for r in 0..self.rows {
+            for (a, b) in self.iter_row(r).zip(other.iter_row(r)) {
+                m = m.max((a - b).abs());
+            }
+        }
+        Ok(m)
+    }
+}
+
+impl From<Matrix> for WeightTensor {
+    /// Zero-copy f32 storage from an activation matrix.
+    fn from(m: Matrix) -> Self {
+        let (rows, cols) = m.shape();
+        WeightTensor { rows, cols, store: WeightStore::F32(m.into_vec()) }
+    }
+}
+
+impl fmt::Debug for WeightTensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "WeightTensor({}x{}, {})",
+            self.rows,
+            self.cols,
+            self.format().label()
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,5 +631,109 @@ mod tests {
         assert!((a.frobenius() - 5.0).abs() < 1e-12);
         let c = Matrix::zeros(2, 1);
         assert!(a.max_abs_diff(&c).is_err());
+    }
+
+    #[test]
+    fn bf16_conversion_exact_roundtrip_and_rne() {
+        // Every bf16 value widens to an exact f32 and narrows back to the
+        // same bits (dequantization is error-free).
+        for b in [0u16, 0x3F80, 0xBF80, 0x7F7F, 0x0001, 0x8000] {
+            let x = bf16_to_f32(b);
+            assert_eq!(f32_to_bf16(x), b, "bf16 {b:#06x} round trip");
+        }
+        // RNE on the discarded half: 1.0 + 2^-9 is exactly halfway between
+        // two bf16 neighbours; ties go to the even mantissa (1.0).
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(f32_to_bf16(halfway), 0x3F80);
+        // Just above halfway rounds up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(f32_to_bf16(above), 0x3F81);
+        // NaN stays NaN.
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn weight_format_names_roundtrip_and_validate() {
+        for fmt in [
+            WeightFormat::F32,
+            WeightFormat::Bf16,
+            WeightFormat::PsRounded { mu: 8 },
+        ] {
+            assert_eq!(WeightFormat::by_name(&fmt.label()).unwrap(), fmt);
+        }
+        assert!(WeightFormat::by_name("fp8").is_err());
+        assert!(WeightFormat::by_name("ps0").is_err());
+        assert!(WeightFormat::by_name("ps24").is_err());
+        assert_eq!(WeightFormat::Bf16.bytes_per_element(), 2);
+        assert_eq!(WeightFormat::PsRounded { mu: 4 }.bytes_per_element(), 4);
+    }
+
+    #[test]
+    fn weight_tensor_shape_checked_and_accessors() {
+        assert!(WeightTensor::from_f32(2, 3, vec![0.0; 5]).is_err());
+        assert!(WeightTensor::from_bf16(2, 3, vec![0; 7]).is_err());
+        assert!(WeightTensor::from_ps(2, 3, 0, vec![0.0; 6]).is_err());
+        let mut rng = Rng::new(9);
+        let m = Matrix::randn(4, 6, 1.0, &mut rng);
+        for fmt in [
+            WeightFormat::F32,
+            WeightFormat::Bf16,
+            WeightFormat::PsRounded { mu: 5 },
+        ] {
+            let w = WeightTensor::from_matrix(&m, fmt).unwrap();
+            assert_eq!(w.shape(), (4, 6));
+            assert_eq!(w.format(), fmt);
+            assert_eq!(w.resident_bytes(), 24 * fmt.bytes_per_element());
+            // get / iter_row / copy_row_into / row_dequant all agree.
+            let mut scratch = Vec::new();
+            for r in 0..4 {
+                let row: Vec<f32> = w.iter_row(r).collect();
+                let mut buf = vec![0.0f32; 6];
+                w.copy_row_into(r, &mut buf);
+                assert_eq!(row, buf);
+                assert_eq!(w.row_dequant(r, &mut scratch), &row[..]);
+                for c in 0..6 {
+                    assert_eq!(w.get(r, c).to_bits(), row[c].to_bits());
+                }
+            }
+            // row_slice present exactly when storage is f32-backed.
+            assert_eq!(w.row_slice(0).is_some(), fmt != WeightFormat::Bf16);
+        }
+    }
+
+    #[test]
+    fn quantize_is_idempotent_and_f32_is_exact() {
+        let mut rng = Rng::new(11);
+        let m = Matrix::randn(5, 7, 2.0, &mut rng);
+        for fmt in [WeightFormat::Bf16, WeightFormat::PsRounded { mu: 6 }] {
+            let once = WeightTensor::from_matrix(&m, fmt).unwrap();
+            let twice = once.quantize_to(fmt).unwrap();
+            assert_eq!(once, twice, "{fmt:?} requantization must be identity");
+            // Round-tripping through F32 storage preserves every value
+            // exactly (dequantization is exact).
+            let via_f32 = once.quantize_to(WeightFormat::F32).unwrap();
+            assert_eq!(via_f32.to_matrix(), once.to_matrix());
+            assert_eq!(via_f32.quantize_to(fmt).unwrap(), once);
+        }
+        let f = WeightTensor::from_matrix(&m, WeightFormat::F32).unwrap();
+        assert_eq!(f.to_matrix(), m, "F32 storage is the identity");
+    }
+
+    #[test]
+    fn add_and_copy_row_match_manual_embedding_sum() {
+        let mut rng = Rng::new(13);
+        let te = Matrix::randn(3, 8, 1.0, &mut rng);
+        let pe = Matrix::randn(3, 8, 1.0, &mut rng);
+        for fmt in [WeightFormat::F32, WeightFormat::Bf16] {
+            let wte = WeightTensor::from_matrix(&te, fmt).unwrap();
+            let wpe = WeightTensor::from_matrix(&pe, fmt).unwrap();
+            let mut out = vec![0.0f32; 8];
+            wte.copy_row_into(1, &mut out);
+            wpe.add_row_into(2, &mut out);
+            for c in 0..8 {
+                let want = wte.get(1, c) + wpe.get(2, c);
+                assert_eq!(out[c].to_bits(), want.to_bits());
+            }
+        }
     }
 }

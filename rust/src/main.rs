@@ -7,18 +7,22 @@
 //! lamp inspect --artifacts artifacts
 //! lamp forward --model nano --mu 4 --tau 0.1 --rule strict --engine native \
 //!     [--mlp-mu 7 --mlp-tau 0.5] [--norm-mu 10 --norm-tau 1.0] \
-//!     [--logits-mu 7 --logits-tau 0.05 --logits-rule relaxed]
+//!     [--logits-mu 7 --logits-tau 0.05 --logits-rule relaxed] \
+//!     [--weights-fmt f32|bf16|ps<mu>]
 //! ```
 //!
 //! The `--mlp-*`/`--norm-*`/`--logits-*` options activate the non-attention
 //! LAMP sites of the whole-model `PrecisionPlan`; their defaults keep those
-//! sites at the FP32 reference.
+//! sites at the FP32 reference. `--weights-fmt` (forward/generate/serve)
+//! re-stores the native engine's weight matrices in bf16 or PS(μ)-rounded
+//! storage (`Weights::quantize_to`); f32 is the default and bit-identical
+//! to the historical engine. The pjrt engine serves f32 storage only.
 
 use lamp::benchkit::Table;
 use lamp::cli::{ArgSpec, Args, Command};
 use lamp::coordinator::{
     Engine, InferenceRequest, NativeEngine, PjrtEngine, PrecisionPolicy, Rule, Server,
-    SitePolicy,
+    SitePolicy, WeightFormat,
 };
 use lamp::data::{Dataset, Domain};
 use lamp::experiments::{self, EvalOptions};
@@ -49,6 +53,11 @@ fn cli() -> Command {
                 ))
                 .arg(ArgSpec::opt("domain", "workload domain", "web"))
                 .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts"))
+                .arg(ArgSpec::opt(
+                    "weights-fmt",
+                    "weight storage format (f32|bf16|ps<mu>; native engine only)",
+                    "f32",
+                ))
                 .arg(ArgSpec::opt("seed", "workload seed", "1")),
         )
         .subcommand(
@@ -84,6 +93,11 @@ fn cli() -> Command {
 /// (sampler) sites. Defaults leave every non-attention site at the FP32
 /// reference, reproducing the attention-only engine bit for bit.
 fn site_args(mut cmd: Command) -> Command {
+    cmd = cmd.arg(ArgSpec::opt(
+        "weights-fmt",
+        "weight storage format (f32|bf16|ps<mu>; native engine only)",
+        "f32",
+    ));
     for site in ["mlp", "norm", "logits"] {
         cmd = cmd
             .arg(ArgSpec::opt(
@@ -103,6 +117,11 @@ fn site_args(mut cmd: Command) -> Command {
             ));
     }
     cmd
+}
+
+/// Parse the `--weights-fmt` storage format.
+fn weights_fmt(args: &Args) -> lamp::Result<WeightFormat> {
+    WeightFormat::by_name(&args.get_str("weights-fmt")?)
 }
 
 /// Parse one site's policy from its `--<prefix>-*` options.
@@ -191,10 +210,23 @@ fn cmd_exp(args: &Args) -> lamp::Result<()> {
 fn cmd_serve(args: &Args) -> lamp::Result<()> {
     let model = args.get_str("model")?;
     let store = ArtifactStore::open(args.get_str("artifacts")?)?;
+    let fmt = weights_fmt(args)?;
     let engine: Box<dyn Engine> = match args.get_str("engine")?.as_str() {
         // Native serving tiles attention across all host CPUs.
-        "native" => Box::new(NativeEngine::load(&store, &model)?.with_threads(0)),
-        "pjrt" => Box::new(PjrtEngine::load(&store, &model)?),
+        "native" => Box::new(
+            NativeEngine::load(&store, &model)?
+                .with_weight_format(fmt)?
+                .with_threads(0),
+        ),
+        "pjrt" => {
+            if fmt != WeightFormat::F32 {
+                return Err(lamp::Error::config(format!(
+                    "pjrt serves f32 weight storage only (requested {})",
+                    fmt.label()
+                )));
+            }
+            Box::new(PjrtEngine::load(&store, &model)?)
+        }
         other => {
             return Err(lamp::Error::config(format!("unknown engine {other:?}")))
         }
@@ -225,6 +257,7 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
     let stats = server.stats();
     let mut t = Table::new("serving summary", &["metric", "value"]);
     t.row(vec!["backend".into(), backend.into()]);
+    t.row(vec!["weight format".into(), stats.weight_format.clone()]);
     t.row(vec!["requests".into(), stats.requests.to_string()]);
     t.row(vec!["batches".into(), stats.batches.to_string()]);
     t.row(vec!["padding rows".into(), stats.padding_rows.to_string()]);
@@ -273,7 +306,7 @@ fn cmd_generate(args: &Args) -> lamp::Result<()> {
     use lamp::model::Decode;
     let model = args.get_str("model")?;
     let store = ArtifactStore::open(args.get_str("artifacts")?)?;
-    let engine = NativeEngine::load(&store, &model)?;
+    let engine = NativeEngine::load(&store, &model)?.with_weight_format(weights_fmt(args)?)?;
     let cfg = engine.config().clone();
     let policy = plan_policy(args)?;
     let seed = args.get_u64("seed")?;
@@ -299,10 +332,11 @@ fn cmd_generate(args: &Args) -> lamp::Result<()> {
         seed,
     )?;
     println!(
-        "generate({model}): prompt {} tokens -> {} tokens, policy {}",
+        "generate({model}): prompt {} tokens -> {} tokens, policy {}, weights {}",
         prompt.len(),
         tokens.len(),
-        policy.label()
+        policy.label(),
+        engine.weight_format().label()
     );
     println!("  continuation: {:?}", &tokens[prompt.len()..]);
     for (site, rate) in stats.site_rates() {
@@ -316,9 +350,18 @@ fn cmd_generate(args: &Args) -> lamp::Result<()> {
 fn cmd_forward(args: &Args) -> lamp::Result<()> {
     let model = args.get_str("model")?;
     let store = ArtifactStore::open(args.get_str("artifacts")?)?;
+    let fmt = weights_fmt(args)?;
     let engine: Box<dyn Engine> = match args.get_str("engine")?.as_str() {
-        "native" => Box::new(NativeEngine::load(&store, &model)?),
-        "pjrt" => Box::new(PjrtEngine::load(&store, &model)?),
+        "native" => Box::new(NativeEngine::load(&store, &model)?.with_weight_format(fmt)?),
+        "pjrt" => {
+            if fmt != WeightFormat::F32 {
+                return Err(lamp::Error::config(format!(
+                    "pjrt serves f32 weight storage only (requested {})",
+                    fmt.label()
+                )));
+            }
+            Box::new(PjrtEngine::load(&store, &model)?)
+        }
         other => {
             return Err(lamp::Error::config(format!("unknown engine {other:?}")))
         }
@@ -332,12 +375,13 @@ fn cmd_forward(args: &Args) -> lamp::Result<()> {
     let dt = sw.secs();
     sw.lap("forward");
     println!(
-        "forward({}, {} backend): batch={} seq={} policy {}",
+        "forward({}, {} backend): batch={} seq={} policy {} weights {}",
         cfg.name,
         engine.backend(),
         cfg.batch,
         cfg.seq,
-        policy.label()
+        policy.label(),
+        engine.weight_format().label()
     );
     println!(
         "  recomputed {} / {} causal products ({:.4}%)",

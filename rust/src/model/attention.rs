@@ -12,6 +12,13 @@
 //! `AttentionPrecision::reference()` (μ=23) reproduces uniform FP32
 //! accumulation bit-for-bit; `tau = ∞` reproduces uniform PS(μ).
 //!
+//! Attention consumes post-projection *activations* (q/k/v are always f32
+//! `Matrix` rows); mixed-precision weight storage
+//! ([`crate::linalg::WeightTensor`]) enters upstream, in the QKV/proj
+//! matvecs of `forward`/`DecodeSession` — by the time scores are
+//! accumulated, any storage quantization is already baked into exact-f32
+//! q/k/v values, so every kernel here is storage-agnostic.
+//!
 //! ## Execution model
 //!
 //! Every (head, query-row) pair is an independent unit of work: its scores

@@ -22,7 +22,7 @@ use super::plan::{logits_row_site, norm_site_row, site_row_seed, PrecisionPlan};
 use super::plan::{SITE_NORM, SITE_SAMPLER};
 use super::weights::Weights;
 use crate::error::{Error, Result};
-use crate::linalg::matmul::{matmul_bias_into, matmul_transposed_fast};
+use crate::linalg::matmul::{matmul_bias_into_wt, matmul_transposed_fast_wt};
 use crate::linalg::Matrix;
 use crate::util::ThreadPool;
 
@@ -139,6 +139,16 @@ pub fn forward_with(
 ) -> Result<ForwardOutput> {
     let plan: PrecisionPlan = prec.into();
     let cfg: &ModelConfig = &weights.config;
+    // The plan's storage requirement is checked against the actual weights
+    // at the same front door as the shape checks (the coordinator applies
+    // the equivalent gate at submit via `Engine::validate_policy`).
+    if !plan.weights.accepts(weights.weight_format()) {
+        return Err(Error::config(format!(
+            "plan requires {} weight storage, engine holds {}",
+            plan.weights.label(),
+            weights.weight_format().label()
+        )));
+    }
     let s = tokens.len();
     if s == 0 || s > cfg.seq {
         return Err(Error::shape(format!(
@@ -154,15 +164,14 @@ pub fn forward_with(
     let d = cfg.d_model;
     scratch.reserve(s, cfg);
 
-    // Embedding: wte[token] + wpe[pos].
+    // Embedding: wte[token] + wpe[pos], dequantized from storage (exact;
+    // copy-then-add is the same single f32 add per element as the
+    // historical te[c] + pe[c] loop).
     let x = &mut scratch.x;
     for (i, &t) in tokens.iter().enumerate() {
-        let te = weights.wte.row(t as usize);
-        let pe = weights.wpe.row(i);
         let xr = x.row_mut(i);
-        for c in 0..d {
-            xr[c] = te[c] + pe[c];
-        }
+        weights.wte.copy_row_into(t as usize, xr);
+        weights.wpe.add_row_into(i, xr);
     }
 
     let mut stats = LampStats {
@@ -178,8 +187,9 @@ pub fn forward_with(
         for i in 0..s {
             layernorm(scratch.xn.row_mut(i), &blk.ln1_g, &blk.ln1_b, LN_EPS);
         }
-        // QKV projection (FP32, vectorized — not part of the PS(μ) path).
-        matmul_bias_into(&scratch.xn, &blk.w_qkv, &blk.b_qkv, &mut scratch.qkv)?;
+        // QKV projection (FP32, vectorized — not part of the PS(μ) path),
+        // reading the stored weights directly (fused dequant).
+        matmul_bias_into_wt(&scratch.xn, &blk.w_qkv, &blk.b_qkv, &mut scratch.qkv)?;
         for i in 0..s {
             let row = scratch.qkv.row(i);
             scratch.q.row_mut(i).copy_from_slice(&row[..d]);
@@ -199,7 +209,7 @@ pub fn forward_with(
         stats.per_layer[l] = layer_recomputed;
         stats.recomputed += layer_recomputed;
         // Output projection + residual.
-        matmul_bias_into(&scratch.attn, &blk.w_proj, &blk.b_proj, &mut scratch.proj)?;
+        matmul_bias_into_wt(&scratch.attn, &blk.w_proj, &blk.b_proj, &mut scratch.proj)?;
         for i in 0..s {
             let pr = scratch.proj.row(i);
             let xr = scratch.x.row_mut(i);
@@ -256,7 +266,7 @@ pub fn forward_with(
     // deliverable, so it is the one allocation of the pass.
     stats.sampler.total += s * cfg.vocab;
     let logits = if plan.sampler.is_reference() {
-        matmul_transposed_fast(&scratch.x, &weights.wte)?
+        matmul_transposed_fast_wt(&scratch.x, &weights.wte)?
     } else {
         let mut m = Matrix::zeros(s, cfg.vocab);
         for i in 0..s {
@@ -282,7 +292,7 @@ mod tests {
 
     fn nano_weights(seed: u64) -> Weights {
         let mut rng = Rng::new(seed);
-        Weights::random(&ModelConfig::nano(), &mut rng)
+        Weights::random(&ModelConfig::nano(), &mut rng).unwrap()
     }
 
     #[test]
@@ -295,6 +305,52 @@ mod tests {
         assert_eq!(a.logits, b.logits);
         assert_eq!(a.stats.recomputed, 0);
         assert_eq!(a.stats.causal_total, 2 * 2 * 15);
+    }
+
+    #[test]
+    fn weight_storage_requirement_gated_at_forward() {
+        use super::super::plan::WeightPrecision;
+        use crate::linalg::WeightFormat;
+        let w = nano_weights(11);
+        let plan = PrecisionPlan::reference()
+            .with_weights(WeightPrecision::Exact(WeightFormat::Bf16));
+        assert!(
+            forward(&w, &[1, 2], plan, 0).is_err(),
+            "f32 engine must reject a bf16-storage requirement"
+        );
+        let q = w.quantize_to(WeightFormat::Bf16).unwrap();
+        forward(&q, &[1, 2], plan, 0).unwrap();
+        // The default Any requirement accepts every storage.
+        forward(&q, &[1, 2], PrecisionPlan::reference(), 0).unwrap();
+    }
+
+    #[test]
+    fn quantized_storage_forward_matches_dequantized_storage_bitwise() {
+        // The fused-dequant kernels' whole-model consequence: running on
+        // bf16 storage equals running on the f32 storage holding exactly
+        // the dequantized values — quantization error enters once, at
+        // quantize_to, never per-kernel.
+        use crate::linalg::WeightFormat;
+        let w = nano_weights(12);
+        let tokens: Vec<u32> = (0..12).map(|i| (i * 9 + 4) % 128).collect();
+        for fmt in [WeightFormat::Bf16, WeightFormat::PsRounded { mu: 7 }] {
+            let q = w.quantize_to(fmt).unwrap();
+            let deq = q.quantize_to(WeightFormat::F32).unwrap();
+            for plan in [
+                PrecisionPlan::reference(),
+                PrecisionPlan::whole_model(AttentionPrecision::lamp(
+                    3,
+                    0.1,
+                    SoftmaxRule::Strict,
+                )),
+            ] {
+                let a = forward(&q, &tokens, plan, 5).unwrap();
+                let b = forward(&deq, &tokens, plan, 5).unwrap();
+                assert_eq!(a.logits, b.logits, "{fmt:?} fused != dequantized");
+                assert_eq!(a.stats.recomputed, b.stats.recomputed);
+                assert_eq!(a.stats.mlp, b.stats.mlp);
+            }
+        }
     }
 
     #[test]

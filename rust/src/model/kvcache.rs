@@ -12,8 +12,10 @@
 //!
 //! The decode step runs the *same row kernels in the same order* as
 //! [`forward`](super::forward::forward) runs them for the last row of a
-//! full pass: `matvec_bias_into` for the FP32 projections (the row body of
-//! `matmul_bias_into`), [`lamp_attention_row`] for the scores (shared with
+//! full pass: `matvec_bias_into_wt` for the FP32 projections over the
+//! stored weights (the row body of `matmul_bias_into_wt`, dequantizing
+//! f32/bf16/PS(μ) storage on the fly), [`lamp_attention_row`] for the
+//! scores (shared with
 //! `causal_attention_into`), [`mlp_row_into`] for the MLP site (shared
 //! with `mlp_into`), `norm_site_row`/`logits_row_site` for the final-norm
 //! and sampler sites (shared with the full pass), and the same
@@ -42,7 +44,7 @@ use super::plan::{
 };
 use super::weights::Weights;
 use crate::error::{Error, Result};
-use crate::linalg::matmul::matvec_bias_into;
+use crate::linalg::matmul::matvec_bias_into_wt;
 use crate::linalg::Matrix;
 
 /// Incremental decoding state bound to a model's weights.
@@ -200,19 +202,28 @@ impl<'w> DecodeSession<'w> {
                 cfg.vocab
             )));
         }
-
-        // Embedding row: wte[token] + wpe[i].
-        let te = self.weights.wte.row(token as usize);
-        let pe = self.weights.wpe.row(i);
-        for c in 0..d {
-            self.x[c] = te[c] + pe[c];
+        // Same storage front door as `forward` — a session constructed
+        // around a storage-pinned plan on mismatched weights must not
+        // silently decode (DecodeSession::new/reseat cannot return Err,
+        // so the gate lives with the other per-step input checks).
+        if !self.plan.weights.accepts(self.weights.weight_format()) {
+            return Err(Error::config(format!(
+                "plan requires {} weight storage, engine holds {}",
+                self.plan.weights.label(),
+                self.weights.weight_format().label()
+            )));
         }
+
+        // Embedding row: wte[token] + wpe[i], dequantized from storage
+        // (exact; same single f32 add per element as the full pass).
+        self.weights.wte.copy_row_into(token as usize, &mut self.x);
+        self.weights.wpe.add_row_into(i, &mut self.x);
 
         for (l, blk) in self.weights.blocks.iter().enumerate() {
             // --- Attention sublayer (pre-LN), one row. ---
             self.xn.copy_from_slice(&self.x);
             layernorm(&mut self.xn, &blk.ln1_g, &blk.ln1_b, LN_EPS);
-            matvec_bias_into(&self.xn, &blk.w_qkv, &blk.b_qkv, &mut self.qkv);
+            matvec_bias_into_wt(&self.xn, &blk.w_qkv, &blk.b_qkv, &mut self.qkv);
             let (q_row, kv_row) = self.qkv.split_at(d);
             let (k_row, v_row) = kv_row.split_at(d);
             self.k_cache[l].row_mut(i).copy_from_slice(k_row);
@@ -236,7 +247,7 @@ impl<'w> DecodeSession<'w> {
             }
             self.stats.add_row(l, heads * (i + 1), recomputed);
             // Output projection + residual.
-            matvec_bias_into(&self.attn, &blk.w_proj, &blk.b_proj, &mut self.proj);
+            matvec_bias_into_wt(&self.attn, &blk.w_proj, &blk.b_proj, &mut self.proj);
             for c in 0..d {
                 self.x[c] += self.proj[c];
             }
@@ -299,7 +310,7 @@ mod tests {
 
     fn nano_weights(seed: u64) -> Weights {
         let mut rng = Rng::new(seed);
-        Weights::random(&ModelConfig::nano(), &mut rng)
+        Weights::random(&ModelConfig::nano(), &mut rng).unwrap()
     }
 
     fn plans() -> Vec<PrecisionPlan> {
@@ -352,6 +363,35 @@ mod tests {
     }
 
     #[test]
+    fn decode_matches_full_forward_under_quantized_storage() {
+        // The KV-cache invariant carries over unchanged to quantized
+        // storage: decode on bf16/PS weights is bit-identical to the full
+        // forward pass on the same weights (shared fused-dequant kernels).
+        use crate::linalg::WeightFormat;
+        let w = nano_weights(8);
+        let tokens: Vec<u32> = (0..10).map(|i| (i * 19 + 7) % 128).collect();
+        for fmt in [WeightFormat::Bf16, WeightFormat::PsRounded { mu: 6 }] {
+            let q = w.quantize_to(fmt).unwrap();
+            for plan in [
+                PrecisionPlan::reference(),
+                PrecisionPlan::whole_model(AttentionPrecision::lamp(
+                    3,
+                    0.1,
+                    SoftmaxRule::Strict,
+                )),
+            ] {
+                let mut session = DecodeSession::new(&q, plan, 42);
+                session.prefill(&tokens).unwrap();
+                let full = forward(&q, &tokens, plan, 42).unwrap();
+                let want = full.logits.row(tokens.len() - 1);
+                for (c, (a, b)) in session.logits().iter().zip(want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{fmt:?} col {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn stats_count_each_product_once() {
         let w = nano_weights(2);
         let plan = PrecisionPlan::whole_model(AttentionPrecision::lamp(
@@ -379,6 +419,26 @@ mod tests {
         assert_eq!(session.stats().sampler, full.stats.sampler);
         assert_eq!(session.stats().mlp.total, cfg.layers * 5 * cfg.d_ff());
         assert_eq!(session.stats().sampler.total, 5 * cfg.vocab);
+    }
+
+    #[test]
+    fn storage_pinned_plan_rejected_at_decode_step() {
+        use crate::linalg::WeightFormat;
+        use crate::model::plan::WeightPrecision;
+        let w = nano_weights(9);
+        let pinned = PrecisionPlan::reference()
+            .with_weights(WeightPrecision::Exact(WeightFormat::Bf16));
+        // f32 weights + bf16-pinned plan: the session constructs (its
+        // signature cannot fail) but refuses to decode — same front door
+        // as `forward`.
+        let mut session = DecodeSession::new(&w, pinned, 0);
+        let err = session.decode_step(1).unwrap_err().to_string();
+        assert!(err.contains("weight storage"), "{err}");
+        // Matching storage decodes fine.
+        let q = w.quantize_to(WeightFormat::Bf16).unwrap();
+        let mut session = DecodeSession::new(&q, pinned, 0);
+        session.prefill(&[1, 2, 3]).unwrap();
+        assert_eq!(session.len(), 3);
     }
 
     #[test]

@@ -4,6 +4,11 @@
 //! `norm` site, `model::plan::norm_site_row` stores the residual row in
 //! PS(μ) and restores the components the RMS-norm greedy solver (§3.2)
 //! selects before this function sees them.
+//!
+//! The gain/shift parameters stay `Vec<f32>` under every weight-storage
+//! format ([`crate::linalg::WeightFormat`]): they are O(d) against the
+//! matrices' O(d²) and multiply every normalized activation, so
+//! quantizing them buys no measurable bandwidth and costs accuracy.
 
 /// y = g ⊙ (x − mean)/√(var + ε) + b, applied in place over one vector.
 pub fn layernorm(x: &mut [f32], g: &[f32], b: &[f32], eps: f32) {

@@ -2,21 +2,25 @@
 //!
 //! Under the [`PrecisionPlan`](super::plan::PrecisionPlan)'s MLP site, the
 //! fc and proj matmuls accumulate in PS(μ) with per-step rounding
-//! ([`matvec_ps_bias_into`]) and the GELU ∘ fc composition is repaired by
-//! look-ahead recomputation (paper §3.1): the diagonal sensitivity
+//! ([`matvec_ps_bias_into_wt`]) and the GELU ∘ fc composition is repaired
+//! by look-ahead recomputation (paper §3.1): the diagonal sensitivity
 //! `|φ′(ŷ)·ŷ/φ(ŷ)|` of the *low-precision* pre-activations flags the
 //! hidden units whose fc inner products are recomputed in FP32
-//! ([`matvec_col_f32`]) before the nonlinearity. The proj matmul has no
+//! ([`matvec_col_f32_wt`]) before the nonlinearity. The proj matmul has no
 //! downstream nonlinearity to guide a selection, so it runs uniform PS(μ).
 //! A reference site (μ=23, τ=∞) short-circuits to the vectorized FP32
 //! path, bit-identical to the pre-plan engine.
+//!
+//! Every kernel reads the [`WeightTensor`] storage directly (fused, exact
+//! dequantization), so all of the above holds unchanged under f32, bf16,
+//! or PS(μ)-rounded weight storage.
 
 use crate::error::{Error, Result};
 use crate::lamp::activation::{select_activation_rule, Activation};
 use crate::linalg::matmul::{
-    matmul_bias_into, matvec_bias_into, matvec_col_f32, matvec_ps_bias_into,
+    matmul_bias_into_wt, matvec_bias_into_wt, matvec_col_f32_wt, matvec_ps_bias_into_wt,
 };
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, WeightTensor};
 use crate::model::plan::{site_row_seed, SitePrecision, SITE_MLP};
 use crate::util::Rng;
 
@@ -32,9 +36,9 @@ use crate::util::Rng;
 #[allow(clippy::too_many_arguments)]
 pub fn mlp_row_into(
     xn: &[f32],
-    w_fc: &Matrix,
+    w_fc: &WeightTensor,
     b_fc: &[f32],
-    w_out: &Matrix,
+    w_out: &WeightTensor,
     b_out: &[f32],
     site: SitePrecision,
     row_seed: u64,
@@ -45,15 +49,15 @@ pub fn mlp_row_into(
     debug_assert_eq!(hidden.len(), w_fc.cols());
     debug_assert_eq!(out.len(), w_out.cols());
     if site.is_reference() {
-        matvec_bias_into(xn, w_fc, b_fc, hidden);
+        matvec_bias_into_wt(xn, w_fc, b_fc, hidden);
         for h in hidden.iter_mut() {
             *h = Activation::Gelu.apply(*h);
         }
-        matvec_bias_into(hidden, w_out, b_out, out);
+        matvec_bias_into_wt(hidden, w_out, b_out, out);
         return 0;
     }
     // Step 1: PS(μ) accumulation of the fc pre-activations.
-    matvec_ps_bias_into(xn, w_fc, b_fc, site.mu, hidden);
+    matvec_ps_bias_into_wt(xn, w_fc, b_fc, site.mu, hidden);
     // Steps 2–3: closed-form activation selection + FP32 recomputation.
     let mut recomputed = 0;
     if site.tau.is_finite() {
@@ -62,7 +66,7 @@ pub fn mlp_row_into(
             select_activation_rule(hidden, Activation::Gelu, site.tau, site.rule, &mut rng);
         for (j, &m) in mask.iter().enumerate() {
             if m {
-                hidden[j] = matvec_col_f32(xn, w_fc, b_fc, j);
+                hidden[j] = matvec_col_f32_wt(xn, w_fc, b_fc, j);
                 recomputed += 1;
             }
         }
@@ -71,7 +75,7 @@ pub fn mlp_row_into(
     for h in hidden.iter_mut() {
         *h = Activation::Gelu.apply(*h);
     }
-    matvec_ps_bias_into(hidden, w_out, b_out, site.mu, out);
+    matvec_ps_bias_into_wt(hidden, w_out, b_out, site.mu, out);
     recomputed
 }
 
@@ -88,9 +92,9 @@ pub fn mlp_row_into(
 #[allow(clippy::too_many_arguments)]
 pub fn mlp_into(
     x: &Matrix,
-    w_fc: &Matrix,
+    w_fc: &WeightTensor,
     b_fc: &[f32],
-    w_out: &Matrix,
+    w_out: &WeightTensor,
     b_out: &[f32],
     site: SitePrecision,
     seed: u64,
@@ -117,11 +121,11 @@ pub fn mlp_into(
         )));
     }
     if site.is_reference() {
-        matmul_bias_into(x, w_fc, b_fc, hidden)?;
+        matmul_bias_into_wt(x, w_fc, b_fc, hidden)?;
         for h in hidden.data_mut() {
             *h = Activation::Gelu.apply(*h);
         }
-        matmul_bias_into(hidden, w_out, b_out, out)?;
+        matmul_bias_into_wt(hidden, w_out, b_out, out)?;
         return Ok(0);
     }
     let s = x.rows();
@@ -149,9 +153,9 @@ pub fn mlp_into(
 /// `Result` instead of panicking.
 pub fn mlp(
     x: &Matrix,
-    w_fc: &Matrix,
+    w_fc: &WeightTensor,
     b_fc: &[f32],
-    w_out: &Matrix,
+    w_out: &WeightTensor,
     b_out: &[f32],
 ) -> Result<Matrix> {
     let mut hidden = Matrix::zeros(x.rows(), w_fc.cols());
@@ -180,8 +184,8 @@ mod tests {
     fn shapes() {
         let mut rng = Rng::new(1);
         let x = Matrix::randn(3, 8, 1.0, &mut rng);
-        let w_fc = Matrix::randn(8, 32, 0.1, &mut rng);
-        let w_out = Matrix::randn(32, 8, 0.1, &mut rng);
+        let w_fc: WeightTensor = Matrix::randn(8, 32, 0.1, &mut rng).into();
+        let w_out: WeightTensor = Matrix::randn(32, 8, 0.1, &mut rng).into();
         let y = mlp(&x, &w_fc, &vec![0.0; 32], &w_out, &vec![0.0; 8]).unwrap();
         assert_eq!(y.shape(), (3, 8));
     }
@@ -189,11 +193,11 @@ mod tests {
     #[test]
     fn shape_mismatch_is_an_error_not_a_panic() {
         let x = Matrix::zeros(2, 4);
-        let w_fc = Matrix::zeros(5, 16); // 4 != 5
-        let w_out = Matrix::zeros(16, 4);
+        let w_fc: WeightTensor = Matrix::zeros(5, 16).into(); // 4 != 5
+        let w_out: WeightTensor = Matrix::zeros(16, 4).into();
         assert!(mlp(&x, &w_fc, &[], &w_out, &[]).is_err());
-        let w_fc = Matrix::zeros(4, 16);
-        let w_out_bad = Matrix::zeros(8, 4); // 16 != 8
+        let w_fc: WeightTensor = Matrix::zeros(4, 16).into();
+        let w_out_bad: WeightTensor = Matrix::zeros(8, 4).into(); // 16 != 8
         assert!(mlp(&x, &w_fc, &[], &w_out_bad, &[]).is_err());
         assert!(mlp(&x, &w_fc, &[0.0; 3], &w_out, &[]).is_err(), "bad bias length");
     }
@@ -201,8 +205,8 @@ mod tests {
     #[test]
     fn zero_weights_yield_bias() {
         let x = Matrix::zeros(2, 4);
-        let w_fc = Matrix::zeros(4, 16);
-        let w_out = Matrix::zeros(16, 4);
+        let w_fc: WeightTensor = Matrix::zeros(4, 16).into();
+        let w_out: WeightTensor = Matrix::zeros(16, 4).into();
         let b_out = vec![1.5f32; 4];
         let y = mlp(&x, &w_fc, &vec![0.0; 16], &w_out, &b_out).unwrap();
         for i in 0..2 {
@@ -216,21 +220,21 @@ mod tests {
     fn gelu_nonlinearity_applied() {
         // One unit: x=1, w_fc=1, b=0 → GELU(1) ≈ 0.8412; w_out=1.
         let x = Matrix::from_vec(1, 1, vec![1.0]).unwrap();
-        let w_fc = Matrix::from_vec(1, 1, vec![1.0]).unwrap();
-        let w_out = Matrix::from_vec(1, 1, vec![1.0]).unwrap();
+        let w_fc: WeightTensor = Matrix::from_vec(1, 1, vec![1.0]).unwrap().into();
+        let w_out: WeightTensor = Matrix::from_vec(1, 1, vec![1.0]).unwrap().into();
         let y = mlp(&x, &w_fc, &[0.0], &w_out, &[0.0]).unwrap();
         assert!((y.get(0, 0) - 0.8412).abs() < 1e-3, "{}", y.get(0, 0));
     }
 
-    fn setup(s: usize) -> (Matrix, Matrix, Vec<f32>, Matrix, Vec<f32>) {
+    fn setup(s: usize) -> (Matrix, WeightTensor, Vec<f32>, WeightTensor, Vec<f32>) {
         let mut rng = Rng::new(5);
         let d = 8;
         let ff = 32;
         (
             Matrix::randn(s, d, 1.0, &mut rng),
-            Matrix::randn(d, ff, 0.4, &mut rng),
+            Matrix::randn(d, ff, 0.4, &mut rng).into(),
             (0..ff).map(|_| rng.normal_f32() * 0.1).collect(),
-            Matrix::randn(ff, d, 0.4, &mut rng),
+            Matrix::randn(ff, d, 0.4, &mut rng).into(),
             (0..d).map(|_| rng.normal_f32() * 0.1).collect(),
         )
     }

@@ -19,6 +19,13 @@
 //! A plan whose non-attention sites are all at reference reproduces the
 //! paper's attention-only experimental setting bit for bit.
 //!
+//! Orthogonally to *compute* precision, parameters live in mixed-precision
+//! *storage* ([`crate::linalg::WeightTensor`]: f32 / bf16 / PS(μ)-rounded;
+//! [`Weights::quantize_to`]). Every stored value is an exact f32, so the
+//! whole plan machinery — selection, FP32 repair, decode parity — carries
+//! over unchanged under quantized storage; f32 storage is bit-identical
+//! to the historical `Matrix`-backed weights.
+//!
 //! The native engine exists for three reasons:
 //! 1. *parity testing* — the PJRT engine is validated against it;
 //! 2. *instrumentation* — per-layer/per-site recomputation statistics;
@@ -40,6 +47,6 @@ pub use attention::{AttentionPrecision, LampStats, SiteStats};
 pub use config::ModelConfig;
 pub use forward::{forward, forward_with, ForwardOutput, ForwardScratch};
 pub use kvcache::DecodeSession;
-pub use plan::{PrecisionPlan, SitePrecision};
+pub use plan::{PrecisionPlan, SitePrecision, WeightPrecision};
 pub use sampler::{generate, generate_reforward, generate_with_stats, Decode};
 pub use weights::Weights;

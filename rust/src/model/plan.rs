@@ -42,15 +42,66 @@ use super::attention::AttentionPrecision;
 use crate::error::{Error, Result};
 use crate::lamp::rmsnorm::select_rmsnorm;
 use crate::lamp::softmax::{random_mask, select_softmax, SoftmaxRule};
-use crate::linalg::matmul::dot_unrolled4;
-use crate::linalg::Matrix;
-use crate::softfloat::dot::{dot_f32, dot_ps};
+use crate::linalg::matmul::{wt_row_dot_f32, wt_row_dot_ps, wt_row_dot_unrolled4};
+use crate::linalg::{WeightFormat, WeightTensor};
 use crate::softfloat::round::round_to_mantissa;
 use crate::util::Rng;
 
 /// Per-site precision configuration — the same (μ, τ, rule) triple the
 /// attention-only engine used, now one per composition site.
 pub type SitePrecision = AttentionPrecision;
+
+/// The plan's weight-storage requirement — the control-plane face of
+/// [`WeightFormat`]. Compute sites describe *arithmetic* precision; this
+/// field describes the *storage* precision of the parameters the request
+/// expects to run against. Storage is an engine-level property (weights
+/// are quantized once, at load), so the plan carries a requirement that
+/// the engine checks at the front door (`Engine::validate_policy`,
+/// `forward`), not a per-request conversion.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum WeightPrecision {
+    /// Serve on whatever storage the engine holds (the default — every
+    /// pre-existing plan and policy behaves this way).
+    #[default]
+    Any,
+    /// Require the engine's weights to be stored in exactly this format.
+    Exact(WeightFormat),
+}
+
+impl WeightPrecision {
+    /// Does an engine holding `fmt`-storage weights satisfy this
+    /// requirement?
+    pub fn accepts(&self, fmt: WeightFormat) -> bool {
+        match self {
+            WeightPrecision::Any => true,
+            WeightPrecision::Exact(want) => *want == fmt,
+        }
+    }
+
+    /// Range validation (PrecisionPlan-style: typed error, front door).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            WeightPrecision::Any => Ok(()),
+            WeightPrecision::Exact(fmt) => fmt.validate(),
+        }
+    }
+
+    /// Parse `any`, `f32`, `bf16`, or `ps<mu>`.
+    pub fn by_name(name: &str) -> Result<Self> {
+        if name == "any" {
+            return Ok(WeightPrecision::Any);
+        }
+        Ok(WeightPrecision::Exact(WeightFormat::by_name(name)?))
+    }
+
+    /// Canonical name (inverse of [`Self::by_name`]).
+    pub fn label(&self) -> String {
+        match self {
+            WeightPrecision::Any => "any".to_string(),
+            WeightPrecision::Exact(fmt) => fmt.label(),
+        }
+    }
+}
 
 /// Per-composition-site precision configuration for one forward pass.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -63,6 +114,8 @@ pub struct PrecisionPlan {
     pub norm: SitePrecision,
     /// Sampler site (softmax ∘ logits matmul), once per row.
     pub sampler: SitePrecision,
+    /// Weight-storage requirement ([`WeightPrecision::Any`] by default).
+    pub weights: WeightPrecision,
 }
 
 impl PrecisionPlan {
@@ -74,6 +127,7 @@ impl PrecisionPlan {
             mlp: SitePrecision::reference(),
             norm: SitePrecision::reference(),
             sampler: SitePrecision::reference(),
+            weights: WeightPrecision::Any,
         }
     }
 
@@ -85,7 +139,19 @@ impl PrecisionPlan {
 
     /// The same (μ, τ, rule) at every composition site.
     pub fn whole_model(site: SitePrecision) -> Self {
-        PrecisionPlan { attention: site, mlp: site, norm: site, sampler: site }
+        PrecisionPlan {
+            attention: site,
+            mlp: site,
+            norm: site,
+            sampler: site,
+            weights: WeightPrecision::Any,
+        }
+    }
+
+    /// Replace the weight-storage requirement.
+    pub fn with_weights(mut self, weights: WeightPrecision) -> Self {
+        self.weights = weights;
+        self
     }
 
     /// Replace the MLP site.
@@ -142,7 +208,7 @@ impl PrecisionPlan {
                 )));
             }
         }
-        Ok(())
+        self.weights.validate()
     }
 }
 
@@ -262,15 +328,18 @@ pub(crate) fn norm_site_row(
 /// Compute one logits row under the sampler site.
 ///
 /// Reference: the 4-way-unrolled FP32 row dot of the tied unembedding —
-/// exactly the row body of `matmul_transposed_into`, so the reference
+/// exactly the row body of `matmul_transposed_into_wt`, so the reference
 /// short-circuit is bit-identical to the pre-plan path. Otherwise: PS(μ)
-/// accumulation per logit ([`dot_ps`] over the contiguous `wte` rows),
-/// then the softmax selection rule over the logits row flags the inner
-/// products recomputed with the sequential-FMA FP32 chain. Returns the
-/// number of recomputed logits.
+/// accumulation per logit ([`wt_row_dot_ps`] over the contiguous `wte`
+/// rows), then the softmax selection rule over the logits row flags the
+/// inner products recomputed with the sequential-FMA FP32 chain. All three
+/// kernels dequantize the stored `wte` on the fly (exactly), so the site
+/// behaves identically whether the weights live in f32, bf16, or PS(μ)
+/// storage — only the *values* differ, by the one-time quantization
+/// error. Returns the number of recomputed logits.
 pub(crate) fn logits_row_site(
     x: &[f32],
-    wte: &Matrix,
+    wte: &WeightTensor,
     site: SitePrecision,
     row_seed: u64,
     out: &mut [f32],
@@ -279,12 +348,12 @@ pub(crate) fn logits_row_site(
     debug_assert_eq!(x.len(), wte.cols());
     if site.is_reference() {
         for (j, o) in out.iter_mut().enumerate() {
-            *o = dot_unrolled4(x, wte.row(j));
+            *o = wt_row_dot_unrolled4(x, wte, j);
         }
         return 0;
     }
     for (j, o) in out.iter_mut().enumerate() {
-        *o = dot_ps(x, wte.row(j), site.mu);
+        *o = wt_row_dot_ps(x, wte, j, site.mu);
     }
     let mut recomputed = 0;
     if site.tau.is_finite() {
@@ -292,7 +361,7 @@ pub(crate) fn logits_row_site(
         let mask = select_softmax(out, site.tau, site.rule, &mut rng);
         for (j, &m) in mask.iter().enumerate() {
             if m {
-                out[j] = dot_f32(x, wte.row(j));
+                out[j] = wt_row_dot_f32(x, wte, j);
                 recomputed += 1;
             }
         }
@@ -304,6 +373,9 @@ pub(crate) fn logits_row_site(
 mod tests {
     use super::*;
     use crate::lamp::softmax::SoftmaxRule;
+    use crate::linalg::matmul::dot_unrolled4;
+    use crate::linalg::Matrix;
+    use crate::softfloat::dot::dot_f32;
 
     #[test]
     fn reference_plan_is_attention_only_and_valid() {
@@ -426,13 +498,19 @@ mod tests {
     #[test]
     fn logits_site_reference_matches_unrolled_dot() {
         let mut rng = Rng::new(6);
-        let wte = Matrix::randn(16, 8, 1.0, &mut rng);
+        let m = Matrix::randn(16, 8, 1.0, &mut rng);
         let x: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
-        let mut out = vec![0.0f32; 16];
-        let n = logits_row_site(&x, &wte, SitePrecision::reference(), 3, &mut out);
-        assert_eq!(n, 0);
-        for (j, &o) in out.iter().enumerate() {
-            assert_eq!(o.to_bits(), dot_unrolled4(&x, wte.row(j)).to_bits());
+        // The reference short-circuit holds for every storage format: the
+        // fused row dot equals dot_unrolled4 over the dequantized rows.
+        for fmt in [WeightFormat::F32, WeightFormat::Bf16] {
+            let wte = WeightTensor::from_matrix(&m, fmt).unwrap();
+            let deq = wte.to_matrix();
+            let mut out = vec![0.0f32; 16];
+            let n = logits_row_site(&x, &wte, SitePrecision::reference(), 3, &mut out);
+            assert_eq!(n, 0);
+            for (j, &o) in out.iter().enumerate() {
+                assert_eq!(o.to_bits(), dot_unrolled4(&x, deq.row(j)).to_bits());
+            }
         }
     }
 
@@ -441,7 +519,8 @@ mod tests {
         // τ=0 with the strict rule recomputes every nonzero-sensitivity
         // logit with the sequential FP32 chain.
         let mut rng = Rng::new(7);
-        let wte = Matrix::randn(32, 8, 1.0, &mut rng);
+        let m = Matrix::randn(32, 8, 1.0, &mut rng);
+        let wte: WeightTensor = m.clone().into();
         let x: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
         let site = SitePrecision::lamp(2, 0.0, SoftmaxRule::Strict);
         let mut out = vec![0.0f32; 32];
@@ -450,7 +529,7 @@ mod tests {
         let mut uniform = vec![0.0f32; 32];
         let nu = logits_row_site(&x, &wte, SitePrecision::uniform(2), 3, &mut uniform);
         assert_eq!(nu, 0);
-        let exact: Vec<f32> = (0..32).map(|j| dot_f32(&x, wte.row(j))).collect();
+        let exact: Vec<f32> = (0..32).map(|j| dot_f32(&x, m.row(j))).collect();
         let err = |a: &[f32]| -> f32 {
             a.iter()
                 .zip(&exact)
@@ -463,5 +542,38 @@ mod tests {
             err(&out),
             err(&uniform)
         );
+    }
+
+    #[test]
+    fn weight_precision_parse_label_accept() {
+        assert_eq!(WeightPrecision::by_name("any").unwrap(), WeightPrecision::Any);
+        assert_eq!(
+            WeightPrecision::by_name("bf16").unwrap(),
+            WeightPrecision::Exact(WeightFormat::Bf16)
+        );
+        assert_eq!(
+            WeightPrecision::by_name("ps8").unwrap(),
+            WeightPrecision::Exact(WeightFormat::PsRounded { mu: 8 })
+        );
+        assert!(WeightPrecision::by_name("ps99").is_err());
+        for name in ["any", "f32", "bf16", "ps8"] {
+            assert_eq!(WeightPrecision::by_name(name).unwrap().label(), name);
+        }
+        assert!(WeightPrecision::Any.accepts(WeightFormat::Bf16));
+        assert!(WeightPrecision::Exact(WeightFormat::Bf16).accepts(WeightFormat::Bf16));
+        assert!(!WeightPrecision::Exact(WeightFormat::Bf16).accepts(WeightFormat::F32));
+    }
+
+    #[test]
+    fn plan_validates_weight_precision_and_default_is_any() {
+        assert_eq!(PrecisionPlan::reference().weights, WeightPrecision::Any);
+        let p: PrecisionPlan = SitePrecision::uniform(4).into();
+        assert_eq!(p.weights, WeightPrecision::Any, "the From shim stays Any");
+        let good = PrecisionPlan::reference()
+            .with_weights(WeightPrecision::Exact(WeightFormat::Bf16));
+        good.validate().unwrap();
+        let bad = PrecisionPlan::reference()
+            .with_weights(WeightPrecision::Exact(WeightFormat::PsRounded { mu: 0 }));
+        assert!(bad.validate().is_err());
     }
 }

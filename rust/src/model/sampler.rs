@@ -57,13 +57,23 @@ pub fn generate_with_stats(
     if prompt.is_empty() {
         return Err(Error::shape("empty prompt".to_string()));
     }
+    let plan: PrecisionPlan = prec.into();
+    // Same storage front door as `forward`: a plan that demands a specific
+    // weight format is rejected before any decoding happens.
+    if !plan.weights.accepts(weights.weight_format()) {
+        return Err(Error::config(format!(
+            "plan requires {} weight storage, engine holds {}",
+            plan.weights.label(),
+            weights.weight_format().label()
+        )));
+    }
     let cfg = &weights.config;
     let mut tokens = prompt.to_vec();
     if tokens.len() >= cfg.seq || new_tokens == 0 {
         return Ok((tokens, LampStats::default()));
     }
     let mut rng = Rng::new(seed);
-    let mut session = DecodeSession::new(weights, prec.into(), seed);
+    let mut session = DecodeSession::new(weights, plan, seed);
     session.prefill(prompt)?;
     for _ in 0..new_tokens {
         let next = decode.pick(session.logits(), &mut rng)?;
@@ -159,7 +169,7 @@ mod tests {
 
     fn weights() -> Weights {
         let mut rng = Rng::new(1);
-        Weights::random(&ModelConfig::nano(), &mut rng)
+        Weights::random(&ModelConfig::nano(), &mut rng).unwrap()
     }
 
     #[test]

@@ -1,11 +1,19 @@
-//! Model parameters: loading from `.lamp` tensor files (produced by the
-//! Python compile path) and random initialization (for tests and the
-//! untrained baseline).
+//! Model parameters over mixed-precision [`WeightTensor`] storage:
+//! loading from `.lamp` tensor files (produced by the Python compile
+//! path), random initialization (for tests and the untrained baseline),
+//! and [`Weights::quantize_to`] storage conversion.
+//!
+//! Weight *matrices* (embeddings, QKV/proj, MLP fc/out) carry the storage
+//! format; biases and layernorm gains stay `Vec<f32>` — they are O(d)
+//! against the matrices' O(d²), always added in f32, and precision-
+//! critical, so quantizing them buys no bandwidth and costs accuracy.
+//! F32 storage reproduces the historical `Matrix`-backed weights bit for
+//! bit (`rust/tests/plan_parity.rs` pins this).
 
 use super::config::ModelConfig;
 use crate::error::{Error, Result};
-use crate::linalg::Matrix;
-use crate::tensorio::TensorFile;
+use crate::linalg::{Matrix, WeightFormat, WeightStore, WeightTensor};
+use crate::tensorio::{DType, Tensor, TensorFile};
 use crate::util::Rng;
 use std::path::Path;
 
@@ -15,18 +23,18 @@ pub struct BlockWeights {
     pub ln1_g: Vec<f32>,
     pub ln1_b: Vec<f32>,
     /// [d_model, 3·d_model] — fused QKV projection.
-    pub w_qkv: Matrix,
+    pub w_qkv: WeightTensor,
     pub b_qkv: Vec<f32>,
     /// [d_model, d_model] — attention output projection.
-    pub w_proj: Matrix,
+    pub w_proj: WeightTensor,
     pub b_proj: Vec<f32>,
     pub ln2_g: Vec<f32>,
     pub ln2_b: Vec<f32>,
     /// [d_model, d_ff].
-    pub w_fc: Matrix,
+    pub w_fc: WeightTensor,
     pub b_fc: Vec<f32>,
     /// [d_ff, d_model].
-    pub w_out: Matrix,
+    pub w_out: WeightTensor,
     pub b_out: Vec<f32>,
 }
 
@@ -35,9 +43,9 @@ pub struct BlockWeights {
 pub struct Weights {
     pub config: ModelConfig,
     /// Token embeddings [vocab, d_model].
-    pub wte: Matrix,
+    pub wte: WeightTensor,
     /// Positional embeddings [seq, d_model].
-    pub wpe: Matrix,
+    pub wpe: WeightTensor,
     pub blocks: Vec<BlockWeights>,
     pub lnf_g: Vec<f32>,
     pub lnf_b: Vec<f32>,
@@ -45,9 +53,10 @@ pub struct Weights {
 
 impl Weights {
     /// GPT-2-style random initialization (N(0, 0.02), residual projections
-    /// scaled by 1/√(2L)).
-    pub fn random(config: &ModelConfig, rng: &mut Rng) -> Self {
-        config.validate().expect("valid config");
+    /// scaled by 1/√(2L)), stored in f32. Invalid configs are rejected as
+    /// a typed error, like the tensor-file loaders.
+    pub fn random(config: &ModelConfig, rng: &mut Rng) -> Result<Self> {
+        config.validate()?;
         let d = config.d_model;
         let resid_scale = 1.0 / ((2 * config.layers) as f32).sqrt();
         let blocks = (0..config.layers)
@@ -56,27 +65,82 @@ impl Weights {
                 BlockWeights {
                     ln1_g: vec![1.0; d],
                     ln1_b: vec![0.0; d],
-                    w_qkv: Matrix::randn(d, 3 * d, 0.02, &mut r),
+                    w_qkv: Matrix::randn(d, 3 * d, 0.02, &mut r).into(),
                     b_qkv: vec![0.0; 3 * d],
-                    w_proj: Matrix::randn(d, d, 0.02 * resid_scale, &mut r),
+                    w_proj: Matrix::randn(d, d, 0.02 * resid_scale, &mut r).into(),
                     b_proj: vec![0.0; d],
                     ln2_g: vec![1.0; d],
                     ln2_b: vec![0.0; d],
-                    w_fc: Matrix::randn(d, config.d_ff(), 0.02, &mut r),
+                    w_fc: Matrix::randn(d, config.d_ff(), 0.02, &mut r).into(),
                     b_fc: vec![0.0; config.d_ff()],
-                    w_out: Matrix::randn(config.d_ff(), d, 0.02 * resid_scale, &mut r),
+                    w_out: Matrix::randn(config.d_ff(), d, 0.02 * resid_scale, &mut r)
+                        .into(),
                     b_out: vec![0.0; d],
                 }
             })
             .collect();
-        Weights {
+        Ok(Weights {
             config: config.clone(),
-            wte: Matrix::randn(config.vocab, d, 0.02, rng),
-            wpe: Matrix::randn(config.seq, d, 0.01, rng),
+            wte: Matrix::randn(config.vocab, d, 0.02, rng).into(),
+            wpe: Matrix::randn(config.seq, d, 0.01, rng).into(),
             blocks,
             lnf_g: vec![1.0; d],
             lnf_b: vec![0.0; d],
+        })
+    }
+
+    /// Re-store every weight matrix under `fmt` (biases/layernorm params
+    /// stay f32). `quantize_to(WeightFormat::F32)` on f32-storage weights
+    /// is the identity; on quantized weights it is the exact
+    /// dequantization (every stored value is an exact f32). Same-format
+    /// conversion is a single clone (quantization is idempotent, so the
+    /// re-round could never change anything).
+    pub fn quantize_to(&self, fmt: WeightFormat) -> Result<Self> {
+        fmt.validate()?;
+        if fmt == self.weight_format() {
+            return Ok(self.clone());
         }
+        let mut out = self.clone();
+        out.wte = out.wte.quantize_to(fmt)?;
+        out.wpe = out.wpe.quantize_to(fmt)?;
+        for b in &mut out.blocks {
+            b.w_qkv = b.w_qkv.quantize_to(fmt)?;
+            b.w_proj = b.w_proj.quantize_to(fmt)?;
+            b.w_fc = b.w_fc.quantize_to(fmt)?;
+            b.w_out = b.w_out.quantize_to(fmt)?;
+        }
+        Ok(out)
+    }
+
+    /// The storage format of the weight matrices. `quantize_to` and the
+    /// loaders keep it uniform across tensors; the embedding table is the
+    /// representative.
+    pub fn weight_format(&self) -> WeightFormat {
+        self.wte.format()
+    }
+
+    /// Resident parameter bytes: quantized matrix payloads at their stored
+    /// width plus the f32 bias/layernorm vectors — the number the decode
+    /// path actually streams per full pass.
+    pub fn resident_param_bytes(&self) -> usize {
+        let vecs = |v: &Vec<f32>| 4 * v.len();
+        let mut total = self.wte.resident_bytes() + self.wpe.resident_bytes();
+        total += vecs(&self.lnf_g) + vecs(&self.lnf_b);
+        for b in &self.blocks {
+            total += b.w_qkv.resident_bytes()
+                + b.w_proj.resident_bytes()
+                + b.w_fc.resident_bytes()
+                + b.w_out.resident_bytes();
+            total += vecs(&b.ln1_g)
+                + vecs(&b.ln1_b)
+                + vecs(&b.b_qkv)
+                + vecs(&b.b_proj)
+                + vecs(&b.ln2_g)
+                + vecs(&b.ln2_b)
+                + vecs(&b.b_fc)
+                + vecs(&b.b_out);
+        }
+        total
     }
 
     /// Load from a `.lamp` tensor file using the canonical naming scheme
@@ -87,11 +151,12 @@ impl Weights {
         Self::from_tensor_file(&file, config)
     }
 
-    /// Build from an in-memory [`TensorFile`].
+    /// Build from an in-memory [`TensorFile`]. Weight matrices adopt the
+    /// dtype each tensor was stored with (f32 / bf16 / ps-f32).
     pub fn from_tensor_file(file: &TensorFile, config: &ModelConfig) -> Result<Self> {
         config.validate()?;
         let d = config.d_model;
-        let mat = |name: &str, rows: usize, cols: usize| -> Result<Matrix> {
+        let mat = |name: &str, rows: usize, cols: usize| -> Result<WeightTensor> {
             let t = file.require(name)?;
             if t.dims != vec![rows, cols] {
                 return Err(Error::shape(format!(
@@ -99,7 +164,16 @@ impl Weights {
                     t.dims
                 )));
             }
-            Matrix::from_vec(rows, cols, t.as_f32()?)
+            match t.dtype {
+                DType::F32 => WeightTensor::from_f32(rows, cols, t.as_f32()?),
+                DType::Bf16 => WeightTensor::from_bf16(rows, cols, t.as_bf16()?),
+                DType::PsF32 { mu } => {
+                    WeightTensor::from_ps(rows, cols, mu, t.dequant_f32()?)
+                }
+                DType::I32 => Err(Error::format(format!(
+                    "{name}: i32 is not a weight-matrix dtype"
+                ))),
+            }
         };
         let vec1 = |name: &str, len: usize| -> Result<Vec<f32>> {
             let t = file.require(name)?;
@@ -129,36 +203,70 @@ impl Weights {
                 b_out: vec1(&p("mlp.b_out"), d)?,
             });
         }
-        Ok(Weights {
+        let w = Weights {
             config: config.clone(),
             wte: mat("wte", config.vocab, d)?,
             wpe: mat("wpe", config.seq, d)?,
             blocks,
             lnf_g: vec1("lnf.g", d)?,
             lnf_b: vec1("lnf.b", d)?,
-        })
+        };
+        // Enforce the uniform-storage invariant `weight_format()` reports
+        // and the engine storage gate relies on: a file mixing matrix
+        // dtypes would otherwise serve (and attribute stats for) a format
+        // other than the declared one.
+        let fmt = w.weight_format();
+        let mut tensors: Vec<(&str, WeightFormat)> =
+            vec![("wte", w.wte.format()), ("wpe", w.wpe.format())];
+        for b in &w.blocks {
+            tensors.push(("attn.w_qkv", b.w_qkv.format()));
+            tensors.push(("attn.w_proj", b.w_proj.format()));
+            tensors.push(("mlp.w_fc", b.w_fc.format()));
+            tensors.push(("mlp.w_out", b.w_out.format()));
+        }
+        if let Some((name, other)) = tensors.iter().find(|(_, f)| *f != fmt) {
+            return Err(Error::format(format!(
+                "mixed weight-storage dtypes: {name} is {}, wte is {} \
+                 (quantize uniformly before writing the tensor file)",
+                other.label(),
+                fmt.label()
+            )));
+        }
+        Ok(w)
     }
 
     /// Serialize into a [`TensorFile`] (inverse of [`Self::from_tensor_file`]).
+    /// Each weight matrix is written in its storage dtype; f32-storage
+    /// weights produce a byte-identical v1 file, quantized storage bumps
+    /// the container to v2.
     pub fn to_tensor_file(&self) -> Result<TensorFile> {
-        use crate::tensorio::Tensor;
+        let wt = |name: String, w: &WeightTensor| -> Result<Tensor> {
+            let dims = vec![w.rows(), w.cols()];
+            match w.store() {
+                WeightStore::F32(d) => Tensor::f32(name, dims, d),
+                WeightStore::Bf16(d) => Tensor::bf16(name, dims, d),
+                WeightStore::PsRounded { mu, data } => {
+                    Tensor::ps_f32(name, dims, *mu, data)
+                }
+            }
+        };
         let mut f = TensorFile::new();
         let c = &self.config;
-        f.push(Tensor::f32("wte", vec![c.vocab, c.d_model], self.wte.data())?)?;
-        f.push(Tensor::f32("wpe", vec![c.seq, c.d_model], self.wpe.data())?)?;
+        f.push(wt("wte".to_string(), &self.wte)?)?;
+        f.push(wt("wpe".to_string(), &self.wpe)?)?;
         for (l, b) in self.blocks.iter().enumerate() {
             let p = |s: &str| format!("h{l}.{s}");
             f.push(Tensor::f32(p("ln1.g"), vec![c.d_model], &b.ln1_g)?)?;
             f.push(Tensor::f32(p("ln1.b"), vec![c.d_model], &b.ln1_b)?)?;
-            f.push(Tensor::f32(p("attn.w_qkv"), vec![c.d_model, 3 * c.d_model], b.w_qkv.data())?)?;
+            f.push(wt(p("attn.w_qkv"), &b.w_qkv)?)?;
             f.push(Tensor::f32(p("attn.b_qkv"), vec![3 * c.d_model], &b.b_qkv)?)?;
-            f.push(Tensor::f32(p("attn.w_proj"), vec![c.d_model, c.d_model], b.w_proj.data())?)?;
+            f.push(wt(p("attn.w_proj"), &b.w_proj)?)?;
             f.push(Tensor::f32(p("attn.b_proj"), vec![c.d_model], &b.b_proj)?)?;
             f.push(Tensor::f32(p("ln2.g"), vec![c.d_model], &b.ln2_g)?)?;
             f.push(Tensor::f32(p("ln2.b"), vec![c.d_model], &b.ln2_b)?)?;
-            f.push(Tensor::f32(p("mlp.w_fc"), vec![c.d_model, c.d_ff()], b.w_fc.data())?)?;
+            f.push(wt(p("mlp.w_fc"), &b.w_fc)?)?;
             f.push(Tensor::f32(p("mlp.b_fc"), vec![c.d_ff()], &b.b_fc)?)?;
-            f.push(Tensor::f32(p("mlp.w_out"), vec![c.d_ff(), c.d_model], b.w_out.data())?)?;
+            f.push(wt(p("mlp.w_out"), &b.w_out)?)?;
             f.push(Tensor::f32(p("mlp.b_out"), vec![c.d_model], &b.b_out)?)?;
         }
         f.push(Tensor::f32("lnf.g", vec![c.d_model], &self.lnf_g)?)?;
@@ -168,23 +276,25 @@ impl Weights {
 
     /// The canonical artifact input order: the flat list of weight tensors
     /// fed to the compiled HLO executable *after* (tokens, mu, tau, seed).
+    /// The artifact consumes f32 buffers, so quantized storage is
+    /// dequantized here (exact — every stored value is an exact f32).
     /// Must match `python/compile/model.py::weight_order`.
     pub fn artifact_order(&self) -> Vec<(&'static str, Vec<f32>)> {
         let mut out: Vec<(&'static str, Vec<f32>)> = Vec::new();
-        out.push(("wte", self.wte.data().to_vec()));
-        out.push(("wpe", self.wpe.data().to_vec()));
+        out.push(("wte", self.wte.to_f32_vec()));
+        out.push(("wpe", self.wpe.to_f32_vec()));
         for b in &self.blocks {
             out.push(("ln1.g", b.ln1_g.clone()));
             out.push(("ln1.b", b.ln1_b.clone()));
-            out.push(("w_qkv", b.w_qkv.data().to_vec()));
+            out.push(("w_qkv", b.w_qkv.to_f32_vec()));
             out.push(("b_qkv", b.b_qkv.clone()));
-            out.push(("w_proj", b.w_proj.data().to_vec()));
+            out.push(("w_proj", b.w_proj.to_f32_vec()));
             out.push(("b_proj", b.b_proj.clone()));
             out.push(("ln2.g", b.ln2_g.clone()));
             out.push(("ln2.b", b.ln2_b.clone()));
-            out.push(("w_fc", b.w_fc.data().to_vec()));
+            out.push(("w_fc", b.w_fc.to_f32_vec()));
             out.push(("b_fc", b.b_fc.clone()));
-            out.push(("w_out", b.w_out.data().to_vec()));
+            out.push(("w_out", b.w_out.to_f32_vec()));
             out.push(("b_out", b.b_out.clone()));
         }
         out.push(("lnf.g", self.lnf_g.clone()));
@@ -198,22 +308,33 @@ mod tests {
     use super::*;
 
     #[test]
-    fn random_init_shapes() {
+    fn random_init_shapes_and_f32_storage() {
         let cfg = ModelConfig::nano();
         let mut rng = Rng::new(1);
-        let w = Weights::random(&cfg, &mut rng);
+        let w = Weights::random(&cfg, &mut rng).unwrap();
         assert_eq!(w.blocks.len(), 2);
         assert_eq!(w.wte.shape(), (128, 32));
         assert_eq!(w.blocks[0].w_qkv.shape(), (32, 96));
         assert_eq!(w.blocks[0].w_fc.shape(), (32, 128));
+        assert_eq!(w.weight_format(), WeightFormat::F32);
+    }
+
+    #[test]
+    fn random_init_rejects_invalid_config() {
+        // Satellite contract: a bad config is a typed error, not a panic.
+        let mut cfg = ModelConfig::nano();
+        cfg.heads = 5; // does not divide d_model
+        let mut rng = Rng::new(1);
+        assert!(Weights::random(&cfg, &mut rng).is_err());
     }
 
     #[test]
     fn tensor_file_roundtrip() {
         let cfg = ModelConfig::nano();
         let mut rng = Rng::new(2);
-        let w = Weights::random(&cfg, &mut rng);
+        let w = Weights::random(&cfg, &mut rng).unwrap();
         let f = w.to_tensor_file().unwrap();
+        assert_eq!(f.required_version(), 1, "f32 storage must stay v1");
         let w2 = Weights::from_tensor_file(&f, &cfg).unwrap();
         assert_eq!(w.wte, w2.wte);
         assert_eq!(w.blocks[1].w_out, w2.blocks[1].w_out);
@@ -221,10 +342,85 @@ mod tests {
     }
 
     #[test]
+    fn quantized_roundtrip_preserves_storage_format() {
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(6);
+        let w = Weights::random(&cfg, &mut rng).unwrap();
+        for fmt in [WeightFormat::Bf16, WeightFormat::PsRounded { mu: 8 }] {
+            let q = w.quantize_to(fmt).unwrap();
+            assert_eq!(q.weight_format(), fmt);
+            let f = q.to_tensor_file().unwrap();
+            assert_eq!(f.required_version(), 2);
+            let bytes = f.to_bytes();
+            let q2 = Weights::from_tensor_file(
+                &TensorFile::from_bytes(&bytes).unwrap(),
+                &cfg,
+            )
+            .unwrap();
+            assert_eq!(q2.weight_format(), fmt);
+            assert_eq!(q.wte, q2.wte, "{fmt:?} wte");
+            assert_eq!(q.blocks[0].w_fc, q2.blocks[0].w_fc, "{fmt:?} w_fc");
+            // Biases stay exact f32 under every storage format.
+            assert_eq!(q.blocks[0].b_fc, w.blocks[0].b_fc);
+            // Requantization is the identity.
+            assert_eq!(q.quantize_to(fmt).unwrap().wte, q.wte);
+        }
+    }
+
+    #[test]
+    fn bf16_halves_matrix_resident_bytes() {
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(7);
+        let w = Weights::random(&cfg, &mut rng).unwrap();
+        let f32_bytes = w.resident_param_bytes();
+        let bf16_bytes = w.quantize_to(WeightFormat::Bf16).unwrap().resident_param_bytes();
+        assert!(bf16_bytes < f32_bytes);
+        // Matrices dominate the parameter count, so total bytes land near
+        // the 2x matrix saving (vectors stay f32).
+        let ratio = f32_bytes as f64 / bf16_bytes as f64;
+        assert!(ratio > 1.8, "ratio={ratio}");
+        // PS-rounded storage is a simulation: no byte saving.
+        let ps_bytes = w
+            .quantize_to(WeightFormat::PsRounded { mu: 8 })
+            .unwrap()
+            .resident_param_bytes();
+        assert_eq!(ps_bytes, f32_bytes);
+    }
+
+    #[test]
+    fn mixed_storage_dtypes_rejected_at_load() {
+        // The uniform-storage invariant behind `weight_format()` and the
+        // engine storage gate: a file quantizing only some matrices must
+        // not load as if it were uniformly stored.
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(8);
+        let w = Weights::random(&cfg, &mut rng).unwrap();
+        let good = w.to_tensor_file().unwrap();
+        let mut mixed = TensorFile::new();
+        for t in good.tensors() {
+            if t.name == "h0.attn.w_qkv" {
+                let bf: Vec<u16> = t
+                    .as_f32()
+                    .unwrap()
+                    .iter()
+                    .map(|&x| crate::linalg::tensor::f32_to_bf16(x))
+                    .collect();
+                mixed
+                    .push(Tensor::bf16(t.name.clone(), t.dims.clone(), &bf).unwrap())
+                    .unwrap();
+            } else {
+                mixed.push(t.clone()).unwrap();
+            }
+        }
+        let err = Weights::from_tensor_file(&mixed, &cfg).unwrap_err().to_string();
+        assert!(err.contains("mixed weight-storage"), "{err}");
+    }
+
+    #[test]
     fn missing_tensor_rejected() {
         let cfg = ModelConfig::nano();
         let mut rng = Rng::new(3);
-        let w = Weights::random(&cfg, &mut rng);
+        let w = Weights::random(&cfg, &mut rng).unwrap();
         let f = w.to_tensor_file().unwrap();
         // Ask for a config with more layers than the file provides.
         let mut bigger = cfg.clone();
@@ -236,7 +432,7 @@ mod tests {
     fn wrong_shape_rejected() {
         let cfg = ModelConfig::nano();
         let mut rng = Rng::new(4);
-        let w = Weights::random(&cfg, &mut rng);
+        let w = Weights::random(&cfg, &mut rng).unwrap();
         let f = w.to_tensor_file().unwrap();
         let mut wider = cfg.clone();
         wider.d_model = 64;
@@ -245,15 +441,20 @@ mod tests {
     }
 
     #[test]
-    fn artifact_order_layout() {
+    fn artifact_order_layout_dequantizes() {
         let cfg = ModelConfig::nano();
         let mut rng = Rng::new(5);
-        let w = Weights::random(&cfg, &mut rng);
+        let w = Weights::random(&cfg, &mut rng).unwrap();
         let order = w.artifact_order();
         // 2 (emb) + 12 per layer × 2 + 2 (final ln) = 28
         assert_eq!(order.len(), 28);
         assert_eq!(order[0].0, "wte");
         assert_eq!(order[2].0, "ln1.g");
         assert_eq!(order.last().unwrap().0, "lnf.b");
+        // Quantized storage feeds the artifact its dequantized values.
+        let q = w.quantize_to(WeightFormat::Bf16).unwrap();
+        let qo = q.artifact_order();
+        assert_eq!(qo[0].1, q.wte.to_f32_vec());
+        assert_eq!(qo.len(), 28);
     }
 }

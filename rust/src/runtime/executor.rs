@@ -217,7 +217,7 @@ mod tests {
     fn weight_shapes_match_artifact_order() {
         let cfg = ModelConfig::nano();
         let mut rng = crate::util::Rng::new(1);
-        let w = Weights::random(&cfg, &mut rng);
+        let w = Weights::random(&cfg, &mut rng).unwrap();
         let order = w.artifact_order();
         let shapes = weight_shapes(&cfg);
         assert_eq!(order.len(), shapes.len());

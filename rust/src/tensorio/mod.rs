@@ -1,22 +1,35 @@
 //! `.lamp` tensor container format — the interchange between the Python
-//! compile path (which trains the models and serializes weights) and the
-//! Rust runtime (which feeds them to compiled HLO executables).
+//! compile path (which trains the models and serializes weights) and this
+//! crate's **native engine** (`model::Weights` loads them directly; the
+//! optional PJRT artifact path dequantizes to f32 before staging buffers).
 //!
-//! Layout (little-endian):
+//! Two on-disk versions share one layout skeleton (little-endian):
+//!
 //! ```text
 //! magic   : 8 bytes  b"LAMPTNSR"
-//! version : u32      (currently 1)
+//! version : u32      (1 or 2)
 //! count   : u32      number of tensors
 //! repeat count times:
 //!   name_len : u32
 //!   name     : name_len bytes UTF-8
-//!   dtype    : u32    (0 = f32, 1 = i32)
+//!   dtype    : u32    (0 = f32, 1 = i32, 2 = bf16, 3 = ps-f32)
+//!   mu       : u32    — dtype 3 only: mantissa bits of the PS(μ) rounding
 //!   ndim     : u32
 //!   dims     : ndim × u64
-//!   payload  : product(dims) × 4 bytes
+//!   payload  : product(dims) × elem_bytes(dtype)
 //! ```
 //!
-//! The mirrored Python writer lives in `python/compile/tensorio.py`.
+//! * **v1** carries f32/i32 tensors only (4 bytes/element) — the historical
+//!   format. Readers keep accepting it unchanged, and the writer still
+//!   emits v1 whenever every tensor is f32/i32, so files produced from
+//!   f32-storage weights are byte-identical to the pre-v2 writer's.
+//! * **v2** adds the mixed-precision weight-storage dtypes: `bf16`
+//!   (2 bytes/element, the real memory saving) and `ps-f32` (f32 payload
+//!   pre-rounded to μ mantissa bits, the storage-error simulation). Every
+//!   stored value in either dtype is an exact f32, so decoding is
+//!   error-free; `linalg::WeightTensor` consumes the payloads directly.
+//!
+//! The mirrored Python implementation lives in `python/compile/tensorio.py`.
 
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
@@ -24,13 +37,20 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"LAMPTNSR";
-const VERSION: u32 = 1;
+/// Legacy version: f32/i32 only. Still written when no tensor needs v2.
+const VERSION_V1: u32 = 1;
+/// Mixed-precision version: adds bf16 and ps-f32 dtypes.
+const VERSION_V2: u32 = 2;
 
 /// Element type of a stored tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
     F32,
     I32,
+    /// bfloat16 bit patterns, 2 bytes/element (v2 only).
+    Bf16,
+    /// f32 payload pre-rounded to `mu` mantissa bits (v2 only).
+    PsF32 { mu: u32 },
 }
 
 impl DType {
@@ -38,57 +58,98 @@ impl DType {
         match self {
             DType::F32 => 0,
             DType::I32 => 1,
+            DType::Bf16 => 2,
+            DType::PsF32 { .. } => 3,
         }
     }
-    fn from_code(c: u32) -> Result<Self> {
-        match c {
-            0 => Ok(DType::F32),
-            1 => Ok(DType::I32),
-            other => Err(Error::format(format!("unknown dtype code {other}"))),
+
+    /// Bytes per stored element.
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            DType::Bf16 => 2,
+            DType::F32 | DType::I32 | DType::PsF32 { .. } => 4,
         }
+    }
+
+    /// True for the dtypes the legacy v1 format can carry.
+    fn v1_compatible(self) -> bool {
+        matches!(self, DType::F32 | DType::I32)
     }
 }
 
-/// A named n-dimensional tensor (f32 or i32 payload).
+/// A named n-dimensional tensor (f32, i32, bf16, or ps-f32 payload).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     pub name: String,
     pub dtype: DType,
     pub dims: Vec<usize>,
-    /// Raw little-endian payload, 4 bytes per element.
+    /// Raw little-endian payload, [`DType::elem_bytes`] bytes per element.
     pub raw: Vec<u8>,
 }
 
 impl Tensor {
-    /// Build an f32 tensor.
-    pub fn f32(name: impl Into<String>, dims: Vec<usize>, data: &[f32]) -> Result<Self> {
+    fn check_dims(name: &str, dims: &[usize], got: usize) -> Result<usize> {
         let n: usize = dims.iter().product();
-        if n != data.len() {
+        if n != got {
             return Err(Error::shape(format!(
-                "tensor {:?}: dims {:?} need {n} elements, got {}",
-                name.into(),
-                dims,
-                data.len()
+                "tensor {name:?}: dims {dims:?} need {n} elements, got {got}"
             )));
         }
+        Ok(n)
+    }
+
+    /// Build an f32 tensor.
+    pub fn f32(name: impl Into<String>, dims: Vec<usize>, data: &[f32]) -> Result<Self> {
+        let name = name.into();
+        let n = Self::check_dims(&name, &dims, data.len())?;
         let mut raw = Vec::with_capacity(4 * n);
         for &x in data {
             raw.extend_from_slice(&x.to_le_bytes());
         }
-        Ok(Tensor { name: name.into(), dtype: DType::F32, dims, raw })
+        Ok(Tensor { name, dtype: DType::F32, dims, raw })
     }
 
     /// Build an i32 tensor.
     pub fn i32(name: impl Into<String>, dims: Vec<usize>, data: &[i32]) -> Result<Self> {
-        let n: usize = dims.iter().product();
-        if n != data.len() {
-            return Err(Error::shape("tensor dims/data mismatch".to_string()));
-        }
+        let name = name.into();
+        let n = Self::check_dims(&name, &dims, data.len())?;
         let mut raw = Vec::with_capacity(4 * n);
         for &x in data {
             raw.extend_from_slice(&x.to_le_bytes());
         }
-        Ok(Tensor { name: name.into(), dtype: DType::I32, dims, raw })
+        Ok(Tensor { name, dtype: DType::I32, dims, raw })
+    }
+
+    /// Build a bf16 tensor from raw bf16 bit patterns (v2 format).
+    pub fn bf16(name: impl Into<String>, dims: Vec<usize>, data: &[u16]) -> Result<Self> {
+        let name = name.into();
+        let n = Self::check_dims(&name, &dims, data.len())?;
+        let mut raw = Vec::with_capacity(2 * n);
+        for &x in data {
+            raw.extend_from_slice(&x.to_le_bytes());
+        }
+        Ok(Tensor { name, dtype: DType::Bf16, dims, raw })
+    }
+
+    /// Build a ps-f32 tensor: an f32 payload declared as PS(μ)-rounded
+    /// (v2 format). The caller is responsible for the rounding;
+    /// `linalg::WeightTensor::from_ps` re-rounds defensively on load.
+    pub fn ps_f32(
+        name: impl Into<String>,
+        dims: Vec<usize>,
+        mu: u32,
+        data: &[f32],
+    ) -> Result<Self> {
+        if !(1..=23).contains(&mu) {
+            return Err(Error::format(format!("ps-f32 tensor: mu {mu} out of 1..=23")));
+        }
+        let name = name.into();
+        let n = Self::check_dims(&name, &dims, data.len())?;
+        let mut raw = Vec::with_capacity(4 * n);
+        for &x in data {
+            raw.extend_from_slice(&x.to_le_bytes());
+        }
+        Ok(Tensor { name, dtype: DType::PsF32 { mu }, dims, raw })
     }
 
     /// Number of elements.
@@ -100,16 +161,20 @@ impl Tensor {
         self.len() == 0
     }
 
-    /// Decode as f32 values.
+    fn f32_payload(&self) -> Vec<f32> {
+        self.raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    /// Decode as f32 values (strict: the dtype must be exactly f32; use
+    /// [`Self::dequant_f32`] to accept any float-like dtype).
     pub fn as_f32(&self) -> Result<Vec<f32>> {
         if self.dtype != DType::F32 {
             return Err(Error::format(format!("tensor {:?} is not f32", self.name)));
         }
-        Ok(self
-            .raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+        Ok(self.f32_payload())
     }
 
     /// Decode as i32 values.
@@ -122,6 +187,35 @@ impl Tensor {
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
+    }
+
+    /// Decode as raw bf16 bit patterns.
+    pub fn as_bf16(&self) -> Result<Vec<u16>> {
+        if self.dtype != DType::Bf16 {
+            return Err(Error::format(format!("tensor {:?} is not bf16", self.name)));
+        }
+        Ok(self
+            .raw
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+            .collect())
+    }
+
+    /// Decode any float-like dtype to its exact f32 values (every bf16 /
+    /// PS(μ)-rounded value is an exact f32, so this is lossless).
+    pub fn dequant_f32(&self) -> Result<Vec<f32>> {
+        match self.dtype {
+            DType::F32 | DType::PsF32 { .. } => Ok(self.f32_payload()),
+            DType::Bf16 => Ok(self
+                .raw
+                .chunks_exact(2)
+                .map(|c| f32::from_bits((u16::from_le_bytes([c[0], c[1]]) as u32) << 16))
+                .collect()),
+            DType::I32 => Err(Error::format(format!(
+                "tensor {:?} is i32, not a float dtype",
+                self.name
+            ))),
+        }
     }
 }
 
@@ -169,17 +263,32 @@ impl TensorFile {
         self.tensors.is_empty()
     }
 
-    /// Serialize to bytes.
+    /// The minimal on-disk version able to carry every tensor: v1 when all
+    /// dtypes are f32/i32 (byte-identical to the legacy writer), v2 once a
+    /// mixed-precision dtype appears.
+    pub fn required_version(&self) -> u32 {
+        if self.tensors.iter().all(|t| t.dtype.v1_compatible()) {
+            VERSION_V1
+        } else {
+            VERSION_V2
+        }
+    }
+
+    /// Serialize to bytes (version chosen by [`Self::required_version`]).
     pub fn to_bytes(&self) -> Vec<u8> {
+        let version = self.required_version();
         let mut out = Vec::new();
         out.extend_from_slice(MAGIC);
-        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&version.to_le_bytes());
         out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
         for t in &self.tensors {
             let name = t.name.as_bytes();
             out.extend_from_slice(&(name.len() as u32).to_le_bytes());
             out.extend_from_slice(name);
             out.extend_from_slice(&t.dtype.code().to_le_bytes());
+            if let DType::PsF32 { mu } = t.dtype {
+                out.extend_from_slice(&mu.to_le_bytes());
+            }
             out.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
             for &d in &t.dims {
                 out.extend_from_slice(&(d as u64).to_le_bytes());
@@ -189,7 +298,8 @@ impl TensorFile {
         out
     }
 
-    /// Parse from bytes.
+    /// Parse from bytes. Accepts both v1 (legacy, f32/i32 only) and v2
+    /// (mixed-precision dtypes) — old files keep loading unchanged.
     pub fn from_bytes(data: &[u8]) -> Result<Self> {
         let mut cur = std::io::Cursor::new(data);
         let mut magic = [0u8; 8];
@@ -199,7 +309,7 @@ impl TensorFile {
             return Err(Error::format("bad magic: not a .lamp file".to_string()));
         }
         let version = read_u32(&mut cur)?;
-        if version != VERSION {
+        if version != VERSION_V1 && version != VERSION_V2 {
             return Err(Error::format(format!("unsupported .lamp version {version}")));
         }
         let count = read_u32(&mut cur)? as usize;
@@ -214,7 +324,27 @@ impl TensorFile {
                 .map_err(|_| Error::format("truncated name".to_string()))?;
             let name = String::from_utf8(name_buf)
                 .map_err(|_| Error::format("non-UTF8 tensor name".to_string()))?;
-            let dtype = DType::from_code(read_u32(&mut cur)?)?;
+            let code = read_u32(&mut cur)?;
+            let dtype = match code {
+                0 => DType::F32,
+                1 => DType::I32,
+                2 | 3 if version < VERSION_V2 => {
+                    return Err(Error::format(format!(
+                        "dtype code {code} requires .lamp v2, file is v{version}"
+                    )));
+                }
+                2 => DType::Bf16,
+                3 => {
+                    let mu = read_u32(&mut cur)?;
+                    if !(1..=23).contains(&mu) {
+                        return Err(Error::format(format!(
+                            "ps-f32 tensor {name:?}: mu {mu} out of 1..=23"
+                        )));
+                    }
+                    DType::PsF32 { mu }
+                }
+                other => return Err(Error::format(format!("unknown dtype code {other}"))),
+            };
             let ndim = read_u32(&mut cur)? as usize;
             if ndim > 16 {
                 return Err(Error::format(format!("ndim too large: {ndim}")));
@@ -224,14 +354,14 @@ impl TensorFile {
                 dims.push(read_u64(&mut cur)? as usize);
             }
             let n: usize = dims.iter().product();
+            let nbytes = t_payload_bytes(dtype, n);
             let remaining = data.len() - cur.position() as usize;
-            if 4 * n > remaining {
+            if nbytes > remaining {
                 return Err(Error::format(format!(
-                    "truncated payload for {name:?}: need {} bytes, {remaining} left",
-                    4 * n
+                    "truncated payload for {name:?}: need {nbytes} bytes, {remaining} left"
                 )));
             }
-            let mut raw = vec![0u8; 4 * n];
+            let mut raw = vec![0u8; nbytes];
             cur.read_exact(&mut raw)
                 .map_err(|_| Error::format("truncated payload".to_string()))?;
             file.push(Tensor { name, dtype, dims, raw })?;
@@ -251,6 +381,10 @@ impl TensorFile {
         let data = std::fs::read(path.as_ref())?;
         Self::from_bytes(&data)
     }
+}
+
+fn t_payload_bytes(dtype: DType, n: usize) -> usize {
+    dtype.elem_bytes() * n
 }
 
 fn read_u32(cur: &mut std::io::Cursor<&[u8]>) -> Result<u32> {
@@ -328,6 +462,73 @@ mod tests {
         let back = TensorFile::load(&path).unwrap();
         assert_eq!(back.require("a").unwrap().as_f32().unwrap(), vec![1.5, -2.5, 0.0]);
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn f32_only_files_stay_v1_byte_compatible() {
+        // The legacy writer's exact bytes: version 1, dtype 0, no mu field.
+        let mut file = TensorFile::new();
+        file.push(Tensor::f32("w", vec![2], &[1.0, -2.0]).unwrap()).unwrap();
+        assert_eq!(file.required_version(), 1);
+        let bytes = file.to_bytes();
+        assert_eq!(&bytes[8..12], &1u32.to_le_bytes());
+        // Hand-assembled v1 bytes (the backward-compat read guarantee).
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(b"LAMPTNSR");
+        v1.extend_from_slice(&1u32.to_le_bytes()); // version
+        v1.extend_from_slice(&1u32.to_le_bytes()); // count
+        v1.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        v1.extend_from_slice(b"w");
+        v1.extend_from_slice(&0u32.to_le_bytes()); // dtype f32
+        v1.extend_from_slice(&1u32.to_le_bytes()); // ndim
+        v1.extend_from_slice(&2u64.to_le_bytes()); // dims
+        v1.extend_from_slice(&1.0f32.to_le_bytes());
+        v1.extend_from_slice(&(-2.0f32).to_le_bytes());
+        assert_eq!(bytes, v1, "f32-only writer output drifted from v1");
+        let back = TensorFile::from_bytes(&v1).unwrap();
+        assert_eq!(back.require("w").unwrap().as_f32().unwrap(), vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn v2_roundtrip_bf16_and_ps() {
+        let mut file = TensorFile::new();
+        file.push(Tensor::bf16("wb", vec![2, 2], &[0x3F80, 0xBF80, 0x4000, 0x0000]).unwrap())
+            .unwrap();
+        file.push(Tensor::ps_f32("wp", vec![3], 6, &[1.5, -0.25, 3.0]).unwrap()).unwrap();
+        file.push(Tensor::f32("bias", vec![2], &[0.5, 0.5]).unwrap()).unwrap();
+        assert_eq!(file.required_version(), 2);
+        let bytes = file.to_bytes();
+        assert_eq!(&bytes[8..12], &2u32.to_le_bytes());
+        let back = TensorFile::from_bytes(&bytes).unwrap();
+        let wb = back.require("wb").unwrap();
+        assert_eq!(wb.dtype, DType::Bf16);
+        assert_eq!(wb.as_bf16().unwrap(), vec![0x3F80, 0xBF80, 0x4000, 0x0000]);
+        assert_eq!(wb.dequant_f32().unwrap(), vec![1.0, -1.0, 2.0, 0.0]);
+        assert!(wb.as_f32().is_err(), "strict as_f32 must reject bf16");
+        let wp = back.require("wp").unwrap();
+        assert_eq!(wp.dtype, DType::PsF32 { mu: 6 });
+        assert_eq!(wp.dequant_f32().unwrap(), vec![1.5, -0.25, 3.0]);
+        assert_eq!(back.require("bias").unwrap().as_f32().unwrap(), vec![0.5, 0.5]);
+        assert!(back.require("bias").unwrap().dequant_f32().is_ok());
+    }
+
+    #[test]
+    fn v1_rejects_v2_dtypes_and_bad_mu() {
+        // A v1 file claiming a bf16 tensor is corrupt, not forward-compat.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(b"LAMPTNSR");
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        bad.extend_from_slice(b"w");
+        bad.extend_from_slice(&2u32.to_le_bytes()); // bf16 in a v1 file
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        bad.extend_from_slice(&1u64.to_le_bytes());
+        bad.extend_from_slice(&[0u8; 2]);
+        assert!(TensorFile::from_bytes(&bad).is_err());
+        assert!(Tensor::ps_f32("w", vec![1], 0, &[0.0]).is_err());
+        assert!(Tensor::ps_f32("w", vec![1], 24, &[0.0]).is_err());
+        assert!(TensorFile::from_bytes(b"LAMPTNSR\x03\x00\x00\x00").is_err(), "version 3");
     }
 
     #[test]

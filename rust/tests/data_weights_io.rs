@@ -22,7 +22,7 @@ fn trained_weights_load_for_all_models() {
         assert_eq!(w.config, cfg);
         assert_eq!(w.blocks.len(), cfg.layers);
         // Trained weights must not be all-zero or NaN.
-        let wte = w.wte.data();
+        let wte = w.wte.to_f32_vec();
         assert!(wte.iter().all(|x| x.is_finite()));
         let norm: f64 = wte.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
         assert!(norm > 0.1, "{name}: wte looks untrained/zero (norm={norm})");

@@ -15,7 +15,7 @@ use lamp::util::{Rng, ThreadPool};
 
 fn small_weights(seed: u64) -> Weights {
     let mut rng = Rng::new(seed);
-    Weights::random(&ModelConfig::small(), &mut rng)
+    Weights::random(&ModelConfig::small(), &mut rng).unwrap()
 }
 
 fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
@@ -119,7 +119,7 @@ fn parallel_engine_matches_sequential_engine() {
     // Coordinator-level wiring: a pool-backed NativeEngine serves the same
     // logits as the plain one.
     let mut rng = Rng::new(4);
-    let w = Weights::random(&ModelConfig::nano(), &mut rng);
+    let w = Weights::random(&ModelConfig::nano(), &mut rng).unwrap();
     let seq_engine = NativeEngine::new(w.clone());
     let par_engine = NativeEngine::new(w).with_threads(4);
     let batch: Vec<Vec<u32>> = (0..4)

@@ -26,7 +26,7 @@ fn truncated_weight_file_rejected() {
     let dir = tmpdir("trunc");
     let cfg = ModelConfig::nano();
     let mut rng = Rng::new(1);
-    let w = Weights::random(&cfg, &mut rng);
+    let w = Weights::random(&cfg, &mut rng).unwrap();
     let path = dir.join("weights_nano.lamp");
     w.to_tensor_file().unwrap().save(&path).unwrap();
     // Truncate the payload.
@@ -65,7 +65,7 @@ fn executor_rejects_garbage_hlo() {
     std::fs::write(&hlo, "this is not an HLO module").unwrap();
     let cfg = ModelConfig::nano();
     let mut rng = Rng::new(2);
-    let w = Weights::random(&cfg, &mut rng);
+    let w = Weights::random(&cfg, &mut rng).unwrap();
     assert!(ModelExecutor::from_parts(cfg, &hlo, &w).is_err());
 }
 
@@ -82,7 +82,7 @@ fn store_reports_missing_artifacts() {
 fn engine_rejects_out_of_contract_requests() {
     let cfg = ModelConfig::nano();
     let mut rng = Rng::new(3);
-    let engine = NativeEngine::new(Weights::random(&cfg, &mut rng));
+    let engine = NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap());
     // Token out of vocab.
     let r = engine.infer(&[vec![9999u32]], &PrecisionPolicy::reference(), 0);
     assert!(r.is_err());
@@ -101,7 +101,7 @@ fn scheduler_failing_session_fails_only_its_request() {
     // the slot is recycled, and nothing panics or deadlocks.
     let cfg = ModelConfig::nano();
     let mut rng = Rng::new(5);
-    let engine = NativeEngine::new(Weights::random(&cfg, &mut rng));
+    let engine = NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap());
     let policy = PrecisionPolicy::lamp(3, 0.05, lamp::coordinator::Rule::Strict);
 
     // Solo oracle for the healthy requests.
@@ -164,7 +164,7 @@ fn scheduler_all_sessions_failing_still_drains() {
     // and end idle — no spinning, no slot leak.
     let cfg = ModelConfig::nano();
     let mut rng = Rng::new(6);
-    let engine = NativeEngine::new(Weights::random(&cfg, &mut rng));
+    let engine = NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap());
     let policy = PrecisionPolicy::reference();
     let mut sched = Scheduler::new(
         &engine,
@@ -188,7 +188,7 @@ fn weights_with_swapped_tensor_shape_rejected() {
     // Write a tensor file where one weight has transposed dims.
     let cfg = ModelConfig::nano();
     let mut rng = Rng::new(4);
-    let w = Weights::random(&cfg, &mut rng);
+    let w = Weights::random(&cfg, &mut rng).unwrap();
     let good = w.to_tensor_file().unwrap();
     let mut bad = TensorFile::new();
     for t in good.tensors() {

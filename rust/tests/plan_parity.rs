@@ -26,7 +26,7 @@ use lamp::util::Rng;
 
 fn nano_weights(seed: u64) -> Weights {
     let mut rng = Rng::new(seed);
-    Weights::random(&ModelConfig::nano(), &mut rng)
+    Weights::random(&ModelConfig::nano(), &mut rng).unwrap()
 }
 
 fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
@@ -38,17 +38,21 @@ fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
 }
 
 /// The pre-refactor FP32 forward path, replicated from the public
-/// primitives: vectorized FP32 matmuls everywhere, LAMP in attention only.
-/// Valid for deterministic selection rules (the Random rule consumes
+/// primitives: vectorized FP32 matmuls everywhere over `Matrix`-typed
+/// weights (the historical storage — `to_matrix()` on f32-storage
+/// `WeightTensor`s reproduces exactly the old buffers), LAMP in attention
+/// only. Valid for deterministic selection rules (the Random rule consumes
 /// per-row streams whose derivation is engine-internal).
 fn legacy_forward(w: &Weights, tokens: &[u32], prec: AttentionPrecision) -> Matrix {
     let cfg = &w.config;
     let d = cfg.d_model;
     let s = tokens.len();
+    let wte = w.wte.to_matrix();
+    let wpe = w.wpe.to_matrix();
     let mut x = Matrix::zeros(s, d);
     for (i, &t) in tokens.iter().enumerate() {
-        let te = w.wte.row(t as usize);
-        let pe = w.wpe.row(i);
+        let te = wte.row(t as usize);
+        let pe = wpe.row(i);
         let xr = x.row_mut(i);
         for c in 0..d {
             xr[c] = te[c] + pe[c];
@@ -60,7 +64,7 @@ fn legacy_forward(w: &Weights, tokens: &[u32], prec: AttentionPrecision) -> Matr
         for i in 0..s {
             layernorm(xn.row_mut(i), &blk.ln1_g, &blk.ln1_b, LN_EPS);
         }
-        let qkv = matmul_bias_fast(&xn, &blk.w_qkv, &blk.b_qkv).unwrap();
+        let qkv = matmul_bias_fast(&xn, &blk.w_qkv.to_matrix(), &blk.b_qkv).unwrap();
         let mut q = Matrix::zeros(s, d);
         let mut k = Matrix::zeros(s, d);
         let mut v = Matrix::zeros(s, d);
@@ -72,7 +76,7 @@ fn legacy_forward(w: &Weights, tokens: &[u32], prec: AttentionPrecision) -> Matr
         }
         let mut n = 0;
         let attn = causal_attention(&q, &k, &v, cfg.heads, prec, 0, &mut n);
-        let proj = matmul_bias_fast(&attn, &blk.w_proj, &blk.b_proj).unwrap();
+        let proj = matmul_bias_fast(&attn, &blk.w_proj.to_matrix(), &blk.b_proj).unwrap();
         for i in 0..s {
             let pr = proj.row(i);
             let xr = x.row_mut(i);
@@ -85,11 +89,11 @@ fn legacy_forward(w: &Weights, tokens: &[u32], prec: AttentionPrecision) -> Matr
         for i in 0..s {
             layernorm(xn.row_mut(i), &blk.ln2_g, &blk.ln2_b, LN_EPS);
         }
-        let mut hidden = matmul_bias_fast(&xn, &blk.w_fc, &blk.b_fc).unwrap();
+        let mut hidden = matmul_bias_fast(&xn, &blk.w_fc.to_matrix(), &blk.b_fc).unwrap();
         for h in hidden.data_mut() {
             *h = Activation::Gelu.apply(*h);
         }
-        let out = matmul_bias_fast(&hidden, &blk.w_out, &blk.b_out).unwrap();
+        let out = matmul_bias_fast(&hidden, &blk.w_out.to_matrix(), &blk.b_out).unwrap();
         for i in 0..s {
             let mr = out.row(i);
             let xr = x.row_mut(i);
@@ -101,7 +105,7 @@ fn legacy_forward(w: &Weights, tokens: &[u32], prec: AttentionPrecision) -> Matr
     for i in 0..s {
         layernorm(x.row_mut(i), &w.lnf_g, &w.lnf_b, LN_EPS);
     }
-    matmul_transposed_fast(&x, &w.wte).unwrap()
+    matmul_transposed_fast(&x, &wte).unwrap()
 }
 
 #[test]
@@ -141,6 +145,38 @@ fn attention_only_plans_reproduce_the_pre_refactor_path_bitwise() {
         assert_eq!(got.stats.mlp.recomputed, 0);
         assert_eq!(got.stats.norm.recomputed, 0);
         assert_eq!(got.stats.sampler.recomputed, 0);
+    }
+}
+
+#[test]
+fn f32_storage_round_trip_and_quantized_storage_still_short_circuit() {
+    // PR-4 acceptance, pinned: (1) `quantize_to(F32)` is the identity on
+    // the serving path — same logits bit for bit as the original weights
+    // (which themselves equal the pre-refactor engine, see above); (2) on
+    // *quantized* storage, the attention-only plan still equals the legacy
+    // replica evaluated on the dequantized weights — the fused kernels add
+    // no error beyond the one-time storage quantization.
+    use lamp::linalg::WeightFormat;
+    let w = nano_weights(6);
+    let tokens: Vec<u32> = (0..18).map(|i| (i * 5 + 2) % 128).collect();
+    let prec = AttentionPrecision::lamp(3, 0.05, SoftmaxRule::Strict);
+    let roundtrip = w.quantize_to(WeightFormat::F32).unwrap();
+    let a = forward(&w, &tokens, prec, 3).unwrap();
+    let b = forward(&roundtrip, &tokens, prec, 3).unwrap();
+    assert!(bits_equal(&a.logits, &b.logits), "F32 round trip changed logits");
+    for fmt in [WeightFormat::Bf16, WeightFormat::PsRounded { mu: 7 }] {
+        let q = w.quantize_to(fmt).unwrap();
+        let legacy = legacy_forward(&q, &tokens, prec);
+        let got = forward(&q, &tokens, prec, 9).unwrap();
+        assert!(
+            bits_equal(&legacy, &got.logits),
+            "{fmt:?}: fused storage path diverged from legacy-on-dequantized"
+        );
+        // Storage error is real: quantized logits differ from f32 ones.
+        assert!(
+            !bits_equal(&a.logits, &got.logits),
+            "{fmt:?}: quantization left every logit bit-identical"
+        );
     }
 }
 
@@ -265,7 +301,7 @@ fn policies_round_trip_through_label_and_batching() {
     // The engine translation preserves every site.
     let cfg = ModelConfig::nano();
     let mut rng = Rng::new(5);
-    let engine = NativeEngine::new(Weights::random(&cfg, &mut rng));
+    let engine = NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap());
     let plan = engine.decode_precision(&a);
     assert_eq!(plan.mlp.mu, 7);
     assert!(plan.norm.is_reference());

@@ -347,6 +347,38 @@ fn prop_policy_tier_roundtrip_rules() {
 }
 
 #[test]
+fn prop_bf16_roundtrip_exact_and_error_bounded() {
+    use lamp::linalg::tensor::{bf16_to_f32, f32_to_bf16};
+    forall(
+        Config::default().cases(2000),
+        Gen::f32_range(-1e6, 1e6),
+        |&x| {
+            let q = bf16_to_f32(f32_to_bf16(x));
+            // Dequantization is exact: narrowing the widened value is the
+            // identity (quantize ∘ dequantize ∘ quantize = quantize) ...
+            let idempotent = f32_to_bf16(q) == f32_to_bf16(x);
+            // ... and the one-time narrowing error is ≤ 1 ulp at 7
+            // mantissa bits (RNE actually guarantees half an ulp).
+            let bounded = (q - x).abs() <= ulp_at(x, 7);
+            idempotent && bounded
+        },
+    );
+}
+
+#[test]
+fn prop_ps_storage_rounding_error_bounded_at_mu() {
+    // The PS(μ)-rounded storage format's contract: |q - x| ≤ 1 ulp at μ.
+    forall(
+        Config::default().cases(2000),
+        pair(Gen::f32_range(-1e6, 1e6), Gen::u32_range(1, 23)),
+        |&(x, mu)| {
+            let q = round_to_mantissa(x, mu);
+            (q - x).abs() <= ulp_at(x, mu)
+        },
+    );
+}
+
+#[test]
 fn prop_selection_monotone_in_tau() {
     forall(
         Config::default().cases(400),

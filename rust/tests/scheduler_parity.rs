@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 fn nano_engine(seed: u64) -> NativeEngine {
     let mut rng = Rng::new(seed);
-    NativeEngine::new(Weights::random(&ModelConfig::nano(), &mut rng))
+    NativeEngine::new(Weights::random(&ModelConfig::nano(), &mut rng).unwrap())
 }
 
 fn policy_menu() -> Vec<PrecisionPolicy> {
