@@ -1,0 +1,184 @@
+//! Paged mixed-precision KV cache — the PR-5 measurement.
+//!
+//! Two sections, recorded into `BENCH_PR5.json` (override with
+//! `LAMP_BENCH_OUT`):
+//!
+//! * **max concurrent sessions at fixed KV memory** — the serving-scale
+//!   claim: against a byte budget equal to 4 contiguous per-session f32
+//!   caches, block-paged pools are filled with full-context sessions
+//!   until allocation refuses. f32 paging matches the contiguous count
+//!   (same bytes, just blocked); bf16 paging must fit **≥ 2×** the
+//!   sessions (the acceptance target); PS(μ) storage is a 4-byte
+//!   simulation and fits the f32 count.
+//! * **decode tokens/sec per KV format** — the fused dequant-on-read
+//!   kernels through the shared decode loop, plus a LAMP-repaired bf16
+//!   point (pinned rows add f32 reads), so the paging + quantization
+//!   overhead on the hot path is visible next to `BENCH_PR1/PR4`.
+//!
+//! `--smoke` (the CI bench-smoke job) runs one short sample per point so
+//! the producer is exercised on every push; smoke numbers are not
+//! comparable.
+//!
+//! ```bash
+//! cargo bench --bench kv_paging [-- --smoke]
+//! ```
+
+use lamp::benchkit::{record_bench_section, Bencher, JsonObj};
+use lamp::coordinator::{Engine, KvCacheOptions, NativeEngine, PrecisionPolicy};
+use lamp::linalg::WeightFormat;
+use lamp::model::{Decode, KvBlockPool, ModelConfig, PagedKvCache, Weights};
+use lamp::util::Rng;
+use std::time::Duration;
+
+fn bench_out() -> std::path::PathBuf {
+    std::env::var("LAMP_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_PR5.json"))
+}
+
+/// Admit full-context sessions (writing every position across every
+/// layer) until the pool refuses an allocation; returns how many fit.
+fn max_full_sessions(cfg: &ModelConfig, fmt: WeightFormat, budget_bytes: usize) -> usize {
+    let block_size = 16;
+    let opts = |capacity_blocks: usize| KvCacheOptions {
+        format: fmt,
+        repair_tau: f32::INFINITY,
+        block_size,
+        capacity_blocks,
+        sharing: false,
+    };
+    let probe = KvBlockPool::new(cfg, opts(1)).unwrap();
+    let capacity_blocks = (budget_bytes / probe.slab_bytes_per_block()).max(1);
+    let pool = KvBlockPool::new(cfg, opts(capacity_blocks)).unwrap();
+    let row = vec![0.5f32; cfg.d_model];
+    let mut sessions: Vec<PagedKvCache> = Vec::new();
+    'outer: while sessions.len() < 256 {
+        let mut c = PagedKvCache::new(pool.clone(), sessions.len() as u64 + 1);
+        for pos in 0..cfg.seq {
+            for l in 0..cfg.layers {
+                if c.append_row(l, pos, &row, &row).is_err() {
+                    break 'outer;
+                }
+            }
+            c.complete_position(0, pos);
+        }
+        sessions.push(c);
+    }
+    sessions.len()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = ModelConfig {
+        name: "bench-kv".into(),
+        vocab: 256,
+        seq: if smoke { 48 } else { 160 },
+        layers: 4,
+        heads: 4,
+        d_model: 128,
+        batch: 1,
+    };
+    cfg.validate().expect("bench config");
+    let mut rng = Rng::new(47);
+    let base = Weights::random(&cfg, &mut rng).unwrap();
+    let prompt: Vec<u32> = (0..16u32).map(|i| (i * 37 + 5) % cfg.vocab as u32).collect();
+    let new_tokens = cfg.seq - prompt.len() - 1;
+
+    // --- Section 1: max concurrent sessions at fixed KV memory. ---
+    // Budget = 4 contiguous per-session f32 full-context caches.
+    let contiguous_bytes = 2 * cfg.layers * cfg.seq * cfg.d_model * 4;
+    let budget = 4 * contiguous_bytes;
+    let contiguous_sessions = budget / contiguous_bytes;
+    let f32_sessions = max_full_sessions(&cfg, WeightFormat::F32, budget);
+    let bf16_sessions = max_full_sessions(&cfg, WeightFormat::Bf16, budget);
+    let ps8_sessions = max_full_sessions(&cfg, WeightFormat::PsRounded { mu: 8 }, budget);
+    let bf16_ratio = bf16_sessions as f64 / contiguous_sessions.max(1) as f64;
+    println!(
+        "fixed {budget} KV bytes: contiguous f32 {contiguous_sessions} sessions, \
+         paged f32 {f32_sessions}, paged bf16 {bf16_sessions}, paged ps8 {ps8_sessions}"
+    );
+    println!("bf16 paged vs contiguous: {bf16_ratio:.2}x (target: >= 2x)");
+    if bf16_ratio < 2.0 {
+        eprintln!(
+            "WARNING: bf16 paged concurrency {bf16_ratio:.2}x below the 2x acceptance target"
+        );
+    }
+
+    // --- Section 2: decode tok/s per KV format. ---
+    let b = Bencher {
+        warmup_iters: if smoke { 0 } else { 1 },
+        sample_iters: if smoke { 1 } else { 5 },
+        max_total: Duration::from_secs(120),
+    };
+    let policy = PrecisionPolicy::reference();
+    let mut obj = JsonObj::new()
+        .str("model", "4 layers, 4 heads, d=128, vocab=256")
+        .int("seq", cfg.seq as u64)
+        .int("generated_tokens", new_tokens as u64)
+        .int("budget_bytes", budget as u64)
+        .int("contiguous_sessions", contiguous_sessions as u64)
+        .int("f32_paged_sessions", f32_sessions as u64)
+        .int("bf16_paged_sessions", bf16_sessions as u64)
+        .int("ps8_paged_sessions", ps8_sessions as u64)
+        .num("bf16_vs_contiguous_sessions", bf16_ratio)
+        // Smoke records are single-sample and not comparable; mark them so
+        // downstream comparisons can't mistake them for real numbers.
+        .int("smoke", smoke as u64);
+    let points: Vec<(String, WeightFormat, f32)> = vec![
+        ("f32".to_string(), WeightFormat::F32, f32::INFINITY),
+        ("bf16".to_string(), WeightFormat::Bf16, f32::INFINITY),
+        ("ps8".to_string(), WeightFormat::PsRounded { mu: 8 }, f32::INFINITY),
+        // LAMP-repaired bf16: rows whose realized quantization error
+        // exceeds tau stay pinned at exact f32.
+        ("bf16_repaired".to_string(), WeightFormat::Bf16, 0.004),
+    ];
+    for (label, fmt, tau) in points {
+        // Sharing off so repeated bench iterations cannot adopt earlier
+        // iterations' published blocks and skip the prefill being timed.
+        let opts = KvCacheOptions {
+            format: fmt,
+            repair_tau: tau,
+            block_size: 16,
+            capacity_blocks: cfg.seq.div_ceil(16) + 1,
+            sharing: false,
+        };
+        let engine = NativeEngine::new(base.clone()).with_kv_cache(opts).unwrap();
+        let stats = b.run(
+            &format!("decode, {label} KV storage (4l, S={})", cfg.seq),
+            || {
+                engine
+                    .generate(&prompt, new_tokens, &policy, Decode::Greedy, 3)
+                    .expect("generate")
+            },
+        );
+        println!("{}", stats.summary());
+        let tok_s = new_tokens as f64 / stats.median().as_secs_f64().max(1e-12);
+        // Resident bytes + pinned rate of one full session under this
+        // configuration (annex included).
+        let mut session = engine
+            .decode_session(&policy, 3)
+            .expect("session");
+        session.prefill(&prompt).expect("prefill");
+        for t in 0..new_tokens as u32 {
+            session.decode_step((t * 13 + 1) % cfg.vocab as u32).expect("step");
+        }
+        let resident = session.kv().resident_bytes();
+        let pinned = session.kv().pinned_rate();
+        println!(
+            "{label}: {tok_s:.1} tok/s, {resident} resident KV bytes, \
+             {:.2}% rows pinned",
+            100.0 * pinned
+        );
+        obj = obj
+            .num(&format!("{label}_tok_s"), tok_s)
+            .int(&format!("{label}_resident_bytes"), resident as u64)
+            .num(&format!("{label}_pinned_rate"), pinned);
+    }
+
+    let path = bench_out();
+    record_bench_section(&path, "kv_paging", &obj).expect("write bench record");
+    println!("recorded -> {}", path.display());
+    if smoke {
+        println!("smoke mode: timings above are single-sample and not comparable");
+    }
+}

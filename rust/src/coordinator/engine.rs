@@ -14,8 +14,8 @@ use super::policy::PrecisionPolicy;
 use crate::error::{Error, Result};
 use crate::linalg::{Matrix, WeightFormat};
 use crate::model::{
-    forward_with, Decode, DecodeSession, ForwardScratch, LampStats, ModelConfig,
-    PrecisionPlan, Weights,
+    forward_with, generate_with_session, Decode, DecodeSession, ForwardScratch,
+    KvBlockPool, KvCacheOptions, LampStats, ModelConfig, PrecisionPlan, Weights,
 };
 use crate::runtime::{ArtifactStore, ModelExecutor, ModelRequest};
 use crate::util::ThreadPool;
@@ -60,7 +60,8 @@ pub trait Engine {
     /// it further.
     fn validate_policy(&self, policy: &PrecisionPolicy) -> Result<()> {
         policy.validate()?;
-        require_weight_storage(policy, self.weight_format())
+        require_weight_storage(policy, self.weight_format())?;
+        require_kv_storage(policy, self.kv_format())
     }
 
     /// Translate a serving policy into the per-site precision plan a
@@ -96,6 +97,24 @@ pub trait Engine {
         WeightFormat::F32
     }
 
+    /// The storage format of this backend's KV-cache block pool — the KV
+    /// twin of [`Self::weight_format`], checked against each policy's
+    /// [`crate::model::KvPrecision`] requirement in
+    /// [`Self::validate_policy`]. Defaults to f32 (private per-session
+    /// pools); engines configured with a quantized pool override it.
+    fn kv_format(&self) -> WeightFormat {
+        WeightFormat::F32
+    }
+
+    /// The shared KV block pool backing this engine's decode sessions, if
+    /// one is configured. The scheduler uses it to gate admission on free
+    /// blocks and to surface pool occupancy / prefix-share metrics;
+    /// `None` means sessions carry private full-context pools and
+    /// admission is ungated (the pre-paging behavior).
+    fn kv_pool(&self) -> Option<Arc<KvBlockPool>> {
+        None
+    }
+
     /// Human-readable backend name.
     fn backend(&self) -> &'static str;
 }
@@ -113,6 +132,19 @@ fn require_weight_storage(policy: &PrecisionPolicy, held: WeightFormat) -> Resul
     Ok(())
 }
 
+/// Shared KV-storage gate: a policy pinning an exact KV-cache format is
+/// rejected unless the engine's block pool holds exactly that format.
+fn require_kv_storage(policy: &PrecisionPolicy, held: WeightFormat) -> Result<()> {
+    if !policy.kv.accepts(held) {
+        return Err(Error::runtime(format!(
+            "policy requires {} KV-cache storage, backend holds {}",
+            policy.kv.label(),
+            held.label()
+        )));
+    }
+    Ok(())
+}
+
 /// Pure-Rust engine.
 ///
 /// Holds a free-list of [`ForwardScratch`] buffers (so repeated `infer`
@@ -124,12 +156,24 @@ fn require_weight_storage(policy: &PrecisionPolicy, held: WeightFormat) -> Resul
 pub struct NativeEngine {
     weights: Weights,
     pool: Option<Arc<ThreadPool>>,
+    /// Shared paged KV block pool for decode sessions (`None` = private
+    /// per-session full-context pools, the pre-paging behavior).
+    kv: Option<Arc<KvBlockPool>>,
     scratch: Mutex<Vec<ForwardScratch>>,
 }
 
 impl NativeEngine {
     pub fn new(weights: Weights) -> Self {
-        NativeEngine { weights, pool: None, scratch: Mutex::new(Vec::new()) }
+        NativeEngine { weights, pool: None, kv: None, scratch: Mutex::new(Vec::new()) }
+    }
+
+    /// Back decode sessions with a shared paged KV block pool — the
+    /// `--kv-fmt`/`--kv-tau` entry point. All sessions draw blocks from
+    /// one pool, enabling admission gating, prefix sharing, and (for
+    /// bf16) half the resident KV bytes per session.
+    pub fn with_kv_cache(mut self, opts: KvCacheOptions) -> Result<Self> {
+        self.kv = Some(KvBlockPool::new(&self.weights.config, opts)?);
+        Ok(self)
     }
 
     /// Re-store the engine's weight matrices under `fmt`
@@ -182,7 +226,10 @@ impl NativeEngine {
         r
     }
 
-    /// Autoregressive generation through the KV-cache decode path.
+    /// Autoregressive generation through the KV-cache decode path —
+    /// the same session source ([`Engine::decode_session`]) and decode
+    /// loop (`generate_with_session`) the scheduler uses, so solo and
+    /// scheduled decoding share one definition, shared KV pool included.
     /// Returns (tokens, recompute_rate).
     pub fn generate(
         &self,
@@ -192,8 +239,9 @@ impl NativeEngine {
         decode: Decode,
         seed: u64,
     ) -> Result<(Vec<u32>, f64)> {
-        let plan = self.decode_precision(policy);
-        crate::model::generate(&self.weights, prompt, new_tokens, plan, decode, seed)
+        let mut session = self.decode_session(policy, seed)?;
+        let (tokens, stats) = generate_with_session(&mut session, prompt, new_tokens, decode)?;
+        Ok((tokens, stats.rate()))
     }
 }
 
@@ -231,10 +279,18 @@ impl Engine for NativeEngine {
 
     /// KV-cache decode sessions are native-engine territory: the session
     /// shares this engine's weights, so its logits are bit-identical to the
-    /// full forward pass (DESIGN.md §Bit-exactness).
+    /// full forward pass (DESIGN.md §Bit-exactness). With a configured
+    /// shared KV pool ([`NativeEngine::with_kv_cache`]) sessions draw
+    /// paged blocks from it; otherwise each session carries a private
+    /// f32 full-context pool.
     fn decode_session(&self, policy: &PrecisionPolicy, seed: u64) -> Result<DecodeSession<'_>> {
         require_weight_storage(policy, self.weight_format())?;
-        Ok(DecodeSession::new(&self.weights, self.decode_precision(policy), seed))
+        require_kv_storage(policy, self.kv_format())?;
+        let plan = self.decode_precision(policy);
+        Ok(match &self.kv {
+            Some(pool) => DecodeSession::with_pool(&self.weights, plan, seed, pool.clone()),
+            None => DecodeSession::new(&self.weights, plan, seed),
+        })
     }
 
     /// Storage requirements are checked against the actual weights (via
@@ -243,6 +299,16 @@ impl Engine for NativeEngine {
     /// engine instead of silently serving the wrong format.
     fn weight_format(&self) -> WeightFormat {
         self.weights.weight_format()
+    }
+
+    /// The configured pool's slab format; private per-session pools are
+    /// always f32 (the trait default).
+    fn kv_format(&self) -> WeightFormat {
+        self.kv.as_ref().map(|p| p.format()).unwrap_or(WeightFormat::F32)
+    }
+
+    fn kv_pool(&self) -> Option<Arc<KvBlockPool>> {
+        self.kv.clone()
     }
 
     fn backend(&self) -> &'static str {
@@ -316,14 +382,16 @@ impl Engine for PjrtEngine {
         })
     }
 
-    /// The artifact stages f32 weight buffers only: a request pinned to a
-    /// non-f32 storage format is rejected at submit, not mid-batch (the
-    /// trait-default [`Engine::weight_format`] is f32, so the shared
-    /// storage gate enforces exactly that).
+    /// The artifact stages f32 weight buffers only and has no paged KV
+    /// pool: a request pinned to a non-f32 weight or KV storage format is
+    /// rejected at submit, not mid-batch (the trait-default
+    /// [`Engine::weight_format`]/[`Engine::kv_format`] are f32, so the
+    /// shared storage gates enforce exactly that).
     fn validate_policy(&self, policy: &PrecisionPolicy) -> Result<()> {
         policy.validate()?;
         require_attention_only(policy)?;
-        require_weight_storage(policy, self.weight_format())
+        require_weight_storage(policy, self.weight_format())?;
+        require_kv_storage(policy, self.kv_format())
     }
 
     fn backend(&self) -> &'static str {
@@ -428,6 +496,45 @@ mod tests {
         session.prefill(&[1, 2, 3, 4]).unwrap();
         assert!(session.stats().mlp.recomputed > 0, "mlp site inactive");
         assert_eq!(session.stats().mlp.total, cfg.layers * 4 * cfg.d_ff());
+    }
+
+    #[test]
+    fn engine_kv_cache_configuration_and_gate() {
+        use crate::model::KvPrecision;
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(21);
+        let w = Weights::random(&cfg, &mut rng).unwrap();
+        // Default engine: f32 KV format, no shared pool, so a bf16-KV
+        // pinned policy is rejected at the capability gate.
+        let e = NativeEngine::new(w.clone());
+        assert_eq!(e.kv_format(), WeightFormat::F32);
+        assert!(e.kv_pool().is_none());
+        let pinned = PrecisionPolicy::reference()
+            .with_kv(KvPrecision::Exact(WeightFormat::Bf16));
+        let err = e.validate_policy(&pinned).unwrap_err().to_string();
+        assert!(err.contains("KV-cache storage"), "{err}");
+        // With a matching shared pool the policy is accepted, sessions
+        // draw paged blocks from the pool, and solo generate rides the
+        // same pool.
+        let e = NativeEngine::new(w)
+            .with_kv_cache(KvCacheOptions::serving(&cfg, WeightFormat::Bf16, 2))
+            .unwrap();
+        assert_eq!(e.kv_format(), WeightFormat::Bf16);
+        e.validate_policy(&pinned).unwrap();
+        let mut s = e.decode_session(&pinned, 0).unwrap();
+        s.prefill(&[1, 2, 3]).unwrap();
+        assert!(e.kv_pool().unwrap().stats().used_blocks > 0);
+        let (toks, _) = e
+            .generate(&[1, 2, 3], 4, &PrecisionPolicy::reference(), Decode::Greedy, 1)
+            .unwrap();
+        assert_eq!(toks.len(), 7);
+        // Invalid pool options are typed config errors.
+        let mut bad = KvCacheOptions::serving(&cfg, WeightFormat::F32, 1);
+        bad.block_size = 0;
+        let mut rng = Rng::new(22);
+        assert!(NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap())
+            .with_kv_cache(bad)
+            .is_err());
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use crate::linalg::WeightFormat;
-pub use crate::model::WeightPrecision;
+pub use crate::model::{KvBlockPool, KvCacheOptions, KvPoolStats, KvPrecision, WeightPrecision};
 pub use batcher::Batcher;
 pub use engine::{Engine, EngineOutput, NativeEngine, PjrtEngine};
 pub use policy::{PrecisionPolicy, Rule, SitePolicy};

@@ -15,7 +15,9 @@
 
 use crate::error::{Error, Result};
 use crate::lamp::softmax::SoftmaxRule;
-use crate::model::{AttentionPrecision, PrecisionPlan, SitePrecision, WeightPrecision};
+use crate::model::{
+    AttentionPrecision, KvPrecision, PrecisionPlan, SitePrecision, WeightPrecision,
+};
 
 /// Selection rule, coordinator-facing (mirrors kernel mode codes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -139,6 +141,10 @@ pub struct PrecisionPolicy {
     /// submit via `Engine::validate_policy` — the compiled PJRT artifact
     /// executes f32 weight buffers only.
     pub weights: WeightPrecision,
+    /// KV-cache storage requirement ([`KvPrecision::Any`] by default:
+    /// decode on whatever KV format the engine's block pool holds).
+    /// Checked at submit via `Engine::validate_policy`, like weights.
+    pub kv: KvPrecision,
 }
 
 impl PrecisionPolicy {
@@ -150,6 +156,7 @@ impl PrecisionPolicy {
             norm: SitePolicy::reference(),
             sampler: SitePolicy::reference(),
             weights: WeightPrecision::Any,
+            kv: KvPrecision::Any,
         }
     }
 
@@ -172,6 +179,7 @@ impl PrecisionPolicy {
             norm: site,
             sampler: site,
             weights: WeightPrecision::Any,
+            kv: KvPrecision::Any,
         }
     }
 
@@ -196,6 +204,12 @@ impl PrecisionPolicy {
     /// Replace the weight-storage requirement.
     pub fn with_weights(mut self, weights: WeightPrecision) -> Self {
         self.weights = weights;
+        self
+    }
+
+    /// Replace the KV-cache storage requirement.
+    pub fn with_kv(mut self, kv: KvPrecision) -> Self {
+        self.kv = kv;
         self
     }
 
@@ -248,6 +262,9 @@ impl PrecisionPolicy {
         if self.weights != WeightPrecision::Any {
             s.push_str(&format!("+weights[{}]", self.weights.label()));
         }
+        if self.kv != KvPrecision::Any {
+            s.push_str(&format!("+kv[{}]", self.kv.label()));
+        }
         s
     }
 
@@ -273,6 +290,7 @@ impl PrecisionPolicy {
             norm: self.norm.to_site_precision(ref_len),
             sampler: self.sampler.to_site_precision(ref_len),
             weights: self.weights,
+            kv: self.kv,
         }
     }
 
@@ -427,6 +445,32 @@ mod tests {
         assert!(bad.validate().is_err());
         // The translation threads the requirement into the plan.
         assert_eq!(bf.to_plan(64).weights, bf.weights);
+    }
+
+    #[test]
+    fn kv_requirement_in_label_validation_and_batching() {
+        use crate::linalg::WeightFormat;
+        let base = PrecisionPolicy::lamp(4, 0.1, Rule::Strict);
+        assert_eq!(base.kv, KvPrecision::Any);
+        let bf = base.with_kv(KvPrecision::Exact(WeightFormat::Bf16));
+        bf.validate().unwrap();
+        assert!(bf.label().contains("kv[bf16]"), "{}", bf.label());
+        assert!(!base.label().contains("kv["), "{}", base.label());
+        // KV requirements key batches like any other policy field.
+        assert!(!base.batch_compatible(&bf));
+        assert!(bf.batch_compatible(&base.with_kv(KvPrecision::Exact(WeightFormat::Bf16))));
+        // Invalid storage μ is rejected at the policy front door.
+        let bad = base.with_kv(KvPrecision::Exact(WeightFormat::PsRounded { mu: 42 }));
+        assert!(bad.validate().is_err());
+        // The translation threads the requirement into the plan.
+        assert_eq!(bf.to_plan(64).kv, bf.kv);
+        // kv and weights fragments render independently.
+        let both = bf.with_weights(WeightPrecision::Exact(WeightFormat::Bf16));
+        assert!(
+            both.label().contains("weights[bf16]") && both.label().contains("kv[bf16]"),
+            "{}",
+            both.label()
+        );
     }
 
     #[test]

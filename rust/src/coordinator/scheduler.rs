@@ -32,6 +32,25 @@
 //! `rust/tests/scheduler_parity.rs` enforces the contract over randomized
 //! arrival schedules; `rust/tests/failure_injection.rs` checks that a
 //! failing session retires only its own request.
+//!
+//! ## Paged-KV admission and preemption (PR 5)
+//!
+//! On an engine with a shared [`KvBlockPool`](crate::model::KvBlockPool)
+//! (`Engine::kv_pool`), the scheduler treats pool blocks as the admission
+//! currency: a waiting request is admitted only when the pool can still
+//! supply the blocks its prompt needs (FIFO — a gated head blocks the
+//! queue rather than being overtaken). If a live session exhausts the
+//! pool mid-decode (typed [`Error::Resource`]) while other sessions are
+//! running, it is **preempted**: its blocks return to the pool, its
+//! progress (tokens, sampling RNG, timing) is re-queued at the front, and
+//! on re-admission the whole prefix is *recomputed* (or re-adopted from
+//! the prefix-share index). Recompute is deterministic and position-keyed,
+//! so the resumed stream is bit-identical to the uninterrupted one — and
+//! because the resumed session re-counts its whole prefix from scratch,
+//! per-request [`LampStats`] stay deduplicated: each causal product is
+//! counted exactly once, exactly as `DecodeSession` already guarantees vs
+//! the re-forward loop. A request that exhausts the pool while running
+//! *alone* can never fit and fails with the typed error instead.
 
 use super::engine::Engine;
 use super::policy::PrecisionPolicy;
@@ -105,6 +124,46 @@ pub struct DecodeMetrics {
     /// Recompute rate per composition site (`LampStats::site_rates`),
     /// aggregated over every retired session.
     pub recompute_by_site: Vec<(String, f64)>,
+    // --- Paged KV-cache metrics (engines with a shared block pool). ---
+    /// Sessions preempted on pool exhaustion (recomputed on re-admission).
+    pub preemptions: usize,
+    /// The engine's KV storage format label (`f32`/`bf16`/`ps<mu>`).
+    pub kv_format: String,
+    /// Slab-resident bytes of live KV blocks (0 without a shared pool).
+    pub kv_resident_bytes: usize,
+    /// Block-pool occupancy: live blocks / capacity.
+    pub kv_blocks_used: usize,
+    pub kv_blocks_capacity: usize,
+    pub kv_occupancy: f64,
+    /// Prefix-share adoptions / adoption attempts over the pool's life.
+    pub prefix_share_hits: usize,
+    pub prefix_share_rate: f64,
+}
+
+/// A queued request: fresh, or preempted and awaiting recompute.
+struct WaitingEntry {
+    req: GenerateRequest,
+    /// Original enqueue instant — preemption does not reset the
+    /// TTFT/latency origin.
+    enqueued: Instant,
+    resume: Option<ResumeState>,
+}
+
+/// Progress carried across a preemption. The sampling RNG continues where
+/// it stopped (already-sampled tokens are re-*fed*, never re-sampled), so
+/// the resumed stream is bit-identical to the uninterrupted one. No
+/// `LampStats` are carried: the resumed session re-counts its whole
+/// prefix from scratch, which is exactly the single-count accounting —
+/// merging saved counters on top would double-count the recomputed
+/// prefill (the regression `scheduler_parity.rs` pins).
+struct ResumeState {
+    /// Prompt + tokens generated before preemption (all previously fed).
+    tokens: Vec<u32>,
+    prompt_len: usize,
+    generated: usize,
+    rng: Rng,
+    first_token: Option<Instant>,
+    last_event: Instant,
 }
 
 /// A request bound to a live session.
@@ -119,7 +178,11 @@ struct ActiveSlot<'e> {
     tokens: Vec<u32>,
     prompt_len: usize,
     generated: usize,
-    /// Prompt tokens fed so far.
+    /// Tokens fed to the session (== `session.len()`, adopted prefix
+    /// included). Sampling happens only once every token in [`Self::tokens`]
+    /// has been fed — which also makes a token whose *feed* failed on pool
+    /// exhaustion (sampled, streamed, but not yet cached) get re-fed, not
+    /// re-sampled, when the slot survives a victim preemption and retries.
     prefilled: usize,
     /// Enqueue time ([`Scheduler::admit`]) — the TTFT/latency origin, so
     /// queue wait counts against the request, not just slot residence.
@@ -152,13 +215,23 @@ impl ActiveSlot<'_> {
 
     fn iterate(&mut self, prefill_chunk: usize) -> crate::error::Result<()> {
         let seq = self.session.config().seq;
-        if self.prefilled < self.prompt_len {
-            let end = (self.prefilled + prefill_chunk.max(1)).min(self.prompt_len);
+        if self.prefilled < self.tokens.len() {
+            // Feed phase: the prompt (chunked), a preempted request's
+            // recomputed prefix, or a single dangling token whose feed
+            // failed on pool exhaustion last iteration.
+            let end = (self.prefilled + prefill_chunk.max(1)).min(self.tokens.len());
             while self.prefilled < end {
                 let tok = self.tokens[self.prefilled];
                 self.session.decode_step(tok)?;
                 self.prefilled += 1;
             }
+            return Ok(());
+        }
+        if self.generated >= self.req.max_new_tokens {
+            // Reachable only on the retry/resume paths: the final token
+            // was sampled before the interruption and has now been fed —
+            // retire instead of over-sampling past the budget.
+            self.outcome.done = true;
             return Ok(());
         }
         // Decode phase: the session's logits are fresh for the last fed
@@ -184,6 +257,7 @@ impl ActiveSlot<'_> {
         // Feed the sampled token — also on the final iteration, exactly
         // as the solo loop does, so `LampStats` match solo accounting.
         self.session.decode_step(next)?;
+        self.prefilled += 1;
         if self.generated >= self.req.max_new_tokens {
             self.outcome.done = true;
         }
@@ -202,9 +276,10 @@ unsafe impl Sync for SlotsPtr<'_> {}
 pub struct Scheduler<'e> {
     engine: &'e dyn Engine,
     opts: SchedulerOptions,
-    /// Waiting requests with their enqueue timestamps (the TTFT/latency
-    /// origin — queue wait counts against the scheduler).
-    waiting: VecDeque<(GenerateRequest, Instant)>,
+    /// Waiting requests (fresh and preempted) with their enqueue
+    /// timestamps (the TTFT/latency origin — queue wait counts against
+    /// the scheduler).
+    waiting: VecDeque<WaitingEntry>,
     slots: Vec<Option<ActiveSlot<'e>>>,
     /// Retired sessions kept warm for slot recycling (reseat on admit).
     parked: Vec<DecodeSession<'e>>,
@@ -212,6 +287,7 @@ pub struct Scheduler<'e> {
     active_steps: usize,
     completed: usize,
     failed: usize,
+    preemptions: usize,
     generated_tokens: usize,
     ttfts: Vec<f64>,
     itls: Vec<f64>,
@@ -233,6 +309,7 @@ impl<'e> Scheduler<'e> {
             active_steps: 0,
             completed: 0,
             failed: 0,
+            preemptions: 0,
             generated_tokens: 0,
             ttfts: Vec::new(),
             itls: Vec::new(),
@@ -247,7 +324,8 @@ impl<'e> Scheduler<'e> {
     /// instant is recorded: time spent waiting for a slot counts toward
     /// the request's TTFT and latency.
     pub fn admit(&mut self, req: GenerateRequest) {
-        self.waiting.push_back((req, Instant::now()));
+        self.waiting
+            .push_back(WaitingEntry { req, enqueued: Instant::now(), resume: None });
     }
 
     /// Requests waiting for a slot.
@@ -280,10 +358,12 @@ impl<'e> Scheduler<'e> {
         engine.decode_session(policy, seed)
     }
 
-    /// Park a retired session for reuse. No reset here: `reseat` inside
-    /// [`Self::open_session`] is the single reset site, and a parked
-    /// session is never read before being reseated.
-    fn recycle(&mut self, session: DecodeSession<'e>) {
+    /// Park a retired session for reuse. The reset here is load-bearing
+    /// for paged KV: it releases the session's blocks back to the pool
+    /// immediately — a parked session must not hog admission capacity.
+    /// (`reseat` inside [`Self::open_session`] still re-keys plan/seed.)
+    fn recycle(&mut self, mut session: DecodeSession<'e>) {
+        session.reset();
         if self.parked.len() < self.slots.len() {
             self.parked.push(session);
         }
@@ -302,59 +382,128 @@ impl<'e> Scheduler<'e> {
     /// Move waiting requests into free slots. Requests that can produce
     /// nothing (prompt fills the context, zero token budget) complete
     /// immediately, mirroring `generate`'s early return; requests whose
-    /// session cannot be opened fail without consuming a slot.
+    /// session cannot be opened fail without consuming a slot. On an
+    /// engine with a shared KV block pool, admission is gated on the pool
+    /// being able to supply the request's prompt blocks — FIFO: a gated
+    /// queue head stops admission rather than being overtaken.
     fn admit_waiting(&mut self, events: &mut Vec<GenerateEvent>) {
+        let kv_pool = self.engine.kv_pool();
         for slot_idx in 0..self.opts.max_sessions {
             if self.slots[slot_idx].is_some() {
                 continue;
             }
             loop {
-                let Some((req, enqueued)) = self.waiting.pop_front() else { return };
-                let seq = self.engine.config().seq;
-                if req.prompt.is_empty() {
-                    self.failed += 1;
-                    events.push(GenerateEvent::Failed {
-                        id: req.id,
-                        error: Error::shape("empty prompt".to_string()),
-                    });
-                    continue;
-                }
-                if req.prompt.len() >= seq || req.max_new_tokens == 0 {
-                    self.completed += 1;
-                    events.push(GenerateEvent::Finished(GenerateResponse {
-                        id: req.id,
-                        prompt_len: req.prompt.len(),
-                        tokens: req.prompt,
-                        stats: LampStats::default(),
-                        ttft_s: 0.0,
-                        latency_s: enqueued.elapsed().as_secs_f64(),
-                    }));
-                    continue;
-                }
-                match self.open_session(&req.policy, req.seed) {
-                    Ok(session) => {
-                        let mut req = req;
-                        // Single copy: the prompt becomes the prefix of the
-                        // slot's token buffer.
-                        let prompt = std::mem::take(&mut req.prompt);
-                        self.slots[slot_idx] = Some(ActiveSlot {
-                            rng: Rng::new(req.seed),
-                            prompt_len: prompt.len(),
-                            tokens: prompt,
-                            generated: 0,
-                            prefilled: 0,
-                            admitted: enqueued,
-                            first_token: None,
-                            last_event: enqueued,
-                            outcome: StepOutcome::default(),
-                            session,
-                            req,
+                let Some(entry) = self.waiting.pop_front() else { return };
+                if entry.resume.is_none() {
+                    // Degenerate-request checks apply to fresh admissions
+                    // only (a resumed request passed them already, and
+                    // its `req.prompt` has been moved out).
+                    let req = &entry.req;
+                    let seq = self.engine.config().seq;
+                    if req.prompt.is_empty() {
+                        self.failed += 1;
+                        events.push(GenerateEvent::Failed {
+                            id: req.id,
+                            error: Error::shape("empty prompt".to_string()),
                         });
+                        continue;
+                    }
+                    if req.prompt.len() >= seq || req.max_new_tokens == 0 {
+                        self.completed += 1;
+                        events.push(GenerateEvent::Finished(GenerateResponse {
+                            id: entry.req.id,
+                            prompt_len: entry.req.prompt.len(),
+                            tokens: entry.req.prompt,
+                            stats: LampStats::default(),
+                            ttft_s: 0.0,
+                            latency_s: entry.enqueued.elapsed().as_secs_f64(),
+                        }));
+                        continue;
+                    }
+                }
+                if let Some(pool) = &kv_pool {
+                    // Gate on the blocks the known prefix provably needs
+                    // right now; decode growth beyond that is handled by
+                    // preemption, not over-reservation.
+                    let prefix = match &entry.resume {
+                        Some(r) => r.tokens.len(),
+                        None => entry.req.prompt.len(),
+                    };
+                    let needed = pool.blocks_for(prefix);
+                    if pool.capacity_blocks() < needed {
+                        // Can never fit, even alone — fail instead of
+                        // blocking the queue forever.
+                        self.failed += 1;
+                        events.push(GenerateEvent::Failed {
+                            id: entry.req.id,
+                            error: Error::resource(format!(
+                                "prompt needs {needed} KV blocks, pool capacity is {}",
+                                pool.capacity_blocks()
+                            )),
+                        });
+                        continue;
+                    }
+                    if pool.available_blocks() < needed {
+                        self.waiting.push_front(entry);
+                        return;
+                    }
+                }
+                match self.open_session(&entry.req.policy, entry.req.seed) {
+                    Ok(mut session) => {
+                        let mut req = entry.req;
+                        let slot = match entry.resume {
+                            Some(r) => {
+                                // Recompute the whole pre-preemption
+                                // prefix (or re-adopt it from the share
+                                // index); the sampling RNG continues.
+                                let adopted =
+                                    session.adopt_prefix(&r.tokens[..r.tokens.len() - 1]);
+                                ActiveSlot {
+                                    rng: r.rng,
+                                    prompt_len: r.prompt_len,
+                                    tokens: r.tokens,
+                                    generated: r.generated,
+                                    prefilled: adopted,
+                                    admitted: entry.enqueued,
+                                    first_token: r.first_token,
+                                    last_event: r.last_event,
+                                    outcome: StepOutcome::default(),
+                                    session,
+                                    req,
+                                }
+                            }
+                            None => {
+                                // Single copy: the prompt becomes the
+                                // prefix of the slot's token buffer. A
+                                // shared prompt prefix (all but the last
+                                // token) is adopted instead of computed.
+                                let prompt = std::mem::take(&mut req.prompt);
+                                let adopted = if prompt.len() > 1 {
+                                    session.adopt_prefix(&prompt[..prompt.len() - 1])
+                                } else {
+                                    0
+                                };
+                                ActiveSlot {
+                                    rng: Rng::new(req.seed),
+                                    prompt_len: prompt.len(),
+                                    tokens: prompt,
+                                    generated: 0,
+                                    prefilled: adopted,
+                                    admitted: entry.enqueued,
+                                    first_token: None,
+                                    last_event: entry.enqueued,
+                                    outcome: StepOutcome::default(),
+                                    session,
+                                    req,
+                                }
+                            }
+                        };
+                        self.slots[slot_idx] = Some(slot);
                         break;
                     }
                     Err(e) => {
                         self.failed += 1;
-                        events.push(GenerateEvent::Failed { id: req.id, error: e });
+                        events.push(GenerateEvent::Failed { id: entry.req.id, error: e });
                         continue;
                     }
                 }
@@ -396,6 +545,10 @@ impl<'e> Scheduler<'e> {
             }
         }
         let now = Instant::now();
+        // Pass 1: stream every sampled token first — also for slots that
+        // erred or are about to be preempted, whose progress (including a
+        // token sampled right before a failed feed) must be kept.
+        let mut outcomes: Vec<(usize, bool, Option<Error>)> = Vec::with_capacity(active.len());
         for &i in &active {
             let (emitted, done, error) = {
                 let slot = self.slots[i].as_mut().expect("active slot");
@@ -426,11 +579,13 @@ impl<'e> Scheduler<'e> {
                 self.generated_tokens += 1;
                 events.push(GenerateEvent::Token { id, token, index });
             }
+            outcomes.push((i, done, error));
+        }
+        // Pass 2a: retire completed requests first, freeing their blocks.
+        let mut failures: Vec<(usize, Error)> = Vec::new();
+        for (i, done, error) in outcomes {
             if let Some(err) = error {
-                let slot = self.slots[i].take().expect("active slot");
-                self.failed += 1;
-                self.recycle(slot.session);
-                events.push(GenerateEvent::Failed { id: slot.req.id, error: err });
+                failures.push((i, err));
             } else if done {
                 let slot = self.slots[i].take().expect("active slot");
                 self.completed += 1;
@@ -451,7 +606,97 @@ impl<'e> Scheduler<'e> {
                 }));
             }
         }
+        // Pass 2b: a resource error (KV pool exhausted) preempts the
+        // *youngest* live healthy session — the vLLM-style victim policy —
+        // so the erroring slot (its failed step changed no session state)
+        // simply retries next iteration with the victim's blocks freed.
+        // With no healthy co-tenant the erroring slot itself is preempted
+        // — EXCEPT the oldest failing slot, which stays live: co-admitted
+        // equal-length sessions exhaust the pool in lockstep, and without
+        // a protected survivor they would mutually preempt, re-admit, and
+        // re-exhaust forever. With no co-tenant at all the request can
+        // never fit: fail it.
+        let pending: Vec<usize> = failures.iter().map(|(i, _)| *i).collect();
+        let mut protected: Option<(usize, Instant)> = None;
+        for (i, err) in &failures {
+            if err.is_resource() {
+                if let Some(slot) = &self.slots[*i] {
+                    if protected.map(|(_, t)| slot.admitted < t).unwrap_or(true) {
+                        protected = Some((*i, slot.admitted));
+                    }
+                }
+            }
+        }
+        let protected = protected.map(|(i, _)| i);
+        for (i, err) in failures {
+            if self.slots[i].is_none() {
+                // Already preempted as another slot's victim: its progress
+                // is queued for recompute; nothing to fail.
+                continue;
+            }
+            if err.is_resource() {
+                // Prefer the youngest live *healthy* co-tenant as victim.
+                let mut victim: Option<(usize, Instant)> = None;
+                for (j, s) in self.slots.iter().enumerate() {
+                    if j == i || pending.contains(&j) {
+                        continue;
+                    }
+                    if let Some(slot) = s {
+                        if victim.map(|(_, t)| slot.admitted >= t).unwrap_or(true) {
+                            victim = Some((j, slot.admitted));
+                        }
+                    }
+                }
+                if let Some((j, _)) = victim {
+                    self.preempt(j);
+                    continue;
+                }
+                if active.len() > 1 {
+                    if protected == Some(i) {
+                        // The oldest failing slot stays live and retries
+                        // next step: the other failing co-tenants preempt
+                        // below, so their freed blocks guarantee progress.
+                        continue;
+                    }
+                    // Every healthy co-tenant is gone — requeue this
+                    // request's progress and retry after the protected
+                    // survivor advances.
+                    self.preempt(i);
+                    continue;
+                }
+            }
+            // Non-retryable failure — or pool exhaustion while running
+            // alone, which no preemption could ever fix.
+            let slot = self.slots[i].take().expect("live slot");
+            self.failed += 1;
+            self.recycle(slot.session);
+            events.push(GenerateEvent::Failed { id: slot.req.id, error: err });
+        }
         events
+    }
+
+    /// Preempt the live slot at `idx`: release its blocks (recycle resets
+    /// the session) and queue its progress — tokens, sampling RNG, timing
+    /// — at the *front* for recompute-on-resume. No `LampStats` are
+    /// carried: the resumed session re-counts its whole prefix, keeping
+    /// every causal product single-counted (the dedupe contract
+    /// `scheduler_parity.rs` pins).
+    fn preempt(&mut self, idx: usize) {
+        let slot = self.slots[idx].take().expect("live victim slot");
+        self.preemptions += 1;
+        self.recycle(slot.session);
+        self.waiting.push_front(WaitingEntry {
+            req: slot.req,
+            enqueued: slot.admitted,
+            resume: Some(ResumeState {
+                tokens: slot.tokens,
+                prompt_len: slot.prompt_len,
+                generated: slot.generated,
+                rng: slot.rng,
+                first_token: slot.first_token,
+                last_event: slot.last_event,
+            }),
+        });
     }
 
     /// Step until everything queued has retired; returns the full event
@@ -477,6 +722,14 @@ impl<'e> Scheduler<'e> {
 
     /// Metrics snapshot.
     pub fn metrics(&self) -> DecodeMetrics {
+        let kv = self.engine.kv_pool().map(|pool| pool.stats());
+        let (kv_format, kv_resident_bytes, kv_blocks_used, kv_blocks_capacity) = match &kv {
+            Some(s) => (s.format.clone(), s.resident_bytes, s.used_blocks, s.capacity_blocks),
+            None => (self.engine.kv_format().label(), 0, 0, 0),
+        };
+        let kv_occupancy = kv.as_ref().map(|s| s.occupancy()).unwrap_or(0.0);
+        let prefix_share_hits = kv.as_ref().map(|s| s.share_hits).unwrap_or(0);
+        let prefix_share_rate = kv.as_ref().map(|s| s.share_rate()).unwrap_or(0.0);
         DecodeMetrics {
             completed: self.completed,
             failed: self.failed,
@@ -499,6 +752,14 @@ impl<'e> Scheduler<'e> {
                 .map(|(l, s)| (l.clone(), s.rate()))
                 .collect(),
             recompute_by_site: self.totals.site_rates(),
+            preemptions: self.preemptions,
+            kv_format,
+            kv_resident_bytes,
+            kv_blocks_used,
+            kv_blocks_capacity,
+            kv_occupancy,
+            prefix_share_hits,
+            prefix_share_rate,
         }
     }
 }
@@ -668,6 +929,53 @@ mod tests {
             assert_eq!(a.tokens, b.tokens, "pool changed request {}", a.id);
             assert_eq!(a.stats.recomputed, b.stats.recomputed);
         }
+    }
+
+    #[test]
+    fn tiny_kv_pool_preempts_and_streams_match_solo() {
+        use crate::coordinator::{KvCacheOptions, WeightFormat};
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(31);
+        let w = Weights::random(&cfg, &mut rng).unwrap();
+        let oracle = NativeEngine::new(w.clone());
+        let mut opts = KvCacheOptions::serving(&cfg, WeightFormat::F32, 1);
+        opts.block_size = 4;
+        opts.capacity_blocks = 12; // ~1.5 full-context sessions
+        opts.sharing = false; // keep per-request stats comparable to solo
+        let e = NativeEngine::new(w).with_kv_cache(opts).unwrap();
+        let policy = PrecisionPolicy::lamp(3, 0.05, Rule::Strict);
+        let mut sched = Scheduler::new(
+            &e,
+            SchedulerOptions { max_sessions: 2, prefill_chunk: 4, pool: None },
+        );
+        let mut solos = Vec::new();
+        for id in 0..3u64 {
+            let prompt = vec![(id as u32 * 11 + 3) % 128, 7, 9, 2];
+            solos.push(oracle.generate(&prompt, 27, &policy, Decode::Greedy, id).unwrap());
+            sched.admit(greedy(id, prompt, 27, policy).with_seed(id));
+        }
+        let mut responses = sched.run_to_completion();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 3, "every request completes despite preemption");
+        for (r, (toks, rate)) in responses.iter().zip(&solos) {
+            assert_eq!(&r.tokens, toks, "id {}: preemption changed the stream", r.id);
+            // The LampStats dedupe regression: recomputed prefill after a
+            // preemption must not re-count products — totals and rate
+            // equal the uninterrupted solo run exactly.
+            assert_eq!(
+                r.stats.causal_total,
+                e.config().causal_products(r.tokens.len()),
+                "id {}: products double-counted across preemption",
+                r.id
+            );
+            assert_eq!(r.stats.rate(), *rate, "id {}: recompute rate diverged", r.id);
+        }
+        let m = sched.metrics();
+        assert!(m.preemptions > 0, "a 1.5-session pool must force preemption");
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.kv_format, "f32");
+        assert_eq!(m.kv_blocks_capacity, 12);
+        assert!(sched.is_idle());
     }
 
     #[test]

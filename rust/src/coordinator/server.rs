@@ -61,6 +61,20 @@ pub struct ServerStats {
     /// `f32`, `bf16`, or `ps<mu>` — alongside the per-site rates so mixed
     /// fleets of requests are attributable per format.
     pub weight_format: String,
+    // --- Paged KV-cache metrics (PR 5; engines with a shared pool). ---
+    /// The engine's KV-cache storage format (`f32`/`bf16`/`ps<mu>`).
+    pub kv_format: String,
+    /// Slab-resident bytes of live KV blocks (0 without a shared pool).
+    pub kv_resident_bytes: usize,
+    /// Block-pool occupancy at snapshot time.
+    pub kv_blocks_used: usize,
+    pub kv_blocks_capacity: usize,
+    pub kv_occupancy: f64,
+    /// Prefix-share adoptions and hit rate over the pool's lifetime.
+    pub prefix_share_hits: usize,
+    pub prefix_share_rate: f64,
+    /// Decode sessions preempted on pool exhaustion (recomputed later).
+    pub preemptions: usize,
 }
 
 /// Synchronous batching server over one engine.
@@ -158,6 +172,9 @@ impl Server {
         self.stats.mean_active_sessions = metrics.mean_active_sessions;
         self.stats.recompute_rate_by_policy = metrics.recompute_by_policy;
         self.stats.recompute_rate_by_site = metrics.recompute_by_site;
+        self.stats.preemptions += metrics.preemptions;
+        self.stats.prefix_share_hits = metrics.prefix_share_hits;
+        self.stats.prefix_share_rate = metrics.prefix_share_rate;
         events
     }
 
@@ -230,6 +247,16 @@ impl Server {
     /// Final statistics snapshot.
     pub fn stats(&mut self) -> ServerStats {
         self.stats.weight_format = self.engine.weight_format().label();
+        self.stats.kv_format = self.engine.kv_format().label();
+        if let Some(pool) = self.engine.kv_pool() {
+            let kv = pool.stats();
+            self.stats.kv_resident_bytes = kv.resident_bytes;
+            self.stats.kv_blocks_used = kv.used_blocks;
+            self.stats.kv_blocks_capacity = kv.capacity_blocks;
+            self.stats.kv_occupancy = kv.occupancy();
+            self.stats.prefix_share_hits = kv.share_hits;
+            self.stats.prefix_share_rate = kv.share_rate();
+        }
         let mut acc = Accumulator::new();
         for &l in &self.latencies {
             acc.push(l);
@@ -531,6 +558,48 @@ mod tests {
             .unwrap();
         assert_eq!(bf16_server.drain().unwrap().len(), 1);
         assert!(!bf16_server.serve_generation().is_empty());
+    }
+
+    #[test]
+    fn kv_pinned_policy_gated_at_submit_and_stats_surface_pool() {
+        use crate::coordinator::request::GenerateRequest;
+        use crate::coordinator::{KvCacheOptions, KvPrecision, WeightFormat};
+        // Default engine (no shared pool): bf16-KV-pinned requests are
+        // rejected at submit, and the stats report the f32 default.
+        let mut s = server();
+        let pinned = PrecisionPolicy::reference()
+            .with_kv(KvPrecision::Exact(WeightFormat::Bf16));
+        let err = s.submit(InferenceRequest::new(1, vec![1], pinned)).unwrap_err();
+        assert!(err.to_string().contains("KV-cache storage"), "{err}");
+        assert!(s
+            .submit_generate(GenerateRequest::new(2, vec![1], 2, pinned))
+            .is_err());
+        assert_eq!(s.stats().kv_format, "f32");
+        assert_eq!(s.stats().kv_blocks_capacity, 0);
+
+        // A bf16-pool engine accepts the pinned request, serves it through
+        // the paged scheduler, and surfaces pool occupancy in the stats.
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(41);
+        let engine = NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap())
+            .with_kv_cache(KvCacheOptions::serving(&cfg, WeightFormat::Bf16, 4))
+            .unwrap();
+        let mut s = Server::new(Box::new(engine), Duration::from_millis(1));
+        s.submit_generate(GenerateRequest::new(3, vec![1, 2, 3], 4, pinned)).unwrap();
+        s.submit_generate(GenerateRequest::new(4, vec![1, 2, 3], 4, pinned)).unwrap();
+        let events = s.serve_generation();
+        assert!(!events.is_empty());
+        let stats = s.stats();
+        assert_eq!(stats.generate_requests, 2);
+        assert_eq!(stats.generate_failed, 0);
+        assert_eq!(stats.kv_format, "bf16");
+        assert!(stats.kv_blocks_capacity > 0);
+        // The f32-pinned policy is rejected on the bf16-pool engine.
+        let f32_pinned = PrecisionPolicy::reference()
+            .with_kv(KvPrecision::Exact(WeightFormat::F32));
+        assert!(s
+            .submit_generate(GenerateRequest::new(5, vec![1], 2, f32_pinned))
+            .is_err());
     }
 
     #[test]

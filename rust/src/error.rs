@@ -24,6 +24,10 @@ pub enum Error {
     Runtime(String),
     /// Coordinator-level failure (queue closed, worker died, ...).
     Coordinator(String),
+    /// A bounded resource (KV block pool, slot budget) is exhausted —
+    /// retryable: the scheduler turns this into preempt-then-recompute
+    /// rather than failing the request.
+    Resource(String),
     /// An invariant that should be unreachable was violated.
     Invariant(String),
 }
@@ -37,6 +41,7 @@ impl fmt::Display for Error {
             Error::Shape(m) => write!(f, "shape error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Resource(m) => write!(f, "resource exhausted: {m}"),
             Error::Invariant(m) => write!(f, "invariant violation: {m}"),
         }
     }
@@ -73,8 +78,17 @@ impl Error {
     pub fn coordinator(msg: impl Into<String>) -> Self {
         Error::Coordinator(msg.into())
     }
+    pub fn resource(msg: impl Into<String>) -> Self {
+        Error::Resource(msg.into())
+    }
     pub fn invariant(msg: impl Into<String>) -> Self {
         Error::Invariant(msg.into())
+    }
+
+    /// True for retryable resource exhaustion (the scheduler's
+    /// preempt-then-recompute trigger).
+    pub fn is_resource(&self) -> bool {
+        matches!(self, Error::Resource(_))
     }
 }
 

@@ -4,11 +4,13 @@
 //! ```text
 //! lamp exp <fig1..fig7|table1|appendix_b|all> [--quick] [--seqs N] ...
 //! lamp serve --model xl --requests 64 --engine pjrt|native [--tier balanced-whole]
+//!     [--kv-fmt f32|bf16|ps<mu>] [--kv-tau 0.01] [--gen-requests 8]
 //! lamp inspect --artifacts artifacts
 //! lamp forward --model nano --mu 4 --tau 0.1 --rule strict --engine native \
 //!     [--mlp-mu 7 --mlp-tau 0.5] [--norm-mu 10 --norm-tau 1.0] \
 //!     [--logits-mu 7 --logits-tau 0.05 --logits-rule relaxed] \
 //!     [--weights-fmt f32|bf16|ps<mu>]
+//! lamp generate --model nano [--kv-fmt bf16 --kv-tau 0.01] ...
 //! ```
 //!
 //! The `--mlp-*`/`--norm-*`/`--logits-*` options activate the non-attention
@@ -16,13 +18,17 @@
 //! sites at the FP32 reference. `--weights-fmt` (forward/generate/serve)
 //! re-stores the native engine's weight matrices in bf16 or PS(μ)-rounded
 //! storage (`Weights::quantize_to`); f32 is the default and bit-identical
-//! to the historical engine. The pjrt engine serves f32 storage only.
+//! to the historical engine. `--kv-fmt` (generate/serve) selects the paged
+//! KV-cache block storage (`model::kvstore`), with `--kv-tau` as the LAMP
+//! KV repair threshold (rows whose quantization error exceeds it stay
+//! pinned at exact f32; `inf` = uniform quantized, `0` = bit-identical to
+//! f32 KV). The pjrt engine serves f32 storage only, on both axes.
 
 use lamp::benchkit::Table;
 use lamp::cli::{ArgSpec, Args, Command};
 use lamp::coordinator::{
-    Engine, InferenceRequest, NativeEngine, PjrtEngine, PrecisionPolicy, Rule, Server,
-    SitePolicy, WeightFormat,
+    Engine, GenerateRequest, InferenceRequest, KvCacheOptions, NativeEngine, PjrtEngine,
+    PrecisionPolicy, Rule, SchedulerOptions, Server, SitePolicy, WeightFormat,
 };
 use lamp::data::{Dataset, Domain};
 use lamp::experiments::{self, EvalOptions};
@@ -58,6 +64,22 @@ fn cli() -> Command {
                     "weight storage format (f32|bf16|ps<mu>; native engine only)",
                     "f32",
                 ))
+                .arg(ArgSpec::opt(
+                    "kv-fmt",
+                    "paged KV-cache storage format (f32|bf16|ps<mu>; native engine only)",
+                    "f32",
+                ))
+                .arg(ArgSpec::opt(
+                    "kv-tau",
+                    "LAMP KV repair threshold (inf = uniform quantized, 0 = exact)",
+                    "inf",
+                ))
+                .arg(ArgSpec::opt(
+                    "gen-requests",
+                    "generation requests driven through the paged-KV decode scheduler",
+                    "8",
+                ))
+                .arg(ArgSpec::opt("gen-tokens", "tokens per generation request", "16"))
                 .arg(ArgSpec::opt("seed", "workload seed", "1")),
         )
         .subcommand(
@@ -67,6 +89,16 @@ fn cli() -> Command {
         .subcommand(site_args(
             Command::new("generate", "autoregressive generation under a precision plan")
                 .arg(ArgSpec::opt("model", "model config", "nano"))
+                .arg(ArgSpec::opt(
+                    "kv-fmt",
+                    "paged KV-cache storage format (f32|bf16|ps<mu>)",
+                    "f32",
+                ))
+                .arg(ArgSpec::opt(
+                    "kv-tau",
+                    "LAMP KV repair threshold (inf = uniform quantized, 0 = exact)",
+                    "inf",
+                ))
                 .arg(ArgSpec::opt("mu", "attention mantissa bits", "4"))
                 .arg(ArgSpec::opt("tau", "attention LAMP threshold (inf = uniform)", "0.1"))
                 .arg(ArgSpec::opt("rule", "strict|relaxed|relaxed_ln|random", "strict"))
@@ -211,18 +243,32 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
     let model = args.get_str("model")?;
     let store = ArtifactStore::open(args.get_str("artifacts")?)?;
     let fmt = weights_fmt(args)?;
+    let kv_fmt = WeightFormat::by_name(&args.get_str("kv-fmt")?)?;
+    let kv_tau = args.get_f32("kv-tau")?;
     let engine: Box<dyn Engine> = match args.get_str("engine")?.as_str() {
-        // Native serving tiles attention across all host CPUs.
-        "native" => Box::new(
-            NativeEngine::load(&store, &model)?
+        // Native serving tiles attention across all host CPUs and backs
+        // decode sessions with a shared paged KV block pool sized for the
+        // scheduler's slot count.
+        "native" => {
+            let e = NativeEngine::load(&store, &model)?
                 .with_weight_format(fmt)?
-                .with_threads(0),
-        ),
+                .with_threads(0);
+            let opts =
+                KvCacheOptions::serving(e.config(), kv_fmt, SchedulerOptions::default().max_sessions)
+                    .with_repair_tau(kv_tau);
+            Box::new(e.with_kv_cache(opts)?)
+        }
         "pjrt" => {
             if fmt != WeightFormat::F32 {
                 return Err(lamp::Error::config(format!(
                     "pjrt serves f32 weight storage only (requested {})",
                     fmt.label()
+                )));
+            }
+            if kv_fmt != WeightFormat::F32 {
+                return Err(lamp::Error::config(format!(
+                    "pjrt serves f32 KV storage only (requested {})",
+                    kv_fmt.label()
                 )));
             }
             Box::new(PjrtEngine::load(&store, &model)?)
@@ -254,6 +300,32 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
     }
     served += server.drain()?.len();
     assert_eq!(served, n);
+
+    // Generation traffic through the paged-KV continuous-batching
+    // scheduler (native engine only: the artifact has no decode path).
+    let gen_requests = args.get_usize("gen-requests")?;
+    let gen_tokens = args.get_usize("gen-tokens")?;
+    if gen_requests > 0 && backend == "native" {
+        let prompt_len = (cfg.seq / 4).max(1);
+        let prompts =
+            Dataset::generate(domain, cfg.vocab, gen_requests, prompt_len, 7, seed ^ 0x5eed);
+        for (i, p) in prompts.sequences.into_iter().enumerate() {
+            server.submit_generate(GenerateRequest::new(
+                (n + i) as u64,
+                p,
+                gen_tokens,
+                policy,
+            ))?;
+        }
+        let events = server.serve_generation();
+        let failed = events
+            .iter()
+            .filter(|e| matches!(e, lamp::coordinator::GenerateEvent::Failed { .. }))
+            .count();
+        if failed > 0 {
+            eprintln!("WARNING: {failed} generation request(s) failed");
+        }
+    }
     let stats = server.stats();
     let mut t = Table::new("serving summary", &["metric", "value"]);
     t.row(vec!["backend".into(), backend.into()]);
@@ -275,6 +347,49 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
         "throughput".into(),
         format!("{:.1} tok/s", stats.throughput_tok_s),
     ]);
+    t.row(vec!["kv format".into(), stats.kv_format.clone()]);
+    if stats.kv_blocks_capacity > 0 {
+        t.row(vec![
+            "kv resident bytes".into(),
+            stats.kv_resident_bytes.to_string(),
+        ]);
+        t.row(vec![
+            "kv pool occupancy".into(),
+            format!(
+                "{}/{} blocks ({:.1}%)",
+                stats.kv_blocks_used,
+                stats.kv_blocks_capacity,
+                100.0 * stats.kv_occupancy
+            ),
+        ]);
+        t.row(vec![
+            "prefix-share hits".into(),
+            format!(
+                "{} ({:.1}% of admissions)",
+                stats.prefix_share_hits,
+                100.0 * stats.prefix_share_rate
+            ),
+        ]);
+        t.row(vec!["preemptions".into(), stats.preemptions.to_string()]);
+    }
+    if stats.generate_requests > 0 {
+        t.row(vec![
+            "generation requests".into(),
+            format!("{} ({} failed)", stats.generate_requests, stats.generate_failed),
+        ]);
+        t.row(vec![
+            "generated tokens".into(),
+            stats.generated_tokens.to_string(),
+        ]);
+        t.row(vec![
+            "ttft p50/p95".into(),
+            format!("{:.1}/{:.1}ms", 1e3 * stats.ttft_p50_s, 1e3 * stats.ttft_p95_s),
+        ]);
+        t.row(vec![
+            "itl p50/p95".into(),
+            format!("{:.1}/{:.1}ms", 1e3 * stats.itl_p50_s, 1e3 * stats.itl_p95_s),
+        ]);
+    }
     t.print();
     Ok(())
 }
@@ -306,7 +421,15 @@ fn cmd_generate(args: &Args) -> lamp::Result<()> {
     use lamp::model::Decode;
     let model = args.get_str("model")?;
     let store = ArtifactStore::open(args.get_str("artifacts")?)?;
+    let kv_fmt = WeightFormat::by_name(&args.get_str("kv-fmt")?)?;
+    let kv_tau = args.get_f32("kv-tau")?;
     let engine = NativeEngine::load(&store, &model)?.with_weight_format(weights_fmt(args)?)?;
+    let mut kv_opts =
+        KvCacheOptions::serving(engine.config(), kv_fmt, 1).with_repair_tau(kv_tau);
+    // One session, one shot: publishing blocks for prefix sharing would be
+    // pure bookkeeping overhead with no possible adopter.
+    kv_opts.sharing = false;
+    let engine = engine.with_kv_cache(kv_opts)?;
     let cfg = engine.config().clone();
     let policy = plan_policy(args)?;
     let seed = args.get_u64("seed")?;
@@ -321,27 +444,30 @@ fn cmd_generate(args: &Args) -> lamp::Result<()> {
         .remove(0);
     let new_tokens = args.get_usize("new-tokens")?;
     let mut sw = Stopwatch::new();
-    // KV-cache decode: O(S) new inner products per token (DESIGN.md §Perf),
-    // through the single shared decode loop (bit-identical to serving).
-    let (tokens, stats) = lamp::model::generate_with_stats(
-        engine.weights(),
-        &prompt,
-        new_tokens,
-        engine.decode_precision(&policy),
-        decode,
-        seed,
-    )?;
+    // Paged KV-cache decode: O(S) new inner products per token (DESIGN.md
+    // §Perf), through the single shared decode loop (bit-identical to
+    // serving; `--kv-fmt bf16` halves resident KV bytes).
+    let mut session = engine.decode_session(&policy, seed)?;
+    let (tokens, stats) =
+        lamp::model::generate_with_session(&mut session, &prompt, new_tokens, decode)?;
     println!(
-        "generate({model}): prompt {} tokens -> {} tokens, policy {}, weights {}",
+        "generate({model}): prompt {} tokens -> {} tokens, policy {}, weights {}, kv {}",
         prompt.len(),
         tokens.len(),
         policy.label(),
-        engine.weight_format().label()
+        engine.weight_format().label(),
+        engine.kv_format().label()
     );
     println!("  continuation: {:?}", &tokens[prompt.len()..]);
     for (site, rate) in stats.site_rates() {
         println!("  recompute rate [{site}]: {:.4}%", 100.0 * rate);
     }
+    println!(
+        "  kv cache: {} bytes resident, {:.3}% rows pinned f32 (repair tau {})",
+        session.kv().resident_bytes(),
+        100.0 * session.kv().pinned_rate(),
+        kv_tau
+    );
     println!("  wall: {:.3}s", sw.secs());
     sw.lap("generate");
     Ok(())

@@ -1,41 +1,68 @@
-//! KV-cache incremental decoding for the native engine.
+//! KV-cache incremental decoding over the paged block-pool subsystem.
 //!
-//! The original serving loop re-ran the full O(S²) forward pass for every
-//! generated token. A [`DecodeSession`] instead carries the per-layer
-//! K/V projections of every position it has already processed, so feeding
-//! one token costs one embedding row, one row through each layer
-//! (QKV/proj/MLP row matvecs + **O(S) new KQ inner products** against the
-//! cached keys) and one unembedding row — the per-token cost drops from
-//! O(S²·d) attention work to O(S·d).
+//! A [`DecodeSession`] carries the per-layer K/V projections of every
+//! position it has already processed, so feeding one token costs one
+//! embedding row, one row through each layer (QKV/proj/MLP row matvecs +
+//! **O(S) new KQ inner products** against the cached keys) and one
+//! unembedding row — O(S·d) per token instead of the O(S²·d) full
+//! re-forward.
 //!
-//! ## Bit-exactness contract (DESIGN.md §Bit-exactness)
+//! ## Storage layout (PR 5 — `model::kvstore`)
+//!
+//! Cached rows no longer live in contiguous per-session `Matrix` buffers
+//! sized for the full context window. The session holds a
+//! [`PagedKvCache`]: a table of fixed-size blocks (`block_size` positions
+//! × all layers × K and V) allocated lazily from a [`KvBlockPool`] shared
+//! across the engine's sessions, so resident KV bytes track *live tokens*
+//! and the pool's block capacity is the serving-level admission currency.
+//! Blocks store rows in f32, bf16, or PS(μ) ([`kvstore::KvStore`]), with
+//! the LAMP look-ahead repair pinning high-quantization-error rows at
+//! exact f32 (see the `kvstore` module docs); a filled block on a sharing
+//! pool is published under a `(seed, plan, token-prefix)` chain hash so
+//! later sessions with a common prompt prefix adopt it instead of
+//! recomputing ([`DecodeSession::adopt_prefix`]), copy-on-write
+//! protecting mid-block boundaries.
+//!
+//! ## Bit-exactness contract (DESIGN.md §Bit-exactness, §Paged KV cache)
 //!
 //! The decode step runs the *same row kernels in the same order* as
 //! [`forward`](super::forward::forward) runs them for the last row of a
 //! full pass: `matvec_bias_into_wt` for the FP32 projections over the
-//! stored weights (the row body of `matmul_bias_into_wt`, dequantizing
-//! f32/bf16/PS(μ) storage on the fly), [`lamp_attention_row`] for the
-//! scores (shared with
-//! `causal_attention_into`), [`mlp_row_into`] for the MLP site (shared
-//! with `mlp_into`), `norm_site_row`/`logits_row_site` for the final-norm
-//! and sampler sites (shared with the full pass), and the same
-//! `layernorm`/GELU scalars. Every site's `Random`-rule stream for row `i`
-//! is keyed by `(seed, site/layer/head, i)` — functions of the position
-//! only — so cached rows never need re-selection. Consequently the logits
-//! produced incrementally are **bit-identical** to re-running the full
-//! forward pass over the whole prefix, for every [`PrecisionPlan`]
-//! including `Random` rules (verified by `rust/tests/decode_parity.rs`
-//! and `rust/tests/plan_parity.rs`).
+//! stored weights, [`lamp_attention_row_kv`] for the scores (per-score
+//! bit-identical to the contiguous [`lamp_attention_row`] shared with
+//! `causal_attention_into` — each score is an independent accumulator
+//! chain, so per-block runs change nothing), [`mlp_row_into`] for the MLP
+//! site, `norm_site_row`/`logits_row_site` for the final-norm and sampler
+//! sites, and the same `layernorm`/GELU scalars. Every site's
+//! `Random`-rule stream for row `i` is keyed by `(seed, site/layer/head,
+//! i)` — functions of the position only — so cached rows never need
+//! re-selection. Consequently, with f32 KV storage the logits produced
+//! incrementally are **bit-identical** to re-running the full forward
+//! pass over the whole prefix, for every [`PrecisionPlan`] including
+//! `Random` rules (verified by `rust/tests/decode_parity.rs` and
+//! `rust/tests/plan_parity.rs`); quantized KV storage changes values by
+//! exactly the storage error (and `repair_tau = 0` restores bit-equality
+//! by pinning every inexact row).
 //!
 //! [`LampStats`] accounting is incremental: each decoded row adds its
 //! `layers × heads × (pos + 1)` causal products once, so a session's
 //! `rate()` is the recomputation rate over every product the session ever
 //! evaluated — no double counting, unlike the re-forward loop which
-//! re-evaluates (and re-counted) the whole triangle per token.
+//! re-evaluates (and re-counted) the whole triangle per token. Rows
+//! adopted from the prefix-share index are never evaluated and therefore
+//! never counted.
+//!
+//! [`lamp_attention_row`]: super::attention::lamp_attention_row
+//! [`lamp_attention_row_kv`]: super::kvstore::lamp_attention_row_kv
+//! [`KvBlockPool`]: super::kvstore::KvBlockPool
+//! [`PagedKvCache`]: super::kvstore::PagedKvCache
+//! [`kvstore`]: super::kvstore
+//! [`kvstore::KvStore`]: super::kvstore::KvStore
 
-use super::attention::{lamp_attention_row, row_stream_seed, LampStats};
+use super::attention::{row_stream_seed, LampStats};
 use super::config::ModelConfig;
 use super::forward::layer_seed;
+use super::kvstore::{chain_root, lamp_attention_row_kv, KvBlockPool, PagedKvCache};
 use super::layernorm::{layernorm, LN_EPS};
 use super::mlp::mlp_row_into;
 use super::plan::{
@@ -45,23 +72,25 @@ use super::plan::{
 use super::weights::Weights;
 use crate::error::{Error, Result};
 use crate::linalg::matmul::matvec_bias_into_wt;
-use crate::linalg::Matrix;
+use std::sync::Arc;
 
 /// Incremental decoding state bound to a model's weights.
 ///
-/// All buffers — caches and row scratch — are allocated once at
-/// construction; `decode_step` performs no heap allocation except the
-/// LAMP selection masks when a finite-τ site is active.
+/// All buffers — row scratch and the paged cache's block table — are
+/// owned by the session; cache *blocks* come from the session's
+/// [`KvBlockPool`] (a private single-session pool under
+/// [`Self::new`], the engine's shared pool under [`Self::with_pool`]).
+/// `decode_step` performs no heap allocation except block allocation at
+/// block boundaries and the LAMP selection masks when a finite-τ site is
+/// active.
 pub struct DecodeSession<'w> {
     weights: &'w Weights,
     plan: PrecisionPlan,
     seed: u64,
     /// Number of positions already decoded (== next position index).
     pos: usize,
-    /// Per-layer cached key projections [seq, d]; rows 0..pos are valid.
-    k_cache: Vec<Matrix>,
-    /// Per-layer cached value projections [seq, d]; rows 0..pos are valid.
-    v_cache: Vec<Matrix>,
+    /// Paged K/V storage; rows 0..pos are valid.
+    kv: PagedKvCache,
     stats: LampStats,
     // Row scratch.
     x: Vec<f32>,
@@ -72,25 +101,45 @@ pub struct DecodeSession<'w> {
     hidden: Vec<f32>,
     mlp: Vec<f32>,
     scores: Vec<f32>,
+    /// Dequant-gather scratch for quantized/pinned cache runs.
+    gather: Vec<f32>,
     normq: Vec<f32>,
     logits: Vec<f32>,
 }
 
 impl<'w> DecodeSession<'w> {
-    /// Create a session with empty caches sized for the model's full
-    /// context window. `prec` is a [`PrecisionPlan`] or anything
-    /// convertible into one (a bare `AttentionPrecision` yields the
-    /// attention-only plan).
+    /// Create a session backed by a private f32 block pool sized for the
+    /// model's full context window — behaviorally identical to the
+    /// historical contiguous cache. `prec` is a [`PrecisionPlan`] or
+    /// anything convertible into one (a bare `AttentionPrecision` yields
+    /// the attention-only plan).
     pub fn new(weights: &'w Weights, prec: impl Into<PrecisionPlan>, seed: u64) -> Self {
+        let pool = KvBlockPool::private_for(&weights.config);
+        Self::with_pool(weights, prec, seed, pool)
+    }
+
+    /// Create a session on a shared [`KvBlockPool`] — the serving
+    /// configuration: blocks allocate lazily as the session grows, the
+    /// pool's capacity gates admission, and (on sharing pools) filled
+    /// blocks are published for prefix adoption.
+    ///
+    /// The pool must have been built for this model's configuration.
+    pub fn with_pool(
+        weights: &'w Weights,
+        prec: impl Into<PrecisionPlan>,
+        seed: u64,
+        pool: Arc<KvBlockPool>,
+    ) -> Self {
         let cfg = &weights.config;
         let d = cfg.d_model;
+        let plan = prec.into();
+        let root = chain_root(seed, &plan);
         DecodeSession {
             weights,
-            plan: prec.into(),
+            plan,
             seed,
             pos: 0,
-            k_cache: (0..cfg.layers).map(|_| Matrix::zeros(cfg.seq, d)).collect(),
-            v_cache: (0..cfg.layers).map(|_| Matrix::zeros(cfg.seq, d)).collect(),
+            kv: PagedKvCache::new(pool, root),
             stats: LampStats {
                 recomputed: 0,
                 causal_total: 0,
@@ -105,6 +154,7 @@ impl<'w> DecodeSession<'w> {
             hidden: vec![0.0; cfg.d_ff()],
             mlp: vec![0.0; d],
             scores: Vec::with_capacity(cfg.seq),
+            gather: Vec::new(),
             normq: Vec::with_capacity(d),
             logits: vec![0.0; cfg.vocab],
         }
@@ -130,8 +180,20 @@ impl<'w> DecodeSession<'w> {
         self.weights.config.seq - self.pos
     }
 
+    /// The session's Random-rule / sampling seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The session's paged KV cache (block table, pinned-row accounting,
+    /// resident bytes).
+    pub fn kv(&self) -> &PagedKvCache {
+        &self.kv
+    }
+
     /// Accumulated LAMP statistics over every product this session has
-    /// evaluated (each causal product counted exactly once).
+    /// evaluated (each causal product counted exactly once; adopted
+    /// prefix rows are never evaluated, hence never counted).
     pub fn stats(&self) -> &LampStats {
         &self.stats
     }
@@ -143,13 +205,15 @@ impl<'w> DecodeSession<'w> {
         &self.logits
     }
 
-    /// Clear the caches and statistics, keeping the buffers. The logits
-    /// buffer is zeroed so [`Self::logits`] honours its "all zeros before
-    /// the first `decode_step`" contract — a recycled session must never
-    /// leak the previous request's token distribution to a caller that
-    /// samples before feeding anything.
+    /// Clear the cache (releasing every block to the pool) and the
+    /// statistics, keeping the buffers. The logits buffer is zeroed so
+    /// [`Self::logits`] honours its "all zeros before the first
+    /// `decode_step`" contract — a recycled session must never leak the
+    /// previous request's token distribution to a caller that samples
+    /// before feeding anything.
     pub fn reset(&mut self) {
         self.pos = 0;
+        self.kv.clear();
         self.stats = LampStats {
             recomputed: 0,
             causal_total: 0,
@@ -163,19 +227,45 @@ impl<'w> DecodeSession<'w> {
     /// cached state while keeping every buffer allocation — the slot-recycling
     /// primitive of the continuous-batching scheduler. A reseated session is
     /// bit-identical to a freshly constructed one: `pos` and the statistics
-    /// are zeroed, and cache rows are always written before they are read
-    /// (row `i` is stored by `decode_step` before attention over `0..=i`),
-    /// so stale cache contents from the previous request can never leak.
+    /// are zeroed, every block returns to the pool, the share-chain root is
+    /// re-keyed to the new `(seed, plan)`, and cache rows are always written
+    /// before they are read (row `i` is stored by `decode_step` before
+    /// attention over `0..=i`), so stale state from the previous request can
+    /// never leak.
     pub fn reseat(&mut self, prec: impl Into<PrecisionPlan>, seed: u64) {
         self.plan = prec.into();
         self.seed = seed;
+        self.kv.rebind(chain_root(seed, &self.plan));
         self.reset();
     }
 
+    /// Adopt the longest shared prefix of `tokens` from the pool's
+    /// prefix-share index (no-op on non-sharing pools or a non-empty
+    /// session). Adopted positions are cached without being computed:
+    /// their logits are never materialized and their products are never
+    /// counted, so callers must keep at least the final prompt position
+    /// out of the adopted range (pass `&prompt[..prompt.len() - 1]`) if
+    /// they need its logits. Returns the number of positions adopted.
+    pub fn adopt_prefix(&mut self, tokens: &[u32]) -> usize {
+        if self.pos != 0 {
+            return 0;
+        }
+        let adopted = self.kv.adopt_prefix(tokens);
+        self.pos = adopted;
+        adopted
+    }
+
     /// Feed a whole prompt; afterwards [`Self::logits`] holds the last
-    /// prompt position's logits.
+    /// prompt position's logits. On a fresh session over a sharing pool,
+    /// a cached common prefix (all but the last prompt token) is adopted
+    /// instead of recomputed.
     pub fn prefill(&mut self, tokens: &[u32]) -> Result<()> {
-        for &t in tokens {
+        let start = if self.pos == 0 && tokens.len() > 1 {
+            self.adopt_prefix(&tokens[..tokens.len() - 1])
+        } else {
+            0
+        };
+        for &t in &tokens[start..] {
             self.decode_step(t)?;
         }
         Ok(())
@@ -183,6 +273,10 @@ impl<'w> DecodeSession<'w> {
 
     /// Feed `token` at the next position: updates the caches and computes
     /// that position's logits (available via [`Self::logits`]).
+    ///
+    /// On a shared pool this may allocate a block; exhaustion surfaces as
+    /// the typed [`Error::Resource`] *before any state changes*, so the
+    /// scheduler can preempt the session and recompute it later.
     pub fn decode_step(&mut self, token: u32) -> Result<()> {
         let cfg = &self.weights.config;
         let d = cfg.d_model;
@@ -202,15 +296,22 @@ impl<'w> DecodeSession<'w> {
                 cfg.vocab
             )));
         }
-        // Same storage front door as `forward` — a session constructed
-        // around a storage-pinned plan on mismatched weights must not
+        // Same storage front doors as `forward` — a session constructed
+        // around a storage-pinned plan on a mismatched engine must not
         // silently decode (DecodeSession::new/reseat cannot return Err,
-        // so the gate lives with the other per-step input checks).
+        // so the gates live with the other per-step input checks).
         if !self.plan.weights.accepts(self.weights.weight_format()) {
             return Err(Error::config(format!(
                 "plan requires {} weight storage, engine holds {}",
                 self.plan.weights.label(),
                 self.weights.weight_format().label()
+            )));
+        }
+        if !self.plan.kv.accepts(self.kv.pool().format()) {
+            return Err(Error::config(format!(
+                "plan requires {} KV-cache storage, pool holds {}",
+                self.plan.kv.label(),
+                self.kv.pool().format().label()
             )));
         }
 
@@ -226,22 +327,24 @@ impl<'w> DecodeSession<'w> {
             matvec_bias_into_wt(&self.xn, &blk.w_qkv, &blk.b_qkv, &mut self.qkv);
             let (q_row, kv_row) = self.qkv.split_at(d);
             let (k_row, v_row) = kv_row.split_at(d);
-            self.k_cache[l].row_mut(i).copy_from_slice(k_row);
-            self.v_cache[l].row_mut(i).copy_from_slice(v_row);
+            // Store this position's rows (quantizing + LAMP-repair pinning
+            // per the pool's format) before attention reads rows 0..=i.
+            self.kv.append_row(l, i, k_row, v_row)?;
             let lseed = layer_seed(self.seed, l);
             let mut recomputed = 0usize;
             for h in 0..heads {
                 let off = h * hd;
-                recomputed += lamp_attention_row(
+                recomputed += lamp_attention_row_kv(
                     &q_row[off..off + hd],
-                    &self.k_cache[l],
-                    &self.v_cache[l],
+                    &self.kv,
+                    l,
                     off,
                     i + 1,
                     scale,
                     self.plan.attention,
                     row_stream_seed(lseed, h, i),
                     &mut self.scores,
+                    &mut self.gather,
                     &mut self.attn[off..off + hd],
                 );
             }
@@ -273,6 +376,9 @@ impl<'w> DecodeSession<'w> {
                 self.x[c] += self.mlp[c];
             }
         }
+        // Every layer's rows are stored: fold the token into the share
+        // chain and publish the tail block if it just filled.
+        self.kv.complete_position(token, i);
 
         // Final-norm site (no-op at reference), then the final LN.
         if !self.plan.norm.is_reference() {
@@ -304,8 +410,10 @@ impl<'w> DecodeSession<'w> {
 mod tests {
     use super::*;
     use crate::lamp::softmax::SoftmaxRule;
+    use crate::linalg::WeightFormat;
     use crate::model::attention::AttentionPrecision;
     use crate::model::forward::forward;
+    use crate::model::kvstore::KvCacheOptions;
     use crate::util::Rng;
 
     fn nano_weights(seed: u64) -> Weights {
@@ -339,8 +447,9 @@ mod tests {
     fn incremental_logits_match_full_forward_bitwise() {
         // Every step's logits must equal the corresponding row of a full
         // forward pass over the same prefix — the KV cache's defining
-        // property. Holds bitwise for every plan and rule (all site
-        // streams are functions of position, not of evaluation order).
+        // property, now over the paged (f32) block store. Holds bitwise
+        // for every plan and rule (all site streams are functions of
+        // position, not of evaluation order).
         let w = nano_weights(1);
         let tokens: Vec<u32> = (0..14).map(|i| (i * 17 + 5) % 128).collect();
         for plan in plans() {
@@ -363,11 +472,41 @@ mod tests {
     }
 
     #[test]
+    fn shared_pool_and_tiny_blocks_stay_bit_identical() {
+        // Paging layout knobs (block size, shared pool, sharing on) must
+        // never change logits: same plans, same bits as a private pool.
+        let w = nano_weights(1);
+        let cfg = &w.config;
+        let tokens: Vec<u32> = (0..11).map(|i| (i * 23 + 9) % 128).collect();
+        let pool = KvBlockPool::new(
+            cfg,
+            KvCacheOptions {
+                format: WeightFormat::F32,
+                repair_tau: f32::INFINITY,
+                block_size: 3,
+                capacity_blocks: 16,
+                sharing: true,
+            },
+        )
+        .unwrap();
+        for plan in plans() {
+            let mut paged = DecodeSession::with_pool(&w, plan, 42, pool.clone());
+            let mut private = DecodeSession::new(&w, plan, 42);
+            paged.prefill(&tokens).unwrap();
+            private.prefill(&tokens).unwrap();
+            for (a, b) in paged.logits().iter().zip(private.logits()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "block layout changed logits");
+            }
+            assert_eq!(paged.stats().recomputed, private.stats().recomputed);
+        }
+    }
+
+    #[test]
     fn decode_matches_full_forward_under_quantized_storage() {
         // The KV-cache invariant carries over unchanged to quantized
-        // storage: decode on bf16/PS weights is bit-identical to the full
-        // forward pass on the same weights (shared fused-dequant kernels).
-        use crate::linalg::WeightFormat;
+        // *weight* storage: decode on bf16/PS weights is bit-identical to
+        // the full forward pass on the same weights (shared fused-dequant
+        // kernels).
         let w = nano_weights(8);
         let tokens: Vec<u32> = (0..10).map(|i| (i * 19 + 7) % 128).collect();
         for fmt in [WeightFormat::Bf16, WeightFormat::PsRounded { mu: 6 }] {
@@ -423,7 +562,6 @@ mod tests {
 
     #[test]
     fn storage_pinned_plan_rejected_at_decode_step() {
-        use crate::linalg::WeightFormat;
         use crate::model::plan::WeightPrecision;
         let w = nano_weights(9);
         let pinned = PrecisionPlan::reference()
@@ -437,6 +575,26 @@ mod tests {
         // Matching storage decodes fine.
         let q = w.quantize_to(WeightFormat::Bf16).unwrap();
         let mut session = DecodeSession::new(&q, pinned, 0);
+        session.prefill(&[1, 2, 3]).unwrap();
+        assert_eq!(session.len(), 3);
+    }
+
+    #[test]
+    fn kv_pinned_plan_rejected_at_decode_step() {
+        use crate::model::plan::KvPrecision;
+        let w = nano_weights(9);
+        // Private pools are f32: a bf16-KV-pinned plan must refuse to
+        // decode, exactly like the weight-storage gate.
+        let pinned =
+            PrecisionPlan::reference().with_kv(KvPrecision::Exact(WeightFormat::Bf16));
+        let mut session = DecodeSession::new(&w, pinned, 0);
+        let err = session.decode_step(1).unwrap_err().to_string();
+        assert!(err.contains("KV-cache storage"), "{err}");
+        // A pool holding the pinned format decodes fine.
+        let mut opts = KvCacheOptions::private(&w.config);
+        opts.format = WeightFormat::Bf16;
+        let pool = KvBlockPool::new(&w.config, opts).unwrap();
+        let mut session = DecodeSession::with_pool(&w, pinned, 0, pool);
         session.prefill(&[1, 2, 3]).unwrap();
         assert_eq!(session.len(), 3);
     }
@@ -467,6 +625,7 @@ mod tests {
                 recycled.reseat(prec_b, 77);
                 assert!(recycled.is_empty());
                 assert_eq!(recycled.stats().causal_total, 0);
+                assert_eq!(recycled.kv().len(), 0, "reseat must release the cache");
                 assert!(
                     recycled.logits().iter().all(|&l| l == 0.0),
                     "reseat must not leak the previous request's logits"
@@ -488,6 +647,50 @@ mod tests {
     }
 
     #[test]
+    fn prefill_adopts_shared_prefix_and_streams_stay_identical() {
+        // Two sessions with the same (seed, plan) and a common prompt on a
+        // sharing pool: the second adopts the first's published blocks,
+        // skips their compute, and still produces bit-identical logits.
+        let w = nano_weights(6);
+        let cfg = &w.config;
+        let pool = KvBlockPool::new(
+            cfg,
+            KvCacheOptions {
+                format: WeightFormat::F32,
+                repair_tau: f32::INFINITY,
+                block_size: 4,
+                capacity_blocks: 24,
+                sharing: true,
+            },
+        )
+        .unwrap();
+        let tokens: Vec<u32> = (0..13).map(|i| (i * 7 + 2) % 128).collect();
+        let plan: PrecisionPlan = AttentionPrecision::lamp(3, 0.05, SoftmaxRule::Random).into();
+
+        let mut first = DecodeSession::with_pool(&w, plan, 11, pool.clone());
+        first.prefill(&tokens).unwrap();
+        let want: Vec<f32> = first.logits().to_vec();
+        let full_products = first.stats().causal_total;
+        drop(first); // blocks stay published in the pool's prompt cache
+
+        let mut second = DecodeSession::with_pool(&w, plan, 11, pool.clone());
+        second.prefill(&tokens).unwrap();
+        assert!(second.kv().adopted() > 0, "second session must adopt the prefix");
+        assert!(
+            second.stats().causal_total < full_products,
+            "adopted rows must not be recounted"
+        );
+        for (a, b) in second.logits().iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "prefix sharing changed logits");
+        }
+
+        // A different seed re-keys the chain: nothing is adopted.
+        let mut other = DecodeSession::with_pool(&w, plan, 12, pool.clone());
+        other.prefill(&tokens).unwrap();
+        assert_eq!(other.kv().adopted(), 0);
+    }
+
+    #[test]
     fn reset_reuses_buffers() {
         let w = nano_weights(4);
         let prec = AttentionPrecision::reference();
@@ -499,5 +702,31 @@ mod tests {
         assert_eq!(session.stats().causal_total, 0);
         session.prefill(&[1, 2, 3]).unwrap();
         assert_eq!(session.logits(), &first[..], "reset must be a clean slate");
+    }
+
+    #[test]
+    fn pool_exhaustion_is_a_typed_resource_error() {
+        // A pool smaller than the prompt fails mid-prefill with the
+        // retryable resource error and the session can be reset and
+        // resumed on a bigger pool path (the scheduler's preemption).
+        let w = nano_weights(7);
+        let pool = KvBlockPool::new(
+            &w.config,
+            KvCacheOptions {
+                format: WeightFormat::F32,
+                repair_tau: f32::INFINITY,
+                block_size: 2,
+                capacity_blocks: 2,
+                sharing: false,
+            },
+        )
+        .unwrap();
+        let mut session =
+            DecodeSession::with_pool(&w, AttentionPrecision::reference(), 0, pool.clone());
+        let err = session.prefill(&[1, 2, 3, 4, 5, 6]).unwrap_err();
+        assert!(err.is_resource(), "{err}");
+        assert_eq!(session.len(), 4, "four positions fit in two 2-blocks");
+        session.reset();
+        assert_eq!(pool.stats().used_blocks, 0, "reset releases the blocks");
     }
 }

@@ -1,0 +1,1649 @@
+//! Paged mixed-precision KV-cache subsystem.
+//!
+//! At serving scale the dominant resident state is not the weights but the
+//! per-session K/V cache, and a contiguous per-session buffer sized for the
+//! full context window caps concurrency at `memory / full-context-bytes`
+//! regardless of how short requests actually are. This module replaces that
+//! layout with vLLM-style block paging plus LAMP-repaired quantized
+//! storage:
+//!
+//! * [`KvBlockPool`] — a slab allocator handing out fixed-size ref-counted
+//!   blocks (one block = `block_size` consecutive positions × all layers ×
+//!   K and V rows). Sessions allocate lazily as they grow, so memory scales
+//!   with *live tokens*, not with the context window, and the pool's
+//!   capacity is the serving-level admission currency.
+//! * [`PagedKvCache`] — a session's view: a table of block handles with
+//!   **prefix sharing** (blocks published under a token-chain hash; a new
+//!   session with a matching `(seed, plan, token-prefix)` adopts them and
+//!   skips recomputing the prefix) and **copy-on-write** (a shared block
+//!   adopted up to a mid-block boundary is copied into an owned block the
+//!   first time the session appends into it).
+//! * [`KvStore`] — the block payload, mirroring
+//!   [`WeightStore`](crate::linalg::WeightStore): `F32` (bit-identical to
+//!   the historical contiguous cache), `Bf16` (half the resident bytes),
+//!   or `PsRounded{μ}` (storage-error simulation at μ mantissa bits).
+//! * **LAMP KV repair** — the look-ahead move of the paper applied to
+//!   cached activations: each appended row is quantized, its realized
+//!   componentwise error `max_c |x_c − q(x)_c|` (El arar-style forward
+//!   error) is compared against the pool's `repair_tau`, and
+//!   high-sensitivity rows are pinned at exact f32 in the block's repair
+//!   annex while everything else stays quantized. `repair_tau = 0` pins
+//!   every inexact row (bit-identical to f32 KV); `repair_tau = ∞` is
+//!   uniform quantized storage.
+//! * [`lamp_attention_row_kv`] — the fused dequant-on-read attention row
+//!   kernel: per cached block it either reads the f32 slab in place (f32
+//!   storage — the bit-exact fast path) or gathers the dequantized run
+//!   into scratch, then runs the identical PS(μ) score kernel
+//!   ([`score_row_ps`]), LAMP selection, FP32 repair, softmax, and value
+//!   aggregation as the contiguous [`lamp_attention_row`] it replaces.
+//!
+//! ## Bit-exactness argument (DESIGN.md §Paged KV cache)
+//!
+//! With f32 storage a paged cache holds exactly the bytes the contiguous
+//! `Matrix` cache held, just scattered across blocks. Every score is an
+//! independent accumulator chain (`score_row_ps` is bit-identical per
+//! score to `dot_ps`), so computing a causal row in per-block runs yields
+//! the same bits as one contiguous call; selection, FP32 repair, softmax,
+//! and the ascending-`j` value aggregation then execute the identical
+//! FP32 operations in the identical order. Hence f32-backed paging is
+//! **bit-identical** to the pre-paging contiguous cache under every
+//! [`PrecisionPlan`] (pinned by `rust/tests/decode_parity.rs` and the
+//! decode≡forward suites). Prefix sharing preserves this because cached
+//! rows are deterministic functions of `(seed, plan, token-prefix)` —
+//! exactly the chain-hash key blocks are published under.
+//!
+//! ## Block lifecycle
+//!
+//! `alloc` → *Owned* (exclusively writable by one session) → on fill,
+//! `publish` freezes it into a shared `Arc` registered in the pool's
+//! prefix index (the pool keeps one cache reference, so published blocks
+//! survive their session — a prompt cache) → sessions `release` their
+//! handles on retirement/preemption; the buffer returns to the free list
+//! when the last reference drops, or when the pool **evicts** an unused
+//! cached block to satisfy a new allocation. Exhaustion (no free, no
+//! evictable) surfaces as a typed [`Error::Resource`] that the scheduler
+//! turns into preempt-then-recompute.
+
+use super::attention::AttentionPrecision;
+use super::plan::PrecisionPlan;
+use crate::error::{Error, Result};
+use crate::lamp::softmax::{select_softmax, softmax_inplace, SoftmaxRule};
+use crate::linalg::tensor::{bf16_to_f32, f32_to_bf16};
+use crate::linalg::WeightFormat;
+use crate::model::config::ModelConfig;
+use crate::softfloat::dot::{dot_f32, score_row_ps};
+use crate::softfloat::round::round_to_mantissa;
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, Weak};
+
+/// Flat quantized row storage for one block side (K or V) — the KV twin of
+/// [`crate::linalg::WeightStore`]. Every stored value is an exact f32
+/// (bf16 widens exactly; PS(μ) values are pre-rounded f32), so
+/// dequantization is error-free: quantization error enters once, at
+/// [`KvStore::write_row`], never per read.
+#[derive(Debug, Clone, PartialEq)]
+pub enum KvStore {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    PsRounded { mu: u32, data: Vec<f32> },
+}
+
+impl KvStore {
+    /// Zero-filled storage for `len` elements under `fmt`.
+    pub fn zeros(fmt: WeightFormat, len: usize) -> KvStore {
+        match fmt {
+            WeightFormat::F32 => KvStore::F32(vec![0.0; len]),
+            WeightFormat::Bf16 => KvStore::Bf16(vec![0; len]),
+            WeightFormat::PsRounded { mu } => {
+                KvStore::PsRounded { mu, data: vec![0.0; len] }
+            }
+        }
+    }
+
+    /// Storage format of this payload.
+    pub fn format(&self) -> WeightFormat {
+        match self {
+            KvStore::F32(_) => WeightFormat::F32,
+            KvStore::Bf16(_) => WeightFormat::Bf16,
+            KvStore::PsRounded { mu, .. } => WeightFormat::PsRounded { mu: *mu },
+        }
+    }
+
+    /// Resident payload bytes.
+    pub fn resident_bytes(&self) -> usize {
+        let len = match self {
+            KvStore::F32(d) => d.len(),
+            KvStore::Bf16(d) => d.len(),
+            KvStore::PsRounded { data, .. } => data.len(),
+        };
+        len * self.format().bytes_per_element()
+    }
+
+    /// Quantize `row` into `[off, off + row.len())`, returning the
+    /// realized maximum componentwise error `max_c |x_c − q(x_c)|` — the
+    /// look-ahead signal the repair rule thresholds against.
+    fn write_row(&mut self, off: usize, row: &[f32]) -> f32 {
+        match self {
+            KvStore::F32(d) => {
+                d[off..off + row.len()].copy_from_slice(row);
+                0.0
+            }
+            KvStore::Bf16(d) => {
+                let mut err = 0.0f32;
+                for (slot, &x) in d[off..off + row.len()].iter_mut().zip(row) {
+                    let b = f32_to_bf16(x);
+                    *slot = b;
+                    err = err.max((x - bf16_to_f32(b)).abs());
+                }
+                err
+            }
+            KvStore::PsRounded { mu, data } => {
+                let mut err = 0.0f32;
+                for (slot, &x) in data[off..off + row.len()].iter_mut().zip(row) {
+                    let q = round_to_mantissa(x, *mu);
+                    *slot = q;
+                    err = err.max((x - q).abs());
+                }
+                err
+            }
+        }
+    }
+
+    /// The f32-backed flat payload (`F32` and `PsRounded`); `None` for bf16.
+    #[inline]
+    fn flat_f32(&self) -> Option<&[f32]> {
+        match self {
+            KvStore::F32(d) | KvStore::PsRounded { data: d, .. } => Some(d),
+            KvStore::Bf16(_) => None,
+        }
+    }
+
+    /// Dequantize `[off, off + n)` onto the end of `out`.
+    fn extend_dequant(&self, off: usize, n: usize, out: &mut Vec<f32>) {
+        match self {
+            KvStore::F32(d) | KvStore::PsRounded { data: d, .. } => {
+                out.extend_from_slice(&d[off..off + n]);
+            }
+            KvStore::Bf16(d) => {
+                out.extend(d[off..off + n].iter().map(|&b| bf16_to_f32(b)));
+            }
+        }
+    }
+}
+
+/// One block's payload: K and V rows for `block_size` consecutive
+/// positions across every layer, plus the f32 repair annex holding the
+/// rows the LAMP look-ahead rule pinned exact. Row `(layer, slot)` lives
+/// at flat offset `(layer · block_size + slot) · d` of each slab.
+#[derive(Debug)]
+pub struct KvBlockData {
+    layers: usize,
+    block_size: usize,
+    d: usize,
+    k: KvStore,
+    v: KvStore,
+    /// Exact-f32 pinned rows, indexed by `layer · block_size + slot`.
+    exact_k: Vec<Option<Box<[f32]>>>,
+    exact_v: Vec<Option<Box<[f32]>>>,
+}
+
+impl KvBlockData {
+    fn new(layers: usize, block_size: usize, d: usize, fmt: WeightFormat) -> Self {
+        let rows = layers * block_size;
+        KvBlockData {
+            layers,
+            block_size,
+            d,
+            k: KvStore::zeros(fmt, rows * d),
+            v: KvStore::zeros(fmt, rows * d),
+            exact_k: (0..rows).map(|_| None).collect(),
+            exact_v: (0..rows).map(|_| None).collect(),
+        }
+    }
+
+    /// Clear the repair annex for buffer reuse. Slab contents may stay
+    /// stale: a session only ever reads rows it (or the published origin)
+    /// wrote, so stale slab bytes are unreachable — but a stale annex
+    /// entry would *shadow* a freshly written row, so it must go.
+    fn reset(&mut self) {
+        for e in &mut self.exact_k {
+            *e = None;
+        }
+        for e in &mut self.exact_v {
+            *e = None;
+        }
+    }
+
+    #[inline]
+    fn idx(&self, layer: usize, slot: usize) -> usize {
+        debug_assert!(layer < self.layers && slot < self.block_size);
+        layer * self.block_size + slot
+    }
+
+    /// Write one position's K and V rows for `layer`, quantizing into the
+    /// slab; rows whose realized quantization error exceeds `tau` are
+    /// pinned at exact f32 in the annex (the LAMP KV repair). Returns the
+    /// number of rows pinned (0..=2).
+    fn write_row(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+        tau: f32,
+    ) -> usize {
+        debug_assert_eq!(k_row.len(), self.d);
+        debug_assert_eq!(v_row.len(), self.d);
+        let idx = self.idx(layer, slot);
+        let off = idx * self.d;
+        let mut pinned = 0;
+        let ek = self.k.write_row(off, k_row);
+        self.exact_k[idx] = if ek > tau {
+            pinned += 1;
+            Some(k_row.to_vec().into_boxed_slice())
+        } else {
+            None
+        };
+        let ev = self.v.write_row(off, v_row);
+        self.exact_v[idx] = if ev > tau {
+            pinned += 1;
+            Some(v_row.to_vec().into_boxed_slice())
+        } else {
+            None
+        };
+        pinned
+    }
+
+    /// Copy rows `0..valid_slots` (every layer, K and V, annex included)
+    /// from `other` — the copy-on-write primitive. Both blocks belong to
+    /// the same pool, so the storage formats match and the copy is
+    /// byte-exact.
+    fn copy_rows_from(&mut self, other: &KvBlockData, valid_slots: usize) {
+        debug_assert_eq!(self.block_size, other.block_size);
+        debug_assert_eq!(self.layers, other.layers);
+        debug_assert!(valid_slots <= self.block_size);
+        let copy = |dst: &mut KvStore, src: &KvStore, off: usize, n: usize| match (dst, src) {
+            (KvStore::F32(a), KvStore::F32(b)) => {
+                a[off..off + n].copy_from_slice(&b[off..off + n]);
+            }
+            (KvStore::Bf16(a), KvStore::Bf16(b)) => {
+                a[off..off + n].copy_from_slice(&b[off..off + n]);
+            }
+            (
+                KvStore::PsRounded { data: a, .. },
+                KvStore::PsRounded { data: b, .. },
+            ) => {
+                a[off..off + n].copy_from_slice(&b[off..off + n]);
+            }
+            _ => unreachable!("copy-on-write across storage formats"),
+        };
+        for layer in 0..self.layers {
+            let idx0 = layer * self.block_size;
+            copy(&mut self.k, &other.k, idx0 * self.d, valid_slots * self.d);
+            copy(&mut self.v, &other.v, idx0 * self.d, valid_slots * self.d);
+            for slot in 0..valid_slots {
+                self.exact_k[idx0 + slot] = other.exact_k[idx0 + slot].clone();
+                self.exact_v[idx0 + slot] = other.exact_v[idx0 + slot].clone();
+            }
+        }
+    }
+
+    /// Dequantized K row `(layer, slot)`: the pinned annex row when the
+    /// repair rule kept it exact, the slab slice when f32-backed, else a
+    /// dequantized copy in `scratch`.
+    pub fn k_row<'a>(&'a self, layer: usize, slot: usize, scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        row_window(&self.k, &self.exact_k, self.idx(layer, slot), self.d, 0, self.d, scratch)
+    }
+
+    /// Dequantized V row `(layer, slot)` — same contract as [`Self::k_row`].
+    pub fn v_row<'a>(&'a self, layer: usize, slot: usize, scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        row_window(&self.v, &self.exact_v, self.idx(layer, slot), self.d, 0, self.d, scratch)
+    }
+
+    /// The contiguous `[n, d]` K-row run starting at `slot0`, readable in
+    /// place: `Some` iff the slab is f32-backed and no row in the range is
+    /// pinned (f32 storage never pins, so this is always the f32 fast
+    /// path — the bit-exact twin of the contiguous cache's slice).
+    fn k_run_slice(&self, layer: usize, slot0: usize, n: usize) -> Option<&[f32]> {
+        let idx0 = self.idx(layer, slot0);
+        debug_assert!(slot0 + n <= self.block_size);
+        if self.exact_k[idx0..idx0 + n].iter().any(|e| e.is_some()) {
+            return None;
+        }
+        self.k.flat_f32().map(|d| &d[idx0 * self.d..(idx0 + n) * self.d])
+    }
+
+    /// Gather the dequantized `[n, hd]` column window `[off, off + hd)` of
+    /// the K-row run starting at `slot0` into `out` (annex rows exact,
+    /// slab rows dequantized). Only the caller's head columns are
+    /// converted — the attention kernel is invoked once per head, so a
+    /// full-width gather would redo the whole row's dequantization
+    /// `heads` times per decoded token.
+    fn gather_k_cols(
+        &self,
+        layer: usize,
+        slot0: usize,
+        n: usize,
+        off: usize,
+        hd: usize,
+        out: &mut Vec<f32>,
+    ) {
+        out.clear();
+        let idx0 = self.idx(layer, slot0);
+        for i in 0..n {
+            let idx = idx0 + i;
+            match &self.exact_k[idx] {
+                Some(x) => out.extend_from_slice(&x[off..off + hd]),
+                None => self.k.extend_dequant(idx * self.d + off, hd, out),
+            }
+        }
+    }
+
+    /// The dequantized `[off, off + hd)` window of K row `(layer, slot)`
+    /// — the per-head analogue of [`Self::k_row`].
+    fn k_cols<'a>(
+        &'a self,
+        layer: usize,
+        slot: usize,
+        off: usize,
+        hd: usize,
+        scratch: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
+        row_window(&self.k, &self.exact_k, self.idx(layer, slot), self.d, off, hd, scratch)
+    }
+
+    /// The dequantized `[off, off + hd)` window of V row `(layer, slot)`.
+    fn v_cols<'a>(
+        &'a self,
+        layer: usize,
+        slot: usize,
+        off: usize,
+        hd: usize,
+        scratch: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
+        row_window(&self.v, &self.exact_v, self.idx(layer, slot), self.d, off, hd, scratch)
+    }
+
+    /// Rows pinned at exact f32 in the repair annex (K and V counted
+    /// separately).
+    pub fn pinned_rows(&self) -> usize {
+        self.exact_k.iter().filter(|e| e.is_some()).count()
+            + self.exact_v.iter().filter(|e| e.is_some()).count()
+    }
+
+    /// Resident bytes: both quantized slabs plus the f32 repair annex.
+    pub fn resident_bytes(&self) -> usize {
+        self.k.resident_bytes() + self.v.resident_bytes() + self.pinned_rows() * self.d * 4
+    }
+}
+
+/// Shared row-window accessor behind `k_row`/`v_row`/`k_cols`/`v_cols`:
+/// the pinned annex row when the repair rule kept it exact, the slab in
+/// place when f32-backed, else a dequantized copy in `scratch`. `idx` is
+/// the flat `layer · block_size + slot` row index, `[off, off + n)` the
+/// column window.
+fn row_window<'a>(
+    store: &'a KvStore,
+    annex: &'a [Option<Box<[f32]>>],
+    idx: usize,
+    d: usize,
+    off: usize,
+    n: usize,
+    scratch: &'a mut Vec<f32>,
+) -> &'a [f32] {
+    if let Some(x) = &annex[idx] {
+        return &x[off..off + n];
+    }
+    let o = idx * d + off;
+    match store.flat_f32() {
+        Some(flat) => &flat[o..o + n],
+        None => {
+            scratch.clear();
+            store.extend_dequant(o, n, scratch);
+            &scratch[..]
+        }
+    }
+}
+
+/// A session's handle on one block: exclusively owned (writable) or
+/// frozen and prefix-shared.
+#[derive(Debug)]
+pub enum PagedBlock {
+    Owned(Box<KvBlockData>),
+    Shared(Arc<KvBlockData>),
+}
+
+impl PagedBlock {
+    /// Read access to the payload, whichever side owns it.
+    #[inline]
+    pub fn data(&self) -> &KvBlockData {
+        match self {
+            PagedBlock::Owned(b) => b,
+            PagedBlock::Shared(a) => a,
+        }
+    }
+}
+
+/// Pool configuration — the serving-level KV knobs (`--kv-fmt`,
+/// `--kv-tau`).
+#[derive(Debug, Clone)]
+pub struct KvCacheOptions {
+    /// Block slab storage format.
+    pub format: WeightFormat,
+    /// LAMP KV repair threshold: an appended row whose realized max
+    /// componentwise quantization error exceeds this stays pinned at
+    /// exact f32. `0.0` pins every inexact row (bit-identical to f32 KV);
+    /// `INFINITY` (default) is uniform quantized storage. Ignored for f32.
+    pub repair_tau: f32,
+    /// Positions per block.
+    pub block_size: usize,
+    /// Total blocks the pool may have live at once.
+    pub capacity_blocks: usize,
+    /// Publish filled blocks for prefix sharing. Private (per-session)
+    /// pools disable this so solo decode stays byte-for-byte the
+    /// historical path; serving pools enable it.
+    pub sharing: bool,
+}
+
+impl KvCacheOptions {
+    /// Default block size — small enough that short prompts span a block
+    /// boundary (sharing granularity), large enough to amortize handles.
+    pub const DEFAULT_BLOCK_SIZE: usize = 16;
+
+    /// f32, no repair, no sharing, capacity for exactly one full-context
+    /// session — the private pool behind `DecodeSession::new`.
+    pub fn private(cfg: &ModelConfig) -> Self {
+        let block_size = Self::DEFAULT_BLOCK_SIZE.min(cfg.seq.max(1));
+        KvCacheOptions {
+            format: WeightFormat::F32,
+            repair_tau: f32::INFINITY,
+            block_size,
+            capacity_blocks: cfg.seq.div_ceil(block_size),
+            sharing: false,
+        }
+    }
+
+    /// Serving pool: `fmt` storage with sharing on, sized for `sessions`
+    /// concurrent full-context sessions.
+    pub fn serving(cfg: &ModelConfig, fmt: WeightFormat, sessions: usize) -> Self {
+        let block_size = Self::DEFAULT_BLOCK_SIZE.min(cfg.seq.max(1));
+        KvCacheOptions {
+            format: fmt,
+            repair_tau: f32::INFINITY,
+            block_size,
+            capacity_blocks: sessions.max(1) * cfg.seq.div_ceil(block_size),
+            sharing: true,
+        }
+    }
+
+    /// Replace the repair threshold.
+    pub fn with_repair_tau(mut self, tau: f32) -> Self {
+        self.repair_tau = tau;
+        self
+    }
+
+    /// Range checks, typed errors (front door like the plan validators).
+    pub fn validate(&self) -> Result<()> {
+        self.format.validate()?;
+        if self.block_size == 0 {
+            return Err(Error::config("kv cache: block_size must be >= 1".to_string()));
+        }
+        if self.capacity_blocks == 0 {
+            return Err(Error::config(
+                "kv cache: capacity_blocks must be >= 1".to_string(),
+            ));
+        }
+        if self.repair_tau.is_nan() || self.repair_tau < 0.0 {
+            return Err(Error::config(format!(
+                "kv cache: repair_tau {} must be >= 0 and not NaN",
+                self.repair_tau
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Pool bookkeeping snapshot (the serving metrics source).
+#[derive(Debug, Clone, Default)]
+pub struct KvPoolStats {
+    pub capacity_blocks: usize,
+    /// Live blocks (session-held + prompt-cached).
+    pub used_blocks: usize,
+    /// Capacity headroom (`capacity - used`).
+    pub free_blocks: usize,
+    /// Recycled buffers parked on the free list.
+    pub free_buffers: usize,
+    /// Published blocks retained by the prompt cache.
+    pub cached_blocks: usize,
+    /// Cached blocks no session references (reclaimable on demand).
+    pub evictable_blocks: usize,
+    /// Prefix-share adoptions (sessions that adopted >= 1 row) and
+    /// attempts (sessions that probed the index).
+    pub share_hits: usize,
+    pub share_lookups: usize,
+    /// Total rows adopted instead of recomputed.
+    pub shared_rows: usize,
+    pub evictions: usize,
+    /// Slab-resident bytes of live blocks (`used · slab bytes/block`; the
+    /// per-session repair annex is reported by `PagedKvCache`).
+    pub resident_bytes: usize,
+    /// Slab format label (`f32` / `bf16` / `ps<mu>`).
+    pub format: String,
+}
+
+impl KvPoolStats {
+    /// Fraction of capacity in use.
+    pub fn occupancy(&self) -> f64 {
+        if self.capacity_blocks == 0 {
+            0.0
+        } else {
+            self.used_blocks as f64 / self.capacity_blocks as f64
+        }
+    }
+
+    /// Prefix-share hit rate over adoption attempts.
+    pub fn share_rate(&self) -> f64 {
+        if self.share_lookups == 0 {
+            0.0
+        } else {
+            self.share_hits as f64 / self.share_lookups as f64
+        }
+    }
+}
+
+struct PoolState {
+    /// Recycled block buffers.
+    free: Vec<Box<KvBlockData>>,
+    /// Live blocks: session-held (owned or shared) plus prompt-cached.
+    outstanding: usize,
+    /// Prefix index: chain hash (covering `j` leading rows of a published
+    /// block) → the block. Weak so dead entries cannot pin memory.
+    index: HashMap<u64, Weak<KvBlockData>>,
+    /// One strong reference per published block — the prompt cache that
+    /// keeps shared prefixes alive across sessions until evicted.
+    cache: Vec<Arc<KvBlockData>>,
+    share_hits: usize,
+    share_lookups: usize,
+    shared_rows: usize,
+    evictions: usize,
+}
+
+/// Slab allocator of fixed-size, ref-counted KV blocks shared by every
+/// session of one engine. See the module docs for the lifecycle.
+pub struct KvBlockPool {
+    layers: usize,
+    block_size: usize,
+    d: usize,
+    format: WeightFormat,
+    repair_tau: f32,
+    capacity: usize,
+    sharing: bool,
+    state: Mutex<PoolState>,
+}
+
+impl KvBlockPool {
+    /// Build a pool for `cfg`-shaped sessions.
+    pub fn new(cfg: &ModelConfig, opts: KvCacheOptions) -> Result<Arc<Self>> {
+        opts.validate()?;
+        cfg.validate()?;
+        Ok(Arc::new(KvBlockPool {
+            layers: cfg.layers,
+            block_size: opts.block_size,
+            d: cfg.d_model,
+            format: opts.format,
+            repair_tau: opts.repair_tau,
+            capacity: opts.capacity_blocks,
+            sharing: opts.sharing,
+            state: Mutex::new(PoolState {
+                free: Vec::new(),
+                outstanding: 0,
+                index: HashMap::new(),
+                cache: Vec::new(),
+                share_hits: 0,
+                share_lookups: 0,
+                shared_rows: 0,
+                evictions: 0,
+            }),
+        }))
+    }
+
+    /// The private single-session pool behind `DecodeSession::new`:
+    /// f32 storage, no sharing, exactly one full context of capacity.
+    pub fn private_for(cfg: &ModelConfig) -> Arc<Self> {
+        Self::new(cfg, KvCacheOptions::private(cfg))
+            .expect("private pool options are valid for a valid config")
+    }
+
+    pub fn format(&self) -> WeightFormat {
+        self.format
+    }
+
+    pub fn repair_tau(&self) -> f32 {
+        self.repair_tau
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn sharing(&self) -> bool {
+        self.sharing
+    }
+
+    /// Blocks needed to hold `positions` cached positions.
+    pub fn blocks_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.block_size)
+    }
+
+    /// Slab bytes of one block (both K and V sides; annex excluded).
+    pub fn slab_bytes_per_block(&self) -> usize {
+        2 * self.layers * self.block_size * self.d * self.format.bytes_per_element()
+    }
+
+    /// Blocks an admission could still obtain: capacity headroom plus
+    /// cached blocks nothing references (evicted on demand by `alloc`).
+    pub fn available_blocks(&self) -> usize {
+        let st = self.state.lock().expect("kv pool lock");
+        let evictable =
+            st.cache.iter().filter(|a| Arc::strong_count(a) == 1).count();
+        self.capacity - st.outstanding + evictable
+    }
+
+    /// Bookkeeping snapshot.
+    pub fn stats(&self) -> KvPoolStats {
+        let st = self.state.lock().expect("kv pool lock");
+        let evictable =
+            st.cache.iter().filter(|a| Arc::strong_count(a) == 1).count();
+        KvPoolStats {
+            capacity_blocks: self.capacity,
+            used_blocks: st.outstanding,
+            free_blocks: self.capacity - st.outstanding,
+            free_buffers: st.free.len(),
+            cached_blocks: st.cache.len(),
+            evictable_blocks: evictable,
+            share_hits: st.share_hits,
+            share_lookups: st.share_lookups,
+            shared_rows: st.shared_rows,
+            evictions: st.evictions,
+            resident_bytes: st.outstanding * self.slab_bytes_per_block(),
+            format: self.format.label(),
+        }
+    }
+
+    /// Hand out a fresh (reset) owned block buffer. Eviction order when at
+    /// capacity: recycled free buffers, then unreferenced prompt-cache
+    /// entries (oldest first); with neither, the typed resource error the
+    /// scheduler converts into preemption.
+    fn alloc(&self) -> Result<Box<KvBlockData>> {
+        let mut st = self.state.lock().expect("kv pool lock");
+        if let Some(mut b) = st.free.pop() {
+            b.reset();
+            st.outstanding += 1;
+            return Ok(b);
+        }
+        if st.outstanding < self.capacity {
+            st.outstanding += 1;
+            return Ok(Box::new(KvBlockData::new(
+                self.layers,
+                self.block_size,
+                self.d,
+                self.format,
+            )));
+        }
+        if let Some(i) = st.cache.iter().position(|a| Arc::strong_count(a) == 1) {
+            let arc = st.cache.remove(i);
+            st.evictions += 1;
+            match Arc::try_unwrap(arc) {
+                Ok(mut data) => {
+                    // Purge the evicted block's (now dead) index entries.
+                    st.index.retain(|_, w| w.upgrade().is_some());
+                    data.reset();
+                    // Net zero on `outstanding`: the cached block died,
+                    // its buffer is reborn as the new allocation.
+                    return Ok(Box::new(data));
+                }
+                Err(_) => unreachable!(
+                    "strong_count was 1 under the pool lock; no new clone can race"
+                ),
+            }
+        }
+        Err(Error::resource(format!(
+            "kv block pool exhausted ({} blocks of {} positions)",
+            self.capacity, self.block_size
+        )))
+    }
+
+    /// Return a session's handle. Owned buffers go straight to the free
+    /// list; a shared handle frees its buffer only when it was the last
+    /// reference (the prompt cache or other sessions may keep it alive).
+    fn release(&self, block: PagedBlock) {
+        let mut st = self.state.lock().expect("kv pool lock");
+        match block {
+            PagedBlock::Owned(b) => {
+                st.free.push(b);
+                st.outstanding -= 1;
+            }
+            PagedBlock::Shared(arc) => {
+                // Reclaim the buffer only when this was the last
+                // reference; otherwise the prompt cache / other sessions
+                // keep the block alive and accounted.
+                if let Ok(data) = Arc::try_unwrap(arc) {
+                    st.free.push(Box::new(data));
+                    st.outstanding -= 1;
+                }
+            }
+        }
+    }
+
+    /// Freeze a filled owned block into a shared one, registering it in
+    /// the prefix index under `hashes[j - 1]` = the chain hash covering
+    /// its first `j` rows, and retaining one prompt-cache reference.
+    fn publish(&self, data: Box<KvBlockData>, hashes: &[u64]) -> Arc<KvBlockData> {
+        debug_assert_eq!(hashes.len(), self.block_size);
+        let arc = Arc::new(*data);
+        let mut st = self.state.lock().expect("kv pool lock");
+        for &h in hashes {
+            st.index.insert(h, Arc::downgrade(&arc));
+        }
+        st.cache.push(arc.clone());
+        arc
+    }
+
+    /// Look up a published block by chain hash.
+    fn lookup(&self, hash: u64) -> Option<Arc<KvBlockData>> {
+        let st = self.state.lock().expect("kv pool lock");
+        st.index.get(&hash).and_then(|w| w.upgrade())
+    }
+
+    fn record_adoption(&self, rows: usize) {
+        let mut st = self.state.lock().expect("kv pool lock");
+        st.share_lookups += 1;
+        if rows > 0 {
+            st.share_hits += 1;
+            st.shared_rows += rows;
+        }
+    }
+
+    /// Drop every prompt-cache entry no session references; returns the
+    /// number of blocks reclaimed. (`alloc` does this lazily one block at
+    /// a time; this is the bulk form used by tests and shutdown paths.)
+    pub fn evict_unused(&self) -> usize {
+        let mut st = self.state.lock().expect("kv pool lock");
+        let mut reclaimed = 0;
+        let mut i = 0;
+        while i < st.cache.len() {
+            if Arc::strong_count(&st.cache[i]) == 1 {
+                let arc = st.cache.remove(i);
+                match Arc::try_unwrap(arc) {
+                    Ok(data) => {
+                        st.free.push(Box::new(data));
+                        st.outstanding -= 1;
+                        st.evictions += 1;
+                        reclaimed += 1;
+                    }
+                    Err(_) => unreachable!("strong_count was 1 under the pool lock"),
+                }
+            } else {
+                i += 1;
+            }
+        }
+        st.index.retain(|_, w| w.upgrade().is_some());
+        reclaimed
+    }
+}
+
+impl std::fmt::Debug for KvBlockPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "KvBlockPool({} blocks x {} positions, {})",
+            self.capacity,
+            self.block_size,
+            self.format.label()
+        )
+    }
+}
+
+/// One hash-chain fold step (splitmix64 finalizer over `h ⊕ mix(v)`).
+#[inline]
+fn fold(h: u64, v: u64) -> u64 {
+    let mut z = h ^ v.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+fn rule_tag(rule: SoftmaxRule) -> u64 {
+    match rule {
+        SoftmaxRule::Strict => 1,
+        SoftmaxRule::Relaxed => 2,
+        SoftmaxRule::RelaxedLengthNorm { ref_len } => 3 ^ ((ref_len as u64) << 8),
+        SoftmaxRule::Random => 4,
+    }
+}
+
+/// Root of a session's token-chain hash. Cached rows are deterministic
+/// functions of `(seed, compute-site plan, token prefix)` — the per-site
+/// `Random` streams and every kernel are keyed by position — so two
+/// sessions may share blocks iff their roots and token prefixes agree.
+/// (Storage *requirements* are engine-level and identical across one
+/// pool's sessions, so they are not folded.)
+pub fn chain_root(seed: u64, plan: &PrecisionPlan) -> u64 {
+    let mut h = fold(0x4B56_5041_4745_4431, seed); // "KVPAGED1"
+    for site in [plan.attention, plan.mlp, plan.norm, plan.sampler] {
+        h = fold(h, site.mu as u64);
+        h = fold(h, site.tau.to_bits() as u64);
+        h = fold(h, rule_tag(site.rule));
+    }
+    h
+}
+
+/// A session's paged view of the pool: the block table, the running
+/// token-chain hash, and the adopt / append / publish lifecycle.
+pub struct PagedKvCache {
+    pool: Arc<KvBlockPool>,
+    blocks: Vec<PagedBlock>,
+    /// Positions with complete (all-layer) rows.
+    len: usize,
+    /// Rows adopted from shared blocks instead of computed.
+    adopted: usize,
+    /// Chain root (function of the session's seed and plan).
+    root: u64,
+    /// Chain hash covering the `len` cached positions.
+    chain: u64,
+    /// Per-token chain hashes inside the current tail block (published
+    /// with the block when it fills).
+    pending: Vec<u64>,
+}
+
+impl PagedKvCache {
+    pub fn new(pool: Arc<KvBlockPool>, root: u64) -> Self {
+        PagedKvCache {
+            pool,
+            blocks: Vec::new(),
+            len: 0,
+            adopted: 0,
+            root,
+            chain: root,
+            pending: Vec::new(),
+        }
+    }
+
+    pub fn pool(&self) -> &Arc<KvBlockPool> {
+        &self.pool
+    }
+
+    /// Cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Rows adopted from the prefix-share index (never recomputed).
+    pub fn adopted(&self) -> usize {
+        self.adopted
+    }
+
+    /// Cached rows (K and V counted separately): `2 · layers · len`.
+    pub fn rows(&self) -> usize {
+        2 * self.pool.layers * self.len
+    }
+
+    /// Rows the LAMP KV repair pinned at exact f32 across this session's
+    /// blocks (adopted blocks included — their pins are resident too).
+    pub fn pinned_rows(&self) -> usize {
+        self.blocks.iter().map(|b| b.data().pinned_rows()).sum()
+    }
+
+    /// Pinned fraction of the rows this cache holds (`pinned / rows()`).
+    /// A partially adopted shared tail may carry the origin session's pins
+    /// beyond this session's own rows, so the ratio can slightly exceed
+    /// the session-local pin decision rate in that (rare) configuration.
+    pub fn pinned_rate(&self) -> f64 {
+        let rows = self.rows();
+        if rows == 0 {
+            0.0
+        } else {
+            self.pinned_rows() as f64 / rows as f64
+        }
+    }
+
+    /// Resident bytes of this session's blocks (slabs + repair annex).
+    pub fn resident_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.data().resident_bytes()).sum()
+    }
+
+    /// Adopt the longest prefix of `tokens` available from the pool's
+    /// prefix-share index. Walks published blocks full-block by
+    /// full-block; the final match may end mid-block (the copy-on-write
+    /// case when the session later appends). Only valid on an empty
+    /// cache; returns the number of positions adopted.
+    pub fn adopt_prefix(&mut self, tokens: &[u32]) -> usize {
+        if !self.pool.sharing || self.len != 0 || tokens.is_empty() {
+            return 0;
+        }
+        let bs = self.pool.block_size;
+        let mut adopted = 0;
+        loop {
+            let rest = &tokens[adopted..];
+            if rest.is_empty() {
+                break;
+            }
+            let take = rest.len().min(bs);
+            let mut hashes = Vec::with_capacity(take);
+            let mut h = self.chain;
+            for &t in &rest[..take] {
+                h = fold(h, t as u64 + 1);
+                hashes.push(h);
+            }
+            let mut hit = None;
+            for j in (1..=take).rev() {
+                if let Some(arc) = self.pool.lookup(hashes[j - 1]) {
+                    hit = Some((j, arc));
+                    break;
+                }
+            }
+            let Some((j, arc)) = hit else { break };
+            self.blocks.push(PagedBlock::Shared(arc));
+            adopted += j;
+            self.chain = hashes[j - 1];
+            self.len = adopted;
+            if j < bs {
+                // Partial tail: seed the pending hashes so the block can
+                // republish a full hash set after copy-on-write + refill.
+                self.pending = hashes[..j].to_vec();
+                break;
+            }
+        }
+        self.adopted = adopted;
+        self.pool.record_adoption(adopted);
+        adopted
+    }
+
+    /// Store position `pos`'s K and V rows for `layer`. Positions are
+    /// strictly append-only (`pos == len`); the block is allocated on the
+    /// first layer of the first position it covers, and a shared tail
+    /// (partial adoption) is copied on first write. Returns the number of
+    /// rows the repair rule pinned; fails with the typed resource error on
+    /// pool exhaustion (no state is modified in that case).
+    pub fn append_row(
+        &mut self,
+        layer: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> Result<usize> {
+        debug_assert_eq!(pos, self.len, "KV rows are append-only");
+        let bs = self.pool.block_size;
+        let b = pos / bs;
+        let slot = pos % bs;
+        if layer == 0 {
+            if b == self.blocks.len() {
+                let blk = self.pool.alloc()?;
+                self.blocks.push(PagedBlock::Owned(blk));
+            } else if b + 1 == self.blocks.len() {
+                if matches!(self.blocks[b], PagedBlock::Shared(_)) {
+                    self.cow_tail(b, slot)?;
+                }
+            } else {
+                return Err(Error::invariant(format!(
+                    "append_row: position {pos} maps to block {b}, table has {}",
+                    self.blocks.len()
+                )));
+            }
+        }
+        let data = match &mut self.blocks[b] {
+            PagedBlock::Owned(d) => d,
+            PagedBlock::Shared(_) => {
+                return Err(Error::invariant(
+                    "append_row into a shared block (copy-on-write missed)".to_string(),
+                ))
+            }
+        };
+        Ok(data.write_row(layer, slot, k_row, v_row, self.pool.repair_tau))
+    }
+
+    /// Copy-on-write: replace the shared tail block (adopted up to
+    /// `valid` rows) with an owned copy before the first append into it.
+    fn cow_tail(&mut self, b: usize, valid: usize) -> Result<()> {
+        let mut fresh = self.pool.alloc()?;
+        if let PagedBlock::Shared(src) = &self.blocks[b] {
+            fresh.copy_rows_from(src, valid);
+        }
+        let old = std::mem::replace(&mut self.blocks[b], PagedBlock::Owned(fresh));
+        self.pool.release(old);
+        Ok(())
+    }
+
+    /// Mark position `pos` complete (all layers written), folding `token`
+    /// into the chain. When the tail block fills on a sharing pool it is
+    /// frozen and published for prefix adoption.
+    pub fn complete_position(&mut self, token: u32, pos: usize) {
+        debug_assert_eq!(pos, self.len, "positions complete in order");
+        self.chain = fold(self.chain, token as u64 + 1);
+        self.pending.push(self.chain);
+        self.len = pos + 1;
+        if self.len % self.pool.block_size == 0 {
+            if self.pool.sharing {
+                match self.blocks.pop().expect("tail block exists") {
+                    PagedBlock::Owned(data) => {
+                        let arc = self.pool.publish(data, &self.pending);
+                        self.blocks.push(PagedBlock::Shared(arc));
+                    }
+                    shared => self.blocks.push(shared),
+                }
+            }
+            self.pending.clear();
+        }
+    }
+
+    /// Release every block back to the pool, keeping the chain root — the
+    /// reset primitive (`DecodeSession::reset`).
+    pub fn clear(&mut self) {
+        for b in self.blocks.drain(..) {
+            self.pool.release(b);
+        }
+        self.len = 0;
+        self.adopted = 0;
+        self.chain = self.root;
+        self.pending.clear();
+    }
+
+    /// Clear and re-key the chain for a new `(seed, plan)` binding — the
+    /// reseat primitive.
+    pub fn rebind(&mut self, root: u64) {
+        self.clear();
+        self.root = root;
+        self.chain = root;
+    }
+}
+
+impl Drop for PagedKvCache {
+    /// A dropped session must not leak pool capacity.
+    fn drop(&mut self) {
+        self.clear();
+    }
+}
+
+/// Compute one (head, query-row) attention unit against the paged cache —
+/// the fused dequant-on-read twin of
+/// [`lamp_attention_row`](super::attention::lamp_attention_row). Scores
+/// are accumulated per cached block: f32-backed runs are read in place
+/// (bit-identical to the contiguous kernel), quantized/pinned runs are
+/// gathered into `gather` first; each score is an independent PS(μ)
+/// chain, so chunking cannot change any bit. Selection, FP32 repair
+/// (against the rows *as stored* — the weight-storage principle), softmax
+/// and ascending-`j` value aggregation follow the contiguous kernel
+/// exactly. Returns the number of recomputed KQ products.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lamp_attention_row_kv(
+    qi: &[f32],
+    cache: &PagedKvCache,
+    layer: usize,
+    off: usize,
+    n_keys: usize,
+    scale: f32,
+    prec: AttentionPrecision,
+    row_seed: u64,
+    scores: &mut Vec<f32>,
+    gather: &mut Vec<f32>,
+    out: &mut [f32],
+) -> usize {
+    let hd = qi.len();
+    debug_assert_eq!(out.len(), hd);
+    debug_assert!(n_keys <= cache.len + 1, "reading unwritten cache rows");
+    let d = cache.pool.d;
+    let bs = cache.pool.block_size;
+    // Step 1: fused PS(μ) accumulation, per block run.
+    scores.clear();
+    scores.resize(n_keys, 0.0);
+    let mut j0 = 0;
+    while j0 < n_keys {
+        let b = j0 / bs;
+        let slot0 = j0 % bs;
+        let run = (bs - slot0).min(n_keys - j0);
+        let data = cache.blocks[b].data();
+        match data.k_run_slice(layer, slot0, run) {
+            Some(slab) => score_row_ps(
+                qi,
+                &slab[off..],
+                d,
+                run,
+                prec.mu,
+                scale,
+                &mut scores[j0..j0 + run],
+            ),
+            None => {
+                // Gather only this head's columns: values are identical
+                // to a full-width gather (dequantization is per element),
+                // so every score bit matches, at 1/heads of the work.
+                data.gather_k_cols(layer, slot0, run, off, hd, gather);
+                score_row_ps(
+                    qi,
+                    gather,
+                    hd,
+                    run,
+                    prec.mu,
+                    scale,
+                    &mut scores[j0..j0 + run],
+                );
+            }
+        }
+        j0 += run;
+    }
+    // Steps 2-3: LAMP selection + FP32 recomputation over the stored rows.
+    let mut recomputed = 0;
+    if prec.tau.is_finite() {
+        let mut rng = Rng::new(row_seed);
+        let mask = select_softmax(scores, prec.tau, prec.rule, &mut rng);
+        for (j, &m) in mask.iter().enumerate() {
+            if m {
+                let data = cache.blocks[j / bs].data();
+                let kj = data.k_cols(layer, j % bs, off, hd, gather);
+                scores[j] = dot_f32(qi, kj) * scale;
+                recomputed += 1;
+            }
+        }
+    }
+    // Step 4: FP32 softmax + value aggregation in ascending j.
+    softmax_inplace(scores);
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for (j, &p) in scores.iter().enumerate() {
+        let data = cache.blocks[j / bs].data();
+        let vj = data.v_cols(layer, j % bs, off, hd, gather);
+        for (o, &vv) in out.iter_mut().zip(vj) {
+            *o += p * vv;
+        }
+    }
+    recomputed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::model::attention::lamp_attention_row;
+
+    fn nano() -> ModelConfig {
+        ModelConfig::nano()
+    }
+
+    fn pool(fmt: WeightFormat, tau: f32, capacity: usize, sharing: bool) -> Arc<KvBlockPool> {
+        KvBlockPool::new(
+            &nano(),
+            KvCacheOptions {
+                format: fmt,
+                repair_tau: tau,
+                block_size: 4,
+                capacity_blocks: capacity,
+                sharing,
+            },
+        )
+        .unwrap()
+    }
+
+    fn rand_row(rng: &mut Rng, d: usize) -> Vec<f32> {
+        (0..d).map(|_| rng.normal_f32()).collect()
+    }
+
+    /// Fill `cache` with `n` random positions (all layers), folding fake
+    /// tokens; returns the written (k, v) rows per (layer, pos).
+    fn fill(
+        cache: &mut PagedKvCache,
+        n: usize,
+        layers: usize,
+        d: usize,
+        rng: &mut Rng,
+    ) -> Vec<Vec<(Vec<f32>, Vec<f32>)>> {
+        let mut rows = vec![Vec::new(); layers];
+        for pos in 0..n {
+            for (layer, lr) in rows.iter_mut().enumerate() {
+                let k = rand_row(rng, d);
+                let v = rand_row(rng, d);
+                cache.append_row(layer, pos, &k, &v).unwrap();
+                lr.push((k, v));
+            }
+            cache.complete_position((pos % 96) as u32, pos);
+        }
+        rows
+    }
+
+    #[test]
+    fn kvstore_zeros_format_bytes() {
+        for fmt in [
+            WeightFormat::F32,
+            WeightFormat::Bf16,
+            WeightFormat::PsRounded { mu: 5 },
+        ] {
+            let s = KvStore::zeros(fmt, 12);
+            assert_eq!(s.format(), fmt);
+            assert_eq!(s.resident_bytes(), 12 * fmt.bytes_per_element());
+        }
+    }
+
+    #[test]
+    fn write_read_roundtrip_and_error_signal() {
+        let mut rng = Rng::new(1);
+        let row: Vec<f32> = rand_row(&mut rng, 8);
+        // f32: exact, zero error.
+        let mut s = KvStore::zeros(WeightFormat::F32, 8);
+        assert_eq!(s.write_row(0, &row), 0.0);
+        let mut out = Vec::new();
+        s.extend_dequant(0, 8, &mut out);
+        assert_eq!(out, row);
+        // bf16: error matches the widened round trip, dequant is exact.
+        let mut s = KvStore::zeros(WeightFormat::Bf16, 8);
+        let err = s.write_row(0, &row);
+        let want: f32 = row
+            .iter()
+            .map(|&x| (x - bf16_to_f32(f32_to_bf16(x))).abs())
+            .fold(0.0, f32::max);
+        assert_eq!(err, want);
+        assert!(err > 0.0, "random rows are not bf16-representable");
+        out.clear();
+        s.extend_dequant(0, 8, &mut out);
+        for (a, &x) in out.iter().zip(&row) {
+            assert_eq!(a.to_bits(), bf16_to_f32(f32_to_bf16(x)).to_bits());
+        }
+        // ps(3): rounded storage.
+        let mut s = KvStore::zeros(WeightFormat::PsRounded { mu: 3 }, 8);
+        let err = s.write_row(0, &row);
+        assert!(err > 0.0);
+        out.clear();
+        s.extend_dequant(0, 8, &mut out);
+        for (a, &x) in out.iter().zip(&row) {
+            assert_eq!(a.to_bits(), round_to_mantissa(x, 3).to_bits());
+        }
+    }
+
+    #[test]
+    fn repair_pins_high_error_rows_and_tau_zero_is_exact() {
+        let cfg = nano();
+        let d = cfg.d_model;
+        let mut rng = Rng::new(2);
+        // tau = 0: every inexact row pinned, reads are bitwise exact.
+        let p = pool(WeightFormat::PsRounded { mu: 2 }, 0.0, 8, false);
+        let mut cache = PagedKvCache::new(p, 7);
+        let rows = fill(&mut cache, 6, cfg.layers, d, &mut rng);
+        assert!(cache.pinned_rows() > 0);
+        let mut scratch = Vec::new();
+        for (layer, lr) in rows.iter().enumerate() {
+            for (pos, (k, v)) in lr.iter().enumerate() {
+                let data = cache.blocks[pos / 4].data();
+                assert_eq!(data.k_row(layer, pos % 4, &mut scratch), &k[..]);
+                assert_eq!(data.v_row(layer, pos % 4, &mut scratch), &v[..]);
+            }
+        }
+        // tau = inf: nothing pinned, reads are the quantized values.
+        let p = pool(WeightFormat::PsRounded { mu: 2 }, f32::INFINITY, 8, false);
+        let mut cache = PagedKvCache::new(p, 7);
+        let mut rng = Rng::new(2);
+        let rows = fill(&mut cache, 6, cfg.layers, d, &mut rng);
+        assert_eq!(cache.pinned_rows(), 0);
+        let data = cache.blocks[0].data();
+        let got = data.k_row(0, 0, &mut scratch);
+        for (g, &x) in got.iter().zip(&rows[0][0].0) {
+            assert_eq!(g.to_bits(), round_to_mantissa(x, 2).to_bits());
+        }
+        // Finite tau pins a strict subset between the two extremes; derive
+        // it as the median of the realized row errors so the split is
+        // guaranteed nondegenerate.
+        let row_err = |row: &[f32]| -> f32 {
+            row.iter()
+                .map(|&x| (x - round_to_mantissa(x, 2)).abs())
+                .fold(0.0, f32::max)
+        };
+        let mut errs: Vec<f32> = Vec::new();
+        for lr in &rows {
+            for (k, v) in lr {
+                errs.push(row_err(k));
+                errs.push(row_err(v));
+            }
+        }
+        errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let tau = errs[errs.len() / 2];
+        let p = pool(WeightFormat::PsRounded { mu: 2 }, tau, 8, false);
+        let mut cache = PagedKvCache::new(p, 7);
+        let mut rng = Rng::new(2);
+        fill(&mut cache, 6, cfg.layers, d, &mut rng);
+        let pinned = cache.pinned_rows();
+        assert!(pinned > 0 && pinned < cache.rows(), "pinned={pinned}");
+        assert!(cache.pinned_rate() > 0.0 && cache.pinned_rate() < 1.0);
+        // Pinned rows cost f32 bytes in the resident accounting.
+        assert!(cache.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn pool_alloc_release_accounting() {
+        let p = pool(WeightFormat::F32, f32::INFINITY, 3, false);
+        let root = 1u64;
+        let mut c1 = PagedKvCache::new(p.clone(), root);
+        let mut c2 = PagedKvCache::new(p.clone(), root);
+        let d = nano().d_model;
+        let row = vec![0.5f32; d];
+        // 4-position blocks: 5 positions -> 2 blocks.
+        for pos in 0..5 {
+            for l in 0..nano().layers {
+                c1.append_row(l, pos, &row, &row).unwrap();
+            }
+            c1.complete_position(0, pos);
+        }
+        assert_eq!(p.stats().used_blocks, 2);
+        for l in 0..nano().layers {
+            c2.append_row(l, 0, &row, &row).unwrap();
+        }
+        c2.complete_position(0, 0);
+        assert_eq!(p.stats().used_blocks, 3);
+        assert_eq!(p.available_blocks(), 0);
+        // Exhaustion is a typed resource error and mutates nothing.
+        let mut c3 = PagedKvCache::new(p.clone(), root);
+        let err = c3.append_row(0, 0, &row, &row).unwrap_err();
+        assert!(err.is_resource(), "{err}");
+        assert_eq!(p.stats().used_blocks, 3);
+        // Releases return the pool to empty; buffers are recycled.
+        c1.clear();
+        c2.clear();
+        drop(c3);
+        let st = p.stats();
+        assert_eq!(st.used_blocks, 0);
+        assert_eq!(st.free_buffers, 3);
+        // A fresh cache reuses a recycled buffer (no growth past capacity).
+        let mut c4 = PagedKvCache::new(p.clone(), root);
+        c4.append_row(0, 0, &row, &row).unwrap();
+        assert_eq!(p.stats().used_blocks, 1);
+    }
+
+    #[test]
+    fn drop_releases_blocks() {
+        let p = pool(WeightFormat::F32, f32::INFINITY, 2, false);
+        {
+            let mut c = PagedKvCache::new(p.clone(), 3);
+            let row = vec![1.0f32; nano().d_model];
+            for l in 0..nano().layers {
+                c.append_row(l, 0, &row, &row).unwrap();
+            }
+            assert_eq!(p.stats().used_blocks, 1);
+        }
+        assert_eq!(p.stats().used_blocks, 0, "Drop must not leak blocks");
+    }
+
+    #[test]
+    fn publish_adopt_full_and_partial_with_cow() {
+        let cfg = nano();
+        let d = cfg.d_model;
+        let p = pool(WeightFormat::F32, f32::INFINITY, 6, true);
+        let root = chain_root(9, &PrecisionPlan::reference());
+        let tokens: Vec<u32> = (0..10u32).collect();
+        let mut writer = PagedKvCache::new(p.clone(), root);
+        let mut rng = Rng::new(4);
+        // Deterministic rows keyed by (layer, pos) so a reader session
+        // would write identical rows — mirrors real decode determinism.
+        let mut rows: Vec<Vec<(Vec<f32>, Vec<f32>)>> = vec![Vec::new(); cfg.layers];
+        for (pos, &t) in tokens.iter().enumerate() {
+            for (layer, lr) in rows.iter_mut().enumerate() {
+                let k = rand_row(&mut rng, d);
+                let v = rand_row(&mut rng, d);
+                writer.append_row(layer, pos, &k, &v).unwrap();
+                lr.push((k, v));
+            }
+            writer.complete_position(t, pos);
+        }
+        // 10 positions, block 4: blocks 0 and 1 published, tail partial.
+        assert_eq!(p.stats().cached_blocks, 2);
+        writer.clear();
+        assert_eq!(p.stats().used_blocks, 2, "published blocks outlive the session");
+
+        // Full-block adoption: identical prefix of 8 tokens.
+        let mut reader = PagedKvCache::new(p.clone(), root);
+        let adopted = reader.adopt_prefix(&tokens[..9]);
+        assert_eq!(adopted, 8, "two full blocks adopt; the 9th was never published");
+        assert_eq!(reader.len(), 8);
+        let mut scratch = Vec::new();
+        for layer in 0..cfg.layers {
+            for pos in 0..8 {
+                let data = reader.blocks[pos / 4].data();
+                assert_eq!(
+                    data.k_row(layer, pos % 4, &mut scratch),
+                    &rows[layer][pos].0[..]
+                );
+            }
+        }
+
+        // Partial adoption ends mid-block and triggers copy-on-write on
+        // the next append.
+        let mut partial = PagedKvCache::new(p.clone(), root);
+        let adopted = partial.adopt_prefix(&tokens[..6]);
+        assert_eq!(adopted, 6, "4 full + 2 rows into the second published block");
+        assert!(matches!(partial.blocks[1], PagedBlock::Shared(_)));
+        let k = rand_row(&mut rng, d);
+        let v = rand_row(&mut rng, d);
+        for layer in 0..cfg.layers {
+            partial.append_row(layer, 6, &k, &v).unwrap();
+        }
+        assert!(
+            matches!(partial.blocks[1], PagedBlock::Owned(_)),
+            "append into a shared tail must copy-on-write"
+        );
+        // The copied rows survived the CoW byte-for-byte.
+        let data = partial.blocks[1].data();
+        assert_eq!(data.k_row(0, 1, &mut scratch), &rows[0][5].0[..]);
+        assert_eq!(data.k_row(0, 2, &mut scratch), &k[..]);
+
+        // A different root (other seed/plan) adopts nothing.
+        let mut other = PagedKvCache::new(p.clone(), root ^ 1);
+        assert_eq!(other.adopt_prefix(&tokens), 0);
+        let st = p.stats();
+        assert!(st.share_hits >= 2 && st.share_lookups >= 3);
+        assert!(st.shared_rows >= 14);
+    }
+
+    #[test]
+    fn eviction_reclaims_cached_blocks_under_pressure() {
+        let cfg = nano();
+        let d = cfg.d_model;
+        let p = pool(WeightFormat::F32, f32::INFINITY, 2, true);
+        let mut a = PagedKvCache::new(p.clone(), 5);
+        let row = vec![0.25f32; d];
+        // Two full 4-position blocks, both published to the prompt cache.
+        for pos in 0..8 {
+            for l in 0..cfg.layers {
+                a.append_row(l, pos, &row, &row).unwrap();
+            }
+            a.complete_position(pos as u32, pos);
+        }
+        a.clear();
+        // Both blocks cached and unreferenced; a new session must evict to
+        // allocate.
+        assert_eq!(p.stats().used_blocks, 2);
+        assert_eq!(p.available_blocks(), 2);
+        let mut b = PagedKvCache::new(p.clone(), 6);
+        for l in 0..cfg.layers {
+            b.append_row(l, 0, &row, &row).unwrap();
+        }
+        let st = p.stats();
+        assert!(st.evictions >= 1, "allocation under pressure must evict");
+        assert_eq!(st.used_blocks, 2);
+        drop(b);
+        assert_eq!(p.evict_unused(), 1);
+        assert_eq!(p.stats().used_blocks, 0);
+    }
+
+    #[test]
+    fn paged_attention_row_bit_identical_to_contiguous_f32() {
+        // The kernel contract: against f32-backed paging, every rule and
+        // precision reproduces the contiguous Matrix kernel bit for bit —
+        // per-block score runs cannot change independent chains.
+        let cfg = nano();
+        let d = cfg.d_model;
+        let heads = cfg.heads;
+        let hd = d / heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut rng = Rng::new(11);
+        let n = 11; // crosses two block boundaries at block_size 4
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let q: Vec<f32> = rand_row(&mut rng, d);
+        let p = pool(WeightFormat::F32, f32::INFINITY, 4, false);
+        let mut cache = PagedKvCache::new(p, 1);
+        for pos in 0..n {
+            for layer in 0..cfg.layers {
+                // Use layer 0 as the one under test; others get noise.
+                if layer == 0 {
+                    cache.append_row(layer, pos, k.row(pos), v.row(pos)).unwrap();
+                } else {
+                    cache.append_row(layer, pos, v.row(pos), k.row(pos)).unwrap();
+                }
+            }
+            cache.complete_position(pos as u32, pos);
+        }
+        for prec in [
+            AttentionPrecision::reference(),
+            AttentionPrecision::uniform(4),
+            AttentionPrecision::lamp(4, 0.05, SoftmaxRule::Strict),
+            AttentionPrecision::lamp(4, 0.05, SoftmaxRule::Random),
+            AttentionPrecision::lamp(3, 0.1, SoftmaxRule::Relaxed),
+        ] {
+            for h in 0..heads {
+                let off = h * hd;
+                let mut scores_a = Vec::new();
+                let mut out_a = vec![0.0f32; hd];
+                let na = lamp_attention_row(
+                    &q[off..off + hd],
+                    &k,
+                    &v,
+                    off,
+                    n,
+                    scale,
+                    prec,
+                    99,
+                    &mut scores_a,
+                    &mut out_a,
+                );
+                let mut scores_b = Vec::new();
+                let mut gather = Vec::new();
+                let mut out_b = vec![0.0f32; hd];
+                let nb = lamp_attention_row_kv(
+                    &q[off..off + hd],
+                    &cache,
+                    0,
+                    off,
+                    n,
+                    scale,
+                    prec,
+                    99,
+                    &mut scores_b,
+                    &mut gather,
+                    &mut out_b,
+                );
+                assert_eq!(na, nb, "recompute counts diverge");
+                for (a, b) in out_a.iter().zip(&out_b) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "paged f32 != contiguous");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_kv_attention_matches_dequantized_oracle() {
+        // Fused dequant-on-read ≡ dequantize-then-f32-cache: build a bf16
+        // cache and an f32 cache holding exactly the dequantized (or
+        // pinned-exact) values; the kernel outputs must agree bitwise.
+        let cfg = nano();
+        let d = cfg.d_model;
+        let hd = d / cfg.heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut rng = Rng::new(13);
+        let n = 7;
+        for (fmt, tau) in [
+            (WeightFormat::Bf16, f32::INFINITY),
+            (WeightFormat::Bf16, 0.004),
+            (WeightFormat::PsRounded { mu: 3 }, 0.05),
+        ] {
+            let p = pool(fmt, tau, 4, false);
+            let pf = pool(WeightFormat::F32, f32::INFINITY, 4, false);
+            let mut cache = PagedKvCache::new(p, 1);
+            let mut oracle = PagedKvCache::new(pf, 1);
+            let mut scratch = Vec::new();
+            for pos in 0..n {
+                for layer in 0..cfg.layers {
+                    let kr = rand_row(&mut rng, d);
+                    let vr = rand_row(&mut rng, d);
+                    cache.append_row(layer, pos, &kr, &vr).unwrap();
+                    // Mirror the *stored* values into the f32 oracle.
+                    let data = cache.blocks[pos / 4].data();
+                    let ks = data.k_row(layer, pos % 4, &mut scratch).to_vec();
+                    let vs = data.v_row(layer, pos % 4, &mut scratch).to_vec();
+                    oracle.append_row(layer, pos, &ks, &vs).unwrap();
+                }
+                cache.complete_position(pos as u32, pos);
+                oracle.complete_position(pos as u32, pos);
+            }
+            let q: Vec<f32> = rand_row(&mut rng, d);
+            for prec in [
+                AttentionPrecision::reference(),
+                AttentionPrecision::lamp(4, 0.05, SoftmaxRule::Strict),
+            ] {
+                let (mut sa, mut sb) = (Vec::new(), Vec::new());
+                let (mut ga, mut gb) = (Vec::new(), Vec::new());
+                let mut oa = vec![0.0f32; hd];
+                let mut ob = vec![0.0f32; hd];
+                let na = lamp_attention_row_kv(
+                    &q[..hd], &cache, 1, 0, n, scale, prec, 7, &mut sa, &mut ga, &mut oa,
+                );
+                let nb = lamp_attention_row_kv(
+                    &q[..hd], &oracle, 1, 0, n, scale, prec, 7, &mut sb, &mut gb, &mut ob,
+                );
+                assert_eq!(na, nb, "{fmt:?}");
+                for (a, b) in oa.iter().zip(&ob) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{fmt:?} fused != dequantized");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_root_distinguishes_seed_and_plan() {
+        let r = PrecisionPlan::reference();
+        let w = PrecisionPlan::whole_model(AttentionPrecision::lamp(
+            3,
+            0.1,
+            SoftmaxRule::Strict,
+        ));
+        assert_ne!(chain_root(1, &r), chain_root(2, &r));
+        assert_ne!(chain_root(1, &r), chain_root(1, &w));
+        assert_eq!(chain_root(1, &w), chain_root(1, &w));
+    }
+
+    #[test]
+    fn options_validate() {
+        let cfg = nano();
+        assert!(KvCacheOptions::private(&cfg).validate().is_ok());
+        assert!(KvCacheOptions::serving(&cfg, WeightFormat::Bf16, 4)
+            .validate()
+            .is_ok());
+        let mut bad = KvCacheOptions::private(&cfg);
+        bad.block_size = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = KvCacheOptions::private(&cfg);
+        bad.capacity_blocks = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = KvCacheOptions::private(&cfg);
+        bad.repair_tau = f32::NAN;
+        assert!(bad.validate().is_err());
+        let mut bad = KvCacheOptions::private(&cfg);
+        bad.format = WeightFormat::PsRounded { mu: 0 };
+        assert!(bad.validate().is_err());
+        // tau = 0 pins bitwise-exact storage (valid, documented).
+        assert!(KvCacheOptions::private(&cfg).with_repair_tau(0.0).validate().is_ok());
+    }
+}

@@ -36,6 +36,7 @@ pub mod attention;
 pub mod config;
 pub mod forward;
 pub mod kvcache;
+pub mod kvstore;
 pub mod layernorm;
 pub mod loss;
 pub mod mlp;
@@ -47,6 +48,9 @@ pub use attention::{AttentionPrecision, LampStats, SiteStats};
 pub use config::ModelConfig;
 pub use forward::{forward, forward_with, ForwardOutput, ForwardScratch};
 pub use kvcache::DecodeSession;
-pub use plan::{PrecisionPlan, SitePrecision, WeightPrecision};
-pub use sampler::{generate, generate_reforward, generate_with_stats, Decode};
+pub use kvstore::{KvBlockPool, KvCacheOptions, KvPoolStats, PagedKvCache};
+pub use plan::{KvPrecision, PrecisionPlan, SitePrecision, WeightPrecision};
+pub use sampler::{
+    generate, generate_reforward, generate_with_session, generate_with_stats, Decode,
+};
 pub use weights::Weights;

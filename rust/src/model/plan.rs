@@ -103,6 +103,15 @@ impl WeightPrecision {
     }
 }
 
+/// The plan's KV-cache storage requirement — the same `Any`/`Exact(fmt)`
+/// control-plane shape as [`WeightPrecision`], applied to the engine's
+/// paged KV-cache pool ([`crate::model::kvstore`]) instead of its weight
+/// store. Like weight storage, the KV format is an engine-level property
+/// (one pool, one slab format), so the plan carries a requirement checked
+/// at the front door (`Engine::validate_policy`, `DecodeSession`), not a
+/// per-request conversion.
+pub type KvPrecision = WeightPrecision;
+
 /// Per-composition-site precision configuration for one forward pass.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PrecisionPlan {
@@ -116,6 +125,8 @@ pub struct PrecisionPlan {
     pub sampler: SitePrecision,
     /// Weight-storage requirement ([`WeightPrecision::Any`] by default).
     pub weights: WeightPrecision,
+    /// KV-cache storage requirement ([`KvPrecision::Any`] by default).
+    pub kv: KvPrecision,
 }
 
 impl PrecisionPlan {
@@ -128,6 +139,7 @@ impl PrecisionPlan {
             norm: SitePrecision::reference(),
             sampler: SitePrecision::reference(),
             weights: WeightPrecision::Any,
+            kv: KvPrecision::Any,
         }
     }
 
@@ -145,12 +157,19 @@ impl PrecisionPlan {
             norm: site,
             sampler: site,
             weights: WeightPrecision::Any,
+            kv: KvPrecision::Any,
         }
     }
 
     /// Replace the weight-storage requirement.
     pub fn with_weights(mut self, weights: WeightPrecision) -> Self {
         self.weights = weights;
+        self
+    }
+
+    /// Replace the KV-cache storage requirement.
+    pub fn with_kv(mut self, kv: KvPrecision) -> Self {
+        self.kv = kv;
         self
     }
 
@@ -208,7 +227,8 @@ impl PrecisionPlan {
                 )));
             }
         }
-        self.weights.validate()
+        self.weights.validate()?;
+        self.kv.validate()
     }
 }
 
@@ -562,6 +582,21 @@ mod tests {
         assert!(WeightPrecision::Any.accepts(WeightFormat::Bf16));
         assert!(WeightPrecision::Exact(WeightFormat::Bf16).accepts(WeightFormat::Bf16));
         assert!(!WeightPrecision::Exact(WeightFormat::Bf16).accepts(WeightFormat::F32));
+    }
+
+    #[test]
+    fn plan_validates_kv_precision_and_default_is_any() {
+        assert_eq!(PrecisionPlan::reference().kv, KvPrecision::Any);
+        let p: PrecisionPlan = SitePrecision::uniform(4).into();
+        assert_eq!(p.kv, KvPrecision::Any, "the From shim stays Any");
+        let good =
+            PrecisionPlan::reference().with_kv(KvPrecision::Exact(WeightFormat::Bf16));
+        good.validate().unwrap();
+        assert!(good.kv.accepts(WeightFormat::Bf16));
+        assert!(!good.kv.accepts(WeightFormat::F32));
+        let bad = PrecisionPlan::reference()
+            .with_kv(KvPrecision::Exact(WeightFormat::PsRounded { mu: 77 }));
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -40,12 +40,55 @@ impl Decode {
     }
 }
 
+/// Drive a *fresh* [`DecodeSession`] through prompt prefill and
+/// `new_tokens` sampled continuation steps — the one decode loop.
+/// [`generate`]/[`generate_with_stats`], `NativeEngine::generate`, the
+/// CLI, and the benches all ride on it, so the "bit-identical to solo
+/// generate" contract has a single definition site; callers that need a
+/// non-default session (a shared/quantized [`KvBlockPool`] via
+/// `DecodeSession::with_pool`) construct it themselves and pass it here.
+/// The sampling stream is `Rng::new(session.seed())`, exactly as the
+/// continuous-batching scheduler reproduces it.
+///
+/// [`KvBlockPool`]: super::kvstore::KvBlockPool
+pub fn generate_with_session(
+    session: &mut DecodeSession,
+    prompt: &[u32],
+    new_tokens: usize,
+    decode: Decode,
+) -> Result<(Vec<u32>, LampStats)> {
+    if prompt.is_empty() {
+        return Err(Error::shape("empty prompt".to_string()));
+    }
+    if !session.is_empty() {
+        return Err(Error::invariant(
+            "generate_with_session needs a fresh session".to_string(),
+        ));
+    }
+    let cfg = session.config();
+    let seq = cfg.seq;
+    let mut tokens = prompt.to_vec();
+    if tokens.len() >= seq || new_tokens == 0 {
+        return Ok((tokens, LampStats::default()));
+    }
+    let mut rng = Rng::new(session.seed());
+    session.prefill(prompt)?;
+    for _ in 0..new_tokens {
+        let next = decode.pick(session.logits(), &mut rng)?;
+        tokens.push(next);
+        if tokens.len() >= seq {
+            break;
+        }
+        session.decode_step(next)?;
+    }
+    let stats = session.stats().clone();
+    Ok((tokens, stats))
+}
+
 /// Generate `new_tokens` continuation tokens for `prompt` through a
-/// KV-cache [`DecodeSession`], returning the session's full per-site
-/// [`LampStats`] (each causal product counted exactly once). This is the
-/// one decode loop — [`generate`], the CLI, and the benches all ride on
-/// it, so the "bit-identical to solo generate" contract has a single
-/// definition site.
+/// KV-cache [`DecodeSession`] on a private f32 block pool, returning the
+/// session's full per-site [`LampStats`] (each causal product counted
+/// exactly once). Thin wrapper over [`generate_with_session`].
 pub fn generate_with_stats(
     weights: &Weights,
     prompt: &[u32],
@@ -54,9 +97,6 @@ pub fn generate_with_stats(
     decode: Decode,
     seed: u64,
 ) -> Result<(Vec<u32>, LampStats)> {
-    if prompt.is_empty() {
-        return Err(Error::shape("empty prompt".to_string()));
-    }
     let plan: PrecisionPlan = prec.into();
     // Same storage front door as `forward`: a plan that demands a specific
     // weight format is rejected before any decoding happens.
@@ -67,24 +107,8 @@ pub fn generate_with_stats(
             weights.weight_format().label()
         )));
     }
-    let cfg = &weights.config;
-    let mut tokens = prompt.to_vec();
-    if tokens.len() >= cfg.seq || new_tokens == 0 {
-        return Ok((tokens, LampStats::default()));
-    }
-    let mut rng = Rng::new(seed);
     let mut session = DecodeSession::new(weights, plan, seed);
-    session.prefill(prompt)?;
-    for _ in 0..new_tokens {
-        let next = decode.pick(session.logits(), &mut rng)?;
-        tokens.push(next);
-        if tokens.len() >= cfg.seq {
-            break;
-        }
-        session.decode_step(next)?;
-    }
-    let stats = session.stats().clone();
-    Ok((tokens, stats))
+    generate_with_session(&mut session, prompt, new_tokens, decode)
 }
 
 /// Generate `new_tokens` continuation tokens for `prompt` through a

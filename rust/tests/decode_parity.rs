@@ -171,3 +171,120 @@ fn decode_does_asymptotically_less_work() {
         .sum();
     assert!(session.stats().causal_total * 4 < reforward_products);
 }
+
+#[test]
+fn paged_f32_cache_bit_identical_to_contiguous_for_every_plan() {
+    // The PR-5 acceptance pin: f32-backed paging (any block size, shared
+    // pool, sharing on) reproduces the pre-refactor contiguous cache —
+    // whose semantics the full forward pass retains — bit for bit under
+    // every PrecisionPlan, including whole-model Random-rule plans.
+    use lamp::model::{
+        forward, KvBlockPool, KvCacheOptions, PrecisionPlan, SitePrecision, Weights,
+    };
+    use lamp::linalg::WeightFormat;
+    let mut rng = Rng::new(51);
+    let w = Weights::random(&ModelConfig::nano(), &mut rng).unwrap();
+    let cfg = &w.config;
+    let tokens: Vec<u32> = (0..17).map(|i| (i * 13 + 4) % 128).collect();
+    let plans: Vec<PrecisionPlan> = vec![
+        PrecisionPlan::reference(),
+        AttentionPrecision::uniform(3).into(),
+        AttentionPrecision::lamp(3, 0.05, SoftmaxRule::Random).into(),
+        PrecisionPlan::whole_model(SitePrecision::lamp(3, 0.1, SoftmaxRule::Strict)),
+        PrecisionPlan::whole_model(SitePrecision::lamp(4, 0.1, SoftmaxRule::Random)),
+    ];
+    for block_size in [1usize, 3, 5, 16] {
+        let pool = KvBlockPool::new(
+            cfg,
+            KvCacheOptions {
+                format: WeightFormat::F32,
+                repair_tau: f32::INFINITY,
+                block_size,
+                capacity_blocks: cfg.seq.div_ceil(block_size) * 2,
+                sharing: true,
+            },
+        )
+        .unwrap();
+        for &plan in &plans {
+            let mut session = DecodeSession::with_pool(&w, plan, 9, pool.clone());
+            for (i, &t) in tokens.iter().enumerate() {
+                session.decode_step(t).unwrap();
+                let full = forward(&w, &tokens[..=i], plan, 9).unwrap();
+                for (c, (a, b)) in
+                    session.logits().iter().zip(full.logits.row(i)).enumerate()
+                {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "bs={block_size} step {i} col {c} diverges under {plan:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_kv_repair_ladder_tau_zero_exact_uniform_bounded() {
+    // The LAMP-repaired quantized KV contract: repair_tau = 0 pins every
+    // inexact cached row at f32, making decode bit-identical to the f32
+    // cache; tau = inf (uniform quantized) deviates; a finite tau pins a
+    // fraction of rows and lands at least as close as uniform.
+    use lamp::model::{KvBlockPool, KvCacheOptions, Weights};
+    use lamp::linalg::WeightFormat;
+    let mut rng = Rng::new(52);
+    let w = Weights::random(&ModelConfig::nano(), &mut rng).unwrap();
+    let cfg = &w.config;
+    let tokens: Vec<u32> = (0..20).map(|i| (i * 11 + 6) % 128).collect();
+    let prec = AttentionPrecision::reference();
+
+    let mut oracle = DecodeSession::new(&w, prec, 3);
+    oracle.prefill(&tokens).unwrap();
+    let exact: Vec<f32> = oracle.logits().to_vec();
+
+    for fmt in [WeightFormat::Bf16, WeightFormat::PsRounded { mu: 3 }] {
+        let run = |tau: f32| {
+            let pool = KvBlockPool::new(
+                cfg,
+                KvCacheOptions {
+                    format: fmt,
+                    repair_tau: tau,
+                    block_size: 4,
+                    capacity_blocks: cfg.seq.div_ceil(4),
+                    sharing: false,
+                },
+            )
+            .unwrap();
+            let mut s = DecodeSession::with_pool(&w, prec, 3, pool);
+            s.prefill(&tokens).unwrap();
+            let pinned = s.kv().pinned_rate();
+            (s.logits().to_vec(), pinned)
+        };
+        // tau = 0: every inexact row pinned — bitwise equal to f32 KV.
+        let (repaired_all, rate_all) = run(0.0);
+        assert!(rate_all > 0.9, "{fmt:?}: tau=0 must pin ~every row, got {rate_all}");
+        for (c, (a, b)) in repaired_all.iter().zip(&exact).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{fmt:?} col {c}: tau=0 repair must be exact"
+            );
+        }
+        // tau = inf: uniform quantized KV must actually perturb logits.
+        let (uniform, rate_uni) = run(f32::INFINITY);
+        assert_eq!(rate_uni, 0.0);
+        assert!(
+            uniform.iter().zip(&exact).any(|(a, b)| a.to_bits() != b.to_bits()),
+            "{fmt:?}: uniform quantized KV left logits bit-identical"
+        );
+        let mean_err = |v: &[f32]| -> f64 {
+            v.iter()
+                .zip(&exact)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+                / exact.len() as f64
+        };
+        assert!(mean_err(&uniform) > 0.0);
+        assert_eq!(mean_err(&repaired_all), 0.0);
+    }
+}

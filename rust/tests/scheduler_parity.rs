@@ -214,3 +214,100 @@ fn arrival_order_cannot_change_any_stream() {
         }
     }
 }
+
+#[test]
+fn prefix_sharing_streams_bit_identical_to_unshared() {
+    // PR-5 satellite pin: sessions that adopt a shared prompt prefix from
+    // the pool's prefix index stream exactly the tokens an unshared (or
+    // solo) run produces — for deterministic and Random rules — and the
+    // pool actually records adoptions.
+    use lamp::coordinator::{KvCacheOptions, WeightFormat};
+    use lamp::model::{ModelConfig as MC, Weights as W};
+    let cfg = MC::nano();
+    let mut wrng = Rng::new(91);
+    let w = W::random(&cfg, &mut wrng).unwrap();
+    let solo_engine = NativeEngine::new(w.clone());
+
+    let mut opts = KvCacheOptions::serving(&cfg, WeightFormat::F32, 8);
+    opts.block_size = 4; // small blocks so short prompts publish
+    let shared_engine = NativeEngine::new(w).with_kv_cache(opts).unwrap();
+
+    // Four requests: a common 9-token prompt prefix (two full blocks),
+    // distinct suffixes, same policy AND same seed — the sharing key.
+    let policy = PrecisionPolicy::lamp(3, 0.05, Rule::Random);
+    let prefix: Vec<u32> = (0..9).map(|i| (i * 5 + 2) % 128).collect();
+    let mut reqs = Vec::new();
+    for id in 0..4u64 {
+        let mut prompt = prefix.clone();
+        prompt.push((id as u32 * 17 + 1) % 128);
+        reqs.push(GenerateRequest::new(id, prompt, 6, policy).with_seed(7));
+    }
+
+    // Solo oracle (private contiguous-equivalent caches, no sharing).
+    let mut solos = Vec::new();
+    for r in &reqs {
+        solos.push(
+            solo_engine
+                .generate(&r.prompt, r.max_new_tokens, &r.policy, r.decode, r.seed)
+                .unwrap()
+                .0,
+        );
+    }
+
+    // Staggered admission on the sharing engine: the first request
+    // publishes the prefix blocks, the later ones adopt them.
+    let mut sched = Scheduler::new(
+        &shared_engine,
+        SchedulerOptions { max_sessions: 2, prefill_chunk: 3, pool: None },
+    );
+    let mut responses = Vec::new();
+    let mut queue: Vec<GenerateRequest> = reqs.clone();
+    sched.admit(queue.remove(0));
+    let mut guard = 0usize;
+    loop {
+        guard += 1;
+        assert!(guard < 100_000, "scheduler made no progress");
+        for ev in sched.step() {
+            if let GenerateEvent::Finished(r) = ev {
+                // Admit the next request only after one fully retires, so
+                // its blocks are published before the adopter arrives.
+                if let Some(next) = (!queue.is_empty()).then(|| queue.remove(0)) {
+                    sched.admit(next);
+                }
+                responses.push(r);
+            }
+        }
+        if queue.is_empty() && sched.is_idle() {
+            break;
+        }
+    }
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), 4);
+    for (r, solo) in responses.iter().zip(&solos) {
+        assert_eq!(
+            &r.tokens, solo,
+            "id {}: prefix sharing changed the stream",
+            r.id
+        );
+    }
+    let m = sched.metrics();
+    assert!(
+        m.prefix_share_hits >= 1,
+        "later sessions must adopt the published prefix (hits={})",
+        m.prefix_share_hits
+    );
+    assert!(m.prefix_share_rate > 0.0);
+    assert_eq!(m.kv_format, "f32");
+    // Adopted sessions skip the shared prefix's products: total evaluated
+    // products across the shared run are strictly fewer than 4 solo runs.
+    let solo_products: usize = solos
+        .iter()
+        .map(|toks| shared_engine.config().causal_products(toks.len()))
+        .sum();
+    let shared_products: usize =
+        responses.iter().map(|r| r.stats.causal_total).sum();
+    assert!(
+        shared_products < solo_products,
+        "sharing saved nothing: {shared_products} vs {solo_products}"
+    );
+}
