@@ -1,0 +1,189 @@
+//! Fault-tolerant serving plane — the PR-6 measurement.
+//!
+//! Three sections, recorded into `BENCH_PR6.json` (override with
+//! `LAMP_BENCH_OUT`):
+//!
+//! * **fault-free baseline** — scheduler throughput and TTFT p95 with no
+//!   injector in the path, the zero-overhead reference for the two
+//!   faulted sections.
+//! * **retry under injected faults** — the same workload behind a
+//!   deterministic `FaultInjector` (transient step errors + latency
+//!   spikes): throughput, TTFT p95, retries taken, and the overhead
+//!   ratio against the baseline. Every stream still completes (the
+//!   chaos suite pins bit-exactness; this bench prices it).
+//! * **recovery after a pool-exhaustion burst** — a burst of sessions
+//!   against a ~1.5-session KV pool: wall-clock to fully drain through
+//!   preempt/recompute cycles, plus the preemption count.
+//!
+//! `--smoke` (the CI bench-smoke job) runs one short sample per point so
+//! the producer is exercised on every push; smoke numbers are not
+//! comparable.
+//!
+//! ```bash
+//! cargo bench --bench fault_recovery [-- --smoke]
+//! ```
+
+use lamp::benchkit::{record_bench_section, Bencher, JsonObj};
+use lamp::coordinator::{
+    DecodeMetrics, Engine, FaultInjector, FaultPlan, GenerateRequest, KvCacheOptions,
+    NativeEngine, PrecisionPolicy, RetryPolicy, Rule, Scheduler, SchedulerOptions,
+};
+use lamp::linalg::WeightFormat;
+use lamp::model::{ModelConfig, Weights};
+use lamp::util::Rng;
+use std::time::{Duration, Instant};
+
+fn bench_out() -> std::path::PathBuf {
+    std::env::var("LAMP_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_PR6.json"))
+}
+
+fn workload(n: usize, cfg: &ModelConfig, max_new: usize) -> Vec<GenerateRequest> {
+    let policy = PrecisionPolicy::lamp(4, 0.1, Rule::Relaxed);
+    (0..n as u64)
+        .map(|id| {
+            let prompt: Vec<u32> = (0..16u32)
+                .map(|i| (i * 37 + id as u32 * 11 + 5) % cfg.vocab as u32)
+                .collect();
+            GenerateRequest::new(id, prompt, max_new, policy).with_seed(id)
+        })
+        .collect()
+}
+
+/// Drain `reqs` through a fresh scheduler; returns lifetime metrics and
+/// the wall-clock seconds the drain took.
+fn drive(
+    engine: &dyn Engine,
+    reqs: &[GenerateRequest],
+    opts: &SchedulerOptions,
+) -> (DecodeMetrics, f64) {
+    let mut sched = Scheduler::new(engine, opts.clone());
+    for r in reqs {
+        sched.admit(r.clone());
+    }
+    let t0 = Instant::now();
+    let done = sched.run_to_completion().expect("drive");
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(done.len(), reqs.len(), "every request must complete");
+    (sched.metrics(), wall)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = ModelConfig {
+        name: "bench-faults".into(),
+        vocab: 256,
+        seq: if smoke { 48 } else { 128 },
+        layers: 4,
+        heads: 4,
+        d_model: 128,
+        batch: 1,
+    };
+    cfg.validate().expect("bench config");
+    let mut rng = Rng::new(61);
+    let base = Weights::random(&cfg, &mut rng).unwrap();
+    let n_requests = if smoke { 4 } else { 16 };
+    let max_new = if smoke { 12 } else { 32 };
+    let reqs = workload(n_requests, &cfg, max_new);
+    let b = Bencher {
+        warmup_iters: if smoke { 0 } else { 1 },
+        sample_iters: if smoke { 1 } else { 5 },
+        max_total: Duration::from_secs(120),
+    };
+    let retry = RetryPolicy {
+        max_retries: 16,
+        backoff: Duration::from_micros(50),
+        jitter: 0.25,
+    };
+    let opts = SchedulerOptions {
+        max_sessions: 4,
+        prefill_chunk: 8,
+        retry,
+        ..Default::default()
+    };
+
+    // --- Section 1: fault-free baseline. ---
+    let ample = KvCacheOptions::serving(&cfg, WeightFormat::F32, 4);
+    let engine = NativeEngine::new(base.clone()).with_kv_cache(ample.clone()).unwrap();
+    let stats = b.run("serve, no faults", || drive(&engine, &reqs, &opts));
+    println!("{}", stats.summary());
+    let (m, _) = drive(&engine, &reqs, &opts);
+    let base_wall = stats.median().as_secs_f64().max(1e-12);
+    let base_tok_s = m.generated_tokens as f64 / base_wall;
+    println!(
+        "baseline: {base_tok_s:.1} tok/s, ttft p95 {:.2}ms",
+        m.ttft_p95_s * 1e3
+    );
+
+    // --- Section 2: the same workload under injected faults. ---
+    let plan = FaultPlan::quiet(0xF417)
+        .with_step_errors(0.05)
+        .with_delay(0.02, Duration::from_micros(200));
+    let faulted_engine = NativeEngine::new(base.clone()).with_kv_cache(ample).unwrap();
+    let inj = FaultInjector::new(faulted_engine, plan).unwrap();
+    let stats = b.run("serve, transient faults + retry", || drive(&inj, &reqs, &opts));
+    println!("{}", stats.summary());
+    let (fm, _) = drive(&inj, &reqs, &opts);
+    let fault_wall = stats.median().as_secs_f64().max(1e-12);
+    let fault_tok_s = fm.generated_tokens as f64 / fault_wall;
+    let overhead = fault_wall / base_wall;
+    println!(
+        "faulted: {fault_tok_s:.1} tok/s ({overhead:.2}x baseline wall), \
+         ttft p95 {:.2}ms, {} retries, {} faults injected",
+        fm.ttft_p95_s * 1e3,
+        fm.retries,
+        fm.faults_injected
+    );
+
+    // --- Section 3: recovery from a pool-exhaustion burst. ---
+    // A ~1.5-session pool under a 2x-slot burst: progress happens only
+    // through preempt/recompute cycles; the drain wall-clock is the
+    // recovery latency.
+    let mut tiny = KvCacheOptions::serving(&cfg, WeightFormat::F32, 1);
+    // ~1.5x the positions one burst session needs (prompt + continuation
+    // + the final fed token), so any two co-tenants exhaust the pool.
+    let per_session = 16 + max_new + 1;
+    tiny.capacity_blocks = (per_session * 3 / 2).div_ceil(tiny.block_size);
+    tiny.sharing = false;
+    let burst_engine = NativeEngine::new(base).with_kv_cache(tiny).unwrap();
+    let burst = workload(2 * opts.max_sessions, &cfg, max_new);
+    let stats = b.run("serve, pool-exhaustion burst", || {
+        drive(&burst_engine, &burst, &opts)
+    });
+    println!("{}", stats.summary());
+    let (bm, _) = drive(&burst_engine, &burst, &opts);
+    let burst_wall = stats.median().as_secs_f64().max(1e-12);
+    let burst_tok_s = bm.generated_tokens as f64 / burst_wall;
+    println!(
+        "burst recovery: {burst_wall:.3}s to drain, {burst_tok_s:.1} tok/s, \
+         {} preemptions, ttft p95 {:.2}ms",
+        bm.preemptions,
+        bm.ttft_p95_s * 1e3
+    );
+
+    let obj = JsonObj::new()
+        .str("model", "4 layers, 4 heads, d=128, vocab=256")
+        .int("seq", cfg.seq as u64)
+        .int("requests", n_requests as u64)
+        .int("generated_per_request", max_new as u64)
+        .num("baseline_tok_s", base_tok_s)
+        .num("baseline_ttft_p95_s", m.ttft_p95_s)
+        .num("faulted_tok_s", fault_tok_s)
+        .num("faulted_ttft_p95_s", fm.ttft_p95_s)
+        .num("fault_overhead_wall", overhead)
+        .int("faulted_retries", fm.retries as u64)
+        .int("faults_injected", fm.faults_injected as u64)
+        .num("burst_recovery_wall_s", burst_wall)
+        .num("burst_tok_s", burst_tok_s)
+        .int("burst_preemptions", bm.preemptions as u64)
+        // Smoke records are single-sample and not comparable; mark them so
+        // downstream comparisons can't mistake them for real numbers.
+        .int("smoke", smoke as u64);
+    let path = bench_out();
+    record_bench_section(&path, "fault_recovery", &obj).expect("write bench record");
+    println!("recorded -> {}", path.display());
+    if smoke {
+        println!("smoke mode: timings above are single-sample and not comparable");
+    }
+}

@@ -92,6 +92,7 @@ fn main() {
         max_sessions: (2 * cores).max(4),
         prefill_chunk: 8,
         pool: Some(Arc::clone(&pool)),
+        ..Default::default()
     };
 
     // --- Parity guard: the scheduler must reproduce solo decode exactly. ---
@@ -114,7 +115,7 @@ fn main() {
         for r in &reqs {
             sched.admit(r.clone());
         }
-        let mut out = sched.run_to_completion();
+        let mut out = sched.run_to_completion().unwrap();
         out.sort_by_key(|r| r.id);
         assert_eq!(out.len(), reqs.len(), "lost responses");
         for (resp, want) in out.iter().zip(&solo) {
@@ -143,7 +144,7 @@ fn main() {
             for r in &reqs {
                 sched.admit(r.clone());
             }
-            let out = sched.run_to_completion();
+            let out = sched.run_to_completion().unwrap();
             assert_eq!(out.len(), reqs.len());
             last_metrics = Some(sched.metrics());
         });

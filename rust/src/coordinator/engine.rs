@@ -115,6 +115,14 @@ pub trait Engine {
         None
     }
 
+    /// Fault-injection counters when this engine is a
+    /// [`crate::coordinator::faults::FaultInjector`] decorator; `None`
+    /// (the default) on real backends. Lets the scheduler and server
+    /// surface injected-fault totals without downcasting.
+    fn fault_stats(&self) -> Option<super::faults::FaultStats> {
+        None
+    }
+
     /// Human-readable backend name.
     fn backend(&self) -> &'static str;
 }

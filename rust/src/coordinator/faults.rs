@@ -1,0 +1,466 @@
+//! Deterministic fault injection for the serving plane.
+//!
+//! Chaos testing in the same spirit as the bit-exactness harness: every
+//! fault is a *pure function of a seed*, never of wall-clock time or
+//! thread interleaving, so any failure a chaos run surfaces is replayable
+//! from its [`FaultPlan`] alone.
+//!
+//! * [`FaultPlan`] — a seeded schedule of fault rates: transient
+//!   decode-step errors, `Error::Resource` spikes, artificial per-step
+//!   latency, permanent session poisoning, and tensor-load I/O failures
+//!   at session open.
+//! * [`FaultInjector`] — an [`Engine`] decorator that installs the plan
+//!   as a [`StepFaults`] hook on every decode session it opens and
+//!   injects open-time I/O failures itself. All other engine surface is
+//!   delegated unchanged, so the scheduler and server cannot tell they
+//!   are running over chaos — which is the point.
+//! * [`FaultStats`] — counters of everything injected, surfaced through
+//!   [`Engine::fault_stats`] into `DecodeMetrics`/`ServerStats`.
+//!
+//! Fault draws are keyed by `(plan.seed, session_seed, position,
+//! attempt)`. The `attempt` key (consecutive injected failures already
+//! served at that position) makes transient faults clear on retry while
+//! still allowing schedules that exhaust a retry budget.
+
+use super::engine::{Engine, EngineOutput};
+use super::policy::PrecisionPolicy;
+use crate::error::{Error, Result};
+use crate::linalg::WeightFormat;
+use crate::model::{
+    DecodeSession, KvBlockPool, ModelConfig, StepFaultVerdict, StepFaults,
+};
+use crate::util::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A seeded, deterministic chaos schedule. All rates are per-event
+/// probabilities in `[0, 1]`; a rate of 0 disables that fault class.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Root seed — two runs with the same plan and workload inject the
+    /// same faults at the same `(session, position)` sites.
+    pub seed: u64,
+    /// Per-step probability of a retryable `Error::Transient` failure.
+    pub step_error_rate: f64,
+    /// Per-step probability of an injected `Error::Resource` spike
+    /// (exercises the preempt/retry machinery without a full pool).
+    pub resource_spike_rate: f64,
+    /// Per-step probability of permanently poisoning the session — a
+    /// non-retryable failure that terminates exactly its own request.
+    pub poison_rate: f64,
+    /// Probability that opening a decode session fails with a
+    /// (non-retryable) tensor-load I/O error.
+    pub io_error_rate: f64,
+    /// Per-step probability of an artificial latency of [`Self::delay`].
+    pub delay_rate: f64,
+    /// The injected per-step latency when a delay draw fires.
+    pub delay: Duration,
+}
+
+impl FaultPlan {
+    /// All-zero rates: the injector becomes a transparent pass-through.
+    pub fn quiet(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            step_error_rate: 0.0,
+            resource_spike_rate: 0.0,
+            poison_rate: 0.0,
+            io_error_rate: 0.0,
+            delay_rate: 0.0,
+            delay: Duration::ZERO,
+        }
+    }
+
+    /// A moderate all-fault-classes schedule for chaos suites: frequent
+    /// transient errors and delays, occasional resource spikes, rare
+    /// terminal faults (poison / open-time I/O).
+    pub fn chaos(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            step_error_rate: 0.05,
+            resource_spike_rate: 0.02,
+            poison_rate: 0.005,
+            io_error_rate: 0.03,
+            delay_rate: 0.05,
+            delay: Duration::from_micros(200),
+        }
+    }
+
+    pub fn with_step_errors(mut self, rate: f64) -> Self {
+        self.step_error_rate = rate;
+        self
+    }
+    pub fn with_resource_spikes(mut self, rate: f64) -> Self {
+        self.resource_spike_rate = rate;
+        self
+    }
+    pub fn with_poison(mut self, rate: f64) -> Self {
+        self.poison_rate = rate;
+        self
+    }
+    pub fn with_io_errors(mut self, rate: f64) -> Self {
+        self.io_error_rate = rate;
+        self
+    }
+    pub fn with_delay(mut self, rate: f64, delay: Duration) -> Self {
+        self.delay_rate = rate;
+        self.delay = delay;
+        self
+    }
+
+    /// Rates must be probabilities.
+    pub fn validate(&self) -> Result<()> {
+        for (name, r) in [
+            ("step_error_rate", self.step_error_rate),
+            ("resource_spike_rate", self.resource_spike_rate),
+            ("poison_rate", self.poison_rate),
+            ("io_error_rate", self.io_error_rate),
+            ("delay_rate", self.delay_rate),
+        ] {
+            if !(0.0..=1.0).contains(&r) || r.is_nan() {
+                return Err(Error::config(format!(
+                    "fault plan: {name} = {r} is not a probability"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Injection counters (monotonic, shared between the injector and the
+/// hooks it installed on live sessions).
+#[derive(Debug, Default)]
+struct FaultCounters {
+    step_errors: AtomicUsize,
+    resource_spikes: AtomicUsize,
+    poisons: AtomicUsize,
+    io_errors: AtomicUsize,
+    delays: AtomicUsize,
+}
+
+/// Snapshot of everything a [`FaultInjector`] has injected so far.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Retryable `Error::Transient` decode-step failures injected.
+    pub step_errors: usize,
+    /// `Error::Resource` spikes injected.
+    pub resource_spikes: usize,
+    /// Sessions permanently poisoned.
+    pub poisons: usize,
+    /// Session opens failed with an I/O error.
+    pub io_errors: usize,
+    /// Steps artificially delayed.
+    pub delays: usize,
+}
+
+impl FaultStats {
+    /// Total faults injected (delays included — they perturb timing,
+    /// which is what deadline tests care about).
+    pub fn total(&self) -> usize {
+        self.step_errors + self.resource_spikes + self.poisons + self.io_errors + self.delays
+    }
+}
+
+/// Derive the per-check RNG for one `(session, position, attempt)` site.
+/// Distinct keys land on distinct streams; identical keys replay exactly.
+fn site_rng(plan_seed: u64, domain: u64, session_seed: u64, pos: u64, attempt: u64) -> Rng {
+    let mut mix = Rng::new(plan_seed ^ domain.rotate_left(48));
+    let a = mix.fork(session_seed).next_u64();
+    let b = mix.fork(pos.wrapping_add(0x9e37_79b9_7f4a_7c15)).next_u64();
+    let c = mix.fork(attempt.wrapping_add(0x6a09_e667_f3bc_c909)).next_u64();
+    Rng::new(a ^ b.rotate_left(21) ^ c.rotate_left(42))
+}
+
+const DOMAIN_STEP: u64 = 0x5354_4550; // "STEP"
+const DOMAIN_OPEN: u64 = 0x4f50_454e; // "OPEN"
+
+/// The seeded [`StepFaults`] hook a [`FaultInjector`] installs on every
+/// session it opens.
+struct SeededFaults {
+    plan: FaultPlan,
+    counters: Arc<FaultCounters>,
+}
+
+impl StepFaults for SeededFaults {
+    fn check(&self, session_seed: u64, pos: usize, attempt: u32) -> StepFaultVerdict {
+        let p = &self.plan;
+        let mut rng =
+            site_rng(p.seed, DOMAIN_STEP, session_seed, pos as u64, attempt as u64);
+        // Fixed draw order keeps the schedule stable when individual
+        // rates change between runs of the same seed.
+        let (poison, resource, step, delay) =
+            (rng.f64(), rng.f64(), rng.f64(), rng.f64());
+        if poison < p.poison_rate {
+            self.counters.poisons.fetch_add(1, Ordering::Relaxed);
+            return StepFaultVerdict::Poison(format!(
+                "injected fault (seed {}, pos {pos})",
+                p.seed
+            ));
+        }
+        if resource < p.resource_spike_rate {
+            self.counters.resource_spikes.fetch_add(1, Ordering::Relaxed);
+            return StepFaultVerdict::Fail(Error::resource(format!(
+                "injected resource spike (seed {}, pos {pos}, attempt {attempt})",
+                p.seed
+            )));
+        }
+        if step < p.step_error_rate {
+            self.counters.step_errors.fetch_add(1, Ordering::Relaxed);
+            return StepFaultVerdict::Fail(Error::transient(format!(
+                "injected decode-step fault (seed {}, pos {pos}, attempt {attempt})",
+                p.seed
+            )));
+        }
+        if delay < p.delay_rate {
+            self.counters.delays.fetch_add(1, Ordering::Relaxed);
+            return StepFaultVerdict::Delay(p.delay);
+        }
+        StepFaultVerdict::Proceed
+    }
+}
+
+/// An [`Engine`] decorator that injects the plan's faults into every
+/// decode session it opens — and nothing else: `infer`, formats, pools
+/// and policy validation delegate to the inner engine unchanged, so with
+/// a [`FaultPlan::quiet`] plan the wrapped engine is behaviorally
+/// identical to the bare one.
+pub struct FaultInjector<E: Engine> {
+    inner: E,
+    plan: FaultPlan,
+    counters: Arc<FaultCounters>,
+    hook: Arc<SeededFaults>,
+}
+
+impl<E: Engine> FaultInjector<E> {
+    pub fn new(inner: E, plan: FaultPlan) -> Result<Self> {
+        plan.validate()?;
+        let counters = Arc::new(FaultCounters::default());
+        let hook = Arc::new(SeededFaults { plan: plan.clone(), counters: counters.clone() });
+        Ok(FaultInjector { inner, plan, counters, hook })
+    }
+
+    /// The wrapped engine.
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    /// The active chaos schedule.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    fn stats_snapshot(&self) -> FaultStats {
+        FaultStats {
+            step_errors: self.counters.step_errors.load(Ordering::Relaxed),
+            resource_spikes: self.counters.resource_spikes.load(Ordering::Relaxed),
+            poisons: self.counters.poisons.load(Ordering::Relaxed),
+            io_errors: self.counters.io_errors.load(Ordering::Relaxed),
+            delays: self.counters.delays.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl<E: Engine> Engine for FaultInjector<E> {
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn infer(
+        &self,
+        tokens: &[Vec<u32>],
+        policy: &PrecisionPolicy,
+        seed: i32,
+    ) -> Result<EngineOutput> {
+        self.inner.infer(tokens, policy, seed)
+    }
+
+    fn validate_policy(&self, policy: &PrecisionPolicy) -> Result<()> {
+        self.inner.validate_policy(policy)
+    }
+
+    fn decode_precision(&self, policy: &PrecisionPolicy) -> crate::model::PrecisionPlan {
+        self.inner.decode_precision(policy)
+    }
+
+    /// Session opens model tensor loads: an I/O-failure draw (keyed by
+    /// the session seed, so retrying the same request hits the same
+    /// verdict) fails the open with a non-retryable `Error::Io`; a
+    /// successful open gets the plan's step hook installed.
+    fn decode_session(&self, policy: &PrecisionPolicy, seed: u64) -> Result<DecodeSession<'_>> {
+        let mut rng = site_rng(self.plan.seed, DOMAIN_OPEN, seed, 0, 0);
+        if rng.f64() < self.plan.io_error_rate {
+            self.counters.io_errors.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Io(std::io::Error::other(format!(
+                "injected tensor-load failure (seed {}, session {seed})",
+                self.plan.seed
+            ))));
+        }
+        let mut session = self.inner.decode_session(policy, seed)?;
+        session.set_faults(Some(self.hook.clone()));
+        Ok(session)
+    }
+
+    fn weight_format(&self) -> WeightFormat {
+        self.inner.weight_format()
+    }
+
+    fn kv_format(&self) -> WeightFormat {
+        self.inner.kv_format()
+    }
+
+    fn kv_pool(&self) -> Option<Arc<KvBlockPool>> {
+        self.inner.kv_pool()
+    }
+
+    fn fault_stats(&self) -> Option<FaultStats> {
+        Some(self.stats_snapshot())
+    }
+
+    fn backend(&self) -> &'static str {
+        self.inner.backend()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::Rule;
+    use crate::coordinator::NativeEngine;
+    use crate::model::{Decode, ModelConfig, Weights};
+
+    fn engine() -> NativeEngine {
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(11);
+        NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap())
+    }
+
+    #[test]
+    fn quiet_plan_is_transparent() {
+        let policy = PrecisionPolicy::lamp(3, 0.05, Rule::Strict);
+        let bare = engine();
+        let (want, rate) = bare.generate(&[1, 2, 3], 6, &policy, Decode::Greedy, 7).unwrap();
+        let inj = FaultInjector::new(engine(), FaultPlan::quiet(99)).unwrap();
+        let mut session = inj.decode_session(&policy, 7).unwrap();
+        let (got, stats) =
+            crate::model::generate_with_session(&mut session, &[1, 2, 3], 6, Decode::Greedy)
+                .unwrap();
+        assert_eq!(got, want);
+        assert!((stats.rate() - rate).abs() < 1e-12);
+        assert_eq!(inj.fault_stats().unwrap(), FaultStats::default());
+        assert_eq!(inj.backend(), "native");
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_attempt_keyed() {
+        let counters = Arc::new(FaultCounters::default());
+        let hook = SeededFaults {
+            plan: FaultPlan::quiet(42).with_step_errors(0.5),
+            counters: counters.clone(),
+        };
+        // Same key → same verdict, replayed exactly.
+        for _ in 0..3 {
+            let a = format!("{:?}", hook.check(7, 5, 0));
+            let b = format!("{:?}", hook.check(7, 5, 0));
+            assert_eq!(a, b);
+        }
+        // At a 50% rate, 64 positions must see both outcomes.
+        let mut fails = 0;
+        for pos in 0..64 {
+            if matches!(hook.check(9, pos, 0), StepFaultVerdict::Fail(_)) {
+                fails += 1;
+            }
+        }
+        assert!(fails > 8 && fails < 56, "rate wildly off: {fails}/64");
+        // Attempt-keying re-draws: some failing site must clear on retry.
+        let mut cleared = false;
+        for pos in 0..64 {
+            if matches!(hook.check(9, pos, 0), StepFaultVerdict::Fail(_))
+                && matches!(hook.check(9, pos, 1), StepFaultVerdict::Proceed)
+            {
+                cleared = true;
+                break;
+            }
+        }
+        assert!(cleared, "no transient fault cleared on retry across 64 sites");
+    }
+
+    #[test]
+    fn injected_step_fault_is_retryable_and_leaves_state_intact() {
+        let plan = FaultPlan::quiet(3).with_step_errors(0.4);
+        let inj = FaultInjector::new(engine(), plan).unwrap();
+        let policy = PrecisionPolicy::reference();
+        let (want, _) =
+            inj.inner().generate(&[1, 2, 3], 8, &policy, Decode::Greedy, 5).unwrap();
+        let mut session = inj.decode_session(&policy, 5).unwrap();
+        let mut tokens: Vec<u32> = vec![1, 2, 3];
+        let mut fed = 0usize;
+        let mut injected = 0usize;
+        while tokens.len() < want.len() {
+            let t = tokens[fed];
+            match session.decode_step(t) {
+                Ok(()) => {
+                    fed += 1;
+                    if fed == tokens.len() {
+                        let next = crate::model::Decode::Greedy
+                            .pick(session.logits(), &mut Rng::new(0))
+                            .unwrap();
+                        tokens.push(next);
+                    }
+                }
+                Err(e) => {
+                    assert!(e.is_retryable(), "injected fault not retryable: {e}");
+                    injected += 1;
+                    assert!(injected < 10_000, "fault never cleared");
+                }
+            }
+        }
+        assert_eq!(tokens, want, "retried stream diverged from solo decode");
+        assert!(injected > 0, "0.4 step-error rate injected nothing");
+        assert_eq!(inj.fault_stats().unwrap().step_errors, injected);
+    }
+
+    #[test]
+    fn poison_terminates_session_until_reset() {
+        let plan = FaultPlan::quiet(8).with_poison(1.0);
+        let inj = FaultInjector::new(engine(), plan).unwrap();
+        let mut s = inj.decode_session(&PrecisionPolicy::reference(), 1).unwrap();
+        let e = s.decode_step(1).unwrap_err();
+        assert!(e.to_string().contains("poisoned"), "{e}");
+        assert!(!e.is_retryable());
+        // Poisoned state sticks across steps…
+        let e2 = s.decode_step(1).unwrap_err();
+        assert!(e2.to_string().contains("poisoned"));
+        assert_eq!(inj.fault_stats().unwrap().poisons, 1, "poison double-counted");
+        // …and clears on reset (slot recycling) — though the hook stays,
+        // so a re-used slot draws fresh verdicts.
+        s.reset();
+        let e3 = s.decode_step(1).unwrap_err();
+        assert!(e3.to_string().contains("poisoned"), "hook removed by reset");
+    }
+
+    #[test]
+    fn io_failure_at_open_is_deterministic() {
+        let plan = FaultPlan::quiet(17).with_io_errors(0.5);
+        let inj = FaultInjector::new(engine(), plan).unwrap();
+        let policy = PrecisionPolicy::reference();
+        let verdicts: Vec<bool> =
+            (0..32).map(|s| inj.decode_session(&policy, s).is_err()).collect();
+        assert!(verdicts.iter().any(|&v| v), "no open failed at 50%");
+        assert!(verdicts.iter().any(|&v| !v), "every open failed at 50%");
+        // Replay: identical verdict per session seed.
+        for (s, &want) in verdicts.iter().enumerate() {
+            assert_eq!(inj.decode_session(&policy, s as u64).is_err(), want);
+        }
+        let failed = verdicts.iter().filter(|&&v| v).count();
+        assert_eq!(inj.fault_stats().unwrap().io_errors, failed * 2);
+    }
+
+    #[test]
+    fn invalid_plan_rejected() {
+        assert!(FaultPlan::quiet(0).with_step_errors(1.5).validate().is_err());
+        assert!(FaultPlan::quiet(0).with_poison(-0.1).validate().is_err());
+        assert!(FaultInjector::new(engine(), FaultPlan::quiet(0).with_io_errors(2.0)).is_err());
+        assert!(FaultPlan::chaos(1).validate().is_ok());
+    }
+}

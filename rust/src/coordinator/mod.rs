@@ -22,9 +22,13 @@
 //! * [`server`] — the serving loop: worker threads draining the batcher,
 //!   generation traffic routed through the scheduler, latency/throughput
 //!   accounting.
+//! * [`faults`] — seeded deterministic fault injection: a
+//!   [`faults::FaultInjector`] engine decorator that turns any chaos
+//!   scenario into a replayable seed.
 
 pub mod batcher;
 pub mod engine;
+pub mod faults;
 pub mod policy;
 pub mod request;
 pub mod scheduler;
@@ -34,7 +38,11 @@ pub use crate::linalg::WeightFormat;
 pub use crate::model::{KvBlockPool, KvCacheOptions, KvPoolStats, KvPrecision, WeightPrecision};
 pub use batcher::Batcher;
 pub use engine::{Engine, EngineOutput, NativeEngine, PjrtEngine};
-pub use policy::{PrecisionPolicy, Rule, SitePolicy};
-pub use request::{GenerateRequest, GenerateResponse, InferenceRequest, InferenceResponse};
-pub use scheduler::{DecodeMetrics, GenerateEvent, Scheduler, SchedulerOptions};
+pub use faults::{FaultInjector, FaultPlan, FaultStats};
+pub use policy::{DegradationLadder, DegradeRung, PrecisionPolicy, Rule, SitePolicy};
+pub use request::{
+    CancelToken, Deadline, GenerateRequest, GenerateResponse, InferenceRequest,
+    InferenceResponse,
+};
+pub use scheduler::{DecodeMetrics, GenerateEvent, RetryPolicy, Scheduler, SchedulerOptions};
 pub use server::{Server, ServerStats};

@@ -304,6 +304,154 @@ impl PrecisionPolicy {
     }
 }
 
+/// One step of a [`DegradationLadder`]: a validated transformation of a
+/// request's [`PrecisionPolicy`] toward cheaper compute.
+///
+/// Degradation moves along LAMP's own accuracy axis — raising τ repairs
+/// fewer products, `uniform` drops repair entirely — instead of dropping
+/// requests. Reference sites are never touched (an `exact`-tier request
+/// stays exact on every rung), and storage requirements are preserved, so
+/// a degraded policy always re-validates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeRung {
+    /// Metric label for this rung (e.g. `"relax-4x"`).
+    pub name: String,
+    /// Multiply every active finite-τ site's threshold (τ↑ ⇒ fewer
+    /// repairs ⇒ cheaper). Clamped below 1 for relaxed-family rules,
+    /// whose thresholds are fractions.
+    pub tau_scale: f32,
+    /// Drop repair entirely: every active site becomes uniform PS(μ).
+    pub uniform: bool,
+}
+
+impl DegradeRung {
+    pub fn tau(name: impl Into<String>, tau_scale: f32) -> Self {
+        DegradeRung { name: name.into(), tau_scale, uniform: false }
+    }
+
+    pub fn uniform(name: impl Into<String>) -> Self {
+        DegradeRung { name: name.into(), tau_scale: 1.0, uniform: true }
+    }
+
+    fn apply_site(&self, site: SitePolicy) -> SitePolicy {
+        if site.is_reference() {
+            return site;
+        }
+        if self.uniform {
+            return SitePolicy::uniform(site.mu);
+        }
+        if !site.tau.is_finite() {
+            return site; // already uniform
+        }
+        let mut tau = site.tau * self.tau_scale;
+        if matches!(site.rule, Rule::Relaxed | Rule::RelaxedLengthNorm) {
+            tau = tau.min(0.99); // relaxed thresholds are fractions < 1
+        }
+        SitePolicy { tau, ..site }
+    }
+
+    /// Apply this rung to every site; storage requirements pass through.
+    pub fn apply(&self, policy: &PrecisionPolicy) -> PrecisionPolicy {
+        PrecisionPolicy {
+            attention: self.apply_site(policy.attention),
+            mlp: self.apply_site(policy.mlp),
+            norm: self.apply_site(policy.norm),
+            sampler: self.apply_site(policy.sampler),
+            weights: policy.weights,
+            kv: policy.kv,
+        }
+    }
+}
+
+/// A validated ladder of precision-degradation rungs plus the hysteresis
+/// thresholds the scheduler's overload controller steps it with.
+///
+/// Rung 0 is "no degradation"; rung `r ≥ 1` applies `rungs[r - 1]`.
+/// Rungs are absolute (each is applied to the request's *original*
+/// policy, not to the previous rung's output), so the effective policy at
+/// any rung is independent of the path taken to reach it.
+#[derive(Debug, Clone)]
+pub struct DegradationLadder {
+    pub rungs: Vec<DegradeRung>,
+    /// KV-pool occupancy at/above which a step counts as pressured.
+    pub occupancy_high: f64,
+    /// Occupancy at/below which a step counts as clear.
+    pub occupancy_low: f64,
+    /// Consecutive pressured steps before stepping one rung down.
+    pub degrade_after: usize,
+    /// Consecutive clear steps before stepping one rung back up
+    /// (restore-slow: several times `degrade_after` avoids flapping).
+    pub restore_after: usize,
+}
+
+impl Default for DegradationLadder {
+    fn default() -> Self {
+        DegradationLadder {
+            rungs: vec![
+                DegradeRung::tau("relax-4x", 4.0),
+                DegradeRung::tau("relax-16x", 16.0),
+                DegradeRung::uniform("uniform"),
+            ],
+            occupancy_high: 0.85,
+            occupancy_low: 0.5,
+            degrade_after: 2,
+            restore_after: 8,
+        }
+    }
+}
+
+impl DegradationLadder {
+    pub fn validate(&self) -> Result<()> {
+        if self.rungs.is_empty() {
+            return Err(Error::config("degradation ladder has no rungs"));
+        }
+        for r in &self.rungs {
+            if !(r.tau_scale >= 1.0 && r.tau_scale.is_finite()) {
+                return Err(Error::config(format!(
+                    "ladder rung {:?}: tau_scale {} must be finite and >= 1",
+                    r.name, r.tau_scale
+                )));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.occupancy_low)
+            || !(0.0..=1.0).contains(&self.occupancy_high)
+            || self.occupancy_low > self.occupancy_high
+        {
+            return Err(Error::config(format!(
+                "ladder occupancy thresholds low {} / high {} out of order",
+                self.occupancy_low, self.occupancy_high
+            )));
+        }
+        if self.degrade_after == 0 || self.restore_after == 0 {
+            return Err(Error::config("ladder patience counters must be >= 1"));
+        }
+        Ok(())
+    }
+
+    /// Deepest rung index.
+    pub fn max_rung(&self) -> usize {
+        self.rungs.len()
+    }
+
+    /// Metric label for a rung index (`"none"` for rung 0).
+    pub fn rung_name(&self, rung: usize) -> &str {
+        if rung == 0 {
+            "none"
+        } else {
+            &self.rungs[rung.min(self.rungs.len()) - 1].name
+        }
+    }
+
+    /// The effective policy at `rung` for a request asking for `policy`.
+    pub fn apply(&self, rung: usize, policy: &PrecisionPolicy) -> PrecisionPolicy {
+        if rung == 0 {
+            *policy
+        } else {
+            self.rungs[rung.min(self.rungs.len()) - 1].apply(policy)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -471,6 +619,67 @@ mod tests {
             "{}",
             both.label()
         );
+    }
+
+    #[test]
+    fn degradation_ladder_produces_valid_policies_on_every_rung() {
+        let ladder = DegradationLadder::default();
+        ladder.validate().unwrap();
+        for tier in ["exact", "high", "balanced", "economy", "balanced-whole"] {
+            let policy = PrecisionPolicy::tier(tier).unwrap();
+            for rung in 0..=ladder.max_rung() {
+                let eff = ladder.apply(rung, &policy);
+                eff.validate().unwrap_or_else(|e| {
+                    panic!("tier {tier} rung {rung} invalid: {e}")
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn degradation_moves_along_the_tau_axis() {
+        let ladder = DegradationLadder::default();
+        let policy = PrecisionPolicy::tier("balanced").unwrap(); // relaxed tau=0.1
+        let r1 = ladder.apply(1, &policy);
+        assert!((r1.attention.tau - 0.4).abs() < 1e-6, "{}", r1.attention.tau);
+        // Relaxed thresholds clamp below 1 even at the 16x rung.
+        let r2 = ladder.apply(2, &policy);
+        assert!((0.0..1.0).contains(&r2.attention.tau), "{}", r2.attention.tau);
+        // Deepest rung drops repair entirely but keeps mu.
+        let r3 = ladder.apply(ladder.max_rung(), &policy);
+        assert!(!r3.attention.tau.is_finite());
+        assert_eq!(r3.attention.mu, policy.attention.mu);
+        // Rungs are absolute: each applies to the original policy.
+        assert_eq!(ladder.apply(1, &policy), ladder.apply(1, &policy));
+        // Reference sites and exact tiers are never touched.
+        let exact = PrecisionPolicy::reference();
+        for rung in 0..=ladder.max_rung() {
+            assert_eq!(ladder.apply(rung, &exact), exact);
+        }
+        // Storage requirements pass through.
+        use crate::linalg::WeightFormat;
+        let pinned = policy.with_kv(KvPrecision::Exact(WeightFormat::Bf16));
+        assert_eq!(ladder.apply(2, &pinned).kv, pinned.kv);
+        // Rung names are metric-stable.
+        assert_eq!(ladder.rung_name(0), "none");
+        assert_eq!(ladder.rung_name(1), "relax-4x");
+        assert_eq!(ladder.rung_name(ladder.max_rung()), "uniform");
+    }
+
+    #[test]
+    fn degradation_ladder_validation() {
+        let mut bad = DegradationLadder { rungs: vec![], ..Default::default() };
+        assert!(bad.validate().is_err());
+        bad = DegradationLadder::default();
+        bad.rungs[0].tau_scale = 0.5;
+        assert!(bad.validate().is_err());
+        bad = DegradationLadder::default();
+        bad.occupancy_low = 0.9;
+        bad.occupancy_high = 0.5;
+        assert!(bad.validate().is_err());
+        bad = DegradationLadder::default();
+        bad.degrade_after = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

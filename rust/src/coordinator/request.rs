@@ -4,6 +4,50 @@ use super::policy::PrecisionPolicy;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::model::{Decode, LampStats};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-request latency budgets, measured from admission to the scheduler
+/// (enqueue time). `None` fields are unbounded — the default.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Deadline {
+    /// Budget for the first generated token (TTFT).
+    pub ttft: Option<Duration>,
+    /// Budget for the whole request (enqueue → retirement).
+    pub total: Option<Duration>,
+}
+
+impl Deadline {
+    /// True when no budget is set (the unbounded default).
+    pub fn is_unbounded(&self) -> bool {
+        self.ttft.is_none() && self.total.is_none()
+    }
+}
+
+/// Shared cancellation handle for one generation request.
+///
+/// Clone it, hand the clone to the submitter, and `cancel()` from any
+/// thread: the scheduler retires the request with a typed
+/// `Error::Canceled` terminal event at its next step boundary, keeping
+/// every token already streamed.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (idempotent, thread-safe).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_canceled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
 
 /// A single-sequence inference request.
 #[derive(Debug, Clone)]
@@ -76,6 +120,10 @@ pub struct GenerateRequest {
     pub seed: u64,
     /// Optional stop token: generation retires after emitting it.
     pub eos: Option<u32>,
+    /// Latency budgets (TTFT / total); unbounded by default.
+    pub deadline: Deadline,
+    /// Cancellation handle; `None` means not cancelable.
+    pub cancel: Option<CancelToken>,
 }
 
 impl GenerateRequest {
@@ -88,6 +136,8 @@ impl GenerateRequest {
             decode: Decode::Greedy,
             seed: id,
             eos: None,
+            deadline: Deadline::default(),
+            cancel: None,
         }
     }
 
@@ -107,6 +157,29 @@ impl GenerateRequest {
     pub fn with_eos(mut self, eos: u32) -> Self {
         self.eos = eos.into();
         self
+    }
+
+    /// Set the TTFT budget.
+    pub fn with_ttft_deadline(mut self, budget: Duration) -> Self {
+        self.deadline.ttft = Some(budget);
+        self
+    }
+
+    /// Set the total-latency budget.
+    pub fn with_deadline(mut self, budget: Duration) -> Self {
+        self.deadline.total = Some(budget);
+        self
+    }
+
+    /// Make the request cancelable, returning the handle to cancel with.
+    pub fn cancel_token(&mut self) -> CancelToken {
+        let token = self.cancel.get_or_insert_with(CancelToken::new);
+        token.clone()
+    }
+
+    /// True once the request's token (if any) has been canceled.
+    pub fn is_canceled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|t| t.is_canceled())
     }
 
     pub fn validate(&self, vocab: usize, max_seq: usize) -> Result<()> {
@@ -157,6 +230,11 @@ pub struct GenerateResponse {
     /// This request's own LAMP recomputation statistics (each causal
     /// product of its session counted exactly once).
     pub stats: LampStats,
+    /// The precision policy the request was actually decoded under — the
+    /// requested policy unless the degradation ladder stepped it down at
+    /// admission. The stream is bit-identical to solo decode under *this*
+    /// policy.
+    pub policy: PrecisionPolicy,
     /// Time to first generated token, seconds (0 when nothing was generated).
     pub ttft_s: f64,
     /// End-to-end latency (admission → retirement), seconds.
@@ -230,10 +308,34 @@ mod tests {
             tokens: vec![5, 6, 7, 8],
             prompt_len: 2,
             stats: LampStats::default(),
+            policy: PrecisionPolicy::reference(),
             ttft_s: 0.0,
             latency_s: 0.0,
         };
         assert_eq!(r.generated(), &[7, 8]);
+    }
+
+    #[test]
+    fn deadlines_and_cancel_handle() {
+        let p = PrecisionPolicy::reference();
+        let r = GenerateRequest::new(1, vec![1], 4, p);
+        assert!(r.deadline.is_unbounded());
+        assert!(!r.is_canceled());
+        let r = r
+            .with_ttft_deadline(Duration::from_millis(5))
+            .with_deadline(Duration::from_millis(50));
+        assert_eq!(r.deadline.ttft, Some(Duration::from_millis(5)));
+        assert_eq!(r.deadline.total, Some(Duration::from_millis(50)));
+        assert!(!r.deadline.is_unbounded());
+        let mut r = GenerateRequest::new(2, vec![1], 4, p);
+        let token = r.cancel_token();
+        // Repeated calls hand out the same underlying token.
+        let again = r.cancel_token();
+        assert!(!r.is_canceled());
+        token.cancel();
+        assert!(r.is_canceled() && again.is_canceled());
+        token.cancel(); // idempotent
+        assert!(r.is_canceled());
     }
 
     #[test]

@@ -53,14 +53,52 @@
 //! *alone* can never fit and fails with the typed error instead.
 
 use super::engine::Engine;
-use super::policy::PrecisionPolicy;
+use super::policy::{DegradationLadder, PrecisionPolicy};
 use super::request::{GenerateRequest, GenerateResponse};
 use crate::error::Error;
 use crate::model::{DecodeSession, LampStats};
 use crate::util::{Rng, ThreadPool};
 use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Bounded retry with exponential backoff + deterministic jitter for
+/// *retryable* step failures ([`Error::is_retryable`]): the failed step
+/// changed no session state, so the scheduler re-feeds the same token —
+/// never re-samples — and the retried stream stays bit-identical to solo
+/// decode.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Consecutive retries per step before the failure turns terminal.
+    pub max_retries: usize,
+    /// Base backoff; attempt `n` waits `backoff * 2^(n-1) * (1 + jitter)`.
+    pub backoff: Duration,
+    /// Jitter fraction in `[0, 1)`, drawn deterministically from the
+    /// request seed and attempt (never from global randomness — two runs
+    /// of the same workload back off identically).
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 3, backoff: Duration::from_micros(200), jitter: 0.25 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (1-based) of the request
+    /// seeded `seed`.
+    pub fn delay(&self, seed: u64, attempt: usize) -> Duration {
+        let exp = attempt.saturating_sub(1).min(16) as u32;
+        let base = self.backoff.as_secs_f64() * f64::from(1u32 << exp);
+        let jitter = if self.jitter > 0.0 {
+            Rng::new(seed ^ ((attempt as u64) << 32)).f64() * self.jitter
+        } else {
+            0.0
+        };
+        Duration::from_secs_f64(base * (1.0 + jitter))
+    }
+}
 
 /// Scheduler tuning knobs.
 #[derive(Clone)]
@@ -74,11 +112,32 @@ pub struct SchedulerOptions {
     /// Pool over which active sessions are stepped in parallel; `None`
     /// steps them sequentially on the caller's thread.
     pub pool: Option<Arc<ThreadPool>>,
+    /// Bounded-retry policy for retryable step failures.
+    pub retry: RetryPolicy,
+    /// Budget on scheduler iterations per `run`-family drive; `None` is
+    /// unbounded (the historical behavior). On expiry every in-flight and
+    /// waiting request fails with one typed timeout event and the drive
+    /// returns [`Error::Timeout`] — a wedged slot can no longer hang the
+    /// caller forever.
+    pub max_run_steps: Option<usize>,
+    /// Wall-clock twin of [`Self::max_run_steps`].
+    pub max_run_wall: Option<Duration>,
+    /// Graceful-degradation ladder; `None` (the default) disables the
+    /// overload controller entirely — zero behavior change.
+    pub ladder: Option<DegradationLadder>,
 }
 
 impl Default for SchedulerOptions {
     fn default() -> Self {
-        SchedulerOptions { max_sessions: 8, prefill_chunk: 8, pool: None }
+        SchedulerOptions {
+            max_sessions: 8,
+            prefill_chunk: 8,
+            pool: None,
+            retry: RetryPolicy::default(),
+            max_run_steps: None,
+            max_run_wall: None,
+            ladder: None,
+        }
     }
 }
 
@@ -138,6 +197,23 @@ pub struct DecodeMetrics {
     /// Prefix-share adoptions / adoption attempts over the pool's life.
     pub prefix_share_hits: usize,
     pub prefix_share_rate: f64,
+    // --- Fault-tolerance metrics (PR 6). ---
+    /// In-place step retries (backoff re-feeds) across all requests.
+    pub retries: usize,
+    /// Requests failed on a deadline or run-budget expiry.
+    pub timeouts: usize,
+    /// Requests failed through their cancellation token.
+    pub canceled: usize,
+    /// Faults injected by a wrapping `FaultInjector` (0 on real engines).
+    pub faults_injected: usize,
+    /// Admissions whose effective policy was stepped down the ladder.
+    pub degraded_admissions: usize,
+    /// Ladder transitions: steps down (degrade) and back up (restore).
+    pub degrade_transitions: usize,
+    pub restore_transitions: usize,
+    /// Current ladder rung (0 = no degradation) and its metric label.
+    pub ladder_rung: usize,
+    pub ladder_rung_name: String,
 }
 
 /// A queued request: fresh, or preempted and awaiting recompute.
@@ -190,6 +266,11 @@ struct ActiveSlot<'e> {
     first_token: Option<Instant>,
     last_event: Instant,
     outcome: StepOutcome,
+    /// Consecutive retryable failures at the current step (cleared on any
+    /// successful iteration); terminal once it exceeds the retry budget.
+    retries: usize,
+    /// The slot sits out iterations until this backoff deadline passes.
+    backoff_until: Option<Instant>,
 }
 
 /// Scratch for one slot-iteration, harvested after the parallel fan-out.
@@ -289,6 +370,16 @@ pub struct Scheduler<'e> {
     failed: usize,
     preemptions: usize,
     generated_tokens: usize,
+    retries: usize,
+    timeouts: usize,
+    canceled: usize,
+    // Degradation-ladder controller state (all 0/idle without a ladder).
+    ladder_rung: usize,
+    pressured_steps: usize,
+    clear_steps: usize,
+    degrades: usize,
+    restores: usize,
+    degraded_admissions: usize,
     ttfts: Vec<f64>,
     itls: Vec<f64>,
     by_policy: Vec<(String, LampStats)>,
@@ -298,6 +389,9 @@ pub struct Scheduler<'e> {
 impl<'e> Scheduler<'e> {
     pub fn new(engine: &'e dyn Engine, opts: SchedulerOptions) -> Self {
         assert!(opts.max_sessions >= 1, "scheduler needs at least one slot");
+        if let Some(ladder) = &opts.ladder {
+            ladder.validate().expect("invalid degradation ladder");
+        }
         let slots = (0..opts.max_sessions).map(|_| None).collect();
         Scheduler {
             engine,
@@ -311,6 +405,15 @@ impl<'e> Scheduler<'e> {
             failed: 0,
             preemptions: 0,
             generated_tokens: 0,
+            retries: 0,
+            timeouts: 0,
+            canceled: 0,
+            ladder_rung: 0,
+            pressured_steps: 0,
+            clear_steps: 0,
+            degrades: 0,
+            restores: 0,
+            degraded_admissions: 0,
             ttfts: Vec::new(),
             itls: Vec::new(),
             by_policy: Vec::new(),
@@ -393,7 +496,7 @@ impl<'e> Scheduler<'e> {
                 continue;
             }
             loop {
-                let Some(entry) = self.waiting.pop_front() else { return };
+                let Some(mut entry) = self.waiting.pop_front() else { return };
                 if entry.resume.is_none() {
                     // Degenerate-request checks apply to fresh admissions
                     // only (a resumed request passed them already, and
@@ -413,6 +516,7 @@ impl<'e> Scheduler<'e> {
                         events.push(GenerateEvent::Finished(GenerateResponse {
                             id: entry.req.id,
                             prompt_len: entry.req.prompt.len(),
+                            policy: entry.req.policy,
                             tokens: entry.req.prompt,
                             stats: LampStats::default(),
                             ttft_s: 0.0,
@@ -448,6 +552,19 @@ impl<'e> Scheduler<'e> {
                         return;
                     }
                 }
+                // Degradation applies at admission only, to fresh requests:
+                // the effective policy is fixed for the request's lifetime
+                // (preemption resume reuses it), so "bit-identical to solo
+                // decode under the final effective plan" is well-defined.
+                if entry.resume.is_none() && self.ladder_rung > 0 {
+                    if let Some(ladder) = &self.opts.ladder {
+                        let eff = ladder.apply(self.ladder_rung, &entry.req.policy);
+                        if eff != entry.req.policy {
+                            entry.req.policy = eff;
+                            self.degraded_admissions += 1;
+                        }
+                    }
+                }
                 match self.open_session(&entry.req.policy, entry.req.seed) {
                     Ok(mut session) => {
                         let mut req = entry.req;
@@ -468,6 +585,8 @@ impl<'e> Scheduler<'e> {
                                     first_token: r.first_token,
                                     last_event: r.last_event,
                                     outcome: StepOutcome::default(),
+                                    retries: 0,
+                                    backoff_until: None,
                                     session,
                                     req,
                                 }
@@ -493,6 +612,8 @@ impl<'e> Scheduler<'e> {
                                     first_token: None,
                                     last_event: entry.enqueued,
                                     outcome: StepOutcome::default(),
+                                    retries: 0,
+                                    backoff_until: None,
                                     session,
                                     req,
                                 }
@@ -511,14 +632,138 @@ impl<'e> Scheduler<'e> {
         }
     }
 
-    /// One scheduler iteration: admit, advance every live session (across
-    /// the pool when configured), harvest tokens / retirements / failures.
+    /// Fail queued requests that were canceled or whose deadline expired
+    /// before ever reaching a slot — exactly one typed terminal event
+    /// each, never a session open.
+    fn expire_waiting(&mut self, events: &mut Vec<GenerateEvent>) {
+        let now = Instant::now();
+        let mut kept = VecDeque::with_capacity(self.waiting.len());
+        while let Some(entry) = self.waiting.pop_front() {
+            let waited = now.duration_since(entry.enqueued);
+            let error = if entry.req.is_canceled() {
+                self.canceled += 1;
+                Some(Error::canceled(format!("request {} canceled while queued", entry.req.id)))
+            } else if entry.req.deadline.total.is_some_and(|d| waited >= d) {
+                self.timeouts += 1;
+                Some(Error::timeout(format!(
+                    "request {} exceeded its total deadline while queued",
+                    entry.req.id
+                )))
+            } else if entry.resume.as_ref().map_or(true, |r| r.first_token.is_none())
+                && entry.req.deadline.ttft.is_some_and(|d| waited >= d)
+            {
+                self.timeouts += 1;
+                Some(Error::timeout(format!(
+                    "request {} exceeded its TTFT deadline while queued",
+                    entry.req.id
+                )))
+            } else {
+                None
+            };
+            match error {
+                Some(error) => {
+                    self.failed += 1;
+                    events.push(GenerateEvent::Failed { id: entry.req.id, error });
+                }
+                None => kept.push_back(entry),
+            }
+        }
+        self.waiting = kept;
+    }
+
+    /// Fail live slots that were canceled or blew a deadline. Tokens
+    /// already streamed are kept (they remain a prefix of the solo
+    /// stream); the slot is recycled and exactly one typed terminal
+    /// event is emitted.
+    fn expire_active(&mut self, events: &mut Vec<GenerateEvent>) {
+        let now = Instant::now();
+        for i in 0..self.slots.len() {
+            let Some(slot) = &self.slots[i] else { continue };
+            let age = now.duration_since(slot.admitted);
+            let error = if slot.req.is_canceled() {
+                self.canceled += 1;
+                Some(Error::canceled(format!("request {} canceled", slot.req.id)))
+            } else if slot.req.deadline.total.is_some_and(|d| age >= d) {
+                self.timeouts += 1;
+                Some(Error::timeout(format!(
+                    "request {} exceeded its total deadline mid-decode",
+                    slot.req.id
+                )))
+            } else if slot.first_token.is_none()
+                && slot.req.deadline.ttft.is_some_and(|d| age >= d)
+            {
+                self.timeouts += 1;
+                Some(Error::timeout(format!(
+                    "request {} exceeded its TTFT deadline before the first token",
+                    slot.req.id
+                )))
+            } else {
+                None
+            };
+            if let Some(error) = error {
+                let slot = self.slots[i].take().expect("live slot");
+                self.failed += 1;
+                self.recycle(slot.session);
+                events.push(GenerateEvent::Failed { id: slot.req.id, error });
+            }
+        }
+    }
+
+    /// Hysteresis controller for the degradation ladder, driven once per
+    /// step by pool occupancy and this step's deadline misses/preemptions:
+    /// degrade fast under sustained pressure, restore slowly once clear.
+    fn update_ladder(&mut self, step_timeouts: usize, step_preemptions: usize) {
+        let Some(ladder) = &self.opts.ladder else { return };
+        let occupancy =
+            self.engine.kv_pool().map(|p| p.stats().occupancy()).unwrap_or(0.0);
+        let pressured =
+            occupancy >= ladder.occupancy_high || step_timeouts > 0 || step_preemptions > 0;
+        let clear =
+            occupancy <= ladder.occupancy_low && step_timeouts == 0 && step_preemptions == 0;
+        if pressured {
+            self.clear_steps = 0;
+            self.pressured_steps += 1;
+            if self.pressured_steps >= ladder.degrade_after
+                && self.ladder_rung < ladder.max_rung()
+            {
+                self.ladder_rung += 1;
+                self.degrades += 1;
+                self.pressured_steps = 0;
+            }
+        } else if clear {
+            self.pressured_steps = 0;
+            self.clear_steps += 1;
+            if self.clear_steps >= ladder.restore_after && self.ladder_rung > 0 {
+                self.ladder_rung -= 1;
+                self.restores += 1;
+                self.clear_steps = 0;
+            }
+        } else {
+            // Between the thresholds: hold the rung, reset both streaks.
+            self.pressured_steps = 0;
+            self.clear_steps = 0;
+        }
+    }
+
+    /// One scheduler iteration: expire canceled/overdue requests, admit,
+    /// advance every runnable session (across the pool when configured),
+    /// harvest tokens / retirements / failures, update the ladder.
     pub fn step(&mut self) -> Vec<GenerateEvent> {
         let mut events = Vec::new();
+        let (timeouts0, preemptions0) = (self.timeouts, self.preemptions);
+        self.expire_waiting(&mut events);
         self.admit_waiting(&mut events);
-        let active: Vec<usize> =
-            (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect();
+        self.expire_active(&mut events);
+        let backoff_now = Instant::now();
+        let active: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| {
+                self.slots[i].as_ref().is_some_and(|s| {
+                    s.backoff_until.map_or(true, |until| until <= backoff_now)
+                })
+            })
+            .collect();
         if active.is_empty() {
+            self.update_ladder(self.timeouts - timeouts0, self.preemptions - preemptions0);
             return events;
         }
         self.steps += 1;
@@ -553,6 +798,11 @@ impl<'e> Scheduler<'e> {
             let (emitted, done, error) = {
                 let slot = self.slots[i].as_mut().expect("active slot");
                 let o = std::mem::take(&mut slot.outcome);
+                if o.error.is_none() {
+                    // Any successful iteration clears the retry streak.
+                    slot.retries = 0;
+                    slot.backoff_until = None;
+                }
                 (o.emitted, o.done, o.error)
             };
             if let Some(token) = emitted {
@@ -599,6 +849,7 @@ impl<'e> Scheduler<'e> {
                 events.push(GenerateEvent::Finished(GenerateResponse {
                     id: slot.req.id,
                     prompt_len: slot.prompt_len,
+                    policy: slot.req.policy,
                     tokens: slot.tokens,
                     stats,
                     ttft_s: ttft,
@@ -665,13 +916,30 @@ impl<'e> Scheduler<'e> {
                     continue;
                 }
             }
-            // Non-retryable failure — or pool exhaustion while running
-            // alone, which no preemption could ever fix.
+            if err.is_retryable() {
+                // Transient fault — or pool exhaustion while running alone
+                // (an injected spike clears on retry; real exhaustion
+                // persists and exhausts the budget). The failed step
+                // changed no session state, so the retry *re-feeds* the
+                // same token: the stream stays bit-identical to solo
+                // decode. Exponential backoff with deterministic jitter.
+                let retry = self.opts.retry.clone();
+                let slot = self.slots[i].as_mut().expect("live slot");
+                if slot.retries < retry.max_retries {
+                    slot.retries += 1;
+                    slot.backoff_until =
+                        Some(now + retry.delay(slot.req.seed, slot.retries));
+                    self.retries += 1;
+                    continue;
+                }
+            }
+            // Non-retryable failure, or the retry budget is spent.
             let slot = self.slots[i].take().expect("live slot");
             self.failed += 1;
             self.recycle(slot.session);
             events.push(GenerateEvent::Failed { id: slot.req.id, error: err });
         }
+        self.update_ladder(self.timeouts - timeouts0, self.preemptions - preemptions0);
         events
     }
 
@@ -699,25 +967,118 @@ impl<'e> Scheduler<'e> {
         });
     }
 
+    /// Fail everything queued and in flight with one typed timeout event
+    /// each — the run-budget backstop. The one-terminal-event invariant
+    /// holds: every aborted request gets exactly one `Failed`.
+    fn abort_all(&mut self, events: &mut Vec<GenerateEvent>, why: &str) {
+        while let Some(entry) = self.waiting.pop_front() {
+            self.failed += 1;
+            self.timeouts += 1;
+            events.push(GenerateEvent::Failed {
+                id: entry.req.id,
+                error: Error::timeout(why.to_string()),
+            });
+        }
+        for i in 0..self.slots.len() {
+            if let Some(slot) = self.slots[i].take() {
+                self.failed += 1;
+                self.timeouts += 1;
+                self.recycle(slot.session);
+                events.push(GenerateEvent::Failed {
+                    id: slot.req.id,
+                    error: Error::timeout(why.to_string()),
+                });
+            }
+        }
+    }
+
+    /// When a step made no observable progress, sleep only if every live
+    /// slot is sitting out a retry backoff (so spinning can't help), or
+    /// briefly when nothing is live but the queue is pool-gated. Steps
+    /// that advanced a session (prefill emits no events) never sleep.
+    fn idle_backoff(&self) {
+        let now = Instant::now();
+        let mut runnable = false;
+        let mut earliest: Option<Instant> = None;
+        for slot in self.slots.iter().flatten() {
+            match slot.backoff_until {
+                Some(until) if until > now => {
+                    earliest = Some(earliest.map_or(until, |e| e.min(until)));
+                }
+                _ => runnable = true,
+            }
+        }
+        if runnable {
+            return;
+        }
+        if let Some(until) = earliest {
+            std::thread::sleep((until - now).min(Duration::from_millis(2)));
+        } else if !self.waiting.is_empty() {
+            std::thread::sleep(Duration::from_micros(20));
+        }
+    }
+
+    /// Step until idle or until the configured step/wall budget trips,
+    /// extending `sink` with every event. On budget expiry all remaining
+    /// requests are failed with typed timeout events (pushed to `sink`)
+    /// and `Err(Error::Timeout)` is returned — the caller can no longer
+    /// hang on a wedged slot or a permanently gated queue.
+    pub fn run_until_idle(
+        &mut self,
+        sink: &mut Vec<GenerateEvent>,
+    ) -> crate::error::Result<()> {
+        let started = Instant::now();
+        let mut iterations = 0usize;
+        while !self.is_idle() {
+            if self.opts.max_run_steps.is_some_and(|max| iterations >= max) {
+                let why = format!(
+                    "scheduler run exceeded its {} iteration budget",
+                    self.opts.max_run_steps.unwrap_or(0)
+                );
+                self.abort_all(sink, &why);
+                return Err(Error::timeout(why));
+            }
+            if self.opts.max_run_wall.is_some_and(|max| started.elapsed() >= max) {
+                let why = format!(
+                    "scheduler run exceeded its {:.3}s wall budget",
+                    self.opts.max_run_wall.unwrap_or_default().as_secs_f64()
+                );
+                self.abort_all(sink, &why);
+                return Err(Error::timeout(why));
+            }
+            iterations += 1;
+            let events = self.step();
+            let quiet = events.is_empty();
+            sink.extend(events);
+            if quiet {
+                self.idle_backoff();
+            }
+        }
+        Ok(())
+    }
+
     /// Step until everything queued has retired; returns the full event
-    /// stream in emission order.
+    /// stream in emission order. A tripped run budget surfaces as typed
+    /// timeout `Failed` events at the tail of the stream (use
+    /// [`Self::run_until_idle`] to observe the `Err` itself).
     pub fn run(&mut self) -> Vec<GenerateEvent> {
         let mut all = Vec::new();
-        while !self.is_idle() {
-            all.extend(self.step());
-        }
+        let _ = self.run_until_idle(&mut all);
         all
     }
 
-    /// Like [`Self::run`], keeping only the completed responses.
-    pub fn run_to_completion(&mut self) -> Vec<GenerateResponse> {
-        self.run()
+    /// Like [`Self::run`], keeping only the completed responses. Returns
+    /// the typed [`Error::Timeout`] when the run budget tripped.
+    pub fn run_to_completion(&mut self) -> crate::error::Result<Vec<GenerateResponse>> {
+        let mut all = Vec::new();
+        self.run_until_idle(&mut all)?;
+        Ok(all
             .into_iter()
             .filter_map(|e| match e {
                 GenerateEvent::Finished(r) => Some(r),
                 _ => None,
             })
-            .collect()
+            .collect())
     }
 
     /// Metrics snapshot.
@@ -760,6 +1121,24 @@ impl<'e> Scheduler<'e> {
             kv_occupancy,
             prefix_share_hits,
             prefix_share_rate,
+            retries: self.retries,
+            timeouts: self.timeouts,
+            canceled: self.canceled,
+            faults_injected: self
+                .engine
+                .fault_stats()
+                .map(|f| f.total())
+                .unwrap_or(0),
+            degraded_admissions: self.degraded_admissions,
+            degrade_transitions: self.degrades,
+            restore_transitions: self.restores,
+            ladder_rung: self.ladder_rung,
+            ladder_rung_name: self
+                .opts
+                .ladder
+                .as_ref()
+                .map(|l| l.rung_name(self.ladder_rung).to_string())
+                .unwrap_or_else(|| "none".to_string()),
         }
     }
 }
@@ -798,7 +1177,7 @@ mod tests {
         let (solo, rate) = e.generate(&[1, 2, 3], 6, &policy, Decode::Greedy, 1).unwrap();
         let mut sched = Scheduler::new(&e, SchedulerOptions::default());
         sched.admit(greedy(1, vec![1, 2, 3], 6, policy));
-        let responses = sched.run_to_completion();
+        let responses = sched.run_to_completion().unwrap();
         assert_eq!(responses.len(), 1);
         assert_eq!(responses[0].tokens, solo);
         assert_eq!(responses[0].prompt_len, 3);
@@ -839,7 +1218,7 @@ mod tests {
         let mut sched = Scheduler::new(&e, SchedulerOptions::default());
         sched.admit(greedy(1, vec![1; seq], 4, policy)); // prompt fills context
         sched.admit(greedy(2, vec![1, 2], 0, policy)); // zero budget
-        let responses = sched.run_to_completion();
+        let responses = sched.run_to_completion().unwrap();
         assert_eq!(responses.len(), 2);
         for r in &responses {
             assert_eq!(r.generated(), &[] as &[u32]);
@@ -858,7 +1237,7 @@ mod tests {
         let eos = continuation[0];
         let mut sched = Scheduler::new(&e, SchedulerOptions::default());
         sched.admit(greedy(1, vec![3, 14], 10, policy).with_seed(2).with_eos(eos));
-        let responses = sched.run_to_completion();
+        let responses = sched.run_to_completion().unwrap();
         assert_eq!(responses[0].generated(), &continuation[..1]);
     }
 
@@ -866,7 +1245,8 @@ mod tests {
     fn more_requests_than_slots_all_complete() {
         let e = engine();
         let policy = PrecisionPolicy::lamp(3, 0.05, Rule::Random);
-        let opts = SchedulerOptions { max_sessions: 2, prefill_chunk: 2, pool: None };
+        let opts =
+            SchedulerOptions { max_sessions: 2, prefill_chunk: 2, ..Default::default() };
         let mut sched = Scheduler::new(&e, opts);
         let mut solos = Vec::new();
         for id in 0..5u64 {
@@ -875,7 +1255,7 @@ mod tests {
             solos.push(e.generate(&prompt, n, &policy, Decode::Greedy, id).unwrap().0);
             sched.admit(greedy(id, prompt, n, policy));
         }
-        let mut responses = sched.run_to_completion();
+        let mut responses = sched.run_to_completion().unwrap();
         responses.sort_by_key(|r| r.id);
         assert_eq!(responses.len(), 5);
         for (r, solo) in responses.iter().zip(&solos) {
@@ -910,18 +1290,23 @@ mod tests {
         };
         let mut seq_sched = Scheduler::new(
             &e,
-            SchedulerOptions { max_sessions: 4, prefill_chunk: 3, pool: None },
+            SchedulerOptions { max_sessions: 4, prefill_chunk: 3, ..Default::default() },
         );
         build(&mut seq_sched);
-        let mut seq_out = seq_sched.run_to_completion();
+        let mut seq_out = seq_sched.run_to_completion().unwrap();
         seq_out.sort_by_key(|r| r.id);
 
         let mut par_sched = Scheduler::new(
             &e,
-            SchedulerOptions { max_sessions: 4, prefill_chunk: 3, pool: Some(pool) },
+            SchedulerOptions {
+                max_sessions: 4,
+                prefill_chunk: 3,
+                pool: Some(pool),
+                ..Default::default()
+            },
         );
         build(&mut par_sched);
-        let mut par_out = par_sched.run_to_completion();
+        let mut par_out = par_sched.run_to_completion().unwrap();
         par_out.sort_by_key(|r| r.id);
 
         assert_eq!(seq_out.len(), par_out.len());
@@ -946,7 +1331,7 @@ mod tests {
         let policy = PrecisionPolicy::lamp(3, 0.05, Rule::Strict);
         let mut sched = Scheduler::new(
             &e,
-            SchedulerOptions { max_sessions: 2, prefill_chunk: 4, pool: None },
+            SchedulerOptions { max_sessions: 2, prefill_chunk: 4, ..Default::default() },
         );
         let mut solos = Vec::new();
         for id in 0..3u64 {
@@ -954,7 +1339,7 @@ mod tests {
             solos.push(oracle.generate(&prompt, 27, &policy, Decode::Greedy, id).unwrap());
             sched.admit(greedy(id, prompt, 27, policy).with_seed(id));
         }
-        let mut responses = sched.run_to_completion();
+        let mut responses = sched.run_to_completion().unwrap();
         responses.sort_by_key(|r| r.id);
         assert_eq!(responses.len(), 3, "every request completes despite preemption");
         for (r, (toks, rate)) in responses.iter().zip(&solos) {

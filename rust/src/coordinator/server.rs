@@ -75,6 +75,25 @@ pub struct ServerStats {
     pub prefix_share_rate: f64,
     /// Decode sessions preempted on pool exhaustion (recomputed later).
     pub preemptions: usize,
+    // --- Fault-tolerance metrics (PR 6). ---
+    /// In-place retries of retryable decode-step failures.
+    pub generate_retries: usize,
+    /// Requests terminated by deadline or run-budget timeouts.
+    pub generate_timeouts: usize,
+    /// Requests terminated by their cancellation handle.
+    pub generate_canceled: usize,
+    /// Faults injected by a [`FaultInjector`](super::faults::FaultInjector)
+    /// wrapped around the engine (0 without injection).
+    pub faults_injected: usize,
+    /// Requests admitted with a ladder-degraded precision policy.
+    pub degraded_admissions: usize,
+    /// Ladder transitions to a cheaper rung (degrade) and back (restore).
+    pub degrade_transitions: usize,
+    pub restore_transitions: usize,
+    /// Current degradation-ladder rung after the latest generation drive
+    /// (0 = nominal) and its name.
+    pub ladder_rung: usize,
+    pub ladder_rung_name: String,
 }
 
 /// Synchronous batching server over one engine.
@@ -145,19 +164,25 @@ impl Server {
     /// scheduler until retirement; returns the full event stream (per-token
     /// events, completions, failures). Decode metrics fold into
     /// [`ServerStats`].
-    pub fn serve_generation(&mut self) -> Vec<GenerateEvent> {
+    ///
+    /// Returns `Err(Error::Timeout)` when the scheduler's run budget
+    /// ([`SchedulerOptions::max_run_steps`]/[`SchedulerOptions::max_run_wall`])
+    /// trips; in-flight requests are failed with typed timeout events and the
+    /// metrics still fold into the stats before the error propagates.
+    pub fn serve_generation(&mut self) -> Result<Vec<GenerateEvent>> {
         if self.pending_generate.is_empty() {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         let reqs: Vec<GenerateRequest> = self.pending_generate.drain(..).collect();
         let n = reqs.len();
-        let (events, metrics) = {
+        let (events, metrics, outcome) = {
             let mut sched = Scheduler::new(self.engine.as_ref(), self.decode_opts.clone());
             for r in reqs {
                 sched.admit(r);
             }
-            let events = sched.run();
-            (events, sched.metrics())
+            let mut events = Vec::new();
+            let outcome = sched.run_until_idle(&mut events);
+            (events, sched.metrics(), outcome)
         };
         self.stats.generate_requests += n;
         self.stats.generate_failed += metrics.failed;
@@ -175,7 +200,17 @@ impl Server {
         self.stats.preemptions += metrics.preemptions;
         self.stats.prefix_share_hits = metrics.prefix_share_hits;
         self.stats.prefix_share_rate = metrics.prefix_share_rate;
-        events
+        self.stats.generate_retries += metrics.retries;
+        self.stats.generate_timeouts += metrics.timeouts;
+        self.stats.generate_canceled += metrics.canceled;
+        self.stats.faults_injected = metrics.faults_injected;
+        self.stats.degraded_admissions += metrics.degraded_admissions;
+        self.stats.degrade_transitions += metrics.degrade_transitions;
+        self.stats.restore_transitions += metrics.restore_transitions;
+        self.stats.ladder_rung = metrics.ladder_rung;
+        self.stats.ladder_rung_name = metrics.ladder_rung_name;
+        outcome?;
+        Ok(events)
     }
 
     /// Drain one batch if ready; returns its responses.
@@ -374,7 +409,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(s.pending_generation(), 2);
-        let events = s.serve_generation();
+        let events = s.serve_generation().unwrap();
         assert_eq!(s.pending_generation(), 0);
         let mut responses: Vec<_> = events
             .into_iter()
@@ -472,7 +507,7 @@ mod tests {
             .with_norm(SitePolicy::lamp(3, 0.5, Rule::Strict))
             .with_sampler(SitePolicy::lamp(3, 0.0, Rule::Strict));
         s.submit_generate(GenerateRequest::new(1, vec![1, 2, 3], 5, p)).unwrap();
-        let events = s.serve_generation();
+        let events = s.serve_generation().unwrap();
         assert!(!events.is_empty());
         let stats = s.stats();
         let rates = &stats.recompute_rate_by_site;
@@ -500,7 +535,7 @@ mod tests {
         assert!(s
             .submit_generate(GenerateRequest::new(3, vec![1], 4, p).with_eos(4000))
             .is_err());
-        assert!(s.serve_generation().is_empty(), "nothing valid was queued");
+        assert!(s.serve_generation().unwrap().is_empty(), "nothing valid was queued");
     }
 
     #[test]
@@ -557,7 +592,7 @@ mod tests {
             .submit_generate(GenerateRequest::new(5, vec![1], 2, pinned_bf16))
             .unwrap();
         assert_eq!(bf16_server.drain().unwrap().len(), 1);
-        assert!(!bf16_server.serve_generation().is_empty());
+        assert!(!bf16_server.serve_generation().unwrap().is_empty());
     }
 
     #[test]
@@ -587,7 +622,7 @@ mod tests {
         let mut s = Server::new(Box::new(engine), Duration::from_millis(1));
         s.submit_generate(GenerateRequest::new(3, vec![1, 2, 3], 4, pinned)).unwrap();
         s.submit_generate(GenerateRequest::new(4, vec![1, 2, 3], 4, pinned)).unwrap();
-        let events = s.serve_generation();
+        let events = s.serve_generation().unwrap();
         assert!(!events.is_empty());
         let stats = s.stats();
         assert_eq!(stats.generate_requests, 2);

@@ -28,6 +28,15 @@ pub enum Error {
     /// retryable: the scheduler turns this into preempt-then-recompute
     /// rather than failing the request.
     Resource(String),
+    /// A transient failure (injected fault, I/O blip) that is expected to
+    /// clear on retry. Retryable in place: the failing step changed no
+    /// session state, so re-feeding the same token is safe.
+    Transient(String),
+    /// A request exceeded its deadline or a run exceeded its step/wall
+    /// budget. Terminal for the affected request.
+    Timeout(String),
+    /// A request was canceled through its `CancelToken`. Terminal.
+    Canceled(String),
     /// An invariant that should be unreachable was violated.
     Invariant(String),
 }
@@ -42,6 +51,9 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Resource(m) => write!(f, "resource exhausted: {m}"),
+            Error::Transient(m) => write!(f, "transient fault: {m}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
+            Error::Canceled(m) => write!(f, "canceled: {m}"),
             Error::Invariant(m) => write!(f, "invariant violation: {m}"),
         }
     }
@@ -81,14 +93,41 @@ impl Error {
     pub fn resource(msg: impl Into<String>) -> Self {
         Error::Resource(msg.into())
     }
+    pub fn transient(msg: impl Into<String>) -> Self {
+        Error::Transient(msg.into())
+    }
+    pub fn timeout(msg: impl Into<String>) -> Self {
+        Error::Timeout(msg.into())
+    }
+    pub fn canceled(msg: impl Into<String>) -> Self {
+        Error::Canceled(msg.into())
+    }
     pub fn invariant(msg: impl Into<String>) -> Self {
         Error::Invariant(msg.into())
     }
 
-    /// True for retryable resource exhaustion (the scheduler's
-    /// preempt-then-recompute trigger).
+    /// True for resource exhaustion specifically — the scheduler's
+    /// preempt-then-recompute trigger (frees blocks held by a victim).
     pub fn is_resource(&self) -> bool {
         matches!(self, Error::Resource(_))
+    }
+
+    /// True for failures that may clear if the same step is attempted
+    /// again: resource exhaustion (blocks can be freed by retiring
+    /// co-tenants) and transient faults (expected to pass). Timeouts,
+    /// cancellations and everything else are terminal.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Error::Resource(_) | Error::Transient(_))
+    }
+
+    /// True for deadline/budget expiry.
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, Error::Timeout(_))
+    }
+
+    /// True for explicit cancellation.
+    pub fn is_canceled(&self) -> bool {
+        matches!(self, Error::Canceled(_))
     }
 }
 
@@ -102,6 +141,19 @@ mod tests {
         assert!(e.to_string().contains("bad key"));
         let e = Error::shape("2x3 vs 4x5");
         assert!(e.to_string().contains("2x3"));
+    }
+
+    #[test]
+    fn retryable_taxonomy() {
+        assert!(Error::resource("pool dry").is_retryable());
+        assert!(Error::transient("blip").is_retryable());
+        assert!(!Error::timeout("deadline").is_retryable());
+        assert!(!Error::canceled("user").is_retryable());
+        assert!(!Error::runtime("nan").is_retryable());
+        assert!(Error::resource("pool dry").is_resource());
+        assert!(!Error::transient("blip").is_resource());
+        assert!(Error::timeout("t").is_timeout());
+        assert!(Error::canceled("c").is_canceled());
     }
 
     #[test]

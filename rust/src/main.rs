@@ -27,8 +27,9 @@
 use lamp::benchkit::Table;
 use lamp::cli::{ArgSpec, Args, Command};
 use lamp::coordinator::{
-    Engine, GenerateRequest, InferenceRequest, KvCacheOptions, NativeEngine, PjrtEngine,
-    PrecisionPolicy, Rule, SchedulerOptions, Server, SitePolicy, WeightFormat,
+    DegradationLadder, Engine, FaultInjector, FaultPlan, GenerateRequest, InferenceRequest,
+    KvCacheOptions, NativeEngine, PjrtEngine, PrecisionPolicy, Rule, SchedulerOptions, Server,
+    SitePolicy, WeightFormat,
 };
 use lamp::data::{Dataset, Domain};
 use lamp::experiments::{self, EvalOptions};
@@ -80,6 +81,20 @@ fn cli() -> Command {
                     "8",
                 ))
                 .arg(ArgSpec::opt("gen-tokens", "tokens per generation request", "16"))
+                .arg(ArgSpec::opt(
+                    "deadline-ms",
+                    "total wall-clock deadline per generation request (0 = unbounded)",
+                    "0",
+                ))
+                .arg(ArgSpec::opt(
+                    "fault-seed",
+                    "wrap the engine in a seeded chaos fault injector (0 = off)",
+                    "0",
+                ))
+                .arg(ArgSpec::flag(
+                    "degrade",
+                    "enable the precision degradation ladder under pool pressure",
+                ))
                 .arg(ArgSpec::opt("seed", "workload seed", "1")),
         )
         .subcommand(
@@ -245,6 +260,9 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
     let fmt = weights_fmt(args)?;
     let kv_fmt = WeightFormat::by_name(&args.get_str("kv-fmt")?)?;
     let kv_tau = args.get_f32("kv-tau")?;
+    // Chaos mode: wrap the engine in a seeded deterministic fault injector
+    // so the whole serving run is replayable from one seed.
+    let fault_seed = args.get_u64("fault-seed")?;
     let engine: Box<dyn Engine> = match args.get_str("engine")?.as_str() {
         // Native serving tiles attention across all host CPUs and backs
         // decode sessions with a shared paged KV block pool sized for the
@@ -253,10 +271,15 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
             let e = NativeEngine::load(&store, &model)?
                 .with_weight_format(fmt)?
                 .with_threads(0);
-            let opts =
-                KvCacheOptions::serving(e.config(), kv_fmt, SchedulerOptions::default().max_sessions)
-                    .with_repair_tau(kv_tau);
-            Box::new(e.with_kv_cache(opts)?)
+            let sessions = SchedulerOptions::default().max_sessions;
+            let opts = KvCacheOptions::serving(e.config(), kv_fmt, sessions)
+                .with_repair_tau(kv_tau);
+            let e = e.with_kv_cache(opts)?;
+            if fault_seed != 0 {
+                Box::new(FaultInjector::new(e, FaultPlan::chaos(fault_seed))?)
+            } else {
+                Box::new(e)
+            }
         }
         "pjrt" => {
             if fmt != WeightFormat::F32 {
@@ -271,7 +294,12 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
                     kv_fmt.label()
                 )));
             }
-            Box::new(PjrtEngine::load(&store, &model)?)
+            let e = PjrtEngine::load(&store, &model)?;
+            if fault_seed != 0 {
+                Box::new(FaultInjector::new(e, FaultPlan::chaos(fault_seed))?)
+            } else {
+                Box::new(e)
+            }
         }
         other => {
             return Err(lamp::Error::config(format!("unknown engine {other:?}")))
@@ -292,7 +320,14 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
         policy.label()
     );
     let dataset = Dataset::generate(domain, cfg.vocab, n, cfg.seq, 7, seed);
-    let mut server = Server::new(engine, std::time::Duration::from_millis(5));
+    let deadline_ms = args.get_u64("deadline-ms")?;
+    let degrade = args.get_flag("degrade");
+    let mut decode_opts = SchedulerOptions::default();
+    if degrade {
+        decode_opts.ladder = Some(DegradationLadder::default());
+    }
+    let mut server = Server::new(engine, std::time::Duration::from_millis(5))
+        .with_scheduler_options(decode_opts);
     let mut served = 0usize;
     for (i, seq) in dataset.sequences.into_iter().enumerate() {
         server.submit(InferenceRequest::new(i as u64, seq, policy))?;
@@ -310,14 +345,13 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
         let prompts =
             Dataset::generate(domain, cfg.vocab, gen_requests, prompt_len, 7, seed ^ 0x5eed);
         for (i, p) in prompts.sequences.into_iter().enumerate() {
-            server.submit_generate(GenerateRequest::new(
-                (n + i) as u64,
-                p,
-                gen_tokens,
-                policy,
-            ))?;
+            let mut req = GenerateRequest::new((n + i) as u64, p, gen_tokens, policy);
+            if deadline_ms > 0 {
+                req = req.with_deadline(std::time::Duration::from_millis(deadline_ms));
+            }
+            server.submit_generate(req)?;
         }
-        let events = server.serve_generation();
+        let events = server.serve_generation()?;
         let failed = events
             .iter()
             .filter(|e| matches!(e, lamp::coordinator::GenerateEvent::Failed { .. }))
@@ -389,6 +423,33 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
             "itl p50/p95".into(),
             format!("{:.1}/{:.1}ms", 1e3 * stats.itl_p50_s, 1e3 * stats.itl_p95_s),
         ]);
+        t.row(vec![
+            "retries/timeouts/canceled".into(),
+            format!(
+                "{}/{}/{}",
+                stats.generate_retries, stats.generate_timeouts, stats.generate_canceled
+            ),
+        ]);
+        if stats.faults_injected > 0 {
+            t.row(vec![
+                "faults injected".into(),
+                stats.faults_injected.to_string(),
+            ]);
+        }
+        if degrade {
+            t.row(vec![
+                "degrade/restore transitions".into(),
+                format!("{}/{}", stats.degrade_transitions, stats.restore_transitions),
+            ]);
+            t.row(vec![
+                "degraded admissions".into(),
+                stats.degraded_admissions.to_string(),
+            ]);
+            t.row(vec![
+                "ladder rung".into(),
+                format!("{} ({})", stats.ladder_rung, stats.ladder_rung_name),
+            ]);
+        }
     }
     t.print();
     Ok(())

@@ -73,6 +73,35 @@ use super::weights::Weights;
 use crate::error::{Error, Result};
 use crate::linalg::matmul::matvec_bias_into_wt;
 use std::sync::Arc;
+use std::time::Duration;
+
+/// What a [`StepFaults`] hook decided for one decode step.
+#[derive(Debug, Clone)]
+pub enum StepFaultVerdict {
+    /// Run the step normally.
+    Proceed,
+    /// Run the step normally after an artificial latency.
+    Delay(Duration),
+    /// Fail the step with this error *before any state changes* — the
+    /// session stays consistent and the same token can be re-fed.
+    Fail(Error),
+    /// Poison the session permanently: this and every later step fail
+    /// with a non-retryable error until `reset`/`reseat`.
+    Poison(String),
+}
+
+/// Per-step fault hook consulted at the top of
+/// [`DecodeSession::decode_step`], before any session state changes.
+///
+/// Implementations must be deterministic functions of the arguments —
+/// `(session_seed, pos, attempt)` — so a chaos schedule replays exactly
+/// from its seed regardless of thread timing. `attempt` counts the
+/// consecutive injected failures already served at this position (0 on
+/// the first try), letting a hook model transient faults that clear on
+/// retry as well as multi-attempt faults that exhaust a retry budget.
+pub trait StepFaults: Send + Sync {
+    fn check(&self, session_seed: u64, pos: usize, attempt: u32) -> StepFaultVerdict;
+}
 
 /// Incremental decoding state bound to a model's weights.
 ///
@@ -105,6 +134,17 @@ pub struct DecodeSession<'w> {
     gather: Vec<f32>,
     normq: Vec<f32>,
     logits: Vec<f32>,
+    /// Fault-injection hook (installed by `coordinator::faults`); `None`
+    /// on real sessions. Survives `reset`/`reseat` — a recycled slot
+    /// still belongs to the injector-wrapped engine that opened it.
+    faults: Option<Arc<dyn StepFaults>>,
+    /// Set once a `Poison` verdict fires; every later step fails
+    /// non-retryably until `reset`/`reseat`.
+    poisoned: Option<String>,
+    /// Position of the last injected failure, with the count of
+    /// consecutive injected failures served there (the `attempt` key).
+    fault_pos: usize,
+    fault_attempts: u32,
 }
 
 impl<'w> DecodeSession<'w> {
@@ -157,7 +197,18 @@ impl<'w> DecodeSession<'w> {
             gather: Vec::new(),
             normq: Vec::with_capacity(d),
             logits: vec![0.0; cfg.vocab],
+            faults: None,
+            poisoned: None,
+            fault_pos: 0,
+            fault_attempts: 0,
         }
+    }
+
+    /// Install (or clear) a per-step fault hook. Serving code never calls
+    /// this directly — `coordinator::faults::FaultInjector` installs its
+    /// seeded hook on every session it opens.
+    pub fn set_faults(&mut self, faults: Option<Arc<dyn StepFaults>>) {
+        self.faults = faults;
     }
 
     /// Model configuration.
@@ -213,6 +264,9 @@ impl<'w> DecodeSession<'w> {
     /// before feeding anything.
     pub fn reset(&mut self) {
         self.pos = 0;
+        self.poisoned = None;
+        self.fault_pos = 0;
+        self.fault_attempts = 0;
         self.kv.clear();
         self.stats = LampStats {
             recomputed: 0,
@@ -278,6 +332,33 @@ impl<'w> DecodeSession<'w> {
     /// the typed [`Error::Resource`] *before any state changes*, so the
     /// scheduler can preempt the session and recompute it later.
     pub fn decode_step(&mut self, token: u32) -> Result<()> {
+        if let Some(msg) = &self.poisoned {
+            return Err(Error::runtime(format!("session poisoned: {msg}")));
+        }
+        if let Some(hook) = &self.faults {
+            let attempt = if self.fault_pos == self.pos { self.fault_attempts } else { 0 };
+            match hook.check(self.seed, self.pos, attempt) {
+                StepFaultVerdict::Proceed => {
+                    self.fault_pos = self.pos;
+                    self.fault_attempts = 0;
+                }
+                StepFaultVerdict::Delay(d) => {
+                    std::thread::sleep(d);
+                    self.fault_pos = self.pos;
+                    self.fault_attempts = 0;
+                }
+                StepFaultVerdict::Fail(e) => {
+                    self.fault_pos = self.pos;
+                    self.fault_attempts = attempt + 1;
+                    return Err(e);
+                }
+                StepFaultVerdict::Poison(msg) => {
+                    let err = Error::runtime(format!("session poisoned: {msg}"));
+                    self.poisoned = Some(msg);
+                    return Err(err);
+                }
+            }
+        }
         let cfg = &self.weights.config;
         let d = cfg.d_model;
         let heads = cfg.heads;

@@ -47,7 +47,7 @@ pub mod weights;
 pub use attention::{AttentionPrecision, LampStats, SiteStats};
 pub use config::ModelConfig;
 pub use forward::{forward, forward_with, ForwardOutput, ForwardScratch};
-pub use kvcache::DecodeSession;
+pub use kvcache::{DecodeSession, StepFaultVerdict, StepFaults};
 pub use kvstore::{KvBlockPool, KvCacheOptions, KvPoolStats, PagedKvCache};
 pub use plan::{KvPrecision, PrecisionPlan, SitePrecision, WeightPrecision};
 pub use sampler::{

@@ -1,0 +1,492 @@
+//! Chaos suite for the fault-tolerant serving plane (PR 6).
+//!
+//! Global invariant, pinned over several distinct fault seeds: under a
+//! deterministic `FaultPlan` every admitted request either **completes
+//! bit-identical to solo decode** under its final effective policy, or
+//! ends in **exactly one typed failure event** whose streamed tokens are
+//! a prefix of the solo stream — never lost tokens, never duplicated
+//! tokens, never double-counted `LampStats`. The suite also pins replay
+//! determinism, the degradation ladder's down-and-back-up cycle,
+//! deadline/cancellation semantics, and the run-budget backstop.
+
+use lamp::coordinator::{
+    DegradationLadder, Engine, FaultInjector, FaultPlan, GenerateEvent, GenerateRequest,
+    KvCacheOptions, NativeEngine, PrecisionPolicy, RetryPolicy, Rule, Scheduler,
+    SchedulerOptions, WeightFormat,
+};
+use lamp::error::Error;
+use lamp::model::{Decode, ModelConfig, Weights};
+use lamp::util::Rng;
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Per-request fold of an event stream, asserting stream hygiene as it
+/// goes: contiguous token indices, no events after a terminal, at most
+/// one terminal per id.
+struct Folded {
+    streamed: HashMap<u64, Vec<u32>>,
+    finished: HashMap<u64, lamp::coordinator::GenerateResponse>,
+    failed: HashMap<u64, Error>,
+}
+
+fn fold(events: Vec<GenerateEvent>, ctx: &str) -> Folded {
+    let mut f = Folded {
+        streamed: HashMap::new(),
+        finished: HashMap::new(),
+        failed: HashMap::new(),
+    };
+    for ev in events {
+        match ev {
+            GenerateEvent::Token { id, token, index } => {
+                assert!(
+                    !f.finished.contains_key(&id) && !f.failed.contains_key(&id),
+                    "{ctx}: id {id} streamed a token after its terminal event"
+                );
+                let v = f.streamed.entry(id).or_default();
+                assert_eq!(
+                    index,
+                    v.len(),
+                    "{ctx}: id {id} token indices must be contiguous"
+                );
+                v.push(token);
+            }
+            GenerateEvent::Finished(r) => {
+                assert!(
+                    !f.failed.contains_key(&r.id),
+                    "{ctx}: id {} finished after failing",
+                    r.id
+                );
+                let id = r.id;
+                assert!(
+                    f.finished.insert(id, r).is_none(),
+                    "{ctx}: id {id} finished twice"
+                );
+            }
+            GenerateEvent::Failed { id, error } => {
+                assert!(
+                    !f.finished.contains_key(&id),
+                    "{ctx}: id {id} failed after finishing"
+                );
+                assert!(
+                    f.failed.insert(id, error).is_none(),
+                    "{ctx}: id {id} failed twice"
+                );
+            }
+        }
+    }
+    f
+}
+
+#[test]
+fn chaos_every_stream_is_solo_identical_or_fails_exactly_once() {
+    // The tentpole invariant over five distinct fault seeds: the full
+    // chaos plan (step errors, resource spikes, delays, poisoning, open
+    // i/o failures) may fail individual requests, but every survivor is
+    // bit-identical to solo decode, every casualty ends in exactly one
+    // typed event with a solo-prefix stream, and LampStats stay
+    // single-counted across however many retries/preemptions happened.
+    let cfg = ModelConfig::nano();
+    let mut wrng = Rng::new(7);
+    let w = Weights::random(&cfg, &mut wrng).unwrap();
+    let oracle = NativeEngine::new(w.clone());
+    let policy = PrecisionPolicy::lamp(4, 0.1, Rule::Relaxed);
+    let mut total_injected = 0usize;
+
+    for plan_seed in [11u64, 23, 37, 53, 71] {
+        let ctx = format!("plan seed {plan_seed}");
+        let mut kv = KvCacheOptions::serving(&cfg, WeightFormat::F32, 4);
+        kv.sharing = false; // keep per-request causal_total comparable to solo
+        let engine = NativeEngine::new(w.clone()).with_kv_cache(kv).unwrap();
+        let inj = FaultInjector::new(engine, FaultPlan::chaos(plan_seed)).unwrap();
+        let opts = SchedulerOptions {
+            max_sessions: 4,
+            prefill_chunk: 4,
+            retry: RetryPolicy { max_retries: 8, backoff: Duration::ZERO, jitter: 0.0 },
+            max_run_steps: Some(200_000),
+            ..Default::default()
+        };
+        let mut sched = Scheduler::new(&inj, opts);
+
+        let mut prompts: HashMap<u64, Vec<u32>> = HashMap::new();
+        let mut solos: HashMap<u64, Vec<u32>> = HashMap::new();
+        for id in 0..8u64 {
+            let prompt: Vec<u32> = (0..3 + id as usize % 4)
+                .map(|j| ((id * 13 + j as u64 * 5 + 2) % 128) as u32)
+                .collect();
+            let max_new = 10 + id as usize % 6;
+            let (solo, _) =
+                oracle.generate(&prompt, max_new, &policy, Decode::Greedy, id).unwrap();
+            solos.insert(id, solo);
+            prompts.insert(id, prompt.clone());
+            sched.admit(GenerateRequest::new(id, prompt, max_new, policy).with_seed(id));
+        }
+
+        let mut events = Vec::new();
+        sched
+            .run_until_idle(&mut events)
+            .unwrap_or_else(|e| panic!("{ctx}: run budget tripped: {e}"));
+        let f = fold(events, &ctx);
+
+        for id in 0..8u64 {
+            let solo = &solos[&id];
+            let prompt_len = prompts[&id].len();
+            match (f.finished.get(&id), f.failed.get(&id)) {
+                (Some(r), None) => {
+                    assert_eq!(&r.tokens, solo, "{ctx}: id {id} diverged from solo");
+                    // No ladder configured: the effective policy is the
+                    // requested one, and it is the solo-oracle key.
+                    assert_eq!(r.policy, policy, "{ctx}: id {id} policy drifted");
+                    let streamed =
+                        f.streamed.get(&id).map(|v| v.as_slice()).unwrap_or(&[]);
+                    assert_eq!(
+                        streamed,
+                        r.generated(),
+                        "{ctx}: id {id} streamed tokens disagree with the response"
+                    );
+                    assert_eq!(
+                        r.stats.causal_total,
+                        cfg.causal_products(r.tokens.len()),
+                        "{ctx}: id {id} products double-counted across retries"
+                    );
+                }
+                (None, Some(_err)) => {
+                    // A casualty keeps what it streamed — and that must be
+                    // a prefix of the solo continuation.
+                    let streamed =
+                        f.streamed.get(&id).map(|v| v.as_slice()).unwrap_or(&[]);
+                    let cont = &solo[prompt_len..];
+                    assert!(
+                        streamed.len() <= cont.len()
+                            && streamed == &cont[..streamed.len()],
+                        "{ctx}: id {id} failed stream is not a solo prefix"
+                    );
+                }
+                _ => panic!("{ctx}: id {id} needs exactly one terminal event"),
+            }
+        }
+        let m = sched.metrics();
+        assert_eq!(m.completed, f.finished.len(), "{ctx}: completed miscounted");
+        assert_eq!(m.failed, f.failed.len(), "{ctx}: failed miscounted");
+        total_injected += m.faults_injected;
+    }
+    assert!(
+        total_injected > 0,
+        "five chaos seeds over ~600 fault draws must inject something"
+    );
+}
+
+#[test]
+fn chaos_replay_with_same_seed_is_deterministic() {
+    // Fault verdicts are pure functions of (plan seed, domain, session
+    // seed, position, attempt) — so replaying the same workload against
+    // the same plan seed yields identical per-request event streams,
+    // token for token and error for error.
+    let cfg = ModelConfig::nano();
+    let mut wrng = Rng::new(3);
+    let w = Weights::random(&cfg, &mut wrng).unwrap();
+
+    let run = |w: &Weights| -> (Folded, usize) {
+        let engine = NativeEngine::new(w.clone());
+        let inj = FaultInjector::new(engine, FaultPlan::chaos(0xD5EED)).unwrap();
+        let opts = SchedulerOptions {
+            max_sessions: 3,
+            prefill_chunk: 4,
+            retry: RetryPolicy { max_retries: 8, backoff: Duration::ZERO, jitter: 0.0 },
+            max_run_steps: Some(200_000),
+            ..Default::default()
+        };
+        let mut sched = Scheduler::new(&inj, opts);
+        for id in 0..6u64 {
+            let prompt: Vec<u32> =
+                (0..4 + id as usize % 3).map(|j| ((id * 17 + j as u64 * 3) % 128) as u32).collect();
+            let decode = if id % 2 == 0 {
+                Decode::Greedy
+            } else {
+                Decode::TopK { k: 4, temperature: 0.8 }
+            };
+            let policy = PrecisionPolicy::lamp(4, 0.1, Rule::Relaxed);
+            sched.admit(
+                GenerateRequest::new(id, prompt, 9 + id as usize % 5, policy)
+                    .with_seed(id)
+                    .with_decode(decode),
+            );
+        }
+        let mut events = Vec::new();
+        sched.run_until_idle(&mut events).unwrap();
+        let injected = sched.metrics().faults_injected;
+        (fold(events, "replay"), injected)
+    };
+
+    let (a, inj_a) = run(&w);
+    let (b, inj_b) = run(&w);
+    assert_eq!(inj_a, inj_b, "fault injection counts must replay exactly");
+    assert_eq!(a.streamed, b.streamed, "streamed tokens must replay exactly");
+    assert_eq!(
+        a.finished.keys().collect::<std::collections::BTreeSet<_>>(),
+        b.finished.keys().collect::<std::collections::BTreeSet<_>>(),
+        "the completed set must replay exactly"
+    );
+    for (id, ra) in &a.finished {
+        let rb = &b.finished[id];
+        assert_eq!(ra.tokens, rb.tokens, "id {id}: tokens must replay exactly");
+        assert_eq!(
+            ra.stats.causal_total, rb.stats.causal_total,
+            "id {id}: stats must replay exactly"
+        );
+    }
+    assert_eq!(
+        a.failed.keys().collect::<std::collections::BTreeSet<_>>(),
+        b.failed.keys().collect::<std::collections::BTreeSet<_>>(),
+        "the failed set must replay exactly"
+    );
+    for (id, ea) in &a.failed {
+        assert_eq!(
+            format!("{ea:?}"),
+            format!("{:?}", b.failed[id]),
+            "id {id}: the typed error must replay exactly"
+        );
+    }
+}
+
+#[test]
+fn chaos_degradation_ladder_steps_down_and_back_up() {
+    // Pool pressure (preemptions on a 1.5-session pool) must step the
+    // ladder down; a request admitted while degraded decodes under the
+    // stepped-down policy — and is bit-identical to solo decode under
+    // that *effective* policy; once the pool drains, the ladder steps
+    // back up to rung 0.
+    let cfg = ModelConfig::nano();
+    let mut wrng = Rng::new(9);
+    let w = Weights::random(&cfg, &mut wrng).unwrap();
+    let oracle = NativeEngine::new(w.clone());
+
+    let mut kv = KvCacheOptions::serving(&cfg, WeightFormat::F32, 1);
+    kv.block_size = 4;
+    kv.capacity_blocks = 12;
+    kv.sharing = false;
+    let engine = NativeEngine::new(w).with_kv_cache(kv).unwrap();
+
+    // occupancy_low = 0 keeps the rung pinned until the pool fully
+    // drains, so the fresh request below is guaranteed a degraded
+    // admission; restore_after = 4 lets the post-drain steps restore.
+    let ladder = DegradationLadder {
+        occupancy_high: 1.0,
+        occupancy_low: 0.0,
+        degrade_after: 1,
+        restore_after: 4,
+        ..Default::default()
+    };
+    ladder.validate().unwrap();
+    let opts = SchedulerOptions {
+        max_sessions: 2,
+        prefill_chunk: 4,
+        ladder: Some(ladder),
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(&engine, opts);
+
+    let policy = PrecisionPolicy::lamp(3, 0.05, Rule::Strict);
+    let mut prompts: HashMap<u64, Vec<u32>> = HashMap::new();
+    for id in 0..3u64 {
+        let prompt = vec![(id as u32 * 7 + 1) % 128, 5, 3, 2];
+        prompts.insert(id, prompt.clone());
+        sched.admit(GenerateRequest::new(id, prompt, 27, policy).with_seed(id));
+    }
+    let mut events = Vec::new();
+    let mut guard = 0usize;
+    while sched.metrics().ladder_rung == 0 {
+        guard += 1;
+        assert!(guard < 100_000, "pool pressure never moved the ladder");
+        events.extend(sched.step());
+    }
+    // Admit a fresh request while degraded: its admission must step the
+    // policy down, and its stream must match solo decode under the
+    // effective (reported) policy.
+    let fresh = vec![9, 8, 7, 6];
+    prompts.insert(3, fresh.clone());
+    sched.admit(GenerateRequest::new(3, fresh, 27, policy).with_seed(3));
+    sched.run_until_idle(&mut events).unwrap();
+
+    let f = fold(events, "ladder");
+    assert!(f.failed.is_empty(), "degradation must not fail requests");
+    assert_eq!(f.finished.len(), 4);
+    for (id, r) in &f.finished {
+        let (solo, _) = oracle
+            .generate(&prompts[id], 27, &r.policy, Decode::Greedy, *id)
+            .unwrap();
+        assert_eq!(
+            r.tokens, solo,
+            "id {id}: stream must match solo decode under the effective policy"
+        );
+    }
+    let degraded = &f.finished[&3];
+    assert_ne!(
+        degraded.policy, policy,
+        "the request admitted under pressure must carry a stepped-down policy"
+    );
+
+    let m = sched.metrics();
+    assert!(m.preemptions > 0, "the tiny pool must preempt");
+    assert!(m.degrade_transitions >= 1, "pressure must step the ladder down");
+    assert!(m.degraded_admissions >= 1, "the fresh request must admit degraded");
+
+    // Drained pool: idle steps are all-clear, so the ladder restores one
+    // rung per `restore_after` steps until it is back at 0.
+    for _ in 0..32 {
+        assert!(sched.step().is_empty(), "idle steps must emit nothing");
+    }
+    let m = sched.metrics();
+    assert!(m.restore_transitions >= 1, "a clear pool must step the ladder up");
+    assert_eq!(m.ladder_rung, 0, "the ladder must fully restore once clear");
+    assert_eq!(m.ladder_rung_name, "none");
+}
+
+#[test]
+fn chaos_deadlines_and_cancellation_fail_exactly_once_typed() {
+    let cfg = ModelConfig::nano();
+    let mut wrng = Rng::new(15);
+    let w = Weights::random(&cfg, &mut wrng).unwrap();
+    let engine = NativeEngine::new(w);
+    let policy = PrecisionPolicy::lamp(4, 0.1, Rule::Relaxed);
+    let mut sched = Scheduler::new(
+        &engine,
+        SchedulerOptions { max_sessions: 1, prefill_chunk: 4, ..Default::default() },
+    );
+
+    // (a) A zero TTFT deadline expires while queued: one typed timeout,
+    // no tokens, no session ever opened.
+    sched.admit(
+        GenerateRequest::new(0, vec![1, 2, 3], 8, policy)
+            .with_seed(0)
+            .with_ttft_deadline(Duration::ZERO),
+    );
+    let mut events = Vec::new();
+    sched.run_until_idle(&mut events).unwrap();
+    let f = fold(events, "ttft");
+    assert!(f.streamed.is_empty(), "an expired request must stream nothing");
+    assert!(f.failed.get(&0).is_some_and(Error::is_timeout));
+    assert_eq!(f.failed.len(), 1);
+
+    // (b) A token canceled before the run starts: one typed cancellation.
+    let mut req = GenerateRequest::new(1, vec![1, 2, 3], 8, policy).with_seed(1);
+    let token = req.cancel_token();
+    token.cancel();
+    sched.admit(req);
+    let mut events = Vec::new();
+    sched.run_until_idle(&mut events).unwrap();
+    let f = fold(events, "queued-cancel");
+    assert!(f.failed.get(&1).is_some_and(Error::is_canceled));
+    assert!(f.streamed.is_empty());
+
+    // (c) Cancellation mid-stream keeps every token already streamed —
+    // and those tokens are a prefix of the solo stream.
+    let mut req = GenerateRequest::new(2, vec![1, 2, 3], 24, policy).with_seed(2);
+    let token = req.cancel_token();
+    sched.admit(req);
+    let mut streamed: Vec<u32> = Vec::new();
+    let mut terminal: Option<Error> = None;
+    let mut guard = 0usize;
+    while !sched.is_idle() {
+        guard += 1;
+        assert!(guard < 100_000, "cancellation never took effect");
+        for ev in sched.step() {
+            match ev {
+                GenerateEvent::Token { token: t, .. } => {
+                    streamed.push(t);
+                    if streamed.len() == 3 {
+                        token.cancel();
+                    }
+                }
+                GenerateEvent::Failed { error, .. } => {
+                    assert!(terminal.is_none(), "exactly one terminal event");
+                    terminal = Some(error);
+                }
+                GenerateEvent::Finished(_) => panic!("a canceled request must not finish"),
+            }
+        }
+    }
+    let err = terminal.expect("the canceled request must fail");
+    assert!(err.is_canceled(), "cancellation must surface as Error::Canceled");
+    assert_eq!(streamed.len(), 3, "cancellation keeps exactly the streamed prefix");
+    let (solo, _) = engine.generate(&[1, 2, 3], 24, &policy, Decode::Greedy, 2).unwrap();
+    assert_eq!(&streamed[..], &solo[3..6], "kept tokens must be a solo prefix");
+
+    let m = sched.metrics();
+    assert_eq!(m.timeouts, 1);
+    assert_eq!(m.canceled, 2);
+    assert_eq!(m.failed, 3);
+    assert_eq!(m.completed, 0);
+}
+
+#[test]
+fn chaos_run_budget_fails_wedged_queues_with_typed_timeouts() {
+    // A session opened outside the scheduler wedges the pool (7 of 8
+    // blocks held), permanently gating admission. The step budget must
+    // convert the would-be infinite spin into one typed timeout event
+    // per request plus a typed `Err` from the drive itself.
+    let cfg = ModelConfig::nano();
+    let mut wrng = Rng::new(21);
+    let w = Weights::random(&cfg, &mut wrng).unwrap();
+    let mut kv = KvCacheOptions::serving(&cfg, WeightFormat::F32, 1);
+    kv.block_size = 4;
+    kv.capacity_blocks = 8;
+    kv.sharing = false;
+    let engine = NativeEngine::new(w).with_kv_cache(kv).unwrap();
+    let policy = PrecisionPolicy::lamp(4, 0.1, Rule::Relaxed);
+
+    let mut wedge = engine.decode_session(&policy, 99).unwrap();
+    for t in 0..25u32 {
+        wedge.decode_step(t % 128).unwrap();
+    }
+
+    let opts = SchedulerOptions {
+        max_sessions: 2,
+        prefill_chunk: 4,
+        max_run_steps: Some(64),
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(&engine, opts);
+    for id in 0..2u64 {
+        // 8 prompt tokens need 2 blocks; only 1 is free: gated forever.
+        let req = GenerateRequest::new(id, vec![1, 2, 3, 4, 5, 6, 7, 8], 8, policy);
+        sched.admit(req.with_seed(id));
+    }
+    let mut events = Vec::new();
+    let err = sched.run_until_idle(&mut events).unwrap_err();
+    assert!(err.is_timeout(), "a tripped step budget must be Error::Timeout");
+    let mut ids: Vec<u64> = events
+        .iter()
+        .map(|e| match e {
+            GenerateEvent::Failed { id, error } => {
+                assert!(error.is_timeout(), "aborted requests must fail typed");
+                *id
+            }
+            _ => panic!("a gated queue must emit nothing but timeout failures"),
+        })
+        .collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1], "exactly one timeout event per request");
+    let m = sched.metrics();
+    assert_eq!(m.timeouts, 2);
+    assert_eq!(m.failed, 2);
+    assert_eq!(m.completed, 0);
+
+    // The wall-clock budget trips the same way.
+    let mut wall = Scheduler::new(
+        &engine,
+        SchedulerOptions {
+            max_sessions: 1,
+            max_run_wall: Some(Duration::from_millis(2)),
+            ..Default::default()
+        },
+    );
+    wall.admit(GenerateRequest::new(7, vec![1, 2, 3, 4, 5, 6, 7, 8], 8, policy).with_seed(7));
+    let mut events = Vec::new();
+    let err = wall.run_until_idle(&mut events).unwrap_err();
+    assert!(err.is_timeout());
+    assert!(matches!(
+        events.as_slice(),
+        [GenerateEvent::Failed { id: 7, error }] if error.is_timeout()
+    ));
+    drop(wedge);
+}

@@ -122,6 +122,7 @@ fn scheduler_failing_session_fails_only_its_request() {
         max_sessions: 2,
         prefill_chunk: 2,
         pool: Some(Arc::new(ThreadPool::new(2))),
+        ..Default::default()
     };
     let mut sched = Scheduler::new(&engine, opts);
     sched.admit(GenerateRequest::new(1, vec![1, 2, 3], 5, policy));
@@ -152,7 +153,7 @@ fn scheduler_failing_session_fails_only_its_request() {
     // The pool is not poisoned: the recycled slot serves new traffic and
     // still reproduces solo decode bit-for-bit.
     sched.admit(GenerateRequest::new(10, vec![5, 6], 4, policy));
-    let responses = sched.run_to_completion();
+    let responses = sched.run_to_completion().unwrap();
     assert_eq!(responses.len(), 1);
     let (want, _) = engine.generate(&[5, 6], 4, &policy, Decode::Greedy, 10).unwrap();
     assert_eq!(responses[0].tokens, want, "recycled slot leaked state");
@@ -168,7 +169,7 @@ fn scheduler_all_sessions_failing_still_drains() {
     let policy = PrecisionPolicy::reference();
     let mut sched = Scheduler::new(
         &engine,
-        SchedulerOptions { max_sessions: 2, prefill_chunk: 1, pool: None },
+        SchedulerOptions { max_sessions: 2, prefill_chunk: 1, pool: None, ..Default::default() },
     );
     for id in 0..4u64 {
         sched.admit(GenerateRequest::new(id, vec![1, 9999], 3, policy));

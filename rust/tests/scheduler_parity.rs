@@ -124,6 +124,7 @@ fn randomized_schedules_match_solo_generate() {
             max_sessions: rng.range(1, 5),
             prefill_chunk: rng.range(1, 5),
             pool: if rng.below(2) == 0 { Some(pool.clone()) } else { None },
+            ..Default::default()
         };
         let (responses, streams) = run_schedule(&engine, reqs.clone(), opts, &mut rng);
         assert_eq!(responses.len(), n, "trial {trial}: lost responses");
@@ -195,6 +196,7 @@ fn arrival_order_cannot_change_any_stream() {
             max_sessions,
             prefill_chunk,
             pool: if threads == 0 { None } else { Some(Arc::new(ThreadPool::new(threads))) },
+            ..Default::default()
         };
         let mut order = reqs.clone();
         // A different arrival permutation each round.
@@ -258,7 +260,7 @@ fn prefix_sharing_streams_bit_identical_to_unshared() {
     // publishes the prefix blocks, the later ones adopt them.
     let mut sched = Scheduler::new(
         &shared_engine,
-        SchedulerOptions { max_sessions: 2, prefill_chunk: 3, pool: None },
+        SchedulerOptions { max_sessions: 2, prefill_chunk: 3, pool: None, ..Default::default() },
     );
     let mut responses = Vec::new();
     let mut queue: Vec<GenerateRequest> = reqs.clone();
@@ -310,4 +312,68 @@ fn prefix_sharing_streams_bit_identical_to_unshared() {
         shared_products < solo_products,
         "sharing saved nothing: {shared_products} vs {solo_products}"
     );
+}
+
+#[test]
+fn preemption_and_fault_injection_compose_bit_identically() {
+    // PR-6 tentpole pin: a tiny KV pool (forcing preemption) combined with
+    // injected transient step faults and delays (forcing in-place retries)
+    // must leave every stream bit-identical to solo decode and every
+    // request's LampStats single-counted — the retry path re-feeds, never
+    // re-samples, and preempted sessions re-count their prefix from
+    // scratch exactly as without injection.
+    use lamp::coordinator::{
+        FaultInjector, FaultPlan, KvCacheOptions, RetryPolicy, WeightFormat,
+    };
+    use std::time::Duration;
+
+    let cfg = ModelConfig::nano();
+    let mut wrng = Rng::new(47);
+    let w = Weights::random(&cfg, &mut wrng).unwrap();
+    let oracle = NativeEngine::new(w.clone());
+
+    let mut kv_opts = KvCacheOptions::serving(&cfg, WeightFormat::F32, 1);
+    kv_opts.block_size = 4;
+    kv_opts.capacity_blocks = 12; // ~1.5 full-context sessions
+    kv_opts.sharing = false; // keep per-request stats comparable to solo
+    let engine = NativeEngine::new(w).with_kv_cache(kv_opts).unwrap();
+    // Transient faults + delays only: every injected failure is retryable,
+    // so with a generous retry budget no request may fail.
+    let plan = FaultPlan::quiet(0xC4A05)
+        .with_step_errors(0.3)
+        .with_delay(0.1, Duration::from_micros(50));
+    let inj = FaultInjector::new(engine, plan).unwrap();
+
+    let policy = PrecisionPolicy::lamp(3, 0.05, Rule::Strict);
+    let opts = SchedulerOptions {
+        max_sessions: 2,
+        prefill_chunk: 4,
+        retry: RetryPolicy { max_retries: 30, backoff: Duration::ZERO, jitter: 0.0 },
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(&inj, opts);
+    let mut solos = Vec::new();
+    for id in 0..3u64 {
+        let prompt = vec![(id as u32 * 11 + 3) % 128, 7, 9, 2];
+        solos.push(oracle.generate(&prompt, 27, &policy, Decode::Greedy, id).unwrap());
+        sched.admit(GenerateRequest::new(id, prompt, 27, policy).with_seed(id));
+    }
+    let mut responses = sched.run_to_completion().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), 3, "a retryable-only fault plan may fail nothing");
+    for (r, (toks, rate)) in responses.iter().zip(&solos) {
+        assert_eq!(&r.tokens, toks, "id {}: faults/preemption changed the stream", r.id);
+        assert_eq!(
+            r.stats.causal_total,
+            cfg.causal_products(r.tokens.len()),
+            "id {}: products double-counted across retries/preemption",
+            r.id
+        );
+        assert_eq!(r.stats.rate(), *rate, "id {}: recompute rate diverged", r.id);
+    }
+    let m = sched.metrics();
+    assert!(m.preemptions > 0, "the 1.5-session pool must force preemption");
+    assert!(m.retries > 0, "a 30% step-error rate must force retries");
+    assert!(m.faults_injected > 0, "injector counters must surface in metrics");
+    assert_eq!(m.failed, 0);
 }

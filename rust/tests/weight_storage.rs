@@ -168,7 +168,7 @@ fn scheduler_serves_generation_on_quantized_engine_bit_identically() {
     server
         .submit_generate(GenerateRequest::new(2, vec![9, 8], 4, policy))
         .unwrap();
-    let events = server.serve_generation();
+    let events = server.serve_generation().unwrap();
     let mut finished: Vec<_> = events
         .into_iter()
         .filter_map(|e| match e {
