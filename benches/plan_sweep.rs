@@ -16,7 +16,8 @@
 //! Results land in `BENCH_PR3.json` (override with `LAMP_BENCH_OUT`).
 //!
 //! ```bash
-//! cargo bench --bench plan_sweep
+//! cargo bench --bench plan_sweep            # full measurement (S=160)
+//! cargo bench --bench plan_sweep -- --smoke # CI scale: S=64, 1 sample
 //! ```
 
 use lamp::benchkit::{record_bench_section, Bencher, JsonObj};
@@ -53,10 +54,13 @@ fn drive(
 }
 
 fn main() {
+    // `--smoke` (CI): shorter context, one timed sample — the plan-activity
+    // assertions and the recorded rate metrics still run at full strength.
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let cfg = ModelConfig {
         name: "bench-plan".into(),
         vocab: 256,
-        seq: 160,
+        seq: if smoke { 64 } else { 160 },
         layers: 4,
         heads: 4,
         d_model: 128,
@@ -89,7 +93,11 @@ fn main() {
         "whole-model plan left a site inactive: {whole_rates:?}"
     );
 
-    let b = Bencher { warmup_iters: 1, sample_iters: 5, max_total: Duration::from_secs(90) };
+    let b = Bencher {
+        warmup_iters: if smoke { 0 } else { 1 },
+        sample_iters: if smoke { 1 } else { 5 },
+        max_total: Duration::from_secs(90),
+    };
     let mut tok_s = Vec::new();
     for (name, policy) in [
         ("reference plan", &reference),
@@ -114,10 +122,11 @@ fn main() {
     );
 
     let mut obj = JsonObj::new()
-        .str("model", "4 layers, 4 heads, d=128, vocab=256, S=160")
+        .str("model", &format!("4 layers, 4 heads, d=128, vocab=256, S={}", cfg.seq))
         .str("attention_policy", &attention_only.label())
         .str("whole_policy", &whole.label())
         .int("generated_tokens", new_tokens as u64)
+        .int("smoke", smoke as u64)
         .num("reference_tok_s", ref_tok_s)
         .num("attention_only_tok_s", attn_tok_s)
         .num("whole_model_tok_s", whole_tok_s);

@@ -17,10 +17,11 @@
 //! into `BENCH_PR2.json` (override with `LAMP_BENCH_OUT`).
 //!
 //! ```bash
-//! cargo bench --bench serving_load
+//! cargo bench --bench serving_load            # full measurement
+//! cargo bench --bench serving_load -- --smoke # CI scale: 8 reqs, 1 sample
 //! ```
 
-use lamp::benchkit::{record_bench_section, Bencher, JsonObj};
+use lamp::benchkit::{env_usize, record_bench_section, Bencher, JsonObj};
 use lamp::coordinator::{
     GenerateRequest, NativeEngine, PrecisionPolicy, Rule, Scheduler, SchedulerOptions,
 };
@@ -29,10 +30,6 @@ use lamp::model::{Decode, ModelConfig, Weights};
 use lamp::util::{Rng, ThreadPool};
 use std::sync::Arc;
 use std::time::Duration;
-
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
-}
 
 fn bench_out() -> std::path::PathBuf {
     std::env::var("LAMP_BENCH_OUT")
@@ -81,10 +78,13 @@ fn main() {
         batch: 1,
     };
     cfg.validate().expect("bench config");
+    // `--smoke` (CI): fewer requests, one timed sample — the parity guard
+    // and the recorded configuration metrics still run at full strength.
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut rng = Rng::new(23);
     let weights = Weights::random(&cfg, &mut rng).unwrap();
     let engine = NativeEngine::new(weights);
-    let n_req = env_usize("LAMP_BENCH_REQS", 24);
+    let n_req = env_usize("LAMP_BENCH_REQS", if smoke { 8 } else { 24 });
     let reqs = workload(&cfg, n_req, 99);
     let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let pool = Arc::new(ThreadPool::with_cpus(usize::MAX));
@@ -124,7 +124,11 @@ fn main() {
     }
 
     // --- Serial per-request decode (the baseline serving model). ---
-    let b = Bencher { warmup_iters: 1, sample_iters: 3, max_total: Duration::from_secs(120) };
+    let b = Bencher {
+        warmup_iters: if smoke { 0 } else { 1 },
+        sample_iters: if smoke { 1 } else { 3 },
+        max_total: Duration::from_secs(120),
+    };
     let serial = b.run(&format!("serial decode ({n_req} reqs, Zipf lengths)"), || {
         for r in &reqs {
             let (tokens, _) = engine
@@ -185,7 +189,8 @@ fn main() {
             .num("mean_active_sessions", m.mean_active_sessions)
             .int("max_sessions", opts.max_sessions as u64)
             .int("pool_threads", pool.size() as u64)
-            .int("host_cores", cores as u64),
+            .int("host_cores", cores as u64)
+            .int("smoke", smoke as u64),
     )
     .expect("write bench record");
     println!("recorded -> {}", path.display());

@@ -1,0 +1,548 @@
+//! Cross-PR bench-diff: compare a `BENCH_*.json` record against a
+//! committed baseline with per-metric tolerances.
+//!
+//! The bench records written by [`super::record_bench_section`] are JSON
+//! objects whose top-level values are single-line flat objects. This
+//! module parses that exact shape (no serde offline), classifies every
+//! metric by key, and reports which ones regressed:
+//!
+//! * **higher-better** (`*tok_s`, `*speedup`, …) fails when the current
+//!   value drops more than `perf_tolerance` below the baseline;
+//! * **lower-better** (`*_ms`, `*latency*`, …) fails when it rises more
+//!   than `perf_tolerance` above;
+//! * **two-sided** (counts, rates — the default) fails on any relative
+//!   change beyond `tolerance`, which defaults to exact;
+//! * **informational** (`host_cores`, `pool_threads`, …) never fails.
+//!
+//! Only metrics present in the *baseline* gate: a baseline can therefore
+//! commit just the configuration-constant subset of a record (counts and
+//! descriptor strings) and still catch a bench that silently stops
+//! reporting a metric — missing-in-current is always a failure. Metrics
+//! the current run adds are reported as informational drift.
+
+use crate::error::{Error, Result};
+
+/// A parsed bench-record value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Num(f64),
+    Str(String),
+    Null,
+}
+
+impl JsonValue {
+    fn render(&self) -> String {
+        match self {
+            JsonValue::Num(x) => format!("{x}"),
+            JsonValue::Str(s) => format!("{s:?}"),
+            JsonValue::Null => "null".to_string(),
+        }
+    }
+}
+
+/// How a metric is judged, decided from its key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricClass {
+    HigherBetter,
+    LowerBetter,
+    TwoSided,
+    Informational,
+}
+
+impl MetricClass {
+    pub fn label(self) -> &'static str {
+        match self {
+            MetricClass::HigherBetter => "higher-better",
+            MetricClass::LowerBetter => "lower-better",
+            MetricClass::TwoSided => "two-sided",
+            MetricClass::Informational => "informational",
+        }
+    }
+}
+
+/// Classify a metric key by substring, most specific list first.
+/// Environment-shaped keys are informational; throughputs are
+/// higher-better; durations and sizes are lower-better; everything else
+/// (counts, recompute rates) must match the baseline exactly.
+pub fn classify(key: &str) -> MetricClass {
+    const INFORMATIONAL: [&str; 5] = ["host", "cores", "threads", "workers", "wall_s"];
+    const HIGHER: [&str; 4] = ["tok_s", "speedup", "gflops", "throughput"];
+    const LOWER: [&str; 4] = ["_ms", "latency", "bytes", "_ns"];
+    if INFORMATIONAL.iter().any(|p| key.contains(p)) {
+        MetricClass::Informational
+    } else if HIGHER.iter().any(|p| key.contains(p)) {
+        MetricClass::HigherBetter
+    } else if LOWER.iter().any(|p| key.contains(p)) {
+        MetricClass::LowerBetter
+    } else {
+        MetricClass::TwoSided
+    }
+}
+
+/// Comparison tolerances.
+#[derive(Debug, Clone)]
+pub struct DiffOptions {
+    /// Relative tolerance for two-sided metrics (default: exact match).
+    pub tolerance: f64,
+    /// Allowed fractional perf regression for higher/lower-better metrics
+    /// (default 0.25: CI machines are noisy; the gate is for collapses,
+    /// not single-digit scatter).
+    pub perf_tolerance: f64,
+    /// Keys (or `section.key` paths) excluded from the comparison.
+    pub skip: Vec<String>,
+}
+
+impl Default for DiffOptions {
+    fn default() -> Self {
+        DiffOptions { tolerance: 1e-9, perf_tolerance: 0.25, skip: Vec::new() }
+    }
+}
+
+impl DiffOptions {
+    fn skipped(&self, section: &str, key: &str) -> bool {
+        let path = format!("{section}.{key}");
+        self.skip.iter().any(|s| s == key || *s == path)
+    }
+}
+
+/// Verdict for one metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiffStatus {
+    /// Unchanged (within tolerance zero).
+    Pass,
+    /// Changed but not gating: within tolerance, informational, string
+    /// drift, or a metric the baseline does not know.
+    Drift,
+    /// Out of tolerance in the bad direction (or type changed).
+    Regression,
+    /// Present in the baseline, absent from the current record.
+    Missing,
+}
+
+/// One compared metric.
+#[derive(Debug, Clone)]
+pub struct MetricDiff {
+    pub section: String,
+    pub key: String,
+    pub class: MetricClass,
+    pub baseline: String,
+    pub current: String,
+    /// Relative change for numeric pairs.
+    pub rel: Option<f64>,
+    pub status: DiffStatus,
+    pub note: String,
+}
+
+/// The full comparison result.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub diffs: Vec<MetricDiff>,
+}
+
+impl DiffReport {
+    /// Metrics that gate (regressions and missing metrics).
+    pub fn failures(&self) -> Vec<&MetricDiff> {
+        self.diffs
+            .iter()
+            .filter(|d| matches!(d.status, DiffStatus::Regression | DiffStatus::Missing))
+            .collect()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.failures().is_empty()
+    }
+
+    /// Human-readable report: one line per non-passing metric plus a
+    /// summary tail.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diffs {
+            let tag = match d.status {
+                DiffStatus::Pass => continue,
+                DiffStatus::Drift => "drift",
+                DiffStatus::Regression => "FAIL",
+                DiffStatus::Missing => "FAIL",
+            };
+            let rel = match d.rel {
+                Some(r) => format!(" ({:+.1}%)", 100.0 * r),
+                None => String::new(),
+            };
+            out.push_str(&format!(
+                "[{tag}] {}.{}: {} -> {}{rel} [{}] {}\n",
+                d.section,
+                d.key,
+                d.baseline,
+                d.current,
+                d.class.label(),
+                d.note
+            ));
+        }
+        let failures = self.failures().len();
+        out.push_str(&format!(
+            "bench-diff: {} metrics compared, {} failure{}\n",
+            self.diffs.len(),
+            failures,
+            if failures == 1 { "" } else { "s" }
+        ));
+        out
+    }
+}
+
+/// Parse a bench record: top-level JSON object, one single-line flat
+/// object per section per line (the exact shape
+/// [`super::record_bench_section`] writes).
+pub fn parse_bench_text(text: &str) -> Result<Vec<(String, Vec<(String, JsonValue)>)>> {
+    let mut out: Vec<(String, Vec<(String, JsonValue)>)> = Vec::new();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        if line.is_empty() || line == "{" || line == "}" {
+            continue;
+        }
+        let (key, val) = line.split_once(':').ok_or_else(|| {
+            Error::config(format!("bench record line is not a section: {line:?}"))
+        })?;
+        let section = key.trim().trim_matches('"').to_string();
+        out.push((section, parse_flat_object(val.trim())?));
+    }
+    Ok(out)
+}
+
+/// Parse one single-line flat JSON object (string values may contain
+/// commas and escaped quotes; numbers may be scientific; `null` allowed).
+fn parse_flat_object(s: &str) -> Result<Vec<(String, JsonValue)>> {
+    let inner = s
+        .strip_prefix('{')
+        .and_then(|t| t.strip_suffix('}'))
+        .ok_or_else(|| Error::config(format!("bench section is not a flat object: {s:?}")))?;
+    let chars: Vec<char> = inner.chars().collect();
+    let n = chars.len();
+    let mut i = 0usize;
+    let mut out = Vec::new();
+    loop {
+        while i < n && (chars[i].is_whitespace() || chars[i] == ',') {
+            i += 1;
+        }
+        if i >= n {
+            break;
+        }
+        if chars[i] != '"' {
+            return Err(Error::config(format!("expected a quoted key in {s:?}")));
+        }
+        i += 1;
+        let key = read_string(&chars, &mut i)?;
+        while i < n && chars[i].is_whitespace() {
+            i += 1;
+        }
+        if i >= n || chars[i] != ':' {
+            return Err(Error::config(format!("missing ':' after key {key:?}")));
+        }
+        i += 1;
+        while i < n && chars[i].is_whitespace() {
+            i += 1;
+        }
+        let value = if i < n && chars[i] == '"' {
+            i += 1;
+            JsonValue::Str(read_string(&chars, &mut i)?)
+        } else {
+            let start = i;
+            while i < n && chars[i] != ',' {
+                i += 1;
+            }
+            let token: String = chars[start..i].iter().collect();
+            let token = token.trim();
+            if token == "null" {
+                JsonValue::Null
+            } else {
+                JsonValue::Num(token.parse().map_err(|_| {
+                    Error::config(format!("bad numeric value {token:?} for key {key:?}"))
+                })?)
+            }
+        };
+        out.push((key, value));
+    }
+    Ok(out)
+}
+
+/// Read a string body; `i` points past the opening quote and is left past
+/// the closing one. Escapes are the two `record_bench_section` emits.
+fn read_string(chars: &[char], i: &mut usize) -> Result<String> {
+    let mut out = String::new();
+    while *i < chars.len() {
+        match chars[*i] {
+            '\\' => {
+                *i += 1;
+                if *i < chars.len() {
+                    out.push(chars[*i]);
+                    *i += 1;
+                }
+            }
+            '"' => {
+                *i += 1;
+                return Ok(out);
+            }
+            c => {
+                out.push(c);
+                *i += 1;
+            }
+        }
+    }
+    Err(Error::config("unterminated string in bench record"))
+}
+
+/// Compare two bench-record texts. Baseline metrics gate; current-only
+/// metrics are informational.
+pub fn compare(baseline: &str, current: &str, opts: &DiffOptions) -> Result<DiffReport> {
+    let base = parse_bench_text(baseline)?;
+    let cur = parse_bench_text(current)?;
+    let mut diffs = Vec::new();
+
+    for (section, fields) in &base {
+        let cur_fields = cur.iter().find(|(s, _)| s == section).map(|(_, f)| f);
+        for (key, bval) in fields {
+            if opts.skipped(section, key) {
+                continue;
+            }
+            let cval = cur_fields.and_then(|f| f.iter().find(|(k, _)| k == key));
+            diffs.push(diff_metric(section, key, bval, cval.map(|(_, v)| v), opts));
+        }
+    }
+    for (section, fields) in &cur {
+        let base_fields = base.iter().find(|(s, _)| s == section).map(|(_, f)| f);
+        for (key, cval) in fields {
+            if opts.skipped(section, key) {
+                continue;
+            }
+            let known = base_fields.is_some_and(|f| f.iter().any(|(k, _)| k == key));
+            if !known {
+                diffs.push(MetricDiff {
+                    section: section.clone(),
+                    key: key.clone(),
+                    class: classify(key),
+                    baseline: "absent".to_string(),
+                    current: cval.render(),
+                    rel: None,
+                    status: DiffStatus::Drift,
+                    note: "not in baseline".to_string(),
+                });
+            }
+        }
+    }
+    Ok(DiffReport { diffs })
+}
+
+fn diff_metric(
+    section: &str,
+    key: &str,
+    baseline: &JsonValue,
+    current: Option<&JsonValue>,
+    opts: &DiffOptions,
+) -> MetricDiff {
+    let class = classify(key);
+    let mut d = MetricDiff {
+        section: section.to_string(),
+        key: key.to_string(),
+        class,
+        baseline: baseline.render(),
+        current: "absent".to_string(),
+        rel: None,
+        status: DiffStatus::Pass,
+        note: String::new(),
+    };
+    let Some(current) = current else {
+        d.status = DiffStatus::Missing;
+        d.note = "metric disappeared from the current record".to_string();
+        return d;
+    };
+    d.current = current.render();
+
+    match (baseline, current) {
+        (JsonValue::Str(b), JsonValue::Str(c)) => {
+            if b != c {
+                d.status = DiffStatus::Drift;
+                d.note = "descriptor changed".to_string();
+            }
+        }
+        (JsonValue::Null, JsonValue::Null) => {}
+        (JsonValue::Num(b), JsonValue::Num(c)) => {
+            let rel = (c - b) / b.abs().max(1e-12);
+            d.rel = Some(rel);
+            let (bad, tol) = match class {
+                MetricClass::Informational => (false, f64::INFINITY),
+                MetricClass::HigherBetter => (rel < -opts.perf_tolerance, opts.perf_tolerance),
+                MetricClass::LowerBetter => (rel > opts.perf_tolerance, opts.perf_tolerance),
+                MetricClass::TwoSided => {
+                    ((c - b).abs() > opts.tolerance * b.abs().max(1.0), opts.tolerance)
+                }
+            };
+            if bad {
+                d.status = DiffStatus::Regression;
+                d.note = format!("beyond the {:.1}% tolerance", 100.0 * tol);
+            } else if c != b {
+                d.status = DiffStatus::Drift;
+                d.note = "within tolerance".to_string();
+            }
+        }
+        _ => {
+            d.status = DiffStatus::Regression;
+            d.note = "value type changed".to_string();
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(sections: &[(&str, &str)]) -> String {
+        let body = sections
+            .iter()
+            .map(|(name, obj)| format!("  \"{name}\": {obj}"))
+            .collect::<Vec<_>>()
+            .join(",\n");
+        format!("{{\n{body}\n}}\n")
+    }
+
+    const BASE: &str = r#"{"requests": 8, "continuous_tok_s": 1200.5, "ttft_p95_ms": 40.0, "host_cores": 8, "model": "4 layers, d=128"}"#;
+
+    #[test]
+    fn identical_records_pass() {
+        let a = rec(&[("serving_load", BASE)]);
+        let report = compare(&a, &a, &DiffOptions::default()).unwrap();
+        assert!(report.passed(), "{}", report.render());
+        assert!(report.diffs.iter().all(|d| d.status == DiffStatus::Pass));
+    }
+
+    #[test]
+    fn tolerated_drift_passes_and_is_reported() {
+        let a = rec(&[("serving_load", BASE)]);
+        // 10% throughput drop and 10% TTFT rise: inside the 25% gate.
+        let b = rec(&[(
+            "serving_load",
+            r#"{"requests": 8, "continuous_tok_s": 1080.45, "ttft_p95_ms": 44.0, "host_cores": 8, "model": "4 layers, d=128"}"#,
+        )]);
+        let report = compare(&a, &b, &DiffOptions::default()).unwrap();
+        assert!(report.passed(), "{}", report.render());
+        let drifted: Vec<&str> = report
+            .diffs
+            .iter()
+            .filter(|d| d.status == DiffStatus::Drift)
+            .map(|d| d.key.as_str())
+            .collect();
+        assert_eq!(drifted, vec!["continuous_tok_s", "ttft_p95_ms"]);
+    }
+
+    #[test]
+    fn perf_regression_fails_both_directions() {
+        let a = rec(&[("serving_load", BASE)]);
+        // Throughput halves (higher-better) and TTFT doubles (lower-better).
+        let b = rec(&[(
+            "serving_load",
+            r#"{"requests": 8, "continuous_tok_s": 600.0, "ttft_p95_ms": 80.0, "host_cores": 8, "model": "4 layers, d=128"}"#,
+        )]);
+        let report = compare(&a, &b, &DiffOptions::default()).unwrap();
+        let failed: Vec<&str> = report.failures().iter().map(|d| d.key.as_str()).collect();
+        assert_eq!(failed, vec!["continuous_tok_s", "ttft_p95_ms"]);
+        assert!(report.render().contains("FAIL"));
+    }
+
+    #[test]
+    fn missing_metric_fails() {
+        let a = rec(&[("serving_load", BASE)]);
+        let b = rec(&[(
+            "serving_load",
+            r#"{"requests": 8, "ttft_p95_ms": 40.0, "host_cores": 8, "model": "4 layers, d=128"}"#,
+        )]);
+        let report = compare(&a, &b, &DiffOptions::default()).unwrap();
+        let failures = report.failures();
+        assert_eq!(failures.len(), 1);
+        assert_eq!(failures[0].key, "continuous_tok_s");
+        assert_eq!(failures[0].status, DiffStatus::Missing);
+        // A missing whole section fails every metric of that section.
+        let empty = rec(&[("other", r#"{"x": 1}"#)]);
+        let report = compare(&a, &empty, &DiffOptions::default()).unwrap();
+        assert_eq!(report.failures().len(), 5);
+    }
+
+    #[test]
+    fn counts_gate_exactly_but_informational_never_fails() {
+        let a = rec(&[("serving_load", BASE)]);
+        let b = rec(&[(
+            "serving_load",
+            r#"{"requests": 9, "continuous_tok_s": 1200.5, "ttft_p95_ms": 40.0, "host_cores": 64, "model": "4 layers, d=128"}"#,
+        )]);
+        let report = compare(&a, &b, &DiffOptions::default()).unwrap();
+        let failed: Vec<&str> = report.failures().iter().map(|d| d.key.as_str()).collect();
+        assert_eq!(failed, vec!["requests"], "host_cores must stay informational");
+    }
+
+    #[test]
+    fn string_drift_and_extra_metrics_are_informational() {
+        let a = rec(&[("serving_load", r#"{"model": "4 layers", "requests": 8}"#)]);
+        let b = rec(&[(
+            "serving_load",
+            r#"{"model": "5 layers", "requests": 8, "brand_new_metric": 3.5}"#,
+        )]);
+        let report = compare(&a, &b, &DiffOptions::default()).unwrap();
+        assert!(report.passed(), "{}", report.render());
+        assert_eq!(
+            report.diffs.iter().filter(|d| d.status == DiffStatus::Drift).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn skip_list_silences_metrics() {
+        let a = rec(&[("serving_load", r#"{"requests": 8, "continuous_tok_s": 1000.0}"#)]);
+        let b = rec(&[("serving_load", r#"{"requests": 9, "continuous_tok_s": 10.0}"#)]);
+        let opts = DiffOptions {
+            skip: vec!["serving_load.requests".to_string(), "continuous_tok_s".to_string()],
+            ..Default::default()
+        };
+        let report = compare(&a, &b, &opts).unwrap();
+        assert!(report.passed());
+        assert!(report.diffs.is_empty());
+    }
+
+    #[test]
+    fn parser_handles_commas_escapes_scientific_and_null() {
+        let obj = super::super::JsonObj::new()
+            .str("workload", r#"Zipf(s=1.1), 3 policies, "mixed" sampling"#)
+            .num("tiny", 1.5e-7)
+            .num("nan_becomes_null", f64::NAN)
+            .int("count", 42);
+        let text = rec(&[("sec", &obj.render())]);
+        let parsed = parse_bench_text(&text).unwrap();
+        assert_eq!(parsed.len(), 1);
+        let fields = &parsed[0].1;
+        assert_eq!(
+            fields[0].1,
+            JsonValue::Str(r#"Zipf(s=1.1), 3 policies, "mixed" sampling"#.to_string())
+        );
+        assert_eq!(fields[1].1, JsonValue::Num(1.5e-7));
+        assert_eq!(fields[2].1, JsonValue::Null);
+        assert_eq!(fields[3].1, JsonValue::Num(42.0));
+        // Round-trip through compare: identical text passes.
+        assert!(compare(&text, &text, &DiffOptions::default()).unwrap().passed());
+    }
+
+    #[test]
+    fn malformed_records_error() {
+        assert!(parse_bench_text("not json at all").is_err());
+        assert!(parse_flat_object(r#"{"k": }"#).is_err());
+        assert!(parse_flat_object(r#"{"k": "unterminated}"#).is_err());
+        assert!(parse_flat_object(r#"{"k": bogus}"#).is_err());
+    }
+
+    #[test]
+    fn classification_is_substring_based() {
+        assert_eq!(classify("continuous_tok_s"), MetricClass::HigherBetter);
+        assert_eq!(classify("speedup"), MetricClass::HigherBetter);
+        assert_eq!(classify("ttft_p95_ms"), MetricClass::LowerBetter);
+        assert_eq!(classify("kv_resident_bytes"), MetricClass::LowerBetter);
+        assert_eq!(classify("host_cores"), MetricClass::Informational);
+        assert_eq!(classify("pool_threads"), MetricClass::Informational);
+        assert_eq!(classify("requests"), MetricClass::TwoSided);
+        assert_eq!(classify("whole_rate_mlp"), MetricClass::TwoSided);
+    }
+}

@@ -1,8 +1,13 @@
 //! Benchmark harness (criterion is unavailable offline).
 //!
 //! Provides warmup + timed iterations, robust statistics (median, MAD,
-//! mean, p95), throughput reporting, and aligned table output used by the
-//! per-figure benches under `benches/`.
+//! mean, p95), throughput reporting, aligned table output used by the
+//! per-figure benches under `benches/`, and the cross-PR [`diff`] gate
+//! that compares `BENCH_*.json` records against committed baselines.
+
+pub mod diff;
+
+pub use diff::{compare as bench_diff, DiffOptions, DiffReport};
 
 use crate::util::timer::fmt_duration;
 use std::time::{Duration, Instant};
@@ -22,11 +27,7 @@ impl BenchStats {
     }
 
     pub fn median(&self) -> Duration {
-        let v = self.sorted_ns();
-        if v.is_empty() {
-            return Duration::ZERO;
-        }
-        Duration::from_nanos(v[v.len() / 2] as u64)
+        self.quantile(0.5)
     }
 
     pub fn mean(&self) -> Duration {
@@ -42,12 +43,18 @@ impl BenchStats {
     }
 
     pub fn p95(&self) -> Duration {
+        self.quantile(0.95)
+    }
+
+    /// Nearest-rank quantile over the samples (the shared crate-wide
+    /// convention, `metrics::stats::nearest_rank_index` — the old local
+    /// floor-index copy reported the max sample as p95 for n ≤ 20).
+    fn quantile(&self, q: f64) -> Duration {
         let v = self.sorted_ns();
         if v.is_empty() {
             return Duration::ZERO;
         }
-        let idx = ((v.len() as f64) * 0.95) as usize;
-        Duration::from_nanos(v[idx.min(v.len() - 1)] as u64)
+        Duration::from_nanos(v[crate::metrics::stats::nearest_rank_index(v.len(), q)] as u64)
     }
 
     /// Median absolute deviation (robust spread).
@@ -62,7 +69,8 @@ impl BenchStats {
         if devs.is_empty() {
             return Duration::ZERO;
         }
-        Duration::from_nanos(devs[devs.len() / 2] as u64)
+        let idx = crate::metrics::stats::nearest_rank_index(devs.len(), 0.5);
+        Duration::from_nanos(devs[idx] as u64)
     }
 
     /// One-line human-readable summary.
@@ -195,7 +203,7 @@ pub fn run_experiment_bench(name: &str) {
                 .to_string_lossy()
                 .to_string(),
         ),
-        quick: std::env::var("LAMP_BENCH_QUICK").is_ok(),
+        quick: env_bool("LAMP_BENCH_QUICK"),
     };
     let t0 = Instant::now();
     match crate::experiments::run(name, &opts) {
@@ -212,8 +220,27 @@ pub fn run_experiment_bench(name: &str) {
     }
 }
 
-fn env_usize(key: &str, default: usize) -> usize {
+/// Parse a `usize` env knob, falling back to `default` when unset or
+/// malformed. Shared by the bench binaries (`LAMP_BENCH_SEQS`, ...).
+pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Parse a boolean env gate by *truthiness*, not mere presence:
+/// `1`/`true`/`yes`/`on` (case-insensitive) enable it; anything else —
+/// including `0`, empty, and unset — disables it.
+///
+/// The previous `std::env::var(..).is_ok()` convention meant
+/// `LAMP_BENCH_QUICK=0` (or `=""`) still silenced the full run; every
+/// env gate goes through here now.
+pub fn env_bool(key: &str) -> bool {
+    matches!(
+        std::env::var(key)
+            .ok()
+            .map(|s| s.trim().to_ascii_lowercase())
+            .as_deref(),
+        Some("1" | "true" | "yes" | "on")
+    )
 }
 
 /// A flat JSON object rendered on one line — the unit the perf benches
@@ -396,6 +423,35 @@ mod tests {
         assert!(!text.contains("6.5"), "replaced section leaked: {text}");
         assert_eq!(text.matches("\"decode\"").count(), 1);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn env_bool_is_truthiness_not_presence() {
+        // Set/unset via a uniquely named var to avoid cross-test races.
+        let key = "LAMP_TEST_ENV_BOOL_GATE";
+        std::env::remove_var(key);
+        assert!(!env_bool(key), "unset must be false");
+        for truthy in ["1", "true", "YES", " on ", "True"] {
+            std::env::set_var(key, truthy);
+            assert!(env_bool(key), "{truthy:?} must enable the gate");
+        }
+        for falsy in ["0", "", "false", "no", "off", "2", "enabled"] {
+            std::env::set_var(key, falsy);
+            assert!(!env_bool(key), "{falsy:?} must NOT enable the gate");
+        }
+        std::env::remove_var(key);
+    }
+
+    #[test]
+    fn p95_nearest_rank_over_twenty_samples() {
+        let stats = BenchStats {
+            name: "t".into(),
+            samples: (1..=20).map(Duration::from_millis).collect(),
+        };
+        // Nearest-rank p95 of 20 samples is the 19th order statistic —
+        // the old floor-index convention reported the max (20ms).
+        assert_eq!(stats.p95(), Duration::from_millis(19));
+        assert_eq!(stats.median(), Duration::from_millis(10));
     }
 
     #[test]

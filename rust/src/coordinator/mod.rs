@@ -30,6 +30,7 @@ pub mod batcher;
 pub mod engine;
 pub mod faults;
 pub mod policy;
+pub mod replay;
 pub mod request;
 pub mod scheduler;
 pub mod server;
@@ -40,6 +41,7 @@ pub use batcher::Batcher;
 pub use engine::{Engine, EngineOutput, NativeEngine, PjrtEngine};
 pub use faults::{FaultInjector, FaultPlan, FaultStats};
 pub use policy::{DegradationLadder, DegradeRung, PrecisionPolicy, Rule, SitePolicy};
+pub use replay::{replay, ReplayOptions, ReplayReport};
 pub use request::{
     CancelToken, Deadline, GenerateRequest, GenerateResponse, InferenceRequest,
     InferenceResponse,

@@ -1,0 +1,245 @@
+//! Deterministic workload-trace replay over the scheduler.
+//!
+//! The replay driver feeds a [`TraceRequest`] list (see `data::traces`)
+//! through an unmodified [`Scheduler`] on a *virtual clock*: one scheduler
+//! iteration is one clock tick, and a trace request is admitted the first
+//! iteration whose tick reaches its `arrival_step`. When the scheduler
+//! drains before the next arrival, the clock jumps forward — idle gaps
+//! cost no wall time and, more importantly, no nondeterminism.
+//!
+//! Determinism contract: the scheduler steps sessions
+//! iteration-synchronously and keys every sampling stream by
+//! `(seed, site, position)`, so per-request token streams and LAMP
+//! counters depend only on the trace — not on the thread-pool size or the
+//! host's speed. Wall-clock outputs (TTFT/latency percentiles, retry
+//! backoff timing) are *not* deterministic and are reported separately;
+//! the trials subsystem excludes them from canonical output.
+
+use std::time::Instant;
+
+use super::engine::Engine;
+use super::policy::PrecisionPolicy;
+use super::request::{GenerateRequest, GenerateResponse};
+use super::scheduler::{DecodeMetrics, GenerateEvent, Scheduler, SchedulerOptions};
+use crate::data::traces::TraceRequest;
+use crate::error::{Error, Result};
+
+/// How a trace is turned into scheduler traffic.
+#[derive(Clone)]
+pub struct ReplayOptions {
+    /// Precision policy applied to every request of the trace.
+    pub policy: PrecisionPolicy,
+    /// Scheduler configuration (slot count, prefill chunk, pool, retry).
+    pub scheduler: SchedulerOptions,
+    /// Optional EOS token id applied to every request.
+    pub eos: Option<u32>,
+    /// Iteration budget; `None` derives a generous bound from the trace
+    /// (arrival span plus a per-token allowance) so a wedged replay
+    /// errors out instead of spinning forever.
+    pub max_steps: Option<usize>,
+}
+
+impl ReplayOptions {
+    pub fn new(policy: PrecisionPolicy) -> Self {
+        ReplayOptions {
+            policy,
+            scheduler: SchedulerOptions::default(),
+            eos: None,
+            max_steps: None,
+        }
+    }
+}
+
+/// Everything a replayed trace produced.
+#[derive(Debug)]
+pub struct ReplayReport {
+    /// Completed responses, sorted by request id.
+    pub responses: Vec<GenerateResponse>,
+    /// Failed requests as `(id, error message)`, sorted by id.
+    pub failures: Vec<(u64, String)>,
+    /// Scheduler metrics snapshot after the replay drained.
+    pub metrics: DecodeMetrics,
+    /// Scheduler iterations actually driven.
+    pub steps: usize,
+    /// Host wall time of the drive (NOT deterministic; for display only).
+    pub wall_s: f64,
+}
+
+/// Replay `trace` through a fresh scheduler over `engine`. Request ids
+/// are the trace indices, so outputs can be joined back to the trace.
+pub fn replay(
+    engine: &dyn Engine,
+    trace: &[TraceRequest],
+    opts: &ReplayOptions,
+) -> Result<ReplayReport> {
+    let budget = opts.max_steps.unwrap_or_else(|| {
+        let tokens: usize = trace.iter().map(|r| r.prompt.len() + r.new_tokens).sum();
+        let span = trace.last().map(|r| r.arrival_step).unwrap_or(0);
+        // 64 iterations of slack per token covers retries and chunked
+        // prefill at any slot count; the constant floor covers tiny traces.
+        span + 1024 + tokens * 64
+    });
+
+    let started = Instant::now();
+    let mut sched = Scheduler::new(engine, opts.scheduler.clone());
+    let mut events: Vec<GenerateEvent> = Vec::new();
+    let mut next = 0usize; // next trace index to admit
+    let mut vstep = 0usize; // virtual clock, in scheduler iterations
+    let mut iterations = 0usize;
+
+    loop {
+        while next < trace.len() && trace[next].arrival_step <= vstep {
+            let r = &trace[next];
+            let mut req = GenerateRequest::new(
+                next as u64,
+                r.prompt.clone(),
+                r.new_tokens,
+                opts.policy,
+            )
+            .with_decode(r.decode)
+            .with_seed(r.seed);
+            if let Some(eos) = opts.eos {
+                req = req.with_eos(eos);
+            }
+            sched.admit(req);
+            next += 1;
+        }
+        if sched.is_idle() {
+            if next >= trace.len() {
+                break;
+            }
+            // Idle gap: jump the virtual clock to the next arrival.
+            vstep = vstep.max(trace[next].arrival_step);
+            continue;
+        }
+        if iterations >= budget {
+            return Err(Error::timeout(format!(
+                "trace replay exceeded its {budget} iteration budget \
+                 ({} of {} requests still in flight)",
+                sched.pending() + sched.active(),
+                trace.len()
+            )));
+        }
+        iterations += 1;
+        events.extend(sched.step());
+        vstep += 1;
+    }
+
+    let mut responses = Vec::new();
+    let mut failures = Vec::new();
+    for event in events {
+        match event {
+            GenerateEvent::Finished(resp) => responses.push(resp),
+            GenerateEvent::Failed { id, error } => failures.push((id, error.to_string())),
+            GenerateEvent::Token { .. } => {}
+        }
+    }
+    responses.sort_by_key(|r| r.id);
+    failures.sort_by_key(|f| f.0);
+
+    Ok(ReplayReport {
+        responses,
+        failures,
+        metrics: sched.metrics(),
+        steps: iterations,
+        wall_s: started.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::data::traces::{TraceKind, TraceSpec};
+    use crate::model::{Decode, ModelConfig, Weights};
+    use crate::util::Rng;
+
+    fn engine() -> NativeEngine {
+        let cfg = ModelConfig::nano();
+        let weights = Weights::random(&cfg, &mut Rng::new(7)).unwrap();
+        NativeEngine::new(weights)
+    }
+
+    fn spec(kind: TraceKind, requests: usize) -> TraceSpec {
+        let cfg = ModelConfig::nano();
+        let mut s = TraceSpec::new(kind, cfg.vocab, cfg.seq);
+        s.requests = requests;
+        s.new_tokens = 4;
+        s
+    }
+
+    #[test]
+    fn replay_completes_every_request_and_is_deterministic() {
+        let eng = engine();
+        let trace = spec(TraceKind::Bursty, 6).generate().unwrap();
+        let opts = ReplayOptions::new(PrecisionPolicy::reference());
+        let a = replay(&eng, &trace, &opts).unwrap();
+        assert_eq!(a.responses.len(), trace.len());
+        assert!(a.failures.is_empty());
+        assert!(a.steps > 0);
+        // Ids are trace indices, sorted.
+        let ids: Vec<u64> = a.responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..trace.len() as u64).collect::<Vec<_>>());
+
+        let b = replay(&eng, &trace, &opts).unwrap();
+        for (x, y) in a.responses.iter().zip(&b.responses) {
+            assert_eq!(x.tokens, y.tokens, "same trace must replay identically");
+        }
+    }
+
+    #[test]
+    fn replay_matches_solo_generation() {
+        // Interleaved replay must not change any request's tokens versus
+        // running it alone through the engine.
+        let eng = engine();
+        let trace = spec(TraceKind::ZipfMix, 5).generate().unwrap();
+        let opts = ReplayOptions::new(PrecisionPolicy::reference());
+        let report = replay(&eng, &trace, &opts).unwrap();
+        assert_eq!(report.responses.len(), trace.len());
+        for resp in &report.responses {
+            let r = &trace[resp.id as usize];
+            let (solo, _) = eng
+                .generate(&r.prompt, r.new_tokens, &opts.policy, r.decode, r.seed)
+                .unwrap();
+            assert_eq!(resp.tokens, solo, "request {} diverged from solo", resp.id);
+        }
+    }
+
+    #[test]
+    fn virtual_clock_jumps_idle_gaps() {
+        // A two-request trace with a huge arrival gap must not cost a huge
+        // number of iterations: the clock jumps the idle stretch.
+        let eng = engine();
+        let mut trace = spec(TraceKind::ZipfMix, 2).generate().unwrap();
+        trace[1].arrival_step = 1_000_000;
+        let opts = ReplayOptions::new(PrecisionPolicy::reference());
+        let report = replay(&eng, &trace, &opts).unwrap();
+        assert_eq!(report.responses.len(), 2);
+        assert!(
+            report.steps < 10_000,
+            "idle gap was stepped through ({} iterations)",
+            report.steps
+        );
+    }
+
+    #[test]
+    fn budget_trips_on_impossible_traces() {
+        let eng = engine();
+        let trace = spec(TraceKind::ZipfMix, 3).generate().unwrap();
+        let mut opts = ReplayOptions::new(PrecisionPolicy::reference());
+        opts.max_steps = Some(1);
+        assert!(replay(&eng, &trace, &opts).is_err());
+    }
+
+    #[test]
+    fn decode_mix_round_trips() {
+        let eng = engine();
+        let mut s = spec(TraceKind::ZipfMix, 4);
+        s.topk = 3;
+        let trace = s.generate().unwrap();
+        assert!(trace.iter().any(|r| matches!(r.decode, Decode::TopK { .. })));
+        let opts = ReplayOptions::new(PrecisionPolicy::reference());
+        let report = replay(&eng, &trace, &opts).unwrap();
+        assert_eq!(report.responses.len(), 4);
+    }
+}

@@ -1143,16 +1143,11 @@ impl<'e> Scheduler<'e> {
     }
 }
 
-/// Empirical percentile of unsorted samples (0 when empty).
-pub(crate) fn percentile(samples: &[f64], q: f64) -> f64 {
-    if samples.is_empty() {
-        return 0.0;
-    }
-    let mut v = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).expect("finite latency samples"));
-    let idx = ((v.len() as f64) * q) as usize;
-    v[idx.min(v.len() - 1)]
-}
+// The crate's single nearest-rank percentile (TTFT/ITL latencies here,
+// `BenchStats` in benchkit, server batch latencies) lives in
+// `metrics::stats`; the old floor-index copy that silently reported the
+// max sample as p95 over 15–20 samples is gone.
+pub(crate) use crate::metrics::stats::percentile;
 
 #[cfg(test)]
 mod tests {
@@ -1401,10 +1396,16 @@ mod tests {
 
     #[test]
     fn percentile_basics() {
+        // The scheduler's percentiles ride the consolidated nearest-rank
+        // implementation in `metrics::stats` (full coverage lives there).
         assert_eq!(percentile(&[], 0.5), 0.0);
         let v = [5.0, 1.0, 3.0, 2.0, 4.0];
         assert_eq!(percentile(&v, 0.0), 1.0);
         assert_eq!(percentile(&v, 0.5), 3.0);
         assert_eq!(percentile(&v, 0.95), 5.0);
+        // 20 samples: p95 is the 19th order statistic, not the max (the
+        // floor-index bug this consolidation removed).
+        let v: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.95), 19.0);
     }
 }

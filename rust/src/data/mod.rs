@@ -10,8 +10,10 @@
 
 pub mod corpus;
 pub mod dataset;
+pub mod traces;
 pub mod zipf;
 
 pub use corpus::{Domain, SyntheticCorpus};
 pub use dataset::{permute_tokens, Dataset};
+pub use traces::{TraceKind, TraceRequest, TraceSpec};
 pub use zipf::Zipf;

@@ -1,0 +1,544 @@
+//! Seeded workload-trace generators for the trials subsystem.
+//!
+//! A *trace* is a deterministic list of generation requests — prompt
+//! tokens, generation budget, sampling seed, and a **virtual arrival
+//! step** — produced entirely from a `(TraceSpec, seed)` pair. The same
+//! spec and seed always yield the same trace, so a trial replayed through
+//! the scheduler (`coordinator::replay`) is reproducible byte for byte.
+//!
+//! Beyond the lone Zipf-length mix the serving benches used, the traces
+//! cover the workload shapes the serving stack is supposed to be good at:
+//!
+//! * [`TraceKind::ZipfMix`] — the classic natural-language length mix
+//!   (many short requests, heavy tail of long generations);
+//! * [`TraceKind::PrefixChat`] — multi-turn chat sessions sharing a
+//!   per-session system prompt, the shape the paged-KV prefix cache
+//!   (`model::kvstore`) exists for;
+//! * [`TraceKind::LongContext`] — summarization-style traffic: prompts
+//!   near the context window, short generations (prefill-dominated);
+//! * [`TraceKind::Bursty`] — an on/off arrival process: synchronized
+//!   bursts separated by idle gaps (admission-control stress);
+//! * [`TraceKind::Poisson`] — Bernoulli-thinned (geometric-interarrival)
+//!   arrivals at a configurable rate;
+//! * [`TraceKind::Adversarial`] — worst-case prompt-length mixes:
+//!   1-token prompts wanting the whole context interleaved with
+//!   near-context prompts wanting one token (pool/fairness stress).
+//!
+//! Virtual arrival steps are *scheduler iterations*, not wall-clock time:
+//! replay stays deterministic on any machine and at any thread-pool size.
+
+use super::zipf::Zipf;
+use crate::error::{Error, Result};
+use crate::model::Decode;
+use crate::util::Rng;
+
+/// One request of a workload trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    /// Virtual arrival time in scheduler iterations (0 = enqueued before
+    /// the first iteration). Non-decreasing across a generated trace.
+    pub arrival_step: usize,
+    /// Prompt token ids (non-empty, within the context window).
+    pub prompt: Vec<u32>,
+    /// Generation budget (already capped to fit the context window).
+    pub new_tokens: usize,
+    /// Sampling / Random-rule seed.
+    pub seed: u64,
+    /// Sampling strategy.
+    pub decode: Decode,
+}
+
+/// The workload shapes a trace can take.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    ZipfMix,
+    PrefixChat,
+    LongContext,
+    Bursty,
+    Poisson,
+    Adversarial,
+}
+
+impl TraceKind {
+    /// Stable name used by trial manifests and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::ZipfMix => "zipf-mix",
+            TraceKind::PrefixChat => "prefix-chat",
+            TraceKind::LongContext => "long-context",
+            TraceKind::Bursty => "bursty",
+            TraceKind::Poisson => "poisson",
+            TraceKind::Adversarial => "adversarial",
+        }
+    }
+
+    /// Parse a manifest name; the error lists the valid names.
+    pub fn by_name(name: &str) -> Result<Self> {
+        TraceKind::all()
+            .into_iter()
+            .find(|k| k.name() == name)
+            .ok_or_else(|| {
+                let names: Vec<&str> = TraceKind::all().iter().map(|k| k.name()).collect();
+                Error::config(format!(
+                    "unknown trace kind {name:?} (expected one of {})",
+                    names.join(", ")
+                ))
+            })
+    }
+
+    pub fn all() -> [TraceKind; 6] {
+        [
+            TraceKind::ZipfMix,
+            TraceKind::PrefixChat,
+            TraceKind::LongContext,
+            TraceKind::Bursty,
+            TraceKind::Poisson,
+            TraceKind::Adversarial,
+        ]
+    }
+}
+
+/// Declarative description of a workload trace. Unused per-kind knobs are
+/// simply ignored by the other kinds.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub kind: TraceKind,
+    /// Requests in the trace.
+    pub requests: usize,
+    /// Model vocabulary (prompt tokens are drawn below it).
+    pub vocab: usize,
+    /// Model context window (prompt + generation must fit inside it).
+    pub context: usize,
+    /// Root seed; every token and length in the trace derives from it.
+    pub seed: u64,
+    /// Base generation budget per request.
+    pub new_tokens: usize,
+    /// `prefix-chat`: concurrent chat sessions.
+    pub sessions: usize,
+    /// `prefix-chat`: shared per-session system-prompt length.
+    pub prefix_len: usize,
+    /// `prefix-chat`: fresh user tokens appended per turn.
+    pub turn_tokens: usize,
+    /// `zipf-mix`/`bursty`: Zipf exponent of the length distribution.
+    pub zipf_s: f64,
+    /// `bursty`: requests per burst.
+    pub burst: usize,
+    /// `bursty`: idle scheduler iterations between bursts.
+    pub gap_steps: usize,
+    /// `poisson`: per-iteration arrival probability in (0, 1].
+    pub rate: f64,
+    /// When > 0, every third request samples top-k at this k (seeded);
+    /// 0 keeps the whole trace greedy.
+    pub topk: usize,
+}
+
+impl TraceSpec {
+    /// A spec with workable defaults for `vocab`/`context`-sized models.
+    pub fn new(kind: TraceKind, vocab: usize, context: usize) -> Self {
+        TraceSpec {
+            kind,
+            requests: 12,
+            vocab,
+            context,
+            seed: 1,
+            new_tokens: 8,
+            sessions: 3,
+            prefix_len: (context / 4).max(1),
+            turn_tokens: 4,
+            zipf_s: 1.1,
+            burst: 4,
+            gap_steps: 6,
+            rate: 0.35,
+            topk: 0,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.requests == 0 {
+            return Err(Error::config("trace: requests must be >= 1"));
+        }
+        if self.vocab < 2 || self.context < 8 {
+            return Err(Error::config(format!(
+                "trace: vocab {} / context {} too small (need vocab >= 2, context >= 8)",
+                self.vocab, self.context
+            )));
+        }
+        if self.new_tokens == 0 {
+            return Err(Error::config("trace: new_tokens must be >= 1"));
+        }
+        if !self.zipf_s.is_finite() || self.zipf_s <= 0.0 {
+            return Err(Error::config("trace: zipf_s must be > 0"));
+        }
+        match self.kind {
+            TraceKind::PrefixChat => {
+                if self.sessions == 0 || self.turn_tokens == 0 || self.prefix_len == 0 {
+                    return Err(Error::config(
+                        "prefix-chat: sessions, prefix-len and turn-tokens must be >= 1",
+                    ));
+                }
+                let turns = self.requests.div_ceil(self.sessions);
+                let longest = self.prefix_len + turns * self.turn_tokens;
+                if longest + self.new_tokens + 1 > self.context {
+                    return Err(Error::config(format!(
+                        "prefix-chat: final turn needs {longest} prompt + {} generated \
+                         tokens but the context is {} (shrink turns or prefix-len)",
+                        self.new_tokens, self.context
+                    )));
+                }
+            }
+            TraceKind::Bursty => {
+                if self.burst == 0 {
+                    return Err(Error::config("bursty: burst must be >= 1"));
+                }
+            }
+            TraceKind::Poisson => {
+                // NaN fails both bounds checks below, as it should.
+                let in_range = self.rate > 0.0 && self.rate <= 1.0;
+                if !in_range {
+                    return Err(Error::config(format!(
+                        "poisson: rate {} out of (0, 1]",
+                        self.rate
+                    )));
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Generate the trace: deterministic in `(spec, seed)`, sorted by
+    /// arrival step (ties keep generation order).
+    pub fn generate(&self) -> Result<Vec<TraceRequest>> {
+        self.validate()?;
+        let mut out = match self.kind {
+            TraceKind::ZipfMix => self.zipf_mix(),
+            TraceKind::PrefixChat => self.prefix_chat(),
+            TraceKind::LongContext => self.long_context(),
+            TraceKind::Bursty => self.bursty(),
+            TraceKind::Poisson => self.poisson(),
+            TraceKind::Adversarial => self.adversarial(),
+        };
+        out.sort_by_key(|r| r.arrival_step);
+        debug_assert!(out.iter().all(|r| {
+            !r.prompt.is_empty()
+                && r.new_tokens >= 1
+                && r.prompt.len() + r.new_tokens < self.context
+        }));
+        Ok(out)
+    }
+
+    /// Per-request sampling strategy: greedy, with every third request
+    /// flipped to top-k when the spec enables it.
+    fn decode_for(&self, i: usize) -> Decode {
+        if self.topk > 0 && i % 3 == 0 {
+            Decode::TopK { k: self.topk, temperature: 1.1 }
+        } else {
+            Decode::Greedy
+        }
+    }
+
+    /// Per-request seed stream, decorrelated across indices.
+    fn seed_for(&self, i: usize) -> u64 {
+        self.seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((i as u64).wrapping_mul(0x2545_F491_4F6C_DD1D))
+            | 1
+    }
+
+    fn tokens(&self, rng: &mut Rng, len: usize) -> Vec<u32> {
+        (0..len).map(|_| rng.below(self.vocab as u64) as u32).collect()
+    }
+
+    /// Cap a generation budget so `prompt + generated` fits the window.
+    fn cap_new(&self, prompt_len: usize, want: usize) -> usize {
+        let room = self.context.saturating_sub(prompt_len + 1).max(1);
+        want.clamp(1, room)
+    }
+
+    /// The historical serving-bench shape: Zipf prompt and generation
+    /// lengths, all arriving up front.
+    fn zipf_mix(&self) -> Vec<TraceRequest> {
+        let zipf = Zipf::new((self.context / 4).clamp(2, 24), self.zipf_s);
+        let mut rng = Rng::new(self.seed);
+        (0..self.requests)
+            .map(|i| {
+                let prompt_len = 2 + zipf.sample(&mut rng);
+                let prompt = self.tokens(&mut rng, prompt_len);
+                let want = self.new_tokens / 2 + zipf.sample(&mut rng) * 4 + 1;
+                let new_tokens = self.cap_new(prompt_len, want);
+                TraceRequest {
+                    arrival_step: 0,
+                    prompt,
+                    new_tokens,
+                    seed: self.seed_for(i),
+                    decode: self.decode_for(i),
+                }
+            })
+            .collect()
+    }
+
+    /// Multi-turn chat: every turn of a session re-sends the session's
+    /// system prefix plus the accumulated history, so consecutive turns
+    /// share a growing token prefix — the prefix-cache adoption path.
+    /// All turns of a session carry the *same* seed: the prefix-share
+    /// chain is keyed by `(seed, plan, token prefix)`, so intra-session
+    /// reuse actually hits.
+    fn prefix_chat(&self) -> Vec<TraceRequest> {
+        let mut out = Vec::with_capacity(self.requests);
+        let turns = self.requests.div_ceil(self.sessions);
+        for s in 0..self.sessions {
+            let session_seed = self.seed_for(s).wrapping_mul(0x00C6_A4A7_9352_09E7) | 1;
+            let mut rng = Rng::new(session_seed);
+            let mut history = self.tokens(&mut rng, self.prefix_len);
+            for t in 0..turns {
+                let idx = s * turns + t;
+                if out.len() >= self.requests {
+                    break;
+                }
+                history.extend(self.tokens(&mut rng, self.turn_tokens));
+                out.push(TraceRequest {
+                    // Interleave sessions; later turns arrive later, so a
+                    // turn's prefix blocks are usually already published.
+                    arrival_step: t * 3 + s,
+                    prompt: history.clone(),
+                    new_tokens: self.cap_new(history.len(), self.new_tokens),
+                    seed: session_seed,
+                    decode: self.decode_for(idx),
+                });
+            }
+        }
+        out
+    }
+
+    /// Summarization shape: prompts fill most of the window, generations
+    /// are short — prefill dominates and pool pressure peaks early.
+    fn long_context(&self) -> Vec<TraceRequest> {
+        let mut rng = Rng::new(self.seed);
+        (0..self.requests)
+            .map(|i| {
+                let base = self.context * 3 / 4;
+                let jitter = rng.below((self.context / 8).max(1) as u64) as usize;
+                let prompt_len = (base + jitter).min(self.context - self.new_tokens.min(4) - 2);
+                let prompt = self.tokens(&mut rng, prompt_len);
+                TraceRequest {
+                    arrival_step: i,
+                    prompt,
+                    new_tokens: self.cap_new(prompt_len, self.new_tokens.min(4)),
+                    seed: self.seed_for(i),
+                    decode: self.decode_for(i),
+                }
+            })
+            .collect()
+    }
+
+    /// On/off arrivals: bursts of `burst` Zipf-length requests separated
+    /// by `gap_steps` idle iterations.
+    fn bursty(&self) -> Vec<TraceRequest> {
+        let zipf = Zipf::new((self.context / 4).clamp(2, 16), self.zipf_s);
+        let mut rng = Rng::new(self.seed);
+        (0..self.requests)
+            .map(|i| {
+                let burst_idx = i / self.burst;
+                let prompt_len = 2 + zipf.sample(&mut rng);
+                let prompt = self.tokens(&mut rng, prompt_len);
+                let want = self.new_tokens + zipf.sample(&mut rng);
+                let new_tokens = self.cap_new(prompt_len, want);
+                TraceRequest {
+                    arrival_step: burst_idx * self.gap_steps.max(1),
+                    prompt,
+                    new_tokens,
+                    seed: self.seed_for(i),
+                    decode: self.decode_for(i),
+                }
+            })
+            .collect()
+    }
+
+    /// Bernoulli-thinned arrivals: geometric interarrival gaps at `rate`
+    /// arrivals per iteration (inverse-CDF, so one f64 draw per gap).
+    fn poisson(&self) -> Vec<TraceRequest> {
+        let mut rng = Rng::new(self.seed);
+        let mut step = 0usize;
+        (0..self.requests)
+            .map(|i| {
+                let gap = if self.rate >= 1.0 {
+                    0
+                } else {
+                    // u ∈ [0,1); 1-u ∈ (0,1] avoids ln(0).
+                    let u = rng.f64();
+                    ((1.0 - u).ln() / (1.0 - self.rate).ln()).floor() as usize
+                };
+                step += gap;
+                let prompt_len = 2 + rng.below((self.context / 6).max(2) as u64) as usize;
+                let prompt = self.tokens(&mut rng, prompt_len);
+                TraceRequest {
+                    arrival_step: step,
+                    prompt,
+                    new_tokens: self.cap_new(prompt_len, self.new_tokens),
+                    seed: self.seed_for(i),
+                    decode: self.decode_for(i),
+                }
+            })
+            .collect()
+    }
+
+    /// Fairness/pool stress: 1-token prompts wanting the whole window
+    /// interleaved with near-window prompts wanting one token, plus a
+    /// mid-sized shape, all arriving at once.
+    fn adversarial(&self) -> Vec<TraceRequest> {
+        let mut rng = Rng::new(self.seed);
+        (0..self.requests)
+            .map(|i| {
+                let (prompt_len, want) = match i % 3 {
+                    // Tiny prompt, maximal generation: monopolization bait.
+                    0 => (1, self.context - 2),
+                    // Near-window prompt, single token: admission spike.
+                    1 => (self.context - 3, 1),
+                    // Mid-sized: keeps slots churning between extremes.
+                    _ => (self.context / 2, self.new_tokens),
+                };
+                let prompt = self.tokens(&mut rng, prompt_len);
+                TraceRequest {
+                    arrival_step: 0,
+                    prompt,
+                    new_tokens: self.cap_new(prompt_len, want),
+                    seed: self.seed_for(i),
+                    decode: self.decode_for(i),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(kind: TraceKind) -> TraceSpec {
+        TraceSpec::new(kind, 256, 128)
+    }
+
+    #[test]
+    fn every_kind_generates_valid_requests() {
+        for kind in TraceKind::all() {
+            let s = spec(kind);
+            let trace = s.generate().unwrap();
+            assert_eq!(trace.len(), s.requests, "{}", kind.name());
+            let mut last_arrival = 0;
+            for r in &trace {
+                assert!(!r.prompt.is_empty(), "{}", kind.name());
+                assert!(r.new_tokens >= 1);
+                assert!(
+                    r.prompt.len() + r.new_tokens < s.context,
+                    "{}: {} prompt + {} new >= context {}",
+                    kind.name(),
+                    r.prompt.len(),
+                    r.new_tokens,
+                    s.context
+                );
+                assert!(r.prompt.iter().all(|&t| (t as usize) < s.vocab));
+                assert!(r.arrival_step >= last_arrival, "sorted by arrival");
+                last_arrival = r.arrival_step;
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_same_trace_different_seed_differs() {
+        for kind in TraceKind::all() {
+            let a = spec(kind).generate().unwrap();
+            let b = spec(kind).generate().unwrap();
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.prompt, y.prompt, "{}", kind.name());
+                assert_eq!(x.new_tokens, y.new_tokens);
+                assert_eq!(x.seed, y.seed);
+                assert_eq!(x.arrival_step, y.arrival_step);
+            }
+            let mut other = spec(kind);
+            other.seed = 999;
+            let c = other.generate().unwrap();
+            assert!(
+                a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt),
+                "{}: reseeding must change the trace",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn prefix_chat_turns_share_prefixes() {
+        let s = spec(TraceKind::PrefixChat);
+        let trace = s.generate().unwrap();
+        // Group by seed (= session); within a session, every prompt is a
+        // strict prefix of the next turn's prompt.
+        let mut by_seed: Vec<(u64, Vec<&TraceRequest>)> = Vec::new();
+        for r in &trace {
+            match by_seed.iter_mut().find(|(seed, _)| *seed == r.seed) {
+                Some((_, v)) => v.push(r),
+                None => by_seed.push((r.seed, vec![r])),
+            }
+        }
+        assert_eq!(by_seed.len(), s.sessions);
+        for (_, turns) in &by_seed {
+            for w in turns.windows(2) {
+                let (a, b) = (&w[0].prompt, &w[1].prompt);
+                assert!(a.len() < b.len());
+                assert_eq!(&b[..a.len()], &a[..], "turn prompts must nest");
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster_and_poisson_spreads() {
+        let b = spec(TraceKind::Bursty).generate().unwrap();
+        let distinct: std::collections::BTreeSet<usize> =
+            b.iter().map(|r| r.arrival_step).collect();
+        assert_eq!(distinct.len(), 12usize.div_ceil(4), "one step per burst");
+        let p = spec(TraceKind::Poisson).generate().unwrap();
+        assert!(p.last().unwrap().arrival_step > 0, "arrivals must spread out");
+    }
+
+    #[test]
+    fn adversarial_mixes_extremes() {
+        let s = spec(TraceKind::Adversarial);
+        let trace = s.generate().unwrap();
+        assert!(trace.iter().any(|r| r.prompt.len() == 1));
+        assert!(trace.iter().any(|r| r.prompt.len() >= s.context - 3));
+        assert!(trace.iter().any(|r| r.new_tokens == 1));
+        assert!(trace.iter().any(|r| r.new_tokens >= s.context / 2));
+    }
+
+    #[test]
+    fn topk_spec_mixes_decodes() {
+        let mut s = spec(TraceKind::ZipfMix);
+        s.topk = 4;
+        let trace = s.generate().unwrap();
+        assert!(trace.iter().any(|r| matches!(r.decode, Decode::TopK { .. })));
+        assert!(trace.iter().any(|r| matches!(r.decode, Decode::Greedy)));
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut s = spec(TraceKind::Poisson);
+        s.rate = 0.0;
+        assert!(s.generate().is_err());
+        let mut s = spec(TraceKind::PrefixChat);
+        s.prefix_len = 120; // prefix + turns won't fit the 128 window
+        assert!(s.generate().is_err());
+        let mut s = spec(TraceKind::ZipfMix);
+        s.requests = 0;
+        assert!(s.generate().is_err());
+        let mut s = spec(TraceKind::Bursty);
+        s.burst = 0;
+        assert!(s.generate().is_err());
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in TraceKind::all() {
+            assert_eq!(TraceKind::by_name(kind.name()).unwrap(), kind);
+        }
+        assert!(TraceKind::by_name("bogus").is_err());
+    }
+}

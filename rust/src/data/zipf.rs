@@ -51,9 +51,12 @@ impl Zipf {
         }
     }
 
-    /// Probability of rank k.
+    /// Probability of rank k; 0.0 outside `[0, n)` (the support), so
+    /// callers can probe any rank without panicking on the cdf bounds.
     pub fn pmf(&self, k: usize) -> f64 {
-        if k == 0 {
+        if k >= self.cdf.len() {
+            0.0
+        } else if k == 0 {
             self.cdf[0]
         } else {
             self.cdf[k] - self.cdf[k - 1]
@@ -91,6 +94,45 @@ mod tests {
         let flat = Zipf::new(100, 0.5);
         let peaked = Zipf::new(100, 2.0);
         assert!(peaked.pmf(0) > flat.pmf(0));
+    }
+
+    #[test]
+    fn pmf_out_of_range_is_zero() {
+        let z = Zipf::new(10, 1.0);
+        assert_eq!(z.pmf(10), 0.0);
+        assert_eq!(z.pmf(usize::MAX), 0.0);
+        assert!(z.pmf(9) > 0.0);
+    }
+
+    #[test]
+    fn pmf_sums_to_one_and_matches_sample_frequencies() {
+        // Property (fixed seed): Σ pmf(k) ≈ 1 over the support, and the
+        // empirical frequency of every rank tracks its pmf.
+        let n = 40;
+        let z = Zipf::new(n, 1.3);
+        let total: f64 = (0..n).map(|k| z.pmf(k)).sum();
+        assert!((total - 1.0).abs() < 1e-12, "pmf sums to {total}");
+        // Including out-of-range ranks changes nothing.
+        let padded: f64 = (0..2 * n).map(|k| z.pmf(k)).sum();
+        assert!((padded - 1.0).abs() < 1e-12);
+
+        let draws = 400_000usize;
+        let mut rng = Rng::new(1234);
+        let mut counts = vec![0usize; n];
+        for _ in 0..draws {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for k in 0..n {
+            let freq = counts[k] as f64 / draws as f64;
+            let p = z.pmf(k);
+            // Loose Bernoulli bound: 4 sigma plus an absolute floor for
+            // the tiny tail probabilities.
+            let tol = 4.0 * (p * (1.0 - p) / draws as f64).sqrt() + 5e-4;
+            assert!(
+                (freq - p).abs() <= tol,
+                "rank {k}: freq {freq:.5} vs pmf {p:.5} (tol {tol:.5})"
+            );
+        }
     }
 
     #[test]

@@ -133,6 +133,53 @@ fn cli() -> Command {
                 .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts"))
                 .arg(ArgSpec::opt("seed", "seed", "0")),
         ))
+        .subcommand(
+            Command::new("trials", "deterministic trial replay (run|list|diff)")
+                .subcommand(
+                    Command::new("run", "replay a trial manifest and print its canonical artifact")
+                        .arg(ArgSpec::pos(
+                            "manifest",
+                            "bundled trial name (see `trials list`) or path to a .trial file",
+                            true,
+                        ))
+                        .arg(ArgSpec::opt(
+                            "out",
+                            "write the canonical artifact to this file instead of stdout",
+                            "",
+                        ))
+                        .arg(ArgSpec::opt(
+                            "workers",
+                            "override the manifest's [scheduler] workers (empty = keep)",
+                            "",
+                        )),
+                )
+                .subcommand(Command::new("list", "list the bundled trial manifests"))
+                .subcommand(
+                    Command::new("diff", "byte-compare two canonical trial artifacts")
+                        .arg(ArgSpec::pos("a", "first artifact path", true))
+                        .arg(ArgSpec::pos("b", "second artifact path", true)),
+                ),
+        )
+        .subcommand(
+            Command::new("bench-diff", "gate a BENCH_*.json record against a committed baseline")
+                .arg(ArgSpec::pos("baseline", "baseline bench record path", true))
+                .arg(ArgSpec::pos("current", "current bench record path", true))
+                .arg(ArgSpec::opt(
+                    "tolerance",
+                    "relative tolerance for two-sided (exact) metrics",
+                    "1e-9",
+                ))
+                .arg(ArgSpec::opt(
+                    "perf-tolerance",
+                    "relative tolerance for throughput/latency metrics",
+                    "0.25",
+                ))
+                .arg(ArgSpec::opt(
+                    "skip",
+                    "comma-separated metric keys (or section.key) to skip",
+                    "",
+                )),
+        )
 }
 
 /// Attach the per-site plan options (whole-model LAMP) to a subcommand:
@@ -210,6 +257,8 @@ fn main() {
             "inspect" => cmd_inspect(sub),
             "forward" => cmd_forward(sub),
             "generate" => cmd_generate(sub),
+            "trials" => cmd_trials(sub),
+            "bench-diff" => cmd_bench_diff(sub),
             _ => unreachable!(),
         },
         None => {
@@ -582,4 +631,111 @@ fn cmd_forward(args: &Args) -> lamp::Result<()> {
     println!("  logits[0][0][..4] = {:?}", &out.logits[0].row(0)[..4]);
     println!("  wall: {dt:.3}s");
     Ok(())
+}
+
+fn cmd_trials(args: &Args) -> lamp::Result<()> {
+    match &args.subcommand {
+        Some((name, sub)) => match name.as_str() {
+            "run" => cmd_trials_run(sub),
+            "list" => cmd_trials_list(),
+            "diff" => cmd_trials_diff(sub),
+            _ => unreachable!(),
+        },
+        None => Err(lamp::Error::config("trials: expected a subcommand (run|list|diff)")),
+    }
+}
+
+fn cmd_trials_run(args: &Args) -> lamp::Result<()> {
+    let spec = args.positionals()[0].clone();
+    // A bundled name wins; anything else is read from disk, so CI and a
+    // local `.trial` experiment go through the identical path.
+    let text = match lamp::trials::builtin(&spec) {
+        Some(t) => t.to_string(),
+        None => std::fs::read_to_string(&spec).map_err(|e| {
+            lamp::Error::config(format!(
+                "{spec:?} is neither a bundled trial (see `lamp trials list`) \
+                 nor a readable manifest file: {e}"
+            ))
+        })?,
+    };
+    let mut manifest = lamp::trials::TrialManifest::parse(&text)?;
+    let workers = args.get_str("workers")?;
+    if !workers.is_empty() {
+        manifest.workers = workers
+            .parse()
+            .map_err(|_| lamp::Error::config(format!("--workers: bad count {workers:?}")))?;
+    }
+    let trial = lamp::trials::run(&manifest)?;
+    // Human-facing timing summary goes to stderr so stdout stays the
+    // byte-exact canonical artifact (pipe it straight into `trials diff`).
+    eprint!("{}", trial.display);
+    let out = args.get_str("out")?;
+    if out.is_empty() {
+        print!("{}", trial.canonical);
+    } else {
+        std::fs::write(&out, &trial.canonical)?;
+        eprintln!("wrote canonical artifact to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_trials_list() -> lamp::Result<()> {
+    let mut t = Table::new(
+        "bundled trials",
+        &["name", "workload", "requests", "policy", "kv", "faults"],
+    );
+    for (name, text) in lamp::trials::BUILTIN {
+        let m = lamp::trials::TrialManifest::parse(text)?;
+        t.row(vec![
+            name.to_string(),
+            m.trace.kind.name().to_string(),
+            m.trace.requests.to_string(),
+            m.policy_label.clone(),
+            m.kv_format.map_or_else(|| "off".to_string(), |f| f.label()),
+            m.fault_label.clone(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_trials_diff(args: &Args) -> lamp::Result<()> {
+    let pos = args.positionals();
+    let (pa, pb) = (&pos[0], &pos[1]);
+    let a = std::fs::read_to_string(pa)?;
+    let b = std::fs::read_to_string(pb)?;
+    match lamp::trials::first_divergence(&a, &b) {
+        None => {
+            println!("identical: {} lines", a.lines().count());
+            Ok(())
+        }
+        Some(d) => Err(lamp::Error::config(format!("{pa} vs {pb}: {d}"))),
+    }
+}
+
+fn cmd_bench_diff(args: &Args) -> lamp::Result<()> {
+    let pos = args.positionals();
+    let (bpath, cpath) = (&pos[0], &pos[1]);
+    let baseline = std::fs::read_to_string(bpath)?;
+    let current = std::fs::read_to_string(cpath)?;
+    let skip = args.get_str("skip")?;
+    let opts = lamp::benchkit::DiffOptions {
+        tolerance: args.get_f64("tolerance")?,
+        perf_tolerance: args.get_f64("perf-tolerance")?,
+        skip: if skip.is_empty() {
+            Vec::new()
+        } else {
+            skip.split(',').map(|s| s.trim().to_string()).collect()
+        },
+    };
+    let report = lamp::benchkit::bench_diff(&baseline, &current, &opts)?;
+    print!("{}", report.render());
+    if report.passed() {
+        Ok(())
+    } else {
+        Err(lamp::Error::config(format!(
+            "bench-diff: {} metric(s) failed the gate vs {bpath}",
+            report.failures().len()
+        )))
+    }
 }

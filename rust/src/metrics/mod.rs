@@ -15,4 +15,4 @@ pub mod stats;
 pub use flip::flip_rate;
 pub use kl::{kl_divergence, mean_kl_from_logits};
 pub use pareto::{pareto_front, ParetoPoint};
-pub use stats::Accumulator;
+pub use stats::{nearest_rank_index, percentile, Accumulator};

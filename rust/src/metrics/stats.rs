@@ -1,4 +1,35 @@
-//! Streaming mean/variance accumulator (Welford) for metric aggregation.
+//! Streaming mean/variance accumulator (Welford) for metric aggregation,
+//! plus the crate's single percentile implementation.
+
+/// Index of the nearest-rank percentile in a sorted sample of length `n`:
+/// rank `⌈q·n⌉` (1-based, clamped to `[1, n]`), returned 0-based.
+///
+/// This is the one percentile convention in the crate. The previous
+/// floor-index convention (`(n as f64 * q) as usize`) silently returned
+/// the *maximum* sample for p95 at the bench default of 15–20 samples
+/// (e.g. `floor(20 · 0.95) = 19` = the last index); nearest-rank returns
+/// the sample below which at least `q` of the data falls.
+pub fn nearest_rank_index(n: usize, q: f64) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let rank = (q * n as f64).ceil() as usize;
+    rank.clamp(1, n) - 1
+}
+
+/// Empirical nearest-rank percentile of unsorted samples (0 when empty).
+///
+/// Shared by `BenchStats::{median,p95}` and the scheduler's TTFT/ITL
+/// percentiles — one convention, one implementation.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite samples"));
+    v[nearest_rank_index(v.len(), q)]
+}
 
 /// Welford accumulator for mean, variance and standard error.
 #[derive(Debug, Clone, Default)]
@@ -66,6 +97,40 @@ impl Accumulator {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        let v = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 0.5), 3.0);
+        assert_eq!(percentile(&v, 0.95), 5.0);
+        assert_eq!(percentile(&v, 1.0), 5.0);
+        assert_eq!(percentile(&[7.5], 0.95), 7.5);
+    }
+
+    #[test]
+    fn p95_of_twenty_is_not_the_max() {
+        // The regression the consolidation fixes: with the old floor-index
+        // convention, p95 over 20 samples indexed floor(19.0) = 19 — the
+        // max. Nearest-rank takes rank ⌈19⌉ = 19 → the 19th sample.
+        let v: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.95), 19.0);
+        // 15 samples: rank ⌈14.25⌉ = 15 → the max, legitimately.
+        let v: Vec<f64> = (1..=15).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.95), 15.0);
+    }
+
+    #[test]
+    fn nearest_rank_bounds() {
+        assert_eq!(nearest_rank_index(0, 0.5), 0);
+        assert_eq!(nearest_rank_index(1, 0.0), 0);
+        assert_eq!(nearest_rank_index(1, 1.0), 0);
+        assert_eq!(nearest_rank_index(4, 0.5), 1); // rank ⌈2⌉ = 2
+        assert_eq!(nearest_rank_index(5, 0.5), 2); // rank ⌈2.5⌉ = 3
+        assert_eq!(nearest_rank_index(10, 2.0), 9); // q clamped
+        assert_eq!(nearest_rank_index(10, -1.0), 0);
+    }
 
     #[test]
     fn known_values() {

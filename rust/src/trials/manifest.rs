@@ -1,0 +1,404 @@
+//! Declarative trial manifests.
+//!
+//! A trial is everything needed to reproduce one serving measurement:
+//! model config, precision policy, workload trace, scheduler shape, and
+//! an optional fault plan — plus the seed that makes the whole thing
+//! deterministic. Manifests are a simple INI-style on-disk format:
+//!
+//! ```text
+//! # Prefix-heavy chat over the shared paged KV cache.
+//! name = prefix-chat-nano
+//! seed = 42
+//!
+//! [model]
+//! config = nano
+//! weights-seed = 7
+//!
+//! [policy]
+//! tier = balanced            # or mu/tau/rule for a custom plan
+//!
+//! [workload]
+//! trace = prefix-chat
+//! requests = 9
+//! sessions = 3
+//!
+//! [scheduler]
+//! max-sessions = 4
+//! workers = 0                # 0 = step sessions sequentially
+//!
+//! [kv]
+//! format = bf16              # paged KV pool with prefix sharing
+//!
+//! [faults]
+//! plan = chaos               # quiet | chaos
+//! ```
+//!
+//! `#`/`;` start comments; unknown sections or keys are typed errors, not
+//! silently ignored — a manifest that parses runs exactly what it says.
+
+use crate::coordinator::{FaultPlan, PrecisionPolicy, Rule, WeightFormat};
+use crate::data::traces::{TraceKind, TraceSpec};
+use crate::error::{Error, Result};
+use crate::model::ModelConfig;
+
+/// A fully resolved trial description.
+#[derive(Debug, Clone)]
+pub struct TrialManifest {
+    pub name: String,
+    /// Root seed: reused as the trace seed.
+    pub seed: u64,
+    pub model: ModelConfig,
+    pub weights_seed: u64,
+    pub policy: PrecisionPolicy,
+    /// How the manifest spelled the policy (tier name or custom label).
+    pub policy_label: String,
+    pub trace: TraceSpec,
+    pub max_sessions: usize,
+    pub prefill_chunk: usize,
+    /// Thread-pool size for session stepping; 0 = sequential.
+    pub workers: usize,
+    /// Paged-KV storage format; `None` runs without a shared pool.
+    pub kv_format: Option<WeightFormat>,
+    pub repair_tau: Option<f32>,
+    /// Mixed-precision weight storage; `None` keeps f32.
+    pub weight_format: Option<WeightFormat>,
+    pub faults: Option<FaultPlan>,
+    /// "none", "quiet", or "chaos" — for reports.
+    pub fault_label: String,
+}
+
+/// Raw key-value state collected during the first parse pass.
+#[derive(Default)]
+struct Raw {
+    name: Option<String>,
+    seed: Option<u64>,
+    model: Option<String>,
+    weights_seed: Option<u64>,
+    tier: Option<String>,
+    mu: Option<u32>,
+    tau: Option<f32>,
+    rule: Option<String>,
+    trace: Option<String>,
+    requests: Option<usize>,
+    sessions: Option<usize>,
+    prefix_len: Option<usize>,
+    turn_tokens: Option<usize>,
+    new_tokens: Option<usize>,
+    zipf_s: Option<f64>,
+    burst: Option<usize>,
+    gap_steps: Option<usize>,
+    rate: Option<f64>,
+    topk: Option<usize>,
+    max_sessions: Option<usize>,
+    prefill_chunk: Option<usize>,
+    workers: Option<usize>,
+    kv_format: Option<String>,
+    repair_tau: Option<f32>,
+    weight_format: Option<String>,
+    fault_plan: Option<String>,
+    fault_seed: Option<u64>,
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T> {
+    value
+        .parse()
+        .map_err(|_| Error::config(format!("trial manifest: bad value {value:?} for {key:?}")))
+}
+
+impl TrialManifest {
+    /// Parse a manifest from its on-disk text.
+    pub fn parse(text: &str) -> Result<TrialManifest> {
+        let mut raw = Raw::default();
+        let mut section = String::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = match line.find(['#', ';']) {
+                Some(idx) => &line[..idx],
+                None => line,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner.strip_suffix(']').ok_or_else(|| {
+                    Error::config(format!("trial manifest line {}: bad section", lineno + 1))
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::config(format!(
+                    "trial manifest line {}: expected `key = value`, got {line:?}",
+                    lineno + 1
+                ))
+            })?;
+            let key = key.trim();
+            let value = value.trim();
+            raw.set(&section, key, value)?;
+        }
+        raw.build()
+    }
+}
+
+impl Raw {
+    fn set(&mut self, section: &str, key: &str, value: &str) -> Result<()> {
+        match (section, key) {
+            ("", "name") => self.name = Some(value.to_string()),
+            ("", "seed") => self.seed = Some(parse_num(key, value)?),
+            ("model", "config") => self.model = Some(value.to_string()),
+            ("model", "weights-seed") => self.weights_seed = Some(parse_num(key, value)?),
+            ("policy", "tier") => self.tier = Some(value.to_string()),
+            ("policy", "mu") => self.mu = Some(parse_num(key, value)?),
+            ("policy", "tau") => self.tau = Some(parse_num(key, value)?),
+            ("policy", "rule") => self.rule = Some(value.to_string()),
+            ("workload", "trace") => self.trace = Some(value.to_string()),
+            ("workload", "requests") => self.requests = Some(parse_num(key, value)?),
+            ("workload", "sessions") => self.sessions = Some(parse_num(key, value)?),
+            ("workload", "prefix-len") => self.prefix_len = Some(parse_num(key, value)?),
+            ("workload", "turn-tokens") => self.turn_tokens = Some(parse_num(key, value)?),
+            ("workload", "new-tokens") => self.new_tokens = Some(parse_num(key, value)?),
+            ("workload", "zipf-s") => self.zipf_s = Some(parse_num(key, value)?),
+            ("workload", "burst") => self.burst = Some(parse_num(key, value)?),
+            ("workload", "gap-steps") => self.gap_steps = Some(parse_num(key, value)?),
+            ("workload", "rate") => self.rate = Some(parse_num(key, value)?),
+            ("workload", "topk") => self.topk = Some(parse_num(key, value)?),
+            ("scheduler", "max-sessions") => self.max_sessions = Some(parse_num(key, value)?),
+            ("scheduler", "prefill-chunk") => self.prefill_chunk = Some(parse_num(key, value)?),
+            ("scheduler", "workers") => self.workers = Some(parse_num(key, value)?),
+            ("kv", "format") => self.kv_format = Some(value.to_string()),
+            ("kv", "repair-tau") => self.repair_tau = Some(parse_num(key, value)?),
+            ("weights", "format") => self.weight_format = Some(value.to_string()),
+            ("faults", "plan") => self.fault_plan = Some(value.to_string()),
+            ("faults", "seed") => self.fault_seed = Some(parse_num(key, value)?),
+            _ => {
+                let place = if section.is_empty() {
+                    "top level".to_string()
+                } else {
+                    format!("section [{section}]")
+                };
+                return Err(Error::config(format!(
+                    "trial manifest: unknown key {key:?} in {place}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn build(self) -> Result<TrialManifest> {
+        let name = self
+            .name
+            .ok_or_else(|| Error::config("trial manifest: missing top-level `name`"))?;
+        let seed = self.seed.unwrap_or(1);
+        let model = ModelConfig::by_name(self.model.as_deref().unwrap_or("nano"))?;
+
+        let (policy, policy_label) = match (&self.tier, self.mu) {
+            (Some(tier), None) => (PrecisionPolicy::tier(tier)?, tier.clone()),
+            (None, Some(mu)) => {
+                let tau = self.tau.ok_or_else(|| {
+                    Error::config("trial manifest: [policy] mu requires tau")
+                })?;
+                let rule = Rule::by_name(self.rule.as_deref().unwrap_or("relaxed"))?;
+                let policy = PrecisionPolicy::lamp(mu, tau, rule);
+                (policy, format!("lamp(mu={mu}, tau={tau}, rule={})", rule.name()))
+            }
+            (None, None) => (PrecisionPolicy::tier("balanced")?, "balanced".to_string()),
+            (Some(_), Some(_)) => {
+                return Err(Error::config(
+                    "trial manifest: [policy] tier and mu/tau are mutually exclusive",
+                ))
+            }
+        };
+
+        let kind_name = self
+            .trace
+            .ok_or_else(|| Error::config("trial manifest: missing [workload] `trace`"))?;
+        let kind = TraceKind::by_name(&kind_name)?;
+        let mut trace = TraceSpec::new(kind, model.vocab, model.seq);
+        trace.seed = seed;
+        if let Some(v) = self.requests {
+            trace.requests = v;
+        }
+        if let Some(v) = self.sessions {
+            trace.sessions = v;
+        }
+        if let Some(v) = self.prefix_len {
+            trace.prefix_len = v;
+        }
+        if let Some(v) = self.turn_tokens {
+            trace.turn_tokens = v;
+        }
+        if let Some(v) = self.new_tokens {
+            trace.new_tokens = v;
+        }
+        if let Some(v) = self.zipf_s {
+            trace.zipf_s = v;
+        }
+        if let Some(v) = self.burst {
+            trace.burst = v;
+        }
+        if let Some(v) = self.gap_steps {
+            trace.gap_steps = v;
+        }
+        if let Some(v) = self.rate {
+            trace.rate = v;
+        }
+        if let Some(v) = self.topk {
+            trace.topk = v;
+        }
+        trace.validate()?;
+
+        let kv_format = match &self.kv_format {
+            Some(name) => Some(WeightFormat::by_name(name)?),
+            None => None,
+        };
+        if self.repair_tau.is_some() && kv_format.is_none() {
+            return Err(Error::config(
+                "trial manifest: [kv] repair-tau requires [kv] format",
+            ));
+        }
+        let weight_format = match &self.weight_format {
+            Some(name) => Some(WeightFormat::by_name(name)?),
+            None => None,
+        };
+
+        let fault_seed = self.fault_seed.unwrap_or(seed);
+        let (faults, fault_label) = match self.fault_plan.as_deref() {
+            None => (None, "none".to_string()),
+            Some("quiet") => (Some(FaultPlan::quiet(fault_seed)), "quiet".to_string()),
+            Some("chaos") => (Some(FaultPlan::chaos(fault_seed)), "chaos".to_string()),
+            Some(other) => {
+                return Err(Error::config(format!(
+                    "trial manifest: unknown fault plan {other:?} (quiet|chaos)"
+                )))
+            }
+        };
+
+        Ok(TrialManifest {
+            name,
+            seed,
+            model,
+            weights_seed: self.weights_seed.unwrap_or(7),
+            policy,
+            policy_label,
+            trace,
+            max_sessions: self.max_sessions.unwrap_or(4),
+            prefill_chunk: self.prefill_chunk.unwrap_or(8),
+            workers: self.workers.unwrap_or(0),
+            kv_format,
+            repair_tau: self.repair_tau,
+            weight_format,
+            faults,
+            fault_label,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "\
+# comment\n\
+name = demo\n\
+seed = 42\n\
+\n\
+[model]\n\
+config = nano\n\
+weights-seed = 9\n\
+\n\
+[policy]\n\
+tier = balanced\n\
+\n\
+[workload]\n\
+trace = prefix-chat   ; inline comment\n\
+requests = 9\n\
+sessions = 3\n\
+prefix-len = 8\n\
+turn-tokens = 3\n\
+new-tokens = 4\n\
+\n\
+[scheduler]\n\
+max-sessions = 4\n\
+workers = 2\n\
+\n\
+[kv]\n\
+format = bf16\n\
+repair-tau = 1.0\n\
+\n\
+[faults]\n\
+plan = quiet\n";
+
+    #[test]
+    fn parses_a_full_manifest() {
+        let m = TrialManifest::parse(GOOD).unwrap();
+        assert_eq!(m.name, "demo");
+        assert_eq!(m.seed, 42);
+        assert_eq!(m.model.name, "nano");
+        assert_eq!(m.weights_seed, 9);
+        assert_eq!(m.policy_label, "balanced");
+        assert_eq!(m.trace.kind, TraceKind::PrefixChat);
+        assert_eq!(m.trace.requests, 9);
+        assert_eq!(m.trace.seed, 42, "trace reuses the trial seed");
+        assert_eq!(m.workers, 2);
+        assert_eq!(m.kv_format, Some(WeightFormat::Bf16));
+        assert_eq!(m.repair_tau, Some(1.0));
+        assert_eq!(m.fault_label, "quiet");
+        assert!(m.faults.is_some());
+    }
+
+    #[test]
+    fn defaults_are_sensible() {
+        let m = TrialManifest::parse("name = d\n[workload]\ntrace = zipf-mix\n").unwrap();
+        assert_eq!(m.seed, 1);
+        assert_eq!(m.model.name, "nano");
+        assert_eq!(m.policy_label, "balanced");
+        assert_eq!(m.workers, 0);
+        assert!(m.kv_format.is_none());
+        assert!(m.faults.is_none());
+        assert_eq!(m.fault_label, "none");
+    }
+
+    #[test]
+    fn custom_policy_via_mu_tau_rule() {
+        let text = "name = d\n[policy]\nmu = 4\ntau = 0.1\nrule = strict\n\
+                    [workload]\ntrace = bursty\n";
+        let m = TrialManifest::parse(text).unwrap();
+        assert_eq!(m.policy, PrecisionPolicy::lamp(4, 0.1, Rule::Strict));
+        assert!(m.policy_label.contains("mu=4"));
+    }
+
+    #[test]
+    fn unknown_keys_and_sections_are_rejected() {
+        let unknown_key = "name = d\n[workload]\ntrace = zipf-mix\nbogus = 1\n";
+        let err = TrialManifest::parse(unknown_key).unwrap_err().to_string();
+        assert!(err.contains("bogus"), "{err}");
+        let unknown_section = "name = d\n[nonsense]\nx = 1\n[workload]\ntrace = zipf-mix\n";
+        assert!(TrialManifest::parse(unknown_section).is_err());
+    }
+
+    #[test]
+    fn required_fields_and_conflicts_error() {
+        assert!(TrialManifest::parse("[workload]\ntrace = zipf-mix\n").is_err(), "no name");
+        assert!(TrialManifest::parse("name = d\n").is_err(), "no trace");
+        let conflict = "name = d\n[policy]\ntier = high\nmu = 4\ntau = 0.1\n\
+                        [workload]\ntrace = zipf-mix\n";
+        assert!(TrialManifest::parse(conflict).is_err());
+        let tau_no_kv = "name = d\n[kv]\nrepair-tau = 1.0\n[workload]\ntrace = zipf-mix\n";
+        assert!(TrialManifest::parse(tau_no_kv).is_err());
+        let bad_value = "name = d\nseed = not-a-number\n[workload]\ntrace = zipf-mix\n";
+        assert!(TrialManifest::parse(bad_value).is_err());
+    }
+
+    #[test]
+    fn workload_knobs_flow_into_the_trace_spec() {
+        let text = "name = d\nseed = 5\n[workload]\ntrace = poisson\nrequests = 20\n\
+                    rate = 0.5\ntopk = 4\n";
+        let m = TrialManifest::parse(text).unwrap();
+        assert_eq!(m.trace.kind, TraceKind::Poisson);
+        assert_eq!(m.trace.requests, 20);
+        assert_eq!(m.trace.rate, 0.5);
+        assert_eq!(m.trace.topk, 4);
+        // The resulting spec actually generates.
+        assert_eq!(m.trace.generate().unwrap().len(), 20);
+    }
+}

@@ -1,0 +1,51 @@
+//! Trials: declarative, deterministic serving measurements.
+//!
+//! A *trial* bundles a model config, precision policy, workload trace,
+//! scheduler shape and optional fault plan into one manifest
+//! ([`manifest::TrialManifest`]), replays it through the unmodified
+//! scheduler ([`crate::coordinator::replay`]), and renders a canonical
+//! byte-exact artifact ([`output::canonical`]): same manifest + seed ⇒
+//! identical bytes on any machine. That artifact is the repo's
+//! reproduce-every-number primitive — `lamp trials run <name>` twice and
+//! `lamp trials diff` the results (see DESIGN.md §Trials).
+//!
+//! Six workload manifests ship with the crate (the [`BUILTIN`] registry);
+//! any `.trial` file on disk runs the same way.
+
+pub mod manifest;
+pub mod output;
+pub mod runner;
+
+pub use manifest::TrialManifest;
+pub use output::{canonical, first_divergence, token_fingerprint};
+pub use runner::{run, TrialRun};
+
+/// The bundled trial manifests, compiled into the binary so CI and a
+/// fresh checkout agree on the exact bytes being replayed.
+pub const BUILTIN: [(&str, &str); 6] = [
+    ("prefix-chat", include_str!("manifests/prefix-chat.trial")),
+    ("long-context", include_str!("manifests/long-context.trial")),
+    ("bursty", include_str!("manifests/bursty.trial")),
+    ("poisson-mix", include_str!("manifests/poisson-mix.trial")),
+    ("adversarial", include_str!("manifests/adversarial.trial")),
+    ("chaos-replay", include_str!("manifests/chaos-replay.trial")),
+];
+
+/// Look up a bundled manifest's text by name.
+pub fn builtin(name: &str) -> Option<&'static str> {
+    BUILTIN.iter().find(|(n, _)| *n == name).map(|(_, text)| *text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_resolves() {
+        assert!(builtin("prefix-chat").is_some());
+        assert!(builtin("nope").is_none());
+        for (name, text) in BUILTIN {
+            assert!(text.contains(&format!("name = {name}")), "{name}");
+        }
+    }
+}

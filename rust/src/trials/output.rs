@@ -1,0 +1,161 @@
+//! Canonical trial output: the byte-exact artifact of a trial run.
+//!
+//! Two runs of the same manifest must produce *identical bytes* here, on
+//! any machine and (for fault-free trials) at any worker count. That
+//! dictates what the format may contain:
+//!
+//! * included — per-request token streams, LAMP repair counters (integer
+//!   numerator/denominator, never floats), outcomes, and aggregates that
+//!   are plain sums over per-request data, everything ordered by request
+//!   id;
+//! * excluded — anything wall-clock (TTFT/ITL percentiles, elapsed time)
+//!   or schedule-dependent (iteration counts, occupancy, preemptions):
+//!   those live in the human-readable display output instead.
+
+use crate::coordinator::{GenerateResponse, ReplayReport};
+use crate::data::traces::TraceRequest;
+
+use super::manifest::TrialManifest;
+
+/// FNV-1a over the little-endian bytes of a token stream — a compact
+/// fingerprint so canonical output can reference prompts without
+/// embedding every long prompt verbatim.
+pub fn token_fingerprint(tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn join_tokens(tokens: &[u32]) -> String {
+    tokens.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// Render the canonical, deterministic output of a trial run.
+pub fn canonical(
+    manifest: &TrialManifest,
+    trace: &[TraceRequest],
+    report: &ReplayReport,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("trial = {}\n", manifest.name));
+    out.push_str(&format!("seed = {}\n", manifest.seed));
+    out.push_str(&format!("model = {}\n", manifest.model.name));
+    out.push_str(&format!("policy = {}\n", manifest.policy_label));
+    out.push_str(&format!(
+        "workload = {} requests={}\n",
+        manifest.trace.kind.name(),
+        trace.len()
+    ));
+    out.push_str(&format!(
+        "kv = {}\n",
+        manifest.kv_format.map(|f| f.label()).unwrap_or_else(|| "off".to_string())
+    ));
+    out.push_str(&format!(
+        "weights = {}\n",
+        manifest.weight_format.map(|f| f.label()).unwrap_or_else(|| "f32".to_string())
+    ));
+    out.push_str(&format!("faults = {}\n", manifest.fault_label));
+
+    // Aggregates as sums over per-request data (schedule-independent).
+    let generated: usize = report.responses.iter().map(|r| r.tokens.len() - r.prompt_len).sum();
+    let recomputed: usize = report.responses.iter().map(|r| r.stats.recomputed).sum();
+    let causal: usize = report.responses.iter().map(|r| r.stats.causal_total).sum();
+    out.push_str(&format!("completed = {}\n", report.responses.len()));
+    out.push_str(&format!("failed = {}\n", report.failures.len()));
+    out.push_str(&format!("generated_tokens = {generated}\n"));
+    out.push_str(&format!("attention_recompute = {recomputed}/{causal}\n"));
+
+    for resp in &report.responses {
+        out.push_str(&render_response(trace, resp));
+    }
+    for (id, error) in &report.failures {
+        out.push_str(&format!("[request {id}]\n"));
+        push_trace_line(&mut out, trace, *id);
+        out.push_str(&format!("outcome = failed: {error}\n"));
+    }
+    out
+}
+
+fn push_trace_line(out: &mut String, trace: &[TraceRequest], id: u64) {
+    if let Some(r) = trace.get(id as usize) {
+        out.push_str(&format!(
+            "arrival = {} prompt_len = {} prompt_fnv = {:016x} seed = {}\n",
+            r.arrival_step,
+            r.prompt.len(),
+            token_fingerprint(&r.prompt),
+            r.seed
+        ));
+    }
+}
+
+fn render_response(trace: &[TraceRequest], resp: &GenerateResponse) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("[request {}]\n", resp.id));
+    push_trace_line(&mut out, trace, resp.id);
+    out.push_str("outcome = completed\n");
+    out.push_str(&format!("tokens = {}\n", join_tokens(&resp.tokens[resp.prompt_len..])));
+    let s = &resp.stats;
+    out.push_str(&format!(
+        "attention = {}/{} mlp = {}/{} norm = {}/{} sampler = {}/{}\n",
+        s.recomputed,
+        s.causal_total,
+        s.mlp.recomputed,
+        s.mlp.total,
+        s.norm.recomputed,
+        s.norm.total,
+        s.sampler.recomputed,
+        s.sampler.total
+    ));
+    out
+}
+
+/// Compare two canonical outputs line by line; `None` means identical.
+/// Otherwise returns a human-readable description of the first
+/// divergence (1-indexed line number plus both lines).
+pub fn first_divergence(a: &str, b: &str) -> Option<String> {
+    let la: Vec<&str> = a.lines().collect();
+    let lb: Vec<&str> = b.lines().collect();
+    for (i, (x, y)) in la.iter().zip(&lb).enumerate() {
+        if x != y {
+            return Some(format!("line {}:\n  a: {x}\n  b: {y}", i + 1));
+        }
+    }
+    if la.len() != lb.len() {
+        return Some(format!(
+            "line counts differ: {} vs {} (first {} lines identical)",
+            la.len(),
+            lb.len(),
+            la.len().min(lb.len())
+        ));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let a = token_fingerprint(&[1, 2, 3]);
+        assert_eq!(a, token_fingerprint(&[1, 2, 3]), "pure function");
+        assert_ne!(a, token_fingerprint(&[1, 2, 4]));
+        assert_ne!(a, token_fingerprint(&[1, 2]));
+        // Known FNV-1a property: hashing nothing gives the offset basis.
+        assert_eq!(token_fingerprint(&[]), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
+    fn divergence_reporting() {
+        assert!(first_divergence("a\nb\n", "a\nb\n").is_none());
+        let d = first_divergence("a\nb\n", "a\nc\n").unwrap();
+        assert!(d.contains("line 2"), "{d}");
+        let d = first_divergence("a\n", "a\nb\n").unwrap();
+        assert!(d.contains("line counts differ"), "{d}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Build the engine a manifest describes, replay its trace, and render
+//! both outputs: the canonical byte-exact artifact and a human summary.
+
+use std::sync::Arc;
+
+use crate::coordinator::{
+    replay, FaultInjector, KvCacheOptions, NativeEngine, ReplayOptions, ReplayReport,
+    SchedulerOptions,
+};
+use crate::error::Result;
+use crate::model::Weights;
+use crate::util::{Rng, ThreadPool};
+
+use super::manifest::TrialManifest;
+use super::output;
+
+/// The result of one trial run.
+#[derive(Debug)]
+pub struct TrialRun {
+    /// Byte-exact artifact: same manifest + seed ⇒ identical bytes (see
+    /// `trials::output` for what it may contain).
+    pub canonical: String,
+    /// Human-readable summary including wall-clock and schedule-dependent
+    /// numbers — explicitly NOT deterministic.
+    pub display: String,
+}
+
+/// Run a trial end to end.
+pub fn run(manifest: &TrialManifest) -> Result<TrialRun> {
+    let trace = manifest.trace.generate()?;
+
+    let mut rng = Rng::new(manifest.weights_seed);
+    let weights = Weights::random(&manifest.model, &mut rng)?;
+    let mut engine = NativeEngine::new(weights);
+    if let Some(fmt) = manifest.weight_format {
+        engine = engine.with_weight_format(fmt)?;
+    }
+    if let Some(fmt) = manifest.kv_format {
+        let mut kv = KvCacheOptions::serving(&manifest.model, fmt, manifest.max_sessions);
+        if let Some(tau) = manifest.repair_tau {
+            kv = kv.with_repair_tau(tau);
+        }
+        engine = engine.with_kv_cache(kv)?;
+    }
+
+    let pool = if manifest.workers > 0 {
+        Some(Arc::new(ThreadPool::new(manifest.workers)))
+    } else {
+        None
+    };
+    let opts = ReplayOptions {
+        policy: manifest.policy,
+        scheduler: SchedulerOptions {
+            max_sessions: manifest.max_sessions,
+            prefill_chunk: manifest.prefill_chunk,
+            pool,
+            ..Default::default()
+        },
+        eos: None,
+        max_steps: None,
+    };
+
+    let report = match &manifest.faults {
+        Some(plan) => {
+            let injector = FaultInjector::new(engine, plan.clone())?;
+            replay(&injector, &trace, &opts)?
+        }
+        None => replay(&engine, &trace, &opts)?,
+    };
+
+    let canonical = output::canonical(manifest, &trace, &report);
+    let display = display_summary(manifest, &report);
+    Ok(TrialRun { canonical, display })
+}
+
+/// Human summary with the wall-clock numbers the canonical artifact
+/// deliberately leaves out.
+fn display_summary(manifest: &TrialManifest, report: &ReplayReport) -> String {
+    let m = &report.metrics;
+    let mut out = format!(
+        "trial {}: {} completed, {} failed, {} tokens in {} scheduler iterations \
+         ({:.3}s wall)\n",
+        manifest.name,
+        report.responses.len(),
+        report.failures.len(),
+        m.generated_tokens,
+        report.steps,
+        report.wall_s
+    );
+    out.push_str(&format!(
+        "  ttft p50/p95 = {:.2}/{:.2} ms, itl p50/p95 = {:.3}/{:.3} ms, \
+         mean active sessions = {:.2}\n",
+        1e3 * m.ttft_p50_s,
+        1e3 * m.ttft_p95_s,
+        1e3 * m.itl_p50_s,
+        1e3 * m.itl_p95_s,
+        m.mean_active_sessions
+    ));
+    out.push_str(&format!(
+        "  kv = {} ({}/{} blocks), prefix share hits = {}, retries = {}, \
+         faults injected = {}\n",
+        m.kv_format,
+        m.kv_blocks_used,
+        m.kv_blocks_capacity,
+        m.prefix_share_hits,
+        m.retries,
+        m.faults_injected
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trials;
+
+    #[test]
+    fn builtin_manifests_parse_and_run_deterministically() {
+        for (name, text) in trials::BUILTIN {
+            let manifest = TrialManifest::parse(text)
+                .unwrap_or_else(|e| panic!("builtin manifest {name}: {e}"));
+            assert_eq!(manifest.name, name, "builtin name must match its registry key");
+            let a = run(&manifest).unwrap_or_else(|e| panic!("trial {name}: {e}"));
+            let b = run(&manifest).unwrap();
+            assert_eq!(a.canonical, b.canonical, "trial {name} is nondeterministic");
+            assert!(a.canonical.contains(&format!("trial = {name}")));
+            assert!(!a.display.is_empty());
+        }
+    }
+
+    #[test]
+    fn prefix_chat_trial_exercises_the_shared_kv_pool() {
+        let manifest = TrialManifest::parse(trials::builtin("prefix-chat").unwrap()).unwrap();
+        assert!(manifest.kv_format.is_some(), "prefix-chat trial must use the kv pool");
+        let out = run(&manifest).unwrap();
+        assert!(out.canonical.contains("outcome = completed"));
+        assert!(
+            out.display.contains("prefix share hits"),
+            "display must surface sharing: {}",
+            out.display
+        );
+    }
+
+    #[test]
+    fn chaos_trial_reports_outcomes_deterministically() {
+        let manifest = TrialManifest::parse(trials::builtin("chaos-replay").unwrap()).unwrap();
+        assert!(manifest.faults.is_some());
+        let a = run(&manifest).unwrap();
+        let b = run(&manifest).unwrap();
+        assert_eq!(a.canonical, b.canonical, "fault verdicts must replay identically");
+    }
+}

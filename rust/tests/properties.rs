@@ -543,3 +543,23 @@ fn prop_kv_prefix_sharing_and_cow_refcounts_settle() {
         let _ = adoptions;
     }
 }
+
+// --- Workload generators (PR 7) ------------------------------------------
+
+#[test]
+fn prop_zipf_pmf_is_a_distribution_on_its_support() {
+    // For any (n, s): pmf sums to ~1 over [0, n), is non-increasing in
+    // rank, and is exactly 0.0 out of range (the former panic path).
+    use lamp::data::Zipf;
+    forall(
+        Config::default().cases(200),
+        pair(Gen::usize_range(1, 64), Gen::f32_range(0.2, 2.5)),
+        |&(n, s)| {
+            let zipf = Zipf::new(n, s as f64);
+            let total: f64 = (0..n).map(|k| zipf.pmf(k)).sum();
+            let sorted = (1..n).all(|k| zipf.pmf(k) <= zipf.pmf(k - 1) + 1e-12);
+            let oob = zipf.pmf(n) == 0.0 && zipf.pmf(n + 17) == 0.0;
+            (total - 1.0).abs() < 1e-9 && sorted && oob
+        },
+    );
+}

@@ -1,0 +1,79 @@
+//! Golden determinism suite for the trials subsystem (DESIGN.md §Trials).
+//!
+//! The contract under test: same manifest + seed ⇒ byte-identical canonical
+//! artifact — across reruns, across thread-pool sizes, and under injected
+//! faults. Plus the bench-diff gate end-to-end: the committed CI baselines
+//! must parse and self-diff clean, and an injected throughput regression
+//! must fail the gate.
+
+use lamp::benchkit::{bench_diff, DiffOptions};
+use lamp::trials::{builtin, first_divergence, run, TrialManifest, BUILTIN};
+
+fn run_canonical(manifest: &TrialManifest) -> String {
+    run(manifest).expect("trial run").canonical
+}
+
+#[test]
+fn every_bundled_manifest_replays_byte_identically() {
+    for (name, text) in BUILTIN {
+        let manifest = TrialManifest::parse(text).expect(name);
+        let a = run_canonical(&manifest);
+        let b = run_canonical(&manifest);
+        if let Some(d) = first_divergence(&a, &b) {
+            panic!("{name}: reruns diverge: {d}");
+        }
+        assert!(a.starts_with(&format!("trial = {name}\n")), "{name}: header");
+        assert!(a.contains("\n[request 0]\n"), "{name}: per-request blocks");
+        assert!(a.ends_with('\n'), "{name}: artifact must be newline-terminated");
+    }
+}
+
+#[test]
+fn replay_is_invariant_across_thread_pool_sizes() {
+    // A kv-less manifest: prefix-share adoption is the one per-request stats
+    // source that may depend on pool shape, so the cross-worker golden runs
+    // the bursty trace (no [kv] section) and compares against workers = 0.
+    let mut manifest = TrialManifest::parse(builtin("bursty").expect("bundled")).unwrap();
+    assert!(manifest.kv_format.is_none(), "cross-pool golden needs a kv-less trial");
+    let base = run_canonical(&manifest);
+    for workers in [1usize, 2, 4] {
+        manifest.workers = workers;
+        let out = run_canonical(&manifest);
+        if let Some(d) = first_divergence(&base, &out) {
+            panic!("workers={workers} diverges from workers=0: {d}");
+        }
+    }
+}
+
+#[test]
+fn chaos_outcomes_replay_byte_identically() {
+    // Fault verdicts are pure seeded hashes keyed on (plan seed, session
+    // seed, position, attempt) — outcomes, including failures, must replay.
+    let manifest = TrialManifest::parse(builtin("chaos-replay").expect("bundled")).unwrap();
+    let a = run_canonical(&manifest);
+    let b = run_canonical(&manifest);
+    assert_eq!(a, b, "chaos verdicts must be schedule-independent");
+    assert!(a.contains("faults = chaos\n"), "chaos plan recorded in the artifact");
+}
+
+#[test]
+fn committed_baselines_parse_and_self_diff_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    for rel in ["baselines/BENCH_PR2.smoke.json", "baselines/BENCH_PR3.smoke.json"] {
+        let text = std::fs::read_to_string(root.join(rel))
+            .unwrap_or_else(|e| panic!("{rel}: {e}"));
+        let report = bench_diff(&text, &text, &DiffOptions::default())
+            .unwrap_or_else(|e| panic!("{rel}: {e}"));
+        assert!(report.passed(), "{rel} self-diff failed:\n{}", report.render());
+    }
+}
+
+#[test]
+fn bench_gate_catches_injected_regression_end_to_end() {
+    let baseline = "{\n  \"serving_load\": {\"continuous_tok_s\": 1000.0, \"requests\": 8},\n}\n";
+    let current = "{\n  \"serving_load\": {\"continuous_tok_s\": 10.0, \"requests\": 8},\n}\n";
+    let report = bench_diff(baseline, current, &DiffOptions::default()).unwrap();
+    assert!(!report.passed(), "99% throughput drop must fail the gate");
+    let report = bench_diff(baseline, baseline, &DiffOptions::default()).unwrap();
+    assert!(report.passed(), "identical records must pass");
+}
