@@ -1,21 +1,50 @@
 //! Micro-benchmarks of the numeric hot paths — the §Perf L1/L2 evidence:
 //! PS(μ) rounding, PS-accumulated dots/matmuls vs FP32, the LAMP selection
-//! rules, one native forward pass, and one PJRT artifact execution.
-//! Includes the accumulation-mode ablation (RNE vs stochastic vs Kahan).
+//! rules, and the PR-8 headline: SIMD vs scalar-replay GFLOP/s on the
+//! attention-score dot path (`score_row_ps`), the pinned reference dot
+//! chain (`dot_block`), the blocked matmul, and decode tok/s under both
+//! dispatch modes. The two modes are asserted bitwise identical before any
+//! number is recorded — the speedup is never bought with different math.
+//!
+//! Results go into `BENCH_PR8.json` (override with `LAMP_BENCH_OUT`) under
+//! the `kernels` section. `--smoke` (the CI bench-smoke job) runs one
+//! sample on a short decode so the record producer is exercised on every
+//! push; smoke numbers are not comparable across runs.
+//!
+//! ```bash
+//! cargo bench --bench kernels            # full measurement
+//! cargo bench --bench kernels -- --smoke # CI record-producer check
+//! ```
 
-use lamp::benchkit::{bench_record_path, record_bench_section, Bencher, JsonObj, Table};
-use lamp::coordinator::{Engine, NativeEngine, PjrtEngine, PrecisionPolicy, Rule};
-use lamp::data::{Dataset, Domain};
-use lamp::lamp::softmax::{select_relaxed, select_strict};
+use lamp::benchkit::{record_bench_section, BenchStats, Bencher, JsonObj, Table};
+use lamp::lamp::softmax::{select_relaxed, select_strict, SoftmaxRule};
+use lamp::linalg::matmul::matmul_bias_fast;
+use lamp::linalg::simd::{dot_block, set_simd_enabled, simd_backend};
 use lamp::linalg::{matmul_f32, matmul_ps, Matrix};
-use lamp::model::{ModelConfig, Weights};
-use lamp::runtime::ArtifactStore;
+use lamp::model::{generate, AttentionPrecision, Decode, ModelConfig, Weights};
 use lamp::softfloat::dot::{dot_f32, dot_kahan, dot_ps, dot_ps_stochastic, score_row_ps};
 use lamp::softfloat::round::round_to_mantissa;
 use lamp::util::Rng;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn bench_out() -> PathBuf {
+    std::env::var("LAMP_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("BENCH_PR8.json"))
+}
+
+fn gflops(flops: f64, stats: &BenchStats) -> f64 {
+    flops / stats.median().as_secs_f64().max(1e-12) / 1e9
+}
 
 fn main() {
-    let b = Bencher::default();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let b = Bencher {
+        warmup_iters: if smoke { 0 } else { 3 },
+        sample_iters: if smoke { 1 } else { 15 },
+        max_total: Duration::from_secs(60),
+    };
     let mut rng = Rng::new(1);
     let mut results = Vec::new();
 
@@ -27,7 +56,8 @@ fn main() {
 
     let a: Vec<f32> = (0..1024).map(|_| rng.normal_f32()).collect();
     let v: Vec<f32> = (0..1024).map(|_| rng.normal_f32()).collect();
-    results.push(b.run("dot_f32 k=1024", || dot_f32(&a, &v)));
+    let dot_k = a.len();
+    results.push(b.run("dot_f32 k=1024 (sequential fma)", || dot_f32(&a, &v)));
     results.push(b.run("dot_ps k=1024 (mu=4)", || dot_ps(&a, &v, 4)));
     results.push(b.run("dot_kahan k=1024", || dot_kahan(&a, &v)));
     let mut srng = Rng::new(2);
@@ -35,52 +65,150 @@ fn main() {
         dot_ps_stochastic(&a, &v, 4, &mut srng)
     }));
 
-    let ma = Matrix::randn(64, 64, 1.0, &mut rng);
-    let mb = Matrix::randn(64, 64, 1.0, &mut rng);
-    results.push(b.run("matmul_f32 64x64x64", || matmul_f32(&ma, &mb).unwrap()));
-    results.push(b.run("matmul_ps 64x64x64 (mu=4)", || matmul_ps(&ma, &mb, 4).unwrap()));
-
-    // --- Fused attention score row (the causal_attention hot kernel). ---
-    let (hd, d, srow) = (32usize, 128usize, 256usize);
-    let qh: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
-    let keys: Vec<f32> = (0..srow * d).map(|_| rng.normal_f32()).collect();
-    let fused = b.run("score_row_ps n=256 hd=32 (mu=4)", || {
-        let mut out = vec![0.0f32; srow];
-        score_row_ps(&qh, &keys, d, srow, 4, 0.176_776_7, &mut out);
-        out
-    });
-    let score_flops = (2 * hd * srow) as f64;
-    let score_gflops = score_flops / fused.median().as_secs_f64().max(1e-12) / 1e9;
-    results.push(fused);
-
     // --- Selection rules over a softmax row. ---
     let row: Vec<f32> = (0..512).map(|_| rng.normal_f32() * 4.0).collect();
     results.push(b.run("select_strict n=512", || select_strict(&row, 0.1)));
     results.push(b.run("select_relaxed n=512", || select_relaxed(&row, 0.1)));
 
-    // --- Whole-model paths. ---
-    let cfg = ModelConfig::small();
-    let weights = ArtifactStore::open(ArtifactStore::default_dir())
-        .and_then(|s| s.weights("small"))
-        .unwrap_or_else(|_| Weights::random(&cfg, &mut rng).expect("random weights"));
-    let native = NativeEngine::new(weights);
-    let data = Dataset::generate(Domain::Web, cfg.vocab, cfg.batch, cfg.seq, 7, 9);
-    let policy = PrecisionPolicy::lamp(4, 0.1, Rule::Strict);
-    results.push(b.run("native forward small (batch=4, mu=4, lamp)", || {
-        native.infer(&data.sequences, &policy, 0).unwrap()
-    }));
-    results.push(b.run("native forward small (batch=4, fp32 ref)", || {
-        native.infer(&data.sequences, &PrecisionPolicy::reference(), 0).unwrap()
-    }));
+    // ----------------------------------------------------------------------
+    // PR-8 headline: SIMD vs scalar-replay on the same pinned chain.
+    // Parity is asserted first; only bitwise-identical paths get timed.
+    // ----------------------------------------------------------------------
+    let simd_available = set_simd_enabled(true);
+    println!("simd backend: {} (LAMP_SIMD honored at first use)", simd_backend());
 
-    if let Ok(store) = ArtifactStore::open(ArtifactStore::default_dir()) {
-        if store.available_models().contains(&"small".to_string()) {
-            let pjrt = PjrtEngine::load(&store, "small").unwrap();
-            results.push(b.run("pjrt execute small (batch=4, mu=4, lamp)", || {
-                pjrt.infer(&data.sequences, &policy, 0).unwrap()
-            }));
-        }
+    // Pinned reference dot chain, k=1024.
+    let simd_dot = {
+        set_simd_enabled(true);
+        dot_block(&a, &v)
+    };
+    let scalar_dot = {
+        set_simd_enabled(false);
+        dot_block(&a, &v)
+    };
+    assert_eq!(
+        simd_dot.to_bits(),
+        scalar_dot.to_bits(),
+        "dot_block SIMD diverged from scalar replay"
+    );
+    let dot_flops = (2 * dot_k) as f64;
+    set_simd_enabled(true);
+    let dot_simd = b.run("dot_block k=1024 (simd)", || dot_block(&a, &v));
+    set_simd_enabled(false);
+    let dot_scalar = b.run("dot_block k=1024 (scalar replay)", || dot_block(&a, &v));
+    let dot_gflops_simd = gflops(dot_flops, &dot_simd);
+    let dot_gflops_scalar = gflops(dot_flops, &dot_scalar);
+    results.push(dot_simd);
+    results.push(dot_scalar);
+
+    // Attention-score dot path: one full causal row at max length,
+    // PS(4) accumulation — the acceptance-criterion kernel.
+    let (hd, d, srow) = (32usize, 128usize, 256usize);
+    let qh: Vec<f32> = (0..hd).map(|_| rng.normal_f32()).collect();
+    let keys: Vec<f32> = (0..srow * d).map(|_| rng.normal_f32()).collect();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out_simd = vec![0.0f32; srow];
+    let mut out_scalar = vec![0.0f32; srow];
+    set_simd_enabled(true);
+    score_row_ps(&qh, &keys, d, srow, 4, scale, &mut out_simd);
+    set_simd_enabled(false);
+    score_row_ps(&qh, &keys, d, srow, 4, scale, &mut out_scalar);
+    for (j, (s, r)) in out_simd.iter().zip(&out_scalar).enumerate() {
+        assert_eq!(
+            s.to_bits(),
+            r.to_bits(),
+            "score_row_ps SIMD diverged from scalar replay at column {j}"
+        );
     }
+    let score_flops = (2 * hd * srow) as f64;
+    set_simd_enabled(true);
+    let mut out = vec![0.0f32; srow];
+    let score_simd = b.run("score_row_ps n=256 hd=32 mu=4 (simd)", || {
+        score_row_ps(&qh, &keys, d, srow, 4, scale, &mut out);
+        out[srow - 1]
+    });
+    set_simd_enabled(false);
+    let score_scalar = b.run("score_row_ps n=256 hd=32 mu=4 (scalar replay)", || {
+        score_row_ps(&qh, &keys, d, srow, 4, scale, &mut out);
+        out[srow - 1]
+    });
+    let score_gflops_simd = gflops(score_flops, &score_simd);
+    let score_gflops_scalar = gflops(score_flops, &score_scalar);
+    let score_speedup = score_gflops_simd / score_gflops_scalar.max(1e-12);
+    results.push(score_simd);
+    results.push(score_scalar);
+
+    // Blocked matmul (the 4-row register-blocked body), 64x64x64.
+    let ma = Matrix::randn(64, 64, 1.0, &mut rng);
+    let mb = Matrix::randn(64, 64, 1.0, &mut rng);
+    results.push(b.run("matmul_f32 64x64x64 (legacy simple)", || {
+        matmul_f32(&ma, &mb).unwrap()
+    }));
+    results.push(b.run("matmul_ps 64x64x64 (mu=4)", || matmul_ps(&ma, &mb, 4).unwrap()));
+    let mm_flops = (2 * 64 * 64 * 64) as f64;
+    set_simd_enabled(true);
+    let mm_simd_out = matmul_bias_fast(&ma, &mb, &[]).unwrap();
+    set_simd_enabled(false);
+    let mm_scalar_out = matmul_bias_fast(&ma, &mb, &[]).unwrap();
+    assert_eq!(
+        mm_simd_out.data().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        mm_scalar_out.data().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "matmul_bias_fast SIMD diverged from scalar replay"
+    );
+    set_simd_enabled(true);
+    let mm_simd = b.run("matmul_bias_fast 64x64x64 (simd)", || {
+        matmul_bias_fast(&ma, &mb, &[]).unwrap()
+    });
+    set_simd_enabled(false);
+    let mm_scalar = b.run("matmul_bias_fast 64x64x64 (scalar replay)", || {
+        matmul_bias_fast(&ma, &mb, &[]).unwrap()
+    });
+    let mm_gflops_simd = gflops(mm_flops, &mm_simd);
+    let mm_gflops_scalar = gflops(mm_flops, &mm_scalar);
+    results.push(mm_simd);
+    results.push(mm_scalar);
+
+    // --- Decode tok/s (the BENCH_PR1-lineage number), both modes. ---
+    let cfg = ModelConfig {
+        name: "bench-4l".into(),
+        vocab: 256,
+        seq: if smoke { 48 } else { 256 },
+        layers: 4,
+        heads: 4,
+        d_model: 128,
+        batch: 1,
+    };
+    cfg.validate().expect("bench config");
+    let mut wrng = Rng::new(17);
+    let weights = Weights::random(&cfg, &mut wrng).unwrap();
+    let prompt: Vec<u32> = (0..16u32).map(|i| (i * 37 + 5) % cfg.vocab as u32).collect();
+    let new_tokens = cfg.seq - prompt.len();
+    let prec = AttentionPrecision::lamp(4, 0.05, SoftmaxRule::Strict);
+    let b_dec = Bencher {
+        warmup_iters: if smoke { 0 } else { 1 },
+        sample_iters: if smoke { 1 } else { 5 },
+        max_total: Duration::from_secs(120),
+    };
+    set_simd_enabled(true);
+    let (tok_simd, _) = generate(&weights, &prompt, new_tokens, prec, Decode::Greedy, 3).unwrap();
+    set_simd_enabled(false);
+    let (tok_scalar, _) = generate(&weights, &prompt, new_tokens, prec, Decode::Greedy, 3).unwrap();
+    assert_eq!(tok_simd, tok_scalar, "decode token stream diverged across dispatch modes");
+    set_simd_enabled(true);
+    let dec_simd = b_dec.run("generate kv-cache 4l (simd)", || {
+        generate(&weights, &prompt, new_tokens, prec, Decode::Greedy, 3).unwrap()
+    });
+    set_simd_enabled(false);
+    let dec_scalar = b_dec.run("generate kv-cache 4l (scalar replay)", || {
+        generate(&weights, &prompt, new_tokens, prec, Decode::Greedy, 3).unwrap()
+    });
+    let tok_s_simd = new_tokens as f64 / dec_simd.median().as_secs_f64().max(1e-12);
+    let tok_s_scalar = new_tokens as f64 / dec_scalar.median().as_secs_f64().max(1e-12);
+    results.push(dec_simd);
+    results.push(dec_scalar);
+
+    // Leave the process in the default mode for anything run after us.
+    set_simd_enabled(true);
 
     let mut t = Table::new("kernel micro-benchmarks", &["benchmark"]);
     for r in &results {
@@ -88,14 +216,47 @@ fn main() {
     }
     t.print();
 
-    let path = bench_record_path();
+    println!(
+        "dot_block k=1024:      simd {dot_gflops_simd:.3} GFLOP/s, scalar {dot_gflops_scalar:.3} GFLOP/s"
+    );
+    println!(
+        "score_row_ps n=256:    simd {score_gflops_simd:.3} GFLOP/s, scalar {score_gflops_scalar:.3} GFLOP/s ({score_speedup:.2}x)"
+    );
+    println!(
+        "matmul 64x64x64:       simd {mm_gflops_simd:.3} GFLOP/s, scalar {mm_gflops_scalar:.3} GFLOP/s"
+    );
+    println!(
+        "decode bench-4l:       simd {tok_s_simd:.1} tok/s, scalar {tok_s_scalar:.1} tok/s"
+    );
+    if simd_available && !smoke && score_speedup < 2.0 {
+        println!(
+            "WARNING: attention-score speedup {score_speedup:.2}x below the 2x acceptance target"
+        );
+    }
+
+    let path = bench_out();
     record_bench_section(
         &path,
         "kernels",
         &JsonObj::new()
             .str("kernel", "score_row_ps (PS(4), n=256, hd=32)")
-            .num("attention_kernel_gflops", score_gflops),
+            .str("model", "bench-4l (4 layers, 4 heads, d=128, vocab=256)")
+            .str("backend", simd_backend())
+            .int("score_n", srow as u64)
+            .int("score_hd", hd as u64)
+            .int("dot_k", dot_k as u64)
+            .int("decode_new_tokens", new_tokens as u64)
+            .num("attention_gflops_simd", score_gflops_simd)
+            .num("attention_gflops_scalar", score_gflops_scalar)
+            .num("attention_simd_speedup", score_speedup)
+            .num("dot_block_gflops_simd", dot_gflops_simd)
+            .num("dot_block_gflops_scalar", dot_gflops_scalar)
+            .num("matmul_gflops_simd", mm_gflops_simd)
+            .num("matmul_gflops_scalar", mm_gflops_scalar)
+            .num("decode_tok_s_simd", tok_s_simd)
+            .num("decode_tok_s_scalar", tok_s_scalar)
+            .int("smoke", smoke as u64),
     )
     .expect("write bench record");
-    println!("recorded attention-kernel GFLOP/s -> {}", path.display());
+    println!("recorded kernel GFLOP/s + decode tok/s -> {}", path.display());
 }

@@ -10,7 +10,7 @@
 //! reduction-order differences (XLA tiles its FP32 matmuls; the PS(μ) KQ
 //! accumulation itself is sequential and bit-identical in both engines).
 
-use super::policy::PrecisionPolicy;
+use super::policy::{PrecisionPolicy, Rule};
 use crate::error::{Error, Result};
 use crate::linalg::{Matrix, WeightFormat};
 use crate::model::{
@@ -398,6 +398,14 @@ impl Engine for PjrtEngine {
     fn validate_policy(&self, policy: &PrecisionPolicy) -> Result<()> {
         policy.validate()?;
         require_attention_only(policy)?;
+        // The compiled artifact implements mode codes 0-3 only; the tile
+        // rules (PR 8) exist in the native engines alone.
+        if matches!(policy.attention.rule, Rule::Tile { .. } | Rule::TileRandom { .. }) {
+            return Err(Error::config(format!(
+                "pjrt backend does not implement tile rule {:?}",
+                policy.attention.rule.name()
+            )));
+        }
         require_weight_storage(policy, self.weight_format())?;
         require_kv_storage(policy, self.kv_format())
     }

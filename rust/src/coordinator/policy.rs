@@ -19,6 +19,10 @@ use crate::model::{
     AttentionPrecision, KvPrecision, PrecisionPlan, SitePrecision, WeightPrecision,
 };
 
+/// Default tile width for the tile-granular rules when the name carries
+/// no explicit width (`"tile"` / `"tile_random"`).
+pub const DEFAULT_TILE_WIDTH: usize = 16;
+
 /// Selection rule, coordinator-facing (mirrors kernel mode codes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Rule {
@@ -26,37 +30,67 @@ pub enum Rule {
     Relaxed,
     RelaxedLengthNorm,
     Random,
+    /// Tile-granular strict rule (PR 8): per-tile summed sensitivity vs an
+    /// absolute τ, attention site only. Native engines only — not baked
+    /// into any compiled artifact.
+    Tile { width: usize },
+    /// Count-matched random baseline for [`Rule::Tile`].
+    TileRandom { width: usize },
 }
 
 impl Rule {
-    /// The artifact mode code (MODE_* in lamp_attention.py).
+    /// The artifact mode code (MODE_* in lamp_attention.py). Tile rules
+    /// carry a code for labeling symmetry, but no compiled artifact
+    /// implements them — `PjrtEngine::validate_policy` rejects both.
     pub fn mode_code(self) -> i32 {
         match self {
             Rule::Strict => 0,
             Rule::Relaxed => 1,
             Rule::RelaxedLengthNorm => 2,
             Rule::Random => 3,
+            Rule::Tile { .. } => 4,
+            Rule::TileRandom { .. } => 5,
         }
     }
 
     pub fn by_name(name: &str) -> Result<Self> {
+        // Tile rules take an optional width suffix: "tile8", "tile_random4".
+        let parse_width = |suffix: &str| -> Result<usize> {
+            if suffix.is_empty() {
+                return Ok(DEFAULT_TILE_WIDTH);
+            }
+            match suffix.parse::<usize>() {
+                Ok(w) if w >= 1 => Ok(w),
+                _ => Err(Error::config(format!(
+                    "bad tile width {suffix:?} in rule {name:?} (want an integer >= 1)"
+                ))),
+            }
+        };
+        if let Some(rest) = name.strip_prefix("tile_random") {
+            return Ok(Rule::TileRandom { width: parse_width(rest)? });
+        }
+        if let Some(rest) = name.strip_prefix("tile") {
+            return Ok(Rule::Tile { width: parse_width(rest)? });
+        }
         match name {
             "strict" => Ok(Rule::Strict),
             "relaxed" => Ok(Rule::Relaxed),
             "relaxed_ln" => Ok(Rule::RelaxedLengthNorm),
             "random" => Ok(Rule::Random),
             other => Err(Error::config(format!(
-                "unknown rule {other:?} (strict|relaxed|relaxed_ln|random)"
+                "unknown rule {other:?} (strict|relaxed|relaxed_ln|random|tile<w>|tile_random<w>)"
             ))),
         }
     }
 
-    pub fn name(self) -> &'static str {
+    pub fn name(self) -> String {
         match self {
-            Rule::Strict => "strict",
-            Rule::Relaxed => "relaxed",
-            Rule::RelaxedLengthNorm => "relaxed_ln",
-            Rule::Random => "random",
+            Rule::Strict => "strict".to_string(),
+            Rule::Relaxed => "relaxed".to_string(),
+            Rule::RelaxedLengthNorm => "relaxed_ln".to_string(),
+            Rule::Random => "random".to_string(),
+            Rule::Tile { width } => format!("tile{width}"),
+            Rule::TileRandom { width } => format!("tile_random{width}"),
         }
     }
 
@@ -68,6 +102,8 @@ impl Rule {
             Rule::Relaxed => SoftmaxRule::Relaxed,
             Rule::RelaxedLengthNorm => SoftmaxRule::RelaxedLengthNorm { ref_len },
             Rule::Random => SoftmaxRule::Random,
+            Rule::Tile { width } => SoftmaxRule::Tile { width },
+            Rule::TileRandom { width } => SoftmaxRule::TileRandom { width },
         }
     }
 }
@@ -464,14 +500,51 @@ mod tests {
         assert_eq!(Rule::Relaxed.mode_code(), 1);
         assert_eq!(Rule::RelaxedLengthNorm.mode_code(), 2);
         assert_eq!(Rule::Random.mode_code(), 3);
+        assert_eq!(Rule::Tile { width: 16 }.mode_code(), 4);
+        assert_eq!(Rule::TileRandom { width: 16 }.mode_code(), 5);
     }
 
     #[test]
     fn rule_names_roundtrip() {
-        for r in [Rule::Strict, Rule::Relaxed, Rule::RelaxedLengthNorm, Rule::Random] {
-            assert_eq!(Rule::by_name(r.name()).unwrap(), r);
+        for r in [
+            Rule::Strict,
+            Rule::Relaxed,
+            Rule::RelaxedLengthNorm,
+            Rule::Random,
+            Rule::Tile { width: 8 },
+            Rule::TileRandom { width: 32 },
+        ] {
+            assert_eq!(Rule::by_name(&r.name()).unwrap(), r);
         }
         assert!(Rule::by_name("bogus").is_err());
+        // Bare tile names pick the default width.
+        assert_eq!(
+            Rule::by_name("tile").unwrap(),
+            Rule::Tile { width: DEFAULT_TILE_WIDTH }
+        );
+        assert_eq!(
+            Rule::by_name("tile_random").unwrap(),
+            Rule::TileRandom { width: DEFAULT_TILE_WIDTH }
+        );
+        assert!(Rule::by_name("tile0").is_err());
+        assert!(Rule::by_name("tilex").is_err());
+    }
+
+    #[test]
+    fn tile_policies_validate_attention_only() {
+        // Tile rules use absolute thresholds (tau >= 1 is legal) but are
+        // attention-site-only and require width >= 1.
+        let tile = Rule::Tile { width: 4 };
+        assert!(PrecisionPolicy::lamp(4, 1.5, tile).validate().is_ok());
+        let e = PrecisionPolicy::reference()
+            .with_mlp(SitePolicy::lamp(4, 0.1, tile))
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("attention site only"), "{e}");
+        assert!(PrecisionPolicy::lamp(4, 0.1, Rule::Tile { width: 0 })
+            .validate()
+            .is_err());
     }
 
     #[test]

@@ -29,6 +29,15 @@ pub enum SoftmaxRule {
     /// Baseline: same *count* as Strict at this τ, positions chosen
     /// uniformly at random (App. C.4).
     Random,
+    /// Tile-granular strict rule (PR 8): score rows are partitioned into
+    /// contiguous tiles of `width` columns; a tile is recomputed exactly
+    /// when its *summed* strict sensitivity exceeds τ. The last tile —
+    /// which contains the causal diagonal — is always recomputed.
+    Tile { width: usize },
+    /// Baseline for [`SoftmaxRule::Tile`]: same number of *non-diagonal*
+    /// tiles as `Tile` at this τ, chosen uniformly at random; the diagonal
+    /// tile is always recomputed.
+    TileRandom { width: usize },
 }
 
 /// Numerically stable softmax (subtract-max), FP32.
@@ -140,6 +149,64 @@ pub fn select_random(y: &[f32], tau: f32, rng: &mut Rng) -> Vec<bool> {
     random_mask(y.len(), count, rng)
 }
 
+/// Number of `width`-wide tiles covering a row of `n` columns.
+#[inline]
+pub fn tile_count(n: usize, width: usize) -> usize {
+    n.div_ceil(width.max(1))
+}
+
+/// Tile-granular strict rule (PR 8). Partition the row into contiguous
+/// tiles of `width` columns (the last tile may be ragged) and recompute a
+/// tile exactly when the *sum* of its entries' strict sensitivities
+/// `2 z_j (1 − z_j) |y_j|` exceeds τ. The final tile — the one holding the
+/// causal diagonal in attention — is always recomputed: the diagonal score
+/// is the row's own query-key dot and dominates short rows.
+///
+/// The returned mask is tile-uniform: `mask[j]` depends only on `j / width`.
+pub fn select_tile(y: &[f32], tau: f32, width: usize) -> Vec<bool> {
+    let n = y.len();
+    let mut mask = vec![false; n];
+    if n == 0 {
+        return mask;
+    }
+    let w = width.max(1);
+    let z = softmax(y);
+    let ntiles = tile_count(n, w);
+    for t in 0..ntiles {
+        let lo = t * w;
+        let hi = ((t + 1) * w).min(n);
+        let s: f32 = (lo..hi).map(|j| strict_sensitivity(z[j], y[j])).sum();
+        if t + 1 == ntiles || s > tau {
+            mask[lo..hi].fill(true);
+        }
+    }
+    mask
+}
+
+/// Count-matched random baseline for [`select_tile`]: flags the diagonal
+/// (last) tile plus as many uniformly random non-diagonal tiles as
+/// [`select_tile`] selects at this τ.
+pub fn select_tile_random(y: &[f32], tau: f32, width: usize, rng: &mut Rng) -> Vec<bool> {
+    let n = y.len();
+    let mut mask = vec![false; n];
+    if n == 0 {
+        return mask;
+    }
+    let w = width.max(1);
+    let ntiles = tile_count(n, w);
+    let strict = select_tile(y, tau, w);
+    // Non-diagonal tiles selected by the tile rule (mask is tile-uniform,
+    // so the tile's first element witnesses the whole tile).
+    let k = (0..ntiles - 1).filter(|&t| strict[t * w]).count();
+    for t in rng.sample_indices(ntiles - 1, k) {
+        let lo = t * w;
+        mask[lo..lo + w].fill(true); // non-diagonal tiles are never ragged
+    }
+    let lo = (ntiles - 1) * w;
+    mask[lo..n].fill(true);
+    mask
+}
+
 /// Dispatch on [`SoftmaxRule`].
 pub fn select_softmax(y: &[f32], tau: f32, rule: SoftmaxRule, rng: &mut Rng) -> Vec<bool> {
     match rule {
@@ -147,6 +214,8 @@ pub fn select_softmax(y: &[f32], tau: f32, rule: SoftmaxRule, rng: &mut Rng) -> 
         SoftmaxRule::Relaxed => select_relaxed(y, tau),
         SoftmaxRule::RelaxedLengthNorm { ref_len } => select_relaxed_ln(y, tau, ref_len),
         SoftmaxRule::Random => select_random(y, tau, rng),
+        SoftmaxRule::Tile { width } => select_tile(y, tau, width),
+        SoftmaxRule::TileRandom { width } => select_tile_random(y, tau, width, rng),
     }
 }
 
@@ -343,6 +412,89 @@ mod tests {
         // z = [1]: sensitivity 2·1·0·|y| = 0 → never selected by strict.
         let mask = select_strict(&[42.0], 1e-9);
         assert_eq!(mask, vec![false]);
+    }
+
+    #[test]
+    fn tile_mask_is_tile_uniform_and_covers_diagonal() {
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let n = rng.range(1, 70);
+            let width = rng.range(1, 20);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 10.0).collect();
+            let tau = rng.f32() * 0.4;
+            let mask = select_tile(&y, tau, width);
+            assert_eq!(mask.len(), n);
+            // Tile-uniform: every element agrees with its tile's first element.
+            for (j, &b) in mask.iter().enumerate() {
+                assert_eq!(b, mask[(j / width) * width], "j={j} width={width}");
+            }
+            // The diagonal (last) tile is always selected.
+            assert!(mask[n - 1], "diagonal tile must be selected");
+        }
+    }
+
+    #[test]
+    fn tile_selection_monotone_in_tau() {
+        let mut rng = Rng::new(12);
+        for _ in 0..200 {
+            let n = rng.range(1, 64);
+            let width = rng.range(1, 12);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 8.0).collect();
+            let t1 = rng.f32() * 0.2;
+            let t2 = t1 + rng.f32() * 0.5;
+            let m1 = select_tile(&y, t1, width);
+            let m2 = select_tile(&y, t2, width);
+            for j in 0..n {
+                if m2[j] {
+                    assert!(m1[j], "tile selection not monotone in tau");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_width_one_matches_summed_strict_plus_diagonal() {
+        // width=1: each tile is one entry, so selection is the strict rule
+        // except the last entry is forced on.
+        let mut rng = Rng::new(13);
+        for _ in 0..100 {
+            let n = rng.range(1, 40);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 10.0).collect();
+            let tau = rng.f32() * 0.3;
+            let tiled = select_tile(&y, tau, 1);
+            let strict = select_strict(&y, tau);
+            for j in 0..n - 1 {
+                assert_eq!(tiled[j], strict[j], "j={j}");
+            }
+            assert!(tiled[n - 1]);
+        }
+    }
+
+    #[test]
+    fn tile_random_matches_tile_count() {
+        let mut rng = Rng::new(14);
+        for _ in 0..100 {
+            let n = rng.range(1, 64);
+            let width = rng.range(1, 12);
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 10.0).collect();
+            let tau = rng.f32() * 0.3;
+            let w = width.max(1);
+            let a = select_tile(&y, tau, width);
+            let b = select_tile_random(&y, tau, width, &mut rng);
+            let tiles = |m: &[bool]| (0..tile_count(n, w)).filter(|&t| m[t * w]).count();
+            assert_eq!(tiles(&a), tiles(&b), "n={n} width={width}");
+            assert!(b[n - 1], "random baseline must keep the diagonal tile");
+        }
+    }
+
+    #[test]
+    fn tile_empty_and_zero_width() {
+        let mut rng = Rng::new(15);
+        assert!(select_tile(&[], 0.1, 8).is_empty());
+        assert!(select_tile_random(&[], 0.1, 8, &mut rng).is_empty());
+        // width 0 is clamped to 1 rather than panicking.
+        let m = select_tile(&[1.0, 2.0], f32::INFINITY, 0);
+        assert_eq!(m, vec![false, true]);
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! the weights first and calling the f32 kernel, while streaming half the
 //! weight bytes.
 
+use super::simd;
+pub use super::simd::{dot_block, dot_block_bf16};
 use super::tensor::{bf16_to_f32, Matrix, WeightStore, WeightTensor};
 use crate::error::{Error, Result};
 use crate::softfloat::dot::{dot_f32, dot_ps};
@@ -72,12 +74,23 @@ pub fn recompute_masked(
     if c.shape() != (a.rows(), b.cols()) || mask.len() != a.rows() * b.cols() {
         return Err(Error::shape("recompute_masked: output/mask shape".to_string()));
     }
-    let bt = b.transpose();
+    // Strided column dots instead of materializing `b.transpose()`: the
+    // ascending-p FMA chain down column j is exactly [`dot_f32`] on the
+    // explicit column, so this stays bitwise identical to the old
+    // transpose-then-row-dot body while allocating nothing (repair calls
+    // sit on the decode hot path).
+    let bc = b.cols();
+    let bd = b.data();
     let mut n = 0;
     for i in 0..a.rows() {
-        for j in 0..b.cols() {
-            if mask[i * b.cols() + j] {
-                c.set(i, j, dot_f32(a.row(i), bt.row(j)));
+        let arow = a.row(i);
+        for j in 0..bc {
+            if mask[i * bc + j] {
+                let mut cij = 0.0f32;
+                for (p, &av) in arow.iter().enumerate() {
+                    cij = av.mul_add(bd[p * bc + j], cij);
+                }
+                c.set(i, j, cij);
                 n += 1;
             }
         }
@@ -104,6 +117,12 @@ pub fn matvec_bias_into(x_row: &[f32], w: &Matrix, bias: &[f32], out: &mut [f32]
 /// so the two are bit-identical by construction.
 #[inline]
 fn matvec_bias_flat(x_row: &[f32], wdata: &[f32], n: usize, bias: &[f32], out: &mut [f32]) {
+    // Mul+add is elementwise per (p, j): the vector body computes the same
+    // FP32 ops on the same values in the same order, so SIMD and scalar are
+    // bitwise identical here (no chain pin involved).
+    if simd::matvec_f32_simd(x_row, wdata, n, bias, out) {
+        return;
+    }
     if bias.is_empty() {
         for o in out.iter_mut() {
             *o = 0.0;
@@ -124,6 +143,9 @@ fn matvec_bias_flat(x_row: &[f32], wdata: &[f32], n: usize, bias: &[f32], out: &
 /// identical order ⇒ bitwise equal to dequantize-then-`matvec_bias_into`.
 #[inline]
 fn matvec_bias_flat_bf16(x_row: &[f32], wdata: &[u16], n: usize, bias: &[f32], out: &mut [f32]) {
+    if simd::matvec_bf16_simd(x_row, wdata, n, bias, out) {
+        return;
+    }
     if bias.is_empty() {
         for o in out.iter_mut() {
             *o = 0.0;
@@ -188,6 +210,13 @@ fn matvec_ps_bias_flat(
     mu: u32,
     out: &mut [f32],
 ) {
+    // Each output column is an independent per-step round(fma(..)) chain in
+    // ascending p; the vector body advances 8 such chains side by side with
+    // a lanewise-identical rounding primitive, so the per-column chain —
+    // and therefore every bit — is unchanged.
+    if simd::matvec_ps_simd(x_row, wdata, n, bias, mu, out) {
+        return;
+    }
     for o in out.iter_mut() {
         *o = 0.0;
     }
@@ -215,6 +244,9 @@ fn matvec_ps_bias_flat_bf16(
     mu: u32,
     out: &mut [f32],
 ) {
+    if simd::matvec_ps_bf16_simd(x_row, wdata, n, bias, mu, out) {
+        return;
+    }
     for o in out.iter_mut() {
         *o = 0.0;
     }
@@ -297,66 +329,22 @@ pub fn matvec_col_f32_wt(x_row: &[f32], w: &WeightTensor, bias: &[f32], j: usize
     }
 }
 
-/// Four-way-unrolled FP32 dot product (independent partial sums break the
-/// FP add latency chain and let the compiler vectorize). Shared by
-/// [`matmul_transposed_into`] and the KV-cache unembedding row so both
-/// produce bit-identical logits.
-#[inline]
-pub fn dot_unrolled4(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let k = a.len();
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    let mut p = 0;
-    while p + 4 <= k {
-        s0 += a[p] * b[p];
-        s1 += a[p + 1] * b[p + 1];
-        s2 += a[p + 2] * b[p + 2];
-        s3 += a[p + 3] * b[p + 3];
-        p += 4;
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    while p < k {
-        s += a[p] * b[p];
-        p += 1;
-    }
-    s
-}
-
-/// bf16 twin of [`dot_unrolled4`] — identical unroll structure on the
-/// widened weights, so it is bitwise equal to dequantize-then-
-/// [`dot_unrolled4`].
-#[inline]
-fn dot_unrolled4_bf16(a: &[f32], b: &[u16]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let k = a.len();
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    let mut p = 0;
-    while p + 4 <= k {
-        s0 += a[p] * bf16_to_f32(b[p]);
-        s1 += a[p + 1] * bf16_to_f32(b[p + 1]);
-        s2 += a[p + 2] * bf16_to_f32(b[p + 2]);
-        s3 += a[p + 3] * bf16_to_f32(b[p + 3]);
-        p += 4;
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    while p < k {
-        s += a[p] * bf16_to_f32(b[p]);
-        p += 1;
-    }
-    s
-}
-
 /// Contiguous row `r` of a [n, k] weight tensor dotted with `x` via the
-/// 4-way-unrolled FP32 kernel, dequantizing on the fly — the reference
-/// unembedding row over mixed-precision `wte` storage.
+/// pinned block-dot chain ([`dot_block`]), dequantizing on the fly — the
+/// reference unembedding row over mixed-precision `wte` storage.
+///
+/// PR 8 replaced the old 4-way-unrolled scalar chain (`dot_unrolled4`)
+/// with the SIMD-shaped 32-wide block chain as the defined reference; the
+/// old golden pins were regenerated in the same commit (DESIGN.md §SIMD &
+/// tiled precision).
 #[inline]
-pub fn wt_row_dot_unrolled4(x: &[f32], w: &WeightTensor, r: usize) -> f32 {
+pub fn wt_row_dot_block(x: &[f32], w: &WeightTensor, r: usize) -> f32 {
     let k = w.cols();
     match w.store() {
         WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => {
-            dot_unrolled4(x, &d[r * k..(r + 1) * k])
+            dot_block(x, &d[r * k..(r + 1) * k])
         }
-        WeightStore::Bf16(d) => dot_unrolled4_bf16(x, &d[r * k..(r + 1) * k]),
+        WeightStore::Bf16(d) => dot_block_bf16(x, &d[r * k..(r + 1) * k]),
     }
 }
 
@@ -439,10 +427,69 @@ pub fn matmul_bias_into(
     let m = x.rows();
     let n = w.cols();
     out.resize(m, n);
-    for i in 0..m {
-        matvec_bias_into(x.row(i), w, bias, out.row_mut(i));
-    }
+    matmul_rows_f32(x, w.data(), n, bias, out);
     Ok(())
+}
+
+/// 4-row register-blocked body shared by [`matmul_bias_into`] and the
+/// f32-backed arm of [`matmul_bias_into_wt`]: each streamed weight panel
+/// feeds four output rows at once (4× less W traffic), while every output
+/// keeps the ascending-p mul+add order of the single-row matvec — so the
+/// blocked batched call stays bitwise identical to per-row kernels (and to
+/// the KV-cache decode row). Remainder rows run the row kernel directly.
+fn matmul_rows_f32(x: &Matrix, wdata: &[f32], n: usize, bias: &[f32], out: &mut Matrix) {
+    let m = x.rows();
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut rows = out.data_mut().chunks_exact_mut(n);
+    let mut i = 0;
+    while i + 4 <= m {
+        let r0 = rows.next().unwrap();
+        let r1 = rows.next().unwrap();
+        let r2 = rows.next().unwrap();
+        let r3 = rows.next().unwrap();
+        let xs = [x.row(i), x.row(i + 1), x.row(i + 2), x.row(i + 3)];
+        if !simd::matvec4_f32_simd(xs, wdata, n, bias, [&mut *r0, &mut *r1, &mut *r2, &mut *r3]) {
+            matvec_bias_flat(xs[0], wdata, n, bias, r0);
+            matvec_bias_flat(xs[1], wdata, n, bias, r1);
+            matvec_bias_flat(xs[2], wdata, n, bias, r2);
+            matvec_bias_flat(xs[3], wdata, n, bias, r3);
+        }
+        i += 4;
+    }
+    for r in rows {
+        matvec_bias_flat(x.row(i), wdata, n, bias, r);
+        i += 1;
+    }
+}
+
+/// bf16 twin of [`matmul_rows_f32`].
+fn matmul_rows_bf16(x: &Matrix, wdata: &[u16], n: usize, bias: &[f32], out: &mut Matrix) {
+    let m = x.rows();
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut rows = out.data_mut().chunks_exact_mut(n);
+    let mut i = 0;
+    while i + 4 <= m {
+        let r0 = rows.next().unwrap();
+        let r1 = rows.next().unwrap();
+        let r2 = rows.next().unwrap();
+        let r3 = rows.next().unwrap();
+        let xs = [x.row(i), x.row(i + 1), x.row(i + 2), x.row(i + 3)];
+        if !simd::matvec4_bf16_simd(xs, wdata, n, bias, [&mut *r0, &mut *r1, &mut *r2, &mut *r3]) {
+            matvec_bias_flat_bf16(xs[0], wdata, n, bias, r0);
+            matvec_bias_flat_bf16(xs[1], wdata, n, bias, r1);
+            matvec_bias_flat_bf16(xs[2], wdata, n, bias, r2);
+            matvec_bias_flat_bf16(xs[3], wdata, n, bias, r3);
+        }
+        i += 4;
+    }
+    for r in rows {
+        matvec_bias_flat_bf16(x.row(i), wdata, n, bias, r);
+        i += 1;
+    }
 }
 
 /// Allocating wrapper around [`matmul_bias_into`].
@@ -470,9 +517,10 @@ fn check_bias_shapes_wt(x: &Matrix, w: &WeightTensor, bias: &[f32]) -> Result<()
     Ok(())
 }
 
-/// [`matmul_bias_into`] over mixed-precision weight storage: each row runs
-/// the fused-dequant [`matvec_bias_into_wt`] row kernel (so the batched
-/// call and the KV-cache decode row stay bit-identical per storage format).
+/// [`matmul_bias_into`] over mixed-precision weight storage: the same
+/// 4-row register-blocked body with dequantization fused into the panel
+/// stream (so the batched call and the KV-cache decode row stay
+/// bit-identical per storage format).
 pub fn matmul_bias_into_wt(
     x: &Matrix,
     w: &WeightTensor,
@@ -481,9 +529,13 @@ pub fn matmul_bias_into_wt(
 ) -> Result<()> {
     check_bias_shapes_wt(x, w, bias)?;
     let m = x.rows();
-    out.resize(m, w.cols());
-    for i in 0..m {
-        matvec_bias_into_wt(x.row(i), w, bias, out.row_mut(i));
+    let n = w.cols();
+    out.resize(m, n);
+    match w.store() {
+        WeightStore::F32(d) | WeightStore::PsRounded { data: d, .. } => {
+            matmul_rows_f32(x, d, n, bias, out)
+        }
+        WeightStore::Bf16(d) => matmul_rows_bf16(x, d, n, bias, out),
     }
     Ok(())
 }
@@ -513,7 +565,7 @@ pub fn matmul_transposed_into(x: &Matrix, w: &Matrix, out: &mut Matrix) -> Resul
         let xi = x.row(i);
         let ci = out.row_mut(i);
         for j in 0..n {
-            ci[j] = dot_unrolled4(xi, w.row(j));
+            ci[j] = dot_block(xi, w.row(j));
         }
     }
     Ok(())
@@ -528,7 +580,7 @@ pub fn matmul_transposed_fast(x: &Matrix, w: &Matrix) -> Result<Matrix> {
 
 /// [`matmul_transposed_into`] over mixed-precision weight storage — the
 /// tied-unembedding fast path reading `wte` in its stored format (each
-/// output is a fused-dequant [`wt_row_dot_unrolled4`] row dot).
+/// output is a fused-dequant [`wt_row_dot_block`] row dot).
 pub fn matmul_transposed_into_wt(
     x: &Matrix,
     w: &WeightTensor,
@@ -548,7 +600,7 @@ pub fn matmul_transposed_into_wt(
         let xi = x.row(i);
         let ci = out.row_mut(i);
         for (j, c) in ci.iter_mut().enumerate() {
-            *c = wt_row_dot_unrolled4(xi, w, j);
+            *c = wt_row_dot_block(xi, w, j);
         }
     }
     Ok(())
@@ -559,6 +611,41 @@ pub fn matmul_transposed_fast_wt(x: &Matrix, w: &WeightTensor) -> Result<Matrix>
     let mut c = Matrix::zeros(0, 0);
     matmul_transposed_into_wt(x, w, &mut c)?;
     Ok(c)
+}
+
+#[cfg(test)]
+mod alloc_counter {
+    //! Thread-local allocation counter for no-alloc assertions: a counting
+    //! wrapper around the system allocator, installed for the unit-test
+    //! binary only. The counter is a const-initialized thread-local `Cell`
+    //! (no lazy TLS init, so counting inside `alloc` cannot recurse) and
+    //! per-thread, so parallel tests don't perturb each other's counts.
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    thread_local! {
+        static ALLOCS: Cell<usize> = const { Cell::new(0) };
+    }
+
+    struct CountingAlloc;
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.with(|c| c.set(c.get() + 1));
+            System.alloc(layout)
+        }
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+    }
+
+    #[global_allocator]
+    static COUNTING: CountingAlloc = CountingAlloc;
+
+    /// Heap allocations performed by the current thread so far.
+    pub fn allocation_count() -> usize {
+        ALLOCS.with(|c| c.get())
+    }
 }
 
 #[cfg(test)]
@@ -616,7 +703,13 @@ mod tests {
         let mut c = matmul_ps(&a, &b, 3).unwrap();
         // Flag every other entry.
         let mask: Vec<bool> = (0..36).map(|k| k % 2 == 0).collect();
+        let before = super::alloc_counter::allocation_count();
         let n = recompute_masked(&mut c, &a, &b, &mask).unwrap();
+        assert_eq!(
+            super::alloc_counter::allocation_count(),
+            before,
+            "recompute_masked must not allocate on the repair path"
+        );
         assert_eq!(n, 18);
         for i in 0..6 {
             for j in 0..6 {
@@ -815,9 +908,9 @@ mod tests {
                 let deq = wt.to_matrix();
                 for r in 0..v {
                     assert_eq!(
-                        wt_row_dot_unrolled4(&x, &wt, r).to_bits(),
-                        dot_unrolled4(&x, deq.row(r)).to_bits(),
-                        "{fmt:?} unrolled r={r}"
+                        wt_row_dot_block(&x, &wt, r).to_bits(),
+                        dot_block(&x, deq.row(r)).to_bits(),
+                        "{fmt:?} block r={r}"
                     );
                     assert_eq!(
                         wt_row_dot_f32(&x, &wt, r).to_bits(),

@@ -9,9 +9,14 @@
 //!   recomputation (the building block of LAMP attention), and the fused
 //!   dequant-on-the-fly `*_wt` kernels that read [`WeightTensor`] storage
 //!   directly (bf16 decode reads half the bytes).
+//! * [`simd`] — runtime-dispatched AVX2/NEON kernel bodies with bit-exact
+//!   scalar replays of the same accumulation-chain shape (`LAMP_SIMD=0`
+//!   forces the replay everywhere).
 
 pub mod matmul;
+pub mod simd;
 pub mod tensor;
 
 pub use matmul::{matmul_f32, matmul_ps, recompute_masked};
+pub use simd::{set_simd_enabled, simd_backend, simd_enabled};
 pub use tensor::{Matrix, WeightFormat, WeightStore, WeightTensor};

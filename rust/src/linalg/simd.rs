@@ -1,0 +1,952 @@
+//! Runtime-dispatched SIMD kernels with a bit-exact scalar replay.
+//!
+//! Every kernel here exists in (up to) three bodies — AVX2+FMA, NEON, and
+//! a scalar replay — that execute the **same accumulation-chain shape**:
+//! the lane count and partial-sum tree are fixed by the format definition,
+//! not by the instruction set, so all bodies produce bitwise-identical
+//! results (DESIGN.md §SIMD & tiled precision). Dispatch is resolved once
+//! per process from runtime CPU feature detection and the `LAMP_SIMD`
+//! environment variable (`LAMP_SIMD=0` forces the scalar replay — the CI
+//! `test-scalar` job runs the whole suite that way).
+//!
+//! Chain contracts:
+//! * [`dot_block`] — the pinned FP32 reference-dot chain: 4 interleaved
+//!   8-lane vector accumulators (32 independent partial sums over 32-wide
+//!   blocks), reduced accumulator-pairwise then through a fixed 8-lane
+//!   tree, with a sequential-FMA tail. This chain *replaced* the old
+//!   4-way-unrolled `dot_unrolled4` pins in PR 8.
+//! * [`score_row_ps_simd`] / the PS matvec kernels — vectorization only
+//!   interleaves *independent* per-output `round(fma(..))` chains (8 per
+//!   vector), each internally identical to the sequential
+//!   [`crate::softfloat::dot::dot_ps`] chain, so no pin changed there.
+//! * The FP32 matvec kernels vectorize across output columns with
+//!   elementwise mul+add — bit-transparent at any width.
+//!
+//! IEEE-754 gives the equivalences for free: `_mm256_fmadd_ps` /
+//! `vfmaq_f32` and scalar [`f32::mul_add`] are all correctly-rounded fused
+//! multiply-adds, and vector add/mul are the scalar operations applied
+//! lanewise (MXCSR/FPCR defaults: round-to-nearest-even, no FTZ/DAZ).
+
+use super::tensor::bf16_to_f32;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Lanes per vector accumulator in the pinned [`dot_block`] chain.
+pub const DOT_LANES: usize = 8;
+/// Interleaved vector accumulators in the pinned [`dot_block`] chain.
+pub const DOT_ACCS: usize = 4;
+/// Elements consumed per main-loop iteration of [`dot_block`].
+pub const DOT_BLOCK: usize = DOT_LANES * DOT_ACCS;
+
+const MODE_UNINIT: u8 = 0;
+const MODE_SCALAR: u8 = 1;
+const MODE_SIMD: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNINIT);
+
+/// True iff this build/CPU has a vector backend at all.
+fn detect() -> u8 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return MODE_SIMD;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return MODE_SIMD;
+        }
+    }
+    MODE_SCALAR
+}
+
+fn resolve() -> u8 {
+    let m = MODE.load(Ordering::Relaxed);
+    if m != MODE_UNINIT {
+        return m;
+    }
+    // LAMP_SIMD: unset/1/true/yes/on → use the vector backend when the CPU
+    // has one; 0/false/no/off → force the scalar replay.
+    let enabled = match std::env::var("LAMP_SIMD") {
+        Ok(v) => !matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "0" | "false" | "no" | "off"
+        ),
+        Err(_) => true,
+    };
+    let m = if enabled { detect() } else { MODE_SCALAR };
+    MODE.store(m, Ordering::Relaxed);
+    m
+}
+
+/// Whether the vector backend is active (false ⇒ every kernel runs its
+/// scalar replay, which is bitwise identical by construction).
+#[inline]
+pub fn simd_enabled() -> bool {
+    resolve() == MODE_SIMD
+}
+
+/// Force the dispatch mode (benches/tests). Returns the mode that actually
+/// took effect: requesting SIMD on a CPU without a backend stays scalar.
+/// Process-global; racing toggles are benign for correctness because both
+/// modes produce identical bits, but perf measurements should serialize.
+pub fn set_simd_enabled(on: bool) -> bool {
+    let m = if on { detect() } else { MODE_SCALAR };
+    MODE.store(m, Ordering::Relaxed);
+    m == MODE_SIMD
+}
+
+/// Human-readable label of the active backend (bench records, `lamp info`).
+pub fn simd_backend() -> &'static str {
+    if simd_enabled() {
+        #[cfg(target_arch = "x86_64")]
+        {
+            return "avx2+fma";
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            return "neon";
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            return "scalar";
+        }
+    }
+    "scalar"
+}
+
+// --------------------------------------------------------------------------
+// dot_block — the pinned FP32 reference-dot chain
+// --------------------------------------------------------------------------
+
+/// Fixed 8-lane reduction tree of the [`dot_block`] chain:
+/// `t_m = w[m] + w[m+4]` then `(t0 + t2) + (t1 + t3)` — exactly the
+/// extract/movehl/shuffle add sequence of the AVX2 body.
+#[inline]
+fn reduce8(w: &[f32; DOT_LANES]) -> f32 {
+    let t0 = w[0] + w[4];
+    let t1 = w[1] + w[5];
+    let t2 = w[2] + w[6];
+    let t3 = w[3] + w[7];
+    (t0 + t2) + (t1 + t3)
+}
+
+/// Scalar replay of the pinned [`dot_block`] chain. Public so parity tests
+/// can compare it against the dispatched kernel explicitly.
+pub fn dot_block_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let k = a.len();
+    let mut s = [[0.0f32; DOT_LANES]; DOT_ACCS];
+    let mut p = 0;
+    while p + DOT_BLOCK <= k {
+        for (u, acc) in s.iter_mut().enumerate() {
+            for (l, sl) in acc.iter_mut().enumerate() {
+                let i = p + u * DOT_LANES + l;
+                *sl = a[i].mul_add(b[i], *sl);
+            }
+        }
+        p += DOT_BLOCK;
+    }
+    let mut w = [0.0f32; DOT_LANES];
+    for (l, wl) in w.iter_mut().enumerate() {
+        *wl = (s[0][l] + s[1][l]) + (s[2][l] + s[3][l]);
+    }
+    let mut r = reduce8(&w);
+    while p < k {
+        r = a[p].mul_add(b[p], r);
+        p += 1;
+    }
+    r
+}
+
+/// bf16 twin of [`dot_block_scalar`] — the identical chain on in-register
+/// widened weights.
+pub fn dot_block_bf16_scalar(a: &[f32], b: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let k = a.len();
+    let mut s = [[0.0f32; DOT_LANES]; DOT_ACCS];
+    let mut p = 0;
+    while p + DOT_BLOCK <= k {
+        for (u, acc) in s.iter_mut().enumerate() {
+            for (l, sl) in acc.iter_mut().enumerate() {
+                let i = p + u * DOT_LANES + l;
+                *sl = a[i].mul_add(bf16_to_f32(b[i]), *sl);
+            }
+        }
+        p += DOT_BLOCK;
+    }
+    let mut w = [0.0f32; DOT_LANES];
+    for (l, wl) in w.iter_mut().enumerate() {
+        *wl = (s[0][l] + s[1][l]) + (s[2][l] + s[3][l]);
+    }
+    let mut r = reduce8(&w);
+    while p < k {
+        r = a[p].mul_add(bf16_to_f32(b[p]), r);
+        p += 1;
+    }
+    r
+}
+
+/// The pinned FP32 reference dot product (see module docs), dispatched to
+/// the active backend. Always bitwise equal to [`dot_block_scalar`].
+#[inline]
+pub fn dot_block(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        return unsafe { avx2::dot_block(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after neon detection.
+        return unsafe { neon::dot_block(a, b) };
+    }
+    dot_block_scalar(a, b)
+}
+
+/// bf16 twin of [`dot_block`].
+#[inline]
+pub fn dot_block_bf16(a: &[f32], b: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        return unsafe { avx2::dot_block_bf16(a, b) };
+    }
+    dot_block_bf16_scalar(a, b)
+}
+
+// --------------------------------------------------------------------------
+// Vectorized per-row kernels (dispatchers return false ⇒ caller runs its
+// scalar body, which is the defining chain)
+// --------------------------------------------------------------------------
+
+/// Fused causal score row with 8 interleaved independent PS(μ) chains per
+/// vector. Returns false when no vector backend is active (the caller's
+/// scalar body is the reference chain and produces identical bits).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn score_row_ps_simd(
+    q: &[f32],
+    keys: &[f32],
+    stride: usize,
+    n: usize,
+    mu: u32,
+    scale: f32,
+    out: &mut [f32],
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        unsafe { avx2::score_row_ps(q, keys, stride, n, mu, scale, out) };
+        return true;
+    }
+    let _ = (q, keys, stride, n, mu, scale, out);
+    false
+}
+
+/// Vectorized `out[j] += x_p · w[p][j]` matvec body (mul+add, elementwise —
+/// bit-transparent at any lane width). Returns false when scalar.
+#[inline]
+pub fn matvec_f32_simd(x_row: &[f32], wdata: &[f32], n: usize, bias: &[f32], out: &mut [f32]) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        unsafe { avx2::matvec_f32(x_row, wdata, n, bias, out) };
+        return true;
+    }
+    let _ = (x_row, wdata, n, bias, out);
+    false
+}
+
+/// bf16 twin of [`matvec_f32_simd`].
+#[inline]
+pub fn matvec_bf16_simd(x_row: &[f32], wdata: &[u16], n: usize, bias: &[f32], out: &mut [f32]) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        unsafe { avx2::matvec_bf16(x_row, wdata, n, bias, out) };
+        return true;
+    }
+    let _ = (x_row, wdata, n, bias, out);
+    false
+}
+
+/// Vectorized PS(μ) matvec body: per output column the per-step
+/// `round(fma(..))` chain over p, 8 independent columns per vector.
+/// Returns false when scalar.
+#[inline]
+pub fn matvec_ps_simd(
+    x_row: &[f32],
+    wdata: &[f32],
+    n: usize,
+    bias: &[f32],
+    mu: u32,
+    out: &mut [f32],
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        unsafe { avx2::matvec_ps(x_row, wdata, n, bias, mu, out) };
+        return true;
+    }
+    let _ = (x_row, wdata, n, bias, mu, out);
+    false
+}
+
+/// bf16 twin of [`matvec_ps_simd`].
+#[inline]
+pub fn matvec_ps_bf16_simd(
+    x_row: &[f32],
+    wdata: &[u16],
+    n: usize,
+    bias: &[f32],
+    mu: u32,
+    out: &mut [f32],
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        unsafe { avx2::matvec_ps_bf16(x_row, wdata, n, bias, mu, out) };
+        return true;
+    }
+    let _ = (x_row, wdata, n, bias, mu, out);
+    false
+}
+
+/// Register-blocked 4-row FP32 micro-kernel: four x rows against one
+/// streamed weight panel, 8 output columns per vector, each output's
+/// p-ascending mul+add order identical to the single-row matvec (so the
+/// blocked matmul stays bitwise equal to per-row kernels). Returns false
+/// when scalar — the caller then runs per-row matvecs.
+#[inline]
+pub fn matvec4_f32_simd(
+    xs: [&[f32]; 4],
+    wdata: &[f32],
+    n: usize,
+    bias: &[f32],
+    outs: [&mut [f32]; 4],
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        unsafe { avx2::matvec4_f32(xs, wdata, n, bias, outs) };
+        return true;
+    }
+    let _ = (xs, wdata, n, bias, outs);
+    false
+}
+
+/// bf16 twin of [`matvec4_f32_simd`].
+#[inline]
+pub fn matvec4_bf16_simd(
+    xs: [&[f32]; 4],
+    wdata: &[u16],
+    n: usize,
+    bias: &[f32],
+    outs: [&mut [f32]; 4],
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        unsafe { avx2::matvec4_bf16(xs, wdata, n, bias, outs) };
+        return true;
+    }
+    let _ = (xs, wdata, n, bias, outs);
+    false
+}
+
+// --------------------------------------------------------------------------
+// AVX2 + FMA backend
+// --------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{DOT_BLOCK, DOT_LANES};
+    use crate::softfloat::dot::dot_ps;
+    use std::arch::x86_64::*;
+
+    /// Key-tile transposition chunk of the score-row kernel (in f32s per
+    /// column): sized so the 8-column scratch tile (8·64·4 B = 2 KiB) stays
+    /// resident in L1 while the chains advance through it.
+    const PCHUNK: usize = 64;
+
+    /// 8-lane horizontal sum implementing exactly the [`super::reduce8`]
+    /// tree: `t_m = w[m] + w[m+4]`, then `(t0 + t2) + (t1 + t3)`.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum8(w: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(w);
+        let hi = _mm256_extractf128_ps::<1>(w);
+        let t = _mm_add_ps(lo, hi); // (t0, t1, t2, t3)
+        let pair = _mm_add_ps(t, _mm_movehl_ps(t, t)); // (t0+t2, t1+t3, ..)
+        let one = _mm_add_ss(pair, _mm_shuffle_ps::<0b01>(pair, pair));
+        _mm_cvtss_f32(one)
+    }
+
+    /// Widen 8 bf16 values (stored as u16) to f32 lanes: zero-extend to
+    /// 32 bits and shift into the high half — the vector form of
+    /// [`crate::linalg::tensor::bf16_to_f32`].
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_bf16(p: *const u16) -> __m256 {
+        let h = _mm_loadu_si128(p as *const __m128i);
+        _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h)))
+    }
+
+    /// Vector round-to-μ-mantissa-bits (RNE), lanewise identical to
+    /// [`crate::softfloat::round::round_to_mantissa`]: the same integer
+    /// bias-add-truncate on finite lanes, with NaN/±inf lanes passed
+    /// through unchanged via the finite blend (without it, the bias add
+    /// could carry a NaN payload into the sign bit).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn round8(x: __m256, shift: i32, cnt: __m128i, half: __m256i) -> __m256 {
+        debug_assert!((1..=22).contains(&shift));
+        let u = _mm256_castps_si256(x);
+        let lsb = _mm256_and_si256(_mm256_srl_epi32(u, cnt), _mm256_set1_epi32(1));
+        let bias = _mm256_add_epi32(half, lsb);
+        let r = _mm256_sll_epi32(_mm256_srl_epi32(_mm256_add_epi32(u, bias), cnt), cnt);
+        let rounded = _mm256_castsi256_ps(r);
+        let abs = _mm256_and_ps(x, _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF)));
+        let finite = _mm256_cmp_ps::<_CMP_LT_OQ>(abs, _mm256_set1_ps(f32::INFINITY));
+        _mm256_blendv_ps(x, rounded, finite)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot_block(a: &[f32], b: &[f32]) -> f32 {
+        let k = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut s0 = _mm256_setzero_ps();
+        let mut s1 = _mm256_setzero_ps();
+        let mut s2 = _mm256_setzero_ps();
+        let mut s3 = _mm256_setzero_ps();
+        let mut p = 0;
+        while p + DOT_BLOCK <= k {
+            s0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(p)), _mm256_loadu_ps(bp.add(p)), s0);
+            s1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(p + DOT_LANES)),
+                _mm256_loadu_ps(bp.add(p + DOT_LANES)),
+                s1,
+            );
+            s2 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(p + 2 * DOT_LANES)),
+                _mm256_loadu_ps(bp.add(p + 2 * DOT_LANES)),
+                s2,
+            );
+            s3 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(p + 3 * DOT_LANES)),
+                _mm256_loadu_ps(bp.add(p + 3 * DOT_LANES)),
+                s3,
+            );
+            p += DOT_BLOCK;
+        }
+        let w = _mm256_add_ps(_mm256_add_ps(s0, s1), _mm256_add_ps(s2, s3));
+        let mut r = hsum8(w);
+        while p < k {
+            r = a[p].mul_add(b[p], r);
+            p += 1;
+        }
+        r
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot_block_bf16(a: &[f32], b: &[u16]) -> f32 {
+        let k = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut s0 = _mm256_setzero_ps();
+        let mut s1 = _mm256_setzero_ps();
+        let mut s2 = _mm256_setzero_ps();
+        let mut s3 = _mm256_setzero_ps();
+        let mut p = 0;
+        while p + DOT_BLOCK <= k {
+            s0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(p)), widen_bf16(bp.add(p)), s0);
+            s1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(p + DOT_LANES)),
+                widen_bf16(bp.add(p + DOT_LANES)),
+                s1,
+            );
+            s2 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(p + 2 * DOT_LANES)),
+                widen_bf16(bp.add(p + 2 * DOT_LANES)),
+                s2,
+            );
+            s3 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(p + 3 * DOT_LANES)),
+                widen_bf16(bp.add(p + 3 * DOT_LANES)),
+                s3,
+            );
+            p += DOT_BLOCK;
+        }
+        let w = _mm256_add_ps(_mm256_add_ps(s0, s1), _mm256_add_ps(s2, s3));
+        let mut r = hsum8(w);
+        while p < k {
+            r = a[p].mul_add(super::bf16_to_f32(b[p]), r);
+            p += 1;
+        }
+        r
+    }
+
+    /// 8 interleaved independent PS(μ) score chains. The key columns are
+    /// strided in the KV buffer, so each 8-column group is first
+    /// transposed into a stack tile (PCHUNK × 8) and the chains then read
+    /// it with contiguous vector loads — the cache-blocking that makes
+    /// the gather-free inner loop possible on both AVX2 and NEON layouts.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn score_row_ps(
+        q: &[f32],
+        keys: &[f32],
+        stride: usize,
+        n: usize,
+        mu: u32,
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        let hd = q.len();
+        let shift = (23 - mu) as i32;
+        let cnt = _mm_cvtsi32_si128(shift);
+        let half = _mm256_set1_epi32(if mu == 23 { 0 } else { (1i32 << (shift - 1)) - 1 });
+        let scale_v = _mm256_set1_ps(scale);
+        let mut tbuf = [0.0f32; PCHUNK * 8];
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut acc = _mm256_setzero_ps();
+            let mut p0 = 0;
+            while p0 < hd {
+                let pc = (hd - p0).min(PCHUNK);
+                for l in 0..8 {
+                    let col = &keys[(j + l) * stride + p0..(j + l) * stride + p0 + pc];
+                    for (pp, &kv) in col.iter().enumerate() {
+                        tbuf[pp * 8 + l] = kv;
+                    }
+                }
+                if mu == 23 {
+                    for (pp, &qp) in q[p0..p0 + pc].iter().enumerate() {
+                        let kv = _mm256_loadu_ps(tbuf.as_ptr().add(pp * 8));
+                        acc = _mm256_fmadd_ps(_mm256_set1_ps(qp), kv, acc);
+                    }
+                } else {
+                    for (pp, &qp) in q[p0..p0 + pc].iter().enumerate() {
+                        let kv = _mm256_loadu_ps(tbuf.as_ptr().add(pp * 8));
+                        acc = round8(_mm256_fmadd_ps(_mm256_set1_ps(qp), kv, acc), shift, cnt, half);
+                    }
+                }
+                p0 += pc;
+            }
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_mul_ps(acc, scale_v));
+            j += 8;
+        }
+        while j < n {
+            out[j] = dot_ps(q, &keys[j * stride..j * stride + hd], mu) * scale;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matvec_f32(x_row: &[f32], wdata: &[f32], n: usize, bias: &[f32], out: &mut [f32]) {
+        init_out(bias, out);
+        let op = out.as_mut_ptr();
+        for (p, &xv) in x_row.iter().enumerate() {
+            let wrow = wdata[p * n..(p + 1) * n].as_ptr();
+            let xb = _mm256_set1_ps(xv);
+            let mut j = 0;
+            while j + 8 <= n {
+                let o = _mm256_loadu_ps(op.add(j));
+                let w = _mm256_loadu_ps(wrow.add(j));
+                _mm256_storeu_ps(op.add(j), _mm256_add_ps(o, _mm256_mul_ps(xb, w)));
+                j += 8;
+            }
+            while j < n {
+                *op.add(j) += xv * *wrow.add(j);
+                j += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matvec_bf16(x_row: &[f32], wdata: &[u16], n: usize, bias: &[f32], out: &mut [f32]) {
+        init_out(bias, out);
+        let op = out.as_mut_ptr();
+        for (p, &xv) in x_row.iter().enumerate() {
+            let wrow = wdata[p * n..(p + 1) * n].as_ptr();
+            let xb = _mm256_set1_ps(xv);
+            let mut j = 0;
+            while j + 8 <= n {
+                let o = _mm256_loadu_ps(op.add(j));
+                let w = widen_bf16(wrow.add(j));
+                _mm256_storeu_ps(op.add(j), _mm256_add_ps(o, _mm256_mul_ps(xb, w)));
+                j += 8;
+            }
+            while j < n {
+                *op.add(j) += xv * super::bf16_to_f32(*wrow.add(j));
+                j += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matvec_ps(
+        x_row: &[f32],
+        wdata: &[f32],
+        n: usize,
+        bias: &[f32],
+        mu: u32,
+        out: &mut [f32],
+    ) {
+        out.fill(0.0);
+        let shift = (23 - mu) as i32;
+        let cnt = _mm_cvtsi32_si128(shift);
+        let half = _mm256_set1_epi32(if mu == 23 { 0 } else { (1i32 << (shift - 1)) - 1 });
+        let op = out.as_mut_ptr();
+        for (p, &xv) in x_row.iter().enumerate() {
+            let wrow = wdata[p * n..(p + 1) * n].as_ptr();
+            let xb = _mm256_set1_ps(xv);
+            let mut j = 0;
+            while j + 8 <= n {
+                let o = _mm256_loadu_ps(op.add(j));
+                let w = _mm256_loadu_ps(wrow.add(j));
+                let f = _mm256_fmadd_ps(xb, w, o);
+                let r = if mu == 23 { f } else { round8(f, shift, cnt, half) };
+                _mm256_storeu_ps(op.add(j), r);
+                j += 8;
+            }
+            while j < n {
+                let f = xv.mul_add(*wrow.add(j), *op.add(j));
+                *op.add(j) = crate::softfloat::round::round_to_mantissa(f, mu);
+                j += 1;
+            }
+        }
+        if !bias.is_empty() {
+            for (o, &b) in out.iter_mut().zip(bias) {
+                *o += b;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matvec_ps_bf16(
+        x_row: &[f32],
+        wdata: &[u16],
+        n: usize,
+        bias: &[f32],
+        mu: u32,
+        out: &mut [f32],
+    ) {
+        out.fill(0.0);
+        let shift = (23 - mu) as i32;
+        let cnt = _mm_cvtsi32_si128(shift);
+        let half = _mm256_set1_epi32(if mu == 23 { 0 } else { (1i32 << (shift - 1)) - 1 });
+        let op = out.as_mut_ptr();
+        for (p, &xv) in x_row.iter().enumerate() {
+            let wrow = wdata[p * n..(p + 1) * n].as_ptr();
+            let xb = _mm256_set1_ps(xv);
+            let mut j = 0;
+            while j + 8 <= n {
+                let o = _mm256_loadu_ps(op.add(j));
+                let w = widen_bf16(wrow.add(j));
+                let f = _mm256_fmadd_ps(xb, w, o);
+                let r = if mu == 23 { f } else { round8(f, shift, cnt, half) };
+                _mm256_storeu_ps(op.add(j), r);
+                j += 8;
+            }
+            while j < n {
+                let f = xv.mul_add(super::bf16_to_f32(*wrow.add(j)), *op.add(j));
+                *op.add(j) = crate::softfloat::round::round_to_mantissa(f, mu);
+                j += 1;
+            }
+        }
+        if !bias.is_empty() {
+            for (o, &b) in out.iter_mut().zip(bias) {
+                *o += b;
+            }
+        }
+    }
+
+    #[inline]
+    unsafe fn init_out(bias: &[f32], out: &mut [f32]) {
+        if bias.is_empty() {
+            out.fill(0.0);
+        } else {
+            out.copy_from_slice(bias);
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matvec4_f32(
+        xs: [&[f32]; 4],
+        wdata: &[f32],
+        n: usize,
+        bias: &[f32],
+        mut outs: [&mut [f32]; 4],
+    ) {
+        let k = xs[0].len();
+        for o in outs.iter_mut() {
+            init_out(bias, o);
+        }
+        let ops = [
+            outs[0].as_mut_ptr(),
+            outs[1].as_mut_ptr(),
+            outs[2].as_mut_ptr(),
+            outs[3].as_mut_ptr(),
+        ];
+        let mut j = 0;
+        // 8-column panel held in 4 register accumulators across all of p;
+        // W is streamed once per 4 output rows (the register blocking).
+        while j + 8 <= n {
+            let mut a0 = _mm256_loadu_ps(ops[0].add(j));
+            let mut a1 = _mm256_loadu_ps(ops[1].add(j));
+            let mut a2 = _mm256_loadu_ps(ops[2].add(j));
+            let mut a3 = _mm256_loadu_ps(ops[3].add(j));
+            for p in 0..k {
+                let w = _mm256_loadu_ps(wdata.as_ptr().add(p * n + j));
+                a0 = _mm256_add_ps(a0, _mm256_mul_ps(_mm256_set1_ps(xs[0][p]), w));
+                a1 = _mm256_add_ps(a1, _mm256_mul_ps(_mm256_set1_ps(xs[1][p]), w));
+                a2 = _mm256_add_ps(a2, _mm256_mul_ps(_mm256_set1_ps(xs[2][p]), w));
+                a3 = _mm256_add_ps(a3, _mm256_mul_ps(_mm256_set1_ps(xs[3][p]), w));
+            }
+            _mm256_storeu_ps(ops[0].add(j), a0);
+            _mm256_storeu_ps(ops[1].add(j), a1);
+            _mm256_storeu_ps(ops[2].add(j), a2);
+            _mm256_storeu_ps(ops[3].add(j), a3);
+            j += 8;
+        }
+        while j < n {
+            for (u, &op) in ops.iter().enumerate() {
+                let mut o = *op.add(j);
+                for p in 0..k {
+                    o += xs[u][p] * wdata[p * n + j];
+                }
+                *op.add(j) = o;
+            }
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matvec4_bf16(
+        xs: [&[f32]; 4],
+        wdata: &[u16],
+        n: usize,
+        bias: &[f32],
+        mut outs: [&mut [f32]; 4],
+    ) {
+        let k = xs[0].len();
+        for o in outs.iter_mut() {
+            init_out(bias, o);
+        }
+        let ops = [
+            outs[0].as_mut_ptr(),
+            outs[1].as_mut_ptr(),
+            outs[2].as_mut_ptr(),
+            outs[3].as_mut_ptr(),
+        ];
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut a0 = _mm256_loadu_ps(ops[0].add(j));
+            let mut a1 = _mm256_loadu_ps(ops[1].add(j));
+            let mut a2 = _mm256_loadu_ps(ops[2].add(j));
+            let mut a3 = _mm256_loadu_ps(ops[3].add(j));
+            for p in 0..k {
+                let w = widen_bf16(wdata.as_ptr().add(p * n + j));
+                a0 = _mm256_add_ps(a0, _mm256_mul_ps(_mm256_set1_ps(xs[0][p]), w));
+                a1 = _mm256_add_ps(a1, _mm256_mul_ps(_mm256_set1_ps(xs[1][p]), w));
+                a2 = _mm256_add_ps(a2, _mm256_mul_ps(_mm256_set1_ps(xs[2][p]), w));
+                a3 = _mm256_add_ps(a3, _mm256_mul_ps(_mm256_set1_ps(xs[3][p]), w));
+            }
+            _mm256_storeu_ps(ops[0].add(j), a0);
+            _mm256_storeu_ps(ops[1].add(j), a1);
+            _mm256_storeu_ps(ops[2].add(j), a2);
+            _mm256_storeu_ps(ops[3].add(j), a3);
+            j += 8;
+        }
+        while j < n {
+            for (u, &op) in ops.iter().enumerate() {
+                let mut o = *op.add(j);
+                for p in 0..k {
+                    o += xs[u][p] * super::bf16_to_f32(wdata[p * n + j]);
+                }
+                *op.add(j) = o;
+            }
+            j += 1;
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// NEON backend (minimal: the pinned reference-dot chain; every other kernel
+// falls back to the scalar replay, which is bitwise identical)
+// --------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::DOT_BLOCK;
+    use std::arch::aarch64::*;
+
+    /// The pinned [`super::dot_block`] chain on NEON: the 8-lane vector
+    /// accumulators are register pairs (low/high float32x4), reduced with
+    /// the same fixed tree — `t_m = w[m] + w[m+4]` is `vaddq(w_lo, w_hi)`,
+    /// then `(t0 + t2) + (t1 + t3)` via the 64-bit halves.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_block(a: &[f32], b: &[f32]) -> f32 {
+        let k = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut lo = [vdupq_n_f32(0.0); 4];
+        let mut hi = [vdupq_n_f32(0.0); 4];
+        let mut p = 0;
+        while p + DOT_BLOCK <= k {
+            for u in 0..4 {
+                let base = p + u * 8;
+                lo[u] = vfmaq_f32(lo[u], vld1q_f32(ap.add(base)), vld1q_f32(bp.add(base)));
+                hi[u] = vfmaq_f32(hi[u], vld1q_f32(ap.add(base + 4)), vld1q_f32(bp.add(base + 4)));
+            }
+            p += DOT_BLOCK;
+        }
+        let w_lo = vaddq_f32(vaddq_f32(lo[0], lo[1]), vaddq_f32(lo[2], lo[3]));
+        let w_hi = vaddq_f32(vaddq_f32(hi[0], hi[1]), vaddq_f32(hi[2], hi[3]));
+        let t = vaddq_f32(w_lo, w_hi); // (t0, t1, t2, t3)
+        let pair = vadd_f32(vget_low_f32(t), vget_high_f32(t)); // (t0+t2, t1+t3)
+        let mut r = vget_lane_f32::<0>(pair) + vget_lane_f32::<1>(pair);
+        while p < k {
+            r = a[p].mul_add(b[p], r);
+            p += 1;
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::sync::Mutex;
+
+    /// Serializes tests that toggle the process-global dispatch mode.
+    /// (Tests that don't take this lock are mode-agnostic: both modes
+    /// produce identical bits.)
+    pub(crate) static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.f32() - 0.5) * 4.0).collect()
+    }
+
+    #[test]
+    fn backend_label_consistent_with_mode() {
+        let _g = MODE_LOCK.lock().unwrap();
+        let had = simd_enabled();
+        assert!(!set_simd_enabled(false));
+        assert_eq!(simd_backend(), "scalar");
+        let took = set_simd_enabled(true);
+        if took {
+            assert_ne!(simd_backend(), "scalar");
+        } else {
+            assert_eq!(simd_backend(), "scalar");
+        }
+        set_simd_enabled(had);
+    }
+
+    #[test]
+    fn dot_block_simd_matches_scalar_replay_all_tails() {
+        let _g = MODE_LOCK.lock().unwrap();
+        let had = simd_enabled();
+        let mut rng = Rng::new(0x51AD);
+        // Every tail class around the 32-wide block and 8-wide lane edges.
+        for k in [0usize, 1, 7, 8, 9, 31, 32, 33, 63, 64, 65, 96, 257] {
+            let a = randvec(&mut rng, k);
+            let b = randvec(&mut rng, k);
+            let bq: Vec<u16> = b.iter().map(|&x| crate::linalg::tensor::f32_to_bf16(x)).collect();
+            set_simd_enabled(true);
+            let fast = dot_block(&a, &b);
+            let fast_bf = dot_block_bf16(&a, &bq);
+            set_simd_enabled(false);
+            let slow = dot_block(&a, &b);
+            let slow_bf = dot_block_bf16(&a, &bq);
+            assert_eq!(fast.to_bits(), slow.to_bits(), "k={k}");
+            assert_eq!(slow.to_bits(), dot_block_scalar(&a, &b).to_bits(), "k={k}");
+            assert_eq!(fast_bf.to_bits(), slow_bf.to_bits(), "bf16 k={k}");
+            assert_eq!(
+                slow_bf.to_bits(),
+                dot_block_bf16_scalar(&a, &bq).to_bits(),
+                "bf16 k={k}"
+            );
+        }
+        set_simd_enabled(had);
+    }
+
+    #[test]
+    fn dot_block_close_to_f64_reference() {
+        let mut rng = Rng::new(0xACC);
+        for _ in 0..50 {
+            let k = rng.range(1, 300);
+            let a = randvec(&mut rng, k);
+            let b = randvec(&mut rng, k);
+            let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let got = dot_block(&a, &b) as f64;
+            let mag: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+            assert!((got - exact).abs() <= 1e-4 * mag.max(1.0), "k={k}");
+        }
+    }
+
+    #[test]
+    fn score_row_simd_matches_scalar_chain_including_specials() {
+        let _g = MODE_LOCK.lock().unwrap();
+        let had = simd_enabled();
+        let mut rng = Rng::new(0x5C0E);
+        for _ in 0..30 {
+            let hd = rng.range(1, 80); // crosses the PCHUNK=64 boundary via accumulation
+            let n = rng.range(1, 21); // crosses the 8-wide column block boundary
+            let stride = hd + rng.range(0, 5);
+            let q = randvec(&mut rng, hd);
+            let mut keys = randvec(&mut rng, n * stride);
+            // Poison a lane with an overflow-prone magnitude so the rounded
+            // chain can hit ±inf and exercise the passthrough blend.
+            if n > 2 && hd > 1 {
+                keys[stride + 1] = 3.0e38;
+            }
+            for mu in [1u32, 4, 11, 23] {
+                let scale = 1.0 / (hd as f32).sqrt();
+                let mut fast = vec![0.0f32; n];
+                let mut slow = vec![0.0f32; n];
+                if set_simd_enabled(true) {
+                    assert!(score_row_ps_simd(&q, &keys, stride, n, mu, scale, &mut fast));
+                } else {
+                    // Host without a backend: nothing to cross-check.
+                    set_simd_enabled(had);
+                    return;
+                }
+                set_simd_enabled(false);
+                assert!(!score_row_ps_simd(&q, &keys, stride, n, mu, scale, &mut slow));
+                crate::softfloat::dot::score_row_ps(&q, &keys, stride, n, mu, scale, &mut slow);
+                for j in 0..n {
+                    assert_eq!(fast[j].to_bits(), slow[j].to_bits(), "j={j} mu={mu} hd={hd}");
+                }
+            }
+        }
+        set_simd_enabled(had);
+    }
+
+    #[test]
+    fn scalar_replay_reduction_tree_shape() {
+        // Pin the chain shape itself: a 32-element block must reduce as
+        // lanewise accumulator pairs then the fixed 8-lane tree — i.e. the
+        // scalar replay is NOT a sequential sum. Constructed so the two
+        // orders differ in f32.
+        let mut a = vec![0.0f32; 32];
+        let b = vec![1.0f32; 32];
+        a[0] = 1.0e8;
+        a[1] = 1.0;
+        a[8] = -1.0e8;
+        let got = dot_block_scalar(&a, &b);
+        // Chain: w[0] = (1e8 + (-1e8)) + 0 = 0, w[1] = 1 → tree sums to 1.
+        assert_eq!(got, 1.0);
+        // A sequential left-to-right sum would have absorbed the 1.0:
+        let seq: f32 = a.iter().zip(&b).fold(0.0, |c, (&x, &y)| x.mul_add(y, c));
+        assert_eq!(seq, 0.0);
+    }
+}

@@ -116,7 +116,11 @@ fn cli() -> Command {
                 ))
                 .arg(ArgSpec::opt("mu", "attention mantissa bits", "4"))
                 .arg(ArgSpec::opt("tau", "attention LAMP threshold (inf = uniform)", "0.1"))
-                .arg(ArgSpec::opt("rule", "strict|relaxed|relaxed_ln|random", "strict"))
+                .arg(ArgSpec::opt(
+                    "rule",
+                    "strict|relaxed|relaxed_ln|random|tile<w>|tile_random<w>",
+                    "strict",
+                ))
                 .arg(ArgSpec::opt("new-tokens", "tokens to generate", "16"))
                 .arg(ArgSpec::opt("topk", "0 = greedy, else top-k sampling", "0"))
                 .arg(ArgSpec::opt("temperature", "sampling temperature", "1.0"))
@@ -129,7 +133,11 @@ fn cli() -> Command {
                 .arg(ArgSpec::opt("engine", "native|pjrt", "native"))
                 .arg(ArgSpec::opt("mu", "attention mantissa bits", "4"))
                 .arg(ArgSpec::opt("tau", "attention LAMP threshold (inf = uniform)", "0.1"))
-                .arg(ArgSpec::opt("rule", "strict|relaxed|relaxed_ln|random", "strict"))
+                .arg(ArgSpec::opt(
+                    "rule",
+                    "strict|relaxed|relaxed_ln|random|tile<w>|tile_random<w>",
+                    "strict",
+                ))
                 .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts"))
                 .arg(ArgSpec::opt("seed", "seed", "0")),
         ))

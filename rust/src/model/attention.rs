@@ -31,7 +31,7 @@
 //! instead threaded one mutable RNG through all heads of a layer, which
 //! made head iteration order load-bearing and unparallelizable.)
 
-use crate::lamp::softmax::{select_softmax, softmax_inplace, SoftmaxRule};
+use crate::lamp::softmax::{select_softmax, softmax_inplace, tile_count, SoftmaxRule};
 use crate::linalg::Matrix;
 use crate::softfloat::dot::{dot_f32, score_row_ps};
 use crate::util::{Rng, ThreadPool};
@@ -116,6 +116,29 @@ impl SiteStats {
     }
 }
 
+/// Per-row LAMP accounting returned by the attention row kernels (PR 8):
+/// the recomputed KQ products plus tile-selection counters. The tile
+/// counters are zero for every non-tile rule, so aggregated rates stay
+/// comparable across plans.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RowLamp {
+    /// KQ inner products recomputed in FP32 on this row.
+    pub recomputed: usize,
+    /// Score tiles recomputed exactly (tile rules only).
+    pub tiles: usize,
+    /// Score tiles partitioning the row (tile rules only; 0 otherwise).
+    pub tiles_total: usize,
+}
+
+impl RowLamp {
+    /// Accumulate another row's counters.
+    pub fn merge(&mut self, other: RowLamp) {
+        self.recomputed += other.recomputed;
+        self.tiles += other.tiles;
+        self.tiles_total += other.tiles_total;
+    }
+}
+
 /// Recomputation statistics accumulated over a forward pass, per
 /// composition site. The attention counters keep their historical flat
 /// names (`recomputed`/`causal_total`/`per_layer`); the sites added by the
@@ -135,6 +158,9 @@ pub struct LampStats {
     pub norm: SiteStats,
     /// Sampler-softmax site: logit inner products repaired / evaluated.
     pub sampler: SiteStats,
+    /// Attention tile counters: tiles recomputed exactly / tiles evaluated
+    /// (populated only when a tile rule is active on the attention site).
+    pub tiles: SiteStats,
 }
 
 impl LampStats {
@@ -148,13 +174,15 @@ impl LampStats {
     }
 
     /// (site label, recompute rate) for every composition site, in the
-    /// fixed order attention, mlp, norm, sampler — the serving metrics key.
+    /// fixed order attention, mlp, norm, sampler, attention_tiles — the
+    /// serving metrics key.
     pub fn site_rates(&self) -> Vec<(String, f64)> {
         vec![
             ("attention".to_string(), self.rate()),
             ("mlp".to_string(), self.mlp.rate()),
             ("norm".to_string(), self.norm.rate()),
             ("sampler".to_string(), self.sampler.rate()),
+            ("attention_tiles".to_string(), self.tiles.rate()),
         ]
     }
 
@@ -171,17 +199,21 @@ impl LampStats {
         self.mlp.merge(&other.mlp);
         self.norm.merge(&other.norm);
         self.sampler.merge(&other.sampler);
+        self.tiles.merge(&other.tiles);
     }
 
     /// Account one incremental attention row (KV-cache decode): `n_keys`
-    /// causal products on `layer`, of which `recomputed` were repaired.
-    pub fn add_row(&mut self, layer: usize, n_keys: usize, recomputed: usize) {
+    /// causal products on `layer`, with the row kernel's [`RowLamp`]
+    /// accounting (recomputed products plus tile counters).
+    pub fn add_row(&mut self, layer: usize, n_keys: usize, row: RowLamp) {
         self.causal_total += n_keys;
-        self.recomputed += recomputed;
+        self.recomputed += row.recomputed;
+        self.tiles.recomputed += row.tiles;
+        self.tiles.total += row.tiles_total;
         if self.per_layer.len() <= layer {
             self.per_layer.resize(layer + 1, 0);
         }
-        self.per_layer[layer] += recomputed;
+        self.per_layer[layer] += row.recomputed;
     }
 }
 
@@ -199,12 +231,28 @@ pub fn row_stream_seed(seed: u64, head: usize, row: usize) -> u64 {
         ^ (row as u64 + 1).wrapping_mul(0xD1B54A32D192ED03)
 }
 
+/// Derive the [`RowLamp`] tile counters from a selection mask. Tile masks
+/// are tile-uniform (`select_tile` fills whole tiles), so the tile's first
+/// element witnesses the whole tile; non-tile rules report zero tiles.
+#[inline]
+pub(crate) fn tile_counters(mask: &[bool], rule: SoftmaxRule) -> (usize, usize) {
+    match rule {
+        SoftmaxRule::Tile { width } | SoftmaxRule::TileRandom { width } => {
+            let w = width.max(1);
+            let total = tile_count(mask.len(), w);
+            let sel = (0..total).filter(|&t| mask[t * w]).count();
+            (sel, total)
+        }
+        _ => (0, 0),
+    }
+}
+
 /// Compute one (head, query-row) attention unit into `out` (the head's
 /// `hd`-wide slice of the output row). `scores` is caller-owned scratch —
 /// reused across calls, so the steady state allocates nothing (except the
 /// selection mask when a finite-τ LAMP rule is active).
 ///
-/// Returns the number of recomputed KQ products.
+/// Returns the row's [`RowLamp`] accounting.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn lamp_attention_row(
     qi: &[f32],
@@ -217,7 +265,7 @@ pub(crate) fn lamp_attention_row(
     row_seed: u64,
     scores: &mut Vec<f32>,
     out: &mut [f32],
-) -> usize {
+) -> RowLamp {
     let hd = qi.len();
     debug_assert_eq!(out.len(), hd);
     debug_assert!(n_keys <= k.rows());
@@ -226,15 +274,16 @@ pub(crate) fn lamp_attention_row(
     scores.resize(n_keys, 0.0);
     score_row_ps(qi, &k.data()[off..], k.cols(), n_keys, prec.mu, scale, scores);
     // Steps 2–3: LAMP selection + FP32 recomputation.
-    let mut recomputed = 0;
+    let mut row = RowLamp::default();
     if prec.tau.is_finite() {
         let mut rng = Rng::new(row_seed);
         let mask = select_softmax(scores, prec.tau, prec.rule, &mut rng);
+        (row.tiles, row.tiles_total) = tile_counters(&mask, prec.rule);
         for (j, &m) in mask.iter().enumerate() {
             if m {
                 let kj = &k.row(j)[off..off + hd];
                 scores[j] = dot_f32(qi, kj) * scale;
-                recomputed += 1;
+                row.recomputed += 1;
             }
         }
     }
@@ -249,7 +298,7 @@ pub(crate) fn lamp_attention_row(
             *o += p * vv;
         }
     }
-    recomputed
+    row
 }
 
 /// Raw output pointer handed to the worker tiles. Each tile writes a
@@ -268,7 +317,7 @@ unsafe impl Sync for TileOut {}
 /// paths execute the identical per-row kernel with identical per-row RNG
 /// streams, so outputs and recomputation counts are bit-identical.
 ///
-/// Returns the number of recomputed KQ products.
+/// Returns the aggregated [`RowLamp`] accounting.
 #[allow(clippy::too_many_arguments)]
 pub fn causal_attention_into(
     q: &Matrix,
@@ -279,7 +328,7 @@ pub fn causal_attention_into(
     seed: u64,
     pool: Option<&ThreadPool>,
     out: &mut Matrix,
-) -> usize {
+) -> RowLamp {
     let s = q.rows();
     let d = q.cols();
     debug_assert_eq!(k.shape(), (s, d));
@@ -298,6 +347,8 @@ pub fn causal_attention_into(
             let chunks = s.div_ceil(chunk);
             let jobs = heads * chunks;
             let recomputed = AtomicUsize::new(0);
+            let tiles = AtomicUsize::new(0);
+            let tiles_total = AtomicUsize::new(0);
             let tile_out = TileOut(out.data_mut().as_mut_ptr());
             pool.scope_run(jobs, |job| {
                 let h = job / chunks;
@@ -306,7 +357,7 @@ pub fn causal_attention_into(
                 let r0 = c * chunk;
                 let r1 = (r0 + chunk).min(s);
                 let mut scores: Vec<f32> = Vec::with_capacity(r1);
-                let mut rec = 0usize;
+                let mut rec = RowLamp::default();
                 for i in r0..r1 {
                     let qi = &q.row(i)[off..off + hd];
                     // SAFETY: (i, off) slices are disjoint across jobs —
@@ -316,7 +367,7 @@ pub fn causal_attention_into(
                     let orow = unsafe {
                         std::slice::from_raw_parts_mut(tile_out.0.add(i * d + off), hd)
                     };
-                    rec += lamp_attention_row(
+                    rec.merge(lamp_attention_row(
                         qi,
                         k,
                         v,
@@ -327,15 +378,21 @@ pub fn causal_attention_into(
                         row_stream_seed(seed, h, i),
                         &mut scores,
                         orow,
-                    );
+                    ));
                 }
-                recomputed.fetch_add(rec, Ordering::Relaxed);
+                recomputed.fetch_add(rec.recomputed, Ordering::Relaxed);
+                tiles.fetch_add(rec.tiles, Ordering::Relaxed);
+                tiles_total.fetch_add(rec.tiles_total, Ordering::Relaxed);
             });
-            recomputed.load(Ordering::Relaxed)
+            RowLamp {
+                recomputed: recomputed.load(Ordering::Relaxed),
+                tiles: tiles.load(Ordering::Relaxed),
+                tiles_total: tiles_total.load(Ordering::Relaxed),
+            }
         }
         _ => {
             let mut scores: Vec<f32> = Vec::with_capacity(s);
-            let mut recomputed = 0usize;
+            let mut acc = RowLamp::default();
             for h in 0..heads {
                 let off = h * hd;
                 for i in 0..s {
@@ -343,7 +400,7 @@ pub fn causal_attention_into(
                     // Split the mutable output row slice out via index
                     // arithmetic identical to the parallel path.
                     let orow = &mut out.row_mut(i)[off..off + hd];
-                    recomputed += lamp_attention_row(
+                    acc.merge(lamp_attention_row(
                         qi,
                         k,
                         v,
@@ -354,10 +411,10 @@ pub fn causal_attention_into(
                         row_stream_seed(seed, h, i),
                         &mut scores,
                         orow,
-                    );
+                    ));
                 }
             }
-            recomputed
+            acc
         }
     }
 }
@@ -379,7 +436,8 @@ pub fn causal_attention(
     recompute_count: &mut usize,
 ) -> Matrix {
     let mut out = Matrix::zeros(q.rows(), q.cols());
-    *recompute_count += causal_attention_into(q, k, v, heads, prec, seed, None, &mut out);
+    *recompute_count +=
+        causal_attention_into(q, k, v, heads, prec, seed, None, &mut out).recomputed;
     out
 }
 
@@ -483,6 +541,8 @@ mod tests {
             SoftmaxRule::Relaxed,
             SoftmaxRule::RelaxedLengthNorm { ref_len: 64 },
             SoftmaxRule::Random,
+            SoftmaxRule::Tile { width: 8 },
+            SoftmaxRule::TileRandom { width: 8 },
         ];
         for rule in rules {
             for prec in [
@@ -490,8 +550,10 @@ mod tests {
                 AttentionPrecision::uniform(4),
                 AttentionPrecision::lamp(4, 0.05, rule),
             ] {
-                let mut n_seq = 0;
-                let seq = causal_attention(&q, &k, &v, 4, prec, 99, &mut n_seq);
+                let mut seq_out = Matrix::zeros(0, 0);
+                let n_seq =
+                    causal_attention_into(&q, &k, &v, 4, prec, 99, None, &mut seq_out);
+                let seq = seq_out;
                 let mut par = Matrix::zeros(0, 0);
                 let n_par =
                     causal_attention_into(&q, &k, &v, 4, prec, 99, Some(&pool), &mut par);
@@ -557,9 +619,10 @@ mod tests {
         assert_eq!(LampStats::default().rate(), 0.0);
         assert_eq!(SiteStats::default().rate(), 0.0);
         let rates = s.site_rates();
-        assert_eq!(rates.len(), 4);
+        assert_eq!(rates.len(), 5);
         assert_eq!(rates[0].0, "attention");
         assert_eq!(rates[1], ("mlp".to_string(), 0.3));
+        assert_eq!(rates[4].0, "attention_tiles");
     }
 
     #[test]
@@ -581,11 +644,49 @@ mod tests {
     #[test]
     fn stats_add_row() {
         let mut s = LampStats::default();
-        s.add_row(1, 10, 2);
-        s.add_row(0, 4, 0);
-        s.add_row(1, 11, 3);
+        let row = |r, t, tt| RowLamp { recomputed: r, tiles: t, tiles_total: tt };
+        s.add_row(1, 10, row(2, 1, 2));
+        s.add_row(0, 4, row(0, 0, 0));
+        s.add_row(1, 11, row(3, 2, 3));
         assert_eq!(s.causal_total, 25);
         assert_eq!(s.recomputed, 5);
         assert_eq!(s.per_layer, vec![0, 5]);
+        assert_eq!(s.tiles, SiteStats { recomputed: 3, total: 5 });
+    }
+
+    #[test]
+    fn tile_rule_accounts_tiles_and_recovers_accuracy() {
+        let (q, k, v) = setup(24, 32, 21);
+        let mut n = 0;
+        let reference =
+            causal_attention(&q, &k, &v, 4, AttentionPrecision::reference(), 0, &mut n);
+        let mut uniform_out = Matrix::zeros(0, 0);
+        causal_attention_into(
+            &q,
+            &k,
+            &v,
+            4,
+            AttentionPrecision::uniform(3),
+            0,
+            None,
+            &mut uniform_out,
+        );
+        let prec = AttentionPrecision::lamp(3, 0.01, SoftmaxRule::Tile { width: 4 });
+        let mut tiled_out = Matrix::zeros(0, 0);
+        let acc = causal_attention_into(&q, &k, &v, 4, prec, 0, None, &mut tiled_out);
+        // Tile counters are populated and consistent with the recompute
+        // count (each selected tile covers at most `width` products).
+        assert!(acc.tiles_total > 0);
+        assert!(acc.tiles > 0, "diagonal tiles are always selected");
+        assert!(acc.tiles <= acc.tiles_total);
+        assert!(acc.recomputed <= acc.tiles * 4);
+        assert!(acc.recomputed >= acc.tiles, "each tile has >= 1 product");
+        // And the repair actually recovers accuracy over uniform PS.
+        let e_uni = uniform_out.max_abs_diff(&reference).unwrap();
+        let e_tile = tiled_out.max_abs_diff(&reference).unwrap();
+        assert!(
+            e_tile < e_uni,
+            "tile LAMP should beat uniform: tile={e_tile} uniform={e_uni}"
+        );
     }
 }

@@ -196,7 +196,7 @@ pub fn forward_with(
             scratch.k.row_mut(i).copy_from_slice(&row[d..2 * d]);
             scratch.v.row_mut(i).copy_from_slice(&row[2 * d..]);
         }
-        let layer_recomputed = causal_attention_into(
+        let layer_lamp = causal_attention_into(
             &scratch.q,
             &scratch.k,
             &scratch.v,
@@ -206,8 +206,10 @@ pub fn forward_with(
             pool,
             &mut scratch.attn,
         );
-        stats.per_layer[l] = layer_recomputed;
-        stats.recomputed += layer_recomputed;
+        stats.per_layer[l] = layer_lamp.recomputed;
+        stats.recomputed += layer_lamp.recomputed;
+        stats.tiles.recomputed += layer_lamp.tiles;
+        stats.tiles.total += layer_lamp.tiles_total;
         // Output projection + residual.
         matmul_bias_into_wt(&scratch.attn, &blk.w_proj, &blk.b_proj, &mut scratch.proj)?;
         for i in 0..s {

@@ -59,7 +59,7 @@
 //! [`kvstore`]: super::kvstore
 //! [`kvstore::KvStore`]: super::kvstore::KvStore
 
-use super::attention::{row_stream_seed, LampStats};
+use super::attention::{row_stream_seed, LampStats, RowLamp};
 use super::config::ModelConfig;
 use super::forward::layer_seed;
 use super::kvstore::{chain_root, lamp_attention_row_kv, KvBlockPool, PagedKvCache};
@@ -412,10 +412,10 @@ impl<'w> DecodeSession<'w> {
             // per the pool's format) before attention reads rows 0..=i.
             self.kv.append_row(l, i, k_row, v_row)?;
             let lseed = layer_seed(self.seed, l);
-            let mut recomputed = 0usize;
+            let mut row_lamp = RowLamp::default();
             for h in 0..heads {
                 let off = h * hd;
-                recomputed += lamp_attention_row_kv(
+                row_lamp.merge(lamp_attention_row_kv(
                     &q_row[off..off + hd],
                     &self.kv,
                     l,
@@ -427,9 +427,9 @@ impl<'w> DecodeSession<'w> {
                     &mut self.scores,
                     &mut self.gather,
                     &mut self.attn[off..off + hd],
-                );
+                ));
             }
-            self.stats.add_row(l, heads * (i + 1), recomputed);
+            self.stats.add_row(l, heads * (i + 1), row_lamp);
             // Output projection + residual.
             matvec_bias_into_wt(&self.attn, &blk.w_proj, &blk.b_proj, &mut self.proj);
             for c in 0..d {

@@ -64,7 +64,7 @@
 //! evictable) surfaces as a typed [`Error::Resource`] that the scheduler
 //! turns into preempt-then-recompute.
 
-use super::attention::AttentionPrecision;
+use super::attention::{tile_counters, AttentionPrecision, RowLamp};
 use super::plan::PrecisionPlan;
 use crate::error::{Error, Result};
 use crate::lamp::softmax::{select_softmax, softmax_inplace, SoftmaxRule};
@@ -824,6 +824,8 @@ fn rule_tag(rule: SoftmaxRule) -> u64 {
         SoftmaxRule::Relaxed => 2,
         SoftmaxRule::RelaxedLengthNorm { ref_len } => 3 ^ ((ref_len as u64) << 8),
         SoftmaxRule::Random => 4,
+        SoftmaxRule::Tile { width } => 5 ^ ((width as u64) << 8),
+        SoftmaxRule::TileRandom { width } => 6 ^ ((width as u64) << 8),
     }
 }
 
@@ -1082,7 +1084,7 @@ impl Drop for PagedKvCache {
 /// chain, so chunking cannot change any bit. Selection, FP32 repair
 /// (against the rows *as stored* — the weight-storage principle), softmax
 /// and ascending-`j` value aggregation follow the contiguous kernel
-/// exactly. Returns the number of recomputed KQ products.
+/// exactly. Returns the row's [`RowLamp`] accounting.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn lamp_attention_row_kv(
     qi: &[f32],
@@ -1096,7 +1098,7 @@ pub(crate) fn lamp_attention_row_kv(
     scores: &mut Vec<f32>,
     gather: &mut Vec<f32>,
     out: &mut [f32],
-) -> usize {
+) -> RowLamp {
     let hd = qi.len();
     debug_assert_eq!(out.len(), hd);
     debug_assert!(n_keys <= cache.len + 1, "reading unwritten cache rows");
@@ -1140,16 +1142,17 @@ pub(crate) fn lamp_attention_row_kv(
         j0 += run;
     }
     // Steps 2-3: LAMP selection + FP32 recomputation over the stored rows.
-    let mut recomputed = 0;
+    let mut row = RowLamp::default();
     if prec.tau.is_finite() {
         let mut rng = Rng::new(row_seed);
         let mask = select_softmax(scores, prec.tau, prec.rule, &mut rng);
+        (row.tiles, row.tiles_total) = tile_counters(&mask, prec.rule);
         for (j, &m) in mask.iter().enumerate() {
             if m {
                 let data = cache.blocks[j / bs].data();
                 let kj = data.k_cols(layer, j % bs, off, hd, gather);
                 scores[j] = dot_f32(qi, kj) * scale;
-                recomputed += 1;
+                row.recomputed += 1;
             }
         }
     }
@@ -1165,7 +1168,7 @@ pub(crate) fn lamp_attention_row_kv(
             *o += p * vv;
         }
     }
-    recomputed
+    row
 }
 
 #[cfg(test)]
@@ -1512,6 +1515,8 @@ mod tests {
             AttentionPrecision::lamp(4, 0.05, SoftmaxRule::Strict),
             AttentionPrecision::lamp(4, 0.05, SoftmaxRule::Random),
             AttentionPrecision::lamp(3, 0.1, SoftmaxRule::Relaxed),
+            AttentionPrecision::lamp(4, 0.05, SoftmaxRule::Tile { width: 3 }),
+            AttentionPrecision::lamp(4, 0.05, SoftmaxRule::TileRandom { width: 3 }),
         ] {
             for h in 0..heads {
                 let off = h * hd;

@@ -44,7 +44,7 @@ pub mod plan;
 pub mod sampler;
 pub mod weights;
 
-pub use attention::{AttentionPrecision, LampStats, SiteStats};
+pub use attention::{AttentionPrecision, LampStats, RowLamp, SiteStats};
 pub use config::ModelConfig;
 pub use forward::{forward, forward_with, ForwardOutput, ForwardScratch};
 pub use kvcache::{DecodeSession, StepFaultVerdict, StepFaults};

@@ -42,7 +42,7 @@ use super::attention::AttentionPrecision;
 use crate::error::{Error, Result};
 use crate::lamp::rmsnorm::select_rmsnorm;
 use crate::lamp::softmax::{random_mask, select_softmax, SoftmaxRule};
-use crate::linalg::matmul::{wt_row_dot_f32, wt_row_dot_ps, wt_row_dot_unrolled4};
+use crate::linalg::matmul::{wt_row_dot_block, wt_row_dot_f32, wt_row_dot_ps};
 use crate::linalg::{WeightFormat, WeightTensor};
 use crate::softfloat::round::round_to_mantissa;
 use crate::util::Rng;
@@ -226,6 +226,19 @@ impl PrecisionPlan {
                      attention site only"
                 )));
             }
+            // Tile granularity partitions a causal score row; every other
+            // site is componentwise (d_ff / d / vocab entries with no
+            // near-diagonal structure), so tile rules are attention-only.
+            if name != "attention"
+                && matches!(
+                    site.rule,
+                    SoftmaxRule::Tile { .. } | SoftmaxRule::TileRandom { .. }
+                )
+            {
+                return Err(Error::config(format!(
+                    "plan site {name}: tile rules apply to the attention site only"
+                )));
+            }
         }
         self.weights.validate()?;
         self.kv.validate()
@@ -264,6 +277,13 @@ fn validate_site(site: &SitePrecision, name: &str, relative_rules: bool) -> Resu
             "plan site {name}: relative threshold tau {} must be < 1 for relaxed rules",
             site.tau
         )));
+    }
+    if let SoftmaxRule::Tile { width } | SoftmaxRule::TileRandom { width } = site.rule {
+        if width == 0 {
+            return Err(Error::config(format!(
+                "plan site {name}: tile width must be >= 1"
+            )));
+        }
     }
     Ok(())
 }
@@ -347,9 +367,10 @@ pub(crate) fn norm_site_row(
 
 /// Compute one logits row under the sampler site.
 ///
-/// Reference: the 4-way-unrolled FP32 row dot of the tied unembedding —
-/// exactly the row body of `matmul_transposed_into_wt`, so the reference
-/// short-circuit is bit-identical to the pre-plan path. Otherwise: PS(μ)
+/// Reference: the pinned block-chain FP32 row dot of the tied unembedding
+/// ([`wt_row_dot_block`]) — exactly the row body of
+/// `matmul_transposed_into_wt`, so the reference short-circuit is
+/// bit-identical to the batched unembedding path. Otherwise: PS(μ)
 /// accumulation per logit ([`wt_row_dot_ps`] over the contiguous `wte`
 /// rows), then the softmax selection rule over the logits row flags the
 /// inner products recomputed with the sequential-FMA FP32 chain. All three
@@ -368,7 +389,7 @@ pub(crate) fn logits_row_site(
     debug_assert_eq!(x.len(), wte.cols());
     if site.is_reference() {
         for (j, o) in out.iter_mut().enumerate() {
-            *o = wt_row_dot_unrolled4(x, wte, j);
+            *o = wt_row_dot_block(x, wte, j);
         }
         return 0;
     }
@@ -393,7 +414,7 @@ pub(crate) fn logits_row_site(
 mod tests {
     use super::*;
     use crate::lamp::softmax::SoftmaxRule;
-    use crate::linalg::matmul::dot_unrolled4;
+    use crate::linalg::matmul::dot_block;
     use crate::linalg::Matrix;
     use crate::softfloat::dot::dot_f32;
 
@@ -516,12 +537,13 @@ mod tests {
     }
 
     #[test]
-    fn logits_site_reference_matches_unrolled_dot() {
+    fn logits_site_reference_matches_block_dot() {
         let mut rng = Rng::new(6);
         let m = Matrix::randn(16, 8, 1.0, &mut rng);
         let x: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
         // The reference short-circuit holds for every storage format: the
-        // fused row dot equals dot_unrolled4 over the dequantized rows.
+        // fused row dot equals the pinned dot_block chain over the
+        // dequantized rows.
         for fmt in [WeightFormat::F32, WeightFormat::Bf16] {
             let wte = WeightTensor::from_matrix(&m, fmt).unwrap();
             let deq = wte.to_matrix();
@@ -529,7 +551,7 @@ mod tests {
             let n = logits_row_site(&x, &wte, SitePrecision::reference(), 3, &mut out);
             assert_eq!(n, 0);
             for (j, &o) in out.iter().enumerate() {
-                assert_eq!(o.to_bits(), dot_unrolled4(&x, deq.row(j)).to_bits());
+                assert_eq!(o.to_bits(), dot_block(&x, deq.row(j)).to_bits());
             }
         }
     }

@@ -94,11 +94,16 @@ pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
 ///
 /// **Bit-identical to the per-dot [`dot_ps`] loop**: each output keeps its
 /// own accumulator with exactly the per-step `round(fma(..))` chain of the
-/// paper's PS(μ) model; fusion only interleaves *independent* chains four
-/// at a time so the FMA+round latency of one chain hides behind the other
-/// three (the chains are serially dependent internally, so a single dot is
-/// latency-bound). `keys` is the flat row-major K buffer offset to the
-/// head's first column; `stride` is the matrix row stride (d_model).
+/// paper's PS(μ) model; fusion only interleaves *independent* chains so the
+/// FMA+round latency of one chain hides behind its neighbours (the chains
+/// are serially dependent internally, so a single dot is latency-bound).
+/// With a vector backend active the kernel interleaves eight chains per
+/// register with a lanewise-identical rounding primitive
+/// ([`crate::linalg::simd::score_row_ps_simd`]); otherwise the scalar body
+/// below interleaves four — both produce identical bits because the
+/// per-output chain never changes. `keys` is the flat row-major K buffer
+/// offset to the head's first column; `stride` is the matrix row stride
+/// (d_model).
 pub fn score_row_ps(
     q: &[f32],
     keys: &[f32],
@@ -117,6 +122,9 @@ pub fn score_row_ps(
         (n - 1) * stride + hd <= keys.len(),
         "score_row_ps: keys buffer too short"
     );
+    if crate::linalg::simd::score_row_ps_simd(q, keys, stride, n, mu, scale, out) {
+        return;
+    }
     let mut j = 0;
     while j + 4 <= n {
         let k0 = &keys[j * stride..j * stride + hd];

@@ -131,6 +131,20 @@ fn random_rule_count_parity_positions_differ() {
 }
 
 #[test]
+fn pjrt_rejects_tile_rules() {
+    // The compiled artifact implements mode codes 0-3 only; tile rules
+    // (PR 8) are native-engine features and must be rejected at submit.
+    let Some(store) = store() else { return };
+    let (pjrt, native, _) = panel(&store, "nano");
+    for rule in [Rule::Tile { width: 8 }, Rule::TileRandom { width: 8 }] {
+        let policy = PrecisionPolicy::lamp(4, 0.05, rule);
+        let e = pjrt.validate_policy(&policy).unwrap_err().to_string();
+        assert!(e.contains("tile"), "{e}");
+        native.validate_policy(&policy).unwrap();
+    }
+}
+
+#[test]
 fn pjrt_lamp_improves_over_uniform_on_trained_model() {
     // The headline behaviour, measured end-to-end through the artifact.
     let Some(store) = store() else { return };

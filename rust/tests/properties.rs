@@ -341,8 +341,15 @@ fn prop_batcher_conserves_requests() {
 
 #[test]
 fn prop_policy_tier_roundtrip_rules() {
-    for rule in [Rule::Strict, Rule::Relaxed, Rule::RelaxedLengthNorm, Rule::Random] {
-        assert_eq!(Rule::by_name(rule.name()).unwrap(), rule);
+    for rule in [
+        Rule::Strict,
+        Rule::Relaxed,
+        Rule::RelaxedLengthNorm,
+        Rule::Random,
+        Rule::Tile { width: 4 },
+        Rule::TileRandom { width: 9 },
+    ] {
+        assert_eq!(Rule::by_name(&rule.name()).unwrap(), rule);
     }
 }
 
@@ -542,6 +549,177 @@ fn prop_kv_prefix_sharing_and_cow_refcounts_settle() {
         // across 10 trials; count them across trials rather than per trial.
         let _ = adoptions;
     }
+}
+
+// --- SIMD kernels & tile-granular LAMP (PR 8) -----------------------------
+
+/// Serializes tests that toggle the process-global SIMD dispatch mode.
+/// The toggled state is observationally benign (SIMD and the scalar replay
+/// are bit-identical — that is what these tests prove), but two toggling
+/// tests running concurrently could each observe the other's mode.
+static SIMD_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[test]
+fn prop_simd_dot_and_score_row_match_scalar_replay_on_ragged_tails() {
+    use lamp::linalg::set_simd_enabled;
+    use lamp::linalg::simd::{dot_block, dot_block_scalar};
+    use lamp::softfloat::dot::score_row_ps;
+    let _g = SIMD_LOCK.lock().unwrap();
+    // dot_block: the vector path, the dispatcher forced scalar, and the
+    // named scalar replay agree bit-for-bit at every tail shape (lengths
+    // crossing the 8-lane and 32-element block boundaries).
+    forall(
+        Config::default().cases(150),
+        pair(Gen::usize_range(0, 140), Gen::u32_range(0, u32::MAX / 2)),
+        |&(k, seed)| {
+            let mut rng = Rng::new(seed as u64);
+            let a: Vec<f32> = (0..k).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            let b: Vec<f32> = (0..k).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            set_simd_enabled(true);
+            let fast = dot_block(&a, &b);
+            set_simd_enabled(false);
+            let forced = dot_block(&a, &b);
+            let replay = dot_block_scalar(&a, &b);
+            set_simd_enabled(true);
+            fast.to_bits() == forced.to_bits() && forced.to_bits() == replay.to_bits()
+        },
+    );
+    // score_row_ps: the 8-chain vector body vs the scalar interleave are
+    // bit-identical per score (each score is one independent PS chain).
+    forall(
+        Config::default().cases(100),
+        pair(
+            pair(Gen::usize_range(1, 80), Gen::usize_range(1, 20)),
+            Gen::u32_range(0, u32::MAX / 2),
+        ),
+        |&((hd, n), seed)| {
+            let mut rng = Rng::new(seed as u64);
+            let q: Vec<f32> = (0..hd).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let keys: Vec<f32> = (0..hd * n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            for mu in [2u32, 7, 23] {
+                let mut va = vec![0.0f32; n];
+                let mut vb = vec![0.0f32; n];
+                set_simd_enabled(true);
+                score_row_ps(&q, &keys, hd, n, mu, 0.25, &mut va);
+                set_simd_enabled(false);
+                score_row_ps(&q, &keys, hd, n, mu, 0.25, &mut vb);
+                if va.iter().zip(&vb).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                    set_simd_enabled(true);
+                    return false;
+                }
+            }
+            set_simd_enabled(true);
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_simd_scalar_forward_parity_every_weight_format_and_site() {
+    // The whole-model invariant behind LAMP_SIMD=0: a full forward pass —
+    // every plan site active, every weight-storage format — is bitwise
+    // identical with SIMD dispatch on and off, including the tile rules
+    // and their recompute/tile accounting.
+    use lamp::linalg::{set_simd_enabled, WeightFormat};
+    use lamp::model::{forward, ModelConfig, Weights};
+    let _g = SIMD_LOCK.lock().unwrap();
+    let cfg = ModelConfig::nano();
+    let mut rng = Rng::new(0x51AD);
+    let base = Weights::random(&cfg, &mut rng).unwrap();
+    let tokens: Vec<u32> = (0..12).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let policies = [
+        PrecisionPolicy::reference(),
+        PrecisionPolicy::whole_model(4, 0.1, Rule::Strict),
+        PrecisionPolicy::lamp(4, 0.1, Rule::Relaxed),
+        PrecisionPolicy::lamp(3, 0.05, Rule::Tile { width: 4 }),
+        PrecisionPolicy::lamp(3, 0.05, Rule::TileRandom { width: 4 }),
+    ];
+    for fmt in [WeightFormat::F32, WeightFormat::Bf16, WeightFormat::PsRounded { mu: 8 }] {
+        let w = base.quantize_to(fmt).unwrap();
+        for policy in &policies {
+            let plan = policy.to_plan(cfg.seq);
+            set_simd_enabled(true);
+            let a = forward(&w, &tokens, plan, 7).unwrap();
+            set_simd_enabled(false);
+            let b = forward(&w, &tokens, plan, 7).unwrap();
+            let label = policy.label();
+            assert_eq!(a.stats.recomputed, b.stats.recomputed, "{fmt:?} {label}");
+            assert_eq!(a.stats.tiles, b.stats.tiles, "{fmt:?} {label}");
+            assert_eq!(a.stats.mlp, b.stats.mlp, "{fmt:?} {label}");
+            assert_eq!(a.stats.sampler, b.stats.sampler, "{fmt:?} {label}");
+            for (x, y) in a.logits.data().iter().zip(b.logits.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{fmt:?} {label}: logits diverge");
+            }
+        }
+    }
+    set_simd_enabled(true);
+}
+
+#[test]
+fn prop_simd_scalar_decode_parity_every_kv_format() {
+    // Same invariant through the paged-KV decode path, per KV storage
+    // format: prefill logits and LAMP accounting are mode-independent.
+    use lamp::linalg::{set_simd_enabled, WeightFormat};
+    use lamp::model::{DecodeSession, KvBlockPool, KvCacheOptions, ModelConfig, Weights};
+    let _g = SIMD_LOCK.lock().unwrap();
+    let cfg = ModelConfig::nano();
+    let mut rng = Rng::new(0x4B56);
+    let w = Weights::random(&cfg, &mut rng).unwrap();
+    let tokens: Vec<u32> = (0..9).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let policy = PrecisionPolicy::lamp(4, 0.05, Rule::Tile { width: 4 });
+    for fmt in [WeightFormat::F32, WeightFormat::Bf16, WeightFormat::PsRounded { mu: 4 }] {
+        let plan = policy.to_plan(cfg.seq);
+        let run = |simd: bool| {
+            set_simd_enabled(simd);
+            let pool =
+                KvBlockPool::new(&cfg, KvCacheOptions::serving(&cfg, fmt, 1)).unwrap();
+            let mut s = DecodeSession::with_pool(&w, plan, 9, pool);
+            s.prefill(&tokens).unwrap();
+            (s.logits().to_vec(), s.stats().clone())
+        };
+        let (la, sa) = run(true);
+        let (lb, sb) = run(false);
+        assert_eq!(sa.recomputed, sb.recomputed, "{fmt:?}");
+        assert_eq!(sa.tiles, sb.tiles, "{fmt:?}");
+        assert!(sa.tiles.total > 0, "{fmt:?}: tile rule must account tiles");
+        for (x, y) in la.iter().zip(&lb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{fmt:?}: decode logits diverge");
+        }
+    }
+    set_simd_enabled(true);
+}
+
+#[test]
+fn prop_tile_selection_tau_monotone_and_count_matched_random() {
+    // Tile-rule analogues of the PR-2 selection properties: raising τ
+    // never selects more tiles (mask nesting + tile-count monotonicity),
+    // and the TileRandom baseline matches the tile count exactly while
+    // always keeping the diagonal tile.
+    use lamp::lamp::softmax::{select_tile, select_tile_random, tile_count};
+    forall(
+        Config::default().cases(400),
+        pair(
+            pair(Gen::f32_vec(1, 64, -8.0, 8.0), Gen::usize_range(1, 12)),
+            pair(
+                pair(Gen::f32_range(0.0, 0.4), Gen::f32_range(0.0, 0.4)),
+                Gen::u32_range(0, u32::MAX / 2),
+            ),
+        ),
+        |&((ref y, width), ((t1, t2), seed))| {
+            let (lo, hi) = if t1 <= t2 { (t1, t2) } else { (t2, t1) };
+            let m_lo = select_tile(y, lo, width);
+            let m_hi = select_tile(y, hi, width);
+            let nt = tile_count(y.len(), width);
+            let count = |m: &[bool]| (0..nt).filter(|&t| m[t * width]).count();
+            let nested = m_hi.iter().zip(&m_lo).all(|(&h, &l)| !h || l);
+            let mono = count(&m_hi) <= count(&m_lo);
+            let mut rng = Rng::new(seed as u64);
+            let mr = select_tile_random(y, lo, width, &mut rng);
+            let matched = count(&mr) == count(&m_lo);
+            let diag = mr[y.len() - 1] && m_lo[y.len() - 1];
+            nested && mono && matched && diag
+        },
+    );
 }
 
 // --- Workload generators (PR 7) ------------------------------------------
