@@ -1,0 +1,170 @@
+//! Self-speculative decoding benchmark — the PR-9 headline measurement.
+//!
+//! Drafts k tokens per round under an aggressive (cheap) LAMP plan, then
+//! verifies the whole chunk with the exact target plan in one batched
+//! forward, comparing end-to-end decode throughput and acceptance length
+//! against the non-speculative target-plan baseline across a ladder of
+//! draft aggressiveness. The emitted stream is bit-identical to the solo
+//! decode by construction (asserted here for every configuration), so the
+//! speedup — when the draft is accepted often enough — is free.
+//!
+//! Results go into `BENCH_PR9.json` (override with `LAMP_BENCH_OUT`) under
+//! the `speculative` section.
+//!
+//! ```bash
+//! cargo bench --bench speculative
+//! ```
+
+use lamp::benchkit::{record_bench_section, Bencher, JsonObj, Table};
+use lamp::lamp::softmax::SoftmaxRule;
+use lamp::model::{
+    generate_with_stats, AttentionPrecision, Decode, ModelConfig, PrecisionPlan, SpecConfig,
+    Weights,
+};
+use lamp::util::Rng;
+use std::time::Duration;
+
+fn record_path() -> std::path::PathBuf {
+    std::env::var("LAMP_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_PR9.json"))
+}
+
+fn main() {
+    // `--smoke` (the CI bench-smoke job): one sample on a short context so
+    // the producer of BENCH_PR9.json is exercised on every push without
+    // burning CI minutes — numbers from a smoke run are not comparable.
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = ModelConfig {
+        name: "bench-4l".into(),
+        vocab: 256,
+        seq: if smoke { 48 } else { 256 },
+        layers: 4,
+        heads: 4,
+        d_model: 128,
+        batch: 1,
+    };
+    cfg.validate().expect("bench config");
+    let mut rng = Rng::new(29);
+    let weights = Weights::random(&cfg, &mut rng).unwrap();
+    let prompt: Vec<u32> = (0..16u32).map(|i| (i * 31 + 7) % cfg.vocab as u32).collect();
+    let new_tokens = cfg.seq - prompt.len();
+    let samples = if smoke { 1 } else { 5 };
+    let seed = 7u64;
+
+    // The target plan is deliberately repair-heavy (low τ ⇒ many exact
+    // FP32 recomputes): that is the regime where drafting under a cheaper
+    // plan and verifying in one batched forward pays for itself.
+    let target =
+        PrecisionPlan::whole_model(AttentionPrecision::lamp(3, 0.02, SoftmaxRule::Strict));
+    target.validate().expect("target plan");
+
+    // Draft ladder: coarser μ / looser τ ⇒ cheaper drafting but lower
+    // acceptance; k trades round count against wasted draft work.
+    let drafts: [(&str, AttentionPrecision, usize); 3] = [
+        ("uniform(2) k=4", AttentionPrecision::uniform(2), 4),
+        ("uniform(3) k=8", AttentionPrecision::uniform(3), 8),
+        (
+            "lamp(3,0.5) k=4",
+            AttentionPrecision::lamp(3, 0.5, SoftmaxRule::Strict),
+            4,
+        ),
+    ];
+
+    // --- Solo baseline: non-speculative decode under the target plan. ---
+    let bencher = Bencher {
+        warmup_iters: if smoke { 0 } else { 1 },
+        sample_iters: samples,
+        max_total: Duration::from_secs(120),
+    };
+    let solo_run = bencher.run("solo decode (target plan)", || {
+        generate_with_stats(&weights, &prompt, new_tokens, target, Decode::Greedy, seed).unwrap()
+    });
+    println!("{}", solo_run.summary());
+    let solo_tok_s = new_tokens as f64 / solo_run.median().as_secs_f64().max(1e-12);
+    let (solo_tokens, _) =
+        generate_with_stats(&weights, &prompt, new_tokens, target, Decode::Greedy, seed).unwrap();
+
+    // --- Speculative ladder. ---
+    let mut table = Table::new(
+        "speculative decode vs solo (target plan)",
+        &["draft", "tok/s", "speedup", "accept rate", "tok/round"],
+    );
+    table.row(vec![
+        "(solo)".into(),
+        format!("{solo_tok_s:.1}"),
+        "1.00x".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    let mut obj = JsonObj::new()
+        .str("model", "4 layers, 4 heads, d=128, vocab=256")
+        .int("seq", cfg.seq as u64)
+        .int("new_tokens", new_tokens as u64)
+        .str("target_policy", "lamp(mu=3, tau=0.02, strict)")
+        .int("draft_configs", drafts.len() as u64)
+        .num("solo_tok_s", solo_tok_s);
+    let mut best_speedup = 0.0f64;
+    let mut best_label = "";
+    for (i, &(label, draft, k)) in drafts.iter().enumerate() {
+        let plan = target.with_spec(Some(SpecConfig::whole_model(draft, k)));
+        plan.validate().expect("spec plan");
+        let run = bencher.run(&format!("speculative decode ({label})"), || {
+            generate_with_stats(&weights, &prompt, new_tokens, plan, Decode::Greedy, seed).unwrap()
+        });
+        println!("{}", run.summary());
+        let (tokens, stats) =
+            generate_with_stats(&weights, &prompt, new_tokens, plan, Decode::Greedy, seed).unwrap();
+        // The bit-exactness contract: speculation is invisible in the output.
+        assert_eq!(tokens, solo_tokens, "spec stream diverged from solo ({label})");
+        assert!(stats.spec.rounds > 0, "no speculative rounds ran ({label})");
+        let tok_s = new_tokens as f64 / run.median().as_secs_f64().max(1e-12);
+        let speedup = tok_s / solo_tok_s.max(1e-12);
+        let acc = stats.spec.acceptance_rate();
+        let per_round = stats.spec.mean_accept_len();
+        table.row(vec![
+            label.into(),
+            format!("{tok_s:.1}"),
+            format!("{speedup:.2}x"),
+            format!("{:.1}%", acc * 100.0),
+            format!("{per_round:.2}"),
+        ]);
+        obj = obj
+            .str(&format!("draft{i}_label"), label)
+            .int(&format!("draft{i}_k"), k as u64)
+            .num(&format!("draft{i}_tok_s"), tok_s)
+            .num(&format!("draft{i}_speedup"), speedup)
+            .num(&format!("draft{i}_accept_rate"), acc)
+            .num(&format!("draft{i}_tokens_per_round"), per_round);
+        if speedup > best_speedup {
+            best_speedup = speedup;
+            best_label = label;
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "best: {best_label} at {best_speedup:.2}x over solo {solo_tok_s:.1} tok/s \
+         (target: > 1x for at least one draft config)"
+    );
+
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    obj = obj
+        .num("best_speedup", best_speedup)
+        .int("host_cores", cores as u64)
+        // Smoke records are single-sample and not comparable; mark them so
+        // the cross-PR guards can't mistake them for real.
+        .int("smoke", smoke as u64);
+    let path = record_path();
+    if smoke {
+        println!("smoke mode: timings above are single-sample and not comparable");
+    }
+    record_bench_section(&path, "speculative", &obj).expect("write bench record");
+    println!("recorded -> {}", path.display());
+
+    if best_speedup <= 1.0 && !smoke {
+        eprintln!(
+            "WARNING: no draft configuration beat the solo baseline \
+             (best {best_speedup:.2}x) — speculation is not paying for itself"
+        );
+    }
+}

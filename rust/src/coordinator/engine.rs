@@ -295,10 +295,15 @@ impl Engine for NativeEngine {
         require_weight_storage(policy, self.weight_format())?;
         require_kv_storage(policy, self.kv_format())?;
         let plan = self.decode_precision(policy);
-        Ok(match &self.kv {
+        let mut session = match &self.kv {
             Some(pool) => DecodeSession::with_pool(&self.weights, plan, seed, pool.clone()),
             None => DecodeSession::new(&self.weights, plan, seed),
-        })
+        };
+        // Speculative verification fans candidate rows across the engine's
+        // pool; the rows are bit-identical either way, so this only sets
+        // the parallelism, never the output.
+        session.set_threads(self.pool.clone());
+        Ok(session)
     }
 
     /// Storage requirements are checked against the actual weights (via
@@ -405,6 +410,16 @@ impl Engine for PjrtEngine {
                 "pjrt backend does not implement tile rule {:?}",
                 policy.attention.rule.name()
             )));
+        }
+        // Speculative decoding rides the incremental KV decode path (draft
+        // rounds, checkpoint/rollback, batched verify); the artifact
+        // executes fixed-shape full forwards only.
+        if policy.spec.is_some() {
+            return Err(Error::config(
+                "pjrt backend does not support speculative decoding \
+                 (use the native engine)"
+                    .to_string(),
+            ));
         }
         require_weight_storage(policy, self.weight_format())?;
         require_kv_storage(policy, self.kv_format())
@@ -551,6 +566,24 @@ mod tests {
         assert!(NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap())
             .with_kv_cache(bad)
             .is_err());
+    }
+
+    #[test]
+    fn speculative_policy_serves_bit_identical_tokens() {
+        use crate::coordinator::policy::{SitePolicy, SpecPolicy};
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(17);
+        let engine =
+            NativeEngine::new(Weights::random(&cfg, &mut rng).unwrap()).with_threads(3);
+        let solo = PrecisionPolicy::lamp(3, 0.1, Rule::Strict);
+        let spec =
+            solo.with_spec(Some(SpecPolicy::whole_model(SitePolicy::uniform(2), 3)));
+        engine.validate_policy(&spec).unwrap();
+        let (base, _) =
+            engine.generate(&[5, 9, 2], 10, &solo, Decode::Greedy, 7).unwrap();
+        let (specd, _) =
+            engine.generate(&[5, 9, 2], 10, &spec, Decode::Greedy, 7).unwrap();
+        assert_eq!(base, specd, "speculation must not change the stream");
     }
 
     #[test]

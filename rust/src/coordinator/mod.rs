@@ -40,7 +40,7 @@ pub use crate::model::{KvBlockPool, KvCacheOptions, KvPoolStats, KvPrecision, We
 pub use batcher::Batcher;
 pub use engine::{Engine, EngineOutput, NativeEngine, PjrtEngine};
 pub use faults::{FaultInjector, FaultPlan, FaultStats};
-pub use policy::{DegradationLadder, DegradeRung, PrecisionPolicy, Rule, SitePolicy};
+pub use policy::{DegradationLadder, DegradeRung, PrecisionPolicy, Rule, SitePolicy, SpecPolicy};
 pub use replay::{replay, ReplayOptions, ReplayReport};
 pub use request::{
     CancelToken, Deadline, GenerateRequest, GenerateResponse, InferenceRequest,

@@ -16,7 +16,7 @@
 use crate::error::{Error, Result};
 use crate::lamp::softmax::SoftmaxRule;
 use crate::model::{
-    AttentionPrecision, KvPrecision, PrecisionPlan, SitePrecision, WeightPrecision,
+    AttentionPrecision, KvPrecision, PrecisionPlan, SitePrecision, SpecConfig, WeightPrecision,
 };
 
 /// Default tile width for the tile-granular rules when the name carries
@@ -161,6 +161,60 @@ impl SitePolicy {
     }
 }
 
+/// Coordinator-level speculative-decoding request: the *draft* plan's
+/// per-site precision plus the look-ahead depth `k`. Mirrors the
+/// engine-level [`SpecConfig`]; validated through
+/// [`PrecisionPlan::validate`], which requires every draft site to be no
+/// more expensive than the target site and at least one to be strictly
+/// cheaper.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecPolicy {
+    pub attention: SitePolicy,
+    pub mlp: SitePolicy,
+    pub norm: SitePolicy,
+    pub sampler: SitePolicy,
+    /// Look-ahead depth: tokens drafted per speculation round.
+    pub k: usize,
+}
+
+impl SpecPolicy {
+    /// The same draft (μ, τ, rule) at every composition site.
+    pub fn whole_model(site: SitePolicy, k: usize) -> Self {
+        SpecPolicy { attention: site, mlp: site, norm: site, sampler: site, k }
+    }
+
+    /// Convert to the engine-level draft configuration.
+    pub fn to_config(&self, ref_len: usize) -> SpecConfig {
+        SpecConfig {
+            attention: self.attention.to_site_precision(ref_len),
+            mlp: self.mlp.to_site_precision(ref_len),
+            norm: self.norm.to_site_precision(ref_len),
+            sampler: self.sampler.to_site_precision(ref_len),
+            k: self.k,
+        }
+    }
+
+    /// Label fragment (metric-key stable: equal specs render equally,
+    /// distinct specs distinctly).
+    fn fragment(&self) -> String {
+        let sites = if self.attention == self.mlp
+            && self.mlp == self.norm
+            && self.norm == self.sampler
+        {
+            self.attention.fragment()
+        } else {
+            format!(
+                "att={},mlp={},norm={},sampler={}",
+                self.attention.fragment(),
+                self.mlp.fragment(),
+                self.norm.fragment(),
+                self.sampler.fragment()
+            )
+        };
+        format!("spec[k={},{}]", self.k, sites)
+    }
+}
+
 /// A complete per-site precision policy for one request.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PrecisionPolicy {
@@ -181,6 +235,11 @@ pub struct PrecisionPolicy {
     /// decode on whatever KV format the engine's block pool holds).
     /// Checked at submit via `Engine::validate_policy`, like weights.
     pub kv: KvPrecision,
+    /// Speculative decoding (`None` = plain one-token-per-step decode):
+    /// draft `k` tokens under the cheap plan, verify them with this
+    /// policy's exact plan in one batched forward. Native engines only —
+    /// `PjrtEngine::validate_policy` rejects it.
+    pub spec: Option<SpecPolicy>,
 }
 
 impl PrecisionPolicy {
@@ -193,6 +252,7 @@ impl PrecisionPolicy {
             sampler: SitePolicy::reference(),
             weights: WeightPrecision::Any,
             kv: KvPrecision::Any,
+            spec: None,
         }
     }
 
@@ -216,6 +276,7 @@ impl PrecisionPolicy {
             sampler: site,
             weights: WeightPrecision::Any,
             kv: KvPrecision::Any,
+            spec: None,
         }
     }
 
@@ -246,6 +307,12 @@ impl PrecisionPolicy {
     /// Replace the KV-cache storage requirement.
     pub fn with_kv(mut self, kv: KvPrecision) -> Self {
         self.kv = kv;
+        self
+    }
+
+    /// Attach (or clear) a speculative-decoding draft configuration.
+    pub fn with_spec(mut self, spec: Option<SpecPolicy>) -> Self {
+        self.spec = spec;
         self
     }
 
@@ -301,6 +368,9 @@ impl PrecisionPolicy {
         if self.kv != KvPrecision::Any {
             s.push_str(&format!("+kv[{}]", self.kv.label()));
         }
+        if let Some(spec) = &self.spec {
+            s.push_str(&format!("+{}", spec.fragment()));
+        }
         s
     }
 
@@ -327,6 +397,7 @@ impl PrecisionPolicy {
             sampler: self.sampler.to_site_precision(ref_len),
             weights: self.weights,
             kv: self.kv,
+            spec: self.spec.map(|s| s.to_config(ref_len)),
         }
     }
 
@@ -395,6 +466,11 @@ impl DegradeRung {
             sampler: self.apply_site(policy.sampler),
             weights: policy.weights,
             kv: policy.kv,
+            // Degrading means overload: speculation spends extra compute
+            // on look-ahead drafts, so it is the first thing shed. (It
+            // also sidesteps validity: raising the target's τ could make
+            // a fixed draft no longer strictly cheaper.)
+            spec: None,
         }
     }
 }
@@ -692,6 +768,53 @@ mod tests {
             "{}",
             both.label()
         );
+    }
+
+    #[test]
+    fn spec_policy_in_label_validation_and_batching() {
+        let base = PrecisionPolicy::lamp(3, 0.1, Rule::Strict);
+        let spec = base.with_spec(Some(SpecPolicy::whole_model(SitePolicy::uniform(2), 4)));
+        // A strictly-cheaper draft validates through the plan front door.
+        spec.validate().unwrap();
+        assert!(spec.label().contains("spec[k=4"), "{}", spec.label());
+        assert!(!base.label().contains("spec["), "{}", base.label());
+        // Spec keys batches: drafts differing only in k don't co-batch.
+        assert!(!spec.batch_compatible(&base));
+        assert!(!spec.batch_compatible(
+            &base.with_spec(Some(SpecPolicy::whole_model(SitePolicy::uniform(2), 2)))
+        ));
+        assert!(spec.batch_compatible(
+            &base.with_spec(Some(SpecPolicy::whole_model(SitePolicy::uniform(2), 4)))
+        ));
+        // The translation threads the draft into the plan.
+        let plan = spec.to_plan(64);
+        let cfg = plan.spec.expect("spec threads into the plan");
+        assert_eq!(cfg.k, 4);
+        assert_eq!(cfg.attention.mu, 2);
+        // A draft more expensive than the target is rejected.
+        let bad = base.with_spec(Some(SpecPolicy::whole_model(SitePolicy::uniform(6), 4)));
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("spec draft"), "{e}");
+        // k = 0 is rejected.
+        let zero = base.with_spec(Some(SpecPolicy::whole_model(SitePolicy::uniform(2), 0)));
+        assert!(zero.validate().is_err());
+    }
+
+    #[test]
+    fn degradation_sheds_speculation_before_precision() {
+        let ladder = DegradationLadder::default();
+        let policy = PrecisionPolicy::tier("balanced")
+            .unwrap()
+            .with_spec(Some(SpecPolicy::whole_model(SitePolicy::uniform(2), 4)));
+        policy.validate().unwrap();
+        // Rung 0 is the request's own policy — speculation intact.
+        assert_eq!(ladder.apply(0, &policy).spec, policy.spec);
+        // Every degraded rung drops speculation and still validates.
+        for rung in 1..=ladder.max_rung() {
+            let eff = ladder.apply(rung, &policy);
+            assert_eq!(eff.spec, None, "rung {rung} kept spec");
+            eff.validate().unwrap();
+        }
     }
 
     #[test]

@@ -56,7 +56,7 @@ use super::engine::Engine;
 use super::policy::{DegradationLadder, PrecisionPolicy};
 use super::request::{GenerateRequest, GenerateResponse};
 use crate::error::Error;
-use crate::model::{DecodeSession, LampStats};
+use crate::model::{DecodeSession, KvCheckpoint, LampStats, PrecisionPlan};
 use crate::util::{Rng, ThreadPool};
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -214,6 +214,23 @@ pub struct DecodeMetrics {
     /// Current ladder rung (0 = no degradation) and its metric label.
     pub ladder_rung: usize,
     pub ladder_rung_name: String,
+    // --- Speculative decoding metrics (PR 9). ---
+    /// Speculation rounds completed (one batched verify each) over every
+    /// retired session.
+    pub spec_rounds: usize,
+    /// Draft tokens proposed / accepted by verification.
+    pub spec_drafted: usize,
+    pub spec_accepted: usize,
+    /// Draft forward steps and batched verify passes executed.
+    pub spec_draft_steps: usize,
+    pub spec_verify_chunks: usize,
+    /// accepted / drafted (0 when nothing was drafted).
+    pub spec_acceptance_rate: f64,
+    /// Mean tokens emitted per round (1.0 = speculation never paid off).
+    pub spec_mean_accept_len: f64,
+    /// Acceptance-length histogram: entry `i` counts rounds that emitted
+    /// `i + 1` tokens.
+    pub spec_accept_hist: Vec<usize>,
 }
 
 /// A queued request: fresh, or preempted and awaiting recompute.
@@ -271,12 +288,41 @@ struct ActiveSlot<'e> {
     retries: usize,
     /// The slot sits out iterations until this backoff deadline passes.
     backoff_until: Option<Instant>,
+    /// Speculative-decoding state machine; `None` when the request's
+    /// policy carries no draft plan (plain one-token-per-step decode).
+    spec: Option<SlotSpec>,
+}
+
+/// Speculation config and round state a slot carries when its policy
+/// requests a draft plan (PR 9).
+struct SlotSpec {
+    k: usize,
+    draft_plan: PrecisionPlan,
+    state: SpecPhase,
+}
+
+/// Per-slot speculative round state. Each variant is one *schedulable
+/// unit* of work — one draft step, or one batched verify + commit — so
+/// deadlines, cancellation, retries, and victim preemption all land
+/// between units, exactly like plain decode steps. Preemption simply
+/// drops this state: the draft RNG is a clone and the real RNG is only
+/// consumed at verify time, so a resumed slot replays its round against
+/// the recomputed (bit-identical) session state.
+enum SpecPhase {
+    /// Between rounds: the next unit feeds/retires or opens a new round.
+    Seed,
+    /// Mid-draft against the scratch KV extension.
+    Drafting { cp: KvCheckpoint, cands: Vec<u32>, draft_rng: Rng, m: usize },
+    /// Drafts rolled back; the next unit verifies and commits.
+    Verify { cands: Vec<u32> },
 }
 
 /// Scratch for one slot-iteration, harvested after the parallel fan-out.
+/// A speculation round's verify+commit unit emits several tokens at once;
+/// every other unit emits at most one.
 #[derive(Default)]
 struct StepOutcome {
-    emitted: Option<u32>,
+    emitted: Vec<u32>,
     done: bool,
     error: Option<Error>,
 }
@@ -296,6 +342,9 @@ impl ActiveSlot<'_> {
 
     fn iterate(&mut self, prefill_chunk: usize) -> crate::error::Result<()> {
         let seq = self.session.config().seq;
+        if self.spec.is_some() {
+            return self.iterate_spec(prefill_chunk, seq);
+        }
         if self.prefilled < self.tokens.len() {
             // Feed phase: the prompt (chunked), a preempted request's
             // recomputed prefix, or a single dangling token whose feed
@@ -321,7 +370,7 @@ impl ActiveSlot<'_> {
         let next = decode.pick(self.session.logits(), &mut self.rng)?;
         self.tokens.push(next);
         self.generated += 1;
-        self.outcome.emitted = Some(next);
+        self.outcome.emitted.push(next);
         if self.tokens.len() >= seq {
             // Context exhausted: retire without feeding, exactly like the
             // solo loop's early break.
@@ -340,6 +389,190 @@ impl ActiveSlot<'_> {
         self.session.decode_step(next)?;
         self.prefilled += 1;
         if self.generated >= self.req.max_new_tokens {
+            self.outcome.done = true;
+        }
+        Ok(())
+    }
+
+    /// Advance a speculative slot by one schedulable unit: a prefill
+    /// chunk, a round-opening/bookkeeping step, one draft step, or one
+    /// batched verify + commit ([`SpecPhase`]). The emitted stream
+    /// replays `model::sampler`'s speculative loop exactly — every token
+    /// is picked from target-plan logits in solo order, draft picks
+    /// consume only a clone of the RNG — so per-request output stays
+    /// bit-identical to solo decode under the same policy.
+    fn iterate_spec(&mut self, prefill_chunk: usize, seq: usize) -> crate::error::Result<()> {
+        let k = self.spec.as_ref().expect("spec slot").k;
+        match &self.spec.as_ref().expect("spec slot").state {
+            SpecPhase::Drafting { .. } => return self.draft_unit(seq),
+            SpecPhase::Verify { .. } => {
+                let state = std::mem::replace(
+                    &mut self.spec.as_mut().expect("spec slot").state,
+                    SpecPhase::Seed,
+                );
+                let SpecPhase::Verify { cands } = state else { unreachable!() };
+                return self.verify_unit(cands, seq);
+            }
+            SpecPhase::Seed => {}
+        }
+        // Feed phase: the prompt or a preempted request's recomputed
+        // prefix. A generated trailing token is the next round's *unfed*
+        // base (the solo speculative loop keeps it unfed too), so it is
+        // excluded from the feed target.
+        let fed_target =
+            if self.generated == 0 { self.tokens.len() } else { self.tokens.len() - 1 };
+        if self.prefilled < fed_target {
+            let end = (self.prefilled + prefill_chunk.max(1)).min(fed_target);
+            while self.prefilled < end {
+                let tok = self.tokens[self.prefilled];
+                self.session.decode_step(tok)?;
+                self.prefilled += 1;
+            }
+            return Ok(());
+        }
+        if self.generated == 0 {
+            // First pick straight off the prefilled prompt, exactly like
+            // the solo speculative loop's entry.
+            let next = self.req.decode.pick(self.session.logits(), &mut self.rng)?;
+            self.tokens.push(next);
+            self.generated += 1;
+            self.outcome.emitted.push(next);
+            if self.tokens.len() >= seq || self.req.eos == Some(next) {
+                self.outcome.done = true;
+            }
+            return Ok(());
+        }
+        let next = *self.tokens.last().expect("seed token");
+        if self.generated >= self.req.max_new_tokens {
+            // Budget spent: feed the final sampled token (solo parity —
+            // the context is not full, or the slot would have retired at
+            // pick time) and retire.
+            self.session.decode_step(next)?;
+            self.prefilled += 1;
+            self.outcome.done = true;
+            return Ok(());
+        }
+        let n = self.session.len();
+        let m =
+            (1 + k).min(self.req.max_new_tokens - self.generated).min(seq - n - 1);
+        if m < 2 {
+            return self.degenerate_step(seq);
+        }
+        // Open a round — checkpoint, clone the sampling RNG for drafting,
+        // enter scratch mode — and run its first draft step right away so
+        // every iteration does real forward work.
+        let cp = self.session.spec_checkpoint();
+        let draft_rng = self.rng.clone();
+        self.session.begin_draft();
+        self.spec.as_mut().expect("spec slot").state =
+            SpecPhase::Drafting { cp, cands: vec![next], draft_rng, m };
+        self.draft_unit(seq)
+    }
+
+    /// One draft step + draft pick against the scratch KV extension.
+    /// Draft work is disposable (solo behavior): any step failure —
+    /// typically pool pressure from the scratch extension — just ends the
+    /// draft phase early; with nothing drafted the round degenerates to a
+    /// plain committed step this same iteration.
+    fn draft_unit(&mut self, seq: usize) -> crate::error::Result<()> {
+        let decode = self.req.decode;
+        let (last, draft_plan) = {
+            let spec = self.spec.as_ref().expect("spec slot");
+            let SpecPhase::Drafting { cands, .. } = &spec.state else {
+                unreachable!("draft unit outside a round")
+            };
+            (*cands.last().expect("nonempty"), spec.draft_plan)
+        };
+        let drafting = match self.session.draft_step(last, draft_plan) {
+            Ok(()) => {
+                let spec = self.spec.as_mut().expect("spec slot");
+                let SpecPhase::Drafting { cands, draft_rng, m, .. } = &mut spec.state
+                else {
+                    unreachable!("draft unit outside a round")
+                };
+                // Draft pick from the *cloned* stream; the real RNG stays
+                // untouched until the acceptance walk.
+                cands.push(decode.pick(self.session.logits(), draft_rng)?);
+                cands.len() < *m
+            }
+            Err(_) => false,
+        };
+        if drafting {
+            return Ok(());
+        }
+        // Draft phase over (full or died): roll the scratch extension
+        // back, then verify what survived (nothing ⇒ solo's degenerate
+        // plain step).
+        let state = std::mem::replace(
+            &mut self.spec.as_mut().expect("spec slot").state,
+            SpecPhase::Seed,
+        );
+        let SpecPhase::Drafting { cp, cands, .. } = state else {
+            unreachable!("draft unit outside a round")
+        };
+        self.session.rollback(&cp);
+        if cands.len() >= 2 {
+            self.spec.as_mut().expect("spec slot").state = SpecPhase::Verify { cands };
+            return Ok(());
+        }
+        self.degenerate_step(seq)
+    }
+
+    /// The round's verify + commit as one schedulable unit: one batched
+    /// target-plan forward over the candidates, the acceptance walk on
+    /// the real RNG, then an atomic commit of the accepted prefix. A
+    /// failed verify changed no session state and consumed no real RNG,
+    /// so the standard retry/preemption machinery re-runs this unit (the
+    /// phase is restored) or replays the whole round after preemption —
+    /// bit-identically either way.
+    fn verify_unit(&mut self, cands: Vec<u32>, seq: usize) -> crate::error::Result<()> {
+        if let Err(e) = self.session.verify_chunk(&cands) {
+            self.spec.as_mut().expect("spec slot").state = SpecPhase::Verify { cands };
+            return Err(e);
+        }
+        let decode = self.req.decode;
+        let mut round = Vec::with_capacity(cands.len());
+        round.push(decode.pick(self.session.chunk_logits_row(0), &mut self.rng)?);
+        while round.len() < cands.len()
+            && *round.last().expect("nonempty") == cands[round.len()]
+        {
+            let j = round.len();
+            round.push(decode.pick(self.session.chunk_logits_row(j), &mut self.rng)?);
+        }
+        let accepted_rows = round.len();
+        self.session.commit_round(&cands[..accepted_rows]);
+        self.session
+            .spec_stats_mut()
+            .record_round(cands.len() - 1, accepted_rows - 1, round.len());
+        self.prefilled += accepted_rows;
+        // Emit the round, honoring the scheduler's eos extension: stop at
+        // the stop token and drop the tail, keeping the emitted stream a
+        // prefix of the solo stream. The context bound can only trip on
+        // the round's last token (m ≤ seq - n - 1 at round open).
+        for &t in &round {
+            self.tokens.push(t);
+            self.generated += 1;
+            self.outcome.emitted.push(t);
+            if self.tokens.len() >= seq || self.req.eos == Some(t) {
+                self.outcome.done = true;
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// One plain committed decode step + pick — the solo loop body, used
+    /// when a round has no look-ahead room or none of its drafts
+    /// survived.
+    fn degenerate_step(&mut self, seq: usize) -> crate::error::Result<()> {
+        let next = *self.tokens.last().expect("seed token");
+        self.session.decode_step(next)?;
+        self.prefilled += 1;
+        let t = self.req.decode.pick(self.session.logits(), &mut self.rng)?;
+        self.tokens.push(t);
+        self.generated += 1;
+        self.outcome.emitted.push(t);
+        if self.tokens.len() >= seq || self.req.eos == Some(t) {
             self.outcome.done = true;
         }
         Ok(())
@@ -568,6 +801,19 @@ impl<'e> Scheduler<'e> {
                 match self.open_session(&entry.req.policy, entry.req.seed) {
                     Ok(mut session) => {
                         let mut req = entry.req;
+                        // A policy carrying a draft plan decodes through
+                        // the per-slot speculative state machine. Resumed
+                        // requests re-derive it fresh: preemption dropped
+                        // any in-flight round, which replays after the
+                        // prefix recompute.
+                        let spec = session.plan().spec.map(|s| SlotSpec {
+                            k: s.k,
+                            draft_plan: session
+                                .plan()
+                                .draft_plan()
+                                .expect("validated spec has a draft plan"),
+                            state: SpecPhase::Seed,
+                        });
                         let slot = match entry.resume {
                             Some(r) => {
                                 // Recompute the whole pre-preemption
@@ -587,6 +833,7 @@ impl<'e> Scheduler<'e> {
                                     outcome: StepOutcome::default(),
                                     retries: 0,
                                     backoff_until: None,
+                                    spec,
                                     session,
                                     req,
                                 }
@@ -614,6 +861,7 @@ impl<'e> Scheduler<'e> {
                                     outcome: StepOutcome::default(),
                                     retries: 0,
                                     backoff_until: None,
+                                    spec,
                                     session,
                                     req,
                                 }
@@ -805,7 +1053,11 @@ impl<'e> Scheduler<'e> {
                 }
                 (o.emitted, o.done, o.error)
             };
-            if let Some(token) = emitted {
+            // A plain iteration emits at most one token; a speculation
+            // round's verify+commit emits its whole accepted run at once
+            // (they genuinely became available at the same instant, so
+            // the tokens after the first record ~zero inter-token gaps).
+            for (off, &token) in emitted.iter().enumerate() {
                 let (id, index, is_first, dt) = {
                     let slot = self.slots[i].as_mut().expect("active slot");
                     let is_first = slot.first_token.is_none();
@@ -816,7 +1068,7 @@ impl<'e> Scheduler<'e> {
                     slot.last_event = now;
                     (
                         slot.req.id,
-                        slot.generated - 1,
+                        slot.generated - emitted.len() + off,
                         is_first,
                         now.duration_since(since).as_secs_f64(),
                     )
@@ -1139,6 +1391,14 @@ impl<'e> Scheduler<'e> {
                 .as_ref()
                 .map(|l| l.rung_name(self.ladder_rung).to_string())
                 .unwrap_or_else(|| "none".to_string()),
+            spec_rounds: self.totals.spec.rounds,
+            spec_drafted: self.totals.spec.drafted,
+            spec_accepted: self.totals.spec.accepted,
+            spec_draft_steps: self.totals.spec.draft_steps,
+            spec_verify_chunks: self.totals.spec.verify_chunks,
+            spec_acceptance_rate: self.totals.spec.acceptance_rate(),
+            spec_mean_accept_len: self.totals.spec.mean_accept_len(),
+            spec_accept_hist: self.totals.spec.accept_hist.clone(),
         }
     }
 }
@@ -1309,6 +1569,109 @@ mod tests {
             assert_eq!(a.tokens, b.tokens, "pool changed request {}", a.id);
             assert_eq!(a.stats.recomputed, b.stats.recomputed);
         }
+    }
+
+    #[test]
+    fn speculative_requests_match_solo_and_account_rounds() {
+        use crate::coordinator::policy::{SitePolicy, SpecPolicy};
+        let e = engine();
+        let target = PrecisionPolicy::lamp(3, 0.1, Rule::Strict);
+        let spec = target.with_spec(Some(SpecPolicy::whole_model(SitePolicy::uniform(2), 3)));
+        // Solo oracle under the *same spec policy* (bit-identical to the
+        // non-speculative target stream by the sampler-level parity test;
+        // here we pin the scheduler against it, mixed with plain slots).
+        let mut solos = Vec::new();
+        let mut sched = Scheduler::new(
+            &e,
+            SchedulerOptions { max_sessions: 3, prefill_chunk: 2, ..Default::default() },
+        );
+        for id in 0..4u64 {
+            let prompt = vec![(id as u32 * 7 + 3) % 128, 11, 2];
+            let policy = if id % 2 == 0 { spec } else { target };
+            let n = 5 + id as usize;
+            solos.push(e.generate(&prompt, n, &policy, Decode::Greedy, id).unwrap().0);
+            sched.admit(greedy(id, prompt, n, policy).with_seed(id));
+        }
+        let mut responses = sched.run_to_completion().unwrap();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 4);
+        for (r, solo) in responses.iter().zip(&solos) {
+            assert_eq!(&r.tokens, solo, "id {} diverged from solo decode", r.id);
+        }
+        // Spec slots accounted rounds; plain slots did not.
+        for r in &responses {
+            if r.id % 2 == 0 {
+                assert!(r.stats.spec.rounds > 0, "id {}: no rounds", r.id);
+                assert!(r.stats.spec.verify_chunks > 0);
+            } else {
+                assert_eq!(r.stats.spec.rounds, 0, "id {}: phantom rounds", r.id);
+            }
+        }
+        let m = sched.metrics();
+        assert!(m.spec_rounds > 0 && m.spec_drafted > 0);
+        assert_eq!(
+            m.spec_accept_hist.iter().sum::<usize>(),
+            m.spec_rounds,
+            "histogram must partition the rounds"
+        );
+        assert!(m.spec_mean_accept_len >= 1.0);
+        assert_eq!(m.spec_verify_chunks, m.spec_rounds);
+    }
+
+    #[test]
+    fn speculative_eos_stops_a_prefix_of_the_solo_stream() {
+        use crate::coordinator::policy::{SitePolicy, SpecPolicy};
+        let e = engine();
+        let target = PrecisionPolicy::lamp(3, 0.1, Rule::Strict);
+        let spec = target.with_spec(Some(SpecPolicy::whole_model(SitePolicy::uniform(3), 4)));
+        let (solo, _) = e.generate(&[3, 14], 10, &spec, Decode::Greedy, 2).unwrap();
+        let continuation = &solo[2..];
+        assert!(continuation.len() >= 3);
+        // Stop mid-continuation: a round may overshoot the stop token
+        // internally, but the emitted stream must cut exactly there.
+        let eos = continuation[2];
+        let cut = continuation.iter().position(|&t| t == eos).unwrap();
+        let mut sched = Scheduler::new(&e, SchedulerOptions::default());
+        sched.admit(greedy(1, vec![3, 14], 10, spec).with_seed(2).with_eos(eos));
+        let responses = sched.run_to_completion().unwrap();
+        assert_eq!(responses[0].generated(), &continuation[..=cut]);
+    }
+
+    #[test]
+    fn speculative_slots_survive_tiny_pool_preemption() {
+        use crate::coordinator::policy::{SitePolicy, SpecPolicy};
+        use crate::coordinator::{KvCacheOptions, WeightFormat};
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(41);
+        let w = Weights::random(&cfg, &mut rng).unwrap();
+        let oracle = NativeEngine::new(w.clone());
+        let mut opts = KvCacheOptions::serving(&cfg, WeightFormat::F32, 1);
+        opts.block_size = 4;
+        opts.capacity_blocks = 12;
+        opts.sharing = false;
+        let e = NativeEngine::new(w).with_kv_cache(opts).unwrap();
+        let policy = PrecisionPolicy::lamp(3, 0.1, Rule::Strict)
+            .with_spec(Some(SpecPolicy::whole_model(SitePolicy::uniform(2), 2)));
+        let mut sched = Scheduler::new(
+            &e,
+            SchedulerOptions { max_sessions: 2, prefill_chunk: 4, ..Default::default() },
+        );
+        let mut solos = Vec::new();
+        for id in 0..3u64 {
+            let prompt = vec![(id as u32 * 11 + 3) % 128, 7, 9, 2];
+            solos.push(oracle.generate(&prompt, 24, &policy, Decode::Greedy, id).unwrap().0);
+            sched.admit(greedy(id, prompt, 24, policy).with_seed(id));
+        }
+        let mut responses = sched.run_to_completion().unwrap();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 3, "every spec request completes despite pressure");
+        for (r, solo) in responses.iter().zip(&solos) {
+            assert_eq!(&r.tokens, solo, "id {}: preemption broke a spec stream", r.id);
+        }
+        // Rollback-heavy run: the pool must settle back to empty once the
+        // scheduler is idle (no leaked scratch/staged blocks).
+        assert!(sched.is_idle());
+        assert_eq!(e.kv_pool().unwrap().stats().used_blocks, 0, "leaked KV blocks");
     }
 
     #[test]

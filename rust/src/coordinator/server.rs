@@ -94,6 +94,20 @@ pub struct ServerStats {
     /// (0 = nominal) and its name.
     pub ladder_rung: usize,
     pub ladder_rung_name: String,
+    // --- Speculative-decoding metrics (PR 9). ---
+    /// Draft/verify rounds completed across all generation drives.
+    pub spec_rounds: usize,
+    /// Tokens drafted under the cheap plan and tokens of those accepted by
+    /// the exact verify pass (accepted/drafted = acceptance rate).
+    pub spec_drafted: usize,
+    pub spec_accepted: usize,
+    pub spec_acceptance_rate: f64,
+    /// Mean tokens emitted per round (accepted prefix + the free token
+    /// sampled from the verify logits).
+    pub spec_mean_accept_len: f64,
+    /// Histogram of tokens emitted per round: index i counts rounds that
+    /// emitted i+1 tokens.
+    pub spec_accept_hist: Vec<usize>,
 }
 
 /// Synchronous batching server over one engine.
@@ -209,6 +223,33 @@ impl Server {
         self.stats.restore_transitions += metrics.restore_transitions;
         self.stats.ladder_rung = metrics.ladder_rung;
         self.stats.ladder_rung_name = metrics.ladder_rung_name;
+        self.stats.spec_rounds += metrics.spec_rounds;
+        self.stats.spec_drafted += metrics.spec_drafted;
+        self.stats.spec_accepted += metrics.spec_accepted;
+        self.stats.spec_acceptance_rate = if self.stats.spec_drafted > 0 {
+            self.stats.spec_accepted as f64 / self.stats.spec_drafted as f64
+        } else {
+            0.0
+        };
+        if self.stats.spec_accept_hist.len() < metrics.spec_accept_hist.len() {
+            self.stats.spec_accept_hist.resize(metrics.spec_accept_hist.len(), 0);
+        }
+        for (slot, &n) in
+            self.stats.spec_accept_hist.iter_mut().zip(metrics.spec_accept_hist.iter())
+        {
+            *slot += n;
+        }
+        self.stats.spec_mean_accept_len = if self.stats.spec_rounds > 0 {
+            self.stats
+                .spec_accept_hist
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| (i + 1) * n)
+                .sum::<usize>() as f64
+                / self.stats.spec_rounds as f64
+        } else {
+            0.0
+        };
         outcome?;
         Ok(events)
     }
@@ -523,6 +564,54 @@ mod tests {
         assert!(rate_of("mlp") > 0.0);
         assert!(rate_of("norm") > 0.0);
         assert!(rate_of("sampler") > 0.0);
+    }
+
+    #[test]
+    fn generation_surfaces_speculative_acceptance_stats() {
+        use crate::coordinator::policy::{SitePolicy, SpecPolicy};
+        use crate::coordinator::request::GenerateRequest;
+        use crate::coordinator::scheduler::GenerateEvent;
+        use crate::model::Decode;
+
+        let cfg = ModelConfig::nano();
+        let mut rng = Rng::new(17);
+        let weights = Weights::random(&cfg, &mut rng).unwrap();
+        let oracle = NativeEngine::new(weights.clone());
+        let mut s =
+            Server::new(Box::new(NativeEngine::new(weights)), Duration::from_millis(1));
+
+        let target = PrecisionPolicy::lamp(3, 0.1, Rule::Strict);
+        let spec =
+            target.with_spec(Some(SpecPolicy::whole_model(SitePolicy::uniform(2), 3)));
+        s.submit_generate(GenerateRequest::new(1, vec![1, 2, 3], 8, spec)).unwrap();
+        let events = s.serve_generation().unwrap();
+        let tokens = events
+            .iter()
+            .find_map(|e| match e {
+                GenerateEvent::Finished(r) => Some(r.tokens.clone()),
+                GenerateEvent::Failed { id, error } => {
+                    panic!("request {id} failed: {error}")
+                }
+                GenerateEvent::Token { .. } => None,
+            })
+            .expect("request finished");
+        // Speculation is an execution strategy, not a precision change:
+        // the stream matches plain decoding under the target policy.
+        let (solo, _) =
+            oracle.generate(&[1, 2, 3], 8, &target, Decode::Greedy, 1).unwrap();
+        assert_eq!(tokens, solo);
+
+        let stats = s.stats();
+        assert!(stats.spec_rounds > 0, "8 tokens at k=3 must round-trip");
+        assert!(stats.spec_drafted > 0);
+        assert!(stats.spec_accepted <= stats.spec_drafted);
+        assert!(stats.spec_acceptance_rate >= 0.0 && stats.spec_acceptance_rate <= 1.0);
+        assert_eq!(
+            stats.spec_accept_hist.iter().sum::<usize>(),
+            stats.spec_rounds,
+            "every round lands in exactly one histogram bucket"
+        );
+        assert!(stats.spec_mean_accept_len >= 1.0, "each round emits at least one token");
     }
 
     #[test]

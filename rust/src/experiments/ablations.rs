@@ -18,6 +18,11 @@
 //!   quantized cached K/V rows ([`crate::model::kvstore`]: bf16 / PS(μ))
 //!   with look-ahead row pinning at a ≤5% f32 budget vs uniform quantized
 //!   KV, against the f32-KV decode oracle.
+//! * `speculative`: the self-speculative draft-plan aggressiveness ladder
+//!   (τ loosening, then μ coarsening, at fixed look-ahead k) vs measured
+//!   acceptance and end-to-end speedup over the non-speculative
+//!   target-plan decode — every rung's stream stays bit-identical to solo
+//!   by construction.
 
 use crate::benchkit::{fnum, Table};
 use crate::error::Result;
@@ -25,8 +30,8 @@ use crate::lamp::softmax::{select_strict, softmax, SoftmaxRule};
 use crate::linalg::{Matrix, WeightFormat};
 use crate::metrics::Accumulator;
 use crate::model::{
-    forward, DecodeSession, KvBlockPool, KvCacheOptions, LampStats, ModelConfig,
-    PrecisionPlan, SitePrecision, Weights,
+    forward, generate_with_stats, Decode, DecodeSession, KvBlockPool, KvCacheOptions,
+    LampStats, ModelConfig, PrecisionPlan, SitePrecision, SpecConfig, Weights,
 };
 use crate::softfloat::dot::{dot_f32, dot_f64, dot_kahan, dot_ps, dot_ps_stochastic};
 use crate::util::Rng;
@@ -404,9 +409,89 @@ pub fn kv_storage() -> Result<Vec<Table>> {
     Ok(vec![t])
 }
 
+/// Self-speculative decoding: draft-plan aggressiveness vs acceptance and
+/// end-to-end speedup. The ladder coarsens in two regimes — first τ
+/// loosens at fixed μ (fewer exact repairs in the draft), then μ drops
+/// with no repair at all — while the target plan, look-ahead depth k, and
+/// the emitted stream stay fixed: every rung decodes the bit-identical
+/// token sequence, so the table isolates the *cost* axis (acceptance vs
+/// draft cheapness) of the speculation trade.
+///
+/// Wall-clock speedups here are single-shot and host-dependent —
+/// `benches/speculative.rs` owns the real measurement; this table ties
+/// the ladder shape to the acceptance accounting.
+pub fn speculative() -> Result<Vec<Table>> {
+    use std::time::Instant;
+    let mut rng = Rng::new(31);
+    let weights = Weights::random(&ModelConfig::nano(), &mut rng)?;
+    let prompt: Vec<u32> = (0..8u32).map(|i| (i * 11 + 3) % 128).collect();
+    let new_tokens = 24usize;
+    let seed = 5u64;
+    let k = 4usize;
+    let target = PrecisionPlan::whole_model(SitePrecision::lamp(3, 0.02, SoftmaxRule::Strict));
+    target.validate()?;
+    let t0 = Instant::now();
+    let (solo_tokens, _) =
+        generate_with_stats(&weights, &prompt, new_tokens, target, Decode::Greedy, seed)?;
+    let solo_s = t0.elapsed().as_secs_f64();
+
+    let ladder: [(&str, SitePrecision); 4] = [
+        ("lamp(3, 0.05)", SitePrecision::lamp(3, 0.05, SoftmaxRule::Strict)),
+        ("lamp(3, 0.5)", SitePrecision::lamp(3, 0.5, SoftmaxRule::Strict)),
+        ("uniform(3)", SitePrecision::uniform(3)),
+        ("uniform(2)", SitePrecision::uniform(2)),
+    ];
+    let mut t = Table::new(
+        "ablation — speculative draft ladder (nano, target lamp(3, 0.02, strict), k=4)",
+        &[
+            "draft plan",
+            "accept%",
+            "tok/round",
+            "rounds",
+            "draft steps",
+            "verify chunks",
+            "speedup",
+            "bit-exact",
+        ],
+    );
+    for (label, draft) in ladder {
+        let plan = target.with_spec(Some(SpecConfig::whole_model(draft, k)));
+        plan.validate()?;
+        let t1 = Instant::now();
+        let (tokens, stats) =
+            generate_with_stats(&weights, &prompt, new_tokens, plan, Decode::Greedy, seed)?;
+        let spec_s = t1.elapsed().as_secs_f64();
+        t.row(vec![
+            label.to_string(),
+            format!("{:.1}", 100.0 * stats.spec.acceptance_rate()),
+            format!("{:.2}", stats.spec.mean_accept_len()),
+            stats.spec.rounds.to_string(),
+            stats.spec.draft_steps.to_string(),
+            stats.spec.verify_chunks.to_string(),
+            format!("{:.2}x", solo_s / spec_s.max(1e-12)),
+            (tokens == solo_tokens).to_string(),
+        ]);
+    }
+    Ok(vec![t])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn speculative_ablation_is_bit_exact_with_live_accounting() {
+        let tables = speculative().unwrap();
+        let rows = &tables[0].rows;
+        assert_eq!(rows.len(), 4);
+        for row in rows {
+            assert_eq!(row[7], "true", "{}: spec stream diverged from solo", row[0]);
+            let accept: f64 = row[1].parse().unwrap();
+            assert!((0.0..=100.0).contains(&accept), "{}: accept%={accept}", row[0]);
+            let rounds: u64 = row[3].parse().unwrap();
+            assert!(rounds > 0, "{}: no speculative rounds ran", row[0]);
+        }
+    }
 
     #[test]
     fn kv_storage_ablation_repair_beats_uniform_within_budget() {

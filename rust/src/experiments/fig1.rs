@@ -1,12 +1,17 @@
 //! Figure 1: KL divergence vs mantissa bits μ for uniform PS(μ)
 //! accumulation, LAMP (τ=0.1, ~1% recomputation), and the random baseline
-//! at the same recomputation count. GPT-2 XL → xl-sim, OpenWebText → web.
+//! at the same threshold.
+//!
+//! Routed through the bundled `fig1` trial manifest: the series in the
+//! rendered table are exactly the rows `lamp trials run fig1` pins as a
+//! byte-exact canonical artifact (`trials::figure`), so figure and
+//! artifact can never disagree. Quick mode trims the sweep and panel to
+//! the caller's smoke scale; a full run replays the manifest verbatim.
 
-use super::common::{load_weights, EvalOptions, EvalPanel};
+use super::common::EvalOptions;
 use crate::benchkit::{fnum, Table};
-use crate::coordinator::{PrecisionPolicy, Rule};
-use crate::data::Domain;
 use crate::error::Result;
+use crate::trials::{self, figure, TrialManifest};
 
 /// The paper's Fig. 1 setting: τ = 0.1 ("corresponding to a threshold
 /// τ = 0.1 in Sections 2–3"), strict rule.
@@ -21,22 +26,37 @@ pub fn mu_grid(quick: bool) -> Vec<u32> {
 }
 
 pub fn run(opts: &EvalOptions) -> Result<Vec<Table>> {
-    let weights = load_weights("xl", opts)?;
-    let panel = EvalPanel::build(weights, Domain::Web, opts)?;
+    let mut manifest =
+        TrialManifest::parse(trials::builtin("fig1").expect("bundled fig1 trial"))?;
+    let mut fig = manifest.figure.clone().expect("fig1 manifest is a figure trial");
+    manifest.workers = opts.workers;
+    if opts.quick {
+        fig.mu_grid = mu_grid(true);
+        fig.num_seqs = fig.num_seqs.min(opts.num_seqs.max(1));
+        fig.seq_len = fig.seq_len.min(opts.seq_len.max(2));
+    }
+    let rows = figure::rows(&manifest, &fig)?;
     let mut t = Table::new(
-        "Fig 1 — GPT-2 xl-sim on web panel: KL vs mu (tau=0.1, strict)",
+        &format!(
+            "Fig 1 — {} on {} panel: KL vs mu (tau={}, strict) [trial fig1]",
+            manifest.model.name,
+            fig.domain.name(),
+            fig.tau
+        ),
         &["mu", "KL(uniform)", "KL(LAMP)", "KL(random)", "recompute%"],
     );
-    for mu in mu_grid(opts.quick) {
-        let uni = panel.evaluate(&PrecisionPolicy::uniform(mu), 0)?;
-        let lamp = panel.evaluate(&PrecisionPolicy::lamp(mu, FIG1_TAU, Rule::Strict), 0)?;
-        let rand = panel.evaluate(&PrecisionPolicy::lamp(mu, FIG1_TAU, Rule::Random), 0)?;
+    for r in &rows {
+        let rate = if r.causal_total == 0 {
+            0.0
+        } else {
+            r.recomputed as f64 / r.causal_total as f64
+        };
         t.row(vec![
-            mu.to_string(),
-            fnum(uni.kl),
-            fnum(lamp.kl),
-            fnum(rand.kl),
-            format!("{:.3}", 100.0 * lamp.rate),
+            r.mu.to_string(),
+            fnum(r.kl_uniform),
+            fnum(r.kl_lamp),
+            fnum(r.kl_random),
+            format!("{:.3}", 100.0 * rate),
         ]);
     }
     Ok(vec![t])
@@ -51,5 +71,15 @@ mod tests {
         assert_eq!(mu_grid(true).len(), 3);
         assert!(mu_grid(false).contains(&7));
         assert!(mu_grid(false).contains(&23));
+    }
+
+    #[test]
+    fn bundled_trial_pins_the_paper_setting() {
+        let m = TrialManifest::parse(trials::builtin("fig1").unwrap()).unwrap();
+        let fig = m.figure.expect("figure trial");
+        assert_eq!(fig.tau, FIG1_TAU, "manifest must pin the paper's tau");
+        for mu in &fig.mu_grid {
+            assert!(mu_grid(false).contains(mu), "manifest grid must be a paper-grid subset");
+        }
     }
 }

@@ -39,8 +39,9 @@ pub fn run(name: &str, opts: &EvalOptions) -> Result<Vec<Table>> {
         "ablation_plan_sites" => ablations::plan_sites(),
         "ablation_weight_storage" => ablations::weight_storage(),
         "ablation_kv_storage" => ablations::kv_storage(),
+        "ablation_speculative" => ablations::speculative(),
         other => Err(Error::config(format!(
-            "unknown experiment {other:?} (fig1..fig7|table1|appendix_b|ablation_rounding|ablation_recompute|ablation_plan_sites|ablation_weight_storage|ablation_kv_storage)"
+            "unknown experiment {other:?} (fig1..fig7|table1|appendix_b|ablation_rounding|ablation_recompute|ablation_plan_sites|ablation_weight_storage|ablation_kv_storage|ablation_speculative)"
         ))),
     }
 }
@@ -62,6 +63,7 @@ pub fn all_names() -> &'static [&'static str] {
         "ablation_plan_sites",
         "ablation_weight_storage",
         "ablation_kv_storage",
+        "ablation_speculative",
     ]
 }
 

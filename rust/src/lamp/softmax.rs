@@ -13,6 +13,7 @@
 //! `|y_j| e^{y_j} > τ max_i |y_i| e^{y_i}` — computable in one pass without
 //! materializing z, the stepping stone towards FlashAttention integration.
 
+use crate::linalg::simd;
 use crate::util::Rng;
 
 /// Which LAMP selection rule to apply to a softmax row.
@@ -40,32 +41,36 @@ pub enum SoftmaxRule {
     TileRandom { width: usize },
 }
 
-/// Numerically stable softmax (subtract-max), FP32.
+/// Numerically stable softmax (subtract-max), FP32. Defined as a copy fed
+/// through [`softmax_inplace`], so the two are bit-identical by
+/// construction.
 pub fn softmax(y: &[f32]) -> Vec<f32> {
-    if y.is_empty() {
-        return Vec::new();
-    }
-    let m = y.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let exps: Vec<f32> = y.iter().map(|&v| (v - m).exp()).collect();
-    let sum: f32 = exps.iter().sum();
-    exps.iter().map(|&e| e / sum).collect()
+    let mut z = y.to_vec();
+    softmax_inplace(&mut z);
+    z
 }
 
 /// Numerically stable softmax computed in place over `y` — allocation-free
-/// variant of [`softmax`] for the engine hot path. Bit-identical to
-/// [`softmax`]: the same subtract-max / exp / normalize sequence, each
-/// element touched in the same order.
+/// variant of [`softmax`] for the engine hot path.
+///
+/// The subtract-max and normalization reductions run through the pinned
+/// SIMD row chains ([`simd::row_max`], [`simd::row_sum`] — the `dot_block`
+/// block shape with lanewise max/add, PR 9), so the result is bitwise
+/// independent of the dispatched backend; the exponential stays scalar and
+/// the final divide is lanewise (bit-transparent).
 pub fn softmax_inplace(y: &mut [f32]) {
     if y.is_empty() {
         return;
     }
-    let m = y.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let m = simd::row_max(y);
     for v in y.iter_mut() {
         *v = (*v - m).exp();
     }
-    let sum: f32 = y.iter().sum();
-    for v in y.iter_mut() {
-        *v /= sum;
+    let sum = simd::row_sum(y);
+    if !simd::div_row_simd(y, sum) {
+        for v in y.iter_mut() {
+            *v /= sum;
+        }
     }
 }
 

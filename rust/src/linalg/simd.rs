@@ -21,6 +21,18 @@
 //!   [`crate::softfloat::dot::dot_ps`] chain, so no pin changed there.
 //! * The FP32 matvec kernels vectorize across output columns with
 //!   elementwise mul+add — bit-transparent at any width.
+//! * [`row_max`] / [`row_sum`] — the pinned softmax row chains (PR 9):
+//!   the same 4×8 accumulator block shape as [`dot_block`] with lanewise
+//!   max / add in place of FMA, reduced through the same fixed trees. The
+//!   lanewise max is the AVX `max` (`if a > b { a } else { b }` — second
+//!   operand on ties/NaN), spelled out in the replay.
+//! * [`row_sum_f64`] / [`row_sumsq_dev`] — the pinned layernorm moment
+//!   chains: 4 interleaved 4-lane f64 vector accumulators over 16-wide
+//!   blocks (f32 inputs widened exactly), reduced accumulator-pairwise
+//!   then through a fixed 4-lane tree.
+//! * The elementwise row kernels ([`div_row_simd`], [`norm_finish_simd`],
+//!   [`round_row_simd`]) apply lanewise scalar operations —
+//!   bit-transparent at any width.
 //!
 //! IEEE-754 gives the equivalences for free: `_mm256_fmadd_ps` /
 //! `vfmaq_f32` and scalar [`f32::mul_add`] are all correctly-rounded fused
@@ -36,6 +48,14 @@ pub const DOT_LANES: usize = 8;
 pub const DOT_ACCS: usize = 4;
 /// Elements consumed per main-loop iteration of [`dot_block`].
 pub const DOT_BLOCK: usize = DOT_LANES * DOT_ACCS;
+
+/// Lanes per f64 vector accumulator in the pinned moment chains
+/// ([`row_sum_f64`], [`row_sumsq_dev`]).
+pub const SUM64_LANES: usize = 4;
+/// Interleaved f64 vector accumulators in the pinned moment chains.
+pub const SUM64_ACCS: usize = 4;
+/// Elements consumed per main-loop iteration of the f64 moment chains.
+pub const SUM64_BLOCK: usize = SUM64_LANES * SUM64_ACCS;
 
 const MODE_UNINIT: u8 = 0;
 const MODE_SCALAR: u8 = 1;
@@ -220,6 +240,236 @@ pub fn dot_block_bf16(a: &[f32], b: &[u16]) -> f32 {
 }
 
 // --------------------------------------------------------------------------
+// Pinned row-reduction chains (softmax & layernorm)
+// --------------------------------------------------------------------------
+
+/// The lanewise max of the pinned [`row_max`] chain: AVX `max` semantics —
+/// `if a > b { a } else { b }`, second operand on ties and NaN — which
+/// differ from [`f32::max`], so the replay spells them out.
+#[inline]
+fn vmax(a: f32, b: f32) -> f32 {
+    if a > b {
+        a
+    } else {
+        b
+    }
+}
+
+/// Fixed 4-lane reduction tree of the f64 moment chains:
+/// `(w[0] + w[2]) + (w[1] + w[3])` — exactly the extract/unpackhi add
+/// sequence of the AVX2 body.
+#[inline]
+fn reduce4(w: &[f64; SUM64_LANES]) -> f64 {
+    (w[0] + w[2]) + (w[1] + w[3])
+}
+
+/// Scalar replay of the pinned row-max chain: the [`dot_block`] block shape
+/// with [`vmax`] in place of FMA. Returns −∞ on an empty row.
+pub fn row_max_scalar(y: &[f32]) -> f32 {
+    let k = y.len();
+    let mut s = [[f32::NEG_INFINITY; DOT_LANES]; DOT_ACCS];
+    let mut p = 0;
+    while p + DOT_BLOCK <= k {
+        for (u, acc) in s.iter_mut().enumerate() {
+            for (l, sl) in acc.iter_mut().enumerate() {
+                *sl = vmax(*sl, y[p + u * DOT_LANES + l]);
+            }
+        }
+        p += DOT_BLOCK;
+    }
+    let mut w = [f32::NEG_INFINITY; DOT_LANES];
+    for (l, wl) in w.iter_mut().enumerate() {
+        *wl = vmax(vmax(s[0][l], s[1][l]), vmax(s[2][l], s[3][l]));
+    }
+    let t0 = vmax(w[0], w[4]);
+    let t1 = vmax(w[1], w[5]);
+    let t2 = vmax(w[2], w[6]);
+    let t3 = vmax(w[3], w[7]);
+    let mut r = vmax(vmax(t0, t2), vmax(t1, t3));
+    while p < k {
+        r = vmax(r, y[p]);
+        p += 1;
+    }
+    r
+}
+
+/// Scalar replay of the pinned row-sum chain: the [`dot_block`] block shape
+/// with lanewise add in place of FMA.
+pub fn row_sum_scalar(y: &[f32]) -> f32 {
+    let k = y.len();
+    let mut s = [[0.0f32; DOT_LANES]; DOT_ACCS];
+    let mut p = 0;
+    while p + DOT_BLOCK <= k {
+        for (u, acc) in s.iter_mut().enumerate() {
+            for (l, sl) in acc.iter_mut().enumerate() {
+                *sl += y[p + u * DOT_LANES + l];
+            }
+        }
+        p += DOT_BLOCK;
+    }
+    let mut w = [0.0f32; DOT_LANES];
+    for (l, wl) in w.iter_mut().enumerate() {
+        *wl = (s[0][l] + s[1][l]) + (s[2][l] + s[3][l]);
+    }
+    let mut r = reduce8(&w);
+    while p < k {
+        r += y[p];
+        p += 1;
+    }
+    r
+}
+
+/// Scalar replay of the pinned f64 sum chain (layernorm mean): 4×4 f64
+/// accumulators over 16-wide blocks, each f32 widened exactly.
+pub fn row_sum_f64_scalar(x: &[f32]) -> f64 {
+    let k = x.len();
+    let mut s = [[0.0f64; SUM64_LANES]; SUM64_ACCS];
+    let mut p = 0;
+    while p + SUM64_BLOCK <= k {
+        for (u, acc) in s.iter_mut().enumerate() {
+            for (l, sl) in acc.iter_mut().enumerate() {
+                *sl += x[p + u * SUM64_LANES + l] as f64;
+            }
+        }
+        p += SUM64_BLOCK;
+    }
+    let mut w = [0.0f64; SUM64_LANES];
+    for (l, wl) in w.iter_mut().enumerate() {
+        *wl = (s[0][l] + s[1][l]) + (s[2][l] + s[3][l]);
+    }
+    let mut r = reduce4(&w);
+    while p < k {
+        r += x[p] as f64;
+        p += 1;
+    }
+    r
+}
+
+/// Scalar replay of the pinned f64 squared-deviation chain (layernorm
+/// variance): per element `d = x − mean` then `fma(d, d, acc)`, same block
+/// shape as [`row_sum_f64_scalar`].
+pub fn row_sumsq_dev_scalar(x: &[f32], mean: f64) -> f64 {
+    let k = x.len();
+    let mut s = [[0.0f64; SUM64_LANES]; SUM64_ACCS];
+    let mut p = 0;
+    while p + SUM64_BLOCK <= k {
+        for (u, acc) in s.iter_mut().enumerate() {
+            for (l, sl) in acc.iter_mut().enumerate() {
+                let d = x[p + u * SUM64_LANES + l] as f64 - mean;
+                *sl = d.mul_add(d, *sl);
+            }
+        }
+        p += SUM64_BLOCK;
+    }
+    let mut w = [0.0f64; SUM64_LANES];
+    for (l, wl) in w.iter_mut().enumerate() {
+        *wl = (s[0][l] + s[1][l]) + (s[2][l] + s[3][l]);
+    }
+    let mut r = reduce4(&w);
+    while p < k {
+        let d = x[p] as f64 - mean;
+        r = d.mul_add(d, r);
+        p += 1;
+    }
+    r
+}
+
+/// The pinned softmax row-max chain, dispatched to the active backend.
+/// Always bitwise equal to [`row_max_scalar`].
+#[inline]
+pub fn row_max(y: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        return unsafe { avx2::row_max(y) };
+    }
+    row_max_scalar(y)
+}
+
+/// The pinned softmax row-sum chain, dispatched to the active backend.
+/// Always bitwise equal to [`row_sum_scalar`].
+#[inline]
+pub fn row_sum(y: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        return unsafe { avx2::row_sum(y) };
+    }
+    row_sum_scalar(y)
+}
+
+/// The pinned f64 sum chain, dispatched. Always bitwise equal to
+/// [`row_sum_f64_scalar`].
+#[inline]
+pub fn row_sum_f64(x: &[f32]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        return unsafe { avx2::row_sum_f64(x) };
+    }
+    row_sum_f64_scalar(x)
+}
+
+/// The pinned f64 squared-deviation chain, dispatched. Always bitwise equal
+/// to [`row_sumsq_dev_scalar`].
+#[inline]
+pub fn row_sumsq_dev(x: &[f32], mean: f64) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        return unsafe { avx2::row_sumsq_dev(x, mean) };
+    }
+    row_sumsq_dev_scalar(x, mean)
+}
+
+/// Vectorized in-place `y[i] /= d` (lanewise IEEE divide — bit-transparent
+/// at any width). Returns false when scalar.
+#[inline]
+pub fn div_row_simd(y: &mut [f32], d: f32) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        unsafe { avx2::div_row(y, d) };
+        return true;
+    }
+    let _ = (y, d);
+    false
+}
+
+/// Vectorized layernorm finish: `x[i] = ((x[i] − mean)·inv as f32)·g[i] +
+/// b[i]` with the subtract/multiply in f64 — lanewise identical to the
+/// scalar expression (cvtpd→ps is the `as f32` rounding). Returns false
+/// when scalar.
+#[inline]
+pub fn norm_finish_simd(x: &mut [f32], mean: f64, inv: f64, g: &[f32], b: &[f32]) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        unsafe { avx2::norm_finish(x, mean, inv, g, b) };
+        return true;
+    }
+    let _ = (x, mean, inv, g, b);
+    false
+}
+
+/// Vectorized elementwise `out[i] = round_to_mantissa(x[i], mu)` (lanewise
+/// RNE bias-add-truncate with NaN/±inf passthrough — bit-transparent).
+/// Returns false when scalar or when μ is outside the vector kernel's
+/// 1..=22 shift range (μ = 0 or 23: the caller's scalar body handles it).
+#[inline]
+pub fn round_row_simd(x: &[f32], mu: u32, out: &mut [f32]) -> bool {
+    debug_assert_eq!(x.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    if (1..=22).contains(&mu) && simd_enabled() {
+        // SAFETY: MODE_SIMD is only set after avx2+fma detection.
+        unsafe { avx2::round_row(x, mu, out) };
+        return true;
+    }
+    let _ = (x, mu, out);
+    false
+}
+
+// --------------------------------------------------------------------------
 // Vectorized per-row kernels (dispatchers return false ⇒ caller runs its
 // scalar body, which is the defining chain)
 // --------------------------------------------------------------------------
@@ -365,7 +615,7 @@ pub fn matvec4_bf16_simd(
 
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
-    use super::{DOT_BLOCK, DOT_LANES};
+    use super::{DOT_BLOCK, DOT_LANES, SUM64_BLOCK, SUM64_LANES};
     use crate::softfloat::dot::dot_ps;
     use std::arch::x86_64::*;
 
@@ -490,6 +740,205 @@ mod avx2 {
             p += 1;
         }
         r
+    }
+
+    /// 8-lane horizontal max implementing exactly the scalar replay's tree
+    /// in [`super::row_max_scalar`]: `t_m = vmax(w[m], w[m+4])`, then
+    /// `vmax(vmax(t0, t2), vmax(t1, t3))`.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hmax8(w: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(w);
+        let hi = _mm256_extractf128_ps::<1>(w);
+        let t = _mm_max_ps(lo, hi); // (t0, t1, t2, t3)
+        let pair = _mm_max_ps(t, _mm_movehl_ps(t, t)); // (vmax(t0,t2), vmax(t1,t3), ..)
+        let one = _mm_max_ss(pair, _mm_shuffle_ps::<0b01>(pair, pair));
+        _mm_cvtss_f32(one)
+    }
+
+    /// 4-lane f64 horizontal sum implementing exactly the [`super::reduce4`]
+    /// tree: `(w[0] + w[2]) + (w[1] + w[3])`.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum4(w: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(w);
+        let hi = _mm256_extractf128_pd::<1>(w);
+        let t = _mm_add_pd(lo, hi); // (w0+w2, w1+w3)
+        _mm_cvtsd_f64(_mm_add_sd(t, _mm_unpackhi_pd(t, t)))
+    }
+
+    /// The pinned softmax row-max chain (see [`super::row_max_scalar`]).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn row_max(y: &[f32]) -> f32 {
+        let k = y.len();
+        let yp = y.as_ptr();
+        let mut s0 = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut s1 = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut s2 = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut s3 = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut p = 0;
+        while p + DOT_BLOCK <= k {
+            s0 = _mm256_max_ps(s0, _mm256_loadu_ps(yp.add(p)));
+            s1 = _mm256_max_ps(s1, _mm256_loadu_ps(yp.add(p + DOT_LANES)));
+            s2 = _mm256_max_ps(s2, _mm256_loadu_ps(yp.add(p + 2 * DOT_LANES)));
+            s3 = _mm256_max_ps(s3, _mm256_loadu_ps(yp.add(p + 3 * DOT_LANES)));
+            p += DOT_BLOCK;
+        }
+        let w = _mm256_max_ps(_mm256_max_ps(s0, s1), _mm256_max_ps(s2, s3));
+        let mut r = hmax8(w);
+        while p < k {
+            r = super::vmax(r, y[p]);
+            p += 1;
+        }
+        r
+    }
+
+    /// The pinned softmax row-sum chain (see [`super::row_sum_scalar`]).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn row_sum(y: &[f32]) -> f32 {
+        let k = y.len();
+        let yp = y.as_ptr();
+        let mut s0 = _mm256_setzero_ps();
+        let mut s1 = _mm256_setzero_ps();
+        let mut s2 = _mm256_setzero_ps();
+        let mut s3 = _mm256_setzero_ps();
+        let mut p = 0;
+        while p + DOT_BLOCK <= k {
+            s0 = _mm256_add_ps(s0, _mm256_loadu_ps(yp.add(p)));
+            s1 = _mm256_add_ps(s1, _mm256_loadu_ps(yp.add(p + DOT_LANES)));
+            s2 = _mm256_add_ps(s2, _mm256_loadu_ps(yp.add(p + 2 * DOT_LANES)));
+            s3 = _mm256_add_ps(s3, _mm256_loadu_ps(yp.add(p + 3 * DOT_LANES)));
+            p += DOT_BLOCK;
+        }
+        let w = _mm256_add_ps(_mm256_add_ps(s0, s1), _mm256_add_ps(s2, s3));
+        let mut r = hsum8(w);
+        while p < k {
+            r += y[p];
+            p += 1;
+        }
+        r
+    }
+
+    /// The pinned f64 sum chain (see [`super::row_sum_f64_scalar`]).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn row_sum_f64(x: &[f32]) -> f64 {
+        let k = x.len();
+        let xp = x.as_ptr();
+        let mut s0 = _mm256_setzero_pd();
+        let mut s1 = _mm256_setzero_pd();
+        let mut s2 = _mm256_setzero_pd();
+        let mut s3 = _mm256_setzero_pd();
+        let mut p = 0;
+        while p + SUM64_BLOCK <= k {
+            s0 = _mm256_add_pd(s0, _mm256_cvtps_pd(_mm_loadu_ps(xp.add(p))));
+            s1 = _mm256_add_pd(s1, _mm256_cvtps_pd(_mm_loadu_ps(xp.add(p + SUM64_LANES))));
+            s2 = _mm256_add_pd(s2, _mm256_cvtps_pd(_mm_loadu_ps(xp.add(p + 2 * SUM64_LANES))));
+            s3 = _mm256_add_pd(s3, _mm256_cvtps_pd(_mm_loadu_ps(xp.add(p + 3 * SUM64_LANES))));
+            p += SUM64_BLOCK;
+        }
+        let w = _mm256_add_pd(_mm256_add_pd(s0, s1), _mm256_add_pd(s2, s3));
+        let mut r = hsum4(w);
+        while p < k {
+            r += x[p] as f64;
+            p += 1;
+        }
+        r
+    }
+
+    /// The pinned f64 squared-deviation chain (see
+    /// [`super::row_sumsq_dev_scalar`]).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn row_sumsq_dev(x: &[f32], mean: f64) -> f64 {
+        let k = x.len();
+        let xp = x.as_ptr();
+        let m = _mm256_set1_pd(mean);
+        let mut s0 = _mm256_setzero_pd();
+        let mut s1 = _mm256_setzero_pd();
+        let mut s2 = _mm256_setzero_pd();
+        let mut s3 = _mm256_setzero_pd();
+        let mut p = 0;
+        while p + SUM64_BLOCK <= k {
+            let d0 = _mm256_sub_pd(_mm256_cvtps_pd(_mm_loadu_ps(xp.add(p))), m);
+            let d1 = _mm256_sub_pd(_mm256_cvtps_pd(_mm_loadu_ps(xp.add(p + SUM64_LANES))), m);
+            let d2 = _mm256_sub_pd(_mm256_cvtps_pd(_mm_loadu_ps(xp.add(p + 2 * SUM64_LANES))), m);
+            let d3 = _mm256_sub_pd(_mm256_cvtps_pd(_mm_loadu_ps(xp.add(p + 3 * SUM64_LANES))), m);
+            s0 = _mm256_fmadd_pd(d0, d0, s0);
+            s1 = _mm256_fmadd_pd(d1, d1, s1);
+            s2 = _mm256_fmadd_pd(d2, d2, s2);
+            s3 = _mm256_fmadd_pd(d3, d3, s3);
+            p += SUM64_BLOCK;
+        }
+        let w = _mm256_add_pd(_mm256_add_pd(s0, s1), _mm256_add_pd(s2, s3));
+        let mut r = hsum4(w);
+        while p < k {
+            let d = x[p] as f64 - mean;
+            r = d.mul_add(d, r);
+            p += 1;
+        }
+        r
+    }
+
+    /// Lanewise in-place divide (bit-transparent).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn div_row(y: &mut [f32], d: f32) {
+        let n = y.len();
+        let yp = y.as_mut_ptr();
+        let dv = _mm256_set1_ps(d);
+        let mut j = 0;
+        while j + 8 <= n {
+            _mm256_storeu_ps(yp.add(j), _mm256_div_ps(_mm256_loadu_ps(yp.add(j)), dv));
+            j += 8;
+        }
+        while j < n {
+            *yp.add(j) /= d;
+            j += 1;
+        }
+    }
+
+    /// Lanewise layernorm finish (bit-transparent): the f64 sub/mul and the
+    /// cvtpd→ps narrowing round exactly as the scalar
+    /// `((x as f64 − mean) · inv) as f32`, then f32 mul+add with g, b.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn norm_finish(x: &mut [f32], mean: f64, inv: f64, g: &[f32], b: &[f32]) {
+        let n = x.len();
+        let xp = x.as_mut_ptr();
+        let mv = _mm256_set1_pd(mean);
+        let iv = _mm256_set1_pd(inv);
+        let mut j = 0;
+        while j + 4 <= n {
+            let xv = _mm256_cvtps_pd(_mm_loadu_ps(xp.add(j)));
+            let t = _mm256_cvtpd_ps(_mm256_mul_pd(_mm256_sub_pd(xv, mv), iv));
+            let r = _mm_add_ps(
+                _mm_mul_ps(t, _mm_loadu_ps(g.as_ptr().add(j))),
+                _mm_loadu_ps(b.as_ptr().add(j)),
+            );
+            _mm_storeu_ps(xp.add(j), r);
+            j += 4;
+        }
+        while j < n {
+            *xp.add(j) = (((*xp.add(j) as f64 - mean) * inv) as f32) * g[j] + b[j];
+            j += 1;
+        }
+    }
+
+    /// Lanewise elementwise round-to-μ-mantissa-bits (bit-transparent; μ in
+    /// 1..=22 — the dispatcher gates the rest to the scalar body).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn round_row(x: &[f32], mu: u32, out: &mut [f32]) {
+        let n = x.len();
+        let shift = (23 - mu) as i32;
+        let cnt = _mm_cvtsi32_si128(shift);
+        let half = _mm256_set1_epi32((1i32 << (shift - 1)) - 1);
+        let mut j = 0;
+        while j + 8 <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(j));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), round8(v, shift, cnt, half));
+            j += 8;
+        }
+        while j < n {
+            out[j] = crate::softfloat::round::round_to_mantissa(x[j], mu);
+            j += 1;
+        }
     }
 
     /// 8 interleaved independent PS(μ) score chains. The key columns are
@@ -929,6 +1378,147 @@ mod tests {
             }
         }
         set_simd_enabled(had);
+    }
+
+    #[test]
+    fn row_reduction_chains_match_scalar_replays_all_tails() {
+        let _g = MODE_LOCK.lock().unwrap();
+        let had = simd_enabled();
+        let mut rng = Rng::new(0x50F7);
+        // Tail classes around the 32/16-wide block and 8/4-wide lane edges.
+        for k in [0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 257] {
+            let y = randvec(&mut rng, k);
+            set_simd_enabled(true);
+            let fmax = row_max(&y);
+            let fsum = row_sum(&y);
+            let fs64 = row_sum_f64(&y);
+            let mean = if k == 0 { 0.0 } else { fs64 / k as f64 };
+            let fdev = row_sumsq_dev(&y, mean);
+            set_simd_enabled(false);
+            assert_eq!(row_max(&y).to_bits(), fmax.to_bits(), "max k={k}");
+            assert_eq!(row_sum(&y).to_bits(), fsum.to_bits(), "sum k={k}");
+            assert_eq!(row_sum_f64(&y).to_bits(), fs64.to_bits(), "sum64 k={k}");
+            assert_eq!(row_sumsq_dev(&y, mean).to_bits(), fdev.to_bits(), "dev k={k}");
+            assert_eq!(row_max_scalar(&y).to_bits(), fmax.to_bits(), "max replay k={k}");
+            assert_eq!(row_sum_scalar(&y).to_bits(), fsum.to_bits(), "sum replay k={k}");
+            assert_eq!(
+                row_sum_f64_scalar(&y).to_bits(),
+                fs64.to_bits(),
+                "sum64 replay k={k}"
+            );
+            assert_eq!(
+                row_sumsq_dev_scalar(&y, mean).to_bits(),
+                fdev.to_bits(),
+                "dev replay k={k}"
+            );
+        }
+        set_simd_enabled(had);
+    }
+
+    #[test]
+    fn elementwise_row_kernels_are_bit_transparent() {
+        let _g = MODE_LOCK.lock().unwrap();
+        let had = simd_enabled();
+        let mut rng = Rng::new(0xE1E);
+        for k in [0usize, 1, 3, 4, 5, 7, 8, 9, 31, 32, 33, 100] {
+            let base = randvec(&mut rng, k);
+            let g = randvec(&mut rng, k);
+            let b = randvec(&mut rng, k);
+            let d = 0.37 + rng.f32();
+            let mean = 0.123f64;
+            let inv = 2.5f64;
+
+            let mut fast = base.clone();
+            let mut slow = base.clone();
+            set_simd_enabled(true);
+            if !div_row_simd(&mut fast, d) {
+                for v in fast.iter_mut() {
+                    *v /= d;
+                }
+            }
+            set_simd_enabled(false);
+            assert!(!div_row_simd(&mut slow, d));
+            for v in slow.iter_mut() {
+                *v /= d;
+            }
+            for j in 0..k {
+                assert_eq!(fast[j].to_bits(), slow[j].to_bits(), "div j={j} k={k}");
+            }
+
+            let mut fast = base.clone();
+            let mut slow = base.clone();
+            set_simd_enabled(true);
+            if !norm_finish_simd(&mut fast, mean, inv, &g, &b) {
+                for j in 0..k {
+                    fast[j] = (((fast[j] as f64 - mean) * inv) as f32) * g[j] + b[j];
+                }
+            }
+            set_simd_enabled(false);
+            assert!(!norm_finish_simd(&mut slow, mean, inv, &g, &b));
+            for j in 0..k {
+                slow[j] = (((slow[j] as f64 - mean) * inv) as f32) * g[j] + b[j];
+            }
+            for j in 0..k {
+                assert_eq!(fast[j].to_bits(), slow[j].to_bits(), "norm j={j} k={k}");
+            }
+
+            // Round with specials poked in so the passthrough blend runs.
+            let mut src = base.clone();
+            if k > 2 {
+                src[1] = f32::INFINITY;
+                src[2] = f32::NAN;
+            }
+            let scalar_round = |s: &[f32], mu: u32, o: &mut [f32]| {
+                for (oj, &v) in o.iter_mut().zip(s) {
+                    *oj = crate::softfloat::round::round_to_mantissa(v, mu);
+                }
+            };
+            for mu in [1u32, 4, 11, 22, 23] {
+                let mut fast = vec![0.0f32; k];
+                let mut slow = vec![0.0f32; k];
+                set_simd_enabled(true);
+                if !round_row_simd(&src, mu, &mut fast) {
+                    scalar_round(&src, mu, &mut fast);
+                }
+                set_simd_enabled(false);
+                assert!(!round_row_simd(&src, mu, &mut slow));
+                scalar_round(&src, mu, &mut slow);
+                for j in 0..k {
+                    assert_eq!(
+                        fast[j].to_bits(),
+                        slow[j].to_bits(),
+                        "round j={j} k={k} mu={mu}"
+                    );
+                }
+            }
+        }
+        set_simd_enabled(had);
+    }
+
+    #[test]
+    fn row_sum_scalar_replay_is_blocked_not_sequential() {
+        // Pin the chain shape: a 32-element block reduces as lanewise
+        // accumulator pairs then the fixed 8-lane tree, not left-to-right.
+        let mut y = vec![0.0f32; 32];
+        y[0] = 1.0e8;
+        y[1] = 1.0;
+        y[8] = -1.0e8;
+        // Chain: w[0] = (1e8 + (-1e8)) + 0 = 0, w[1] = 1 → tree sums to 1.
+        assert_eq!(row_sum_scalar(&y), 1.0);
+        // A sequential left-to-right sum would have absorbed the 1.0:
+        let seq: f32 = y.iter().sum();
+        assert_eq!(seq, 0.0);
+    }
+
+    #[test]
+    fn row_max_replay_uses_avx_tie_semantics() {
+        // vmax picks the second operand on ties — including −0.0 vs +0.0 —
+        // and on NaN (so a NaN is *replaced* by the next element, unlike
+        // f32::max which keeps the numeric operand).
+        let y = [-0.0f32, 0.0, -1.0];
+        assert_eq!(row_max_scalar(&y).to_bits(), 0.0f32.to_bits());
+        let poisoned = [1.0f32, f32::NAN, 3.0];
+        assert_eq!(row_max_scalar(&poisoned), 3.0);
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //!     [--mlp-mu 7 --mlp-tau 0.5] [--norm-mu 10 --norm-tau 1.0] \
 //!     [--logits-mu 7 --logits-tau 0.05 --logits-rule relaxed] \
 //!     [--weights-fmt f32|bf16|ps<mu>]
-//! lamp generate --model nano [--kv-fmt bf16 --kv-tau 0.01] ...
+//! lamp generate --model nano [--kv-fmt bf16 --kv-tau 0.01] \
+//!     [--spec-k 4 --spec-draft 2] ...
 //! ```
 //!
 //! The `--mlp-*`/`--norm-*`/`--logits-*` options activate the non-attention
@@ -29,7 +30,7 @@ use lamp::cli::{ArgSpec, Args, Command};
 use lamp::coordinator::{
     DegradationLadder, Engine, FaultInjector, FaultPlan, GenerateRequest, InferenceRequest,
     KvCacheOptions, NativeEngine, PjrtEngine, PrecisionPolicy, Rule, SchedulerOptions, Server,
-    SitePolicy, WeightFormat,
+    SitePolicy, SpecPolicy, WeightFormat,
 };
 use lamp::data::{Dataset, Domain};
 use lamp::experiments::{self, EvalOptions};
@@ -95,6 +96,8 @@ fn cli() -> Command {
                     "degrade",
                     "enable the precision degradation ladder under pool pressure",
                 ))
+                .arg(spec_k_arg())
+                .arg(spec_draft_arg())
                 .arg(ArgSpec::opt("seed", "workload seed", "1")),
         )
         .subcommand(
@@ -124,6 +127,8 @@ fn cli() -> Command {
                 .arg(ArgSpec::opt("new-tokens", "tokens to generate", "16"))
                 .arg(ArgSpec::opt("topk", "0 = greedy, else top-k sampling", "0"))
                 .arg(ArgSpec::opt("temperature", "sampling temperature", "1.0"))
+                .arg(spec_k_arg())
+                .arg(spec_draft_arg())
                 .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts"))
                 .arg(ArgSpec::opt("seed", "seed", "0")),
         ))
@@ -219,6 +224,52 @@ fn site_args(mut cmd: Command) -> Command {
             ));
     }
     cmd
+}
+
+/// The speculative-decoding options shared by `generate` and `serve`.
+fn spec_k_arg() -> ArgSpec {
+    ArgSpec::opt("spec-k", "speculative look-ahead draft length (0 = off)", "0")
+}
+
+fn spec_draft_arg() -> ArgSpec {
+    ArgSpec::opt(
+        "spec-draft",
+        "draft plan for every site: mu[:tau[:rule]] (e.g. 2, or 3:0.2:strict)",
+        "2",
+    )
+}
+
+/// Parse `--spec-k`/`--spec-draft` into an optional speculative policy.
+/// The draft spec is `mu[:tau[:rule]]`; omitted parts default to uniform
+/// PS(μ) (τ=inf, strict), the cheapest plan at that mantissa width.
+fn spec_policy(args: &Args) -> lamp::Result<Option<SpecPolicy>> {
+    let k = args.get_usize("spec-k")?;
+    if k == 0 {
+        return Ok(None);
+    }
+    let spec = args.get_str("spec-draft")?;
+    let mut parts = spec.split(':');
+    let mu: u32 = parts
+        .next()
+        .unwrap_or("")
+        .parse()
+        .map_err(|_| lamp::Error::config(format!("--spec-draft: bad mu in {spec:?}")))?;
+    let tau: f32 = match parts.next() {
+        None => f32::INFINITY,
+        Some(t) => t
+            .parse()
+            .map_err(|_| lamp::Error::config(format!("--spec-draft: bad tau in {spec:?}")))?,
+    };
+    let rule = match parts.next() {
+        None => Rule::Strict,
+        Some(r) => Rule::by_name(r)?,
+    };
+    if parts.next().is_some() {
+        return Err(lamp::Error::config(format!(
+            "--spec-draft: expected mu[:tau[:rule]], got {spec:?}"
+        )));
+    }
+    Ok(Some(SpecPolicy::whole_model(SitePolicy { mu, tau, rule }, k)))
 }
 
 /// Parse the `--weights-fmt` storage format.
@@ -398,11 +449,15 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
     let gen_requests = args.get_usize("gen-requests")?;
     let gen_tokens = args.get_usize("gen-tokens")?;
     if gen_requests > 0 && backend == "native" {
+        // Speculation applies to the decode path only (the batch path has
+        // no autoregressive loop to speculate over).
+        let gen_policy = policy.with_spec(spec_policy(args)?);
+        gen_policy.validate()?;
         let prompt_len = (cfg.seq / 4).max(1);
         let prompts =
             Dataset::generate(domain, cfg.vocab, gen_requests, prompt_len, 7, seed ^ 0x5eed);
         for (i, p) in prompts.sequences.into_iter().enumerate() {
-            let mut req = GenerateRequest::new((n + i) as u64, p, gen_tokens, policy);
+            let mut req = GenerateRequest::new((n + i) as u64, p, gen_tokens, gen_policy);
             if deadline_ms > 0 {
                 req = req.with_deadline(std::time::Duration::from_millis(deadline_ms));
             }
@@ -493,6 +548,22 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
                 stats.faults_injected.to_string(),
             ]);
         }
+        if stats.spec_rounds > 0 {
+            t.row(vec![
+                "spec acceptance".into(),
+                format!(
+                    "{}/{} drafts ({:.1}%) over {} rounds",
+                    stats.spec_accepted,
+                    stats.spec_drafted,
+                    100.0 * stats.spec_acceptance_rate,
+                    stats.spec_rounds
+                ),
+            ]);
+            t.row(vec![
+                "spec tokens/round".into(),
+                format!("{:.2}", stats.spec_mean_accept_len),
+            ]);
+        }
         if degrade {
             t.row(vec![
                 "degrade/restore transitions".into(),
@@ -549,7 +620,8 @@ fn cmd_generate(args: &Args) -> lamp::Result<()> {
     kv_opts.sharing = false;
     let engine = engine.with_kv_cache(kv_opts)?;
     let cfg = engine.config().clone();
-    let policy = plan_policy(args)?;
+    let policy = plan_policy(args)?.with_spec(spec_policy(args)?);
+    policy.validate()?;
     let seed = args.get_u64("seed")?;
     let k = args.get_usize("topk")?;
     let decode = if k == 0 {
@@ -579,6 +651,17 @@ fn cmd_generate(args: &Args) -> lamp::Result<()> {
     println!("  continuation: {:?}", &tokens[prompt.len()..]);
     for (site, rate) in stats.site_rates() {
         println!("  recompute rate [{site}]: {:.4}%", 100.0 * rate);
+    }
+    if stats.spec.rounds > 0 {
+        println!(
+            "  speculation: {} rounds, {}/{} drafts accepted ({:.1}%), \
+             {:.2} tokens/round",
+            stats.spec.rounds,
+            stats.spec.accepted,
+            stats.spec.drafted,
+            100.0 * stats.spec.acceptance_rate(),
+            stats.spec.mean_accept_len()
+        );
     }
     println!(
         "  kv cache: {} bytes resident, {:.3}% rows pinned f32 (repair tau {})",
@@ -694,11 +777,26 @@ fn cmd_trials_list() -> lamp::Result<()> {
     );
     for (name, text) in lamp::trials::BUILTIN {
         let m = lamp::trials::TrialManifest::parse(text)?;
+        // Figure trials replay a paper-figure computation, not a trace;
+        // show the driver and sweep size in the workload columns.
+        let (workload, requests, policy) = match (&m.trace, &m.figure) {
+            (Some(trace), _) => (
+                trace.kind.name().to_string(),
+                trace.requests.to_string(),
+                m.policy_label.clone(),
+            ),
+            (None, Some(fig)) => (
+                format!("figure:{}", fig.exp),
+                format!("{} mu", fig.mu_grid.len()),
+                format!("tau={} ladder", fig.tau),
+            ),
+            (None, None) => unreachable!("manifest build guarantees trace xor figure"),
+        };
         t.row(vec![
             name.to_string(),
-            m.trace.kind.name().to_string(),
-            m.trace.requests.to_string(),
-            m.policy_label.clone(),
+            workload,
+            requests,
+            policy,
             m.kv_format.map_or_else(|| "off".to_string(), |f| f.label()),
             m.fault_label.clone(),
         ]);

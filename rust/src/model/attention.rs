@@ -139,6 +139,86 @@ impl RowLamp {
     }
 }
 
+/// Self-speculative decoding accounting (DESIGN.md §Speculative
+/// decoding): how much look-ahead work the draft plan did and how much of
+/// it the batched target-plan verification accepted. These counters live
+/// *next to* the compute counters, never inside them — the compute fields
+/// of a speculative session's stats stay bit-identical to the solo
+/// non-speculative decode (only verified-and-committed rows are merged),
+/// so parity suites compare compute fields while throughput dashboards
+/// read these.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Speculation rounds completed (one batched verify each).
+    pub rounds: usize,
+    /// Draft tokens proposed across all rounds (the round's base token is
+    /// not a draft and is not counted).
+    pub drafted: usize,
+    /// Draft tokens accepted by verification.
+    pub accepted: usize,
+    /// Draft forward steps executed under the draft plan.
+    pub draft_steps: usize,
+    /// Batched target-plan verify passes executed.
+    pub verify_chunks: usize,
+    /// Acceptance-length histogram: `accept_hist[i]` counts rounds that
+    /// emitted `i + 1` tokens (the base token, the accepted drafts, plus
+    /// the bonus token when every draft matched).
+    pub accept_hist: Vec<usize>,
+}
+
+impl SpecStats {
+    /// Fraction of drafted tokens the verifier accepted (0 when nothing
+    /// was drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Mean tokens emitted per speculation round (0 without rounds).
+    pub fn mean_accept_len(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        let emitted: usize =
+            self.accept_hist.iter().enumerate().map(|(i, &c)| (i + 1) * c).sum();
+        emitted as f64 / self.rounds as f64
+    }
+
+    /// Account one completed round: `drafted` look-ahead tokens proposed,
+    /// `accepted` of them verified, `emitted` tokens produced (base +
+    /// accepted + possible bonus).
+    pub fn record_round(&mut self, drafted: usize, accepted: usize, emitted: usize) {
+        debug_assert!(emitted >= 1 && accepted <= drafted);
+        self.rounds += 1;
+        self.drafted += drafted;
+        self.accepted += accepted;
+        self.draft_steps += drafted;
+        self.verify_chunks += 1;
+        if self.accept_hist.len() < emitted {
+            self.accept_hist.resize(emitted, 0);
+        }
+        self.accept_hist[emitted - 1] += 1;
+    }
+
+    /// Merge another session's speculation counters.
+    pub fn merge(&mut self, other: &SpecStats) {
+        self.rounds += other.rounds;
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.draft_steps += other.draft_steps;
+        self.verify_chunks += other.verify_chunks;
+        if self.accept_hist.len() < other.accept_hist.len() {
+            self.accept_hist.resize(other.accept_hist.len(), 0);
+        }
+        for (i, &c) in other.accept_hist.iter().enumerate() {
+            self.accept_hist[i] += c;
+        }
+    }
+}
+
 /// Recomputation statistics accumulated over a forward pass, per
 /// composition site. The attention counters keep their historical flat
 /// names (`recomputed`/`causal_total`/`per_layer`); the sites added by the
@@ -161,6 +241,11 @@ pub struct LampStats {
     /// Attention tile counters: tiles recomputed exactly / tiles evaluated
     /// (populated only when a tile rule is active on the attention site).
     pub tiles: SiteStats,
+    /// Speculative-decoding acceptance counters (zero unless the plan
+    /// carries a [`SpecConfig`](super::plan::SpecConfig)). Kept separate
+    /// from the compute counters so speculative sessions stay comparable
+    /// to solo decode field-for-field.
+    pub spec: SpecStats,
 }
 
 impl LampStats {
@@ -200,6 +285,7 @@ impl LampStats {
         self.norm.merge(&other.norm);
         self.sampler.merge(&other.sampler);
         self.tiles.merge(&other.tiles);
+        self.spec.merge(&other.spec);
     }
 
     /// Account one incremental attention row (KV-cache decode): `n_keys`

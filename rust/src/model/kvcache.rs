@@ -59,10 +59,12 @@
 //! [`kvstore`]: super::kvstore
 //! [`kvstore::KvStore`]: super::kvstore::KvStore
 
-use super::attention::{row_stream_seed, LampStats, RowLamp};
+use super::attention::{row_stream_seed, LampStats, RowLamp, SpecStats};
 use super::config::ModelConfig;
 use super::forward::layer_seed;
-use super::kvstore::{chain_root, lamp_attention_row_kv, KvBlockPool, PagedKvCache};
+use super::kvstore::{
+    chain_root, lamp_attention_row_kv, KvBlockPool, KvCheckpoint, PagedKvCache,
+};
 use super::layernorm::{layernorm, LN_EPS};
 use super::mlp::mlp_row_into;
 use super::plan::{
@@ -72,6 +74,7 @@ use super::plan::{
 use super::weights::Weights;
 use crate::error::{Error, Result};
 use crate::linalg::matmul::matvec_bias_into_wt;
+use crate::util::ThreadPool;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -134,6 +137,22 @@ pub struct DecodeSession<'w> {
     gather: Vec<f32>,
     normq: Vec<f32>,
     logits: Vec<f32>,
+    /// Stats of the *draft* passes of speculative rounds (throwaway
+    /// look-ahead work under the draft plan). Kept apart from `stats` so
+    /// a speculative session's compute counters remain field-for-field
+    /// comparable to solo non-speculative decode.
+    draft_stats: LampStats,
+    /// Logits of the last [`Self::verify_chunk`], row-major `[m, vocab]`.
+    chunk_logits: Vec<f32>,
+    /// Per-row target-plan stats of the last [`Self::verify_chunk`];
+    /// `commit_round` merges the accepted rows into `stats` and drops the
+    /// rest (solo decode would never have computed them).
+    chunk_stats: Vec<LampStats>,
+    /// Reusable per-row working state for the batched verify.
+    spec_rows: Vec<SpecRow>,
+    /// Optional worker pool for the batched verify fan-out; `None` (or a
+    /// 1-thread pool) runs the sequential path, which is bit-identical.
+    threads: Option<Arc<ThreadPool>>,
     /// Fault-injection hook (installed by `coordinator::faults`); `None`
     /// on real sessions. Survives `reset`/`reseat` — a recycled slot
     /// still belongs to the injector-wrapped engine that opened it.
@@ -197,6 +216,11 @@ impl<'w> DecodeSession<'w> {
             gather: Vec::new(),
             normq: Vec::with_capacity(d),
             logits: vec![0.0; cfg.vocab],
+            draft_stats: LampStats::default(),
+            chunk_logits: Vec::new(),
+            chunk_stats: Vec::new(),
+            spec_rows: Vec::new(),
+            threads: None,
             faults: None,
             poisoned: None,
             fault_pos: 0,
@@ -209,6 +233,27 @@ impl<'w> DecodeSession<'w> {
     /// seeded hook on every session it opens.
     pub fn set_faults(&mut self, faults: Option<Arc<dyn StepFaults>>) {
         self.faults = faults;
+    }
+
+    /// Wire a worker pool into the batched speculative verify
+    /// ([`Self::verify_chunk`] fans the candidate rows across it).
+    /// Bit-identical to running without one: each row's computation is
+    /// row-local and its RNG streams are keyed by position.
+    pub fn set_threads(&mut self, threads: Option<Arc<ThreadPool>>) {
+        self.threads = threads;
+    }
+
+    /// The session's effective precision plan (the *target* plan when the
+    /// plan carries a speculative [`SpecConfig`](super::plan::SpecConfig)).
+    pub fn plan(&self) -> &PrecisionPlan {
+        &self.plan
+    }
+
+    /// Stats of speculative *draft* passes (look-ahead work under the
+    /// draft plan, later re-verified or discarded). Always zero on
+    /// non-speculative sessions; never mixed into [`Self::stats`].
+    pub fn draft_stats(&self) -> &LampStats {
+        &self.draft_stats
     }
 
     /// Model configuration.
@@ -274,6 +319,8 @@ impl<'w> DecodeSession<'w> {
             per_layer: vec![0; self.weights.config.layers],
             ..LampStats::default()
         };
+        self.draft_stats = LampStats::default();
+        self.chunk_stats.clear();
         self.logits.iter_mut().for_each(|l| *l = 0.0);
     }
 
@@ -359,11 +406,38 @@ impl<'w> DecodeSession<'w> {
                 }
             }
         }
-        let cfg = &self.weights.config;
+        self.step_with(token, self.plan, false)
+    }
+
+    /// Route a step's stats to the committed or the draft accumulator.
+    #[inline]
+    fn sink(&mut self, draft: bool) -> &mut LampStats {
+        if draft {
+            &mut self.draft_stats
+        } else {
+            &mut self.stats
+        }
+    }
+
+    /// The decode-step compute body, shared by the committed path
+    /// ([`Self::decode_step`]: target plan, counters into
+    /// [`Self::stats`]) and the speculative draft path
+    /// ([`Self::draft_step`]: draft plan, counters into
+    /// [`Self::draft_stats`]). Same kernels, same position-keyed seeds
+    /// either way — a draft step differs only in the plan it runs and
+    /// where its counters land. Draft steps skip the fault hook on
+    /// purpose: verdicts are pure functions of `(seed, pos, attempt)`
+    /// and the *verify* pass consults them for the same positions, so a
+    /// draft consult would double-count delays without adding coverage.
+    fn step_with(&mut self, token: u32, plan: PrecisionPlan, draft: bool) -> Result<()> {
+        let weights = self.weights;
+        let cfg = &weights.config;
         let d = cfg.d_model;
         let heads = cfg.heads;
         let hd = d / heads;
         let scale = 1.0 / (hd as f32).sqrt();
+        let d_ff = cfg.d_ff();
+        let vocab = cfg.vocab;
         let i = self.pos;
         if i >= cfg.seq {
             return Err(Error::shape(format!(
@@ -371,37 +445,34 @@ impl<'w> DecodeSession<'w> {
                 cfg.seq
             )));
         }
-        if token as usize >= cfg.vocab {
-            return Err(Error::shape(format!(
-                "token {token} >= vocab {}",
-                cfg.vocab
-            )));
+        if token as usize >= vocab {
+            return Err(Error::shape(format!("token {token} >= vocab {vocab}")));
         }
         // Same storage front doors as `forward` — a session constructed
         // around a storage-pinned plan on a mismatched engine must not
         // silently decode (DecodeSession::new/reseat cannot return Err,
         // so the gates live with the other per-step input checks).
-        if !self.plan.weights.accepts(self.weights.weight_format()) {
+        if !plan.weights.accepts(weights.weight_format()) {
             return Err(Error::config(format!(
                 "plan requires {} weight storage, engine holds {}",
-                self.plan.weights.label(),
-                self.weights.weight_format().label()
+                plan.weights.label(),
+                weights.weight_format().label()
             )));
         }
-        if !self.plan.kv.accepts(self.kv.pool().format()) {
+        if !plan.kv.accepts(self.kv.pool().format()) {
             return Err(Error::config(format!(
                 "plan requires {} KV-cache storage, pool holds {}",
-                self.plan.kv.label(),
+                plan.kv.label(),
                 self.kv.pool().format().label()
             )));
         }
 
         // Embedding row: wte[token] + wpe[i], dequantized from storage
         // (exact; same single f32 add per element as the full pass).
-        self.weights.wte.copy_row_into(token as usize, &mut self.x);
-        self.weights.wpe.add_row_into(i, &mut self.x);
+        weights.wte.copy_row_into(token as usize, &mut self.x);
+        weights.wpe.add_row_into(i, &mut self.x);
 
-        for (l, blk) in self.weights.blocks.iter().enumerate() {
+        for (l, blk) in weights.blocks.iter().enumerate() {
             // --- Attention sublayer (pre-LN), one row. ---
             self.xn.copy_from_slice(&self.x);
             layernorm(&mut self.xn, &blk.ln1_g, &blk.ln1_b, LN_EPS);
@@ -422,14 +493,14 @@ impl<'w> DecodeSession<'w> {
                     off,
                     i + 1,
                     scale,
-                    self.plan.attention,
+                    plan.attention,
                     row_stream_seed(lseed, h, i),
                     &mut self.scores,
                     &mut self.gather,
                     &mut self.attn[off..off + hd],
                 ));
             }
-            self.stats.add_row(l, heads * (i + 1), row_lamp);
+            self.sink(draft).add_row(l, heads * (i + 1), row_lamp);
             // Output projection + residual.
             matvec_bias_into_wt(&self.attn, &blk.w_proj, &blk.b_proj, &mut self.proj);
             for c in 0..d {
@@ -446,44 +517,427 @@ impl<'w> DecodeSession<'w> {
                 &blk.b_fc,
                 &blk.w_out,
                 &blk.b_out,
-                self.plan.mlp,
+                plan.mlp,
                 site_row_seed(lseed, SITE_MLP, i),
                 &mut self.hidden,
                 &mut self.mlp,
             );
-            self.stats.mlp.recomputed += mlp_recomputed;
-            self.stats.mlp.total += cfg.d_ff();
+            let sink = self.sink(draft);
+            sink.mlp.recomputed += mlp_recomputed;
+            sink.mlp.total += d_ff;
             for c in 0..d {
                 self.x[c] += self.mlp[c];
             }
         }
         // Every layer's rows are stored: fold the token into the share
-        // chain and publish the tail block if it just filled.
+        // chain and publish the tail block if it just filled (drafts run
+        // the cache in scratch mode, which suppresses publication).
         self.kv.complete_position(token, i);
 
         // Final-norm site (no-op at reference), then the final LN.
-        if !self.plan.norm.is_reference() {
-            self.stats.norm.recomputed += norm_site_row(
+        if !plan.norm.is_reference() {
+            let norm_recomputed = norm_site_row(
                 &mut self.x,
-                self.plan.norm,
+                plan.norm,
                 site_row_seed(self.seed, SITE_NORM, i),
                 &mut self.normq,
             );
+            self.sink(draft).norm.recomputed += norm_recomputed;
         }
-        self.stats.norm.total += d;
-        layernorm(&mut self.x, &self.weights.lnf_g, &self.weights.lnf_b, LN_EPS);
+        self.sink(draft).norm.total += d;
+        layernorm(&mut self.x, &weights.lnf_g, &weights.lnf_b, LN_EPS);
 
         // Sampler site + tied unembedding row.
-        self.stats.sampler.recomputed += logits_row_site(
+        let sampler_recomputed = logits_row_site(
             &self.x,
-            &self.weights.wte,
-            self.plan.sampler,
+            &weights.wte,
+            plan.sampler,
             site_row_seed(self.seed, SITE_SAMPLER, i),
             &mut self.logits,
         );
-        self.stats.sampler.total += cfg.vocab;
+        let sink = self.sink(draft);
+        sink.sampler.recomputed += sampler_recomputed;
+        sink.sampler.total += vocab;
         self.pos = i + 1;
         Ok(())
+    }
+
+    // ---- Speculative decoding (DESIGN.md §Speculative decoding) ----
+    //
+    // One round: `spec_checkpoint` → `begin_draft` + k×`draft_step`
+    // (scratch KV, draft plan) → `rollback` → `verify_chunk` (batched
+    // target-plan forward over the candidates, staged KV) →
+    // `commit_round` (accepted prefix) — leaving the session bit-identical
+    // to having fed the accepted tokens through `decode_step` one by one.
+
+    /// Snapshot the cache state at a round boundary (no staged rows).
+    pub(crate) fn spec_checkpoint(&self) -> KvCheckpoint {
+        self.kv.checkpoint()
+    }
+
+    /// Enter draft mode: subsequent appends run against a *scratch* KV
+    /// extension — completed positions are never published to the pool's
+    /// prefix-share index, so a later rollback cannot leave phantom
+    /// entries behind.
+    pub(crate) fn begin_draft(&mut self) {
+        self.kv.set_scratch(true);
+    }
+
+    /// One look-ahead step under the (strictly cheaper) draft plan. The
+    /// resulting logits approximate the target plan's; stats land in
+    /// [`Self::draft_stats`]. No fault hook (see [`Self::step_with`]).
+    pub(crate) fn draft_step(&mut self, token: u32, draft_plan: PrecisionPlan) -> Result<()> {
+        self.step_with(token, draft_plan, true)
+    }
+
+    /// Discard everything after `cp` — the draft extension (any depth,
+    /// even partially appended after a failed step) is truncated, its
+    /// blocks return to the pool, and the session is bitwise back at the
+    /// checkpoint.
+    pub(crate) fn rollback(&mut self, cp: &KvCheckpoint) {
+        self.kv.set_scratch(false);
+        self.kv.truncate_to(cp);
+        self.pos = cp.len();
+    }
+
+    /// Verify `cands` (the round's unfed base token plus the drafts) in
+    /// one batched forward under the **target** plan: all rows' K/V are
+    /// staged into the cache, every row's logits and stats are computed
+    /// with the exact position-keyed kernels and seeds of
+    /// [`Self::decode_step`], and nothing is committed — the caller walks
+    /// the rows ([`Self::chunk_logits_row`]) and then calls
+    /// [`Self::commit_round`] with the accepted prefix. On error the
+    /// staged rows are released and the session is unchanged.
+    ///
+    /// With a worker pool installed ([`Self::set_threads`]) the rows fan
+    /// out in parallel; each row only reads shared immutable state
+    /// (weights, committed + previously staged K/V) and writes its own
+    /// [`SpecRow`], so the parallel and sequential paths are
+    /// bit-identical by construction.
+    pub(crate) fn verify_chunk(&mut self, cands: &[u32]) -> Result<()> {
+        if let Some(msg) = &self.poisoned {
+            return Err(Error::runtime(format!("session poisoned: {msg}")));
+        }
+        if let Some(hook) = &self.faults {
+            let hook = Arc::clone(hook);
+            // Consult the hook for every candidate position up front, in
+            // position order, before any state changes — the batched
+            // analogue of decode_step's front door. Verdicts are pure
+            // functions of (seed, pos, attempt), so a retry after a
+            // `Fail` replays the same decision stream solo decode sees.
+            for j in 0..cands.len() {
+                let pos = self.pos + j;
+                let attempt = if self.fault_pos == pos { self.fault_attempts } else { 0 };
+                match hook.check(self.seed, pos, attempt) {
+                    StepFaultVerdict::Proceed => {}
+                    StepFaultVerdict::Delay(d) => std::thread::sleep(d),
+                    StepFaultVerdict::Fail(e) => {
+                        self.fault_pos = pos;
+                        self.fault_attempts = attempt + 1;
+                        return Err(e);
+                    }
+                    StepFaultVerdict::Poison(msg) => {
+                        let err = Error::runtime(format!("session poisoned: {msg}"));
+                        self.poisoned = Some(msg);
+                        return Err(err);
+                    }
+                }
+            }
+            self.fault_pos = self.pos;
+            self.fault_attempts = 0;
+        }
+        let mut rows = std::mem::take(&mut self.spec_rows);
+        let result = self.verify_rows(cands, &mut rows);
+        self.spec_rows = rows;
+        if result.is_err() {
+            self.kv.discard_staged();
+        }
+        result
+    }
+
+    /// The compute body of [`Self::verify_chunk`], with the row buffers
+    /// moved out of `self` so the fan-out can borrow the cache and the
+    /// rows independently.
+    fn verify_rows(&mut self, cands: &[u32], rows: &mut Vec<SpecRow>) -> Result<()> {
+        let weights = self.weights;
+        let cfg = &weights.config;
+        let d = cfg.d_model;
+        let heads = cfg.heads;
+        let hd = d / heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let d_ff = cfg.d_ff();
+        let vocab = cfg.vocab;
+        let layers = cfg.layers;
+        let m = cands.len();
+        let n = self.pos;
+        if m == 0 {
+            return Err(Error::invariant("verify_chunk: empty candidate chunk".to_string()));
+        }
+        if n + m > cfg.seq {
+            return Err(Error::shape(format!(
+                "verify_chunk: {m} candidates at position {n} exceed context {}",
+                cfg.seq
+            )));
+        }
+        for &t in cands {
+            if t as usize >= vocab {
+                return Err(Error::shape(format!("token {t} >= vocab {vocab}")));
+            }
+        }
+        if !self.plan.weights.accepts(weights.weight_format()) {
+            return Err(Error::config(format!(
+                "plan requires {} weight storage, engine holds {}",
+                self.plan.weights.label(),
+                weights.weight_format().label()
+            )));
+        }
+        if !self.plan.kv.accepts(self.kv.pool().format()) {
+            return Err(Error::config(format!(
+                "plan requires {} KV-cache storage, pool holds {}",
+                self.plan.kv.label(),
+                self.kv.pool().format().label()
+            )));
+        }
+        while rows.len() < m {
+            rows.push(SpecRow::new(cfg));
+        }
+        let rows = &mut rows[..m];
+        let plan = self.plan;
+        let seed = self.seed;
+        let threads = self.threads.clone();
+        let threads = threads.as_deref();
+
+        // Embedding rows (sequential: trivial cost next to a layer).
+        for (j, row) in rows.iter_mut().enumerate() {
+            row.stats = LampStats {
+                recomputed: 0,
+                causal_total: 0,
+                per_layer: vec![0; layers],
+                ..LampStats::default()
+            };
+            weights.wte.copy_row_into(cands[j] as usize, &mut row.x);
+            weights.wpe.add_row_into(n + j, &mut row.x);
+        }
+
+        for (l, blk) in weights.blocks.iter().enumerate() {
+            let lseed = layer_seed(seed, l);
+            // Pre-LN + QKV projection: row-local, fan out.
+            run_rows(threads, rows, |_, row| {
+                row.xn.copy_from_slice(&row.x);
+                layernorm(&mut row.xn, &blk.ln1_g, &blk.ln1_b, LN_EPS);
+                matvec_bias_into_wt(&row.xn, &blk.w_qkv, &blk.b_qkv, &mut row.qkv);
+            });
+            // Stage all m K/V rows of this layer (sequential: one shared
+            // cache; the rows stay uncommitted until `commit_round`).
+            for (j, row) in rows.iter_mut().enumerate() {
+                let (_, kv_row) = row.qkv.split_at(d);
+                let (k_row, v_row) = kv_row.split_at(d);
+                self.kv.append_row(l, n + j, k_row, v_row)?;
+            }
+            // Attention + projection + residual + MLP: row-local once the
+            // keys are staged. Row j attends to committed rows 0..n plus
+            // staged rows n..=n+j — exactly the causal window solo decode
+            // at position n+j would see.
+            let kv = &self.kv;
+            run_rows(threads, rows, |j, row| {
+                let i = n + j;
+                let (q_row, _) = row.qkv.split_at(d);
+                let mut row_lamp = RowLamp::default();
+                for h in 0..heads {
+                    let off = h * hd;
+                    row_lamp.merge(lamp_attention_row_kv(
+                        &q_row[off..off + hd],
+                        kv,
+                        l,
+                        off,
+                        i + 1,
+                        scale,
+                        plan.attention,
+                        row_stream_seed(lseed, h, i),
+                        &mut row.scores,
+                        &mut row.gather,
+                        &mut row.attn[off..off + hd],
+                    ));
+                }
+                row.stats.add_row(l, heads * (i + 1), row_lamp);
+                matvec_bias_into_wt(&row.attn, &blk.w_proj, &blk.b_proj, &mut row.proj);
+                for c in 0..d {
+                    row.x[c] += row.proj[c];
+                }
+                row.xn.copy_from_slice(&row.x);
+                layernorm(&mut row.xn, &blk.ln2_g, &blk.ln2_b, LN_EPS);
+                let mlp_recomputed = mlp_row_into(
+                    &row.xn,
+                    &blk.w_fc,
+                    &blk.b_fc,
+                    &blk.w_out,
+                    &blk.b_out,
+                    plan.mlp,
+                    site_row_seed(lseed, SITE_MLP, i),
+                    &mut row.hidden,
+                    &mut row.mlp,
+                );
+                row.stats.mlp.recomputed += mlp_recomputed;
+                row.stats.mlp.total += d_ff;
+                for c in 0..d {
+                    row.x[c] += row.mlp[c];
+                }
+            });
+        }
+
+        // Final-norm site, final LN, sampler site — row-local.
+        run_rows(threads, rows, |j, row| {
+            let i = n + j;
+            if !plan.norm.is_reference() {
+                row.stats.norm.recomputed += norm_site_row(
+                    &mut row.x,
+                    plan.norm,
+                    site_row_seed(seed, SITE_NORM, i),
+                    &mut row.normq,
+                );
+            }
+            row.stats.norm.total += d;
+            layernorm(&mut row.x, &weights.lnf_g, &weights.lnf_b, LN_EPS);
+            row.stats.sampler.recomputed += logits_row_site(
+                &row.x,
+                &weights.wte,
+                plan.sampler,
+                site_row_seed(seed, SITE_SAMPLER, i),
+                &mut row.logits,
+            );
+            row.stats.sampler.total += vocab;
+        });
+
+        // Publish the per-row outputs for the acceptance walk.
+        self.chunk_logits.resize(m * vocab, 0.0);
+        self.chunk_stats.clear();
+        for (j, row) in rows.iter_mut().enumerate() {
+            self.chunk_logits[j * vocab..(j + 1) * vocab].copy_from_slice(&row.logits);
+            self.chunk_stats.push(std::mem::take(&mut row.stats));
+        }
+        Ok(())
+    }
+
+    /// Logits row `j` of the last [`Self::verify_chunk`] (`[vocab]`).
+    pub(crate) fn chunk_logits_row(&self, j: usize) -> &[f32] {
+        let vocab = self.weights.config.vocab;
+        &self.chunk_logits[j * vocab..(j + 1) * vocab]
+    }
+
+    /// Commit the accepted prefix of the last verified chunk:
+    /// `accepted[j]` is the token fed at row `j`. Completes each accepted
+    /// position in order (folding the share chain and publishing filled
+    /// blocks exactly as committed decode does), releases the rejected
+    /// rows' staged K/V, merges the accepted rows' target-plan stats into
+    /// [`Self::stats`], and leaves [`Self::logits`] holding the last
+    /// accepted row — bit-identical to having `decode_step`-fed
+    /// `accepted` one token at a time.
+    pub(crate) fn commit_round(&mut self, accepted: &[u32]) {
+        debug_assert!(
+            !accepted.is_empty() && accepted.len() <= self.chunk_stats.len(),
+            "commit_round: accepted prefix out of range"
+        );
+        let vocab = self.weights.config.vocab;
+        for (j, &t) in accepted.iter().enumerate() {
+            self.kv.complete_position(t, self.pos + j);
+            self.stats.merge(&self.chunk_stats[j]);
+        }
+        self.kv.discard_staged();
+        let last = accepted.len() - 1;
+        self.logits
+            .copy_from_slice(&self.chunk_logits[last * vocab..(last + 1) * vocab]);
+        self.pos += accepted.len();
+    }
+
+    /// Mutable access to the speculation counters (the sampler loop and
+    /// the scheduler record rounds here).
+    pub(crate) fn spec_stats_mut(&mut self) -> &mut SpecStats {
+        &mut self.stats.spec
+    }
+}
+
+/// Per-candidate working state for one batched speculative verify row —
+/// the session's row scratch, owned per row so the chunk fans out across
+/// the worker pool with zero shared mutable state.
+struct SpecRow {
+    x: Vec<f32>,
+    xn: Vec<f32>,
+    qkv: Vec<f32>,
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    hidden: Vec<f32>,
+    mlp: Vec<f32>,
+    scores: Vec<f32>,
+    gather: Vec<f32>,
+    normq: Vec<f32>,
+    logits: Vec<f32>,
+    stats: LampStats,
+}
+
+impl SpecRow {
+    fn new(cfg: &ModelConfig) -> Self {
+        let d = cfg.d_model;
+        SpecRow {
+            x: vec![0.0; d],
+            xn: vec![0.0; d],
+            qkv: vec![0.0; 3 * d],
+            attn: vec![0.0; d],
+            proj: vec![0.0; d],
+            hidden: vec![0.0; cfg.d_ff()],
+            mlp: vec![0.0; d],
+            scores: Vec::with_capacity(cfg.seq),
+            gather: Vec::new(),
+            normq: Vec::with_capacity(d),
+            logits: vec![0.0; cfg.vocab],
+            stats: LampStats::default(),
+        }
+    }
+}
+
+/// Raw base pointer into the verify rows, `Send`/`Sync` so the worker
+/// closure can be shared across the pool; every job dereferences only
+/// its own row index (the disjoint-writes idiom of attention's
+/// `TileOut`).
+#[derive(Clone, Copy)]
+struct RowsPtr(*mut SpecRow);
+unsafe impl Send for RowsPtr {}
+unsafe impl Sync for RowsPtr {}
+
+/// True when the current thread is itself a [`ThreadPool`] worker.
+/// `scope_run` parks the submitting thread until its jobs drain, so a
+/// nested fan-out from inside a worker can deadlock once every worker is
+/// parked (the scheduler steps slots on a pool; a slot's verify must not
+/// fan rows onto that same pool). Workers are all named by the pool, so
+/// the guard is a name check.
+fn on_pool_worker() -> bool {
+    std::thread::current().name().is_some_and(|n| n.starts_with("lamp-worker"))
+}
+
+/// Run `f(j, &mut rows[j])` for every row — on the pool when one is
+/// available, the chunk has more than one row, and the caller is not
+/// already a pool worker; sequentially otherwise. Bit-identical either
+/// way: each row reads only shared immutable state and writes only its
+/// own `SpecRow`.
+fn run_rows<F>(threads: Option<&ThreadPool>, rows: &mut [SpecRow], f: F)
+where
+    F: Fn(usize, &mut SpecRow) + Send + Sync,
+{
+    match threads {
+        Some(pool) if pool.size() > 1 && rows.len() > 1 && !on_pool_worker() => {
+            let base = RowsPtr(rows.as_mut_ptr());
+            pool.scope_run(rows.len(), |j| {
+                // SAFETY: jobs are indexed 0..rows.len(), each one
+                // dereferences a distinct element, and `scope_run` joins
+                // every job before returning — no aliasing, no escape.
+                let row = unsafe { &mut *base.0.add(j) };
+                f(j, row);
+            });
+        }
+        _ => {
+            for (j, row) in rows.iter_mut().enumerate() {
+                f(j, row);
+            }
+        }
     }
 }
 
@@ -783,6 +1237,151 @@ mod tests {
         assert_eq!(session.stats().causal_total, 0);
         session.prefill(&[1, 2, 3]).unwrap();
         assert_eq!(session.logits(), &first[..], "reset must be a clean slate");
+    }
+
+    #[test]
+    fn verify_chunk_matches_sequential_decode_bitwise() {
+        // The speculative verify contract: every chunk row's logits and
+        // stats equal the sequential decode_step at the same position,
+        // bitwise, for every plan (all site streams are position-keyed),
+        // and a full commit leaves the session on the solo trajectory.
+        let w = nano_weights(1);
+        let cands = [9u32, 41, 77, 3];
+        for plan in plans() {
+            let mut solo = DecodeSession::new(&w, plan, 42);
+            solo.prefill(&[5, 17, 29]).unwrap();
+            let mut spec = DecodeSession::new(&w, plan, 42);
+            spec.prefill(&[5, 17, 29]).unwrap();
+            spec.verify_chunk(&cands).unwrap();
+            for (j, &t) in cands.iter().enumerate() {
+                solo.decode_step(t).unwrap();
+                for (a, b) in spec.chunk_logits_row(j).iter().zip(solo.logits()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "row {j} under {plan:?}");
+                }
+            }
+            spec.commit_round(&cands);
+            assert_eq!(spec.len(), solo.len());
+            for (a, b) in spec.logits().iter().zip(solo.logits()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "committed logits diverge");
+            }
+            assert_eq!(spec.stats().recomputed, solo.stats().recomputed);
+            assert_eq!(spec.stats().causal_total, solo.stats().causal_total);
+            assert_eq!(spec.stats().per_layer, solo.stats().per_layer);
+            assert_eq!(spec.stats().mlp, solo.stats().mlp);
+            assert_eq!(spec.stats().norm, solo.stats().norm);
+            assert_eq!(spec.stats().sampler, solo.stats().sampler);
+            // Continued decode after the commit stays on the trajectory.
+            spec.decode_step(55).unwrap();
+            solo.decode_step(55).unwrap();
+            for (a, b) in spec.logits().iter().zip(solo.logits()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "post-commit step diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn partial_commit_matches_prefix_and_releases_rejected_rows() {
+        let w = nano_weights(2);
+        let plan =
+            PrecisionPlan::whole_model(AttentionPrecision::lamp(3, 0.1, SoftmaxRule::Random));
+        let mut solo = DecodeSession::new(&w, plan, 7);
+        solo.prefill(&[1, 2, 3]).unwrap();
+        let mut spec = DecodeSession::new(&w, plan, 7);
+        spec.prefill(&[1, 2, 3]).unwrap();
+        spec.verify_chunk(&[10, 20, 30, 40]).unwrap();
+        spec.commit_round(&[10, 20]); // reject rows 2 and 3
+        solo.decode_step(10).unwrap();
+        solo.decode_step(20).unwrap();
+        assert_eq!(spec.len(), 5);
+        assert_eq!(spec.kv().len(), 5);
+        for (a, b) in spec.logits().iter().zip(solo.logits()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "partial commit diverged");
+        }
+        // Rejected rows' stats are dropped, not merged: single counting.
+        assert_eq!(spec.stats().causal_total, solo.stats().causal_total);
+        assert_eq!(spec.stats().sampler, solo.stats().sampler);
+        // The rejected staged KV is gone; continued decode matches solo.
+        spec.decode_step(99).unwrap();
+        solo.decode_step(99).unwrap();
+        for (a, b) in spec.logits().iter().zip(solo.logits()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "rejected rows leaked");
+        }
+    }
+
+    #[test]
+    fn draft_rollback_restores_bitwise_state() {
+        let w = nano_weights(3);
+        let plan: PrecisionPlan = AttentionPrecision::lamp(3, 0.05, SoftmaxRule::Random).into();
+        let draft: PrecisionPlan = AttentionPrecision::uniform(2).into();
+        let mut a = DecodeSession::new(&w, plan, 11);
+        a.prefill(&[4, 8, 15]).unwrap();
+        let cp = a.spec_checkpoint();
+        a.begin_draft();
+        a.draft_step(16, draft).unwrap();
+        a.draft_step(23, draft).unwrap();
+        assert_eq!(a.len(), 5);
+        assert!(a.draft_stats().causal_total > 0, "draft work must be accounted");
+        a.rollback(&cp);
+        assert_eq!(a.len(), 3);
+        // Draft work never touches the committed stats, and the next
+        // committed step is bit-identical to a session that never drafted.
+        let mut b = DecodeSession::new(&w, plan, 11);
+        b.prefill(&[4, 8, 15]).unwrap();
+        assert_eq!(a.stats().causal_total, b.stats().causal_total);
+        assert_eq!(a.stats().sampler, b.stats().sampler);
+        a.decode_step(42).unwrap();
+        b.decode_step(42).unwrap();
+        for (x, y) in a.logits().iter().zip(b.logits()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "rollback leaked draft state");
+        }
+        assert_eq!(a.kv().pool().stats().used_blocks, b.kv().pool().stats().used_blocks);
+    }
+
+    #[test]
+    fn parallel_verify_is_bit_identical_to_sequential() {
+        let w = nano_weights(4);
+        let cands = [7u32, 7, 9, 100, 3];
+        for plan in plans() {
+            let mut seq_s = DecodeSession::new(&w, plan, 5);
+            seq_s.prefill(&[2, 4, 6]).unwrap();
+            seq_s.verify_chunk(&cands).unwrap();
+            let mut par_s = DecodeSession::new(&w, plan, 5);
+            par_s.set_threads(Some(Arc::new(ThreadPool::new(4))));
+            par_s.prefill(&[2, 4, 6]).unwrap();
+            par_s.verify_chunk(&cands).unwrap();
+            for j in 0..cands.len() {
+                for (a, b) in
+                    par_s.chunk_logits_row(j).iter().zip(seq_s.chunk_logits_row(j))
+                {
+                    assert_eq!(a.to_bits(), b.to_bits(), "row {j} under {plan:?}");
+                }
+            }
+            par_s.commit_round(&cands);
+            seq_s.commit_round(&cands);
+            assert_eq!(par_s.stats().recomputed, seq_s.stats().recomputed);
+            assert_eq!(par_s.stats().per_layer, seq_s.stats().per_layer);
+        }
+    }
+
+    #[test]
+    fn verify_chunk_cleans_up_after_errors() {
+        // A verify that fails (context overflow here) must release its
+        // staged rows and leave the session usable.
+        let w = nano_weights(5);
+        let mut s = DecodeSession::new(&w, AttentionPrecision::reference(), 0);
+        let prompt: Vec<u32> = (0..30).collect();
+        s.prefill(&prompt).unwrap();
+        let too_many: Vec<u32> = (0..8).collect();
+        assert!(s.verify_chunk(&too_many).is_err(), "context overflow must error");
+        assert_eq!(s.kv().len(), 30);
+        s.decode_step(1).unwrap();
+        assert_eq!(s.len(), 31);
+        // Bad token mid-chunk: same cleanup.
+        let mut s = DecodeSession::new(&w, AttentionPrecision::reference(), 0);
+        s.prefill(&[1, 2]).unwrap();
+        assert!(s.verify_chunk(&[3, 9999]).is_err());
+        s.decode_step(3).unwrap();
+        assert_eq!(s.len(), 3);
     }
 
     #[test]

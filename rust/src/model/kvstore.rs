@@ -255,6 +255,21 @@ impl KvBlockData {
         pinned
     }
 
+    /// Clear the repair annex for every slot `>= slot` (all layers) — the
+    /// rollback hygiene primitive. Slab bytes at truncated slots are
+    /// unreachable (reads are bounded by the cache length) and the next
+    /// append overwrites slab *and* annex unconditionally, so this only
+    /// keeps `pinned_rows` accounting honest after a speculative rollback.
+    fn clear_annex_from(&mut self, slot: usize) {
+        for layer in 0..self.layers {
+            let idx0 = layer * self.block_size;
+            for s in slot..self.block_size {
+                self.exact_k[idx0 + s] = None;
+                self.exact_v[idx0 + s] = None;
+            }
+        }
+    }
+
     /// Copy rows `0..valid_slots` (every layer, K and V, annex included)
     /// from `other` — the copy-on-write primitive. Both blocks belong to
     /// the same pool, so the storage formats match and the copy is
@@ -845,6 +860,29 @@ pub fn chain_root(seed: u64, plan: &PrecisionPlan) -> u64 {
     h
 }
 
+/// A rollback point for speculative decoding: everything `truncate_to`
+/// needs to restore a [`PagedKvCache`] to a prior committed length. Taken
+/// at position boundaries only (no position mid-append), so the block
+/// count is derivable from `len` and does not need saving.
+#[derive(Debug, Clone)]
+pub struct KvCheckpoint {
+    /// Committed positions at checkpoint time.
+    len: usize,
+    /// Adopted-row count at checkpoint time.
+    adopted: usize,
+    /// Chain hash covering the `len` positions.
+    chain: u64,
+    /// Pending per-token hashes of the partial tail block.
+    pending: Vec<u64>,
+}
+
+impl KvCheckpoint {
+    /// Committed positions the checkpoint restores to.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+}
+
 /// A session's paged view of the pool: the block table, the running
 /// token-chain hash, and the adopt / append / publish lifecycle.
 pub struct PagedKvCache {
@@ -861,6 +899,15 @@ pub struct PagedKvCache {
     /// Per-token chain hashes inside the current tail block (published
     /// with the block when it fills).
     pending: Vec<u64>,
+    /// Positions with *staged* (appended, not yet completed) rows beyond
+    /// `len` — the batched-verify window of speculative decoding. Reads
+    /// may reach `len + staged`; `complete_position`/`truncate_to`/
+    /// `discard_staged` drain it.
+    staged: usize,
+    /// Scratch mode (speculative draft): completed positions advance the
+    /// chain as usual but are never published to the prefix-share index —
+    /// draft rows are throwaway and must not be adoptable.
+    scratch: bool,
 }
 
 impl PagedKvCache {
@@ -873,6 +920,8 @@ impl PagedKvCache {
             root,
             chain: root,
             pending: Vec::new(),
+            staged: 0,
+            scratch: false,
         }
     }
 
@@ -971,11 +1020,15 @@ impl PagedKvCache {
     }
 
     /// Store position `pos`'s K and V rows for `layer`. Positions are
-    /// strictly append-only (`pos == len`); the block is allocated on the
-    /// first layer of the first position it covers, and a shared tail
-    /// (partial adoption) is copied on first write. Returns the number of
-    /// rows the repair rule pinned; fails with the typed resource error on
-    /// pool exhaustion (no state is modified in that case).
+    /// append-only (`pos >= len`): plain decode writes exactly at `len`,
+    /// while a speculative batched verify *stages* a short run of
+    /// positions at `len..len + m` per layer before any of them is
+    /// completed (per layer the run ascends, so block allocation still
+    /// happens in order on layer 0). The block is allocated on the first
+    /// layer of the first position it covers, and a shared tail (partial
+    /// adoption) is copied on first write. Returns the number of rows the
+    /// repair rule pinned; fails with the typed resource error on pool
+    /// exhaustion (no state is modified in that case).
     pub fn append_row(
         &mut self,
         layer: usize,
@@ -983,7 +1036,7 @@ impl PagedKvCache {
         k_row: &[f32],
         v_row: &[f32],
     ) -> Result<usize> {
-        debug_assert_eq!(pos, self.len, "KV rows are append-only");
+        debug_assert!(pos >= self.len, "KV rows are append-only");
         let bs = self.pool.block_size;
         let b = pos / bs;
         let slot = pos % bs;
@@ -1010,7 +1063,9 @@ impl PagedKvCache {
                 ))
             }
         };
-        Ok(data.write_row(layer, slot, k_row, v_row, self.pool.repair_tau))
+        let pinned = data.write_row(layer, slot, k_row, v_row, self.pool.repair_tau);
+        self.staged = self.staged.max(pos + 1 - self.len);
+        Ok(pinned)
     }
 
     /// Copy-on-write: replace the shared tail block (adopted up to
@@ -1027,14 +1082,17 @@ impl PagedKvCache {
 
     /// Mark position `pos` complete (all layers written), folding `token`
     /// into the chain. When the tail block fills on a sharing pool it is
-    /// frozen and published for prefix adoption.
+    /// frozen and published for prefix adoption — unless the cache is in
+    /// scratch (speculative-draft) mode, whose rows are throwaway and must
+    /// never enter the prefix-share index.
     pub fn complete_position(&mut self, token: u32, pos: usize) {
         debug_assert_eq!(pos, self.len, "positions complete in order");
         self.chain = fold(self.chain, token as u64 + 1);
         self.pending.push(self.chain);
         self.len = pos + 1;
+        self.staged = self.staged.saturating_sub(1);
         if self.len % self.pool.block_size == 0 {
-            if self.pool.sharing {
+            if self.pool.sharing && !self.scratch {
                 match self.blocks.pop().expect("tail block exists") {
                     PagedBlock::Owned(data) => {
                         let arc = self.pool.publish(data, &self.pending);
@@ -1047,6 +1105,83 @@ impl PagedKvCache {
         }
     }
 
+    /// Enter / leave scratch (speculative-draft) mode. In scratch mode
+    /// completed positions advance the chain normally but filled blocks
+    /// are not published for prefix adoption; the caller rolls the whole
+    /// extension back via [`Self::truncate_to`] afterwards.
+    pub(crate) fn set_scratch(&mut self, on: bool) {
+        self.scratch = on;
+    }
+
+    /// Positions with staged (appended-but-uncompleted) rows beyond
+    /// [`Self::len`].
+    pub fn staged(&self) -> usize {
+        self.staged
+    }
+
+    /// Snapshot the commit state for a later [`Self::truncate_to`]. Only
+    /// valid between positions (nothing staged).
+    pub fn checkpoint(&self) -> KvCheckpoint {
+        debug_assert_eq!(self.staged, 0, "checkpoint mid-append");
+        KvCheckpoint {
+            len: self.len,
+            adopted: self.adopted,
+            chain: self.chain,
+            pending: self.pending.clone(),
+        }
+    }
+
+    /// Roll the cache back to a checkpoint taken on this cache: release
+    /// every block past the restored length, drop staged rows, clear the
+    /// truncated tail slots' repair annex (accounting hygiene — the slab
+    /// bytes are unreachable and the next append overwrites both), and
+    /// restore the chain state. Blocks the checkpoint covered are kept
+    /// as-is: committed slots are never mutated by speculation, and a
+    /// draft-triggered copy-on-write of a shared tail only pessimizes
+    /// sharing (the owned copy is byte-exact over the committed slots).
+    pub fn truncate_to(&mut self, cp: &KvCheckpoint) {
+        debug_assert!(cp.len <= self.len, "checkpoint is from this cache's past");
+        let bs = self.pool.block_size;
+        let needed = (cp.len + bs - 1) / bs;
+        while self.blocks.len() > needed {
+            let b = self.blocks.pop().expect("counted above");
+            self.pool.release(b);
+        }
+        if cp.len % bs != 0 {
+            if let Some(PagedBlock::Owned(data)) = self.blocks.last_mut() {
+                data.clear_annex_from(cp.len % bs);
+            }
+        }
+        self.len = cp.len;
+        self.adopted = cp.adopted;
+        self.chain = cp.chain;
+        self.pending.clear();
+        self.pending.extend_from_slice(&cp.pending);
+        self.staged = 0;
+    }
+
+    /// Drop any staged rows beyond the committed length — the cheap
+    /// truncation after a batched verify commits its accepted prefix
+    /// (chain and pending already reflect exactly the completed tokens,
+    /// so only the staged suffix and its annex entries go).
+    pub(crate) fn discard_staged(&mut self) {
+        if self.staged == 0 {
+            return;
+        }
+        let bs = self.pool.block_size;
+        let needed = (self.len + bs - 1) / bs;
+        while self.blocks.len() > needed {
+            let b = self.blocks.pop().expect("counted above");
+            self.pool.release(b);
+        }
+        if self.len % bs != 0 {
+            if let Some(PagedBlock::Owned(data)) = self.blocks.last_mut() {
+                data.clear_annex_from(self.len % bs);
+            }
+        }
+        self.staged = 0;
+    }
+
     /// Release every block back to the pool, keeping the chain root — the
     /// reset primitive (`DecodeSession::reset`).
     pub fn clear(&mut self) {
@@ -1057,6 +1192,8 @@ impl PagedKvCache {
         self.adopted = 0;
         self.chain = self.root;
         self.pending.clear();
+        self.staged = 0;
+        self.scratch = false;
     }
 
     /// Clear and re-key the chain for a new `(seed, plan)` binding — the
@@ -1101,7 +1238,10 @@ pub(crate) fn lamp_attention_row_kv(
 ) -> RowLamp {
     let hd = qi.len();
     debug_assert_eq!(out.len(), hd);
-    debug_assert!(n_keys <= cache.len + 1, "reading unwritten cache rows");
+    debug_assert!(
+        n_keys <= cache.len + cache.staged + 1,
+        "reading unwritten cache rows"
+    );
     let d = cache.pool.d;
     let bs = cache.pool.block_size;
     // Step 1: fused PS(μ) accumulation, per block run.
@@ -1627,6 +1767,113 @@ mod tests {
         assert_ne!(chain_root(1, &r), chain_root(2, &r));
         assert_ne!(chain_root(1, &r), chain_root(1, &w));
         assert_eq!(chain_root(1, &w), chain_root(1, &w));
+    }
+
+    #[test]
+    fn checkpoint_truncate_restores_state_and_releases_blocks() {
+        let cfg = nano();
+        let d = cfg.d_model;
+        // tau = 0 pins every inexact row, making the annex-hygiene part of
+        // the rollback observable through pinned_rows().
+        let p = pool(WeightFormat::PsRounded { mu: 2 }, 0.0, 8, true);
+        let root = chain_root(3, &PrecisionPlan::reference());
+        let mut cache = PagedKvCache::new(p.clone(), root);
+        let mut rng = Rng::new(21);
+        fill(&mut cache, 6, cfg.layers, d, &mut rng);
+        let cp = cache.checkpoint();
+        assert_eq!(cp.len(), 6);
+        let (len0, chain0, pending0) = (cache.len, cache.chain, cache.pending.clone());
+        let (pinned0, used0, cached0) =
+            (cache.pinned_rows(), p.stats().used_blocks, p.stats().cached_blocks);
+        // Draft extension in scratch mode, crossing a block boundary.
+        cache.set_scratch(true);
+        for pos in 6..11 {
+            for l in 0..cfg.layers {
+                let k = rand_row(&mut rng, d);
+                let v = rand_row(&mut rng, d);
+                cache.append_row(l, pos, &k, &v).unwrap();
+            }
+            cache.complete_position((pos % 96) as u32, pos);
+        }
+        cache.set_scratch(false);
+        assert!(p.stats().used_blocks > used0, "draft grew the block table");
+        assert_eq!(
+            p.stats().cached_blocks,
+            cached0,
+            "scratch mode must not publish draft blocks for adoption"
+        );
+        cache.truncate_to(&cp);
+        assert_eq!(cache.len(), len0);
+        assert_eq!(cache.chain, chain0);
+        assert_eq!(cache.pending, pending0);
+        assert_eq!(cache.staged(), 0);
+        assert_eq!(p.stats().used_blocks, used0, "rollback returns draft blocks");
+        assert_eq!(
+            cache.pinned_rows(),
+            pinned0,
+            "truncated slots' annex entries are cleared"
+        );
+        // Post-rollback appends behave exactly like a never-speculated
+        // cache: the tail block fills and publishes with a full hash set.
+        for pos in 6..8 {
+            for l in 0..cfg.layers {
+                let k = rand_row(&mut rng, d);
+                let v = rand_row(&mut rng, d);
+                cache.append_row(l, pos, &k, &v).unwrap();
+            }
+            cache.complete_position((pos % 96) as u32, pos);
+        }
+        assert_eq!(cache.len(), 8);
+        assert_eq!(
+            p.stats().cached_blocks,
+            cached0 + 1,
+            "the refilled tail block publishes normally"
+        );
+        drop(cache);
+        assert_eq!(p.stats().used_blocks, p.stats().cached_blocks);
+    }
+
+    #[test]
+    fn staged_appends_read_back_and_discard_releases_tail() {
+        let cfg = nano();
+        let d = cfg.d_model;
+        let p = pool(WeightFormat::F32, f32::INFINITY, 8, false);
+        let mut cache = PagedKvCache::new(p.clone(), 5);
+        let mut rng = Rng::new(31);
+        fill(&mut cache, 3, cfg.layers, d, &mut rng);
+        // Stage positions 3..6 in batched-verify order: per layer, the
+        // whole ascending run, before any position completes.
+        let mut staged: Vec<Vec<(Vec<f32>, Vec<f32>)>> = vec![Vec::new(); cfg.layers];
+        for (l, lr) in staged.iter_mut().enumerate() {
+            for pos in 3..6 {
+                let k = rand_row(&mut rng, d);
+                let v = rand_row(&mut rng, d);
+                cache.append_row(l, pos, &k, &v).unwrap();
+                lr.push((k, v));
+            }
+        }
+        assert_eq!(cache.staged(), 3);
+        assert_eq!(cache.len(), 3);
+        assert_eq!(p.stats().used_blocks, 2, "staging allocated the next block");
+        // Staged rows are readable in place (f32 pool: byte-exact).
+        let mut scratch = Vec::new();
+        for l in 0..cfg.layers {
+            for pos in 3..6 {
+                let data = cache.blocks[pos / 4].data();
+                assert_eq!(
+                    data.k_row(l, pos % 4, &mut scratch),
+                    &staged[l][pos - 3].0[..]
+                );
+            }
+        }
+        // Commit the first staged position, discard the rest.
+        cache.complete_position(40, 3);
+        assert_eq!(cache.len(), 4);
+        cache.discard_staged();
+        assert_eq!(cache.staged(), 0);
+        assert_eq!(p.stats().used_blocks, 1, "discard releases the staged tail block");
+        cache.clear();
+        assert_eq!(p.stats().used_blocks, 0);
     }
 
     #[test]

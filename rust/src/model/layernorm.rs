@@ -10,7 +10,15 @@
 //! matrices' O(d²) and multiply every normalized activation, so
 //! quantizing them buys no measurable bandwidth and costs accuracy.
 
+use crate::linalg::simd;
+
 /// y = g ⊙ (x − mean)/√(var + ε) + b, applied in place over one vector.
+///
+/// The f64 moments run through the pinned SIMD moment chains
+/// ([`simd::row_sum_f64`], [`simd::row_sumsq_dev`] — 4×4 f64 accumulators
+/// over 16-wide blocks, PR 9), so the normalization is bitwise independent
+/// of the dispatched backend; the finish pass is lanewise
+/// (bit-transparent).
 pub fn layernorm(x: &mut [f32], g: &[f32], b: &[f32], eps: f32) {
     let n = x.len();
     debug_assert_eq!(g.len(), n);
@@ -18,18 +26,13 @@ pub fn layernorm(x: &mut [f32], g: &[f32], b: &[f32], eps: f32) {
     if n == 0 {
         return;
     }
-    let mean = x.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
-    let var = x
-        .iter()
-        .map(|&v| {
-            let d = v as f64 - mean;
-            d * d
-        })
-        .sum::<f64>()
-        / n as f64;
+    let mean = simd::row_sum_f64(x) / n as f64;
+    let var = simd::row_sumsq_dev(x, mean) / n as f64;
     let inv = 1.0 / (var + eps as f64).sqrt();
-    for i in 0..n {
-        x[i] = (((x[i] as f64 - mean) * inv) as f32) * g[i] + b[i];
+    if !simd::norm_finish_simd(x, mean, inv, g, b) {
+        for i in 0..n {
+            x[i] = (((x[i] as f64 - mean) * inv) as f32) * g[i] + b[i];
+        }
     }
 }
 

@@ -44,12 +44,12 @@ pub mod plan;
 pub mod sampler;
 pub mod weights;
 
-pub use attention::{AttentionPrecision, LampStats, RowLamp, SiteStats};
+pub use attention::{AttentionPrecision, LampStats, RowLamp, SiteStats, SpecStats};
 pub use config::ModelConfig;
 pub use forward::{forward, forward_with, ForwardOutput, ForwardScratch};
 pub use kvcache::{DecodeSession, StepFaultVerdict, StepFaults};
-pub use kvstore::{KvBlockPool, KvCacheOptions, KvPoolStats, PagedKvCache};
-pub use plan::{KvPrecision, PrecisionPlan, SitePrecision, WeightPrecision};
+pub use kvstore::{KvBlockPool, KvCacheOptions, KvCheckpoint, KvPoolStats, PagedKvCache};
+pub use plan::{KvPrecision, PrecisionPlan, SitePrecision, SpecConfig, WeightPrecision};
 pub use sampler::{
     generate, generate_reforward, generate_with_session, generate_with_stats, Decode,
 };

@@ -43,6 +43,7 @@ use crate::error::{Error, Result};
 use crate::lamp::rmsnorm::select_rmsnorm;
 use crate::lamp::softmax::{random_mask, select_softmax, SoftmaxRule};
 use crate::linalg::matmul::{wt_row_dot_block, wt_row_dot_f32, wt_row_dot_ps};
+use crate::linalg::simd::round_row_simd;
 use crate::linalg::{WeightFormat, WeightTensor};
 use crate::softfloat::round::round_to_mantissa;
 use crate::util::Rng;
@@ -112,6 +113,39 @@ impl WeightPrecision {
 /// per-request conversion.
 pub type KvPrecision = WeightPrecision;
 
+/// Self-speculative decoding configuration: the *draft* plan's per-site
+/// precisions plus the number of look-ahead tokens drafted per round.
+///
+/// The enclosing [`PrecisionPlan`] stays the request's *target* plan — the
+/// one every emitted token is verified (and the KV cache committed) under.
+/// The draft sites only steer the throwaway look-ahead forward passes, so
+/// they may be arbitrarily aggressive without touching output exactness;
+/// [`PrecisionPlan::validate`] enforces that each draft site is no more
+/// expensive than its target counterpart (and at least one strictly
+/// cheaper), because a draft costlier than the target can never pay for
+/// its verification.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecConfig {
+    /// Draft attention-score site.
+    pub attention: SitePrecision,
+    /// Draft MLP site.
+    pub mlp: SitePrecision,
+    /// Draft final-norm site.
+    pub norm: SitePrecision,
+    /// Draft sampler site.
+    pub sampler: SitePrecision,
+    /// Look-ahead depth: tokens drafted per round (≥ 1). Each round
+    /// verifies up to `k + 1` positions in one batched target-plan pass.
+    pub k: usize,
+}
+
+impl SpecConfig {
+    /// Draft uniformly at the same (μ, τ, rule) for every site.
+    pub fn whole_model(site: SitePrecision, k: usize) -> Self {
+        SpecConfig { attention: site, mlp: site, norm: site, sampler: site, k }
+    }
+}
+
 /// Per-composition-site precision configuration for one forward pass.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PrecisionPlan {
@@ -127,6 +161,9 @@ pub struct PrecisionPlan {
     pub weights: WeightPrecision,
     /// KV-cache storage requirement ([`KvPrecision::Any`] by default).
     pub kv: KvPrecision,
+    /// Self-speculative decoding: draft plan + look-ahead depth
+    /// (`None` = plain one-token-per-step decode).
+    pub spec: Option<SpecConfig>,
 }
 
 impl PrecisionPlan {
@@ -140,6 +177,7 @@ impl PrecisionPlan {
             sampler: SitePrecision::reference(),
             weights: WeightPrecision::Any,
             kv: KvPrecision::Any,
+            spec: None,
         }
     }
 
@@ -158,6 +196,7 @@ impl PrecisionPlan {
             sampler: site,
             weights: WeightPrecision::Any,
             kv: KvPrecision::Any,
+            spec: None,
         }
     }
 
@@ -189,6 +228,29 @@ impl PrecisionPlan {
     pub fn with_sampler(mut self, site: SitePrecision) -> Self {
         self.sampler = site;
         self
+    }
+
+    /// Attach (or clear) the self-speculative decoding configuration.
+    pub fn with_spec(mut self, spec: Option<SpecConfig>) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// The plan the *draft* forward passes run under: the spec's per-site
+    /// precisions with the storage requirements inherited from the engine
+    /// the target already validated against (`Any` — there is one weight
+    /// store and one KV pool; the draft reads the same ones) and no nested
+    /// speculation. `None` when the plan is not speculative.
+    pub fn draft_plan(&self) -> Option<PrecisionPlan> {
+        self.spec.map(|s| PrecisionPlan {
+            attention: s.attention,
+            mlp: s.mlp,
+            norm: s.norm,
+            sampler: s.sampler,
+            weights: WeightPrecision::Any,
+            kv: KvPrecision::Any,
+            spec: None,
+        })
     }
 
     /// True when every non-attention site is at reference (the plan is
@@ -241,7 +303,70 @@ impl PrecisionPlan {
             }
         }
         self.weights.validate()?;
-        self.kv.validate()
+        self.kv.validate()?;
+        if let Some(spec) = &self.spec {
+            self.validate_spec(spec)?;
+        }
+        Ok(())
+    }
+
+    /// Validate a speculative configuration against this (target) plan:
+    /// the draft sites must pass the same range checks as plan sites, and
+    /// the draft must be *cheaper* than the target — per site no more
+    /// expensive (μ no larger, τ no smaller, any draft against a
+    /// reference target), with at least one site strictly cheaper.
+    /// Drafting at or above target cost can never pay for verification.
+    fn validate_spec(&self, spec: &SpecConfig) -> Result<()> {
+        if spec.k == 0 {
+            return Err(Error::config(
+                "spec: look-ahead depth k must be >= 1".to_string(),
+            ));
+        }
+        let mut strictly_cheaper = false;
+        for (name, draft, target, relative_rules) in [
+            ("attention", &spec.attention, &self.attention, true),
+            ("mlp", &spec.mlp, &self.mlp, false),
+            ("norm", &spec.norm, &self.norm, false),
+            ("sampler", &spec.sampler, &self.sampler, true),
+        ] {
+            let label = format!("spec draft {name}");
+            validate_site(draft, &label, relative_rules)?;
+            if name != "attention"
+                && matches!(
+                    draft.rule,
+                    SoftmaxRule::RelaxedLengthNorm { .. }
+                        | SoftmaxRule::Tile { .. }
+                        | SoftmaxRule::TileRandom { .. }
+                )
+            {
+                return Err(Error::config(format!(
+                    "plan site {label}: length-normalized and tile rules apply \
+                     to the attention site only"
+                )));
+            }
+            if !target.is_reference() && (draft.mu > target.mu || draft.tau < target.tau)
+            {
+                return Err(Error::config(format!(
+                    "spec draft {name}: draft site (mu={}, tau={}) is more \
+                     expensive than the target site (mu={}, tau={}); drafts \
+                     must not exceed target cost",
+                    draft.mu, draft.tau, target.mu, target.tau
+                )));
+            }
+            strictly_cheaper |= if target.is_reference() {
+                !draft.is_reference()
+            } else {
+                draft.mu < target.mu || draft.tau > target.tau
+            };
+        }
+        if !strictly_cheaper {
+            return Err(Error::config(
+                "spec: the draft plan must be strictly cheaper than the target \
+                 plan at one or more sites"
+                    .to_string(),
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -339,7 +464,14 @@ pub(crate) fn norm_site_row(
         return 0;
     }
     quant.clear();
-    quant.extend(x.iter().map(|&v| round_to_mantissa(v, site.mu)));
+    quant.resize(x.len(), 0.0);
+    // Vectorized elementwise rounding when a backend is active
+    // (bit-transparent — the lanewise kernel is the scalar op).
+    if !round_row_simd(x, site.mu, quant) {
+        for (q, &v) in quant.iter_mut().zip(x.iter()) {
+            *q = round_to_mantissa(v, site.mu);
+        }
+    }
     if !site.tau.is_finite() {
         // Uniform low-precision storage, no look-ahead repair.
         x.copy_from_slice(quant);
@@ -619,6 +751,76 @@ mod tests {
         let bad = PrecisionPlan::reference()
             .with_kv(KvPrecision::Exact(WeightFormat::PsRounded { mu: 77 }));
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn spec_validation_enforces_cheaper_draft() {
+        let target = PrecisionPlan::whole_model(SitePrecision::lamp(
+            4,
+            0.1,
+            SoftmaxRule::Relaxed,
+        ));
+        // Strictly cheaper at every site: coarser mantissa, looser tau.
+        let good = target
+            .with_spec(Some(SpecConfig::whole_model(SitePrecision::uniform(3), 2)));
+        good.validate().unwrap();
+        assert!(good.draft_plan().unwrap().spec.is_none(), "no nested spec");
+        assert_eq!(good.draft_plan().unwrap().mlp, SitePrecision::uniform(3));
+        // k = 0 rejected.
+        let e = target
+            .with_spec(Some(SpecConfig::whole_model(SitePrecision::uniform(3), 0)))
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("k"), "{e}");
+        // Draft more expensive (finer mantissa) at one site rejected.
+        let mut costly = SpecConfig::whole_model(SitePrecision::uniform(3), 2);
+        costly.mlp = SitePrecision::lamp(8, 0.5, SoftmaxRule::Strict);
+        let e = target.with_spec(Some(costly)).validate().unwrap_err().to_string();
+        assert!(e.contains("mlp") && e.contains("expensive"), "{e}");
+        // Draft tighter tau (more repair) rejected.
+        let mut tight = SpecConfig::whole_model(SitePrecision::uniform(3), 2);
+        tight.attention = SitePrecision::lamp(4, 0.01, SoftmaxRule::Relaxed);
+        let e = target.with_spec(Some(tight)).validate().unwrap_err().to_string();
+        assert!(e.contains("attention"), "{e}");
+        // Draft == target everywhere: nothing strictly cheaper.
+        let same = SpecConfig {
+            attention: target.attention,
+            mlp: target.mlp,
+            norm: target.norm,
+            sampler: target.sampler,
+            k: 2,
+        };
+        let e = target.with_spec(Some(same)).validate().unwrap_err().to_string();
+        assert!(e.contains("strictly cheaper"), "{e}");
+        // Any draft is allowed against a reference target (and counts as
+        // strictly cheaper as long as it is not itself reference).
+        PrecisionPlan::reference()
+            .with_spec(Some(SpecConfig::whole_model(SitePrecision::uniform(4), 3)))
+            .validate()
+            .unwrap();
+        let e = PrecisionPlan::reference()
+            .with_spec(Some(SpecConfig::whole_model(SitePrecision::reference(), 3)))
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("strictly cheaper"), "{e}");
+        // Draft site ranges are validated like plan sites.
+        let e = target
+            .with_spec(Some(SpecConfig::whole_model(
+                SitePrecision { mu: 0, tau: 0.5, rule: SoftmaxRule::Strict },
+                2,
+            )))
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("spec draft"), "{e}");
+        // Tile rules stay attention-only inside the draft.
+        let mut tiled = SpecConfig::whole_model(SitePrecision::uniform(3), 2);
+        tiled.norm =
+            SitePrecision::lamp(3, 2.0, SoftmaxRule::Tile { width: 4 });
+        let e = target.with_spec(Some(tiled)).validate().unwrap_err().to_string();
+        assert!(e.contains("attention site only"), "{e}");
     }
 
     #[test]

@@ -73,16 +73,119 @@ pub fn generate_with_session(
     }
     let mut rng = Rng::new(session.seed());
     session.prefill(prompt)?;
-    for _ in 0..new_tokens {
-        let next = decode.pick(session.logits(), &mut rng)?;
-        tokens.push(next);
-        if tokens.len() >= seq {
-            break;
+    if let Some(spec) = session.plan().spec {
+        let draft_plan = session
+            .plan()
+            .draft_plan()
+            .expect("plan with spec always yields a draft plan");
+        speculative_loop(session, &mut tokens, new_tokens, decode, &mut rng, draft_plan, spec.k)?;
+    } else {
+        for _ in 0..new_tokens {
+            let next = decode.pick(session.logits(), &mut rng)?;
+            tokens.push(next);
+            if tokens.len() >= seq {
+                break;
+            }
+            session.decode_step(next)?;
         }
-        session.decode_step(next)?;
     }
     let stats = session.stats().clone();
     Ok((tokens, stats))
+}
+
+/// The draft/verify rounds of [`generate_with_session`] when the
+/// session's plan carries a [`SpecConfig`](super::plan::SpecConfig) —
+/// DESIGN.md §Speculative decoding.
+///
+/// Bit-exactness with the solo loop above is by construction: every
+/// emitted token is picked from *target-plan* logits for its position
+/// (solo's `session.logits()` after feeding ≡ the verify chunk's row for
+/// the same position, which the KV-decode parity suite pins), with the
+/// same `rng` in the same order. Draft steps approximate those logits
+/// under the cheap plan against a scratch KV extension and consume only a
+/// *clone* of the RNG stream; the round then rolls the scratch state back
+/// and re-realizes the accepted prefix under the target plan's KV format
+/// and repair, so committed state never depends on the draft plan.
+fn speculative_loop(
+    session: &mut DecodeSession,
+    tokens: &mut Vec<u32>,
+    new_tokens: usize,
+    decode: Decode,
+    rng: &mut Rng,
+    draft_plan: PrecisionPlan,
+    k: usize,
+) -> Result<()> {
+    let seq = session.config().seq;
+    let mut next = decode.pick(session.logits(), rng)?;
+    tokens.push(next);
+    let mut emitted = 1usize;
+    loop {
+        if emitted == new_tokens {
+            // Solo's final iteration feeds the last emitted token unless
+            // the context is full — reproduce both the state and stats.
+            if tokens.len() < seq {
+                session.decode_step(next)?;
+            }
+            return Ok(());
+        }
+        if tokens.len() >= seq {
+            return Ok(());
+        }
+        let n = session.len();
+        // Candidates this round: the unfed base token plus up to k
+        // drafts, bounded by the emission budget and the context window
+        // (emission stops at tokens.len() == seq exactly as solo does,
+        // which also keeps every fed position below seq).
+        let m = (1 + k).min(new_tokens - emitted).min(seq - n - 1);
+        if m >= 2 {
+            // --- Draft: scratch KV extension under the cheap plan. ---
+            let cp = session.spec_checkpoint();
+            let mut cands = Vec::with_capacity(m);
+            cands.push(next);
+            let mut draft_rng = rng.clone();
+            session.begin_draft();
+            while cands.len() < m {
+                match session.draft_step(*cands.last().expect("nonempty"), draft_plan) {
+                    Ok(()) => cands.push(decode.pick(session.logits(), &mut draft_rng)?),
+                    // Draft work is disposable: any failure (typically
+                    // pool pressure from the scratch extension) just
+                    // shortens the round; rollback below releases every
+                    // draft block either way.
+                    Err(_) => break,
+                }
+            }
+            session.rollback(&cp);
+            if cands.len() >= 2 {
+                // --- Verify: one batched target-plan forward. ---
+                session.verify_chunk(&cands)?;
+                // --- Acceptance walk, real RNG: keep picking while the
+                // picked token matches the draft that was fed next. ---
+                let mut round = Vec::with_capacity(cands.len());
+                round.push(decode.pick(session.chunk_logits_row(0), rng)?);
+                while round.len() < cands.len()
+                    && *round.last().expect("nonempty") == cands[round.len()]
+                {
+                    let j = round.len();
+                    round.push(decode.pick(session.chunk_logits_row(j), rng)?);
+                }
+                let accepted_rows = round.len();
+                session.commit_round(&cands[..accepted_rows]);
+                session
+                    .spec_stats_mut()
+                    .record_round(cands.len() - 1, accepted_rows - 1, round.len());
+                next = *round.last().expect("nonempty");
+                emitted += round.len();
+                tokens.extend_from_slice(&round);
+                continue;
+            }
+        }
+        // Degenerate round (no look-ahead room or no drafts survived):
+        // one plain committed step, exactly the solo loop body.
+        session.decode_step(next)?;
+        next = decode.pick(session.logits(), rng)?;
+        tokens.push(next);
+        emitted += 1;
+    }
 }
 
 /// Generate `new_tokens` continuation tokens for `prompt` through a
@@ -275,6 +378,80 @@ mod tests {
             let (rf, _) = generate_reforward(&w, &prompt, 8, plan, Decode::Greedy, 6).unwrap();
             assert_eq!(kv, rf, "streams diverge under {plan:?}");
         }
+    }
+
+    #[test]
+    fn speculative_decode_is_bit_identical_to_solo() {
+        // The tentpole oracle: for every (draft plan, k), speculative
+        // decode emits exactly the solo non-speculative token stream under
+        // the target plan, with single-counted compute stats — greedy and
+        // top-k alike.
+        use crate::model::plan::{PrecisionPlan, SpecConfig};
+        let w = weights();
+        let prompt = vec![7u32, 21, 3, 99];
+        let target =
+            PrecisionPlan::whole_model(AttentionPrecision::lamp(3, 0.1, SoftmaxRule::Strict));
+        let (solo, solo_stats) =
+            generate_with_stats(&w, &prompt, 12, target, Decode::Greedy, 5).unwrap();
+        let topk = Decode::TopK { k: 8, temperature: 1.2 };
+        let (solo_t, solo_t_stats) =
+            generate_with_stats(&w, &prompt, 12, target, topk, 5).unwrap();
+        let mut some_accepted = false;
+        for draft in [
+            AttentionPrecision::uniform(2),
+            AttentionPrecision::uniform(3),
+            AttentionPrecision::lamp(3, 0.2, SoftmaxRule::Strict),
+            AttentionPrecision::lamp(2, 0.5, SoftmaxRule::Relaxed),
+        ] {
+            for k in [1usize, 2, 4, 7] {
+                let plan = target.with_spec(Some(SpecConfig::whole_model(draft, k)));
+                plan.validate().unwrap();
+                let (spec, stats) =
+                    generate_with_stats(&w, &prompt, 12, plan, Decode::Greedy, 5).unwrap();
+                assert_eq!(spec, solo, "greedy stream diverges, draft {draft:?} k={k}");
+                assert_eq!(stats.recomputed, solo_stats.recomputed);
+                assert_eq!(stats.causal_total, solo_stats.causal_total);
+                assert_eq!(stats.per_layer, solo_stats.per_layer);
+                assert_eq!(stats.mlp, solo_stats.mlp);
+                assert_eq!(stats.norm, solo_stats.norm);
+                assert_eq!(stats.sampler, solo_stats.sampler);
+                assert!(stats.spec.rounds > 0, "speculation must actually run");
+                assert!(stats.spec.drafted >= stats.spec.accepted);
+                some_accepted |= stats.spec.accepted > 0;
+
+                let (spec_t, stats_t) =
+                    generate_with_stats(&w, &prompt, 12, plan, topk, 5).unwrap();
+                assert_eq!(spec_t, solo_t, "top-k stream diverges, draft {draft:?} k={k}");
+                assert_eq!(stats_t.sampler, solo_t_stats.sampler);
+            }
+        }
+        assert!(some_accepted, "no draft configuration ever accepted a token");
+    }
+
+    #[test]
+    fn speculative_decode_respects_context_and_budget_edges() {
+        use crate::model::plan::{PrecisionPlan, SpecConfig};
+        let w = weights();
+        let target =
+            PrecisionPlan::whole_model(AttentionPrecision::lamp(3, 0.1, SoftmaxRule::Strict));
+        let plan = target
+            .with_spec(Some(SpecConfig::whole_model(AttentionPrecision::uniform(2), 3)));
+        // Budget of exactly one token: no round fits, still solo-equal.
+        let prompt = vec![7u32, 21, 3];
+        for budget in [1usize, 2, 40] {
+            let (solo, _) =
+                generate_with_stats(&w, &prompt, budget, target, Decode::Greedy, 9).unwrap();
+            let (spec, _) =
+                generate_with_stats(&w, &prompt, budget, plan, Decode::Greedy, 9).unwrap();
+            assert_eq!(spec, solo, "budget {budget}: streams diverge");
+        }
+        // Prompt one below the context window: emits exactly one token.
+        let long: Vec<u32> = (0..31).collect();
+        let (solo, _) =
+            generate_with_stats(&w, &long, 8, target, Decode::Greedy, 9).unwrap();
+        let (spec, _) = generate_with_stats(&w, &long, 8, plan, Decode::Greedy, 9).unwrap();
+        assert_eq!(spec, solo);
+        assert_eq!(spec.len(), 32);
     }
 
     #[test]

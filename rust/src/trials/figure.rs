@@ -1,0 +1,180 @@
+//! Figure trials: paper-figure computations replayed as byte-exact
+//! artifacts.
+//!
+//! A `[figure]` manifest (see `trials::manifest`) pins everything a figure
+//! driver needs — model config, weights seed, evaluation-panel shape, and
+//! the μ sweep — so the numbers behind a rendered figure are reproducible
+//! the same way a serving trial is: `lamp trials run fig1` twice and
+//! `lamp trials diff` the artifacts. `lamp exp fig1` routes through the
+//! same row computation, so the human table and the canonical artifact
+//! can never disagree.
+//!
+//! Unlike serving canonicals (integer counters only), figure canonicals
+//! carry floating-point KL values. That is sound here because every value
+//! is the result of an order-pinned reduction: the thread pool returns
+//! results in submission order, the engine's kernels are bitwise identical
+//! across SIMD/scalar dispatch (the scalar-replay contract in
+//! `linalg::simd`), and weights come from the seeded generator, never from
+//! trained artifacts on disk. Each float is printed both in decimal and as
+//! its exact bit pattern, so a diff catches even sub-ULP drift.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::{PrecisionPolicy, Rule};
+use crate::error::{Error, Result};
+use crate::experiments::common::{EvalOptions, EvalPanel};
+use crate::model::Weights;
+use crate::util::Rng;
+
+use super::manifest::{FigureSpec, TrialManifest};
+use super::runner::TrialRun;
+
+/// One μ point of the fig1 sweep: KL vs the FP32 reference for uniform
+/// PS(μ), LAMP (strict, threshold τ), and the random baseline at the same
+/// threshold, plus LAMP's recompute budget as an exact integer ratio.
+#[derive(Debug, Clone)]
+pub struct FigureRow {
+    pub mu: u32,
+    pub kl_uniform: f64,
+    pub kl_lamp: f64,
+    pub kl_random: f64,
+    pub recomputed: usize,
+    pub causal_total: usize,
+}
+
+/// Compute the fig1 rows a manifest describes. Deterministic: same
+/// manifest ⇒ identical `f64` bits, at any worker count, on any host.
+pub fn rows(manifest: &TrialManifest, fig: &FigureSpec) -> Result<Vec<FigureRow>> {
+    if fig.exp != "fig1" {
+        return Err(Error::config(format!("unknown figure driver {:?}", fig.exp)));
+    }
+    let mut rng = Rng::new(manifest.weights_seed);
+    let weights = Arc::new(Weights::random(&manifest.model, &mut rng)?);
+    let opts = EvalOptions {
+        num_seqs: fig.num_seqs,
+        seq_len: fig.seq_len,
+        stream_seed: manifest.seed,
+        workers: manifest.workers.max(1),
+        // Never read trained weights from disk: the artifact must pin the
+        // same bytes on a fresh checkout.
+        artifacts: None,
+        quick: false,
+    };
+    let panel = EvalPanel::build(weights, fig.domain, &opts)?;
+    let mut out = Vec::with_capacity(fig.mu_grid.len());
+    for &mu in &fig.mu_grid {
+        let uni = panel.evaluate(&PrecisionPolicy::uniform(mu), 0)?;
+        let lamp = panel.evaluate(&PrecisionPolicy::lamp(mu, fig.tau, Rule::Strict), 0)?;
+        let rand = panel.evaluate(&PrecisionPolicy::lamp(mu, fig.tau, Rule::Random), 0)?;
+        out.push(FigureRow {
+            mu,
+            kl_uniform: uni.kl,
+            kl_lamp: lamp.kl,
+            kl_random: rand.kl,
+            recomputed: lamp.recomputed,
+            causal_total: lamp.causal_total,
+        });
+    }
+    Ok(out)
+}
+
+/// Pin a float for the canonical artifact: human-readable decimal plus the
+/// exact bit pattern (sub-ULP drift shows up as a byte diff).
+fn pin_f64(v: f64) -> String {
+    format!("{v:.12e} bits={:016x}", v.to_bits())
+}
+
+/// Run a figure trial end to end: compute the rows and render both the
+/// canonical artifact and the human summary.
+pub fn run(manifest: &TrialManifest, fig: &FigureSpec) -> Result<TrialRun> {
+    let t0 = Instant::now();
+    let rows = rows(manifest, fig)?;
+
+    let mut out = String::new();
+    out.push_str(&format!("trial = {}\n", manifest.name));
+    out.push_str(&format!("seed = {}\n", manifest.seed));
+    out.push_str(&format!("model = {}\n", manifest.model.name));
+    out.push_str(&format!("figure = {}\n", fig.exp));
+    out.push_str(&format!(
+        "panel = {} num_seqs={} seq_len={}\n",
+        fig.domain.name(),
+        fig.num_seqs,
+        fig.seq_len
+    ));
+    out.push_str(&format!("tau = {}\n", fig.tau));
+    out.push_str(&format!("weights = random(seed={})\n", manifest.weights_seed));
+    let grid: Vec<String> = fig.mu_grid.iter().map(|m| m.to_string()).collect();
+    out.push_str(&format!("mu_grid = {}\n", grid.join(",")));
+    for r in &rows {
+        out.push_str(&format!("[mu {}]\n", r.mu));
+        out.push_str(&format!("kl_uniform = {}\n", pin_f64(r.kl_uniform)));
+        out.push_str(&format!("kl_lamp = {}\n", pin_f64(r.kl_lamp)));
+        out.push_str(&format!("kl_random = {}\n", pin_f64(r.kl_random)));
+        out.push_str(&format!("recompute = {}/{}\n", r.recomputed, r.causal_total));
+    }
+
+    let display = format!(
+        "trial {}: figure {} over {} mu points, {} panel {}x{} (model {}), {:.3}s wall\n",
+        manifest.name,
+        fig.exp,
+        rows.len(),
+        fig.domain.name(),
+        fig.num_seqs,
+        fig.seq_len,
+        manifest.model.name,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(TrialRun { canonical: out, display })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = "\
+name = fig-tiny\n\
+seed = 5\n\
+[model]\n\
+config = nano\n\
+weights-seed = 3\n\
+[figure]\n\
+exp = fig1\n\
+mu-grid = 2, 7\n\
+num-seqs = 2\n\
+seq-len = 10\n\
+tau = 0.1\n";
+
+    #[test]
+    fn figure_trial_replays_byte_identically_across_worker_counts() {
+        let mut manifest = TrialManifest::parse(TINY).unwrap();
+        let fig = manifest.figure.clone().unwrap();
+        let base = run(&manifest, &fig).unwrap();
+        for workers in [1usize, 4] {
+            manifest.workers = workers;
+            let again = run(&manifest, &fig).unwrap();
+            assert_eq!(base.canonical, again.canonical, "workers={workers} diverged");
+        }
+        assert!(base.canonical.starts_with("trial = fig-tiny\n"));
+        assert!(base.canonical.contains("\n[mu 2]\n"));
+        assert!(base.canonical.contains("bits="), "floats must be bit-pinned");
+        assert!(base.canonical.ends_with('\n'));
+        assert!(!base.display.is_empty());
+    }
+
+    #[test]
+    fn figure_rows_are_sane() {
+        let manifest = TrialManifest::parse(TINY).unwrap();
+        let fig = manifest.figure.clone().unwrap();
+        let rows = rows(&manifest, &fig).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.kl_uniform.is_finite() && r.kl_uniform >= 0.0);
+            assert!(r.kl_lamp.is_finite() && r.kl_lamp >= 0.0);
+            assert!(r.kl_random.is_finite() && r.kl_random >= 0.0);
+            assert!(r.recomputed <= r.causal_total);
+        }
+        // At mu=2 low-precision accumulation visibly perturbs the logits.
+        assert!(rows[0].kl_uniform > 0.0);
+    }
+}

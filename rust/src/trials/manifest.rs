@@ -35,11 +35,49 @@
 //!
 //! `#`/`;` start comments; unknown sections or keys are typed errors, not
 //! silently ignored — a manifest that parses runs exactly what it says.
+//!
+//! Besides serving replays, a manifest may instead describe a *figure*
+//! trial — a paper-figure computation replayed as a byte-exact artifact
+//! (see `trials::figure`). A figure trial carries a `[figure]` section in
+//! place of `[workload]`:
+//!
+//! ```text
+//! name = fig1
+//! seed = 42
+//!
+//! [figure]
+//! exp = fig1                 # which figure driver
+//! mu-grid = 2,4,7,10,16,23   # mantissa-bit sweep
+//! num-seqs = 3               # evaluation panel size
+//! seq-len = 32
+//! domain = web
+//! tau = 0.1                  # LAMP threshold for the adaptive series
+//! ```
 
 use crate::coordinator::{FaultPlan, PrecisionPolicy, Rule, WeightFormat};
 use crate::data::traces::{TraceKind, TraceSpec};
+use crate::data::Domain;
 use crate::error::{Error, Result};
 use crate::model::ModelConfig;
+
+/// A figure-driver trial: replays a paper-figure computation instead of a
+/// serving trace. Which fields matter is fixed by `exp`; today the only
+/// driver is `fig1` (KL vs μ for uniform/LAMP/random at threshold τ).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FigureSpec {
+    /// Figure driver name (`fig1`).
+    pub exp: String,
+    /// Mantissa-bit sweep, in manifest order.
+    pub mu_grid: Vec<u32>,
+    /// Evaluation-panel sequences.
+    pub num_seqs: usize,
+    /// Tokens per panel sequence (clamped to the model's seq).
+    pub seq_len: usize,
+    /// Synthetic corpus domain for the panel.
+    pub domain: Domain,
+    /// LAMP threshold shared by the strict and random series.
+    pub tau: f32,
+}
 
 /// A fully resolved trial description.
 #[derive(Debug, Clone)]
@@ -52,7 +90,10 @@ pub struct TrialManifest {
     pub policy: PrecisionPolicy,
     /// How the manifest spelled the policy (tier name or custom label).
     pub policy_label: String,
-    pub trace: TraceSpec,
+    /// Serving workload; `None` exactly when this is a figure trial.
+    pub trace: Option<TraceSpec>,
+    /// Figure computation; `None` exactly when this is a serving trial.
+    pub figure: Option<FigureSpec>,
     pub max_sessions: usize,
     pub prefill_chunk: usize,
     /// Thread-pool size for session stepping; 0 = sequential.
@@ -97,6 +138,12 @@ struct Raw {
     weight_format: Option<String>,
     fault_plan: Option<String>,
     fault_seed: Option<u64>,
+    figure_exp: Option<String>,
+    figure_mu_grid: Option<String>,
+    figure_num_seqs: Option<usize>,
+    figure_seq_len: Option<usize>,
+    figure_domain: Option<String>,
+    figure_tau: Option<f32>,
 }
 
 fn parse_num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T> {
@@ -170,6 +217,12 @@ impl Raw {
             ("weights", "format") => self.weight_format = Some(value.to_string()),
             ("faults", "plan") => self.fault_plan = Some(value.to_string()),
             ("faults", "seed") => self.fault_seed = Some(parse_num(key, value)?),
+            ("figure", "exp") => self.figure_exp = Some(value.to_string()),
+            ("figure", "mu-grid") => self.figure_mu_grid = Some(value.to_string()),
+            ("figure", "num-seqs") => self.figure_num_seqs = Some(parse_num(key, value)?),
+            ("figure", "seq-len") => self.figure_seq_len = Some(parse_num(key, value)?),
+            ("figure", "domain") => self.figure_domain = Some(value.to_string()),
+            ("figure", "tau") => self.figure_tau = Some(parse_num(key, value)?),
             _ => {
                 let place = if section.is_empty() {
                     "top level".to_string()
@@ -184,7 +237,67 @@ impl Raw {
         Ok(())
     }
 
+    /// Resolve the `[figure]` section, if present. Stray figure keys
+    /// without `exp` are typed errors like any other unknown state.
+    fn build_figure(&self) -> Result<Option<FigureSpec>> {
+        let exp = match &self.figure_exp {
+            Some(exp) => exp,
+            None => {
+                if self.figure_mu_grid.is_some()
+                    || self.figure_num_seqs.is_some()
+                    || self.figure_seq_len.is_some()
+                    || self.figure_domain.is_some()
+                    || self.figure_tau.is_some()
+                {
+                    return Err(Error::config(
+                        "trial manifest: [figure] keys require [figure] `exp`",
+                    ));
+                }
+                return Ok(None);
+            }
+        };
+        if exp != "fig1" {
+            return Err(Error::config(format!(
+                "trial manifest: unknown figure driver {exp:?} (expected fig1)"
+            )));
+        }
+        let grid_text = self
+            .figure_mu_grid
+            .as_deref()
+            .ok_or_else(|| Error::config("trial manifest: missing [figure] `mu-grid`"))?;
+        let mut mu_grid = Vec::new();
+        for part in grid_text.split(',') {
+            let mu: u32 = parse_num("mu-grid", part.trim())?;
+            if !(1..=23).contains(&mu) {
+                return Err(Error::config(format!(
+                    "trial manifest: [figure] mu-grid entry {mu} out of 1..=23"
+                )));
+            }
+            mu_grid.push(mu);
+        }
+        let domain_name = self.figure_domain.as_deref().unwrap_or("web");
+        let domain = Domain::by_name(domain_name).ok_or_else(|| {
+            Error::config(format!("trial manifest: unknown [figure] domain {domain_name:?}"))
+        })?;
+        let tau = self.figure_tau.unwrap_or(0.1);
+        if !tau.is_finite() || tau <= 0.0 {
+            return Err(Error::config(format!(
+                "trial manifest: [figure] tau must be finite and positive, got {tau}"
+            )));
+        }
+        let num_seqs = self.figure_num_seqs.unwrap_or(3);
+        let seq_len = self.figure_seq_len.unwrap_or(32);
+        if num_seqs == 0 || seq_len < 2 {
+            return Err(Error::config(
+                "trial manifest: [figure] needs num-seqs >= 1 and seq-len >= 2",
+            ));
+        }
+        Ok(Some(FigureSpec { exp: exp.clone(), mu_grid, num_seqs, seq_len, domain, tau }))
+    }
+
     fn build(self) -> Result<TrialManifest> {
+        // Resolve `[figure]` before any field is moved out of `self`.
+        let figure = self.build_figure()?;
         let name = self
             .name
             .ok_or_else(|| Error::config("trial manifest: missing top-level `name`"))?;
@@ -209,9 +322,50 @@ impl Raw {
             }
         };
 
-        let kind_name = self
-            .trace
-            .ok_or_else(|| Error::config("trial manifest: missing [workload] `trace`"))?;
+        if let Some(fig) = figure {
+            if self.trace.is_some() {
+                return Err(Error::config(
+                    "trial manifest: [figure] and [workload] are mutually exclusive",
+                ));
+            }
+            if self.tier.is_some() || self.mu.is_some() {
+                return Err(Error::config(
+                    "trial manifest: [policy] does not apply to figure trials \
+                     (the figure fixes its own policy ladder)",
+                ));
+            }
+            if self.kv_format.is_some()
+                || self.repair_tau.is_some()
+                || self.weight_format.is_some()
+                || self.fault_plan.is_some()
+            {
+                return Err(Error::config(
+                    "trial manifest: [kv]/[weights]/[faults] do not apply to figure trials",
+                ));
+            }
+            return Ok(TrialManifest {
+                name,
+                seed,
+                model,
+                weights_seed: self.weights_seed.unwrap_or(7),
+                policy,
+                policy_label,
+                trace: None,
+                figure: Some(fig),
+                max_sessions: self.max_sessions.unwrap_or(4),
+                prefill_chunk: self.prefill_chunk.unwrap_or(8),
+                workers: self.workers.unwrap_or(0),
+                kv_format: None,
+                repair_tau: None,
+                weight_format: None,
+                faults: None,
+                fault_label: "none".to_string(),
+            });
+        }
+
+        let kind_name = self.trace.ok_or_else(|| {
+            Error::config("trial manifest: missing [workload] `trace` (or [figure] `exp`)")
+        })?;
         let kind = TraceKind::by_name(&kind_name)?;
         let mut trace = TraceSpec::new(kind, model.vocab, model.seq);
         trace.seed = seed;
@@ -280,7 +434,8 @@ impl Raw {
             weights_seed: self.weights_seed.unwrap_or(7),
             policy,
             policy_label,
-            trace,
+            trace: Some(trace),
+            figure: None,
             max_sessions: self.max_sessions.unwrap_or(4),
             prefill_chunk: self.prefill_chunk.unwrap_or(8),
             workers: self.workers.unwrap_or(0),
@@ -336,9 +491,11 @@ plan = quiet\n";
         assert_eq!(m.model.name, "nano");
         assert_eq!(m.weights_seed, 9);
         assert_eq!(m.policy_label, "balanced");
-        assert_eq!(m.trace.kind, TraceKind::PrefixChat);
-        assert_eq!(m.trace.requests, 9);
-        assert_eq!(m.trace.seed, 42, "trace reuses the trial seed");
+        let trace = m.trace.as_ref().expect("serving trial has a trace");
+        assert_eq!(trace.kind, TraceKind::PrefixChat);
+        assert_eq!(trace.requests, 9);
+        assert_eq!(trace.seed, 42, "trace reuses the trial seed");
+        assert!(m.figure.is_none());
         assert_eq!(m.workers, 2);
         assert_eq!(m.kv_format, Some(WeightFormat::Bf16));
         assert_eq!(m.repair_tau, Some(1.0));
@@ -394,11 +551,60 @@ plan = quiet\n";
         let text = "name = d\nseed = 5\n[workload]\ntrace = poisson\nrequests = 20\n\
                     rate = 0.5\ntopk = 4\n";
         let m = TrialManifest::parse(text).unwrap();
-        assert_eq!(m.trace.kind, TraceKind::Poisson);
-        assert_eq!(m.trace.requests, 20);
-        assert_eq!(m.trace.rate, 0.5);
-        assert_eq!(m.trace.topk, 4);
+        let trace = m.trace.expect("serving trial has a trace");
+        assert_eq!(trace.kind, TraceKind::Poisson);
+        assert_eq!(trace.requests, 20);
+        assert_eq!(trace.rate, 0.5);
+        assert_eq!(trace.topk, 4);
         // The resulting spec actually generates.
-        assert_eq!(m.trace.generate().unwrap().len(), 20);
+        assert_eq!(trace.generate().unwrap().len(), 20);
+    }
+
+    const FIGURE: &str = "\
+name = fig-demo\n\
+seed = 5\n\
+\n\
+[model]\n\
+config = nano\n\
+weights-seed = 3\n\
+\n\
+[figure]\n\
+exp = fig1\n\
+mu-grid = 2, 4, 7\n\
+num-seqs = 2\n\
+seq-len = 12\n\
+domain = web\n\
+tau = 0.1\n";
+
+    #[test]
+    fn figure_manifest_parses() {
+        let m = TrialManifest::parse(FIGURE).unwrap();
+        assert!(m.trace.is_none(), "figure trials carry no serving trace");
+        let fig = m.figure.expect("figure spec");
+        assert_eq!(fig.exp, "fig1");
+        assert_eq!(fig.mu_grid, vec![2, 4, 7]);
+        assert_eq!(fig.num_seqs, 2);
+        assert_eq!(fig.seq_len, 12);
+        assert_eq!(fig.domain, crate::data::Domain::Web);
+        assert_eq!(fig.tau, 0.1);
+        assert_eq!(m.weights_seed, 3);
+    }
+
+    #[test]
+    fn figure_section_is_validated() {
+        // [figure] and [workload] are mutually exclusive.
+        let both = format!("{FIGURE}[workload]\ntrace = bursty\n");
+        assert!(TrialManifest::parse(&both).is_err());
+        // Unknown driver, missing grid, out-of-range mu, bad tau.
+        assert!(TrialManifest::parse(&FIGURE.replace("fig1", "fig99")).is_err());
+        assert!(TrialManifest::parse(&FIGURE.replace("mu-grid = 2, 4, 7\n", "")).is_err());
+        assert!(TrialManifest::parse(&FIGURE.replace("2, 4, 7", "0, 4")).is_err());
+        assert!(TrialManifest::parse(&FIGURE.replace("tau = 0.1", "tau = -1")).is_err());
+        // Figure keys without `exp` are a typed error, not silently dropped.
+        assert!(TrialManifest::parse(&FIGURE.replace("exp = fig1\n", "")).is_err());
+        // Serving-only sections don't apply to figure trials.
+        assert!(TrialManifest::parse(&format!("{FIGURE}[kv]\nformat = bf16\n")).is_err());
+        assert!(TrialManifest::parse(&format!("{FIGURE}[faults]\nplan = quiet\n")).is_err());
+        assert!(TrialManifest::parse(&format!("{FIGURE}[policy]\ntier = high\n")).is_err());
     }
 }

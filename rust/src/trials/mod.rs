@@ -9,26 +9,30 @@
 //! reproduce-every-number primitive — `lamp trials run <name>` twice and
 //! `lamp trials diff` the results (see DESIGN.md §Trials).
 //!
-//! Six workload manifests ship with the crate (the [`BUILTIN`] registry);
-//! any `.trial` file on disk runs the same way.
+//! Seven manifests ship with the crate (the [`BUILTIN`] registry): six
+//! serving workloads plus the `fig1` figure trial, which replays a paper
+//! figure's computation as a byte-exact artifact (see [`figure`]); any
+//! `.trial` file on disk runs the same way.
 
+pub mod figure;
 pub mod manifest;
 pub mod output;
 pub mod runner;
 
-pub use manifest::TrialManifest;
+pub use manifest::{FigureSpec, TrialManifest};
 pub use output::{canonical, first_divergence, token_fingerprint};
 pub use runner::{run, TrialRun};
 
 /// The bundled trial manifests, compiled into the binary so CI and a
 /// fresh checkout agree on the exact bytes being replayed.
-pub const BUILTIN: [(&str, &str); 6] = [
+pub const BUILTIN: [(&str, &str); 7] = [
     ("prefix-chat", include_str!("manifests/prefix-chat.trial")),
     ("long-context", include_str!("manifests/long-context.trial")),
     ("bursty", include_str!("manifests/bursty.trial")),
     ("poisson-mix", include_str!("manifests/poisson-mix.trial")),
     ("adversarial", include_str!("manifests/adversarial.trial")),
     ("chaos-replay", include_str!("manifests/chaos-replay.trial")),
+    ("fig1", include_str!("manifests/fig1.trial")),
 ];
 
 /// Look up a bundled manifest's text by name.

@@ -48,7 +48,7 @@ pub fn canonical(
     out.push_str(&format!("policy = {}\n", manifest.policy_label));
     out.push_str(&format!(
         "workload = {} requests={}\n",
-        manifest.trace.kind.name(),
+        manifest.trace.as_ref().map_or("none", |t| t.kind.name()),
         trace.len()
     ));
     out.push_str(&format!(

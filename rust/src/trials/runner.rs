@@ -27,7 +27,14 @@ pub struct TrialRun {
 
 /// Run a trial end to end.
 pub fn run(manifest: &TrialManifest) -> Result<TrialRun> {
-    let trace = manifest.trace.generate()?;
+    if let Some(fig) = &manifest.figure {
+        return super::figure::run(manifest, fig);
+    }
+    let trace = manifest
+        .trace
+        .as_ref()
+        .expect("manifest build guarantees trace xor figure")
+        .generate()?;
 
     let mut rng = Rng::new(manifest.weights_seed);
     let weights = Weights::random(&manifest.model, &mut rng)?;

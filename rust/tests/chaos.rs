@@ -176,6 +176,122 @@ fn chaos_every_stream_is_solo_identical_or_fails_exactly_once() {
 }
 
 #[test]
+fn chaos_faults_mid_speculation_stay_exact_and_leak_no_kv_blocks() {
+    // PR-9 satellite: every request carries a speculative draft, so the
+    // chaos plan's step errors, resource spikes and poisoning land inside
+    // speculation rounds — on draft steps and on the batched verify — not
+    // just on plain decode. The invariant is unchanged: every survivor
+    // streams bit-identical to solo decode under the plain *target*
+    // policy (speculation stays invisible under faults too), every
+    // casualty keeps a solo-prefix stream plus exactly one typed failure,
+    // and however many rounds were torn down mid-flight, the KV pool
+    // settles back to zero used blocks — a draft checkpoint leaked by a
+    // retry or preemption would show up here.
+    use lamp::coordinator::{SitePolicy, SpecPolicy};
+    let cfg = ModelConfig::nano();
+    let mut wrng = Rng::new(29);
+    let w = Weights::random(&cfg, &mut wrng).unwrap();
+    let oracle = NativeEngine::new(w.clone());
+    let target = PrecisionPolicy::lamp(3, 0.1, Rule::Strict);
+    let drafts = [
+        SpecPolicy::whole_model(SitePolicy::uniform(2), 4),
+        SpecPolicy::whole_model(SitePolicy::uniform(2), 2),
+        SpecPolicy::whole_model(SitePolicy::lamp(3, 0.2, Rule::Strict), 3),
+    ];
+    let mut total_injected = 0usize;
+    let mut rounds_under_fire = 0usize;
+
+    for plan_seed in [13u64, 41, 97] {
+        let ctx = format!("plan seed {plan_seed}");
+        let mut kv = KvCacheOptions::serving(&cfg, WeightFormat::F32, 3);
+        kv.sharing = false; // keep per-request streams comparable to solo
+        let engine = NativeEngine::new(w.clone()).with_kv_cache(kv).unwrap();
+        let inj = FaultInjector::new(engine, FaultPlan::chaos(plan_seed)).unwrap();
+        let opts = SchedulerOptions {
+            max_sessions: 3,
+            prefill_chunk: 4,
+            retry: RetryPolicy { max_retries: 8, backoff: Duration::ZERO, jitter: 0.0 },
+            max_run_steps: Some(200_000),
+            ..Default::default()
+        };
+        let mut sched = Scheduler::new(&inj, opts);
+
+        let mut prompts: HashMap<u64, Vec<u32>> = HashMap::new();
+        let mut solos: HashMap<u64, Vec<u32>> = HashMap::new();
+        for id in 0..6u64 {
+            let prompt: Vec<u32> = (0..3 + id as usize % 4)
+                .map(|j| ((id * 11 + j as u64 * 7 + 5) % 128) as u32)
+                .collect();
+            let max_new = 10 + id as usize % 5;
+            let (solo, _) =
+                oracle.generate(&prompt, max_new, &target, Decode::Greedy, id).unwrap();
+            solos.insert(id, solo);
+            prompts.insert(id, prompt.clone());
+            let policy = target.with_spec(Some(drafts[id as usize % drafts.len()]));
+            sched.admit(GenerateRequest::new(id, prompt, max_new, policy).with_seed(id));
+        }
+
+        let mut events = Vec::new();
+        sched
+            .run_until_idle(&mut events)
+            .unwrap_or_else(|e| panic!("{ctx}: run budget tripped: {e}"));
+        let f = fold(events, &ctx);
+
+        for id in 0..6u64 {
+            let solo = &solos[&id];
+            let prompt_len = prompts[&id].len();
+            match (f.finished.get(&id), f.failed.get(&id)) {
+                (Some(r), None) => {
+                    assert_eq!(
+                        &r.tokens, solo,
+                        "{ctx}: id {id} speculative decode diverged from solo under faults"
+                    );
+                    let streamed =
+                        f.streamed.get(&id).map(|v| v.as_slice()).unwrap_or(&[]);
+                    assert_eq!(
+                        streamed,
+                        r.generated(),
+                        "{ctx}: id {id} streamed tokens disagree with the response"
+                    );
+                    assert!(
+                        r.stats.spec.accepted <= r.stats.spec.drafted,
+                        "{ctx}: id {id} accepted more than it drafted"
+                    );
+                    assert_eq!(
+                        r.stats.spec.accept_hist.iter().sum::<usize>(),
+                        r.stats.spec.rounds,
+                        "{ctx}: id {id} speculation rounds double-counted across retries"
+                    );
+                    rounds_under_fire += r.stats.spec.rounds;
+                }
+                (None, Some(_err)) => {
+                    let streamed =
+                        f.streamed.get(&id).map(|v| v.as_slice()).unwrap_or(&[]);
+                    let cont = &solo[prompt_len..];
+                    assert!(
+                        streamed.len() <= cont.len()
+                            && streamed == &cont[..streamed.len()],
+                        "{ctx}: id {id} failed mid-speculation with a non-solo-prefix stream"
+                    );
+                }
+                _ => panic!("{ctx}: id {id} needs exactly one terminal event"),
+            }
+        }
+        assert_eq!(
+            inj.kv_pool().unwrap().stats().used_blocks,
+            0,
+            "{ctx}: KV blocks leaked by torn-down speculation rounds"
+        );
+        total_injected += sched.metrics().faults_injected;
+    }
+    assert!(total_injected > 0, "three chaos seeds must inject faults");
+    assert!(
+        rounds_under_fire > 0,
+        "survivors must have actually speculated under the chaos plan"
+    );
+}
+
+#[test]
 fn chaos_replay_with_same_seed_is_deterministic() {
     // Fault verdicts are pure functions of (plan seed, domain, session
     // seed, position, attempt) — so replaying the same workload against

@@ -225,6 +225,97 @@ fn paged_f32_cache_bit_identical_to_contiguous_for_every_plan() {
 }
 
 #[test]
+fn speculative_engine_decode_bit_identical_and_pool_settles() {
+    // The PR-9 acceptance pin at the engine level: under every
+    // (draft plan, k) the speculative stream equals the solo target-plan
+    // stream bit for bit, and the rollback-heavy draft traffic leaves the
+    // shared block pool empty once the session retires.
+    use lamp::coordinator::{SitePolicy, SpecPolicy};
+    use lamp::linalg::WeightFormat;
+    use lamp::model::KvCacheOptions;
+
+    let mut rng = Rng::new(61);
+    let w = Weights::random(&ModelConfig::nano(), &mut rng).unwrap();
+    let cfg = w.config.clone();
+    let target = PrecisionPolicy::lamp(3, 0.1, Rule::Strict);
+    let prompt: Vec<u32> = (0..6).map(|i| (i * 17 + 3) % 128).collect();
+    let solo_engine = NativeEngine::new(w.clone());
+    let (solo, _) = solo_engine.generate(&prompt, 16, &target, Decode::Greedy, 11).unwrap();
+
+    let engine = NativeEngine::new(w)
+        .with_kv_cache(KvCacheOptions::serving(&cfg, WeightFormat::F32, 2))
+        .unwrap();
+    for draft_mu in [1u32, 2, 3] {
+        for k in [1usize, 2, 4, 8] {
+            let spec = target
+                .with_spec(Some(SpecPolicy::whole_model(SitePolicy::uniform(draft_mu), k)));
+            spec.validate().unwrap();
+            let mut session = engine.decode_session(&spec, 11).unwrap();
+            let (tokens, stats) =
+                lamp::model::generate_with_session(&mut session, &prompt, 16, Decode::Greedy)
+                    .unwrap();
+            drop(session);
+            assert_eq!(tokens, solo, "stream diverges at draft mu={draft_mu} k={k}");
+            assert!(stats.spec.rounds > 0, "draft mu={draft_mu} k={k} never speculated");
+            assert_eq!(
+                engine.kv_pool().unwrap().stats().used_blocks,
+                0,
+                "draft mu={draft_mu} k={k} leaked pool blocks"
+            );
+        }
+    }
+}
+
+#[test]
+fn speculative_parity_holds_on_quantized_kv_pools() {
+    // The accepted prefix is re-realized under the *target* session's KV
+    // format and repair threshold, never the draft's scratch state — so
+    // speculation composes with quantized paged KV: spec and solo sessions
+    // over identically-configured pools emit identical streams, and both
+    // pools drain to zero used blocks when the sessions drop.
+    use lamp::linalg::WeightFormat;
+    use lamp::model::{
+        generate_with_session, KvBlockPool, KvCacheOptions, PrecisionPlan, SpecConfig,
+    };
+
+    let mut rng = Rng::new(62);
+    let w = Weights::random(&ModelConfig::nano(), &mut rng).unwrap();
+    let cfg = &w.config;
+    let target =
+        PrecisionPlan::whole_model(AttentionPrecision::lamp(3, 0.1, SoftmaxRule::Strict));
+    let spec_plan =
+        target.with_spec(Some(SpecConfig::whole_model(AttentionPrecision::uniform(2), 3)));
+    let prompt: Vec<u32> = (0..5).map(|i| (i * 23 + 2) % 128).collect();
+    for fmt in [WeightFormat::F32, WeightFormat::Bf16, WeightFormat::PsRounded { mu: 3 }] {
+        let mk_pool = || {
+            KvBlockPool::new(
+                cfg,
+                KvCacheOptions {
+                    format: fmt,
+                    repair_tau: 0.05,
+                    block_size: 4,
+                    capacity_blocks: cfg.seq.div_ceil(4) * 2,
+                    sharing: false,
+                },
+            )
+            .unwrap()
+        };
+        let (pool_a, pool_b) = (mk_pool(), mk_pool());
+        let mut solo = DecodeSession::with_pool(&w, target, 13, pool_a.clone());
+        let (a, _) = generate_with_session(&mut solo, &prompt, 14, Decode::Greedy).unwrap();
+        let mut spec = DecodeSession::with_pool(&w, spec_plan, 13, pool_b.clone());
+        let (b, stats) =
+            generate_with_session(&mut spec, &prompt, 14, Decode::Greedy).unwrap();
+        assert_eq!(a, b, "{fmt:?}: speculative stream diverges on quantized KV");
+        assert!(stats.spec.rounds > 0, "{fmt:?}: speculation never ran");
+        drop(solo);
+        drop(spec);
+        assert_eq!(pool_a.stats().used_blocks, 0, "{fmt:?}: solo pool leaked");
+        assert_eq!(pool_b.stats().used_blocks, 0, "{fmt:?}: spec pool leaked");
+    }
+}
+
+#[test]
 fn quantized_kv_repair_ladder_tau_zero_exact_uniform_bounded() {
     // The LAMP-repaired quantized KV contract: repair_tau = 0 pins every
     // inexact cached row at f32, making decode bit-identical to the f32

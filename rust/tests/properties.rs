@@ -722,6 +722,79 @@ fn prop_tile_selection_tau_monotone_and_count_matched_random() {
     );
 }
 
+// --- Speculative decoding (PR 9) ------------------------------------------
+
+#[test]
+fn prop_spec_acceptance_monotone_as_draft_coarsens() {
+    // Coarsening the draft plan along a τ ladder at fixed k can only pull
+    // the draft's logits further from the target it must anticipate, so
+    // the total accepted look-ahead — aggregated over several prompts to
+    // wash out per-step argmax luck — is monotone non-increasing down the
+    // ladder. Ties are allowed (widely-spaced rungs can saturate at either
+    // end: a loose τ that repairs nothing is bitwise the uniform draft),
+    // and adjacent rungs get a ±3-token allowance out of ~170 generated:
+    // acceptance is measured at token granularity, so two near-tied drafts
+    // can flip a couple of argmaxes in either direction without violating
+    // the statistical ordering. The output itself is pinned exactly: every
+    // rung decodes bit-identically to solo decode under the target plan.
+    use lamp::lamp::softmax::SoftmaxRule;
+    use lamp::model::{
+        generate_with_stats, Decode, ModelConfig, PrecisionPlan, SitePrecision, SpecConfig,
+        Weights,
+    };
+    let cfg = ModelConfig::nano();
+    let mut rng = Rng::new(0x5BEC);
+    let w = Weights::random(&cfg, &mut rng).unwrap();
+    let target =
+        PrecisionPlan::whole_model(SitePrecision::lamp(4, 0.02, SoftmaxRule::Strict));
+    let k = 4usize;
+    let ladder = [
+        ("lamp(3, tau=0.05)", SitePrecision::lamp(3, 0.05, SoftmaxRule::Strict)),
+        ("lamp(3, tau=0.5)", SitePrecision::lamp(3, 0.5, SoftmaxRule::Strict)),
+        ("uniform(3)", SitePrecision::uniform(3)),
+        ("uniform(2)", SitePrecision::uniform(2)),
+    ];
+    let new_tokens = 28;
+    let prompts: Vec<Vec<u32>> = (0..6u32)
+        .map(|p| (0..6u32).map(|j| (p * 19 + j * 7 + 3) % 128).collect())
+        .collect();
+    let solos: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| {
+            generate_with_stats(&w, p, new_tokens, target, Decode::Greedy, 11).unwrap().0
+        })
+        .collect();
+    let mut totals: Vec<(&str, usize)> = Vec::new();
+    for (label, draft) in ladder {
+        let plan = target.with_spec(Some(SpecConfig::whole_model(draft, k)));
+        plan.validate().unwrap();
+        let (mut accepted, mut rounds) = (0usize, 0usize);
+        for (p, solo) in prompts.iter().zip(&solos) {
+            let (toks, stats) =
+                generate_with_stats(&w, p, new_tokens, plan, Decode::Greedy, 11).unwrap();
+            assert_eq!(&toks, solo, "{label}: speculative stream diverged from solo");
+            accepted += stats.spec.accepted;
+            rounds += stats.spec.rounds;
+        }
+        assert!(rounds > 0, "{label}: never speculated");
+        totals.push((label, accepted));
+    }
+    assert!(totals[0].1 > 0, "the finest draft must accept some look-ahead");
+    for pair in totals.windows(2) {
+        let ((fine, a), (coarse, b)) = (pair[0], pair[1]);
+        assert!(
+            b <= a + 3,
+            "coarsening {fine} -> {coarse} increased aggregate acceptance ({a} -> {b})"
+        );
+    }
+    let (first, best) = totals[0];
+    let (last, worst) = totals[totals.len() - 1];
+    assert!(
+        worst <= best,
+        "end to end, {last} ({worst}) must not out-accept {first} ({best})"
+    );
+}
+
 // --- Workload generators (PR 7) ------------------------------------------
 
 #[test]

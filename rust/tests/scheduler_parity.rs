@@ -178,6 +178,103 @@ fn randomized_schedules_match_solo_generate() {
 }
 
 #[test]
+fn speculative_randomized_schedules_match_solo() {
+    // PR-9 scheduler pin: speculative and plain requests mixed in one
+    // randomized arrival schedule all stream bit-identically to solo
+    // decode under the *plain target* policy — speculation is invisible in
+    // the output, visible only in the acceptance accounting.
+    use lamp::coordinator::{SitePolicy, SpecPolicy};
+    let engine = nano_engine(3);
+    let vocab = engine.config().vocab;
+    let pool = Arc::new(ThreadPool::new(3));
+    let mut rng = Rng::new(0x5BEC);
+    let target = PrecisionPolicy::lamp(3, 0.1, Rule::Strict);
+    let drafts = [
+        SpecPolicy::whole_model(SitePolicy::uniform(2), 2),
+        SpecPolicy::whole_model(SitePolicy::uniform(2), 4),
+        SpecPolicy::whole_model(SitePolicy::uniform(3), 3),
+        SpecPolicy::whole_model(SitePolicy::lamp(3, 0.2, Rule::Strict), 5),
+    ];
+    for trial in 0..6u64 {
+        let n = rng.range(3, 7);
+        let reqs: Vec<GenerateRequest> = (0..n)
+            .map(|i| {
+                let prompt_len = rng.range(1, 9);
+                let prompt: Vec<u32> =
+                    (0..prompt_len).map(|_| rng.below(vocab as u64) as u32).collect();
+                let max_new = rng.range(0, 15);
+                let policy = if rng.below(4) == 0 {
+                    target
+                } else {
+                    target.with_spec(Some(drafts[rng.range(0, drafts.len())]))
+                };
+                let decode = if rng.below(2) == 0 {
+                    Decode::Greedy
+                } else {
+                    Decode::TopK { k: rng.range(1, 9), temperature: 0.6 + rng.f32() * 1.2 }
+                };
+                GenerateRequest::new(trial * 100 + i as u64, prompt, max_new, policy)
+                    .with_decode(decode)
+                    .with_seed(rng.next_u64() >> 1)
+            })
+            .collect();
+
+        // Solo oracle under the plain target policy, same seed: the spec
+        // requests must reproduce it exactly.
+        let mut solo_tokens = HashMap::new();
+        for r in &reqs {
+            let (toks, _) = engine
+                .generate(&r.prompt, r.max_new_tokens, &target, r.decode, r.seed)
+                .unwrap();
+            solo_tokens.insert(r.id, toks);
+        }
+
+        let opts = SchedulerOptions {
+            max_sessions: rng.range(1, 4),
+            prefill_chunk: rng.range(1, 5),
+            pool: if rng.below(2) == 0 { Some(pool.clone()) } else { None },
+            ..Default::default()
+        };
+        let (responses, streams) = run_schedule(&engine, reqs.clone(), opts, &mut rng);
+        assert_eq!(responses.len(), n, "trial {trial}: lost responses");
+        for r in &reqs {
+            let resp = &responses[&r.id];
+            assert_eq!(
+                &resp.tokens, &solo_tokens[&r.id],
+                "trial {trial} id {}: speculative scheduling changed the stream \
+                 (spec {:?}, prompt {} tokens, {} new)",
+                r.id,
+                r.policy.spec.map(|s| s.k),
+                r.prompt.len(),
+                r.max_new_tokens
+            );
+            let streamed = streams.get(&r.id).cloned().unwrap_or_default();
+            assert_eq!(resp.generated(), &streamed[..], "stream mismatch for {}", r.id);
+            if r.policy.spec.is_some() && resp.generated().len() >= 3 {
+                // max_new >= 3 always leaves look-ahead room after the
+                // seed token, so at least one round must have run.
+                assert!(
+                    resp.stats.spec.rounds > 0,
+                    "trial {trial} id {}: spec request never speculated",
+                    r.id
+                );
+                assert!(resp.stats.spec.accepted <= resp.stats.spec.drafted);
+                assert_eq!(
+                    resp.stats.spec.accept_hist.iter().sum::<usize>(),
+                    resp.stats.spec.rounds,
+                    "every round lands in one histogram bucket"
+                );
+            } else if r.policy.spec.is_none() {
+                assert_eq!(
+                    resp.stats.spec.rounds, 0,
+                    "plain request accrued speculative rounds"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn arrival_order_cannot_change_any_stream() {
     // The strongest interleaving property: the same request set served
     // under different schedules, slot counts, and pool configurations

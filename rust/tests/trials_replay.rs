@@ -23,7 +23,13 @@ fn every_bundled_manifest_replays_byte_identically() {
             panic!("{name}: reruns diverge: {d}");
         }
         assert!(a.starts_with(&format!("trial = {name}\n")), "{name}: header");
-        assert!(a.contains("\n[request 0]\n"), "{name}: per-request blocks");
+        if manifest.figure.is_some() {
+            // Figure trials pin per-mu blocks with bit-exact floats.
+            assert!(a.contains("\n[mu "), "{name}: per-mu blocks");
+            assert!(a.contains("bits="), "{name}: floats must be bit-pinned");
+        } else {
+            assert!(a.contains("\n[request 0]\n"), "{name}: per-request blocks");
+        }
         assert!(a.ends_with('\n'), "{name}: artifact must be newline-terminated");
     }
 }
