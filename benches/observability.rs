@@ -1,0 +1,160 @@
+//! The obs-plane overhead price — the PR-10 measurement.
+//!
+//! One scheduler workload driven twice, recorded into `BENCH_PR10.json`
+//! (override with `LAMP_BENCH_OUT`):
+//!
+//! * **obs off** — no caller hub: the scheduler runs on its private
+//!   wall-clock hub with no tracer, exactly what `Scheduler::new`
+//!   gives every pre-existing caller.
+//! * **obs on** — an attached `ObsHub` with a span tracer, plus a
+//!   registry snapshot and JSONL trace render after each drive (the
+//!   full `--metrics-out`/`--trace-out` export path).
+//!
+//! The bench asserts the two drives stream bit-identically (the parity
+//! suite pins this; the bench re-checks it on the workload it prices)
+//! and records the relative wall overhead — the ≤2% hot-path budget of
+//! DESIGN.md §Observability. Wall metrics stay out of the committed
+//! baseline (runner heterogeneity); the gate pins the workload shape.
+//!
+//! ```bash
+//! cargo bench --bench observability [-- --smoke]
+//! ```
+
+use lamp::benchkit::{record_bench_section, Bencher, JsonObj};
+use lamp::coordinator::{
+    Engine, GenerateRequest, KvCacheOptions, NativeEngine, PrecisionPolicy, Rule, Scheduler,
+    SchedulerOptions,
+};
+use lamp::linalg::WeightFormat;
+use lamp::model::{ModelConfig, Weights};
+use lamp::obs::{trace, ObsHub};
+use lamp::util::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn bench_out() -> std::path::PathBuf {
+    std::env::var("LAMP_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_PR10.json"))
+}
+
+const TRACE_CAPACITY: usize = 1 << 16;
+
+fn workload(n: usize, cfg: &ModelConfig, max_new: usize) -> Vec<GenerateRequest> {
+    let policy = PrecisionPolicy::lamp(4, 0.1, Rule::Relaxed);
+    (0..n as u64)
+        .map(|id| {
+            let prompt: Vec<u32> = (0..16u32)
+                .map(|i| (i * 31 + id as u32 * 13 + 3) % cfg.vocab as u32)
+                .collect();
+            GenerateRequest::new(id, prompt, max_new, policy).with_seed(id)
+        })
+        .collect()
+}
+
+/// Drain `reqs` through a fresh scheduler; returns the sorted token
+/// streams and the drain wall-clock. With `obs: Some(..)`, also renders
+/// the registry snapshot and span trace afterwards — export cost is
+/// part of what the obs-on column prices.
+fn drive(
+    engine: &dyn Engine,
+    reqs: &[GenerateRequest],
+    opts: &SchedulerOptions,
+    obs: Option<&Arc<ObsHub>>,
+) -> (Vec<Vec<u32>>, f64) {
+    let mut run_opts = opts.clone();
+    run_opts.obs = obs.map(Arc::clone);
+    let mut sched = Scheduler::new(engine, run_opts);
+    for r in reqs {
+        sched.admit(r.clone());
+    }
+    let t0 = Instant::now();
+    let mut done = sched.run_to_completion().expect("drive");
+    if let Some(hub) = obs {
+        let _snapshot = hub.registry().snapshot().to_json();
+        if let Some(tr) = hub.tracer() {
+            let _jsonl = trace::to_jsonl(&tr.events());
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(done.len(), reqs.len(), "every request must complete");
+    done.sort_by_key(|r| r.id);
+    (done.into_iter().map(|r| r.tokens).collect(), wall)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = ModelConfig {
+        name: "bench-obs".into(),
+        vocab: 256,
+        seq: if smoke { 48 } else { 128 },
+        layers: 4,
+        heads: 4,
+        d_model: 128,
+        batch: 1,
+    };
+    cfg.validate().expect("bench config");
+    let mut rng = Rng::new(71);
+    let weights = Weights::random(&cfg, &mut rng).unwrap();
+    let kv = KvCacheOptions::serving(&cfg, WeightFormat::F32, 4);
+    let engine = NativeEngine::new(weights).with_kv_cache(kv).unwrap();
+    let n_requests = if smoke { 4 } else { 16 };
+    let max_new = if smoke { 12 } else { 32 };
+    let reqs = workload(n_requests, &cfg, max_new);
+    let opts = SchedulerOptions { max_sessions: 4, prefill_chunk: 8, ..Default::default() };
+    let b = Bencher {
+        warmup_iters: if smoke { 0 } else { 1 },
+        sample_iters: if smoke { 1 } else { 7 },
+        max_total: Duration::from_secs(120),
+    };
+    let tokens_total = (n_requests * max_new) as f64;
+
+    // --- Obs off: the private-hub default every existing caller gets. ---
+    let stats = b.run("serve, obs off", || drive(&engine, &reqs, &opts, None));
+    println!("{}", stats.summary());
+    let off_wall = stats.median().as_secs_f64().max(1e-12);
+    let off_tok_s = tokens_total / off_wall;
+    let (off_streams, _) = drive(&engine, &reqs, &opts, None);
+
+    // --- Obs on: attached hub + tracer + post-drive exports. ---
+    let hub = Arc::new(ObsHub::new().with_tracer(TRACE_CAPACITY));
+    let stats = b.run("serve, obs on (tracer + exports)", || {
+        if let Some(tr) = hub.tracer() {
+            tr.clear(); // fresh ring per sample; capacity never rolls over
+        }
+        drive(&engine, &reqs, &opts, Some(&hub))
+    });
+    println!("{}", stats.summary());
+    let on_wall = stats.median().as_secs_f64().max(1e-12);
+    let on_tok_s = tokens_total / on_wall;
+    let (on_streams, _) = drive(&engine, &reqs, &opts, Some(&hub));
+    assert_eq!(off_streams, on_streams, "obs plane changed a token stream");
+    let spans = hub.tracer().map_or(0, |t| t.len());
+    assert!(spans > 0, "obs-on drive recorded no spans");
+
+    let overhead_pct = 100.0 * (on_wall / off_wall - 1.0);
+    println!(
+        "obs off {off_tok_s:.1} tok/s | obs on {on_tok_s:.1} tok/s | \
+         overhead {overhead_pct:+.2}% ({spans} spans; budget <=2%)"
+    );
+    if smoke {
+        println!("smoke mode: single-sample timings, overhead not comparable");
+    }
+
+    let obj = JsonObj::new()
+        .str("model", "4 layers, 4 heads, d=128, vocab=256")
+        .int("seq", cfg.seq as u64)
+        .int("requests", n_requests as u64)
+        .int("generated_per_request", max_new as u64)
+        .int("trace_capacity", TRACE_CAPACITY as u64)
+        .num("obs_off_tok_s", off_tok_s)
+        .num("obs_on_tok_s", on_tok_s)
+        .num("overhead_pct", overhead_pct)
+        .int("spans_recorded", spans as u64)
+        // Smoke records are single-sample and not comparable; mark them so
+        // downstream comparisons can't mistake them for real numbers.
+        .int("smoke", smoke as u64);
+    let path = bench_out();
+    record_bench_section(&path, "observability", &obj).expect("write bench record");
+    println!("recorded -> {}", path.display());
+}

@@ -11,10 +11,15 @@
 //! iteration-synchronously and keys every sampling stream by
 //! `(seed, site, position)`, so per-request token streams and LAMP
 //! counters depend only on the trace — not on the thread-pool size or the
-//! host's speed. Wall-clock outputs (TTFT/latency percentiles, retry
-//! backoff timing) are *not* deterministic and are reported separately;
-//! the trials subsystem excludes them from canonical output.
+//! host's speed. The replay hub's clock is always virtual, which also
+//! makes retry backoff iteration-counted and recorded span timestamps
+//! tick-valued: the observability output of a replay (trace exports,
+//! registry counters) is deterministic across reruns too. Wall-clock
+//! outputs (TTFT/latency percentiles) remain *not* deterministic and are
+//! reported separately; the trials subsystem excludes them from
+//! canonical output.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::engine::Engine;
@@ -23,6 +28,7 @@ use super::request::{GenerateRequest, GenerateResponse};
 use super::scheduler::{DecodeMetrics, GenerateEvent, Scheduler, SchedulerOptions};
 use crate::data::traces::TraceRequest;
 use crate::error::{Error, Result};
+use crate::obs::ObsHub;
 
 /// How a trace is turned into scheduler traffic.
 #[derive(Clone)]
@@ -81,13 +87,29 @@ pub fn replay(
     });
 
     let started = Instant::now();
-    let mut sched = Scheduler::new(engine, opts.scheduler.clone());
+    // Replay always runs on a virtual-clock hub: scheduler timestamps,
+    // retry backoff, and recorded spans are then counted in iterations,
+    // making the whole drive — including its observability output —
+    // deterministic across machines and reruns. A caller-supplied hub
+    // (e.g. with a tracer attached) must itself be built with
+    // `with_virtual_clock()` — `set_virtual` below is a no-op on wall
+    // hubs, and a wall-clock hub would silently reintroduce host-speed
+    // dependence into timestamps. The default is always virtual.
+    let hub = opts
+        .scheduler
+        .obs
+        .clone()
+        .unwrap_or_else(|| Arc::new(ObsHub::new().with_virtual_clock()));
+    let mut sched_opts = opts.scheduler.clone();
+    sched_opts.obs = Some(Arc::clone(&hub));
+    let mut sched = Scheduler::new(engine, sched_opts);
     let mut events: Vec<GenerateEvent> = Vec::new();
     let mut next = 0usize; // next trace index to admit
     let mut vstep = 0usize; // virtual clock, in scheduler iterations
     let mut iterations = 0usize;
 
     loop {
+        hub.set_virtual(vstep as u64);
         while next < trace.len() && trace[next].arrival_step <= vstep {
             let r = &trace[next];
             let mut req = GenerateRequest::new(

@@ -57,10 +57,22 @@ use super::policy::{DegradationLadder, PrecisionPolicy};
 use super::request::{GenerateRequest, GenerateResponse};
 use crate::error::Error;
 use crate::model::{DecodeSession, KvCheckpoint, LampStats, PrecisionPlan};
+use crate::obs::metrics::{Counter, Histogram};
+use crate::obs::trace::{SpanEvent, SpanKind};
+use crate::obs::ObsHub;
 use crate::util::{Rng, ThreadPool};
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Deterministic histogram bucket bounds (seconds / tokens). Fixed here
+/// so every registry snapshot of a scheduler has an identical layout.
+const TTFT_BOUNDS: [f64; 10] =
+    [1e-4, 5e-4, 1e-3, 5e-3, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0];
+const ITL_BOUNDS: [f64; 9] = [1e-5, 5e-5, 1e-4, 5e-4, 1e-3, 5e-3, 0.01, 0.05, 0.1];
+/// Bounds for the speculative acceptance-length histogram (tokens per
+/// round).
+const ACCEPT_BOUNDS: [f64; 8] = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 12.0];
 
 /// Bounded retry with exponential backoff + deterministic jitter for
 /// *retryable* step failures ([`Error::is_retryable`]): the failed step
@@ -125,6 +137,11 @@ pub struct SchedulerOptions {
     /// Graceful-degradation ladder; `None` (the default) disables the
     /// overload controller entirely — zero behavior change.
     pub ladder: Option<DegradationLadder>,
+    /// Observability hub the scheduler reports into (metrics registry,
+    /// optional span tracer, wall-or-virtual clock). `None` creates a
+    /// private wall-clock hub, so the reporting paths are identical with
+    /// observability on or off — instrumentation is provably inert.
+    pub obs: Option<Arc<ObsHub>>,
 }
 
 impl Default for SchedulerOptions {
@@ -137,6 +154,7 @@ impl Default for SchedulerOptions {
             max_run_steps: None,
             max_run_wall: None,
             ladder: None,
+            obs: None,
         }
     }
 }
@@ -288,6 +306,11 @@ struct ActiveSlot<'e> {
     retries: usize,
     /// The slot sits out iterations until this backoff deadline passes.
     backoff_until: Option<Instant>,
+    /// Virtual-clock twin of [`Self::backoff_until`]: under a virtual
+    /// hub clock the slot sits out this many scheduler iterations
+    /// instead of wall time, so replayed (trials) schedules are
+    /// deterministic across machines and reruns.
+    backoff_steps: usize,
     /// Speculative-decoding state machine; `None` when the request's
     /// policy carries no draft plan (plain one-token-per-step decode).
     spec: Option<SlotSpec>,
@@ -325,6 +348,9 @@ struct StepOutcome {
     emitted: Vec<u32>,
     done: bool,
     error: Option<Error>,
+    /// What unit of work this iteration performed (span attribution
+    /// only; never read by scheduling decisions).
+    unit: SpanKind,
 }
 
 impl ActiveSlot<'_> {
@@ -349,6 +375,7 @@ impl ActiveSlot<'_> {
             // Feed phase: the prompt (chunked), a preempted request's
             // recomputed prefix, or a single dangling token whose feed
             // failed on pool exhaustion last iteration.
+            self.outcome.unit = SpanKind::Prefill;
             let end = (self.prefilled + prefill_chunk.max(1)).min(self.tokens.len());
             while self.prefilled < end {
                 let tok = self.tokens[self.prefilled];
@@ -357,6 +384,7 @@ impl ActiveSlot<'_> {
             }
             return Ok(());
         }
+        self.outcome.unit = SpanKind::Decode;
         if self.generated >= self.req.max_new_tokens {
             // Reachable only on the retry/resume paths: the final token
             // was sampled before the interruption and has now been fed —
@@ -422,6 +450,7 @@ impl ActiveSlot<'_> {
         let fed_target =
             if self.generated == 0 { self.tokens.len() } else { self.tokens.len() - 1 };
         if self.prefilled < fed_target {
+            self.outcome.unit = SpanKind::Prefill;
             let end = (self.prefilled + prefill_chunk.max(1)).min(fed_target);
             while self.prefilled < end {
                 let tok = self.tokens[self.prefilled];
@@ -433,6 +462,7 @@ impl ActiveSlot<'_> {
         if self.generated == 0 {
             // First pick straight off the prefilled prompt, exactly like
             // the solo speculative loop's entry.
+            self.outcome.unit = SpanKind::Decode;
             let next = self.req.decode.pick(self.session.logits(), &mut self.rng)?;
             self.tokens.push(next);
             self.generated += 1;
@@ -447,6 +477,7 @@ impl ActiveSlot<'_> {
             // Budget spent: feed the final sampled token (solo parity —
             // the context is not full, or the slot would have retired at
             // pick time) and retire.
+            self.outcome.unit = SpanKind::Decode;
             self.session.decode_step(next)?;
             self.prefilled += 1;
             self.outcome.done = true;
@@ -475,6 +506,7 @@ impl ActiveSlot<'_> {
     /// draft phase early; with nothing drafted the round degenerates to a
     /// plain committed step this same iteration.
     fn draft_unit(&mut self, seq: usize) -> crate::error::Result<()> {
+        self.outcome.unit = SpanKind::Draft;
         let decode = self.req.decode;
         let (last, draft_plan) = {
             let spec = self.spec.as_ref().expect("spec slot");
@@ -526,6 +558,7 @@ impl ActiveSlot<'_> {
     /// phase is restored) or replays the whole round after preemption —
     /// bit-identically either way.
     fn verify_unit(&mut self, cands: Vec<u32>, seq: usize) -> crate::error::Result<()> {
+        self.outcome.unit = SpanKind::Verify;
         if let Err(e) = self.session.verify_chunk(&cands) {
             self.spec.as_mut().expect("spec slot").state = SpecPhase::Verify { cands };
             return Err(e);
@@ -565,6 +598,7 @@ impl ActiveSlot<'_> {
     /// when a round has no look-ahead room or none of its drafts
     /// survived.
     fn degenerate_step(&mut self, seq: usize) -> crate::error::Result<()> {
+        self.outcome.unit = SpanKind::Decode;
         let next = *self.tokens.last().expect("seed token");
         self.session.decode_step(next)?;
         self.prefilled += 1;
@@ -597,24 +631,37 @@ pub struct Scheduler<'e> {
     slots: Vec<Option<ActiveSlot<'e>>>,
     /// Retired sessions kept warm for slot recycling (reseat on admit).
     parked: Vec<DecodeSession<'e>>,
-    steps: usize,
-    active_steps: usize,
-    completed: usize,
-    failed: usize,
-    preemptions: usize,
-    generated_tokens: usize,
-    retries: usize,
-    timeouts: usize,
-    canceled: usize,
+    /// Observability hub: metrics registry (the counters below live in
+    /// it), optional span tracer, wall-or-virtual clock. Always present —
+    /// a private hub is created when the options carry none, so the
+    /// accounting paths are identical with observability on or off.
+    hub: Arc<ObsHub>,
+    // Lifetime accounting — registry-backed counter handles (same cost
+    // as the plain fields they replaced: one relaxed atomic add each).
+    steps: Counter,
+    active_steps: Counter,
+    completed: Counter,
+    failed: Counter,
+    preemptions: Counter,
+    generated_tokens: Counter,
+    retries: Counter,
+    timeouts: Counter,
+    canceled: Counter,
     // Degradation-ladder controller state (all 0/idle without a ladder).
     ladder_rung: usize,
     pressured_steps: usize,
     clear_steps: usize,
-    degrades: usize,
-    restores: usize,
-    degraded_admissions: usize,
+    degrades: Counter,
+    restores: Counter,
+    degraded_admissions: Counter,
+    /// Raw latency samples, kept alongside the bucketed histograms: the
+    /// exact nearest-rank percentiles in [`DecodeMetrics`] come from
+    /// these (`metrics::stats::percentile`), the histograms serve
+    /// exposition.
     ttfts: Vec<f64>,
     itls: Vec<f64>,
+    ttft_hist: Histogram,
+    itl_hist: Histogram,
     by_policy: Vec<(String, LampStats)>,
     totals: LampStats,
 }
@@ -626,32 +673,57 @@ impl<'e> Scheduler<'e> {
             ladder.validate().expect("invalid degradation ladder");
         }
         let slots = (0..opts.max_sessions).map(|_| None).collect();
+        let hub = opts.obs.clone().unwrap_or_else(|| Arc::new(ObsHub::new()));
+        let reg = hub.registry();
+        let steps = reg.counter("sched.steps");
+        let active_steps = reg.counter("sched.active_steps");
+        let completed = reg.counter("sched.completed");
+        let failed = reg.counter("sched.failed");
+        let preemptions = reg.counter("sched.preemptions");
+        let generated_tokens = reg.counter("sched.generated_tokens");
+        let retries = reg.counter("sched.retries");
+        let timeouts = reg.counter("sched.timeouts");
+        let canceled = reg.counter("sched.canceled");
+        let degrades = reg.counter("sched.degrade_transitions");
+        let restores = reg.counter("sched.restore_transitions");
+        let degraded_admissions = reg.counter("sched.degraded_admissions");
+        let ttft_hist = reg.histogram("sched.ttft_s", &TTFT_BOUNDS);
+        let itl_hist = reg.histogram("sched.itl_s", &ITL_BOUNDS);
         Scheduler {
             engine,
             opts,
             waiting: VecDeque::new(),
             slots,
             parked: Vec::new(),
-            steps: 0,
-            active_steps: 0,
-            completed: 0,
-            failed: 0,
-            preemptions: 0,
-            generated_tokens: 0,
-            retries: 0,
-            timeouts: 0,
-            canceled: 0,
+            hub,
+            steps,
+            active_steps,
+            completed,
+            failed,
+            preemptions,
+            generated_tokens,
+            retries,
+            timeouts,
+            canceled,
             ladder_rung: 0,
             pressured_steps: 0,
             clear_steps: 0,
-            degrades: 0,
-            restores: 0,
-            degraded_admissions: 0,
+            degrades,
+            restores,
+            degraded_admissions,
             ttfts: Vec::new(),
             itls: Vec::new(),
+            ttft_hist,
+            itl_hist,
             by_policy: Vec::new(),
             totals: LampStats::default(),
         }
+    }
+
+    /// The hub this scheduler reports into (for snapshotting its
+    /// registry or dumping its trace after a drive).
+    pub fn obs(&self) -> &Arc<ObsHub> {
+        &self.hub
     }
 
     /// Enqueue a request. No validation happens here (the `Server` front
@@ -660,6 +732,9 @@ impl<'e> Scheduler<'e> {
     /// instant is recorded: time spent waiting for a slot counts toward
     /// the request's TTFT and latency.
     pub fn admit(&mut self, req: GenerateRequest) {
+        if let Some(tr) = self.hub.tracer() {
+            tr.instant(req.id, SpanKind::Enqueue, self.hub.now());
+        }
         self.waiting
             .push_back(WaitingEntry { req, enqueued: Instant::now(), resume: None });
     }
@@ -713,6 +788,32 @@ impl<'e> Scheduler<'e> {
         } else {
             self.by_policy.push((label, stats.clone()));
         }
+        // Mirror the retired session's LAMP/spec counters into the
+        // registry. Retirement is a cold path (once per request), and the
+        // stats arrive exactly once per session — the single-count
+        // contract the parity tests pin carries straight over.
+        let reg = self.hub.registry();
+        reg.counter("lamp.attention.recomputed").add(stats.recomputed as u64);
+        reg.counter("lamp.attention.total").add(stats.causal_total as u64);
+        reg.counter("lamp.mlp.recomputed").add(stats.mlp.recomputed as u64);
+        reg.counter("lamp.mlp.total").add(stats.mlp.total as u64);
+        reg.counter("lamp.norm.recomputed").add(stats.norm.recomputed as u64);
+        reg.counter("lamp.norm.total").add(stats.norm.total as u64);
+        reg.counter("lamp.sampler.recomputed").add(stats.sampler.recomputed as u64);
+        reg.counter("lamp.sampler.total").add(stats.sampler.total as u64);
+        reg.counter("lamp.attention_tiles.recomputed").add(stats.tiles.recomputed as u64);
+        reg.counter("lamp.attention_tiles.total").add(stats.tiles.total as u64);
+        reg.counter("spec.rounds").add(stats.spec.rounds as u64);
+        reg.counter("spec.drafted").add(stats.spec.drafted as u64);
+        reg.counter("spec.accepted").add(stats.spec.accepted as u64);
+        reg.counter("spec.draft_steps").add(stats.spec.draft_steps as u64);
+        reg.counter("spec.verify_chunks").add(stats.spec.verify_chunks as u64);
+        if !stats.spec.accept_hist.is_empty() {
+            let hist = reg.histogram("spec.accept_len", &ACCEPT_BOUNDS);
+            for (i, &n) in stats.spec.accept_hist.iter().enumerate() {
+                hist.observe_n((i + 1) as f64, n as u64);
+            }
+        }
     }
 
     /// Move waiting requests into free slots. Requests that can produce
@@ -737,7 +838,7 @@ impl<'e> Scheduler<'e> {
                     let req = &entry.req;
                     let seq = self.engine.config().seq;
                     if req.prompt.is_empty() {
-                        self.failed += 1;
+                        self.failed.inc();
                         events.push(GenerateEvent::Failed {
                             id: req.id,
                             error: Error::shape("empty prompt".to_string()),
@@ -745,7 +846,7 @@ impl<'e> Scheduler<'e> {
                         continue;
                     }
                     if req.prompt.len() >= seq || req.max_new_tokens == 0 {
-                        self.completed += 1;
+                        self.completed.inc();
                         events.push(GenerateEvent::Finished(GenerateResponse {
                             id: entry.req.id,
                             prompt_len: entry.req.prompt.len(),
@@ -770,7 +871,7 @@ impl<'e> Scheduler<'e> {
                     if pool.capacity_blocks() < needed {
                         // Can never fit, even alone — fail instead of
                         // blocking the queue forever.
-                        self.failed += 1;
+                        self.failed.inc();
                         events.push(GenerateEvent::Failed {
                             id: entry.req.id,
                             error: Error::resource(format!(
@@ -794,10 +895,11 @@ impl<'e> Scheduler<'e> {
                         let eff = ladder.apply(self.ladder_rung, &entry.req.policy);
                         if eff != entry.req.policy {
                             entry.req.policy = eff;
-                            self.degraded_admissions += 1;
+                            self.degraded_admissions.inc();
                         }
                     }
                 }
+                let (req_id, resumed) = (entry.req.id, entry.resume.is_some());
                 match self.open_session(&entry.req.policy, entry.req.seed) {
                     Ok(mut session) => {
                         let mut req = entry.req;
@@ -833,6 +935,7 @@ impl<'e> Scheduler<'e> {
                                     outcome: StepOutcome::default(),
                                     retries: 0,
                                     backoff_until: None,
+                                    backoff_steps: 0,
                                     spec,
                                     session,
                                     req,
@@ -861,6 +964,7 @@ impl<'e> Scheduler<'e> {
                                     outcome: StepOutcome::default(),
                                     retries: 0,
                                     backoff_until: None,
+                                    backoff_steps: 0,
                                     spec,
                                     session,
                                     req,
@@ -868,10 +972,15 @@ impl<'e> Scheduler<'e> {
                             }
                         };
                         self.slots[slot_idx] = Some(slot);
+                        if let Some(tr) = self.hub.tracer() {
+                            let kind =
+                                if resumed { SpanKind::Resume } else { SpanKind::Admit };
+                            tr.instant(req_id, kind, self.hub.now());
+                        }
                         break;
                     }
                     Err(e) => {
-                        self.failed += 1;
+                        self.failed.inc();
                         events.push(GenerateEvent::Failed { id: entry.req.id, error: e });
                         continue;
                     }
@@ -889,10 +998,10 @@ impl<'e> Scheduler<'e> {
         while let Some(entry) = self.waiting.pop_front() {
             let waited = now.duration_since(entry.enqueued);
             let error = if entry.req.is_canceled() {
-                self.canceled += 1;
+                self.canceled.inc();
                 Some(Error::canceled(format!("request {} canceled while queued", entry.req.id)))
             } else if entry.req.deadline.total.is_some_and(|d| waited >= d) {
-                self.timeouts += 1;
+                self.timeouts.inc();
                 Some(Error::timeout(format!(
                     "request {} exceeded its total deadline while queued",
                     entry.req.id
@@ -900,7 +1009,7 @@ impl<'e> Scheduler<'e> {
             } else if entry.resume.as_ref().map_or(true, |r| r.first_token.is_none())
                 && entry.req.deadline.ttft.is_some_and(|d| waited >= d)
             {
-                self.timeouts += 1;
+                self.timeouts.inc();
                 Some(Error::timeout(format!(
                     "request {} exceeded its TTFT deadline while queued",
                     entry.req.id
@@ -910,7 +1019,7 @@ impl<'e> Scheduler<'e> {
             };
             match error {
                 Some(error) => {
-                    self.failed += 1;
+                    self.failed.inc();
                     events.push(GenerateEvent::Failed { id: entry.req.id, error });
                 }
                 None => kept.push_back(entry),
@@ -929,10 +1038,10 @@ impl<'e> Scheduler<'e> {
             let Some(slot) = &self.slots[i] else { continue };
             let age = now.duration_since(slot.admitted);
             let error = if slot.req.is_canceled() {
-                self.canceled += 1;
+                self.canceled.inc();
                 Some(Error::canceled(format!("request {} canceled", slot.req.id)))
             } else if slot.req.deadline.total.is_some_and(|d| age >= d) {
-                self.timeouts += 1;
+                self.timeouts.inc();
                 Some(Error::timeout(format!(
                     "request {} exceeded its total deadline mid-decode",
                     slot.req.id
@@ -940,7 +1049,7 @@ impl<'e> Scheduler<'e> {
             } else if slot.first_token.is_none()
                 && slot.req.deadline.ttft.is_some_and(|d| age >= d)
             {
-                self.timeouts += 1;
+                self.timeouts.inc();
                 Some(Error::timeout(format!(
                     "request {} exceeded its TTFT deadline before the first token",
                     slot.req.id
@@ -950,7 +1059,7 @@ impl<'e> Scheduler<'e> {
             };
             if let Some(error) = error {
                 let slot = self.slots[i].take().expect("live slot");
-                self.failed += 1;
+                self.failed.inc();
                 self.recycle(slot.session);
                 events.push(GenerateEvent::Failed { id: slot.req.id, error });
             }
@@ -975,7 +1084,7 @@ impl<'e> Scheduler<'e> {
                 && self.ladder_rung < ladder.max_rung()
             {
                 self.ladder_rung += 1;
-                self.degrades += 1;
+                self.degrades.inc();
                 self.pressured_steps = 0;
             }
         } else if clear {
@@ -983,7 +1092,7 @@ impl<'e> Scheduler<'e> {
             self.clear_steps += 1;
             if self.clear_steps >= ladder.restore_after && self.ladder_rung > 0 {
                 self.ladder_rung -= 1;
-                self.restores += 1;
+                self.restores.inc();
                 self.clear_steps = 0;
             }
         } else {
@@ -998,24 +1107,41 @@ impl<'e> Scheduler<'e> {
     /// harvest tokens / retirements / failures, update the ladder.
     pub fn step(&mut self) -> Vec<GenerateEvent> {
         let mut events = Vec::new();
-        let (timeouts0, preemptions0) = (self.timeouts, self.preemptions);
+        let (timeouts0, preemptions0) = (self.timeouts.get(), self.preemptions.get());
         self.expire_waiting(&mut events);
         self.admit_waiting(&mut events);
         self.expire_active(&mut events);
         let backoff_now = Instant::now();
-        let active: Vec<usize> = (0..self.slots.len())
-            .filter(|&i| {
-                self.slots[i].as_ref().is_some_and(|s| {
-                    s.backoff_until.map_or(true, |until| until <= backoff_now)
-                })
-            })
-            .collect();
+        let virtual_clock = self.hub.is_virtual();
+        let mut active: Vec<usize> = Vec::with_capacity(self.slots.len());
+        for i in 0..self.slots.len() {
+            let Some(s) = self.slots[i].as_mut() else { continue };
+            // Under a virtual hub clock, backoff is counted in scheduler
+            // iterations instead of wall time — replayed schedules (and
+            // the traces/metrics recorded from them) are deterministic.
+            let runnable = if virtual_clock {
+                if s.backoff_steps > 0 {
+                    s.backoff_steps -= 1;
+                    false
+                } else {
+                    true
+                }
+            } else {
+                s.backoff_until.map_or(true, |until| until <= backoff_now)
+            };
+            if runnable {
+                active.push(i);
+            }
+        }
         if active.is_empty() {
-            self.update_ladder(self.timeouts - timeouts0, self.preemptions - preemptions0);
+            let (dt, dp) = (self.timeouts.get() - timeouts0, self.preemptions.get() - preemptions0);
+            self.update_ladder(dt as usize, dp as usize);
+            self.record_terminal_spans(&events);
             return events;
         }
-        self.steps += 1;
-        self.active_steps += active.len();
+        self.steps.inc();
+        self.active_steps.add(active.len() as u64);
+        let t0 = self.hub.now();
         let chunk = self.opts.prefill_chunk.max(1);
         let pool = self.opts.pool.clone();
         match pool {
@@ -1038,6 +1164,8 @@ impl<'e> Scheduler<'e> {
             }
         }
         let now = Instant::now();
+        let t1 = self.hub.now();
+        let tracer = self.hub.tracer().cloned();
         // Pass 1: stream every sampled token first — also for slots that
         // erred or are about to be preempted, whose progress (including a
         // token sampled right before a failed feed) must be kept.
@@ -1050,6 +1178,23 @@ impl<'e> Scheduler<'e> {
                     // Any successful iteration clears the retry streak.
                     slot.retries = 0;
                     slot.backoff_until = None;
+                    slot.backoff_steps = 0;
+                }
+                if let Some(tr) = &tracer {
+                    if o.unit != SpanKind::Idle {
+                        let detail = if o.emitted.is_empty() {
+                            String::new()
+                        } else {
+                            format!("tokens={}", o.emitted.len())
+                        };
+                        tr.record(SpanEvent {
+                            request: slot.req.id,
+                            kind: o.unit,
+                            start: t0,
+                            end: t1,
+                            detail,
+                        });
+                    }
                 }
                 (o.emitted, o.done, o.error)
             };
@@ -1075,10 +1220,12 @@ impl<'e> Scheduler<'e> {
                 };
                 if is_first {
                     self.ttfts.push(dt);
+                    self.ttft_hist.observe(dt);
                 } else {
                     self.itls.push(dt);
+                    self.itl_hist.observe(dt);
                 }
-                self.generated_tokens += 1;
+                self.generated_tokens.inc();
                 events.push(GenerateEvent::Token { id, token, index });
             }
             outcomes.push((i, done, error));
@@ -1090,7 +1237,7 @@ impl<'e> Scheduler<'e> {
                 failures.push((i, err));
             } else if done {
                 let slot = self.slots[i].take().expect("active slot");
-                self.completed += 1;
+                self.completed.inc();
                 let stats = slot.session.stats().clone();
                 self.merge_policy_stats(&slot.req.policy, &stats);
                 self.recycle(slot.session);
@@ -1179,20 +1326,44 @@ impl<'e> Scheduler<'e> {
                 let slot = self.slots[i].as_mut().expect("live slot");
                 if slot.retries < retry.max_retries {
                     slot.retries += 1;
-                    slot.backoff_until =
-                        Some(now + retry.delay(slot.req.seed, slot.retries));
-                    self.retries += 1;
+                    if virtual_clock {
+                        // Iteration-counted exponential backoff: same
+                        // doubling shape as the wall policy, but ticked
+                        // by `step` calls so replays are deterministic.
+                        slot.backoff_steps = 1usize << (slot.retries - 1).min(6);
+                    } else {
+                        slot.backoff_until =
+                            Some(now + retry.delay(slot.req.seed, slot.retries));
+                    }
+                    self.retries.inc();
                     continue;
                 }
             }
             // Non-retryable failure, or the retry budget is spent.
             let slot = self.slots[i].take().expect("live slot");
-            self.failed += 1;
+            self.failed.inc();
             self.recycle(slot.session);
             events.push(GenerateEvent::Failed { id: slot.req.id, error: err });
         }
-        self.update_ladder(self.timeouts - timeouts0, self.preemptions - preemptions0);
+        let (dt, dp) = (self.timeouts.get() - timeouts0, self.preemptions.get() - preemptions0);
+        self.update_ladder(dt as usize, dp as usize);
+        self.record_terminal_spans(&events);
         events
+    }
+
+    /// Record a Retire/Fail marker for every terminal event in this
+    /// step's batch. Centralized here (events carry the request ids) so
+    /// the half-dozen retire/fail sites stay span-free.
+    fn record_terminal_spans(&self, events: &[GenerateEvent]) {
+        let Some(tr) = self.hub.tracer() else { return };
+        let tick = self.hub.now();
+        for ev in events {
+            match ev {
+                GenerateEvent::Finished(r) => tr.instant(r.id, SpanKind::Retire, tick),
+                GenerateEvent::Failed { id, .. } => tr.instant(*id, SpanKind::Fail, tick),
+                GenerateEvent::Token { .. } => {}
+            }
+        }
     }
 
     /// Preempt the live slot at `idx`: release its blocks (recycle resets
@@ -1203,7 +1374,10 @@ impl<'e> Scheduler<'e> {
     /// `scheduler_parity.rs` pins).
     fn preempt(&mut self, idx: usize) {
         let slot = self.slots[idx].take().expect("live victim slot");
-        self.preemptions += 1;
+        self.preemptions.inc();
+        if let Some(tr) = self.hub.tracer() {
+            tr.instant(slot.req.id, SpanKind::Preempt, self.hub.now());
+        }
         self.recycle(slot.session);
         self.waiting.push_front(WaitingEntry {
             req: slot.req,
@@ -1223,9 +1397,10 @@ impl<'e> Scheduler<'e> {
     /// each — the run-budget backstop. The one-terminal-event invariant
     /// holds: every aborted request gets exactly one `Failed`.
     fn abort_all(&mut self, events: &mut Vec<GenerateEvent>, why: &str) {
+        let first_new = events.len();
         while let Some(entry) = self.waiting.pop_front() {
-            self.failed += 1;
-            self.timeouts += 1;
+            self.failed.inc();
+            self.timeouts.inc();
             events.push(GenerateEvent::Failed {
                 id: entry.req.id,
                 error: Error::timeout(why.to_string()),
@@ -1233,8 +1408,8 @@ impl<'e> Scheduler<'e> {
         }
         for i in 0..self.slots.len() {
             if let Some(slot) = self.slots[i].take() {
-                self.failed += 1;
-                self.timeouts += 1;
+                self.failed.inc();
+                self.timeouts.inc();
                 self.recycle(slot.session);
                 events.push(GenerateEvent::Failed {
                     id: slot.req.id,
@@ -1242,6 +1417,7 @@ impl<'e> Scheduler<'e> {
                 });
             }
         }
+        self.record_terminal_spans(&events[first_new..]);
     }
 
     /// When a step made no observable progress, sleep only if every live
@@ -1249,6 +1425,12 @@ impl<'e> Scheduler<'e> {
     /// briefly when nothing is live but the queue is pool-gated. Steps
     /// that advanced a session (prefill emits no events) never sleep.
     fn idle_backoff(&self) {
+        if self.hub.is_virtual() {
+            // Virtual-clock drives (replay) never sleep: backoff is
+            // counted in iterations, and wall sleeps would only slow the
+            // deterministic schedule down.
+            return;
+        }
         let now = Instant::now();
         let mut runnable = false;
         let mut earliest: Option<Instant> = None;
@@ -1333,7 +1515,10 @@ impl<'e> Scheduler<'e> {
             .collect())
     }
 
-    /// Metrics snapshot.
+    /// Metrics snapshot. Counters are read back from the registry
+    /// handles; point-in-time state (KV pool, ladder rung, per-site
+    /// rates, fault totals) is mirrored into registry gauges here so a
+    /// registry snapshot taken after `metrics()` is self-contained.
     pub fn metrics(&self) -> DecodeMetrics {
         let kv = self.engine.kv_pool().map(|pool| pool.stats());
         let (kv_format, kv_resident_bytes, kv_blocks_used, kv_blocks_capacity) = match &kv {
@@ -1343,19 +1528,35 @@ impl<'e> Scheduler<'e> {
         let kv_occupancy = kv.as_ref().map(|s| s.occupancy()).unwrap_or(0.0);
         let prefix_share_hits = kv.as_ref().map(|s| s.share_hits).unwrap_or(0);
         let prefix_share_rate = kv.as_ref().map(|s| s.share_rate()).unwrap_or(0.0);
+        let faults_injected =
+            self.engine.fault_stats().map(|f| f.total()).unwrap_or(0);
+        let recompute_by_site = self.totals.site_rates();
+        let steps = self.steps.get() as usize;
+        let reg = self.hub.registry();
+        reg.gauge("kv.occupancy").set(kv_occupancy);
+        reg.gauge("kv.blocks_used").set(kv_blocks_used as f64);
+        reg.gauge("kv.blocks_capacity").set(kv_blocks_capacity as f64);
+        reg.gauge("kv.resident_bytes").set(kv_resident_bytes as f64);
+        reg.gauge("kv.prefix_share_hits").set(prefix_share_hits as f64);
+        reg.gauge("kv.prefix_share_rate").set(prefix_share_rate);
+        reg.gauge("sched.ladder_rung").set(self.ladder_rung as f64);
+        reg.gauge("faults.injected").set(faults_injected as f64);
+        for (site, rate) in &recompute_by_site {
+            reg.gauge(&format!("lamp.recompute_rate.{site}")).set(*rate);
+        }
         DecodeMetrics {
-            completed: self.completed,
-            failed: self.failed,
-            generated_tokens: self.generated_tokens,
-            steps: self.steps,
+            completed: self.completed.get() as usize,
+            failed: self.failed.get() as usize,
+            generated_tokens: self.generated_tokens.get() as usize,
+            steps,
             ttft_p50_s: percentile(&self.ttfts, 0.50),
             ttft_p95_s: percentile(&self.ttfts, 0.95),
             itl_p50_s: percentile(&self.itls, 0.50),
             itl_p95_s: percentile(&self.itls, 0.95),
-            mean_active_sessions: if self.steps == 0 {
+            mean_active_sessions: if steps == 0 {
                 0.0
             } else {
-                self.active_steps as f64 / self.steps as f64
+                self.active_steps.get() as f64 / steps as f64
             },
             recomputed: self.totals.recomputed,
             causal_total: self.totals.causal_total,
@@ -1364,8 +1565,8 @@ impl<'e> Scheduler<'e> {
                 .iter()
                 .map(|(l, s)| (l.clone(), s.rate()))
                 .collect(),
-            recompute_by_site: self.totals.site_rates(),
-            preemptions: self.preemptions,
+            recompute_by_site,
+            preemptions: self.preemptions.get() as usize,
             kv_format,
             kv_resident_bytes,
             kv_blocks_used,
@@ -1373,17 +1574,13 @@ impl<'e> Scheduler<'e> {
             kv_occupancy,
             prefix_share_hits,
             prefix_share_rate,
-            retries: self.retries,
-            timeouts: self.timeouts,
-            canceled: self.canceled,
-            faults_injected: self
-                .engine
-                .fault_stats()
-                .map(|f| f.total())
-                .unwrap_or(0),
-            degraded_admissions: self.degraded_admissions,
-            degrade_transitions: self.degrades,
-            restore_transitions: self.restores,
+            retries: self.retries.get() as usize,
+            timeouts: self.timeouts.get() as usize,
+            canceled: self.canceled.get() as usize,
+            faults_injected,
+            degraded_admissions: self.degraded_admissions.get() as usize,
+            degrade_transitions: self.degrades.get() as usize,
+            restore_transitions: self.restores.get() as usize,
             ladder_rung: self.ladder_rung,
             ladder_rung_name: self
                 .opts

@@ -19,7 +19,9 @@ use super::scheduler::{GenerateEvent, Scheduler, SchedulerOptions};
 use crate::error::{Error, Result};
 use crate::metrics::Accumulator;
 use crate::model::LampStats;
+use crate::obs::ObsHub;
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Aggregate serving statistics.
@@ -110,6 +112,91 @@ pub struct ServerStats {
     pub spec_accept_hist: Vec<usize>,
 }
 
+impl ServerStats {
+    /// Render the snapshot as one stable-keyed JSON object (the
+    /// `--stats-json` payload). Keys follow field declaration order;
+    /// the per-policy/per-site rate lists become objects keyed by label
+    /// and the acceptance histogram an integer array.
+    pub fn to_json(&self) -> String {
+        use crate::obs::export::{json_escape, json_f64};
+        fn rates(pairs: &[(String, f64)]) -> String {
+            let body = pairs
+                .iter()
+                .map(|(k, v)| {
+                    format!(
+                        "\"{}\": {}",
+                        crate::obs::export::json_escape(k),
+                        crate::obs::export::json_f64(*v)
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join(", ");
+            format!("{{{body}}}")
+        }
+        let hist = self
+            .spec_accept_hist
+            .iter()
+            .map(|n| n.to_string())
+            .collect::<Vec<_>>()
+            .join(", ");
+        let fields: Vec<(&str, String)> = vec![
+            ("requests", self.requests.to_string()),
+            ("batches", self.batches.to_string()),
+            ("padding_rows", self.padding_rows.to_string()),
+            ("total_tokens", self.total_tokens.to_string()),
+            ("recomputed", self.recomputed.to_string()),
+            ("causal_total", self.causal_total.to_string()),
+            ("latency_mean_s", json_f64(self.latency_mean_s)),
+            ("latency_p95_s", json_f64(self.latency_p95_s)),
+            ("wall_s", json_f64(self.wall_s)),
+            ("throughput_tok_s", json_f64(self.throughput_tok_s)),
+            ("generate_requests", self.generate_requests.to_string()),
+            ("generate_failed", self.generate_failed.to_string()),
+            ("generated_tokens", self.generated_tokens.to_string()),
+            ("ttft_p50_s", json_f64(self.ttft_p50_s)),
+            ("ttft_p95_s", json_f64(self.ttft_p95_s)),
+            ("itl_p50_s", json_f64(self.itl_p50_s)),
+            ("itl_p95_s", json_f64(self.itl_p95_s)),
+            ("mean_active_sessions", json_f64(self.mean_active_sessions)),
+            ("recompute_rate_by_policy", rates(&self.recompute_rate_by_policy)),
+            ("recompute_rate_by_site", rates(&self.recompute_rate_by_site)),
+            ("weight_format", format!("\"{}\"", json_escape(&self.weight_format))),
+            ("kv_format", format!("\"{}\"", json_escape(&self.kv_format))),
+            ("kv_resident_bytes", self.kv_resident_bytes.to_string()),
+            ("kv_blocks_used", self.kv_blocks_used.to_string()),
+            ("kv_blocks_capacity", self.kv_blocks_capacity.to_string()),
+            ("kv_occupancy", json_f64(self.kv_occupancy)),
+            ("prefix_share_hits", self.prefix_share_hits.to_string()),
+            ("prefix_share_rate", json_f64(self.prefix_share_rate)),
+            ("preemptions", self.preemptions.to_string()),
+            ("generate_retries", self.generate_retries.to_string()),
+            ("generate_timeouts", self.generate_timeouts.to_string()),
+            ("generate_canceled", self.generate_canceled.to_string()),
+            ("faults_injected", self.faults_injected.to_string()),
+            ("degraded_admissions", self.degraded_admissions.to_string()),
+            ("degrade_transitions", self.degrade_transitions.to_string()),
+            ("restore_transitions", self.restore_transitions.to_string()),
+            ("ladder_rung", self.ladder_rung.to_string()),
+            (
+                "ladder_rung_name",
+                format!("\"{}\"", json_escape(&self.ladder_rung_name)),
+            ),
+            ("spec_rounds", self.spec_rounds.to_string()),
+            ("spec_drafted", self.spec_drafted.to_string()),
+            ("spec_accepted", self.spec_accepted.to_string()),
+            ("spec_acceptance_rate", json_f64(self.spec_acceptance_rate)),
+            ("spec_mean_accept_len", json_f64(self.spec_mean_accept_len)),
+            ("spec_accept_hist", format!("[{hist}]")),
+        ];
+        let body = fields
+            .iter()
+            .map(|(k, v)| format!("  \"{k}\": {v}"))
+            .collect::<Vec<_>>()
+            .join(",\n");
+        format!("{{\n{body}\n}}\n")
+    }
+}
+
 /// Synchronous batching server over one engine.
 pub struct Server {
     engine: Box<dyn Engine>,
@@ -119,6 +206,11 @@ pub struct Server {
     started: Instant,
     pending_generate: VecDeque<GenerateRequest>,
     decode_opts: SchedulerOptions,
+    /// The server's observability hub: each generation drive runs against
+    /// a child hub (shared tracer/clock, private registry) whose counters
+    /// are absorbed back here, so lifetime counters accumulate across
+    /// drives exactly like the `+=` folds in [`ServerStats`].
+    obs: Arc<ObsHub>,
 }
 
 impl Server {
@@ -132,6 +224,7 @@ impl Server {
             started: Instant::now(),
             pending_generate: VecDeque::new(),
             decode_opts: SchedulerOptions::default(),
+            obs: Arc::new(ObsHub::new()),
         }
     }
 
@@ -140,6 +233,21 @@ impl Server {
     pub fn with_scheduler_options(mut self, opts: SchedulerOptions) -> Self {
         self.decode_opts = opts;
         self
+    }
+
+    /// Attach an observability hub (e.g. one with a span tracer for
+    /// `--trace-out`, or a virtual clock under replay). The scheduler
+    /// options' own `obs` field is ignored by the server — drives always
+    /// go through children of this hub.
+    pub fn with_obs(mut self, hub: Arc<ObsHub>) -> Self {
+        self.obs = hub;
+        self
+    }
+
+    /// The server's observability hub (snapshot its registry for
+    /// `--metrics-out`, read its tracer for `--trace-out`).
+    pub fn obs(&self) -> &Arc<ObsHub> {
+        &self.obs
     }
 
     /// Validate and enqueue a request. Backend capability is checked here
@@ -189,8 +297,11 @@ impl Server {
         }
         let reqs: Vec<GenerateRequest> = self.pending_generate.drain(..).collect();
         let n = reqs.len();
+        let drive_hub = Arc::new(self.obs.child());
         let (events, metrics, outcome) = {
-            let mut sched = Scheduler::new(self.engine.as_ref(), self.decode_opts.clone());
+            let mut opts = self.decode_opts.clone();
+            opts.obs = Some(Arc::clone(&drive_hub));
+            let mut sched = Scheduler::new(self.engine.as_ref(), opts);
             for r in reqs {
                 sched.admit(r);
             }
@@ -198,6 +309,10 @@ impl Server {
             let outcome = sched.run_until_idle(&mut events);
             (events, sched.metrics(), outcome)
         };
+        // Fold the drive's counters/gauges/histograms into the server
+        // registry: counters add (lifetime accumulation), gauges take the
+        // latest value — the same semantics as the field folds below.
+        self.obs.registry().absorb(&drive_hub.registry().snapshot());
         self.stats.generate_requests += n;
         self.stats.generate_failed += metrics.failed;
         self.stats.generated_tokens += metrics.generated_tokens;

@@ -165,6 +165,7 @@ fn matvec_bias_flat_bf16(x_row: &[f32], wdata: &[u16], n: usize, bias: &[f32], o
 /// dequantization — the decode hot path reads the stored bytes directly.
 #[inline]
 pub fn matvec_bias_into_wt(x_row: &[f32], w: &WeightTensor, bias: &[f32], out: &mut [f32]) {
+    let _t = crate::obs::timers::scoped(crate::obs::timers::Site::Matvec);
     debug_assert_eq!(x_row.len(), w.rows());
     debug_assert_eq!(out.len(), w.cols());
     debug_assert!(bias.is_empty() || bias.len() == w.cols());
@@ -272,6 +273,7 @@ pub fn matvec_ps_bias_into_wt(
     mu: u32,
     out: &mut [f32],
 ) {
+    let _t = crate::obs::timers::scoped(crate::obs::timers::Site::Matvec);
     debug_assert_eq!(x_row.len(), w.rows());
     debug_assert_eq!(out.len(), w.cols());
     debug_assert!(bias.is_empty() || bias.len() == w.cols());

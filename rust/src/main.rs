@@ -11,7 +11,11 @@
 //!     [--logits-mu 7 --logits-tau 0.05 --logits-rule relaxed] \
 //!     [--weights-fmt f32|bf16|ps<mu>]
 //! lamp generate --model nano [--kv-fmt bf16 --kv-tau 0.01] \
-//!     [--spec-k 4 --spec-draft 2] ...
+//!     [--spec-k 4 --spec-draft 2] [--stats-json stats.json] ...
+//! lamp serve ... [--stats-json s.json --metrics-out m.json --trace-out t.jsonl]
+//! lamp trials run <name> [--trace-out t.jsonl --metrics-out m.json]
+//! lamp obs metrics m.json [--format prometheus|json]
+//! lamp obs trace t.jsonl [--kind decode] [--request 3] [--chrome]
 //! ```
 //!
 //! The `--mlp-*`/`--norm-*`/`--logits-*` options activate the non-attention
@@ -34,8 +38,10 @@ use lamp::coordinator::{
 };
 use lamp::data::{Dataset, Domain};
 use lamp::experiments::{self, EvalOptions};
+use lamp::obs::ObsHub;
 use lamp::runtime::ArtifactStore;
 use lamp::util::Stopwatch;
+use std::sync::Arc;
 
 fn cli() -> Command {
     Command::new("lamp", "LAMP: look-ahead mixed-precision inference — reproduction harness")
@@ -98,6 +104,21 @@ fn cli() -> Command {
                 ))
                 .arg(spec_k_arg())
                 .arg(spec_draft_arg())
+                .arg(ArgSpec::opt(
+                    "stats-json",
+                    "write the final ServerStats as stable-keyed JSON to this file",
+                    "",
+                ))
+                .arg(ArgSpec::opt(
+                    "metrics-out",
+                    "write a metrics-registry snapshot (JSON) to this file",
+                    "",
+                ))
+                .arg(ArgSpec::opt(
+                    "trace-out",
+                    "write the per-request span trace (JSONL) to this file",
+                    "",
+                ))
                 .arg(ArgSpec::opt("seed", "workload seed", "1")),
         )
         .subcommand(
@@ -129,6 +150,11 @@ fn cli() -> Command {
                 .arg(ArgSpec::opt("temperature", "sampling temperature", "1.0"))
                 .arg(spec_k_arg())
                 .arg(spec_draft_arg())
+                .arg(ArgSpec::opt(
+                    "stats-json",
+                    "write the generation stats as stable-keyed JSON to this file",
+                    "",
+                ))
                 .arg(ArgSpec::opt("artifacts", "artifact directory", "artifacts"))
                 .arg(ArgSpec::opt("seed", "seed", "0")),
         ))
@@ -164,6 +190,18 @@ fn cli() -> Command {
                             "workers",
                             "override the manifest's [scheduler] workers (empty = keep)",
                             "",
+                        ))
+                        .arg(ArgSpec::opt(
+                            "trace-out",
+                            "write the replay's span trace (JSONL; virtual-clock \
+                             ticks, deterministic across reruns) to this file",
+                            "",
+                        ))
+                        .arg(ArgSpec::opt(
+                            "metrics-out",
+                            "write the replay's metrics-registry snapshot (JSON) \
+                             to this file",
+                            "",
                         )),
                 )
                 .subcommand(Command::new("list", "list the bundled trial manifests"))
@@ -171,6 +209,33 @@ fn cli() -> Command {
                     Command::new("diff", "byte-compare two canonical trial artifacts")
                         .arg(ArgSpec::pos("a", "first artifact path", true))
                         .arg(ArgSpec::pos("b", "second artifact path", true)),
+                ),
+        )
+        .subcommand(
+            Command::new("obs", "render observability exports (metrics|trace)")
+                .subcommand(
+                    Command::new("metrics", "render a metrics snapshot written by --metrics-out")
+                        .arg(ArgSpec::pos("snapshot", "metrics snapshot JSON path", true))
+                        .arg(ArgSpec::opt("format", "prometheus|json", "prometheus")),
+                )
+                .subcommand(
+                    Command::new("trace", "filter/convert a span trace written by --trace-out")
+                        .arg(ArgSpec::pos("trace", "span trace JSONL path", true))
+                        .arg(ArgSpec::opt(
+                            "kind",
+                            "keep only spans of this kind (enqueue|admit|resume|prefill|\
+                             decode|draft|verify|preempt|retire|fail; empty = all)",
+                            "",
+                        ))
+                        .arg(ArgSpec::opt(
+                            "request",
+                            "keep only spans of this request id (empty = all)",
+                            "",
+                        ))
+                        .arg(ArgSpec::flag(
+                            "chrome",
+                            "emit Chrome trace_event JSON instead of JSONL",
+                        )),
                 ),
         )
         .subcommand(
@@ -317,6 +382,7 @@ fn main() {
             "forward" => cmd_forward(sub),
             "generate" => cmd_generate(sub),
             "trials" => cmd_trials(sub),
+            "obs" => cmd_obs(sub),
             "bench-diff" => cmd_bench_diff(sub),
             _ => unreachable!(),
         },
@@ -434,8 +500,17 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
     if degrade {
         decode_opts.ladder = Some(DegradationLadder::default());
     }
+    let stats_json = args.get_str("stats-json")?;
+    let metrics_out = args.get_str("metrics-out")?;
+    let trace_out = args.get_str("trace-out")?;
+    let mut hub = ObsHub::new();
+    if !trace_out.is_empty() {
+        hub = hub.with_tracer(1 << 16);
+    }
+    let hub = Arc::new(hub);
     let mut server = Server::new(engine, std::time::Duration::from_millis(5))
-        .with_scheduler_options(decode_opts);
+        .with_scheduler_options(decode_opts)
+        .with_obs(Arc::clone(&hub));
     let mut served = 0usize;
     for (i, seq) in dataset.sequences.into_iter().enumerate() {
         server.submit(InferenceRequest::new(i as u64, seq, policy))?;
@@ -580,6 +655,26 @@ fn cmd_serve(args: &Args) -> lamp::Result<()> {
         }
     }
     t.print();
+    if !stats_json.is_empty() {
+        std::fs::write(&stats_json, stats.to_json())?;
+        eprintln!("wrote server stats to {stats_json}");
+    }
+    if !metrics_out.is_empty() {
+        // Fold any cfg-gated kernel timer samples in before snapshotting.
+        lamp::obs::timers::publish(hub.registry());
+        std::fs::write(&metrics_out, hub.registry().snapshot().to_json())?;
+        eprintln!("wrote metrics snapshot to {metrics_out}");
+    }
+    if !trace_out.is_empty() {
+        if let Some(tr) = hub.tracer() {
+            std::fs::write(&trace_out, lamp::obs::trace::to_jsonl(&tr.events()))?;
+            eprintln!(
+                "wrote span trace to {trace_out} ({} spans, {} dropped)",
+                tr.len(),
+                tr.dropped()
+            );
+        }
+    }
     Ok(())
 }
 
@@ -671,6 +766,37 @@ fn cmd_generate(args: &Args) -> lamp::Result<()> {
     );
     println!("  wall: {:.3}s", sw.secs());
     sw.lap("generate");
+    let stats_json = args.get_str("stats-json")?;
+    if !stats_json.is_empty() {
+        use lamp::obs::export::json_f64;
+        let mut fields: Vec<(String, String)> = vec![
+            ("prompt_tokens".to_string(), prompt.len().to_string()),
+            (
+                "generated_tokens".to_string(),
+                (tokens.len() - prompt.len()).to_string(),
+            ),
+            ("recomputed".to_string(), stats.recomputed.to_string()),
+            ("causal_total".to_string(), stats.causal_total.to_string()),
+        ];
+        for (site, rate) in stats.site_rates() {
+            fields.push((format!("recompute_rate.{site}"), json_f64(rate)));
+        }
+        fields.push(("spec_rounds".to_string(), stats.spec.rounds.to_string()));
+        fields.push(("spec_drafted".to_string(), stats.spec.drafted.to_string()));
+        fields.push(("spec_accepted".to_string(), stats.spec.accepted.to_string()));
+        fields.push((
+            "kv_resident_bytes".to_string(),
+            session.kv().resident_bytes().to_string(),
+        ));
+        fields.push(("kv_pinned_rate".to_string(), json_f64(session.kv().pinned_rate())));
+        let body = fields
+            .iter()
+            .map(|(k, v)| format!("  \"{k}\": {v}"))
+            .collect::<Vec<_>>()
+            .join(",\n");
+        std::fs::write(&stats_json, format!("{{\n{body}\n}}\n"))?;
+        eprintln!("wrote generation stats to {stats_json}");
+    }
     Ok(())
 }
 
@@ -756,7 +882,21 @@ fn cmd_trials_run(args: &Args) -> lamp::Result<()> {
             .parse()
             .map_err(|_| lamp::Error::config(format!("--workers: bad count {workers:?}")))?;
     }
-    let trial = lamp::trials::run(&manifest)?;
+    let trace_out = args.get_str("trace-out")?;
+    let metrics_out = args.get_str("metrics-out")?;
+    // Observability rides along on a virtual-clock hub (replay drives the
+    // ticks), so the exports below are deterministic across reruns; the
+    // canonical artifact is byte-identical with or without the hub.
+    let hub = if trace_out.is_empty() && metrics_out.is_empty() {
+        None
+    } else {
+        let mut h = ObsHub::new().with_virtual_clock();
+        if !trace_out.is_empty() {
+            h = h.with_tracer(1 << 16);
+        }
+        Some(Arc::new(h))
+    };
+    let trial = lamp::trials::run_with_obs(&manifest, hub.clone())?;
     // Human-facing timing summary goes to stderr so stdout stays the
     // byte-exact canonical artifact (pipe it straight into `trials diff`).
     eprint!("{}", trial.display);
@@ -766,6 +906,22 @@ fn cmd_trials_run(args: &Args) -> lamp::Result<()> {
     } else {
         std::fs::write(&out, &trial.canonical)?;
         eprintln!("wrote canonical artifact to {out}");
+    }
+    if let Some(hub) = hub {
+        if !metrics_out.is_empty() {
+            std::fs::write(&metrics_out, hub.registry().snapshot().to_json())?;
+            eprintln!("wrote metrics snapshot to {metrics_out}");
+        }
+        if !trace_out.is_empty() {
+            if let Some(tr) = hub.tracer() {
+                std::fs::write(&trace_out, lamp::obs::trace::to_jsonl(&tr.events()))?;
+                eprintln!(
+                    "wrote span trace to {trace_out} ({} spans, {} dropped)",
+                    tr.len(),
+                    tr.dropped()
+                );
+            }
+        }
     }
     Ok(())
 }
@@ -817,6 +973,58 @@ fn cmd_trials_diff(args: &Args) -> lamp::Result<()> {
         }
         Some(d) => Err(lamp::Error::config(format!("{pa} vs {pb}: {d}"))),
     }
+}
+
+fn cmd_obs(args: &Args) -> lamp::Result<()> {
+    match &args.subcommand {
+        Some((name, sub)) => match name.as_str() {
+            "metrics" => cmd_obs_metrics(sub),
+            "trace" => cmd_obs_trace(sub),
+            _ => unreachable!(),
+        },
+        None => Err(lamp::Error::config("obs: expected a subcommand (metrics|trace)")),
+    }
+}
+
+fn cmd_obs_metrics(args: &Args) -> lamp::Result<()> {
+    let path = args.positionals()[0].clone();
+    let snap = lamp::obs::Snapshot::from_json(&std::fs::read_to_string(&path)?)?;
+    match args.get_str("format")?.as_str() {
+        "prometheus" => print!("{}", snap.to_prometheus()),
+        "json" => print!("{}", snap.to_json()),
+        other => {
+            return Err(lamp::Error::config(format!(
+                "unknown format {other:?} (prometheus|json)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_obs_trace(args: &Args) -> lamp::Result<()> {
+    let path = args.positionals()[0].clone();
+    let mut events = lamp::obs::trace::parse_jsonl(&std::fs::read_to_string(&path)?);
+    let total = events.len();
+    let kind = args.get_str("kind")?;
+    if !kind.is_empty() {
+        let k = lamp::obs::SpanKind::parse(&kind)
+            .ok_or_else(|| lamp::Error::config(format!("unknown span kind {kind:?}")))?;
+        events.retain(|e| e.kind == k);
+    }
+    let request = args.get_str("request")?;
+    if !request.is_empty() {
+        let id: u64 = request
+            .parse()
+            .map_err(|_| lamp::Error::config(format!("--request: bad id {request:?}")))?;
+        events.retain(|e| e.request == id);
+    }
+    if args.get_flag("chrome") {
+        print!("{}", lamp::obs::trace::to_chrome(&events));
+    } else {
+        print!("{}", lamp::obs::trace::to_jsonl(&events));
+    }
+    eprintln!("{} of {total} span(s) kept", events.len());
+    Ok(())
 }
 
 fn cmd_bench_diff(args: &Args) -> lamp::Result<()> {

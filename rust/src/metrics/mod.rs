@@ -1,11 +1,20 @@
-//! Accuracy and efficiency metrics of paper §4.2:
+//! Offline *accuracy and efficiency* metrics of paper §4.2 — computed
+//! after the fact over evaluation panels, never on a serving hot path:
 //!
 //! * [`kl`] — mean Kullback–Leibler divergence between reference and test
 //!   output distributions over evaluation panels.
 //! * [`flip`] — flip rate: how often the argmax prediction differs.
 //! * [`pareto`] — Pareto boundaries (accuracy vs recomputation rate) used
 //!   in Figures 3–7.
-//! * [`stats`] — aggregation helpers (mean/stderr accumulators).
+//! * [`stats`] — aggregation helpers (mean/stderr accumulators, the
+//!   nearest-rank [`percentile`] every latency summary in the repo
+//!   delegates to).
+//!
+//! The *runtime* observability plane — counters, gauges, and histograms
+//! sampled while the scheduler runs, plus span tracing — is the separate
+//! [`crate::obs`] module; it reuses [`stats`]'s percentile definition so
+//! `ServerStats`/`DecodeMetrics` latency quantiles and the exposition
+//! histograms can never disagree on what "p95" means.
 
 pub mod flip;
 pub mod kl;

@@ -415,6 +415,7 @@ pub fn causal_attention_into(
     pool: Option<&ThreadPool>,
     out: &mut Matrix,
 ) -> RowLamp {
+    let _t = crate::obs::timers::scoped(crate::obs::timers::Site::Attention);
     let s = q.rows();
     let d = q.cols();
     debug_assert_eq!(k.shape(), (s, d));

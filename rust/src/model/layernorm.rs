@@ -20,6 +20,7 @@ use crate::linalg::simd;
 /// of the dispatched backend; the finish pass is lanewise
 /// (bit-transparent).
 pub fn layernorm(x: &mut [f32], g: &[f32], b: &[f32], eps: f32) {
+    let _t = crate::obs::timers::scoped(crate::obs::timers::Site::Norm);
     let n = x.len();
     debug_assert_eq!(g.len(), n);
     debug_assert_eq!(b.len(), n);

@@ -45,6 +45,7 @@ pub fn mlp_row_into(
     hidden: &mut [f32],
     out: &mut [f32],
 ) -> usize {
+    let _t = crate::obs::timers::scoped(crate::obs::timers::Site::Mlp);
     debug_assert_eq!(xn.len(), w_fc.rows());
     debug_assert_eq!(hidden.len(), w_fc.cols());
     debug_assert_eq!(out.len(), w_out.cols());
@@ -121,6 +122,9 @@ pub fn mlp_into(
         )));
     }
     if site.is_reference() {
+        // The vectorized reference branch never reaches `mlp_row_into`,
+        // so it carries its own site timer.
+        let _t = crate::obs::timers::scoped(crate::obs::timers::Site::Mlp);
         matmul_bias_into_wt(x, w_fc, b_fc, hidden)?;
         for h in hidden.data_mut() {
             *h = Activation::Gelu.apply(*h);

@@ -33,6 +33,7 @@ impl Decode {
     /// scheduler must reproduce [`generate`]'s sampling stream exactly: same
     /// strategy, same per-request RNG, same call order.
     pub fn pick(self, logits: &[f32], rng: &mut Rng) -> Result<u32> {
+        let _t = crate::obs::timers::scoped(crate::obs::timers::Site::Sampler);
         match self {
             Decode::Greedy => Ok(crate::metrics::flip::argmax(logits) as u32),
             Decode::TopK { k, temperature } => sample_topk(logits, k, temperature, rng),

@@ -1,0 +1,148 @@
+//! Minimal hand-rolled JSON helpers shared by the obs exporters and the
+//! `lamp obs` CLI (no serde offline).
+//!
+//! These are *format-specific* scanners for the line-oriented JSON this
+//! crate itself writes (registry snapshots, span JSONL), in the same
+//! spirit as `benchkit::record_bench_section`'s reader — not a general
+//! JSON parser.
+
+/// Escape a string for embedding in a JSON string literal (backslash,
+/// quote, and control characters).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render an f64 as a JSON value (`null` for non-finite).
+pub fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Locate the raw value text of `"key":` inside a single-line JSON
+/// object, returning the value slice with surrounding whitespace
+/// stripped (string values keep their quotes).
+fn raw_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let needle = format!("\"{key}\":");
+    let at = line.find(&needle)? + needle.len();
+    let rest = line[at..].trim_start();
+    if let Some(inner) = rest.strip_prefix('"') {
+        // String value: scan to the closing unescaped quote.
+        let mut esc = false;
+        for (i, c) in inner.char_indices() {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                return Some(&rest[..i + 2]);
+            }
+        }
+        None
+    } else if rest.starts_with('[') {
+        let end = rest.find(']')?;
+        Some(&rest[..=end])
+    } else {
+        let end = rest
+            .find(|c: char| c == ',' || c == '}' || c == ']')
+            .unwrap_or(rest.len());
+        Some(rest[..end].trim())
+    }
+}
+
+/// Extract an unescaped string field from a single-line JSON object.
+pub fn str_field(line: &str, key: &str) -> Option<String> {
+    let raw = raw_field(line, key)?;
+    let inner = raw.strip_prefix('"')?.strip_suffix('"')?;
+    let mut out = String::with_capacity(inner.len());
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            Some('t') => out.push('\t'),
+            Some('u') => {
+                let hex: String = chars.by_ref().take(4).collect();
+                if let Some(c) =
+                    u32::from_str_radix(&hex, 16).ok().and_then(char::from_u32)
+                {
+                    out.push(c);
+                }
+            }
+            Some(other) => out.push(other),
+            None => {}
+        }
+    }
+    Some(out)
+}
+
+/// Extract a u64 field from a single-line JSON object.
+pub fn u64_field(line: &str, key: &str) -> Option<u64> {
+    raw_field(line, key)?.parse().ok()
+}
+
+/// Extract an f64 field from a single-line JSON object.
+pub fn f64_field(line: &str, key: &str) -> Option<f64> {
+    raw_field(line, key)?.parse().ok()
+}
+
+/// Extract a flat numeric array field (`"key": [1, 2.5, 3]`) from a
+/// single-line JSON object.
+pub fn f64_array_field(line: &str, key: &str) -> Option<Vec<f64>> {
+    let raw = raw_field(line, key)?;
+    let inner = raw.strip_prefix('[')?.strip_suffix(']')?.trim();
+    if inner.is_empty() {
+        return Some(Vec::new());
+    }
+    inner.split(',').map(|s| s.trim().parse().ok()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escape_round_trips_through_str_field() {
+        let nasty = "a\"b\\c\nd\te";
+        let line = format!("{{\"k\": \"{}\", \"n\": 3}}", json_escape(nasty));
+        assert_eq!(str_field(&line, "k").as_deref(), Some(nasty));
+        assert_eq!(u64_field(&line, "n"), Some(3));
+    }
+
+    #[test]
+    fn numeric_and_array_fields() {
+        let line = "{\"a\": 7, \"b\": 0.5, \"xs\": [1, 2.5, 3], \"empty\": [], \"s\": \"t\"}";
+        assert_eq!(u64_field(line, "a"), Some(7));
+        assert_eq!(f64_field(line, "b"), Some(0.5));
+        assert_eq!(f64_array_field(line, "xs"), Some(vec![1.0, 2.5, 3.0]));
+        assert_eq!(f64_array_field(line, "empty"), Some(vec![]));
+        assert_eq!(u64_field(line, "missing"), None);
+        // A string value is not a number.
+        assert_eq!(u64_field(line, "s"), None);
+    }
+
+    #[test]
+    fn json_f64_handles_non_finite() {
+        assert_eq!(json_f64(1.5), "1.5");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+    }
+}

@@ -1,0 +1,523 @@
+//! The unified metrics registry: named counters, gauges, and
+//! fixed-bucket histograms.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are `Arc`s over
+//! atomics — updating one is a relaxed atomic op, never a lock. The
+//! registry's mutex guards only the name → handle map, touched at
+//! handle creation and [`Registry::snapshot`] time. Bucket boundaries
+//! are fixed at histogram creation, so two runs of the same workload
+//! produce structurally identical snapshots.
+//!
+//! Percentile convention: exact-sample percentiles everywhere in the
+//! crate go through `metrics::stats::percentile` (nearest-rank); a
+//! histogram's [`Histogram::quantile`] reuses the same
+//! `nearest_rank_index` rank rule over its bucket counts and returns
+//! the containing bucket's upper bound — a coarse export-side view,
+//! never a second percentile implementation.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::export;
+use crate::metrics::stats::nearest_rank_index;
+
+/// Monotonic counter handle.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge handle (f64 stored as bits).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+struct HistogramCore {
+    /// Upper bounds of the finite buckets, strictly increasing; an
+    /// implicit overflow bucket follows the last bound.
+    bounds: Vec<f64>,
+    /// One slot per finite bucket plus the overflow bucket.
+    counts: Vec<AtomicU64>,
+    /// Sum of observed values (f64 bits, CAS-accumulated).
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bucket histogram handle.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        self.observe_n(v, 1);
+    }
+
+    /// Record `n` observations of value `v` (used when folding
+    /// pre-aggregated counts, e.g. a retired session's acceptance
+    /// histogram).
+    pub fn observe_n(&self, v: f64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let idx = self.0.bounds.partition_point(|&b| b < v);
+        self.0.counts[idx].fetch_add(n, Ordering::Relaxed);
+        let mut cur = self.0.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v * n as f64).to_bits();
+            match self.0.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Coarse quantile from bucket counts: the nearest-rank index rule
+    /// of `metrics::stats` applied to the bucketed distribution,
+    /// reporting the containing bucket's upper bound (the last finite
+    /// bound for the overflow bucket). 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = nearest_rank_index(total as usize, q);
+        let mut seen = 0usize;
+        for (i, c) in self.0.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed) as usize;
+            if seen > rank {
+                let j = i.min(self.0.bounds.len().saturating_sub(1));
+                return self.0.bounds.get(j).copied().unwrap_or(0.0);
+            }
+        }
+        self.0.bounds.last().copied().unwrap_or(0.0)
+    }
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, Arc<AtomicU64>>,
+    gauges: BTreeMap<String, Arc<AtomicU64>>,
+    hists: BTreeMap<String, Arc<HistogramCore>>,
+}
+
+/// The central name → instrument map. Handle lookups lock; handle
+/// updates do not.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<RegistryInner>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Get or create the named counter.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut inner = self.inner.lock().expect("obs registry poisoned");
+        Counter(Arc::clone(
+            inner.counters.entry(name.to_string()).or_default(),
+        ))
+    }
+
+    /// Get or create the named gauge (initial value 0.0).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut inner = self.inner.lock().expect("obs registry poisoned");
+        Gauge(Arc::clone(
+            inner
+                .gauges
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(AtomicU64::new(0.0f64.to_bits()))),
+        ))
+    }
+
+    /// Get or create the named histogram. Bounds must be strictly
+    /// increasing; when the name already exists its original bounds win
+    /// (bucket layout is fixed for the registry's lifetime).
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        let mut inner = self.inner.lock().expect("obs registry poisoned");
+        Histogram(Arc::clone(inner.hists.entry(name.to_string()).or_insert_with(
+            || {
+                Arc::new(HistogramCore {
+                    bounds: bounds.to_vec(),
+                    counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+                    sum_bits: AtomicU64::new(0.0f64.to_bits()),
+                })
+            },
+        )))
+    }
+
+    /// Ordered point-in-time copy of every instrument.
+    pub fn snapshot(&self) -> Snapshot {
+        let inner = self.inner.lock().expect("obs registry poisoned");
+        Snapshot {
+            counters: inner
+                .counters
+                .iter()
+                .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+                .collect(),
+            gauges: inner
+                .gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), f64::from_bits(v.load(Ordering::Relaxed))))
+                .collect(),
+            hists: inner
+                .hists
+                .iter()
+                .map(|(k, h)| HistSnapshot {
+                    name: k.clone(),
+                    bounds: h.bounds.clone(),
+                    counts: h.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+                    sum: f64::from_bits(h.sum_bits.load(Ordering::Relaxed)),
+                })
+                .collect(),
+        }
+    }
+
+    /// Fold a snapshot into this registry: counters and histogram
+    /// buckets add, gauges take the snapshot's value. Histograms whose
+    /// bucket layout disagrees with an existing instrument of the same
+    /// name are skipped (layouts are fixed per name). This is how the
+    /// server accumulates per-drive child registries.
+    pub fn absorb(&self, snap: &Snapshot) {
+        for (name, v) in &snap.counters {
+            if *v > 0 {
+                self.counter(name).add(*v);
+            }
+        }
+        for (name, v) in &snap.gauges {
+            self.gauge(name).set(*v);
+        }
+        for h in &snap.hists {
+            let hist = self.histogram(&h.name, &h.bounds);
+            if hist.0.bounds != h.bounds || hist.0.counts.len() != h.counts.len() {
+                continue;
+            }
+            for (slot, &n) in hist.0.counts.iter().zip(&h.counts) {
+                if n > 0 {
+                    slot.fetch_add(n, Ordering::Relaxed);
+                }
+            }
+            let mut cur = hist.0.sum_bits.load(Ordering::Relaxed);
+            loop {
+                let next = (f64::from_bits(cur) + h.sum).to_bits();
+                match hist.0.sum_bits.compare_exchange_weak(
+                    cur,
+                    next,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnapshot {
+    pub name: String,
+    pub bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `counts.len() == bounds.len() + 1`
+    /// (the last slot is the overflow bucket).
+    pub counts: Vec<u64>,
+    pub sum: f64,
+}
+
+/// Ordered point-in-time copy of a registry, renderable as Prometheus
+/// text or stable-keyed JSON (and parseable back for the `lamp obs`
+/// CLI).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<HistSnapshot>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|h| h.name == name)
+    }
+
+    /// Stable-keyed JSON: three sections, entries in registry (BTreeMap)
+    /// order, one instrument per line.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"counters\": {\n");
+        let counter_lines = self
+            .counters
+            .iter()
+            .map(|(k, v)| format!("    \"{}\": {v}", export::json_escape(k)))
+            .collect::<Vec<_>>()
+            .join(",\n");
+        out.push_str(&counter_lines);
+        out.push_str("\n  },\n  \"gauges\": {\n");
+        let gauge_lines = self
+            .gauges
+            .iter()
+            .map(|(k, v)| {
+                format!("    \"{}\": {}", export::json_escape(k), export::json_f64(*v))
+            })
+            .collect::<Vec<_>>()
+            .join(",\n");
+        out.push_str(&gauge_lines);
+        out.push_str("\n  },\n  \"histograms\": {\n");
+        let hist_lines = self
+            .hists
+            .iter()
+            .map(|h| {
+                format!(
+                    "    \"{}\": {{\"bounds\": [{}], \"counts\": [{}], \"sum\": {}}}",
+                    export::json_escape(&h.name),
+                    h.bounds.iter().map(|b| export::json_f64(*b)).collect::<Vec<_>>().join(", "),
+                    h.counts.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(", "),
+                    export::json_f64(h.sum)
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n");
+        out.push_str(&hist_lines);
+        out.push_str("\n  }\n}\n");
+        out
+    }
+
+    /// Parse the format [`Self::to_json`] writes (line-oriented, like
+    /// the BENCH record reader — not a general JSON parser).
+    pub fn from_json(text: &str) -> crate::error::Result<Snapshot> {
+        let mut snap = Snapshot::default();
+        let mut section = "";
+        for line in text.lines() {
+            let trimmed = line.trim().trim_end_matches(',');
+            if trimmed.is_empty() || trimmed == "{" || trimmed == "}" {
+                continue;
+            }
+            match trimmed {
+                "\"counters\": {" => {
+                    section = "counters";
+                    continue;
+                }
+                "\"gauges\": {" => {
+                    section = "gauges";
+                    continue;
+                }
+                "\"histograms\": {" => {
+                    section = "histograms";
+                    continue;
+                }
+                _ => {}
+            }
+            let Some((key, val)) = trimmed.split_once(':') else { continue };
+            let name = key.trim().trim_matches('"').to_string();
+            let val = val.trim();
+            match section {
+                "counters" => {
+                    let v = val.parse::<u64>().map_err(|_| {
+                        crate::error::Error::config(format!("bad counter value: {trimmed}"))
+                    })?;
+                    snap.counters.push((name, v));
+                }
+                "gauges" => {
+                    let v = val.parse::<f64>().map_err(|_| {
+                        crate::error::Error::config(format!("bad gauge value: {trimmed}"))
+                    })?;
+                    snap.gauges.push((name, v));
+                }
+                "histograms" => {
+                    let bounds = export::f64_array_field(val, "bounds").ok_or_else(|| {
+                        crate::error::Error::config(format!("histogram missing bounds: {trimmed}"))
+                    })?;
+                    let counts = export::f64_array_field(val, "counts")
+                        .map(|v| v.into_iter().map(|x| x as u64).collect::<Vec<_>>())
+                        .ok_or_else(|| {
+                            crate::error::Error::config(format!(
+                                "histogram missing counts: {trimmed}"
+                            ))
+                        })?;
+                    let sum = export::f64_field(val, "sum").unwrap_or(0.0);
+                    snap.hists.push(HistSnapshot { name, bounds, counts, sum });
+                }
+                _ => {}
+            }
+        }
+        Ok(snap)
+    }
+
+    /// Prometheus text exposition: counters, gauges, and cumulative
+    /// histogram buckets with `+Inf`, `_sum`, `_count` series.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+        }
+        for h in &self.hists {
+            let n = prom_name(&h.name);
+            out.push_str(&format!("# TYPE {n} histogram\n"));
+            let mut cum = 0u64;
+            for (i, &c) in h.counts.iter().enumerate() {
+                cum += c;
+                let le = match h.bounds.get(i) {
+                    Some(b) => b.to_string(),
+                    None => "+Inf".to_string(),
+                };
+                out.push_str(&format!("{n}_bucket{{le=\"{le}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{n}_sum {}\n{n}_count {cum}\n", h.sum));
+        }
+        out
+    }
+}
+
+/// Sanitize a registry name into the Prometheus charset.
+fn prom_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_round_trip() {
+        let r = Registry::new();
+        let c = r.counter("sched.steps");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same name, same instrument.
+        assert_eq!(r.counter("sched.steps").get(), 5);
+        let g = r.gauge("kv.occupancy");
+        g.set(0.75);
+        assert_eq!(g.get(), 0.75);
+        let snap = r.snapshot();
+        assert_eq!(snap.counter("sched.steps"), Some(5));
+        assert_eq!(snap.gauge("kv.occupancy"), Some(0.75));
+        assert_eq!(snap.counter("missing"), None);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let r = Registry::new();
+        let h = r.histogram("lat", &[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.5, 1.5, 3.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 106.5).abs() < 1e-12);
+        let snap = r.snapshot();
+        let hs = snap.hist("lat").unwrap();
+        assert_eq!(hs.counts, vec![1, 2, 1, 1]);
+        // Boundary values land in the bucket whose upper bound they equal.
+        h.observe(2.0);
+        assert_eq!(r.snapshot().hist("lat").unwrap().counts, vec![1, 3, 1, 1]);
+        // Median of 6 observations: rank 3 falls in the le=2 bucket.
+        assert_eq!(h.quantile(0.5), 2.0);
+        // Max quantile lands in overflow, reported as the last bound.
+        assert_eq!(h.quantile(1.0), 4.0);
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let r = Registry::new();
+        r.counter("a.count").add(3);
+        r.gauge("b.rate").set(0.125);
+        r.histogram("c.lat", &[0.5, 1.0]).observe(0.7);
+        let snap = r.snapshot();
+        let json = snap.to_json();
+        let back = Snapshot::from_json(&json).unwrap();
+        assert_eq!(back, snap);
+        // Deterministic output: render twice, identical bytes.
+        assert_eq!(json, r.snapshot().to_json());
+    }
+
+    #[test]
+    fn prometheus_rendering_is_cumulative() {
+        let r = Registry::new();
+        r.counter("sched.steps").add(2);
+        r.histogram("lat", &[1.0, 2.0]).observe(0.5);
+        r.histogram("lat", &[1.0, 2.0]).observe(5.0);
+        let text = r.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE sched_steps counter"), "{text}");
+        assert!(text.contains("sched_steps 2"), "{text}");
+        assert!(text.contains("lat_bucket{le=\"1\"} 1"), "{text}");
+        assert!(text.contains("lat_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("lat_count 2"), "{text}");
+    }
+
+    #[test]
+    fn absorb_adds_counters_and_merges_histograms() {
+        let parent = Registry::new();
+        parent.counter("n").add(1);
+        parent.histogram("h", &[1.0]).observe(0.5);
+        let child = Registry::new();
+        child.counter("n").add(2);
+        child.gauge("g").set(3.0);
+        child.histogram("h", &[1.0]).observe(2.0);
+        parent.absorb(&child.snapshot());
+        let snap = parent.snapshot();
+        assert_eq!(snap.counter("n"), Some(3));
+        assert_eq!(snap.gauge("g"), Some(3.0));
+        let h = snap.hist("h").unwrap();
+        assert_eq!(h.counts, vec![1, 1]);
+        assert!((h.sum - 2.5).abs() < 1e-12);
+        // Mismatched layout: skipped, not corrupted.
+        let odd = Registry::new();
+        odd.histogram("h", &[9.0]).observe(1.0);
+        parent.absorb(&odd.snapshot());
+        assert_eq!(parent.snapshot().hist("h").unwrap().counts, vec![1, 1]);
+    }
+}

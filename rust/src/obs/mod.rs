@@ -1,0 +1,171 @@
+//! The runtime observability plane: a unified metrics registry, span
+//! tracing, and the clock they share — the sensor side of the adaptive
+//! control loop (ROADMAP item 4).
+//!
+//! * [`metrics`] — a central [`metrics::Registry`] of named counters,
+//!   gauges, and fixed-bucket histograms. Handles are cheap atomics
+//!   (lock-free on the hot path; the registry mutex is touched only at
+//!   handle creation and snapshot time), and a [`metrics::Snapshot`]
+//!   renders to Prometheus text or stable-keyed JSON.
+//! * [`trace`] — per-request lifecycle spans (enqueue → admit → prefill
+//!   → decode / draft / verify → preempt/resume → retire/fail) into a
+//!   bounded drop-oldest ring, with JSONL and Chrome `trace_event`
+//!   exporters.
+//! * [`timers`] — sampling scoped timers attributing kernel wall time to
+//!   precision sites; compiled out entirely unless the `obs-timers`
+//!   cargo feature is on.
+//! * [`export`] — the minimal hand-rolled JSON helpers shared by the
+//!   exporters and the `lamp obs` CLI (no serde offline).
+//!
+//! ## Inertness contract
+//!
+//! Instrumentation never feeds back into scheduling or numerics: every
+//! per-request stream is bit-identical with tracing/metrics on or off
+//! (including chaos and speculative runs), and trials canonical
+//! artifacts are byte-identical — `rust/tests/obs_parity.rs` pins this,
+//! and `benches/observability.rs` pins the hot-path overhead budget.
+//!
+//! ## Clocks and determinism under replay
+//!
+//! An [`ObsHub`] carries either a wall clock (nanoseconds since hub
+//! creation) or a *virtual* clock. `coordinator::replay` always drives
+//! schedulers on a virtual hub and advances it once per scheduler
+//! iteration, so span timestamps — and, with the scheduler's
+//! iteration-counted retry backoff under virtual clocks, the entire
+//! span stream — are deterministic across reruns of the same trial.
+//!
+//! The offline *accuracy* metrics (KL divergence, flip rate, Pareto
+//! frontiers) live in [`crate::metrics`]; this module is the runtime
+//! twin.
+
+pub mod export;
+pub mod metrics;
+pub mod timers;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Histogram, Registry, Snapshot};
+pub use trace::{SpanEvent, SpanKind, Tracer};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The clock a hub stamps spans with: host wall time, or a virtual tick
+/// advanced externally (one tick per scheduler iteration under replay).
+enum Clock {
+    Wall(Instant),
+    Virtual(AtomicU64),
+}
+
+/// One observability context: a metrics registry, an optional tracer,
+/// and the clock both share. Cloned via `Arc` into every component that
+/// reports; a scheduler given no hub creates a private wall-clock one,
+/// so the reporting code paths are identical with observability on or
+/// off (the inertness argument is "same code, different sink").
+pub struct ObsHub {
+    registry: Registry,
+    tracer: Option<Arc<Tracer>>,
+    clock: Arc<Clock>,
+}
+
+impl Default for ObsHub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ObsHub {
+    /// Wall-clock hub with metrics only.
+    pub fn new() -> Self {
+        ObsHub {
+            registry: Registry::new(),
+            tracer: None,
+            clock: Arc::new(Clock::Wall(Instant::now())),
+        }
+    }
+
+    /// Attach a span tracer with the given ring capacity.
+    pub fn with_tracer(mut self, capacity: usize) -> Self {
+        self.tracer = Some(Arc::new(Tracer::new(capacity)));
+        self
+    }
+
+    /// Switch to a virtual clock (starts at tick 0; see
+    /// [`Self::set_virtual`]).
+    pub fn with_virtual_clock(mut self) -> Self {
+        self.clock = Arc::new(Clock::Virtual(AtomicU64::new(0)));
+        self
+    }
+
+    /// A child hub: fresh registry, shared tracer and clock. The server
+    /// gives each scheduler drive a child so per-drive deltas stay
+    /// separable, then folds the child's snapshot back via
+    /// [`Registry::absorb`].
+    pub fn child(&self) -> Self {
+        ObsHub {
+            registry: Registry::new(),
+            tracer: self.tracer.clone(),
+            clock: Arc::clone(&self.clock),
+        }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
+    }
+
+    /// Current timestamp in clock ticks: nanoseconds since hub creation
+    /// (wall) or the virtual tick.
+    pub fn now(&self) -> u64 {
+        match &*self.clock {
+            Clock::Wall(epoch) => epoch.elapsed().as_nanos() as u64,
+            Clock::Virtual(t) => t.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(&*self.clock, Clock::Virtual(_))
+    }
+
+    /// Advance the virtual clock; no-op on wall-clock hubs.
+    pub fn set_virtual(&self, tick: u64) {
+        if let Clock::Virtual(t) = &*self.clock {
+            t.store(tick, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotonic_and_not_virtual() {
+        let hub = ObsHub::new();
+        assert!(!hub.is_virtual());
+        let a = hub.now();
+        let b = hub.now();
+        assert!(b >= a);
+        hub.set_virtual(99); // no-op on wall hubs
+        assert!(hub.now() < u64::MAX);
+    }
+
+    #[test]
+    fn virtual_clock_reads_back_ticks_and_children_share_it() {
+        let hub = ObsHub::new().with_virtual_clock().with_tracer(16);
+        assert!(hub.is_virtual());
+        assert_eq!(hub.now(), 0);
+        hub.set_virtual(7);
+        assert_eq!(hub.now(), 7);
+        let child = hub.child();
+        assert!(child.is_virtual());
+        assert_eq!(child.now(), 7, "children share the parent clock");
+        assert!(child.tracer().is_some(), "children share the parent tracer");
+        // But not the registry: child counters stay separate.
+        child.registry().counter("x").inc();
+        assert_eq!(hub.registry().snapshot().counter("x"), None);
+    }
+}

@@ -1,0 +1,286 @@
+//! Per-request span tracing: the scheduler records one [`SpanEvent`]
+//! per lifecycle transition and per unit of work into a bounded
+//! drop-oldest ring.
+//!
+//! Timestamps are [`ObsHub::now`](super::ObsHub::now) ticks —
+//! nanoseconds on a wall-clock hub, scheduler iterations on a virtual
+//! one — so traces recorded under `coordinator::replay` are
+//! deterministic across reruns. Export as JSONL (one span per line,
+//! parseable by [`parse_jsonl`] for CLI filtering) or as Chrome
+//! `trace_event` JSON for flamegraph-style inspection in
+//! `chrome://tracing` / Perfetto (`tid` = request id, so each request
+//! renders as its own track).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use super::export;
+
+/// What a span covers in the request lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpanKind {
+    /// Request entered the waiting queue.
+    Enqueue,
+    /// Request bound to a slot (fresh admission).
+    Admit,
+    /// Preempted request re-bound to a slot for prefix recompute.
+    Resume,
+    /// One prefill chunk fed.
+    Prefill,
+    /// One committed decode step (sample + feed).
+    Decode,
+    /// One speculative draft step against scratch KV.
+    Draft,
+    /// One batched verify + commit of a speculation round.
+    Verify,
+    /// Slot preempted on pool exhaustion; progress requeued.
+    Preempt,
+    /// Request retired normally.
+    Retire,
+    /// Request failed terminally.
+    Fail,
+    /// An iteration that performed no unit of work (default).
+    #[default]
+    Idle,
+}
+
+impl SpanKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Enqueue => "enqueue",
+            SpanKind::Admit => "admit",
+            SpanKind::Resume => "resume",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Decode => "decode",
+            SpanKind::Draft => "draft",
+            SpanKind::Verify => "verify",
+            SpanKind::Preempt => "preempt",
+            SpanKind::Retire => "retire",
+            SpanKind::Fail => "fail",
+            SpanKind::Idle => "idle",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SpanKind> {
+        Some(match s {
+            "enqueue" => SpanKind::Enqueue,
+            "admit" => SpanKind::Admit,
+            "resume" => SpanKind::Resume,
+            "prefill" => SpanKind::Prefill,
+            "decode" => SpanKind::Decode,
+            "draft" => SpanKind::Draft,
+            "verify" => SpanKind::Verify,
+            "preempt" => SpanKind::Preempt,
+            "retire" => SpanKind::Retire,
+            "fail" => SpanKind::Fail,
+            "idle" => SpanKind::Idle,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded span. `start`/`end` are hub clock ticks; instantaneous
+/// lifecycle markers record `start == end`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    pub request: u64,
+    pub kind: SpanKind,
+    pub start: u64,
+    pub end: u64,
+    /// Small free-form annotation (e.g. `tokens=3`); empty when unused.
+    pub detail: String,
+}
+
+struct TracerInner {
+    events: VecDeque<SpanEvent>,
+    dropped: u64,
+}
+
+/// Bounded drop-oldest span ring. `record` takes an uncontended mutex:
+/// the scheduler only records from its single-threaded harvest/admit
+/// paths, never from the parallel slot fan-out.
+pub struct Tracer {
+    capacity: usize,
+    inner: Mutex<TracerInner>,
+}
+
+impl Tracer {
+    pub fn new(capacity: usize) -> Self {
+        Tracer {
+            capacity: capacity.max(1),
+            inner: Mutex::new(TracerInner { events: VecDeque::new(), dropped: 0 }),
+        }
+    }
+
+    pub fn record(&self, event: SpanEvent) {
+        let mut inner = self.inner.lock().expect("tracer poisoned");
+        if inner.events.len() >= self.capacity {
+            inner.events.pop_front();
+            inner.dropped += 1;
+        }
+        inner.events.push_back(event);
+    }
+
+    /// Record an instantaneous lifecycle marker (`start == end`, no
+    /// detail).
+    pub fn instant(&self, request: u64, kind: SpanKind, tick: u64) {
+        self.record(SpanEvent { request, kind, start: tick, end: tick, detail: String::new() });
+    }
+
+    /// Ordered copy of the ring (oldest first).
+    pub fn events(&self) -> Vec<SpanEvent> {
+        self.inner.lock().expect("tracer poisoned").events.iter().cloned().collect()
+    }
+
+    /// Spans evicted by the ring bound so far.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().expect("tracer poisoned").dropped
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("tracer poisoned").events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().expect("tracer poisoned");
+        inner.events.clear();
+        inner.dropped = 0;
+    }
+}
+
+/// Render spans as JSONL: one stable-keyed object per line.
+pub fn to_jsonl(events: &[SpanEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&format!(
+            "{{\"request\": {}, \"kind\": \"{}\", \"start\": {}, \"end\": {}, \"detail\": \"{}\"}}\n",
+            e.request,
+            e.kind.as_str(),
+            e.start,
+            e.end,
+            export::json_escape(&e.detail)
+        ));
+    }
+    out
+}
+
+/// Parse the JSONL format [`to_jsonl`] writes; malformed lines are
+/// skipped.
+pub fn parse_jsonl(text: &str) -> Vec<SpanEvent> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let Some(request) = export::u64_field(line, "request") else { continue };
+        let Some(kind) =
+            export::str_field(line, "kind").as_deref().and_then(SpanKind::parse)
+        else {
+            continue;
+        };
+        let Some(start) = export::u64_field(line, "start") else { continue };
+        let Some(end) = export::u64_field(line, "end") else { continue };
+        let detail = export::str_field(line, "detail").unwrap_or_default();
+        out.push(SpanEvent { request, kind, start, end, detail });
+    }
+    out
+}
+
+/// Render spans as a Chrome `trace_event` JSON array (complete events,
+/// `ph: "X"`; load in `chrome://tracing` or Perfetto). `ts`/`dur` are
+/// hub ticks; `tid` is the request id so each request gets its own row.
+pub fn to_chrome(events: &[SpanEvent]) -> String {
+    let body = events
+        .iter()
+        .map(|e| {
+            format!(
+                "{{\"name\": \"{}\", \"cat\": \"lamp\", \"ph\": \"X\", \"ts\": {}, \
+                 \"dur\": {}, \"pid\": 0, \"tid\": {}, \"args\": {{\"detail\": \"{}\"}}}}",
+                e.kind.as_str(),
+                e.start,
+                e.end.saturating_sub(e.start),
+                e.request,
+                export::json_escape(&e.detail)
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    format!("[\n{body}\n]\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(request: u64, kind: SpanKind, t: u64) -> SpanEvent {
+        SpanEvent { request, kind, start: t, end: t + 1, detail: format!("t={t}") }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts_drops() {
+        let tr = Tracer::new(3);
+        for t in 0..5 {
+            tr.record(span(1, SpanKind::Decode, t));
+        }
+        assert_eq!(tr.len(), 3);
+        assert_eq!(tr.dropped(), 2);
+        let starts: Vec<u64> = tr.events().iter().map(|e| e.start).collect();
+        assert_eq!(starts, vec![2, 3, 4]);
+        tr.clear();
+        assert!(tr.is_empty());
+        assert_eq!(tr.dropped(), 0);
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let events = vec![
+            span(7, SpanKind::Prefill, 0),
+            span(7, SpanKind::Decode, 1),
+            SpanEvent {
+                request: 8,
+                kind: SpanKind::Fail,
+                start: 2,
+                end: 2,
+                detail: "error \"quoted\"".to_string(),
+            },
+        ];
+        let text = to_jsonl(&events);
+        assert_eq!(text.lines().count(), 3);
+        let back = parse_jsonl(&text);
+        assert_eq!(back, events);
+        // Malformed lines are skipped, not fatal.
+        assert_eq!(parse_jsonl("not json\n{\"request\": 1}\n").len(), 0);
+    }
+
+    #[test]
+    fn chrome_export_is_a_complete_event_array() {
+        let text = to_chrome(&[span(3, SpanKind::Verify, 10)]);
+        assert!(text.starts_with("[\n"));
+        assert!(text.trim_end().ends_with(']'));
+        assert!(text.contains("\"ph\": \"X\""));
+        assert!(text.contains("\"tid\": 3"));
+        assert!(text.contains("\"ts\": 10"));
+        assert!(text.contains("\"dur\": 1"));
+    }
+
+    #[test]
+    fn span_kinds_round_trip_their_names() {
+        for kind in [
+            SpanKind::Enqueue,
+            SpanKind::Admit,
+            SpanKind::Resume,
+            SpanKind::Prefill,
+            SpanKind::Decode,
+            SpanKind::Draft,
+            SpanKind::Verify,
+            SpanKind::Preempt,
+            SpanKind::Retire,
+            SpanKind::Fail,
+            SpanKind::Idle,
+        ] {
+            assert_eq!(SpanKind::parse(kind.as_str()), Some(kind));
+        }
+        assert_eq!(SpanKind::parse("nope"), None);
+    }
+}

@@ -21,7 +21,7 @@ pub mod runner;
 
 pub use manifest::{FigureSpec, TrialManifest};
 pub use output::{canonical, first_divergence, token_fingerprint};
-pub use runner::{run, TrialRun};
+pub use runner::{run, run_with_obs, TrialRun};
 
 /// The bundled trial manifests, compiled into the binary so CI and a
 /// fresh checkout agree on the exact bytes being replayed.

@@ -9,6 +9,7 @@ use crate::coordinator::{
 };
 use crate::error::Result;
 use crate::model::Weights;
+use crate::obs::ObsHub;
 use crate::util::{Rng, ThreadPool};
 
 use super::manifest::TrialManifest;
@@ -27,6 +28,19 @@ pub struct TrialRun {
 
 /// Run a trial end to end.
 pub fn run(manifest: &TrialManifest) -> Result<TrialRun> {
+    run_with_obs(manifest, None)
+}
+
+/// Run a trial end to end, reporting into `obs` when given. Pass a hub
+/// built with `with_virtual_clock()` (plus a tracer for span capture):
+/// replay drives the virtual ticks, so `lamp trials run --trace-out`
+/// dumps a trace that is deterministic across reruns. Observability is
+/// inert: the canonical artifact is byte-identical with or without a
+/// hub (`rust/tests/obs_parity.rs` pins this).
+pub fn run_with_obs(
+    manifest: &TrialManifest,
+    obs: Option<Arc<ObsHub>>,
+) -> Result<TrialRun> {
     if let Some(fig) = &manifest.figure {
         return super::figure::run(manifest, fig);
     }
@@ -61,6 +75,7 @@ pub fn run(manifest: &TrialManifest) -> Result<TrialRun> {
             max_sessions: manifest.max_sessions,
             prefill_chunk: manifest.prefill_chunk,
             pool,
+            obs,
             ..Default::default()
         },
         eos: None,

@@ -1,0 +1,283 @@
+//! Observability inertness pins: every per-request token stream, every
+//! `LampStats` count, and every trials canonical artifact must be
+//! **bit-identical** with the obs plane attached or absent — across
+//! plain decode, speculative decode, preemption, and chaos fault
+//! injection — and the virtual-clock trace/metrics exports themselves
+//! must be deterministic across reruns.
+
+use lamp::coordinator::{
+    replay, FaultInjector, FaultPlan, KvCacheOptions, NativeEngine, PrecisionPolicy,
+    ReplayOptions, ReplayReport, Rule, SchedulerOptions, SitePolicy, SpecPolicy, WeightFormat,
+};
+use lamp::data::{TraceKind, TraceSpec};
+use lamp::model::{ModelConfig, Weights};
+use lamp::obs::{trace, ObsHub, SpanKind};
+use lamp::util::Rng;
+use std::sync::Arc;
+
+fn nano_engine(seed: u64) -> NativeEngine {
+    let mut rng = Rng::new(seed);
+    NativeEngine::new(Weights::random(&ModelConfig::nano(), &mut rng).unwrap())
+}
+
+fn trace_spec(kind: TraceKind, requests: usize, new_tokens: usize) -> Vec<lamp::data::TraceRequest> {
+    let cfg = ModelConfig::nano();
+    let mut s = TraceSpec::new(kind, cfg.vocab, cfg.seq);
+    s.requests = requests;
+    s.new_tokens = new_tokens;
+    s.generate().unwrap()
+}
+
+fn traced_hub(capacity: usize) -> Arc<ObsHub> {
+    Arc::new(ObsHub::new().with_virtual_clock().with_tracer(capacity))
+}
+
+/// The inertness oracle: identical outputs whether or not a hub (with a
+/// tracer) is attached. Returns both reports plus the attached hub.
+fn replay_on_and_off(
+    engine: &dyn lamp::coordinator::Engine,
+    trace: &[lamp::data::TraceRequest],
+    base: &ReplayOptions,
+) -> (ReplayReport, ReplayReport, Arc<ObsHub>) {
+    let off = replay(engine, trace, base).unwrap();
+    let hub = traced_hub(1 << 16);
+    let mut on_opts = base.clone();
+    on_opts.scheduler.obs = Some(Arc::clone(&hub));
+    let on = replay(engine, trace, &on_opts).unwrap();
+    (off, on, hub)
+}
+
+fn assert_reports_identical(off: &ReplayReport, on: &ReplayReport, what: &str) {
+    assert_eq!(off.steps, on.steps, "{what}: iteration count changed");
+    assert_eq!(off.responses.len(), on.responses.len(), "{what}: response count");
+    for (a, b) in off.responses.iter().zip(&on.responses) {
+        assert_eq!(a.id, b.id, "{what}: response order");
+        assert_eq!(a.tokens, b.tokens, "{what}: id {} stream changed", a.id);
+        assert_eq!(
+            a.stats.recomputed, b.stats.recomputed,
+            "{what}: id {} recompute accounting changed",
+            a.id
+        );
+        assert_eq!(
+            a.stats.causal_total, b.stats.causal_total,
+            "{what}: id {} causal accounting changed",
+            a.id
+        );
+        assert_eq!(
+            a.stats.spec.rounds, b.stats.spec.rounds,
+            "{what}: id {} spec accounting changed",
+            a.id
+        );
+    }
+    let off_failures: Vec<_> = off.failures.iter().map(|(id, _)| *id).collect();
+    let on_failures: Vec<_> = on.failures.iter().map(|(id, _)| *id).collect();
+    assert_eq!(off_failures, on_failures, "{what}: failure set changed");
+    assert_eq!(
+        off.metrics.generated_tokens, on.metrics.generated_tokens,
+        "{what}: token accounting changed"
+    );
+    assert_eq!(
+        off.metrics.preemptions, on.metrics.preemptions,
+        "{what}: preemption schedule changed"
+    );
+    assert_eq!(off.metrics.retries, on.metrics.retries, "{what}: retry schedule changed");
+}
+
+#[test]
+fn plain_decode_replay_is_inert_and_single_counted() {
+    let engine = nano_engine(11);
+    let trace = trace_spec(TraceKind::Bursty, 6, 5);
+    let opts = ReplayOptions::new(PrecisionPolicy::lamp(3, 0.05, Rule::Strict));
+    let (off, on, hub) = replay_on_and_off(&engine, &trace, &opts);
+    assert_reports_identical(&off, &on, "plain decode");
+    assert!(off.failures.is_empty());
+
+    // LampStats are single-counted: the registry's fold over retired
+    // requests equals the per-response sums exactly.
+    let snap = hub.registry().snapshot();
+    let recomputed: u64 = on.responses.iter().map(|r| r.stats.recomputed as u64).sum();
+    let causal: u64 = on.responses.iter().map(|r| r.stats.causal_total as u64).sum();
+    let generated: u64 = on.responses.iter().map(|r| r.generated().len() as u64).sum();
+    assert_eq!(snap.counter("lamp.attention.recomputed"), Some(recomputed));
+    assert_eq!(snap.counter("lamp.attention.total"), Some(causal));
+    assert_eq!(snap.counter("sched.generated_tokens"), Some(generated));
+    assert_eq!(snap.counter("sched.completed"), Some(on.responses.len() as u64));
+    assert_eq!(snap.counter("sched.failed"), Some(0));
+    // The steps counter counts productive iterations only (all-backoff
+    // iterations return early), so it is bounded by the driver's count.
+    let steps = snap.counter("sched.steps").unwrap();
+    assert!(steps > 0 && steps <= on.steps as u64);
+
+    // The trace recorded the full lifecycle, with virtual-tick stamps.
+    let tracer = hub.tracer().unwrap();
+    let spans = tracer.events();
+    assert!(!spans.is_empty());
+    for kind in [SpanKind::Enqueue, SpanKind::Admit, SpanKind::Prefill, SpanKind::Decode] {
+        assert!(
+            spans.iter().any(|s| s.kind == kind),
+            "no {} span recorded",
+            kind.as_str()
+        );
+    }
+    let retired = spans.iter().filter(|s| s.kind == SpanKind::Retire).count();
+    assert_eq!(retired, trace.len(), "one retire span per request");
+    // Virtual ticks are bounded by the arrival span plus the iteration
+    // count (the clock jumps idle gaps); wall nanoseconds would be far
+    // larger.
+    let max_tick = spans.iter().map(|s| s.end).max().unwrap();
+    let last_arrival = trace.iter().map(|r| r.arrival_step as u64).max().unwrap_or(0);
+    assert!(
+        max_tick <= last_arrival + on.steps as u64,
+        "span stamps must be virtual ticks, not wall ns (max {max_tick})"
+    );
+}
+
+#[test]
+fn speculative_replay_is_inert() {
+    let engine = nano_engine(5);
+    let trace = trace_spec(TraceKind::ZipfMix, 5, 8);
+    let policy = PrecisionPolicy::lamp(3, 0.1, Rule::Strict)
+        .with_spec(Some(SpecPolicy::whole_model(SitePolicy::uniform(2), 3)));
+    let opts = ReplayOptions::new(policy);
+    let (off, on, hub) = replay_on_and_off(&engine, &trace, &opts);
+    assert_reports_identical(&off, &on, "speculative decode");
+
+    let rounds: u64 = on.responses.iter().map(|r| r.stats.spec.rounds as u64).sum();
+    assert!(rounds > 0, "spec policy must actually speculate");
+    let snap = hub.registry().snapshot();
+    assert_eq!(snap.counter("spec.rounds"), Some(rounds));
+    let drafted: u64 = on.responses.iter().map(|r| r.stats.spec.drafted as u64).sum();
+    let accepted: u64 = on.responses.iter().map(|r| r.stats.spec.accepted as u64).sum();
+    assert_eq!(snap.counter("spec.drafted"), Some(drafted));
+    assert_eq!(snap.counter("spec.accepted"), Some(accepted));
+    // Every speculation round lands in exactly one acceptance bucket.
+    let hist = snap.hist("spec.accept_len").expect("acceptance histogram published");
+    assert_eq!(hist.counts.iter().sum::<u64>(), rounds);
+
+    // Draft and verify units both show up as spans.
+    let spans = hub.tracer().unwrap().events();
+    assert!(spans.iter().any(|s| s.kind == SpanKind::Draft), "no draft span");
+    assert!(spans.iter().any(|s| s.kind == SpanKind::Verify), "no verify span");
+}
+
+#[test]
+fn preemption_replay_is_inert() {
+    // A deliberately starved KV pool forces preempt/resume churn; the
+    // schedule and streams must not move when the obs plane attaches.
+    let cfg = ModelConfig::nano();
+    let mut wrng = Rng::new(23);
+    let w = Weights::random(&cfg, &mut wrng).unwrap();
+    let mut kv = KvCacheOptions::serving(&cfg, WeightFormat::F32, 1);
+    kv.block_size = 4;
+    kv.capacity_blocks = 12;
+    kv.sharing = false;
+    let engine = NativeEngine::new(w).with_kv_cache(kv).unwrap();
+
+    // Hand-built trace sized so two concurrent 31-token sessions overflow
+    // the 48-token-slot pool (the proven-preemption configuration of
+    // scheduler_parity's fault test).
+    let trace: Vec<lamp::data::TraceRequest> = (0..3u64)
+        .map(|id| lamp::data::TraceRequest {
+            arrival_step: 0,
+            prompt: vec![(id as u32 * 11 + 3) % 128, 7, 9, 2],
+            new_tokens: 27,
+            seed: id,
+            decode: lamp::model::Decode::Greedy,
+        })
+        .collect();
+    let mut opts = ReplayOptions::new(PrecisionPolicy::lamp(3, 0.05, Rule::Strict));
+    opts.scheduler.max_sessions = 2;
+    opts.scheduler.prefill_chunk = 4;
+    let (off, on, hub) = replay_on_and_off(&engine, &trace, &opts);
+    assert_reports_identical(&off, &on, "preemption");
+    assert!(on.metrics.preemptions > 0, "the starved pool must force preemption");
+
+    let spans = hub.tracer().unwrap().events();
+    let preempts = spans.iter().filter(|s| s.kind == SpanKind::Preempt).count();
+    let resumes = spans.iter().filter(|s| s.kind == SpanKind::Resume).count();
+    assert_eq!(preempts, on.metrics.preemptions, "one preempt span per preemption");
+    assert_eq!(preempts, resumes, "every preempted request resumed");
+}
+
+#[test]
+fn chaos_replays_are_inert_across_seeds() {
+    // Chaos plans inject transient faults and fatal ones; under the
+    // virtual clock the retry schedule is iteration-counted, so outcomes
+    // (including which requests fail) must be identical obs-on/off.
+    for seed in [0xC4A05u64, 7, 99] {
+        let engine = nano_engine(31);
+        let inj = FaultInjector::new(engine, FaultPlan::chaos(seed)).unwrap();
+        let trace = trace_spec(TraceKind::ZipfMix, 5, 6);
+        let opts = ReplayOptions::new(PrecisionPolicy::lamp(3, 0.05, Rule::Strict));
+        let (off, on, hub) = replay_on_and_off(&inj, &trace, &opts);
+        assert_reports_identical(&off, &on, &format!("chaos seed {seed:#x}"));
+
+        // Failed requests close with a fail span, retired ones with retire.
+        let spans = hub.tracer().unwrap().events();
+        let fails = spans.iter().filter(|s| s.kind == SpanKind::Fail).count();
+        let retires = spans.iter().filter(|s| s.kind == SpanKind::Retire).count();
+        assert_eq!(fails, on.failures.len(), "seed {seed:#x}: fail span accounting");
+        assert_eq!(retires, on.responses.len(), "seed {seed:#x}: retire span accounting");
+    }
+}
+
+#[test]
+fn trace_and_metrics_exports_are_deterministic_across_reruns() {
+    let engine = nano_engine(13);
+    let trace = trace_spec(TraceKind::Bursty, 5, 6);
+    let opts = ReplayOptions::new(PrecisionPolicy::lamp(3, 0.08, Rule::Relaxed));
+
+    let mut jsonls = Vec::new();
+    let mut metrics = Vec::new();
+    for _ in 0..2 {
+        let hub = traced_hub(1 << 16);
+        let mut run_opts = opts.clone();
+        run_opts.scheduler.obs = Some(Arc::clone(&hub));
+        replay(&engine, &trace, &run_opts).unwrap();
+        jsonls.push(trace::to_jsonl(&hub.tracer().unwrap().events()));
+        metrics.push(hub.registry().snapshot().to_json());
+    }
+    assert_eq!(jsonls[0], jsonls[1], "span trace must be byte-identical across reruns");
+    assert_eq!(metrics[0], metrics[1], "metrics snapshot must be byte-identical");
+
+    // The JSONL round-trips through the parser the `lamp obs` CLI uses,
+    // and the snapshot round-trips through its JSON codec.
+    let events = trace::parse_jsonl(&jsonls[0]);
+    assert_eq!(trace::to_jsonl(&events), jsonls[0]);
+    let snap = lamp::obs::Snapshot::from_json(&metrics[0]).unwrap();
+    assert_eq!(snap.to_json(), metrics[0]);
+    assert!(!snap.to_prometheus().is_empty());
+    let chrome = trace::to_chrome(&events);
+    assert!(chrome.starts_with("[\n") && chrome.trim_end().ends_with(']'));
+}
+
+#[test]
+fn trials_canonical_artifacts_are_byte_identical_with_obs() {
+    // The full trials stack: `run` (no hub) versus `run_with_obs` with a
+    // traced virtual hub must emit byte-identical canonical artifacts —
+    // including the chaos trial, whose fault verdicts ride the same
+    // virtual retry schedule.
+    for name in ["bursty", "chaos-replay"] {
+        let Some(text) = lamp::trials::builtin(name) else {
+            panic!("builtin trial {name} missing");
+        };
+        let manifest = lamp::trials::TrialManifest::parse(text).unwrap();
+        let off = lamp::trials::run(&manifest).unwrap();
+        let hub = traced_hub(1 << 16);
+        let on = lamp::trials::run_with_obs(&manifest, Some(Arc::clone(&hub))).unwrap();
+        assert_eq!(
+            off.canonical, on.canonical,
+            "trial {name}: observability leaked into the canonical artifact"
+        );
+        assert!(!hub.tracer().unwrap().is_empty(), "trial {name}: no spans recorded");
+
+        // And the rider exports are themselves rerun-deterministic.
+        let hub2 = traced_hub(1 << 16);
+        lamp::trials::run_with_obs(&manifest, Some(Arc::clone(&hub2))).unwrap();
+        assert_eq!(
+            trace::to_jsonl(&hub.tracer().unwrap().events()),
+            trace::to_jsonl(&hub2.tracer().unwrap().events()),
+            "trial {name}: trace export diverged across reruns"
+        );
+    }
+}
